@@ -1,0 +1,30 @@
+// §Perf probe: RSS across repeated executes (leak isolation).
+use fedgraph::monitor::sysinfo::rss_bytes;
+use fedgraph::runtime::{Engine, ParamSet, Tensor};
+use fedgraph::util::rng::Rng;
+
+fn main() {
+    let eng = Engine::start("artifacts").unwrap();
+    let name = "nc_train_d1433_c7_n512";
+    let art = eng.manifest.get(name).unwrap().clone();
+    let (n, e, d, c, h) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("c"), art.dim("h"));
+    let mut rng = Rng::seeded(1);
+    let params = ParamSet::nc(d, h, c, &mut rng);
+    let mut x = vec![0f32; n * d];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    for i in 0..100 {
+        let mut a = params.to_tensors();
+        a.push(Tensor::f32(&[n, d], x.clone()));
+        a.push(Tensor::i32(&[e], vec![(n - 1) as i32; e]));
+        a.push(Tensor::i32(&[e], vec![(n - 1) as i32; e]));
+        a.push(Tensor::f32(&[e], vec![0.0; e]));
+        a.push(Tensor::i32(&[n], vec![0; n]));
+        a.push(Tensor::f32(&[n], vec![1.0; n]));
+        a.push(Tensor::scalar_f32(0.1));
+        eng.execute(name, a).unwrap();
+        if i % 10 == 0 {
+            println!("iter {i}: rss {:.0} MB", rss_bytes() as f64 / 1e6);
+        }
+    }
+    eng.shutdown();
+}

@@ -1,0 +1,45 @@
+// Engine micro-profile: where does a train-step execute spend time?
+use fedgraph::runtime::{Engine, ParamSet, Tensor};
+use fedgraph::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    let eng = Engine::start("artifacts").unwrap();
+    for name in ["nc_train_d1433_c7_n512", "nc_train_d1433_c7_n2048", "nc_train_d128_c40_n1024"] {
+        let art = eng.manifest.get(name).unwrap().clone();
+        let (n, e, d, c, h) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("c"), art.dim("h"));
+        let mut rng = Rng::seeded(1);
+        let params = ParamSet::nc(d, h, c, &mut rng);
+        let mut x = vec![0f32; n * d];
+        rng.fill_normal_f32(&mut x, 0.0, 1.0);
+        let args = || {
+            let mut a = params.to_tensors();
+            a.push(Tensor::f32(&[n, d], x.clone()));
+            a.push(Tensor::i32(&[e], vec![(n - 1) as i32; e]));
+            a.push(Tensor::i32(&[e], vec![(n - 1) as i32; e]));
+            a.push(Tensor::f32(&[e], vec![0.0; e]));
+            a.push(Tensor::i32(&[n], vec![0; n]));
+            a.push(Tensor::f32(&[n], vec![1.0; n]));
+            a.push(Tensor::scalar_f32(0.1));
+            a
+        };
+        eng.execute(name, args()).unwrap(); // warm
+        let s0 = eng.stats();
+        let t0 = Instant::now();
+        let iters = 30;
+        for _ in 0..iters {
+            eng.execute(name, args()).unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64() / iters as f64;
+        let s1 = eng.stats();
+        println!(
+            "{name}: wall {:.2}ms | execute {:.2}ms h2d {:.2}ms d2h {:.2}ms (arg-clone overhead {:.2}ms)",
+            wall * 1e3,
+            (s1.execute_secs - s0.execute_secs) / iters as f64 * 1e3,
+            (s1.h2d_secs - s0.h2d_secs) / iters as f64 * 1e3,
+            (s1.d2h_secs - s0.d2h_secs) / iters as f64 * 1e3,
+            (wall - (s1.execute_secs + s1.h2d_secs + s1.d2h_secs - s0.execute_secs - s0.h2d_secs - s0.d2h_secs) / iters as f64) * 1e3
+        );
+    }
+    eng.shutdown();
+}

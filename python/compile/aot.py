@@ -1,0 +1,144 @@
+"""AOT export: lower every manifest artifact to HLO *text* + manifest.json.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`:
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import manifest, model
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+_KIND_FN = {
+    "nc_train": model.nc_train_step,
+    "nc_eval": model.nc_eval_step,
+    "nc_train_pallas": model.nc_train_step,
+    "nc_eval_pallas": model.nc_eval_step,
+    "gc_train": model.gc_train_step,
+    "gc_prox_train": model.gc_prox_train_step,
+    "gc_eval": model.gc_eval_step,
+    "lp_train": model.lp_train_step,
+    "lp_eval": model.lp_score_step,
+}
+
+# Default kernel backend for the bulk of the artifacts. "reference" is the
+# CPU-optimal lowering (see model.py); FEDGRAPH_KERNEL_BACKEND=pallas lowers
+# EVERYTHING through the interpret-mode Pallas kernels instead (validation
+# builds). Artifacts whose kind ends in "_pallas" always use Pallas.
+_DEFAULT_BACKEND = os.environ.get("FEDGRAPH_KERNEL_BACKEND", "reference")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def example_args(art):
+    return [
+        jax.ShapeDtypeStruct(tuple(spec["shape"]), _DTYPES[spec["dtype"]])
+        for spec in art["inputs"]
+    ]
+
+
+def lower_artifact(art) -> str:
+    fn = _KIND_FN[art["kind"]]
+    backend = "pallas" if art["kind"].endswith("_pallas") else _DEFAULT_BACKEND
+    model.set_backend(backend)
+    try:
+        lowered = jax.jit(fn).lower(*example_args(art))
+        return to_hlo_text(lowered)
+    finally:
+        model.set_backend("reference")
+
+
+def source_fingerprint() -> str:
+    """Hash of the compile package sources — lets `make artifacts` skip
+    re-lowering when nothing changed."""
+    h = hashlib.sha256()
+    pkg = os.path.dirname(__file__)
+    for root, _dirs, files in os.walk(pkg):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = manifest.build_artifacts()
+    if args.only:
+        arts = [a for a in arts if args.only in a["name"]]
+
+    fingerprint = source_fingerprint()
+    man_path = os.path.join(args.out, "manifest.json")
+    if not args.force and not args.only and os.path.exists(man_path):
+        with open(man_path) as f:
+            old = json.load(f)
+        if old.get("fingerprint") == fingerprint and all(
+            os.path.exists(os.path.join(args.out, a["name"] + ".hlo.txt")) for a in arts
+        ):
+            print(f"artifacts up to date ({len(arts)} entries); skipping")
+            return
+
+    t_start = time.time()
+    entries = {}
+    for i, art in enumerate(arts):
+        t0 = time.time()
+        text = lower_artifact(art)
+        fname = art["name"] + ".hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        entries[art["name"]] = {
+            "file": fname,
+            "kind": art["kind"],
+            "dims": art["dims"],
+            "inputs": art["inputs"],
+            "outputs": art["outputs"],
+        }
+        print(
+            f"[{i + 1}/{len(arts)}] {art['name']}: {len(text)} chars "
+            f"in {time.time() - t0:.2f}s",
+            flush=True,
+        )
+
+    with open(man_path, "w") as f:
+        json.dump(
+            {
+                "fingerprint": fingerprint,
+                "hidden": manifest.HIDDEN,
+                "edge_factor": manifest.EDGE_FACTOR,
+                "artifacts": entries,
+            },
+            f,
+            indent=1,
+        )
+    print(f"wrote {len(entries)} artifacts + manifest.json in {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

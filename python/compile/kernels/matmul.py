@@ -1,0 +1,114 @@
+"""L1 Pallas kernels: tiled matmul and fused linear layers.
+
+This is the compute hot-spot of every model in the stack (GCN/GIN/LP layers
+and the low-rank projection are all `X @ W`-shaped). The kernel is written
+for the TPU MXU: a 3-D grid over (M/bm, N/bn, K/bk) tiles, f32 accumulation
+into the revisited output block, optional fused bias + ReLU on the final
+K step. BlockSpecs express the HBM->VMEM schedule that a CUDA version would
+express with threadblocks (DESIGN.md #Hardware-Adaptation).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode (which lowers to plain HLO)
+is the correctness + AOT path; MXU efficiency is *estimated* from the block
+shapes (see DESIGN.md #Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes (128x128 systolic array).
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int, fuse_bias: bool, relu: bool, b_ref=None):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ w[k,j] with f32 accumulate.
+
+    The output block is revisited across the K grid dimension (sequential on
+    TPU, exact in interpret mode): initialize at k==0, accumulate, and apply
+    the fused epilogue (bias add + ReLU) at k==nk-1.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        acc = o_ref[...]
+        if fuse_bias:
+            acc = acc + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def _pad_to(x, multiples):
+    pads = [(0, (-d) % m) for d, m in zip(x.shape, multiples)]
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, w, bm: int = BM, bn: int = BN, bk: int = BK):
+    """`x[m,k] @ w[k,n]` through the Pallas tiled kernel (f32)."""
+    return _linear_impl(x, w, None, relu=False, bm=bm, bn=bn, bk=bk)
+
+
+@functools.partial(jax.jit, static_argnames=("relu", "bm", "bn", "bk"))
+def fused_linear(x, w, b, relu: bool = False, bm: int = BM, bn: int = BN, bk: int = BK):
+    """`act(x @ w + b)` with the bias/activation fused into the last K step."""
+    return _linear_impl(x, w, b, relu=relu, bm=bm, bn=bn, bk=bk)
+
+
+def _linear_impl(x, w, b, *, relu: bool, bm: int, bn: int, bk: int):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    xp = _pad_to(x.astype(jnp.float32), (bm, bk))
+    wp = _pad_to(w.astype(jnp.float32), (bk, bn))
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    nk = kp // bk
+    grid = (mp // bm, np_ // bn, nk)
+    fuse_bias = b is not None
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    operands = [xp, wp]
+    if fuse_bias:
+        bp = _pad_to(b.astype(jnp.float32).reshape(1, -1), (1, bn))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(bp)
+
+    kernel = functools.partial(_matmul_kernel, nk=nk, fuse_bias=fuse_bias, relu=relu)
+    if fuse_bias:
+        # Reorder so b_ref lands as the keyword argument.
+        def kernel(x_ref, w_ref, b_ref, o_ref):  # noqa: F811
+            _matmul_kernel(x_ref, w_ref, o_ref, nk=nk, fuse_bias=True, relu=relu, b_ref=b_ref)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(*operands)
+    return out[:m, :n]
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK, fuse_bias: bool = True) -> int:
+    """VMEM footprint of one grid step (the #Perf L1 estimate): input tile +
+    weight tile + output tile (+ bias tile), all f32."""
+    tiles = bm * bk + bk * bn + bm * bn + (bn if fuse_bias else 0)
+    return tiles * 4

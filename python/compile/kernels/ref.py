@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must match
+its oracle to float32 tolerance across the hypothesis shape/dtype sweeps in
+python/tests/. The oracles are also used by the model tests to cross-check
+the full forward/backward paths.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def fused_linear_ref(x, w, b, relu=False):
+    y = matmul_ref(x, w) + b.astype(jnp.float32)
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def gin_combine_ref(x, agg, eps):
+    return (1.0 + eps) * x.astype(jnp.float32) + agg.astype(jnp.float32)
+
+
+def segment_aggregate_ref(x, src, dst, enorm, n):
+    """Weighted message aggregation: out[v] = sum_e 1[dst[e]=v] enorm[e] x[src[e]].
+
+    This is the L2 (jnp) aggregation the models use; listed here because the
+    kernel tests verify the padded-edge no-op convention against it.
+    """
+    msgs = x[src] * enorm[:, None]
+    return jnp.zeros((n, x.shape[1]), jnp.float32).at[dst].add(msgs)

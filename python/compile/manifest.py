@@ -1,0 +1,205 @@
+"""Shape buckets and the artifact manifest — the single source of truth for
+what `aot.py` lowers and what the Rust runtime expects.
+
+PJRT executables are compiled for static shapes, so each dataset/task maps to
+a ladder of buckets `(n_pad, e_pad)` at its feature/class dims; the Rust side
+picks the smallest bucket that fits a client's subgraph or minibatch
+(`runtime::manifest::pick_bucket`).
+
+Every artifact is identified by a canonical name:
+    {kind}_d{d}_c{c}_n{n}            e.g. nc_train_d1433_c7_n512
+(GC adds g{graphs}, LP adds p{pairs}; e_pad is derived from n via EDGE_FACTOR
+ and recorded in the manifest entry.)
+"""
+
+HIDDEN = 64  # GNN hidden width everywhere (paper's default 2-layer GCN/GIN)
+LP_ZDIM = 32  # LP embedding width
+
+# e_pad = EDGE_FACTOR * n_pad covers mean degree ~14 (arxiv) plus self loops.
+EDGE_FACTOR = 16
+
+
+def edges_for(n: int) -> int:
+    return EDGE_FACTOR * n
+
+
+# --- node classification buckets -------------------------------------------
+# (dataset tag, feature dim, classes, node-bucket ladder)
+NC_DATASETS = [
+    ("cora", 1433, 7, [256, 512, 1024, 2048, 4096]),
+    ("citeseer", 3703, 6, [256, 512, 1024, 2048, 4096]),
+    ("pubmed", 500, 3, [1024, 2048, 4096, 8192, 20480]),
+    ("arxiv", 128, 40, [1024, 2048, 4096]),
+    ("papers100m", 128, 172, [1024, 2048]),
+]
+
+# Low-rank compression ranks for the Fig 7 case study: the projected
+# features replace `x`, so the model's input dim becomes the rank.
+LOWRANK_RANKS = [100, 200, 400, 800]
+LOWRANK_BUCKETS = [256, 512, 1024]
+LOWRANK_CLASSES = 7  # cora
+
+# --- graph classification buckets ------------------------------------------
+GC_FEAT_DIM = 32
+GC_CLASSES = 4  # padded; covers the 2- and 3-class TU datasets
+GC_BUCKETS = [(1024, 32), (2048, 32)]  # (nodes, graphs per batch)
+
+# --- link prediction buckets ------------------------------------------------
+LP_FEAT_DIM = 64
+LP_BUCKETS = [(1024, 2048), (4096, 8192)]  # (nodes, pairs)
+
+
+def f32(*shape):
+    return {"shape": list(shape), "dtype": "f32"}
+
+
+def i32(*shape):
+    return {"shape": list(shape), "dtype": "i32"}
+
+
+def nc_io(d, c, n, e, train: bool):
+    params = [
+        ("w1", f32(d, HIDDEN)),
+        ("b1", f32(HIDDEN)),
+        ("w2", f32(HIDDEN, c)),
+        ("b2", f32(c)),
+    ]
+    data = [
+        ("x", f32(n, d)),
+        ("src", i32(e)),
+        ("dst", i32(e)),
+        ("enorm", f32(e)),
+        ("labels", i32(n)),
+        ("mask", f32(n)),
+    ]
+    inputs = params + data + ([("lr", f32())] if train else [])
+    metrics = [("loss", f32()), ("correct", f32()), ("cnt", f32())]
+    outputs = (params if train else []) + metrics
+    return inputs, outputs
+
+
+def gc_io(d, c, n, e, g, kind: str):
+    params = [
+        ("w1", f32(d, HIDDEN)),
+        ("b1", f32(HIDDEN)),
+        ("w2", f32(HIDDEN, HIDDEN)),
+        ("b2", f32(HIDDEN)),
+        ("w3", f32(HIDDEN, c)),
+        ("b3", f32(c)),
+    ]
+    glob = [(f"g{i}", spec) for i, (_, spec) in enumerate(params)]
+    data = [
+        ("x", f32(n, d)),
+        ("src", i32(e)),
+        ("dst", i32(e)),
+        ("enorm", f32(e)),
+        ("gid", i32(n)),
+        ("nmask", f32(n)),
+        ("glabels", i32(g)),
+        ("gmask", f32(g)),
+    ]
+    metrics = [("loss", f32()), ("correct", f32()), ("cnt", f32())]
+    if kind == "gc_train":
+        return params + data + [("lr", f32())], params + metrics
+    if kind == "gc_prox_train":
+        return params + glob + data + [("lr", f32()), ("mu", f32())], params + metrics
+    return params + data, metrics  # gc_eval
+
+
+def lp_io(d, n, e, p, kind: str):
+    params = [
+        ("w1", f32(d, HIDDEN)),
+        ("b1", f32(HIDDEN)),
+        ("w2", f32(HIDDEN, LP_ZDIM)),
+        ("b2", f32(LP_ZDIM)),
+    ]
+    graph = [("x", f32(n, d)), ("src", i32(e)), ("dst", i32(e)), ("enorm", f32(e))]
+    if kind == "lp_train":
+        pairs = [
+            ("pos_u", i32(p)),
+            ("pos_v", i32(p)),
+            ("neg_u", i32(p)),
+            ("neg_v", i32(p)),
+            ("pmask", f32(p)),
+        ]
+        return params + graph + pairs + [("lr", f32())], params + [("loss", f32())]
+    pairs = [("eu", i32(p)), ("ev", i32(p))]
+    return params + graph + pairs, [("scores", f32(p))]
+
+
+def build_artifacts():
+    """Return the full artifact list: dicts with name/kind/dims/inputs/outputs."""
+    arts = []
+
+    def add(name, kind, dims, io):
+        inputs, outputs = io
+        arts.append(
+            {
+                "name": name,
+                "kind": kind,
+                "dims": dims,
+                "inputs": [{"name": k, **spec} for k, spec in inputs],
+                "outputs": [{"name": k, **spec} for k, spec in outputs],
+            }
+        )
+
+    # NC datasets
+    for _tag, d, c, buckets in NC_DATASETS:
+        for n in buckets:
+            e = edges_for(n)
+            dims = {"n": n, "e": e, "d": d, "c": c, "h": HIDDEN}
+            add(f"nc_train_d{d}_c{c}_n{n}", "nc_train", dims, nc_io(d, c, n, e, True))
+            add(f"nc_eval_d{d}_c{c}_n{n}", "nc_eval", dims, nc_io(d, c, n, e, False))
+
+    # NC low-rank variants (input dim = rank, cora classes)
+    for rank in LOWRANK_RANKS:
+        for n in LOWRANK_BUCKETS:
+            e = edges_for(n)
+            c = LOWRANK_CLASSES
+            dims = {"n": n, "e": e, "d": rank, "c": c, "h": HIDDEN}
+            add(f"nc_train_d{rank}_c{c}_n{n}", "nc_train", dims, nc_io(rank, c, n, e, True))
+            add(f"nc_eval_d{rank}_c{c}_n{n}", "nc_eval", dims, nc_io(rank, c, n, e, False))
+
+    # GC buckets
+    for n, g in GC_BUCKETS:
+        e = edges_for(n)
+        d, c = GC_FEAT_DIM, GC_CLASSES
+        dims = {"n": n, "e": e, "d": d, "c": c, "h": HIDDEN, "g": g}
+        add(f"gc_train_d{d}_c{c}_n{n}_g{g}", "gc_train", dims, gc_io(d, c, n, e, g, "gc_train"))
+        add(
+            f"gc_prox_train_d{d}_c{c}_n{n}_g{g}",
+            "gc_prox_train",
+            dims,
+            gc_io(d, c, n, e, g, "gc_prox_train"),
+        )
+        add(f"gc_eval_d{d}_c{c}_n{n}_g{g}", "gc_eval", dims, gc_io(d, c, n, e, g, "gc_eval"))
+
+    # Pallas-backend validation pair (§Perf): the same NC bucket lowered with
+    # the interpret-mode Pallas kernels inside the HLO. The Rust runtime test
+    # executes it against the reference artifact to prove the
+    # Pallas->HLO->PJRT path end-to-end; the runners never pick it (distinct
+    # kind).
+    for kind, train in [("nc_eval_pallas", False), ("nc_train_pallas", True)]:
+        n, d, c = 256, 100, 7
+        e = edges_for(n)
+        dims = {"n": n, "e": e, "d": d, "c": c, "h": HIDDEN}
+        add(f"{kind}_d{d}_c{c}_n{n}", kind, dims, nc_io(d, c, n, e, train))
+
+    # LP buckets
+    for n, p in LP_BUCKETS:
+        e = edges_for(n)
+        d = LP_FEAT_DIM
+        dims = {"n": n, "e": e, "d": d, "h": HIDDEN, "z": LP_ZDIM, "p": p}
+        add(f"lp_train_d{d}_n{n}_p{p}", "lp_train", dims, lp_io(d, n, e, p, "lp_train"))
+        add(f"lp_eval_d{d}_n{n}_p{p}", "lp_eval", dims, lp_io(d, n, e, p, "lp_eval"))
+
+    names = [a["name"] for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    return arts
+
+
+if __name__ == "__main__":
+    arts = build_artifacts()
+    print(f"{len(arts)} artifacts")
+    for a in arts:
+        print(" ", a["name"])

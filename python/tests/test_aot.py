@@ -1,0 +1,111 @@
+"""AOT export tests: manifest consistency and HLO-text emission."""
+
+import json
+import os
+
+from compile import aot, manifest
+
+
+def test_manifest_is_consistent():
+    arts = manifest.build_artifacts()
+    names = [a["name"] for a in arts]
+    assert len(names) == len(set(names))
+    kinds = {a["kind"] for a in arts}
+    assert kinds == {
+        "nc_train",
+        "nc_eval",
+        "nc_train_pallas",
+        "nc_eval_pallas",
+        "gc_train",
+        "gc_prox_train",
+        "gc_eval",
+        "lp_train",
+        "lp_eval",
+    }
+    for a in arts:
+        # Train artifacts return the updated params first, so outputs must be
+        # longer than eval metrics alone.
+        if a["kind"].endswith("train"):
+            assert a["inputs"][-1]["name"] in ("lr", "mu")
+        # every input/output spec has shape + dtype
+        for io in a["inputs"] + a["outputs"]:
+            assert io["dtype"] in ("f32", "i32")
+            assert isinstance(io["shape"], list)
+        # edge bucket follows the documented factor
+        if "e" in a["dims"]:
+            assert a["dims"]["e"] == manifest.EDGE_FACTOR * a["dims"]["n"]
+
+
+def test_every_nc_dataset_has_buckets():
+    arts = manifest.build_artifacts()
+    for _tag, d, c, buckets in manifest.NC_DATASETS:
+        for n in buckets:
+            name = f"nc_train_d{d}_c{c}_n{n}"
+            assert any(a["name"] == name for a in arts), name
+
+
+def test_lowering_emits_hlo_text():
+    art = next(
+        a for a in manifest.build_artifacts() if a["name"] == "nc_eval_d100_c7_n256"
+    )
+    text = aot.lower_artifact(art)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # tuple-rooted (return_tuple=True) with one element per declared output
+    assert len(text) > 1000
+
+
+def test_pallas_and_reference_lowerings_agree():
+    """The pallas-backend artifact must compute the same function as the
+    reference artifact (same bucket, same inputs)."""
+    import numpy as np
+    import jax
+
+    arts = {a["name"]: a for a in manifest.build_artifacts()}
+    ref_art = arts["nc_eval_d100_c7_n256"]
+    pal_art = arts["nc_eval_pallas_d100_c7_n256"]
+    assert ref_art["dims"] == pal_art["dims"]
+
+    from compile import model
+
+    rs = np.random.RandomState(0)
+    n, e, d, c, h = 256, 4096, 100, 7, manifest.HIDDEN
+    args = (
+        (rs.randn(d, h) * 0.2).astype(np.float32),
+        np.zeros(h, np.float32),
+        (rs.randn(h, c) * 0.2).astype(np.float32),
+        np.zeros(c, np.float32),
+        rs.randn(n, d).astype(np.float32),
+        rs.randint(0, n, e).astype(np.int32),
+        rs.randint(0, n, e).astype(np.int32),
+        rs.rand(e).astype(np.float32),
+        rs.randint(0, c, n).astype(np.int32),
+        np.ones(n, np.float32),
+    )
+    model.set_backend("reference")
+    ref_out = jax.jit(model.nc_eval_step)(*args)
+    model.set_backend("pallas")
+    try:
+        pal_out = jax.jit(model.nc_eval_step)(*args)
+    finally:
+        model.set_backend("reference")
+    for a, b in zip(ref_out, pal_out):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-4)
+
+
+def test_written_manifest_matches_disk(tmp_path=None):
+    """When `make artifacts` has run, manifest.json must agree with the
+    in-tree manifest.py and every referenced file must exist."""
+    out = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(out, "manifest.json")
+    if not os.path.exists(man_path):
+        import pytest
+
+        pytest.skip("artifacts not built")
+    with open(man_path) as f:
+        man = json.load(f)
+    arts = {a["name"]: a for a in manifest.build_artifacts()}
+    assert set(man["artifacts"].keys()) == set(arts.keys())
+    for name, entry in man["artifacts"].items():
+        assert os.path.exists(os.path.join(out, entry["file"])), name
+        assert entry["dims"] == arts[name]["dims"]

@@ -1,0 +1,151 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+hypothesis-swept over shapes and dtypes (the CORE correctness signal)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gin as gin_kernel
+from compile.kernels import lowrank
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+DIMS = st.integers(min_value=1, max_value=97)
+
+
+def rand(rs, shape, dtype):
+    x = rs.randn(*shape) * 2.0
+    return x.astype(dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (m, k), np.float32)
+    w = rand(rs, (k, n), np.float32)
+    got = mm.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=DIMS,
+    k=DIMS,
+    n=DIMS,
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, relu, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (m, k), np.float32)
+    w = rand(rs, (k, n), np.float32)
+    b = rand(rs, (n,), np.float32)
+    got = mm.fused_linear(x, w, b, relu=relu)
+    want = ref.fused_linear_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_inputs(m, k, n, seed):
+    """bf16 inputs accumulate in f32 (the MXU convention)."""
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (m, k), np.float32)
+    w = rand(rs, (k, n), np.float32)
+    got = mm.matmul(jnp.asarray(x, jnp.bfloat16), jnp.asarray(w, jnp.bfloat16))
+    want = ref.matmul_ref(
+        jnp.asarray(x, jnp.bfloat16).astype(jnp.float32),
+        jnp.asarray(w, jnp.bfloat16).astype(jnp.float32),
+    )
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=1e-2, atol=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 600),
+    d=DIMS,
+    eps=st.floats(-0.5, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gin_combine_matches_ref(m, d, eps, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (m, d), np.float32)
+    agg = rand(rs, (m, d), np.float32)
+    got = gin_kernel.gin_combine(x, agg, eps=eps)
+    want = ref.gin_combine_ref(x, agg, eps)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 80), d=st.integers(8, 200), k=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_lowrank_projection_matches_ref(n, d, k, seed):
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (n, d), np.float32)
+    p = (rs.randn(d, k) / np.sqrt(k)).astype(np.float32)
+    got = lowrank.project(x, p)
+    want = ref.matmul_ref(x, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_boundary_shapes():
+    """Exact multiples and off-by-one around the 128 tile boundary."""
+    rs = np.random.RandomState(0)
+    for m in (127, 128, 129):
+        for k in (255, 256, 257):
+            x = rand(rs, (m, k), np.float32)
+            w = rand(rs, (k, 64), np.float32)
+            np.testing.assert_allclose(
+                mm.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+            )
+
+
+def test_custom_tile_sizes():
+    rs = np.random.RandomState(1)
+    x = rand(rs, (70, 300), np.float32)
+    w = rand(rs, (300, 40), np.float32)
+    got = mm.matmul(x, w, bm=32, bn=16, bk=64)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget_documented():
+    """The default tiles must fit a 16 MiB VMEM budget (DESIGN.md #Perf)."""
+    assert mm.vmem_bytes() <= 16 * 1024 * 1024
+    assert lowrank.vmem_bytes() <= 16 * 1024 * 1024
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 50),
+    d=st.integers(1, 16),
+    e=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segment_aggregate_pad_arc_convention(n, d, e, seed):
+    """Pad arcs (weight 0, sink endpoints) never change the aggregation."""
+    from compile.model import segment_aggregate
+
+    rs = np.random.RandomState(seed)
+    x = rand(rs, (n, d), np.float32)
+    src = rs.randint(0, n, e).astype(np.int32)
+    dst = rs.randint(0, n, e).astype(np.int32)
+    w = rs.rand(e).astype(np.float32)
+    base = segment_aggregate(x, src, dst, w)
+    # Append pad arcs.
+    pad = 37
+    src2 = np.concatenate([src, np.full(pad, n - 1, np.int32)])
+    dst2 = np.concatenate([dst, np.full(pad, n - 1, np.int32)])
+    w2 = np.concatenate([w, np.zeros(pad, np.float32)])
+    with_pads = segment_aggregate(x, src2, dst2, w2)
+    np.testing.assert_allclose(base, with_pads, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(
+        base, ref.segment_aggregate_ref(x, src, dst, w, n), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(AssertionError):
+        mm.matmul(np.zeros((2, 3), np.float32), np.zeros((4, 5), np.float32))

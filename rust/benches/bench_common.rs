@@ -1,0 +1,49 @@
+//! Shared helpers for the paper-figure benches (included via `#[path]`).
+//!
+//! Every bench honors:
+//! - `FEDGRAPH_BENCH_SCALE`  (default 0.15) — dataset scale;
+//! - `FEDGRAPH_BENCH_ROUNDS` — override of the per-bench round count.
+//!
+//! Benches reproduce the *shape* of each figure/table (who wins, by roughly
+//! what factor); absolute numbers differ from the paper's AWS testbed.
+
+use fedgraph::config::{FedGraphConfig, Method, Task};
+use fedgraph::monitor::report::Report;
+use fedgraph::runtime::Engine;
+
+pub fn engine() -> Engine {
+    Engine::start(&fedgraph::config::default_artifacts_dir())
+        .expect("run `make artifacts` first")
+}
+
+pub fn scale() -> f64 {
+    fedgraph::bench::bench_scale()
+}
+
+pub fn rounds(default: usize) -> usize {
+    fedgraph::bench::bench_rounds(default)
+}
+
+pub fn nc(method: Method, dataset: &str, trainers: usize, r: usize) -> FedGraphConfig {
+    let mut cfg = FedGraphConfig::new(Task::NodeClassification, method, dataset).unwrap();
+    cfg.n_trainer = trainers;
+    cfg.global_rounds = r;
+    cfg.learning_rate = 0.3;
+    cfg.local_steps = 3;
+    cfg.scale = scale();
+    cfg.eval_every = (r / 10).max(1);
+    cfg
+}
+
+pub fn run(cfg: &FedGraphConfig, eng: &Engine) -> Report {
+    fedgraph::coordinator::run_fedgraph_with(cfg, eng)
+        .unwrap_or_else(|e| panic!("bench run failed: {e:#}"))
+}
+
+pub fn mb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / 1e6)
+}
+
+pub fn secs(s: f64) -> String {
+    format!("{:.2}", s)
+}

@@ -1,0 +1,43 @@
+//! Fig 10 — federated link prediction across geographic region sets
+//! {US}, {US,BR}, {US,BR,ID,TR,JP}: AUC, training time, communication cost
+//! for 4D-FED-GNN+, FedLink, STFL, StaticGNN.
+//! Expected shape: FedLink/STFL lead AUC; FedLink costs the most comm;
+//! StaticGNN communicates nothing; 4D-FED-GNN+ trains fastest.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::{FedGraphConfig, Method, Task};
+use fedgraph::util::tables::Table;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Figure 10",
+        "LP algorithms across region configurations (one client per country)",
+    );
+    let eng = engine();
+    let r = rounds(20);
+    let mut tbl =
+        Table::new(&["regions", "method", "AUC", "train s", "comm MB"]);
+    for regions in ["US", "US+BR", "5country"] {
+        for method in
+            [Method::FourDFedGnnPlus, Method::FedLink, Method::Stfl, Method::StaticGnn]
+        {
+            let mut cfg = FedGraphConfig::new(Task::LinkPrediction, method, regions).unwrap();
+            cfg.global_rounds = r;
+            cfg.local_steps = 2;
+            cfg.scale = scale();
+            cfg.eval_every = (r / 4).max(1);
+            let rep = run(&cfg, &eng);
+            tbl.row(&[
+                regions.to_string(),
+                method.name().to_string(),
+                format!("{:.4}", rep.final_accuracy),
+                secs(rep.compute_secs()),
+                mb(rep.total_bytes()),
+            ]);
+        }
+    }
+    println!("{}", tbl.render());
+}

@@ -1,0 +1,56 @@
+//! Fig 11 — test accuracy across global training rounds (Cora / Citeseer /
+//! PubMed; FedGCN vs FedAvg) plus the resource-usage timeline the paper's
+//! Grafana dashboard shows (CPU seconds + RSS sampled per round).
+//! Expected shape: FedGCN converges faster and higher on every dataset.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::Method;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Figure 11",
+        "Accuracy-vs-round curves (left) and resource usage timeline (right)",
+    );
+    let eng = engine();
+    let r = rounds(30);
+    for ds in ["cora-sim", "citeseer-sim", "pubmed-sim"] {
+        println!("\n--- {ds} ---");
+        println!("round,FedAvg_acc,FedGCN_acc");
+        let mut curves = Vec::new();
+        for method in [Method::FedAvgNC, Method::FedGcn] {
+            let mut cfg = nc(method, ds, 10, r);
+            cfg.eval_every = 1;
+            let rep = run(&cfg, &eng);
+            curves.push(rep);
+        }
+        for i in 0..r {
+            println!(
+                "{},{:.4},{:.4}",
+                i, curves[0].rounds[i].test_accuracy, curves[1].rounds[i].test_accuracy
+            );
+        }
+        // Fig 11 shape: FedGCN's curve dominates by mid-run.
+        let mid = r / 2;
+        println!(
+            "# shape: FedGCN acc@mid {:.4} vs FedAvg {:.4}; final {:.4} vs {:.4}",
+            curves[1].rounds[mid].test_accuracy,
+            curves[0].rounds[mid].test_accuracy,
+            curves[1].final_accuracy,
+            curves[0].final_accuracy
+        );
+    }
+    // Resource timeline for the last run (Grafana stand-in).
+    let mut cfg = nc(Method::FedGcn, "pubmed-sim", 10, r.min(10));
+    cfg.eval_every = 1;
+    let net = std::sync::Arc::new(fedgraph::transport::SimNet::new(cfg.network.clone()));
+    let monitor = fedgraph::monitor::Monitor::new(net);
+    fedgraph::coordinator::run_into_monitor(&cfg, &eng, &monitor).unwrap();
+    println!("\n--- resource usage timeline (pubmed-sim / FedGCN) ---");
+    println!("elapsed_s,rss_mb,cpu_s");
+    for s in monitor.samples() {
+        println!("{:.2},{:.1},{:.2}", s.elapsed_secs, s.rss_bytes as f64 / 1e6, s.cpu_seconds);
+    }
+}

@@ -1,0 +1,49 @@
+//! Fig 12 — Ogbn-Papers100M(-sim): training time, test accuracy and memory
+//! under batch sizes {16, 32, 64} with 195 power-law clients (800 rounds in
+//! the paper; scaled here). Expected shape: time grows modestly with batch
+//! size, accuracy is nearly flat, memory stays stable.
+//!
+//! `FEDGRAPH_PAPERS_SCALE` × 1e8 nodes (default 0.005 → 500k for the bench;
+//! the lazy graph representation supports 1.0 = the full 100M).
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::{FedGraphConfig, Method, Task};
+use fedgraph::util::tables::Table;
+
+fn main() {
+    let pscale: f64 = std::env::var("FEDGRAPH_PAPERS_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.005);
+    fedgraph::bench::banner(
+        "Figure 12",
+        "papers100m-sim, 195 power-law clients, batch size sweep (lazy graph)",
+    );
+    let eng = engine();
+    let r = rounds(30);
+    let mut tbl = Table::new(&["batch", "train s", "accuracy", "peak RSS MB", "comm MB"])
+        .with_title(format!("{} nodes, {} rounds", (pscale * 1e8) as u64, r).as_str());
+    for batch in [16usize, 32, 64] {
+        let mut cfg =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "papers100m-sim")
+                .unwrap();
+        cfg.n_trainer = 195;
+        cfg.sample_ratio = 0.05;
+        cfg.global_rounds = r;
+        cfg.batch_size = batch;
+        cfg.scale = pscale;
+        cfg.eval_every = (r / 4).max(1);
+        let rep = run(&cfg, &eng);
+        tbl.row(&[
+            batch.to_string(),
+            secs(rep.compute_secs()),
+            format!("{:.4}", rep.final_accuracy),
+            format!("{:.1}", rep.peak_rss as f64 / 1e6),
+            mb(rep.total_bytes()),
+        ]);
+    }
+    println!("{}", tbl.render());
+}

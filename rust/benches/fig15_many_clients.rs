@@ -1,0 +1,43 @@
+//! Fig 15 (Appendix G.1) — Ogbn-Arxiv with 10 / 100 / 1000 clients on fixed
+//! compute: training time, communication cost, and accuracy. Expected
+//! shape: total time and comm grow with client count (sequential execution,
+//! more synchronization); accuracy declines slightly from added
+//! heterogeneity.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::Method;
+use fedgraph::util::tables::Table;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Figure 15",
+        "ogbn-arxiv-sim under increasing client counts (fixed compute)",
+    );
+    let eng = engine();
+    let r = rounds(15);
+    let mut tbl =
+        Table::new(&["clients", "train s (total)", "comm MB", "accuracy"]);
+    for clients in [10usize, 100, 1000] {
+        let mut cfg = nc(Method::FedAvgNC, "ogbn-arxiv-sim", clients, r);
+        cfg.local_steps = 2;
+        cfg.batch_size = 256;
+        cfg.eval_every = r.max(1);
+        let rep = run(&cfg, &eng);
+        let train_total = rep
+            .phase_secs
+            .iter()
+            .find(|(p, _)| p == "train")
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        tbl.row(&[
+            clients.to_string(),
+            secs(train_total),
+            mb(rep.total_bytes()),
+            format!("{:.4}", rep.final_accuracy),
+        ]);
+    }
+    println!("{}", tbl.render());
+}

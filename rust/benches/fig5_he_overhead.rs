@@ -1,0 +1,65 @@
+//! Fig 5 — FedGCN training time and communication cost, plaintext vs
+//! homomorphic encryption, split into pre-training and training phases.
+//! Expected shape: HE inflates both phases heavily, pre-training most
+//! (feature matrices >> model parameters).
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::{Method, PrivacyMode};
+use fedgraph::he::CkksParams;
+use fedgraph::util::tables::Table;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Figure 5",
+        "FedGCN on cora-sim, 10 clients: plaintext vs CKKS-encrypted aggregation",
+    );
+    let eng = engine();
+    let r = rounds(20);
+    let mut time_tbl = Table::new(&["setting", "pretrain s", "train s", "total s"])
+        .with_title("Training time (measured compute + HE work)");
+    let mut comm_tbl = Table::new(&["setting", "pretrain MB", "train MB", "total MB"])
+        .with_title("Communication cost");
+    for he in [false, true] {
+        let mut cfg = nc(Method::FedGcn, "cora-sim", 10, r);
+        if he {
+            cfg.privacy = PrivacyMode::He(CkksParams::default_params());
+        }
+        let rep = run(&cfg, &eng);
+        let he_secs: f64 = rep
+            .phase_secs
+            .iter()
+            .filter(|(p, _)| p.starts_with("he_"))
+            .map(|(_, s)| s)
+            .sum();
+        let pre = rep
+            .phase_secs
+            .iter()
+            .find(|(p, _)| p == "pretrain")
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        let train = rep
+            .phase_secs
+            .iter()
+            .find(|(p, _)| p == "train")
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        let label = if he { "FedGCN + HE" } else { "FedGCN plaintext" };
+        time_tbl.row(&[
+            label.to_string(),
+            secs(pre),
+            secs(train + he_secs),
+            secs(pre + train + he_secs),
+        ]);
+        comm_tbl.row(&[
+            label.to_string(),
+            mb(rep.pretrain_bytes),
+            mb(rep.train_bytes),
+            mb(rep.total_bytes()),
+        ]);
+    }
+    println!("{}", time_tbl.render());
+    println!("{}", comm_tbl.render());
+}

@@ -1,0 +1,52 @@
+//! Table 2 — train and communication time (seconds) for Cora / CiteSeer /
+//! PubMed / OGBN-arXiv under 5 / 10 / 15 / 20 clients (FedGCN).
+//! Expected shape: per-round train time falls (or stays flat) as clients
+//! grow (smaller subgraphs each), while communication time rises ~linearly —
+//! becoming the bottleneck, which is the table's headline observation.
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::Method;
+use fedgraph::util::tables::Table;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Table 2",
+        "training vs communication seconds across client counts (FedGCN)",
+    );
+    let eng = engine();
+    let r = rounds(10);
+    let datasets = ["cora-sim", "citeseer-sim", "pubmed-sim", "ogbn-arxiv-sim"];
+    let header: Vec<String> = std::iter::once("clients".to_string())
+        .chain(datasets.iter().flat_map(|d| {
+            let short = d.trim_end_matches("-sim");
+            [format!("{short} train"), format!("{short} comm")]
+        }))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut tbl = Table::new(&header_refs);
+    for clients in [5usize, 10, 15, 20] {
+        let mut row = vec![clients.to_string()];
+        for ds in datasets {
+            let mut cfg = nc(Method::FedGcn, ds, clients, r);
+            if ds == "ogbn-arxiv-sim" {
+                cfg.batch_size = 256; // minibatch path, as at full scale
+            }
+            cfg.eval_every = r; // Table 2 measures time, not curves
+            let rep = run(&cfg, &eng);
+            // Synchronous-round wall time: sum over rounds of the slowest
+            // client (the paper's "Train" column falls as clients shrink
+            // their local subgraphs).
+            let train: f64 = rep.rounds.iter().map(|r| r.train_secs).sum();
+            // Communication time: simulated network seconds on the 1 Gbps
+            // link model (what the paper measures between EKS pods).
+            let comm = rep.pretrain_net_secs + rep.train_net_secs;
+            row.push(secs(train));
+            row.push(secs(comm));
+        }
+        tbl.row(&row);
+    }
+    println!("{}", tbl.render());
+}

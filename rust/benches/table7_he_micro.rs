@@ -1,0 +1,74 @@
+//! Table 7 (Appendix F) — CKKS microbenchmark: FedGCN under different
+//! polynomial modulus degrees / coefficient chains / precisions across
+//! Cora / Citeseer / PubMed. Times split pre-train / train / total;
+//! communication includes both phases. Expected shape: bigger parameter
+//! sets cost more time and bytes at equal accuracy; parameter sets below
+//! the N >= 2·max(nodes, features) requirement crater accuracy (§A.6).
+
+#[path = "bench_common.rs"]
+mod common;
+
+use common::*;
+use fedgraph::config::{Method, PrivacyMode};
+use fedgraph::he::CkksParams;
+use fedgraph::util::tables::Table;
+
+fn main() {
+    fedgraph::bench::banner(
+        "Table 7",
+        "CKKS parameter microbenchmark on FedGCN (plaintext baseline included)",
+    );
+    let eng = engine();
+    let r = rounds(10);
+    let mut tbl = Table::new(&[
+        "dataset", "poly_mod", "coeff_mod", "scale", "pre/train/total s", "comm MB", "accuracy",
+    ]);
+    for ds in ["cora-sim", "citeseer-sim", "pubmed-sim"] {
+        // Plaintext baseline row.
+        let cfg = nc(Method::FedGcn, ds, 10, r);
+        let rep = run(&cfg, &eng);
+        let pre0 = rep.phase_secs.iter().find(|(p, _)| p == "pretrain").map(|(_, s)| *s).unwrap_or(0.0);
+        let tr0 = rep.phase_secs.iter().find(|(p, _)| p == "train").map(|(_, s)| *s).unwrap_or(0.0);
+        tbl.row(&[
+            ds.to_string(),
+            "plaintext".into(),
+            "-".into(),
+            "-".into(),
+            format!("{:.2}/{:.2}/{:.2}", pre0, tr0, pre0 + tr0),
+            mb(rep.total_bytes()),
+            format!("{:.4}", rep.final_accuracy),
+        ]);
+        for degree in [8192usize, 16384, 32768] {
+            let params = CkksParams::with_degree(degree);
+            let coeff = format!("{:?}", params.coeff_mod_bits);
+            let scale_txt = format!("2^{}", params.scale_bits);
+            let mut cfg = nc(Method::FedGcn, ds, 10, r);
+            cfg.privacy = PrivacyMode::He(params);
+            let rep = run(&cfg, &eng);
+            let he: f64 = rep
+                .phase_secs
+                .iter()
+                .filter(|(p, _)| p.starts_with("he_"))
+                .map(|(_, s)| s)
+                .sum();
+            let pre = rep.phase_secs.iter().find(|(p, _)| p == "pretrain").map(|(_, s)| *s).unwrap_or(0.0);
+            let tr = rep.phase_secs.iter().find(|(p, _)| p == "train").map(|(_, s)| *s).unwrap_or(0.0);
+            tbl.row(&[
+                ds.to_string(),
+                degree.to_string(),
+                coeff,
+                scale_txt,
+                format!("{:.2}/{:.2}/{:.2}", pre + he * 0.5, tr + he * 0.5, pre + tr + he),
+                mb(rep.total_bytes()),
+                format!("{:.4}", rep.final_accuracy),
+            ]);
+        }
+    }
+    println!("{}", tbl.render());
+    println!(
+        "note: at bench scale the N >= 2*max(nodes, features) rule is satisfied\n\
+         by 8192+ for the scaled datasets; the undersized-parameter accuracy\n\
+         collapse is unit-tested directly in he::ckks (and visible here at\n\
+         FEDGRAPH_BENCH_SCALE=1.0, where cora needs N >= 2*2866)."
+    );
+}

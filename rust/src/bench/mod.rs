@@ -1,0 +1,118 @@
+//! Mini-criterion: the benchmark harness used by every `benches/*` target.
+//!
+//! criterion is not available offline; this module provides what the paper's
+//! figures need — warmup, repeated timed samples, mean/std/median, and
+//! paper-style comparison tables — driven by `cargo bench` binaries with
+//! `harness = false`.
+//!
+//! Benches honor two environment variables so CI and humans can trade
+//! fidelity for time:
+//! - `FEDGRAPH_BENCH_SCALE` (default 0.15): dataset scale factor;
+//! - `FEDGRAPH_BENCH_ROUNDS` (default depends on the bench): round override.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_secs: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples_secs)
+    }
+    pub fn std(&self) -> f64 {
+        stats::std(&self.samples_secs)
+    }
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples_secs)
+    }
+    pub fn summary(&self) -> String {
+        format!("{}: {:.4}s ± {:.4}s (median {:.4}s, n={})",
+            self.name, self.mean(), self.std(), self.median(), self.samples_secs.len())
+    }
+}
+
+/// Run `f` `warmup + samples` times, timing the last `samples` runs.
+pub fn bench<T>(name: &str, warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Measurement {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    Measurement { name: name.to_string(), samples_secs: out }
+}
+
+/// Time a single run (for end-to-end experiment benches where one run is the
+/// unit of measurement, as in the paper's tables).
+pub fn once<T>(name: &str, f: impl FnOnce() -> T) -> (T, Measurement) {
+    let t0 = Instant::now();
+    let v = f();
+    let secs = t0.elapsed().as_secs_f64();
+    (v, Measurement { name: name.to_string(), samples_secs: vec![secs] })
+}
+
+/// Scale factor for bench datasets (env `FEDGRAPH_BENCH_SCALE`, default 0.15
+/// — benches run the full pipeline on proportionally shrunk graphs; set to
+/// 1.0 to regenerate the paper's figures at published sizes).
+pub fn bench_scale() -> f64 {
+    std::env::var("FEDGRAPH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15)
+}
+
+/// Round-count override (env `FEDGRAPH_BENCH_ROUNDS`).
+pub fn bench_rounds(default: usize) -> usize {
+    std::env::var("FEDGRAPH_BENCH_ROUNDS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Standard bench banner so every target's output is self-describing.
+pub fn banner(figure: &str, description: &str) {
+    println!("==============================================================");
+    println!("fedgraph bench — {figure}");
+    println!("{description}");
+    println!(
+        "scale={} (FEDGRAPH_BENCH_SCALE), shapes not absolutes are the target",
+        bench_scale()
+    );
+    println!("==============================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let m = bench("noop", 2, 5, || 1 + 1);
+        assert_eq!(m.samples_secs.len(), 5);
+        assert!(m.mean() >= 0.0);
+        assert!(m.summary().contains("noop"));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let (v, m) = once("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(m.samples_secs.len(), 1);
+    }
+
+    #[test]
+    fn env_defaults() {
+        // (env vars unset in the test environment)
+        assert!(bench_scale() > 0.0);
+        assert_eq!(bench_rounds(77), 77);
+    }
+}

@@ -1,0 +1,495 @@
+//! Experiment configuration (the paper's access layer, Fig 2).
+//!
+//! A `FedGraphConfig` is everything `run_fedgraph` needs: task, method,
+//! dataset, client/partition settings, training hyperparameters, privacy
+//! options (HE / DP), the low-rank rank, and the simulated-network model.
+//! Configs load from the YAML-subset parser (`util::yaml`) or are built in
+//! code; task-method combinations are validated exactly as the paper's
+//! library enforces them.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::he::{CkksParams, DpParams};
+use crate::transport::NetConfig;
+use crate::util::yaml::Yaml;
+
+/// The three FGL tasks (paper Fig 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    NodeClassification,
+    GraphClassification,
+    LinkPrediction,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task> {
+        match s.trim().to_uppercase().as_str() {
+            "NC" | "NODE_CLASSIFICATION" | "NODECLASSIFICATION" => Ok(Task::NodeClassification),
+            "GC" | "GRAPH_CLASSIFICATION" | "GRAPHCLASSIFICATION" => Ok(Task::GraphClassification),
+            "LP" | "LINK_PREDICTION" | "LINKPREDICTION" => Ok(Task::LinkPrediction),
+            other => bail!("unknown fedgraph_task '{other}' (expected NC, GC or LP)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::NodeClassification => "NC",
+            Task::GraphClassification => "GC",
+            Task::LinkPrediction => "LP",
+        }
+    }
+}
+
+/// Every training algorithm in the paper's Table 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    // --- node classification ---
+    FedAvgNC,
+    DistributedGCN,
+    BnsGcn,
+    FedSagePlus,
+    FedGcn,
+    // --- graph classification ---
+    SelfTrain,
+    FedAvgGC,
+    FedProx,
+    Gcfl,
+    GcflPlus,
+    GcflPlusDws,
+    // --- link prediction ---
+    StaticGnn,
+    Stfl,
+    FedLink,
+    FourDFedGnnPlus,
+}
+
+impl Method {
+    pub fn parse(task: Task, s: &str) -> Result<Method> {
+        let canon = s.trim().to_lowercase().replace('+', "plus").replace(['-', '_'], "");
+        let m = match (task, canon.as_str()) {
+            (Task::NodeClassification, "fedavg") => Method::FedAvgNC,
+            (Task::NodeClassification, "distributedgcn" | "distgcn") => Method::DistributedGCN,
+            (Task::NodeClassification, "bnsgcn") => Method::BnsGcn,
+            (Task::NodeClassification, "fedsage" | "fedsageplus") => Method::FedSagePlus,
+            (Task::NodeClassification, "fedgcn") => Method::FedGcn,
+            (Task::GraphClassification, "selftrain") => Method::SelfTrain,
+            (Task::GraphClassification, "fedavg") => Method::FedAvgGC,
+            (Task::GraphClassification, "fedprox") => Method::FedProx,
+            (Task::GraphClassification, "gcfl") => Method::Gcfl,
+            (Task::GraphClassification, "gcflplus") => Method::GcflPlus,
+            (Task::GraphClassification, "gcflplusdws" | "gcfldws") => Method::GcflPlusDws,
+            (Task::LinkPrediction, "staticgnn") => Method::StaticGnn,
+            (Task::LinkPrediction, "stfl") => Method::Stfl,
+            (Task::LinkPrediction, "fedlink") => Method::FedLink,
+            (Task::LinkPrediction, "4dfedgnn" | "4dfedgnnplus" | "fedgnnplus") => {
+                Method::FourDFedGnnPlus
+            }
+            (t, other) => bail!(
+                "method '{other}' is not valid for task {} (the library enforces \
+                 explicit task-method combinations)",
+                t.name()
+            ),
+        };
+        Ok(m)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::FedAvgNC => "FedAvg",
+            Method::DistributedGCN => "DistributedGCN",
+            Method::BnsGcn => "BNS-GCN",
+            Method::FedSagePlus => "FedSage+",
+            Method::FedGcn => "FedGCN",
+            Method::SelfTrain => "SelfTrain",
+            Method::FedAvgGC => "FedAvg",
+            Method::FedProx => "FedProx",
+            Method::Gcfl => "GCFL",
+            Method::GcflPlus => "GCFL+",
+            Method::GcflPlusDws => "GCFL+dWs",
+            Method::StaticGnn => "StaticGNN",
+            Method::Stfl => "STFL",
+            Method::FedLink => "FedLink",
+            Method::FourDFedGnnPlus => "4D-FED-GNN+",
+        }
+    }
+
+    pub fn task(&self) -> Task {
+        use Method::*;
+        match self {
+            FedAvgNC | DistributedGCN | BnsGcn | FedSagePlus | FedGcn => Task::NodeClassification,
+            SelfTrain | FedAvgGC | FedProx | Gcfl | GcflPlus | GcflPlusDws => {
+                Task::GraphClassification
+            }
+            StaticGnn | Stfl | FedLink | FourDFedGnnPlus => Task::LinkPrediction,
+        }
+    }
+}
+
+/// Client selection strategy (paper Appendix A.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SamplingType {
+    Random,
+    Uniform,
+}
+
+impl SamplingType {
+    pub fn parse(s: &str) -> Result<SamplingType> {
+        match s.trim().to_lowercase().as_str() {
+            "random" => Ok(SamplingType::Random),
+            "uniform" => Ok(SamplingType::Uniform),
+            other => bail!("sampling_type must be either 'random' or 'uniform', got '{other}'"),
+        }
+    }
+}
+
+/// Privacy mechanism for aggregation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PrivacyMode {
+    Plaintext,
+    /// CKKS homomorphic encryption (paper §3.2).
+    He(CkksParams),
+    /// Gaussian-mechanism differential privacy (Appendix A.5).
+    Dp(DpClone),
+}
+
+/// DpParams is tiny; wrap for PartialEq.
+#[derive(Clone, Debug)]
+pub struct DpClone(pub DpParams);
+
+impl PartialEq for DpClone {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.epsilon == other.0.epsilon
+            && self.0.delta == other.0.delta
+            && self.0.clip_norm == other.0.clip_norm
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct FedGraphConfig {
+    pub task: Task,
+    pub method: Method,
+    pub dataset: String,
+    /// Number of trainers (clients).
+    pub n_trainer: usize,
+    pub global_rounds: usize,
+    pub local_steps: usize,
+    pub learning_rate: f32,
+    /// Dirichlet concentration for the label-skew partition (β=10000 ≈ IID).
+    pub iid_beta: f64,
+    /// FedGCN communication hops (0 = none, 1, 2).
+    pub num_hops: usize,
+    /// Fraction of clients participating per round (Appendix A.1).
+    pub sample_ratio: f64,
+    pub sampling_type: SamplingType,
+    /// Minibatch size in seed nodes (0 = full local graph).
+    pub batch_size: usize,
+    pub privacy: PrivacyMode,
+    /// Low-rank pre-train compression rank (0 = off; paper §4).
+    pub lowrank_rank: usize,
+    /// BNS-GCN boundary-node sampling fraction.
+    pub bns_ratio: f64,
+    /// FedProx proximal coefficient μ.
+    pub fedprox_mu: f32,
+    pub network: NetConfig,
+    pub seed: u64,
+    /// Dataset scale factor (1.0 = published size).
+    pub scale: f64,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: String,
+    /// Evaluate every k rounds (test accuracy curve resolution).
+    pub eval_every: usize,
+    /// Free-form extras preserved from the YAML (forward compatibility).
+    pub extras: BTreeMap<String, String>,
+}
+
+impl FedGraphConfig {
+    /// A reasonable default for the given task/method/dataset (the paper's
+    /// "10–20 lines" promise: most users only set these three).
+    pub fn new(task: Task, method: Method, dataset: &str) -> Result<FedGraphConfig> {
+        if method.task() != task {
+            bail!(
+                "method {} belongs to task {}, not {}",
+                method.name(),
+                method.task().name(),
+                task.name()
+            );
+        }
+        Ok(FedGraphConfig {
+            task,
+            method,
+            dataset: dataset.to_string(),
+            n_trainer: 10,
+            global_rounds: 100,
+            local_steps: 3,
+            learning_rate: 0.1,
+            iid_beta: 10_000.0,
+            num_hops: if method == Method::FedGcn { 1 } else { 0 },
+            sample_ratio: 1.0,
+            sampling_type: SamplingType::Random,
+            batch_size: 0,
+            privacy: PrivacyMode::Plaintext,
+            lowrank_rank: 0,
+            bns_ratio: 0.5,
+            fedprox_mu: 0.01,
+            network: NetConfig::default(),
+            seed: 42,
+            scale: 1.0,
+            artifacts_dir: default_artifacts_dir(),
+            eval_every: 1,
+            extras: BTreeMap::new(),
+        })
+    }
+
+    /// Parse from YAML text (see `configs/` for examples).
+    pub fn parse_yaml(src: &str) -> Result<FedGraphConfig> {
+        let y = Yaml::parse(src).map_err(|e| anyhow!("{e}"))?;
+        Self::from_yaml(&y)
+    }
+
+    pub fn from_yaml_file(path: &str) -> Result<FedGraphConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read config '{path}': {e}"))?;
+        Self::parse_yaml(&src)
+    }
+
+    pub fn from_yaml(y: &Yaml) -> Result<FedGraphConfig> {
+        let task = Task::parse(
+            y.get("fedgraph_task")
+                .as_str()
+                .ok_or_else(|| anyhow!("missing required key 'fedgraph_task'"))?,
+        )?;
+        let method = Method::parse(
+            task,
+            y.get("method").as_str().ok_or_else(|| anyhow!("missing required key 'method'"))?,
+        )?;
+        let dataset = y
+            .get("dataset")
+            .as_str()
+            .ok_or_else(|| anyhow!("missing required key 'dataset'"))?
+            .to_string();
+        let mut cfg = FedGraphConfig::new(task, method, &dataset)?;
+        if let Some(v) = y.get("n_trainer").as_usize() {
+            cfg.n_trainer = v;
+        }
+        if let Some(v) = y.get("global_rounds").as_usize() {
+            cfg.global_rounds = v;
+        }
+        if let Some(v) = y.get("local_step").as_usize().or(y.get("local_steps").as_usize()) {
+            cfg.local_steps = v;
+        }
+        if let Some(v) = y.get("learning_rate").as_f64() {
+            cfg.learning_rate = v as f32;
+        }
+        if let Some(v) = y.get("iid_beta").as_f64() {
+            cfg.iid_beta = v;
+        }
+        if let Some(v) = y.get("num_hops").as_usize() {
+            cfg.num_hops = v;
+        }
+        if let Some(v) = y.get("sample_ratio").as_f64() {
+            cfg.sample_ratio = v;
+        }
+        if let Some(s) = y.get("sampling_type").as_str() {
+            cfg.sampling_type = SamplingType::parse(s)?;
+        }
+        if let Some(v) = y.get("batch_size").as_usize() {
+            cfg.batch_size = v;
+        }
+        if let Some(v) = y.get("lowrank_rank").as_usize() {
+            cfg.lowrank_rank = v;
+        }
+        if let Some(v) = y.get("bns_ratio").as_f64() {
+            cfg.bns_ratio = v;
+        }
+        if let Some(v) = y.get("fedprox_mu").as_f64() {
+            cfg.fedprox_mu = v as f32;
+        }
+        if let Some(v) = y.get("seed").as_usize() {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = y.get("scale").as_f64() {
+            cfg.scale = v;
+        }
+        if let Some(v) = y.get("eval_every").as_usize() {
+            cfg.eval_every = v.max(1);
+        }
+        if let Some(s) = y.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = s.to_string();
+        }
+        // Privacy block.
+        let use_he = y.get("use_encryption").as_bool().unwrap_or(false);
+        let use_dp = y.get("use_dp").as_bool().unwrap_or(false);
+        if use_he && use_dp {
+            bail!("use_encryption and use_dp are mutually exclusive");
+        }
+        if use_he {
+            let mut params = CkksParams::default_params();
+            let he = y.get("he");
+            if let Some(v) = he.get("poly_modulus_degree").as_usize() {
+                params = CkksParams::with_degree(v);
+            }
+            if let Some(list) = he.get("coeff_mod_bit_sizes").as_list() {
+                params.coeff_mod_bits =
+                    list.iter().filter_map(|x| x.as_usize().map(|v| v as u32)).collect();
+            }
+            if let Some(v) = he.get("scale_bits").as_usize() {
+                params.scale_bits = v as u32;
+            }
+            cfg.privacy = PrivacyMode::He(params);
+        } else if use_dp {
+            let mut params = DpParams::default_params();
+            let dp = y.get("dp");
+            if let Some(v) = dp.get("epsilon").as_f64() {
+                params.epsilon = v;
+            }
+            if let Some(v) = dp.get("delta").as_f64() {
+                params.delta = v;
+            }
+            if let Some(v) = dp.get("clip_norm").as_f64() {
+                params.clip_norm = v;
+            }
+            cfg.privacy = PrivacyMode::Dp(DpClone(params));
+        }
+        // Network block.
+        let net = y.get("network");
+        if let Some(v) = net.get("bandwidth_gbps").as_f64() {
+            cfg.network.bandwidth_gbps = v;
+        }
+        if let Some(v) = net.get("latency_ms").as_f64() {
+            cfg.network.latency_ms = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check the assembled config.
+    pub fn validate(&self) -> Result<()> {
+        if self.method.task() != self.task {
+            bail!("method/task mismatch");
+        }
+        if self.n_trainer == 0 {
+            bail!("n_trainer must be >= 1");
+        }
+        if !(0.0 < self.sample_ratio && self.sample_ratio <= 1.0) {
+            bail!("sample_ratio must be in (0, 1], got {}", self.sample_ratio);
+        }
+        if self.num_hops > 2 {
+            bail!("num_hops must be 0, 1 or 2");
+        }
+        if self.task != Task::NodeClassification && self.lowrank_rank != 0 {
+            bail!("low-rank compression applies to the NC pre-train exchange only");
+        }
+        if !(self.scale > 0.0 && self.scale <= 1.0) {
+            bail!("scale must be in (0, 1]");
+        }
+        if self.learning_rate <= 0.0 {
+            bail!("learning_rate must be positive");
+        }
+        Ok(())
+    }
+
+    /// HE enabled?
+    pub fn uses_he(&self) -> bool {
+        matches!(self.privacy, PrivacyMode::He(_))
+    }
+}
+
+/// Artifacts default to `<workspace>/artifacts` (next to Cargo.toml) so
+/// examples and tests work from any cwd inside the repo.
+pub fn default_artifacts_dir() -> String {
+    let candidates = ["artifacts", "../artifacts", "../../artifacts"];
+    for c in candidates {
+        if std::path::Path::new(c).join("manifest.json").exists() {
+            return c.to_string();
+        }
+    }
+    // Fall back to the env override or the plain name.
+    std::env::var("FEDGRAPH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_default_config() {
+        let cfg =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedGcn, "cora-sim").unwrap();
+        assert_eq!(cfg.num_hops, 1);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn task_method_combination_enforced() {
+        // GCFL is a GC method; NC must reject it.
+        assert!(Method::parse(Task::NodeClassification, "gcfl").is_err());
+        assert!(Method::parse(Task::GraphClassification, "gcfl").is_ok());
+        assert!(FedGraphConfig::new(Task::NodeClassification, Method::Gcfl, "x").is_err());
+    }
+
+    #[test]
+    fn parses_paper_style_yaml() {
+        let cfg = FedGraphConfig::parse_yaml(
+            r#"
+fedgraph_task: NC
+dataset: cora-sim
+method: FedGCN
+global_rounds: 200
+local_step: 3
+learning_rate: 0.5
+n_trainer: 10
+num_hops: 1
+iid_beta: 10000.0
+use_encryption: true
+he:
+  poly_modulus_degree: 16384
+  scale_bits: 40
+network:
+  bandwidth_gbps: 10.0
+  latency_ms: 0.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.method, Method::FedGcn);
+        assert_eq!(cfg.global_rounds, 200);
+        assert!(cfg.uses_he());
+        assert_eq!(cfg.network.bandwidth_gbps, 10.0);
+        if let PrivacyMode::He(p) = &cfg.privacy {
+            assert_eq!(p.poly_mod_degree, 16384);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_configs() {
+        assert!(FedGraphConfig::parse_yaml("dataset: x\nmethod: FedGCN\n").is_err()); // no task
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: GCFL\n"
+        )
+        .is_err()); // wrong task-method
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedGCN\nsample_ratio: 0.0\n"
+        )
+        .is_err());
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedGCN\nuse_encryption: true\nuse_dp: true\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn method_name_round_trip() {
+        for (t, names) in [
+            (Task::NodeClassification, vec!["FedAvg", "DistributedGCN", "BNS-GCN", "FedSage+", "FedGCN"]),
+            (Task::GraphClassification, vec!["SelfTrain", "FedAvg", "FedProx", "GCFL", "GCFL+", "GCFL+dWs"]),
+            (Task::LinkPrediction, vec!["StaticGNN", "STFL", "FedLink", "4D-FED-GNN+"]),
+        ] {
+            for n in names {
+                let m = Method::parse(t, n).unwrap();
+                assert_eq!(m.task(), t);
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Server-side model aggregation under the three privacy modes (paper §3.2,
+//! Appendix A.5): plaintext FedAvg, CKKS-encrypted additive aggregation, and
+//! Gaussian-mechanism DP. Every path really serializes its payloads through
+//! the wire format so byte counts and (de)serialization time are honest.
+
+use anyhow::Result;
+
+use crate::config::PrivacyMode;
+use crate::he::{gaussian_mechanism, CkksContext};
+use crate::monitor::Monitor;
+use crate::runtime::ParamSet;
+use crate::transport::serialize::{decode_params, encode_params, Reader, Writer};
+use crate::transport::{Direction, Phase};
+use crate::util::rng::Rng;
+use crate::util::timer::timed;
+
+/// Aggregate weighted client updates into the new global parameters and
+/// account the full round-trip (uploads + broadcast to `broadcast_to`
+/// clients). `max_dim` feeds the CKKS validity rule.
+pub fn aggregate_params(
+    monitor: &Monitor,
+    phase: Phase,
+    privacy: &PrivacyMode,
+    updates: &[(f32, ParamSet)],
+    broadcast_to: usize,
+    max_dim: usize,
+    rng: &mut Rng,
+) -> Result<ParamSet> {
+    assert!(!updates.is_empty(), "no updates to aggregate");
+    match privacy {
+        PrivacyMode::Plaintext => plaintext(monitor, phase, updates, broadcast_to),
+        PrivacyMode::He(params) => {
+            let ctx = CkksContext::new(params.clone(), rng.next_u64());
+            encrypted(monitor, phase, &ctx, updates, broadcast_to, max_dim)
+        }
+        PrivacyMode::Dp(dp) => {
+            let mut noised: Vec<(f32, ParamSet)> = Vec::with_capacity(updates.len());
+            let (_, secs) = timed(|| {
+                for (w, p) in updates {
+                    let mut flat = p.flatten();
+                    gaussian_mechanism(&mut flat, &dp.0, rng);
+                    noised.push((*w, p.unflatten_from(&flat)));
+                }
+            });
+            monitor.add_secs("dp_noise", secs);
+            plaintext(monitor, phase, &noised, broadcast_to)
+        }
+    }
+}
+
+fn plaintext(
+    monitor: &Monitor,
+    phase: Phase,
+    updates: &[(f32, ParamSet)],
+    broadcast_to: usize,
+) -> Result<ParamSet> {
+    // Clients serialize; server parses and averages.
+    let mut decoded: Vec<ParamSet> = Vec::with_capacity(updates.len());
+    let (r, secs) = timed(|| -> Result<()> {
+        for (_, p) in updates {
+            let bytes = encode_params(&p.values);
+            monitor.net.send(phase, Direction::Up, bytes.len() as u64);
+            let values = decode_params(&bytes)?;
+            let mut q = p.clone();
+            q.values = values;
+            decoded.push(q);
+        }
+        Ok(())
+    });
+    r?;
+    monitor.add_secs("serialize", secs);
+    let (global, agg_secs) = timed(|| {
+        let weighted: Vec<(f32, &ParamSet)> =
+            updates.iter().map(|(w, _)| *w).zip(decoded.iter()).collect();
+        ParamSet::weighted_average(&weighted)
+    });
+    monitor.add_secs("aggregate", agg_secs);
+    // Broadcast the new global model.
+    let bytes = encode_params(&global.values).len() as u64;
+    for _ in 0..broadcast_to {
+        monitor.net.send(phase, Direction::Down, bytes);
+    }
+    Ok(global)
+}
+
+/// Encrypted aggregation: clients pre-scale by their weight, encrypt, the
+/// server adds ciphertexts (never seeing plaintext in the simulated threat
+/// model), and every client decrypts the broadcast sum.
+fn encrypted(
+    monitor: &Monitor,
+    phase: Phase,
+    ctx: &CkksContext,
+    updates: &[(f32, ParamSet)],
+    broadcast_to: usize,
+    max_dim: usize,
+) -> Result<ParamSet> {
+    let total_w: f32 = updates.iter().map(|(w, _)| *w).sum();
+    let mut acc: Option<crate::he::Ciphertext> = None;
+    for (w, p) in updates {
+        let mut flat = p.flatten();
+        let s = w / total_w;
+        for x in flat.iter_mut() {
+            *x *= s;
+        }
+        let (ct, enc_secs) = timed(|| ctx.encrypt(&flat, max_dim));
+        monitor.add_secs("he_encrypt", enc_secs);
+        monitor.net.send(phase, Direction::Up, ct.wire_bytes());
+        let (_, add_secs) = timed(|| match &mut acc {
+            None => acc = Some(ct.clone()),
+            Some(a) => ctx.add_assign(a, &ct),
+        });
+        monitor.add_secs("he_aggregate", add_secs);
+    }
+    let acc = acc.unwrap();
+    // Broadcast ciphertext; each client decrypts.
+    for _ in 0..broadcast_to {
+        monitor.net.send(phase, Direction::Down, acc.wire_bytes());
+    }
+    let (flat, dec_secs) = timed(|| ctx.decrypt(&acc));
+    // Every client decrypts independently; account the cost once per client.
+    monitor.add_secs("he_decrypt", dec_secs * broadcast_to.max(1) as f64);
+    Ok(updates[0].1.unflatten_from(&flat))
+}
+
+/// Serialize + account an arbitrary f32 payload transfer (pre-train feature
+/// exchanges). Returns the parsed-back vector, so the data really round-trips
+/// the wire format.
+pub fn ship_f32s(
+    monitor: &Monitor,
+    phase: Phase,
+    dir: Direction,
+    data: &[f32],
+) -> Result<Vec<f32>> {
+    let (bytes, ser) = timed(|| {
+        let mut w = Writer::with_capacity(data.len() * 4 + 16);
+        w.f32s(data);
+        w.finish()
+    });
+    monitor.add_secs("serialize", ser);
+    monitor.net.send(phase, dir, bytes.len() as u64);
+    let mut r = Reader::open(&bytes)?;
+    Ok(r.f32s()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DpClone;
+    use crate::he::{CkksParams, DpParams};
+    use crate::transport::{NetConfig, SimNet};
+    use std::sync::Arc;
+
+    fn setup() -> (Monitor, Vec<(f32, ParamSet)>) {
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng = Rng::seeded(7);
+        let mut a = ParamSet::nc(8, 4, 3, &mut rng);
+        for v in a.values.iter_mut().flatten() {
+            *v = 1.0;
+        }
+        let mut b = a.clone();
+        for v in b.values.iter_mut().flatten() {
+            *v = 3.0;
+        }
+        (m, vec![(1.0, a), (1.0, b)])
+    }
+
+    #[test]
+    fn plaintext_aggregation_matches_average() {
+        let (m, ups) = setup();
+        let mut rng = Rng::seeded(1);
+        let g = aggregate_params(
+            &m, Phase::Train, &PrivacyMode::Plaintext, &ups, 2, 100, &mut rng,
+        )
+        .unwrap();
+        assert!(g.flatten().iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        let c = m.net.counter(Phase::Train);
+        assert!(c.bytes_up > 0 && c.bytes_down > 0);
+        assert_eq!(c.messages, 4); // 2 up + 2 down
+    }
+
+    #[test]
+    fn he_aggregation_close_to_plain_and_much_bigger() {
+        let (m, ups) = setup();
+        let mut rng = Rng::seeded(2);
+        let plain_bytes = {
+            let (m2, ups2) = setup();
+            let mut r2 = Rng::seeded(3);
+            aggregate_params(&m2, Phase::Train, &PrivacyMode::Plaintext, &ups2, 2, 100, &mut r2)
+                .unwrap();
+            m2.net.counter(Phase::Train).bytes_up
+        };
+        let g = aggregate_params(
+            &m,
+            Phase::Train,
+            &PrivacyMode::He(CkksParams::default_params()),
+            &ups,
+            2,
+            100,
+            &mut rng,
+        )
+        .unwrap();
+        for v in g.flatten() {
+            assert!((v - 2.0).abs() < 1e-2, "HE aggregate {v} should be ~2");
+        }
+        let he_bytes = m.net.counter(Phase::Train).bytes_up;
+        assert!(
+            he_bytes > 10 * plain_bytes,
+            "HE must cost much more bandwidth: {he_bytes} vs {plain_bytes}"
+        );
+        assert!(m.phase_secs("he_encrypt") > 0.0);
+        assert!(m.phase_secs("he_decrypt") > 0.0);
+    }
+
+    #[test]
+    fn dp_aggregation_perturbs_mildly() {
+        let (m, ups) = setup();
+        let mut rng = Rng::seeded(4);
+        let dp = DpParams { epsilon: 8.0, delta: 1e-5, clip_norm: 1e6 };
+        let g = aggregate_params(
+            &m,
+            Phase::Train,
+            &PrivacyMode::Dp(DpClone(dp.clone())),
+            &ups,
+            2,
+            100,
+            &mut rng,
+        )
+        .unwrap();
+        // Noise present but centered: values near 2 within a few sigma.
+        let sigma = dp.sigma() as f32;
+        for v in g.flatten() {
+            assert!((v - 2.0).abs() < 6.0 * sigma, "{v}");
+        }
+        assert!(m.phase_secs("dp_noise") > 0.0);
+        // Bandwidth ~ plaintext (the paper's Table 3 point).
+        let (m2, ups2) = setup();
+        let mut r2 = Rng::seeded(5);
+        aggregate_params(&m2, Phase::Train, &PrivacyMode::Plaintext, &ups2, 2, 100, &mut r2)
+            .unwrap();
+        assert_eq!(
+            m.net.counter(Phase::Train).bytes_up,
+            m2.net.counter(Phase::Train).bytes_up
+        );
+    }
+
+    #[test]
+    fn ship_roundtrips() {
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let back = ship_f32s(&m, Phase::PreTrain, Direction::Up, &data).unwrap();
+        assert_eq!(back, data);
+        assert!(m.net.counter(Phase::PreTrain).bytes_up >= 400);
+    }
+}

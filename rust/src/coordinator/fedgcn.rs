@@ -1,0 +1,524 @@
+//! Pre-training communication rounds for the NC algorithms.
+//!
+//! This module implements the server-mediated exchanges that happen *before*
+//! federated training starts (the "pre-train" bars of Figs 5/7/9):
+//!
+//! - **FedGCN** (`fedgcn_pretrain`): every client receives, for each of its
+//!   owned nodes, the normalized feature aggregate over the node's *global*
+//!   neighborhood — including cross-client neighbors. Contributions are
+//!   additive across clients, so the exchange composes with CKKS encryption
+//!   (§3.2) and with the low-rank projection (§4.2), in all four
+//!   combinations.
+//! - **Distributed-GCN** (`exchange_halo_features`): clients download the raw
+//!   features of their halo (cross-client neighbor) nodes.
+//! - **FedSage+** (`fedsage_generators`): clients fit a linear neighbor
+//!   generator (ridge regression from a node's features to the sum of its
+//!   neighbors' features) on their *internal* edges, exchange generators, and
+//!   use the average to impute the missing cross-client neighbor sums. This
+//!   is a deliberately simplified NeighGen (documented in DESIGN.md): it
+//!   preserves the system shape — an O(d²) model exchanged once — and the
+//!   qualitative accuracy position between FedAvg and FedGCN.
+
+use anyhow::Result;
+
+use crate::config::PrivacyMode;
+use crate::graph::{local_neighbor_contribution, Csr, LocalGraph, Partition};
+use crate::he::CkksContext;
+use crate::lowrank::Projection;
+use crate::monitor::Monitor;
+use crate::transport::{Direction, Phase};
+use crate::util::linalg::{gram, matmul, ridge_solve};
+use crate::util::rng::Rng;
+use crate::util::timer::timed;
+
+/// Output of the FedGCN pre-train exchange: per-client model-input features
+/// for owned nodes (row-major `[num_owned, d_eff]`).
+pub struct PretrainFeatures {
+    pub per_client: Vec<Vec<f32>>,
+    pub d_eff: usize,
+}
+
+/// Count feature rows a contributing client actually has data for (nodes of
+/// the request set with at least one neighbor owned by `client`) — the wire
+/// cost of its upload in the plaintext path.
+fn nonzero_rows(graph: &Csr, part: &Partition, nodes: &[u32], client: u32) -> usize {
+    nodes
+        .iter()
+        .filter(|&&u| graph.neighbors(u).iter().any(|&v| part.assign[v as usize] == client))
+        .count()
+}
+
+/// The FedGCN pre-train exchange (with optional HE and/or low-rank).
+///
+/// `num_hops` ∈ {1, 2}: hop 2 re-aggregates the hop-1 result (a second
+/// communication round — its cost shows up exactly as the paper describes).
+/// Returns per-client aggregated features; `d_eff` is the dataset dim, or
+/// the rank when low-rank compression is on.
+#[allow(clippy::too_many_arguments)]
+pub fn fedgcn_pretrain(
+    monitor: &Monitor,
+    privacy: &PrivacyMode,
+    lowrank_rank: usize,
+    num_hops: usize,
+    graph: &Csr,
+    features: &[f32],
+    dim: usize,
+    part: &Partition,
+    locals: &[LocalGraph],
+    rng: &mut Rng,
+) -> Result<PretrainFeatures> {
+    assert!(num_hops >= 1 && num_hops <= 2);
+    monitor.start("pretrain");
+    let m = locals.len();
+
+    // Low-rank setup: the server samples P and distributes it (paper §4.2).
+    // When HE is on, P is additionally encrypted before distribution, which
+    // the paper notes guards against inversion of the shared aggregates.
+    let projection = if lowrank_rank > 0 {
+        let p = Projection::sample(dim, lowrank_rank, rng);
+        let per_client_bytes = match privacy {
+            PrivacyMode::He(hp) => hp.encrypted_vector_bytes(p.matrix.len()),
+            _ => p.wire_bytes(),
+        };
+        for _ in 0..m {
+            monitor.net.send(Phase::PreTrain, Direction::Down, per_client_bytes);
+        }
+        Some(p)
+    } else {
+        None
+    };
+    let d_eff = projection.as_ref().map(|p| p.k).unwrap_or(dim);
+
+    // Working feature table, projected once up front if low-rank is on
+    // (client-side: each client projects its own rows; no communication).
+    let mut x: Vec<f32> = match &projection {
+        Some(p) => {
+            let (px, secs) = timed(|| p.project(features, graph.n));
+            monitor.add_secs("lowrank_project", secs);
+            px
+        }
+        None => features.to_vec(),
+    };
+
+    for _hop in 0..num_hops {
+        let mut next = vec![0f32; graph.n * d_eff];
+        for local in locals {
+            let i = local.client;
+            let nodes = &local.owned;
+            // Each other client computes + uploads its additive contribution.
+            let mut agg = vec![0f32; nodes.len() * d_eff];
+            match privacy {
+                PrivacyMode::He(hp) => {
+                    let ctx = CkksContext::new(hp.clone(), rng.next_u64() | 1);
+                    let max_dim = graph.n.max(d_eff);
+                    let mut acc: Option<crate::he::Ciphertext> = None;
+                    for j in 0..m as u32 {
+                        if j == i {
+                            continue;
+                        }
+                        let contrib =
+                            local_neighbor_contribution(graph, part, &x, d_eff, nodes, j);
+                        let (ct, enc) = timed(|| ctx.encrypt(&contrib, max_dim));
+                        monitor.add_secs("he_encrypt", enc);
+                        monitor.net.send(Phase::PreTrain, Direction::Up, ct.wire_bytes());
+                        let (_, add) = timed(|| match &mut acc {
+                            None => acc = Some(ct.clone()),
+                            Some(a) => ctx.add_assign(a, &ct),
+                        });
+                        monitor.add_secs("he_aggregate", add);
+                    }
+                    if let Some(acc) = acc {
+                        monitor.net.send(Phase::PreTrain, Direction::Down, acc.wire_bytes());
+                        let (dec, dsecs) = timed(|| ctx.decrypt(&acc));
+                        monitor.add_secs("he_decrypt", dsecs);
+                        agg.copy_from_slice(&dec);
+                    }
+                }
+                _ => {
+                    for j in 0..m as u32 {
+                        if j == i {
+                            continue;
+                        }
+                        let contrib =
+                            local_neighbor_contribution(graph, part, &x, d_eff, nodes, j);
+                        // Wire cost: only rows this client has data for.
+                        let rows = nonzero_rows(graph, part, nodes, j);
+                        monitor.net.send(
+                            Phase::PreTrain,
+                            Direction::Up,
+                            (rows * d_eff * 4) as u64,
+                        );
+                        for (a, c) in agg.iter_mut().zip(&contrib) {
+                            *a += c;
+                        }
+                    }
+                    // Server returns the aggregate for this client's nodes.
+                    monitor.net.send(
+                        Phase::PreTrain,
+                        Direction::Down,
+                        (nodes.len() * d_eff * 4) as u64,
+                    );
+                }
+            }
+            // Local part: own contribution + self feature, then degree
+            // normalization (computed client-side, no communication).
+            let own = local_neighbor_contribution(graph, part, &x, d_eff, nodes, i);
+            for (k, &u) in nodes.iter().enumerate() {
+                let deg = graph.degree(u) as f32 + 1.0;
+                let row = &mut next[u as usize * d_eff..(u as usize + 1) * d_eff];
+                let self_row = &x[u as usize * d_eff..(u as usize + 1) * d_eff];
+                for t in 0..d_eff {
+                    row[t] = (agg[k * d_eff + t] + own[k * d_eff + t] + self_row[t]) / deg;
+                }
+            }
+        }
+        x = next;
+    }
+    monitor.stop("pretrain");
+    let per_client = locals
+        .iter()
+        .map(|l| {
+            let mut out = vec![0f32; l.owned.len() * d_eff];
+            for (k, &u) in l.owned.iter().enumerate() {
+                out[k * d_eff..(k + 1) * d_eff]
+                    .copy_from_slice(&x[u as usize * d_eff..(u as usize + 1) * d_eff]);
+            }
+            out
+        })
+        .collect();
+    Ok(PretrainFeatures { per_client, d_eff })
+}
+
+/// Distributed-GCN halo exchange: each client downloads raw features of its
+/// halo nodes (uploaded by their owners). Returns per-client halo feature
+/// tables aligned with `locals[i].halo`.
+pub fn exchange_halo_features(
+    monitor: &Monitor,
+    features: &[f32],
+    dim: usize,
+    locals: &[LocalGraph],
+) -> Vec<Vec<f32>> {
+    monitor.start("pretrain");
+    let out = locals
+        .iter()
+        .map(|l| {
+            let mut table = vec![0f32; l.halo.len() * dim];
+            for (k, &u) in l.halo.iter().enumerate() {
+                table[k * dim..(k + 1) * dim]
+                    .copy_from_slice(&features[u as usize * dim..(u as usize + 1) * dim]);
+            }
+            // Owners upload, this client downloads.
+            let bytes = (l.halo.len() * dim * 4) as u64;
+            monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+            monitor.net.send(Phase::PreTrain, Direction::Down, bytes);
+            table
+        })
+        .collect();
+    monitor.stop("pretrain");
+    out
+}
+
+/// FedSage+ NeighGen-lite: fit `W` minimizing ‖X_v W − Σ_{u∈N(v)} x_u‖² over
+/// each client's internal edges (ridge), exchange the `d×d` generators, and
+/// return the average generator. The caller imputes cross-client sums as
+/// `x_v · W_avg` for boundary nodes.
+pub fn fedsage_generators(
+    monitor: &Monitor,
+    graph: &Csr,
+    features: &[f32],
+    dim: usize,
+    part: &Partition,
+    locals: &[LocalGraph],
+) -> Vec<f32> {
+    monitor.start("pretrain");
+    let mut avg = vec![0f32; dim * dim];
+    let mut contributors = 0f32;
+    for local in locals {
+        // Training pairs: (x_v, internal neighbor sum) for owned nodes with
+        // at least one internal neighbor.
+        let nodes: Vec<u32> = local
+            .owned
+            .iter()
+            .copied()
+            .filter(|&u| {
+                graph.neighbors(u).iter().any(|&v| part.assign[v as usize] == local.client)
+            })
+            .collect();
+        if nodes.len() < 8 {
+            continue;
+        }
+        let (w, secs) = timed(|| {
+            let xs: Vec<f32> = nodes
+                .iter()
+                .flat_map(|&u| features[u as usize * dim..(u as usize + 1) * dim].to_vec())
+                .collect();
+            let ys = local_neighbor_contribution(graph, part, features, dim, &nodes, local.client);
+            // W = (XᵀX + λI)⁻¹ Xᵀ Y
+            let g = gram(&xs, nodes.len(), dim);
+            let mut xty = vec![0f32; dim * dim];
+            for (r, &_u) in nodes.iter().enumerate() {
+                let xr = &xs[r * dim..(r + 1) * dim];
+                let yr = &ys[r * dim..(r + 1) * dim];
+                for a in 0..dim {
+                    if xr[a] == 0.0 {
+                        continue;
+                    }
+                    let row = &mut xty[a * dim..(a + 1) * dim];
+                    for b in 0..dim {
+                        row[b] += xr[a] * yr[b];
+                    }
+                }
+            }
+            ridge_solve(&g, &xty, dim, dim, 1.0)
+        });
+        monitor.add_secs("neighgen_fit", secs);
+        // Generator exchange: up to the server, averaged model back down.
+        let bytes = (dim * dim * 4) as u64;
+        monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+        for (a, v) in avg.iter_mut().zip(&w) {
+            *a += v;
+        }
+        contributors += 1.0;
+    }
+    if contributors > 0.0 {
+        for a in avg.iter_mut() {
+            *a /= contributors;
+        }
+    }
+    for _ in locals {
+        monitor.net.send(Phase::PreTrain, Direction::Down, (dim * dim * 4) as u64);
+    }
+    monitor.stop("pretrain");
+    avg
+}
+
+/// Impute cross-client neighbor sums with the averaged generator:
+/// returns, for each owned node of `local`, `x_v + internal_sum_v +
+/// gen(x_v)·1[v is boundary]`, degree-normalized — the FedSage+ training
+/// input.
+pub fn fedsage_features(
+    graph: &Csr,
+    features: &[f32],
+    dim: usize,
+    part: &Partition,
+    local: &LocalGraph,
+    generator: &[f32],
+) -> Vec<f32> {
+    let nodes = &local.owned;
+    let internal = local_neighbor_contribution(graph, part, features, dim, nodes, local.client);
+    let mut out = vec![0f32; nodes.len() * dim];
+    for (k, &u) in nodes.iter().enumerate() {
+        let x_v = &features[u as usize * dim..(u as usize + 1) * dim];
+        let is_boundary =
+            graph.neighbors(u).iter().any(|&v| part.assign[v as usize] != local.client);
+        let row = &mut out[k * dim..(k + 1) * dim];
+        row.copy_from_slice(&internal[k * dim..(k + 1) * dim]);
+        if is_boundary {
+            let imputed = matmul(x_v, generator, 1, dim, dim);
+            for (r, g) in row.iter_mut().zip(&imputed) {
+                *r += g;
+            }
+        }
+        let deg = graph.degree(u) as f32 + 1.0;
+        for (t, r) in row.iter_mut().enumerate() {
+            *r = (*r + x_v[t]) / deg;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::build_local_graphs;
+    use crate::transport::{NetConfig, SimNet};
+    use std::sync::Arc;
+
+    fn setup(n: usize, d: usize) -> (Csr, Vec<f32>, Partition, Vec<LocalGraph>, Monitor) {
+        let mut rng = Rng::seeded(3);
+        let spec = crate::graph::PlantedSpec {
+            n,
+            num_classes: 3,
+            mean_degree: 4.0,
+            homophily: 0.8,
+            degree_skew: 2.5,
+        };
+        let (g, labels) = crate::graph::planted_graph(&spec, &mut rng);
+        let feats = crate::graph::class_features(&labels, 3, d, 1.0, &mut rng);
+        let part = crate::graph::dirichlet_partition(&labels, 3, 4, 10_000.0, &mut rng);
+        let locals = build_local_graphs(&g, &part);
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        (g, feats, part, locals, m)
+    }
+
+    #[test]
+    fn fedgcn_matches_direct_aggregation() {
+        let (g, feats, part, locals, mon) = setup(120, 8);
+        let mut rng = Rng::seeded(1);
+        let res = fedgcn_pretrain(
+            &mon,
+            &PrivacyMode::Plaintext,
+            0,
+            1,
+            &g,
+            &feats,
+            8,
+            &part,
+            &locals,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(res.d_eff, 8);
+        // Check one client against a direct computation of (x_v + Σ x_u)/deg̃.
+        let l = &locals[0];
+        for (k, &u) in l.owned.iter().enumerate().take(10) {
+            let mut want = feats[u as usize * 8..(u as usize + 1) * 8].to_vec();
+            for &v in g.neighbors(u) {
+                for t in 0..8 {
+                    want[t] += feats[v as usize * 8 + t];
+                }
+            }
+            let deg = g.degree(u) as f32 + 1.0;
+            for t in 0..8 {
+                let got = res.per_client[0][k * 8 + t];
+                assert!(
+                    (got - want[t] / deg).abs() < 1e-4,
+                    "node {u} dim {t}: {got} vs {}",
+                    want[t] / deg
+                );
+            }
+        }
+        assert!(mon.net.counter(Phase::PreTrain).bytes_up > 0);
+    }
+
+    #[test]
+    fn lowrank_equals_project_of_aggregate() {
+        let (g, feats, part, locals, mon) = setup(100, 16);
+        // Full pipeline with rank 4 must equal projecting the plain result
+        // (linearity, the §4.2 property) — same projection seed.
+        let rank = 4;
+        let mut rng1 = Rng::seeded(9);
+        let lr = fedgcn_pretrain(
+            &mon,
+            &PrivacyMode::Plaintext,
+            rank,
+            1,
+            &g,
+            &feats,
+            16,
+            &part,
+            &locals,
+            &mut rng1,
+        )
+        .unwrap();
+        assert_eq!(lr.d_eff, rank);
+        let mut rng2 = Rng::seeded(9);
+        let p = Projection::sample(16, rank, &mut rng2);
+        let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng3 = Rng::seeded(123);
+        let plain = fedgcn_pretrain(
+            &mon2,
+            &PrivacyMode::Plaintext,
+            0,
+            1,
+            &g,
+            &feats,
+            16,
+            &part,
+            &locals,
+            &mut rng3,
+        )
+        .unwrap();
+        for (c, l) in locals.iter().enumerate() {
+            let projected = p.project(&plain.per_client[c], l.owned.len());
+            for (a, b) in lr.per_client[c].iter().zip(&projected) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+        // And the low-rank exchange must be cheaper on the wire.
+        let lr_bytes = mon.net.counter(Phase::PreTrain).bytes_up;
+        let plain_bytes = mon2.net.counter(Phase::PreTrain).bytes_up;
+        assert!(lr_bytes < plain_bytes, "{lr_bytes} !< {plain_bytes}");
+    }
+
+    #[test]
+    fn he_pretrain_close_to_plain_but_heavier() {
+        let (g, feats, part, locals, mon) = setup(80, 8);
+        let mut rng = Rng::seeded(5);
+        let he = fedgcn_pretrain(
+            &mon,
+            &PrivacyMode::He(crate::he::CkksParams::default_params()),
+            0,
+            1,
+            &g,
+            &feats,
+            8,
+            &part,
+            &locals,
+            &mut rng,
+        )
+        .unwrap();
+        let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng2 = Rng::seeded(5);
+        let plain = fedgcn_pretrain(
+            &mon2,
+            &PrivacyMode::Plaintext,
+            0,
+            1,
+            &g,
+            &feats,
+            8,
+            &part,
+            &locals,
+            &mut rng2,
+        )
+        .unwrap();
+        for (a, b) in he.per_client[1].iter().zip(&plain.per_client[1]) {
+            assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+        }
+        assert!(
+            mon.net.counter(Phase::PreTrain).bytes_up
+                > 10 * mon2.net.counter(Phase::PreTrain).bytes_up
+        );
+        assert!(mon.phase_secs("he_encrypt") > 0.0);
+    }
+
+    #[test]
+    fn two_hop_costs_roughly_double() {
+        let (g, feats, part, locals, mon1) = setup(100, 8);
+        let mut rng = Rng::seeded(6);
+        fedgcn_pretrain(&mon1, &PrivacyMode::Plaintext, 0, 1, &g, &feats, 8, &part, &locals, &mut rng)
+            .unwrap();
+        let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        fedgcn_pretrain(&mon2, &PrivacyMode::Plaintext, 0, 2, &g, &feats, 8, &part, &locals, &mut rng)
+            .unwrap();
+        let b1 = mon1.net.counter(Phase::PreTrain).bytes_up;
+        let b2 = mon2.net.counter(Phase::PreTrain).bytes_up;
+        assert!((1.8..2.2).contains(&(b2 as f64 / b1 as f64)), "{b1} vs {b2}");
+    }
+
+    #[test]
+    fn halo_exchange_table_alignment() {
+        let (g, feats, _part, locals, mon) = setup(60, 4);
+        let tables = exchange_halo_features(&mon, &feats, 4, &locals);
+        for (l, t) in locals.iter().zip(&tables) {
+            assert_eq!(t.len(), l.halo.len() * 4);
+            for (k, &u) in l.halo.iter().enumerate() {
+                assert_eq!(&t[k * 4..(k + 1) * 4], &feats[u as usize * 4..(u as usize + 1) * 4]);
+            }
+        }
+        let _ = g;
+        assert!(mon.net.counter(Phase::PreTrain).bytes_down > 0);
+    }
+
+    #[test]
+    fn fedsage_generator_imputes_reasonably() {
+        let (g, feats, part, locals, mon) = setup(200, 6);
+        let gen = fedsage_generators(&mon, &g, &feats, 6, &part, &locals);
+        assert_eq!(gen.len(), 36);
+        assert!(gen.iter().any(|&v| v != 0.0));
+        let f0 = fedsage_features(&g, &feats, 6, &part, &locals[0], &gen);
+        assert_eq!(f0.len(), locals[0].owned.len() * 6);
+        assert!(f0.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,323 @@
+//! Federated graph classification runner (paper §5.1.1, Fig 8).
+//!
+//! Algorithms (Table 5): SelfTrain (local only), FedAvg, FedProx (proximal
+//! term lowered into its own artifact), and the GCFL family (clustered
+//! aggregation; see [`super::gcfl`]). Backbone: 2-layer GIN with sum pooling.
+
+use anyhow::{bail, Result};
+
+use crate::config::{FedGraphConfig, Method, PrivacyMode};
+use crate::data::gc::{gc_spec, generate_gc, GCDataset, SmallGraph};
+use crate::monitor::{Monitor, RoundRecord};
+use crate::runtime::{Engine, ParamSet, Tensor};
+use crate::transport::Phase;
+use crate::util::rng::Rng;
+
+use super::aggregate::aggregate_params;
+use super::gcfl::{GcflSignal, GcflState};
+use super::selection::select_clients;
+
+/// Pack up to `g_pad` graphs into one padded GIN batch.
+/// Tensor order matches the artifact: x, src, dst, enorm, gid, nmask,
+/// glabels, gmask.
+fn pack_gc_batch(
+    graphs: &[&SmallGraph],
+    n_pad: usize,
+    e_pad: usize,
+    g_pad: usize,
+    d: usize,
+) -> Option<Vec<Tensor>> {
+    assert!(graphs.len() <= g_pad);
+    let mut x = vec![0f32; n_pad * d];
+    let sink = (n_pad - 1) as i32;
+    let mut src = vec![sink; e_pad];
+    let mut dst = vec![sink; e_pad];
+    let mut enorm = vec![0f32; e_pad];
+    let mut gid = vec![(g_pad - 1) as i32; n_pad];
+    let mut nmask = vec![0f32; n_pad];
+    let mut glabels = vec![0i32; g_pad];
+    let mut gmask = vec![0f32; g_pad];
+    let mut node_off = 0usize;
+    let mut arc_off = 0usize;
+    let mut packed = 0usize;
+    for (gi, g) in graphs.iter().enumerate() {
+        let n = g.csr.n;
+        let arcs = g.csr.num_arcs();
+        if node_off + n > n_pad || arc_off + arcs > e_pad {
+            break; // bucket full; remaining graphs go to the next batch
+        }
+        for u in 0..n {
+            x[(node_off + u) * d..(node_off + u + 1) * d]
+                .copy_from_slice(&g.features[u * d..(u + 1) * d]);
+            gid[node_off + u] = gi as i32;
+            nmask[node_off + u] = 1.0;
+        }
+        for u in 0..n as u32 {
+            for &v in g.csr.neighbors(u) {
+                src[arc_off] = (node_off + v as usize) as i32;
+                dst[arc_off] = (node_off + u as usize) as i32;
+                enorm[arc_off] = 1.0; // GIN sum aggregation
+                arc_off += 1;
+            }
+        }
+        glabels[gi] = g.label as i32;
+        gmask[gi] = 1.0;
+        node_off += n;
+        packed += 1;
+    }
+    if packed == 0 {
+        return None;
+    }
+    Some(vec![
+        Tensor::f32(&[n_pad, d], x),
+        Tensor::i32(&[e_pad], src),
+        Tensor::i32(&[e_pad], dst),
+        Tensor::f32(&[e_pad], enorm),
+        Tensor::i32(&[n_pad], gid),
+        Tensor::f32(&[n_pad], nmask),
+        Tensor::i32(&[g_pad], glabels),
+        Tensor::f32(&[g_pad], gmask),
+    ])
+}
+
+struct GcClient {
+    train_idx: Vec<usize>,
+    test_idx: Vec<usize>,
+    params: ParamSet,
+}
+
+pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    let spec = gc_spec(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
+    if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
+        bail!("SelfTrain has no aggregation to encrypt");
+    }
+    let mut rng = Rng::seeded(cfg.seed);
+    monitor.note("task", "GC");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+
+    monitor.start("data");
+    let ds = generate_gc(&spec, cfg.scale, cfg.seed);
+    // Graphs distributed across clients with Dirichlet label skew, matching
+    // the NC partitioner semantics.
+    let labels: Vec<u16> = ds.graphs.iter().map(|g| g.label).collect();
+    let part = crate::graph::dirichlet_partition(
+        &labels,
+        ds.num_classes,
+        cfg.n_trainer,
+        cfg.iid_beta,
+        &mut rng,
+    );
+    monitor.stop("data");
+
+    let d = ds.feat_dim;
+    let fixed = [("d", d)];
+    // Pick the bucket that fits a full batch of this dataset's largest graphs.
+    let max_graph_nodes = ds.graphs.iter().map(|g| g.csr.n).max().unwrap_or(16);
+    let want_nodes = (max_graph_nodes * 16).max(512);
+    let kind_train = if cfg.method == Method::FedProx { "gc_prox_train" } else { "gc_train" };
+    let train_art = engine
+        .manifest
+        .pick(kind_train, &fixed, want_nodes.min(engine.manifest.max_bucket(kind_train, &fixed).unwrap_or(want_nodes)))?
+        .clone();
+    let eval_art = engine.manifest.pick("gc_eval", &fixed, train_art.dim("n"))?.clone();
+    let (n_pad, e_pad, g_pad, c_pad) =
+        (train_art.dim("n"), train_art.dim("e"), train_art.dim("g"), train_art.dim("c"));
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+    monitor.note("artifact", &train_art.name);
+
+    let hidden = engine.manifest.hidden;
+    let global_init = ParamSet::gc(d, hidden, c_pad, &mut rng);
+    let mut clients: Vec<GcClient> = (0..cfg.n_trainer)
+        .map(|ci| {
+            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
+            GcClient {
+                train_idx: mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
+                test_idx: mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
+                params: global_init.clone(),
+            }
+        })
+        .collect();
+
+    let self_train = cfg.method == Method::SelfTrain;
+    let mut gcfl = match cfg.method {
+        Method::Gcfl => Some(GcflState::new(cfg.n_trainer, GcflSignal::GradientCosine, 0.05, 0.1)),
+        Method::GcflPlus => Some(GcflState::new(cfg.n_trainer, GcflSignal::NormSeqDtw, 0.5, 1.0)),
+        Method::GcflPlusDws => {
+            Some(GcflState::new(cfg.n_trainer, GcflSignal::WeightSeqDtw, 0.5, 1.0))
+        }
+        _ => None,
+    };
+
+    let mut global = global_init.clone();
+    if !self_train {
+        monitor.net.broadcast(Phase::Train, global.byte_len(), cfg.n_trainer);
+    }
+    let mut last_acc = 0.0;
+    for round in 0..cfg.global_rounds {
+        let selected =
+            select_clients(cfg.n_trainer, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
+        let mut updates: Vec<(usize, f32, ParamSet)> = Vec::new();
+        let mut crit_path = 0.0f64;
+        let mut round_loss = 0.0;
+        for &ci in &selected {
+            let t0 = std::time::Instant::now();
+            // Start from the (cluster-)global or own params.
+            let start = if self_train {
+                clients[ci].params.clone()
+            } else if let Some(st) = &gcfl {
+                // cluster model = average within cluster from previous round;
+                // stored in each member's params after aggregation below.
+                let _ = st;
+                clients[ci].params.clone()
+            } else {
+                global.clone()
+            };
+            let mut p = start.clone();
+            let mut loss = 0.0;
+            for _ in 0..cfg.local_steps {
+                if clients[ci].train_idx.is_empty() {
+                    break;
+                }
+                let k = g_pad.min(clients[ci].train_idx.len());
+                let picks = rng.sample_distinct(clients[ci].train_idx.len(), k);
+                let batch: Vec<&SmallGraph> =
+                    picks.iter().map(|&i| &ds.graphs[clients[ci].train_idx[i]]).collect();
+                let Some(mut data) = pack_gc_batch(&batch, n_pad, e_pad, g_pad, d) else {
+                    continue;
+                };
+                let mut args = p.to_tensors();
+                if cfg.method == Method::FedProx {
+                    args.extend(global.to_tensors()); // proximal anchor
+                }
+                args.append(&mut data);
+                args.push(Tensor::scalar_f32(cfg.learning_rate));
+                if cfg.method == Method::FedProx {
+                    args.push(Tensor::scalar_f32(cfg.fedprox_mu));
+                }
+                let outs = engine.execute(&train_art.name, args)?;
+                p.update_from_tensors(&outs);
+                loss = outs[6].scalar();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            monitor.add_secs("train", secs);
+            crit_path = crit_path.max(secs);
+            round_loss += loss as f64;
+            if let Some(st) = &mut gcfl {
+                let delta: Vec<f32> =
+                    p.flatten().iter().zip(start.flatten()).map(|(a, b)| a - b).collect();
+                st.observe(ci, &delta);
+            }
+            let w = clients[ci].train_idx.len().max(1) as f32;
+            if self_train {
+                clients[ci].params = p;
+            } else {
+                updates.push((ci, w, p));
+            }
+        }
+        let t_agg = std::time::Instant::now();
+        if let Some(st) = &mut gcfl {
+            if round >= 4 && round % 5 == 0 {
+                st.maybe_split();
+            }
+            // Aggregate within each cluster; members adopt the cluster model.
+            for cluster in st.clusters.clone() {
+                let ups: Vec<(f32, ParamSet)> = updates
+                    .iter()
+                    .filter(|(ci, _, _)| cluster.contains(ci))
+                    .map(|(_, w, p)| (*w, p.clone()))
+                    .collect();
+                if ups.is_empty() {
+                    continue;
+                }
+                let model = aggregate_params(
+                    monitor,
+                    Phase::Train,
+                    &cfg.privacy,
+                    &ups,
+                    cluster.len(),
+                    n_pad,
+                    &mut rng,
+                )?;
+                for &ci in &cluster {
+                    clients[ci].params = model.clone();
+                }
+            }
+            monitor.note("gcfl_clusters", st.clusters.len());
+        } else if !self_train && !updates.is_empty() {
+            let ups: Vec<(f32, ParamSet)> =
+                updates.iter().map(|(_, w, p)| (*w, p.clone())).collect();
+            global = aggregate_params(
+                monitor,
+                Phase::Train,
+                &cfg.privacy,
+                &ups,
+                cfg.n_trainer,
+                n_pad,
+                &mut rng,
+            )?;
+        }
+        let agg_secs = t_agg.elapsed().as_secs_f64();
+
+        if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
+            last_acc = eval_gc(
+                engine, monitor, &eval_art.name, &ds, &clients, &global, self_train || gcfl.is_some(),
+                n_pad, e_pad, g_pad, d,
+            )?;
+        }
+        monitor.record_round(RoundRecord {
+            round,
+            train_secs: crit_path,
+            agg_secs,
+            train_loss: round_loss / selected.len().max(1) as f64,
+            test_accuracy: last_acc,
+        });
+        monitor.sample_resources();
+    }
+    monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    Ok(())
+}
+
+/// Evaluate on each client's local test graphs with the appropriate model
+/// (global, or the client/cluster model when `per_client`).
+#[allow(clippy::too_many_arguments)]
+fn eval_gc(
+    engine: &Engine,
+    monitor: &Monitor,
+    eval_name: &str,
+    ds: &GCDataset,
+    clients: &[GcClient],
+    global: &ParamSet,
+    per_client: bool,
+    n_pad: usize,
+    e_pad: usize,
+    g_pad: usize,
+    d: usize,
+) -> Result<f64> {
+    monitor.start("eval");
+    let mut correct = 0.0;
+    let mut cnt = 0.0;
+    for cl in clients {
+        let model = if per_client { &cl.params } else { global };
+        let mut i = 0;
+        while i < cl.test_idx.len() {
+            let hi = (i + g_pad).min(cl.test_idx.len());
+            let batch: Vec<&SmallGraph> =
+                cl.test_idx[i..hi].iter().map(|&k| &ds.graphs[k]).collect();
+            i = hi;
+            let Some(mut data) = pack_gc_batch(&batch, n_pad, e_pad, g_pad, d) else {
+                continue;
+            };
+            let mut args = model.to_tensors();
+            args.append(&mut data);
+            let outs = engine.execute(eval_name, args)?;
+            correct += outs[1].scalar() as f64;
+            cnt += outs[2].scalar() as f64;
+        }
+    }
+    monitor.stop("eval");
+    Ok(if cnt > 0.0 { correct / cnt } else { 0.0 })
+}

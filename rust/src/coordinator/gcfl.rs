@@ -1,0 +1,271 @@
+//! GCFL family: clustered federated graph classification (Xie et al. 2021,
+//! the paper's GC baselines GCFL / GCFL+ / GCFL+dWs).
+//!
+//! The server maintains a partition of clients into clusters and aggregates
+//! within each cluster. A cluster is split in two when its members' gradient
+//! signals disagree (mean pairwise distance > ε1 and max > ε2):
+//! - **GCFL** compares the *latest* gradient updates (cosine distance);
+//! - **GCFL+** compares gradient-*norm sequences* with dynamic time warping;
+//! - **GCFL+dWs** runs DTW on the raw parameter-delta sequences (windowed),
+//!   the "dWs" variant's weight-series signal.
+
+/// Dynamic-time-warping distance between two scalar series (O(nm), full
+/// window). Symmetric; zero iff the series are identical.
+pub fn dtw(a: &[f64], b: &[f64]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let (n, m) = (a.len(), b.len());
+    let mut prev = vec![f64::INFINITY; m + 1];
+    let mut cur = vec![f64::INFINITY; m + 1];
+    prev[0] = 0.0;
+    for i in 1..=n {
+        cur[0] = f64::INFINITY;
+        for j in 1..=m {
+            let cost = (a[i - 1] - b[j - 1]).abs();
+            cur[j] = cost + prev[j].min(cur[j - 1]).min(prev[j - 1]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// DTW over vector series using the L2 distance between frames.
+pub fn dtw_multivariate(a: &[Vec<f32>], b: &[Vec<f32>]) -> f64 {
+    if a.is_empty() || b.is_empty() {
+        return if a.len() == b.len() { 0.0 } else { f64::INFINITY };
+    }
+    let frame = |x: &Vec<f32>, y: &Vec<f32>| -> f64 {
+        x.iter().zip(y).map(|(p, q)| ((p - q) as f64).powi(2)).sum::<f64>().sqrt()
+    };
+    let (n, m) = (a.len(), b.len());
+    let mut prev = vec![f64::INFINITY; m + 1];
+    let mut cur = vec![f64::INFINITY; m + 1];
+    prev[0] = 0.0;
+    for i in 1..=n {
+        cur[0] = f64::INFINITY;
+        for j in 1..=m {
+            let cost = frame(&a[i - 1], &b[j - 1]);
+            cur[j] = cost + prev[j].min(cur[j - 1]).min(prev[j - 1]);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[m]
+}
+
+/// Cosine distance between two flat gradients (1 - cosine similarity).
+pub fn cosine_distance(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+    let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 0.0;
+    }
+    1.0 - dot / (na * nb)
+}
+
+/// Which signal drives the clustering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GcflSignal {
+    /// Latest-gradient cosine (GCFL).
+    GradientCosine,
+    /// DTW over gradient-norm sequences (GCFL+).
+    NormSeqDtw,
+    /// DTW over windowed weight-delta sequences (GCFL+dWs).
+    WeightSeqDtw,
+}
+
+/// Server-side clustering state.
+pub struct GcflState {
+    pub signal: GcflSignal,
+    pub eps1: f64,
+    pub eps2: f64,
+    /// Current clusters (partition of 0..m).
+    pub clusters: Vec<Vec<usize>>,
+    /// Per-client gradient-norm history.
+    norm_seq: Vec<Vec<f64>>,
+    /// Per-client recent gradient windows (flattened, subsampled).
+    grad_seq: Vec<Vec<Vec<f32>>>,
+    /// Latest flat gradient per client.
+    latest: Vec<Vec<f32>>,
+    window: usize,
+}
+
+impl GcflState {
+    pub fn new(num_clients: usize, signal: GcflSignal, eps1: f64, eps2: f64) -> GcflState {
+        GcflState {
+            signal,
+            eps1,
+            eps2,
+            clusters: vec![(0..num_clients).collect()],
+            norm_seq: vec![Vec::new(); num_clients],
+            grad_seq: vec![Vec::new(); num_clients],
+            latest: vec![Vec::new(); num_clients],
+            window: 10,
+        }
+    }
+
+    /// Record a client's round update (delta = local - global, flattened).
+    /// Gradients are subsampled to bound the DTW memory (every 16th value).
+    pub fn observe(&mut self, client: usize, delta: &[f32]) {
+        let norm = (delta.iter().map(|x| (*x as f64).powi(2)).sum::<f64>()).sqrt();
+        self.norm_seq[client].push(norm);
+        let sub: Vec<f32> = delta.iter().step_by(16).copied().collect();
+        self.latest[client] = sub.clone();
+        let seq = &mut self.grad_seq[client];
+        seq.push(sub);
+        if seq.len() > self.window {
+            seq.remove(0);
+        }
+    }
+
+    fn distance(&self, i: usize, j: usize) -> f64 {
+        match self.signal {
+            GcflSignal::GradientCosine => cosine_distance(&self.latest[i], &self.latest[j]),
+            GcflSignal::NormSeqDtw => {
+                let w = self.window.min(self.norm_seq[i].len()).min(self.norm_seq[j].len());
+                let a = &self.norm_seq[i][self.norm_seq[i].len() - w..];
+                let b = &self.norm_seq[j][self.norm_seq[j].len() - w..];
+                dtw(a, b)
+            }
+            GcflSignal::WeightSeqDtw => dtw_multivariate(&self.grad_seq[i], &self.grad_seq[j]),
+        }
+    }
+
+    /// Attempt cluster splits (call every few rounds once history exists).
+    /// Returns how many splits happened.
+    pub fn maybe_split(&mut self) -> usize {
+        let mut new_clusters = Vec::new();
+        let mut splits = 0;
+        for cluster in std::mem::take(&mut self.clusters) {
+            if cluster.len() < 2 {
+                new_clusters.push(cluster);
+                continue;
+            }
+            // Pairwise distances within the cluster.
+            let mut dmax = 0.0f64;
+            let mut dsum = 0.0f64;
+            let mut npairs = 0.0f64;
+            let mut far_pair = (cluster[0], cluster[1]);
+            for (ai, &i) in cluster.iter().enumerate() {
+                for &j in &cluster[ai + 1..] {
+                    let d = self.distance(i, j);
+                    dsum += d;
+                    npairs += 1.0;
+                    if d > dmax {
+                        dmax = d;
+                        far_pair = (i, j);
+                    }
+                }
+            }
+            let dmean = dsum / npairs.max(1.0);
+            if dmean > self.eps1 && dmax > self.eps2 {
+                // 2-medoids split seeded by the farthest pair.
+                let (ma, mb) = far_pair;
+                let mut ca = Vec::new();
+                let mut cb = Vec::new();
+                for &i in &cluster {
+                    if self.distance(i, ma) <= self.distance(i, mb) {
+                        ca.push(i);
+                    } else {
+                        cb.push(i);
+                    }
+                }
+                if ca.is_empty() || cb.is_empty() {
+                    new_clusters.push(cluster);
+                } else {
+                    splits += 1;
+                    new_clusters.push(ca);
+                    new_clusters.push(cb);
+                }
+            } else {
+                new_clusters.push(cluster);
+            }
+        }
+        self.clusters = new_clusters;
+        splits
+    }
+
+    /// The cluster containing `client`.
+    pub fn cluster_of(&self, client: usize) -> usize {
+        self.clusters
+            .iter()
+            .position(|c| c.contains(&client))
+            .expect("client must be in a cluster")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtw_properties() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![1.0, 2.0, 3.0];
+        assert_eq!(dtw(&a, &b), 0.0);
+        // symmetry
+        let c = vec![0.0, 5.0, 1.0, 2.0];
+        assert!((dtw(&a, &c) - dtw(&c, &a)).abs() < 1e-12);
+        // warping: shifted series are closer under DTW than Euclid would be
+        let shift = vec![1.0, 1.0, 2.0, 3.0];
+        assert!(dtw(&a, &shift) < 1.0);
+        // empty handling
+        assert_eq!(dtw(&[], &[]), 0.0);
+        assert!(dtw(&a, &[]).is_infinite());
+    }
+
+    #[test]
+    fn cosine_distance_range() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        assert!((cosine_distance(&a, &a)).abs() < 1e-9);
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [-1.0f32, 0.0];
+        assert!((cosine_distance(&a, &c) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustering_splits_disagreeing_clients() {
+        // 4 clients: two send +1 gradients, two send -1 gradients.
+        let mut st = GcflState::new(4, GcflSignal::GradientCosine, 0.5, 1.0);
+        for round in 0..3 {
+            for c in 0..4 {
+                let sign = if c < 2 { 1.0f32 } else { -1.0 };
+                let delta: Vec<f32> = (0..64).map(|k| sign * (1.0 + (k + round) as f32 * 0.01)).collect();
+                st.observe(c, &delta);
+            }
+        }
+        assert_eq!(st.clusters.len(), 1);
+        let splits = st.maybe_split();
+        assert_eq!(splits, 1);
+        assert_eq!(st.clusters.len(), 2);
+        // The split must separate the sign groups.
+        assert_eq!(st.cluster_of(0), st.cluster_of(1));
+        assert_eq!(st.cluster_of(2), st.cluster_of(3));
+        assert_ne!(st.cluster_of(0), st.cluster_of(2));
+    }
+
+    #[test]
+    fn clustering_keeps_agreeing_clients_together() {
+        let mut st = GcflState::new(3, GcflSignal::NormSeqDtw, 5.0, 10.0);
+        for _ in 0..5 {
+            for c in 0..3 {
+                let delta = vec![0.5f32; 32];
+                st.observe(c, &delta);
+            }
+        }
+        assert_eq!(st.maybe_split(), 0);
+        assert_eq!(st.clusters.len(), 1);
+    }
+
+    #[test]
+    fn weight_seq_signal_works() {
+        let mut st = GcflState::new(2, GcflSignal::WeightSeqDtw, 0.1, 0.1);
+        for r in 0..4 {
+            st.observe(0, &vec![r as f32; 32]);
+            st.observe(1, &vec![-(r as f32); 32]);
+        }
+        assert_eq!(st.maybe_split(), 1);
+    }
+}

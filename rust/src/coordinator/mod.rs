@@ -1,0 +1,54 @@
+//! The FedGraph coordinator: `run_fedgraph(config)` — the paper's single
+//! user-facing API (Fig 2, Appendix C) — dispatches to the task runner
+//! (`run_NC` / `run_GC` / `run_LP`), wires up the monitor + simulated
+//! network, and returns the system report.
+
+pub mod aggregate;
+pub mod fedgcn;
+pub mod gc;
+pub mod gcfl;
+pub mod lp;
+pub mod nc;
+pub mod selection;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{FedGraphConfig, Task};
+use crate::monitor::report::Report;
+use crate::monitor::Monitor;
+use crate::runtime::Engine;
+use crate::transport::SimNet;
+
+/// Run a full federated experiment and return its report.
+///
+/// Starts a fresh PJRT engine over `cfg.artifacts_dir`. If you run many
+/// experiments (benchmarks), prefer [`run_fedgraph_with`] with a shared
+/// engine so artifacts compile once.
+pub fn run_fedgraph(cfg: &FedGraphConfig) -> Result<Report> {
+    let engine = Engine::start(&cfg.artifacts_dir)?;
+    let report = run_fedgraph_with(cfg, &engine);
+    engine.shutdown();
+    report
+}
+
+/// Run with a caller-managed engine (compiled executables are cached inside
+/// the engine and shared across runs).
+pub fn run_fedgraph_with(cfg: &FedGraphConfig, engine: &Engine) -> Result<Report> {
+    cfg.validate()?;
+    let net = Arc::new(SimNet::new(cfg.network.clone()));
+    let monitor = Monitor::new(net);
+    run_into_monitor(cfg, engine, &monitor)?;
+    Ok(Report::from_monitor(&monitor))
+}
+
+/// Lowest-level entry: record into a caller-provided monitor (used by the
+/// benches to share one monitor across sub-runs).
+pub fn run_into_monitor(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    match cfg.task {
+        Task::NodeClassification => nc::run_nc(cfg, engine, monitor),
+        Task::GraphClassification => gc::run_gc(cfg, engine, monitor),
+        Task::LinkPrediction => lp::run_lp(cfg, engine, monitor),
+    }
+}

@@ -1,0 +1,675 @@
+//! Federated node classification runner (paper §5.1.2, §5.3, Table 2).
+//!
+//! Implements the five NC algorithms of Table 5 on top of the shared round
+//! loop:
+//! - **FedAvg** — induced local subgraphs, no pre-train exchange;
+//! - **FedGCN** — pre-train neighbor-aggregate exchange (plain / HE /
+//!   low-rank / both), then local training on the aggregated inputs;
+//! - **Distributed-GCN** — halo nodes materialized with raw features;
+//! - **BNS-GCN** — halo re-sampled every round (boundary-node sampling);
+//! - **FedSage+** — linear NeighGen exchange imputing missing neighbors.
+//!
+//! Large graphs fall back to minibatch training (paper §3.4): when a client's
+//! node set exceeds the largest artifact bucket (or `batch_size` is set),
+//! each local step trains on a sampled fixed-shape neighborhood block.
+
+use anyhow::{bail, Result};
+
+use crate::config::{FedGraphConfig, Method};
+use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset};
+use crate::graph::{
+    block_from_induced, build_local_graphs, dirichlet_partition, sample_neighborhood, Block, Csr,
+    LazyGraph, LocalGraph,
+};
+use crate::monitor::{Monitor, RoundRecord};
+use crate::runtime::{Engine, ParamSet, Tensor};
+use crate::transport::{Direction, Phase};
+use crate::util::rng::{hash_f32, Rng};
+
+use super::aggregate::aggregate_params;
+use super::fedgcn::{
+    exchange_halo_features, fedgcn_pretrain, fedsage_features, fedsage_generators,
+};
+use super::selection::select_clients;
+
+/// Convert a block into the artifact's data-input tensors (manifest order:
+/// x, src, dst, enorm, labels, mask).
+pub fn block_tensors(b: &Block) -> Vec<Tensor> {
+    vec![
+        Tensor::f32(&[b.n_pad, b.d], b.x.clone()),
+        Tensor::i32(&[b.e_pad], b.src.clone()),
+        Tensor::i32(&[b.e_pad], b.dst.clone()),
+        Tensor::f32(&[b.e_pad], b.enorm.clone()),
+        Tensor::i32(&[b.n_pad], b.labels.clone()),
+        Tensor::f32(&[b.n_pad], b.mask.clone()),
+    ]
+}
+
+/// One NC client's training state.
+struct NcClient {
+    /// Global ids in block order (owned first; DistGCN/BNS append halo).
+    nodes: Vec<u32>,
+    /// How many of `nodes` are owned (mask-eligible).
+    num_owned: usize,
+    /// Row-major `[nodes.len(), d_eff]` model-input features.
+    features: Vec<f32>,
+    /// Local adjacency over `nodes` positions (self-loop-free; block adds
+    /// GCN norms).
+    csr: Csr,
+    /// Cached static blocks (full-batch mode).
+    train_block: Option<Block>,
+    eval_block: Option<Block>,
+    /// Client training-node count (aggregation weight).
+    train_count: usize,
+}
+
+pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    if cfg.dataset.starts_with("papers100m") {
+        return run_nc_lazy(cfg, engine, monitor);
+    }
+    let spec = nc_spec(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown NC dataset '{}'", cfg.dataset))?;
+    let mut rng = Rng::seeded(cfg.seed);
+    monitor.note("task", "NC");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+
+    monitor.start("data");
+    let ds = generate_nc(&spec, cfg.scale, cfg.seed);
+    let part = dirichlet_partition(
+        &ds.labels,
+        ds.num_classes,
+        cfg.n_trainer,
+        cfg.iid_beta,
+        &mut rng,
+    );
+    let locals = build_local_graphs(&ds.graph, &part);
+    monitor.stop("data");
+
+    // ---- method-specific pre-train phase -> per-client inputs ------------
+    let mut d_eff = ds.feat_dim;
+    let mut clients: Vec<NcClient> = Vec::with_capacity(cfg.n_trainer);
+    match cfg.method {
+        Method::FedAvgNC => {
+            for l in &locals {
+                clients.push(client_owned_features(&ds, l, None));
+            }
+        }
+        Method::FedGcn => {
+            let hops = cfg.num_hops.max(1);
+            let pre = fedgcn_pretrain(
+                monitor,
+                &cfg.privacy,
+                cfg.lowrank_rank,
+                hops,
+                &ds.graph,
+                &ds.features,
+                ds.feat_dim,
+                &part,
+                &locals,
+                &mut rng,
+            )?;
+            d_eff = pre.d_eff;
+            for (l, feats) in locals.iter().zip(pre.per_client) {
+                clients.push(client_owned_features(&ds, l, Some(feats)));
+            }
+        }
+        Method::FedSagePlus => {
+            let gen = fedsage_generators(monitor, &ds.graph, &ds.features, ds.feat_dim, &part, &locals);
+            for l in &locals {
+                let feats = fedsage_features(&ds.graph, &ds.features, ds.feat_dim, &part, l, &gen);
+                clients.push(client_owned_features(&ds, l, Some(feats)));
+            }
+        }
+        Method::DistributedGCN => {
+            let halo_tables = exchange_halo_features(monitor, &ds.features, ds.feat_dim, &locals);
+            for (l, halo) in locals.iter().zip(halo_tables) {
+                clients.push(client_with_halo(&ds, l, &halo, 1.0, &mut rng));
+            }
+        }
+        Method::BnsGcn => {
+            // Initial halo sample; re-sampled per round in the loop below.
+            let halo_tables = exchange_halo_features(monitor, &ds.features, ds.feat_dim, &locals);
+            for (l, halo) in locals.iter().zip(halo_tables) {
+                clients.push(client_with_halo(&ds, l, &halo, cfg.bns_ratio, &mut rng));
+            }
+        }
+        m => bail!("method {} is not a node-classification method", m.name()),
+    }
+
+    // ---- bucket selection / minibatch decision ---------------------------
+    let c = ds.num_classes;
+    let fixed = [("d", d_eff), ("c", c)];
+    let max_bucket = engine
+        .manifest
+        .max_bucket("nc_train", &fixed)
+        .ok_or_else(|| anyhow::anyhow!("no nc_train artifacts for d={d_eff} c={c}"))?;
+    let need = clients.iter().map(|cl| cl.nodes.len()).max().unwrap_or(1);
+    let minibatch = cfg.batch_size > 0 || need > max_bucket;
+    let bucket_need = if minibatch { max_bucket.min(need) } else { need };
+    let train_art = engine.manifest.pick("nc_train", &fixed, bucket_need)?.clone();
+    let eval_art = engine.manifest.pick("nc_eval", &fixed, bucket_need)?.clone();
+    let (n_pad, e_pad) = (train_art.dim("n"), train_art.dim("e"));
+    monitor.note("artifact", &train_art.name);
+    monitor.note("minibatch", minibatch);
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+
+    // Static full-batch blocks.
+    if !minibatch {
+        for cl in clients.iter_mut() {
+            cl.train_block = Some(make_block(cl, &ds, n_pad, e_pad, d_eff, 0));
+            cl.eval_block = Some(make_block(cl, &ds, n_pad, e_pad, d_eff, 2));
+        }
+    }
+
+    // ---- federated round loop --------------------------------------------
+    let mut global = ParamSet::nc(d_eff, engine.manifest.hidden, c, &mut rng);
+    let max_dim = ds.n().max(ds.feat_dim);
+    // Initial model broadcast.
+    monitor.net.broadcast(Phase::Train, global.byte_len(), cfg.n_trainer);
+    let mut last_acc = 0.0;
+    for round in 0..cfg.global_rounds {
+        let selected =
+            select_clients(cfg.n_trainer, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
+        // BNS-GCN re-samples boundary nodes (and re-ships their features).
+        if cfg.method == Method::BnsGcn {
+            for &ci in &selected {
+                let l = &locals[ci];
+                let cl = client_with_halo_resample(&ds, l, cfg.bns_ratio, &mut rng, monitor);
+                let mut cl = cl;
+                cl.train_block = Some(make_block(&cl, &ds, n_pad, e_pad, d_eff, 0));
+                cl.eval_block = Some(make_block(&cl, &ds, n_pad, e_pad, d_eff, 2));
+                clients[ci] = cl;
+            }
+        }
+        let mut updates: Vec<(f32, ParamSet)> = Vec::with_capacity(selected.len());
+        let mut round_loss = 0.0;
+        let mut crit_path = 0.0f64;
+        for &ci in &selected {
+            let cl = &clients[ci];
+            let t0 = std::time::Instant::now();
+            let mut p = global.clone();
+            let mut loss = 0.0;
+            for _step in 0..cfg.local_steps {
+                let block_storage;
+                let block = if minibatch {
+                    block_storage =
+                        sample_minibatch(cl, &ds, cfg.batch_size, n_pad, e_pad, d_eff, 0, &mut rng);
+                    &block_storage
+                } else {
+                    cl.train_block.as_ref().unwrap()
+                };
+                if block.num_masked() == 0 {
+                    continue;
+                }
+                let mut args = p.to_tensors();
+                args.extend(block_tensors(block));
+                args.push(Tensor::scalar_f32(cfg.learning_rate));
+                let outs = engine.execute(&train_art.name, args)?;
+                p.update_from_tensors(&outs);
+                loss = outs[4].scalar();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            monitor.add_secs("train", secs);
+            crit_path = crit_path.max(secs);
+            round_loss += loss as f64;
+            updates.push((cl.train_count.max(1) as f32, p));
+        }
+        let t_agg = std::time::Instant::now();
+        global = aggregate_params(
+            monitor,
+            Phase::Train,
+            &cfg.privacy,
+            &updates,
+            cfg.n_trainer,
+            max_dim,
+            &mut rng,
+        )?;
+        let agg_secs = t_agg.elapsed().as_secs_f64();
+
+        if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
+            last_acc = eval_nc(
+                engine, monitor, &eval_art.name, &clients, &ds, &global, minibatch, n_pad, e_pad,
+                d_eff, &mut rng,
+            )?;
+        }
+        monitor.record_round(RoundRecord {
+            round,
+            train_secs: crit_path,
+            agg_secs,
+            train_loss: round_loss / selected.len().max(1) as f64,
+            test_accuracy: last_acc,
+        });
+        monitor.sample_resources();
+    }
+    monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    Ok(())
+}
+
+/// Owned-only client: `features` defaults to the raw dataset rows.
+fn client_owned_features(ds: &NCDataset, l: &LocalGraph, feats: Option<Vec<f32>>) -> NcClient {
+    let d = feats.as_ref().map(|f| f.len() / l.owned.len().max(1)).unwrap_or(ds.feat_dim);
+    let features = feats.unwrap_or_else(|| {
+        l.owned.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect()
+    });
+    // Induced owned-only adjacency in block positions.
+    let mut edges = Vec::new();
+    for (i, &u) in l.owned.iter().enumerate() {
+        for &v in ds.graph.neighbors(u) {
+            if let Ok(j) = l.owned.binary_search(&v) {
+                if i < j {
+                    edges.push((i as u32, j as u32));
+                }
+            }
+        }
+    }
+    let csr = Csr::from_edges(l.owned.len(), &edges);
+    let train_count = l.owned.iter().filter(|&&u| ds.split[u as usize] == 0).count();
+    NcClient {
+        nodes: l.owned.clone(),
+        num_owned: l.owned.len(),
+        features,
+        csr,
+        train_block: None,
+        eval_block: None,
+        train_count,
+        }
+    .with_dim_check(d)
+}
+
+impl NcClient {
+    fn with_dim_check(self, d: usize) -> NcClient {
+        debug_assert_eq!(self.features.len(), self.nodes.len() * d);
+        self
+    }
+}
+
+/// Owned + (sampled) halo client for Distributed-GCN / BNS-GCN.
+fn client_with_halo(
+    ds: &NCDataset,
+    l: &LocalGraph,
+    halo_features: &[f32],
+    keep_ratio: f64,
+    rng: &mut Rng,
+) -> NcClient {
+    let kept: Vec<usize> = (0..l.halo.len()).filter(|_| rng.chance(keep_ratio)).collect();
+    build_halo_client(ds, l, halo_features, &kept)
+}
+
+/// BNS-GCN per-round variant: re-sample and account the feature re-shipment
+/// as training-phase communication.
+fn client_with_halo_resample(
+    ds: &NCDataset,
+    l: &LocalGraph,
+    keep_ratio: f64,
+    rng: &mut Rng,
+    monitor: &Monitor,
+) -> NcClient {
+    let kept: Vec<usize> = (0..l.halo.len()).filter(|_| rng.chance(keep_ratio)).collect();
+    let bytes = (kept.len() * ds.feat_dim * 4) as u64;
+    monitor.net.send(Phase::Train, Direction::Up, bytes);
+    monitor.net.send(Phase::Train, Direction::Down, bytes);
+    let halo_features: Vec<f32> =
+        l.halo.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
+    build_halo_client(ds, l, &halo_features, &kept)
+}
+
+fn build_halo_client(
+    ds: &NCDataset,
+    l: &LocalGraph,
+    halo_features: &[f32],
+    kept_halo: &[usize],
+) -> NcClient {
+    let d = ds.feat_dim;
+    let mut nodes = l.owned.clone();
+    let mut features: Vec<f32> =
+        l.owned.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
+    for &k in kept_halo {
+        nodes.push(l.halo[k]);
+        features.extend_from_slice(&halo_features[k * d..(k + 1) * d]);
+    }
+    // Adjacency over block positions via the precomputed local csr.
+    let mut pos = std::collections::HashMap::new();
+    for (i, &u) in nodes.iter().enumerate() {
+        pos.insert(u, i as u32);
+    }
+    let mut edges = Vec::new();
+    for (i, &u) in nodes.iter().enumerate() {
+        let li = l.index[&u];
+        for &lv in l.csr.neighbors(li) {
+            let gv = l.global_of(lv);
+            if let Some(&j) = pos.get(&gv) {
+                if (i as u32) < j {
+                    edges.push((i as u32, j));
+                }
+            }
+        }
+    }
+    let csr = Csr::from_edges(nodes.len(), &edges);
+    let train_count = l.owned.iter().filter(|&&u| ds.split[u as usize] == 0).count();
+    NcClient {
+        num_owned: l.owned.len(),
+        nodes,
+        features,
+        csr,
+        train_block: None,
+        eval_block: None,
+        train_count,
+    }
+}
+
+/// Build a padded block over all client nodes with the given mask split
+/// (0=train, 2=test); only owned nodes are mask-eligible.
+fn make_block(
+    cl: &NcClient,
+    ds: &NCDataset,
+    n_pad: usize,
+    e_pad: usize,
+    d: usize,
+    split: u8,
+) -> Block {
+    let ids: Vec<u32> = (0..cl.nodes.len() as u32).collect();
+    block_from_induced(
+        &cl.csr,
+        &ids,
+        n_pad,
+        e_pad,
+        d,
+        |i, row| {
+            let i = i as usize;
+            row.copy_from_slice(&cl.features[i * d..(i + 1) * d]);
+        },
+        |i| ds.labels[cl.nodes[i as usize] as usize] as i32,
+        |i| {
+            let i = i as usize;
+            if i < cl.num_owned && ds.split[cl.nodes[i] as usize] == split {
+                1.0
+            } else {
+                0.0
+            }
+        },
+    )
+}
+
+/// Minibatch block: sample seeds from mask-eligible nodes, expand 2 hops.
+fn sample_minibatch(
+    cl: &NcClient,
+    ds: &NCDataset,
+    batch_size: usize,
+    n_pad: usize,
+    e_pad: usize,
+    d: usize,
+    split: u8,
+    rng: &mut Rng,
+) -> Block {
+    let eligible: Vec<u32> = (0..cl.num_owned as u32)
+        .filter(|&i| ds.split[cl.nodes[i as usize] as usize] == split)
+        .collect();
+    if eligible.is_empty() {
+        // Empty clients happen at extreme client counts (Fig 15's 1000
+        // trainers): an all-pad block with zero mask is a no-op upstream.
+        return Block::empty(n_pad, e_pad, d);
+    }
+    let bs = if batch_size > 0 { batch_size } else { 256 }.min(eligible.len());
+    let seeds: Vec<u32> =
+        rng.sample_distinct(eligible.len(), bs).into_iter().map(|k| eligible[k]).collect();
+    let nodes = sample_neighborhood(&cl.csr, &seeds, 2, 8, n_pad, rng);
+    let seed_set: std::collections::HashSet<u32> = seeds.iter().copied().collect();
+    block_from_induced(
+        &cl.csr,
+        &nodes,
+        n_pad,
+        e_pad,
+        d,
+        |i, row| {
+            let i = i as usize;
+            row.copy_from_slice(&cl.features[i * d..(i + 1) * d]);
+        },
+        |i| ds.labels[cl.nodes[i as usize] as usize] as i32,
+        |i| if seed_set.contains(&i) { 1.0 } else { 0.0 },
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn eval_nc(
+    engine: &Engine,
+    monitor: &Monitor,
+    eval_name: &str,
+    clients: &[NcClient],
+    ds: &NCDataset,
+    global: &ParamSet,
+    minibatch: bool,
+    n_pad: usize,
+    e_pad: usize,
+    d_eff: usize,
+    rng: &mut Rng,
+) -> Result<f64> {
+    monitor.start("eval");
+    let mut correct = 0.0f64;
+    let mut cnt = 0.0f64;
+    for cl in clients {
+        let block_storage;
+        let block = if minibatch {
+            block_storage = sample_minibatch(cl, ds, 512, n_pad, e_pad, d_eff, 2, rng);
+            &block_storage
+        } else {
+            cl.eval_block.as_ref().unwrap()
+        };
+        if block.num_masked() == 0 {
+            continue;
+        }
+        let mut args = global.to_tensors();
+        args.extend(block_tensors(block));
+        let outs = engine.execute(eval_name, args)?;
+        correct += outs[1].scalar() as f64;
+        cnt += outs[2].scalar() as f64;
+        // Metric upload: three floats.
+        monitor.net.send(Phase::Eval, Direction::Up, 12);
+    }
+    monitor.stop("eval");
+    Ok(if cnt > 0.0 { correct / cnt } else { 0.0 })
+}
+
+// ---------------------------------------------------------------------------
+// papers100m-sim: lazy 100M-node runner (paper §5.3, Fig 12)
+// ---------------------------------------------------------------------------
+
+/// Node-count override for the lazy dataset: `scale` × 10^8 nodes (Fig 12's
+/// 195-client power-law setting). The graph is never materialized — clients
+/// sample minibatch blocks directly from the hash-defined adjacency.
+pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    if cfg.method != Method::FedAvgNC && cfg.method != Method::FedGcn {
+        bail!("papers100m-sim supports FedAvg/FedGCN minibatch training");
+    }
+    let n_nodes = (cfg.scale * 1e8) as u64;
+    let g = papers100m_sim(n_nodes.max(10_000), cfg.seed);
+    let mut rng = Rng::seeded(cfg.seed ^ 0x9A);
+    monitor.note("task", "NC");
+    monitor.note("dataset", format!("papers100m-sim(n={})", g.n));
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+
+    // Clients own contiguous community ranges; community sizes are already
+    // power-law (country-population style, §5.3).
+    let m = cfg.n_trainer;
+    let nc = g.num_communities();
+    let client_of_community = |c: usize| -> usize { c * m / nc };
+    let mut client_ranges: Vec<Vec<(u64, u64)>> = vec![Vec::new(); m];
+    for c in 0..nc {
+        client_ranges[client_of_community(c)].push(g.community_range(c));
+    }
+
+    let d = g.feat_dim;
+    let c_classes = g.num_classes;
+    let fixed = [("d", d), ("c", c_classes)];
+    let batch = if cfg.batch_size > 0 { cfg.batch_size } else { 32 };
+    let bucket = engine
+        .manifest
+        .max_bucket("nc_train", &fixed)
+        .ok_or_else(|| anyhow::anyhow!("no papers100m artifacts (d={d}, c={c_classes})"))?;
+    let train_art = engine.manifest.pick("nc_train", &fixed, bucket)?.clone();
+    let eval_art = engine.manifest.pick("nc_eval", &fixed, bucket)?.clone();
+    let (n_pad, e_pad) = (train_art.dim("n"), train_art.dim("e"));
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+    monitor.note("artifact", &train_art.name);
+
+    let mut global = ParamSet::nc(d, engine.manifest.hidden, c_classes, &mut rng);
+    monitor.net.broadcast(Phase::Train, global.byte_len(), m);
+    let mut last_acc = 0.0;
+    for round in 0..cfg.global_rounds {
+        let selected = select_clients(m, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
+        let mut updates = Vec::with_capacity(selected.len());
+        let mut crit_path = 0.0f64;
+        let mut round_loss = 0.0;
+        for &ci in &selected {
+            let t0 = std::time::Instant::now();
+            let mut p = global.clone();
+            let mut loss = 0.0;
+            for _ in 0..cfg.local_steps {
+                let block = lazy_block(&g, &client_ranges[ci], batch, n_pad, e_pad, false, &mut rng);
+                if block.num_masked() == 0 {
+                    continue;
+                }
+                let mut args = p.to_tensors();
+                args.extend(block_tensors(&block));
+                args.push(Tensor::scalar_f32(cfg.learning_rate));
+                let outs = engine.execute(&train_art.name, args)?;
+                p.update_from_tensors(&outs);
+                loss = outs[4].scalar();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            monitor.add_secs("train", secs);
+            crit_path = crit_path.max(secs);
+            round_loss += loss as f64;
+            updates.push((1.0f32, p));
+        }
+        let t_agg = std::time::Instant::now();
+        global = aggregate_params(
+            monitor,
+            Phase::Train,
+            &cfg.privacy,
+            &updates,
+            m,
+            g.feat_dim.max(n_pad),
+            &mut rng,
+        )?;
+        let agg_secs = t_agg.elapsed().as_secs_f64();
+        if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
+            monitor.start("eval");
+            let mut correct = 0.0;
+            let mut cnt = 0.0;
+            // Evaluate on a fixed client subset to bound eval cost at scale
+            // (stable across rounds so the accuracy curve is comparable).
+            let eval_rng_seed = cfg.seed ^ 0xE7A1 ^ round as u64;
+            let mut eval_rng = Rng::seeded(eval_rng_seed);
+            for ci in 0..m.min(12) {
+                let block =
+                    lazy_block(&g, &client_ranges[ci], 256, n_pad, e_pad, true, &mut eval_rng);
+                if block.num_masked() == 0 {
+                    continue;
+                }
+                let mut args = global.to_tensors();
+                args.extend(block_tensors(&block));
+                let outs = engine.execute(&eval_art.name, args)?;
+                correct += outs[1].scalar() as f64;
+                cnt += outs[2].scalar() as f64;
+            }
+            monitor.stop("eval");
+            if cnt > 0.0 {
+                last_acc = correct / cnt;
+            }
+        }
+        monitor.record_round(RoundRecord {
+            round,
+            train_secs: crit_path,
+            agg_secs,
+            train_loss: round_loss / selected.len().max(1) as f64,
+            test_accuracy: last_acc,
+        });
+        monitor.sample_resources();
+    }
+    monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    Ok(())
+}
+
+/// Sample a minibatch block from the lazy graph: seeds from the client's
+/// community ranges, one-hop expansion within the client (cross-client stubs
+/// dropped — FedAvg semantics), hash-based 80/20 train/test split.
+fn lazy_block(
+    g: &LazyGraph,
+    ranges: &[(u64, u64)],
+    batch: usize,
+    n_pad: usize,
+    e_pad: usize,
+    eval_split: bool,
+    rng: &mut Rng,
+) -> Block {
+    let total: u64 = ranges.iter().map(|(lo, hi)| hi - lo).sum();
+    if total == 0 {
+        return Block::empty(n_pad, e_pad, g.feat_dim);
+    }
+    let pick_node = |rng: &mut Rng| -> u64 {
+        let mut t = rng.next_u64() % total;
+        for &(lo, hi) in ranges {
+            let span = hi - lo;
+            if t < span {
+                return lo + t;
+            }
+            t -= span;
+        }
+        ranges[0].0
+    };
+    let in_ranges = |u: u64| ranges.iter().any(|&(lo, hi)| u >= lo && u < hi);
+    let is_test = |u: u64| hash_f32(g.seed ^ 0x5911, u, 7) < 0.2;
+
+    let mut order: Vec<u64> = Vec::with_capacity(n_pad);
+    let mut seen = std::collections::HashSet::new();
+    let mut seeds = Vec::with_capacity(batch);
+    let mut tries = 0;
+    while seeds.len() < batch && tries < batch * 20 {
+        tries += 1;
+        let u = pick_node(rng);
+        if is_test(u) != eval_split {
+            continue;
+        }
+        if seen.insert(u) {
+            order.push(u);
+            seeds.push(u);
+        }
+    }
+    // 1-hop expansion within the client.
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut pos: std::collections::HashMap<u64, u32> =
+        order.iter().enumerate().map(|(i, &u)| (u, i as u32)).collect();
+    for &u in &seeds {
+        for v in g.neighbors(u) {
+            if !in_ranges(v) {
+                continue; // cross-client stub dropped (documented)
+            }
+            if order.len() >= n_pad {
+                break;
+            }
+            let j = *pos.entry(v).or_insert_with(|| {
+                order.push(v);
+                (order.len() - 1) as u32
+            });
+            edges.push((pos[&u], j));
+        }
+    }
+    let csr = Csr::from_edges(order.len(), &edges);
+    let seed_set: std::collections::HashSet<u64> = seeds.iter().copied().collect();
+    let ids: Vec<u32> = (0..order.len() as u32).collect();
+    block_from_induced(
+        &csr,
+        &ids,
+        n_pad,
+        e_pad,
+        g.feat_dim,
+        |i, row| g.feature_into(order[i as usize], row),
+        |i| g.label(order[i as usize]) as i32,
+        |i| if seed_set.contains(&order[i as usize]) { 1.0 } else { 0.0 },
+    )
+}

@@ -1,0 +1,74 @@
+//! Client selection (paper Appendix A.1): `random` draws a fresh subset per
+//! round; `uniform` rotates a contiguous window so every client participates
+//! equally often.
+
+use crate::config::SamplingType;
+use crate::util::rng::Rng;
+
+/// Select the participating client indices for `round`.
+pub fn select_clients(
+    num_clients: usize,
+    sample_ratio: f64,
+    sampling_type: SamplingType,
+    round: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    assert!(sample_ratio > 0.0 && sample_ratio <= 1.0, "sample ratio must be in (0, 1]");
+    let num_samples = ((num_clients as f64 * sample_ratio) as usize).max(1).min(num_clients);
+    match sampling_type {
+        SamplingType::Random => {
+            let mut s = rng.sample_distinct(num_clients, num_samples);
+            s.sort_unstable();
+            s
+        }
+        SamplingType::Uniform => {
+            // Rotating window, as in the paper's server_class.py snippet.
+            (0..num_samples)
+                .map(|i| (round * num_samples + i) % num_clients)
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_selection_bounds() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..50 {
+            let s = select_clients(20, 0.3, SamplingType::Random, 0, &mut rng);
+            assert_eq!(s.len(), 6);
+            assert!(s.iter().all(|&i| i < 20));
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), s.len());
+        }
+    }
+
+    #[test]
+    fn uniform_rotates_through_everyone() {
+        let mut rng = Rng::seeded(2);
+        let mut seen = std::collections::HashSet::new();
+        for round in 0..10 {
+            for i in select_clients(10, 0.2, SamplingType::Uniform, round, &mut rng) {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 10, "uniform selection must cover all clients");
+    }
+
+    #[test]
+    fn full_participation() {
+        let mut rng = Rng::seeded(3);
+        let s = select_clients(7, 1.0, SamplingType::Random, 0, &mut rng);
+        assert_eq!(s, vec![0, 1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn at_least_one_client() {
+        let mut rng = Rng::seeded(4);
+        let s = select_clients(100, 0.001, SamplingType::Random, 0, &mut rng);
+        assert_eq!(s.len(), 1);
+    }
+}

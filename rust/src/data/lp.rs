@@ -1,0 +1,165 @@
+//! Link-prediction datasets (Foursquare-style check-in graphs, synthetic).
+//!
+//! Paper Fig 10 evaluates LP where each client holds one geographic region's
+//! check-in data from the Foursquare Global-scale Check-in Dataset, over
+//! three configurations: {US}, {US, BR}, {US, BR, ID, TR, JP}. We generate
+//! one homophilous user graph per country (size scaled to the country's
+//! check-in volume), with a *timestamp per edge* so that the temporal
+//! algorithms (STFL, 4D-FED-GNN+) have time structure to use: edges are
+//! split into train (early) and test (late), plus sampled negatives.
+
+use crate::graph::{class_features, planted_graph, Csr, PlantedSpec};
+use crate::util::rng::Rng;
+
+/// One country's region data.
+pub struct RegionData {
+    pub country: String,
+    pub graph: Csr,
+    /// Row-major `[n, feat_dim]`.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    /// Per-edge timestamps in [0, 1) aligned with `train_edges` order.
+    pub train_edges: Vec<(u32, u32)>,
+    pub train_times: Vec<f32>,
+    /// Held-out future edges (positive test examples).
+    pub test_pos: Vec<(u32, u32)>,
+    /// Sampled non-edges (negative test examples).
+    pub test_neg: Vec<(u32, u32)>,
+}
+
+pub struct LPDataset {
+    pub name: String,
+    pub regions: Vec<RegionData>,
+    pub feat_dim: usize,
+}
+
+/// Per-country user counts (scaled from the Foursquare dataset's relative
+/// check-in volumes; US largest).
+pub fn country_size(code: &str) -> usize {
+    match code {
+        "US" => 4000,
+        "BR" => 2600,
+        "ID" => 2200,
+        "TR" => 1800,
+        "JP" => 1400,
+        _ => 1000,
+    }
+}
+
+pub const LP_FEAT_DIM: usize = 64;
+
+/// The paper's three region configurations.
+pub fn region_config(name: &str) -> Option<Vec<&'static str>> {
+    match name.trim().to_uppercase().as_str() {
+        "US" => Some(vec!["US"]),
+        "US+BR" | "US_BR" => Some(vec!["US", "BR"]),
+        "US+BR+ID+TR+JP" | "5COUNTRY" | "FIVE" => Some(vec!["US", "BR", "ID", "TR", "JP"]),
+        _ => None,
+    }
+}
+
+/// Generate the LP dataset for a set of countries at `scale`.
+pub fn generate_lp(countries: &[&str], scale: f64, seed: u64) -> LPDataset {
+    let mut rng = Rng::seeded(seed ^ 0x4C50_5345); // "LPSE"
+    let regions = countries
+        .iter()
+        .map(|c| generate_region(c, scale, &mut rng))
+        .collect::<Vec<_>>();
+    LPDataset {
+        name: countries.join("+"),
+        regions,
+        feat_dim: LP_FEAT_DIM,
+    }
+}
+
+fn generate_region(country: &str, scale: f64, rng: &mut Rng) -> RegionData {
+    let n = ((country_size(country) as f64 * scale) as usize).max(64);
+    // Social graphs: stronger degree skew, moderate homophily over latent
+    // "interest communities" (8 latent groups reused as feature classes).
+    let latent_groups = 8;
+    let spec = PlantedSpec {
+        n,
+        num_classes: latent_groups,
+        mean_degree: 7.0,
+        homophily: 0.75,
+        degree_skew: 2.2,
+    };
+    let (graph, latent) = planted_graph(&spec, rng);
+    let features = class_features(&latent, latent_groups, LP_FEAT_DIM, 1.5, rng);
+    // Timestamp each undirected edge; the last 20% (by time) become test
+    // positives and are removed from the training graph.
+    let mut stamped: Vec<(u32, u32, f32)> =
+        graph.edges().map(|(u, v)| (u, v, rng.f32())).collect();
+    stamped.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+    let cut = (stamped.len() as f64 * 0.8) as usize;
+    let train: Vec<(u32, u32, f32)> = stamped[..cut].to_vec();
+    let test_pos: Vec<(u32, u32)> = stamped[cut..].iter().map(|&(u, v, _)| (u, v)).collect();
+    let train_graph = Csr::from_edges(n, &train.iter().map(|&(u, v, _)| (u, v)).collect::<Vec<_>>());
+    // Negatives: uniform non-edges (against the full graph), same count.
+    let mut test_neg = Vec::with_capacity(test_pos.len());
+    while test_neg.len() < test_pos.len() {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u != v && !graph.has_edge(u, v) {
+            test_neg.push((u.min(v), u.max(v)));
+        }
+    }
+    RegionData {
+        country: country.to_string(),
+        graph: train_graph,
+        features,
+        feat_dim: LP_FEAT_DIM,
+        train_edges: train.iter().map(|&(u, v, _)| (u, v)).collect(),
+        train_times: train.iter().map(|&(_, _, t)| t).collect(),
+        test_pos,
+        test_neg,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_configs() {
+        assert_eq!(region_config("US").unwrap().len(), 1);
+        assert_eq!(region_config("us+br").unwrap().len(), 2);
+        assert_eq!(region_config("5country").unwrap().len(), 5);
+        assert!(region_config("MARS").is_none());
+    }
+
+    #[test]
+    fn generates_consistent_region() {
+        let ds = generate_lp(&["US", "BR"], 0.1, 1);
+        assert_eq!(ds.regions.len(), 2);
+        for r in &ds.regions {
+            r.graph.validate().unwrap();
+            assert_eq!(r.features.len(), r.graph.n * LP_FEAT_DIM);
+            assert_eq!(r.train_edges.len(), r.train_times.len());
+            assert_eq!(r.test_pos.len(), r.test_neg.len());
+            assert!(!r.test_pos.is_empty());
+            // train edges are present in the train graph
+            for &(u, v) in r.train_edges.iter().take(20) {
+                assert!(r.graph.has_edge(u, v));
+            }
+            // test positives are NOT in the train graph
+            for &(u, v) in r.test_pos.iter().take(20) {
+                assert!(!r.graph.has_edge(u, v));
+            }
+        }
+        // US larger than BR
+        assert!(ds.regions[0].graph.n > ds.regions[1].graph.n);
+    }
+
+    #[test]
+    fn timestamps_sorted_split() {
+        let ds = generate_lp(&["JP"], 0.2, 2);
+        let r = &ds.regions[0];
+        // train times all come before the test cut (we sorted by time)
+        let max_train = r.train_times.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max_train <= 1.0);
+        for w in r.train_times.windows(2) {
+            assert!(w[0] <= w[1], "train_times must be sorted");
+        }
+    }
+}

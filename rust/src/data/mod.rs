@@ -1,0 +1,10 @@
+//! Dataset registry: statistics-matched synthetic counterparts of every
+//! dataset in the paper's Table 4, plus the partition helpers the tasks use.
+
+pub mod gc;
+pub mod lp;
+pub mod nc;
+
+pub use gc::{gc_spec, gc_specs, generate_gc, GCDataset, GCSpec, SmallGraph, GC_FEAT_DIM};
+pub use lp::{generate_lp, region_config, LPDataset, RegionData, LP_FEAT_DIM};
+pub use nc::{generate_nc, nc_spec, nc_specs, papers100m_sim, NCDataset, NCSpec};

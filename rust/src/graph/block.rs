@@ -1,0 +1,296 @@
+//! Fixed-shape training blocks and the minibatch sampler.
+//!
+//! PJRT executables are compiled AOT for static shapes, so every piece of
+//! graph data that reaches the XLA train/eval step is first padded into a
+//! `Block` with a bucket shape `(n_pad nodes, e_pad arcs, d features)`:
+//! - pad *nodes* carry zero features, label 0 and mask 0 (excluded from the
+//!   loss and metrics);
+//! - pad *arcs* carry weight 0 and point at the last pad node, so the
+//!   gather/segment-sum aggregation in the lowered model treats them as
+//!   no-ops.
+//!
+//! The minibatch sampler (paper §3.4 "Minibatch Training for Federated
+//! Updates") draws seed nodes and expands bounded-fanout neighborhoods until
+//! the bucket is full.
+
+use crate::util::rng::Rng;
+
+use super::csr::Csr;
+
+/// A dense, padded, static-shape batch ready to ship to the runtime.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub n_pad: usize,
+    pub e_pad: usize,
+    pub d: usize,
+    /// Row-major `[n_pad, d]` node features.
+    pub x: Vec<f32>,
+    /// Arc endpoints, `[e_pad]` each. Pad arcs point at node `n_pad-1`.
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    /// Per-arc aggregation coefficient (GCN norm / GIN ones / 0 for pads).
+    pub enorm: Vec<f32>,
+    /// Node labels `[n_pad]` (0 for pads).
+    pub labels: Vec<i32>,
+    /// Loss/metric mask `[n_pad]` (1.0 = counted).
+    pub mask: Vec<f32>,
+    /// How many nodes / arcs are real.
+    pub n_real: usize,
+    pub e_real: usize,
+}
+
+impl Block {
+    pub fn empty(n_pad: usize, e_pad: usize, d: usize) -> Block {
+        let sink = (n_pad - 1) as i32;
+        Block {
+            n_pad,
+            e_pad,
+            d,
+            x: vec![0f32; n_pad * d],
+            src: vec![sink; e_pad],
+            dst: vec![sink; e_pad],
+            enorm: vec![0f32; e_pad],
+            labels: vec![0i32; n_pad],
+            mask: vec![0f32; n_pad],
+            n_real: 0,
+            e_real: 0,
+        }
+    }
+
+    /// Payload bytes if this block were shipped over the network (used by the
+    /// monitor to account pre-training data exchange for Distributed-GCN).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.x.len() * 4 + self.src.len() * 4 + self.dst.len() * 4 + self.enorm.len() * 4
+            + self.labels.len() * 4
+            + self.mask.len() * 4) as u64
+    }
+
+    /// Set node `i`'s feature row (must be `d` long).
+    pub fn set_feature(&mut self, i: usize, row: &[f32]) {
+        assert!(i < self.n_pad && row.len() == self.d);
+        self.x[i * self.d..(i + 1) * self.d].copy_from_slice(row);
+    }
+
+    /// Add a directed arc with coefficient `w`. Returns false (and ignores
+    /// the arc) once the bucket's arc capacity is exhausted.
+    pub fn push_arc(&mut self, u: usize, v: usize, w: f32) -> bool {
+        if self.e_real >= self.e_pad {
+            return false;
+        }
+        self.src[self.e_real] = u as i32;
+        self.dst[self.e_real] = v as i32;
+        self.enorm[self.e_real] = w;
+        self.e_real += 1;
+        true
+    }
+
+    /// Number of mask-active nodes.
+    pub fn num_masked(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    /// Structural invariants (property-tested).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.x.len() != self.n_pad * self.d {
+            return Err("x shape".into());
+        }
+        if self.src.len() != self.e_pad || self.dst.len() != self.e_pad {
+            return Err("arc shape".into());
+        }
+        if self.n_real > self.n_pad || self.e_real > self.e_pad {
+            return Err("real > pad".into());
+        }
+        for k in 0..self.e_pad {
+            let (s, t) = (self.src[k], self.dst[k]);
+            if s < 0 || t < 0 || s as usize >= self.n_pad || t as usize >= self.n_pad {
+                return Err(format!("arc {k} out of range"));
+            }
+            if k >= self.e_real && self.enorm[k] != 0.0 {
+                return Err(format!("pad arc {k} has nonzero weight"));
+            }
+        }
+        for i in self.n_real..self.n_pad {
+            if self.mask[i] != 0.0 {
+                return Err(format!("pad node {i} is masked in"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a block from an induced subgraph of `csr` over `nodes`
+/// (local-id list, deduplicated by the caller). Features/labels/mask are
+/// produced by closures over the *position in `nodes`*' id, letting callers
+/// map through global ids, aggregated-feature tables, etc.
+///
+/// GCN symmetric normalization is computed on the induced subgraph (degrees
+/// within the block), self-loops included.
+pub fn block_from_induced(
+    csr: &Csr,
+    nodes: &[u32],
+    n_pad: usize,
+    e_pad: usize,
+    d: usize,
+    mut feature: impl FnMut(u32, &mut [f32]),
+    mut label: impl FnMut(u32) -> i32,
+    mut mask: impl FnMut(u32) -> f32,
+) -> Block {
+    assert!(nodes.len() <= n_pad, "{} nodes exceed bucket {}", nodes.len(), n_pad);
+    let mut blk = Block::empty(n_pad, e_pad, d);
+    blk.n_real = nodes.len();
+    let mut pos = std::collections::HashMap::with_capacity(nodes.len());
+    for (i, &u) in nodes.iter().enumerate() {
+        pos.insert(u, i);
+    }
+    // Induced degrees (within the block) for the GCN norm.
+    let mut deg = vec![1u32; nodes.len()]; // +1 for the self loop
+    for (i, &u) in nodes.iter().enumerate() {
+        for &v in csr.neighbors(u) {
+            if pos.contains_key(&v) {
+                deg[i] += 1;
+            }
+        }
+    }
+    let dn: Vec<f32> = deg.iter().map(|&dg| 1.0 / (dg as f32).sqrt()).collect();
+    // Self loops first (always fit if e_pad >= n_pad).
+    for (i, _) in nodes.iter().enumerate() {
+        blk.push_arc(i, i, dn[i] * dn[i]);
+    }
+    for (i, &u) in nodes.iter().enumerate() {
+        for &v in csr.neighbors(u) {
+            if let Some(&j) = pos.get(&v) {
+                blk.push_arc(j, i, dn[i] * dn[j]); // aggregate src=j into dst=i
+            }
+        }
+    }
+    let mut rowbuf = vec![0f32; d];
+    for (i, &u) in nodes.iter().enumerate() {
+        feature(u, &mut rowbuf);
+        blk.set_feature(i, &rowbuf);
+        blk.labels[i] = label(u);
+        blk.mask[i] = mask(u);
+    }
+    blk
+}
+
+/// Neighbor-sampled node set: start from `seeds`, expand `hops` levels with
+/// at most `fanout` sampled neighbors per node, stop at `max_nodes`. Returns
+/// the union (seeds first, then discovered nodes, insertion order).
+pub fn sample_neighborhood(
+    csr: &Csr,
+    seeds: &[u32],
+    hops: usize,
+    fanout: usize,
+    max_nodes: usize,
+    rng: &mut Rng,
+) -> Vec<u32> {
+    let mut seen: std::collections::HashSet<u32> = seeds.iter().copied().collect();
+    let mut order: Vec<u32> = seeds.to_vec();
+    let mut frontier: Vec<u32> = seeds.to_vec();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            let nbrs = csr.neighbors(u);
+            let take = fanout.min(nbrs.len());
+            let picks: Vec<usize> = if take == nbrs.len() {
+                (0..take).collect()
+            } else {
+                rng.sample_distinct(nbrs.len(), take)
+            };
+            for p in picks {
+                let v = nbrs[p];
+                if order.len() >= max_nodes {
+                    return order;
+                }
+                if seen.insert(v) {
+                    order.push(v);
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+        if frontier.is_empty() {
+            break;
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path4() -> Csr {
+        Csr::from_edges(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn empty_block_is_valid() {
+        let b = Block::empty(8, 16, 3);
+        b.validate().unwrap();
+        assert_eq!(b.num_masked(), 0);
+        assert_eq!(b.wire_bytes(), (8 * 3 + 16 * 3 + 8 * 2) as u64 * 4);
+    }
+
+    #[test]
+    fn induced_block_structure() {
+        let g = path4();
+        let nodes = [1u32, 2];
+        let b = block_from_induced(
+            &g,
+            &nodes,
+            4,
+            16,
+            2,
+            |u, row| {
+                row[0] = u as f32;
+                row[1] = 1.0;
+            },
+            |u| u as i32,
+            |_| 1.0,
+        );
+        b.validate().unwrap();
+        assert_eq!(b.n_real, 2);
+        // arcs: 2 self loops + edge (1,2) both directions
+        assert_eq!(b.e_real, 4);
+        // induced degree of both = 1 neighbor + self = 2 -> self coeff 1/2
+        assert!((b.enorm[0] - 0.5).abs() < 1e-6);
+        assert_eq!(b.labels[0], 1);
+        assert_eq!(b.x[0], 1.0); // feature(1)[0]
+        assert_eq!(b.mask[2], 0.0); // pad
+    }
+
+    #[test]
+    fn arc_capacity_respected() {
+        let g = path4();
+        let nodes = [0u32, 1, 2, 3];
+        // only 5 arc slots for 4 self loops + 6 arcs -> truncates
+        let b = block_from_induced(&g, &nodes, 4, 5, 1, |_, r| r[0] = 0.0, |_| 0, |_| 0.0);
+        assert_eq!(b.e_real, 5);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn sampler_bounds() {
+        let g = path4();
+        let mut rng = Rng::seeded(1);
+        let ns = sample_neighborhood(&g, &[0], 3, 2, 10, &mut rng);
+        assert_eq!(ns[0], 0);
+        assert_eq!(ns.len(), 4); // whole path reachable
+        let ns = sample_neighborhood(&g, &[0], 3, 2, 2, &mut rng);
+        assert_eq!(ns.len(), 2); // capped
+        // distinct
+        let set: std::collections::HashSet<_> = ns.iter().collect();
+        assert_eq!(set.len(), ns.len());
+    }
+
+    #[test]
+    fn sampler_fanout_limits_expansion() {
+        // star: center 0 with 10 leaves
+        let edges: Vec<(u32, u32)> = (1..=10).map(|v| (0u32, v as u32)).collect();
+        let g = Csr::from_edges(11, &edges);
+        let mut rng = Rng::seeded(2);
+        let ns = sample_neighborhood(&g, &[0], 1, 3, 100, &mut rng);
+        assert_eq!(ns.len(), 4); // seed + 3 sampled leaves
+    }
+}

@@ -1,0 +1,207 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The project's central graph type: undirected (stored symmetric) adjacency
+//! in CSR form with u32 node ids. All materialized datasets (cora-sim …
+//! arxiv-sim, the TU-style graph-classification sets, the check-in LP sets)
+//! use this; papers100m-sim is *lazy* (see `graph::generate::LazyGraph`) and
+//! only its per-client subgraphs are ever materialized as `Csr`.
+
+/// CSR adjacency. Invariants (checked by `validate`):
+/// - `offsets.len() == n + 1`, monotonically non-decreasing,
+///   `offsets[n] == adj.len()`
+/// - neighbor lists are sorted and deduplicated
+/// - symmetric: `v ∈ adj(u) ⟺ u ∈ adj(v)`
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub n: usize,
+    pub offsets: Vec<u64>,
+    pub adj: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an undirected edge list. Self-loops and duplicates are
+    /// removed; each input edge {u,v} is stored in both directions.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0u64; n];
+        for &(u, v) in edges {
+            debug_assert!((u as usize) < n && (v as usize) < n);
+            if u == v {
+                continue;
+            }
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut adj = vec![0u32; offsets[n] as usize];
+        let mut cursor = offsets.clone();
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            adj[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // Sort + dedup each row.
+        let mut out_adj = Vec::with_capacity(adj.len());
+        let mut out_off = vec![0u64; n + 1];
+        for u in 0..n {
+            let row = &mut adj[offsets[u] as usize..offsets[u + 1] as usize];
+            row.sort_unstable();
+            let mut prev: Option<u32> = None;
+            for &v in row.iter() {
+                if prev != Some(v) {
+                    out_adj.push(v);
+                    prev = Some(v);
+                }
+            }
+            out_off[u + 1] = out_adj.len() as u64;
+        }
+        Csr { n, offsets: out_off, adj: out_adj }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, u: u32) -> &[u32] {
+        &self.adj[self.offsets[u as usize] as usize..self.offsets[u as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, u: u32) -> usize {
+        (self.offsets[u as usize + 1] - self.offsets[u as usize]) as usize
+    }
+
+    /// Number of undirected edges (each stored twice).
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Directed (stored) arc count.
+    pub fn num_arcs(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Iterate undirected edges once (u < v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n as u32).flat_map(move |u| {
+            self.neighbors(u).iter().copied().filter(move |&v| u < v).map(move |v| (u, v))
+        })
+    }
+
+    /// Check all structural invariants; returns a description of the first
+    /// violation. Used by property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.len() != self.n + 1 {
+            return Err(format!("offsets.len()={} != n+1={}", self.offsets.len(), self.n + 1));
+        }
+        if self.offsets[0] != 0 || *self.offsets.last().unwrap() != self.adj.len() as u64 {
+            return Err("offsets endpoints wrong".into());
+        }
+        for w in self.offsets.windows(2) {
+            if w[1] < w[0] {
+                return Err("offsets not monotone".into());
+            }
+        }
+        for u in 0..self.n as u32 {
+            let row = self.neighbors(u);
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {u} not sorted/deduped"));
+                }
+            }
+            for &v in row {
+                if v as usize >= self.n {
+                    return Err(format!("edge target {v} out of range"));
+                }
+                if v == u {
+                    return Err(format!("self-loop at {u}"));
+                }
+                if !self.has_edge(v, u) {
+                    return Err(format!("asymmetric edge {u}->{v}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// GCN symmetric normalization coefficients with self-loops:
+    /// for Â = D̃^{-1/2}(A + I)D̃^{-1/2}, returns the edge list
+    /// (src, dst, coeff) *including* the self-loop arcs, where
+    /// coeff(u,v) = 1/sqrt(d̃(u)·d̃(v)) and d̃ = deg + 1.
+    pub fn gcn_edges(&self) -> Vec<(u32, u32, f32)> {
+        let mut out = Vec::with_capacity(self.adj.len() + self.n);
+        let dn: Vec<f32> =
+            (0..self.n).map(|u| 1.0 / ((self.degree(u as u32) + 1) as f32).sqrt()).collect();
+        for u in 0..self.n as u32 {
+            out.push((u, u, dn[u as usize] * dn[u as usize]));
+            for &v in self.neighbors(u) {
+                out.push((u, v, dn[u as usize] * dn[v as usize]));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> Csr {
+        // 0-1, 1-2, 2-0, 2-3
+        Csr::from_edges(4, &[(0, 1), (1, 2), (2, 0), (2, 3)])
+    }
+
+    #[test]
+    fn builds_and_validates() {
+        let g = triangle_plus_tail();
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn dedups_and_drops_self_loops() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn edges_iterator_each_once() {
+        let g = triangle_plus_tail();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es.len(), 4);
+        assert!(es.iter().all(|&(u, v)| u < v));
+    }
+
+    #[test]
+    fn gcn_norm_row_structure() {
+        let g = triangle_plus_tail();
+        let es = g.gcn_edges();
+        // arcs + self loops
+        assert_eq!(es.len(), g.num_arcs() + g.n);
+        // self-loop coefficient for isolated-ish node 3: d̃=2 -> 1/2
+        let sl3 = es.iter().find(|&&(u, v, _)| u == 3 && v == 3).unwrap();
+        assert!((sl3.2 - 0.5).abs() < 1e-6);
+        // symmetry of coefficients
+        let c01 = es.iter().find(|&&(u, v, _)| u == 0 && v == 1).unwrap().2;
+        let c10 = es.iter().find(|&&(u, v, _)| u == 1 && v == 0).unwrap().2;
+        assert_eq!(c01, c10);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edges(0, &[]);
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Graph substrate: CSR storage, synthetic generators, client partitioners,
+//! per-client local views with cross-client edges, and fixed-shape training
+//! blocks for the AOT runtime.
+
+pub mod block;
+pub mod csr;
+pub mod generate;
+pub mod partition;
+pub mod subgraph;
+
+pub use block::{block_from_induced, sample_neighborhood, Block};
+pub use csr::Csr;
+pub use generate::{class_features, planted_graph, LazyGraph, PlantedSpec};
+pub use partition::{
+    dirichlet_partition, group_partition, label_skew, powerlaw_partition, random_partition,
+    Partition,
+};
+pub use subgraph::{
+    build_local_graph, build_local_graphs, local_neighbor_contribution, neighbor_feature_sums,
+    LocalGraph,
+};

@@ -1,0 +1,219 @@
+//! Client partitioners.
+//!
+//! The paper partitions nodes across trainers three ways:
+//! - **Dirichlet label skew** with concentration β (`iid_beta` in its
+//!   configs; β=10000 ≈ IID, small β = heavy non-IID) — used for the NC
+//!   benchmarks (Fig 9, Table 2, Fig 15).
+//! - **Power-law sizes** mimicking country populations — used for
+//!   Ogbn-Papers100M with 195 clients (Fig 12).
+//! - **Region partition** — the LP task gives each client one country's
+//!   check-in data (Fig 10).
+
+use crate::util::rng::Rng;
+
+/// A node→client assignment plus its inverse.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub num_clients: usize,
+    /// `assign[u]` = owning client of node u.
+    pub assign: Vec<u32>,
+    /// `members[c]` = sorted node ids owned by client c.
+    pub members: Vec<Vec<u32>>,
+}
+
+impl Partition {
+    pub fn from_assignment(num_clients: usize, assign: Vec<u32>) -> Partition {
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); num_clients];
+        for (u, &c) in assign.iter().enumerate() {
+            assert!((c as usize) < num_clients, "client id out of range");
+            members[c as usize].push(u as u32);
+        }
+        Partition { num_clients, assign, members }
+    }
+
+    /// Invariant check: members ↔ assign are inverse mappings and cover all
+    /// nodes exactly once. Used by property tests.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.assign.len() != n {
+            return Err("assign length mismatch".into());
+        }
+        let total: usize = self.members.iter().map(|m| m.len()).sum();
+        if total != n {
+            return Err(format!("members cover {total} != {n} nodes"));
+        }
+        for (c, m) in self.members.iter().enumerate() {
+            for w in m.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("members[{c}] not sorted/unique"));
+                }
+            }
+            for &u in m {
+                if self.assign[u as usize] as usize != c {
+                    return Err(format!("assign/members disagree at node {u}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.members.iter().map(|m| m.len()).collect()
+    }
+}
+
+/// Uniform random assignment (baseline; also β→∞ limit).
+pub fn random_partition(n: usize, num_clients: usize, rng: &mut Rng) -> Partition {
+    let assign: Vec<u32> = (0..n).map(|_| rng.below(num_clients) as u32).collect();
+    Partition::from_assignment(num_clients, assign)
+}
+
+/// Dirichlet label-skew partition: for each class, split its nodes across
+/// clients with proportions ~ Dir(β). β=10000 reproduces the paper's "IID"
+/// setting; β≤1 is strongly non-IID.
+pub fn dirichlet_partition(
+    labels: &[u16],
+    num_classes: usize,
+    num_clients: usize,
+    beta: f64,
+    rng: &mut Rng,
+) -> Partition {
+    let mut assign = vec![0u32; labels.len()];
+    for c in 0..num_classes {
+        let nodes: Vec<usize> =
+            (0..labels.len()).filter(|&u| labels[u] as usize == c).collect();
+        if nodes.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(beta, num_clients);
+        // Convert proportions to contiguous cut points over a shuffled list.
+        let mut shuffled = nodes.clone();
+        rng.shuffle(&mut shuffled);
+        let mut start = 0usize;
+        let mut acc = 0f64;
+        for (k, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if k + 1 == num_clients {
+                shuffled.len()
+            } else {
+                ((acc * shuffled.len() as f64).round() as usize).min(shuffled.len())
+            };
+            for &u in &shuffled[start..end] {
+                assign[u] = k as u32;
+            }
+            start = end;
+        }
+    }
+    Partition::from_assignment(num_clients, assign)
+}
+
+/// Power-law sized partition (country-population style): client k gets a
+/// share ∝ (k+1)^{-alpha}; node→client assignment is random given the sizes.
+pub fn powerlaw_partition(n: usize, num_clients: usize, alpha: f64, rng: &mut Rng) -> Partition {
+    let weights: Vec<f64> = (0..num_clients).map(|k| ((k + 1) as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    // Cut a shuffled node list at the cumulative shares.
+    let perm = rng.permutation(n);
+    let mut assign = vec![0u32; n];
+    let mut start = 0usize;
+    let mut acc = 0f64;
+    for k in 0..num_clients {
+        acc += weights[k] / total;
+        let end = if k + 1 == num_clients { n } else { ((acc * n as f64) as usize).min(n) };
+        // Guarantee at least one node per client while possible.
+        let end = end.max((start + 1).min(n));
+        for &u in &perm[start..end.min(perm.len())] {
+            assign[u] = k as u32;
+        }
+        start = end;
+    }
+    drop(perm);
+    Partition::from_assignment(num_clients, assign)
+}
+
+/// Partition by a precomputed group id per node (region / country for the
+/// LP task: one client per region).
+pub fn group_partition(groups: &[u32], num_clients: usize) -> Partition {
+    Partition::from_assignment(num_clients, groups.to_vec())
+}
+
+/// Label-distribution statistics of a partition — used in tests and in the
+/// monitor's data summary (how non-IID did β make the split?).
+pub fn label_skew(partition: &Partition, labels: &[u16], num_classes: usize) -> Vec<Vec<f64>> {
+    partition
+        .members
+        .iter()
+        .map(|m| {
+            let mut counts = vec![0f64; num_classes];
+            for &u in m {
+                counts[labels[u as usize] as usize] += 1.0;
+            }
+            let total: f64 = counts.iter().sum::<f64>().max(1.0);
+            counts.iter().map(|c| c / total).collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_partition_covers() {
+        let mut rng = Rng::seeded(1);
+        let p = random_partition(1000, 10, &mut rng);
+        p.validate(1000).unwrap();
+        assert!(p.sizes().iter().all(|&s| s > 50));
+    }
+
+    #[test]
+    fn dirichlet_high_beta_is_balanced() {
+        let mut rng = Rng::seeded(2);
+        let labels: Vec<u16> = (0..2000).map(|i| (i % 7) as u16).collect();
+        let p = dirichlet_partition(&labels, 7, 10, 10_000.0, &mut rng);
+        p.validate(2000).unwrap();
+        let sizes = p.sizes();
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(*max < 2 * *min, "IID split should be balanced: {sizes:?}");
+        // Per-client label distribution close to global (uniform over 7).
+        let skew = label_skew(&p, &labels, 7);
+        for dist in skew {
+            for pr in dist {
+                assert!((pr - 1.0 / 7.0).abs() < 0.08, "non-IID under beta=1e4: {pr}");
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_low_beta_is_skewed() {
+        let mut rng = Rng::seeded(3);
+        let labels: Vec<u16> = (0..2000).map(|i| (i % 7) as u16).collect();
+        let p = dirichlet_partition(&labels, 7, 10, 0.1, &mut rng);
+        p.validate(2000).unwrap();
+        let skew = label_skew(&p, &labels, 7);
+        // At least one client should be dominated by a single class.
+        let max_frac = skew
+            .iter()
+            .filter(|d| !d.iter().all(|&x| x == 0.0))
+            .map(|d| d.iter().cloned().fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        assert!(max_frac > 0.5, "expected skew, got max frac {max_frac}");
+    }
+
+    #[test]
+    fn powerlaw_sizes_decay() {
+        let mut rng = Rng::seeded(4);
+        let p = powerlaw_partition(100_000, 195, 1.0, &mut rng);
+        p.validate(100_000).unwrap();
+        let sizes = p.sizes();
+        assert!(sizes[0] > sizes[100] && sizes[0] > sizes[194]);
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+
+    #[test]
+    fn group_partition_exact() {
+        let groups = vec![0u32, 1, 1, 2, 0];
+        let p = group_partition(&groups, 3);
+        p.validate(5).unwrap();
+        assert_eq!(p.members[1], vec![1, 2]);
+    }
+}

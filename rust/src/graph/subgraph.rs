@@ -1,0 +1,239 @@
+//! Per-client local graph views with cross-client edge tracking.
+//!
+//! In the paper's federated setting each trainer holds the subgraph induced
+//! by its nodes *plus* knowledge of edges that leave the client ("cross-client
+//! edges", Table 1 row 4). Different algorithms treat those edges
+//! differently:
+//! - FedAvg: drops them (trains on the induced subgraph only);
+//! - FedGCN: receives pre-aggregated neighbor feature sums for them during
+//!   the pre-training communication round;
+//! - Distributed-GCN: materializes halo nodes and exchanges their features
+//!   every round;
+//! - BNS-GCN: samples a fraction of boundary nodes per round.
+
+use std::collections::HashMap;
+
+use super::csr::Csr;
+use super::partition::Partition;
+
+/// A client's local view of the global graph.
+#[derive(Clone, Debug)]
+pub struct LocalGraph {
+    pub client: u32,
+    /// Global ids of owned nodes (sorted ascending).
+    pub owned: Vec<u32>,
+    /// Global ids of halo nodes: non-owned endpoints of cross-client edges
+    /// (sorted ascending).
+    pub halo: Vec<u32>,
+    /// Map global id → local index. Owned nodes occupy `[0, owned.len())`,
+    /// halo nodes `[owned.len(), owned.len()+halo.len())`.
+    pub index: HashMap<u32, u32>,
+    /// Local adjacency over owned+halo vertices containing every edge with
+    /// at least one owned endpoint (the edges this client knows about).
+    pub csr: Csr,
+    /// Number of undirected edges fully inside the client.
+    pub internal_edges: usize,
+    /// Number of undirected edges crossing to another client.
+    pub cross_edges: usize,
+}
+
+impl LocalGraph {
+    pub fn num_owned(&self) -> usize {
+        self.owned.len()
+    }
+
+    pub fn num_local(&self) -> usize {
+        self.owned.len() + self.halo.len()
+    }
+
+    pub fn is_owned_local(&self, local: u32) -> bool {
+        (local as usize) < self.owned.len()
+    }
+
+    /// Global id of a local vertex.
+    pub fn global_of(&self, local: u32) -> u32 {
+        let l = local as usize;
+        if l < self.owned.len() {
+            self.owned[l]
+        } else {
+            self.halo[l - self.owned.len()]
+        }
+    }
+}
+
+/// Build every client's local view in one pass over the global graph.
+pub fn build_local_graphs(global: &Csr, part: &Partition) -> Vec<LocalGraph> {
+    let mut out = Vec::with_capacity(part.num_clients);
+    for c in 0..part.num_clients as u32 {
+        out.push(build_local_graph(global, part, c));
+    }
+    out
+}
+
+/// Build one client's local view.
+pub fn build_local_graph(global: &Csr, part: &Partition, client: u32) -> LocalGraph {
+    let owned = part.members[client as usize].clone();
+    let mut halo: Vec<u32> = Vec::new();
+    let mut internal = 0usize;
+    let mut cross = 0usize;
+    for &u in &owned {
+        for &v in global.neighbors(u) {
+            if part.assign[v as usize] == client {
+                if u < v {
+                    internal += 1;
+                }
+            } else {
+                cross += 1;
+                halo.push(v);
+            }
+        }
+    }
+    halo.sort_unstable();
+    halo.dedup();
+    let mut index = HashMap::with_capacity(owned.len() + halo.len());
+    for (i, &u) in owned.iter().enumerate() {
+        index.insert(u, i as u32);
+    }
+    for (i, &u) in halo.iter().enumerate() {
+        index.insert(u, (owned.len() + i) as u32);
+    }
+    // Local edge list: all global edges with an owned endpoint, remapped.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(internal + cross);
+    for &u in &owned {
+        let lu = index[&u];
+        for &v in global.neighbors(u) {
+            if let Some(&lv) = index.get(&v) {
+                // Each internal edge appears from both endpoints; push once.
+                if part.assign[v as usize] == client {
+                    if u < v {
+                        edges.push((lu, lv));
+                    }
+                } else {
+                    edges.push((lu, lv));
+                }
+            }
+        }
+    }
+    let csr = Csr::from_edges(owned.len() + halo.len(), &edges);
+    LocalGraph { client, owned, halo, index, csr, internal_edges: internal, cross_edges: cross }
+}
+
+/// Exact 1-hop aggregated neighbor feature sums for a set of nodes, computed
+/// over the *global* graph — this is the quantity FedGCN exchanges in its
+/// pre-training round (possibly encrypted / low-rank projected). Row `i` of
+/// the result is `Σ_{v ∈ N(nodes[i])} x[v]` (global neighborhoods, so the
+/// cross-client contribution is included — that is the whole point).
+pub fn neighbor_feature_sums(
+    global: &Csr,
+    features: &[f32],
+    dim: usize,
+    nodes: &[u32],
+) -> Vec<f32> {
+    let mut out = vec![0f32; nodes.len() * dim];
+    for (i, &u) in nodes.iter().enumerate() {
+        let row = &mut out[i * dim..(i + 1) * dim];
+        for &v in global.neighbors(u) {
+            let f = &features[v as usize * dim..(v as usize + 1) * dim];
+            for (o, x) in row.iter_mut().zip(f) {
+                *o += x;
+            }
+        }
+    }
+    out
+}
+
+/// The portion of `neighbor_feature_sums` a single client can compute from
+/// its own data: sums restricted to neighbors owned by `client`. Summing this
+/// across all clients reproduces the global sums — which is exactly the
+/// additive structure that lets the server aggregate *encrypted* per-client
+/// contributions (paper §3.2) or *projected* ones (§4.2).
+pub fn local_neighbor_contribution(
+    global: &Csr,
+    part: &Partition,
+    features: &[f32],
+    dim: usize,
+    nodes: &[u32],
+    client: u32,
+) -> Vec<f32> {
+    let mut out = vec![0f32; nodes.len() * dim];
+    for (i, &u) in nodes.iter().enumerate() {
+        let row = &mut out[i * dim..(i + 1) * dim];
+        for &v in global.neighbors(u) {
+            if part.assign[v as usize] != client {
+                continue;
+            }
+            let f = &features[v as usize * dim..(v as usize + 1) * dim];
+            for (o, x) in row.iter_mut().zip(f) {
+                *o += x;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::partition::Partition;
+
+    /// 6-cycle split in halves: clients {0,1,2} and {3,4,5}.
+    fn cycle6() -> (Csr, Partition) {
+        let g = Csr::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0)]);
+        let p = Partition::from_assignment(2, vec![0, 0, 0, 1, 1, 1]);
+        (g, p)
+    }
+
+    #[test]
+    fn local_graph_structure() {
+        let (g, p) = cycle6();
+        let l0 = build_local_graph(&g, &p, 0);
+        assert_eq!(l0.owned, vec![0, 1, 2]);
+        assert_eq!(l0.halo, vec![3, 5]); // cross neighbors of 2 and 0
+        assert_eq!(l0.internal_edges, 2); // 0-1, 1-2
+        assert_eq!(l0.cross_edges, 2); // 2-3, 0-5
+        l0.csr.validate().unwrap();
+        assert_eq!(l0.csr.num_edges(), 4);
+        // local index round trip
+        for &u in l0.owned.iter().chain(&l0.halo) {
+            assert_eq!(l0.global_of(l0.index[&u]), u);
+        }
+    }
+
+    #[test]
+    fn cross_edge_totals_are_consistent() {
+        let (g, p) = cycle6();
+        let locals = build_local_graphs(&g, &p);
+        let total_cross: usize = locals.iter().map(|l| l.cross_edges).sum();
+        // Each cross edge counted once per side.
+        assert_eq!(total_cross, 4);
+        let total_internal: usize = locals.iter().map(|l| l.internal_edges).sum();
+        assert_eq!(total_internal + total_cross / 2, g.num_edges());
+    }
+
+    #[test]
+    fn neighbor_sums_decompose_across_clients() {
+        let (g, p) = cycle6();
+        let dim = 3;
+        let feats: Vec<f32> = (0..6 * dim).map(|i| i as f32 * 0.5).collect();
+        let nodes = [0u32, 2, 4];
+        let global_sums = neighbor_feature_sums(&g, &feats, dim, &nodes);
+        let mut acc = vec![0f32; nodes.len() * dim];
+        for c in 0..2 {
+            let part_sum = local_neighbor_contribution(&g, &p, &feats, dim, &nodes, c);
+            for (a, b) in acc.iter_mut().zip(&part_sum) {
+                *a += b;
+            }
+        }
+        for (a, b) in acc.iter().zip(&global_sums) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn neighbor_sum_values() {
+        let g = Csr::from_edges(3, &[(0, 1), (0, 2)]);
+        let feats = vec![1.0, 10.0, 100.0]; // dim=1
+        let sums = neighbor_feature_sums(&g, &feats, 1, &[0, 1]);
+        assert_eq!(sums, vec![110.0, 1.0]);
+    }
+}

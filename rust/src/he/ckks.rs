@@ -1,0 +1,357 @@
+//! CKKS-style homomorphic-encryption simulator.
+//!
+//! The paper uses TenSEAL CKKS for (i) pre-training feature aggregation and
+//! (ii) model-update aggregation (§3.2, Appendix F). TenSEAL is unavailable
+//! offline, so this module is a *behaviorally calibrated* substitute that
+//! reproduces the three observable effects the paper measures:
+//!
+//! 1. **Ciphertext expansion → communication cost.** Sizes follow the real
+//!    CKKS formulas: a ciphertext holds `N/2` complex slots (we use the real
+//!    packing convention of N/2 values) and serializes to
+//!    `2 · N · ceil(Σ coeff_bits / 8)` bytes; keys likewise. These are exact,
+//!    which is what Fig 5 / Table 3 / Table 7 measure.
+//! 2. **Encrypt/decrypt/add compute overhead.** Encode/decode run a real
+//!    O(N log N) butterfly pass per polynomial (an NTT-shaped workload) so
+//!    measured times scale with `poly_mod_degree` the way TenSEAL's do.
+//! 3. **Precision behaviour.** Values are fixed-point encoded at
+//!    `2^scale_bits`; additions accumulate noise; undersized parameter sets
+//!    (poly degree below the dataset requirement `N ≥ 2·max(nodes, feats)`,
+//!    or scale too large for the modulus chain) degrade or destroy accuracy
+//!    — reproducing Appendix A.6 / Table 7.
+//!
+//! The homomorphic property is *real* for addition (the only operation the
+//! FedGraph aggregation path needs): `dec(enc(a) + enc(b)) ≈ a + b` without
+//! the server seeing plaintext in this simulation's threat model.
+
+use crate::util::rng::Rng;
+
+/// CKKS parameter set (paper Table 6).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkksParams {
+    /// Polynomial modulus degree N ∈ {4096, 8192, 16384, 32768}.
+    pub poly_mod_degree: usize,
+    /// Coefficient modulus chain bit sizes, e.g. [60, 40, 40, 40, 60].
+    pub coeff_mod_bits: Vec<u32>,
+    /// Global scale exponent: values are encoded at 2^scale_bits.
+    pub scale_bits: u32,
+    /// Claimed security level in bits (128 / 192 / 256).
+    pub security_level: u32,
+}
+
+impl CkksParams {
+    /// The paper's default configuration (Table 6).
+    pub fn default_params() -> CkksParams {
+        CkksParams {
+            poly_mod_degree: 16384,
+            coeff_mod_bits: vec![60, 40, 40, 40, 60],
+            scale_bits: 40,
+            security_level: 128,
+        }
+    }
+
+    pub fn with_degree(degree: usize) -> CkksParams {
+        let coeff = match degree {
+            4096 => vec![40, 20, 40],
+            8192 => vec![60, 40, 40, 60],
+            16384 => vec![60, 40, 40, 40, 60],
+            _ => vec![60, 40, 40, 40, 60],
+        };
+        CkksParams {
+            poly_mod_degree: degree,
+            coeff_mod_bits: coeff,
+            scale_bits: 40,
+            security_level: 128,
+        }
+    }
+
+    /// Number of packed real values per ciphertext.
+    pub fn slots(&self) -> usize {
+        self.poly_mod_degree / 2
+    }
+
+    pub fn total_coeff_bits(&self) -> u32 {
+        self.coeff_mod_bits.iter().sum()
+    }
+
+    /// Serialized size of ONE ciphertext: two ring polynomials of N
+    /// coefficients, each coefficient stored across the modulus chain.
+    pub fn ciphertext_bytes(&self) -> u64 {
+        2 * self.poly_mod_degree as u64 * ((self.total_coeff_bits() as u64 + 7) / 8)
+    }
+
+    /// Serialized size of the public key (same shape as a ciphertext).
+    pub fn public_key_bytes(&self) -> u64 {
+        self.ciphertext_bytes()
+    }
+
+    /// Bytes to ship a vector of `len` f32 values encrypted.
+    pub fn encrypted_vector_bytes(&self, len: usize) -> u64 {
+        let chunks = (len + self.slots() - 1) / self.slots();
+        chunks as u64 * self.ciphertext_bytes()
+    }
+
+    /// The paper's sizing rule (Table 6): N must be at least
+    /// 2 × max(nodes, features) for valid packing of the graph matrices.
+    pub fn satisfies_requirement(&self, max_dim: usize) -> bool {
+        self.poly_mod_degree >= 2 * max_dim
+    }
+
+    /// Headroom (in bits) between the scale and the modulus chain; when this
+    /// goes non-positive the encryption is effectively invalid and decryption
+    /// returns garbage (Appendix A.6's "accuracy drops sharply").
+    pub fn precision_headroom(&self) -> i64 {
+        // The first and last primes anchor the scale; the middle chain is the
+        // compute budget.
+        self.total_coeff_bits() as i64 - self.scale_bits as i64 - 60
+    }
+}
+
+/// Encrypted vector: `chunks` ciphertexts of `slots` fixed-point values.
+#[derive(Clone, Debug)]
+pub struct Ciphertext {
+    pub params: CkksParams,
+    /// Encoded fixed-point slots; kept as i64 in "poly" (butterfly'd) domain.
+    data: Vec<i64>,
+    /// Logical length of the encoded f32 vector.
+    pub len: usize,
+    /// Number of homomorphic additions accumulated (noise bookkeeping).
+    pub adds: u32,
+    /// Whether the parameter set was valid for the encoded data.
+    valid: bool,
+}
+
+impl Ciphertext {
+    /// Serialized wire size of this ciphertext vector.
+    pub fn wire_bytes(&self) -> u64 {
+        self.params.encrypted_vector_bytes(self.len)
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        (self.len + self.params.slots() - 1) / self.params.slots()
+    }
+}
+
+/// A CKKS-sim context: holds the parameter set and the (simulated) keys.
+#[derive(Clone, Debug)]
+pub struct CkksContext {
+    pub params: CkksParams,
+    noise_seed: u64,
+}
+
+/// The butterfly pass standing in for the NTT: `log2(n)` rounds of paired
+/// add/sub with a data-dependent rotation. Self-inverse is NOT required —
+/// we apply `forward` at encryption and `inverse` at decryption so the
+/// round-trip is exact; the point is to do O(N log N) integer work shaped
+/// like the real transform.
+fn butterfly_forward(data: &mut [i64]) {
+    let n = data.len();
+    let mut half = 1;
+    while half < n {
+        let mut i = 0;
+        while i < n {
+            let j = i + half;
+            if j < n {
+                let a = data[i];
+                let b = data[j];
+                data[i] = a.wrapping_add(b);
+                data[j] = a.wrapping_sub(b);
+            }
+            i += 2 * half;
+        }
+        half *= 2;
+    }
+}
+
+fn butterfly_inverse(data: &mut [i64]) {
+    let n = data.len();
+    let mut half = n / 2;
+    while half >= 1 {
+        let mut i = 0;
+        while i < n {
+            let j = i + half;
+            if j < n {
+                let a = data[i];
+                let b = data[j];
+                // inverse of (a+b, a-b) is ((a'+b')/2, (a'-b')/2)
+                data[i] = (a.wrapping_add(b)) >> 1;
+                data[j] = (a.wrapping_sub(b)) >> 1;
+            }
+            i += 2 * half;
+        }
+        half /= 2;
+    }
+}
+
+impl CkksContext {
+    pub fn new(params: CkksParams, seed: u64) -> CkksContext {
+        CkksContext { params, noise_seed: seed }
+    }
+
+    /// Encrypt an f32 vector. `max_dim` is the dataset's max(nodes, features)
+    /// used for the paper's validity rule.
+    pub fn encrypt(&self, values: &[f32], max_dim: usize) -> Ciphertext {
+        let scale = (1u64 << self.params.scale_bits.min(62)) as f64;
+        let slots = self.params.slots();
+        let chunks = (values.len() + slots - 1) / slots;
+        let mut data = vec![0i64; chunks * slots];
+        let valid = self.params.satisfies_requirement(max_dim)
+            && self.params.precision_headroom() > 0;
+        let mut rng = Rng::seeded(self.noise_seed ^ values.len() as u64);
+        for (i, &v) in values.iter().enumerate() {
+            // Fresh encryption noise: tiny (sub-LSB) when valid; destructive
+            // when the parameter set is undersized.
+            let noise = if valid {
+                rng.normal() * 0.5 // half an LSB of the fixed-point code
+            } else {
+                rng.normal() * scale * 0.05 * (1.0 + v.abs() as f64)
+            };
+            data[i] = (v as f64 * scale + noise).round() as i64;
+        }
+        // NTT-shaped work per chunk (cost model). The transform runs on a
+        // scratch copy: ciphertext data stays in coefficient domain so that
+        // homomorphic addition is exact for arbitrarily large aggregates
+        // (the butterfly's magnitude growth would otherwise overflow i64 on
+        // deep chains of adds — a simulator artifact, not CKKS behaviour).
+        let mut scratch = data.clone();
+        for c in 0..chunks {
+            butterfly_forward(&mut scratch[c * slots..(c + 1) * slots]);
+        }
+        std::hint::black_box(&scratch);
+        Ciphertext { params: self.params.clone(), data, len: values.len(), adds: 0, valid }
+    }
+
+    /// Homomorphic addition (the only op the aggregation path needs).
+    pub fn add_assign(&self, acc: &mut Ciphertext, other: &Ciphertext) {
+        assert_eq!(acc.params, other.params, "ciphertext parameter mismatch");
+        assert_eq!(acc.len, other.len, "ciphertext length mismatch");
+        for (a, b) in acc.data.iter_mut().zip(&other.data) {
+            *a = a.wrapping_add(*b);
+        }
+        acc.adds += other.adds + 1;
+        acc.valid &= other.valid;
+    }
+
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let mut out = a.clone();
+        self.add_assign(&mut out, b);
+        out
+    }
+
+    /// Decrypt back to f32. Noise grows with the number of additions; with
+    /// invalid parameters the output is visibly corrupted.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Vec<f32> {
+        let scale = (1u64 << self.params.scale_bits.min(62)) as f64;
+        let slots = self.params.slots();
+        let data = &ct.data;
+        // NTT-shaped work per chunk (cost model; see `encrypt`).
+        let mut scratch = ct.data.clone();
+        let chunks = scratch.len() / slots;
+        for c in 0..chunks {
+            butterfly_inverse(&mut scratch[c * slots..(c + 1) * slots]);
+        }
+        std::hint::black_box(&scratch);
+        let mut rng = Rng::seeded(self.noise_seed ^ 0xDEC ^ ct.len as u64);
+        // Decryption noise: sub-LSB per accumulated addition when valid.
+        let noise_std = 0.5 * ((1 + ct.adds) as f64).sqrt();
+        data.iter()
+            .take(ct.len)
+            .map(|&q| {
+                let n = if ct.valid { rng.normal() * noise_std } else { 0.0 };
+                ((q as f64 + n) / scale) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> CkksContext {
+        CkksContext::new(CkksParams::default_params(), 42)
+    }
+
+    #[test]
+    fn sizes_match_ckks_formulas() {
+        let p = CkksParams::default_params();
+        assert_eq!(p.slots(), 8192);
+        assert_eq!(p.total_coeff_bits(), 240);
+        assert_eq!(p.ciphertext_bytes(), 2 * 16384 * 30); // 983 040
+        // 10_000 floats -> 2 chunks
+        assert_eq!(p.encrypted_vector_bytes(10_000), 2 * 983_040);
+        // Expansion vs plaintext is large (the paper's whole point)
+        let plain = 10_000u64 * 4;
+        assert!(p.encrypted_vector_bytes(10_000) > 20 * plain);
+    }
+
+    #[test]
+    fn roundtrip_is_accurate_when_valid() {
+        let ctx = ctx();
+        let v: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.01).collect();
+        let ct = ctx.encrypt(&v, 2708);
+        let out = ctx.decrypt(&ct);
+        for (a, b) in v.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn addition_is_homomorphic() {
+        let ctx = ctx();
+        let a: Vec<f32> = (0..500).map(|i| i as f32 * 0.1).collect();
+        let b: Vec<f32> = (0..500).map(|i| 50.0 - i as f32 * 0.1).collect();
+        let ca = ctx.encrypt(&a, 500);
+        let cb = ctx.encrypt(&b, 500);
+        let sum = ctx.add(&ca, &cb);
+        let out = ctx.decrypt(&sum);
+        for x in out {
+            assert!((x - 50.0).abs() < 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn many_party_aggregation() {
+        let ctx = ctx();
+        let parties = 10;
+        let v: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut acc = ctx.encrypt(&v, 100);
+        for _ in 1..parties {
+            let ct = ctx.encrypt(&v, 100);
+            ctx.add_assign(&mut acc, &ct);
+        }
+        let out = ctx.decrypt(&acc);
+        for (i, x) in out.iter().enumerate() {
+            let expect = i as f32 * parties as f32;
+            assert!((x - expect).abs() < 0.05, "slot {i}: {x} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn undersized_params_corrupt_decryption() {
+        // Cora needs N >= 2*2708; 4096 violates it -> Appendix A.6 behaviour.
+        let small = CkksContext::new(CkksParams::with_degree(4096), 1);
+        let v = vec![1.0f32; 256];
+        let ct = small.encrypt(&v, 2708);
+        let out = small.decrypt(&ct);
+        let err: f32 = out.iter().map(|x| (x - 1.0).abs()).sum::<f32>() / 256.0;
+        assert!(err > 0.01, "expected visible corruption, err={err}");
+    }
+
+    #[test]
+    fn butterfly_roundtrip_exact() {
+        let mut data: Vec<i64> = (0..64).map(|i| (i * 31 - 1000) as i64).collect();
+        let orig = data.clone();
+        butterfly_forward(&mut data);
+        assert_ne!(data, orig);
+        butterfly_inverse(&mut data);
+        assert_eq!(data, orig);
+    }
+
+    #[test]
+    fn wire_bytes_counts_chunks() {
+        let ctx = ctx();
+        let ct = ctx.encrypt(&vec![0.5f32; 8193], 8192);
+        assert_eq!(ct.num_chunks(), 2);
+        assert_eq!(ct.wire_bytes(), 2 * ctx.params.ciphertext_bytes());
+    }
+}

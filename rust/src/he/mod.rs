@@ -1,0 +1,9 @@
+//! Privacy-preserving aggregation substrates: the CKKS-style homomorphic
+//! encryption simulator (paper §3.2, Appendix F) and the Gaussian-mechanism
+//! differential privacy option (Appendix A.5).
+
+pub mod ckks;
+pub mod dp;
+
+pub use ckks::{Ciphertext, CkksContext, CkksParams};
+pub use dp::{clip_l2, gaussian_mechanism, DpParams};

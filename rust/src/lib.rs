@@ -1,0 +1,51 @@
+//! # fedgraph
+//!
+//! A reproduction of *"FedGraph: A Research Library and Benchmark for
+//! Federated Graph Learning"* (Yao et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **Layer 3 (this crate)** — the federated coordinator: server/trainer
+//!   topology over a simulated network, plain / homomorphic-encrypted /
+//!   differentially-private aggregation, the low-rank pre-train
+//!   communication scheme, client selection, minibatch scheduling, and the
+//!   monitoring system that regenerates every figure and table of the
+//!   paper's evaluation.
+//! - **Layer 2 (python/compile/model.py, build-time only)** — GCN / GIN / LP
+//!   models and their train/eval steps in JAX, AOT-lowered to HLO text.
+//! - **Layer 1 (python/compile/kernels/, build-time only)** — Pallas kernels
+//!   for the dense compute hot-spots, validated against pure-jnp oracles.
+//!
+//! At runtime the Rust binary loads `artifacts/*.hlo.txt` through the PJRT
+//! CPU client (`runtime::Engine`) and never touches Python.
+//!
+//! Quickstart (the paper's Fig 2 experience):
+//!
+//! ```no_run
+//! use fedgraph::config::FedGraphConfig;
+//! let cfg = FedGraphConfig::parse_yaml(r#"
+//! fedgraph_task: NC
+//! dataset: cora-sim
+//! method: FedGCN
+//! n_trainer: 10
+//! global_rounds: 50
+//! "#).unwrap();
+//! let report = fedgraph::run_fedgraph(&cfg).unwrap();
+//! println!("{}", report.render());
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod graph;
+pub mod he;
+pub mod lowrank;
+pub mod monitor;
+pub mod runtime;
+pub mod testing;
+pub mod transport;
+pub mod util;
+
+pub use config::FedGraphConfig;
+pub use coordinator::run_fedgraph;
+pub use monitor::report::Report;

@@ -1,0 +1,133 @@
+//! Low-rank pre-train communication (paper §4 case study).
+//!
+//! FedGCN's pre-train round ships feature aggregates of dimension `d`
+//! (1433 for Cora). The paper's scheme: the server samples a random
+//! projection **P ∈ R^{d×k}**, `k ≪ d`, distributes it (optionally
+//! encrypted), each client projects its contribution `X̂ᵢ = Xᵢ·P` and sends
+//! the `n×k` result; the server sums and returns `X̂_agg = Σᵢ X̂ᵢ`. Because
+//! projection is linear, aggregation commutes with it — which also makes the
+//! scheme compose with the additive HE interface (§4.2).
+
+use crate::util::linalg::matmul;
+use crate::util::rng::Rng;
+
+/// A seeded random projection matrix (Johnson-Lindenstrauss style:
+/// iid N(0, 1/k) entries so squared norms are preserved in expectation).
+#[derive(Clone, Debug)]
+pub struct Projection {
+    pub d: usize,
+    pub k: usize,
+    /// Row-major `[d, k]`.
+    pub matrix: Vec<f32>,
+}
+
+impl Projection {
+    /// Sample a fresh projection (server side, once per pre-train round).
+    pub fn sample(d: usize, k: usize, rng: &mut Rng) -> Projection {
+        assert!(k >= 1 && k <= d, "rank k must be in [1, d]");
+        let std = 1.0 / (k as f32).sqrt();
+        let mut matrix = vec![0f32; d * k];
+        rng.fill_normal_f32(&mut matrix, 0.0, std);
+        Projection { d, k, matrix }
+    }
+
+    /// Bytes to ship the projection matrix to one client (plaintext).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.matrix.len() * 4) as u64
+    }
+
+    /// Project a row-major `[n, d]` feature block to `[n, k]`.
+    pub fn project(&self, x: &[f32], n: usize) -> Vec<f32> {
+        assert_eq!(x.len(), n * self.d, "feature block shape");
+        matmul(x, &self.matrix, n, self.d, self.k)
+    }
+}
+
+/// Server-side aggregation of projected client contributions (element-wise
+/// sum). All blocks must be `[n, k]` for the same node set.
+pub fn aggregate_projected(contributions: &[Vec<f32>]) -> Vec<f32> {
+    assert!(!contributions.is_empty());
+    let len = contributions[0].len();
+    let mut acc = vec![0f32; len];
+    for c in contributions {
+        assert_eq!(c.len(), len, "ragged projected contributions");
+        for (a, v) in acc.iter_mut().zip(c) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+/// Communication saved by rank-k vs full-d for an `n`-row exchange in one
+/// direction (fraction in [0,1)).
+pub fn compression_ratio(d: usize, k: usize) -> f64 {
+    1.0 - k as f64 / d as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_shapes_and_bytes() {
+        let mut rng = Rng::seeded(1);
+        let p = Projection::sample(1433, 100, &mut rng);
+        assert_eq!(p.matrix.len(), 1433 * 100);
+        assert_eq!(p.wire_bytes(), 1433 * 100 * 4);
+        let x = vec![1.0f32; 8 * 1433];
+        assert_eq!(p.project(&x, 8).len(), 8 * 100);
+    }
+
+    #[test]
+    fn projection_commutes_with_aggregation() {
+        // Σᵢ(Xᵢ P) == (Σᵢ Xᵢ) P — the property §4.2 relies on for HE.
+        let mut rng = Rng::seeded(2);
+        let (n, d, k) = (6, 40, 8);
+        let p = Projection::sample(d, k, &mut rng);
+        let clients: Vec<Vec<f32>> = (0..5)
+            .map(|c| (0..n * d).map(|i| ((i + c * 31) % 17) as f32 * 0.25 - 2.0).collect())
+            .collect();
+        let per_client: Vec<Vec<f32>> = clients.iter().map(|x| p.project(x, n)).collect();
+        let sum_then_project = {
+            let mut total = vec![0f32; n * d];
+            for x in &clients {
+                for (t, v) in total.iter_mut().zip(x) {
+                    *t += v;
+                }
+            }
+            p.project(&total, n)
+        };
+        let project_then_sum = aggregate_projected(&per_client);
+        for (a, b) in project_then_sum.iter().zip(&sum_then_project) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn jl_norm_preservation() {
+        // E[||xP||²] = ||x||²; with k=256 the deviation should be modest.
+        let mut rng = Rng::seeded(3);
+        let d = 1024;
+        let k = 256;
+        let p = Projection::sample(d, k, &mut rng);
+        let x: Vec<f32> = (0..d).map(|i| ((i % 7) as f32 - 3.0) * 0.5).collect();
+        let xp = p.project(&x, 1);
+        let n_in: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        let n_out: f64 = xp.iter().map(|v| (*v as f64).powi(2)).sum();
+        let ratio = n_out / n_in;
+        assert!((0.7..1.3).contains(&ratio), "JL ratio {ratio}");
+    }
+
+    #[test]
+    fn compression_ratio_values() {
+        assert!((compression_ratio(1433, 100) - 0.930).abs() < 0.001); // "93%"
+        assert_eq!(compression_ratio(100, 100), 0.0);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = Projection::sample(64, 8, &mut Rng::seeded(7));
+        let b = Projection::sample(64, 8, &mut Rng::seeded(7));
+        assert_eq!(a.matrix, b.matrix);
+    }
+}

@@ -1,0 +1,185 @@
+//! `fedgraph` CLI — the launcher (hand-rolled argument parsing; clap is not
+//! available offline).
+//!
+//! Usage:
+//!   fedgraph run --config configs/cora_fedgcn.yaml [--json out.json]
+//!   fedgraph run --task NC --dataset cora-sim --method FedGCN [--rounds N]
+//!               [--trainers M] [--scale S] [--he] [--dp] [--lowrank K]
+//!   fedgraph list                 # supported task/method/dataset matrix
+//!   fedgraph artifacts            # show the loaded artifact manifest
+
+use std::process::ExitCode;
+
+use fedgraph::config::{FedGraphConfig, Method, PrivacyMode, Task};
+use fedgraph::data;
+use fedgraph::he::{CkksParams, DpParams};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("artifacts") => cmd_artifacts(&args[1..]),
+        Some("--help") | Some("-h") | None => {
+            print_help();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fedgraph — federated graph learning benchmark (FedGraph reproduction)\n\n\
+         commands:\n\
+         \x20 run --config <file.yaml> [--json <out.json>]\n\
+         \x20 run --task NC|GC|LP --dataset <name> --method <name>\n\
+         \x20     [--rounds N] [--trainers M] [--local-steps K] [--lr F]\n\
+         \x20     [--scale S] [--beta B] [--batch-size B] [--he] [--dp]\n\
+         \x20     [--lowrank K] [--hops H] [--sample-ratio R] [--seed S]\n\
+         \x20 list       supported task/method/dataset matrix\n\
+         \x20 artifacts  show the artifact manifest"
+    );
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn cmd_run(args: &[String]) -> ExitCode {
+    let cfg = match build_config(args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "running {} / {} on {} ({} trainers, {} rounds)...",
+        cfg.task.name(),
+        cfg.method.name(),
+        cfg.dataset,
+        cfg.n_trainer,
+        cfg.global_rounds
+    );
+    match fedgraph::run_fedgraph(&cfg) {
+        Ok(report) => {
+            println!("{}", report.render());
+            if let Some(path) = flag_value(args, "--json") {
+                if let Err(e) = std::fs::write(path, report.to_json().to_string_pretty()) {
+                    eprintln!("cannot write {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+                println!("report written to {path}");
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("run failed: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
+    let mut cfg = if let Some(path) = flag_value(args, "--config") {
+        FedGraphConfig::from_yaml_file(path)?
+    } else {
+        let task = Task::parse(flag_value(args, "--task").unwrap_or("NC"))?;
+        let method = Method::parse(task, flag_value(args, "--method").unwrap_or("FedGCN"))?;
+        let dataset = flag_value(args, "--dataset").unwrap_or("cora-sim");
+        FedGraphConfig::new(task, method, dataset)?
+    };
+    if let Some(v) = flag_value(args, "--rounds") {
+        cfg.global_rounds = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--trainers") {
+        cfg.n_trainer = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--local-steps") {
+        cfg.local_steps = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--lr") {
+        cfg.learning_rate = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--scale") {
+        cfg.scale = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--beta") {
+        cfg.iid_beta = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--batch-size") {
+        cfg.batch_size = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--lowrank") {
+        cfg.lowrank_rank = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--hops") {
+        cfg.num_hops = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--sample-ratio") {
+        cfg.sample_ratio = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--seed") {
+        cfg.seed = v.parse()?;
+    }
+    if has_flag(args, "--he") {
+        cfg.privacy = PrivacyMode::He(CkksParams::default_params());
+    }
+    if has_flag(args, "--dp") {
+        cfg.privacy =
+            PrivacyMode::Dp(fedgraph::config::DpClone(DpParams::default_params()));
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_list() -> ExitCode {
+    println!("tasks / methods (paper Table 5):");
+    println!("  NC: FedAvg, DistributedGCN, BNS-GCN, FedSage+, FedGCN");
+    println!("  GC: SelfTrain, FedAvg, FedProx, GCFL, GCFL+, GCFL+dWs");
+    println!("  LP: StaticGNN, STFL, FedLink, 4D-FED-GNN+");
+    println!("\ndatasets (synthetic, statistics-matched — Table 4):");
+    for s in data::nc_specs() {
+        println!(
+            "  NC {:<16} n={:<7} d={:<5} classes={}",
+            s.name, s.n, s.feat_dim, s.num_classes
+        );
+    }
+    println!("  NC papers100m-sim  n=1e8 (lazy) d=128  classes=172");
+    for s in data::gc_specs() {
+        println!(
+            "  GC {:<16} graphs={:<5} avg_nodes={:<5} classes={}",
+            s.name, s.num_graphs, s.avg_nodes, s.num_classes
+        );
+    }
+    println!("  LP US | US+BR | 5country   (foursquare-sim check-in regions)");
+    ExitCode::SUCCESS
+}
+
+fn cmd_artifacts(args: &[String]) -> ExitCode {
+    let dir = flag_value(args, "--dir")
+        .map(|s| s.to_string())
+        .unwrap_or_else(fedgraph::config::default_artifacts_dir);
+    match fedgraph::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("{} artifacts in {}/ (hidden={})", m.artifacts.len(), dir, m.hidden);
+            for a in m.artifacts.values() {
+                println!("  {:<36} kind={:<14} dims={:?}", a.name, a.kind, a.dims);
+            }
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("{e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! The FedGraph Monitoring System (paper §3.1).
+//!
+//! A `Monitor` instance accompanies every experiment run and records:
+//! - wall-clock **time per phase** (pre-train communication, local training,
+//!   aggregation, evaluation) via resumable stopwatches plus externally
+//!   measured chunks reported by trainer threads;
+//! - **communication cost** by phase and direction (delegated to
+//!   [`crate::transport::SimNet`], which it holds);
+//! - per-round **training curves** (loss, accuracy, time) — Fig 11 left;
+//! - periodic **CPU / memory samples** — Fig 11 right;
+//! and renders the paper-style report tables plus a machine-readable JSON
+//! document (see [`report`]).
+
+pub mod report;
+pub mod sysinfo;
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::transport::{Phase, SimNet};
+use crate::util::timer::Stopwatch;
+
+use sysinfo::{ResourceProbe, ResourceSample};
+
+/// Per-round record (one point of the Fig 11 accuracy curves).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Measured local-training seconds (max over participating clients —
+    /// the round's critical path, as in the paper's synchronous setting).
+    pub train_secs: f64,
+    /// Measured aggregation seconds at the server.
+    pub agg_secs: f64,
+    pub train_loss: f64,
+    pub test_accuracy: f64,
+}
+
+struct MonitorState {
+    stopwatches: BTreeMap<String, Stopwatch>,
+    /// Externally measured seconds per phase (from trainer threads).
+    extras: HashMap<String, f64>,
+    rounds: Vec<RoundRecord>,
+    samples: Vec<ResourceSample>,
+    peak_rss: u64,
+    notes: Vec<(String, String)>,
+}
+
+/// The monitor class (thread-safe; trainers and the server share it).
+pub struct Monitor {
+    pub net: Arc<SimNet>,
+    state: Mutex<MonitorState>,
+    probe: ResourceProbe,
+}
+
+impl Monitor {
+    pub fn new(net: Arc<SimNet>) -> Monitor {
+        Monitor {
+            net,
+            state: Mutex::new(MonitorState {
+                stopwatches: BTreeMap::new(),
+                extras: HashMap::new(),
+                rounds: Vec::new(),
+                samples: Vec::new(),
+                peak_rss: 0,
+                notes: Vec::new(),
+            }),
+            probe: ResourceProbe::new(),
+        }
+    }
+
+    /// Start the named phase stopwatch ("pretrain", "train", "aggregate",
+    /// "eval", "he_encrypt", ...).
+    pub fn start(&self, phase: &str) {
+        let mut st = self.state.lock().unwrap();
+        st.stopwatches.entry(phase.to_string()).or_default().start();
+    }
+
+    pub fn stop(&self, phase: &str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(sw) = st.stopwatches.get_mut(phase) {
+            sw.stop();
+        }
+    }
+
+    /// Add seconds measured externally (e.g. inside a trainer thread).
+    pub fn add_secs(&self, phase: &str, secs: f64) {
+        let mut st = self.state.lock().unwrap();
+        *st.extras.entry(phase.to_string()).or_insert(0.0) += secs;
+    }
+
+    /// Measured seconds for a phase (stopwatch + external chunks).
+    pub fn phase_secs(&self, phase: &str) -> f64 {
+        let st = self.state.lock().unwrap();
+        let sw = st.stopwatches.get(phase).map(|s| s.secs()).unwrap_or(0.0);
+        sw + st.extras.get(phase).copied().unwrap_or(0.0)
+    }
+
+    /// Record a completed round.
+    pub fn record_round(&self, rec: RoundRecord) {
+        self.state.lock().unwrap().rounds.push(rec);
+    }
+
+    pub fn rounds(&self) -> Vec<RoundRecord> {
+        self.state.lock().unwrap().rounds.clone()
+    }
+
+    /// Take a CPU/memory sample (the paper's Prometheus scrape equivalent).
+    pub fn sample_resources(&self) {
+        let s = self.probe.sample();
+        let mut st = self.state.lock().unwrap();
+        st.peak_rss = st.peak_rss.max(s.rss_bytes);
+        st.samples.push(s);
+    }
+
+    pub fn samples(&self) -> Vec<ResourceSample> {
+        self.state.lock().unwrap().samples.clone()
+    }
+
+    pub fn peak_rss(&self) -> u64 {
+        self.state.lock().unwrap().peak_rss
+    }
+
+    /// Attach a free-form note to the report ("dataset=cora-sim", ...).
+    pub fn note(&self, key: &str, value: impl std::fmt::Display) {
+        let mut st = self.state.lock().unwrap();
+        st.notes.push((key.to_string(), value.to_string()));
+    }
+
+    pub fn notes(&self) -> Vec<(String, String)> {
+        self.state.lock().unwrap().notes.clone()
+    }
+
+    /// Simulated network seconds for a phase.
+    pub fn net_secs(&self, phase: Phase) -> f64 {
+        self.net.counter(phase).sim_secs
+    }
+
+    /// All phase names with any recorded time, sorted.
+    pub fn phase_names(&self) -> Vec<String> {
+        let st = self.state.lock().unwrap();
+        let mut names: Vec<String> = st.stopwatches.keys().cloned().collect();
+        for k in st.extras.keys() {
+            if !names.contains(k) {
+                names.push(k.clone());
+            }
+        }
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{Direction, NetConfig};
+
+    fn monitor() -> Monitor {
+        Monitor::new(Arc::new(SimNet::new(NetConfig::default())))
+    }
+
+    #[test]
+    fn stopwatch_phases() {
+        let m = monitor();
+        m.start("train");
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        m.stop("train");
+        assert!(m.phase_secs("train") > 0.0);
+        assert_eq!(m.phase_secs("eval"), 0.0);
+    }
+
+    #[test]
+    fn external_secs_accumulate() {
+        let m = monitor();
+        m.add_secs("he_encrypt", 0.5);
+        m.add_secs("he_encrypt", 0.25);
+        assert!((m.phase_secs("he_encrypt") - 0.75).abs() < 1e-12);
+        assert!(m.phase_names().contains(&"he_encrypt".to_string()));
+    }
+
+    #[test]
+    fn rounds_and_samples() {
+        let m = monitor();
+        m.record_round(RoundRecord {
+            round: 0,
+            train_secs: 0.1,
+            agg_secs: 0.01,
+            train_loss: 1.9,
+            test_accuracy: 0.3,
+        });
+        m.sample_resources();
+        assert_eq!(m.rounds().len(), 1);
+        assert_eq!(m.samples().len(), 1);
+        assert!(m.peak_rss() > 0);
+    }
+
+    #[test]
+    fn net_integration() {
+        let m = monitor();
+        m.net.send(Phase::PreTrain, Direction::Up, 1_000_000);
+        assert!(m.net_secs(Phase::PreTrain) > 0.0);
+        assert_eq!(m.net.counter(Phase::PreTrain).bytes_up, 1_000_000);
+    }
+}

@@ -1,0 +1,176 @@
+//! Report rendering: paper-style tables + JSON dumps.
+
+use crate::transport::Phase;
+use crate::util::json::{obj, Json};
+use crate::util::tables::{fmt_bytes, fmt_secs, Table};
+
+use super::Monitor;
+
+/// A finished experiment summary extracted from a [`Monitor`].
+pub struct Report {
+    pub notes: Vec<(String, String)>,
+    pub phase_secs: Vec<(String, f64)>,
+    pub pretrain_bytes: u64,
+    pub train_bytes: u64,
+    pub pretrain_net_secs: f64,
+    pub train_net_secs: f64,
+    pub final_accuracy: f64,
+    pub final_loss: f64,
+    pub total_rounds: usize,
+    pub peak_rss: u64,
+    pub rounds: Vec<super::RoundRecord>,
+}
+
+impl Report {
+    pub fn from_monitor(m: &Monitor) -> Report {
+        let pre = m.net.counter(Phase::PreTrain);
+        let tr = m.net.counter(Phase::Train);
+        let rounds = m.rounds();
+        let (final_accuracy, final_loss) = rounds
+            .last()
+            .map(|r| (r.test_accuracy, r.train_loss))
+            .unwrap_or((0.0, 0.0));
+        Report {
+            notes: m.notes(),
+            phase_secs: m.phase_names().iter().map(|p| (p.clone(), m.phase_secs(p))).collect(),
+            pretrain_bytes: pre.bytes_up + pre.bytes_down,
+            train_bytes: tr.bytes_up + tr.bytes_down,
+            pretrain_net_secs: pre.sim_secs,
+            train_net_secs: tr.sim_secs,
+            final_accuracy,
+            final_loss,
+            total_rounds: rounds.len(),
+            peak_rss: m.peak_rss(),
+            rounds,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.pretrain_bytes + self.train_bytes
+    }
+
+    /// Total measured compute seconds (sum over "pretrain"/"train"/
+    /// "aggregate"/"eval" phases only — HE sub-phases are included in these).
+    pub fn compute_secs(&self) -> f64 {
+        self.phase_secs
+            .iter()
+            .filter(|(p, _)| matches!(p.as_str(), "pretrain" | "train" | "aggregate" | "eval"))
+            .map(|(_, s)| s)
+            .sum()
+    }
+
+    /// Render the human-readable report (the library's stdout summary).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.notes.is_empty() {
+            out.push_str("run: ");
+            let parts: Vec<String> =
+                self.notes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            out.push_str(&parts.join(" "));
+            out.push('\n');
+        }
+        let mut t = Table::new(&["phase", "measured s"]).with_title("Time by phase");
+        for (p, s) in &self.phase_secs {
+            t.row(&[p.clone(), fmt_secs(*s)]);
+        }
+        out.push_str(&t.render());
+        let mut c = Table::new(&["phase", "bytes", "simulated net s"])
+            .with_title("Communication cost");
+        c.row(&[
+            "pre-train".into(),
+            fmt_bytes(self.pretrain_bytes),
+            fmt_secs(self.pretrain_net_secs),
+        ]);
+        c.row(&["train".into(), fmt_bytes(self.train_bytes), fmt_secs(self.train_net_secs)]);
+        c.row(&[
+            "total".into(),
+            fmt_bytes(self.total_bytes()),
+            fmt_secs(self.pretrain_net_secs + self.train_net_secs),
+        ]);
+        out.push_str(&c.render());
+        out.push_str(&format!(
+            "rounds={} final_loss={:.4} final_accuracy={:.4} peak_rss={}\n",
+            self.total_rounds,
+            self.final_loss,
+            self.final_accuracy,
+            fmt_bytes(self.peak_rss)
+        ));
+        out
+    }
+
+    /// Machine-readable dump (one JSON document per run; benches aggregate
+    /// these into the paper's figures).
+    pub fn to_json(&self) -> Json {
+        let notes = Json::Obj(
+            self.notes.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+        );
+        let phases = Json::Obj(
+            self.phase_secs.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        let rounds = Json::Arr(
+            self.rounds
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("round", r.round.into()),
+                        ("train_secs", r.train_secs.into()),
+                        ("agg_secs", r.agg_secs.into()),
+                        ("train_loss", r.train_loss.into()),
+                        ("test_accuracy", r.test_accuracy.into()),
+                    ])
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("notes", notes),
+            ("phase_secs", phases),
+            ("pretrain_bytes", (self.pretrain_bytes as usize).into()),
+            ("train_bytes", (self.train_bytes as usize).into()),
+            ("pretrain_net_secs", self.pretrain_net_secs.into()),
+            ("train_net_secs", self.train_net_secs.into()),
+            ("final_accuracy", self.final_accuracy.into()),
+            ("final_loss", self.final_loss.into()),
+            ("peak_rss", (self.peak_rss as usize).into()),
+            ("rounds", rounds),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::RoundRecord;
+    use crate::transport::{Direction, NetConfig, SimNet};
+    use std::sync::Arc;
+
+    #[test]
+    fn report_extraction_and_rendering() {
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        m.note("dataset", "cora-sim");
+        m.add_secs("train", 1.5);
+        m.add_secs("pretrain", 0.5);
+        m.net.send(Phase::PreTrain, Direction::Up, 2_000_000);
+        m.net.send(Phase::Train, Direction::Down, 1_000_000);
+        m.record_round(RoundRecord {
+            round: 0,
+            train_secs: 1.5,
+            agg_secs: 0.1,
+            train_loss: 0.7,
+            test_accuracy: 0.81,
+        });
+        m.sample_resources();
+        let r = Report::from_monitor(&m);
+        assert_eq!(r.pretrain_bytes, 2_000_000);
+        assert_eq!(r.train_bytes, 1_000_000);
+        assert_eq!(r.final_accuracy, 0.81);
+        assert!((r.compute_secs() - 2.0).abs() < 1e-9);
+        let text = r.render();
+        assert!(text.contains("cora-sim"));
+        assert!(text.contains("2.00 MB"));
+        // JSON parses back
+        let j = r.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("final_accuracy").as_f64(), Some(0.81));
+        assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), 1);
+    }
+}

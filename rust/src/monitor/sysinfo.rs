@@ -1,0 +1,107 @@
+//! Process resource sampling (the Grafana/Prometheus stand-in).
+//!
+//! Reads Linux `/proc` for RSS memory and CPU time, giving the monitor the
+//! "CPU / memory usage over time" data of the paper's Fig 11 dashboard.
+
+use std::time::Instant;
+
+/// Current resident set size in bytes (0 if unavailable).
+pub fn rss_bytes() -> u64 {
+    // /proc/self/statm: size resident shared text lib data dt (pages)
+    if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
+        if let Some(resident) = s.split_whitespace().nth(1) {
+            if let Ok(pages) = resident.parse::<u64>() {
+                return pages * page_size();
+            }
+        }
+    }
+    0
+}
+
+fn page_size() -> u64 {
+    // Linux x86-64/aarch64 default; good enough for reporting.
+    4096
+}
+
+/// Cumulative user+system CPU seconds of this process.
+pub fn cpu_seconds() -> f64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/stat") {
+        // Fields 14 and 15 (utime, stime) in clock ticks, after the comm
+        // field which may contain spaces — find the closing paren first.
+        if let Some(close) = s.rfind(')') {
+            let rest: Vec<&str> = s[close + 1..].split_whitespace().collect();
+            if rest.len() > 13 {
+                let utime: f64 = rest[11].parse().unwrap_or(0.0);
+                let stime: f64 = rest[12].parse().unwrap_or(0.0);
+                let hz = 100.0; // USER_HZ on all mainstream Linux configs
+                return (utime + stime) / hz;
+            }
+        }
+    }
+    0.0
+}
+
+/// A resource sample tagged with elapsed wall-clock time.
+#[derive(Clone, Debug)]
+pub struct ResourceSample {
+    pub elapsed_secs: f64,
+    pub rss_bytes: u64,
+    pub cpu_seconds: f64,
+}
+
+/// Samples resources relative to a start instant.
+pub struct ResourceProbe {
+    start: Instant,
+    cpu0: f64,
+}
+
+impl ResourceProbe {
+    pub fn new() -> ResourceProbe {
+        ResourceProbe { start: Instant::now(), cpu0: cpu_seconds() }
+    }
+
+    pub fn sample(&self) -> ResourceSample {
+        ResourceSample {
+            elapsed_secs: self.start.elapsed().as_secs_f64(),
+            rss_bytes: rss_bytes(),
+            cpu_seconds: cpu_seconds() - self.cpu0,
+        }
+    }
+}
+
+impl Default for ResourceProbe {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(rss_bytes() > 1_000_000, "rss should be at least 1 MB");
+    }
+
+    #[test]
+    fn cpu_seconds_monotone() {
+        let a = cpu_seconds();
+        // burn a little CPU
+        let mut x = 0u64;
+        for i in 0..3_000_000u64 {
+            x = x.wrapping_add(i * i);
+        }
+        std::hint::black_box(x);
+        let b = cpu_seconds();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn probe_samples() {
+        let p = ResourceProbe::new();
+        let s = p.sample();
+        assert!(s.elapsed_secs >= 0.0);
+        assert!(s.rss_bytes > 0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `artifacts/manifest.json` (own JSON parser — no
+//! serde offline) and answers bucket-selection queries ("smallest NC train
+//! artifact with d=1433, c=7 that fits 700 nodes").
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::DType;
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file path (absolute).
+    pub path: String,
+    pub kind: String,
+    pub dims: BTreeMap<String, usize>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn dim(&self, key: &str) -> usize {
+        *self.dims.get(key).unwrap_or(&0)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: String,
+    pub hidden: usize,
+    pub edge_factor: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("io spec must be an array"))?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.get("name").as_str().unwrap_or("?").to_string(),
+                shape: e
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                dtype: DType::parse(e.get("dtype").as_str().unwrap_or("f32"))
+                    .ok_or_else(|| anyhow!("bad dtype"))?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = std::path::Path::new(dir).join("manifest.json");
+        let src = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first (python AOT export)",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest.json missing 'artifacts'"))?;
+        for (name, a) in arts {
+            let file = a.get("file").as_str().ok_or_else(|| anyhow!("missing file"))?;
+            let dims = a
+                .get("dims")
+                .as_obj()
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    path: std::path::Path::new(dir).join(file).to_string_lossy().into_owned(),
+                    kind: a.get("kind").as_str().unwrap_or("?").to_string(),
+                    dims,
+                    inputs: parse_io(a.get("inputs"))?,
+                    outputs: parse_io(a.get("outputs"))?,
+                },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("manifest.json contains no artifacts");
+        }
+        Ok(Manifest {
+            dir: dir.to_string(),
+            hidden: j.get("hidden").as_usize().unwrap_or(64),
+            edge_factor: j.get("edge_factor").as_usize().unwrap_or(16),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (re-run `make artifacts`?)"))
+    }
+
+    /// Smallest bucket of `kind` matching the fixed dims (`d`, `c`, ...) with
+    /// node capacity >= `need_nodes`.
+    pub fn pick(
+        &self,
+        kind: &str,
+        fixed: &[(&str, usize)],
+        need_nodes: usize,
+    ) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == kind)
+            .filter(|a| fixed.iter().all(|(k, v)| a.dim(k) == *v))
+            .filter(|a| a.dim("n") >= need_nodes)
+            .min_by_key(|a| a.dim("n"))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no '{kind}' artifact with {fixed:?} fits {need_nodes} nodes; \
+                     available buckets: {:?}",
+                    self.artifacts
+                        .values()
+                        .filter(|a| a.kind == kind && fixed.iter().all(|(k, v)| a.dim(k) == *v))
+                        .map(|a| a.dim("n"))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Largest node bucket for a (kind, dims) family — used to cap minibatch
+    /// sizes.
+    pub fn max_bucket(&self, kind: &str, fixed: &[(&str, usize)]) -> Option<usize> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == kind && fixed.iter().all(|(k, v)| a.dim(k) == *v))
+            .map(|a| a.dim("n"))
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "fingerprint": "x", "hidden": 64, "edge_factor": 16,
+      "artifacts": {
+        "nc_train_d8_c3_n256": {
+          "file": "nc_train_d8_c3_n256.hlo.txt", "kind": "nc_train",
+          "dims": {"n": 256, "e": 4096, "d": 8, "c": 3, "h": 64},
+          "inputs": [{"name": "w1", "shape": [8, 64], "dtype": "f32"},
+                     {"name": "src", "shape": [4096], "dtype": "i32"}],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}]
+        },
+        "nc_train_d8_c3_n1024": {
+          "file": "nc_train_d8_c3_n1024.hlo.txt", "kind": "nc_train",
+          "dims": {"n": 1024, "e": 16384, "d": 8, "c": 3, "h": 64},
+          "inputs": [], "outputs": []
+        }
+      }
+    }"#;
+
+    fn manifest_from(src: &str, dir: &str) -> Manifest {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(format!("{dir}/manifest.json"), src).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    #[test]
+    fn loads_and_picks_buckets() {
+        let dir = "/tmp/fedgraph-test-manifest";
+        let m = manifest_from(SAMPLE, dir);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("nc_train_d8_c3_n256").unwrap();
+        assert_eq!(a.dim("d"), 8);
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        // pick smallest fitting bucket
+        let p = m.pick("nc_train", &[("d", 8), ("c", 3)], 200).unwrap();
+        assert_eq!(p.dim("n"), 256);
+        let p = m.pick("nc_train", &[("d", 8), ("c", 3)], 300).unwrap();
+        assert_eq!(p.dim("n"), 1024);
+        assert!(m.pick("nc_train", &[("d", 8), ("c", 3)], 5000).is_err());
+        assert!(m.pick("nc_train", &[("d", 9), ("c", 3)], 10).is_err());
+        assert_eq!(m.max_bucket("nc_train", &[("d", 8), ("c", 3)]), Some(1024));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration-lite: when `make artifacts` has run, the real manifest
+        // must parse and contain the canonical cora bucket family.
+        for dir in ["artifacts", "../artifacts"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                let m = Manifest::load(dir).unwrap();
+                assert!(m.pick("nc_train", &[("d", 1433), ("c", 7)], 256).is_ok());
+                assert!(m.pick("gc_train", &[("d", 32)], 512).is_ok());
+                assert!(m.pick("lp_train", &[("d", 64)], 1000).is_ok());
+                return;
+            }
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! AOT runtime: loads `artifacts/*.hlo.txt` (lowered by
+//! `python/compile/aot.py`) and executes them on the PJRT CPU client from a
+//! dedicated engine thread. Python never runs on this path.
+
+pub mod engine;
+pub mod manifest;
+pub mod params;
+pub mod tensor;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+pub use params::ParamSet;
+pub use tensor::{DType, Tensor, TensorData};

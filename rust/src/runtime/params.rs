@@ -1,0 +1,239 @@
+//! Model parameter sets: initialization, flattening (for the wire / HE /
+//! DP paths) and aggregation arithmetic.
+
+use crate::util::rng::Rng;
+
+use super::tensor::Tensor;
+
+/// A model's parameters as named f32 tensors in artifact input order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Glorot-uniform init for a stack of (name, shape) where matrices get
+    /// fan-based scaling and vectors (biases) start at zero.
+    pub fn glorot(specs: &[(&str, Vec<usize>)], rng: &mut Rng) -> ParamSet {
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut values = Vec::new();
+        for (name, shape) in specs {
+            let len: usize = shape.iter().product();
+            let v = if shape.len() >= 2 {
+                let fan_in = shape[0] as f64;
+                let fan_out = shape[1] as f64;
+                let limit = (6.0 / (fan_in + fan_out)).sqrt();
+                (0..len).map(|_| ((rng.f64() * 2.0 - 1.0) * limit) as f32).collect()
+            } else {
+                vec![0f32; len]
+            };
+            names.push(name.to_string());
+            shapes.push(shape.clone());
+            values.push(v);
+        }
+        ParamSet { names, shapes, values }
+    }
+
+    /// The standard parameter stacks per task.
+    pub fn nc(d: usize, h: usize, c: usize, rng: &mut Rng) -> ParamSet {
+        ParamSet::glorot(
+            &[
+                ("w1", vec![d, h]),
+                ("b1", vec![h]),
+                ("w2", vec![h, c]),
+                ("b2", vec![c]),
+            ],
+            rng,
+        )
+    }
+
+    pub fn gc(d: usize, h: usize, c: usize, rng: &mut Rng) -> ParamSet {
+        ParamSet::glorot(
+            &[
+                ("w1", vec![d, h]),
+                ("b1", vec![h]),
+                ("w2", vec![h, h]),
+                ("b2", vec![h]),
+                ("w3", vec![h, c]),
+                ("b3", vec![c]),
+            ],
+            rng,
+        )
+    }
+
+    pub fn lp(d: usize, h: usize, z: usize, rng: &mut Rng) -> ParamSet {
+        ParamSet::glorot(
+            &[
+                ("w1", vec![d, h]),
+                ("b1", vec![h]),
+                ("w2", vec![h, z]),
+                ("b2", vec![z]),
+            ],
+            rng,
+        )
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.values.iter().map(|v| v.len()).sum()
+    }
+
+    /// Wire size if serialized (raw f32s).
+    pub fn byte_len(&self) -> u64 {
+        (self.num_values() * 4) as u64
+    }
+
+    /// Flatten all tensors into one vector (HE packing, DP clipping).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.num_values());
+        for v in &self.values {
+            out.extend_from_slice(v);
+        }
+        out
+    }
+
+    /// Inverse of `flatten` (panics on length mismatch).
+    pub fn unflatten_from(&self, flat: &[f32]) -> ParamSet {
+        assert_eq!(flat.len(), self.num_values(), "flat length mismatch");
+        let mut values = Vec::with_capacity(self.values.len());
+        let mut off = 0;
+        for v in &self.values {
+            values.push(flat[off..off + v.len()].to_vec());
+            off += v.len();
+        }
+        ParamSet { names: self.names.clone(), shapes: self.shapes.clone(), values }
+    }
+
+    /// Convert to engine input tensors (artifact order).
+    pub fn to_tensors(&self) -> Vec<Tensor> {
+        self.shapes
+            .iter()
+            .zip(&self.values)
+            .map(|(s, v)| Tensor::f32(s, v.clone()))
+            .collect()
+    }
+
+    /// Replace values from engine outputs (first `values.len()` tensors).
+    pub fn update_from_tensors(&mut self, outs: &[Tensor]) {
+        for (i, t) in outs.iter().take(self.values.len()).enumerate() {
+            debug_assert_eq!(self.shapes[i], t.shape);
+            self.values[i].copy_from_slice(t.as_f32());
+        }
+    }
+
+    /// self += other (element-wise).
+    pub fn add_assign(&mut self, other: &ParamSet) {
+        for (a, b) in self.values.iter_mut().zip(&other.values) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// self *= s.
+    pub fn scale(&mut self, s: f32) {
+        for v in self.values.iter_mut() {
+            for x in v.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+
+    /// Weighted average of parameter sets (FedAvg aggregation).
+    pub fn weighted_average(sets: &[(f32, &ParamSet)]) -> ParamSet {
+        assert!(!sets.is_empty());
+        let total: f32 = sets.iter().map(|(w, _)| w).sum();
+        let mut out = sets[0].1.clone();
+        out.scale(sets[0].0 / total);
+        for (w, p) in &sets[1..] {
+            for (acc, v) in out.values.iter_mut().zip(&p.values) {
+                let s = w / total;
+                for (x, y) in acc.iter_mut().zip(v) {
+                    *x += s * y;
+                }
+            }
+        }
+        out
+    }
+
+    /// L2 distance to another set (GCFL's gradient-similarity signal).
+    pub fn l2_distance(&self, other: &ParamSet) -> f64 {
+        self.values
+            .iter()
+            .zip(&other.values)
+            .flat_map(|(a, b)| a.iter().zip(b))
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seeded(1)
+    }
+
+    #[test]
+    fn glorot_shapes_and_ranges() {
+        let p = ParamSet::nc(100, 64, 7, &mut rng());
+        assert_eq!(p.values[0].len(), 100 * 64);
+        assert_eq!(p.values[1], vec![0f32; 64]);
+        let limit = (6.0f64 / (100.0 + 64.0)).sqrt() as f32;
+        assert!(p.values[0].iter().all(|v| v.abs() <= limit));
+        assert_eq!(p.num_values(), 100 * 64 + 64 + 64 * 7 + 7);
+        assert_eq!(p.byte_len(), p.num_values() as u64 * 4);
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = ParamSet::gc(16, 8, 4, &mut rng());
+        let flat = p.flatten();
+        let q = p.unflatten_from(&flat);
+        assert_eq!(p.values, q.values);
+    }
+
+    #[test]
+    fn weighted_average_exact() {
+        let mut a = ParamSet::lp(4, 4, 2, &mut rng());
+        let mut b = a.clone();
+        for v in a.values.iter_mut().flatten() {
+            *v = 1.0;
+        }
+        for v in b.values.iter_mut().flatten() {
+            *v = 3.0;
+        }
+        let avg = ParamSet::weighted_average(&[(1.0, &a), (1.0, &b)]);
+        assert!(avg.flatten().iter().all(|&v| (v - 2.0).abs() < 1e-6));
+        // weights matter
+        let avg = ParamSet::weighted_average(&[(3.0, &a), (1.0, &b)]);
+        assert!(avg.flatten().iter().all(|&v| (v - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn add_scale_distance() {
+        let mut a = ParamSet::nc(4, 4, 2, &mut rng());
+        let b = a.clone();
+        assert_eq!(a.l2_distance(&b), 0.0);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert!(a.l2_distance(&b) < 1e-6);
+    }
+
+    #[test]
+    fn tensors_roundtrip() {
+        let mut p = ParamSet::nc(8, 4, 3, &mut rng());
+        let ts = p.to_tensors();
+        assert_eq!(ts.len(), 4);
+        assert_eq!(ts[0].shape, vec![8, 4]);
+        let mut q = p.clone();
+        q.scale(2.0);
+        p.update_from_tensors(&q.to_tensors());
+        assert_eq!(p.values, q.values);
+    }
+}

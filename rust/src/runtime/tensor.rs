@@ -1,0 +1,131 @@
+//! Host-side tensors that cross the engine-thread boundary.
+//!
+//! PJRT wrapper types (`Literal`, `PjRtBuffer`) hold raw pointers and are not
+//! `Send`, so trainer threads exchange plain `Tensor`s with the engine thread
+//! which converts at the boundary.
+
+/// Supported element types (all the artifacts use f32 + i32).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + data. Rank-0 (scalar) has an empty shape.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "f32 tensor shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "i32 tensor shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match &self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    /// Scalar extraction (rank-0 or single-element).
+    pub fn scalar(&self) -> f32 {
+        match &self.data {
+            TensorData::F32(v) => v[0],
+            TensorData::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// Wire size in bytes if serialized raw.
+    pub fn byte_len(&self) -> u64 {
+        (self.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.byte_len(), 24);
+        let s = Tensor::scalar_f32(2.5);
+        assert_eq!(s.scalar(), 2.5);
+        assert_eq!(s.len(), 1); // empty shape product = 1
+        let i = Tensor::i32(&[2], vec![1, 2]);
+        assert_eq!(i.as_i32(), &[1, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32"), Some(DType::F32));
+        assert_eq!(DType::parse("i32"), Some(DType::I32));
+        assert_eq!(DType::parse("f64"), None);
+    }
+}

@@ -1,0 +1,111 @@
+//! Proptest-lite: seeded property-based testing.
+//!
+//! proptest is not available offline. This module provides the slice of it
+//! the project needs: run a property over many seeded-random inputs, report
+//! the failing seed so the case can be replayed deterministically. No
+//! shrinking — failing seeds are small enough to debug directly because all
+//! generators take explicit size bounds.
+
+use crate::util::rng::Rng;
+
+/// Run `property` over `cases` seeded RNGs. Panics with the failing seed on
+/// the first violation. `FEDGRAPH_PROP_CASES` overrides the case count,
+/// `FEDGRAPH_PROP_SEED` pins the base seed (replay).
+pub fn prop_check(name: &str, cases: usize, mut property: impl FnMut(&mut Rng)) {
+    let cases = std::env::var("FEDGRAPH_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(cases);
+    let base: u64 = std::env::var("FEDGRAPH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFED6_0BA5_E);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng);
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (replay with FEDGRAPH_PROP_SEED={base} FEDGRAPH_PROP_CASES={n}): {msg}",
+                n = case + 1
+            );
+        }
+    }
+}
+
+/// Common generators used by the property suites.
+pub mod gen {
+    use crate::graph::Csr;
+    use crate::util::rng::Rng;
+
+    /// Random undirected graph with `n ∈ [lo, hi)` nodes, edge density `p`.
+    pub fn graph(rng: &mut Rng, lo: usize, hi: usize, p: f64) -> Csr {
+        let n = rng.range(lo, hi);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in (u + 1)..n as u32 {
+                if rng.chance(p) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Csr::from_edges(n, &edges)
+    }
+
+    /// Random f32 vector with entries in [-bound, bound].
+    pub fn f32_vec(rng: &mut Rng, len: usize, bound: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.f32() * 2.0 - 1.0) * bound).collect()
+    }
+
+    /// Random labels over `k` classes.
+    pub fn labels(rng: &mut Rng, n: usize, k: usize) -> Vec<u16> {
+        (0..n).map(|_| rng.below(k) as u16).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        prop_check("counts", 17, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let err = std::panic::catch_unwind(|| {
+            prop_check("always-fails", 3, |_| panic!("boom"));
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("FEDGRAPH_PROP_SEED"));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = crate::util::rng::Rng::seeded(5);
+        for _ in 0..20 {
+            let g = gen::graph(&mut rng, 2, 30, 0.2);
+            assert!((2..30).contains(&g.n));
+            g.validate().unwrap();
+            let v = gen::f32_vec(&mut rng, 64, 2.0);
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+            let l = gen::labels(&mut rng, 10, 4);
+            assert!(l.iter().all(|&c| c < 4));
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Simulated federation network.
+//!
+//! The paper deploys trainers on AWS EKS pods and measures bytes + transfer
+//! time between them. Here the trainers are in-process (threads), and this
+//! module is the substitute network: every logical transfer passes through
+//! [`SimNet::send`], which (a) counts the real serialized bytes by phase and
+//! direction, and (b) converts bytes to *simulated* wall-clock seconds with a
+//! bandwidth + latency link model. Measured (CPU) time and simulated
+//! (network) time are reported separately by the monitor so both the
+//! "training time" and "communication cost" axes of Figs 5–10 can be
+//! regenerated.
+
+pub mod serialize;
+
+use std::sync::Mutex;
+
+/// Which phase of the pipeline a transfer belongs to (the paper splits
+/// communication into pre-train and train; Figs 5/7/9 stack these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    PreTrain,
+    Train,
+    Eval,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::PreTrain => "pretrain",
+            Phase::Train => "train",
+            Phase::Eval => "eval",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Direction {
+    /// Client → server.
+    Up,
+    /// Server → client(s).
+    Down,
+}
+
+/// Link model.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    pub bandwidth_gbps: f64,
+    pub latency_ms: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        // Same-region cloud instances (the paper's EKS testbed).
+        NetConfig { bandwidth_gbps: 1.0, latency_ms: 1.0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PhaseCounter {
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub messages: u64,
+    pub sim_secs: f64,
+}
+
+#[derive(Default)]
+struct NetState {
+    pretrain: PhaseCounter,
+    train: PhaseCounter,
+    eval: PhaseCounter,
+}
+
+impl NetState {
+    fn phase_mut(&mut self, p: Phase) -> &mut PhaseCounter {
+        match p {
+            Phase::PreTrain => &mut self.pretrain,
+            Phase::Train => &mut self.train,
+            Phase::Eval => &mut self.eval,
+        }
+    }
+}
+
+/// Byte accounting + link model. Shared by reference across the server and
+/// all trainer threads.
+pub struct SimNet {
+    pub cfg: NetConfig,
+    state: Mutex<NetState>,
+}
+
+impl SimNet {
+    pub fn new(cfg: NetConfig) -> SimNet {
+        SimNet { cfg, state: Mutex::new(NetState::default()) }
+    }
+
+    /// Seconds a transfer of `bytes` takes on one link.
+    pub fn transfer_secs(&self, bytes: u64) -> f64 {
+        self.cfg.latency_ms / 1e3 + bytes as f64 * 8.0 / (self.cfg.bandwidth_gbps * 1e9)
+    }
+
+    /// Record a transfer; returns its simulated duration. The payload itself
+    /// moves through ordinary memory (we are in-process) — this call is the
+    /// network's *ledger*.
+    pub fn send(&self, phase: Phase, dir: Direction, bytes: u64) -> f64 {
+        let secs = self.transfer_secs(bytes);
+        let mut st = self.state.lock().unwrap();
+        let c = st.phase_mut(phase);
+        match dir {
+            Direction::Up => c.bytes_up += bytes,
+            Direction::Down => c.bytes_down += bytes,
+        }
+        c.messages += 1;
+        c.sim_secs += secs;
+        secs
+    }
+
+    /// Broadcast accounting helper: the server sends the same `bytes` to
+    /// `m` clients (m separate link transfers).
+    pub fn broadcast(&self, phase: Phase, bytes: u64, m: usize) -> f64 {
+        let mut total = 0.0;
+        for _ in 0..m {
+            total += self.send(phase, Direction::Down, bytes);
+        }
+        total
+    }
+
+    pub fn counter(&self, phase: Phase) -> PhaseCounter {
+        let mut st = self.state.lock().unwrap();
+        st.phase_mut(phase).clone()
+    }
+
+    /// Total bytes in both directions across all phases.
+    pub fn total_bytes(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        [&st.pretrain, &st.train, &st.eval]
+            .iter()
+            .map(|c| c.bytes_up + c.bytes_down)
+            .sum()
+    }
+
+    pub fn total_sim_secs(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.pretrain.sim_secs + st.train.sim_secs + st.eval.sim_secs
+    }
+
+    pub fn reset(&self) {
+        *self.state.lock().unwrap() = NetState::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model() {
+        let net = SimNet::new(NetConfig { bandwidth_gbps: 1.0, latency_ms: 1.0 });
+        // 1 Gbps: 125 MB/s; 125 MB -> 1 s + 1 ms latency
+        let secs = net.transfer_secs(125_000_000);
+        assert!((secs - 1.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accounting_by_phase_and_direction() {
+        let net = SimNet::new(NetConfig::default());
+        net.send(Phase::PreTrain, Direction::Up, 1000);
+        net.send(Phase::PreTrain, Direction::Up, 500);
+        net.send(Phase::Train, Direction::Down, 200);
+        let pre = net.counter(Phase::PreTrain);
+        assert_eq!(pre.bytes_up, 1500);
+        assert_eq!(pre.bytes_down, 0);
+        assert_eq!(pre.messages, 2);
+        let tr = net.counter(Phase::Train);
+        assert_eq!(tr.bytes_down, 200);
+        assert_eq!(net.total_bytes(), 1700);
+        assert!(net.total_sim_secs() > 0.0);
+    }
+
+    #[test]
+    fn broadcast_counts_per_client() {
+        let net = SimNet::new(NetConfig::default());
+        net.broadcast(Phase::Train, 100, 10);
+        let c = net.counter(Phase::Train);
+        assert_eq!(c.bytes_down, 1000);
+        assert_eq!(c.messages, 10);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let net = SimNet::new(NetConfig::default());
+        net.send(Phase::Eval, Direction::Up, 42);
+        net.reset();
+        assert_eq!(net.total_bytes(), 0);
+    }
+}

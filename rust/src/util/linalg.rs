@@ -1,0 +1,194 @@
+//! Small dense linear algebra on row-major f32 buffers.
+//!
+//! The heavy training math runs in XLA via the AOT artifacts; this module
+//! covers the *coordination-path* math that must happen inside the Rust
+//! process: low-rank projections during the pre-train exchange, ridge
+//! regression for the FedSage+ neighbor generator, and test oracles. The
+//! matmul is cache-blocked so the projection of a full feature matrix stays
+//! off the profile (§Perf L3).
+
+/// C[m,n] = A[m,k] · B[k,n], row-major, blocked over k and n.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0f32; m * n];
+    matmul_into(a, b, &mut c, m, k, n);
+    c
+}
+
+/// In-place variant: accumulates into `c` (callers zero it first).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(c.len(), m * n, "C shape");
+    const BK: usize = 64;
+    const BN: usize = 256;
+    for kb in (0..k).step_by(BK) {
+        let kend = (kb + BK).min(k);
+        for nb in (0..n).step_by(BN) {
+            let nend = (nb + BN).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + nb..i * n + nend];
+                for p in kb..kend {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + nb..p * n + nend];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// y = A^T · A for A[m,k] (returns k×k). Used by ridge regression.
+pub fn gram(a: &[f32], m: usize, k: usize) -> Vec<f32> {
+    let mut g = vec![0f32; k * k];
+    for i in 0..m {
+        let row = &a[i * k..(i + 1) * k];
+        for p in 0..k {
+            let v = row[p];
+            if v == 0.0 {
+                continue;
+            }
+            let grow = &mut g[p * k..(p + 1) * k];
+            for q in 0..k {
+                grow[q] += v * row[q];
+            }
+        }
+    }
+    g
+}
+
+/// Solve (G + λI) X = B for X, where G is k×k SPD and B is k×n, via
+/// Cholesky. Used for the FedSage+ NeighGen-lite ridge fit.
+pub fn ridge_solve(g: &[f32], b: &[f32], k: usize, n: usize, lambda: f32) -> Vec<f32> {
+    assert_eq!(g.len(), k * k);
+    assert_eq!(b.len(), k * n);
+    // Cholesky factorize A = L L^T with A = G + λI (f64 accumulation).
+    let mut l = vec![0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = g[i * k + j] as f64;
+            if i == j {
+                s += lambda as f64;
+            }
+            for p in 0..j {
+                s -= l[i * k + p] * l[j * k + p];
+            }
+            if i == j {
+                l[i * k + i] = s.max(1e-12).sqrt();
+            } else {
+                l[i * k + j] = s / l[j * k + j];
+            }
+        }
+    }
+    // Solve L y = b, then L^T x = y, per column.
+    let mut x = vec![0f32; k * n];
+    let mut y = vec![0f64; k];
+    for col in 0..n {
+        for i in 0..k {
+            let mut s = b[i * n + col] as f64;
+            for p in 0..i {
+                s -= l[i * k + p] * y[p];
+            }
+            y[i] = s / l[i * k + i];
+        }
+        for i in (0..k).rev() {
+            let mut s = y[i];
+            for p in (i + 1)..k {
+                s -= l[p * k + i] * x[p * n + col] as f64;
+            }
+            x[i * n + col] = (s / l[i * k + i]) as f32;
+        }
+    }
+    x
+}
+
+/// Frobenius norm of the difference between two equal-length buffers.
+pub fn frob_diff(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| ((x - y) as f64).powi(2)).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let i = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &i, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [1 2; 3 4] * [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_rect_matches_naive() {
+        let (m, k, n) = (13, 67, 29);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 7919) % 13) as f32 - 6.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 104729) % 11) as f32 - 5.0).collect();
+        let c = matmul(&a, &b, m, k, n);
+        // naive
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                assert!((c[i * n + j] - s).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_is_ata() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]; // 3x2
+        let g = gram(&a, 3, 2);
+        // A^T A = [[35, 44],[44, 56]]
+        assert_eq!(g, vec![35.0, 44.0, 44.0, 56.0]);
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        // X w = y with known w; ridge with tiny lambda recovers w.
+        let m = 50;
+        let k = 4;
+        let mut a = vec![0f32; m * k];
+        let mut state = 1u64;
+        for v in a.iter_mut() {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            *v = ((state >> 33) % 1000) as f32 / 500.0 - 1.0;
+        }
+        let w_true = vec![0.5f32, -1.0, 2.0, 0.25]; // k x 1
+        let y = matmul(&a, &w_true, m, k, 1);
+        let g = gram(&a, m, k);
+        // B = A^T y
+        let mut aty = vec![0f32; k];
+        for i in 0..m {
+            for p in 0..k {
+                aty[p] += a[i * k + p] * y[i];
+            }
+        }
+        let w = ridge_solve(&g, &aty, k, 1, 1e-6);
+        for (est, tru) in w.iter().zip(&w_true) {
+            assert!((est - tru).abs() < 1e-2, "{est} vs {tru}");
+        }
+    }
+
+    #[test]
+    fn frob_diff_zero_for_equal() {
+        let a = vec![1.0f32, 2.0];
+        assert_eq!(frob_diff(&a, &a), 0.0);
+        assert!((frob_diff(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,11 @@
+//! Foundational substrates built from scratch (the offline crate registry has
+//! no rand / serde / serde_yaml): RNG + distributions, JSON, a YAML subset,
+//! statistics, tables, and timers.
+
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod yaml;
+pub mod stats;
+pub mod tables;
+pub mod timer;

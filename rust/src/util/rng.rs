@@ -1,0 +1,372 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline crate registry has no `rand`, so this module is the project's
+//! randomness substrate: a SplitMix64 seeder feeding Xoshiro256**, plus the
+//! distributions the library needs (uniform, normal, Dirichlet, Zipf,
+//! categorical, permutations). Everything is seeded and reproducible; all
+//! dataset generators, partitioners, HE noise, and DP noise flow through
+//! this type.
+
+/// SplitMix64 — used to expand a single `u64` seed into the Xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256** PRNG. Fast, high-quality, and tiny — the project's only RNG.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from the Box-Muller pair.
+    cached_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive an independent child generator (for per-client / per-dataset
+    /// streams that must not correlate with the parent).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::seeded(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)`. Panics if `n == 0`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "Rng::below(0)");
+        // Lemire's multiply-shift rejection-free-enough method.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (pair-cached).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        // Avoid log(0).
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean/std.
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang (shape >= 0 supported through boost).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        assert!(shape > 0.0, "gamma shape must be > 0");
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.f64().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Symmetric Dirichlet(alpha) over `k` categories; returns a probability
+    /// vector. This is the paper's label-skew partitioner knob (β).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = v.iter().sum();
+        if sum <= 0.0 {
+            // Degenerate draw; fall back to uniform.
+            return vec![1.0 / k as f64; k];
+        }
+        for x in v.iter_mut() {
+            *x /= sum;
+        }
+        v
+    }
+
+    /// Sample from a categorical distribution given (unnormalized) weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `s` (power-law
+    /// client sizes: country-population style skew for papers100m-sim).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // Inverse-CDF on the harmonic weights would be O(n); use rejection
+        // sampling (Devroye) which is O(1) amortized.
+        debug_assert!(n >= 1);
+        let b = 2f64.powf(s - 1.0);
+        loop {
+            let u = self.f64();
+            let v = self.f64();
+            let x = (u.powf(-1.0 / (s - 1.0))).floor();
+            let t = (1.0 + 1.0 / x).powf(s - 1.0);
+            if v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                let k = x as usize;
+                if k >= 1 && k <= n {
+                    return k - 1;
+                }
+            }
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random permutation of `0..n`.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample `k` distinct indices from `0..n` (Floyd's algorithm for small k,
+    /// shuffle for large k).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_distinct: k > n");
+        if k * 4 > n {
+            let mut p = self.permutation(n);
+            p.truncate(k);
+            return p;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if seen.insert(t) {
+                out.push(t);
+            } else {
+                seen.insert(j);
+                out.push(j);
+            }
+        }
+        out
+    }
+
+    /// Fill a slice with iid N(0, std) f32 values (weight init, features).
+    pub fn fill_normal_f32(&mut self, dst: &mut [f32], mean: f32, std: f32) {
+        for v in dst.iter_mut() {
+            *v = self.normal_ms(mean as f64, std as f64) as f32;
+        }
+    }
+}
+
+/// Stateless hash-based randomness for *lazy* datasets (papers100m-sim):
+/// node attributes are a pure function of (seed, node id, slot) so a 100M-node
+/// graph needs no storage. SplitMix64 finalizer as the mixer.
+#[inline]
+pub fn hash_u64(seed: u64, a: u64, b: u64) -> u64 {
+    let mut z = seed ^ a.wrapping_mul(0x9E3779B97F4A7C15) ^ b.wrapping_mul(0xC2B2AE3D27D4EB4F);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Uniform f32 in [0,1) from a hash.
+#[inline]
+pub fn hash_f32(seed: u64, a: u64, b: u64) -> f32 {
+    (hash_u64(seed, a, b) >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seeded(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::seeded(3);
+        for n in [1usize, 2, 7, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(11);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seeded(5);
+        for &alpha in &[0.1, 1.0, 100.0, 10000.0] {
+            let p = r.dirichlet(alpha, 7);
+            let s: f64 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_high_alpha_is_uniform() {
+        let mut r = Rng::seeded(6);
+        let p = r.dirichlet(10_000.0, 10);
+        for &x in &p {
+            assert!((x - 0.1).abs() < 0.02, "non-uniform {x}");
+        }
+    }
+
+    #[test]
+    fn zipf_skew() {
+        let mut r = Rng::seeded(8);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..20_000 {
+            counts[r.zipf(50, 1.5)] += 1;
+        }
+        assert!(counts[0] > counts[10], "zipf must be head-heavy");
+        assert!(counts[0] > counts[49] * 3);
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Rng::seeded(9);
+        let p = r.permutation(100);
+        let mut sorted = p.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_is_distinct() {
+        let mut r = Rng::seeded(10);
+        for (n, k) in [(100, 5), (100, 90), (10, 10)] {
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn hash_is_stateless_and_stable() {
+        assert_eq!(hash_u64(1, 2, 3), hash_u64(1, 2, 3));
+        assert_ne!(hash_u64(1, 2, 3), hash_u64(1, 2, 4));
+        let x = hash_f32(42, 7, 0);
+        assert!((0.0..1.0).contains(&x));
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::seeded(12);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!(counts[2] > counts[1] && counts[1] > counts[0]);
+    }
+}

@@ -1,0 +1,175 @@
+//! ASCII / markdown table rendering for the monitor reports and the bench
+//! harness (the paper prints tables; so do we).
+
+/// A simple column-aligned table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: vec![], title: None }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render with box-drawing separators (for terminal output).
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("== {} ==\n", t));
+        }
+        let sep = |out: &mut String| {
+            out.push('+');
+            for wi in &w {
+                out.push_str(&"-".repeat(wi + 2));
+                out.push('+');
+            }
+            out.push('\n');
+        };
+        sep(&mut out);
+        out.push('|');
+        for (h, wi) in self.header.iter().zip(&w) {
+            out.push_str(&format!(" {:<width$} |", h, width = wi));
+        }
+        out.push('\n');
+        sep(&mut out);
+        for r in &self.rows {
+            out.push('|');
+            for (c, wi) in r.iter().zip(&w) {
+                out.push_str(&format!(" {:<width$} |", c, width = wi));
+            }
+            out.push('\n');
+        }
+        sep(&mut out);
+        out
+    }
+
+    /// Render as GitHub-flavored markdown (for EXPERIMENTS.md extracts).
+    pub fn render_markdown(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("**{}**\n\n", t));
+        }
+        out.push('|');
+        for (h, wi) in self.header.iter().zip(&w) {
+            out.push_str(&format!(" {:<width$} |", h, width = wi));
+        }
+        out.push('\n');
+        out.push('|');
+        for wi in &w {
+            out.push_str(&format!("{}|", "-".repeat(wi + 2)));
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push('|');
+            for (c, wi) in r.iter().zip(&w) {
+                out.push_str(&format!(" {:<width$} |", c, width = wi));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Human-readable byte count (MB with two decimals, matching the paper's
+/// tables which report MB).
+pub fn fmt_bytes(bytes: u64) -> String {
+    let b = bytes as f64;
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.2} KB", b / 1e3)
+    } else {
+        format!("{} B", bytes)
+    }
+}
+
+pub fn fmt_mb(bytes: u64) -> String {
+    format!("{:.2}", bytes as f64 / 1e6)
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.1}", s)
+    } else {
+        format!("{:.2}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["dataset", "train", "comm"]).with_title("Table 2");
+        t.row_strs(&["cora-sim", "1.39", "1.69"]);
+        t.row_strs(&["ogbn-arxiv-sim", "127.71", "4.48"]);
+        let s = t.render();
+        assert!(s.contains("Table 2"));
+        assert!(s.contains("| cora-sim "));
+        // all lines between separators have the same length
+        let lens: Vec<usize> = s.lines().skip(1).map(|l| l.len()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        let md = t.render_markdown();
+        assert_eq!(md.lines().count(), 3);
+        assert!(md.lines().nth(1).unwrap().starts_with("|-"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn byte_formats() {
+        assert_eq!(fmt_bytes(500), "500 B");
+        assert_eq!(fmt_bytes(56_610_000), "56.61 MB");
+        assert_eq!(fmt_bytes(1_208_870_000), "1.21 GB");
+        assert_eq!(fmt_mb(56_610_000), "56.61");
+    }
+}

@@ -1,0 +1,82 @@
+//! Wall-clock timing helpers used by the monitor and benchlib.
+
+use std::time::{Duration, Instant};
+
+/// A resumable stopwatch (accumulates across start/stop cycles).
+#[derive(Clone, Debug, Default)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.acc += t.elapsed();
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = Duration::ZERO;
+        self.started = None;
+    }
+
+    /// Total accumulated time (including a currently-running span).
+    pub fn elapsed(&self) -> Duration {
+        self.acc + self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let a = sw.secs();
+        assert!(a >= 0.004);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.secs() > a);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut sw = Stopwatch::new();
+        sw.stop();
+        assert_eq!(sw.secs(), 0.0);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,380 @@
+//! YAML-subset parser for experiment configuration files.
+//!
+//! The paper's library is configured through small YAML files (one per
+//! algorithm / task). We support the subset those files actually use:
+//! indentation-nested mappings, block lists (`- item`), inline lists
+//! (`[a, b]`), scalars (string / int / float / bool / null), quoted strings,
+//! and `#` comments. Anchors, multi-line scalars, and flow mappings are
+//! intentionally out of scope.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Yaml {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    List(Vec<Yaml>),
+    Map(BTreeMap<String, Yaml>),
+}
+
+#[derive(Debug)]
+pub struct YamlError {
+    pub msg: String,
+    pub line: usize,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+impl Yaml {
+    pub fn parse(src: &str) -> Result<Yaml, YamlError> {
+        // Pre-pass: strip comments and blank lines, keep (indent, content, lineno).
+        let mut lines: Vec<(usize, String, usize)> = Vec::new();
+        for (no, raw) in src.lines().enumerate() {
+            let no = no + 1;
+            let without_comment = strip_comment(raw);
+            let trimmed_end = without_comment.trim_end();
+            if trimmed_end.trim().is_empty() {
+                continue;
+            }
+            let indent = trimmed_end.len() - trimmed_end.trim_start().len();
+            if trimmed_end[..indent].contains('\t') {
+                return Err(YamlError { msg: "tabs are not allowed for indentation".into(), line: no });
+            }
+            lines.push((indent, trimmed_end.trim_start().to_string(), no));
+        }
+        let mut pos = 0;
+        let v = parse_block(&lines, &mut pos, 0)?;
+        if pos != lines.len() {
+            return Err(YamlError {
+                msg: "unparsed trailing content (inconsistent indentation?)".into(),
+                line: lines[pos].2,
+            });
+        }
+        Ok(v)
+    }
+
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Yaml>> {
+        if let Yaml::Map(m) = self { Some(m) } else { None }
+    }
+    pub fn as_list(&self) -> Option<&[Yaml]> {
+        if let Yaml::List(v) = self { Some(v) } else { None }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        if let Yaml::Str(s) = self { Some(s) } else { None }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Yaml::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        if let Yaml::Bool(b) = self { Some(*b) } else { None }
+    }
+    pub fn get(&self, key: &str) -> &Yaml {
+        static NULL: Yaml = Yaml::Null;
+        self.as_map().and_then(|m| m.get(key)).unwrap_or(&NULL)
+    }
+}
+
+fn strip_comment(line: &str) -> String {
+    // A '#' starts a comment unless inside quotes.
+    let mut out = String::new();
+    let mut in_s = false;
+    let mut in_d = false;
+    for c in line.chars() {
+        match c {
+            '\'' if !in_d => in_s = !in_s,
+            '"' if !in_s => in_d = !in_d,
+            '#' if !in_s && !in_d => break,
+            _ => {}
+        }
+        out.push(c);
+    }
+    out
+}
+
+fn parse_block(lines: &[(usize, String, usize)], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Yaml::Null);
+    }
+    let (ind, content, _line) = &lines[*pos];
+    if *ind < indent {
+        return Ok(Yaml::Null);
+    }
+    if content.starts_with("- ") || content == "-" {
+        parse_list(lines, pos, *ind)
+    } else {
+        parse_map(lines, pos, *ind)
+    }
+}
+
+fn parse_list(lines: &[(usize, String, usize)], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let (ind, content, line) = &lines[*pos];
+        if *ind < indent || !(content.starts_with("- ") || content == "-") {
+            break;
+        }
+        if *ind > indent {
+            return Err(YamlError { msg: "unexpected indentation in list".into(), line: *line });
+        }
+        let rest = content[1..].trim_start().to_string();
+        *pos += 1;
+        if rest.is_empty() {
+            items.push(parse_block(lines, pos, indent + 1)?);
+        } else if rest.contains(": ") || rest.ends_with(':') {
+            // Inline map head on the dash line: "- key: value".
+            // Re-parse it as a one-line map plus any deeper block.
+            let mut m = BTreeMap::new();
+            let (k, v) = split_kv(&rest, *line)?;
+            if v.is_empty() {
+                m.insert(k, parse_block(lines, pos, indent + 2)?);
+            } else {
+                m.insert(k, scalar(&v));
+            }
+            // Absorb continuation keys indented deeper than the dash.
+            while *pos < lines.len() {
+                let (i2, c2, l2) = &lines[*pos];
+                if *i2 <= indent || c2.starts_with("- ") {
+                    break;
+                }
+                let (k2, v2) = split_kv(c2, *l2)?;
+                *pos += 1;
+                if v2.is_empty() {
+                    m.insert(k2, parse_block(lines, pos, i2 + 1)?);
+                } else {
+                    m.insert(k2, scalar(&v2));
+                }
+            }
+            items.push(Yaml::Map(m));
+        } else {
+            items.push(scalar(&rest));
+        }
+    }
+    Ok(Yaml::List(items))
+}
+
+fn parse_map(lines: &[(usize, String, usize)], pos: &mut usize, indent: usize) -> Result<Yaml, YamlError> {
+    let mut m = BTreeMap::new();
+    while *pos < lines.len() {
+        let (ind, content, line) = &lines[*pos];
+        if *ind < indent {
+            break;
+        }
+        if *ind > indent {
+            return Err(YamlError { msg: "unexpected indentation".into(), line: *line });
+        }
+        if content.starts_with("- ") {
+            break;
+        }
+        let (k, v) = split_kv(content, *line)?;
+        *pos += 1;
+        if v.is_empty() {
+            // Value is a nested block (map or list) or null.
+            if *pos < lines.len() && lines[*pos].0 > indent {
+                let child = parse_block(lines, pos, lines[*pos].0)?;
+                m.insert(k, child);
+            } else if *pos < lines.len() && lines[*pos].0 == indent && lines[*pos].1.starts_with("- ") {
+                // Lists are allowed at the same indent level as their key.
+                let child = parse_list(lines, pos, indent)?;
+                m.insert(k, child);
+            } else {
+                m.insert(k, Yaml::Null);
+            }
+        } else {
+            m.insert(k, scalar(&v));
+        }
+    }
+    Ok(Yaml::Map(m))
+}
+
+fn split_kv(content: &str, line: usize) -> Result<(String, String), YamlError> {
+    // Split on the first ':' that is followed by space/EOL and not in quotes.
+    let mut in_s = false;
+    let mut in_d = false;
+    let bytes = content.as_bytes();
+    for i in 0..bytes.len() {
+        match bytes[i] {
+            b'\'' if !in_d => in_s = !in_s,
+            b'"' if !in_s => in_d = !in_d,
+            b':' if !in_s && !in_d => {
+                if i + 1 == bytes.len() || bytes[i + 1] == b' ' {
+                    let k = content[..i].trim().to_string();
+                    let v = content[i + 1..].trim().to_string();
+                    if k.is_empty() {
+                        return Err(YamlError { msg: "empty key".into(), line });
+                    }
+                    return Ok((unquote(&k), v));
+                }
+            }
+            _ => {}
+        }
+    }
+    Err(YamlError { msg: format!("expected 'key: value', got '{content}'"), line })
+}
+
+fn unquote(s: &str) -> String {
+    let s = s.trim();
+    if (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+        || (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+    {
+        s[1..s.len() - 1].to_string()
+    } else {
+        s.to_string()
+    }
+}
+
+fn scalar(s: &str) -> Yaml {
+    let t = s.trim();
+    // Inline list: [a, b, c]
+    if t.starts_with('[') && t.ends_with(']') {
+        let inner = &t[1..t.len() - 1];
+        if inner.trim().is_empty() {
+            return Yaml::List(vec![]);
+        }
+        return Yaml::List(split_top_commas(inner).iter().map(|x| scalar(x)).collect());
+    }
+    if (t.starts_with('"') && t.ends_with('"')) || (t.starts_with('\'') && t.ends_with('\'')) {
+        return Yaml::Str(unquote(t));
+    }
+    match t {
+        "null" | "~" | "" => return Yaml::Null,
+        "true" | "True" => return Yaml::Bool(true),
+        "false" | "False" => return Yaml::Bool(false),
+        _ => {}
+    }
+    if let Ok(n) = t.parse::<f64>() {
+        // "1e5", "0.1", "42" are numbers; but keep things like "1.2.3" strings.
+        return Yaml::Num(n);
+    }
+    Yaml::Str(t.to_string())
+}
+
+fn split_top_commas(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '[' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                out.push(cur.trim().to_string());
+                cur = String::new();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur.trim().to_string());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# FedGraph experiment config (paper Fig. 2 style)
+fedgraph_task: NC
+dataset: cora-sim
+method: FedGCN   # trailing comment
+num_hops: 2
+iid_beta: 10000.0
+global_rounds: 100
+local_steps: 3
+learning_rate: 0.1
+n_trainer: 10
+use_encryption: false
+ranks: [100, 200, 400]
+trainers:
+  - name: a
+    gpu: false
+  - name: b
+    gpu: true
+network:
+  bandwidth_gbps: 1.0
+  latency_ms: 1
+"#;
+
+    #[test]
+    fn parses_sample_config() {
+        let y = Yaml::parse(SAMPLE).unwrap();
+        assert_eq!(y.get("fedgraph_task").as_str(), Some("NC"));
+        assert_eq!(y.get("dataset").as_str(), Some("cora-sim"));
+        assert_eq!(y.get("method").as_str(), Some("FedGCN"));
+        assert_eq!(y.get("global_rounds").as_usize(), Some(100));
+        assert_eq!(y.get("iid_beta").as_f64(), Some(10000.0));
+        assert_eq!(y.get("use_encryption").as_bool(), Some(false));
+        let ranks = y.get("ranks").as_list().unwrap();
+        assert_eq!(ranks.len(), 3);
+        assert_eq!(ranks[0].as_usize(), Some(100));
+        let trainers = y.get("trainers").as_list().unwrap();
+        assert_eq!(trainers.len(), 2);
+        assert_eq!(trainers[0].get("name").as_str(), Some("a"));
+        assert_eq!(trainers[1].get("gpu").as_bool(), Some(true));
+        assert_eq!(y.get("network").get("latency_ms").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn quoted_strings_and_numbers() {
+        let y = Yaml::parse("a: \"10\"\nb: 10\nc: 'x: y'\n").unwrap();
+        assert_eq!(y.get("a").as_str(), Some("10"));
+        assert_eq!(y.get("b").as_usize(), Some(10));
+        assert_eq!(y.get("c").as_str(), Some("x: y"));
+    }
+
+    #[test]
+    fn nested_depth() {
+        let y = Yaml::parse("a:\n  b:\n    c: 3\n  d: 4\n").unwrap();
+        assert_eq!(y.get("a").get("b").get("c").as_usize(), Some(3));
+        assert_eq!(y.get("a").get("d").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn scalar_list_block() {
+        let y = Yaml::parse("xs:\n  - 1\n  - 2\n  - three\n").unwrap();
+        let xs = y.get("xs").as_list().unwrap();
+        assert_eq!(xs[0].as_usize(), Some(1));
+        assert_eq!(xs[2].as_str(), Some("three"));
+    }
+
+    #[test]
+    fn empty_and_null() {
+        let y = Yaml::parse("a: null\nb: ~\nc:\n").unwrap();
+        assert_eq!(y.get("a"), &Yaml::Null);
+        assert_eq!(y.get("b"), &Yaml::Null);
+        assert_eq!(y.get("c"), &Yaml::Null);
+    }
+
+    #[test]
+    fn rejects_tabs() {
+        assert!(Yaml::parse("a:\n\tb: 1\n").is_err());
+    }
+
+    #[test]
+    fn comment_stripping_respects_quotes() {
+        let y = Yaml::parse("a: \"x # not a comment\" # real comment\n").unwrap();
+        assert_eq!(y.get("a").as_str(), Some("x # not a comment"));
+    }
+}

@@ -1,0 +1,252 @@
+//! Full-system integration tests: every task and algorithm family runs
+//! end-to-end through the public API at tiny scale, and the system metrics
+//! land in the qualitative relations the paper's evaluation establishes.
+//! Requires `make artifacts`.
+
+use fedgraph::config::{DpClone, FedGraphConfig, Method, PrivacyMode, SamplingType, Task};
+use fedgraph::coordinator::run_fedgraph_with;
+use fedgraph::he::{CkksParams, DpParams};
+use fedgraph::monitor::report::Report;
+use fedgraph::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::start(&fedgraph::config::default_artifacts_dir())
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn nc_cfg(method: Method) -> FedGraphConfig {
+    let mut cfg = FedGraphConfig::new(Task::NodeClassification, method, "cora-sim").unwrap();
+    cfg.scale = 0.15;
+    cfg.n_trainer = 4;
+    cfg.global_rounds = 6;
+    cfg.local_steps = 2;
+    cfg.learning_rate = 0.3;
+    cfg.eval_every = 2;
+    cfg
+}
+
+fn run(cfg: &FedGraphConfig, engine: &Engine) -> Report {
+    run_fedgraph_with(cfg, engine).unwrap_or_else(|e| panic!("{}: {e:#}", cfg.method.name()))
+}
+
+#[test]
+fn all_nc_methods_run_and_learn() {
+    let eng = engine();
+    for method in [
+        Method::FedAvgNC,
+        Method::FedGcn,
+        Method::DistributedGCN,
+        Method::BnsGcn,
+        Method::FedSagePlus,
+    ] {
+        let report = run(&nc_cfg(method), &eng);
+        assert_eq!(report.total_rounds, 6);
+        assert!(
+            report.final_accuracy > 0.3,
+            "{} accuracy {}",
+            method.name(),
+            report.final_accuracy
+        );
+        assert!(report.train_bytes > 0);
+        // Loss must improve over the run.
+        let first = report.rounds.first().unwrap().train_loss;
+        let last = report.rounds.last().unwrap().train_loss;
+        assert!(last < first, "{}: loss {first} -> {last}", method.name());
+    }
+    eng.shutdown();
+}
+
+#[test]
+fn fedgcn_beats_fedavg_and_pays_pretrain() {
+    let eng = engine();
+    let mut avg_cfg = nc_cfg(Method::FedAvgNC);
+    let mut gcn_cfg = nc_cfg(Method::FedGcn);
+    avg_cfg.global_rounds = 15;
+    gcn_cfg.global_rounds = 15;
+    let avg = run(&avg_cfg, &eng);
+    let gcn = run(&gcn_cfg, &eng);
+    // The paper's Fig 9: FedGCN has pre-train costs FedAvg lacks, and higher
+    // accuracy.
+    assert_eq!(avg.pretrain_bytes, 0);
+    assert!(gcn.pretrain_bytes > 0);
+    assert!(
+        gcn.final_accuracy >= avg.final_accuracy - 0.02,
+        "FedGCN {} should not lose to FedAvg {}",
+        gcn.final_accuracy,
+        avg.final_accuracy
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn he_multiplies_comm_but_preserves_accuracy() {
+    let eng = engine();
+    let plain_cfg = nc_cfg(Method::FedGcn);
+    let mut he_cfg = nc_cfg(Method::FedGcn);
+    he_cfg.privacy = PrivacyMode::He(CkksParams::default_params());
+    let plain = run(&plain_cfg, &eng);
+    let he = run(&he_cfg, &eng);
+    // Fig 5: HE inflates both phases' bytes dramatically.
+    assert!(he.pretrain_bytes > 5 * plain.pretrain_bytes);
+    assert!(he.train_bytes > 5 * plain.train_bytes);
+    // Accuracy within noise of plaintext (Table 3).
+    assert!((he.final_accuracy - plain.final_accuracy).abs() < 0.1);
+    eng.shutdown();
+}
+
+#[test]
+fn dp_costs_like_plaintext() {
+    let eng = engine();
+    let plain = run(&nc_cfg(Method::FedGcn), &eng);
+    let mut dp_cfg = nc_cfg(Method::FedGcn);
+    dp_cfg.privacy = PrivacyMode::Dp(DpClone(DpParams { epsilon: 8.0, delta: 1e-5, clip_norm: 1e4 }));
+    let dp = run(&dp_cfg, &eng);
+    // Table 3: DP adds ~no communication overhead.
+    let ratio = dp.total_bytes() as f64 / plain.total_bytes() as f64;
+    assert!((0.95..1.05).contains(&ratio), "DP comm ratio {ratio}");
+    eng.shutdown();
+}
+
+#[test]
+fn lowrank_compresses_pretrain() {
+    let eng = engine();
+    let full = run(&nc_cfg(Method::FedGcn), &eng);
+    let mut lr_cfg = nc_cfg(Method::FedGcn);
+    lr_cfg.lowrank_rank = 100;
+    let lr = run(&lr_cfg, &eng);
+    // Fig 7: pre-train bytes shrink roughly by k/d (plus the P broadcast).
+    assert!(
+        lr.pretrain_bytes < full.pretrain_bytes / 2,
+        "lowrank {} vs full {}",
+        lr.pretrain_bytes,
+        full.pretrain_bytes
+    );
+    assert!(lr.final_accuracy > 0.3);
+    eng.shutdown();
+}
+
+#[test]
+fn client_selection_reduces_comm() {
+    let eng = engine();
+    let full = run(&nc_cfg(Method::FedAvgNC), &eng);
+    let mut sel_cfg = nc_cfg(Method::FedAvgNC);
+    sel_cfg.sample_ratio = 0.5;
+    sel_cfg.sampling_type = SamplingType::Uniform;
+    let sel = run(&sel_cfg, &eng);
+    assert!(
+        sel.train_bytes < full.train_bytes,
+        "selection {} !< full {}",
+        sel.train_bytes,
+        full.train_bytes
+    );
+    eng.shutdown();
+}
+
+#[test]
+fn all_gc_methods_run() {
+    let eng = engine();
+    for method in [
+        Method::SelfTrain,
+        Method::FedAvgGC,
+        Method::FedProx,
+        Method::Gcfl,
+        Method::GcflPlus,
+        Method::GcflPlusDws,
+    ] {
+        let mut cfg = FedGraphConfig::new(Task::GraphClassification, method, "mutag-sim").unwrap();
+        cfg.scale = 0.5;
+        cfg.n_trainer = 4;
+        cfg.global_rounds = 6;
+        cfg.local_steps = 1;
+        cfg.learning_rate = 0.1;
+        cfg.iid_beta = 1.0;
+        let report = run(&cfg, &eng);
+        assert!(report.final_accuracy > 0.2, "{}: {}", method.name(), report.final_accuracy);
+        if method == Method::SelfTrain {
+            assert_eq!(report.total_bytes(), 0, "SelfTrain must not communicate");
+        } else {
+            assert!(report.train_bytes > 0);
+        }
+    }
+    eng.shutdown();
+}
+
+#[test]
+fn all_lp_methods_run_with_expected_comm_order() {
+    let eng = engine();
+    let mut results = Vec::new();
+    for method in [Method::StaticGnn, Method::Stfl, Method::FedLink, Method::FourDFedGnnPlus] {
+        let mut cfg = FedGraphConfig::new(Task::LinkPrediction, method, "US+BR").unwrap();
+        cfg.scale = 0.1;
+        cfg.global_rounds = 8;
+        cfg.local_steps = 2;
+        let report = run(&cfg, &eng);
+        assert!(report.final_accuracy > 0.5, "{} AUC {}", method.name(), report.final_accuracy);
+        results.push((method, report.total_bytes()));
+    }
+    // Fig 10's comm ordering: StaticGNN lowest (0), FedLink highest.
+    let get = |m: Method| results.iter().find(|(x, _)| *x == m).unwrap().1;
+    assert_eq!(get(Method::StaticGnn), 0);
+    assert!(get(Method::FedLink) > get(Method::Stfl));
+    assert!(get(Method::FourDFedGnnPlus) < get(Method::Stfl));
+    eng.shutdown();
+}
+
+#[test]
+fn papers100m_lazy_runs_at_million_nodes() {
+    let eng = engine();
+    let mut cfg =
+        FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "papers100m-sim").unwrap();
+    cfg.scale = 0.01; // 1M nodes
+    cfg.n_trainer = 20;
+    cfg.sample_ratio = 0.25;
+    cfg.global_rounds = 4;
+    cfg.batch_size = 16;
+    let report = run(&cfg, &eng);
+    assert_eq!(report.total_rounds, 4);
+    assert!(report.train_bytes > 0);
+    eng.shutdown();
+}
+
+#[test]
+fn yaml_config_files_load_and_run() {
+    let eng = engine();
+    // The checked-in config files must parse; run the quickstart one, tiny.
+    for f in [
+        "configs/cora_fedgcn.yaml",
+        "configs/cora_fedgcn_he_lowrank.yaml",
+        "configs/mutag_gcflplus.yaml",
+        "configs/lp_fivecountry_stfl.yaml",
+        "configs/papers100m_fedavg.yaml",
+    ] {
+        assert!(
+            FedGraphConfig::from_yaml_file(f).is_ok(),
+            "config {f} must parse"
+        );
+    }
+    let mut cfg = FedGraphConfig::from_yaml_file("configs/cora_fedgcn.yaml").unwrap();
+    cfg.scale = 0.1;
+    cfg.global_rounds = 2;
+    cfg.n_trainer = 3;
+    let report = run(&cfg, &eng);
+    assert_eq!(report.total_rounds, 2);
+    eng.shutdown();
+}
+
+#[test]
+fn monitor_reports_are_consistent() {
+    let eng = engine();
+    let report = run(&nc_cfg(Method::FedGcn), &eng);
+    // Byte totals decompose.
+    assert_eq!(report.total_bytes(), report.pretrain_bytes + report.train_bytes);
+    // JSON round-trips through our parser.
+    let j = report.to_json().to_string_pretty();
+    let parsed = fedgraph::util::json::Json::parse(&j).unwrap();
+    assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), report.total_rounds);
+    // Rounds are sequential.
+    for (i, r) in report.rounds.iter().enumerate() {
+        assert_eq!(r.round, i);
+    }
+    assert!(report.peak_rss > 0);
+    eng.shutdown();
+}

@@ -1,0 +1,273 @@
+//! Property-based tests (proptest-lite, `fedgraph::testing`) over the
+//! coordinator's invariants: partition/routing consistency, batching/block
+//! construction, serialization, privacy-mechanism algebra, and the low-rank
+//! scheme's linearity. No artifacts required.
+
+use fedgraph::config::SamplingType;
+use fedgraph::coordinator::selection::select_clients;
+use fedgraph::graph::{
+    block_from_induced, build_local_graphs, dirichlet_partition, neighbor_feature_sums,
+    local_neighbor_contribution, sample_neighborhood,
+};
+use fedgraph::he::{CkksContext, CkksParams};
+use fedgraph::lowrank::{aggregate_projected, Projection};
+use fedgraph::runtime::ParamSet;
+use fedgraph::testing::{gen, prop_check};
+use fedgraph::transport::serialize::{decode_params, encode_params};
+
+#[test]
+fn prop_partition_covers_and_inverts() {
+    prop_check("partition-coverage", 40, |rng| {
+        let n = rng.range(10, 400);
+        let k = rng.range(2, 9);
+        let m = rng.range(2, 12);
+        let beta = [0.1, 1.0, 100.0, 10_000.0][rng.below(4)];
+        let labels = gen::labels(rng, n, k);
+        let p = dirichlet_partition(&labels, k, m, beta, rng);
+        p.validate(n).unwrap();
+    });
+}
+
+#[test]
+fn prop_local_graphs_conserve_edges() {
+    prop_check("local-graph-edge-conservation", 30, |rng| {
+        let g = gen::graph(rng, 5, 80, 0.15);
+        let m = rng.range(2, 6);
+        let labels = gen::labels(rng, g.n, 3);
+        let p = dirichlet_partition(&labels, 3, m, 1.0, rng);
+        let locals = build_local_graphs(&g, &p);
+        // Every global edge is internal to exactly one client, or cross and
+        // counted once from each side.
+        let internal: usize = locals.iter().map(|l| l.internal_edges).sum();
+        let cross: usize = locals.iter().map(|l| l.cross_edges).sum();
+        assert_eq!(cross % 2, 0, "cross edges counted from both sides");
+        assert_eq!(internal + cross / 2, g.num_edges());
+        // Owned nodes across clients partition the node set.
+        let total_owned: usize = locals.iter().map(|l| l.num_owned()).sum();
+        assert_eq!(total_owned, g.n);
+        for l in &locals {
+            l.csr.validate().unwrap();
+        }
+    });
+}
+
+#[test]
+fn prop_neighbor_sums_decompose() {
+    prop_check("fedgcn-additivity", 25, |rng| {
+        let g = gen::graph(rng, 5, 60, 0.2);
+        let d = rng.range(1, 9);
+        let m = rng.range(2, 5);
+        let feats = gen::f32_vec(rng, g.n * d, 3.0);
+        let labels = gen::labels(rng, g.n, 2);
+        let p = dirichlet_partition(&labels, 2, m, 10.0, rng);
+        let nodes: Vec<u32> = (0..g.n as u32).filter(|_| rng.chance(0.4)).collect();
+        if nodes.is_empty() {
+            return;
+        }
+        let direct = neighbor_feature_sums(&g, &feats, d, &nodes);
+        let mut summed = vec![0f32; nodes.len() * d];
+        for c in 0..m as u32 {
+            let contrib = local_neighbor_contribution(&g, &p, &feats, d, &nodes, c);
+            for (a, b) in summed.iter_mut().zip(&contrib) {
+                *a += b;
+            }
+        }
+        for (a, b) in summed.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_blocks_are_valid_and_respect_buckets() {
+    prop_check("block-construction", 30, |rng| {
+        let g = gen::graph(rng, 4, 50, 0.2);
+        let nodes: Vec<u32> = (0..g.n as u32).filter(|_| rng.chance(0.6)).collect();
+        if nodes.is_empty() {
+            return;
+        }
+        let n_pad = (nodes.len() + rng.range(1, 20)).next_power_of_two();
+        let e_pad = n_pad * 8;
+        let d = rng.range(1, 6);
+        let b = block_from_induced(
+            &g,
+            &nodes,
+            n_pad,
+            e_pad,
+            d,
+            |u, row| row.iter_mut().for_each(|x| *x = u as f32),
+            |u| u as i32,
+            |_| 1.0,
+        );
+        b.validate().unwrap();
+        assert_eq!(b.n_real, nodes.len());
+        assert_eq!(b.num_masked(), nodes.len());
+        // Self-loops for every real node at least.
+        assert!(b.e_real >= nodes.len());
+    });
+}
+
+#[test]
+fn prop_sampler_respects_caps_and_uniqueness() {
+    prop_check("neighbor-sampler", 30, |rng| {
+        let g = gen::graph(rng, 10, 120, 0.1);
+        let seed_count = rng.range(1, 8.min(g.n));
+        let seeds = rng.sample_distinct(g.n, seed_count);
+        let seeds: Vec<u32> = seeds.into_iter().map(|s| s as u32).collect();
+        let cap = rng.range(seed_count, g.n + 1);
+        let out = sample_neighborhood(&g, &seeds, 2, 4, cap, rng);
+        assert!(out.len() <= cap);
+        assert_eq!(&out[..seeds.len().min(out.len())], &seeds[..seeds.len().min(out.len())]);
+        let set: std::collections::HashSet<_> = out.iter().collect();
+        assert_eq!(set.len(), out.len(), "sampled nodes must be unique");
+    });
+}
+
+#[test]
+fn prop_wire_format_roundtrip() {
+    prop_check("wire-roundtrip", 50, |rng| {
+        let n_tensors = rng.range(1, 6);
+        let tensors: Vec<Vec<f32>> = (0..n_tensors)
+            .map(|_| {
+                let len = rng.range(0, 500);
+                gen::f32_vec(rng, len, 1e6)
+            })
+            .collect();
+        let bytes = encode_params(&tensors);
+        let back = decode_params(&bytes).unwrap();
+        assert_eq!(tensors, back);
+        // Single-bit corruption is always detected.
+        if bytes.len() > 8 {
+            let mut corrupted = bytes.clone();
+            let pos = rng.below(corrupted.len());
+            let bit = 1u8 << rng.below(8);
+            corrupted[pos] ^= bit;
+            assert!(decode_params(&corrupted).is_err(), "corruption at byte {pos} undetected");
+        }
+    });
+}
+
+#[test]
+fn prop_he_addition_homomorphism() {
+    prop_check("he-homomorphism", 15, |rng| {
+        let params = CkksParams::default_params();
+        let ctx = CkksContext::new(params, rng.next_u64());
+        let len = rng.range(1, 2000);
+        let parties = rng.range(2, 8);
+        let vectors: Vec<Vec<f32>> =
+            (0..parties).map(|_| gen::f32_vec(rng, len, 50.0)).collect();
+        let mut acc = ctx.encrypt(&vectors[0], len);
+        for v in &vectors[1..] {
+            let ct = ctx.encrypt(v, len);
+            ctx.add_assign(&mut acc, &ct);
+        }
+        let got = ctx.decrypt(&acc);
+        for i in 0..len {
+            let want: f32 = vectors.iter().map(|v| v[i]).sum();
+            assert!(
+                (got[i] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "slot {i}: {} vs {want}",
+                got[i]
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lowrank_linearity() {
+    prop_check("lowrank-linearity", 20, |rng| {
+        let d = rng.range(8, 64);
+        let k = rng.range(1, d);
+        let n = rng.range(1, 20);
+        let clients = rng.range(2, 6);
+        let p = Projection::sample(d, k, rng);
+        let xs: Vec<Vec<f32>> = (0..clients).map(|_| gen::f32_vec(rng, n * d, 2.0)).collect();
+        let proj_sum = aggregate_projected(&xs.iter().map(|x| p.project(x, n)).collect::<Vec<_>>());
+        let mut sum = vec![0f32; n * d];
+        for x in &xs {
+            for (a, b) in sum.iter_mut().zip(x) {
+                *a += b;
+            }
+        }
+        let sum_proj = p.project(&sum, n);
+        for (a, b) in proj_sum.iter().zip(&sum_proj) {
+            assert!((a - b).abs() < 1e-2 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn prop_client_selection_invariants() {
+    prop_check("client-selection", 50, |rng| {
+        let m = rng.range(1, 50);
+        let ratio = (rng.f64() * 0.99 + 0.01).min(1.0);
+        let sampling =
+            if rng.chance(0.5) { SamplingType::Random } else { SamplingType::Uniform };
+        let round = rng.below(100);
+        let s = select_clients(m, ratio, sampling, round, rng);
+        assert!(!s.is_empty() && s.len() <= m);
+        assert!(s.iter().all(|&i| i < m));
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), s.len(), "selection must be duplicate-free");
+    });
+}
+
+#[test]
+fn prop_weighted_average_is_convex() {
+    prop_check("fedavg-convexity", 30, |rng| {
+        let d = rng.range(2, 10);
+        let sets: Vec<(f32, ParamSet)> = (0..rng.range(2, 6))
+            .map(|_| {
+                let mut p = ParamSet::nc(d, 4, 3, rng);
+                for v in p.values.iter_mut().flatten() {
+                    *v = (rng.f32() - 0.5) * 10.0;
+                }
+                (rng.f32() + 0.01, p)
+            })
+            .collect();
+        let refs: Vec<(f32, &ParamSet)> = sets.iter().map(|(w, p)| (*w, p)).collect();
+        let avg = ParamSet::weighted_average(&refs);
+        // Every coordinate of the average lies in [min, max] of inputs.
+        let flats: Vec<Vec<f32>> = sets.iter().map(|(_, p)| p.flatten()).collect();
+        for (i, v) in avg.flatten().iter().enumerate() {
+            let lo = flats.iter().map(|f| f[i]).fold(f32::INFINITY, f32::min);
+            let hi = flats.iter().map(|f| f[i]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(*v >= lo - 1e-4 && *v <= hi + 1e-4, "coord {i}: {v} not in [{lo}, {hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_dtw_is_a_premetric() {
+    prop_check("dtw-premetric", 40, |rng| {
+        use fedgraph::coordinator::gcfl::dtw;
+        let len_a = rng.range(1, 20);
+        let len_b = rng.range(1, 20);
+        let a: Vec<f64> = (0..len_a).map(|_| rng.f64() * 10.0).collect();
+        let b: Vec<f64> = (0..len_b).map(|_| rng.f64() * 10.0).collect();
+        assert!((dtw(&a, &b) - dtw(&b, &a)).abs() < 1e-9, "symmetry");
+        assert!(dtw(&a, &a) < 1e-12, "identity");
+        assert!(dtw(&a, &b) >= 0.0, "non-negativity");
+    });
+}
+
+#[test]
+fn prop_ckks_sizes_monotone() {
+    prop_check("ckks-size-model", 30, |rng| {
+        let degrees = [4096usize, 8192, 16384, 32768];
+        let d1 = degrees[rng.below(4)];
+        let d2 = degrees[rng.below(4)];
+        let len = rng.range(1, 100_000);
+        let (p1, p2) = (CkksParams::with_degree(d1), CkksParams::with_degree(d2));
+        // Bigger vectors never ship in fewer bytes.
+        let len2 = len + rng.range(0, 10_000);
+        assert!(p1.encrypted_vector_bytes(len2) >= p1.encrypted_vector_bytes(len));
+        // Ciphertext size formula: 2 * N * ceil(bits/8).
+        assert_eq!(
+            p2.ciphertext_bytes(),
+            2 * d2 as u64 * ((p2.total_coeff_bits() as u64 + 7) / 8)
+        );
+        // Expansion vs plaintext is always >= 1 for nonempty payloads.
+        assert!(p1.encrypted_vector_bytes(len) >= (len * 4) as u64);
+    });
+}

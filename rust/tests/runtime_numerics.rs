@@ -1,0 +1,282 @@
+//! Runtime integration: the Rust engine executing AOT artifacts must
+//! reproduce known numerics (requires `make artifacts`).
+
+use fedgraph::config::default_artifacts_dir;
+use fedgraph::runtime::{Engine, ParamSet, Tensor};
+use fedgraph::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::start(&default_artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+/// Hand-computed 2-layer GCN forward on a single isolated node.
+///
+/// With one real node carrying a single self-loop arc of weight 1, the model
+/// is logits = ((x·w1 + b1)⁺·w2) + b2 — exactly computable by hand.
+#[test]
+fn nc_eval_matches_hand_forward() {
+    let eng = engine();
+    let art = eng.manifest.pick("nc_eval", &[("d", 100), ("c", 7)], 16).unwrap().clone();
+    let (n, e, d, c, h) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("c"), art.dim("h"));
+
+    // Parameters: w1 = 0 except w1[0][0] = 2; b1[0] = -1; w2[0][j] = j; b2 = 0.
+    let mut params = ParamSet::nc(d, h, c, &mut Rng::seeded(0));
+    for v in params.values.iter_mut() {
+        for x in v.iter_mut() {
+            *x = 0.0;
+        }
+    }
+    params.values[0][0] = 2.0; // w1[0,0]
+    params.values[1][0] = -1.0; // b1[0]
+    for j in 0..c {
+        params.values[2][j] = j as f32; // w2[0, j]
+    }
+
+    // Block: node 0 with x[0] = 3, a self arc of weight 1; everything else pad.
+    let mut x = vec![0f32; n * d];
+    x[0] = 3.0;
+    let mut src = vec![(n - 1) as i32; e];
+    let mut dst = vec![(n - 1) as i32; e];
+    let mut enorm = vec![0f32; e];
+    src[0] = 0;
+    dst[0] = 0;
+    enorm[0] = 1.0;
+    let labels = vec![0i32; n];
+    let mut mask = vec![0f32; n];
+    mask[0] = 1.0;
+
+    let mut args = params.to_tensors();
+    args.push(Tensor::f32(&[n, d], x));
+    args.push(Tensor::i32(&[e], src));
+    args.push(Tensor::i32(&[e], dst));
+    args.push(Tensor::f32(&[e], enorm));
+    args.push(Tensor::i32(&[n], labels));
+    args.push(Tensor::f32(&[n], mask));
+    let outs = eng.execute(&art.name, args).unwrap();
+
+    // hidden[0] = relu(3*2 - 1) = 5; logits[j] = 5*j.
+    // loss = -log softmax(logits)[0]; argmax = c-1 -> correct = 0, cnt = 1.
+    let logits: Vec<f64> = (0..c).map(|j| 5.0 * j as f64).collect();
+    let zmax = logits.last().unwrap();
+    let lse = zmax + logits.iter().map(|z| (z - zmax).exp()).sum::<f64>().ln();
+    let want_loss = lse - logits[0];
+    let (loss, correct, cnt) = (outs[0].scalar() as f64, outs[1].scalar(), outs[2].scalar());
+    assert!((loss - want_loss).abs() < 1e-3, "loss {loss} vs {want_loss}");
+    assert_eq!(correct, 0.0);
+    assert_eq!(cnt, 1.0);
+    eng.shutdown();
+}
+
+/// A train step must equal eval-loss improvement: running the train artifact
+/// twice on a learnable toy block reduces the loss, and the returned params
+/// differ from the inputs exactly in the direction of descent.
+#[test]
+fn nc_train_step_descends() {
+    let eng = engine();
+    let art = eng.manifest.pick("nc_train", &[("d", 100), ("c", 7)], 64).unwrap().clone();
+    let (n, e, d, c, h) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("c"), art.dim("h"));
+    let mut rng = Rng::seeded(42);
+    let mut params = ParamSet::nc(d, h, c, &mut rng);
+
+    // 64 nodes, features = label-indicator planted on dims 0..7, self arcs.
+    let real = 64;
+    let mut x = vec![0f32; n * d];
+    let mut labels = vec![0i32; n];
+    let mut mask = vec![0f32; n];
+    let mut src = vec![(n - 1) as i32; e];
+    let mut dst = vec![(n - 1) as i32; e];
+    let mut enorm = vec![0f32; e];
+    for i in 0..real {
+        let lab = i % c;
+        labels[i] = lab as i32;
+        x[i * d + lab] = 2.0;
+        x[i * d + 20 + (i % 13)] = 0.5; // distractor
+        mask[i] = 1.0;
+        src[i] = i as i32;
+        dst[i] = i as i32;
+        enorm[i] = 1.0;
+    }
+
+    let block = |p: &ParamSet, lr: f32| {
+        let mut args = p.to_tensors();
+        args.push(Tensor::f32(&[n, d], x.clone()));
+        args.push(Tensor::i32(&[e], src.clone()));
+        args.push(Tensor::i32(&[e], dst.clone()));
+        args.push(Tensor::f32(&[e], enorm.clone()));
+        args.push(Tensor::i32(&[n], labels.clone()));
+        args.push(Tensor::f32(&[n], mask.clone()));
+        args.push(Tensor::scalar_f32(lr));
+        args
+    };
+
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let outs = eng.execute(&art.name, block(&params, 0.5)).unwrap();
+        losses.push(outs[4].scalar());
+        params.update_from_tensors(&outs);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.7),
+        "train loss must descend: {losses:?}"
+    );
+    // Accuracy on the training block should rise to near 1 eventually.
+    let outs = eng.execute(&art.name, block(&params, 0.0)).unwrap();
+    let acc = outs[5].scalar() / outs[6].scalar();
+    assert!(acc > 0.8, "block accuracy {acc}");
+    eng.shutdown();
+}
+
+/// Pad arcs and pad nodes must be exact no-ops: adding pad arcs/nodes to a
+/// block must not change loss or metrics.
+#[test]
+fn padding_is_a_noop() {
+    let eng = engine();
+    let art = eng.manifest.pick("nc_eval", &[("d", 100), ("c", 7)], 16).unwrap().clone();
+    let (n, e, d, c, h) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("c"), art.dim("h"));
+    let params = ParamSet::nc(d, h, c, &mut Rng::seeded(7));
+
+    let run = |extra_pad_arcs: usize, pad_feature: f32| {
+        let mut x = vec![0f32; n * d];
+        for j in 0..d {
+            x[j] = (j % 5) as f32 * 0.1;
+            // pad node n-1 features — must not affect results
+            x[(n - 1) * d + j] = pad_feature;
+        }
+        let mut src = vec![(n - 1) as i32; e];
+        let mut dst = vec![(n - 1) as i32; e];
+        let mut enorm = vec![0f32; e];
+        src[0] = 0;
+        dst[0] = 0;
+        enorm[0] = 1.0;
+        // extra zero-weight arcs pointing at real node 0
+        for k in 0..extra_pad_arcs {
+            src[1 + k] = 0;
+            dst[1 + k] = 0;
+            enorm[1 + k] = 0.0;
+        }
+        let labels = vec![1i32; n];
+        let mut mask = vec![0f32; n];
+        mask[0] = 1.0;
+        let mut args = params.to_tensors();
+        args.push(Tensor::f32(&[n, d], x));
+        args.push(Tensor::i32(&[e], src));
+        args.push(Tensor::i32(&[e], dst));
+        args.push(Tensor::f32(&[e], enorm));
+        args.push(Tensor::i32(&[n], labels));
+        args.push(Tensor::f32(&[n], mask));
+        let outs = eng.execute(&art.name, args).unwrap();
+        (outs[0].scalar(), outs[1].scalar(), outs[2].scalar())
+    };
+
+    let base = run(0, 0.0);
+    let with_pads = run(40, 123.0);
+    assert!((base.0 - with_pads.0).abs() < 1e-5, "{base:?} vs {with_pads:?}");
+    assert_eq!(base.1, with_pads.1);
+    assert_eq!(base.2, with_pads.2);
+    eng.shutdown();
+}
+
+/// LP scores are probabilities and ranking responds to the embedding space.
+#[test]
+fn lp_scores_are_probabilities() {
+    let eng = engine();
+    let art = eng.manifest.pick("lp_eval", &[("d", 64)], 64).unwrap().clone();
+    let (n, e, d, p) = (art.dim("n"), art.dim("e"), art.dim("d"), art.dim("p"));
+    let mut rng = Rng::seeded(3);
+    let params = ParamSet::lp(d, eng.manifest.hidden, 32, &mut rng);
+    let mut x = vec![0f32; n * d];
+    for v in x.iter_mut().take(64 * d) {
+        *v = (rng.f32() - 0.5) * 2.0;
+    }
+    let mut src = vec![(n - 1) as i32; e];
+    let mut dst = vec![(n - 1) as i32; e];
+    let mut enorm = vec![0f32; e];
+    for i in 0..64 {
+        src[i] = i as i32;
+        dst[i] = i as i32;
+        enorm[i] = 1.0;
+    }
+    let eu: Vec<i32> = (0..p).map(|k| (k % 64) as i32).collect();
+    let ev: Vec<i32> = (0..p).map(|k| ((k + 7) % 64) as i32).collect();
+    let mut args = params.to_tensors();
+    args.push(Tensor::f32(&[n, d], x));
+    args.push(Tensor::i32(&[e], src));
+    args.push(Tensor::i32(&[e], dst));
+    args.push(Tensor::f32(&[e], enorm));
+    args.push(Tensor::i32(&[p], eu));
+    args.push(Tensor::i32(&[p], ev));
+    let outs = eng.execute(&art.name, args).unwrap();
+    let scores = outs[0].as_f32();
+    assert_eq!(scores.len(), p);
+    assert!(scores.iter().all(|s| (0.0..=1.0).contains(s)));
+    eng.shutdown();
+}
+
+/// Engine error paths: wrong arity and wrong shapes are rejected clearly.
+#[test]
+fn engine_validates_inputs() {
+    let eng = engine();
+    let art = eng.manifest.pick("nc_eval", &[("d", 100), ("c", 7)], 16).unwrap().clone();
+    let err = eng.execute(&art.name, vec![]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    let err = eng.execute("nonexistent_artifact", vec![]).unwrap_err().to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+    // wrong dtype/shape on the first input
+    let mut args: Vec<Tensor> = Vec::new();
+    for io in &art.inputs {
+        args.push(match io.dtype {
+            fedgraph::runtime::DType::F32 => {
+                Tensor::f32(&io.shape, vec![0.0; io.shape.iter().product()])
+            }
+            fedgraph::runtime::DType::I32 => {
+                Tensor::i32(&io.shape, vec![0; io.shape.iter().product()])
+            }
+        });
+    }
+    args[0] = Tensor::f32(&[1, 2], vec![0.0, 0.0]);
+    let err = eng.execute(&art.name, args).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+    eng.shutdown();
+}
+
+/// §Perf backend validation: the pallas-lowered artifact (interpret-mode
+/// Pallas kernels inside the HLO) and the reference artifact must compute
+/// identical outputs through the PJRT runtime — proving the Pallas → HLO →
+/// Rust path composes end-to-end.
+#[test]
+fn pallas_artifact_matches_reference_artifact() {
+    let eng = engine();
+    let ref_art = eng.manifest.get("nc_eval_d100_c7_n256").unwrap().clone();
+    let pal_art = eng.manifest.get("nc_eval_pallas_d100_c7_n256").unwrap().clone();
+    let (n, e, d, c, h) =
+        (ref_art.dim("n"), ref_art.dim("e"), ref_art.dim("d"), ref_art.dim("c"), ref_art.dim("h"));
+    let mut rng = Rng::seeded(99);
+    let params = ParamSet::nc(d, h, c, &mut rng);
+    let mut x = vec![0f32; n * d];
+    rng.fill_normal_f32(&mut x, 0.0, 1.0);
+    let src: Vec<i32> = (0..e).map(|k| (k % n) as i32).collect();
+    let dst: Vec<i32> = (0..e).map(|k| ((k * 7 + 3) % n) as i32).collect();
+    let enorm: Vec<f32> = (0..e).map(|k| ((k % 5) as f32) * 0.1).collect();
+    let labels: Vec<i32> = (0..n).map(|i| (i % c) as i32).collect();
+    let mask = vec![1.0f32; n];
+    let args = |_which: &str| {
+        let mut a = params.to_tensors();
+        a.push(Tensor::f32(&[n, d], x.clone()));
+        a.push(Tensor::i32(&[e], src.clone()));
+        a.push(Tensor::i32(&[e], dst.clone()));
+        a.push(Tensor::f32(&[e], enorm.clone()));
+        a.push(Tensor::i32(&[n], labels.clone()));
+        a.push(Tensor::f32(&[n], mask.clone()));
+        a
+    };
+    let r = eng.execute(&ref_art.name, args("ref")).unwrap();
+    let p = eng.execute(&pal_art.name, args("pallas")).unwrap();
+    for (a, b) in r.iter().zip(&p) {
+        let (av, bv) = (a.scalar(), b.scalar());
+        assert!(
+            (av - bv).abs() < 1e-3 * (1.0 + av.abs()),
+            "pallas {bv} vs reference {av}"
+        );
+    }
+    eng.shutdown();
+}
