@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# CI gate: formatting, lints on the federation subsystem (and everything
+# else), and the tier-1 verify from ROADMAP.md.
+#
+# Usage: ./ci.sh            # full gate
+#        ./ci.sh --quick    # skip the release build, run tests only
+set -euo pipefail
+cd "$(dirname "$0")"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "ci.sh: cargo not found on PATH — install the Rust toolchain first" >&2
+    exit 1
+fi
+
+# The crate root lives wherever Cargo.toml is (repo root or rust/).
+if [ -f Cargo.toml ]; then
+    :
+elif [ -f rust/Cargo.toml ]; then
+    cd rust
+else
+    echo "ci.sh: no Cargo.toml found (repo root or rust/)" >&2
+    exit 1
+fi
+
+echo "==> cargo fmt --check"
+cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+cargo clippy --all-targets -- -D warnings
+
+if [ "${1:-}" != "--quick" ]; then
+    echo "==> cargo build --release   (tier-1, part 1)"
+    cargo build --release
+fi
+
+echo "==> cargo test -q            (tier-1, part 2)"
+cargo test -q
+
+echo "ci.sh: all green"

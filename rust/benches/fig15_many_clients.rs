@@ -1,8 +1,21 @@
 //! Fig 15 (Appendix G.1) — Ogbn-Arxiv with 10 / 100 / 1000 clients on fixed
 //! compute: training time, communication cost, and accuracy. Expected
-//! shape: total time and comm grow with client count (sequential execution,
-//! more synchronization); accuracy declines slightly from added
-//! heterogeneity.
+//! shape: total time and comm grow with client count; accuracy declines
+//! slightly from added heterogeneity.
+//!
+//! Since the federation-runtime refactor the bench also tracks the
+//! **parallel-trainer speedup**: every client count runs twice — once with
+//! `max_concurrency = 1` (the sequential reference) and once with the auto
+//! concurrency cap. Two figures are reported:
+//! - *e2e speedup* — end-to-end wall clock ratio. Both runs pay identical
+//!   serial setup (dataset generation, partitioning, warmup), so this
+//!   understates the runtime's effect, increasingly at high client counts.
+//! - *overlap* — derived from the parallel run's own monitor: total trainer
+//!   compute (sum over clients, phase "train") divided by the sum of
+//!   per-round critical paths. This is the achieved trainer parallelism,
+//!   independent of setup cost. 1.0x = no overlap.
+//! Results are bitwise-identical between the two runs (see
+//! tests/federation_determinism.rs); only the clocks may differ.
 
 #[path = "bench_common.rs"]
 mod common;
@@ -14,26 +27,51 @@ use fedgraph::util::tables::Table;
 fn main() {
     fedgraph::bench::banner(
         "Figure 15",
-        "ogbn-arxiv-sim under increasing client counts (fixed compute)",
+        "ogbn-arxiv-sim under increasing client counts (sequential vs parallel trainers)",
     );
     let eng = engine();
     let r = rounds(15);
-    let mut tbl =
-        Table::new(&["clients", "train s (total)", "comm MB", "accuracy"]);
+    let mut tbl = Table::new(&[
+        "clients",
+        "seq wall s",
+        "par wall s",
+        "e2e speedup",
+        "overlap",
+        "train s (total)",
+        "comm MB",
+        "accuracy",
+    ]);
     for clients in [10usize, 100, 1000] {
         let mut cfg = nc(Method::FedAvgNC, "ogbn-arxiv-sim", clients, r);
         cfg.local_steps = 2;
         cfg.batch_size = 256;
         cfg.eval_every = r.max(1);
+
+        cfg.federation.max_concurrency = 1;
+        let t0 = std::time::Instant::now();
+        let _seq = run(&cfg, &eng);
+        let seq_wall = t0.elapsed().as_secs_f64();
+
+        cfg.federation.max_concurrency = 0; // auto: one thread per core
+        let t1 = std::time::Instant::now();
         let rep = run(&cfg, &eng);
+        let par_wall = t1.elapsed().as_secs_f64();
+
         let train_total = rep
             .phase_secs
             .iter()
             .find(|(p, _)| p == "train")
             .map(|(_, s)| *s)
             .unwrap_or(0.0);
+        // Sum of per-round critical paths = the parallel run's training wall
+        // clock as the runtime experienced it (setup excluded).
+        let crit_sum: f64 = rep.rounds.iter().map(|x| x.train_secs).sum();
         tbl.row(&[
             clients.to_string(),
+            secs(seq_wall),
+            secs(par_wall),
+            format!("{:.2}x", seq_wall / par_wall.max(1e-9)),
+            format!("{:.2}x", train_total / crit_sum.max(1e-9)),
             secs(train_total),
             mb(rep.total_bytes()),
             format!("{:.4}", rep.final_accuracy),

@@ -154,6 +154,42 @@ pub enum PrivacyMode {
     Dp(DpClone),
 }
 
+/// Federation-runtime settings (the `federation:` YAML block): how trainer
+/// actors are scheduled and how client failures are injected.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FederationConfig {
+    /// Max trainer actors computing at once. `0` = auto (one per selected
+    /// client up to the machine's parallelism); `1` = the sequential
+    /// reference execution (bitwise-identical results, serialized wall
+    /// clock).
+    pub max_concurrency: usize,
+    /// Per-round probability that a selected client drops out before
+    /// training (its round is skipped; aggregation re-weights over the
+    /// survivors). `0.0` disables dropouts.
+    pub dropout_frac: f64,
+    /// Upper bound of a per-(round, client) deterministic straggler delay in
+    /// milliseconds, injected into local training to model heterogeneous
+    /// hardware. `0.0` disables stragglers.
+    pub straggler_ms: f64,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig { max_concurrency: 0, dropout_frac: 0.0, straggler_ms: 0.0 }
+    }
+}
+
+impl FederationConfig {
+    /// Resolve `max_concurrency` for a round with `n` participants.
+    pub fn resolved_concurrency(&self, n: usize) -> usize {
+        let auto = || {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+        };
+        let cap = if self.max_concurrency == 0 { auto() } else { self.max_concurrency };
+        cap.min(n.max(1))
+    }
+}
+
 /// DpParams is tiny; wrap for PartialEq.
 #[derive(Clone, Debug)]
 pub struct DpClone(pub DpParams);
@@ -193,6 +229,8 @@ pub struct FedGraphConfig {
     pub bns_ratio: f64,
     /// FedProx proximal coefficient μ.
     pub fedprox_mu: f32,
+    /// Federation runtime: actor concurrency, dropouts, stragglers.
+    pub federation: FederationConfig,
     pub network: NetConfig,
     pub seed: u64,
     /// Dataset scale factor (1.0 = published size).
@@ -234,6 +272,7 @@ impl FedGraphConfig {
             lowrank_rank: 0,
             bns_ratio: 0.5,
             fedprox_mu: 0.01,
+            federation: FederationConfig::default(),
             network: NetConfig::default(),
             seed: 42,
             scale: 1.0,
@@ -353,6 +392,17 @@ impl FedGraphConfig {
             }
             cfg.privacy = PrivacyMode::Dp(DpClone(params));
         }
+        // Federation block.
+        let fed = y.get("federation");
+        if let Some(v) = fed.get("max_concurrency").as_usize() {
+            cfg.federation.max_concurrency = v;
+        }
+        if let Some(v) = fed.get("dropout_frac").as_f64() {
+            cfg.federation.dropout_frac = v;
+        }
+        if let Some(v) = fed.get("straggler_ms").as_f64() {
+            cfg.federation.straggler_ms = v;
+        }
         // Network block.
         let net = y.get("network");
         if let Some(v) = net.get("bandwidth_gbps").as_f64() {
@@ -387,6 +437,15 @@ impl FedGraphConfig {
         }
         if self.learning_rate <= 0.0 {
             bail!("learning_rate must be positive");
+        }
+        if !(0.0..1.0).contains(&self.federation.dropout_frac) {
+            bail!(
+                "federation.dropout_frac must be in [0, 1), got {}",
+                self.federation.dropout_frac
+            );
+        }
+        if self.federation.straggler_ms < 0.0 {
+            bail!("federation.straggler_ms must be non-negative");
         }
         Ok(())
     }
@@ -460,6 +519,38 @@ network:
         if let PrivacyMode::He(p) = &cfg.privacy {
             assert_eq!(p.poly_mod_degree, 16384);
         }
+    }
+
+    #[test]
+    fn parses_federation_block() {
+        let cfg = FedGraphConfig::parse_yaml(
+            r#"
+fedgraph_task: NC
+dataset: cora-sim
+method: FedAvg
+federation:
+  max_concurrency: 4
+  dropout_frac: 0.25
+  straggler_ms: 20.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.max_concurrency, 4);
+        assert_eq!(cfg.federation.dropout_frac, 0.25);
+        assert_eq!(cfg.federation.straggler_ms, 20.0);
+        // Defaults when the block is absent.
+        let plain =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        assert_eq!(plain.federation, FederationConfig::default());
+        // Resolution: explicit cap wins, never above the participant count.
+        assert_eq!(cfg.federation.resolved_concurrency(2), 2);
+        assert_eq!(cfg.federation.resolved_concurrency(100), 4);
+        assert!(FederationConfig::default().resolved_concurrency(100) >= 1);
+        // Bad dropout rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  dropout_frac: 1.0\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -3,19 +3,28 @@
 //! Algorithms (Table 5): SelfTrain (local only), FedAvg, FedProx (proximal
 //! term lowered into its own artifact), and the GCFL family (clustered
 //! aggregation; see [`super::gcfl`]). Backbone: 2-layer GIN with sum pooling.
+//!
+//! Runs on the federation runtime: each client is a trainer actor batching
+//! its own graphs; the coordinator drives selection, GCFL clustering (from
+//! the uploaded deltas), per-cluster aggregation, and cluster-model
+//! broadcasts. SelfTrain rounds set `upload: false` so no bytes ever cross
+//! the simulated network.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{FedGraphConfig, Method, PrivacyMode};
 use crate::data::gc::{gc_spec, generate_gc, GCDataset, SmallGraph};
+use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate, RoundUpdate};
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::Phase;
+use crate::transport::link::ChannelTransport;
+use crate::transport::serialize::{encode_params, fnv1a};
 use crate::util::rng::Rng;
 
-use super::aggregate::aggregate_params;
 use super::gcfl::{GcflSignal, GcflState};
-use super::selection::select_clients;
+use super::selection::select_with_dropout;
 
 /// Pack up to `g_pad` graphs into one padded GIN batch.
 /// Tensor order matches the artifact: x, src, dst, enorm, gid, nmask,
@@ -80,10 +89,77 @@ fn pack_gc_batch(
     ])
 }
 
-struct GcClient {
+/// GC trainer-actor logic: the client's graph indices plus engine handle.
+struct GcLogic {
+    ds: Arc<GCDataset>,
     train_idx: Vec<usize>,
     test_idx: Vec<usize>,
-    params: ParamSet,
+    fedprox: bool,
+    fedprox_mu: f32,
+    engine: Engine,
+    train_art: String,
+    eval_art: String,
+    n_pad: usize,
+    e_pad: usize,
+    g_pad: usize,
+    d: usize,
+    local_steps: usize,
+    learning_rate: f32,
+}
+
+impl ClientLogic for GcLogic {
+    fn train(&mut self, _round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+        let mut p = params.clone();
+        let mut loss = 0.0;
+        for _ in 0..self.local_steps {
+            if self.train_idx.is_empty() {
+                break;
+            }
+            let k = self.g_pad.min(self.train_idx.len());
+            let picks = rng.sample_distinct(self.train_idx.len(), k);
+            let batch: Vec<&SmallGraph> =
+                picks.iter().map(|&i| &self.ds.graphs[self.train_idx[i]]).collect();
+            let Some(mut data) = pack_gc_batch(&batch, self.n_pad, self.e_pad, self.g_pad, self.d)
+            else {
+                continue;
+            };
+            let mut args = p.to_tensors();
+            if self.fedprox {
+                args.extend(params.to_tensors()); // proximal anchor
+            }
+            args.append(&mut data);
+            args.push(Tensor::scalar_f32(self.learning_rate));
+            if self.fedprox {
+                args.push(Tensor::scalar_f32(self.fedprox_mu));
+            }
+            let outs = self.engine.execute(&self.train_art, args)?;
+            p.update_from_tensors(&outs);
+            loss = outs[6].scalar();
+        }
+        Ok(LocalUpdate { params: p, loss })
+    }
+
+    fn eval(&mut self, _round: usize, params: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+        let mut correct = 0.0;
+        let mut cnt = 0.0;
+        let mut i = 0;
+        while i < self.test_idx.len() {
+            let hi = (i + self.g_pad).min(self.test_idx.len());
+            let batch: Vec<&SmallGraph> =
+                self.test_idx[i..hi].iter().map(|&k| &self.ds.graphs[k]).collect();
+            i = hi;
+            let Some(mut data) = pack_gc_batch(&batch, self.n_pad, self.e_pad, self.g_pad, self.d)
+            else {
+                continue;
+            };
+            let mut args = params.to_tensors();
+            args.append(&mut data);
+            let outs = self.engine.execute(&self.eval_art, args)?;
+            correct += outs[1].scalar() as f64;
+            cnt += outs[2].scalar() as f64;
+        }
+        Ok((correct, cnt))
+    }
 }
 
 pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
@@ -91,6 +167,10 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
     if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
         bail!("SelfTrain has no aggregation to encrypt");
+    }
+    let gcfl_method = matches!(cfg.method, Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws);
+    if gcfl_method && matches!(cfg.privacy, PrivacyMode::He(_)) {
+        bail!("GCFL clustering reads client deltas; it requires plaintext or DP uploads");
     }
     let mut rng = Rng::seeded(cfg.seed);
     monitor.note("task", "GC");
@@ -131,17 +211,6 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
 
     let hidden = engine.manifest.hidden;
     let global_init = ParamSet::gc(d, hidden, c_pad, &mut rng);
-    let mut clients: Vec<GcClient> = (0..cfg.n_trainer)
-        .map(|ci| {
-            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
-            GcClient {
-                train_idx: mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
-                test_idx: mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
-                params: global_init.clone(),
-            }
-        })
-        .collect();
-
     let self_train = cfg.method == Method::SelfTrain;
     let mut gcfl = match cfg.method {
         Method::Gcfl => Some(GcflState::new(cfg.n_trainer, GcflSignal::GradientCosine, 0.05, 0.1)),
@@ -152,172 +221,131 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         _ => None,
     };
 
+    let per_client_idx: Vec<(Vec<usize>, Vec<usize>)> = (0..cfg.n_trainer)
+        .map(|ci| {
+            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
+            (
+                mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
+                mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
+            )
+        })
+        .collect();
+    let weights: Vec<f32> =
+        per_client_idx.iter().map(|(tr, _)| tr.len().max(1) as f32).collect();
+    let ds = Arc::new(ds);
+    let logics: Vec<Box<dyn ClientLogic>> = per_client_idx
+        .into_iter()
+        .map(|(train_idx, test_idx)| {
+            Box::new(GcLogic {
+                ds: ds.clone(),
+                train_idx,
+                test_idx,
+                fedprox: cfg.method == Method::FedProx,
+                fedprox_mu: cfg.fedprox_mu,
+                engine: engine.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                n_pad,
+                e_pad,
+                g_pad,
+                d,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    let mut fed = Federation::spawn(
+        monitor,
+        &ChannelTransport,
+        cfg,
+        &global_init,
+        weights,
+        n_pad,
+        logics,
+    )?;
+    let all: Vec<usize> = (0..cfg.n_trainer).collect();
+
+    // Coordinator's view of each client's start-of-round model (global or
+    // cluster model), used for GCFL delta signals.
+    let mut client_model: Vec<ParamSet> = vec![global_init.clone(); cfg.n_trainer];
     let mut global = global_init.clone();
     if !self_train {
-        monitor.net.broadcast(Phase::Train, global.byte_len(), cfg.n_trainer);
+        let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, init_charge)?;
     }
     let mut last_acc = 0.0;
     for round in 0..cfg.global_rounds {
-        let selected =
-            select_clients(cfg.n_trainer, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
-        let mut updates: Vec<(usize, f32, ParamSet)> = Vec::new();
-        let mut crit_path = 0.0f64;
-        let mut round_loss = 0.0;
-        for &ci in &selected {
-            let t0 = std::time::Instant::now();
-            // Start from the (cluster-)global or own params.
-            let start = if self_train {
-                clients[ci].params.clone()
-            } else if let Some(st) = &gcfl {
-                // cluster model = average within cluster from previous round;
-                // stored in each member's params after aggregation below.
-                let _ = st;
-                clients[ci].params.clone()
-            } else {
-                global.clone()
-            };
-            let mut p = start.clone();
-            let mut loss = 0.0;
-            for _ in 0..cfg.local_steps {
-                if clients[ci].train_idx.is_empty() {
-                    break;
-                }
-                let k = g_pad.min(clients[ci].train_idx.len());
-                let picks = rng.sample_distinct(clients[ci].train_idx.len(), k);
-                let batch: Vec<&SmallGraph> =
-                    picks.iter().map(|&i| &ds.graphs[clients[ci].train_idx[i]]).collect();
-                let Some(mut data) = pack_gc_batch(&batch, n_pad, e_pad, g_pad, d) else {
-                    continue;
-                };
-                let mut args = p.to_tensors();
-                if cfg.method == Method::FedProx {
-                    args.extend(global.to_tensors()); // proximal anchor
-                }
-                args.append(&mut data);
-                args.push(Tensor::scalar_f32(cfg.learning_rate));
-                if cfg.method == Method::FedProx {
-                    args.push(Tensor::scalar_f32(cfg.fedprox_mu));
-                }
-                let outs = engine.execute(&train_art.name, args)?;
-                p.update_from_tensors(&outs);
-                loss = outs[6].scalar();
-            }
-            let secs = t0.elapsed().as_secs_f64();
-            monitor.add_secs("train", secs);
-            crit_path = crit_path.max(secs);
-            round_loss += loss as f64;
-            if let Some(st) = &mut gcfl {
-                let delta: Vec<f32> =
-                    p.flatten().iter().zip(start.flatten()).map(|(a, b)| a - b).collect();
-                st.observe(ci, &delta);
-            }
-            let w = clients[ci].train_idx.len().max(1) as f32;
-            if self_train {
-                clients[ci].params = p;
-            } else {
-                updates.push((ci, w, p));
-            }
-        }
+        let sim0 = monitor.net.total_concurrent_secs();
+        let sel = select_with_dropout(
+            cfg.n_trainer,
+            cfg.sample_ratio,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
+            &mut rng,
+        );
+        let results = fed.train_round(round, &sel.participants, !self_train)?;
+        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
         let t_agg = std::time::Instant::now();
         if let Some(st) = &mut gcfl {
+            // Observe uploaded deltas (participant order — deterministic).
+            for r in &results {
+                let RoundUpdate::Plain(p) = &r.update else {
+                    bail!("GCFL requires plaintext uploads");
+                };
+                let start = client_model[r.client].flatten();
+                let delta: Vec<f32> =
+                    p.flatten().iter().zip(&start).map(|(a, b)| a - b).collect();
+                st.observe(r.client, &delta);
+            }
             if round >= 4 && round % 5 == 0 {
                 st.maybe_split();
             }
-            // Aggregate within each cluster; members adopt the cluster model.
+            // Aggregate within each cluster; every member adopts the cluster
+            // model (the broadcast is charged per member, as before).
             for cluster in st.clusters.clone() {
-                let ups: Vec<(f32, ParamSet)> = updates
-                    .iter()
-                    .filter(|(ci, _, _)| cluster.contains(ci))
-                    .map(|(_, w, p)| (*w, p.clone()))
-                    .collect();
-                if ups.is_empty() {
+                let members: Vec<usize> =
+                    sel.participants.iter().copied().filter(|c| cluster.contains(c)).collect();
+                if members.is_empty() {
                     continue;
                 }
-                let model = aggregate_params(
-                    monitor,
-                    Phase::Train,
-                    &cfg.privacy,
-                    &ups,
-                    cluster.len(),
-                    n_pad,
-                    &mut rng,
-                )?;
+                let model = fed.aggregate_subset(round, &results, &members, &cluster)?;
                 for &ci in &cluster {
-                    clients[ci].params = model.clone();
+                    client_model[ci] = model.clone();
                 }
             }
             monitor.note("gcfl_clusters", st.clusters.len());
-        } else if !self_train && !updates.is_empty() {
-            let ups: Vec<(f32, ParamSet)> =
-                updates.iter().map(|(_, w, p)| (*w, p.clone())).collect();
-            global = aggregate_params(
-                monitor,
-                Phase::Train,
-                &cfg.privacy,
-                &ups,
-                cfg.n_trainer,
-                n_pad,
-                &mut rng,
-            )?;
+        } else if !self_train && !results.is_empty() {
+            global = fed.aggregate_and_broadcast(round, &results, &all)?;
         }
         let agg_secs = t_agg.elapsed().as_secs_f64();
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
-            last_acc = eval_gc(
-                engine, monitor, &eval_art.name, &ds, &clients, &global, self_train || gcfl.is_some(),
-                n_pad, e_pad, g_pad, d,
-            )?;
+            // Every actor evaluates its current model: the cluster/own model
+            // for GCFL & SelfTrain, the just-broadcast global otherwise.
+            monitor.start("eval");
+            let (correct, cnt) = fed.eval_round(round, &all, None)?;
+            monitor.stop("eval");
+            last_acc = if cnt > 0.0 { correct / cnt } else { 0.0 };
         }
         monitor.record_round(RoundRecord {
             round,
             train_secs: crit_path,
             agg_secs,
-            train_loss: round_loss / selected.len().max(1) as f64,
+            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
+            train_loss: round_loss / sel.participants.len().max(1) as f64,
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
+    fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
-    Ok(())
-}
-
-/// Evaluate on each client's local test graphs with the appropriate model
-/// (global, or the client/cluster model when `per_client`).
-#[allow(clippy::too_many_arguments)]
-fn eval_gc(
-    engine: &Engine,
-    monitor: &Monitor,
-    eval_name: &str,
-    ds: &GCDataset,
-    clients: &[GcClient],
-    global: &ParamSet,
-    per_client: bool,
-    n_pad: usize,
-    e_pad: usize,
-    g_pad: usize,
-    d: usize,
-) -> Result<f64> {
-    monitor.start("eval");
-    let mut correct = 0.0;
-    let mut cnt = 0.0;
-    for cl in clients {
-        let model = if per_client { &cl.params } else { global };
-        let mut i = 0;
-        while i < cl.test_idx.len() {
-            let hi = (i + g_pad).min(cl.test_idx.len());
-            let batch: Vec<&SmallGraph> =
-                cl.test_idx[i..hi].iter().map(|&k| &ds.graphs[k]).collect();
-            i = hi;
-            let Some(mut data) = pack_gc_batch(&batch, n_pad, e_pad, g_pad, d) else {
-                continue;
-            };
-            let mut args = model.to_tensors();
-            args.append(&mut data);
-            let outs = engine.execute(eval_name, args)?;
-            correct += outs[1].scalar() as f64;
-            cnt += outs[2].scalar() as f64;
-        }
+    if !self_train && gcfl.is_none() {
+        monitor.note(
+            "param_checksum",
+            format!("{:016x}", fnv1a(&encode_params(&global.values))),
+        );
     }
-    monitor.stop("eval");
-    Ok(if cnt > 0.0 { correct / cnt } else { 0.0 })
+    Ok(())
 }

@@ -11,28 +11,32 @@
 //! - **4D-FED-GNN+** — temporal training with *periodic* aggregation (every
 //!   4 rounds), the fast-and-light variant.
 //!
-//! AUC over held-out future edges + sampled negatives, computed in Rust from
-//! the `lp_eval` score artifact (`util::stats::auc`).
+//! Runs on the federation runtime: each region is a trainer actor. On
+//! non-aggregating rounds the actors keep training their own models
+//! (`upload: false` — nothing crosses the wire); aggregating rounds start by
+//! re-delivering the cached global (uncharged — clients kept the last
+//! broadcast) so the round trains from the shared model, exactly like the
+//! sequential reference. AUC over held-out future edges + sampled negatives,
+//! computed in the actor from the `lp_eval` score artifact
+//! (`util::stats::auc`).
 
 use anyhow::Result;
 
 use crate::config::{FedGraphConfig, Method};
 use crate::data::lp::{generate_lp, region_config, RegionData};
+use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate};
 use crate::graph::Block;
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::Phase;
+use crate::transport::link::ChannelTransport;
+use crate::transport::serialize::{encode_params, fnv1a};
+use crate::transport::{Direction, Phase, SimNet};
 use crate::util::rng::Rng;
 use crate::util::stats::auc;
 
-use super::aggregate::aggregate_params;
 use super::nc::block_tensors;
-
-struct LpClient {
-    region: RegionData,
-    block: Block,
-    params: ParamSet,
-}
+use super::selection::select_with_dropout;
+use std::sync::Arc;
 
 fn region_block(r: &RegionData, n_pad: usize, e_pad: usize) -> Block {
     let d = r.feat_dim;
@@ -92,6 +96,98 @@ fn sample_pairs(
     (pu, pv, nu, nv, pm)
 }
 
+/// LP trainer-actor logic: one region per actor.
+struct LpLogic {
+    region: RegionData,
+    block: Block,
+    method: Method,
+    temporal: bool,
+    global_rounds: usize,
+    engine: Engine,
+    net: Arc<SimNet>,
+    train_art: String,
+    eval_art: String,
+    p_pad: usize,
+    local_steps: usize,
+    learning_rate: f32,
+}
+
+impl ClientLogic for LpLogic {
+    fn train(&mut self, round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+        // Temporal window: train edges with time <= window_end (grows from
+        // 0.3 to 0.8 over the run — the train split ends at t=0.8).
+        let window_end = if self.temporal {
+            0.3 + 0.5 * (round as f32 + 1.0) / self.global_rounds as f32
+        } else {
+            1.0
+        };
+        let mut p = params.clone();
+        let mut loss = 0.0;
+        for _step in 0..self.local_steps {
+            let (pu, pv, nu, nv, pm) = sample_pairs(&self.region, window_end, self.p_pad, rng);
+            if pm.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let mut args = p.to_tensors();
+            args.extend(block_tensors(&self.block).into_iter().take(4)); // x, src, dst, enorm
+            args.push(Tensor::i32(&[self.p_pad], pu));
+            args.push(Tensor::i32(&[self.p_pad], pv));
+            args.push(Tensor::i32(&[self.p_pad], nu));
+            args.push(Tensor::i32(&[self.p_pad], nv));
+            args.push(Tensor::f32(&[self.p_pad], pm));
+            args.push(Tensor::scalar_f32(self.learning_rate));
+            let outs = self.engine.execute(&self.train_art, args)?;
+            p.update_from_tensors(&outs);
+            loss = outs[4].scalar();
+            // FedLink: model exchanged after every local step.
+            if self.method == Method::FedLink {
+                self.net.send(Phase::Train, Direction::Up, p.byte_len());
+                self.net.send(Phase::Train, Direction::Down, p.byte_len());
+            }
+        }
+        Ok(LocalUpdate { params: p, loss })
+    }
+
+    fn eval(&mut self, _round: usize, params: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+        let r = &self.region;
+        let mut scores: Vec<f32> = Vec::new();
+        let mut labels: Vec<bool> = Vec::new();
+        // Batch candidate pairs (pos then neg) through the score artifact.
+        let all_pairs: Vec<((u32, u32), bool)> = r
+            .test_pos
+            .iter()
+            .map(|&e| (e, true))
+            .chain(r.test_neg.iter().map(|&e| (e, false)))
+            .collect();
+        let mut i = 0;
+        while i < all_pairs.len() {
+            let hi = (i + self.p_pad).min(all_pairs.len());
+            let chunk = &all_pairs[i..hi];
+            i = hi;
+            let mut eu = vec![0i32; self.p_pad];
+            let mut ev = vec![0i32; self.p_pad];
+            for (k, ((u, v), _)) in chunk.iter().enumerate() {
+                eu[k] = *u as i32;
+                ev[k] = *v as i32;
+            }
+            let mut args = params.to_tensors();
+            args.extend(block_tensors(&self.block).into_iter().take(4));
+            args.push(Tensor::i32(&[self.p_pad], eu));
+            args.push(Tensor::i32(&[self.p_pad], ev));
+            let outs = self.engine.execute(&self.eval_art, args)?;
+            let s = outs[0].as_f32();
+            for (k, (_, lab)) in chunk.iter().enumerate() {
+                scores.push(s[k]);
+                labels.push(*lab);
+            }
+        }
+        if labels.is_empty() {
+            return Ok((0.0, 0.0));
+        }
+        Ok((auc(&scores, &labels), 1.0))
+    }
+}
+
 pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
     let countries = region_config(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!(
@@ -120,161 +216,96 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     let hidden = engine.manifest.hidden;
     let zdim = 32;
     let global_init = ParamSet::lp(d, hidden, zdim, &mut rng);
-    let mut clients: Vec<LpClient> = ds
-        .regions
-        .into_iter()
-        .map(|region| LpClient {
-            block: region_block(&region, n_pad, e_pad),
-            region,
-            params: global_init.clone(),
-        })
-        .collect();
-
     let temporal = matches!(cfg.method, Method::Stfl | Method::FourDFedGnnPlus);
     let local_only = cfg.method == Method::StaticGnn;
     let agg_period = if cfg.method == Method::FourDFedGnnPlus { 4 } else { 1 };
 
+    let weights: Vec<f32> =
+        ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
+    let logics: Vec<Box<dyn ClientLogic>> = ds
+        .regions
+        .into_iter()
+        .map(|region| {
+            Box::new(LpLogic {
+                block: region_block(&region, n_pad, e_pad),
+                region,
+                method: cfg.method,
+                temporal,
+                global_rounds: cfg.global_rounds,
+                engine: engine.clone(),
+                net: monitor.net.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                p_pad,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    let mut fed =
+        Federation::spawn(monitor, &ChannelTransport, cfg, &global_init, weights, n_pad, logics)?;
+    let all: Vec<usize> = (0..m).collect();
+
     let mut global = global_init.clone();
     if !local_only {
-        monitor.net.broadcast(Phase::Train, global.byte_len(), m);
+        let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, init_charge)?;
     }
     let mut last_auc = 0.0;
     for round in 0..cfg.global_rounds {
-        // Temporal window: train edges with time <= window_end (grows from
-        // 0.3 to 0.8 over the run — the train split ends at t=0.8).
-        let window_end = if temporal {
-            0.3 + 0.5 * (round as f32 + 1.0) / cfg.global_rounds as f32
-        } else {
-            1.0
-        };
-        let mut updates: Vec<(f32, ParamSet)> = Vec::new();
-        let mut crit_path = 0.0f64;
-        let mut round_loss = 0.0;
-        for ci in 0..m {
-            let t0 = std::time::Instant::now();
-            let mut p = if local_only || round % agg_period != 0 {
-                clients[ci].params.clone()
-            } else {
-                global.clone()
-            };
-            let mut loss = 0.0;
-            for _step in 0..cfg.local_steps {
-                let (pu, pv, nu, nv, pm) =
-                    sample_pairs(&clients[ci].region, window_end, p_pad, &mut rng);
-                if pm.iter().all(|&x| x == 0.0) {
-                    continue;
-                }
-                let b = &clients[ci].block;
-                let mut args = p.to_tensors();
-                args.extend(block_tensors(b).into_iter().take(4)); // x, src, dst, enorm
-                args.push(Tensor::i32(&[p_pad], pu));
-                args.push(Tensor::i32(&[p_pad], pv));
-                args.push(Tensor::i32(&[p_pad], nu));
-                args.push(Tensor::i32(&[p_pad], nv));
-                args.push(Tensor::f32(&[p_pad], pm));
-                args.push(Tensor::scalar_f32(cfg.learning_rate));
-                let outs = engine.execute(&train_art.name, args)?;
-                p.update_from_tensors(&outs);
-                loss = outs[4].scalar();
-                // FedLink: model exchanged after every local step.
-                if cfg.method == Method::FedLink {
-                    monitor.net.send(Phase::Train, crate::transport::Direction::Up, p.byte_len());
-                    monitor.net.send(
-                        Phase::Train,
-                        crate::transport::Direction::Down,
-                        p.byte_len(),
-                    );
-                }
-            }
-            let secs = t0.elapsed().as_secs_f64();
-            monitor.add_secs("train", secs);
-            crit_path = crit_path.max(secs);
-            round_loss += loss as f64;
-            clients[ci].params = p.clone();
-            if !local_only {
-                updates.push((clients[ci].region.train_edges.len().max(1) as f32, p));
-            }
+        let sim0 = monitor.net.total_concurrent_secs();
+        let agg_round = !local_only && round % agg_period == 0;
+        if agg_round && round > 0 && agg_period > 1 {
+            // Rewind every actor to the cached global from the last
+            // aggregating round (its own training in between is discarded,
+            // as in the sequential reference). Uncharged: clients kept the
+            // last broadcast locally. With agg_period == 1 the actors'
+            // current model already *is* the last broadcast global.
+            fed.broadcast_model(round, &global, &all, Charge::Free)?;
         }
+        // All regions train every round (the paper's LP setting has no
+        // sampling); dropouts still apply.
+        let sel = select_with_dropout(
+            m,
+            1.0,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
+            &mut rng,
+        );
+        let results = fed.train_round(round, &sel.participants, agg_round)?;
+        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
         let t_agg = std::time::Instant::now();
-        if !local_only && round % agg_period == 0 && !updates.is_empty() {
-            global = aggregate_params(
-                monitor,
-                Phase::Train,
-                &cfg.privacy,
-                &updates,
-                m,
-                n_pad,
-                &mut rng,
-            )?;
+        if agg_round && !results.is_empty() {
+            global = fed.aggregate_and_broadcast(round, &results, &all)?;
         }
         let agg_secs = t_agg.elapsed().as_secs_f64();
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
-            last_auc = eval_lp(engine, monitor, &eval_art.name, &clients, &global, local_only, p_pad)?;
+            monitor.start("eval");
+            let with = if local_only { None } else { Some(&global) };
+            let (auc_sum, auc_cnt) = fed.eval_round(round, &all, with)?;
+            monitor.stop("eval");
+            last_auc = if auc_cnt > 0.0 { auc_sum / auc_cnt } else { 0.0 };
         }
         monitor.record_round(RoundRecord {
             round,
             train_secs: crit_path,
             agg_secs,
-            train_loss: round_loss / m as f64,
+            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
+            train_loss: round_loss / sel.participants.len().max(1) as f64,
             test_accuracy: last_auc, // AUC in the accuracy slot for LP
         });
         monitor.sample_resources();
     }
+    fed.shutdown()?;
     monitor.note("final_auc", format!("{last_auc:.4}"));
-    Ok(())
-}
-
-fn eval_lp(
-    engine: &Engine,
-    monitor: &Monitor,
-    eval_name: &str,
-    clients: &[LpClient],
-    global: &ParamSet,
-    local_only: bool,
-    p_pad: usize,
-) -> Result<f64> {
-    monitor.start("eval");
-    let mut aucs = Vec::new();
-    for cl in clients {
-        let r = &cl.region;
-        let model = if local_only { &cl.params } else { global };
-        let mut scores: Vec<f32> = Vec::new();
-        let mut labels: Vec<bool> = Vec::new();
-        // Batch candidate pairs (pos then neg) through the score artifact.
-        let all_pairs: Vec<((u32, u32), bool)> = r
-            .test_pos
-            .iter()
-            .map(|&e| (e, true))
-            .chain(r.test_neg.iter().map(|&e| (e, false)))
-            .collect();
-        let mut i = 0;
-        while i < all_pairs.len() {
-            let hi = (i + p_pad).min(all_pairs.len());
-            let chunk = &all_pairs[i..hi];
-            i = hi;
-            let mut eu = vec![0i32; p_pad];
-            let mut ev = vec![0i32; p_pad];
-            for (k, ((u, v), _)) in chunk.iter().enumerate() {
-                eu[k] = *u as i32;
-                ev[k] = *v as i32;
-            }
-            let b = &cl.block;
-            let mut args = model.to_tensors();
-            args.extend(block_tensors(b).into_iter().take(4));
-            args.push(Tensor::i32(&[p_pad], eu));
-            args.push(Tensor::i32(&[p_pad], ev));
-            let outs = engine.execute(eval_name, args)?;
-            let s = outs[0].as_f32();
-            for (k, (_, lab)) in chunk.iter().enumerate() {
-                scores.push(s[k]);
-                labels.push(*lab);
-            }
-        }
-        if !labels.is_empty() {
-            aucs.push(auc(&scores, &labels));
-        }
+    if !local_only {
+        monitor.note(
+            "param_checksum",
+            format!("{:016x}", fnv1a(&encode_params(&global.values))),
+        );
     }
-    monitor.stop("eval");
-    Ok(if aucs.is_empty() { 0.0 } else { aucs.iter().sum::<f64>() / aucs.len() as f64 })
+    Ok(())
 }

@@ -2,6 +2,12 @@
 //! user-facing API (Fig 2, Appendix C) — dispatches to the task runner
 //! (`run_NC` / `run_GC` / `run_LP`), wires up the monitor + simulated
 //! network, and returns the system report.
+//!
+//! Each task runner owns its setup (datasets, partitioning, pre-train
+//! exchanges, artifact selection) and its round *schedule*; the mechanics of
+//! a round — actor threads, mailboxes, concurrency bounds, dropouts,
+//! stragglers, deterministic aggregation, and the communication ledger —
+//! live in [`crate::federation`].
 
 pub mod aggregate;
 pub mod fedgcn;

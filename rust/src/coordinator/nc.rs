@@ -1,36 +1,43 @@
 //! Federated node classification runner (paper §5.1.2, §5.3, Table 2).
 //!
-//! Implements the five NC algorithms of Table 5 on top of the shared round
-//! loop:
+//! Implements the five NC algorithms of Table 5 on top of the federation
+//! runtime ([`crate::federation`]): the method-specific pre-train exchange
+//! runs at the coordinator, then every client becomes a trainer actor whose
+//! [`ClientLogic`] samples blocks and steps the shared engine:
 //! - **FedAvg** — induced local subgraphs, no pre-train exchange;
 //! - **FedGCN** — pre-train neighbor-aggregate exchange (plain / HE /
 //!   low-rank / both), then local training on the aggregated inputs;
 //! - **Distributed-GCN** — halo nodes materialized with raw features;
-//! - **BNS-GCN** — halo re-sampled every round (boundary-node sampling);
+//! - **BNS-GCN** — halo re-sampled every round (boundary-node sampling),
+//!   with the feature re-shipment billed inside the actor;
 //! - **FedSage+** — linear NeighGen exchange imputing missing neighbors.
 //!
 //! Large graphs fall back to minibatch training (paper §3.4): when a client's
 //! node set exceeds the largest artifact bucket (or `batch_size` is set),
 //! each local step trains on a sampled fixed-shape neighborhood block.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::config::{FedGraphConfig, Method};
 use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset};
+use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate};
 use crate::graph::{
     block_from_induced, build_local_graphs, dirichlet_partition, sample_neighborhood, Block, Csr,
     LazyGraph, LocalGraph,
 };
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::{Direction, Phase};
+use crate::transport::link::ChannelTransport;
+use crate::transport::serialize::{encode_params, fnv1a};
+use crate::transport::{Direction, Phase, SimNet};
 use crate::util::rng::{hash_f32, Rng};
 
-use super::aggregate::aggregate_params;
 use super::fedgcn::{
     exchange_halo_features, fedgcn_pretrain, fedsage_features, fedsage_generators,
 };
-use super::selection::select_clients;
+use super::selection::select_with_dropout;
 
 /// Convert a block into the artifact's data-input tensors (manifest order:
 /// x, src, dst, enorm, labels, mask).
@@ -61,6 +68,97 @@ struct NcClient {
     eval_block: Option<Block>,
     /// Client training-node count (aggregation weight).
     train_count: usize,
+}
+
+/// The NC trainer-actor logic: owns the client's partition state and an
+/// engine handle; every random draw (minibatch sampling, BNS halo
+/// re-sampling) comes from the actor's persistent stream.
+struct NcLogic {
+    method: Method,
+    cl: NcClient,
+    /// The client's local-graph view, kept for BNS-GCN halo re-sampling.
+    local: Option<LocalGraph>,
+    ds: Arc<NCDataset>,
+    engine: Engine,
+    net: Arc<SimNet>,
+    train_art: String,
+    eval_art: String,
+    n_pad: usize,
+    e_pad: usize,
+    d_eff: usize,
+    minibatch: bool,
+    local_steps: usize,
+    batch_size: usize,
+    learning_rate: f32,
+    bns_ratio: f64,
+}
+
+impl ClientLogic for NcLogic {
+    fn train(&mut self, _round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+        if self.method == Method::BnsGcn {
+            // BNS-GCN re-samples boundary nodes (and re-ships their features).
+            let l = self.local.as_ref().expect("BNS logic keeps its local graph");
+            let mut cl = client_with_halo_resample(&self.ds, l, self.bns_ratio, rng, &self.net);
+            if !self.minibatch {
+                cl.train_block =
+                    Some(make_block(&cl, &self.ds, self.n_pad, self.e_pad, self.d_eff, 0));
+                cl.eval_block =
+                    Some(make_block(&cl, &self.ds, self.n_pad, self.e_pad, self.d_eff, 2));
+            }
+            self.cl = cl;
+        }
+        let mut p = params.clone();
+        let mut loss = 0.0;
+        for _step in 0..self.local_steps {
+            let block_storage;
+            let block = if self.minibatch {
+                block_storage = sample_minibatch(
+                    &self.cl,
+                    &self.ds,
+                    self.batch_size,
+                    self.n_pad,
+                    self.e_pad,
+                    self.d_eff,
+                    0,
+                    rng,
+                );
+                &block_storage
+            } else {
+                self.cl.train_block.as_ref().unwrap()
+            };
+            if block.num_masked() == 0 {
+                continue;
+            }
+            let mut args = p.to_tensors();
+            args.extend(block_tensors(block));
+            args.push(Tensor::scalar_f32(self.learning_rate));
+            let outs = self.engine.execute(&self.train_art, args)?;
+            p.update_from_tensors(&outs);
+            loss = outs[4].scalar();
+        }
+        Ok(LocalUpdate { params: p, loss })
+    }
+
+    fn eval(&mut self, _round: usize, params: &ParamSet, rng: &mut Rng) -> Result<(f64, f64)> {
+        let block_storage;
+        let block = if self.minibatch {
+            block_storage = sample_minibatch(
+                &self.cl, &self.ds, 512, self.n_pad, self.e_pad, self.d_eff, 2, rng,
+            );
+            &block_storage
+        } else {
+            self.cl.eval_block.as_ref().unwrap()
+        };
+        if block.num_masked() == 0 {
+            return Ok((0.0, 0.0));
+        }
+        let mut args = params.to_tensors();
+        args.extend(block_tensors(block));
+        let outs = self.engine.execute(&self.eval_art, args)?;
+        // Metric upload: three floats (the NC eval ledger entry).
+        self.net.send(Phase::Eval, Direction::Up, 12);
+        Ok((outs[1].scalar() as f64, outs[2].scalar() as f64))
+    }
 }
 
 pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
@@ -129,7 +227,7 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             }
         }
         Method::BnsGcn => {
-            // Initial halo sample; re-sampled per round in the loop below.
+            // Initial halo sample; re-sampled per round inside the actor.
             let halo_tables = exchange_halo_features(monitor, &ds.features, ds.feat_dim, &locals);
             for (l, halo) in locals.iter().zip(halo_tables) {
                 clients.push(client_with_halo(&ds, l, &halo, cfg.bns_ratio, &mut rng));
@@ -164,87 +262,81 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         }
     }
 
-    // ---- federated round loop --------------------------------------------
+    // ---- federated round loop over the actor runtime ---------------------
     let mut global = ParamSet::nc(d_eff, engine.manifest.hidden, c, &mut rng);
     let max_dim = ds.n().max(ds.feat_dim);
+    let weights: Vec<f32> = clients.iter().map(|cl| cl.train_count.max(1) as f32).collect();
+    let ds = Arc::new(ds);
+    let logics: Vec<Box<dyn ClientLogic>> = clients
+        .into_iter()
+        .zip(&locals)
+        .map(|(cl, l)| {
+            Box::new(NcLogic {
+                method: cfg.method,
+                local: (cfg.method == Method::BnsGcn).then(|| l.clone()),
+                cl,
+                ds: ds.clone(),
+                engine: engine.clone(),
+                net: monitor.net.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                n_pad,
+                e_pad,
+                d_eff,
+                minibatch,
+                local_steps: cfg.local_steps,
+                batch_size: cfg.batch_size,
+                learning_rate: cfg.learning_rate,
+                bns_ratio: cfg.bns_ratio,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    let mut fed =
+        Federation::spawn(monitor, &ChannelTransport, cfg, &global, weights, max_dim, logics)?;
+    let all: Vec<usize> = (0..cfg.n_trainer).collect();
     // Initial model broadcast.
-    monitor.net.broadcast(Phase::Train, global.byte_len(), cfg.n_trainer);
+    let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+    fed.broadcast_model(0, &global, &all, init_charge)?;
     let mut last_acc = 0.0;
     for round in 0..cfg.global_rounds {
-        let selected =
-            select_clients(cfg.n_trainer, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
-        // BNS-GCN re-samples boundary nodes (and re-ships their features).
-        if cfg.method == Method::BnsGcn {
-            for &ci in &selected {
-                let l = &locals[ci];
-                let cl = client_with_halo_resample(&ds, l, cfg.bns_ratio, &mut rng, monitor);
-                let mut cl = cl;
-                cl.train_block = Some(make_block(&cl, &ds, n_pad, e_pad, d_eff, 0));
-                cl.eval_block = Some(make_block(&cl, &ds, n_pad, e_pad, d_eff, 2));
-                clients[ci] = cl;
-            }
-        }
-        let mut updates: Vec<(f32, ParamSet)> = Vec::with_capacity(selected.len());
-        let mut round_loss = 0.0;
-        let mut crit_path = 0.0f64;
-        for &ci in &selected {
-            let cl = &clients[ci];
-            let t0 = std::time::Instant::now();
-            let mut p = global.clone();
-            let mut loss = 0.0;
-            for _step in 0..cfg.local_steps {
-                let block_storage;
-                let block = if minibatch {
-                    block_storage =
-                        sample_minibatch(cl, &ds, cfg.batch_size, n_pad, e_pad, d_eff, 0, &mut rng);
-                    &block_storage
-                } else {
-                    cl.train_block.as_ref().unwrap()
-                };
-                if block.num_masked() == 0 {
-                    continue;
-                }
-                let mut args = p.to_tensors();
-                args.extend(block_tensors(block));
-                args.push(Tensor::scalar_f32(cfg.learning_rate));
-                let outs = engine.execute(&train_art.name, args)?;
-                p.update_from_tensors(&outs);
-                loss = outs[4].scalar();
-            }
-            let secs = t0.elapsed().as_secs_f64();
-            monitor.add_secs("train", secs);
-            crit_path = crit_path.max(secs);
-            round_loss += loss as f64;
-            updates.push((cl.train_count.max(1) as f32, p));
-        }
-        let t_agg = std::time::Instant::now();
-        global = aggregate_params(
-            monitor,
-            Phase::Train,
-            &cfg.privacy,
-            &updates,
+        let sim0 = monitor.net.total_concurrent_secs();
+        let sel = select_with_dropout(
             cfg.n_trainer,
-            max_dim,
+            cfg.sample_ratio,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
             &mut rng,
-        )?;
+        );
+        let results = fed.train_round(round, &sel.participants, true)?;
+        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
+        let t_agg = std::time::Instant::now();
+        global = fed.aggregate_and_broadcast(round, &results, &all)?;
         let agg_secs = t_agg.elapsed().as_secs_f64();
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
-            last_acc = eval_nc(
-                engine, monitor, &eval_art.name, &clients, &ds, &global, minibatch, n_pad, e_pad,
-                d_eff, &mut rng,
-            )?;
+            monitor.start("eval");
+            let (correct, cnt) = fed.eval_round(round, &all, None)?;
+            monitor.stop("eval");
+            last_acc = if cnt > 0.0 { correct / cnt } else { 0.0 };
         }
         monitor.record_round(RoundRecord {
             round,
             train_secs: crit_path,
             agg_secs,
-            train_loss: round_loss / selected.len().max(1) as f64,
+            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
+            train_loss: round_loss / sel.participants.len().max(1) as f64,
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
+    fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note(
+        "param_checksum",
+        format!("{:016x}", fnv1a(&encode_params(&global.values))),
+    );
     Ok(())
 }
 
@@ -299,18 +391,18 @@ fn client_with_halo(
 }
 
 /// BNS-GCN per-round variant: re-sample and account the feature re-shipment
-/// as training-phase communication.
+/// as training-phase communication (runs inside the trainer actor).
 fn client_with_halo_resample(
     ds: &NCDataset,
     l: &LocalGraph,
     keep_ratio: f64,
     rng: &mut Rng,
-    monitor: &Monitor,
+    net: &SimNet,
 ) -> NcClient {
     let kept: Vec<usize> = (0..l.halo.len()).filter(|_| rng.chance(keep_ratio)).collect();
     let bytes = (kept.len() * ds.feat_dim * 4) as u64;
-    monitor.net.send(Phase::Train, Direction::Up, bytes);
-    monitor.net.send(Phase::Train, Direction::Down, bytes);
+    net.send(Phase::Train, Direction::Up, bytes);
+    net.send(Phase::Train, Direction::Down, bytes);
     let halo_features: Vec<f32> =
         l.halo.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
     build_halo_client(ds, l, &halo_features, &kept)
@@ -432,53 +524,67 @@ fn sample_minibatch(
     )
 }
 
-#[allow(clippy::too_many_arguments)]
-fn eval_nc(
-    engine: &Engine,
-    monitor: &Monitor,
-    eval_name: &str,
-    clients: &[NcClient],
-    ds: &NCDataset,
-    global: &ParamSet,
-    minibatch: bool,
-    n_pad: usize,
-    e_pad: usize,
-    d_eff: usize,
-    rng: &mut Rng,
-) -> Result<f64> {
-    monitor.start("eval");
-    let mut correct = 0.0f64;
-    let mut cnt = 0.0f64;
-    for cl in clients {
-        let block_storage;
-        let block = if minibatch {
-            block_storage = sample_minibatch(cl, ds, 512, n_pad, e_pad, d_eff, 2, rng);
-            &block_storage
-        } else {
-            cl.eval_block.as_ref().unwrap()
-        };
-        if block.num_masked() == 0 {
-            continue;
-        }
-        let mut args = global.to_tensors();
-        args.extend(block_tensors(block));
-        let outs = engine.execute(eval_name, args)?;
-        correct += outs[1].scalar() as f64;
-        cnt += outs[2].scalar() as f64;
-        // Metric upload: three floats.
-        monitor.net.send(Phase::Eval, Direction::Up, 12);
-    }
-    monitor.stop("eval");
-    Ok(if cnt > 0.0 { correct / cnt } else { 0.0 })
-}
-
 // ---------------------------------------------------------------------------
 // papers100m-sim: lazy 100M-node runner (paper §5.3, Fig 12)
 // ---------------------------------------------------------------------------
 
+/// Lazy trainer logic: clients sample minibatch blocks directly from the
+/// hash-defined adjacency — the graph is never materialized.
+struct LazyNcLogic {
+    client: usize,
+    g: Arc<LazyGraph>,
+    ranges: Vec<(u64, u64)>,
+    engine: Engine,
+    train_art: String,
+    eval_art: String,
+    n_pad: usize,
+    e_pad: usize,
+    batch: usize,
+    local_steps: usize,
+    learning_rate: f32,
+    seed: u64,
+}
+
+impl ClientLogic for LazyNcLogic {
+    fn train(&mut self, _round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+        let mut p = params.clone();
+        let mut loss = 0.0;
+        for _ in 0..self.local_steps {
+            let block =
+                lazy_block(&self.g, &self.ranges, self.batch, self.n_pad, self.e_pad, false, rng);
+            if block.num_masked() == 0 {
+                continue;
+            }
+            let mut args = p.to_tensors();
+            args.extend(block_tensors(&block));
+            args.push(Tensor::scalar_f32(self.learning_rate));
+            let outs = self.engine.execute(&self.train_art, args)?;
+            p.update_from_tensors(&outs);
+            loss = outs[4].scalar();
+        }
+        Ok(LocalUpdate { params: p, loss })
+    }
+
+    fn eval(&mut self, round: usize, params: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+        // Round-derived eval stream, stable across concurrency and unaffected
+        // by the training stream (the accuracy curve stays comparable).
+        let mut eval_rng = Rng::seeded(
+            self.seed ^ 0xE7A1 ^ round as u64 ^ (self.client as u64).wrapping_mul(0x9E37),
+        );
+        let block =
+            lazy_block(&self.g, &self.ranges, 256, self.n_pad, self.e_pad, true, &mut eval_rng);
+        if block.num_masked() == 0 {
+            return Ok((0.0, 0.0));
+        }
+        let mut args = params.to_tensors();
+        args.extend(block_tensors(&block));
+        let outs = self.engine.execute(&self.eval_art, args)?;
+        Ok((outs[1].scalar() as f64, outs[2].scalar() as f64))
+    }
+}
+
 /// Node-count override for the lazy dataset: `scale` × 10^8 nodes (Fig 12's
-/// 195-client power-law setting). The graph is never materialized — clients
-/// sample minibatch blocks directly from the hash-defined adjacency.
+/// 195-client power-law setting).
 pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
     if cfg.method != Method::FedAvgNC && cfg.method != Method::FedGcn {
         bail!("papers100m-sim supports FedAvg/FedGCN minibatch training");
@@ -517,66 +623,63 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
     monitor.note("artifact", &train_art.name);
 
     let mut global = ParamSet::nc(d, engine.manifest.hidden, c_classes, &mut rng);
-    monitor.net.broadcast(Phase::Train, global.byte_len(), m);
+    let max_dim = g.feat_dim.max(n_pad);
+    let g = Arc::new(g);
+    let logics: Vec<Box<dyn ClientLogic>> = client_ranges
+        .iter()
+        .enumerate()
+        .map(|(client, ranges)| {
+            Box::new(LazyNcLogic {
+                client,
+                g: g.clone(),
+                ranges: ranges.clone(),
+                engine: engine.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                n_pad,
+                e_pad,
+                batch,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+                seed: cfg.seed,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    let mut fed = Federation::spawn(
+        monitor,
+        &ChannelTransport,
+        cfg,
+        &global,
+        vec![1.0; m],
+        max_dim,
+        logics,
+    )?;
+    let all: Vec<usize> = (0..m).collect();
+    // Evaluate on a fixed client subset to bound eval cost at scale (stable
+    // across rounds so the accuracy curve is comparable).
+    let eval_targets: Vec<usize> = (0..m.min(12)).collect();
+    let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+    fed.broadcast_model(0, &global, &all, init_charge)?;
     let mut last_acc = 0.0;
     for round in 0..cfg.global_rounds {
-        let selected = select_clients(m, cfg.sample_ratio, cfg.sampling_type, round, &mut rng);
-        let mut updates = Vec::with_capacity(selected.len());
-        let mut crit_path = 0.0f64;
-        let mut round_loss = 0.0;
-        for &ci in &selected {
-            let t0 = std::time::Instant::now();
-            let mut p = global.clone();
-            let mut loss = 0.0;
-            for _ in 0..cfg.local_steps {
-                let block = lazy_block(&g, &client_ranges[ci], batch, n_pad, e_pad, false, &mut rng);
-                if block.num_masked() == 0 {
-                    continue;
-                }
-                let mut args = p.to_tensors();
-                args.extend(block_tensors(&block));
-                args.push(Tensor::scalar_f32(cfg.learning_rate));
-                let outs = engine.execute(&train_art.name, args)?;
-                p.update_from_tensors(&outs);
-                loss = outs[4].scalar();
-            }
-            let secs = t0.elapsed().as_secs_f64();
-            monitor.add_secs("train", secs);
-            crit_path = crit_path.max(secs);
-            round_loss += loss as f64;
-            updates.push((1.0f32, p));
-        }
-        let t_agg = std::time::Instant::now();
-        global = aggregate_params(
-            monitor,
-            Phase::Train,
-            &cfg.privacy,
-            &updates,
+        let sim0 = monitor.net.total_concurrent_secs();
+        let sel = select_with_dropout(
             m,
-            g.feat_dim.max(n_pad),
+            cfg.sample_ratio,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
             &mut rng,
-        )?;
+        );
+        let results = fed.train_round(round, &sel.participants, true)?;
+        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
+        let t_agg = std::time::Instant::now();
+        global = fed.aggregate_and_broadcast(round, &results, &all)?;
         let agg_secs = t_agg.elapsed().as_secs_f64();
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
             monitor.start("eval");
-            let mut correct = 0.0;
-            let mut cnt = 0.0;
-            // Evaluate on a fixed client subset to bound eval cost at scale
-            // (stable across rounds so the accuracy curve is comparable).
-            let eval_rng_seed = cfg.seed ^ 0xE7A1 ^ round as u64;
-            let mut eval_rng = Rng::seeded(eval_rng_seed);
-            for ci in 0..m.min(12) {
-                let block =
-                    lazy_block(&g, &client_ranges[ci], 256, n_pad, e_pad, true, &mut eval_rng);
-                if block.num_masked() == 0 {
-                    continue;
-                }
-                let mut args = global.to_tensors();
-                args.extend(block_tensors(&block));
-                let outs = engine.execute(&eval_art.name, args)?;
-                correct += outs[1].scalar() as f64;
-                cnt += outs[2].scalar() as f64;
-            }
+            let (correct, cnt) = fed.eval_round(round, &eval_targets, None)?;
             monitor.stop("eval");
             if cnt > 0.0 {
                 last_acc = correct / cnt;
@@ -586,12 +689,18 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
             round,
             train_secs: crit_path,
             agg_secs,
-            train_loss: round_loss / selected.len().max(1) as f64,
+            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
+            train_loss: round_loss / sel.participants.len().max(1) as f64,
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
+    fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note(
+        "param_checksum",
+        format!("{:016x}", fnv1a(&encode_params(&global.values))),
+    );
     Ok(())
 }
 

@@ -1,6 +1,8 @@
 //! Client selection (paper Appendix A.1): `random` draws a fresh subset per
 //! round; `uniform` rotates a contiguous window so every client participates
-//! equally often.
+//! equally often. [`select_with_dropout`] layers the federation runtime's
+//! per-round client dropouts on top: a dropped client's round is skipped
+//! entirely and aggregation renormalizes over the survivors.
 
 use crate::config::SamplingType;
 use crate::util::rng::Rng;
@@ -28,6 +30,54 @@ pub fn select_clients(
                 .collect()
         }
     }
+}
+
+/// A round's participation decision.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Clients the sampler picked for the round.
+    pub selected: Vec<usize>,
+    /// Selected clients that actually train (selected minus dropouts).
+    pub participants: Vec<usize>,
+    /// Selected clients that dropped out this round.
+    pub dropped: Vec<usize>,
+}
+
+/// Select the round's clients, then drop each independently with probability
+/// `dropout_frac` (the `federation.dropout_frac` config). At least one
+/// participant always survives so the round can aggregate. The dropout draws
+/// come from the coordinator's RNG in selection order, so the decision is
+/// deterministic and independent of trainer scheduling.
+pub fn select_with_dropout(
+    num_clients: usize,
+    sample_ratio: f64,
+    sampling_type: SamplingType,
+    dropout_frac: f64,
+    round: usize,
+    rng: &mut Rng,
+) -> Selection {
+    assert!((0.0..1.0).contains(&dropout_frac), "dropout_frac must be in [0, 1)");
+    let selected = select_clients(num_clients, sample_ratio, sampling_type, round, rng);
+    if dropout_frac == 0.0 {
+        return Selection { participants: selected.clone(), selected, dropped: Vec::new() };
+    }
+    let mut participants = Vec::with_capacity(selected.len());
+    let mut dropped = Vec::new();
+    for &c in &selected {
+        if rng.chance(dropout_frac) {
+            dropped.push(c);
+        } else {
+            participants.push(c);
+        }
+    }
+    if participants.is_empty() {
+        // Resurrect the first selected client: a round with zero survivors
+        // has nothing to aggregate.
+        let c = selected[0];
+        dropped.retain(|&d| d != c);
+        participants.push(c);
+    }
+    Selection { selected, participants, dropped }
 }
 
 #[cfg(test)]
@@ -70,5 +120,44 @@ mod tests {
         let mut rng = Rng::seeded(4);
         let s = select_clients(100, 0.001, SamplingType::Random, 0, &mut rng);
         assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn dropout_partitions_the_selection() {
+        let mut rng = Rng::seeded(5);
+        let mut ever_dropped = 0usize;
+        for round in 0..50 {
+            let sel =
+                select_with_dropout(20, 1.0, SamplingType::Random, 0.3, round, &mut rng);
+            assert_eq!(sel.selected.len(), 20);
+            assert!(!sel.participants.is_empty());
+            assert_eq!(sel.participants.len() + sel.dropped.len(), sel.selected.len());
+            for d in &sel.dropped {
+                assert!(!sel.participants.contains(d));
+            }
+            ever_dropped += sel.dropped.len();
+        }
+        // ~30% of 1000 draws; loose bounds.
+        assert!((150..450).contains(&ever_dropped), "dropped {ever_dropped}");
+    }
+
+    #[test]
+    fn zero_dropout_is_passthrough() {
+        let mut a = Rng::seeded(6);
+        let mut b = Rng::seeded(6);
+        let plain = select_clients(10, 0.5, SamplingType::Random, 3, &mut a);
+        let sel = select_with_dropout(10, 0.5, SamplingType::Random, 0.0, 3, &mut b);
+        assert_eq!(sel.participants, plain);
+        assert!(sel.dropped.is_empty());
+    }
+
+    #[test]
+    fn dropout_always_leaves_a_survivor() {
+        let mut rng = Rng::seeded(7);
+        for round in 0..200 {
+            let sel =
+                select_with_dropout(3, 0.34, SamplingType::Random, 0.99, round, &mut rng);
+            assert!(!sel.participants.is_empty());
+        }
     }
 }

@@ -1,0 +1,262 @@
+//! Trainer actors: one OS thread + mailbox per client.
+//!
+//! An actor owns its [`ClientLogic`] (local data, engine handle, artifact
+//! names), its **current model** (updated by `SetModel` broadcasts and by its
+//! own training), and a **persistent seeded RNG stream** — the key to the
+//! runtime's determinism guarantee: because every random decision a client
+//! makes is drawn from its own stream, results are bitwise-identical no
+//! matter how rounds interleave across threads or what `max_concurrency` is.
+//!
+//! Compute is bounded by a shared [`Semaphore`]: the actor receives its
+//! `Train` order immediately (message passing is cheap) but waits for a
+//! permit before touching the engine, reporting the wait separately so the
+//! monitor can attribute round time to compute vs. wait vs. transfer.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::he::{gaussian_mechanism, CkksContext, DpParams};
+use crate::runtime::ParamSet;
+use crate::transport::link::TrainerLink;
+use crate::util::rng::{hash_f32, Rng};
+use crate::util::sync::Semaphore;
+use crate::util::timer::timed;
+
+use super::protocol::{DownMsg, UpMsg, UpdateEnvelope, UpdatePayload};
+
+/// Render a panic payload into a `Failed` message body.
+fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
+/// Per-task local behavior run inside a trainer actor. Implementations hold
+/// everything a client owns: its partition of the data, an [`crate::runtime::Engine`]
+/// handle, and any per-client caches (blocks, halo tables, ...).
+pub trait ClientLogic: Send {
+    /// One round of local training starting from `params`. `rng` is this
+    /// client's persistent stream.
+    fn train(&mut self, round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate>;
+
+    /// Evaluate `params` on the client's held-out data. Returns the
+    /// task-specific metric pieces `(numerator, denominator)`:
+    /// correct/total counts for NC and GC, `(auc, 1)` for LP.
+    fn eval(&mut self, round: usize, params: &ParamSet, rng: &mut Rng) -> Result<(f64, f64)>;
+}
+
+/// A completed local round. Aggregation weights are not part of the update:
+/// the session's static per-client weight table (fixed at
+/// [`crate::federation::Federation::spawn`]) is the single source of truth
+/// for both the HE pre-scale and the plaintext weighted average.
+pub struct LocalUpdate {
+    pub params: ParamSet,
+    pub loss: f32,
+}
+
+/// Client-side privacy treatment of uploads.
+#[derive(Clone)]
+pub enum PrivacyEngine {
+    Plain,
+    /// Gaussian-mechanism DP: noise is added to the *uploaded copy* with the
+    /// client's own RNG; the client keeps its exact local model.
+    Dp(DpParams),
+    /// CKKS: the update is pre-scaled by the coordinator-assigned share and
+    /// encrypted under the session context. `max_dim` feeds the parameter
+    /// validity rule.
+    He { ctx: CkksContext, max_dim: usize },
+}
+
+/// Everything an actor thread needs, bundled for the spawn call.
+pub struct ActorSetup {
+    pub client: usize,
+    pub logic: Box<dyn ClientLogic>,
+    pub link: Box<dyn TrainerLink>,
+    pub gate: Arc<Semaphore>,
+    pub privacy: PrivacyEngine,
+    /// Session model template: names/shapes plus the public initial values.
+    pub init: ParamSet,
+    /// This client's persistent RNG stream.
+    pub rng: Rng,
+    /// Straggler injection: max delay (ms) and the hash seed that picks each
+    /// round's deterministic per-client fraction of it.
+    pub straggler_ms: f64,
+    pub straggler_seed: u64,
+}
+
+/// Actor thread main loop. Runs until `Stop` or a broken link.
+pub fn actor_main(setup: ActorSetup) {
+    let ActorSetup {
+        client,
+        mut logic,
+        mut link,
+        gate,
+        privacy,
+        init,
+        mut rng,
+        straggler_ms,
+        straggler_seed,
+    } = setup;
+    let mut model = init;
+    let cid = client as u32;
+    loop {
+        let frame = match link.recv() {
+            Ok(f) => f,
+            Err(_) => return, // coordinator gone
+        };
+        let msg = match DownMsg::decode(&frame) {
+            Ok(m) => m,
+            Err(e) => {
+                let _ = link.send(
+                    UpMsg::Failed { client: cid, error: format!("bad frame: {e}") }.encode().into(),
+                );
+                continue;
+            }
+        };
+        match msg {
+            DownMsg::Stop => return,
+            DownMsg::Hello { .. } => {
+                if link.send(UpMsg::HelloAck { client: cid }.encode().into()).is_err() {
+                    return;
+                }
+            }
+            DownMsg::SetModel { round: _, values } => {
+                if values.len() != model.values.len()
+                    || values.iter().zip(&model.values).any(|(a, b)| a.len() != b.len())
+                {
+                    let _ = link.send(
+                        UpMsg::Failed {
+                            client: cid,
+                            error: "SetModel shape mismatch".to_string(),
+                        }
+                        .encode()
+                        .into(),
+                    );
+                    continue;
+                }
+                model.values = values;
+            }
+            DownMsg::Train { round, scale, upload } => {
+                let t_wait = std::time::Instant::now();
+                let _permit = gate.acquire();
+                let wait_secs = t_wait.elapsed().as_secs_f64();
+                let t0 = std::time::Instant::now();
+                if straggler_ms > 0.0 {
+                    let frac = hash_f32(straggler_seed, round as u64, cid as u64) as f64;
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        frac * straggler_ms / 1e3,
+                    ));
+                }
+                // A panic in task logic must not kill the thread silently —
+                // the coordinator would block on the missing update forever.
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    logic.train(round as usize, &model, &mut rng)
+                }));
+                let reply = match outcome {
+                    Ok(Ok(up)) => {
+                        let compute_secs = t0.elapsed().as_secs_f64();
+                        let mut privacy_secs = 0.0;
+                        let payload = if !upload {
+                            UpdatePayload::None
+                        } else {
+                            match &privacy {
+                                PrivacyEngine::Plain => {
+                                    UpdatePayload::Plain(up.params.values.clone())
+                                }
+                                PrivacyEngine::Dp(dp) => {
+                                    let mut flat = up.params.flatten();
+                                    let (_, secs) = timed(|| {
+                                        gaussian_mechanism(&mut flat, dp, &mut rng);
+                                    });
+                                    privacy_secs = secs;
+                                    UpdatePayload::Plain(
+                                        up.params.unflatten_from(&flat).values,
+                                    )
+                                }
+                                PrivacyEngine::He { ctx, max_dim } => {
+                                    let mut flat = up.params.flatten();
+                                    for x in flat.iter_mut() {
+                                        *x *= scale;
+                                    }
+                                    let (ct, secs) = timed(|| ctx.encrypt(&flat, *max_dim));
+                                    privacy_secs = secs;
+                                    UpdatePayload::Encrypted(ct)
+                                }
+                            }
+                        };
+                        // The client's own model advances to its (un-noised)
+                        // trained parameters.
+                        model = up.params;
+                        UpMsg::Update(UpdateEnvelope {
+                            client: cid,
+                            round,
+                            loss: up.loss,
+                            compute_secs,
+                            wait_secs,
+                            privacy_secs,
+                            payload,
+                        })
+                    }
+                    Ok(Err(e)) => UpMsg::Failed { client: cid, error: format!("{e:#}") },
+                    Err(p) => UpMsg::Failed {
+                        client: cid,
+                        error: format!("panic in trainer logic: {}", panic_text(p)),
+                    },
+                };
+                if link.send(reply.encode().into()).is_err() {
+                    return;
+                }
+            }
+            DownMsg::Eval { round, values } => {
+                let _permit = gate.acquire();
+                let reply = {
+                    let eval_model_storage;
+                    let eval_model = match values {
+                        Some(v)
+                            if v.len() == model.values.len()
+                                && v.iter()
+                                    .zip(&model.values)
+                                    .all(|(a, b)| a.len() == b.len()) =>
+                        {
+                            eval_model_storage = ParamSet {
+                                names: model.names.clone(),
+                                shapes: model.shapes.clone(),
+                                values: v,
+                            };
+                            &eval_model_storage
+                        }
+                        Some(_) => {
+                            let _ = link.send(
+                                UpMsg::Failed {
+                                    client: cid,
+                                    error: "Eval model shape mismatch".to_string(),
+                                }
+                                .encode()
+                                .into(),
+                            );
+                            continue;
+                        }
+                        None => &model,
+                    };
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        logic.eval(round as usize, eval_model, &mut rng)
+                    }));
+                    match outcome {
+                        Ok(Ok((num, den))) => UpMsg::Metric { client: cid, round, num, den },
+                        Ok(Err(e)) => UpMsg::Failed { client: cid, error: format!("{e:#}") },
+                        Err(p) => UpMsg::Failed {
+                            client: cid,
+                            error: format!("panic in trainer logic: {}", panic_text(p)),
+                        },
+                    }
+                };
+                if link.send(reply.encode().into()).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}

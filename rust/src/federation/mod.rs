@@ -1,0 +1,69 @@
+//! # The message-passing federation runtime
+//!
+//! This subsystem turns the library from a simulator loop into a federation
+//! *system*: each trainer is an **actor** on its own OS thread with an mpsc
+//! mailbox, and the coordinator is an **event loop** driving a typed round
+//! protocol. Local training of different clients genuinely overlaps (bounded
+//! by `federation.max_concurrency`) while results stay bitwise-identical to
+//! the sequential reference.
+//!
+//! ## Round protocol
+//!
+//! ```text
+//! Rendezvous → [ BroadcastModel → LocalTrain → UploadUpdate → Aggregate ]* → Finish
+//! ```
+//!
+//! - **Rendezvous** — [`runtime::Federation::spawn`] opens the transport,
+//!   moves each task's [`actor::ClientLogic`] onto a named trainer thread,
+//!   and handshakes (`Hello`/`HelloAck`) with every actor.
+//! - **BroadcastModel** — [`runtime::Federation::broadcast_model`] ships the
+//!   global (or per-cluster) model as a `SetModel` frame; charged per link.
+//! - **LocalTrain** — `Train` orders carry the round number, the client's
+//!   pre-agreed aggregation share (HE pre-scaling), and whether the result
+//!   uploads. Actors acquire a concurrency permit, optionally straggle
+//!   (deterministic per-(round, client) delay), and run their task logic.
+//! - **UploadUpdate** — updates flow back serialized (plaintext, DP-noised,
+//!   or CKKS-encrypted client-side) and are ledgered as one concurrent
+//!   upload group.
+//! - **Aggregate** — [`runtime::Federation::aggregate_and_broadcast`]
+//!   combines in deterministic participant order and broadcasts the result.
+//! - **Finish** — `Stop` frames; threads join.
+//!
+//! Client sampling and dropouts are coordinator decisions
+//! ([`crate::coordinator::selection::select_with_dropout`]); a dropped
+//! client's round is skipped entirely and the weighted average renormalizes
+//! over the survivors.
+//!
+//! ## Layering
+//!
+//! ```text
+//! coordinator/{nc,gc,lp}.rs   task setup + round schedule (what to train/aggregate)
+//!         │  ClientLogic per client
+//! federation::runtime         event loop, sampling/dropout, deterministic aggregation
+//! federation::actor           trainer threads, concurrency gate, client-side privacy
+//! federation::protocol        typed messages ⇄ checksummed byte frames
+//! transport::link             Transport trait; backend #1: in-memory channels
+//! transport::SimNet           byte/phase ledger; serial + concurrent link time
+//! runtime::Engine             shared PJRT compute service (its own thread)
+//! ```
+//!
+//! A TCP or multi-process backend only has to implement
+//! [`crate::transport::link::Transport`]; everything above the frame level is
+//! backend-agnostic.
+//!
+//! ## Determinism
+//!
+//! Three rules make `max_concurrency = k` bitwise-identical to
+//! `max_concurrency = 1` for every k (see `runtime` tests and
+//! `tests/federation_determinism.rs`): per-client persistent RNG streams,
+//! aggregation in participant order (never completion order), and grouped
+//! ledger writes in that same order. Simulated network time distinguishes the
+//! serialized view (`sim_secs`, the pre-federation single-wire model) from
+//! the concurrent view (`concurrent_secs`, max over parallel links).
+
+pub mod actor;
+pub mod protocol;
+pub mod runtime;
+
+pub use actor::{ClientLogic, LocalUpdate};
+pub use runtime::{Charge, Federation, RoundUpdate, TrainResult};

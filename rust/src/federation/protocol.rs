@@ -1,0 +1,429 @@
+//! The typed coordinator ⇄ trainer round protocol and its wire encoding.
+//!
+//! Every message crossing a [`crate::transport::link::Transport`] backend is
+//! one checksummed frame produced here with the shared wire format
+//! ([`crate::transport::serialize`]). A round is the exchange
+//!
+//! ```text
+//! coordinator                                   trainer i
+//!     | -- Hello ------------------------------->  |   (rendezvous)
+//!     | <------------------------------ HelloAck --|
+//!     | -- SetModel(params) -------------------->  |   (broadcast, charged)
+//!     | -- Train { round, scale, upload } ------>  |   (control)
+//!     |            ... local training, bounded by the concurrency gate ...
+//!     | <--------------- Update { payload, .. } -- |   (charged upload)
+//!     |        aggregate in deterministic client order, then next round
+//!     | -- Eval { params? } -------------------->  |   (control)
+//!     | <------------------- Metric { num, den } --|
+//!     | -- Stop -------------------------------->  |
+//! ```
+//!
+//! **Ledger rule.** Only *data-plane* payloads are charged to the
+//! [`crate::transport::SimNet`]: model broadcasts (`SetModel`) and model
+//! uploads (`Update` with a payload). Control frames (`Hello`, `Train`,
+//! `Eval`, `Stop`, `Metric`) are orchestration that the paper's measured
+//! system does not bill as communication cost; likewise an `Eval` model
+//! override stands in for server-side evaluation and a re-sent cached model
+//! (see the runtime docs) — both are explicitly uncharged.
+
+use crate::he::Ciphertext;
+use crate::transport::serialize::{Reader, WireError, Writer};
+
+/// Coordinator → trainer messages.
+#[derive(Debug)]
+pub enum DownMsg {
+    /// Rendezvous probe; the trainer answers with [`UpMsg::HelloAck`].
+    Hello { client: u32 },
+    /// Replace the trainer's current model with these parameter values
+    /// (shapes/names are fixed by the session's init model).
+    SetModel { round: u32, values: Vec<Vec<f32>> },
+    /// Run one round of local training from the current model. `scale` is
+    /// the pre-agreed aggregation share (used by the HE path to pre-scale
+    /// before encryption); `upload` says whether the result must be shipped
+    /// back (self-training and non-aggregating rounds keep it local).
+    Train { round: u32, scale: f32, upload: bool },
+    /// Evaluate the current model, or `values` when provided (server-side
+    /// evaluation stand-in, uncharged).
+    Eval { round: u32, values: Option<Vec<Vec<f32>>> },
+    /// Finish the session; the trainer thread exits.
+    Stop,
+}
+
+/// The model-update payload of an [`UpMsg::Update`].
+#[derive(Debug)]
+pub enum UpdatePayload {
+    /// Training ran but the update stays local (`upload: false`).
+    None,
+    /// Plaintext (or DP-noised) parameter values.
+    Plain(Vec<Vec<f32>>),
+    /// CKKS ciphertext, pre-scaled by the client's aggregation share.
+    Encrypted(Ciphertext),
+}
+
+/// One trainer's round result.
+#[derive(Debug)]
+pub struct UpdateEnvelope {
+    pub client: u32,
+    pub round: u32,
+    pub loss: f32,
+    /// Local compute seconds (incl. injected straggler delay).
+    pub compute_secs: f64,
+    /// Seconds spent blocked on the concurrency gate.
+    pub wait_secs: f64,
+    /// Client-side privacy seconds (HE encrypt / DP noise).
+    pub privacy_secs: f64,
+    pub payload: UpdatePayload,
+}
+
+/// Trainer → coordinator messages.
+#[derive(Debug)]
+pub enum UpMsg {
+    HelloAck { client: u32 },
+    Update(UpdateEnvelope),
+    /// Evaluation result: task-specific (numerator, denominator) —
+    /// correct/total for NC & GC, (auc, 1) for LP.
+    Metric { client: u32, round: u32, num: f64, den: f64 },
+    /// The trainer failed; the coordinator aborts the run with `error`.
+    Failed { client: u32, error: String },
+}
+
+const D_HELLO: u8 = 1;
+const D_SET_MODEL: u8 = 2;
+const D_TRAIN: u8 = 3;
+const D_EVAL: u8 = 4;
+const D_STOP: u8 = 5;
+
+const U_HELLO_ACK: u8 = 1;
+const U_UPDATE: u8 = 2;
+const U_METRIC: u8 = 3;
+const U_FAILED: u8 = 4;
+
+const P_NONE: u8 = 0;
+const P_PLAIN: u8 = 1;
+const P_ENCRYPTED: u8 = 2;
+
+fn write_values(w: &mut Writer, values: &[Vec<f32>]) {
+    w.u32(values.len() as u32);
+    for v in values {
+        w.f32s(v);
+    }
+}
+
+fn read_values(r: &mut Reader<'_>) -> Result<Vec<Vec<f32>>, WireError> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(r.f32s()?);
+    }
+    Ok(out)
+}
+
+/// Exact encoded length of a `SetModel` frame carrying tensors of these
+/// lengths, without building the frame: tag (1) + round (4) + tensor count
+/// (4) + per tensor (4-byte length prefix + 4 bytes/value) + checksum
+/// trailer (8). Kept in lock-step with [`encode_set_model`] (asserted by the
+/// `set_model_frame_len_formula` test) so the ledger can charge broadcasts
+/// without serializing the model twice.
+pub fn set_model_frame_len(tensor_lens: impl Iterator<Item = usize>) -> u64 {
+    let body: u64 = tensor_lens.map(|l| 4 + 4 * l as u64).sum();
+    1 + 4 + 4 + body + 8
+}
+
+/// Encode a `SetModel` frame straight from borrowed values — the broadcast
+/// hot path, sparing the full-model copy that building a [`DownMsg`] first
+/// would cost. Byte-identical to `DownMsg::SetModel { .. }.encode()`.
+pub fn encode_set_model(round: u32, values: &[Vec<f32>]) -> Vec<u8> {
+    let cap = set_model_frame_len(values.iter().map(|v| v.len())) as usize;
+    let mut w = Writer::with_capacity(cap);
+    w.u8(D_SET_MODEL);
+    w.u32(round);
+    write_values(&mut w, values);
+    w.finish()
+}
+
+/// Encode an `Eval` frame from a borrowed model override (or none) — same
+/// copy-sparing rationale as [`encode_set_model`].
+pub fn encode_eval(round: u32, values: Option<&[Vec<f32>]>) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.u8(D_EVAL);
+    w.u32(round);
+    match values {
+        None => w.u8(0),
+        Some(v) => {
+            w.u8(1);
+            write_values(&mut w, v);
+        }
+    }
+    w.finish()
+}
+
+impl DownMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            DownMsg::Hello { client } => {
+                w.u8(D_HELLO);
+                w.u32(*client);
+            }
+            DownMsg::SetModel { round, values } => {
+                w.u8(D_SET_MODEL);
+                w.u32(*round);
+                write_values(&mut w, values);
+            }
+            DownMsg::Train { round, scale, upload } => {
+                w.u8(D_TRAIN);
+                w.u32(*round);
+                w.f32(*scale);
+                w.u8(*upload as u8);
+            }
+            DownMsg::Eval { round, values } => {
+                w.u8(D_EVAL);
+                w.u32(*round);
+                match values {
+                    None => w.u8(0),
+                    Some(v) => {
+                        w.u8(1);
+                        write_values(&mut w, v);
+                    }
+                }
+            }
+            DownMsg::Stop => w.u8(D_STOP),
+        }
+        w.finish()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<DownMsg, WireError> {
+        let mut r = Reader::open(bytes)?;
+        let tag = r.u8()?;
+        Ok(match tag {
+            D_HELLO => DownMsg::Hello { client: r.u32()? },
+            D_SET_MODEL => DownMsg::SetModel { round: r.u32()?, values: read_values(&mut r)? },
+            D_TRAIN => DownMsg::Train {
+                round: r.u32()?,
+                scale: r.f32()?,
+                upload: r.u8()? != 0,
+            },
+            D_EVAL => {
+                let round = r.u32()?;
+                let values = if r.u8()? != 0 { Some(read_values(&mut r)?) } else { None };
+                DownMsg::Eval { round, values }
+            }
+            D_STOP => DownMsg::Stop,
+            t => return Err(WireError::BadTag(t)),
+        })
+    }
+}
+
+impl UpMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        match self {
+            UpMsg::HelloAck { client } => {
+                w.u8(U_HELLO_ACK);
+                w.u32(*client);
+            }
+            UpMsg::Update(u) => {
+                w.u8(U_UPDATE);
+                w.u32(u.client);
+                w.u32(u.round);
+                w.f32(u.loss);
+                w.f64(u.compute_secs);
+                w.f64(u.wait_secs);
+                w.f64(u.privacy_secs);
+                match &u.payload {
+                    UpdatePayload::None => w.u8(P_NONE),
+                    UpdatePayload::Plain(values) => {
+                        w.u8(P_PLAIN);
+                        write_values(&mut w, values);
+                    }
+                    UpdatePayload::Encrypted(ct) => {
+                        w.u8(P_ENCRYPTED);
+                        ct.encode_into(&mut w);
+                    }
+                }
+            }
+            UpMsg::Metric { client, round, num, den } => {
+                w.u8(U_METRIC);
+                w.u32(*client);
+                w.u32(*round);
+                w.f64(*num);
+                w.f64(*den);
+            }
+            UpMsg::Failed { client, error } => {
+                w.u8(U_FAILED);
+                w.u32(*client);
+                w.str(error);
+            }
+        }
+        w.finish()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<UpMsg, WireError> {
+        let mut r = Reader::open(bytes)?;
+        let tag = r.u8()?;
+        Ok(match tag {
+            U_HELLO_ACK => UpMsg::HelloAck { client: r.u32()? },
+            U_UPDATE => {
+                let client = r.u32()?;
+                let round = r.u32()?;
+                let loss = r.f32()?;
+                let compute_secs = r.f64()?;
+                let wait_secs = r.f64()?;
+                let privacy_secs = r.f64()?;
+                let payload = match r.u8()? {
+                    P_NONE => UpdatePayload::None,
+                    P_PLAIN => UpdatePayload::Plain(read_values(&mut r)?),
+                    P_ENCRYPTED => UpdatePayload::Encrypted(Ciphertext::decode_from(&mut r)?),
+                    t => return Err(WireError::BadTag(t)),
+                };
+                UpMsg::Update(UpdateEnvelope {
+                    client,
+                    round,
+                    loss,
+                    compute_secs,
+                    wait_secs,
+                    privacy_secs,
+                    payload,
+                })
+            }
+            U_METRIC => UpMsg::Metric {
+                client: r.u32()?,
+                round: r.u32()?,
+                num: r.f64()?,
+                den: r.f64()?,
+            },
+            U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
+            t => return Err(WireError::BadTag(t)),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn down_roundtrip() {
+        let msgs = vec![
+            DownMsg::Hello { client: 3 },
+            DownMsg::SetModel { round: 7, values: vec![vec![1.0, 2.0], vec![-0.5]] },
+            DownMsg::Train { round: 7, scale: 0.25, upload: true },
+            DownMsg::Train { round: 8, scale: 1.0, upload: false },
+            DownMsg::Eval { round: 9, values: None },
+            DownMsg::Eval { round: 9, values: Some(vec![vec![3.0]]) },
+            DownMsg::Stop,
+        ];
+        for m in msgs {
+            let bytes = m.encode();
+            let back = DownMsg::decode(&bytes).unwrap();
+            match (&m, &back) {
+                (DownMsg::Hello { client: a }, DownMsg::Hello { client: b }) => assert_eq!(a, b),
+                (
+                    DownMsg::SetModel { round: r1, values: v1 },
+                    DownMsg::SetModel { round: r2, values: v2 },
+                ) => {
+                    assert_eq!(r1, r2);
+                    assert_eq!(v1, v2);
+                }
+                (
+                    DownMsg::Train { round: r1, scale: s1, upload: u1 },
+                    DownMsg::Train { round: r2, scale: s2, upload: u2 },
+                ) => {
+                    assert_eq!(r1, r2);
+                    assert_eq!(s1, s2);
+                    assert_eq!(u1, u2);
+                }
+                (
+                    DownMsg::Eval { round: r1, values: v1 },
+                    DownMsg::Eval { round: r2, values: v2 },
+                ) => {
+                    assert_eq!(r1, r2);
+                    assert_eq!(v1, v2);
+                }
+                (DownMsg::Stop, DownMsg::Stop) => {}
+                other => panic!("mismatched roundtrip: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn update_roundtrip() {
+        let m = UpMsg::Update(UpdateEnvelope {
+            client: 5,
+            round: 11,
+            loss: 0.125,
+            compute_secs: 1.5,
+            wait_secs: 0.25,
+            privacy_secs: 0.0,
+            payload: UpdatePayload::Plain(vec![vec![1.0; 8], vec![2.0; 3]]),
+        });
+        match UpMsg::decode(&m.encode()).unwrap() {
+            UpMsg::Update(u) => {
+                assert_eq!(u.client, 5);
+                assert_eq!(u.round, 11);
+                assert_eq!(u.loss, 0.125);
+                assert_eq!(u.compute_secs, 1.5);
+                assert_eq!(u.wait_secs, 0.25);
+                match u.payload {
+                    UpdatePayload::Plain(v) => {
+                        assert_eq!(v, vec![vec![1.0; 8], vec![2.0; 3]])
+                    }
+                    other => panic!("wrong payload {other:?}"),
+                }
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn metric_and_failure_roundtrip() {
+        match UpMsg::decode(&UpMsg::Metric { client: 1, round: 2, num: 9.0, den: 10.0 }.encode())
+            .unwrap()
+        {
+            UpMsg::Metric { client, round, num, den } => {
+                assert_eq!((client, round), (1, 2));
+                assert_eq!((num, den), (9.0, 10.0));
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        match UpMsg::decode(&UpMsg::Failed { client: 4, error: "boom".into() }.encode()).unwrap() {
+            UpMsg::Failed { client, error } => {
+                assert_eq!(client, 4);
+                assert_eq!(error, "boom");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn set_model_frame_len_formula() {
+        for shapes in [vec![], vec![0usize], vec![5], vec![16, 4, 16, 4]] {
+            let values: Vec<Vec<f32>> = shapes.iter().map(|&l| vec![0.5; l]).collect();
+            let borrowed = encode_set_model(3, &values);
+            let frame = DownMsg::SetModel { round: 3, values }.encode();
+            assert_eq!(borrowed, frame, "borrowed encoder drifted for shapes {shapes:?}");
+            assert_eq!(
+                frame.len() as u64,
+                set_model_frame_len(shapes.iter().copied()),
+                "formula drifted from the encoder for shapes {shapes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn borrowed_eval_encoder_matches() {
+        let values = vec![vec![1.0f32, 2.0], vec![3.0]];
+        assert_eq!(
+            encode_eval(9, Some(&values)),
+            DownMsg::Eval { round: 9, values: Some(values.clone()) }.encode()
+        );
+        assert_eq!(encode_eval(9, None), DownMsg::Eval { round: 9, values: None }.encode());
+    }
+
+    #[test]
+    fn corrupted_frame_rejected() {
+        let mut bytes = DownMsg::Train { round: 1, scale: 1.0, upload: true }.encode();
+        bytes[2] ^= 0x10;
+        assert!(DownMsg::decode(&bytes).is_err());
+    }
+}

@@ -1,0 +1,786 @@
+//! The coordinator event loop: drives the typed round protocol over a
+//! pluggable transport and aggregates in deterministic client order.
+//!
+//! Determinism contract (proved by the tests below and by
+//! `tests/federation_determinism.rs`): for a fixed config seed, every run of
+//! the same experiment produces **bitwise-identical models and identical
+//! SimNet byte counts regardless of `max_concurrency`**, because
+//!
+//! 1. every client draws randomness from its own persistent stream (forked
+//!    from the config seed at spawn, advanced only by that client's work);
+//! 2. updates are aggregated in the deterministic participant order chosen
+//!    by the coordinator, never in completion order;
+//! 3. the ledger charges uploads as one [`SimNet::send_group`] per round in
+//!    that same order.
+//!
+//! Simulated time is the only quantity that *should* differ conceptually —
+//! and the concurrent-link accumulator ([`crate::transport::PhaseCounter::concurrent_secs`])
+//! models a parallel federation's network wall clock while the serial sum
+//! keeps the old single-wire view.
+
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{FedGraphConfig, PrivacyMode};
+use crate::he::{Ciphertext, CkksContext};
+use crate::monitor::{ClientTimeline, Monitor};
+use crate::runtime::ParamSet;
+use crate::transport::link::{CoordLink, Transport};
+use crate::transport::{Direction, Phase, SimNet};
+use crate::util::rng::{hash_u64, Rng};
+use crate::util::sync::Semaphore;
+use crate::util::timer::timed;
+
+use crate::transport::serialize::params_wire_len;
+
+use super::actor::{actor_main, ActorSetup, ClientLogic, PrivacyEngine};
+use super::protocol::{
+    encode_eval, encode_set_model, set_model_frame_len, DownMsg, UpMsg, UpdateEnvelope,
+    UpdatePayload,
+};
+
+/// How a model broadcast is billed to the simulated network.
+#[derive(Clone, Copy, Debug)]
+pub enum Charge {
+    /// A real per-link transfer of this many bytes (serialized model or
+    /// ciphertext wire size).
+    PerLink(u64),
+    /// Not network traffic: local bootstrap from the public init, or a
+    /// re-send of a model the client already holds (see module docs).
+    Free,
+}
+
+/// One trainer's collected round result, in coordinator form.
+pub struct TrainResult {
+    pub client: usize,
+    /// Aggregation weight, taken from the session's static weight table —
+    /// the same source the HE pre-scale uses.
+    pub weight: f32,
+    pub loss: f32,
+    pub compute_secs: f64,
+    pub update: RoundUpdate,
+}
+
+/// The decoded update payload.
+pub enum RoundUpdate {
+    /// Training happened but the model stayed local (`upload: false`).
+    Local,
+    Plain(ParamSet),
+    Encrypted(Ciphertext),
+}
+
+/// A live federation session: the coordinator's handle over its actors.
+pub struct Federation<'m> {
+    monitor: &'m Monitor,
+    coord: Box<dyn CoordLink>,
+    threads: Vec<JoinHandle<()>>,
+    n: usize,
+    /// Static per-client aggregation weights (training-example counts).
+    weights: Vec<f32>,
+    privacy: PrivacyMode,
+    he_ctx: Option<CkksContext>,
+    /// Model template (names/shapes) for decoding plain uploads.
+    template: ParamSet,
+    stopped: bool,
+}
+
+impl<'m> Federation<'m> {
+    /// Rendezvous: open the transport, move each [`ClientLogic`] onto its own
+    /// actor thread, and wait for every trainer's `HelloAck`.
+    ///
+    /// `weights[i]` is client *i*'s static aggregation weight; `init` is the
+    /// public initial model every actor starts from (an uncharged bootstrap —
+    /// the architecture and init scheme are shared knowledge).
+    pub fn spawn(
+        monitor: &'m Monitor,
+        transport: &dyn Transport,
+        cfg: &FedGraphConfig,
+        init: &ParamSet,
+        weights: Vec<f32>,
+        max_dim: usize,
+        logics: Vec<Box<dyn ClientLogic>>,
+    ) -> Result<Federation<'m>> {
+        let n = logics.len();
+        if n == 0 {
+            bail!("federation needs at least one trainer");
+        }
+        if weights.len() != n {
+            bail!("weights/logics length mismatch: {} vs {n}", weights.len());
+        }
+        let (coord, trainer_links) = transport.open(n)?;
+        let gate = std::sync::Arc::new(Semaphore::new(
+            cfg.federation.resolved_concurrency(n),
+        ));
+        let he_ctx = match &cfg.privacy {
+            PrivacyMode::He(params) => Some(CkksContext::new(params.clone(), cfg.seed ^ 0xC4C5)),
+            _ => None,
+        };
+        let mut threads = Vec::with_capacity(n);
+        for (client, (logic, link)) in logics.into_iter().zip(trainer_links).enumerate() {
+            let privacy = match &cfg.privacy {
+                PrivacyMode::Plaintext => PrivacyEngine::Plain,
+                PrivacyMode::Dp(dp) => PrivacyEngine::Dp(dp.0.clone()),
+                PrivacyMode::He(_) => PrivacyEngine::He {
+                    ctx: he_ctx.clone().unwrap(),
+                    max_dim,
+                },
+            };
+            let setup = ActorSetup {
+                client,
+                logic,
+                link,
+                gate: gate.clone(),
+                privacy,
+                init: init.clone(),
+                rng: Rng::seeded(hash_u64(cfg.seed, 0xAC70_12, client as u64)),
+                straggler_ms: cfg.federation.straggler_ms,
+                straggler_seed: cfg.seed ^ 0x57A6_61,
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("fed-trainer-{client}"))
+                .spawn(move || actor_main(setup))
+                .map_err(|e| anyhow!("spawning trainer {client}: {e}"))?;
+            threads.push(handle);
+        }
+        let mut fed = Federation {
+            monitor,
+            coord,
+            threads,
+            n,
+            weights,
+            privacy: cfg.privacy.clone(),
+            he_ctx,
+            template: init.clone(),
+            stopped: false,
+        };
+        // Rendezvous.
+        for client in 0..n {
+            fed.coord.send(client, DownMsg::Hello { client: client as u32 }.encode().into())?;
+        }
+        let mut acked = vec![false; n];
+        for _ in 0..n {
+            let (from, frame) = fed.coord.recv()?;
+            match UpMsg::decode(&frame).map_err(|e| anyhow!("rendezvous: {e}"))? {
+                UpMsg::HelloAck { client } => acked[client as usize] = true,
+                UpMsg::Failed { client, error } => {
+                    bail!("trainer {client} failed during rendezvous: {error}")
+                }
+                other => bail!("unexpected rendezvous reply from {from}: {other:?}"),
+            }
+        }
+        if acked.iter().any(|a| !a) {
+            bail!("rendezvous incomplete");
+        }
+        Ok(fed)
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.n
+    }
+
+    fn net(&self) -> &SimNet {
+        &self.monitor.net
+    }
+
+    /// Ship `params` to `targets` as a `SetModel` broadcast. `charge` decides
+    /// whether (and at what per-link size) the transfer is ledgered.
+    pub fn broadcast_model(
+        &mut self,
+        round: usize,
+        params: &ParamSet,
+        targets: &[usize],
+        charge: Charge,
+    ) -> Result<()> {
+        let frame: crate::transport::link::Frame =
+            encode_set_model(round as u32, &params.values).into();
+        for &t in targets {
+            self.coord.send(t, frame.clone())?;
+        }
+        if let Charge::PerLink(bytes) = charge {
+            let sizes = vec![bytes; targets.len()];
+            self.net().send_group(Phase::Train, Direction::Down, &sizes);
+            let link_secs = self.net().transfer_secs(bytes);
+            for &t in targets {
+                self.monitor.record_timeline(ClientTimeline {
+                    round,
+                    client: t,
+                    compute_secs: 0.0,
+                    wait_secs: 0.0,
+                    transfer_secs: link_secs,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-link ledger size of broadcasting `params` under the session
+    /// privacy mode: the encoded-frame length in plaintext/DP mode, the CKKS
+    /// ciphertext wire size under HE (clients receive the encrypted sum and
+    /// decrypt locally).
+    pub fn model_down_charge(&self, params: &ParamSet) -> u64 {
+        match &self.privacy {
+            PrivacyMode::He(p) => p.encrypted_vector_bytes(params.num_values()),
+            _ => set_model_frame_len(params.values.iter().map(|v| v.len())),
+        }
+    }
+
+    /// Per-link charge for the **round-0 initial model broadcast**: always
+    /// the plaintext frame size. The init model is public (architecture +
+    /// published init scheme), so even an HE session ships it in the clear —
+    /// only aggregated updates travel as ciphertexts.
+    pub fn init_model_charge(&self, params: &ParamSet) -> u64 {
+        set_model_frame_len(params.values.iter().map(|v| v.len()))
+    }
+
+    /// Run one training phase: order `participants` to train (bounded by the
+    /// concurrency gate), collect every update, and return results **in
+    /// participant order** — never completion order. Uploads are ledgered as
+    /// one concurrent group.
+    pub fn train_round(
+        &mut self,
+        round: usize,
+        participants: &[usize],
+        upload: bool,
+    ) -> Result<Vec<TrainResult>> {
+        if participants.is_empty() {
+            return Ok(Vec::new());
+        }
+        let total_w: f32 = participants.iter().map(|&c| self.weights[c].max(1.0)).sum();
+        for &c in participants {
+            if c >= self.n {
+                bail!("participant {c} out of range");
+            }
+            let scale = self.weights[c].max(1.0) / total_w.max(1.0);
+            self.coord.send(
+                c,
+                DownMsg::Train { round: round as u32, scale, upload }.encode().into(),
+            )?;
+        }
+        // Collect until every participant reported (completion order varies
+        // with scheduling; nothing downstream depends on it).
+        let mut slots: Vec<Option<UpdateEnvelope>> = (0..self.n).map(|_| None).collect();
+        let mut remaining = participants.len();
+        while remaining > 0 {
+            let (from, frame) = self.coord.recv()?;
+            let msg = UpMsg::decode(&frame).map_err(|e| anyhow!("from trainer {from}: {e}"))?;
+            match msg {
+                UpMsg::Failed { client, error } => bail!("trainer {client} failed: {error}"),
+                UpMsg::Update(u) => {
+                    let c = u.client as usize;
+                    if u.round as usize != round || c >= self.n || slots[c].is_some() {
+                        bail!("protocol violation: unexpected update from {c}");
+                    }
+                    slots[c] = Some(u);
+                    remaining -= 1;
+                }
+                other => bail!("unexpected message during training round: {other:?}"),
+            }
+        }
+        // Deterministic order: walk participants, decode, ledger.
+        let mut results = Vec::with_capacity(participants.len());
+        let mut upload_sizes: Vec<u64> = Vec::new();
+        let mut decode_secs = 0.0;
+        let mut privacy_secs_total = 0.0;
+        for &c in participants {
+            let u = slots[c].take().expect("collected above");
+            let (update, up_bytes) = match u.payload {
+                UpdatePayload::None => (RoundUpdate::Local, 0u64),
+                UpdatePayload::Plain(values) => {
+                    // Shape-checked adoption against the template (the real
+                    // parse happened at frame decode). Charged at the
+                    // data-plane payload size — what `encode_params` of the
+                    // values costs — not the whole frame: the envelope's
+                    // telemetry fields are control-plane and stay unbilled,
+                    // matching the HE path which bills ciphertext wire size
+                    // without its envelope.
+                    let (p, secs) = timed(|| -> Result<ParamSet> {
+                        if values.len() != self.template.values.len()
+                            || values
+                                .iter()
+                                .zip(&self.template.values)
+                                .any(|(a, b)| a.len() != b.len())
+                        {
+                            bail!("upload shape mismatch from client {c}");
+                        }
+                        Ok(ParamSet {
+                            names: self.template.names.clone(),
+                            shapes: self.template.shapes.clone(),
+                            values,
+                        })
+                    });
+                    decode_secs += secs;
+                    let p = p?;
+                    let charge = params_wire_len(p.values.iter().map(|v| v.len()));
+                    (RoundUpdate::Plain(p), charge)
+                }
+                UpdatePayload::Encrypted(ct) => {
+                    let bytes = ct.wire_bytes();
+                    (RoundUpdate::Encrypted(ct), bytes)
+                }
+            };
+            if up_bytes > 0 {
+                upload_sizes.push(up_bytes);
+            }
+            privacy_secs_total += u.privacy_secs;
+            self.monitor.add_secs("train", u.compute_secs);
+            self.monitor.record_timeline(ClientTimeline {
+                round,
+                client: c,
+                compute_secs: u.compute_secs,
+                wait_secs: u.wait_secs,
+                transfer_secs: if up_bytes > 0 { self.net().transfer_secs(up_bytes) } else { 0.0 },
+            });
+            results.push(TrainResult {
+                client: c,
+                weight: self.weights[c].max(1.0),
+                loss: u.loss,
+                compute_secs: u.compute_secs,
+                update,
+            });
+        }
+        if !upload_sizes.is_empty() {
+            self.net().send_group(Phase::Train, Direction::Up, &upload_sizes);
+        }
+        if decode_secs > 0.0 {
+            self.monitor.add_secs("serialize", decode_secs);
+        }
+        if privacy_secs_total > 0.0 {
+            let phase = match self.privacy {
+                PrivacyMode::He(_) => "he_encrypt",
+                PrivacyMode::Dp(_) => "dp_noise",
+                PrivacyMode::Plaintext => "privacy",
+            };
+            self.monitor.add_secs(phase, privacy_secs_total);
+        }
+        Ok(results)
+    }
+
+    /// Aggregate `results` under the session privacy mode (deterministic: the
+    /// slice order — participant order — is the combination order), broadcast
+    /// the combined model to `targets`, and return it. Dropped clients are
+    /// simply absent from `results`, so the weighted average renormalizes
+    /// over the survivors.
+    pub fn aggregate_and_broadcast(
+        &mut self,
+        round: usize,
+        results: &[TrainResult],
+        targets: &[usize],
+    ) -> Result<ParamSet> {
+        let refs: Vec<&TrainResult> = results.iter().collect();
+        self.do_aggregate(round, &refs, targets)
+    }
+
+    /// Like [`Federation::aggregate_and_broadcast`] but over the subset of
+    /// `results` whose client is in `members`, preserving result order —
+    /// GCFL-style per-cluster aggregation.
+    pub fn aggregate_subset(
+        &mut self,
+        round: usize,
+        results: &[TrainResult],
+        members: &[usize],
+        targets: &[usize],
+    ) -> Result<ParamSet> {
+        let refs: Vec<&TrainResult> =
+            results.iter().filter(|r| members.contains(&r.client)).collect();
+        self.do_aggregate(round, &refs, targets)
+    }
+
+    fn do_aggregate(
+        &mut self,
+        round: usize,
+        results: &[&TrainResult],
+        targets: &[usize],
+    ) -> Result<ParamSet> {
+        if results.is_empty() {
+            bail!("no updates to aggregate");
+        }
+        let model = match &self.privacy {
+            PrivacyMode::Plaintext | PrivacyMode::Dp(_) => {
+                let mut weighted: Vec<(f32, &ParamSet)> = Vec::with_capacity(results.len());
+                for r in results {
+                    match &r.update {
+                        RoundUpdate::Plain(p) => weighted.push((r.weight.max(1.0), p)),
+                        RoundUpdate::Local => bail!("client {} did not upload", r.client),
+                        RoundUpdate::Encrypted(_) => {
+                            bail!("encrypted update under a plaintext session")
+                        }
+                    }
+                }
+                let (model, secs) = timed(|| ParamSet::weighted_average(&weighted));
+                self.monitor.add_secs("aggregate", secs);
+                model
+            }
+            PrivacyMode::He(_) => {
+                let ctx = self.he_ctx.as_ref().expect("HE session has a context");
+                let mut acc: Option<Ciphertext> = None;
+                let (sum_result, add_secs) = timed(|| -> Result<()> {
+                    for r in results {
+                        match &r.update {
+                            RoundUpdate::Encrypted(ct) => match &mut acc {
+                                None => acc = Some(ct.clone()),
+                                Some(a) => ctx.add_assign(a, ct),
+                            },
+                            RoundUpdate::Local => bail!("client {} did not upload", r.client),
+                            RoundUpdate::Plain(_) => {
+                                bail!("plaintext update under an HE session")
+                            }
+                        }
+                    }
+                    Ok(())
+                });
+                self.monitor.add_secs("he_aggregate", add_secs);
+                sum_result?;
+                let acc = acc.expect("results is non-empty");
+                // Each receiving client decrypts independently; measure once,
+                // bill per target (as many decryptions as receivers).
+                let (flat, dec_secs) = timed(|| ctx.decrypt(&acc));
+                self.monitor.add_secs("he_decrypt", dec_secs * targets.len().max(1) as f64);
+                self.template.unflatten_from(&flat)
+            }
+        };
+        let charge = Charge::PerLink(self.model_down_charge(&model));
+        self.broadcast_model(round, &model, targets, charge)?;
+        Ok(model)
+    }
+
+    /// Evaluate on `targets` (each with its current model, or `with` when
+    /// given — the server-side evaluation stand-in). Returns the summed
+    /// `(numerator, denominator)` in target order.
+    pub fn eval_round(
+        &mut self,
+        round: usize,
+        targets: &[usize],
+        with: Option<&ParamSet>,
+    ) -> Result<(f64, f64)> {
+        if targets.is_empty() {
+            return Ok((0.0, 0.0));
+        }
+        let frame: crate::transport::link::Frame =
+            encode_eval(round as u32, with.map(|p| p.values.as_slice())).into();
+        for &t in targets {
+            self.coord.send(t, frame.clone())?;
+        }
+        let mut metrics: Vec<Option<(f64, f64)>> = vec![None; self.n];
+        let mut remaining = targets.len();
+        while remaining > 0 {
+            let (from, frame) = self.coord.recv()?;
+            match UpMsg::decode(&frame).map_err(|e| anyhow!("from trainer {from}: {e}"))? {
+                UpMsg::Metric { client, round: r, num, den } => {
+                    let c = client as usize;
+                    if r as usize != round || c >= self.n || metrics[c].is_some() {
+                        bail!("protocol violation: unexpected metric from {c}");
+                    }
+                    metrics[c] = Some((num, den));
+                    remaining -= 1;
+                }
+                UpMsg::Failed { client, error } => bail!("trainer {client} failed: {error}"),
+                other => bail!("unexpected message during eval round: {other:?}"),
+            }
+        }
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for &t in targets {
+            let (a, b) = metrics[t].take().expect("collected above");
+            num += a;
+            den += b;
+        }
+        Ok((num, den))
+    }
+
+    /// End the session: `Stop` every actor and join the threads.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_actors();
+        Ok(())
+    }
+
+    fn stop_actors(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        let stop: crate::transport::link::Frame = DownMsg::Stop.encode().into();
+        for client in 0..self.n {
+            let _ = self.coord.send(client, stop.clone());
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Federation<'_> {
+    fn drop(&mut self) {
+        self.stop_actors();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{FedGraphConfig, Method, Task};
+    use crate::coordinator::selection::select_with_dropout;
+    use crate::federation::LocalUpdate;
+    use crate::transport::link::ChannelTransport;
+    use crate::transport::serialize::fnv1a;
+    use crate::transport::NetConfig;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    /// Engine-free logic: a deterministic "training" rule driven by the
+    /// client's RNG stream, so bitwise comparison is meaningful.
+    struct DummyLogic {
+        client: usize,
+        steps: usize,
+        sleep_ms: u64,
+    }
+
+    impl ClientLogic for DummyLogic {
+        fn train(&mut self, round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+            if self.sleep_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(self.sleep_ms));
+            }
+            let mut p = params.clone();
+            for _ in 0..self.steps {
+                let noise = rng.f32();
+                for v in p.values.iter_mut().flatten() {
+                    *v = *v * 0.9 + noise * 0.01 * (self.client as f32 + 1.0);
+                }
+            }
+            Ok(LocalUpdate { params: p, loss: 1.0 / (round + 1) as f32 })
+        }
+
+        fn eval(&mut self, _round: usize, params: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+            Ok((params.values[0][0] as f64, 1.0))
+        }
+    }
+
+    fn test_cfg(n: usize, concurrency: usize, dropout: f64) -> FedGraphConfig {
+        let mut cfg =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        cfg.n_trainer = n;
+        cfg.seed = 77;
+        cfg.federation.max_concurrency = concurrency;
+        cfg.federation.dropout_frac = dropout;
+        cfg
+    }
+
+    /// Drive `rounds` federation rounds and return (final model bytes,
+    /// train-phase byte counts, wall-clock seconds).
+    fn drive(cfg: &FedGraphConfig, rounds: usize, sleep_ms: u64) -> (Vec<u8>, u64, u64, f64) {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let n = cfg.n_trainer;
+        let mut rng = Rng::seeded(cfg.seed);
+        let init = ParamSet::nc(6, 4, 3, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> = (0..n)
+            .map(|client| {
+                Box::new(DummyLogic { client, steps: 3, sleep_ms }) as Box<dyn ClientLogic>
+            })
+            .collect();
+        let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
+        let t0 = std::time::Instant::now();
+        let mut fed =
+            Federation::spawn(&monitor, &ChannelTransport, cfg, &init, weights, 64, logics)
+                .unwrap();
+        let all: Vec<usize> = (0..n).collect();
+        let mut global = init;
+        fed.broadcast_model(0, &global, &all, Charge::PerLink(global.byte_len())).unwrap();
+        for round in 0..rounds {
+            let sel = select_with_dropout(
+                n,
+                1.0,
+                cfg.sampling_type,
+                cfg.federation.dropout_frac,
+                round,
+                &mut rng,
+            );
+            let results = fed.train_round(round, &sel.participants, true).unwrap();
+            global = fed.aggregate_and_broadcast(round, &results, &all).unwrap();
+        }
+        let (num, den) = fed.eval_round(rounds, &all, Some(&global)).unwrap();
+        assert_eq!(den as usize, n);
+        let wall = t0.elapsed().as_secs_f64();
+        fed.shutdown().unwrap();
+        let c = monitor.net.counter(Phase::Train);
+        let model_bytes =
+            crate::transport::serialize::encode_params(&global.values);
+        assert!(num.is_finite());
+        (model_bytes, c.bytes_up, c.bytes_down, wall)
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_sequential() {
+        let seq = drive(&test_cfg(6, 1, 0.0), 4, 0);
+        let par = drive(&test_cfg(6, 4, 0.0), 4, 0);
+        assert_eq!(fnv1a(&seq.0), fnv1a(&par.0), "final params must match bitwise");
+        assert_eq!(seq.1, par.1, "upload bytes must match");
+        assert_eq!(seq.2, par.2, "download bytes must match");
+    }
+
+    #[test]
+    fn dropout_is_deterministic_and_reweights() {
+        let seq = drive(&test_cfg(6, 1, 0.4), 5, 0);
+        let par = drive(&test_cfg(6, 4, 0.4), 5, 0);
+        assert_eq!(fnv1a(&seq.0), fnv1a(&par.0));
+        assert_eq!(seq.1, par.1);
+        // Dropout shrinks uploads vs. full participation.
+        let full = drive(&test_cfg(6, 1, 0.0), 5, 0);
+        assert!(seq.1 < full.1, "dropout must reduce upload bytes: {} vs {}", seq.1, full.1);
+    }
+
+    #[test]
+    fn concurrency_overlaps_slow_trainers() {
+        // 6 trainers sleeping 40ms per round, 2 rounds: sequential compute is
+        // ≥ 480ms; with 6-way concurrency the rounds overlap almost fully.
+        let seq = drive(&test_cfg(6, 1, 0.0), 2, 40);
+        let par = drive(&test_cfg(6, 6, 0.0), 2, 40);
+        assert_eq!(fnv1a(&seq.0), fnv1a(&par.0), "speed must not change results");
+        assert!(
+            par.3 < seq.3 * 0.7,
+            "parallel rounds should be much faster: {:.3}s vs {:.3}s",
+            par.3,
+            seq.3
+        );
+    }
+
+    #[test]
+    fn upload_false_keeps_bytes_at_zero() {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let cfg = test_cfg(3, 2, 0.0);
+        let mut rng = Rng::seeded(1);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> = (0..3)
+            .map(|client| Box::new(DummyLogic { client, steps: 1, sleep_ms: 0 }) as _)
+            .collect();
+        let mut fed = Federation::spawn(
+            &monitor,
+            &ChannelTransport,
+            &cfg,
+            &init,
+            vec![1.0; 3],
+            16,
+            logics,
+        )
+        .unwrap();
+        let results = fed.train_round(0, &[0, 1, 2], false).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| matches!(r.update, RoundUpdate::Local)));
+        let (_num, den) = fed.eval_round(0, &[0, 1, 2], None).unwrap();
+        assert_eq!(den as usize, 3);
+        fed.shutdown().unwrap();
+        assert_eq!(monitor.net.total_bytes(), 0, "self-training must not communicate");
+        // But timelines recorded compute.
+        assert!(!monitor.timelines().is_empty());
+    }
+
+    #[test]
+    fn aggregation_renormalizes_over_survivors() {
+        // Clients upload constant models (client i => all values i+1) with
+        // static weights 1/2/3. Aggregating only clients {0, 2} must divide
+        // by the survivor weight sum (1+3), not the full-population weight
+        // (6) or the client count (3): (1*1 + 3*3) / 4 = 2.5.
+        struct ConstLogic {
+            client: usize,
+        }
+        impl ClientLogic for ConstLogic {
+            fn train(&mut self, _r: usize, params: &ParamSet, _rng: &mut Rng) -> Result<LocalUpdate> {
+                let mut p = params.clone();
+                for v in p.values.iter_mut().flatten() {
+                    *v = (self.client + 1) as f32;
+                }
+                Ok(LocalUpdate { params: p, loss: 0.0 })
+            }
+            fn eval(&mut self, _r: usize, _p: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+                Ok((0.0, 0.0))
+            }
+        }
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let cfg = test_cfg(3, 2, 0.0);
+        let mut rng = Rng::seeded(3);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> =
+            (0..3).map(|client| Box::new(ConstLogic { client }) as _).collect();
+        let mut fed = Federation::spawn(
+            &monitor,
+            &ChannelTransport,
+            &cfg,
+            &init,
+            vec![1.0, 2.0, 3.0],
+            16,
+            logics,
+        )
+        .unwrap();
+        let results = fed.train_round(0, &[0, 2], true).unwrap();
+        let model = fed.aggregate_and_broadcast(0, &results, &[0, 1, 2]).unwrap();
+        for v in model.flatten() {
+            assert!((v - 2.5).abs() < 1e-6, "renormalized average should be 2.5, got {v}");
+        }
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn panicking_logic_becomes_an_error_not_a_hang() {
+        struct PanicLogic;
+        impl ClientLogic for PanicLogic {
+            fn train(&mut self, _r: usize, _p: &ParamSet, _rng: &mut Rng) -> Result<LocalUpdate> {
+                panic!("synthetic panic");
+            }
+            fn eval(&mut self, _r: usize, _p: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+                Ok((0.0, 0.0))
+            }
+        }
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let cfg = test_cfg(2, 2, 0.0);
+        let mut rng = Rng::seeded(4);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> =
+            vec![Box::new(PanicLogic), Box::new(PanicLogic)];
+        let mut fed = Federation::spawn(
+            &monitor,
+            &ChannelTransport,
+            &cfg,
+            &init,
+            vec![1.0; 2],
+            16,
+            logics,
+        )
+        .unwrap();
+        let err = fed.train_round(0, &[0, 1], true);
+        assert!(err.is_err(), "panic must surface as a coordinator error");
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("synthetic panic"), "{msg}");
+    }
+
+    #[test]
+    fn trainer_failure_surfaces_as_error() {
+        struct FailingLogic;
+        impl ClientLogic for FailingLogic {
+            fn train(&mut self, _r: usize, _p: &ParamSet, _rng: &mut Rng) -> Result<LocalUpdate> {
+                bail!("synthetic failure")
+            }
+            fn eval(&mut self, _r: usize, _p: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+                Ok((0.0, 0.0))
+            }
+        }
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let cfg = test_cfg(2, 1, 0.0);
+        let mut rng = Rng::seeded(2);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> =
+            vec![Box::new(FailingLogic), Box::new(FailingLogic)];
+        let mut fed = Federation::spawn(
+            &monitor,
+            &ChannelTransport,
+            &cfg,
+            &init,
+            vec![1.0; 2],
+            16,
+            logics,
+        )
+        .unwrap();
+        let err = fed.train_round(0, &[0, 1], true);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("synthetic failure"), "{msg}");
+    }
+}

@@ -129,6 +129,49 @@ impl Ciphertext {
     pub fn num_chunks(&self) -> usize {
         (self.len + self.params.slots() - 1) / self.params.slots()
     }
+
+    /// Serialize into a federation-protocol frame. This is the *simulator's*
+    /// representation (fixed-point slots); communication accounting must keep
+    /// using [`Ciphertext::wire_bytes`], which follows the real CKKS size
+    /// formulas.
+    pub fn encode_into(&self, w: &mut crate::transport::serialize::Writer) {
+        w.u32(self.params.poly_mod_degree as u32);
+        w.u32(self.params.coeff_mod_bits.len() as u32);
+        for &b in &self.params.coeff_mod_bits {
+            w.u32(b);
+        }
+        w.u32(self.params.scale_bits);
+        w.u32(self.params.security_level);
+        w.u64(self.len as u64);
+        w.u32(self.adds);
+        w.u8(self.valid as u8);
+        w.i64s(&self.data);
+    }
+
+    /// Inverse of [`Ciphertext::encode_into`].
+    pub fn decode_from(
+        r: &mut crate::transport::serialize::Reader<'_>,
+    ) -> Result<Ciphertext, crate::transport::serialize::WireError> {
+        let poly_mod_degree = r.u32()? as usize;
+        let n_coeff = r.u32()? as usize;
+        let mut coeff_mod_bits = Vec::with_capacity(n_coeff);
+        for _ in 0..n_coeff {
+            coeff_mod_bits.push(r.u32()?);
+        }
+        let scale_bits = r.u32()?;
+        let security_level = r.u32()?;
+        let len = r.u64()? as usize;
+        let adds = r.u32()?;
+        let valid = r.u8()? != 0;
+        let data = r.i64s()?;
+        Ok(Ciphertext {
+            params: CkksParams { poly_mod_degree, coeff_mod_bits, scale_bits, security_level },
+            data,
+            len,
+            adds,
+            valid,
+        })
+    }
 }
 
 /// A CKKS-sim context: holds the parameter set and the (simulated) keys.
@@ -293,6 +336,25 @@ mod tests {
         for (a, b) in v.iter().zip(&out) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn ciphertext_wire_roundtrip() {
+        use crate::transport::serialize::{Reader, Writer};
+        let ctx = ctx();
+        let v: Vec<f32> = (0..300).map(|i| i as f32 * 0.25).collect();
+        let ct = ctx.encrypt(&v, 300);
+        let mut w = Writer::new();
+        ct.encode_into(&mut w);
+        let bytes = w.finish();
+        let mut r = Reader::open(&bytes).unwrap();
+        let back = Ciphertext::decode_from(&mut r).unwrap();
+        assert_eq!(back.params, ct.params);
+        assert_eq!(back.len, ct.len);
+        assert_eq!(back.adds, ct.adds);
+        assert_eq!(back.wire_bytes(), ct.wire_bytes());
+        // Decrypting the decoded ciphertext gives the same values.
+        assert_eq!(ctx.decrypt(&back), ctx.decrypt(&ct));
     }
 
     #[test]

@@ -10,6 +10,20 @@
 //!   communication scheme, client selection, minibatch scheduling, and the
 //!   monitoring system that regenerates every figure and table of the
 //!   paper's evaluation.
+//!
+//! # Federation architecture
+//!
+//! Since the actor-runtime refactor, trainers are no longer iterated by a
+//! sequential loop: each client is an **actor on its own OS thread** with an
+//! mpsc mailbox, and the coordinator drives a typed round protocol
+//! (`Rendezvous → BroadcastModel → LocalTrain → UploadUpdate → Aggregate →
+//! next round | Finish`) over a pluggable byte transport. See
+//! [`federation`] for the protocol and determinism contract,
+//! [`transport::link`] for the `Transport` trait (backend #1: in-memory
+//! channels), and the `federation:` config block (`max_concurrency`,
+//! `dropout_frac`, `straggler_ms`) for runtime knobs. Parallel execution is
+//! bitwise-identical to `max_concurrency: 1`; per-client compute/wait/
+//! transfer timelines land in the monitor's report.
 //! - **Layer 2 (python/compile/model.py, build-time only)** — GCN / GIN / LP
 //!   models and their train/eval steps in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (python/compile/kernels/, build-time only)** — Pallas kernels
@@ -37,6 +51,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod federation;
 pub mod graph;
 pub mod he;
 pub mod lowrank;

@@ -41,6 +41,7 @@ fn print_help() {
          \x20     [--rounds N] [--trainers M] [--local-steps K] [--lr F]\n\
          \x20     [--scale S] [--beta B] [--batch-size B] [--he] [--dp]\n\
          \x20     [--lowrank K] [--hops H] [--sample-ratio R] [--seed S]\n\
+         \x20     [--concurrency K] [--dropout F] [--straggler-ms MS]\n\
          \x20 list       supported task/method/dataset matrix\n\
          \x20 artifacts  show the artifact manifest"
     );
@@ -130,6 +131,15 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--seed") {
         cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--concurrency") {
+        cfg.federation.max_concurrency = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--dropout") {
+        cfg.federation.dropout_frac = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--straggler-ms") {
+        cfg.federation.straggler_ms = v.parse()?;
     }
     if has_flag(args, "--he") {
         cfg.privacy = PrivacyMode::He(CkksParams::default_params());

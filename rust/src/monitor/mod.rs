@@ -31,8 +31,24 @@ pub struct RoundRecord {
     pub train_secs: f64,
     /// Measured aggregation seconds at the server.
     pub agg_secs: f64,
+    /// Simulated network seconds for the round, concurrent-link model (max
+    /// over parallel links per collective, not the serial sum).
+    pub sim_net_secs: f64,
     pub train_loss: f64,
     pub test_accuracy: f64,
+}
+
+/// One client's share of one round, split the way the paper's per-pod
+/// telemetry splits it: compute (local training, incl. injected straggle),
+/// wait (blocked on the concurrency gate / barrier), and simulated transfer
+/// time of its own up/down payloads.
+#[derive(Clone, Debug)]
+pub struct ClientTimeline {
+    pub round: usize,
+    pub client: usize,
+    pub compute_secs: f64,
+    pub wait_secs: f64,
+    pub transfer_secs: f64,
 }
 
 struct MonitorState {
@@ -43,6 +59,7 @@ struct MonitorState {
     samples: Vec<ResourceSample>,
     peak_rss: u64,
     notes: Vec<(String, String)>,
+    timelines: Vec<ClientTimeline>,
 }
 
 /// The monitor class (thread-safe; trainers and the server share it).
@@ -63,6 +80,7 @@ impl Monitor {
                 samples: Vec::new(),
                 peak_rss: 0,
                 notes: Vec::new(),
+                timelines: Vec::new(),
             }),
             probe: ResourceProbe::new(),
         }
@@ -130,9 +148,38 @@ impl Monitor {
         self.state.lock().unwrap().notes.clone()
     }
 
-    /// Simulated network seconds for a phase.
+    /// Record one client's round timeline (from the federation runtime).
+    pub fn record_timeline(&self, t: ClientTimeline) {
+        self.state.lock().unwrap().timelines.push(t);
+    }
+
+    pub fn timelines(&self) -> Vec<ClientTimeline> {
+        self.state.lock().unwrap().timelines.clone()
+    }
+
+    /// Per-client totals over all rounds: `(client, compute, wait, transfer)`
+    /// seconds, sorted by client index.
+    pub fn timeline_totals(&self) -> Vec<(usize, f64, f64, f64)> {
+        let st = self.state.lock().unwrap();
+        let mut by_client: BTreeMap<usize, (f64, f64, f64)> = BTreeMap::new();
+        for t in &st.timelines {
+            let e = by_client.entry(t.client).or_insert((0.0, 0.0, 0.0));
+            e.0 += t.compute_secs;
+            e.1 += t.wait_secs;
+            e.2 += t.transfer_secs;
+        }
+        by_client.into_iter().map(|(c, (a, b, d))| (c, a, b, d)).collect()
+    }
+
+    /// Simulated network seconds for a phase (serialized single-wire model).
     pub fn net_secs(&self, phase: Phase) -> f64 {
         self.net.counter(phase).sim_secs
+    }
+
+    /// Simulated network seconds for a phase under the concurrent-link model
+    /// (grouped transfers contribute their slowest link only).
+    pub fn net_concurrent_secs(&self, phase: Phase) -> f64 {
+        self.net.counter(phase).concurrent_secs
     }
 
     /// All phase names with any recorded time, sorted.
@@ -184,6 +231,7 @@ mod tests {
             round: 0,
             train_secs: 0.1,
             agg_secs: 0.01,
+            sim_net_secs: 0.02,
             train_loss: 1.9,
             test_accuracy: 0.3,
         });
@@ -191,6 +239,31 @@ mod tests {
         assert_eq!(m.rounds().len(), 1);
         assert_eq!(m.samples().len(), 1);
         assert!(m.peak_rss() > 0);
+    }
+
+    #[test]
+    fn timelines_aggregate_per_client() {
+        let m = monitor();
+        for round in 0..3 {
+            for client in 0..2 {
+                m.record_timeline(ClientTimeline {
+                    round,
+                    client,
+                    compute_secs: 1.0,
+                    wait_secs: 0.5,
+                    transfer_secs: 0.25,
+                });
+            }
+        }
+        assert_eq!(m.timelines().len(), 6);
+        let totals = m.timeline_totals();
+        assert_eq!(totals.len(), 2);
+        for (client, compute, wait, transfer) in totals {
+            assert!(client < 2);
+            assert!((compute - 3.0).abs() < 1e-12);
+            assert!((wait - 1.5).abs() < 1e-12);
+            assert!((transfer - 0.75).abs() < 1e-12);
+        }
     }
 
     #[test]

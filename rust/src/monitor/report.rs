@@ -14,11 +14,18 @@ pub struct Report {
     pub train_bytes: u64,
     pub pretrain_net_secs: f64,
     pub train_net_secs: f64,
+    /// Concurrent-link simulated time (max over parallel links per
+    /// collective) — the parallel federation's network wall clock.
+    pub pretrain_net_concurrent_secs: f64,
+    pub train_net_concurrent_secs: f64,
     pub final_accuracy: f64,
     pub final_loss: f64,
     pub total_rounds: usize,
     pub peak_rss: u64,
     pub rounds: Vec<super::RoundRecord>,
+    /// Per-client totals `(client, compute, wait, transfer)` from the
+    /// federation runtime's timelines (empty for non-federated runs).
+    pub client_totals: Vec<(usize, f64, f64, f64)>,
 }
 
 impl Report {
@@ -37,11 +44,14 @@ impl Report {
             train_bytes: tr.bytes_up + tr.bytes_down,
             pretrain_net_secs: pre.sim_secs,
             train_net_secs: tr.sim_secs,
+            pretrain_net_concurrent_secs: pre.concurrent_secs,
+            train_net_concurrent_secs: tr.concurrent_secs,
             final_accuracy,
             final_loss,
             total_rounds: rounds.len(),
             peak_rss: m.peak_rss(),
             rounds,
+            client_totals: m.timeline_totals(),
         }
     }
 
@@ -74,20 +84,40 @@ impl Report {
             t.row(&[p.clone(), fmt_secs(*s)]);
         }
         out.push_str(&t.render());
-        let mut c = Table::new(&["phase", "bytes", "simulated net s"])
+        let mut c = Table::new(&["phase", "bytes", "serial net s", "concurrent net s"])
             .with_title("Communication cost");
         c.row(&[
             "pre-train".into(),
             fmt_bytes(self.pretrain_bytes),
             fmt_secs(self.pretrain_net_secs),
+            fmt_secs(self.pretrain_net_concurrent_secs),
         ]);
-        c.row(&["train".into(), fmt_bytes(self.train_bytes), fmt_secs(self.train_net_secs)]);
+        c.row(&[
+            "train".into(),
+            fmt_bytes(self.train_bytes),
+            fmt_secs(self.train_net_secs),
+            fmt_secs(self.train_net_concurrent_secs),
+        ]);
         c.row(&[
             "total".into(),
             fmt_bytes(self.total_bytes()),
             fmt_secs(self.pretrain_net_secs + self.train_net_secs),
+            fmt_secs(self.pretrain_net_concurrent_secs + self.train_net_concurrent_secs),
         ]);
         out.push_str(&c.render());
+        if !self.client_totals.is_empty() {
+            let mut t = Table::new(&["client", "compute s", "wait s", "transfer s"])
+                .with_title("Per-client timeline");
+            for (client, compute, wait, transfer) in &self.client_totals {
+                t.row(&[
+                    client.to_string(),
+                    fmt_secs(*compute),
+                    fmt_secs(*wait),
+                    fmt_secs(*transfer),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         out.push_str(&format!(
             "rounds={} final_loss={:.4} final_accuracy={:.4} peak_rss={}\n",
             self.total_rounds,
@@ -115,8 +145,22 @@ impl Report {
                         ("round", r.round.into()),
                         ("train_secs", r.train_secs.into()),
                         ("agg_secs", r.agg_secs.into()),
+                        ("sim_net_secs", r.sim_net_secs.into()),
                         ("train_loss", r.train_loss.into()),
                         ("test_accuracy", r.test_accuracy.into()),
+                    ])
+                })
+                .collect(),
+        );
+        let clients = Json::Arr(
+            self.client_totals
+                .iter()
+                .map(|(client, compute, wait, transfer)| {
+                    obj(vec![
+                        ("client", (*client).into()),
+                        ("compute_secs", (*compute).into()),
+                        ("wait_secs", (*wait).into()),
+                        ("transfer_secs", (*transfer).into()),
                     ])
                 })
                 .collect(),
@@ -128,10 +172,13 @@ impl Report {
             ("train_bytes", (self.train_bytes as usize).into()),
             ("pretrain_net_secs", self.pretrain_net_secs.into()),
             ("train_net_secs", self.train_net_secs.into()),
+            ("pretrain_net_concurrent_secs", self.pretrain_net_concurrent_secs.into()),
+            ("train_net_concurrent_secs", self.train_net_concurrent_secs.into()),
             ("final_accuracy", self.final_accuracy.into()),
             ("final_loss", self.final_loss.into()),
             ("peak_rss", (self.peak_rss as usize).into()),
             ("rounds", rounds),
+            ("clients", clients),
         ])
     }
 }
@@ -155,14 +202,25 @@ mod tests {
             round: 0,
             train_secs: 1.5,
             agg_secs: 0.1,
+            sim_net_secs: 0.02,
             train_loss: 0.7,
             test_accuracy: 0.81,
+        });
+        m.record_timeline(crate::monitor::ClientTimeline {
+            round: 0,
+            client: 0,
+            compute_secs: 1.5,
+            wait_secs: 0.1,
+            transfer_secs: 0.02,
         });
         m.sample_resources();
         let r = Report::from_monitor(&m);
         assert_eq!(r.pretrain_bytes, 2_000_000);
         assert_eq!(r.train_bytes, 1_000_000);
         assert_eq!(r.final_accuracy, 0.81);
+        // Singles: concurrent == serial.
+        assert!((r.train_net_concurrent_secs - r.train_net_secs).abs() < 1e-12);
+        assert_eq!(r.client_totals.len(), 1);
         assert!((r.compute_secs() - 2.0).abs() < 1e-9);
         let text = r.render();
         assert!(text.contains("cora-sim"));

@@ -1,0 +1,171 @@
+//! Pluggable federation transport: byte-frame links between the coordinator
+//! and its trainer endpoints.
+//!
+//! The layering mirrors a real deployment stack:
+//!
+//! - **`federation::protocol`** turns typed round-protocol messages into
+//!   checksummed byte frames (via [`super::serialize`]);
+//! - **this module** moves opaque frames between endpoints — the only layer a
+//!   future TCP / multi-process backend has to reimplement;
+//! - **[`super::SimNet`]** is the ledger: the federation runtime charges each
+//!   payload frame to it by phase/direction so communication cost stays exact
+//!   regardless of backend.
+//!
+//! The first backend is [`ChannelTransport`]: per-trainer mpsc channels, the
+//! in-process equivalent of the paper's Ray/gRPC links between EKS pods.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+/// A serialized protocol message moving across a link. Reference-counted so
+/// a broadcast to 1000 trainers shares one encoded buffer instead of copying
+/// it per link (`Vec<u8>` payloads convert with `.into()`).
+pub type Frame = Arc<[u8]>;
+
+/// Coordinator side of the fabric: one outgoing lane per trainer, one shared
+/// incoming lane (frames are tagged with the sender's client index).
+pub trait CoordLink: Send {
+    /// Queue a frame for trainer `client`.
+    fn send(&mut self, client: usize, frame: Frame) -> Result<()>;
+    /// Block until the next frame from any trainer arrives.
+    fn recv(&mut self) -> Result<(usize, Frame)>;
+}
+
+/// Trainer side of the fabric: a duplex lane to the coordinator.
+pub trait TrainerLink: Send {
+    fn send(&mut self, frame: Frame) -> Result<()>;
+    /// Block until the next coordinator frame arrives.
+    fn recv(&mut self) -> Result<Frame>;
+}
+
+/// A federation transport backend: opens the coordinator endpoint plus `n`
+/// trainer endpoints. Backends must preserve per-lane FIFO order; delivery
+/// across different trainers may interleave arbitrarily.
+pub trait Transport {
+    fn open(&self, n: usize) -> Result<(Box<dyn CoordLink>, Vec<Box<dyn TrainerLink>>)>;
+}
+
+// ---------------------------------------------------------------------------
+// In-memory mpsc backend
+// ---------------------------------------------------------------------------
+
+/// In-memory channel transport (first backend): trainer actors live on OS
+/// threads in this process and frames move through `std::sync::mpsc`.
+pub struct ChannelTransport;
+
+struct ChannelCoord {
+    downs: Vec<Sender<Frame>>,
+    up: Receiver<(usize, Frame)>,
+}
+
+struct ChannelTrainer {
+    client: usize,
+    down: Receiver<Frame>,
+    up: Sender<(usize, Frame)>,
+}
+
+impl CoordLink for ChannelCoord {
+    fn send(&mut self, client: usize, frame: Frame) -> Result<()> {
+        self.downs
+            .get(client)
+            .ok_or_else(|| anyhow!("no such trainer {client}"))?
+            .send(frame)
+            .map_err(|_| anyhow!("trainer {client} hung up"))
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame)> {
+        self.up.recv().map_err(|_| anyhow!("all trainers hung up"))
+    }
+}
+
+impl TrainerLink for ChannelTrainer {
+    fn send(&mut self, frame: Frame) -> Result<()> {
+        self.up.send((self.client, frame)).map_err(|_| anyhow!("coordinator hung up"))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.down.recv().map_err(|_| anyhow!("coordinator hung up"))
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn open(&self, n: usize) -> Result<(Box<dyn CoordLink>, Vec<Box<dyn TrainerLink>>)> {
+        let (up_tx, up_rx) = channel::<(usize, Frame)>();
+        let mut downs = Vec::with_capacity(n);
+        let mut trainers: Vec<Box<dyn TrainerLink>> = Vec::with_capacity(n);
+        for client in 0..n {
+            let (down_tx, down_rx) = channel::<Frame>();
+            downs.push(down_tx);
+            trainers.push(Box::new(ChannelTrainer {
+                client,
+                down: down_rx,
+                up: up_tx.clone(),
+            }));
+        }
+        Ok((Box::new(ChannelCoord { downs, up: up_rx }), trainers))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(bytes: &[u8]) -> Frame {
+        bytes.to_vec().into()
+    }
+
+    #[test]
+    fn frames_roundtrip_both_directions() {
+        let (mut coord, mut trainers) = ChannelTransport.open(3).unwrap();
+        coord.send(1, frame(&[0xAB, 0xCD])).unwrap();
+        let mut t1 = trainers.remove(1);
+        assert_eq!(&*t1.recv().unwrap(), &[0xAB, 0xCD]);
+        t1.send(frame(&[7])).unwrap();
+        let (from, f) = coord.recv().unwrap();
+        assert_eq!(from, 1);
+        assert_eq!(&*f, &[7]);
+    }
+
+    #[test]
+    fn per_lane_fifo() {
+        let (mut coord, mut trainers) = ChannelTransport.open(1).unwrap();
+        coord.send(0, frame(&[1])).unwrap();
+        coord.send(0, frame(&[2])).unwrap();
+        let t = &mut trainers[0];
+        assert_eq!(&*t.recv().unwrap(), &[1]);
+        assert_eq!(&*t.recv().unwrap(), &[2]);
+    }
+
+    #[test]
+    fn bad_client_errors() {
+        let (mut coord, _trainers) = ChannelTransport.open(2).unwrap();
+        assert!(coord.send(5, frame(&[])).is_err());
+    }
+
+    #[test]
+    fn works_across_threads() {
+        let (mut coord, trainers) = ChannelTransport.open(4).unwrap();
+        let mut handles = Vec::new();
+        for mut t in trainers {
+            handles.push(std::thread::spawn(move || {
+                let f = t.recv().unwrap();
+                t.send(f).unwrap(); // echo
+            }));
+        }
+        for c in 0..4 {
+            coord.send(c, frame(&[c as u8])).unwrap();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let (from, f) = coord.recv().unwrap();
+            assert_eq!(&*f, &[from as u8]);
+            seen.insert(from);
+        }
+        assert_eq!(seen.len(), 4);
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

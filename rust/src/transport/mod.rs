@@ -10,6 +10,7 @@
 //! "training time" and "communication cost" axes of Figs 5–10 can be
 //! regenerated.
 
+pub mod link;
 pub mod serialize;
 
 use std::sync::Mutex;
@@ -60,7 +61,22 @@ pub struct PhaseCounter {
     pub bytes_up: u64,
     pub bytes_down: u64,
     pub messages: u64,
+    /// Serialized link time: the sum over every individual transfer, as if
+    /// all links shared one wire (the pre-federation ledger model).
     pub sim_secs: f64,
+    /// Concurrent link time: transfers recorded as one group (a broadcast, a
+    /// round of parallel uploads) contribute the *max* of their per-link
+    /// times — the wall clock a parallel federation actually experiences.
+    pub concurrent_secs: f64,
+}
+
+/// Timing of a grouped (parallel) set of transfers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupTiming {
+    /// Sum of per-link transfer times (serialized network).
+    pub serial_secs: f64,
+    /// Max of per-link transfer times (links run concurrently).
+    pub concurrent_secs: f64,
 }
 
 #[derive(Default)]
@@ -99,7 +115,14 @@ impl SimNet {
 
     /// Record a transfer; returns its simulated duration. The payload itself
     /// moves through ordinary memory (we are in-process) — this call is the
-    /// network's *ledger*.
+    /// network's *ledger*. A lone transfer is its own "group", so it adds the
+    /// same time to both the serial and concurrent accumulators. In-round
+    /// client traffic issued from trainer actors (FedLink's per-step
+    /// exchange, BNS-GCN halo re-shipments) therefore serializes in
+    /// `concurrent_secs` even though those links overlap in reality — for
+    /// such traffic the concurrent figure is an upper bound; only
+    /// coordinator-grouped collectives ([`SimNet::send_group`]) get the
+    /// max-over-links treatment. See ROADMAP "Async federation" for the fix.
     pub fn send(&self, phase: Phase, dir: Direction, bytes: u64) -> f64 {
         let secs = self.transfer_secs(bytes);
         let mut st = self.state.lock().unwrap();
@@ -110,17 +133,50 @@ impl SimNet {
         }
         c.messages += 1;
         c.sim_secs += secs;
+        c.concurrent_secs += secs;
         secs
     }
 
-    /// Broadcast accounting helper: the server sends the same `bytes` to
-    /// `m` clients (m separate link transfers).
-    pub fn broadcast(&self, phase: Phase, bytes: u64, m: usize) -> f64 {
-        let mut total = 0.0;
-        for _ in 0..m {
-            total += self.send(phase, Direction::Down, bytes);
+    /// Record a group of transfers that happen over independent links at the
+    /// same time (one federation round's uploads, or a broadcast). Bytes and
+    /// message counts are ledgered per link; serial time adds the sum while
+    /// concurrent time adds only the slowest link.
+    pub fn send_group(&self, phase: Phase, dir: Direction, sizes: &[u64]) -> GroupTiming {
+        if sizes.is_empty() {
+            return GroupTiming::default();
         }
-        total
+        let mut timing = GroupTiming::default();
+        let mut st = self.state.lock().unwrap();
+        let c = st.phase_mut(phase);
+        for &bytes in sizes {
+            let secs = self.transfer_secs(bytes);
+            match dir {
+                Direction::Up => c.bytes_up += bytes,
+                Direction::Down => c.bytes_down += bytes,
+            }
+            c.messages += 1;
+            timing.serial_secs += secs;
+            timing.concurrent_secs = timing.concurrent_secs.max(secs);
+        }
+        c.sim_secs += timing.serial_secs;
+        c.concurrent_secs += timing.concurrent_secs;
+        timing
+    }
+
+    /// Broadcast accounting helper: the server sends the same `bytes` to
+    /// `m` clients (m separate link transfers). Returns the serialized total
+    /// for backward compatibility; use [`SimNet::broadcast_timed`] for the
+    /// concurrent-link view.
+    pub fn broadcast(&self, phase: Phase, bytes: u64, m: usize) -> f64 {
+        self.broadcast_timed(phase, bytes, m).serial_secs
+    }
+
+    /// Broadcast with both timings: serial (sum over links) and concurrent
+    /// (max over links — with identical payloads, one link's time). The
+    /// monitor's simulated round time uses the concurrent figure.
+    pub fn broadcast_timed(&self, phase: Phase, bytes: u64, m: usize) -> GroupTiming {
+        let sizes = vec![bytes; m];
+        self.send_group(phase, Direction::Down, &sizes)
     }
 
     pub fn counter(&self, phase: Phase) -> PhaseCounter {
@@ -140,6 +196,13 @@ impl SimNet {
     pub fn total_sim_secs(&self) -> f64 {
         let st = self.state.lock().unwrap();
         st.pretrain.sim_secs + st.train.sim_secs + st.eval.sim_secs
+    }
+
+    /// Total concurrent-link seconds across all phases (the parallel
+    /// federation's simulated network wall clock).
+    pub fn total_concurrent_secs(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        st.pretrain.concurrent_secs + st.train.concurrent_secs + st.eval.concurrent_secs
     }
 
     pub fn reset(&self) {
@@ -182,6 +245,35 @@ mod tests {
         let c = net.counter(Phase::Train);
         assert_eq!(c.bytes_down, 1000);
         assert_eq!(c.messages, 10);
+    }
+
+    #[test]
+    fn broadcast_concurrent_time_is_one_link() {
+        let net = SimNet::new(NetConfig { bandwidth_gbps: 1.0, latency_ms: 1.0 });
+        let t = net.broadcast_timed(Phase::Train, 125_000_000, 10);
+        // Serial: 10 links end to end; concurrent: the slowest (= any) link.
+        assert!((t.serial_secs - 10.010).abs() < 1e-9, "serial {}", t.serial_secs);
+        assert!((t.concurrent_secs - 1.001).abs() < 1e-9, "concurrent {}", t.concurrent_secs);
+        let c = net.counter(Phase::Train);
+        assert!((c.sim_secs - t.serial_secs).abs() < 1e-12);
+        assert!((c.concurrent_secs - t.concurrent_secs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn send_group_max_vs_sum() {
+        let net = SimNet::new(NetConfig { bandwidth_gbps: 1.0, latency_ms: 0.0 });
+        let t = net.send_group(Phase::Train, Direction::Up, &[125_000_000, 250_000_000]);
+        assert!((t.serial_secs - 3.0).abs() < 1e-9);
+        assert!((t.concurrent_secs - 2.0).abs() < 1e-9);
+        let c = net.counter(Phase::Train);
+        assert_eq!(c.bytes_up, 375_000_000);
+        assert_eq!(c.messages, 2);
+        // Singles contribute equally to both accumulators.
+        net.send(Phase::Train, Direction::Up, 125_000_000);
+        let c = net.counter(Phase::Train);
+        assert!((c.sim_secs - 4.0).abs() < 1e-9);
+        assert!((c.concurrent_secs - 3.0).abs() < 1e-9);
+        assert!(net.total_concurrent_secs() <= net.total_sim_secs());
     }
 
     #[test]

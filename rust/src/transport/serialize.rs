@@ -64,6 +64,10 @@ impl Writer {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     /// Bulk f32 slice: length prefix + raw LE bytes (single memcpy on LE
     /// targets — this is the hot path for model updates).
     pub fn f32s(&mut self, v: &[f32]) {
@@ -153,6 +157,10 @@ impl<'a> Reader<'a> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
     pub fn f32s(&mut self) -> Result<Vec<f32>, WireError> {
         let n = self.u32()? as usize;
         let raw = self.take(n * 4)?;
@@ -194,6 +202,16 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// Exact wire length of [`encode_params`] for tensors of these lengths,
+/// without serializing: count prefix (4) + per tensor (4-byte length prefix
+/// + 4 bytes/value) + checksum trailer (8). The federation ledger charges
+/// plaintext model uploads at this size — the data-plane payload alone,
+/// excluding the update envelope's telemetry fields.
+pub fn params_wire_len(tensor_lens: impl Iterator<Item = usize>) -> u64 {
+    let body: u64 = tensor_lens.map(|l| 4 + 4 * l as u64).sum();
+    4 + body + 8
+}
+
 /// Serialize a parameter set (list of named tensors' raw values) — the model
 /// update payload of every FL round.
 pub fn encode_params(tensors: &[Vec<f32>]) -> Vec<u8> {
@@ -227,6 +245,7 @@ mod tests {
         w.u32(123456);
         w.u64(u64::MAX);
         w.f32(-0.25);
+        w.f64(1.0 / 3.0);
         w.str("hello");
         let bytes = w.finish();
         let mut r = Reader::open(&bytes).unwrap();
@@ -234,6 +253,7 @@ mod tests {
         assert_eq!(r.u32().unwrap(), 123456);
         assert_eq!(r.u64().unwrap(), u64::MAX);
         assert_eq!(r.f32().unwrap(), -0.25);
+        assert_eq!(r.f64().unwrap(), 1.0 / 3.0);
         assert_eq!(r.str().unwrap(), "hello");
         assert_eq!(r.remaining(), 0);
     }
@@ -281,6 +301,7 @@ mod tests {
         // ~4 bytes per value + small overhead
         let payload: usize = params.iter().map(|p| p.len() * 4).sum();
         assert!(bytes.len() >= payload && bytes.len() < payload + 64);
+        assert_eq!(bytes.len() as u64, params_wire_len(params.iter().map(|p| p.len())));
         let back = decode_params(&bytes).unwrap();
         assert_eq!(back, params);
     }

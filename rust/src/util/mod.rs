@@ -5,6 +5,7 @@
 pub mod json;
 pub mod linalg;
 pub mod rng;
+pub mod sync;
 pub mod yaml;
 pub mod stats;
 pub mod tables;

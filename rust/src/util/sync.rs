@@ -1,0 +1,89 @@
+//! Minimal synchronization primitives (the offline registry has no `tokio` /
+//! `parking_lot`): a counting semaphore used by the federation runtime to
+//! bound how many trainer actors compute simultaneously (`max_concurrency`).
+
+use std::sync::{Condvar, Mutex};
+
+/// A counting semaphore with RAII permits.
+///
+/// `max_concurrency = 1` turns the federation runtime into the sequential
+/// reference execution; larger counts let trainer actors overlap. Fairness is
+/// whatever the OS condvar gives us — callers must not depend on wake order
+/// for correctness (the runtime's determinism comes from per-client RNG
+/// streams and fixed aggregation order, not scheduling).
+pub struct Semaphore {
+    permits: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Semaphore {
+    pub fn new(permits: usize) -> Semaphore {
+        assert!(permits > 0, "semaphore needs at least one permit");
+        Semaphore { permits: Mutex::new(permits), cv: Condvar::new() }
+    }
+
+    /// Block until a permit is free; the permit is returned when the guard
+    /// drops.
+    pub fn acquire(&self) -> SemaphoreGuard<'_> {
+        let mut n = self.permits.lock().unwrap();
+        while *n == 0 {
+            n = self.cv.wait(n).unwrap();
+        }
+        *n -= 1;
+        SemaphoreGuard { sem: self }
+    }
+
+    fn release(&self) {
+        let mut n = self.permits.lock().unwrap();
+        *n += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// RAII permit; releases on drop.
+pub struct SemaphoreGuard<'a> {
+    sem: &'a Semaphore,
+}
+
+impl Drop for SemaphoreGuard<'_> {
+    fn drop(&mut self) {
+        self.sem.release();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn bounds_concurrency() {
+        let sem = Arc::new(Semaphore::new(2));
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let (sem, live, peak) = (sem.clone(), live.clone(), peak.clone());
+            handles.push(std::thread::spawn(move || {
+                let _g = sem.acquire();
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                live.fetch_sub(1, Ordering::SeqCst);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "semaphore exceeded its bound");
+    }
+
+    #[test]
+    fn serial_with_one_permit() {
+        let sem = Semaphore::new(1);
+        let g = sem.acquire();
+        drop(g);
+        let _g2 = sem.acquire(); // would deadlock if release failed
+    }
+}

@@ -1,0 +1,148 @@
+//! Federation-runtime determinism over the real engine: a parallel run
+//! (`max_concurrency > 1`) must be **bitwise-identical** to the sequential
+//! reference (`max_concurrency = 1`) — same final parameters (compared via
+//! the FNV checksum the runners note on the report) and identical SimNet
+//! byte counts — while all three tasks run end-to-end on actor threads.
+//! Requires `make artifacts`.
+
+use fedgraph::config::{FedGraphConfig, Method, Task};
+use fedgraph::coordinator::run_fedgraph_with;
+use fedgraph::monitor::report::Report;
+use fedgraph::runtime::Engine;
+
+fn engine() -> Engine {
+    Engine::start(&fedgraph::config::default_artifacts_dir())
+        .expect("run `make artifacts` before cargo test")
+}
+
+fn run(cfg: &FedGraphConfig, engine: &Engine) -> Report {
+    run_fedgraph_with(cfg, engine).unwrap_or_else(|e| panic!("{}: {e:#}", cfg.method.name()))
+}
+
+fn param_checksum(report: &Report) -> String {
+    report
+        .notes
+        .iter()
+        .find(|(k, _)| k == "param_checksum")
+        .map(|(_, v)| v.clone())
+        .expect("runner must note param_checksum")
+}
+
+#[test]
+fn nc_parallel_is_bitwise_identical_to_sequential() {
+    let eng = engine();
+    let mut cfg =
+        FedGraphConfig::new(Task::NodeClassification, Method::FedGcn, "cora-sim").unwrap();
+    cfg.scale = 0.15;
+    cfg.n_trainer = 4;
+    cfg.global_rounds = 5;
+    cfg.local_steps = 2;
+    cfg.learning_rate = 0.3;
+    cfg.eval_every = 2;
+    cfg.federation.max_concurrency = 1;
+    let seq = run(&cfg, &eng);
+    cfg.federation.max_concurrency = 4;
+    let par = run(&cfg, &eng);
+    assert_eq!(
+        param_checksum(&seq),
+        param_checksum(&par),
+        "final parameters must match bitwise across concurrency levels"
+    );
+    assert_eq!(seq.pretrain_bytes, par.pretrain_bytes, "pre-train bytes must match");
+    assert_eq!(seq.train_bytes, par.train_bytes, "train bytes must match");
+    assert_eq!(seq.final_accuracy, par.final_accuracy);
+    // The parallel run records per-client timelines for every trainer.
+    assert_eq!(par.client_totals.len(), 4);
+    // Concurrent-link time never exceeds the serialized sum.
+    assert!(par.train_net_concurrent_secs <= par.train_net_secs + 1e-12);
+    eng.shutdown();
+}
+
+#[test]
+fn all_three_tasks_run_with_parallel_trainers() {
+    let eng = engine();
+    // NC / FedAvg.
+    let mut nc = FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim")
+        .unwrap();
+    nc.scale = 0.15;
+    nc.n_trainer = 4;
+    nc.global_rounds = 4;
+    nc.local_steps = 2;
+    nc.learning_rate = 0.3;
+    nc.eval_every = 2;
+    nc.federation.max_concurrency = 4;
+    let r = run(&nc, &eng);
+    assert_eq!(r.total_rounds, 4);
+    assert!(r.train_bytes > 0);
+    assert!(!r.client_totals.is_empty());
+
+    // GC / FedAvg.
+    let mut gc =
+        FedGraphConfig::new(Task::GraphClassification, Method::FedAvgGC, "mutag-sim").unwrap();
+    gc.scale = 0.5;
+    gc.n_trainer = 4;
+    gc.global_rounds = 4;
+    gc.local_steps = 1;
+    gc.iid_beta = 1.0;
+    gc.federation.max_concurrency = 4;
+    let r = run(&gc, &eng);
+    assert_eq!(r.total_rounds, 4);
+    assert!(r.train_bytes > 0);
+
+    // LP / STFL.
+    let mut lp = FedGraphConfig::new(Task::LinkPrediction, Method::Stfl, "US+BR").unwrap();
+    lp.scale = 0.1;
+    lp.global_rounds = 4;
+    lp.local_steps = 2;
+    lp.federation.max_concurrency = 4;
+    let r = run(&lp, &eng);
+    assert_eq!(r.total_rounds, 4);
+    assert!(r.train_bytes > 0);
+    assert!(r.final_accuracy > 0.4, "LP AUC {}", r.final_accuracy);
+    eng.shutdown();
+}
+
+#[test]
+fn lp_parallel_matches_sequential() {
+    let eng = engine();
+    let mut cfg = FedGraphConfig::new(Task::LinkPrediction, Method::FourDFedGnnPlus, "US+BR")
+        .unwrap();
+    cfg.scale = 0.1;
+    cfg.global_rounds = 6;
+    cfg.local_steps = 2;
+    cfg.federation.max_concurrency = 1;
+    let seq = run(&cfg, &eng);
+    cfg.federation.max_concurrency = 2;
+    let par = run(&cfg, &eng);
+    assert_eq!(param_checksum(&seq), param_checksum(&par));
+    assert_eq!(seq.train_bytes, par.train_bytes);
+    eng.shutdown();
+}
+
+#[test]
+fn dropout_reduces_comm_and_stays_deterministic() {
+    let eng = engine();
+    let mut cfg =
+        FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+    cfg.scale = 0.15;
+    cfg.n_trainer = 4;
+    cfg.global_rounds = 6;
+    cfg.local_steps = 1;
+    cfg.learning_rate = 0.3;
+    cfg.eval_every = 3;
+    let full = run(&cfg, &eng);
+    cfg.federation.dropout_frac = 0.5;
+    cfg.federation.max_concurrency = 1;
+    let drop_seq = run(&cfg, &eng);
+    cfg.federation.max_concurrency = 4;
+    let drop_par = run(&cfg, &eng);
+    assert!(
+        drop_seq.train_bytes < full.train_bytes,
+        "dropouts must cut upload traffic: {} vs {}",
+        drop_seq.train_bytes,
+        full.train_bytes
+    );
+    assert_eq!(param_checksum(&drop_seq), param_checksum(&drop_par));
+    assert_eq!(drop_seq.train_bytes, drop_par.train_bytes);
+    eng.shutdown();
+}
