@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # CI gate: formatting, lints on the federation subsystem (and everything
-# else), and the tier-1 verify from ROADMAP.md.
+# else), the engine-free scheduler/sharding tests, and the tier-1 verify
+# from ROADMAP.md.
 #
 # Usage: ./ci.sh            # full gate
 #        ./ci.sh --quick    # skip the release build, run tests only
@@ -25,8 +26,15 @@ fi
 echo "==> cargo fmt --check"
 cargo fmt --check
 
-echo "==> cargo clippy -- -D warnings"
+echo "==> cargo clippy --all-targets -- -D warnings   (includes federation + coordinator)"
 cargo clippy --all-targets -- -D warnings
+
+echo "==> engine-free scheduler tests (round policies, staleness, waste ledger)"
+cargo test -q --lib federation::
+
+echo "==> engine-free sharded-aggregation tests (bitwise vs serial)"
+cargo test -q --lib coordinator::aggregate::
+cargo test -q --lib he::ckks::
 
 if [ "${1:-}" != "--quick" ]; then
     echo "==> cargo build --release   (tier-1, part 1)"

@@ -16,18 +16,43 @@
 //!   independent of setup cost. 1.0x = no overlap.
 //! Results are bitwise-identical between the two runs (see
 //! tests/federation_determinism.rs); only the clocks may differ.
+//!
+//! Since the round-policy refactor a second table compares the **sync
+//! barrier against staleness-bounded async federation under injected
+//! stragglers** (`straggler_ms > 0`): the barrier pays every round's slowest
+//! client, while `AsyncBounded` flushes after half the participants and
+//! admits stragglers late (re-weighted by staleness) or rejects them beyond
+//! the bound (ledgered as waste). Reported: wall clock, bytes, waste, and
+//! accuracy for both modes.
 
 #[path = "bench_common.rs"]
 mod common;
 
 use common::*;
-use fedgraph::config::Method;
+use fedgraph::config::{FedGraphConfig, FederationMode, Method};
 use fedgraph::util::tables::Table;
+
+fn arxiv_cfg(clients: usize, r: usize) -> FedGraphConfig {
+    let mut cfg = nc(Method::FedAvgNC, "ogbn-arxiv-sim", clients, r);
+    cfg.local_steps = 2;
+    cfg.batch_size = 256;
+    cfg.eval_every = r.max(1);
+    cfg
+}
+
+fn note(rep: &fedgraph::monitor::report::Report, key: &str) -> String {
+    rep.notes
+        .iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.clone())
+        .unwrap_or_else(|| "0".to_string())
+}
 
 fn main() {
     fedgraph::bench::banner(
         "Figure 15",
-        "ogbn-arxiv-sim under increasing client counts (sequential vs parallel trainers)",
+        "ogbn-arxiv-sim under increasing client counts (sequential vs parallel trainers, \
+         sync vs async rounds)",
     );
     let eng = engine();
     let r = rounds(15);
@@ -42,10 +67,7 @@ fn main() {
         "accuracy",
     ]);
     for clients in [10usize, 100, 1000] {
-        let mut cfg = nc(Method::FedAvgNC, "ogbn-arxiv-sim", clients, r);
-        cfg.local_steps = 2;
-        cfg.batch_size = 256;
-        cfg.eval_every = r.max(1);
+        let mut cfg = arxiv_cfg(clients, r);
 
         cfg.federation.max_concurrency = 1;
         let t0 = std::time::Instant::now();
@@ -78,4 +100,50 @@ fn main() {
         ]);
     }
     println!("{}", tbl.render());
+
+    // ---- straggler study: sync barrier vs staleness-bounded async ---------
+    let straggler_ms = 60.0;
+    let mut tbl2 = Table::new(&[
+        "clients",
+        "sync wall s",
+        "async wall s",
+        "speedup",
+        "sync MB",
+        "async MB",
+        "waste MB",
+        "stale rejected",
+        "sync acc",
+        "async acc",
+    ])
+    .with_title(&format!("Stragglers ({straggler_ms:.0} ms max): sync vs async rounds"));
+    for clients in [10usize, 100, 1000] {
+        let mut cfg = arxiv_cfg(clients, r);
+        cfg.federation.max_concurrency = 0;
+        cfg.federation.straggler_ms = straggler_ms;
+
+        let t0 = std::time::Instant::now();
+        let sync_rep = run(&cfg, &eng);
+        let sync_wall = t0.elapsed().as_secs_f64();
+
+        cfg.federation.mode = FederationMode::Async;
+        cfg.federation.max_staleness = 2;
+        cfg.federation.buffer_size = 0; // auto: half the participants
+        let t1 = std::time::Instant::now();
+        let async_rep = run(&cfg, &eng);
+        let async_wall = t1.elapsed().as_secs_f64();
+
+        tbl2.row(&[
+            clients.to_string(),
+            secs(sync_wall),
+            secs(async_wall),
+            format!("{:.2}x", sync_wall / async_wall.max(1e-9)),
+            mb(sync_rep.total_bytes()),
+            mb(async_rep.total_bytes()),
+            mb(async_rep.train_wasted_bytes),
+            note(&async_rep, "stale_rejected"),
+            format!("{:.4}", sync_rep.final_accuracy),
+            format!("{:.4}", async_rep.final_accuracy),
+        ]);
+    }
+    println!("{}", tbl2.render());
 }

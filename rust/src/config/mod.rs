@@ -154,10 +154,59 @@ pub enum PrivacyMode {
     Dp(DpClone),
 }
 
+/// How the coordinator schedules a round (the [`crate::federation::policy::RoundPolicy`]
+/// it instantiates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FederationMode {
+    /// One barrier per round: every participant's update is awaited before
+    /// aggregation. Bitwise-identical to the sequential reference.
+    Sync,
+    /// Staleness-bounded buffered asynchrony (FedBuff-style): each scheduler
+    /// step flushes after `buffer_size` fresh updates instead of waiting for
+    /// stragglers; updates trained from a model more than `max_staleness`
+    /// broadcasts old are rejected and ledgered as waste, admitted ones are
+    /// re-weighted by `1 / (1 + staleness)`.
+    Async,
+}
+
+impl FederationMode {
+    pub fn parse(s: &str) -> Result<FederationMode> {
+        match s.trim().to_lowercase().as_str() {
+            "sync" => Ok(FederationMode::Sync),
+            "async" => Ok(FederationMode::Async),
+            other => bail!("federation.mode must be 'sync' or 'async', got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FederationMode::Sync => "sync",
+            FederationMode::Async => "async",
+        }
+    }
+}
+
 /// Federation-runtime settings (the `federation:` YAML block): how trainer
 /// actors are scheduled and how client failures are injected.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FederationConfig {
+    /// Round scheduling policy: `sync` (barrier per round) or `async`
+    /// (staleness-bounded buffered aggregation). Async requires plaintext or
+    /// DP uploads and an aggregating, non-clustered method.
+    pub mode: FederationMode,
+    /// Async only: admit updates trained from a model at most this many
+    /// broadcasts old; staler uploads are rejected (and their bytes ledgered
+    /// as waste). `0` degenerates to the sync barrier — no client may be
+    /// left behind — which is exactly how the equivalence test pins the
+    /// policy refactor.
+    pub max_staleness: u32,
+    /// Async only: flush the aggregation buffer once this many fresh updates
+    /// are in. `0` = auto (half the round's participants, at least one).
+    pub buffer_size: usize,
+    /// Worker shards for the coordinator's aggregation reduce. `0` = auto
+    /// (one per core), `1` = the serial reference. Any value is
+    /// bitwise-identical to serial (see `coordinator::aggregate`).
+    pub agg_shards: usize,
     /// Max trainer actors computing at once. `0` = auto (one per selected
     /// client up to the machine's parallelism); `1` = the sequential
     /// reference execution (bitwise-identical results, serialized wall
@@ -175,7 +224,15 @@ pub struct FederationConfig {
 
 impl Default for FederationConfig {
     fn default() -> Self {
-        FederationConfig { max_concurrency: 0, dropout_frac: 0.0, straggler_ms: 0.0 }
+        FederationConfig {
+            mode: FederationMode::Sync,
+            max_staleness: 1,
+            buffer_size: 0,
+            agg_shards: 0,
+            max_concurrency: 0,
+            dropout_frac: 0.0,
+            straggler_ms: 0.0,
+        }
     }
 }
 
@@ -394,6 +451,18 @@ impl FedGraphConfig {
         }
         // Federation block.
         let fed = y.get("federation");
+        if let Some(s) = fed.get("mode").as_str() {
+            cfg.federation.mode = FederationMode::parse(s)?;
+        }
+        if let Some(v) = fed.get("max_staleness").as_usize() {
+            cfg.federation.max_staleness = v as u32;
+        }
+        if let Some(v) = fed.get("buffer_size").as_usize() {
+            cfg.federation.buffer_size = v;
+        }
+        if let Some(v) = fed.get("agg_shards").as_usize() {
+            cfg.federation.agg_shards = v;
+        }
         if let Some(v) = fed.get("max_concurrency").as_usize() {
             cfg.federation.max_concurrency = v;
         }
@@ -446,6 +515,25 @@ impl FedGraphConfig {
         }
         if self.federation.straggler_ms < 0.0 {
             bail!("federation.straggler_ms must be non-negative");
+        }
+        if self.federation.mode == FederationMode::Async {
+            if self.uses_he() {
+                bail!(
+                    "federation.mode: async requires plaintext or DP uploads — staleness \
+                     re-weighting cannot rescale CKKS ciphertexts"
+                );
+            }
+            match self.method {
+                Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws => bail!(
+                    "GCFL clustering reads every round's deltas in lockstep; \
+                     use federation.mode: sync"
+                ),
+                Method::SelfTrain | Method::StaticGnn => bail!(
+                    "{} never aggregates, so federation.mode: async has nothing to buffer",
+                    self.method.name()
+                ),
+                _ => {}
+            }
         }
         Ok(())
     }
@@ -551,6 +639,63 @@ federation:
             "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  dropout_frac: 1.0\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_async_mode_block() {
+        let cfg = FedGraphConfig::parse_yaml(
+            r#"
+fedgraph_task: NC
+dataset: cora-sim
+method: FedAvg
+federation:
+  mode: async
+  max_staleness: 3
+  buffer_size: 5
+  agg_shards: 4
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.mode, FederationMode::Async);
+        assert_eq!(cfg.federation.max_staleness, 3);
+        assert_eq!(cfg.federation.buffer_size, 5);
+        assert_eq!(cfg.federation.agg_shards, 4);
+        // Defaults: sync barrier, auto buffer/shards.
+        let plain =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        assert_eq!(plain.federation.mode, FederationMode::Sync);
+        assert_eq!(plain.federation.buffer_size, 0, "0 = auto (resolved by the policy)");
+        // Unknown mode string rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  mode: chaotic\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn async_mode_validation_guards() {
+        // Async + HE: staleness re-weighting cannot rescale ciphertexts.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_encryption: true\n\
+             federation:\n  mode: async\n"
+        )
+        .is_err());
+        // Async + GCFL: clustering is lockstep.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: GC\ndataset: x\nmethod: GCFL\nfederation:\n  mode: async\n"
+        )
+        .is_err());
+        // Async + SelfTrain: nothing to buffer.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: GC\ndataset: x\nmethod: SelfTrain\nfederation:\n  mode: async\n"
+        )
+        .is_err());
+        // Async + DP is fine.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_dp: true\n\
+             federation:\n  mode: async\n"
+        )
+        .is_ok());
     }
 
     #[test]

@@ -1,136 +1,114 @@
-//! Server-side model aggregation under the three privacy modes (paper §3.2,
-//! Appendix A.5): plaintext FedAvg, CKKS-encrypted additive aggregation, and
-//! Gaussian-mechanism DP. Every path really serializes its payloads through
-//! the wire format so byte counts and (de)serialization time are honest.
+//! Server-side sharded aggregation.
 //!
-//! **Status since the federation-runtime refactor:** the task runners now
-//! aggregate through [`crate::federation::Federation::aggregate_and_broadcast`],
-//! which moves privacy client-side (actors noise/encrypt before upload) and
-//! lets the transport do the ledgering. [`aggregate_params`] remains the
-//! *legacy in-process* aggregation entry — the serialized reference the
-//! pre-train feature exchange idiom and the unit tests pin down. It
-//! intentionally differs from the runtime path in two ways: DP noise is
-//! applied server-side here, and a fresh CKKS context is drawn per call
-//! (the runtime keeps one per session). Fix privacy/ledger bugs in both
-//! places or retire this one.
+//! **History.** This module used to carry a second, legacy in-process
+//! aggregation entry (`aggregate_params`) that duplicated the federation
+//! runtime's privacy and ledger logic with two deliberate divergences
+//! (server-side DP noise, a fresh CKKS context per call). That duplicate is
+//! retired: privacy is applied client-side inside the trainer actors
+//! ([`crate::federation::actor`]) and every aggregation flows through
+//! [`crate::federation::Federation::aggregate_and_broadcast`], so the
+//! privacy/ledger rules live in exactly one place (the engine-free tests in
+//! [`crate::federation::runtime`] pin the DP/HE behavior there).
+//!
+//! What remains here is the **sharded reduce** the runtime aggregation path
+//! uses: the flattened parameter space is chunked into contiguous ranges and
+//! combined by a scoped worker pool, so a 1000-client weighted average no
+//! longer serializes on one coordinator thread. Because each output element's
+//! floating-point operation sequence is unchanged (per element: scale the
+//! first update, then add the remaining updates in participant order), the
+//! result is **bitwise-identical to the serial [`ParamSet::weighted_average`]
+//! for every shard count** — proven by the tests below across shard counts
+//! {1, 2, 7}. The CKKS analogue lives in
+//! [`crate::he::CkksContext::sum_sharded`] (exact wrapping integer slot
+//! addition, same argument).
 
 use anyhow::Result;
 
-use crate::config::PrivacyMode;
-use crate::he::{gaussian_mechanism, CkksContext};
 use crate::monitor::Monitor;
 use crate::runtime::ParamSet;
-use crate::transport::serialize::{decode_params, encode_params, Reader, Writer};
+use crate::transport::serialize::{Reader, Writer};
 use crate::transport::{Direction, Phase};
-use crate::util::rng::Rng;
 use crate::util::timer::timed;
 
-/// Aggregate weighted client updates into the new global parameters and
-/// account the full round-trip (uploads + broadcast to `broadcast_to`
-/// clients). `max_dim` feeds the CKKS validity rule.
-pub fn aggregate_params(
-    monitor: &Monitor,
-    phase: Phase,
-    privacy: &PrivacyMode,
-    updates: &[(f32, ParamSet)],
-    broadcast_to: usize,
-    max_dim: usize,
-    rng: &mut Rng,
-) -> Result<ParamSet> {
-    assert!(!updates.is_empty(), "no updates to aggregate");
-    match privacy {
-        PrivacyMode::Plaintext => plaintext(monitor, phase, updates, broadcast_to),
-        PrivacyMode::He(params) => {
-            let ctx = CkksContext::new(params.clone(), rng.next_u64());
-            encrypted(monitor, phase, &ctx, updates, broadcast_to, max_dim)
+/// Smallest per-shard slice worth a worker thread; below this the spawn
+/// overhead dwarfs the arithmetic and the reduce stays serial.
+const MIN_SHARD_ELEMS: usize = 4096;
+
+/// Resolve the `federation.agg_shards` knob for a reduce over `elems`
+/// elements: `0` = auto (one shard per available core), explicit values cap
+/// there; either way never more than one shard per [`MIN_SHARD_ELEMS`] slice
+/// and never less than one.
+pub fn resolve_shards(cfg_shards: usize, elems: usize) -> usize {
+    let cap = if cfg_shards == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        cfg_shards
+    };
+    cap.min((elems + MIN_SHARD_ELEMS - 1) / MIN_SHARD_ELEMS).max(1)
+}
+
+/// Weighted average of parameter sets computed as a sharded reduce: the flat
+/// element space is split into `shards` contiguous ranges, each folded by its
+/// own scoped worker in participant order. Bitwise-equal to
+/// [`ParamSet::weighted_average`] for any shard count (see module docs).
+pub fn sharded_weighted_average(sets: &[(f32, &ParamSet)], shards: usize) -> ParamSet {
+    assert!(!sets.is_empty(), "no updates to aggregate");
+    if shards <= 1 || sets.len() == 1 {
+        return ParamSet::weighted_average(sets);
+    }
+    let total: f32 = sets.iter().map(|(w, _)| *w).sum();
+    let mut out = sets[0].1.clone();
+    let n_total = out.num_values();
+    if n_total == 0 {
+        return out;
+    }
+    // Honor the requested shard count (callers size it via
+    // [`resolve_shards`]); only cap it at one element per shard.
+    let shards = shards.min(n_total).max(1);
+    let per = (n_total + shards - 1) / shards;
+    // Cut every tensor at the shard boundaries of the flat index space; each
+    // shard owns a disjoint set of (tensor, offset, slice) jobs.
+    let mut jobs: Vec<Vec<(usize, usize, &mut [f32])>> = (0..shards).map(|_| Vec::new()).collect();
+    let mut flat = 0usize;
+    for (ti, v) in out.values.iter_mut().enumerate() {
+        let mut off = 0usize;
+        let mut rest: &mut [f32] = v.as_mut_slice();
+        while !rest.is_empty() {
+            let shard = (flat / per).min(shards - 1);
+            let room = ((shard + 1) * per - flat).max(1);
+            let take = rest.len().min(room);
+            let (head, tail) = rest.split_at_mut(take);
+            jobs[shard].push((ti, off, head));
+            off += take;
+            flat += take;
+            rest = tail;
         }
-        PrivacyMode::Dp(dp) => {
-            let mut noised: Vec<(f32, ParamSet)> = Vec::with_capacity(updates.len());
-            let (_, secs) = timed(|| {
-                for (w, p) in updates {
-                    let mut flat = p.flatten();
-                    gaussian_mechanism(&mut flat, &dp.0, rng);
-                    noised.push((*w, p.unflatten_from(&flat)));
+    }
+    std::thread::scope(|scope| {
+        for job in jobs {
+            if job.is_empty() {
+                continue;
+            }
+            scope.spawn(move || {
+                // Per element, the exact serial sequence: x = x0 * s0, then
+                // x += s_k * y_k for k = 1.. in participant order.
+                let s0 = sets[0].0 / total;
+                for (ti, off, slice) in job {
+                    for x in slice.iter_mut() {
+                        *x *= s0;
+                    }
+                    for (w, p) in &sets[1..] {
+                        let s = *w / total;
+                        let src = &p.values[ti][off..off + slice.len()];
+                        for (x, y) in slice.iter_mut().zip(src) {
+                            *x += s * *y;
+                        }
+                    }
                 }
             });
-            monitor.add_secs("dp_noise", secs);
-            plaintext(monitor, phase, &noised, broadcast_to)
         }
-    }
-}
-
-fn plaintext(
-    monitor: &Monitor,
-    phase: Phase,
-    updates: &[(f32, ParamSet)],
-    broadcast_to: usize,
-) -> Result<ParamSet> {
-    // Clients serialize; server parses and averages.
-    let mut decoded: Vec<ParamSet> = Vec::with_capacity(updates.len());
-    let (r, secs) = timed(|| -> Result<()> {
-        for (_, p) in updates {
-            let bytes = encode_params(&p.values);
-            monitor.net.send(phase, Direction::Up, bytes.len() as u64);
-            let values = decode_params(&bytes)?;
-            let mut q = p.clone();
-            q.values = values;
-            decoded.push(q);
-        }
-        Ok(())
     });
-    r?;
-    monitor.add_secs("serialize", secs);
-    let (global, agg_secs) = timed(|| {
-        let weighted: Vec<(f32, &ParamSet)> =
-            updates.iter().map(|(w, _)| *w).zip(decoded.iter()).collect();
-        ParamSet::weighted_average(&weighted)
-    });
-    monitor.add_secs("aggregate", agg_secs);
-    // Broadcast the new global model.
-    let bytes = encode_params(&global.values).len() as u64;
-    for _ in 0..broadcast_to {
-        monitor.net.send(phase, Direction::Down, bytes);
-    }
-    Ok(global)
-}
-
-/// Encrypted aggregation: clients pre-scale by their weight, encrypt, the
-/// server adds ciphertexts (never seeing plaintext in the simulated threat
-/// model), and every client decrypts the broadcast sum.
-fn encrypted(
-    monitor: &Monitor,
-    phase: Phase,
-    ctx: &CkksContext,
-    updates: &[(f32, ParamSet)],
-    broadcast_to: usize,
-    max_dim: usize,
-) -> Result<ParamSet> {
-    let total_w: f32 = updates.iter().map(|(w, _)| *w).sum();
-    let mut acc: Option<crate::he::Ciphertext> = None;
-    for (w, p) in updates {
-        let mut flat = p.flatten();
-        let s = w / total_w;
-        for x in flat.iter_mut() {
-            *x *= s;
-        }
-        let (ct, enc_secs) = timed(|| ctx.encrypt(&flat, max_dim));
-        monitor.add_secs("he_encrypt", enc_secs);
-        monitor.net.send(phase, Direction::Up, ct.wire_bytes());
-        let (_, add_secs) = timed(|| match &mut acc {
-            None => acc = Some(ct.clone()),
-            Some(a) => ctx.add_assign(a, &ct),
-        });
-        monitor.add_secs("he_aggregate", add_secs);
-    }
-    let acc = acc.unwrap();
-    // Broadcast ciphertext; each client decrypts.
-    for _ in 0..broadcast_to {
-        monitor.net.send(phase, Direction::Down, acc.wire_bytes());
-    }
-    let (flat, dec_secs) = timed(|| ctx.decrypt(&acc));
-    // Every client decrypts independently; account the cost once per client.
-    monitor.add_secs("he_decrypt", dec_secs * broadcast_to.max(1) as f64);
-    Ok(updates[0].1.unflatten_from(&flat))
+    out
 }
 
 /// Serialize + account an arbitrary f32 payload transfer (pre-train feature
@@ -156,130 +134,69 @@ pub fn ship_f32s(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::DpClone;
-    use crate::he::{CkksParams, DpParams};
     use crate::transport::{NetConfig, SimNet};
+    use crate::util::rng::Rng;
     use std::sync::Arc;
 
-    fn setup() -> (Monitor, Vec<(f32, ParamSet)>) {
-        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
-        let mut rng = Rng::seeded(7);
-        let mut a = ParamSet::nc(8, 4, 3, &mut rng);
-        for v in a.values.iter_mut().flatten() {
-            *v = 1.0;
-        }
-        let mut b = a.clone();
-        for v in b.values.iter_mut().flatten() {
-            *v = 3.0;
-        }
-        (m, vec![(1.0, a), (1.0, b)])
+    /// A weight/value mix whose average is not representable exactly, so any
+    /// reordering of the float ops would show up in the bit patterns.
+    fn awkward_sets() -> Vec<(f32, ParamSet)> {
+        let mut rng = Rng::seeded(11);
+        (0..6)
+            .map(|k| {
+                let mut p = ParamSet::nc(64, 48, 7, &mut rng);
+                for (i, v) in p.values.iter_mut().flatten().enumerate() {
+                    *v = (*v + 0.1) * (1.0 + k as f32 * 0.3) + i as f32 * 1e-4;
+                }
+                (1.0 + k as f32 * 0.7, p)
+            })
+            .collect()
+    }
+
+    fn bits(p: &ParamSet) -> Vec<u32> {
+        p.flatten().iter().map(|v| v.to_bits()).collect()
     }
 
     #[test]
-    fn plaintext_aggregation_matches_average() {
-        let (m, ups) = setup();
-        let mut rng = Rng::seeded(1);
-        let g = aggregate_params(
-            &m, Phase::Train, &PrivacyMode::Plaintext, &ups, 2, 100, &mut rng,
-        )
-        .unwrap();
-        assert!(g.flatten().iter().all(|&v| (v - 2.0).abs() < 1e-6));
-        let c = m.net.counter(Phase::Train);
-        assert!(c.bytes_up > 0 && c.bytes_down > 0);
-        assert_eq!(c.messages, 4); // 2 up + 2 down
-    }
-
-    #[test]
-    fn he_aggregation_close_to_plain_and_much_bigger() {
-        let (m, ups) = setup();
-        let mut rng = Rng::seeded(2);
-        let plain_bytes = {
-            let (m2, ups2) = setup();
-            let mut r2 = Rng::seeded(3);
-            aggregate_params(&m2, Phase::Train, &PrivacyMode::Plaintext, &ups2, 2, 100, &mut r2)
-                .unwrap();
-            m2.net.counter(Phase::Train).bytes_up
-        };
-        let g = aggregate_params(
-            &m,
-            Phase::Train,
-            &PrivacyMode::He(CkksParams::default_params()),
-            &ups,
-            2,
-            100,
-            &mut rng,
-        )
-        .unwrap();
-        for v in g.flatten() {
-            assert!((v - 2.0).abs() < 1e-2, "HE aggregate {v} should be ~2");
+    fn sharded_reduce_bitwise_equals_serial_sum() {
+        let owned = awkward_sets();
+        let sets: Vec<(f32, &ParamSet)> = owned.iter().map(|(w, p)| (*w, p)).collect();
+        let serial = ParamSet::weighted_average(&sets);
+        for shards in [1usize, 2, 7] {
+            let sharded = sharded_weighted_average(&sets, shards);
+            assert_eq!(
+                bits(&sharded),
+                bits(&serial),
+                "sharded reduce drifted from the serial sum at {shards} shards"
+            );
         }
-        let he_bytes = m.net.counter(Phase::Train).bytes_up;
-        assert!(
-            he_bytes > 10 * plain_bytes,
-            "HE must cost much more bandwidth: {he_bytes} vs {plain_bytes}"
-        );
-        assert!(m.phase_secs("he_encrypt") > 0.0);
-        assert!(m.phase_secs("he_decrypt") > 0.0);
     }
 
     #[test]
-    fn dp_aggregation_perturbs_mildly() {
-        let (m, ups) = setup();
-        let mut rng = Rng::seeded(4);
-        let dp = DpParams { epsilon: 8.0, delta: 1e-5, clip_norm: 1e6 };
-        let g = aggregate_params(
-            &m,
-            Phase::Train,
-            &PrivacyMode::Dp(DpClone(dp.clone())),
-            &ups,
-            2,
-            100,
-            &mut rng,
-        )
-        .unwrap();
-        // Noise present but centered: values near 2 within a few sigma.
-        let sigma = dp.sigma() as f32;
-        for v in g.flatten() {
-            assert!((v - 2.0).abs() < 6.0 * sigma, "{v}");
-        }
-        assert!(m.phase_secs("dp_noise") > 0.0);
-        // Bandwidth ~ plaintext (the paper's Table 3 point).
-        let (m2, ups2) = setup();
-        let mut r2 = Rng::seeded(5);
-        aggregate_params(&m2, Phase::Train, &PrivacyMode::Plaintext, &ups2, 2, 100, &mut r2)
-            .unwrap();
-        assert_eq!(
-            m.net.counter(Phase::Train).bytes_up,
-            m2.net.counter(Phase::Train).bytes_up
-        );
+    fn sharded_reduce_handles_degenerate_shapes() {
+        let mut rng = Rng::seeded(3);
+        // A single tiny update, and a tensor set smaller than one shard.
+        let p = ParamSet::lp(4, 4, 2, &mut rng);
+        let sets = vec![(2.0f32, &p)];
+        let out = sharded_weighted_average(&sets, 7);
+        assert_eq!(bits(&out), bits(&ParamSet::weighted_average(&sets)));
+        let q = p.clone();
+        let sets2 = vec![(1.0f32, &p), (3.0f32, &q)];
+        let out2 = sharded_weighted_average(&sets2, 7);
+        assert_eq!(bits(&out2), bits(&ParamSet::weighted_average(&sets2)));
     }
 
     #[test]
-    fn dropped_clients_reweight_the_average() {
-        // Three clients with weights 1/3/2; the weight-2 client drops out.
-        // The average must renormalize over the survivor weights (1 + 3 = 4):
-        // (1*1 + 3*5) / 4 = 4.0. Any "dropout as zero update" or
-        // divide-by-population bug gives a different value, because the
-        // survivor weight sum (4) differs from both the client count (3)
-        // and the full-population weight (6).
-        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
-        let mut rng = Rng::seeded(9);
-        let mk = |v: f32| {
-            let mut p = ParamSet::nc(8, 4, 3, &mut Rng::seeded(7));
-            for x in p.values.iter_mut().flatten() {
-                *x = v;
-            }
-            p
-        };
-        let survivors = vec![(1.0, mk(1.0)), (3.0, mk(5.0))];
-        let g = aggregate_params(
-            &m, Phase::Train, &PrivacyMode::Plaintext, &survivors, 3, 100, &mut rng,
-        )
-        .unwrap();
-        let expect = (1.0 * 1.0 + 3.0 * 5.0) / 4.0;
-        assert!(g.flatten().iter().all(|&v| (v - expect).abs() < 1e-6));
-        // Only the survivors' uploads hit the wire (2 up + 3 down messages).
-        assert_eq!(m.net.counter(Phase::Train).messages, 5);
+    fn resolve_shards_bounds() {
+        // Tiny reduces stay serial regardless of the knob.
+        assert_eq!(resolve_shards(8, 10), 1);
+        assert_eq!(resolve_shards(0, 10), 1);
+        // Large reduces honor an explicit cap.
+        assert_eq!(resolve_shards(3, 1_000_000), 3);
+        // Auto resolves to at least one shard.
+        assert!(resolve_shards(0, 1_000_000) >= 1);
+        // Never more shards than MIN_SHARD_ELEMS-sized slices.
+        assert!(resolve_shards(64, 8192) <= 2);
     }
 
     #[test]

@@ -177,6 +177,7 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     monitor.note("dataset", &cfg.dataset);
     monitor.note("method", cfg.method.name());
     monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
     let ds = generate_gc(&spec, cfg.scale, cfg.seed);
@@ -274,6 +275,7 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         fed.broadcast_model(0, &global, &all, init_charge)?;
     }
     let mut last_acc = 0.0;
+    let mut stale_rejected = 0usize;
     for round in 0..cfg.global_rounds {
         let sim0 = monitor.net.total_concurrent_secs();
         let sel = select_with_dropout(
@@ -284,11 +286,19 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             round,
             &mut rng,
         );
-        let results = fed.train_round(round, &sel.participants, !self_train)?;
-        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
-        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
-        let t_agg = std::time::Instant::now();
+        // GCFL needs every participant's plaintext delta in lockstep and
+        // SelfTrain never aggregates, so both stay on the barrier path
+        // (config validation rejects async for them); everything else runs
+        // one policy-scheduled round.
+        let crit_path: f64;
+        let mean_loss: f64;
+        let agg_secs: f64;
         if let Some(st) = &mut gcfl {
+            let results = fed.train_round(round, &sel.participants, true)?;
+            crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+            mean_loss = results.iter().map(|r| r.loss as f64).sum::<f64>()
+                / results.len().max(1) as f64;
+            let t_agg = std::time::Instant::now();
             // Observe uploaded deltas (participant order — deterministic).
             for r in &results {
                 let RoundUpdate::Plain(p) = &r.update else {
@@ -316,10 +326,23 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
                 }
             }
             monitor.note("gcfl_clusters", st.clusters.len());
-        } else if !self_train && !results.is_empty() {
-            global = fed.aggregate_and_broadcast(round, &results, &all)?;
+            agg_secs = t_agg.elapsed().as_secs_f64();
+        } else if self_train {
+            let results = fed.train_round(round, &sel.participants, false)?;
+            crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
+            mean_loss = results.iter().map(|r| r.loss as f64).sum::<f64>()
+                / results.len().max(1) as f64;
+            agg_secs = 0.0;
+        } else {
+            let mut step = fed.policy_round(round, &sel.participants, true, &all)?;
+            crit_path = step.crit_path_secs();
+            mean_loss = step.mean_loss();
+            stale_rejected += step.rejected_stale;
+            if let Some(m) = step.model.take() {
+                global = m;
+            }
+            agg_secs = step.agg_secs;
         }
-        let agg_secs = t_agg.elapsed().as_secs_f64();
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
             // Every actor evaluates its current model: the cluster/own model
@@ -334,13 +357,14 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             train_secs: crit_path,
             agg_secs,
             sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
-            train_loss: round_loss / sel.participants.len().max(1) as f64,
+            train_loss: mean_loss,
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
     fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note("stale_rejected", stale_rejected);
     if !self_train && gcfl.is_none() {
         monitor.note(
             "param_checksum",

@@ -14,8 +14,9 @@
 //! Runs on the federation runtime: each region is a trainer actor. On
 //! non-aggregating rounds the actors keep training their own models
 //! (`upload: false` — nothing crosses the wire); aggregating rounds start by
-//! re-delivering the cached global (uncharged — clients kept the last
-//! broadcast) so the round trains from the shared model, exactly like the
+//! a `ModelVersion` restamp ordering every client to re-adopt its cached
+//! copy of the last broadcast (a control frame — honestly free, no values
+//! move) so the round trains from the shared model, exactly like the
 //! sequential reference. AUC over held-out future edges + sampled negatives,
 //! computed in the actor from the `lp_eval` score artifact
 //! (`util::stats::auc`).
@@ -98,6 +99,7 @@ fn sample_pairs(
 
 /// LP trainer-actor logic: one region per actor.
 struct LpLogic {
+    client: usize,
     region: RegionData,
     block: Block,
     method: Method,
@@ -139,10 +141,12 @@ impl ClientLogic for LpLogic {
             let outs = self.engine.execute(&self.train_art, args)?;
             p.update_from_tensors(&outs);
             loss = outs[4].scalar();
-            // FedLink: model exchanged after every local step.
+            // FedLink: model exchanged after every local step. Staged on
+            // this client's link so the scheduler tick folds all regions'
+            // exchanges concurrently (steps on one link still serialize).
             if self.method == Method::FedLink {
-                self.net.send(Phase::Train, Direction::Up, p.byte_len());
-                self.net.send(Phase::Train, Direction::Down, p.byte_len());
+                self.net.stage(Phase::Train, Direction::Up, self.client, p.byte_len());
+                self.net.stage(Phase::Train, Direction::Down, self.client, p.byte_len());
             }
         }
         Ok(LocalUpdate { params: p, loss })
@@ -197,6 +201,7 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     monitor.note("task", "LP");
     monitor.note("dataset", &cfg.dataset);
     monitor.note("method", cfg.method.name());
+    monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
     let ds = generate_lp(&countries, cfg.scale, cfg.seed);
@@ -225,8 +230,10 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     let logics: Vec<Box<dyn ClientLogic>> = ds
         .regions
         .into_iter()
-        .map(|region| {
+        .enumerate()
+        .map(|(client, region)| {
             Box::new(LpLogic {
+                client,
                 block: region_block(&region, n_pad, e_pad),
                 region,
                 method: cfg.method,
@@ -252,16 +259,17 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         fed.broadcast_model(0, &global, &all, init_charge)?;
     }
     let mut last_auc = 0.0;
+    let mut stale_rejected = 0usize;
     for round in 0..cfg.global_rounds {
         let sim0 = monitor.net.total_concurrent_secs();
         let agg_round = !local_only && round % agg_period == 0;
         if agg_round && round > 0 && agg_period > 1 {
-            // Rewind every actor to the cached global from the last
-            // aggregating round (its own training in between is discarded,
-            // as in the sequential reference). Uncharged: clients kept the
-            // last broadcast locally. With agg_period == 1 the actors'
-            // current model already *is* the last broadcast global.
-            fed.broadcast_model(round, &global, &all, Charge::Free)?;
+            // Rewind every actor to its cached copy of the last broadcast
+            // (its own training in between is discarded, as in the
+            // sequential reference). A `ModelVersion` control frame — no
+            // parameter values cross the wire. With agg_period == 1 the
+            // actors' current model already *is* the last broadcast global.
+            fed.restamp_model(&all)?;
         }
         // All regions train every round (the paper's LP setting has no
         // sampling); dropouts still apply.
@@ -273,14 +281,11 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             round,
             &mut rng,
         );
-        let results = fed.train_round(round, &sel.participants, agg_round)?;
-        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
-        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
-        let t_agg = std::time::Instant::now();
-        if agg_round && !results.is_empty() {
-            global = fed.aggregate_and_broadcast(round, &results, &all)?;
+        let mut step = fed.policy_round(round, &sel.participants, agg_round, &all)?;
+        stale_rejected += step.rejected_stale;
+        if let Some(mdl) = step.model.take() {
+            global = mdl;
         }
-        let agg_secs = t_agg.elapsed().as_secs_f64();
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
             monitor.start("eval");
@@ -291,16 +296,17 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         }
         monitor.record_round(RoundRecord {
             round,
-            train_secs: crit_path,
-            agg_secs,
+            train_secs: step.crit_path_secs(),
+            agg_secs: step.agg_secs,
             sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
-            train_loss: round_loss / sel.participants.len().max(1) as f64,
+            train_loss: step.mean_loss(),
             test_accuracy: last_auc, // AUC in the accuracy slot for LP
         });
         monitor.sample_resources();
     }
     fed.shutdown()?;
     monitor.note("final_auc", format!("{last_auc:.4}"));
+    monitor.note("stale_rejected", stale_rejected);
     if !local_only {
         monitor.note(
             "param_checksum",

@@ -75,6 +75,7 @@ struct NcClient {
 /// re-sampling) comes from the actor's persistent stream.
 struct NcLogic {
     method: Method,
+    client: usize,
     cl: NcClient,
     /// The client's local-graph view, kept for BNS-GCN halo re-sampling.
     local: Option<LocalGraph>,
@@ -98,7 +99,8 @@ impl ClientLogic for NcLogic {
         if self.method == Method::BnsGcn {
             // BNS-GCN re-samples boundary nodes (and re-ships their features).
             let l = self.local.as_ref().expect("BNS logic keeps its local graph");
-            let mut cl = client_with_halo_resample(&self.ds, l, self.bns_ratio, rng, &self.net);
+            let mut cl =
+                client_with_halo_resample(&self.ds, l, self.bns_ratio, rng, self.client, &self.net);
             if !self.minibatch {
                 cl.train_block =
                     Some(make_block(&cl, &self.ds, self.n_pad, self.e_pad, self.d_eff, 0));
@@ -155,8 +157,9 @@ impl ClientLogic for NcLogic {
         let mut args = params.to_tensors();
         args.extend(block_tensors(block));
         let outs = self.engine.execute(&self.eval_art, args)?;
-        // Metric upload: three floats (the NC eval ledger entry).
-        self.net.send(Phase::Eval, Direction::Up, 12);
+        // Metric upload: three floats (the NC eval ledger entry), staged so
+        // the tick folds all clients' metric links concurrently.
+        self.net.stage(Phase::Eval, Direction::Up, self.client, 12);
         Ok((outs[1].scalar() as f64, outs[2].scalar() as f64))
     }
 }
@@ -172,6 +175,7 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     monitor.note("dataset", &cfg.dataset);
     monitor.note("method", cfg.method.name());
     monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
     let ds = generate_nc(&spec, cfg.scale, cfg.seed);
@@ -270,9 +274,11 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     let logics: Vec<Box<dyn ClientLogic>> = clients
         .into_iter()
         .zip(&locals)
-        .map(|(cl, l)| {
+        .enumerate()
+        .map(|(client, (cl, l))| {
             Box::new(NcLogic {
                 method: cfg.method,
+                client,
                 local: (cfg.method == Method::BnsGcn).then(|| l.clone()),
                 cl,
                 ds: ds.clone(),
@@ -298,6 +304,7 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     let init_charge = Charge::PerLink(fed.init_model_charge(&global));
     fed.broadcast_model(0, &global, &all, init_charge)?;
     let mut last_acc = 0.0;
+    let mut stale_rejected = 0usize;
     for round in 0..cfg.global_rounds {
         let sim0 = monitor.net.total_concurrent_secs();
         let sel = select_with_dropout(
@@ -308,12 +315,11 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             round,
             &mut rng,
         );
-        let results = fed.train_round(round, &sel.participants, true)?;
-        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
-        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
-        let t_agg = std::time::Instant::now();
-        global = fed.aggregate_and_broadcast(round, &results, &all)?;
-        let agg_secs = t_agg.elapsed().as_secs_f64();
+        let mut step = fed.policy_round(round, &sel.participants, true, &all)?;
+        stale_rejected += step.rejected_stale;
+        if let Some(m) = step.model.take() {
+            global = m;
+        }
 
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
             monitor.start("eval");
@@ -323,16 +329,17 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         }
         monitor.record_round(RoundRecord {
             round,
-            train_secs: crit_path,
-            agg_secs,
+            train_secs: step.crit_path_secs(),
+            agg_secs: step.agg_secs,
             sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
-            train_loss: round_loss / sel.participants.len().max(1) as f64,
+            train_loss: step.mean_loss(),
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
     fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note("stale_rejected", stale_rejected);
     monitor.note(
         "param_checksum",
         format!("{:016x}", fnv1a(&encode_params(&global.values))),
@@ -391,18 +398,20 @@ fn client_with_halo(
 }
 
 /// BNS-GCN per-round variant: re-sample and account the feature re-shipment
-/// as training-phase communication (runs inside the trainer actor).
+/// as training-phase communication (runs inside the trainer actor; staged so
+/// the scheduler tick groups all clients' halo links concurrently).
 fn client_with_halo_resample(
     ds: &NCDataset,
     l: &LocalGraph,
     keep_ratio: f64,
     rng: &mut Rng,
+    client: usize,
     net: &SimNet,
 ) -> NcClient {
     let kept: Vec<usize> = (0..l.halo.len()).filter(|_| rng.chance(keep_ratio)).collect();
     let bytes = (kept.len() * ds.feat_dim * 4) as u64;
-    net.send(Phase::Train, Direction::Up, bytes);
-    net.send(Phase::Train, Direction::Down, bytes);
+    net.stage(Phase::Train, Direction::Up, client, bytes);
+    net.stage(Phase::Train, Direction::Down, client, bytes);
     let halo_features: Vec<f32> =
         l.halo.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
     build_halo_client(ds, l, &halo_features, &kept)
@@ -596,6 +605,7 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
     monitor.note("dataset", format!("papers100m-sim(n={})", g.n));
     monitor.note("method", cfg.method.name());
     monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
 
     // Clients own contiguous community ranges; community sizes are already
     // power-law (country-population style, §5.3).
@@ -661,6 +671,7 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
     let init_charge = Charge::PerLink(fed.init_model_charge(&global));
     fed.broadcast_model(0, &global, &all, init_charge)?;
     let mut last_acc = 0.0;
+    let mut stale_rejected = 0usize;
     for round in 0..cfg.global_rounds {
         let sim0 = monitor.net.total_concurrent_secs();
         let sel = select_with_dropout(
@@ -671,12 +682,11 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
             round,
             &mut rng,
         );
-        let results = fed.train_round(round, &sel.participants, true)?;
-        let crit_path = results.iter().map(|r| r.compute_secs).fold(0.0f64, f64::max);
-        let round_loss: f64 = results.iter().map(|r| r.loss as f64).sum();
-        let t_agg = std::time::Instant::now();
-        global = fed.aggregate_and_broadcast(round, &results, &all)?;
-        let agg_secs = t_agg.elapsed().as_secs_f64();
+        let mut step = fed.policy_round(round, &sel.participants, true, &all)?;
+        stale_rejected += step.rejected_stale;
+        if let Some(mdl) = step.model.take() {
+            global = mdl;
+        }
         if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
             monitor.start("eval");
             let (correct, cnt) = fed.eval_round(round, &eval_targets, None)?;
@@ -687,16 +697,17 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
         }
         monitor.record_round(RoundRecord {
             round,
-            train_secs: crit_path,
-            agg_secs,
+            train_secs: step.crit_path_secs(),
+            agg_secs: step.agg_secs,
             sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
-            train_loss: round_loss / sel.participants.len().max(1) as f64,
+            train_loss: step.mean_loss(),
             test_accuracy: last_acc,
         });
         monitor.sample_resources();
     }
     fed.shutdown()?;
     monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note("stale_rejected", stale_rejected);
     monitor.note(
         "param_checksum",
         format!("{:016x}", fnv1a(&encode_params(&global.values))),

@@ -11,6 +11,20 @@
 //! `Train` order immediately (message passing is cheap) but waits for a
 //! permit before touching the engine, reporting the wait separately so the
 //! monitor can attribute round time to compute vs. wait vs. transfer.
+//!
+//! Injected straggler delay sleeps *before* the permit is acquired: it
+//! models a slow client machine, which in a real federation does not occupy
+//! one of the simulation host's compute slots. The delay still counts toward
+//! the client's reported `compute_secs` (it is local round time), so sync
+//! rounds see it on their critical path while the async policy can schedule
+//! around it.
+//!
+//! The actor makes **no lockstep assumption**: frames are processed strictly
+//! in mailbox order, so a `SetModel` that arrives while an async round is
+//! already training simply applies after the in-flight update is sent. Each
+//! actor caches its last broadcast `(version, values)`; `ModelVersion`
+//! re-adopts that cache without any payload crossing the wire, and every
+//! update is stamped with the version of the model it was trained from.
 
 use std::sync::Arc;
 
@@ -101,6 +115,10 @@ pub fn actor_main(setup: ActorSetup) {
         straggler_seed,
     } = setup;
     let mut model = init;
+    // Version of the last coordinator broadcast this client trained from,
+    // plus a cached copy of that broadcast for `ModelVersion` re-adoption.
+    let mut model_version: u32 = 0;
+    let mut cached_broadcast: (u32, Vec<Vec<f32>>) = (0, model.values.clone());
     let cid = client as u32;
     loop {
         let frame = match link.recv() {
@@ -123,7 +141,7 @@ pub fn actor_main(setup: ActorSetup) {
                     return;
                 }
             }
-            DownMsg::SetModel { round: _, values } => {
+            DownMsg::SetModel { round: _, version, values } => {
                 if values.len() != model.values.len()
                     || values.iter().zip(&model.values).any(|(a, b)| a.len() != b.len())
                 {
@@ -137,19 +155,43 @@ pub fn actor_main(setup: ActorSetup) {
                     );
                     continue;
                 }
+                cached_broadcast = (version, values.clone());
                 model.values = values;
+                model_version = version;
+            }
+            DownMsg::ModelVersion { version } => {
+                if cached_broadcast.0 != version {
+                    let _ = link.send(
+                        UpMsg::Failed {
+                            client: cid,
+                            error: format!(
+                                "ModelVersion {version} not cached (trainer holds {})",
+                                cached_broadcast.0
+                            ),
+                        }
+                        .encode()
+                        .into(),
+                    );
+                    continue;
+                }
+                model.values = cached_broadcast.1.clone();
+                model_version = version;
             }
             DownMsg::Train { round, scale, upload } => {
-                let t_wait = std::time::Instant::now();
-                let _permit = gate.acquire();
-                let wait_secs = t_wait.elapsed().as_secs_f64();
                 let t0 = std::time::Instant::now();
+                // Straggle outside the gate (a slow client, not a busy
+                // simulation core); still billed as this client's compute.
                 if straggler_ms > 0.0 {
                     let frac = hash_f32(straggler_seed, round as u64, cid as u64) as f64;
                     std::thread::sleep(std::time::Duration::from_secs_f64(
                         frac * straggler_ms / 1e3,
                     ));
                 }
+                let t_wait = std::time::Instant::now();
+                let _permit = gate.acquire();
+                let wait_secs = t_wait.elapsed().as_secs_f64();
+                let straggle_secs = t_wait.duration_since(t0).as_secs_f64();
+                let t_compute = std::time::Instant::now();
                 // A panic in task logic must not kill the thread silently —
                 // the coordinator would block on the missing update forever.
                 let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -157,7 +199,7 @@ pub fn actor_main(setup: ActorSetup) {
                 }));
                 let reply = match outcome {
                     Ok(Ok(up)) => {
-                        let compute_secs = t0.elapsed().as_secs_f64();
+                        let compute_secs = straggle_secs + t_compute.elapsed().as_secs_f64();
                         let mut privacy_secs = 0.0;
                         let payload = if !upload {
                             UpdatePayload::None
@@ -193,6 +235,7 @@ pub fn actor_main(setup: ActorSetup) {
                         UpMsg::Update(UpdateEnvelope {
                             client: cid,
                             round,
+                            model_version,
                             loss: up.loss,
                             compute_secs,
                             wait_secs,

@@ -13,6 +13,15 @@
 //! Rendezvous → [ BroadcastModel → LocalTrain → UploadUpdate → Aggregate ]* → Finish
 //! ```
 //!
+//! How a round's training phase is *scheduled* is pluggable: each scheduler
+//! step runs under a [`policy::RoundPolicy`] — [`policy::SyncBarrier`] (the
+//! classic lockstep round, bitwise-identical to the sequential reference) or
+//! [`policy::AsyncBounded`] (staleness-bounded buffered aggregation that
+//! flushes after `buffer_size` fresh updates instead of waiting for
+//! stragglers, rejects uploads more than `max_staleness` broadcasts old and
+//! ledgers them as waste, and discounts admitted late updates by
+//! `1 / (1 + staleness)`). Selected via `federation.mode: sync | async`.
+//!
 //! - **Rendezvous** — [`runtime::Federation::spawn`] opens the transport,
 //!   moves each task's [`actor::ClientLogic`] onto a named trainer thread,
 //!   and handshakes (`Hello`/`HelloAck`) with every actor.
@@ -39,11 +48,12 @@
 //! ```text
 //! coordinator/{nc,gc,lp}.rs   task setup + round schedule (what to train/aggregate)
 //!         │  ClientLogic per client
-//! federation::runtime         event loop, sampling/dropout, deterministic aggregation
+//! federation::runtime         event-driven scheduler, sharded aggregation, versioned broadcasts
+//! federation::policy          RoundPolicy: SyncBarrier | AsyncBounded{max_staleness, buffer_size}
 //! federation::actor           trainer threads, concurrency gate, client-side privacy
-//! federation::protocol        typed messages ⇄ checksummed byte frames
+//! federation::protocol        typed messages ⇄ checksummed byte frames (version-stamped)
 //! transport::link             Transport trait; backend #1: in-memory channels
-//! transport::SimNet           byte/phase ledger; serial + concurrent link time
+//! transport::SimNet           byte/phase ledger; serial + concurrent link time; waste + tick groups
 //! runtime::Engine             shared PJRT compute service (its own thread)
 //! ```
 //!
@@ -53,17 +63,24 @@
 //!
 //! ## Determinism
 //!
-//! Three rules make `max_concurrency = k` bitwise-identical to
+//! Four rules make sync-mode `max_concurrency = k` bitwise-identical to
 //! `max_concurrency = 1` for every k (see `runtime` tests and
 //! `tests/federation_determinism.rs`): per-client persistent RNG streams,
-//! aggregation in participant order (never completion order), and grouped
-//! ledger writes in that same order. Simulated network time distinguishes the
-//! serialized view (`sim_secs`, the pre-federation single-wire model) from
-//! the concurrent view (`concurrent_secs`, max over parallel links).
+//! aggregation in participant order (never completion order), grouped
+//! ledger writes in that same order, and a sharded reduce whose per-element
+//! float-op sequence equals the serial sum for any `agg_shards`. Async mode
+//! deliberately trades run-to-run reproducibility for straggler immunity,
+//! but `max_staleness: 0` degenerates to the barrier and reproduces sync
+//! bit for bit. Simulated network time distinguishes the serialized view
+//! (`sim_secs`, the pre-federation single-wire model) from the concurrent
+//! view (`concurrent_secs`, max over parallel links per collective or per
+//! scheduler tick).
 
 pub mod actor;
+pub mod policy;
 pub mod protocol;
 pub mod runtime;
 
 pub use actor::{ClientLogic, LocalUpdate};
-pub use runtime::{Charge, Federation, RoundUpdate, TrainResult};
+pub use policy::{AsyncBounded, RoundPolicy, SyncBarrier};
+pub use runtime::{Charge, Federation, PolicyRound, RoundUpdate, StepOutcome, TrainResult};

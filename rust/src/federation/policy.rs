@@ -1,0 +1,281 @@
+//! Pluggable round policies: how the event-driven scheduler turns a round's
+//! participant list into an admitted update set.
+//!
+//! The coordinator no longer hard-codes one barrier per round. Each
+//! scheduler step is parameterized by a [`RoundPolicy`]:
+//!
+//! - [`SyncBarrier`] — order every participant, wait for every update.
+//!   Bitwise-identical to the pre-refactor behavior (the body *is* the old
+//!   `train_round` collection loop), proven by the existing determinism
+//!   tests.
+//! - [`AsyncBounded`] — FedBuff-style staleness-bounded buffered
+//!   aggregation. Train orders stay outstanding across steps; a step first
+//!   drains any straggler updates that already arrived (stashed by the eval
+//!   loop or sitting in the transport), orders the idle participants, and
+//!   then blocks only until `buffer_size` *fresh* updates are buffered.
+//!   An update trained from a model more than `max_staleness` broadcasts old
+//!   is rejected — its upload bytes are ledgered as waste — while admitted
+//!   updates are re-weighted by `1 / (1 + staleness)`. With
+//!   `max_staleness = 0` no client may be left behind, so the policy
+//!   degenerates to the barrier and reproduces [`SyncBarrier`] bit for bit
+//!   (the equivalence test in `runtime` pins this).
+//!
+//! Determinism note: the admitted set of an async step depends on real
+//! scheduling (that is the point — the coordinator stops waiting for
+//! stragglers), but *given* the admitted set everything downstream is
+//! deterministic: results are ordered by train-order issue sequence, the
+//! upload group is ledgered in that same order, and the sharded reduce is
+//! bitwise-equal to the serial sum.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::runtime::{Federation, RoundUpdate, StepOutcome, TrainResult};
+
+/// A round-scheduling policy driving one scheduler step of the federation
+/// event loop.
+pub trait RoundPolicy: Send {
+    /// The `federation.mode` name this policy implements.
+    fn name(&self) -> &'static str;
+
+    /// Order training for `participants` and collect updates according to
+    /// the policy. Returns admitted results in a deterministic order plus
+    /// the step's rejection count.
+    fn step(
+        &mut self,
+        fed: &mut Federation<'_>,
+        round: usize,
+        participants: &[usize],
+        upload: bool,
+    ) -> Result<StepOutcome>;
+}
+
+/// The synchronous barrier: today's lockstep round, unchanged.
+pub struct SyncBarrier;
+
+impl RoundPolicy for SyncBarrier {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+
+    fn step(
+        &mut self,
+        fed: &mut Federation<'_>,
+        round: usize,
+        participants: &[usize],
+        upload: bool,
+    ) -> Result<StepOutcome> {
+        let results = fed.sync_collect(round, participants, upload)?;
+        Ok(StepOutcome { results, rejected_stale: 0 })
+    }
+}
+
+/// Staleness-bounded buffered asynchrony (FedBuff-style; see FedGCN /
+/// FederatedScope-GNN for the convergence–communication framing).
+pub struct AsyncBounded {
+    pub max_staleness: u32,
+    /// Raw `federation.buffer_size` knob (`0` = auto: half the step's
+    /// participants).
+    pub buffer_size: usize,
+    /// Outstanding train orders: client → issue sequence number. Orders
+    /// survive across steps — that is what makes a straggler's late update
+    /// arrive "stale" instead of blocking a barrier.
+    in_flight: HashMap<usize, u64>,
+    next_seq: u64,
+    /// Fresh uploads that completed during a **non-aggregating** step (an
+    /// `upload: false` round had nothing to flush them into). They wait here
+    /// for the next aggregating step, which re-checks their staleness
+    /// against the then-current version before admitting them.
+    held: Vec<HeldUpdate>,
+}
+
+/// An admitted upload parked between steps (see [`AsyncBounded::held`]).
+struct HeldUpdate {
+    seq: u64,
+    /// The broadcast version the update was trained from (staleness basis).
+    model_version: u32,
+    /// Ledgered upload size, kept so a late rejection can still be marked
+    /// as waste.
+    up_bytes: u64,
+    /// Result carrying the client's *undiscounted* base weight; the
+    /// staleness discount is applied at release time.
+    result: TrainResult,
+}
+
+/// Per-step collection state.
+struct StepState {
+    /// Admitted results tagged with their order-issue sequence.
+    collected: Vec<(u64, TrainResult)>,
+    /// Admitted results that actually carry an upload — what an aggregating
+    /// step's flush target counts (`Local` straggler completions don't fill
+    /// the buffer).
+    admitted_uploads: usize,
+    /// Every completed upload's `(seq, bytes)` — admitted or rejected — for
+    /// the tick's grouped ledger write.
+    upload_sizes: Vec<(u64, u64)>,
+    rejected: usize,
+    decode_secs: f64,
+    privacy_secs: f64,
+}
+
+impl AsyncBounded {
+    pub fn new(max_staleness: u32, buffer_size: usize) -> AsyncBounded {
+        AsyncBounded {
+            max_staleness,
+            buffer_size,
+            in_flight: HashMap::new(),
+            next_seq: 0,
+            held: Vec::new(),
+        }
+    }
+
+    /// Process one completed update: decode, ledger, then admit, hold, or
+    /// reject by staleness. `upload` says whether the current step flushes.
+    fn absorb(
+        &mut self,
+        fed: &mut Federation<'_>,
+        round: usize,
+        u: super::protocol::UpdateEnvelope,
+        upload: bool,
+        st: &mut StepState,
+    ) -> Result<()> {
+        let c = u.client as usize;
+        let Some(seq) = self.in_flight.remove(&c) else {
+            bail!("protocol violation: update from trainer {c} with no order in flight");
+        };
+        let staleness = fed.version().saturating_sub(u.model_version);
+        let (update, up_bytes, dsecs) = fed.adopt_payload(c, u.payload)?;
+        st.decode_secs += dsecs;
+        st.privacy_secs += u.privacy_secs;
+        fed.note_client_round(round, c, u.compute_secs, u.wait_secs, up_bytes);
+        if up_bytes > 0 {
+            st.upload_sizes.push((seq, up_bytes));
+        }
+        let uploaded = !matches!(update, RoundUpdate::Local);
+        if uploaded && staleness > self.max_staleness {
+            fed.note_waste(up_bytes);
+            st.rejected += 1;
+            return Ok(());
+        }
+        let base = fed.client_weight(c);
+        let result = TrainResult {
+            client: c,
+            weight: base / (1.0 + staleness as f32),
+            loss: u.loss,
+            compute_secs: u.compute_secs,
+            update,
+        };
+        if uploaded && !upload {
+            // Nothing to flush this step: park the fresh upload (with its
+            // base weight) for the next aggregating step.
+            self.held.push(HeldUpdate {
+                seq,
+                model_version: u.model_version,
+                up_bytes,
+                result: TrainResult { weight: base, ..result },
+            });
+            return Ok(());
+        }
+        if uploaded {
+            st.admitted_uploads += 1;
+        }
+        st.collected.push((seq, result));
+        Ok(())
+    }
+
+    /// Release parked uploads into an aggregating step, re-checking their
+    /// staleness against the current version.
+    fn release_held(&mut self, fed: &mut Federation<'_>, st: &mut StepState) {
+        for h in std::mem::take(&mut self.held) {
+            let staleness = fed.version().saturating_sub(h.model_version);
+            if staleness > self.max_staleness {
+                fed.note_waste(h.up_bytes);
+                st.rejected += 1;
+                continue;
+            }
+            let mut r = h.result;
+            r.weight /= 1.0 + staleness as f32;
+            st.admitted_uploads += 1;
+            st.collected.push((h.seq, r));
+        }
+    }
+}
+
+impl RoundPolicy for AsyncBounded {
+    fn name(&self) -> &'static str {
+        "async"
+    }
+
+    fn step(
+        &mut self,
+        fed: &mut Federation<'_>,
+        round: usize,
+        participants: &[usize],
+        upload: bool,
+    ) -> Result<StepOutcome> {
+        let mut st = StepState {
+            collected: Vec::new(),
+            admitted_uploads: 0,
+            upload_sizes: Vec::new(),
+            rejected: 0,
+            decode_secs: 0.0,
+            privacy_secs: 0.0,
+        };
+        // 1. An aggregating step first releases uploads parked during
+        //    non-aggregating steps (staleness re-checked now), then drains
+        //    stragglers that already finished: updates stashed by the eval
+        //    loop, then anything sitting in the transport.
+        if upload {
+            self.release_held(fed, &mut st);
+        }
+        for u in fed.drain_stash() {
+            self.absorb(fed, round, u, upload, &mut st)?;
+        }
+        while let Some(u) = fed.try_recv_update()? {
+            self.absorb(fed, round, u, upload, &mut st)?;
+        }
+        // 2. Order training for every idle participant; busy stragglers keep
+        //    their outstanding order.
+        for &c in participants {
+            if self.in_flight.contains_key(&c) {
+                continue;
+            }
+            fed.send_train(round, c, participants, upload)?;
+            self.in_flight.insert(c, self.next_seq);
+            self.next_seq += 1;
+        }
+        // 3. Block until the flush target is met: an aggregating step counts
+        //    buffered *uploads* (Local straggler completions don't fill the
+        //    buffer), a local-only step counts completions. `max_staleness =
+        //    0` means nobody may fall behind — the barrier degenerate case.
+        let outstanding = self.in_flight.len();
+        let target = if self.max_staleness == 0 {
+            outstanding
+        } else {
+            let buf = if self.buffer_size == 0 {
+                (participants.len() / 2).max(1)
+            } else {
+                self.buffer_size.max(1)
+            };
+            buf.min(outstanding)
+        };
+        let mut completed = 0usize;
+        loop {
+            let progress = if upload { st.admitted_uploads } else { st.collected.len() };
+            if progress >= target || completed >= outstanding {
+                break;
+            }
+            let u = fed.recv_update()?;
+            completed += 1;
+            self.absorb(fed, round, u, upload, &mut st)?;
+        }
+        // 4. Close the tick: one grouped ledger write in issue order.
+        st.upload_sizes.sort_by_key(|(seq, _)| *seq);
+        let sizes: Vec<u64> = st.upload_sizes.iter().map(|(_, b)| *b).collect();
+        fed.finish_train_tick(&sizes, st.decode_secs, st.privacy_secs);
+        st.collected.sort_by_key(|(seq, _)| *seq);
+        let results = st.collected.into_iter().map(|(_, r)| r).collect();
+        Ok(StepOutcome { results, rejected_stale: st.rejected })
+    }
+}

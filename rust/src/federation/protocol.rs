@@ -21,10 +21,19 @@
 //! **Ledger rule.** Only *data-plane* payloads are charged to the
 //! [`crate::transport::SimNet`]: model broadcasts (`SetModel`) and model
 //! uploads (`Update` with a payload). Control frames (`Hello`, `Train`,
-//! `Eval`, `Stop`, `Metric`) are orchestration that the paper's measured
-//! system does not bill as communication cost; likewise an `Eval` model
-//! override stands in for server-side evaluation and a re-sent cached model
-//! (see the runtime docs) — both are explicitly uncharged.
+//! `Eval`, `Stop`, `Metric`, `ModelVersion`) are orchestration that the
+//! paper's measured system does not bill as communication cost; likewise an
+//! `Eval` model override stands in for server-side evaluation — explicitly
+//! uncharged.
+//!
+//! **Version stamps.** Every `SetModel` broadcast carries a monotonically
+//! increasing `version` (one bump per coordinator broadcast); trainers cache
+//! the last broadcast and stamp every [`UpdateEnvelope`] with the version of
+//! the model the update was trained from. The async round policy
+//! ([`crate::federation::policy::AsyncBounded`]) uses that stamp to bound
+//! staleness; `ModelVersion { version }` orders a trainer to re-adopt its
+//! cached broadcast — a control frame, so the "re-send a model the client
+//! already holds" idiom is now honestly free (no values cross the wire).
 
 use crate::he::Ciphertext;
 use crate::transport::serialize::{Reader, WireError, Writer};
@@ -35,8 +44,10 @@ pub enum DownMsg {
     /// Rendezvous probe; the trainer answers with [`UpMsg::HelloAck`].
     Hello { client: u32 },
     /// Replace the trainer's current model with these parameter values
-    /// (shapes/names are fixed by the session's init model).
-    SetModel { round: u32, values: Vec<Vec<f32>> },
+    /// (shapes/names are fixed by the session's init model). `version` is the
+    /// coordinator's broadcast counter; the trainer caches `(version,
+    /// values)` and stamps subsequent updates with it.
+    SetModel { round: u32, version: u32, values: Vec<Vec<f32>> },
     /// Run one round of local training from the current model. `scale` is
     /// the pre-agreed aggregation share (used by the HE path to pre-scale
     /// before encryption); `upload` says whether the result must be shipped
@@ -45,6 +56,10 @@ pub enum DownMsg {
     /// Evaluate the current model, or `values` when provided (server-side
     /// evaluation stand-in, uncharged).
     Eval { round: u32, values: Option<Vec<Vec<f32>>> },
+    /// Re-adopt the cached broadcast model stamped `version` (no payload —
+    /// the client already holds it). Fails if the trainer's cached broadcast
+    /// has a different version.
+    ModelVersion { version: u32 },
     /// Finish the session; the trainer thread exits.
     Stop,
 }
@@ -65,6 +80,9 @@ pub enum UpdatePayload {
 pub struct UpdateEnvelope {
     pub client: u32,
     pub round: u32,
+    /// Broadcast version of the model this update was trained from (the
+    /// staleness stamp the async policy checks against its bound).
+    pub model_version: u32,
     pub loss: f32,
     /// Local compute seconds (incl. injected straggler delay).
     pub compute_secs: f64,
@@ -92,6 +110,7 @@ const D_SET_MODEL: u8 = 2;
 const D_TRAIN: u8 = 3;
 const D_EVAL: u8 = 4;
 const D_STOP: u8 = 5;
+const D_MODEL_VERSION: u8 = 6;
 
 const U_HELLO_ACK: u8 = 1;
 const U_UPDATE: u8 = 2;
@@ -119,24 +138,25 @@ fn read_values(r: &mut Reader<'_>) -> Result<Vec<Vec<f32>>, WireError> {
 }
 
 /// Exact encoded length of a `SetModel` frame carrying tensors of these
-/// lengths, without building the frame: tag (1) + round (4) + tensor count
-/// (4) + per tensor (4-byte length prefix + 4 bytes/value) + checksum
-/// trailer (8). Kept in lock-step with [`encode_set_model`] (asserted by the
-/// `set_model_frame_len_formula` test) so the ledger can charge broadcasts
-/// without serializing the model twice.
+/// lengths, without building the frame: tag (1) + round (4) + version (4) +
+/// tensor count (4) + per tensor (4-byte length prefix + 4 bytes/value) +
+/// checksum trailer (8). Kept in lock-step with [`encode_set_model`]
+/// (asserted by the `set_model_frame_len_formula` test) so the ledger can
+/// charge broadcasts without serializing the model twice.
 pub fn set_model_frame_len(tensor_lens: impl Iterator<Item = usize>) -> u64 {
     let body: u64 = tensor_lens.map(|l| 4 + 4 * l as u64).sum();
-    1 + 4 + 4 + body + 8
+    1 + 4 + 4 + 4 + body + 8
 }
 
 /// Encode a `SetModel` frame straight from borrowed values — the broadcast
 /// hot path, sparing the full-model copy that building a [`DownMsg`] first
 /// would cost. Byte-identical to `DownMsg::SetModel { .. }.encode()`.
-pub fn encode_set_model(round: u32, values: &[Vec<f32>]) -> Vec<u8> {
+pub fn encode_set_model(round: u32, version: u32, values: &[Vec<f32>]) -> Vec<u8> {
     let cap = set_model_frame_len(values.iter().map(|v| v.len())) as usize;
     let mut w = Writer::with_capacity(cap);
     w.u8(D_SET_MODEL);
     w.u32(round);
+    w.u32(version);
     write_values(&mut w, values);
     w.finish()
 }
@@ -165,9 +185,10 @@ impl DownMsg {
                 w.u8(D_HELLO);
                 w.u32(*client);
             }
-            DownMsg::SetModel { round, values } => {
+            DownMsg::SetModel { round, version, values } => {
                 w.u8(D_SET_MODEL);
                 w.u32(*round);
+                w.u32(*version);
                 write_values(&mut w, values);
             }
             DownMsg::Train { round, scale, upload } => {
@@ -187,6 +208,10 @@ impl DownMsg {
                     }
                 }
             }
+            DownMsg::ModelVersion { version } => {
+                w.u8(D_MODEL_VERSION);
+                w.u32(*version);
+            }
             DownMsg::Stop => w.u8(D_STOP),
         }
         w.finish()
@@ -197,7 +222,11 @@ impl DownMsg {
         let tag = r.u8()?;
         Ok(match tag {
             D_HELLO => DownMsg::Hello { client: r.u32()? },
-            D_SET_MODEL => DownMsg::SetModel { round: r.u32()?, values: read_values(&mut r)? },
+            D_SET_MODEL => DownMsg::SetModel {
+                round: r.u32()?,
+                version: r.u32()?,
+                values: read_values(&mut r)?,
+            },
             D_TRAIN => DownMsg::Train {
                 round: r.u32()?,
                 scale: r.f32()?,
@@ -208,6 +237,7 @@ impl DownMsg {
                 let values = if r.u8()? != 0 { Some(read_values(&mut r)?) } else { None };
                 DownMsg::Eval { round, values }
             }
+            D_MODEL_VERSION => DownMsg::ModelVersion { version: r.u32()? },
             D_STOP => DownMsg::Stop,
             t => return Err(WireError::BadTag(t)),
         })
@@ -226,6 +256,7 @@ impl UpMsg {
                 w.u8(U_UPDATE);
                 w.u32(u.client);
                 w.u32(u.round);
+                w.u32(u.model_version);
                 w.f32(u.loss);
                 w.f64(u.compute_secs);
                 w.f64(u.wait_secs);
@@ -266,6 +297,7 @@ impl UpMsg {
             U_UPDATE => {
                 let client = r.u32()?;
                 let round = r.u32()?;
+                let model_version = r.u32()?;
                 let loss = r.f32()?;
                 let compute_secs = r.f64()?;
                 let wait_secs = r.f64()?;
@@ -279,6 +311,7 @@ impl UpMsg {
                 UpMsg::Update(UpdateEnvelope {
                     client,
                     round,
+                    model_version,
                     loss,
                     compute_secs,
                     wait_secs,
@@ -306,11 +339,12 @@ mod tests {
     fn down_roundtrip() {
         let msgs = vec![
             DownMsg::Hello { client: 3 },
-            DownMsg::SetModel { round: 7, values: vec![vec![1.0, 2.0], vec![-0.5]] },
+            DownMsg::SetModel { round: 7, version: 12, values: vec![vec![1.0, 2.0], vec![-0.5]] },
             DownMsg::Train { round: 7, scale: 0.25, upload: true },
             DownMsg::Train { round: 8, scale: 1.0, upload: false },
             DownMsg::Eval { round: 9, values: None },
             DownMsg::Eval { round: 9, values: Some(vec![vec![3.0]]) },
+            DownMsg::ModelVersion { version: 5 },
             DownMsg::Stop,
         ];
         for m in msgs {
@@ -319,10 +353,11 @@ mod tests {
             match (&m, &back) {
                 (DownMsg::Hello { client: a }, DownMsg::Hello { client: b }) => assert_eq!(a, b),
                 (
-                    DownMsg::SetModel { round: r1, values: v1 },
-                    DownMsg::SetModel { round: r2, values: v2 },
+                    DownMsg::SetModel { round: r1, version: s1, values: v1 },
+                    DownMsg::SetModel { round: r2, version: s2, values: v2 },
                 ) => {
                     assert_eq!(r1, r2);
+                    assert_eq!(s1, s2);
                     assert_eq!(v1, v2);
                 }
                 (
@@ -340,6 +375,10 @@ mod tests {
                     assert_eq!(r1, r2);
                     assert_eq!(v1, v2);
                 }
+                (
+                    DownMsg::ModelVersion { version: v1 },
+                    DownMsg::ModelVersion { version: v2 },
+                ) => assert_eq!(v1, v2),
                 (DownMsg::Stop, DownMsg::Stop) => {}
                 other => panic!("mismatched roundtrip: {other:?}"),
             }
@@ -351,6 +390,7 @@ mod tests {
         let m = UpMsg::Update(UpdateEnvelope {
             client: 5,
             round: 11,
+            model_version: 9,
             loss: 0.125,
             compute_secs: 1.5,
             wait_secs: 0.25,
@@ -361,6 +401,7 @@ mod tests {
             UpMsg::Update(u) => {
                 assert_eq!(u.client, 5);
                 assert_eq!(u.round, 11);
+                assert_eq!(u.model_version, 9);
                 assert_eq!(u.loss, 0.125);
                 assert_eq!(u.compute_secs, 1.5);
                 assert_eq!(u.wait_secs, 0.25);
@@ -399,8 +440,8 @@ mod tests {
     fn set_model_frame_len_formula() {
         for shapes in [vec![], vec![0usize], vec![5], vec![16, 4, 16, 4]] {
             let values: Vec<Vec<f32>> = shapes.iter().map(|&l| vec![0.5; l]).collect();
-            let borrowed = encode_set_model(3, &values);
-            let frame = DownMsg::SetModel { round: 3, values }.encode();
+            let borrowed = encode_set_model(3, 8, &values);
+            let frame = DownMsg::SetModel { round: 3, version: 8, values }.encode();
             assert_eq!(borrowed, frame, "borrowed encoder drifted for shapes {shapes:?}");
             assert_eq!(
                 frame.len() as u64,

@@ -280,6 +280,52 @@ impl CkksContext {
         out
     }
 
+    /// Homomorphic sum of many ciphertexts with the slot space chunked
+    /// across a scoped worker pool (the coordinator's sharded reduce for
+    /// 1000-client aggregation). **Bitwise-identical to the serial
+    /// [`CkksContext::add_assign`] fold for every shard count**: slot
+    /// addition is exact wrapping integer arithmetic, so per-slot order is
+    /// irrelevant, and the `adds`/`valid` noise bookkeeping replays the
+    /// serial fold after the workers join.
+    pub fn sum_sharded(&self, cts: &[&Ciphertext], shards: usize) -> Ciphertext {
+        assert!(!cts.is_empty(), "nothing to sum");
+        let mut acc = cts[0].clone();
+        if cts.len() == 1 {
+            return acc;
+        }
+        for ct in &cts[1..] {
+            assert_eq!(acc.params, ct.params, "ciphertext parameter mismatch");
+            assert_eq!(acc.len, ct.len, "ciphertext length mismatch");
+        }
+        let n = acc.data.len();
+        let shards = shards.max(1).min(n.max(1));
+        if shards == 1 {
+            for ct in &cts[1..] {
+                self.add_assign(&mut acc, ct);
+            }
+            return acc;
+        }
+        let chunk = (n + shards - 1) / shards;
+        std::thread::scope(|scope| {
+            for (k, slice) in acc.data.chunks_mut(chunk).enumerate() {
+                let off = k * chunk;
+                scope.spawn(move || {
+                    for ct in &cts[1..] {
+                        let src = &ct.data[off..off + slice.len()];
+                        for (a, b) in slice.iter_mut().zip(src) {
+                            *a = a.wrapping_add(*b);
+                        }
+                    }
+                });
+            }
+        });
+        for ct in &cts[1..] {
+            acc.adds += ct.adds + 1;
+            acc.valid &= ct.valid;
+        }
+        acc
+    }
+
     /// Decrypt back to f32. Noise grows with the number of additions; with
     /// invalid parameters the output is visibly corrupted.
     pub fn decrypt(&self, ct: &Ciphertext) -> Vec<f32> {
@@ -386,6 +432,32 @@ mod tests {
             let expect = i as f32 * parties as f32;
             assert!((x - expect).abs() < 0.05, "slot {i}: {x} vs {expect}");
         }
+    }
+
+    #[test]
+    fn sharded_sum_bitwise_equals_serial_fold() {
+        let ctx = ctx();
+        let parties: Vec<Ciphertext> = (0..5)
+            .map(|k| {
+                let v: Vec<f32> = (0..10_000).map(|i| (i + k * 7) as f32 * 0.01).collect();
+                ctx.encrypt(&v, 8192)
+            })
+            .collect();
+        let refs: Vec<&Ciphertext> = parties.iter().collect();
+        let mut serial = parties[0].clone();
+        for ct in &parties[1..] {
+            ctx.add_assign(&mut serial, ct);
+        }
+        for shards in [1usize, 2, 7] {
+            let sharded = ctx.sum_sharded(&refs, shards);
+            assert_eq!(sharded.data, serial.data, "slot data drifted at {shards} shards");
+            assert_eq!(sharded.adds, serial.adds, "noise bookkeeping drifted");
+            assert_eq!(sharded.valid, serial.valid);
+            assert_eq!(ctx.decrypt(&sharded), ctx.decrypt(&serial));
+        }
+        // Degenerate single-party "sum".
+        let one = ctx.sum_sharded(&refs[..1], 7);
+        assert_eq!(one.data, parties[0].data);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use std::process::ExitCode;
 
-use fedgraph::config::{FedGraphConfig, Method, PrivacyMode, Task};
+use fedgraph::config::{FedGraphConfig, FederationMode, Method, PrivacyMode, Task};
 use fedgraph::data;
 use fedgraph::he::{CkksParams, DpParams};
 
@@ -42,6 +42,8 @@ fn print_help() {
          \x20     [--scale S] [--beta B] [--batch-size B] [--he] [--dp]\n\
          \x20     [--lowrank K] [--hops H] [--sample-ratio R] [--seed S]\n\
          \x20     [--concurrency K] [--dropout F] [--straggler-ms MS]\n\
+         \x20     [--mode sync|async] [--max-staleness N] [--buffer-size N]\n\
+         \x20     [--agg-shards N]\n\
          \x20 list       supported task/method/dataset matrix\n\
          \x20 artifacts  show the artifact manifest"
     );
@@ -140,6 +142,18 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--straggler-ms") {
         cfg.federation.straggler_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--mode") {
+        cfg.federation.mode = FederationMode::parse(v)?;
+    }
+    if let Some(v) = flag_value(args, "--max-staleness") {
+        cfg.federation.max_staleness = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--buffer-size") {
+        cfg.federation.buffer_size = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--agg-shards") {
+        cfg.federation.agg_shards = v.parse()?;
     }
     if has_flag(args, "--he") {
         cfg.privacy = PrivacyMode::He(CkksParams::default_params());

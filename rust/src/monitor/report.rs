@@ -18,6 +18,9 @@ pub struct Report {
     /// collective) — the parallel federation's network wall clock.
     pub pretrain_net_concurrent_secs: f64,
     pub train_net_concurrent_secs: f64,
+    /// Upload bytes the coordinator rejected as stale (async mode's
+    /// staleness bound); a subset of the train-phase upload traffic.
+    pub train_wasted_bytes: u64,
     pub final_accuracy: f64,
     pub final_loss: f64,
     pub total_rounds: usize,
@@ -46,6 +49,7 @@ impl Report {
             train_net_secs: tr.sim_secs,
             pretrain_net_concurrent_secs: pre.concurrent_secs,
             train_net_concurrent_secs: tr.concurrent_secs,
+            train_wasted_bytes: tr.wasted_bytes,
             final_accuracy,
             final_loss,
             total_rounds: rounds.len(),
@@ -105,6 +109,12 @@ impl Report {
             fmt_secs(self.pretrain_net_concurrent_secs + self.train_net_concurrent_secs),
         ]);
         out.push_str(&c.render());
+        if self.train_wasted_bytes > 0 {
+            out.push_str(&format!(
+                "stale-rejected upload waste: {} (async staleness bound)\n",
+                fmt_bytes(self.train_wasted_bytes)
+            ));
+        }
         if !self.client_totals.is_empty() {
             let mut t = Table::new(&["client", "compute s", "wait s", "transfer s"])
                 .with_title("Per-client timeline");
@@ -174,6 +184,7 @@ impl Report {
             ("train_net_secs", self.train_net_secs.into()),
             ("pretrain_net_concurrent_secs", self.pretrain_net_concurrent_secs.into()),
             ("train_net_concurrent_secs", self.train_net_concurrent_secs.into()),
+            ("train_wasted_bytes", (self.train_wasted_bytes as usize).into()),
             ("final_accuracy", self.final_accuracy.into()),
             ("final_loss", self.final_loss.into()),
             ("peak_rss", (self.peak_rss as usize).into()),

@@ -31,6 +31,10 @@ pub trait CoordLink: Send {
     fn send(&mut self, client: usize, frame: Frame) -> Result<()>;
     /// Block until the next frame from any trainer arrives.
     fn recv(&mut self) -> Result<(usize, Frame)>;
+    /// Non-blocking poll: `Ok(None)` when no frame is waiting. The async
+    /// round policy drains already-arrived straggler updates with this
+    /// before issuing new train orders.
+    fn try_recv(&mut self) -> Result<Option<(usize, Frame)>>;
 }
 
 /// Trainer side of the fabric: a duplex lane to the coordinator.
@@ -77,6 +81,15 @@ impl CoordLink for ChannelCoord {
 
     fn recv(&mut self) -> Result<(usize, Frame)> {
         self.up.recv().map_err(|_| anyhow!("all trainers hung up"))
+    }
+
+    fn try_recv(&mut self) -> Result<Option<(usize, Frame)>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.up.try_recv() {
+            Ok(x) => Ok(Some(x)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("all trainers hung up")),
+        }
     }
 }
 
@@ -136,6 +149,17 @@ mod tests {
         let t = &mut trainers[0];
         assert_eq!(&*t.recv().unwrap(), &[1]);
         assert_eq!(&*t.recv().unwrap(), &[2]);
+    }
+
+    #[test]
+    fn try_recv_polls_without_blocking() {
+        let (mut coord, mut trainers) = ChannelTransport.open(2).unwrap();
+        assert!(coord.try_recv().unwrap().is_none(), "empty fabric must not block");
+        trainers[1].send(frame(&[9])).unwrap();
+        let (from, f) = coord.try_recv().unwrap().expect("frame was queued");
+        assert_eq!(from, 1);
+        assert_eq!(&*f, &[9]);
+        assert!(coord.try_recv().unwrap().is_none());
     }
 
     #[test]

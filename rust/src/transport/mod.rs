@@ -13,6 +13,7 @@
 pub mod link;
 pub mod serialize;
 
+use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// Which phase of the pipeline a transfer belongs to (the paper splits
@@ -65,9 +66,14 @@ pub struct PhaseCounter {
     /// all links shared one wire (the pre-federation ledger model).
     pub sim_secs: f64,
     /// Concurrent link time: transfers recorded as one group (a broadcast, a
-    /// round of parallel uploads) contribute the *max* of their per-link
-    /// times — the wall clock a parallel federation actually experiences.
+    /// round of parallel uploads, or one scheduler tick's staged in-round
+    /// actor traffic) contribute the *max* of their per-link times — the
+    /// wall clock a parallel federation actually experiences.
     pub concurrent_secs: f64,
+    /// Bytes that crossed the wire but were discarded by the coordinator —
+    /// stale async uploads rejected beyond the staleness bound. Always a
+    /// subset of `bytes_up`.
+    pub wasted_bytes: u64,
 }
 
 /// Timing of a grouped (parallel) set of transfers.
@@ -84,6 +90,10 @@ struct NetState {
     pretrain: PhaseCounter,
     train: PhaseCounter,
     eval: PhaseCounter,
+    /// Per-link seconds staged by trainer actors during the current
+    /// scheduler tick, keyed by `(phase, direction, link id)`. Folded into
+    /// the counters by [`SimNet::end_tick`].
+    tick: HashMap<(Phase, Direction, usize), f64>,
 }
 
 impl NetState {
@@ -117,12 +127,10 @@ impl SimNet {
     /// moves through ordinary memory (we are in-process) — this call is the
     /// network's *ledger*. A lone transfer is its own "group", so it adds the
     /// same time to both the serial and concurrent accumulators. In-round
-    /// client traffic issued from trainer actors (FedLink's per-step
-    /// exchange, BNS-GCN halo re-shipments) therefore serializes in
-    /// `concurrent_secs` even though those links overlap in reality — for
-    /// such traffic the concurrent figure is an upper bound; only
-    /// coordinator-grouped collectives ([`SimNet::send_group`]) get the
-    /// max-over-links treatment. See ROADMAP "Async federation" for the fix.
+    /// traffic issued from inside trainer actors (FedLink's per-step
+    /// exchange, BNS-GCN halo re-shipments) should use [`SimNet::stage`]
+    /// instead, so the scheduler can fold one tick's parallel links with the
+    /// max-over-links rule.
     pub fn send(&self, phase: Phase, dir: Direction, bytes: u64) -> f64 {
         let secs = self.transfer_secs(bytes);
         let mut st = self.state.lock().unwrap();
@@ -161,6 +169,70 @@ impl SimNet {
         c.sim_secs += timing.serial_secs;
         c.concurrent_secs += timing.concurrent_secs;
         timing
+    }
+
+    /// Stage an in-round transfer issued from inside a trainer actor (BNS-GCN
+    /// halo re-shipments, FedLink per-step exchanges). Bytes and message
+    /// counts hit the counters immediately — byte totals stay exact and
+    /// deterministic — but the link *time* is parked on the current scheduler
+    /// tick, keyed by `(phase, direction, link)`. When the coordinator closes
+    /// the tick ([`SimNet::end_tick`]), each phase adds the serial sum to
+    /// `sim_secs` and only the slowest link to `concurrent_secs`: traffic from
+    /// different clients in the same tick runs over independent links, while
+    /// repeated sends on one link still serialize (they accumulate in its
+    /// entry). This closes the old "`concurrent_secs` is an upper bound for
+    /// actor-issued traffic" caveat.
+    pub fn stage(&self, phase: Phase, dir: Direction, link: usize, bytes: u64) {
+        let secs = self.transfer_secs(bytes);
+        let mut st = self.state.lock().unwrap();
+        let c = st.phase_mut(phase);
+        match dir {
+            Direction::Up => c.bytes_up += bytes,
+            Direction::Down => c.bytes_down += bytes,
+        }
+        c.messages += 1;
+        *st.tick.entry((phase, dir, link)).or_insert(0.0) += secs;
+    }
+
+    /// Close the current scheduler tick: fold every staged link into the
+    /// counters (serial = sum, concurrent = slowest link per phase). Called
+    /// by the federation runtime at the end of each training/eval collection;
+    /// a no-op when nothing was staged.
+    pub fn end_tick(&self) {
+        let mut st = self.state.lock().unwrap();
+        if st.tick.is_empty() {
+            return;
+        }
+        let tick = std::mem::take(&mut st.tick);
+        for phase in [Phase::PreTrain, Phase::Train, Phase::Eval] {
+            let mut sum = 0.0f64;
+            let mut slowest = 0.0f64;
+            for ((p, _, _), secs) in &tick {
+                if *p == phase {
+                    sum += *secs;
+                    slowest = slowest.max(*secs);
+                }
+            }
+            if sum > 0.0 {
+                let c = st.phase_mut(phase);
+                c.sim_secs += sum;
+                c.concurrent_secs += slowest;
+            }
+        }
+    }
+
+    /// Mark `bytes` of already-ledgered upload traffic as waste: the
+    /// transfer happened (it is in `bytes_up`), but the coordinator rejected
+    /// the payload — a stale async update beyond the staleness bound.
+    pub fn note_waste(&self, phase: Phase, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.phase_mut(phase).wasted_bytes += bytes;
+    }
+
+    /// Total wasted (rejected-stale) bytes across all phases.
+    pub fn total_wasted_bytes(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.pretrain.wasted_bytes + st.train.wasted_bytes + st.eval.wasted_bytes
     }
 
     /// Broadcast accounting helper: the server sends the same `bytes` to
@@ -282,5 +354,43 @@ mod tests {
         net.send(Phase::Eval, Direction::Up, 42);
         net.reset();
         assert_eq!(net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn staged_tick_groups_links_concurrently() {
+        let net = SimNet::new(NetConfig { bandwidth_gbps: 1.0, latency_ms: 0.0 });
+        // Two clients ship in the same tick; client 1 sends twice (its two
+        // transfers serialize on its own link).
+        net.stage(Phase::Train, Direction::Up, 0, 125_000_000); // 1 s
+        net.stage(Phase::Train, Direction::Up, 1, 125_000_000); // 1 s
+        net.stage(Phase::Train, Direction::Up, 1, 125_000_000); // +1 s, same link
+        // Bytes land immediately; time waits for the tick to close.
+        let c = net.counter(Phase::Train);
+        assert_eq!(c.bytes_up, 375_000_000);
+        assert_eq!(c.messages, 3);
+        assert_eq!(c.sim_secs, 0.0);
+        net.end_tick();
+        let c = net.counter(Phase::Train);
+        assert!((c.sim_secs - 3.0).abs() < 1e-9, "serial = sum: {}", c.sim_secs);
+        assert!(
+            (c.concurrent_secs - 2.0).abs() < 1e-9,
+            "concurrent = slowest link (client 1's 2s): {}",
+            c.concurrent_secs
+        );
+        // Closing an empty tick is a no-op.
+        net.end_tick();
+        let c2 = net.counter(Phase::Train);
+        assert_eq!(c2.sim_secs, c.sim_secs);
+    }
+
+    #[test]
+    fn waste_is_a_subset_annotation() {
+        let net = SimNet::new(NetConfig::default());
+        net.send(Phase::Train, Direction::Up, 1000);
+        net.note_waste(Phase::Train, 1000);
+        let c = net.counter(Phase::Train);
+        assert_eq!(c.bytes_up, 1000);
+        assert_eq!(c.wasted_bytes, 1000);
+        assert_eq!(net.total_wasted_bytes(), 1000);
     }
 }
