@@ -32,6 +32,14 @@ cargo clippy --all-targets -- -D warnings
 echo "==> engine-free scheduler tests (round policies, staleness, waste ledger)"
 cargo test -q --lib federation::
 
+echo "==> engine-free transport tests (wire format, tcp framing, measured wire ledger)"
+cargo test -q --lib transport::
+
+echo "==> engine-free deployment tests (tcp loopback == channel, handshake, config codec)"
+cargo test -q --lib federation::runtime::tests::tcp_
+cargo test -q --lib federation::deploy::
+cargo test -q --lib config::
+
 echo "==> engine-free sharded-aggregation tests (bitwise vs serial)"
 cargo test -q --lib coordinator::aggregate::
 cargo test -q --lib he::ckks::
@@ -43,5 +51,36 @@ fi
 
 echo "==> cargo test -q            (tier-1, part 2)"
 cargo test -q
+
+# Multi-process loopback smoke test: a tiny NC run over `--transport tcp`
+# with two real `fedgraph worker` subprocesses. Needs the release binary and
+# compiled artifacts (run `make artifacts` first); skipped otherwise.
+if [ "${1:-}" != "--quick" ]; then
+    BIN="target/release/fedgraph"
+    if [ -x "$BIN" ] && { [ -f artifacts/manifest.json ] || [ -f ../artifacts/manifest.json ]; }; then
+        echo "==> multi-process smoke test (tcp loopback, 2 worker subprocesses)"
+        # Randomized port so concurrent CI runs on one host don't collide.
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        COORD_STATUS=0
+        "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+            --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 || COORD_STATUS=$?
+        W1_STATUS=0
+        W2_STATUS=0
+        wait "$W1" || W1_STATUS=$?
+        wait "$W2" || W2_STATUS=$?
+        if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
+            echo "ci.sh: tcp smoke test failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            exit 1
+        fi
+        echo "==> tcp smoke test: coordinator and both workers exited 0"
+    else
+        echo "==> skipping multi-process smoke test (no release binary or artifacts)"
+    fi
+fi
 
 echo "ci.sh: all green"

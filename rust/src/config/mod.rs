@@ -12,6 +12,7 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, bail, Result};
 
 use crate::he::{CkksParams, DpParams};
+use crate::transport::serialize::{Reader, WireError, Writer};
 use crate::transport::NetConfig;
 use crate::util::yaml::Yaml;
 
@@ -186,10 +187,53 @@ impl FederationMode {
     }
 }
 
+/// Which transport backend carries the federation's protocol frames — i.e.
+/// where the trainer actors live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process deployment: trainer actors are OS threads and frames move
+    /// through `std::sync::mpsc` channels (the default; bitwise-identical
+    /// reference).
+    Channel,
+    /// Multi-process deployment: the coordinator listens on
+    /// `federation.listen_addr` and `federation.workers` separate
+    /// `fedgraph worker` processes host the trainer actors over
+    /// length-prefixed, checksummed socket frames.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Result<TransportKind> {
+        match s.trim().to_lowercase().as_str() {
+            "channel" | "inprocess" | "in-process" => Ok(TransportKind::Channel),
+            "tcp" | "socket" => Ok(TransportKind::Tcp),
+            other => bail!("federation.transport must be 'channel' or 'tcp', got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
 /// Federation-runtime settings (the `federation:` YAML block): how trainer
-/// actors are scheduled and how client failures are injected.
+/// actors are scheduled, where they are deployed, and how client failures
+/// are injected.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FederationConfig {
+    /// Transport backend: `channel` (threads in this process) or `tcp`
+    /// (separate worker processes over sockets).
+    pub transport: TransportKind,
+    /// TCP only: the coordinator's listen address (`host:port`; port 0 binds
+    /// an ephemeral port).
+    pub listen_addr: String,
+    /// TCP only: how many worker processes the coordinator waits for before
+    /// the rendezvous. Clients are assigned round-robin over the workers in
+    /// accept order.
+    pub workers: usize,
     /// Round scheduling policy: `sync` (barrier per round) or `async`
     /// (staleness-bounded buffered aggregation). Async requires plaintext or
     /// DP uploads and an aggregating, non-clustered method.
@@ -207,10 +251,15 @@ pub struct FederationConfig {
     /// (one per core), `1` = the serial reference. Any value is
     /// bitwise-identical to serial (see `coordinator::aggregate`).
     pub agg_shards: usize,
-    /// Max trainer actors computing at once. `0` = auto (one per selected
-    /// client up to the machine's parallelism); `1` = the sequential
-    /// reference execution (bitwise-identical results, serialized wall
-    /// clock).
+    /// Max trainer actors computing at once **per process**. `0` = auto (one
+    /// per selected client up to the machine's parallelism); `1` = the
+    /// sequential reference execution (bitwise-identical results, serialized
+    /// wall clock). In a `tcp` deployment the cap applies independently in
+    /// every worker process — each worker models its own machine's cores —
+    /// so total concurrency is up to `workers × max_concurrency`; results
+    /// stay bitwise-identical regardless, but measured compute/wait timings
+    /// are only comparable across deployments at matching effective
+    /// parallelism.
     pub max_concurrency: usize,
     /// Per-round probability that a selected client drops out before
     /// training (its round is skipped; aggregation re-weights over the
@@ -225,6 +274,9 @@ pub struct FederationConfig {
 impl Default for FederationConfig {
     fn default() -> Self {
         FederationConfig {
+            transport: TransportKind::Channel,
+            listen_addr: "127.0.0.1:8791".to_string(),
+            workers: 2,
             mode: FederationMode::Sync,
             max_staleness: 1,
             buffer_size: 0,
@@ -451,6 +503,15 @@ impl FedGraphConfig {
         }
         // Federation block.
         let fed = y.get("federation");
+        if let Some(s) = fed.get("transport").as_str() {
+            cfg.federation.transport = TransportKind::parse(s)?;
+        }
+        if let Some(s) = fed.get("listen_addr").as_str() {
+            cfg.federation.listen_addr = s.to_string();
+        }
+        if let Some(v) = fed.get("workers").as_usize() {
+            cfg.federation.workers = v;
+        }
         if let Some(s) = fed.get("mode").as_str() {
             cfg.federation.mode = FederationMode::parse(s)?;
         }
@@ -516,6 +577,14 @@ impl FedGraphConfig {
         if self.federation.straggler_ms < 0.0 {
             bail!("federation.straggler_ms must be non-negative");
         }
+        if self.federation.transport == TransportKind::Tcp {
+            if self.federation.workers == 0 {
+                bail!("federation.transport: tcp needs federation.workers >= 1");
+            }
+            if self.federation.listen_addr.is_empty() {
+                bail!("federation.transport: tcp needs a federation.listen_addr");
+            }
+        }
         if self.federation.mode == FederationMode::Async {
             if self.uses_he() {
                 bail!(
@@ -542,6 +611,234 @@ impl FedGraphConfig {
     pub fn uses_he(&self) -> bool {
         matches!(self.privacy, PrivacyMode::He(_))
     }
+
+    /// Serialize the full config to checksummed wire bytes — the body of the
+    /// multi-process handshake's `Assign` frame. Binary (not YAML) so every
+    /// float reaches the worker process bit-exact: workers rebuild their
+    /// datasets, partitions and RNG streams from this config, and the
+    /// deployment guarantee is that a TCP run is bitwise-identical to the
+    /// in-process run.
+    pub fn encode_wire(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u8(CONFIG_WIRE_VERSION);
+        w.u8(task_code(self.task));
+        w.u8(method_code(self.method));
+        w.str(&self.dataset);
+        w.u64(self.n_trainer as u64);
+        w.u64(self.global_rounds as u64);
+        w.u64(self.local_steps as u64);
+        w.f32(self.learning_rate);
+        w.f64(self.iid_beta);
+        w.u64(self.num_hops as u64);
+        w.f64(self.sample_ratio);
+        w.u8(match self.sampling_type {
+            SamplingType::Random => 0,
+            SamplingType::Uniform => 1,
+        });
+        w.u64(self.batch_size as u64);
+        match &self.privacy {
+            PrivacyMode::Plaintext => w.u8(0),
+            PrivacyMode::He(p) => {
+                w.u8(1);
+                w.u64(p.poly_mod_degree as u64);
+                w.u32(p.coeff_mod_bits.len() as u32);
+                for &b in &p.coeff_mod_bits {
+                    w.u32(b);
+                }
+                w.u32(p.scale_bits);
+                w.u32(p.security_level);
+            }
+            PrivacyMode::Dp(d) => {
+                w.u8(2);
+                w.f64(d.0.epsilon);
+                w.f64(d.0.delta);
+                w.f64(d.0.clip_norm);
+            }
+        }
+        w.u64(self.lowrank_rank as u64);
+        w.f64(self.bns_ratio);
+        w.f32(self.fedprox_mu);
+        let f = &self.federation;
+        w.u8(match f.transport {
+            TransportKind::Channel => 0,
+            TransportKind::Tcp => 1,
+        });
+        w.str(&f.listen_addr);
+        w.u64(f.workers as u64);
+        w.u8(match f.mode {
+            FederationMode::Sync => 0,
+            FederationMode::Async => 1,
+        });
+        w.u32(f.max_staleness);
+        w.u64(f.buffer_size as u64);
+        w.u64(f.agg_shards as u64);
+        w.u64(f.max_concurrency as u64);
+        w.f64(f.dropout_frac);
+        w.f64(f.straggler_ms);
+        w.f64(self.network.bandwidth_gbps);
+        w.f64(self.network.latency_ms);
+        w.u64(self.seed);
+        w.f64(self.scale);
+        w.str(&self.artifacts_dir);
+        w.u64(self.eval_every as u64);
+        w.u32(self.extras.len() as u32);
+        for (k, v) in &self.extras {
+            w.str(k);
+            w.str(v);
+        }
+        w.finish()
+    }
+
+    /// Inverse of [`FedGraphConfig::encode_wire`].
+    pub fn decode_wire(bytes: &[u8]) -> Result<FedGraphConfig> {
+        let mut r = Reader::open(bytes).map_err(|e| anyhow!("config wire: {e}"))?;
+        let mut next = || -> Result<FedGraphConfig, WireError> {
+            let version = r.u8()?;
+            if version != CONFIG_WIRE_VERSION {
+                // An old coordinator talking to a new worker (or vice versa).
+                return Err(WireError::BadTag(version));
+            }
+            let task = task_from_code(r.u8()?)?;
+            let method = method_from_code(r.u8()?)?;
+            let dataset = r.str()?;
+            let mut cfg = FedGraphConfig::new(task, method, &dataset)
+                .map_err(|_| WireError::BadTag(0))?;
+            cfg.n_trainer = r.u64()? as usize;
+            cfg.global_rounds = r.u64()? as usize;
+            cfg.local_steps = r.u64()? as usize;
+            cfg.learning_rate = r.f32()?;
+            cfg.iid_beta = r.f64()?;
+            cfg.num_hops = r.u64()? as usize;
+            cfg.sample_ratio = r.f64()?;
+            cfg.sampling_type = match r.u8()? {
+                0 => SamplingType::Random,
+                _ => SamplingType::Uniform,
+            };
+            cfg.batch_size = r.u64()? as usize;
+            cfg.privacy = match r.u8()? {
+                0 => PrivacyMode::Plaintext,
+                1 => {
+                    let degree = r.u64()? as usize;
+                    let n_bits = r.u32()? as usize;
+                    let mut coeff = Vec::with_capacity(n_bits);
+                    for _ in 0..n_bits {
+                        coeff.push(r.u32()?);
+                    }
+                    let mut p = CkksParams::with_degree(degree);
+                    p.coeff_mod_bits = coeff;
+                    p.scale_bits = r.u32()?;
+                    p.security_level = r.u32()?;
+                    PrivacyMode::He(p)
+                }
+                2 => PrivacyMode::Dp(DpClone(DpParams {
+                    epsilon: r.f64()?,
+                    delta: r.f64()?,
+                    clip_norm: r.f64()?,
+                })),
+                t => return Err(WireError::BadTag(t)),
+            };
+            cfg.lowrank_rank = r.u64()? as usize;
+            cfg.bns_ratio = r.f64()?;
+            cfg.fedprox_mu = r.f32()?;
+            cfg.federation.transport = match r.u8()? {
+                0 => TransportKind::Channel,
+                _ => TransportKind::Tcp,
+            };
+            cfg.federation.listen_addr = r.str()?;
+            cfg.federation.workers = r.u64()? as usize;
+            cfg.federation.mode = match r.u8()? {
+                0 => FederationMode::Sync,
+                _ => FederationMode::Async,
+            };
+            cfg.federation.max_staleness = r.u32()?;
+            cfg.federation.buffer_size = r.u64()? as usize;
+            cfg.federation.agg_shards = r.u64()? as usize;
+            cfg.federation.max_concurrency = r.u64()? as usize;
+            cfg.federation.dropout_frac = r.f64()?;
+            cfg.federation.straggler_ms = r.f64()?;
+            cfg.network.bandwidth_gbps = r.f64()?;
+            cfg.network.latency_ms = r.f64()?;
+            cfg.seed = r.u64()?;
+            cfg.scale = r.f64()?;
+            cfg.artifacts_dir = r.str()?;
+            cfg.eval_every = r.u64()? as usize;
+            let n_extras = r.u32()? as usize;
+            for _ in 0..n_extras {
+                let k = r.str()?;
+                let v = r.str()?;
+                cfg.extras.insert(k, v);
+            }
+            Ok(cfg)
+        };
+        let cfg = next().map_err(|e| anyhow!("config wire: {e}"))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Bumped whenever [`FedGraphConfig::encode_wire`] changes shape, so a
+/// mismatched coordinator/worker pair fails the handshake loudly instead of
+/// mis-parsing.
+pub const CONFIG_WIRE_VERSION: u8 = 1;
+
+fn task_code(t: Task) -> u8 {
+    match t {
+        Task::NodeClassification => 0,
+        Task::GraphClassification => 1,
+        Task::LinkPrediction => 2,
+    }
+}
+
+fn task_from_code(c: u8) -> Result<Task, WireError> {
+    Ok(match c {
+        0 => Task::NodeClassification,
+        1 => Task::GraphClassification,
+        2 => Task::LinkPrediction,
+        t => return Err(WireError::BadTag(t)),
+    })
+}
+
+fn method_code(m: Method) -> u8 {
+    use Method::*;
+    match m {
+        FedAvgNC => 0,
+        DistributedGCN => 1,
+        BnsGcn => 2,
+        FedSagePlus => 3,
+        FedGcn => 4,
+        SelfTrain => 5,
+        FedAvgGC => 6,
+        FedProx => 7,
+        Gcfl => 8,
+        GcflPlus => 9,
+        GcflPlusDws => 10,
+        StaticGnn => 11,
+        Stfl => 12,
+        FedLink => 13,
+        FourDFedGnnPlus => 14,
+    }
+}
+
+fn method_from_code(c: u8) -> Result<Method, WireError> {
+    use Method::*;
+    Ok(match c {
+        0 => FedAvgNC,
+        1 => DistributedGCN,
+        2 => BnsGcn,
+        3 => FedSagePlus,
+        4 => FedGcn,
+        5 => SelfTrain,
+        6 => FedAvgGC,
+        7 => FedProx,
+        8 => Gcfl,
+        9 => GcflPlus,
+        10 => GcflPlusDws,
+        11 => StaticGnn,
+        12 => Stfl,
+        13 => FedLink,
+        14 => FourDFedGnnPlus,
+        t => return Err(WireError::BadTag(t)),
+    })
 }
 
 /// Artifacts default to `<workspace>/artifacts` (next to Cargo.toml) so
@@ -713,6 +1010,92 @@ federation:
             "fedgraph_task: NC\ndataset: x\nmethod: FedGCN\nuse_encryption: true\nuse_dp: true\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn parses_transport_block_and_validates_tcp() {
+        let cfg = FedGraphConfig::parse_yaml(
+            r#"
+fedgraph_task: NC
+dataset: cora-sim
+method: FedAvg
+federation:
+  transport: tcp
+  listen_addr: 127.0.0.1:9911
+  workers: 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.transport, TransportKind::Tcp);
+        assert_eq!(cfg.federation.listen_addr, "127.0.0.1:9911");
+        assert_eq!(cfg.federation.workers, 3);
+        // Default stays in-process.
+        let plain =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        assert_eq!(plain.federation.transport, TransportKind::Channel);
+        // tcp with zero workers rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  transport: tcp\n  workers: 0\n"
+        )
+        .is_err());
+        // Unknown backend rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  transport: carrier-pigeon\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn config_wire_codec_roundtrips_every_field() {
+        let mut cfg =
+            FedGraphConfig::new(Task::GraphClassification, Method::FedProx, "mutag-sim").unwrap();
+        cfg.n_trainer = 7;
+        cfg.global_rounds = 31;
+        cfg.local_steps = 5;
+        cfg.learning_rate = 0.37;
+        cfg.iid_beta = 0.1234567890123;
+        cfg.sample_ratio = 0.75;
+        cfg.sampling_type = SamplingType::Uniform;
+        cfg.batch_size = 17;
+        cfg.fedprox_mu = 0.0125;
+        cfg.federation.transport = TransportKind::Tcp;
+        cfg.federation.listen_addr = "127.0.0.1:0".into();
+        cfg.federation.workers = 2;
+        cfg.federation.max_concurrency = 3;
+        cfg.federation.dropout_frac = 0.25;
+        cfg.federation.straggler_ms = 12.5;
+        cfg.federation.agg_shards = 4;
+        cfg.network.bandwidth_gbps = 2.5;
+        cfg.network.latency_ms = 0.125;
+        cfg.seed = 0xDEAD_BEEF;
+        cfg.scale = 0.333333333333;
+        cfg.eval_every = 3;
+        cfg.extras.insert("note".into(), "hello".into());
+        let bytes = cfg.encode_wire();
+        let back = FedGraphConfig::decode_wire(&bytes).unwrap();
+        // Bit-exact roundtrip: re-encoding the decoded config reproduces the
+        // same bytes (covers every field including the f64s).
+        assert_eq!(back.encode_wire(), bytes);
+        assert_eq!(back.method, Method::FedProx);
+        assert_eq!(back.dataset, "mutag-sim");
+        assert_eq!(back.federation.transport, TransportKind::Tcp);
+        assert_eq!(back.seed, 0xDEAD_BEEF);
+        assert_eq!(back.extras.get("note").map(|s| s.as_str()), Some("hello"));
+
+        // Privacy variants roundtrip too.
+        cfg.privacy = PrivacyMode::He(CkksParams::default_params());
+        let he_bytes = cfg.encode_wire();
+        let he_back = FedGraphConfig::decode_wire(&he_bytes).unwrap();
+        assert_eq!(he_back.encode_wire(), he_bytes);
+        assert!(he_back.uses_he());
+        cfg.privacy = PrivacyMode::Dp(DpClone(DpParams::default_params()));
+        let dp_bytes = cfg.encode_wire();
+        assert_eq!(FedGraphConfig::decode_wire(&dp_bytes).unwrap().encode_wire(), dp_bytes);
+
+        // Corruption is detected, never mis-parsed.
+        let mut bad = bytes.clone();
+        bad[10] ^= 0x08;
+        assert!(FedGraphConfig::decode_wire(&bad).is_err());
     }
 
     #[test]

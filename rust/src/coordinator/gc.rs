@@ -16,10 +16,11 @@ use anyhow::{bail, Result};
 
 use crate::config::{FedGraphConfig, Method, PrivacyMode};
 use crate::data::gc::{gc_spec, generate_gc, GCDataset, SmallGraph};
-use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate, RoundUpdate};
+use crate::federation::{
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, RoundUpdate, SessionBlueprint,
+};
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::link::ChannelTransport;
 use crate::transport::serialize::{encode_params, fnv1a};
 use crate::util::rng::Rng;
 
@@ -163,55 +164,12 @@ impl ClientLogic for GcLogic {
 }
 
 pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    let spec = gc_spec(&cfg.dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
-    if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
-        bail!("SelfTrain has no aggregation to encrypt");
-    }
-    let gcfl_method = matches!(cfg.method, Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws);
-    if gcfl_method && matches!(cfg.privacy, PrivacyMode::He(_)) {
-        bail!("GCFL clustering reads client deltas; it requires plaintext or DP uploads");
-    }
-    let mut rng = Rng::seeded(cfg.seed);
-    monitor.note("task", "GC");
-    monitor.note("dataset", &cfg.dataset);
-    monitor.note("method", cfg.method.name());
-    monitor.note("n_trainer", cfg.n_trainer);
-    monitor.note("federation_mode", cfg.federation.mode.name());
+    let (blueprint, mut rng) = build_gc(cfg, engine, monitor)?;
+    let global_init = blueprint.init.clone();
+    let deployment = Deployment::from_config(cfg)?;
+    let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
+    let all: Vec<usize> = (0..cfg.n_trainer).collect();
 
-    monitor.start("data");
-    let ds = generate_gc(&spec, cfg.scale, cfg.seed);
-    // Graphs distributed across clients with Dirichlet label skew, matching
-    // the NC partitioner semantics.
-    let labels: Vec<u16> = ds.graphs.iter().map(|g| g.label).collect();
-    let part = crate::graph::dirichlet_partition(
-        &labels,
-        ds.num_classes,
-        cfg.n_trainer,
-        cfg.iid_beta,
-        &mut rng,
-    );
-    monitor.stop("data");
-
-    let d = ds.feat_dim;
-    let fixed = [("d", d)];
-    // Pick the bucket that fits a full batch of this dataset's largest graphs.
-    let max_graph_nodes = ds.graphs.iter().map(|g| g.csr.n).max().unwrap_or(16);
-    let want_nodes = (max_graph_nodes * 16).max(512);
-    let kind_train = if cfg.method == Method::FedProx { "gc_prox_train" } else { "gc_train" };
-    let train_art = engine
-        .manifest
-        .pick(kind_train, &fixed, want_nodes.min(engine.manifest.max_bucket(kind_train, &fixed).unwrap_or(want_nodes)))?
-        .clone();
-    let eval_art = engine.manifest.pick("gc_eval", &fixed, train_art.dim("n"))?.clone();
-    let (n_pad, e_pad, g_pad, c_pad) =
-        (train_art.dim("n"), train_art.dim("e"), train_art.dim("g"), train_art.dim("c"));
-    engine.warm(&train_art.name)?;
-    engine.warm(&eval_art.name)?;
-    monitor.note("artifact", &train_art.name);
-
-    let hidden = engine.manifest.hidden;
-    let global_init = ParamSet::gc(d, hidden, c_pad, &mut rng);
     let self_train = cfg.method == Method::SelfTrain;
     let mut gcfl = match cfg.method {
         Method::Gcfl => Some(GcflState::new(cfg.n_trainer, GcflSignal::GradientCosine, 0.05, 0.1)),
@@ -221,51 +179,6 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         }
         _ => None,
     };
-
-    let per_client_idx: Vec<(Vec<usize>, Vec<usize>)> = (0..cfg.n_trainer)
-        .map(|ci| {
-            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
-            (
-                mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
-                mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
-            )
-        })
-        .collect();
-    let weights: Vec<f32> =
-        per_client_idx.iter().map(|(tr, _)| tr.len().max(1) as f32).collect();
-    let ds = Arc::new(ds);
-    let logics: Vec<Box<dyn ClientLogic>> = per_client_idx
-        .into_iter()
-        .map(|(train_idx, test_idx)| {
-            Box::new(GcLogic {
-                ds: ds.clone(),
-                train_idx,
-                test_idx,
-                fedprox: cfg.method == Method::FedProx,
-                fedprox_mu: cfg.fedprox_mu,
-                engine: engine.clone(),
-                train_art: train_art.name.clone(),
-                eval_art: eval_art.name.clone(),
-                n_pad,
-                e_pad,
-                g_pad,
-                d,
-                local_steps: cfg.local_steps,
-                learning_rate: cfg.learning_rate,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    let mut fed = Federation::spawn(
-        monitor,
-        &ChannelTransport,
-        cfg,
-        &global_init,
-        weights,
-        n_pad,
-        logics,
-    )?;
-    let all: Vec<usize> = (0..cfg.n_trainer).collect();
-
     // Coordinator's view of each client's start-of-round model (global or
     // cluster model), used for GCFL delta signals.
     let mut client_model: Vec<ParamSet> = vec![global_init.clone(); cfg.n_trainer];
@@ -372,4 +285,98 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         );
     }
     Ok(())
+}
+
+/// Deterministic session build for GC: dataset, Dirichlet graph partition,
+/// artifact selection, one [`GcLogic`] per client. Worker processes replay
+/// this from the shipped config (see [`super::nc::build_nc`]).
+pub(crate) fn build_gc(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+) -> Result<(SessionBlueprint, Rng)> {
+    let spec = gc_spec(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
+    if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
+        bail!("SelfTrain has no aggregation to encrypt");
+    }
+    let gcfl_method = matches!(cfg.method, Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws);
+    if gcfl_method && matches!(cfg.privacy, PrivacyMode::He(_)) {
+        bail!("GCFL clustering reads client deltas; it requires plaintext or DP uploads");
+    }
+    let mut rng = Rng::seeded(cfg.seed);
+    monitor.note("task", "GC");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    monitor.start("data");
+    let ds = generate_gc(&spec, cfg.scale, cfg.seed);
+    // Graphs distributed across clients with Dirichlet label skew, matching
+    // the NC partitioner semantics.
+    let labels: Vec<u16> = ds.graphs.iter().map(|g| g.label).collect();
+    let part = crate::graph::dirichlet_partition(
+        &labels,
+        ds.num_classes,
+        cfg.n_trainer,
+        cfg.iid_beta,
+        &mut rng,
+    );
+    monitor.stop("data");
+
+    let d = ds.feat_dim;
+    let fixed = [("d", d)];
+    // Pick the bucket that fits a full batch of this dataset's largest graphs.
+    let max_graph_nodes = ds.graphs.iter().map(|g| g.csr.n).max().unwrap_or(16);
+    let want_nodes = (max_graph_nodes * 16).max(512);
+    let kind_train = if cfg.method == Method::FedProx { "gc_prox_train" } else { "gc_train" };
+    let train_art = engine
+        .manifest
+        .pick(kind_train, &fixed, want_nodes.min(engine.manifest.max_bucket(kind_train, &fixed).unwrap_or(want_nodes)))?
+        .clone();
+    let eval_art = engine.manifest.pick("gc_eval", &fixed, train_art.dim("n"))?.clone();
+    let (n_pad, e_pad, g_pad, c_pad) =
+        (train_art.dim("n"), train_art.dim("e"), train_art.dim("g"), train_art.dim("c"));
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+    monitor.note("artifact", &train_art.name);
+
+    let hidden = engine.manifest.hidden;
+    let global_init = ParamSet::gc(d, hidden, c_pad, &mut rng);
+
+    let per_client_idx: Vec<(Vec<usize>, Vec<usize>)> = (0..cfg.n_trainer)
+        .map(|ci| {
+            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
+            (
+                mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
+                mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
+            )
+        })
+        .collect();
+    let weights: Vec<f32> =
+        per_client_idx.iter().map(|(tr, _)| tr.len().max(1) as f32).collect();
+    let ds = Arc::new(ds);
+    let logics: Vec<Box<dyn ClientLogic>> = per_client_idx
+        .into_iter()
+        .map(|(train_idx, test_idx)| {
+            Box::new(GcLogic {
+                ds: ds.clone(),
+                train_idx,
+                test_idx,
+                fedprox: cfg.method == Method::FedProx,
+                fedprox_mu: cfg.fedprox_mu,
+                engine: engine.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                n_pad,
+                e_pad,
+                g_pad,
+                d,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    Ok((SessionBlueprint { init: global_init, weights, max_dim: n_pad, logics }, rng))
 }

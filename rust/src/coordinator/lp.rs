@@ -25,11 +25,12 @@ use anyhow::Result;
 
 use crate::config::{FedGraphConfig, Method};
 use crate::data::lp::{generate_lp, region_config, RegionData};
-use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate};
+use crate::federation::{
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint,
+};
 use crate::graph::Block;
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::link::ChannelTransport;
 use crate::transport::serialize::{encode_params, fnv1a};
 use crate::transport::{Direction, Phase, SimNet};
 use crate::util::rng::Rng;
@@ -193,65 +194,15 @@ impl ClientLogic for LpLogic {
 }
 
 pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    let countries = region_config(&cfg.dataset)
-        .ok_or_else(|| anyhow::anyhow!(
-            "unknown LP region config '{}' (use US, US+BR or 5country)", cfg.dataset
-        ))?;
-    let mut rng = Rng::seeded(cfg.seed);
-    monitor.note("task", "LP");
-    monitor.note("dataset", &cfg.dataset);
-    monitor.note("method", cfg.method.name());
-    monitor.note("federation_mode", cfg.federation.mode.name());
+    let (blueprint, mut rng) = build_lp(cfg, engine, monitor)?;
+    let m = blueprint.num_clients();
+    let global_init = blueprint.init.clone();
+    let deployment = Deployment::from_config(cfg)?;
+    let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
+    let all: Vec<usize> = (0..m).collect();
 
-    monitor.start("data");
-    let ds = generate_lp(&countries, cfg.scale, cfg.seed);
-    monitor.stop("data");
-    let d = ds.feat_dim;
-    let m = ds.regions.len();
-    monitor.note("n_trainer", m);
-
-    let need = ds.regions.iter().map(|r| r.graph.n).max().unwrap_or(64);
-    let train_art = engine.manifest.pick("lp_train", &[("d", d)], need)?.clone();
-    let eval_art = engine.manifest.pick("lp_eval", &[("d", d)], need)?.clone();
-    let (n_pad, e_pad, p_pad) = (train_art.dim("n"), train_art.dim("e"), train_art.dim("p"));
-    engine.warm(&train_art.name)?;
-    engine.warm(&eval_art.name)?;
-    monitor.note("artifact", &train_art.name);
-
-    let hidden = engine.manifest.hidden;
-    let zdim = 32;
-    let global_init = ParamSet::lp(d, hidden, zdim, &mut rng);
-    let temporal = matches!(cfg.method, Method::Stfl | Method::FourDFedGnnPlus);
     let local_only = cfg.method == Method::StaticGnn;
     let agg_period = if cfg.method == Method::FourDFedGnnPlus { 4 } else { 1 };
-
-    let weights: Vec<f32> =
-        ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
-    let logics: Vec<Box<dyn ClientLogic>> = ds
-        .regions
-        .into_iter()
-        .enumerate()
-        .map(|(client, region)| {
-            Box::new(LpLogic {
-                client,
-                block: region_block(&region, n_pad, e_pad),
-                region,
-                method: cfg.method,
-                temporal,
-                global_rounds: cfg.global_rounds,
-                engine: engine.clone(),
-                net: monitor.net.clone(),
-                train_art: train_art.name.clone(),
-                eval_art: eval_art.name.clone(),
-                p_pad,
-                local_steps: cfg.local_steps,
-                learning_rate: cfg.learning_rate,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    let mut fed =
-        Federation::spawn(monitor, &ChannelTransport, cfg, &global_init, weights, n_pad, logics)?;
-    let all: Vec<usize> = (0..m).collect();
 
     let mut global = global_init.clone();
     if !local_only {
@@ -314,4 +265,69 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         );
     }
     Ok(())
+}
+
+/// Deterministic session build for LP: one region per trainer, the region
+/// blocks precomputed, one [`LpLogic`] per client. Worker processes replay
+/// this from the shipped config (see [`super::nc::build_nc`]).
+pub(crate) fn build_lp(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+) -> Result<(SessionBlueprint, Rng)> {
+    let countries = region_config(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown LP region config '{}' (use US, US+BR or 5country)", cfg.dataset
+        ))?;
+    let mut rng = Rng::seeded(cfg.seed);
+    monitor.note("task", "LP");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("method", cfg.method.name());
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    monitor.start("data");
+    let ds = generate_lp(&countries, cfg.scale, cfg.seed);
+    monitor.stop("data");
+    let d = ds.feat_dim;
+    let m = ds.regions.len();
+    monitor.note("n_trainer", m);
+
+    let need = ds.regions.iter().map(|r| r.graph.n).max().unwrap_or(64);
+    let train_art = engine.manifest.pick("lp_train", &[("d", d)], need)?.clone();
+    let eval_art = engine.manifest.pick("lp_eval", &[("d", d)], need)?.clone();
+    let (n_pad, e_pad, p_pad) = (train_art.dim("n"), train_art.dim("e"), train_art.dim("p"));
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+    monitor.note("artifact", &train_art.name);
+
+    let hidden = engine.manifest.hidden;
+    let zdim = 32;
+    let global_init = ParamSet::lp(d, hidden, zdim, &mut rng);
+    let temporal = matches!(cfg.method, Method::Stfl | Method::FourDFedGnnPlus);
+
+    let weights: Vec<f32> =
+        ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
+    let logics: Vec<Box<dyn ClientLogic>> = ds
+        .regions
+        .into_iter()
+        .enumerate()
+        .map(|(client, region)| {
+            Box::new(LpLogic {
+                client,
+                block: region_block(&region, n_pad, e_pad),
+                region,
+                method: cfg.method,
+                temporal,
+                global_rounds: cfg.global_rounds,
+                engine: engine.clone(),
+                net: monitor.net.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                p_pad,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    Ok((SessionBlueprint { init: global_init, weights, max_dim: n_pad, logics }, rng))
 }

@@ -22,6 +22,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{FedGraphConfig, Task};
+use crate::federation::SessionBlueprint;
 use crate::monitor::report::Report;
 use crate::monitor::Monitor;
 use crate::runtime::Engine;
@@ -57,4 +58,31 @@ pub fn run_into_monitor(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor
         Task::GraphClassification => gc::run_gc(cfg, engine, monitor),
         Task::LinkPrediction => lp::run_lp(cfg, engine, monitor),
     }
+}
+
+/// Build a task's session blueprint (init model, aggregation weights, and
+/// one `ClientLogic` per client) **without** launching a federation — the
+/// deterministic setup half of every runner. `fedgraph worker` processes
+/// call this with the coordinator-shipped config to rebuild the exact
+/// session locally: every dataset, partition, pre-train exchange and RNG
+/// stream derives from the config alone, so the rebuilt blueprint is
+/// bit-identical to the coordinator's.
+pub fn build_session(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+) -> Result<SessionBlueprint> {
+    cfg.validate()?;
+    let (blueprint, _rng) = match cfg.task {
+        Task::NodeClassification => {
+            if cfg.dataset.starts_with("papers100m") {
+                nc::build_nc_lazy(cfg, engine, monitor)?
+            } else {
+                nc::build_nc(cfg, engine, monitor)?
+            }
+        }
+        Task::GraphClassification => gc::build_gc(cfg, engine, monitor)?,
+        Task::LinkPrediction => lp::build_lp(cfg, engine, monitor)?,
+    };
+    Ok(blueprint)
 }

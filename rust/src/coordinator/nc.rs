@@ -22,14 +22,15 @@ use anyhow::{bail, Result};
 
 use crate::config::{FedGraphConfig, Method};
 use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset};
-use crate::federation::{Charge, ClientLogic, Federation, LocalUpdate};
+use crate::federation::{
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint,
+};
 use crate::graph::{
     block_from_induced, build_local_graphs, dirichlet_partition, sample_neighborhood, Block, Csr,
     LazyGraph, LocalGraph,
 };
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
-use crate::transport::link::ChannelTransport;
 use crate::transport::serialize::{encode_params, fnv1a};
 use crate::transport::{Direction, Phase, SimNet};
 use crate::util::rng::{hash_f32, Rng};
@@ -168,6 +169,69 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     if cfg.dataset.starts_with("papers100m") {
         return run_nc_lazy(cfg, engine, monitor);
     }
+    let (blueprint, mut rng) = build_nc(cfg, engine, monitor)?;
+    let n = blueprint.num_clients();
+    let mut global = blueprint.init.clone();
+    let deployment = Deployment::from_config(cfg)?;
+    let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
+    let all: Vec<usize> = (0..n).collect();
+    // Initial model broadcast.
+    let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+    fed.broadcast_model(0, &global, &all, init_charge)?;
+    let mut last_acc = 0.0;
+    let mut stale_rejected = 0usize;
+    for round in 0..cfg.global_rounds {
+        let sim0 = monitor.net.total_concurrent_secs();
+        let sel = select_with_dropout(
+            n,
+            cfg.sample_ratio,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
+            &mut rng,
+        );
+        let mut step = fed.policy_round(round, &sel.participants, true, &all)?;
+        stale_rejected += step.rejected_stale;
+        if let Some(m) = step.model.take() {
+            global = m;
+        }
+
+        if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
+            monitor.start("eval");
+            let (correct, cnt) = fed.eval_round(round, &all, None)?;
+            monitor.stop("eval");
+            last_acc = if cnt > 0.0 { correct / cnt } else { 0.0 };
+        }
+        monitor.record_round(RoundRecord {
+            round,
+            train_secs: step.crit_path_secs(),
+            agg_secs: step.agg_secs,
+            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
+            train_loss: step.mean_loss(),
+            test_accuracy: last_acc,
+        });
+        monitor.sample_resources();
+    }
+    fed.shutdown()?;
+    monitor.note("final_accuracy", format!("{last_acc:.4}"));
+    monitor.note("stale_rejected", stale_rejected);
+    monitor.note(
+        "param_checksum",
+        format!("{:016x}", fnv1a(&encode_params(&global.values))),
+    );
+    Ok(())
+}
+
+/// Deterministic session build for the standard NC path: dataset, Dirichlet
+/// partition, method-specific pre-train exchange, artifact selection, and
+/// one [`NcLogic`] per client. Worker processes run exactly this from the
+/// shipped config to rebuild their share of the session — which is why it
+/// must consume the runner RNG the same way in every process.
+pub(crate) fn build_nc(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+) -> Result<(SessionBlueprint, Rng)> {
     let spec = nc_spec(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown NC dataset '{}'", cfg.dataset))?;
     let mut rng = Rng::seeded(cfg.seed);
@@ -266,8 +330,8 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
         }
     }
 
-    // ---- federated round loop over the actor runtime ---------------------
-    let mut global = ParamSet::nc(d_eff, engine.manifest.hidden, c, &mut rng);
+    // ---- blueprint: init model + weights + per-client logic --------------
+    let global = ParamSet::nc(d_eff, engine.manifest.hidden, c, &mut rng);
     let max_dim = ds.n().max(ds.feat_dim);
     let weights: Vec<f32> = clients.iter().map(|cl| cl.train_count.max(1) as f32).collect();
     let ds = Arc::new(ds);
@@ -297,54 +361,7 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
             }) as Box<dyn ClientLogic>
         })
         .collect();
-    let mut fed =
-        Federation::spawn(monitor, &ChannelTransport, cfg, &global, weights, max_dim, logics)?;
-    let all: Vec<usize> = (0..cfg.n_trainer).collect();
-    // Initial model broadcast.
-    let init_charge = Charge::PerLink(fed.init_model_charge(&global));
-    fed.broadcast_model(0, &global, &all, init_charge)?;
-    let mut last_acc = 0.0;
-    let mut stale_rejected = 0usize;
-    for round in 0..cfg.global_rounds {
-        let sim0 = monitor.net.total_concurrent_secs();
-        let sel = select_with_dropout(
-            cfg.n_trainer,
-            cfg.sample_ratio,
-            cfg.sampling_type,
-            cfg.federation.dropout_frac,
-            round,
-            &mut rng,
-        );
-        let mut step = fed.policy_round(round, &sel.participants, true, &all)?;
-        stale_rejected += step.rejected_stale;
-        if let Some(m) = step.model.take() {
-            global = m;
-        }
-
-        if round % cfg.eval_every == 0 || round + 1 == cfg.global_rounds {
-            monitor.start("eval");
-            let (correct, cnt) = fed.eval_round(round, &all, None)?;
-            monitor.stop("eval");
-            last_acc = if cnt > 0.0 { correct / cnt } else { 0.0 };
-        }
-        monitor.record_round(RoundRecord {
-            round,
-            train_secs: step.crit_path_secs(),
-            agg_secs: step.agg_secs,
-            sim_net_secs: monitor.net.total_concurrent_secs() - sim0,
-            train_loss: step.mean_loss(),
-            test_accuracy: last_acc,
-        });
-        monitor.sample_resources();
-    }
-    fed.shutdown()?;
-    monitor.note("final_accuracy", format!("{last_acc:.4}"));
-    monitor.note("stale_rejected", stale_rejected);
-    monitor.note(
-        "param_checksum",
-        format!("{:016x}", fnv1a(&encode_params(&global.values))),
-    );
-    Ok(())
+    Ok((SessionBlueprint { init: global, weights, max_dim, logics }, rng))
 }
 
 /// Owned-only client: `features` defaults to the raw dataset rows.
@@ -595,75 +612,11 @@ impl ClientLogic for LazyNcLogic {
 /// Node-count override for the lazy dataset: `scale` × 10^8 nodes (Fig 12's
 /// 195-client power-law setting).
 pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    if cfg.method != Method::FedAvgNC && cfg.method != Method::FedGcn {
-        bail!("papers100m-sim supports FedAvg/FedGCN minibatch training");
-    }
-    let n_nodes = (cfg.scale * 1e8) as u64;
-    let g = papers100m_sim(n_nodes.max(10_000), cfg.seed);
-    let mut rng = Rng::seeded(cfg.seed ^ 0x9A);
-    monitor.note("task", "NC");
-    monitor.note("dataset", format!("papers100m-sim(n={})", g.n));
-    monitor.note("method", cfg.method.name());
-    monitor.note("n_trainer", cfg.n_trainer);
-    monitor.note("federation_mode", cfg.federation.mode.name());
-
-    // Clients own contiguous community ranges; community sizes are already
-    // power-law (country-population style, §5.3).
-    let m = cfg.n_trainer;
-    let nc = g.num_communities();
-    let client_of_community = |c: usize| -> usize { c * m / nc };
-    let mut client_ranges: Vec<Vec<(u64, u64)>> = vec![Vec::new(); m];
-    for c in 0..nc {
-        client_ranges[client_of_community(c)].push(g.community_range(c));
-    }
-
-    let d = g.feat_dim;
-    let c_classes = g.num_classes;
-    let fixed = [("d", d), ("c", c_classes)];
-    let batch = if cfg.batch_size > 0 { cfg.batch_size } else { 32 };
-    let bucket = engine
-        .manifest
-        .max_bucket("nc_train", &fixed)
-        .ok_or_else(|| anyhow::anyhow!("no papers100m artifacts (d={d}, c={c_classes})"))?;
-    let train_art = engine.manifest.pick("nc_train", &fixed, bucket)?.clone();
-    let eval_art = engine.manifest.pick("nc_eval", &fixed, bucket)?.clone();
-    let (n_pad, e_pad) = (train_art.dim("n"), train_art.dim("e"));
-    engine.warm(&train_art.name)?;
-    engine.warm(&eval_art.name)?;
-    monitor.note("artifact", &train_art.name);
-
-    let mut global = ParamSet::nc(d, engine.manifest.hidden, c_classes, &mut rng);
-    let max_dim = g.feat_dim.max(n_pad);
-    let g = Arc::new(g);
-    let logics: Vec<Box<dyn ClientLogic>> = client_ranges
-        .iter()
-        .enumerate()
-        .map(|(client, ranges)| {
-            Box::new(LazyNcLogic {
-                client,
-                g: g.clone(),
-                ranges: ranges.clone(),
-                engine: engine.clone(),
-                train_art: train_art.name.clone(),
-                eval_art: eval_art.name.clone(),
-                n_pad,
-                e_pad,
-                batch,
-                local_steps: cfg.local_steps,
-                learning_rate: cfg.learning_rate,
-                seed: cfg.seed,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    let mut fed = Federation::spawn(
-        monitor,
-        &ChannelTransport,
-        cfg,
-        &global,
-        vec![1.0; m],
-        max_dim,
-        logics,
-    )?;
+    let (blueprint, mut rng) = build_nc_lazy(cfg, engine, monitor)?;
+    let m = blueprint.num_clients();
+    let mut global = blueprint.init.clone();
+    let deployment = Deployment::from_config(cfg)?;
+    let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
     let all: Vec<usize> = (0..m).collect();
     // Evaluate on a fixed client subset to bound eval cost at scale (stable
     // across rounds so the accuracy curve is comparable).
@@ -713,6 +666,76 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
         format!("{:016x}", fnv1a(&encode_params(&global.values))),
     );
     Ok(())
+}
+
+/// Deterministic session build for the papers100m lazy path (see
+/// [`build_nc`] for why this is a separate, worker-replayable step).
+pub(crate) fn build_nc_lazy(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+) -> Result<(SessionBlueprint, Rng)> {
+    if cfg.method != Method::FedAvgNC && cfg.method != Method::FedGcn {
+        bail!("papers100m-sim supports FedAvg/FedGCN minibatch training");
+    }
+    let n_nodes = (cfg.scale * 1e8) as u64;
+    let g = papers100m_sim(n_nodes.max(10_000), cfg.seed);
+    let mut rng = Rng::seeded(cfg.seed ^ 0x9A);
+    monitor.note("task", "NC");
+    monitor.note("dataset", format!("papers100m-sim(n={})", g.n));
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    // Clients own contiguous community ranges; community sizes are already
+    // power-law (country-population style, §5.3).
+    let m = cfg.n_trainer;
+    let nc = g.num_communities();
+    let client_of_community = |c: usize| -> usize { c * m / nc };
+    let mut client_ranges: Vec<Vec<(u64, u64)>> = vec![Vec::new(); m];
+    for c in 0..nc {
+        client_ranges[client_of_community(c)].push(g.community_range(c));
+    }
+
+    let d = g.feat_dim;
+    let c_classes = g.num_classes;
+    let fixed = [("d", d), ("c", c_classes)];
+    let batch = if cfg.batch_size > 0 { cfg.batch_size } else { 32 };
+    let bucket = engine
+        .manifest
+        .max_bucket("nc_train", &fixed)
+        .ok_or_else(|| anyhow::anyhow!("no papers100m artifacts (d={d}, c={c_classes})"))?;
+    let train_art = engine.manifest.pick("nc_train", &fixed, bucket)?.clone();
+    let eval_art = engine.manifest.pick("nc_eval", &fixed, bucket)?.clone();
+    let (n_pad, e_pad) = (train_art.dim("n"), train_art.dim("e"));
+    engine.warm(&train_art.name)?;
+    engine.warm(&eval_art.name)?;
+    monitor.note("artifact", &train_art.name);
+
+    let global = ParamSet::nc(d, engine.manifest.hidden, c_classes, &mut rng);
+    let max_dim = g.feat_dim.max(n_pad);
+    let g = Arc::new(g);
+    let logics: Vec<Box<dyn ClientLogic>> = client_ranges
+        .iter()
+        .enumerate()
+        .map(|(client, ranges)| {
+            Box::new(LazyNcLogic {
+                client,
+                g: g.clone(),
+                ranges: ranges.clone(),
+                engine: engine.clone(),
+                train_art: train_art.name.clone(),
+                eval_art: eval_art.name.clone(),
+                n_pad,
+                e_pad,
+                batch,
+                local_steps: cfg.local_steps,
+                learning_rate: cfg.learning_rate,
+                seed: cfg.seed,
+            }) as Box<dyn ClientLogic>
+        })
+        .collect();
+    Ok((SessionBlueprint { init: global, weights: vec![1.0; m], max_dim, logics }, rng))
 }
 
 /// Sample a minibatch block from the lazy graph: seeds from the client's

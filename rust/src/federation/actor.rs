@@ -33,11 +33,12 @@ use anyhow::Result;
 use crate::he::{gaussian_mechanism, CkksContext, DpParams};
 use crate::runtime::ParamSet;
 use crate::transport::link::TrainerLink;
+use crate::transport::SimNet;
 use crate::util::rng::{hash_f32, Rng};
 use crate::util::sync::Semaphore;
 use crate::util::timer::timed;
 
-use super::protocol::{DownMsg, UpMsg, UpdateEnvelope, UpdatePayload};
+use super::protocol::{DownMsg, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload};
 
 /// Render a panic payload into a `Failed` message body.
 fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -99,6 +100,13 @@ pub struct ActorSetup {
     /// round's deterministic per-client fraction of it.
     pub straggler_ms: f64,
     pub straggler_seed: u64,
+    /// Remote deployments only (`Some` in worker processes): the
+    /// worker-local staging ledger the task logic writes to
+    /// ([`SimNet::with_stage_log`]). After each train/eval the actor drains
+    /// its link's journal and attaches it to the outgoing envelope so the
+    /// coordinator can replay it on the authoritative ledger. `None`
+    /// in-process, where the logic stages directly on the shared net.
+    pub remote_net: Option<Arc<SimNet>>,
 }
 
 /// Actor thread main loop. Runs until `Stop` or a broken link.
@@ -113,7 +121,20 @@ pub fn actor_main(setup: ActorSetup) {
         mut rng,
         straggler_ms,
         straggler_seed,
+        remote_net,
     } = setup;
+    // Drain this actor's staged simulated traffic (remote mode; empty
+    // otherwise).
+    let take_staged = |net: &Option<Arc<SimNet>>| -> Vec<StagedTransfer> {
+        match net {
+            Some(n) => n
+                .take_staged(client)
+                .into_iter()
+                .map(|(phase, dir, bytes)| StagedTransfer { phase, dir, bytes })
+                .collect(),
+            None => Vec::new(),
+        }
+    };
     let mut model = init;
     // Version of the last coordinator broadcast this client trained from,
     // plus a cached copy of that broadcast for `ModelVersion` re-adoption.
@@ -135,7 +156,26 @@ pub fn actor_main(setup: ActorSetup) {
             }
         };
         match msg {
-            DownMsg::Stop => return,
+            DownMsg::Stop => {
+                // Ack before exiting so the coordinator can hold its lanes
+                // open until every trainer drained — worker processes then
+                // close their sockets and exit 0 instead of racing the
+                // coordinator's teardown.
+                let _ = link.send(UpMsg::StopAck { client: cid }.encode().into());
+                return;
+            }
+            DownMsg::Assign { .. } => {
+                // Pre-rendezvous worker-level frame; an actor must never see
+                // one on its lane.
+                let _ = link.send(
+                    UpMsg::Failed {
+                        client: cid,
+                        error: "unexpected Assign on a trainer lane".to_string(),
+                    }
+                    .encode()
+                    .into(),
+                );
+            }
             DownMsg::Hello { .. } => {
                 if link.send(UpMsg::HelloAck { client: cid }.encode().into()).is_err() {
                     return;
@@ -240,14 +280,21 @@ pub fn actor_main(setup: ActorSetup) {
                             compute_secs,
                             wait_secs,
                             privacy_secs,
+                            staged: take_staged(&remote_net),
                             payload,
                         })
                     }
-                    Ok(Err(e)) => UpMsg::Failed { client: cid, error: format!("{e:#}") },
-                    Err(p) => UpMsg::Failed {
-                        client: cid,
-                        error: format!("panic in trainer logic: {}", panic_text(p)),
-                    },
+                    Ok(Err(e)) => {
+                        let _ = take_staged(&remote_net); // discard a failed round's staging
+                        UpMsg::Failed { client: cid, error: format!("{e:#}") }
+                    }
+                    Err(p) => {
+                        let _ = take_staged(&remote_net);
+                        UpMsg::Failed {
+                            client: cid,
+                            error: format!("panic in trainer logic: {}", panic_text(p)),
+                        }
+                    }
                 };
                 if link.send(reply.encode().into()).is_err() {
                     return;
@@ -288,12 +335,24 @@ pub fn actor_main(setup: ActorSetup) {
                         logic.eval(round as usize, eval_model, &mut rng)
                     }));
                     match outcome {
-                        Ok(Ok((num, den))) => UpMsg::Metric { client: cid, round, num, den },
-                        Ok(Err(e)) => UpMsg::Failed { client: cid, error: format!("{e:#}") },
-                        Err(p) => UpMsg::Failed {
+                        Ok(Ok((num, den))) => UpMsg::Metric {
                             client: cid,
-                            error: format!("panic in trainer logic: {}", panic_text(p)),
+                            round,
+                            num,
+                            den,
+                            staged: take_staged(&remote_net),
                         },
+                        Ok(Err(e)) => {
+                            let _ = take_staged(&remote_net);
+                            UpMsg::Failed { client: cid, error: format!("{e:#}") }
+                        }
+                        Err(p) => {
+                            let _ = take_staged(&remote_net);
+                            UpMsg::Failed {
+                                client: cid,
+                                error: format!("panic in trainer logic: {}", panic_text(p)),
+                            }
+                        }
                     }
                 };
                 if link.send(reply.encode().into()).is_err() {

@@ -1,0 +1,288 @@
+//! The deployment layer: *where* trainer actors run.
+//!
+//! [`crate::federation::runtime::Federation::spawn`] used to hard-code
+//! "threads in this process over in-memory channels". Actor launch now goes
+//! through a [`Deployment`]:
+//!
+//! - [`Deployment::InProcess`] — the bitwise-identical default: each
+//!   [`ClientLogic`] moves onto its own OS thread and frames travel through
+//!   [`ChannelTransport`].
+//! - [`Deployment::Tcp`] — the multi-process mode: the coordinator binds a
+//!   listener and waits for `workers` separate `fedgraph worker` processes.
+//!   Each connection performs the `WorkerHello → Assign` handshake (clients
+//!   are dealt round-robin over workers in accept order; the `Assign` frame
+//!   carries the bit-exact binary config), then the worker rebuilds its
+//!   share of the session deterministically and hosts those trainer actors
+//!   itself — the coordinator side keeps only the socket fabric. Everything
+//!   above the frame level (protocol, policies, ledger, aggregation) is
+//!   identical, which is what makes a loopback TCP run bitwise-equal to the
+//!   in-process run.
+//!
+//! A runner never touches any of this directly: it builds a
+//! [`SessionBlueprint`] (init model, weights, max dim, per-client logic) and
+//! hands it to `Federation::spawn` together with `Deployment::from_config`.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{FedGraphConfig, PrivacyMode, TransportKind};
+use crate::he::CkksContext;
+use crate::runtime::ParamSet;
+use crate::transport::link::{ChannelTransport, CoordLink, TrainerLink};
+use crate::transport::tcp::{self, CONTROL_LANE};
+use crate::util::rng::{hash_u64, Rng};
+use crate::util::sync::Semaphore;
+
+use super::actor::{actor_main, ActorSetup, ClientLogic, PrivacyEngine};
+use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION};
+
+/// Everything a deployment needs to host one federation session's trainers:
+/// the public initial model, the static per-client aggregation weights, the
+/// privacy dimension bound, and the per-client task logic. Task runners
+/// build one of these (deterministically — worker processes rebuild the same
+/// blueprint from the shipped config) and stay transport-agnostic.
+pub struct SessionBlueprint {
+    /// The public initial model (architecture + published init scheme);
+    /// every actor bootstraps from it uncharged.
+    pub init: ParamSet,
+    /// Static per-client aggregation weights (training-example counts).
+    pub weights: Vec<f32>,
+    /// Dimension bound fed to the HE parameter-validity rule.
+    pub max_dim: usize,
+    pub logics: Vec<Box<dyn ClientLogic>>,
+}
+
+impl SessionBlueprint {
+    pub fn num_clients(&self) -> usize {
+        self.logics.len()
+    }
+}
+
+/// Where this session's trainer actors live.
+pub enum Deployment {
+    /// Threads in this process over [`ChannelTransport`] (default).
+    InProcess,
+    /// Worker processes over the socket fabric: the coordinator owns the
+    /// bound listener (bind early so `local_addr` is known before workers
+    /// connect) and waits for exactly `workers` connections.
+    Tcp { listener: TcpListener, workers: usize },
+}
+
+impl Deployment {
+    /// Resolve the deployment from `federation.transport`, binding the TCP
+    /// listener immediately in socket mode.
+    pub fn from_config(cfg: &FedGraphConfig) -> Result<Deployment> {
+        match cfg.federation.transport {
+            TransportKind::Channel => Ok(Deployment::InProcess),
+            TransportKind::Tcp => {
+                Deployment::tcp(&cfg.federation.listen_addr, cfg.federation.workers)
+            }
+        }
+    }
+
+    /// Bind a TCP deployment on `addr` (port 0 binds an ephemeral port —
+    /// read it back with [`Deployment::local_addr`]).
+    pub fn tcp(addr: &str, workers: usize) -> Result<Deployment> {
+        if workers == 0 {
+            bail!("a tcp deployment needs at least one worker");
+        }
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding federation listener on {addr}"))?;
+        Ok(Deployment::Tcp { listener, workers })
+    }
+
+    pub fn transport_name(&self) -> &'static str {
+        match self {
+            Deployment::InProcess => "channel",
+            Deployment::Tcp { .. } => "tcp",
+        }
+    }
+
+    /// The coordinator's bound address (TCP mode only).
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        match self {
+            Deployment::InProcess => None,
+            Deployment::Tcp { listener, .. } => listener.local_addr().ok(),
+        }
+    }
+
+    /// Open the fabric and launch the blueprint's trainer actors: threads in
+    /// this process, or handshaken worker processes that host them remotely
+    /// (in which case the local logic objects are dropped — the workers
+    /// rebuilt their own from the same config, and building them here anyway
+    /// keeps the runner's RNG stream identical across deployments).
+    pub(crate) fn launch(
+        &self,
+        cfg: &FedGraphConfig,
+        blueprint: SessionBlueprint,
+        he_ctx: &Option<CkksContext>,
+    ) -> Result<Fabric> {
+        match self {
+            Deployment::InProcess => launch_threads(cfg, blueprint, he_ctx),
+            Deployment::Tcp { listener, workers } => {
+                launch_workers(cfg, listener, *workers, blueprint)
+            }
+        }
+    }
+}
+
+/// A launched fabric: the coordinator endpoint plus any locally-owned actor
+/// threads (empty for remote deployments).
+pub(crate) struct Fabric {
+    pub coord: Box<dyn CoordLink>,
+    pub threads: Vec<JoinHandle<()>>,
+}
+
+/// Build one actor's setup bundle. Shared by the in-process launch and the
+/// worker process (both must derive identical RNG streams and privacy
+/// engines from the config — that is the determinism contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn actor_setup(
+    cfg: &FedGraphConfig,
+    init: &ParamSet,
+    max_dim: usize,
+    he_ctx: &Option<CkksContext>,
+    gate: Arc<Semaphore>,
+    client: usize,
+    logic: Box<dyn ClientLogic>,
+    link: Box<dyn TrainerLink>,
+    remote_net: Option<Arc<crate::transport::SimNet>>,
+) -> ActorSetup {
+    let privacy = match &cfg.privacy {
+        PrivacyMode::Plaintext => PrivacyEngine::Plain,
+        PrivacyMode::Dp(dp) => PrivacyEngine::Dp(dp.0.clone()),
+        PrivacyMode::He(_) => PrivacyEngine::He {
+            ctx: he_ctx.clone().expect("HE session has a context"),
+            max_dim,
+        },
+    };
+    ActorSetup {
+        client,
+        logic,
+        link,
+        gate,
+        privacy,
+        init: init.clone(),
+        rng: Rng::seeded(hash_u64(cfg.seed, 0xAC70_12, client as u64)),
+        straggler_ms: cfg.federation.straggler_ms,
+        straggler_seed: cfg.seed ^ 0x57A6_61,
+        remote_net,
+    }
+}
+
+/// Seed for the session's HE context: coordinator and workers derive the
+/// same CKKS keys from the config seed.
+pub(crate) fn he_context(cfg: &FedGraphConfig) -> Option<CkksContext> {
+    match &cfg.privacy {
+        PrivacyMode::He(params) => Some(CkksContext::new(params.clone(), cfg.seed ^ 0xC4C5)),
+        _ => None,
+    }
+}
+
+fn launch_threads(
+    cfg: &FedGraphConfig,
+    blueprint: SessionBlueprint,
+    he_ctx: &Option<CkksContext>,
+) -> Result<Fabric> {
+    let n = blueprint.num_clients();
+    let (coord, trainer_links) = ChannelTransport.open(n)?;
+    let gate = Arc::new(Semaphore::new(cfg.federation.resolved_concurrency(n)));
+    let SessionBlueprint { init, logics, max_dim, .. } = blueprint;
+    let mut threads = Vec::with_capacity(n);
+    for (client, (logic, link)) in logics.into_iter().zip(trainer_links).enumerate() {
+        let setup =
+            actor_setup(cfg, &init, max_dim, he_ctx, gate.clone(), client, logic, link, None);
+        let handle = std::thread::Builder::new()
+            .name(format!("fed-trainer-{client}"))
+            .spawn(move || actor_main(setup))
+            .map_err(|e| anyhow!("spawning trainer {client}: {e}"))?;
+        threads.push(handle);
+    }
+    Ok(Fabric { coord, threads })
+}
+
+/// Accept `workers` connections, handshake each (`WorkerHello → Assign`
+/// with a round-robin client assignment and the bit-exact config), and build
+/// the socket fabric. The trainer actors live in the worker processes.
+fn launch_workers(
+    cfg: &FedGraphConfig,
+    listener: &TcpListener,
+    workers: usize,
+    blueprint: SessionBlueprint,
+) -> Result<Fabric> {
+    let n = blueprint.num_clients();
+    // The local logic objects are intentionally dropped here (see launch()).
+    drop(blueprint);
+    let config_bytes = cfg.encode_wire();
+    let addr = listener.local_addr().map(|a| a.to_string()).unwrap_or_default();
+    eprintln!(
+        "fedgraph: waiting for {workers} worker process(es) on {addr} \
+         (start them with `fedgraph worker --connect {addr}`)"
+    );
+    let mut conns: Vec<(TcpStream, Vec<u32>)> = Vec::with_capacity(workers);
+    for k in 0..workers {
+        let (mut stream, peer) =
+            listener.accept().with_context(|| format!("accepting worker {k}"))?;
+        stream.set_nodelay(true).ok();
+        // WorkerHello
+        let (lane, payload) = match tcp::read_frame(&mut stream)? {
+            tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
+            tcp::ReadOutcome::Closed => bail!("worker {k} ({peer}) closed before hello"),
+        };
+        if lane != CONTROL_LANE {
+            bail!("worker {k} ({peer}) sent a non-control first frame");
+        }
+        match UpMsg::decode(&payload).map_err(|e| anyhow!("worker {k} hello: {e}"))? {
+            UpMsg::WorkerHello { version } if version == PROTOCOL_VERSION => {}
+            UpMsg::WorkerHello { version } => bail!(
+                "worker {k} speaks protocol v{version}, coordinator speaks v{PROTOCOL_VERSION}"
+            ),
+            other => bail!("worker {k} sent {other:?} instead of WorkerHello"),
+        }
+        // Round-robin assignment over accept order.
+        let clients: Vec<u32> = (0..n as u32).filter(|c| *c as usize % workers == k).collect();
+        let assign = DownMsg::Assign {
+            n_total: n as u32,
+            clients: clients.clone(),
+            config: config_bytes.clone(),
+        };
+        tcp::write_frame(&mut stream, CONTROL_LANE, &assign.encode())
+            .with_context(|| format!("assigning worker {k}"))?;
+        eprintln!("fedgraph: worker {k} ({peer}) hosts clients {clients:?}");
+        conns.push((stream, clients));
+    }
+    let coord = tcp::coord_link(conns, n)?;
+    Ok(Fabric { coord, threads: Vec::new() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_config_resolves_backends() {
+        let cfg = FedGraphConfig::new(
+            crate::config::Task::NodeClassification,
+            crate::config::Method::FedAvgNC,
+            "cora-sim",
+        )
+        .unwrap();
+        assert!(matches!(Deployment::from_config(&cfg).unwrap(), Deployment::InProcess));
+        let mut tcp_cfg = cfg;
+        tcp_cfg.federation.transport = TransportKind::Tcp;
+        tcp_cfg.federation.listen_addr = "127.0.0.1:0".into();
+        tcp_cfg.federation.workers = 2;
+        let dep = Deployment::from_config(&tcp_cfg).unwrap();
+        assert_eq!(dep.transport_name(), "tcp");
+        let addr = dep.local_addr().expect("tcp deployment has an address");
+        assert_ne!(addr.port(), 0, "ephemeral port resolved at bind time");
+    }
+
+    #[test]
+    fn tcp_deployment_requires_workers() {
+        assert!(Deployment::tcp("127.0.0.1:0", 0).is_err());
+    }
+}

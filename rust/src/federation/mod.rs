@@ -22,9 +22,11 @@
 //! ledgers them as waste, and discounts admitted late updates by
 //! `1 / (1 + staleness)`). Selected via `federation.mode: sync | async`.
 //!
-//! - **Rendezvous** — [`runtime::Federation::spawn`] opens the transport,
-//!   moves each task's [`actor::ClientLogic`] onto a named trainer thread,
-//!   and handshakes (`Hello`/`HelloAck`) with every actor.
+//! - **Rendezvous** — [`runtime::Federation::spawn`] launches the session's
+//!   [`deploy::SessionBlueprint`] under the configured [`deploy::Deployment`]
+//!   (trainer threads in-process, or remote worker processes after the
+//!   `WorkerHello`/`Assign` handshake) and then handshakes
+//!   (`Hello`/`HelloAck`) with every actor.
 //! - **BroadcastModel** — [`runtime::Federation::broadcast_model`] ships the
 //!   global (or per-cluster) model as a `SetModel` frame; charged per link.
 //! - **LocalTrain** — `Train` orders carry the round number, the client's
@@ -36,7 +38,8 @@
 //!   upload group.
 //! - **Aggregate** — [`runtime::Federation::aggregate_and_broadcast`]
 //!   combines in deterministic participant order and broadcasts the result.
-//! - **Finish** — `Stop` frames; threads join.
+//! - **Finish** — `Stop` frames, acked (`StopAck`) by every trainer before
+//!   lanes close, so worker processes drain and exit 0; local threads join.
 //!
 //! Client sampling and dropouts are coordinator decisions
 //! ([`crate::coordinator::selection::select_with_dropout`]); a dropped
@@ -46,20 +49,27 @@
 //! ## Layering
 //!
 //! ```text
-//! coordinator/{nc,gc,lp}.rs   task setup + round schedule (what to train/aggregate)
-//!         │  ClientLogic per client
+//! coordinator/{nc,gc,lp}.rs   task setup (build_*: SessionBlueprint) + round schedule
+//!         │  ClientLogic per client — transport-agnostic
 //! federation::runtime         event-driven scheduler, sharded aggregation, versioned broadcasts
 //! federation::policy          RoundPolicy: SyncBarrier | AsyncBounded{max_staleness, buffer_size}
-//! federation::actor           trainer threads, concurrency gate, client-side privacy
+//! federation::deploy          Deployment: InProcess (threads) | Tcp (worker processes)
+//! federation::actor           trainer actors, concurrency gate, client-side privacy
+//! federation::worker          `fedgraph worker` process: handshake, rebuild session, host actors
 //! federation::protocol        typed messages ⇄ checksummed byte frames (version-stamped)
-//! transport::link             Transport trait; backend #1: in-memory channels
-//! transport::SimNet           byte/phase ledger; serial + concurrent link time; waste + tick groups
+//! transport::{link, tcp}      frame movers: in-memory channels | multiplexed sockets
+//! transport::SimNet           simulated byte/phase ledger; serial + concurrent link time
+//! transport::WireLedger       measured frame bytes per phase/direction (cross-checks SimNet)
 //! runtime::Engine             shared PJRT compute service (its own thread)
 //! ```
 //!
-//! A TCP or multi-process backend only has to implement
-//! [`crate::transport::link::Transport`]; everything above the frame level is
-//! backend-agnostic.
+//! Everything above the frame level is deployment-agnostic: the same
+//! protocol, policies, ledger and aggregation drive trainer actors whether
+//! they are threads in this process ([`deploy::Deployment::InProcess`]) or
+//! separate `fedgraph worker` processes over loopback/network sockets
+//! ([`deploy::Deployment::Tcp`]). A loopback TCP run is bitwise-identical to
+//! the in-process run for the same config/seed — proven by
+//! `runtime::tests::tcp_loopback_is_bitwise_identical_to_channel`.
 //!
 //! ## Determinism
 //!
@@ -77,10 +87,13 @@
 //! scheduler tick).
 
 pub mod actor;
+pub mod deploy;
 pub mod policy;
 pub mod protocol;
 pub mod runtime;
+pub mod worker;
 
 pub use actor::{ClientLogic, LocalUpdate};
+pub use deploy::{Deployment, SessionBlueprint};
 pub use policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 pub use runtime::{Charge, Federation, PolicyRound, RoundUpdate, StepOutcome, TrainResult};

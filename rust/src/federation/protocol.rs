@@ -1,6 +1,7 @@
 //! The typed coordinator ⇄ trainer round protocol and its wire encoding.
 //!
-//! Every message crossing a [`crate::transport::link::Transport`] backend is
+//! Every message crossing a transport backend ([`crate::transport::link`] /
+//! [`crate::transport::tcp`]) is
 //! one checksummed frame produced here with the shared wire format
 //! ([`crate::transport::serialize`]). A round is the exchange
 //!
@@ -34,9 +35,61 @@
 //! staleness; `ModelVersion { version }` orders a trainer to re-adopt its
 //! cached broadcast — a control frame, so the "re-send a model the client
 //! already holds" idiom is now honestly free (no values cross the wire).
+//!
+//! **Deployment frames.** The multi-process TCP backend adds three control
+//! frames. Before any trainer lane exists, a connecting worker process sends
+//! `WorkerHello { version }` and the coordinator answers
+//! `Assign { n_total, clients, config }` — the client indices this worker
+//! hosts plus the full experiment config (binary-encoded, bit-exact), from
+//! which the worker deterministically rebuilds its datasets, partitions and
+//! task logic. At end of session `Stop` is answered by `StopAck`: the
+//! coordinator holds its lanes open until every trainer acked, so worker
+//! processes flush, exit 0, and nobody reports a spurious hang-up.
+//!
+//! **Staged transfers.** In-round *simulated* traffic issued inside actors
+//! (BNS-GCN halo re-shipments, FedLink per-step exchanges, eval metric
+//! uploads) is staged on the trainer's `SimNet` link. In-process actors share
+//! the coordinator's ledger and stage directly; remote actors attach their
+//! journal as [`StagedTransfer`] entries on the next `Update`/`Metric` frame
+//! and the coordinator replays it call-for-call — byte totals and tick
+//! folding match the in-process deployment exactly.
 
 use crate::he::Ciphertext;
 use crate::transport::serialize::{Reader, WireError, Writer};
+use crate::transport::{Direction, Phase};
+
+/// The protocol revision spoken over multi-process transports; bumped on any
+/// frame-shape change so a mismatched coordinator/worker pair fails the
+/// `WorkerHello → Assign` handshake loudly.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// One remote actor's staged simulated transfer (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StagedTransfer {
+    pub phase: Phase,
+    pub dir: Direction,
+    pub bytes: u64,
+}
+
+fn write_staged(w: &mut Writer, staged: &[StagedTransfer]) {
+    w.u32(staged.len() as u32);
+    for s in staged {
+        w.u8(s.phase.code());
+        w.u8(s.dir.code());
+        w.u64(s.bytes);
+    }
+}
+
+fn read_staged(r: &mut Reader<'_>) -> Result<Vec<StagedTransfer>, WireError> {
+    let n = r.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let phase = Phase::from_code(r.u8()?).ok_or(WireError::BadTag(0xF0))?;
+        let dir = Direction::from_code(r.u8()?).ok_or(WireError::BadTag(0xF1))?;
+        out.push(StagedTransfer { phase, dir, bytes: r.u64()? });
+    }
+    Ok(out)
+}
 
 /// Coordinator → trainer messages.
 #[derive(Debug)]
@@ -60,8 +113,14 @@ pub enum DownMsg {
     /// the client already holds it). Fails if the trainer's cached broadcast
     /// has a different version.
     ModelVersion { version: u32 },
-    /// Finish the session; the trainer thread exits.
+    /// Finish the session; the trainer acks with [`UpMsg::StopAck`] and then
+    /// exits, so lanes drain before anything closes.
     Stop,
+    /// Deployment handshake (multi-process transports, pre-rendezvous): the
+    /// worker's task assignment — the total trainer count, the client
+    /// indices this worker hosts, and the binary-encoded experiment config
+    /// ([`crate::config::FedGraphConfig::encode_wire`]).
+    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8> },
 }
 
 /// The model-update payload of an [`UpMsg::Update`].
@@ -90,6 +149,10 @@ pub struct UpdateEnvelope {
     pub wait_secs: f64,
     /// Client-side privacy seconds (HE encrypt / DP noise).
     pub privacy_secs: f64,
+    /// Remote actors only: the simulated transfers this round's logic staged
+    /// on its worker-local ledger, replayed onto the coordinator's. Empty
+    /// for in-process actors (they stage directly).
+    pub staged: Vec<StagedTransfer>,
     pub payload: UpdatePayload,
 }
 
@@ -99,10 +162,17 @@ pub enum UpMsg {
     HelloAck { client: u32 },
     Update(UpdateEnvelope),
     /// Evaluation result: task-specific (numerator, denominator) —
-    /// correct/total for NC & GC, (auc, 1) for LP.
-    Metric { client: u32, round: u32, num: f64, den: f64 },
+    /// correct/total for NC & GC, (auc, 1) for LP. `staged` as on
+    /// [`UpdateEnvelope`] (eval logic may stage metric-upload traffic).
+    Metric { client: u32, round: u32, num: f64, den: f64, staged: Vec<StagedTransfer> },
     /// The trainer failed; the coordinator aborts the run with `error`.
     Failed { client: u32, error: String },
+    /// `Stop` acknowledged; this trainer's lane is drained and its actor is
+    /// about to exit.
+    StopAck { client: u32 },
+    /// Deployment handshake (multi-process transports, pre-rendezvous): a
+    /// worker process announcing itself and its protocol revision.
+    WorkerHello { version: u32 },
 }
 
 const D_HELLO: u8 = 1;
@@ -111,11 +181,14 @@ const D_TRAIN: u8 = 3;
 const D_EVAL: u8 = 4;
 const D_STOP: u8 = 5;
 const D_MODEL_VERSION: u8 = 6;
+const D_ASSIGN: u8 = 7;
 
 const U_HELLO_ACK: u8 = 1;
 const U_UPDATE: u8 = 2;
 const U_METRIC: u8 = 3;
 const U_FAILED: u8 = 4;
+const U_STOP_ACK: u8 = 5;
+const U_WORKER_HELLO: u8 = 6;
 
 const P_NONE: u8 = 0;
 const P_PLAIN: u8 = 1;
@@ -213,6 +286,15 @@ impl DownMsg {
                 w.u32(*version);
             }
             DownMsg::Stop => w.u8(D_STOP),
+            DownMsg::Assign { n_total, clients, config } => {
+                w.u8(D_ASSIGN);
+                w.u32(*n_total);
+                w.u32(clients.len() as u32);
+                for &c in clients {
+                    w.u32(c);
+                }
+                w.blob(config);
+            }
         }
         w.finish()
     }
@@ -239,6 +321,15 @@ impl DownMsg {
             }
             D_MODEL_VERSION => DownMsg::ModelVersion { version: r.u32()? },
             D_STOP => DownMsg::Stop,
+            D_ASSIGN => {
+                let n_total = r.u32()?;
+                let k = r.u32()? as usize;
+                let mut clients = Vec::with_capacity(k.min(1 << 16));
+                for _ in 0..k {
+                    clients.push(r.u32()?);
+                }
+                DownMsg::Assign { n_total, clients, config: r.blob()? }
+            }
             t => return Err(WireError::BadTag(t)),
         })
     }
@@ -261,6 +352,7 @@ impl UpMsg {
                 w.f64(u.compute_secs);
                 w.f64(u.wait_secs);
                 w.f64(u.privacy_secs);
+                write_staged(&mut w, &u.staged);
                 match &u.payload {
                     UpdatePayload::None => w.u8(P_NONE),
                     UpdatePayload::Plain(values) => {
@@ -273,17 +365,26 @@ impl UpMsg {
                     }
                 }
             }
-            UpMsg::Metric { client, round, num, den } => {
+            UpMsg::Metric { client, round, num, den, staged } => {
                 w.u8(U_METRIC);
                 w.u32(*client);
                 w.u32(*round);
                 w.f64(*num);
                 w.f64(*den);
+                write_staged(&mut w, staged);
             }
             UpMsg::Failed { client, error } => {
                 w.u8(U_FAILED);
                 w.u32(*client);
                 w.str(error);
+            }
+            UpMsg::StopAck { client } => {
+                w.u8(U_STOP_ACK);
+                w.u32(*client);
+            }
+            UpMsg::WorkerHello { version } => {
+                w.u8(U_WORKER_HELLO);
+                w.u32(*version);
             }
         }
         w.finish()
@@ -302,6 +403,7 @@ impl UpMsg {
                 let compute_secs = r.f64()?;
                 let wait_secs = r.f64()?;
                 let privacy_secs = r.f64()?;
+                let staged = read_staged(&mut r)?;
                 let payload = match r.u8()? {
                     P_NONE => UpdatePayload::None,
                     P_PLAIN => UpdatePayload::Plain(read_values(&mut r)?),
@@ -316,6 +418,7 @@ impl UpMsg {
                     compute_secs,
                     wait_secs,
                     privacy_secs,
+                    staged,
                     payload,
                 })
             }
@@ -324,8 +427,11 @@ impl UpMsg {
                 round: r.u32()?,
                 num: r.f64()?,
                 den: r.f64()?,
+                staged: read_staged(&mut r)?,
             },
             U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
+            U_STOP_ACK => UpMsg::StopAck { client: r.u32()? },
+            U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()? },
             t => return Err(WireError::BadTag(t)),
         })
     }
@@ -387,6 +493,10 @@ mod tests {
 
     #[test]
     fn update_roundtrip() {
+        let staged = vec![
+            StagedTransfer { phase: Phase::Train, dir: Direction::Up, bytes: 4096 },
+            StagedTransfer { phase: Phase::Train, dir: Direction::Down, bytes: 4096 },
+        ];
         let m = UpMsg::Update(UpdateEnvelope {
             client: 5,
             round: 11,
@@ -395,6 +505,7 @@ mod tests {
             compute_secs: 1.5,
             wait_secs: 0.25,
             privacy_secs: 0.0,
+            staged: staged.clone(),
             payload: UpdatePayload::Plain(vec![vec![1.0; 8], vec![2.0; 3]]),
         });
         match UpMsg::decode(&m.encode()).unwrap() {
@@ -405,6 +516,7 @@ mod tests {
                 assert_eq!(u.loss, 0.125);
                 assert_eq!(u.compute_secs, 1.5);
                 assert_eq!(u.wait_secs, 0.25);
+                assert_eq!(u.staged, staged);
                 match u.payload {
                     UpdatePayload::Plain(v) => {
                         assert_eq!(v, vec![vec![1.0; 8], vec![2.0; 3]])
@@ -418,12 +530,13 @@ mod tests {
 
     #[test]
     fn metric_and_failure_roundtrip() {
-        match UpMsg::decode(&UpMsg::Metric { client: 1, round: 2, num: 9.0, den: 10.0 }.encode())
-            .unwrap()
-        {
-            UpMsg::Metric { client, round, num, den } => {
+        let staged = vec![StagedTransfer { phase: Phase::Eval, dir: Direction::Up, bytes: 12 }];
+        let m = UpMsg::Metric { client: 1, round: 2, num: 9.0, den: 10.0, staged: staged.clone() };
+        match UpMsg::decode(&m.encode()).unwrap() {
+            UpMsg::Metric { client, round, num, den, staged: s } => {
                 assert_eq!((client, round), (1, 2));
                 assert_eq!((num, den), (9.0, 10.0));
+                assert_eq!(s, staged);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -431,6 +544,31 @@ mod tests {
             UpMsg::Failed { client, error } => {
                 assert_eq!(client, 4);
                 assert_eq!(error, "boom");
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn deployment_handshake_and_shutdown_frames_roundtrip() {
+        match UpMsg::decode(&UpMsg::WorkerHello { version: PROTOCOL_VERSION }.encode()).unwrap() {
+            UpMsg::WorkerHello { version } => assert_eq!(version, PROTOCOL_VERSION),
+            other => panic!("wrong message {other:?}"),
+        }
+        match UpMsg::decode(&UpMsg::StopAck { client: 9 }.encode()).unwrap() {
+            UpMsg::StopAck { client } => assert_eq!(client, 9),
+            other => panic!("wrong message {other:?}"),
+        }
+        let assign = DownMsg::Assign {
+            n_total: 6,
+            clients: vec![1, 3, 5],
+            config: vec![0xAA, 0xBB, 0xCC],
+        };
+        match DownMsg::decode(&assign.encode()).unwrap() {
+            DownMsg::Assign { n_total, clients, config } => {
+                assert_eq!(n_total, 6);
+                assert_eq!(clients, vec![1, 3, 5]);
+                assert_eq!(config, vec![0xAA, 0xBB, 0xCC]);
             }
             other => panic!("wrong message {other:?}"),
         }

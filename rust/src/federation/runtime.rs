@@ -37,19 +37,17 @@ use crate::coordinator::aggregate::{resolve_shards, sharded_weighted_average};
 use crate::he::{Ciphertext, CkksContext};
 use crate::monitor::{ClientTimeline, Monitor};
 use crate::runtime::ParamSet;
-use crate::transport::link::{CoordLink, Transport};
+use crate::transport::link::CoordLink;
 use crate::transport::{Direction, Phase, SimNet};
-use crate::util::rng::{hash_u64, Rng};
-use crate::util::sync::Semaphore;
 use crate::util::timer::timed;
 
 use crate::transport::serialize::params_wire_len;
 
-use super::actor::{actor_main, ActorSetup, ClientLogic, PrivacyEngine};
+use super::deploy::{he_context, Deployment, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 use super::protocol::{
-    encode_eval, encode_set_model, set_model_frame_len, DownMsg, UpMsg, UpdateEnvelope,
-    UpdatePayload,
+    encode_eval, encode_set_model, set_model_frame_len, DownMsg, StagedTransfer, UpMsg,
+    UpdateEnvelope, UpdatePayload,
 };
 
 /// How a model broadcast is billed to the simulated network.
@@ -151,63 +149,32 @@ pub struct Federation<'m> {
 }
 
 impl<'m> Federation<'m> {
-    /// Rendezvous: open the transport, move each [`ClientLogic`] onto its own
-    /// actor thread, and wait for every trainer's `HelloAck`.
+    /// Rendezvous: launch the blueprint's trainers under `deployment`
+    /// (threads over channels, or remote worker processes over sockets) and
+    /// wait for every trainer's `HelloAck`.
     ///
-    /// `weights[i]` is client *i*'s static aggregation weight; `init` is the
-    /// public initial model every actor starts from (an uncharged bootstrap —
-    /// the architecture and init scheme are shared knowledge).
+    /// `blueprint.weights[i]` is client *i*'s static aggregation weight;
+    /// `blueprint.init` is the public initial model every actor starts from
+    /// (an uncharged bootstrap — the architecture and init scheme are shared
+    /// knowledge).
     pub fn spawn(
         monitor: &'m Monitor,
-        transport: &dyn Transport,
+        deployment: &Deployment,
         cfg: &FedGraphConfig,
-        init: &ParamSet,
-        weights: Vec<f32>,
-        max_dim: usize,
-        logics: Vec<Box<dyn ClientLogic>>,
+        blueprint: SessionBlueprint,
     ) -> Result<Federation<'m>> {
-        let n = logics.len();
+        let n = blueprint.num_clients();
         if n == 0 {
             bail!("federation needs at least one trainer");
         }
-        if weights.len() != n {
-            bail!("weights/logics length mismatch: {} vs {n}", weights.len());
+        if blueprint.weights.len() != n {
+            bail!("weights/logics length mismatch: {} vs {n}", blueprint.weights.len());
         }
-        let (coord, trainer_links) = transport.open(n)?;
-        let gate = std::sync::Arc::new(Semaphore::new(
-            cfg.federation.resolved_concurrency(n),
-        ));
-        let he_ctx = match &cfg.privacy {
-            PrivacyMode::He(params) => Some(CkksContext::new(params.clone(), cfg.seed ^ 0xC4C5)),
-            _ => None,
-        };
-        let mut threads = Vec::with_capacity(n);
-        for (client, (logic, link)) in logics.into_iter().zip(trainer_links).enumerate() {
-            let privacy = match &cfg.privacy {
-                PrivacyMode::Plaintext => PrivacyEngine::Plain,
-                PrivacyMode::Dp(dp) => PrivacyEngine::Dp(dp.0.clone()),
-                PrivacyMode::He(_) => PrivacyEngine::He {
-                    ctx: he_ctx.clone().unwrap(),
-                    max_dim,
-                },
-            };
-            let setup = ActorSetup {
-                client,
-                logic,
-                link,
-                gate: gate.clone(),
-                privacy,
-                init: init.clone(),
-                rng: Rng::seeded(hash_u64(cfg.seed, 0xAC70_12, client as u64)),
-                straggler_ms: cfg.federation.straggler_ms,
-                straggler_seed: cfg.seed ^ 0x57A6_61,
-            };
-            let handle = std::thread::Builder::new()
-                .name(format!("fed-trainer-{client}"))
-                .spawn(move || actor_main(setup))
-                .map_err(|e| anyhow!("spawning trainer {client}: {e}"))?;
-            threads.push(handle);
-        }
+        let he_ctx = he_context(cfg);
+        let init = blueprint.init.clone();
+        let weights = blueprint.weights.clone();
+        monitor.note("transport", deployment.transport_name());
+        let fabric = deployment.launch(cfg, blueprint, &he_ctx)?;
         let policy: Box<dyn RoundPolicy> = match cfg.federation.mode {
             FederationMode::Sync => Box::new(SyncBarrier),
             FederationMode::Async => Box::new(AsyncBounded::new(
@@ -217,13 +184,13 @@ impl<'m> Federation<'m> {
         };
         let mut fed = Federation {
             monitor,
-            coord,
-            threads,
+            coord: fabric.coord,
+            threads: fabric.threads,
             n,
             weights,
             privacy: cfg.privacy.clone(),
             he_ctx,
-            template: init.clone(),
+            template: init,
             stopped: false,
             mode: cfg.federation.mode,
             agg_shards: cfg.federation.agg_shards,
@@ -231,13 +198,17 @@ impl<'m> Federation<'m> {
             policy: Some(policy),
             stash: VecDeque::new(),
         };
-        // Rendezvous.
+        // Rendezvous (control frames: measured but never SimNet-charged).
         for client in 0..n {
-            fed.coord.send(client, DownMsg::Hello { client: client as u32 }.encode().into())?;
+            let frame: crate::transport::link::Frame =
+                DownMsg::Hello { client: client as u32 }.encode().into();
+            fed.wire().record_frame(Phase::PreTrain, Direction::Down, frame.len() as u64);
+            fed.coord.send(client, frame)?;
         }
         let mut acked = vec![false; n];
         for _ in 0..n {
             let (from, frame) = fed.coord.recv()?;
+            fed.wire().record_frame(Phase::PreTrain, Direction::Up, frame.len() as u64);
             match UpMsg::decode(&frame).map_err(|e| anyhow!("rendezvous: {e}"))? {
                 UpMsg::HelloAck { client } => acked[client as usize] = true,
                 UpMsg::Failed { client, error } => {
@@ -265,6 +236,19 @@ impl<'m> Federation<'m> {
         &self.monitor.net
     }
 
+    fn wire(&self) -> &crate::transport::WireLedger {
+        &self.monitor.wire
+    }
+
+    /// Replay a remote actor's staged simulated transfers onto the
+    /// coordinator ledger (no-op for in-process actors, whose `staged` lists
+    /// are empty because they stage directly).
+    fn apply_staged(&self, client: usize, staged: &[StagedTransfer]) {
+        for s in staged {
+            self.net().stage(s.phase, s.dir, client, s.bytes);
+        }
+    }
+
     /// Ship `params` to `targets` as a `SetModel` broadcast stamped with the
     /// next version. `charge` decides whether (and at what per-link size) the
     /// transfer is ledgered.
@@ -282,6 +266,10 @@ impl<'m> Federation<'m> {
         let frame: crate::transport::link::Frame =
             encode_set_model(round as u32, self.version, &params.values).into();
         for &t in targets {
+            // The whole SetModel frame is data-plane: SimNet charges exactly
+            // this encoded length in plaintext mode, which is the measured
+            // `wire payload == SimNet bytes` invariant the report documents.
+            self.wire().record_payload_frame(Phase::Train, Direction::Down, frame.len() as u64);
             self.coord.send(t, frame.clone())?;
         }
         if let Charge::PerLink(bytes) = charge {
@@ -309,6 +297,7 @@ impl<'m> Federation<'m> {
         let frame: crate::transport::link::Frame =
             DownMsg::ModelVersion { version: self.version }.encode().into();
         for &t in targets {
+            self.wire().record_frame(Phase::Train, Direction::Down, frame.len() as u64);
             self.coord.send(t, frame.clone())?;
         }
         Ok(())
@@ -414,10 +403,10 @@ impl<'m> Federation<'m> {
         }
         let total_w: f32 = participants.iter().map(|&p| self.weights[p].max(1.0)).sum();
         let scale = self.weights[c].max(1.0) / total_w.max(1.0);
-        self.coord.send(
-            c,
-            DownMsg::Train { round: round as u32, scale, upload }.encode().into(),
-        )
+        let frame: crate::transport::link::Frame =
+            DownMsg::Train { round: round as u32, scale, upload }.encode().into();
+        self.wire().record_frame(Phase::Train, Direction::Down, frame.len() as u64);
+        self.coord.send(c, frame)
     }
 
     fn decode_update_frame(
@@ -425,8 +414,15 @@ impl<'m> Federation<'m> {
         from: usize,
         frame: &crate::transport::link::Frame,
     ) -> Result<UpdateEnvelope> {
+        // Update frames belong to the train phase regardless of which
+        // collection loop sees them; the data-plane portion is reclassified
+        // as payload when the envelope is adopted.
+        self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
         match UpMsg::decode(frame).map_err(|e| anyhow!("from trainer {from}: {e}"))? {
-            UpMsg::Update(u) => Ok(u),
+            UpMsg::Update(u) => {
+                self.apply_staged(u.client as usize, &u.staged);
+                Ok(u)
+            }
             UpMsg::Failed { client, error } => bail!("trainer {client} failed: {error}"),
             other => bail!("unexpected message during training step: {other:?}"),
         }
@@ -495,10 +491,17 @@ impl<'m> Federation<'m> {
                 });
                 let p = p?;
                 let charge = params_wire_len(p.values.iter().map(|v| v.len()));
+                self.wire().note_payload(Phase::Train, Direction::Up, charge);
                 (RoundUpdate::Plain(p), charge, secs)
             }
             UpdatePayload::Encrypted(ct) => {
+                // Measured-vs-simulated caveat: SimNet charges the CKKS size
+                // model (`wire_bytes`), while the measured frame carries this
+                // implementation's compact ciphertext encoding — the report
+                // shows both, and the equality invariant is documented for
+                // plaintext/DP sessions only.
                 let bytes = ct.wire_bytes();
+                self.wire().note_payload(Phase::Train, Direction::Up, bytes);
                 (RoundUpdate::Encrypted(ct), bytes, 0.0)
             }
         })
@@ -709,25 +712,37 @@ impl<'m> Federation<'m> {
         let frame: crate::transport::link::Frame =
             encode_eval(round as u32, with.map(|p| p.values.as_slice())).into();
         for &t in targets {
+            // Control by the ledger rule: an eval model override stands in
+            // for server-side evaluation and is explicitly uncharged — the
+            // measured meter still sees its real size, which is exactly the
+            // kind of simulated-vs-measured gap the report exists to show.
+            self.wire().record_frame(Phase::Eval, Direction::Down, frame.len() as u64);
             self.coord.send(t, frame.clone())?;
         }
         let mut metrics: Vec<Option<(f64, f64)>> = vec![None; self.n];
         let mut remaining = targets.len();
         while remaining > 0 {
             let (from, frame) = self.coord.recv()?;
+            let frame_len = frame.len() as u64;
             match UpMsg::decode(&frame).map_err(|e| anyhow!("from trainer {from}: {e}"))? {
-                UpMsg::Metric { client, round: r, num, den } => {
+                UpMsg::Metric { client, round: r, num, den, staged } => {
+                    self.wire().record_frame(Phase::Eval, Direction::Up, frame_len);
                     let c = client as usize;
                     if r as usize != round || c >= self.n || metrics[c].is_some() {
                         bail!("protocol violation: unexpected metric from {c}");
                     }
+                    self.apply_staged(c, &staged);
                     metrics[c] = Some((num, den));
                     remaining -= 1;
                 }
                 UpMsg::Update(u) => {
+                    self.wire().record_frame(Phase::Train, Direction::Up, frame_len);
                     if self.mode == FederationMode::Async {
                         // A straggler finished mid-eval; the next policy
-                        // step decides its fate.
+                        // step decides its fate. Its staged traffic belongs
+                        // to this tick (the training ran during the eval
+                        // collection, exactly as in-process staging lands).
+                        self.apply_staged(u.client as usize, &u.staged);
                         self.stash.push_back(u);
                     } else {
                         bail!(
@@ -752,7 +767,11 @@ impl<'m> Federation<'m> {
         Ok((num, den))
     }
 
-    /// End the session: `Stop` every actor and join the threads.
+    /// End the session gracefully: `Stop` every actor, wait for every
+    /// `StopAck`, then join any local threads. The ack handshake keeps the
+    /// lanes open until every trainer has drained, so worker processes exit
+    /// 0 and the coordinator never reports a spurious "trainer hung up" at
+    /// end of run.
     pub fn shutdown(mut self) -> Result<()> {
         self.stop_actors();
         Ok(())
@@ -764,8 +783,39 @@ impl<'m> Federation<'m> {
         }
         self.stopped = true;
         let stop: crate::transport::link::Frame = DownMsg::Stop.encode().into();
+        let mut expecting = 0usize;
         for client in 0..self.n {
-            let _ = self.coord.send(client, stop.clone());
+            self.wire().record_frame(Phase::Train, Direction::Down, stop.len() as u64);
+            if self.coord.send(client, stop.clone()).is_ok() {
+                expecting += 1;
+            }
+        }
+        // Drain until every reachable trainer acked. Late frames from
+        // in-flight async stragglers (updates, metrics, failures) are
+        // discarded — the session is over — but their *staged* simulated
+        // transfers are still replayed: an in-process actor staged those
+        // bytes directly on the shared ledger while it trained, so remote
+        // actors' envelopes must land them too or the byte ledger would
+        // depend on the deployment. A dead lane ends the drain early.
+        let mut acked = 0usize;
+        while acked < expecting {
+            match self.coord.recv() {
+                Ok((_, frame)) => {
+                    self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
+                    match UpMsg::decode(&frame) {
+                        Ok(UpMsg::StopAck { .. }) => acked += 1,
+                        Ok(UpMsg::Update(u)) => {
+                            self.apply_staged(u.client as usize, &u.staged)
+                        }
+                        Ok(UpMsg::Metric { client, staged, .. }) => {
+                            self.apply_staged(client as usize, &staged)
+                        }
+                        Ok(_) => {}
+                        Err(_) => break,
+                    }
+                }
+                Err(_) => break,
+            }
         }
         for h in self.threads.drain(..) {
             let _ = h.join();
@@ -786,13 +836,30 @@ mod tests {
     use super::*;
     use crate::config::{DpClone, FedGraphConfig, Method, Task};
     use crate::coordinator::selection::select_with_dropout;
-    use crate::federation::LocalUpdate;
+    use crate::federation::{ClientLogic, LocalUpdate};
     use crate::he::{CkksParams, DpParams};
-    use crate::transport::link::ChannelTransport;
     use crate::transport::serialize::{decode_params, encode_params, fnv1a};
     use crate::transport::NetConfig;
     use crate::util::rng::Rng;
     use std::sync::Arc;
+
+    /// Spawn over the in-process deployment (the shape every pre-deployment
+    /// test used).
+    fn spawn_in_process<'m>(
+        monitor: &'m Monitor,
+        cfg: &FedGraphConfig,
+        init: &ParamSet,
+        weights: Vec<f32>,
+        max_dim: usize,
+        logics: Vec<Box<dyn ClientLogic>>,
+    ) -> Result<Federation<'m>> {
+        Federation::spawn(
+            monitor,
+            &Deployment::InProcess,
+            cfg,
+            SessionBlueprint { init: init.clone(), weights, max_dim, logics },
+        )
+    }
 
     /// Engine-free logic: a deterministic "training" rule driven by the
     /// client's RNG stream, so bitwise comparison is meaningful.
@@ -844,10 +911,15 @@ mod tests {
         rounds: usize,
         sleeps: &[u64],
     ) -> (Vec<u8>, u64, u64, f64) {
-        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
-        let n = cfg.n_trainer;
-        let mut rng = Rng::seeded(cfg.seed);
-        let init = ParamSet::nc(6, 4, 3, &mut rng);
+        run_session(cfg, rounds, sleeps, &Deployment::InProcess)
+    }
+
+    /// The engine-free stand-in for a task runner's session build: init +
+    /// weights + DummyLogic per client, everything derived from `rng` — the
+    /// same way worker processes rebuild a real session from the shipped
+    /// config.
+    fn dummy_blueprint(n: usize, sleeps: &[u64], rng: &mut Rng) -> SessionBlueprint {
+        let init = ParamSet::nc(6, 4, 3, rng);
         let logics: Vec<Box<dyn ClientLogic>> = (0..n)
             .map(|client| {
                 Box::new(DummyLogic { client, steps: 3, sleep_ms: sleeps[client] })
@@ -855,12 +927,23 @@ mod tests {
             })
             .collect();
         let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
+        SessionBlueprint { init, weights, max_dim: 64, logics }
+    }
+
+    fn run_session(
+        cfg: &FedGraphConfig,
+        rounds: usize,
+        sleeps: &[u64],
+        deployment: &Deployment,
+    ) -> (Vec<u8>, u64, u64, f64) {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let n = cfg.n_trainer;
+        let mut rng = Rng::seeded(cfg.seed);
+        let blueprint = dummy_blueprint(n, sleeps, &mut rng);
         let t0 = std::time::Instant::now();
-        let mut fed =
-            Federation::spawn(&monitor, &ChannelTransport, cfg, &init, weights, 64, logics)
-                .unwrap();
+        let mut global = blueprint.init.clone();
+        let mut fed = Federation::spawn(&monitor, deployment, cfg, blueprint).unwrap();
         let all: Vec<usize> = (0..n).collect();
-        let mut global = init;
         fed.broadcast_model(0, &global, &all, Charge::PerLink(global.byte_len())).unwrap();
         for round in 0..rounds {
             let sel = select_with_dropout(
@@ -996,16 +1079,8 @@ mod tests {
             Box::new(DummyLogic { client: 0, steps: 1, sleep_ms: 0 }),
             Box::new(DummyLogic { client: 1, steps: 1, sleep_ms: 1500 }),
         ];
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0, 1.0],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed =
+            spawn_in_process(&monitor, &cfg, &init, vec![1.0, 1.0], 16, logics).unwrap();
         fed.broadcast_model(0, &init, &[0, 1], Charge::PerLink(init.byte_len())).unwrap();
         // Round 0 orders both; the size-1 buffer admits only the fast client
         // and flushes without the straggler.
@@ -1046,16 +1121,8 @@ mod tests {
             Box::new(DummyLogic { client: 0, steps: 1, sleep_ms: 0 }),
             Box::new(DummyLogic { client: 1, steps: 1, sleep_ms: 800 }),
         ];
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![4.0, 4.0],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed =
+            spawn_in_process(&monitor, &cfg, &init, vec![4.0, 4.0], 16, logics).unwrap();
         fed.broadcast_model(0, &init, &[0, 1], Charge::PerLink(init.byte_len())).unwrap();
         let s0 = fed.policy_round(0, &[0, 1], true, &[0, 1]).unwrap();
         assert_eq!(s0.results.len(), 1, "only the fast client is fresh");
@@ -1086,16 +1153,7 @@ mod tests {
         }
         let logics: Vec<Box<dyn ClientLogic>> =
             vec![Box::new(DummyLogic { client: 0, steps: 2, sleep_ms: 0 })];
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed = spawn_in_process(&monitor, &cfg, &init, vec![1.0], 16, logics).unwrap();
         fed.broadcast_model(0, &init, &[0], Charge::Free).unwrap();
         // Local training diverges the actor's model from the broadcast...
         fed.train_round(0, &[0], false).unwrap();
@@ -1154,16 +1212,7 @@ mod tests {
         let logics: Vec<Box<dyn ClientLogic>> = (0..3)
             .map(|client| Box::new(DummyLogic { client, steps: 1, sleep_ms: 0 }) as _)
             .collect();
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0; 3],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed = spawn_in_process(&monitor, &cfg, &init, vec![1.0; 3], 16, logics).unwrap();
         let results = fed.train_round(0, &[0, 1, 2], false).unwrap();
         assert_eq!(results.len(), 3);
         assert!(results.iter().all(|r| matches!(r.update, RoundUpdate::Local)));
@@ -1202,16 +1251,8 @@ mod tests {
         let init = ParamSet::nc(4, 4, 2, &mut rng);
         let logics: Vec<Box<dyn ClientLogic>> =
             (0..3).map(|client| Box::new(ConstLogic { client }) as _).collect();
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0, 2.0, 3.0],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed =
+            spawn_in_process(&monitor, &cfg, &init, vec![1.0, 2.0, 3.0], 16, logics).unwrap();
         let results = fed.train_round(0, &[0, 2], true).unwrap();
         let model = fed.aggregate_and_broadcast(0, &results, &[0, 1, 2]).unwrap();
         for v in model.flatten() {
@@ -1237,16 +1278,7 @@ mod tests {
         let init = ParamSet::nc(4, 4, 2, &mut rng);
         let logics: Vec<Box<dyn ClientLogic>> =
             vec![Box::new(PanicLogic), Box::new(PanicLogic)];
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0; 2],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed = spawn_in_process(&monitor, &cfg, &init, vec![1.0; 2], 16, logics).unwrap();
         let err = fed.train_round(0, &[0, 1], true);
         assert!(err.is_err(), "panic must surface as a coordinator error");
         let msg = format!("{:#}", err.err().unwrap());
@@ -1270,16 +1302,7 @@ mod tests {
         let init = ParamSet::nc(4, 4, 2, &mut rng);
         let logics: Vec<Box<dyn ClientLogic>> =
             vec![Box::new(FailingLogic), Box::new(FailingLogic)];
-        let mut fed = Federation::spawn(
-            &monitor,
-            &ChannelTransport,
-            &cfg,
-            &init,
-            vec![1.0; 2],
-            16,
-            logics,
-        )
-        .unwrap();
+        let mut fed = spawn_in_process(&monitor, &cfg, &init, vec![1.0; 2], 16, logics).unwrap();
         let err = fed.train_round(0, &[0, 1], true);
         assert!(err.is_err());
         let msg = format!("{:#}", err.err().unwrap());
@@ -1294,5 +1317,199 @@ mod tests {
         let a = fnv1a(&encode_params(&p.values));
         let b = fnv1a(&encode_params(&p.values));
         assert_eq!(a, b);
+    }
+
+    // -- multi-process (TCP loopback) deployment ----------------------------
+
+    /// Drive the same session over a TCP deployment on 127.0.0.1: `workers`
+    /// in-process "worker processes" (threads speaking the real socket
+    /// protocol, exactly what `fedgraph worker` runs) rebuild the blueprint
+    /// from the shipped config and host the actors; the coordinator only
+    /// sees the socket fabric. Worker exits are asserted clean — the
+    /// `Stop → StopAck` handshake is what makes that reliable.
+    fn drive_tcp(
+        cfg: &FedGraphConfig,
+        rounds: usize,
+        sleeps: &[u64],
+        workers: usize,
+    ) -> (Vec<u8>, u64, u64, f64) {
+        let deployment = Deployment::tcp("127.0.0.1:0", workers).unwrap();
+        let addr = deployment.local_addr().unwrap().to_string();
+        let mut worker_threads = Vec::new();
+        for _ in 0..workers {
+            let addr = addr.clone();
+            let sleeps = sleeps.to_vec();
+            worker_threads.push(std::thread::spawn(move || -> Result<()> {
+                let assignment = crate::federation::worker::connect(
+                    &addr,
+                    std::time::Duration::from_secs(20),
+                )?;
+                // Rebuild the session deterministically from the shipped
+                // config — the same path a real worker process takes.
+                let wcfg = assignment.cfg.clone();
+                let mut rng = Rng::seeded(wcfg.seed);
+                let blueprint = dummy_blueprint(wcfg.n_trainer, &sleeps, &mut rng);
+                let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                crate::federation::worker::serve(assignment, blueprint, staging)
+            }));
+        }
+        let out = run_session(cfg, rounds, sleeps, &deployment);
+        for t in worker_threads {
+            t.join().expect("worker thread panicked").expect("worker must exit cleanly");
+        }
+        out
+    }
+
+    #[test]
+    fn tcp_loopback_is_bitwise_identical_to_channel() {
+        // The acceptance bar for the deployment layer: same config/seed over
+        // 2 worker processes on loopback == the in-process channel run, bit
+        // for bit — final params, accuracy inputs, and the byte ledger.
+        let cfg = test_cfg(6, 4, 0.0);
+        let chan = drive(&cfg, 4, 0);
+        let tcp = drive_tcp(&cfg, 4, &[0; 6], 2);
+        assert_eq!(
+            fnv1a(&chan.0),
+            fnv1a(&tcp.0),
+            "TCP loopback must reproduce the channel run bitwise"
+        );
+        assert_eq!(chan.1, tcp.1, "upload bytes must match");
+        assert_eq!(chan.2, tcp.2, "download bytes must match");
+
+        // Dropouts exercise the coordinator-side RNG stream too.
+        let drop_cfg = test_cfg(5, 4, 0.4);
+        let chan = drive(&drop_cfg, 4, 0);
+        let tcp = drive_tcp(&drop_cfg, 4, &[0; 5], 3);
+        assert_eq!(fnv1a(&chan.0), fnv1a(&tcp.0));
+        assert_eq!(chan.1, tcp.1);
+    }
+
+    #[test]
+    fn tcp_async_staleness_zero_matches_channel_sync() {
+        // try_recv must stay a non-blocking poll over sockets: the async
+        // policy drains it every step, and with max_staleness = 0 the whole
+        // run must still reproduce the sync channel run bit for bit.
+        let sync = drive(&test_cfg(4, 4, 0.0), 3, 0);
+        let mut acfg = test_cfg(4, 4, 0.0);
+        acfg.federation.mode = FederationMode::Async;
+        acfg.federation.max_staleness = 0;
+        acfg.federation.buffer_size = 0;
+        let tcp = drive_tcp(&acfg, 3, &[0; 4], 2);
+        assert_eq!(fnv1a(&sync.0), fnv1a(&tcp.0), "async(0) over TCP == sync over channels");
+        assert_eq!(sync.1, tcp.1);
+        assert_eq!(sync.2, tcp.2);
+    }
+
+    #[test]
+    fn tcp_async_buffered_leaves_stragglers_in_flight() {
+        // A genuinely-async TCP run: size-1 buffer, one slow client. The run
+        // must complete (stragglers drained by the shutdown handshake) with
+        // workers exiting cleanly.
+        let mut acfg = test_cfg(4, 4, 0.0);
+        acfg.federation.mode = FederationMode::Async;
+        acfg.federation.max_staleness = 100;
+        acfg.federation.buffer_size = 1;
+        let sleeps = [0u64, 0, 0, 120];
+        let out = drive_tcp(&acfg, 3, &sleeps, 2);
+        assert!(out.1 > 0, "buffered async run still uploads");
+    }
+
+    // -- measured wire bytes ------------------------------------------------
+
+    #[test]
+    fn measured_wire_payload_matches_simnet_for_payload_frames() {
+        // The report's cross-check invariant: for a plaintext session whose
+        // broadcasts are charged at frame size, measured payload wire bytes
+        // equal the SimNet ledger exactly — while total measured bytes also
+        // cover the control plane the simulated ledger deliberately ignores.
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let cfg = test_cfg(3, 2, 0.0);
+        let mut rng = Rng::seeded(cfg.seed);
+        let bp = dummy_blueprint(3, &[0; 3], &mut rng);
+        let mut global = bp.init.clone();
+        let mut fed = Federation::spawn(&monitor, &Deployment::InProcess, &cfg, bp).unwrap();
+        let all = vec![0usize, 1, 2];
+        let charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, charge).unwrap();
+        for round in 0..3 {
+            let step = fed.policy_round(round, &all, true, &all).unwrap();
+            if let Some(m) = step.model {
+                global = m;
+            }
+        }
+        fed.eval_round(3, &all, None).unwrap();
+        fed.shutdown().unwrap();
+
+        let sim = monitor.net.counter(Phase::Train);
+        let up = monitor.wire.counter(Phase::Train, Direction::Up);
+        let down = monitor.wire.counter(Phase::Train, Direction::Down);
+        assert_eq!(up.payload_bytes, sim.bytes_up, "upload payload == SimNet upload bytes");
+        assert_eq!(down.payload_bytes, sim.bytes_down, "broadcast payload == SimNet down bytes");
+        assert!(up.bytes > up.payload_bytes, "update envelopes are measured beyond the payload");
+        assert!(down.bytes > down.payload_bytes, "train/stop control frames are measured");
+        // Eval and rendezvous traffic is measured but control-only.
+        let eval_up = monitor.wire.counter(Phase::Eval, Direction::Up);
+        assert_eq!(eval_up.payload_bytes, 0);
+        assert_eq!(eval_up.frames, 3, "one metric frame per target");
+        assert_eq!(monitor.wire.counter(Phase::PreTrain, Direction::Up).frames, 3, "hello acks");
+        assert!(monitor.wire.total_bytes() > sim.bytes_up + sim.bytes_down);
+    }
+
+    #[test]
+    fn tcp_run_preserves_wire_and_simnet_ledgers() {
+        // Same session, both deployments: the coordinator-side ledgers must
+        // agree because remote actors replay their staged traffic and every
+        // frame is measured at the coordinator.
+        let run = |deployment: &Deployment, workers: Option<usize>| {
+            let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let cfg = test_cfg(4, 4, 0.0);
+            let mut handles = Vec::new();
+            if let Some(w) = workers {
+                let addr = deployment.local_addr().unwrap().to_string();
+                for _ in 0..w {
+                    let addr = addr.clone();
+                    handles.push(std::thread::spawn(move || -> Result<()> {
+                        let a = crate::federation::worker::connect(
+                            &addr,
+                            std::time::Duration::from_secs(20),
+                        )?;
+                        let wcfg = a.cfg.clone();
+                        let mut rng = Rng::seeded(wcfg.seed);
+                        let bp = dummy_blueprint(wcfg.n_trainer, &[0; 4], &mut rng);
+                        let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                        crate::federation::worker::serve(a, bp, staging)
+                    }));
+                }
+            }
+            let mut rng = Rng::seeded(cfg.seed);
+            let bp = dummy_blueprint(4, &[0; 4], &mut rng);
+            let mut global = bp.init.clone();
+            let mut fed = Federation::spawn(&monitor, deployment, &cfg, bp).unwrap();
+            let all = vec![0usize, 1, 2, 3];
+            let charge = Charge::PerLink(fed.init_model_charge(&global));
+            fed.broadcast_model(0, &global, &all, charge).unwrap();
+            for round in 0..2 {
+                let step = fed.policy_round(round, &all, true, &all).unwrap();
+                if let Some(m) = step.model {
+                    global = m;
+                }
+            }
+            fed.eval_round(2, &all, None).unwrap();
+            fed.shutdown().unwrap();
+            for h in handles {
+                h.join().unwrap().unwrap();
+            }
+            let sim = monitor.net.counter(Phase::Train);
+            let up = monitor.wire.counter(Phase::Train, Direction::Up);
+            let down = monitor.wire.counter(Phase::Train, Direction::Down);
+            (sim.bytes_up, sim.bytes_down, up, down)
+        };
+        let chan = run(&Deployment::InProcess, None);
+        let dep = Deployment::tcp("127.0.0.1:0", 2).unwrap();
+        let tcp = run(&dep, Some(2));
+        assert_eq!(chan.0, tcp.0, "SimNet upload bytes match across deployments");
+        assert_eq!(chan.1, tcp.1, "SimNet download bytes match across deployments");
+        assert_eq!(chan.2, tcp.2, "measured up wire counters match");
+        assert_eq!(chan.3, tcp.3, "measured down wire counters match");
     }
 }

@@ -1,0 +1,173 @@
+//! The worker-process side of a multi-process deployment: what runs behind
+//! `fedgraph worker --connect <host:port>`.
+//!
+//! A worker is deliberately thin. It connects, handshakes
+//! (`WorkerHello → Assign`), decodes the coordinator's bit-exact config,
+//! **rebuilds the session deterministically** (datasets, partitions,
+//! pre-train exchanges and per-client logic all derive from the config seed —
+//! the same code path the coordinator ran), keeps the clients it was
+//! assigned, and then hosts perfectly ordinary trainer actors
+//! ([`crate::federation::actor::actor_main`]) over socket-backed
+//! [`crate::transport::link::TrainerLink`]s. Nothing above the link layer
+//! knows it left the coordinator's process.
+//!
+//! Shutdown: trainers ack `Stop` before their lanes close, so the worker
+//! flushes its acks, shuts the socket down, and exits 0 — and the
+//! coordinator never reports a spurious "trainer hung up" at end of run.
+
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::FedGraphConfig;
+use crate::monitor::Monitor;
+use crate::transport::tcp::{self, CONTROL_LANE};
+use crate::transport::SimNet;
+use crate::util::sync::Semaphore;
+
+use super::actor::actor_main;
+use super::deploy::{actor_setup, he_context, SessionBlueprint};
+use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION};
+
+/// What the coordinator handed this worker during the handshake.
+pub struct WorkerAssignment {
+    pub cfg: FedGraphConfig,
+    /// Total trainer count of the session (the worker rebuilds all `n`
+    /// logics deterministically and keeps its share).
+    pub n_total: usize,
+    /// The client indices this worker hosts.
+    pub clients: Vec<usize>,
+    stream: TcpStream,
+}
+
+/// Connect to a coordinator (retrying while it binds — workers may start
+/// first) and perform the `WorkerHello → Assign` handshake.
+pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
+    let mut stream = tcp::connect_with_retry(addr, timeout)?;
+    let hello = UpMsg::WorkerHello { version: PROTOCOL_VERSION }.encode();
+    tcp::write_frame(&mut stream, CONTROL_LANE, &hello).context("sending WorkerHello")?;
+    let (lane, payload) = match tcp::read_frame(&mut stream).context("awaiting Assign")? {
+        tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
+        tcp::ReadOutcome::Closed => bail!("coordinator closed before assigning"),
+    };
+    if lane != CONTROL_LANE {
+        bail!("coordinator sent a non-control frame before Assign");
+    }
+    match DownMsg::decode(&payload).map_err(|e| anyhow!("Assign frame: {e}"))? {
+        DownMsg::Assign { n_total, clients, config } => {
+            let cfg = FedGraphConfig::decode_wire(&config).context("decoding shipped config")?;
+            Ok(WorkerAssignment {
+                cfg,
+                n_total: n_total as usize,
+                clients: clients.into_iter().map(|c| c as usize).collect(),
+                stream,
+            })
+        }
+        other => bail!("coordinator sent {other:?} instead of Assign"),
+    }
+}
+
+/// Host the assigned slice of `blueprint` over the handshaken connection
+/// until the coordinator finishes the session. `staging_net` must be the
+/// stage-logged [`SimNet`] the blueprint's logics write to (the worker-local
+/// staging buffer whose entries ride update envelopes back to the
+/// coordinator's authoritative ledger).
+pub fn serve(
+    assignment: WorkerAssignment,
+    blueprint: SessionBlueprint,
+    staging_net: Arc<SimNet>,
+) -> Result<()> {
+    let WorkerAssignment { cfg, n_total, clients, stream } = assignment;
+    if blueprint.num_clients() != n_total {
+        bail!(
+            "session blueprint has {} clients but the coordinator assigned over {n_total}",
+            blueprint.num_clients()
+        );
+    }
+    let he_ctx = he_context(&cfg);
+    let (links, demux) = tcp::worker_links(&stream, &clients)?;
+    // `max_concurrency` bounds compute **per process**: this worker gates its
+    // own actors over its own cores, as a separate machine would (see the
+    // `FederationConfig::max_concurrency` docs for the cross-deployment
+    // timing caveat). Determinism does not depend on the gate.
+    let concurrency = cfg.federation.resolved_concurrency(clients.len().max(1));
+    let gate = Arc::new(Semaphore::new(concurrency));
+    let SessionBlueprint { init, max_dim, logics, .. } = blueprint;
+    // Pair each assigned client with its logic (the rest are dropped — they
+    // belong to other workers).
+    let mut assigned_logic: Vec<Option<Box<dyn super::actor::ClientLogic>>> =
+        logics.into_iter().map(Some).collect();
+    let mut threads = Vec::with_capacity(clients.len());
+    for (&client, link) in clients.iter().zip(links) {
+        let logic = assigned_logic
+            .get_mut(client)
+            .and_then(|l| l.take())
+            .ok_or_else(|| anyhow!("assigned client {client} out of blueprint range"))?;
+        let setup = actor_setup(
+            &cfg,
+            &init,
+            max_dim,
+            &he_ctx,
+            gate.clone(),
+            client,
+            logic,
+            link,
+            Some(staging_net.clone()),
+        );
+        let handle = std::thread::Builder::new()
+            .name(format!("fed-worker-trainer-{client}"))
+            .spawn(move || actor_main(setup))
+            .map_err(|e| anyhow!("spawning worker trainer {client}: {e}"))?;
+        threads.push(handle);
+    }
+    drop(assigned_logic);
+    // Actors exit after acking Stop; their acks are already on the socket
+    // when we FIN it, so the coordinator drains them before the close.
+    for h in threads {
+        h.join().map_err(|_| anyhow!("a worker trainer thread panicked"))?;
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    let _ = demux.join();
+    Ok(())
+}
+
+/// The full `fedgraph worker` entry: connect, rebuild the session from the
+/// shipped config, and serve until the coordinator finishes.
+///
+/// `artifacts_override` replaces the shipped `artifacts_dir` (worker
+/// machines may mount artifacts elsewhere); `timeout` bounds the initial
+/// connect retries.
+pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duration) -> Result<()> {
+    let mut assignment = connect(addr, timeout)?;
+    if let Some(dir) = artifacts_override {
+        assignment.cfg.artifacts_dir = dir.to_string();
+    }
+    eprintln!(
+        "fedgraph worker: assigned clients {:?} of {} ({} / {} on {})",
+        assignment.clients,
+        assignment.n_total,
+        assignment.cfg.task.name(),
+        assignment.cfg.method.name(),
+        assignment.cfg.dataset,
+    );
+    if assignment.clients.is_empty() {
+        // More workers than clients: nothing to host, exit cleanly.
+        let _ = assignment.stream.shutdown(Shutdown::Both);
+        return Ok(());
+    }
+    let engine = crate::runtime::Engine::start(&assignment.cfg.artifacts_dir)?;
+    // Worker-local monitor: its SimNet is only a staging buffer (entries are
+    // journaled and shipped to the coordinator); notes/timers are discarded.
+    let monitor = Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
+    let blueprint = crate::coordinator::build_session(&assignment.cfg, &engine, &monitor);
+    let result = match blueprint {
+        Ok(bp) => serve(assignment, bp, monitor.net.clone()),
+        Err(e) => Err(e),
+    };
+    engine.shutdown();
+    result?;
+    eprintln!("fedgraph worker: session complete");
+    Ok(())
+}

@@ -17,13 +17,18 @@
 //! sequential loop: each client is an **actor on its own OS thread** with an
 //! mpsc mailbox, and the coordinator drives a typed round protocol
 //! (`Rendezvous → BroadcastModel → LocalTrain → UploadUpdate → Aggregate →
-//! next round | Finish`) over a pluggable byte transport. See
+//! next round | Finish`) over a pluggable byte transport. Where the actors
+//! *live* is a [`federation::Deployment`]: threads in this process
+//! (`federation.transport: channel`, the default) or separate
+//! `fedgraph worker` processes over sockets (`federation.transport: tcp` —
+//! loopback runs are bitwise-identical to in-process runs). See
 //! [`federation`] for the protocol and determinism contract,
-//! [`transport::link`] for the `Transport` trait (backend #1: in-memory
-//! channels), and the `federation:` config block (`max_concurrency`,
-//! `dropout_frac`, `straggler_ms`) for runtime knobs. Parallel execution is
-//! bitwise-identical to `max_concurrency: 1`; per-client compute/wait/
-//! transfer timelines land in the monitor's report.
+//! [`transport::link`] / [`transport::tcp`] for the frame movers, and the
+//! `federation:` config block (`max_concurrency`, `dropout_frac`,
+//! `straggler_ms`, `transport`, `listen_addr`, `workers`) for runtime
+//! knobs. Parallel execution is bitwise-identical to `max_concurrency: 1`;
+//! per-client compute/wait/transfer timelines and measured wire bytes land
+//! in the monitor's report.
 //! - **Layer 2 (python/compile/model.py, build-time only)** — GCN / GIN / LP
 //!   models and their train/eval steps in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (python/compile/kernels/, build-time only)** — Pallas kernels

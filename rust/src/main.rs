@@ -5,12 +5,15 @@
 //!   fedgraph run --config configs/cora_fedgcn.yaml [--json out.json]
 //!   fedgraph run --task NC --dataset cora-sim --method FedGCN [--rounds N]
 //!               [--trainers M] [--scale S] [--he] [--dp] [--lowrank K]
+//!               [--transport channel|tcp --listen-addr H:P --workers W]
+//!   fedgraph worker --connect <host:port>   # host trainer actors for a
+//!                                           # tcp-transport coordinator
 //!   fedgraph list                 # supported task/method/dataset matrix
 //!   fedgraph artifacts            # show the loaded artifact manifest
 
 use std::process::ExitCode;
 
-use fedgraph::config::{FedGraphConfig, FederationMode, Method, PrivacyMode, Task};
+use fedgraph::config::{FedGraphConfig, FederationMode, Method, PrivacyMode, Task, TransportKind};
 use fedgraph::data;
 use fedgraph::he::{CkksParams, DpParams};
 
@@ -18,6 +21,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
+        Some("worker") => cmd_worker(&args[1..]),
         Some("list") => cmd_list(),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -44,9 +48,41 @@ fn print_help() {
          \x20     [--concurrency K] [--dropout F] [--straggler-ms MS]\n\
          \x20     [--mode sync|async] [--max-staleness N] [--buffer-size N]\n\
          \x20     [--agg-shards N]\n\
+         \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
+         \x20     [--workers W]\n\
+         \x20     With --transport tcp the run waits for W `fedgraph worker`\n\
+         \x20     processes to connect; results are bitwise-identical to the\n\
+         \x20     in-process channel transport for the same config/seed.\n\
+         \x20 worker --connect <host:port> [--artifacts DIR] [--timeout-secs S]\n\
+         \x20     host trainer actors for a tcp-transport coordinator: the\n\
+         \x20     worker receives its client assignment + config over the\n\
+         \x20     socket, rebuilds the session deterministically, and exits 0\n\
+         \x20     when the coordinator finishes the run\n\
          \x20 list       supported task/method/dataset matrix\n\
          \x20 artifacts  show the artifact manifest"
     );
+}
+
+fn cmd_worker(args: &[String]) -> ExitCode {
+    let Some(addr) = flag_value(args, "--connect") else {
+        eprintln!("worker needs --connect <host:port> (the coordinator's listen_addr)");
+        return ExitCode::FAILURE;
+    };
+    let artifacts = flag_value(args, "--artifacts");
+    let timeout_secs: u64 = flag_value(args, "--timeout-secs")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(30);
+    match fedgraph::federation::worker::run_worker(
+        addr,
+        artifacts,
+        std::time::Duration::from_secs(timeout_secs),
+    ) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("worker failed: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -154,6 +190,15 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--agg-shards") {
         cfg.federation.agg_shards = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--transport") {
+        cfg.federation.transport = TransportKind::parse(v)?;
+    }
+    if let Some(v) = flag_value(args, "--listen-addr") {
+        cfg.federation.listen_addr = v.to_string();
+    }
+    if let Some(v) = flag_value(args, "--workers") {
+        cfg.federation.workers = v.parse()?;
     }
     if has_flag(args, "--he") {
         cfg.privacy = PrivacyMode::He(CkksParams::default_params());

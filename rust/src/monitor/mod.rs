@@ -17,7 +17,7 @@ pub mod sysinfo;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
-use crate::transport::{Phase, SimNet};
+use crate::transport::{Phase, SimNet, WireLedger};
 use crate::util::timer::Stopwatch;
 
 use sysinfo::{ResourceProbe, ResourceSample};
@@ -65,6 +65,12 @@ struct MonitorState {
 /// The monitor class (thread-safe; trainers and the server share it).
 pub struct Monitor {
     pub net: Arc<SimNet>,
+    /// Measured wire bytes: what the transport backend actually moved,
+    /// frame by frame, recorded by the coordinator's event loop. Lives next
+    /// to the simulated [`SimNet`] ledger so the report can cross-check the
+    /// two (`wire payload bytes == SimNet bytes` for charged payload frames
+    /// in plaintext/DP sessions).
+    pub wire: WireLedger,
     state: Mutex<MonitorState>,
     probe: ResourceProbe,
 }
@@ -73,6 +79,7 @@ impl Monitor {
     pub fn new(net: Arc<SimNet>) -> Monitor {
         Monitor {
             net,
+            wire: WireLedger::new(),
             state: Mutex::new(MonitorState {
                 stopwatches: BTreeMap::new(),
                 extras: HashMap::new(),

@@ -1,6 +1,19 @@
 //! Report rendering: paper-style tables + JSON dumps.
+//!
+//! Two byte ledgers appear side by side: the **simulated** network
+//! ([`crate::transport::SimNet`] — what the paper's link model charges) and
+//! the **measured** wire ([`crate::transport::WireLedger`] — what the
+//! transport backend actually moved, frame by frame). Cross-check invariant:
+//! in plaintext/DP sessions, measured *payload* wire bytes equal the SimNet
+//! bytes exactly for payload frames (model broadcasts charged at frame size
+//! and decoded uploads). The deliberate exceptions are the round-0 bootstrap
+//! when charged `Free`, HE sessions (SimNet bills ciphertext-size formulas
+//! while the stand-in broadcasts plaintext), actor-staged simulated traffic
+//! (BNS-GCN halo re-shipments, FedLink exchanges, the FedGCN pre-train
+//! exchange — simulated transfers with no frame counterpart), and control
+//! frames (measured, never charged).
 
-use crate::transport::Phase;
+use crate::transport::{Direction, Phase, WireCounter};
 use crate::util::json::{obj, Json};
 use crate::util::tables::{fmt_bytes, fmt_secs, Table};
 
@@ -29,6 +42,12 @@ pub struct Report {
     /// Per-client totals `(client, compute, wait, transfer)` from the
     /// federation runtime's timelines (empty for non-federated runs).
     pub client_totals: Vec<(usize, f64, f64, f64)>,
+    /// Transport backend name (`channel` / `tcp`) as noted by the runtime.
+    pub transport: String,
+    /// Measured wire counters per `(phase, up, down)`: what the transport
+    /// actually moved, next to the simulated ledger above (see module docs
+    /// for the cross-check invariant).
+    pub wire: Vec<(Phase, WireCounter, WireCounter)>,
 }
 
 impl Report {
@@ -40,6 +59,21 @@ impl Report {
             .last()
             .map(|r| (r.test_accuracy, r.train_loss))
             .unwrap_or((0.0, 0.0));
+        let transport = m
+            .notes()
+            .iter()
+            .rev()
+            .find(|(k, _)| k == "transport")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default();
+        let wire: Vec<(Phase, WireCounter, WireCounter)> =
+            [Phase::PreTrain, Phase::Train, Phase::Eval]
+                .into_iter()
+                .map(|p| {
+                    (p, m.wire.counter(p, Direction::Up), m.wire.counter(p, Direction::Down))
+                })
+                .filter(|(_, up, down)| up.frames + down.frames > 0)
+                .collect();
         Report {
             notes: m.notes(),
             phase_secs: m.phase_names().iter().map(|p| (p.clone(), m.phase_secs(p))).collect(),
@@ -56,7 +90,14 @@ impl Report {
             peak_rss: m.peak_rss(),
             rounds,
             client_totals: m.timeline_totals(),
+            transport,
+            wire,
         }
+    }
+
+    /// Total measured wire bytes (both directions, all phases).
+    pub fn wire_bytes(&self) -> u64 {
+        self.wire.iter().map(|(_, up, down)| up.bytes + down.bytes).sum()
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -109,6 +150,24 @@ impl Report {
             fmt_secs(self.pretrain_net_concurrent_secs + self.train_net_concurrent_secs),
         ]);
         out.push_str(&c.render());
+        if !self.wire.is_empty() {
+            let title = if self.transport.is_empty() {
+                "Wire (measured)".to_string()
+            } else {
+                format!("Wire (measured, transport={})", self.transport)
+            };
+            let mut w = Table::new(&["phase", "frames", "bytes", "payload bytes"])
+                .with_title(&title);
+            for (phase, up, down) in &self.wire {
+                w.row(&[
+                    phase.name().into(),
+                    (up.frames + down.frames).to_string(),
+                    fmt_bytes(up.bytes + down.bytes),
+                    fmt_bytes(up.payload_bytes + down.payload_bytes),
+                ]);
+            }
+            out.push_str(&w.render());
+        }
         if self.train_wasted_bytes > 0 {
             out.push_str(&format!(
                 "stale-rejected upload waste: {} (async staleness bound)\n",
@@ -175,9 +234,28 @@ impl Report {
                 })
                 .collect(),
         );
+        let wire = Json::Obj(
+            self.wire
+                .iter()
+                .map(|(phase, up, down)| {
+                    (
+                        phase.name().to_string(),
+                        obj(vec![
+                            ("frames", ((up.frames + down.frames) as usize).into()),
+                            ("bytes_up", (up.bytes as usize).into()),
+                            ("bytes_down", (down.bytes as usize).into()),
+                            ("payload_bytes_up", (up.payload_bytes as usize).into()),
+                            ("payload_bytes_down", (down.payload_bytes as usize).into()),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         obj(vec![
             ("notes", notes),
             ("phase_secs", phases),
+            ("transport", Json::Str(self.transport.clone())),
+            ("wire", wire),
             ("pretrain_bytes", (self.pretrain_bytes as usize).into()),
             ("train_bytes", (self.train_bytes as usize).into()),
             ("pretrain_net_secs", self.pretrain_net_secs.into()),
@@ -225,10 +303,16 @@ mod tests {
             transfer_secs: 0.02,
         });
         m.sample_resources();
+        m.note("transport", "channel");
+        m.wire.record_payload_frame(Phase::Train, Direction::Down, 1_000_000);
+        m.wire.record_frame(Phase::Train, Direction::Up, 50);
         let r = Report::from_monitor(&m);
         assert_eq!(r.pretrain_bytes, 2_000_000);
         assert_eq!(r.train_bytes, 1_000_000);
         assert_eq!(r.final_accuracy, 0.81);
+        assert_eq!(r.transport, "channel");
+        assert_eq!(r.wire_bytes(), 1_000_050);
+        assert_eq!(r.wire.len(), 1, "only phases with frames are listed");
         // Singles: concurrent == serial.
         assert!((r.train_net_concurrent_secs - r.train_net_secs).abs() < 1e-12);
         assert_eq!(r.client_totals.len(), 1);
@@ -236,10 +320,15 @@ mod tests {
         let text = r.render();
         assert!(text.contains("cora-sim"));
         assert!(text.contains("2.00 MB"));
+        assert!(text.contains("transport=channel"), "wire table names the backend:\n{text}");
         // JSON parses back
         let j = r.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("final_accuracy").as_f64(), Some(0.81));
         assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), 1);
+        assert_eq!(parsed.get("transport").as_str(), Some("channel"));
+        let wire_train = parsed.get("wire").get("train");
+        assert_eq!(wire_train.get("payload_bytes_down").as_f64(), Some(1_000_000.0));
+        assert_eq!(wire_train.get("bytes_up").as_f64(), Some(50.0));
     }
 }

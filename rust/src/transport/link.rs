@@ -5,14 +5,19 @@
 //!
 //! - **`federation::protocol`** turns typed round-protocol messages into
 //!   checksummed byte frames (via [`super::serialize`]);
-//! - **this module** moves opaque frames between endpoints — the only layer a
-//!   future TCP / multi-process backend has to reimplement;
+//! - **this module** defines the endpoint traits a backend implements —
+//!   [`CoordLink`] (coordinator side) and [`TrainerLink`] (trainer side) —
+//!   plus backend #1; backend selection lives in
+//!   `crate::federation::deploy::Deployment`;
 //! - **[`super::SimNet`]** is the ledger: the federation runtime charges each
 //!   payload frame to it by phase/direction so communication cost stays exact
 //!   regardless of backend.
 //!
-//! The first backend is [`ChannelTransport`]: per-trainer mpsc channels, the
+//! Backend #1 is [`ChannelTransport`]: per-trainer mpsc channels, the
 //! in-process equivalent of the paper's Ray/gRPC links between EKS pods.
+//! Backend #2 lives in [`super::tcp`]: multiplexed socket lanes to separate
+//! `fedgraph worker` processes. Both produce the same boxed [`CoordLink`] /
+//! [`TrainerLink`] endpoints, so everything above this layer is identical.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -42,13 +47,6 @@ pub trait TrainerLink: Send {
     fn send(&mut self, frame: Frame) -> Result<()>;
     /// Block until the next coordinator frame arrives.
     fn recv(&mut self) -> Result<Frame>;
-}
-
-/// A federation transport backend: opens the coordinator endpoint plus `n`
-/// trainer endpoints. Backends must preserve per-lane FIFO order; delivery
-/// across different trainers may interleave arbitrarily.
-pub trait Transport {
-    fn open(&self, n: usize) -> Result<(Box<dyn CoordLink>, Vec<Box<dyn TrainerLink>>)>;
 }
 
 // ---------------------------------------------------------------------------
@@ -103,8 +101,11 @@ impl TrainerLink for ChannelTrainer {
     }
 }
 
-impl Transport for ChannelTransport {
-    fn open(&self, n: usize) -> Result<(Box<dyn CoordLink>, Vec<Box<dyn TrainerLink>>)> {
+impl ChannelTransport {
+    /// Open the coordinator endpoint plus `n` in-process trainer endpoints.
+    /// Like every backend, preserves per-lane FIFO order; delivery across
+    /// different trainers may interleave arbitrarily.
+    pub fn open(&self, n: usize) -> Result<(Box<dyn CoordLink>, Vec<Box<dyn TrainerLink>>)> {
         let (up_tx, up_rx) = channel::<(usize, Frame)>();
         let mut downs = Vec::with_capacity(n);
         let mut trainers: Vec<Box<dyn TrainerLink>> = Vec::with_capacity(n);

@@ -1,17 +1,36 @@
-//! Simulated federation network.
+//! Simulated federation network + measured wire accounting.
 //!
 //! The paper deploys trainers on AWS EKS pods and measures bytes + transfer
-//! time between them. Here the trainers are in-process (threads), and this
-//! module is the substitute network: every logical transfer passes through
-//! [`SimNet::send`], which (a) counts the real serialized bytes by phase and
-//! direction, and (b) converts bytes to *simulated* wall-clock seconds with a
-//! bandwidth + latency link model. Measured (CPU) time and simulated
-//! (network) time are reported separately by the monitor so both the
-//! "training time" and "communication cost" axes of Figs 5–10 can be
-//! regenerated.
+//! time between them. Two ledgers live here:
+//!
+//! - [`SimNet`] — the *simulated* network: every logical transfer passes
+//!   through [`SimNet::send`], which (a) counts the serialized bytes by phase
+//!   and direction, and (b) converts bytes to *simulated* wall-clock seconds
+//!   with a bandwidth + latency link model. Measured (CPU) time and simulated
+//!   (network) time are reported separately by the monitor so both the
+//!   "training time" and "communication cost" axes of Figs 5–10 can be
+//!   regenerated.
+//! - [`WireLedger`] — the *measured* wire: the federation runtime counts the
+//!   actual byte length of every protocol frame it ships or receives, by
+//!   phase and direction, and separately tracks how many of those bytes are
+//!   data-plane payload (the portion SimNet charges). For plaintext/DP
+//!   sessions the invariant `wire payload bytes == SimNet bytes` holds
+//!   exactly for payload frames (model broadcasts + uploads) — the report
+//!   prints both so the simulated ledger can be cross-checked against what
+//!   the transport really moved. The two diverge only where they should:
+//!   HE sessions bill ciphertext sizes while this implementation's decrypted
+//!   stand-in broadcasts plaintext frames, and actor-staged *simulated*
+//!   transfers (BNS-GCN halo re-shipments, FedLink per-step exchanges, the
+//!   FedGCN pre-train exchange) have no frame counterpart at all.
+//!
+//! Since the deployment refactor trainers may also live in separate worker
+//! processes over the [`tcp`] backend; the byte ledger stays coordinator-side
+//! (remote actors report their staged in-round traffic inside their update
+//! envelopes — see [`SimNet::take_staged`]).
 
 pub mod link;
 pub mod serialize;
+pub mod tcp;
 
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -33,6 +52,25 @@ impl Phase {
             Phase::Eval => "eval",
         }
     }
+
+    /// Stable wire code (staged transfers ride update envelopes in
+    /// multi-process mode).
+    pub fn code(&self) -> u8 {
+        match self {
+            Phase::PreTrain => 0,
+            Phase::Train => 1,
+            Phase::Eval => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Phase> {
+        match c {
+            0 => Some(Phase::PreTrain),
+            1 => Some(Phase::Train),
+            2 => Some(Phase::Eval),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -41,6 +79,23 @@ pub enum Direction {
     Up,
     /// Server → client(s).
     Down,
+}
+
+impl Direction {
+    pub fn code(&self) -> u8 {
+        match self {
+            Direction::Up => 0,
+            Direction::Down => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Direction> {
+        match c {
+            0 => Some(Direction::Up),
+            1 => Some(Direction::Down),
+            _ => None,
+        }
+    }
 }
 
 /// Link model.
@@ -90,10 +145,16 @@ struct NetState {
     pretrain: PhaseCounter,
     train: PhaseCounter,
     eval: PhaseCounter,
-    /// Per-link seconds staged by trainer actors during the current
-    /// scheduler tick, keyed by `(phase, direction, link id)`. Folded into
-    /// the counters by [`SimNet::end_tick`].
-    tick: HashMap<(Phase, Direction, usize), f64>,
+    /// Per-link `(seconds, bytes)` staged by trainer actors during the
+    /// current scheduler tick, keyed by `(phase, direction, link id)`.
+    /// Folded into the counters by [`SimNet::end_tick`].
+    tick: HashMap<(Phase, Direction, usize), (f64, u64)>,
+    /// Per-call journal of [`SimNet::stage`] entries, kept only when the
+    /// stage log is enabled (worker processes): each call's exact size must
+    /// survive so the coordinator can replay it call-for-call — replaying a
+    /// per-link *sum* would collapse per-call latencies into one.
+    stage_log: Vec<(Phase, Direction, usize, u64)>,
+    log_stages: bool,
 }
 
 impl NetState {
@@ -116,6 +177,16 @@ pub struct SimNet {
 impl SimNet {
     pub fn new(cfg: NetConfig) -> SimNet {
         SimNet { cfg, state: Mutex::new(NetState::default()) }
+    }
+
+    /// A `SimNet` that journals every [`SimNet::stage`] call so
+    /// [`SimNet::take_staged`] can hand the entries to a remote-actor
+    /// envelope. Worker processes use this; the coordinator's ledger never
+    /// enables the log (its staged traffic folds in place).
+    pub fn with_stage_log(cfg: NetConfig) -> SimNet {
+        let net = SimNet::new(cfg);
+        net.state.lock().unwrap().log_stages = true;
+        net
     }
 
     /// Seconds a transfer of `bytes` takes on one link.
@@ -191,7 +262,52 @@ impl SimNet {
             Direction::Down => c.bytes_down += bytes,
         }
         c.messages += 1;
-        *st.tick.entry((phase, dir, link)).or_insert(0.0) += secs;
+        let e = st.tick.entry((phase, dir, link)).or_insert((0.0, 0));
+        e.0 += secs;
+        e.1 += bytes;
+        if st.log_stages {
+            st.stage_log.push((phase, dir, link, bytes));
+        }
+    }
+
+    /// Un-stage and return `link`'s journaled [`SimNet::stage`] calls, in
+    /// call order. Used by remote trainer actors (worker processes): their
+    /// local `SimNet` is only a staging buffer — the entries ride the next
+    /// update/metric envelope and are re-staged on the coordinator's
+    /// authoritative ledger, so byte totals and tick folding match the
+    /// in-process deployment exactly. Counters and tick entries for the link
+    /// are reversed here, leaving the local ledger as if the calls never
+    /// happened. Requires [`SimNet::with_stage_log`].
+    pub fn take_staged(&self, link: usize) -> Vec<(Phase, Direction, u64)> {
+        let mut st = self.state.lock().unwrap();
+        let mut taken = Vec::new();
+        let mut kept = Vec::new();
+        for entry in std::mem::take(&mut st.stage_log) {
+            if entry.2 == link {
+                taken.push(entry);
+            } else {
+                kept.push(entry);
+            }
+        }
+        st.stage_log = kept;
+        for &(phase, dir, _, bytes) in &taken {
+            let secs = self.transfer_secs(bytes);
+            if let Some(e) = st.tick.get_mut(&(phase, dir, link)) {
+                // Reversal is exact: the same bytes produce the same f64.
+                e.0 -= secs;
+                e.1 = e.1.saturating_sub(bytes);
+                if e.0 <= 0.0 && e.1 == 0 {
+                    st.tick.remove(&(phase, dir, link));
+                }
+            }
+            let c = st.phase_mut(phase);
+            match dir {
+                Direction::Up => c.bytes_up = c.bytes_up.saturating_sub(bytes),
+                Direction::Down => c.bytes_down = c.bytes_down.saturating_sub(bytes),
+            }
+            c.messages = c.messages.saturating_sub(1);
+        }
+        taken.into_iter().map(|(p, d, _, b)| (p, d, b)).collect()
     }
 
     /// Close the current scheduler tick: fold every staged link into the
@@ -207,7 +323,7 @@ impl SimNet {
         for phase in [Phase::PreTrain, Phase::Train, Phase::Eval] {
             let mut sum = 0.0f64;
             let mut slowest = 0.0f64;
-            for ((p, _, _), secs) in &tick {
+            for ((p, _, _), (secs, _)) in &tick {
                 if *p == phase {
                     sum += *secs;
                     slowest = slowest.max(*secs);
@@ -278,7 +394,90 @@ impl SimNet {
     }
 
     pub fn reset(&self) {
-        *self.state.lock().unwrap() = NetState::default();
+        let mut st = self.state.lock().unwrap();
+        let log_stages = st.log_stages;
+        *st = NetState { log_stages, ..NetState::default() };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured wire accounting
+// ---------------------------------------------------------------------------
+
+/// Measured traffic of one `(phase, direction)` lane of the wire ledger.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WireCounter {
+    /// Protocol frames that crossed the transport.
+    pub frames: u64,
+    /// Total measured frame bytes (control + payload).
+    pub bytes: u64,
+    /// The data-plane portion: bytes the federation ledger charges to
+    /// [`SimNet`] (model broadcasts and decoded upload payloads). For
+    /// plaintext/DP sessions `payload_bytes == SimNet bytes` exactly for
+    /// payload frames; control frames (Hello, Train, Eval, Metric, Stop,
+    /// ModelVersion) are measured in `bytes` but never counted here —
+    /// matching the protocol's ledger rule that orchestration is unbilled.
+    pub payload_bytes: u64,
+}
+
+/// Measured wire-byte ledger: what the transport backend actually moved, by
+/// phase and direction, recorded frame-by-frame by the coordinator's event
+/// loop. Lives next to [`SimNet`] (the simulated ledger) so the report can
+/// cross-check the two — see the module docs for the invariant.
+pub struct WireLedger {
+    counters: Mutex<HashMap<(Phase, Direction), WireCounter>>,
+}
+
+impl Default for WireLedger {
+    fn default() -> Self {
+        WireLedger::new()
+    }
+}
+
+impl WireLedger {
+    pub fn new() -> WireLedger {
+        WireLedger { counters: Mutex::new(HashMap::new()) }
+    }
+
+    /// Count one frame of `len` measured bytes.
+    pub fn record_frame(&self, phase: Phase, dir: Direction, len: u64) {
+        let mut c = self.counters.lock().unwrap();
+        let e = c.entry((phase, dir)).or_default();
+        e.frames += 1;
+        e.bytes += len;
+    }
+
+    /// Mark `bytes` of already-recorded frame traffic as data-plane payload
+    /// (called where the runtime charges the same size to [`SimNet`]).
+    pub fn note_payload(&self, phase: Phase, dir: Direction, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut c = self.counters.lock().unwrap();
+        c.entry((phase, dir)).or_default().payload_bytes += bytes;
+    }
+
+    /// Count a frame that is payload end to end (model broadcasts: SimNet
+    /// charges the whole encoded frame).
+    pub fn record_payload_frame(&self, phase: Phase, dir: Direction, len: u64) {
+        let mut c = self.counters.lock().unwrap();
+        let e = c.entry((phase, dir)).or_default();
+        e.frames += 1;
+        e.bytes += len;
+        e.payload_bytes += len;
+    }
+
+    pub fn counter(&self, phase: Phase, dir: Direction) -> WireCounter {
+        self.counters.lock().unwrap().get(&(phase, dir)).copied().unwrap_or_default()
+    }
+
+    /// Total measured bytes across all phases and directions.
+    pub fn total_bytes(&self) -> u64 {
+        self.counters.lock().unwrap().values().map(|c| c.bytes).sum()
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.counters.lock().unwrap().values().map(|c| c.frames).sum()
     }
 }
 
@@ -381,6 +580,69 @@ mod tests {
         net.end_tick();
         let c2 = net.counter(Phase::Train);
         assert_eq!(c2.sim_secs, c.sim_secs);
+    }
+
+    #[test]
+    fn take_staged_replays_call_for_call() {
+        // A worker-local net journals stage calls; taking them reverses the
+        // local ledger and replaying them on a coordinator net reproduces
+        // the in-process totals exactly — including per-call latency.
+        let cfg = NetConfig { bandwidth_gbps: 1.0, latency_ms: 1.0 };
+        let worker = SimNet::with_stage_log(cfg.clone());
+        worker.stage(Phase::Train, Direction::Up, 3, 1000);
+        worker.stage(Phase::Train, Direction::Up, 3, 1000);
+        worker.stage(Phase::Eval, Direction::Up, 3, 12);
+        worker.stage(Phase::Train, Direction::Up, 5, 777); // another link stays
+        let taken = worker.take_staged(3);
+        assert_eq!(
+            taken,
+            vec![
+                (Phase::Train, Direction::Up, 1000),
+                (Phase::Train, Direction::Up, 1000),
+                (Phase::Eval, Direction::Up, 12)
+            ],
+            "entries must come back in call order"
+        );
+        // Local ledger reversed for link 3, untouched for link 5.
+        assert_eq!(worker.counter(Phase::Train).bytes_up, 777);
+        assert_eq!(worker.counter(Phase::Eval).bytes_up, 0);
+        assert!(worker.take_staged(3).is_empty(), "second take is empty");
+
+        // Replay on the coordinator ledger == direct in-process staging.
+        let coord = SimNet::new(cfg.clone());
+        for (p, d, b) in &taken {
+            coord.stage(*p, *d, 3, *b);
+        }
+        coord.end_tick();
+        let direct = SimNet::new(cfg);
+        direct.stage(Phase::Train, Direction::Up, 3, 1000);
+        direct.stage(Phase::Train, Direction::Up, 3, 1000);
+        direct.stage(Phase::Eval, Direction::Up, 3, 12);
+        direct.end_tick();
+        for phase in [Phase::Train, Phase::Eval] {
+            let a = coord.counter(phase);
+            let b = direct.counter(phase);
+            assert_eq!(a.bytes_up, b.bytes_up);
+            assert_eq!(a.messages, b.messages);
+            assert!((a.sim_secs - b.sim_secs).abs() < 1e-12, "{} vs {}", a.sim_secs, b.sim_secs);
+            assert!((a.concurrent_secs - b.concurrent_secs).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn wire_ledger_counts_frames_and_payload() {
+        let w = WireLedger::new();
+        w.record_payload_frame(Phase::Train, Direction::Down, 500);
+        w.record_frame(Phase::Train, Direction::Up, 142);
+        w.note_payload(Phase::Train, Direction::Up, 100);
+        w.record_frame(Phase::Eval, Direction::Down, 9);
+        let down = w.counter(Phase::Train, Direction::Down);
+        assert_eq!((down.frames, down.bytes, down.payload_bytes), (1, 500, 500));
+        let up = w.counter(Phase::Train, Direction::Up);
+        assert_eq!((up.frames, up.bytes, up.payload_bytes), (1, 142, 100));
+        assert_eq!(w.total_bytes(), 651);
+        assert_eq!(w.total_frames(), 3);
+        assert_eq!(w.counter(Phase::PreTrain, Direction::Up), WireCounter::default());
     }
 
     #[test]

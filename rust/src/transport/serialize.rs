@@ -105,6 +105,13 @@ impl Writer {
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Length-prefixed opaque byte blob (nested documents, e.g. an encoded
+    /// config inside an `Assign` handshake frame).
+    pub fn blob(&mut self, bytes: &[u8]) {
+        self.u32(bytes.len() as u32);
+        self.buf.extend_from_slice(bytes);
+    }
+
     /// Finalize: append the checksum trailer and return the wire bytes.
     pub fn finish(mut self) -> Vec<u8> {
         let sum = fnv1a(&self.buf);
@@ -195,6 +202,11 @@ impl<'a> Reader<'a> {
         let n = self.u32()? as usize;
         let raw = self.take(n)?;
         Ok(String::from_utf8_lossy(raw).into_owned())
+    }
+
+    pub fn blob(&mut self) -> Result<Vec<u8>, WireError> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
     }
 
     pub fn remaining(&self) -> usize {

@@ -1,0 +1,489 @@
+//! TCP transport backend: the multi-process deployment fabric.
+//!
+//! The in-memory [`super::link::ChannelTransport`] moves frames between
+//! threads; this module moves the *same* frames between processes (or
+//! machines) over sockets, so trainer actors can run as `fedgraph worker`
+//! processes — the paper's "scalable deployment across multiple physical
+//! machines" claim made literal.
+//!
+//! ## Socket framing
+//!
+//! Every protocol frame is wrapped in a fixed 16-byte header:
+//!
+//! ```text
+//! | len: u32 LE | client: u32 LE | fnv1a(len‖client‖payload): u64 LE | payload |
+//! ```
+//!
+//! - `len` is the payload length (capped at [`MAX_FRAME_BYTES`] so a
+//!   corrupted length can never trigger an absurd allocation);
+//! - `client` is the lane tag: one worker connection multiplexes all of its
+//!   assigned trainers' duplex lanes ([`CONTROL_LANE`] tags the pre-lane
+//!   `WorkerHello → Assign` handshake);
+//! - the checksum covers the **header fields and** the payload, so line
+//!   corruption anywhere in a frame — including a flipped lane tag, which
+//!   would otherwise silently misroute — surfaces as
+//!   [`WireError::BadChecksum`]/`Truncated`, never a mis-parsed or
+//!   mis-delivered protocol message (the payload carries the wire format's
+//!   *own* trailer too; the frame checksum just fails earlier and cheaper).
+//!
+//! ## Threading
+//!
+//! The coordinator keeps one **reader thread per worker connection**, each
+//! feeding the shared incoming mpsc lane — exactly the shape of the channel
+//! backend, which is what keeps [`super::link::CoordLink::try_recv`]
+//! non-blocking (the async round policy polls it). Workers keep one demux
+//! reader per connection that routes frames to per-client actor mailboxes.
+//! Writes go through [`write_frame`] with exclusive access per direction
+//! (the coordinator owns its write halves; worker actors share one via a
+//! mutex), so frames never interleave.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::link::{CoordLink, Frame, TrainerLink};
+use super::serialize::WireError;
+
+/// Lane tag for pre-rendezvous worker-level control frames
+/// (`WorkerHello` / `Assign`).
+pub const CONTROL_LANE: u32 = u32::MAX;
+
+/// Hard cap on one frame's payload: a corrupted header length fails fast
+/// instead of asking the allocator for gigabytes.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+const HEADER_BYTES: usize = 16;
+
+// ---------------------------------------------------------------------------
+// Pure frame codec (unit- and property-tested without sockets)
+// ---------------------------------------------------------------------------
+
+/// FNV-1a over `len ‖ client ‖ payload` — the frame checksum covers the
+/// header fields too, so a flipped lane tag or length can never pass.
+fn frame_checksum(len: u32, client: u32, payload: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    for b in len.to_le_bytes().into_iter().chain(client.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Encode one socket frame: header + payload.
+pub fn encode_frame(client: u32, payload: &[u8]) -> Vec<u8> {
+    let len = payload.len() as u32;
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&client.to_le_bytes());
+    out.extend_from_slice(&frame_checksum(len, client, payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Decode one socket frame from the front of `buf`. Returns
+/// `(client, payload, bytes consumed)`. Truncated input yields
+/// [`WireError::Truncated`], an oversize length or checksum mismatch
+/// anywhere in the frame (header fields included) yields
+/// [`WireError::BadChecksum`] — never a panic.
+pub fn decode_frame(buf: &[u8]) -> Result<(u32, &[u8], usize), WireError> {
+    if buf.len() < HEADER_BYTES {
+        return Err(WireError::Truncated);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::BadChecksum);
+    }
+    let client = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+    let sum = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let total = HEADER_BYTES + len as usize;
+    if buf.len() < total {
+        return Err(WireError::Truncated);
+    }
+    let payload = &buf[HEADER_BYTES..total];
+    if frame_checksum(len, client, payload) != sum {
+        return Err(WireError::BadChecksum);
+    }
+    Ok((client, payload, total))
+}
+
+/// Write one frame to a stream (single `write_all`, so concurrent writers
+/// holding exclusive access never interleave partial frames).
+pub fn write_frame(w: &mut impl Write, client: u32, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&encode_frame(client, payload))
+}
+
+/// What [`read_frame`] saw on the stream.
+pub enum ReadOutcome {
+    Frame(u32, Vec<u8>),
+    /// Orderly close at a frame boundary.
+    Closed,
+}
+
+/// Read one frame from a stream. EOF at a frame boundary is an orderly
+/// [`ReadOutcome::Closed`]; EOF mid-frame, a bad length, or a checksum
+/// mismatch is an error.
+pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
+    let mut header = [0u8; HEADER_BYTES];
+    // Distinguish orderly close (0 bytes at a boundary) from truncation.
+    let mut got = 0usize;
+    while got < HEADER_BYTES {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(ReadOutcome::Closed),
+            Ok(0) => bail!("wire: {}", WireError::Truncated),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(anyhow!("wire read: {e}")),
+        }
+    }
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        bail!("wire: frame length {len} exceeds cap");
+    }
+    let client = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    let sum = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            anyhow!("wire: {}", WireError::Truncated)
+        } else {
+            anyhow!("wire read: {e}")
+        }
+    })?;
+    if frame_checksum(len, client, &payload) != sum {
+        bail!("wire: {}", WireError::BadChecksum);
+    }
+    Ok(ReadOutcome::Frame(client, payload))
+}
+
+/// Connect with retries (the coordinator may not have bound its listener yet
+/// when a worker starts — normal in multi-process launches).
+pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                s.set_nodelay(true).ok();
+                return Ok(s);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("cannot connect to coordinator at {addr}: {e}");
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+type TaggedFrame = (usize, Result<Frame, String>);
+
+/// Coordinator endpoint over `W` worker connections: per-lane sends routed to
+/// the owning connection's write half; one reader thread per connection feeds
+/// the shared incoming mpsc lane (non-blocking `try_recv` preserved).
+pub struct TcpCoord {
+    writers: Vec<TcpStream>,
+    /// client index → connection index.
+    conn_of: Vec<usize>,
+    up: Receiver<TaggedFrame>,
+    readers: Vec<JoinHandle<()>>,
+}
+
+/// Build the coordinator link from handshaken worker connections.
+/// `conns[k] = (stream, clients assigned to worker k)`; every client in
+/// `0..n` must be covered exactly once.
+pub fn coord_link(conns: Vec<(TcpStream, Vec<u32>)>, n: usize) -> Result<Box<dyn CoordLink>> {
+    let mut conn_of = vec![usize::MAX; n];
+    for (k, (_, clients)) in conns.iter().enumerate() {
+        for &c in clients {
+            let c = c as usize;
+            if c >= n || conn_of[c] != usize::MAX {
+                bail!("bad worker assignment: client {c} (n={n})");
+            }
+            conn_of[c] = k;
+        }
+    }
+    if let Some(missing) = conn_of.iter().position(|&k| k == usize::MAX) {
+        bail!("client {missing} is not assigned to any worker connection");
+    }
+    let (up_tx, up_rx) = channel::<TaggedFrame>();
+    let mut writers = Vec::with_capacity(conns.len());
+    let mut readers = Vec::new();
+    for (k, (stream, clients)) in conns.into_iter().enumerate() {
+        stream.set_nodelay(true).ok();
+        let mut read_half = stream.try_clone().map_err(|e| anyhow!("clone conn {k}: {e}"))?;
+        writers.push(stream);
+        let tx = up_tx.clone();
+        let first_client = clients.first().copied().unwrap_or(0) as usize;
+        let handle = std::thread::Builder::new()
+            .name(format!("fed-tcp-reader-{k}"))
+            .spawn(move || loop {
+                match read_frame(&mut read_half) {
+                    Ok(ReadOutcome::Frame(client, payload)) => {
+                        if tx.send((client as usize, Ok(payload.into()))).is_err() {
+                            return; // coordinator gone
+                        }
+                    }
+                    Ok(ReadOutcome::Closed) => return,
+                    Err(e) => {
+                        // Surface line corruption as a trainer failure so the
+                        // coordinator aborts with a clear error instead of
+                        // waiting on a frame that will never arrive.
+                        let _ = tx.send((first_client, Err(format!("{e:#}"))));
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawning tcp reader {k}: {e}"))?;
+        readers.push(handle);
+    }
+    Ok(Box::new(TcpCoord { writers, conn_of, up: up_rx, readers }))
+}
+
+impl CoordLink for TcpCoord {
+    fn send(&mut self, client: usize, frame: Frame) -> Result<()> {
+        let &conn = self
+            .conn_of
+            .get(client)
+            .ok_or_else(|| anyhow!("no such trainer {client}"))?;
+        write_frame(&mut self.writers[conn], client as u32, &frame)
+            .map_err(|_| anyhow!("trainer {client} hung up"))
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame)> {
+        match self.up.recv() {
+            Ok((from, Ok(frame))) => Ok((from, frame)),
+            Ok((from, Err(e))) => Err(anyhow!("worker connection of trainer {from}: {e}")),
+            Err(_) => Err(anyhow!("all trainers hung up")),
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<(usize, Frame)>> {
+        match self.up.try_recv() {
+            Ok((from, Ok(frame))) => Ok(Some((from, frame))),
+            Ok((from, Err(e))) => Err(anyhow!("worker connection of trainer {from}: {e}")),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("all trainers hung up")),
+        }
+    }
+}
+
+impl Drop for TcpCoord {
+    fn drop(&mut self) {
+        // FIN both directions so worker demux readers unblock, then collect
+        // our own readers (they exit on the workers' FIN or ours).
+        for w in &self.writers {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Trainer endpoint inside a worker process: sends tag frames with the
+/// client index and share the connection's write half; receives come from the
+/// demux reader's per-client mailbox.
+pub struct TcpTrainer {
+    client: u32,
+    writer: Arc<Mutex<TcpStream>>,
+    down: Receiver<Frame>,
+}
+
+impl TrainerLink for TcpTrainer {
+    fn send(&mut self, frame: Frame) -> Result<()> {
+        let mut w = self.writer.lock().unwrap();
+        write_frame(&mut *w, self.client, &frame).map_err(|_| anyhow!("coordinator hung up"))
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        self.down.recv().map_err(|_| anyhow!("coordinator hung up"))
+    }
+}
+
+/// Build one [`TrainerLink`] per assigned client over a handshaken worker
+/// connection, plus the demux reader thread handle. The caller keeps the
+/// original stream to `shutdown` it when the session ends.
+pub fn worker_links(
+    stream: &TcpStream,
+    clients: &[usize],
+) -> Result<(Vec<Box<dyn TrainerLink>>, JoinHandle<()>)> {
+    stream.set_nodelay(true).ok();
+    let writer = Arc::new(Mutex::new(stream.try_clone().map_err(|e| anyhow!("clone: {e}"))?));
+    let mut read_half = stream.try_clone().map_err(|e| anyhow!("clone: {e}"))?;
+    let mut senders: std::collections::HashMap<u32, Sender<Frame>> =
+        std::collections::HashMap::new();
+    let mut links: Vec<Box<dyn TrainerLink>> = Vec::with_capacity(clients.len());
+    for &c in clients {
+        let (tx, rx) = channel::<Frame>();
+        senders.insert(c as u32, tx);
+        links.push(Box::new(TcpTrainer {
+            client: c as u32,
+            writer: writer.clone(),
+            down: rx,
+        }));
+    }
+    let reader = std::thread::Builder::new()
+        .name("fed-tcp-demux".to_string())
+        .spawn(move || loop {
+            match read_frame(&mut read_half) {
+                Ok(ReadOutcome::Frame(client, payload)) => {
+                    match senders.get(&client) {
+                        // A dropped receiver means that actor already exited;
+                        // remaining actors keep their lanes.
+                        Some(tx) => {
+                            let _ = tx.send(payload.into());
+                        }
+                        None => eprintln!("fedgraph worker: frame for unassigned lane {client}"),
+                    }
+                }
+                Ok(ReadOutcome::Closed) => return, // coordinator done; senders drop
+                Err(e) => {
+                    eprintln!("fedgraph worker: wire error, closing lanes: {e:#}");
+                    return;
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning worker demux reader: {e}"))?;
+    Ok((links, reader))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn frame_codec_roundtrip() {
+        for payload in [&b""[..], &b"x"[..], &[0xAB; 1000][..]] {
+            let bytes = encode_frame(7, payload);
+            let (client, got, used) = decode_frame(&bytes).unwrap();
+            assert_eq!(client, 7);
+            assert_eq!(got, payload);
+            assert_eq!(used, bytes.len());
+        }
+        // Two frames back to back parse sequentially.
+        let mut buf = encode_frame(1, b"first");
+        buf.extend_from_slice(&encode_frame(2, b"second"));
+        let (c1, p1, used) = decode_frame(&buf).unwrap();
+        assert_eq!((c1, p1), (1, &b"first"[..]));
+        let (c2, p2, _) = decode_frame(&buf[used..]).unwrap();
+        assert_eq!((c2, p2), (2, &b"second"[..]));
+    }
+
+    #[test]
+    fn frame_codec_rejects_corruption_and_truncation() {
+        let bytes = encode_frame(3, b"payload-bytes");
+        for cut in [0, 5, HEADER_BYTES, bytes.len() - 1] {
+            assert!(
+                matches!(decode_frame(&bytes[..cut]), Err(WireError::Truncated)),
+                "cut at {cut} must be Truncated"
+            );
+        }
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_BYTES + 2] ^= 0x40; // payload flip
+        assert!(matches!(decode_frame(&corrupt), Err(WireError::BadChecksum)));
+        // A flipped lane tag must fail the checksum, not silently misroute.
+        let mut misrouted = bytes.clone();
+        misrouted[4] ^= 0x01;
+        assert!(matches!(decode_frame(&misrouted), Err(WireError::BadChecksum)));
+        let mut oversize = bytes;
+        oversize[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&oversize).is_err());
+    }
+
+    #[test]
+    fn stream_reader_detects_orderly_close_vs_truncation() {
+        let bytes = encode_frame(1, b"hello");
+        let mut full: &[u8] = &bytes;
+        match read_frame(&mut full).unwrap() {
+            ReadOutcome::Frame(c, p) => {
+                assert_eq!(c, 1);
+                assert_eq!(p, b"hello");
+            }
+            ReadOutcome::Closed => panic!("frame expected"),
+        }
+        // Clean EOF at the boundary.
+        assert!(matches!(read_frame(&mut full).unwrap(), ReadOutcome::Closed));
+        // EOF mid-frame is an error.
+        let mut cut: &[u8] = &bytes[..bytes.len() - 2];
+        assert!(read_frame(&mut cut).is_err());
+    }
+
+    #[test]
+    fn loopback_lanes_roundtrip_and_preserve_fifo() {
+        // 1 worker hosting clients {0, 1}; coordinator on the other side.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let worker_stream = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (coord_stream, _) = listener.accept().unwrap();
+        let worker_stream = worker_stream.join().unwrap();
+
+        let mut coord = coord_link(vec![(coord_stream, vec![0, 1])], 2).unwrap();
+        let (mut links, demux) = worker_links(&worker_stream, &[0, 1]).unwrap();
+
+        // Coordinator → per-client lanes, FIFO per lane.
+        coord.send(0, b"a0".to_vec().into()).unwrap();
+        coord.send(0, b"a1".to_vec().into()).unwrap();
+        coord.send(1, b"b0".to_vec().into()).unwrap();
+        assert_eq!(&*links[0].recv().unwrap(), b"a0");
+        assert_eq!(&*links[0].recv().unwrap(), b"a1");
+        assert_eq!(&*links[1].recv().unwrap(), b"b0");
+
+        // Trainer → coordinator with source tagging.
+        links[1].send(b"up1".to_vec().into()).unwrap();
+        let (from, frame) = coord.recv().unwrap();
+        assert_eq!(from, 1);
+        assert_eq!(&*frame, b"up1");
+
+        // try_recv polls without blocking.
+        assert!(coord.try_recv().unwrap().is_none());
+        links[0].send(b"up0".to_vec().into()).unwrap();
+        // The frame takes a moment to cross the socket + reader thread.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some((from, frame)) = coord.try_recv().unwrap() {
+                assert_eq!(from, 0);
+                assert_eq!(&*frame, b"up0");
+                break;
+            }
+            assert!(Instant::now() < deadline, "try_recv never saw the frame");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // Orderly teardown: dropping the coordinator FINs the socket and the
+        // worker demux exits; trainer recv reports the coordinator gone.
+        drop(coord);
+        demux.join().unwrap();
+        assert!(links[0].recv().is_err());
+        let _ = worker_stream.shutdown(Shutdown::Both);
+    }
+
+    #[test]
+    fn coord_link_rejects_bad_assignments() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (s, _) = listener.accept().unwrap();
+        let _client = t.join().unwrap();
+        // Client 1 missing.
+        assert!(coord_link(vec![(s, vec![0])], 2).is_err());
+    }
+}

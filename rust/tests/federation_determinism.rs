@@ -120,6 +120,74 @@ fn lp_parallel_matches_sequential() {
 }
 
 #[test]
+fn tcp_deployment_is_bitwise_identical_to_channel() {
+    // The deployment-layer acceptance bar over the real engine: the same NC
+    // experiment run in-process and over TCP (two loopback workers that
+    // rebuild the session from the shipped config, exactly what `fedgraph
+    // worker` does) must produce bitwise-identical params and accuracy, and
+    // identical simulated byte ledgers — including the actor-staged BNS-style
+    // eval metric traffic, which remote actors ship in their envelopes.
+    use fedgraph::config::TransportKind;
+    use fedgraph::coordinator::build_session;
+    use fedgraph::federation::worker;
+    use fedgraph::monitor::Monitor;
+    use fedgraph::transport::SimNet;
+    use std::sync::Arc;
+
+    // Pick a free loopback port (bind 0, read it back, release) so parallel
+    // test runs on one host never cross-connect.
+    let addr = {
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let eng = engine();
+    let mut cfg =
+        FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+    cfg.scale = 0.15;
+    cfg.n_trainer = 4;
+    cfg.global_rounds = 4;
+    cfg.local_steps = 2;
+    cfg.learning_rate = 0.3;
+    cfg.eval_every = 2;
+    let chan = run(&cfg, &eng);
+
+    cfg.federation.transport = TransportKind::Tcp;
+    cfg.federation.listen_addr = addr.clone();
+    cfg.federation.workers = 2;
+    let mut workers = Vec::new();
+    for _ in 0..2 {
+        let worker_engine = engine();
+        let addr = addr.clone();
+        workers.push(std::thread::spawn(move || {
+            let assignment = worker::connect(&addr, std::time::Duration::from_secs(60))
+                .expect("worker connects");
+            let monitor =
+                Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
+            let blueprint = build_session(&assignment.cfg, &worker_engine, &monitor)
+                .expect("worker rebuilds the session");
+            worker::serve(assignment, blueprint, monitor.net.clone())
+                .expect("worker serves to completion");
+            worker_engine.shutdown();
+        }));
+    }
+    let tcp = run(&cfg, &eng);
+    for w in workers {
+        w.join().expect("worker thread exits cleanly");
+    }
+    assert_eq!(
+        param_checksum(&chan),
+        param_checksum(&tcp),
+        "TCP deployment must reproduce the in-process run bitwise"
+    );
+    assert_eq!(chan.final_accuracy, tcp.final_accuracy);
+    assert_eq!(chan.pretrain_bytes, tcp.pretrain_bytes);
+    assert_eq!(chan.train_bytes, tcp.train_bytes, "simulated ledgers must agree");
+    assert_eq!(tcp.transport, "tcp");
+    assert!(tcp.wire_bytes() > 0, "measured wire bytes are reported");
+    eng.shutdown();
+}
+
+#[test]
 fn dropout_reduces_comm_and_stays_deterministic() {
     let eng = engine();
     let mut cfg =

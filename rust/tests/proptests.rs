@@ -4,6 +4,8 @@
 //! scheme's linearity. No artifacts required.
 
 use fedgraph::config::SamplingType;
+use fedgraph::transport::serialize::WireError;
+use fedgraph::transport::tcp::{decode_frame, encode_frame};
 use fedgraph::coordinator::selection::select_clients;
 use fedgraph::graph::{
     block_from_induced, build_local_graphs, dirichlet_partition, neighbor_feature_sums,
@@ -144,6 +146,89 @@ fn prop_wire_format_roundtrip() {
             corrupted[pos] ^= bit;
             assert!(decode_params(&corrupted).is_err(), "corruption at byte {pos} undetected");
         }
+    });
+}
+
+#[test]
+fn prop_wire_format_truncation_never_panics_or_passes() {
+    // Any strict prefix of a valid payload frame must decode to an error —
+    // Truncated when the checksum trailer can't even be read, otherwise a
+    // checksum mismatch — and never a panic or a silently-accepted frame.
+    prop_check("wire-truncation", 50, |rng| {
+        let tensors: Vec<Vec<f32>> =
+            (0..rng.range(1, 4)).map(|_| gen::f32_vec(rng, rng.range(0, 200), 1e5)).collect();
+        let bytes = encode_params(&tensors);
+        let cut = rng.below(bytes.len());
+        let err = decode_params(&bytes[..cut]).expect_err("truncated frame must not decode");
+        assert!(
+            matches!(err, WireError::Truncated | WireError::BadChecksum),
+            "unexpected truncation error class: {err}"
+        );
+    });
+}
+
+#[test]
+fn prop_tcp_frame_roundtrip_and_corruption() {
+    // The multi-process socket framing: header + FNV-checksummed payload.
+    prop_check("tcp-frame", 60, |rng| {
+        let client = rng.next_u64() as u32;
+        let len = rng.range(0, 4096);
+        let payload: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let frame = encode_frame(client, &payload);
+        let (c, p, used) = decode_frame(&frame).unwrap();
+        assert_eq!(c, client);
+        assert_eq!(p, &payload[..]);
+        assert_eq!(used, frame.len());
+
+        // Truncation at any boundary errors, never panics.
+        let cut = rng.below(frame.len());
+        assert!(decode_frame(&frame[..cut]).is_err(), "cut at {cut} must not decode");
+
+        // A single-bit flip ANYWHERE in the frame — length, lane tag,
+        // checksum trailer, or payload — must yield Truncated/BadChecksum
+        // (the frame checksum covers the header fields, so a flipped lane
+        // tag can never silently misroute). Never a panic, never accepted.
+        let mut corrupted = frame.clone();
+        let pos = rng.below(frame.len());
+        corrupted[pos] ^= 1u8 << rng.below(8);
+        let err =
+            decode_frame(&corrupted).expect_err("corrupted frame must not decode");
+        assert!(
+            matches!(err, WireError::Truncated | WireError::BadChecksum),
+            "corruption at {pos} gave unexpected error class: {err}"
+        );
+    });
+}
+
+#[test]
+fn prop_protocol_frames_reject_random_corruption() {
+    // Protocol messages ride the same checksummed wire format: flipping any
+    // bit of an encoded frame must yield a decode error, never a mis-parse.
+    use fedgraph::federation::protocol::{DownMsg, UpMsg};
+    prop_check("protocol-corruption", 40, |rng| {
+        let down = DownMsg::SetModel {
+            round: rng.next_u64() as u32,
+            version: rng.next_u64() as u32,
+            values: vec![gen::f32_vec(rng, rng.range(1, 64), 10.0)],
+        }
+        .encode();
+        let mut corrupted = down.clone();
+        let pos = rng.below(corrupted.len());
+        corrupted[pos] ^= 1u8 << rng.below(8);
+        assert!(DownMsg::decode(&corrupted).is_err());
+
+        let up = UpMsg::Metric {
+            client: rng.next_u64() as u32,
+            round: rng.next_u64() as u32,
+            num: rng.f64(),
+            den: rng.f64(),
+            staged: Vec::new(),
+        }
+        .encode();
+        let mut corrupted = up.clone();
+        let pos = rng.below(corrupted.len());
+        corrupted[pos] ^= 1u8 << rng.below(8);
+        assert!(UpMsg::decode(&corrupted).is_err());
     });
 }
 
