@@ -29,10 +29,13 @@ cargo fmt --check
 echo "==> cargo clippy --all-targets -- -D warnings   (includes federation + coordinator)"
 cargo clippy --all-targets -- -D warnings
 
+echo "==> cargo doc --no-deps   (rustdoc gate: module docs + intra-doc links)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
 echo "==> engine-free scheduler tests (round policies, staleness, waste ledger)"
 cargo test -q --lib federation::
 
-echo "==> engine-free transport tests (wire format, tcp framing, measured wire ledger)"
+echo "==> engine-free transport tests (wire format, upload codecs, tcp framing, wire ledger)"
 cargo test -q --lib transport::
 
 echo "==> engine-free deployment tests (tcp loopback == channel, handshake, config codec)"

@@ -24,12 +24,20 @@
 //! admits stragglers late (re-weighted by staleness) or rejects them beyond
 //! the bound (ledgered as waste). Reported: wall clock, bytes, waste, and
 //! accuracy for both modes.
+//!
+//! Since the wire-codec layer a third table compares the **upload
+//! compression modes** (`federation.compression: none | pack | quantized`):
+//! wall clock, simulated bytes, measured wire payload vs logical bytes with
+//! the resulting compression ratio, and accuracy. `pack` is lossless —
+//! identical accuracy and simulated bytes, smaller measured wire; `quantized`
+//! (int8 deltas + error feedback) also cuts the *simulated* upload bytes at
+//! a small accuracy cost — the new accuracy-vs-bytes axis.
 
 #[path = "bench_common.rs"]
 mod common;
 
 use common::*;
-use fedgraph::config::{FedGraphConfig, FederationMode, Method};
+use fedgraph::config::{CompressionMode, FedGraphConfig, FederationMode, Method};
 use fedgraph::util::tables::Table;
 
 fn arxiv_cfg(clients: usize, r: usize) -> FedGraphConfig {
@@ -146,4 +154,42 @@ fn main() {
         ]);
     }
     println!("{}", tbl2.render());
+
+    // ---- compression study: upload wire path none | pack | quantized ------
+    let mut tbl3 = Table::new(&[
+        "clients",
+        "codec",
+        "wall s",
+        "sim MB",
+        "wire payload MB",
+        "logical MB",
+        "ratio",
+        "accuracy",
+    ])
+    .with_title("Upload compression: simulated vs measured wire bytes");
+    for clients in [10usize, 100] {
+        for codec in [
+            CompressionMode::None,
+            CompressionMode::Pack,
+            CompressionMode::Quantized { bits: 8, error_feedback: true },
+        ] {
+            let mut cfg = arxiv_cfg(clients, r);
+            cfg.federation.max_concurrency = 0;
+            cfg.federation.compression = codec;
+            let t0 = std::time::Instant::now();
+            let rep = run(&cfg, &eng);
+            let wall = t0.elapsed().as_secs_f64();
+            tbl3.row(&[
+                clients.to_string(),
+                codec.name().to_string(),
+                secs(wall),
+                mb(rep.total_bytes()),
+                mb(rep.wire_payload_bytes()),
+                mb(rep.wire_logical_bytes()),
+                format!("{:.2}", rep.wire_compression_ratio()),
+                format!("{:.4}", rep.final_accuracy),
+            ]);
+        }
+    }
+    println!("{}", tbl3.render());
 }

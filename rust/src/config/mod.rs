@@ -187,6 +187,56 @@ impl FederationMode {
     }
 }
 
+/// Upload wire codec (`federation.compression`): how model updates are
+/// encoded before they cross a transport. See `docs/CONFIG.md` and
+/// `docs/WIRE_FORMAT.md` for the full semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressionMode {
+    /// Ship plaintext f32 values unchanged (default).
+    None,
+    /// Lossless: delta-encode the upload against the version-stamped
+    /// broadcast the client trained from, then byte-plane pack the delta
+    /// (XOR planes + zero-RLE). Bitwise-transparent — params, accuracy and
+    /// the SimNet ledger are identical to `none`; only measured wire bytes
+    /// shrink.
+    Pack,
+    /// Lossy, opt-in: per-chunk affine int8/int4 quantization of the upload
+    /// delta with deterministic dequantization and (by default) client-side
+    /// error-feedback residuals. Pairs with plaintext/DP uploads only —
+    /// ciphertexts cannot be delta-quantized (validated).
+    Quantized { bits: u8, error_feedback: bool },
+}
+
+impl CompressionMode {
+    pub fn parse(s: &str) -> Result<CompressionMode> {
+        match s.trim().to_lowercase().as_str() {
+            "none" | "off" => Ok(CompressionMode::None),
+            "pack" => Ok(CompressionMode::Pack),
+            "quantized" | "quantize" | "quant" => {
+                Ok(CompressionMode::Quantized { bits: 8, error_feedback: true })
+            }
+            other => bail!(
+                "federation.compression must be 'none', 'pack' or 'quantized', got '{other}'"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressionMode::None => "none",
+            CompressionMode::Pack => "pack",
+            CompressionMode::Quantized { .. } => "quantized",
+        }
+    }
+
+    /// Whether decoding an upload under this codec needs the broadcast it
+    /// was trained from (the coordinator keeps a version-keyed window of
+    /// recent broadcasts when true).
+    pub fn needs_base(&self) -> bool {
+        !matches!(self, CompressionMode::None)
+    }
+}
+
 /// Which transport backend carries the federation's protocol frames — i.e.
 /// where the trainer actors live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -269,6 +319,12 @@ pub struct FederationConfig {
     /// milliseconds, injected into local training to model heterogeneous
     /// hardware. `0.0` disables stragglers.
     pub straggler_ms: f64,
+    /// Upload wire codec: `none` (raw f32 frames), `pack` (lossless
+    /// delta + byte-plane packing, bitwise-transparent), or `quantized`
+    /// (lossy int8/int4 delta quantization with error feedback; plaintext/DP
+    /// sessions only). The YAML keys `quantized_bits` and `error_feedback`
+    /// refine the quantized mode.
+    pub compression: CompressionMode,
 }
 
 impl Default for FederationConfig {
@@ -284,6 +340,7 @@ impl Default for FederationConfig {
             max_concurrency: 0,
             dropout_frac: 0.0,
             straggler_ms: 0.0,
+            compression: CompressionMode::None,
         }
     }
 }
@@ -533,6 +590,20 @@ impl FedGraphConfig {
         if let Some(v) = fed.get("straggler_ms").as_f64() {
             cfg.federation.straggler_ms = v;
         }
+        if let Some(s) = fed.get("compression").as_str() {
+            cfg.federation.compression = CompressionMode::parse(s)?;
+        }
+        if let CompressionMode::Quantized { mut bits, mut error_feedback } =
+            cfg.federation.compression
+        {
+            if let Some(v) = fed.get("quantized_bits").as_usize() {
+                bits = v as u8;
+            }
+            if let Some(b) = fed.get("error_feedback").as_bool() {
+                error_feedback = b;
+            }
+            cfg.federation.compression = CompressionMode::Quantized { bits, error_feedback };
+        }
         // Network block.
         let net = y.get("network");
         if let Some(v) = net.get("bandwidth_gbps").as_f64() {
@@ -583,6 +654,21 @@ impl FedGraphConfig {
             }
             if self.federation.listen_addr.is_empty() {
                 bail!("federation.transport: tcp needs a federation.listen_addr");
+            }
+        }
+        if let CompressionMode::Quantized { bits, .. } = self.federation.compression {
+            if bits != 4 && bits != 8 {
+                bail!(
+                    "federation.quantized_bits must be 4 or 8, got {bits} (the codec ships \
+                     nibble- or byte-wide codes)"
+                );
+            }
+            if self.uses_he() {
+                bail!(
+                    "federation.compression: quantized requires plaintext or DP uploads — \
+                     CKKS ciphertexts cannot be delta-quantized (use 'pack'-free HE, or drop \
+                     use_encryption)"
+                );
             }
         }
         if self.federation.mode == FederationMode::Async {
@@ -675,6 +761,23 @@ impl FedGraphConfig {
         w.u64(f.max_concurrency as u64);
         w.f64(f.dropout_frac);
         w.f64(f.straggler_ms);
+        match f.compression {
+            CompressionMode::None => {
+                w.u8(0);
+                w.u8(0);
+                w.u8(0);
+            }
+            CompressionMode::Pack => {
+                w.u8(1);
+                w.u8(0);
+                w.u8(0);
+            }
+            CompressionMode::Quantized { bits, error_feedback } => {
+                w.u8(2);
+                w.u8(bits);
+                w.u8(error_feedback as u8);
+            }
+        }
         w.f64(self.network.bandwidth_gbps);
         w.f64(self.network.latency_ms);
         w.u64(self.seed);
@@ -756,6 +859,17 @@ impl FedGraphConfig {
             cfg.federation.max_concurrency = r.u64()? as usize;
             cfg.federation.dropout_frac = r.f64()?;
             cfg.federation.straggler_ms = r.f64()?;
+            cfg.federation.compression = {
+                let mode = r.u8()?;
+                let bits = r.u8()?;
+                let error_feedback = r.u8()? != 0;
+                match mode {
+                    0 => CompressionMode::None,
+                    1 => CompressionMode::Pack,
+                    2 => CompressionMode::Quantized { bits, error_feedback },
+                    t => return Err(WireError::BadTag(t)),
+                }
+            };
             cfg.network.bandwidth_gbps = r.f64()?;
             cfg.network.latency_ms = r.f64()?;
             cfg.seed = r.u64()?;
@@ -778,8 +892,9 @@ impl FedGraphConfig {
 
 /// Bumped whenever [`FedGraphConfig::encode_wire`] changes shape, so a
 /// mismatched coordinator/worker pair fails the handshake loudly instead of
-/// mis-parsing.
-pub const CONFIG_WIRE_VERSION: u8 = 1;
+/// mis-parsing. v2: `federation.compression` (upload codec) joined the
+/// federation block.
+pub const CONFIG_WIRE_VERSION: u8 = 2;
 
 fn task_code(t: Task) -> u8 {
     match t {
@@ -993,6 +1108,82 @@ federation:
              federation:\n  mode: async\n"
         )
         .is_ok());
+    }
+
+    #[test]
+    fn parses_compression_block_and_validates() {
+        // Default is none.
+        let plain =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        assert_eq!(plain.federation.compression, CompressionMode::None);
+        // pack.
+        let cfg = FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: pack\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.compression, CompressionMode::Pack);
+        // quantized with refinements.
+        let cfg = FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: quantized\n  quantized_bits: 4\n  error_feedback: false\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.federation.compression,
+            CompressionMode::Quantized { bits: 4, error_feedback: false }
+        );
+        // quantized defaults: int8 with error feedback.
+        let cfg = FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: quantized\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.federation.compression,
+            CompressionMode::Quantized { bits: 8, error_feedback: true }
+        );
+        // Unknown codec name rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: gzip\n"
+        )
+        .is_err());
+        // Bad bit width rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: quantized\n  quantized_bits: 7\n"
+        )
+        .is_err());
+        // quantized × HE rejected (quantization pairs with plaintext/DP only).
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_encryption: true\nfederation:\n  compression: quantized\n"
+        )
+        .is_err());
+        // pack × HE is allowed: the codec simply never sees a ciphertext
+        // upload (HE payloads bypass the plaintext codec path).
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_encryption: true\nfederation:\n  compression: pack\n"
+        )
+        .is_ok());
+        // quantized × DP and quantized × async are fine.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_dp: true\nfederation:\n  mode: async\n  compression: quantized\n"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn compression_modes_roundtrip_the_wire_codec() {
+        let mut cfg =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        for mode in [
+            CompressionMode::None,
+            CompressionMode::Pack,
+            CompressionMode::Quantized { bits: 4, error_feedback: false },
+            CompressionMode::Quantized { bits: 8, error_feedback: true },
+        ] {
+            cfg.federation.compression = mode;
+            let bytes = cfg.encode_wire();
+            let back = FedGraphConfig::decode_wire(&bytes).unwrap();
+            assert_eq!(back.federation.compression, mode);
+            assert_eq!(back.encode_wire(), bytes);
+        }
     }
 
     #[test]

@@ -25,20 +25,90 @@
 //! actor caches its last broadcast `(version, values)`; `ModelVersion`
 //! re-adopts that cache without any payload crossing the wire, and every
 //! update is stamped with the version of the model it was trained from.
+//!
+//! **Encode-on-upload.** The cached broadcast doubles as the *codec base*:
+//! under `federation.compression: pack` the actor ships its upload as a
+//! lossless XOR-delta against that broadcast, and under `quantized` as an
+//! int8/int4 quantized delta with a client-side **error-feedback residual**
+//! (the quantization error of each round is added back into the next round's
+//! delta before quantizing, so the error does not accumulate). The
+//! coordinator holds the same version-stamped broadcasts and reverses the
+//! codec before aggregating — see `docs/WIRE_FORMAT.md`.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::config::CompressionMode;
 use crate::he::{gaussian_mechanism, CkksContext, DpParams};
 use crate::runtime::ParamSet;
 use crate::transport::link::TrainerLink;
+use crate::transport::serialize::{pack_delta, quantize_delta};
 use crate::transport::SimNet;
 use crate::util::rng::{hash_f32, Rng};
 use crate::util::sync::Semaphore;
 use crate::util::timer::timed;
 
 use super::protocol::{DownMsg, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload};
+
+fn flatten_values(values: &[Vec<f32>]) -> Vec<f32> {
+    let total: usize = values.iter().map(|v| v.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for v in values {
+        out.extend_from_slice(v);
+    }
+    out
+}
+
+/// Encode an upload's **flattened** plaintext (or DP-noised) values under an
+/// active codec: `pack` losslessly delta-packs against the cached
+/// broadcast's flattened values, `quantized` ships a quantized delta
+/// (folding in and refreshing the error-feedback residual). Callers dispatch
+/// `compression: none` to a `Plain` payload themselves (no flattening
+/// needed); HE uploads never reach this function — ciphertexts bypass the
+/// plaintext codec path. Any defensive fallback here must stay decodable and
+/// must never panic (a panic outside the actor's catch_unwind would hang the
+/// coordinator).
+fn encode_flat_upload(
+    flat: &[f32],
+    codec: CompressionMode,
+    base_flat: &[f32],
+    residual: &mut Vec<f32>,
+) -> UpdatePayload {
+    match codec {
+        // `None` is unreachable by construction; degrading it to the
+        // lossless packed form keeps this total without a panic path.
+        CompressionMode::None | CompressionMode::Pack => {
+            UpdatePayload::Packed { blob: pack_delta(flat, base_flat) }
+        }
+        CompressionMode::Quantized { bits, error_feedback } => {
+            if flat.len() != base_flat.len() {
+                // Shapes are pinned by the SetModel validation; a mismatch
+                // degrades to the (length-safe) lossless packed form.
+                return UpdatePayload::Packed { blob: pack_delta(flat, base_flat) };
+            }
+            let mut delta: Vec<f32> = flat.iter().zip(base_flat).map(|(u, b)| u - b).collect();
+            if error_feedback {
+                if residual.len() != delta.len() {
+                    *residual = vec![0.0; delta.len()];
+                }
+                for (d, r) in delta.iter_mut().zip(residual.iter()) {
+                    *d += r;
+                }
+            }
+            let (blob, dequant) = quantize_delta(&delta, bits);
+            if error_feedback {
+                // What the coordinator will reconstruct is `dequant` exactly
+                // (deterministic dequantization), so this residual is the
+                // true wire error carried into the next round.
+                for ((r, d), q) in residual.iter_mut().zip(&delta).zip(&dequant) {
+                    *r = d - q;
+                }
+            }
+            UpdatePayload::Quantized { blob }
+        }
+    }
+}
 
 /// Render a panic payload into a `Failed` message body.
 fn panic_text(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -100,6 +170,9 @@ pub struct ActorSetup {
     /// round's deterministic per-client fraction of it.
     pub straggler_ms: f64,
     pub straggler_seed: u64,
+    /// Upload wire codec (`federation.compression`), applied to plaintext/DP
+    /// payloads right before they are framed.
+    pub codec: CompressionMode,
     /// Remote deployments only (`Some` in worker processes): the
     /// worker-local staging ledger the task logic writes to
     /// ([`SimNet::with_stage_log`]). After each train/eval the actor drains
@@ -121,6 +194,7 @@ pub fn actor_main(setup: ActorSetup) {
         mut rng,
         straggler_ms,
         straggler_seed,
+        codec,
         remote_net,
     } = setup;
     // Drain this actor's staged simulated traffic (remote mode; empty
@@ -137,9 +211,18 @@ pub fn actor_main(setup: ActorSetup) {
     };
     let mut model = init;
     // Version of the last coordinator broadcast this client trained from,
-    // plus a cached copy of that broadcast for `ModelVersion` re-adoption.
+    // plus a cached copy of that broadcast for `ModelVersion` re-adoption
+    // (which doubles as the upload codec's delta base).
     let mut model_version: u32 = 0;
     let mut cached_broadcast: (u32, Vec<Vec<f32>>) = (0, model.values.clone());
+    // Flattened copy of the cached broadcast — the upload codec's delta
+    // base, refreshed once per SetModel instead of once per upload
+    // (maintained only while a codec is active).
+    let mut cached_base_flat: Vec<f32> =
+        if codec.needs_base() { flatten_values(&model.values) } else { Vec::new() };
+    // Error-feedback residual of the quantized upload codec (empty until the
+    // first quantized upload sizes it).
+    let mut residual: Vec<f32> = Vec::new();
     let cid = client as u32;
     loop {
         let frame = match link.recv() {
@@ -198,6 +281,9 @@ pub fn actor_main(setup: ActorSetup) {
                 cached_broadcast = (version, values.clone());
                 model.values = values;
                 model_version = version;
+                if codec.needs_base() {
+                    cached_base_flat = flatten_values(&cached_broadcast.1);
+                }
             }
             DownMsg::ModelVersion { version } => {
                 if cached_broadcast.0 != version {
@@ -245,18 +331,34 @@ pub fn actor_main(setup: ActorSetup) {
                             UpdatePayload::None
                         } else {
                             match &privacy {
-                                PrivacyEngine::Plain => {
-                                    UpdatePayload::Plain(up.params.values.clone())
-                                }
+                                PrivacyEngine::Plain => match codec {
+                                    CompressionMode::None => {
+                                        UpdatePayload::Plain(up.params.values.clone())
+                                    }
+                                    _ => encode_flat_upload(
+                                        &up.params.flatten(),
+                                        codec,
+                                        &cached_base_flat,
+                                        &mut residual,
+                                    ),
+                                },
                                 PrivacyEngine::Dp(dp) => {
                                     let mut flat = up.params.flatten();
                                     let (_, secs) = timed(|| {
                                         gaussian_mechanism(&mut flat, dp, &mut rng);
                                     });
                                     privacy_secs = secs;
-                                    UpdatePayload::Plain(
-                                        up.params.unflatten_from(&flat).values,
-                                    )
+                                    match codec {
+                                        CompressionMode::None => UpdatePayload::Plain(
+                                            up.params.unflatten_from(&flat).values,
+                                        ),
+                                        _ => encode_flat_upload(
+                                            &flat,
+                                            codec,
+                                            &cached_base_flat,
+                                            &mut residual,
+                                        ),
+                                    }
                                 }
                                 PrivacyEngine::He { ctx, max_dim } => {
                                     let mut flat = up.params.flatten();

@@ -37,7 +37,7 @@ use crate::util::rng::{hash_u64, Rng};
 use crate::util::sync::Semaphore;
 
 use super::actor::{actor_main, ActorSetup, ClientLogic, PrivacyEngine};
-use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION};
+use super::protocol::{required_codec_bit, DownMsg, UpMsg, PROTOCOL_VERSION};
 
 /// Everything a deployment needs to host one federation session's trainers:
 /// the public initial model, the static per-client aggregation weights, the
@@ -169,6 +169,7 @@ pub(crate) fn actor_setup(
         rng: Rng::seeded(hash_u64(cfg.seed, 0xAC70_12, client as u64)),
         straggler_ms: cfg.federation.straggler_ms,
         straggler_seed: cfg.seed ^ 0x57A6_61,
+        codec: cfg.federation.compression,
         remote_net,
     }
 }
@@ -235,11 +236,22 @@ fn launch_workers(
         if lane != CONTROL_LANE {
             bail!("worker {k} ({peer}) sent a non-control first frame");
         }
+        // Protocol revision + upload-codec negotiation: the worker advertises
+        // its codec capabilities and the coordinator rejects it here — before
+        // any lane exists — when the session's `federation.compression` needs
+        // a codec the worker build lacks. The codec itself ships to accepted
+        // workers inside the Assign config.
+        let needed = required_codec_bit(cfg.federation.compression);
         match UpMsg::decode(&payload).map_err(|e| anyhow!("worker {k} hello: {e}"))? {
-            UpMsg::WorkerHello { version } if version == PROTOCOL_VERSION => {}
-            UpMsg::WorkerHello { version } => bail!(
+            UpMsg::WorkerHello { version, .. } if version != PROTOCOL_VERSION => bail!(
                 "worker {k} speaks protocol v{version}, coordinator speaks v{PROTOCOL_VERSION}"
             ),
+            UpMsg::WorkerHello { codecs, .. } if (needed & !codecs) != 0 => bail!(
+                "worker {k} ({peer}) does not support the session's '{}' upload codec \
+                 (advertised capability mask {codecs:#04b})",
+                cfg.federation.compression.name()
+            ),
+            UpMsg::WorkerHello { .. } => {}
             other => bail!("worker {k} sent {other:?} instead of WorkerHello"),
         }
         // Round-robin assignment over accept order.

@@ -35,7 +35,14 @@
 //!   (deterministic per-(round, client) delay), and run their task logic.
 //! - **UploadUpdate** — updates flow back serialized (plaintext, DP-noised,
 //!   or CKKS-encrypted client-side) and are ledgered as one concurrent
-//!   upload group.
+//!   upload group. Plaintext/DP uploads optionally pass through the **wire
+//!   codec** (`federation.compression`): `pack` delta-encodes against the
+//!   version-stamped cached broadcast and byte-plane packs the delta
+//!   (lossless and bitwise-transparent — same params, accuracy and SimNet
+//!   ledger as `none`, fewer measured wire bytes), `quantized` ships int8 /
+//!   int4 quantized deltas with client-side error-feedback residuals (lossy,
+//!   opt-in; plaintext/DP only). The coordinator keeps a version-keyed
+//!   window of recent broadcasts and reverses the codec before aggregating.
 //! - **Aggregate** — [`runtime::Federation::aggregate_and_broadcast`]
 //!   combines in deterministic participant order and broadcasts the result.
 //! - **Finish** — `Stop` frames, acked (`StopAck`) by every trainer before
@@ -57,6 +64,7 @@
 //! federation::actor           trainer actors, concurrency gate, client-side privacy
 //! federation::worker          `fedgraph worker` process: handshake, rebuild session, host actors
 //! federation::protocol        typed messages ⇄ checksummed byte frames (version-stamped)
+//! transport::serialize        wire format + upload codecs (pack | quantized)
 //! transport::{link, tcp}      frame movers: in-memory channels | multiplexed sockets
 //! transport::SimNet           simulated byte/phase ledger; serial + concurrent link time
 //! transport::WireLedger       measured frame bytes per phase/direction (cross-checks SimNet)

@@ -31,6 +31,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use super::protocol::UpdatePayload;
 use super::runtime::{Federation, RoundUpdate, StepOutcome, TrainResult};
 
 /// A round-scheduling policy driving one scheduler step of the federation
@@ -130,8 +131,14 @@ impl AsyncBounded {
         }
     }
 
-    /// Process one completed update: decode, ledger, then admit, hold, or
-    /// reject by staleness. `upload` says whether the current step flushes.
+    /// Process one completed update: reject-by-staleness, else decode and
+    /// admit or hold. `upload` says whether the current step flushes.
+    ///
+    /// The staleness check runs *before* the payload decode: a too-stale
+    /// compressed upload is ledgered (and wasted) from its sizes alone —
+    /// its broadcast base may already have left the coordinator's decode
+    /// window, and decoding a payload only to discard it would be wasted
+    /// work anyway.
     fn absorb(
         &mut self,
         fed: &mut Federation<'_>,
@@ -144,8 +151,21 @@ impl AsyncBounded {
         let Some(seq) = self.in_flight.remove(&c) else {
             bail!("protocol violation: update from trainer {c} with no order in flight");
         };
-        let staleness = fed.version().saturating_sub(u.model_version);
-        let (update, up_bytes, dsecs) = fed.adopt_payload(c, u.payload)?;
+        let model_version = u.model_version;
+        let staleness = fed.version().saturating_sub(model_version);
+        let carries_upload = !matches!(u.payload, UpdatePayload::None);
+        if carries_upload && staleness > self.max_staleness {
+            let up_bytes = fed.ledger_rejected_payload(&u.payload);
+            st.privacy_secs += u.privacy_secs;
+            fed.note_client_round(round, c, u.compute_secs, u.wait_secs, up_bytes);
+            if up_bytes > 0 {
+                st.upload_sizes.push((seq, up_bytes));
+            }
+            fed.note_waste(up_bytes);
+            st.rejected += 1;
+            return Ok(());
+        }
+        let (update, up_bytes, dsecs) = fed.adopt_payload(c, u.payload, model_version)?;
         st.decode_secs += dsecs;
         st.privacy_secs += u.privacy_secs;
         fed.note_client_round(round, c, u.compute_secs, u.wait_secs, up_bytes);
@@ -153,11 +173,6 @@ impl AsyncBounded {
             st.upload_sizes.push((seq, up_bytes));
         }
         let uploaded = !matches!(update, RoundUpdate::Local);
-        if uploaded && staleness > self.max_staleness {
-            fed.note_waste(up_bytes);
-            st.rejected += 1;
-            return Ok(());
-        }
         let base = fed.client_weight(c);
         let result = TrainResult {
             client: c,

@@ -38,13 +38,26 @@
 //!
 //! **Deployment frames.** The multi-process TCP backend adds three control
 //! frames. Before any trainer lane exists, a connecting worker process sends
-//! `WorkerHello { version }` and the coordinator answers
+//! `WorkerHello { version, codecs }` and the coordinator answers
 //! `Assign { n_total, clients, config }` — the client indices this worker
 //! hosts plus the full experiment config (binary-encoded, bit-exact), from
 //! which the worker deterministically rebuilds its datasets, partitions and
 //! task logic. At end of session `Stop` is answered by `StopAck`: the
 //! coordinator holds its lanes open until every trainer acked, so worker
 //! processes flush, exit 0, and nobody reports a spurious hang-up.
+//!
+//! **Upload codec negotiation.** `WorkerHello.codecs` is a capability
+//! bitmask ([`CODEC_PACK`] | [`CODEC_QUANTIZED`]) advertising which upload
+//! codecs the worker build supports. The coordinator rejects the handshake
+//! when the session's `federation.compression` needs a codec the worker did
+//! not advertise, so a codec mismatch fails loudly at connect time instead
+//! of mid-round; the chosen codec itself rides to the worker inside the
+//! `Assign` config. Compressed uploads appear on the wire as the
+//! [`UpdatePayload::Packed`] / [`UpdatePayload::Quantized`] payload variants
+//! (blobs produced by [`crate::transport::serialize::pack_delta`] /
+//! [`crate::transport::serialize::quantize_delta`] against the
+//! version-stamped cached broadcast); see `docs/WIRE_FORMAT.md` for byte
+//! layouts.
 //!
 //! **Staged transfers.** In-round *simulated* traffic issued inside actors
 //! (BNS-GCN halo re-shipments, FedLink per-step exchanges, eval metric
@@ -60,8 +73,29 @@ use crate::transport::{Direction, Phase};
 
 /// The protocol revision spoken over multi-process transports; bumped on any
 /// frame-shape change so a mismatched coordinator/worker pair fails the
-/// `WorkerHello → Assign` handshake loudly.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// `WorkerHello → Assign` handshake loudly. v2: compressed upload payload
+/// variants (`Packed`/`Quantized`) and the `WorkerHello` codec capability
+/// mask.
+pub const PROTOCOL_VERSION: u32 = 2;
+
+/// `WorkerHello.codecs` capability bit: the worker can encode `pack`
+/// (lossless delta + byte-plane) uploads.
+pub const CODEC_PACK: u8 = 0b01;
+/// `WorkerHello.codecs` capability bit: the worker can encode `quantized`
+/// (int8/int4 delta) uploads.
+pub const CODEC_QUANTIZED: u8 = 0b10;
+/// Every codec this build supports (what a worker advertises).
+pub const SUPPORTED_CODECS: u8 = CODEC_PACK | CODEC_QUANTIZED;
+
+/// The capability bit `federation.compression` requires (0 when uploads are
+/// uncompressed).
+pub fn required_codec_bit(mode: crate::config::CompressionMode) -> u8 {
+    match mode {
+        crate::config::CompressionMode::None => 0,
+        crate::config::CompressionMode::Pack => CODEC_PACK,
+        crate::config::CompressionMode::Quantized { .. } => CODEC_QUANTIZED,
+    }
+}
 
 /// One remote actor's staged simulated transfer (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -132,6 +166,17 @@ pub enum UpdatePayload {
     Plain(Vec<Vec<f32>>),
     /// CKKS ciphertext, pre-scaled by the client's aggregation share.
     Encrypted(Ciphertext),
+    /// Losslessly packed plaintext/DP values (`federation.compression:
+    /// pack`): a [`crate::transport::serialize::pack_delta`] blob encoded
+    /// against the broadcast stamped by the envelope's `model_version`.
+    /// Decodes to the exact bytes [`UpdatePayload::Plain`] would have
+    /// carried.
+    Packed { blob: Vec<u8> },
+    /// Quantized upload delta (`federation.compression: quantized`): a
+    /// [`crate::transport::serialize::quantize_delta`] blob against the
+    /// `model_version` broadcast; the coordinator adds the deterministically
+    /// dequantized delta back onto that base.
+    Quantized { blob: Vec<u8> },
 }
 
 /// One trainer's round result.
@@ -171,8 +216,11 @@ pub enum UpMsg {
     /// about to exit.
     StopAck { client: u32 },
     /// Deployment handshake (multi-process transports, pre-rendezvous): a
-    /// worker process announcing itself and its protocol revision.
-    WorkerHello { version: u32 },
+    /// worker process announcing itself, its protocol revision, and the
+    /// upload codecs it supports ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] —
+    /// the codec-negotiation half of the handshake; the coordinator picks
+    /// the session codec from the config and rejects workers that lack it).
+    WorkerHello { version: u32, codecs: u8 },
 }
 
 const D_HELLO: u8 = 1;
@@ -193,6 +241,8 @@ const U_WORKER_HELLO: u8 = 6;
 const P_NONE: u8 = 0;
 const P_PLAIN: u8 = 1;
 const P_ENCRYPTED: u8 = 2;
+const P_PACKED: u8 = 3;
+const P_QUANTIZED: u8 = 4;
 
 fn write_values(w: &mut Writer, values: &[Vec<f32>]) {
     w.u32(values.len() as u32);
@@ -363,6 +413,14 @@ impl UpMsg {
                         w.u8(P_ENCRYPTED);
                         ct.encode_into(&mut w);
                     }
+                    UpdatePayload::Packed { blob } => {
+                        w.u8(P_PACKED);
+                        w.blob(blob);
+                    }
+                    UpdatePayload::Quantized { blob } => {
+                        w.u8(P_QUANTIZED);
+                        w.blob(blob);
+                    }
                 }
             }
             UpMsg::Metric { client, round, num, den, staged } => {
@@ -382,9 +440,10 @@ impl UpMsg {
                 w.u8(U_STOP_ACK);
                 w.u32(*client);
             }
-            UpMsg::WorkerHello { version } => {
+            UpMsg::WorkerHello { version, codecs } => {
                 w.u8(U_WORKER_HELLO);
                 w.u32(*version);
+                w.u8(*codecs);
             }
         }
         w.finish()
@@ -408,6 +467,8 @@ impl UpMsg {
                     P_NONE => UpdatePayload::None,
                     P_PLAIN => UpdatePayload::Plain(read_values(&mut r)?),
                     P_ENCRYPTED => UpdatePayload::Encrypted(Ciphertext::decode_from(&mut r)?),
+                    P_PACKED => UpdatePayload::Packed { blob: r.blob()? },
+                    P_QUANTIZED => UpdatePayload::Quantized { blob: r.blob()? },
                     t => return Err(WireError::BadTag(t)),
                 };
                 UpMsg::Update(UpdateEnvelope {
@@ -431,7 +492,7 @@ impl UpMsg {
             },
             U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
             U_STOP_ACK => UpMsg::StopAck { client: r.u32()? },
-            U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()? },
+            U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()?, codecs: r.u8()? },
             t => return Err(WireError::BadTag(t)),
         })
     }
@@ -550,9 +611,47 @@ mod tests {
     }
 
     #[test]
+    fn compressed_payload_variants_roundtrip() {
+        for (payload, expect_tag) in [
+            (UpdatePayload::Packed { blob: vec![1, 2, 3, 0, 0, 0, 9] }, P_PACKED),
+            (UpdatePayload::Quantized { blob: vec![0xFE; 33] }, P_QUANTIZED),
+        ] {
+            let expect_blob = match &payload {
+                UpdatePayload::Packed { blob } | UpdatePayload::Quantized { blob } => blob.clone(),
+                _ => unreachable!(),
+            };
+            let m = UpMsg::Update(UpdateEnvelope {
+                client: 2,
+                round: 3,
+                model_version: 4,
+                loss: 0.5,
+                compute_secs: 0.1,
+                wait_secs: 0.0,
+                privacy_secs: 0.0,
+                staged: Vec::new(),
+                payload,
+            });
+            match UpMsg::decode(&m.encode()).unwrap() {
+                UpMsg::Update(u) => match (&u.payload, expect_tag) {
+                    (UpdatePayload::Packed { blob }, P_PACKED) => assert_eq!(blob, &expect_blob),
+                    (UpdatePayload::Quantized { blob }, P_QUANTIZED) => {
+                        assert_eq!(blob, &expect_blob)
+                    }
+                    other => panic!("wrong payload {other:?}"),
+                },
+                other => panic!("wrong message {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn deployment_handshake_and_shutdown_frames_roundtrip() {
-        match UpMsg::decode(&UpMsg::WorkerHello { version: PROTOCOL_VERSION }.encode()).unwrap() {
-            UpMsg::WorkerHello { version } => assert_eq!(version, PROTOCOL_VERSION),
+        let hello = UpMsg::WorkerHello { version: PROTOCOL_VERSION, codecs: SUPPORTED_CODECS };
+        match UpMsg::decode(&hello.encode()).unwrap() {
+            UpMsg::WorkerHello { version, codecs } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert_eq!(codecs, CODEC_PACK | CODEC_QUANTIZED);
+            }
             other => panic!("wrong message {other:?}"),
         }
         match UpMsg::decode(&UpMsg::StopAck { client: 9 }.encode()).unwrap() {
@@ -597,6 +696,19 @@ mod tests {
             DownMsg::Eval { round: 9, values: Some(values.clone()) }.encode()
         );
         assert_eq!(encode_eval(9, None), DownMsg::Eval { round: 9, values: None }.encode());
+    }
+
+    #[test]
+    fn required_codec_bits_match_modes() {
+        use crate::config::CompressionMode;
+        assert_eq!(required_codec_bit(CompressionMode::None), 0);
+        assert_eq!(required_codec_bit(CompressionMode::Pack), CODEC_PACK);
+        assert_eq!(
+            required_codec_bit(CompressionMode::Quantized { bits: 8, error_feedback: true }),
+            CODEC_QUANTIZED
+        );
+        // Every codec bit a config can require is advertised by this build.
+        assert_eq!(SUPPORTED_CODECS & (CODEC_PACK | CODEC_QUANTIZED), CODEC_PACK | CODEC_QUANTIZED);
     }
 
     #[test]

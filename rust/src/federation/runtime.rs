@@ -32,7 +32,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{FedGraphConfig, FederationMode, PrivacyMode};
+use crate::config::{CompressionMode, FedGraphConfig, FederationMode, PrivacyMode};
 use crate::coordinator::aggregate::{resolve_shards, sharded_weighted_average};
 use crate::he::{Ciphertext, CkksContext};
 use crate::monitor::{ClientTimeline, Monitor};
@@ -41,7 +41,7 @@ use crate::transport::link::CoordLink;
 use crate::transport::{Direction, Phase, SimNet};
 use crate::util::timer::timed;
 
-use crate::transport::serialize::params_wire_len;
+use crate::transport::serialize::{dequantize_delta, params_wire_len, unpack_delta};
 
 use super::deploy::{he_context, Deployment, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
@@ -146,6 +146,19 @@ pub struct Federation<'m> {
     /// Straggler updates that arrived during an eval collection (async mode
     /// only); the next policy step absorbs them first.
     stash: VecDeque<UpdateEnvelope>,
+    /// Upload wire codec (`federation.compression`).
+    codec: CompressionMode,
+    /// Version-keyed window of recent broadcasts (flattened values) — the
+    /// decode bases for compressed uploads: a `Packed`/`Quantized` payload
+    /// is a delta against the broadcast stamped by its envelope's
+    /// `model_version`. Empty when compression is off. Bounded by
+    /// `base_window` entries; version 0 (the public init every actor
+    /// bootstraps from) seeds the window.
+    bases: VecDeque<(u32, Vec<f32>)>,
+    /// How many broadcast bases to retain: enough for the staleness bound
+    /// plus one version bump per client (GCFL-style per-cluster broadcasts
+    /// advance the version several times per round).
+    base_window: usize,
 }
 
 impl<'m> Federation<'m> {
@@ -182,6 +195,8 @@ impl<'m> Federation<'m> {
                 cfg.federation.buffer_size,
             )),
         };
+        let codec = cfg.federation.compression;
+        monitor.note("compression", codec.name());
         let mut fed = Federation {
             monitor,
             coord: fabric.coord,
@@ -197,7 +212,14 @@ impl<'m> Federation<'m> {
             version: 0,
             policy: Some(policy),
             stash: VecDeque::new(),
+            codec,
+            bases: VecDeque::new(),
+            base_window: n + cfg.federation.max_staleness as usize + 2,
         };
+        if fed.codec.needs_base() {
+            // Version 0 is the public init every actor bootstraps from.
+            fed.bases.push_back((0, fed.template.flatten()));
+        }
         // Rendezvous (control frames: measured but never SimNet-charged).
         for client in 0..n {
             let frame: crate::transport::link::Frame =
@@ -263,6 +285,15 @@ impl<'m> Federation<'m> {
             return Ok(());
         }
         self.version += 1;
+        if self.codec.needs_base() {
+            // Compressed uploads are deltas against version-stamped
+            // broadcasts; retain a window of them for decode. SimNet and
+            // result bitwise-identity are untouched — this is bookkeeping.
+            self.bases.push_back((self.version, params.flatten()));
+            while self.bases.len() > self.base_window {
+                self.bases.pop_front();
+            }
+        }
         let frame: crate::transport::link::Frame =
             encode_set_model(round as u32, self.version, &params.values).into();
         for &t in targets {
@@ -457,13 +488,79 @@ impl<'m> Federation<'m> {
         }
     }
 
-    /// Decode an update payload against the session template. Returns the
-    /// decoded update, its ledger size, and the measured decode seconds.
+    /// The logical (uncompressed plain-f32) wire size of one full model
+    /// upload — what [`crate::transport::serialize::encode_params`] of the
+    /// template costs.
+    fn logical_upload_len(&self) -> u64 {
+        params_wire_len(self.template.values.iter().map(|v| v.len()))
+    }
+
+    /// Ledger sizes of an upload payload, computable *without decoding it*:
+    /// `(SimNet charge, measured payload wire bytes, logical payload
+    /// bytes)`. `pack` charges SimNet the logical size (the codec is
+    /// ledger-transparent by contract); `quantized` charges the compressed
+    /// size (accuracy-vs-bytes is that mode's point). The measured/logical
+    /// split feeds the wire ledger's compression ratio.
+    fn payload_sizes(&self, payload: &UpdatePayload) -> (u64, u64, u64) {
+        match payload {
+            UpdatePayload::None => (0, 0, 0),
+            UpdatePayload::Plain(values) => {
+                let l = params_wire_len(values.iter().map(|v| v.len()));
+                (l, l, l)
+            }
+            UpdatePayload::Encrypted(ct) => {
+                let b = ct.wire_bytes();
+                (b, b, b)
+            }
+            UpdatePayload::Packed { blob } => {
+                let l = self.logical_upload_len();
+                (l, blob.len() as u64, l)
+            }
+            UpdatePayload::Quantized { blob } => {
+                let b = blob.len() as u64;
+                (b, b, self.logical_upload_len())
+            }
+        }
+    }
+
+    /// The broadcast base (flattened values) a compressed upload stamped
+    /// with `version` decodes against.
+    fn upload_base(&self, version: u32) -> Result<&Vec<f32>> {
+        self.bases
+            .iter()
+            .rev()
+            .find(|(v, _)| *v == version)
+            .map(|(_, b)| b)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no cached broadcast base for version {version}: the compressed upload \
+                     outlived the {}-entry base window",
+                    self.base_window
+                )
+            })
+    }
+
+    /// Ledger an upload the policy rejects *without decoding it* — a stale
+    /// async upload beyond the bound, whose base broadcast may already have
+    /// left the window. Returns the SimNet charge; the caller groups it into
+    /// the tick's upload sizes and marks it as waste.
+    pub(crate) fn ledger_rejected_payload(&self, payload: &UpdatePayload) -> u64 {
+        let (charge, measured, logical) = self.payload_sizes(payload);
+        self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
+        charge
+    }
+
+    /// Decode an update payload against the session template (reversing the
+    /// upload codec when one is active — `model_version` selects the
+    /// broadcast base the client encoded against). Returns the decoded
+    /// update, its SimNet ledger size, and the measured decode seconds.
     pub(crate) fn adopt_payload(
         &self,
         c: usize,
         payload: UpdatePayload,
+        model_version: u32,
     ) -> Result<(RoundUpdate, u64, f64)> {
+        let (charge, measured, logical) = self.payload_sizes(&payload);
         Ok(match payload {
             UpdatePayload::None => (RoundUpdate::Local, 0, 0.0),
             UpdatePayload::Plain(values) => {
@@ -490,8 +587,7 @@ impl<'m> Federation<'m> {
                     })
                 });
                 let p = p?;
-                let charge = params_wire_len(p.values.iter().map(|v| v.len()));
-                self.wire().note_payload(Phase::Train, Direction::Up, charge);
+                self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
                 (RoundUpdate::Plain(p), charge, secs)
             }
             UpdatePayload::Encrypted(ct) => {
@@ -500,9 +596,45 @@ impl<'m> Federation<'m> {
                 // implementation's compact ciphertext encoding — the report
                 // shows both, and the equality invariant is documented for
                 // plaintext/DP sessions only.
-                let bytes = ct.wire_bytes();
-                self.wire().note_payload(Phase::Train, Direction::Up, bytes);
-                (RoundUpdate::Encrypted(ct), bytes, 0.0)
+                self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
+                (RoundUpdate::Encrypted(ct), charge, 0.0)
+            }
+            UpdatePayload::Packed { blob } => {
+                // Lossless: XOR-unpack against the stamped broadcast — the
+                // values are bit-for-bit what a Plain upload would have
+                // carried, so everything downstream (aggregation, SimNet) is
+                // identical to `compression: none`.
+                let base = self.upload_base(model_version)?;
+                let (flat, secs) = timed(|| unpack_delta(&blob, base));
+                let flat =
+                    flat.map_err(|e| anyhow!("packed upload from client {c}: {e}"))?;
+                if flat.len() != self.template.num_values() {
+                    bail!("packed upload length mismatch from client {c}");
+                }
+                self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
+                (RoundUpdate::Plain(self.template.unflatten_from(&flat)), charge, secs)
+            }
+            UpdatePayload::Quantized { blob } => {
+                // Lossy: deterministically dequantize the delta and add it
+                // back onto the stamped broadcast. The client computed the
+                // same dequantized delta for its error-feedback residual, so
+                // both sides agree on what the wire carried.
+                let base = self.upload_base(model_version)?;
+                let (p, secs) = timed(|| -> Result<ParamSet> {
+                    let delta = dequantize_delta(&blob)
+                        .map_err(|e| anyhow!("quantized upload from client {c}: {e}"))?;
+                    if delta.len() != base.len()
+                        || delta.len() != self.template.num_values()
+                    {
+                        bail!("quantized upload length mismatch from client {c}");
+                    }
+                    let flat: Vec<f32> =
+                        base.iter().zip(&delta).map(|(b, d)| b + d).collect();
+                    Ok(self.template.unflatten_from(&flat))
+                });
+                let p = p?;
+                self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
+                (RoundUpdate::Plain(p), charge, secs)
             }
         })
     }
@@ -589,7 +721,8 @@ impl<'m> Federation<'m> {
         let mut privacy_secs_total = 0.0;
         for &c in participants {
             let u = slots[c].take().expect("collected above");
-            let (update, up_bytes, dsecs) = self.adopt_payload(c, u.payload)?;
+            let model_version = u.model_version;
+            let (update, up_bytes, dsecs) = self.adopt_payload(c, u.payload, model_version)?;
             decode_secs += dsecs;
             if up_bytes > 0 {
                 upload_sizes.push(up_bytes);
@@ -1445,6 +1578,8 @@ mod tests {
         let down = monitor.wire.counter(Phase::Train, Direction::Down);
         assert_eq!(up.payload_bytes, sim.bytes_up, "upload payload == SimNet upload bytes");
         assert_eq!(down.payload_bytes, sim.bytes_down, "broadcast payload == SimNet down bytes");
+        assert_eq!(up.logical_bytes, up.payload_bytes, "no codec: logical == measured payload");
+        assert_eq!(down.logical_bytes, down.payload_bytes);
         assert!(up.bytes > up.payload_bytes, "update envelopes are measured beyond the payload");
         assert!(down.bytes > down.payload_bytes, "train/stop control frames are measured");
         // Eval and rendezvous traffic is measured but control-only.
@@ -1511,5 +1646,169 @@ mod tests {
         assert_eq!(chan.1, tcp.1, "SimNet download bytes match across deployments");
         assert_eq!(chan.2, tcp.2, "measured up wire counters match");
         assert_eq!(chan.3, tcp.3, "measured down wire counters match");
+    }
+
+    // -- compressed upload wire path (`federation.compression`) -------------
+
+    #[test]
+    fn pack_compression_is_bitwise_transparent() {
+        // The tentpole acceptance bar: `compression: pack` is lossless and
+        // ledger-transparent — final params, accuracy inputs, and the SimNet
+        // byte ledger are identical to `none`; only measured wire bytes
+        // change. Checked with and without dropouts.
+        for dropout in [0.0, 0.4] {
+            let plain = drive(&test_cfg(6, 4, dropout), 4, 0);
+            let mut pack_cfg = test_cfg(6, 4, dropout);
+            pack_cfg.federation.compression = CompressionMode::Pack;
+            let packed = drive(&pack_cfg, 4, 0);
+            assert_eq!(
+                fnv1a(&plain.0),
+                fnv1a(&packed.0),
+                "pack must be bitwise-transparent (dropout={dropout})"
+            );
+            assert_eq!(plain.1, packed.1, "SimNet upload bytes must match");
+            assert_eq!(plain.2, packed.2, "SimNet download bytes must match");
+        }
+    }
+
+    #[test]
+    fn pack_over_tcp_matches_none_over_channel_bitwise() {
+        // Both axes at once: the codec negotiated over the WorkerHello →
+        // Assign handshake and applied by remote actors reproduces the
+        // uncompressed in-process run bit for bit (params and SimNet
+        // ledger).
+        let chan = drive(&test_cfg(4, 4, 0.0), 3, 0);
+        let mut pack_cfg = test_cfg(4, 4, 0.0);
+        pack_cfg.federation.compression = CompressionMode::Pack;
+        let tcp = drive_tcp(&pack_cfg, 3, &[0; 4], 2);
+        assert_eq!(
+            fnv1a(&chan.0),
+            fnv1a(&tcp.0),
+            "pack over TCP loopback == none over channels"
+        );
+        assert_eq!(chan.1, tcp.1, "SimNet upload bytes must match");
+        assert_eq!(chan.2, tcp.2, "SimNet download bytes must match");
+    }
+
+    #[test]
+    fn pack_shrinks_measured_wire_payload_and_reports_the_ratio() {
+        // The measured-wire side of the tentpole: under pack, logical
+        // payload bytes still equal the SimNet ledger while the measured
+        // payload (what actually crossed the transport) shrinks, and the
+        // report surfaces a < 1.0 compression ratio in table + JSON.
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut cfg = test_cfg(3, 2, 0.0);
+        cfg.federation.compression = CompressionMode::Pack;
+        let mut rng = Rng::seeded(cfg.seed);
+        let bp = dummy_blueprint(3, &[0; 3], &mut rng);
+        let mut global = bp.init.clone();
+        let mut fed = Federation::spawn(&monitor, &Deployment::InProcess, &cfg, bp).unwrap();
+        let all = vec![0usize, 1, 2];
+        let charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, charge).unwrap();
+        for round in 0..3 {
+            let step = fed.policy_round(round, &all, true, &all).unwrap();
+            if let Some(m) = step.model {
+                global = m;
+            }
+        }
+        fed.eval_round(3, &all, None).unwrap();
+        fed.shutdown().unwrap();
+
+        let sim = monitor.net.counter(Phase::Train);
+        let up = monitor.wire.counter(Phase::Train, Direction::Up);
+        let down = monitor.wire.counter(Phase::Train, Direction::Down);
+        assert_eq!(up.logical_bytes, sim.bytes_up, "logical payload == SimNet uploads");
+        assert_eq!(down.payload_bytes, sim.bytes_down, "broadcasts stay uncompressed");
+        assert_eq!(down.logical_bytes, down.payload_bytes);
+        assert!(
+            up.payload_bytes < up.logical_bytes,
+            "pack must shrink the measured upload payload: {} vs {}",
+            up.payload_bytes,
+            up.logical_bytes
+        );
+        let report = crate::monitor::report::Report::from_monitor(&monitor);
+        assert!(report.wire_compression_ratio() < 1.0, "report ratio must be < 1.0");
+        let json =
+            crate::util::json::Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        let ratio = json.get("wire_compression_ratio").as_f64().unwrap();
+        assert!(ratio < 1.0, "JSON ratio must be < 1.0, got {ratio}");
+        assert!(
+            report.render().contains("compression=pack"),
+            "the run notes must name the codec"
+        );
+    }
+
+    #[test]
+    fn quantized_uploads_cut_simnet_bytes_and_stay_close() {
+        // The lossy opt-in scenario: int8 delta quantization with error
+        // feedback cuts the charged upload bytes by > 2x while the final
+        // aggregate stays near the plaintext run (and is not bit-identical —
+        // it is lossy by design).
+        let plain = drive(&test_cfg(4, 2, 0.0), 3, 0);
+        let mut qcfg = test_cfg(4, 2, 0.0);
+        qcfg.federation.compression =
+            CompressionMode::Quantized { bits: 8, error_feedback: true };
+        let quant = drive(&qcfg, 3, 0);
+        assert!(
+            quant.1 < plain.1 / 2,
+            "int8 uploads must cut SimNet upload bytes: {} vs {}",
+            quant.1,
+            plain.1
+        );
+        assert_eq!(plain.2, quant.2, "broadcast sizes are unchanged");
+        assert_ne!(fnv1a(&plain.0), fnv1a(&quant.0), "quantization is lossy by design");
+        let plain_vals = decode_params(&plain.0).unwrap();
+        let quant_vals = decode_params(&quant.0).unwrap();
+        for (a, b) in plain_vals.iter().flatten().zip(quant_vals.iter().flatten()) {
+            assert!((a - b).abs() < 0.05, "quantized aggregate drifted: {a} vs {b}");
+        }
+        // int4 shrinks the wire further and still converges to something
+        // finite and close-ish.
+        let mut q4cfg = test_cfg(4, 2, 0.0);
+        q4cfg.federation.compression =
+            CompressionMode::Quantized { bits: 4, error_feedback: true };
+        let quant4 = drive(&q4cfg, 3, 0);
+        assert!(quant4.1 < quant.1, "int4 must ship fewer bytes than int8");
+        for v in decode_params(&quant4.0).unwrap().iter().flatten() {
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn pack_handles_stale_rejection_without_a_base() {
+        // A stale packed upload is rejected and ledgered from its sizes
+        // alone — its broadcast base may already have left the decode
+        // window, so the coordinator must never need to decode it. Same
+        // scenario as stale_updates_are_rejected_and_ledgered_as_waste, with
+        // the pack codec active.
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut cfg = test_cfg(2, 2, 0.0);
+        cfg.federation.mode = FederationMode::Async;
+        cfg.federation.max_staleness = 1;
+        cfg.federation.buffer_size = 1;
+        cfg.federation.compression = CompressionMode::Pack;
+        let mut rng = Rng::seeded(9);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> = vec![
+            Box::new(DummyLogic { client: 0, steps: 1, sleep_ms: 0 }),
+            Box::new(DummyLogic { client: 1, steps: 1, sleep_ms: 1500 }),
+        ];
+        let mut fed =
+            spawn_in_process(&monitor, &cfg, &init, vec![1.0, 1.0], 16, logics).unwrap();
+        fed.broadcast_model(0, &init, &[0, 1], Charge::PerLink(init.byte_len())).unwrap();
+        let s0 = fed.policy_round(0, &[0, 1], true, &[0, 1]).unwrap();
+        assert_eq!(s0.results.len(), 1);
+        let s1 = fed.policy_round(1, &[0], true, &[0, 1]).unwrap();
+        assert_eq!(s1.results.len(), 1);
+        let s2 = fed.policy_round(2, &[0], true, &[0, 1]).unwrap();
+        assert_eq!(s2.results.len(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(2000));
+        let s3 = fed.policy_round(3, &[0], true, &[0, 1]).unwrap();
+        assert_eq!(s3.rejected_stale, 1, "stale packed upload must be rejected");
+        fed.shutdown().unwrap();
+        let c = monitor.net.counter(Phase::Train);
+        assert!(c.wasted_bytes > 0, "the rejected packed upload is ledgered as waste");
+        assert!(c.bytes_up > c.wasted_bytes);
     }
 }

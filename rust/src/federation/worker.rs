@@ -29,7 +29,7 @@ use crate::util::sync::Semaphore;
 
 use super::actor::actor_main;
 use super::deploy::{actor_setup, he_context, SessionBlueprint};
-use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION};
+use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION, SUPPORTED_CODECS};
 
 /// What the coordinator handed this worker during the handshake.
 pub struct WorkerAssignment {
@@ -43,10 +43,14 @@ pub struct WorkerAssignment {
 }
 
 /// Connect to a coordinator (retrying while it binds — workers may start
-/// first) and perform the `WorkerHello → Assign` handshake.
+/// first) and perform the `WorkerHello → Assign` handshake, advertising this
+/// build's full upload-codec capability mask (the coordinator refuses the
+/// connection when the session's `federation.compression` needs a codec the
+/// worker did not advertise).
 pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
     let mut stream = tcp::connect_with_retry(addr, timeout)?;
-    let hello = UpMsg::WorkerHello { version: PROTOCOL_VERSION }.encode();
+    let hello =
+        UpMsg::WorkerHello { version: PROTOCOL_VERSION, codecs: SUPPORTED_CODECS }.encode();
     tcp::write_frame(&mut stream, CONTROL_LANE, &hello).context("sending WorkerHello")?;
     let (lane, payload) = match tcp::read_frame(&mut stream).context("awaiting Assign")? {
         tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),

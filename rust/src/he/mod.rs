@@ -1,6 +1,19 @@
 //! Privacy-preserving aggregation substrates: the CKKS-style homomorphic
 //! encryption simulator (paper §3.2, Appendix F) and the Gaussian-mechanism
 //! differential privacy option (Appendix A.5).
+//!
+//! Both are applied **client-side** inside the trainer actor
+//! ([`crate::federation::actor`]): DP noises the uploaded copy with the
+//! client's own RNG stream (the client keeps its exact local model), HE
+//! pre-scales by the coordinator-assigned aggregation share and encrypts
+//! under the session context (coordinator and workers derive the same keys
+//! from the config seed). Composition rules (enforced by
+//! [`crate::config::FedGraphConfig::validate`]): DP costs plaintext
+//! bandwidth and composes with everything; HE excludes `federation.mode:
+//! async` (staleness re-weighting cannot rescale ciphertexts) and
+//! `federation.compression: quantized` (ciphertexts cannot be
+//! delta-quantized), while the lossless `pack` codec simply never sees a
+//! ciphertext upload. See `docs/CONFIG.md` for the full matrix.
 
 pub mod ckks;
 pub mod dp;

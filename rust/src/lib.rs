@@ -23,12 +23,17 @@
 //! `fedgraph worker` processes over sockets (`federation.transport: tcp` —
 //! loopback runs are bitwise-identical to in-process runs). See
 //! [`federation`] for the protocol and determinism contract,
-//! [`transport::link`] / [`transport::tcp`] for the frame movers, and the
-//! `federation:` config block (`max_concurrency`, `dropout_frac`,
-//! `straggler_ms`, `transport`, `listen_addr`, `workers`) for runtime
-//! knobs. Parallel execution is bitwise-identical to `max_concurrency: 1`;
-//! per-client compute/wait/transfer timelines and measured wire bytes land
-//! in the monitor's report.
+//! [`transport::link`] / [`transport::tcp`] for the frame movers,
+//! [`transport::serialize`] for the wire format and the pluggable upload
+//! codecs (`federation.compression: none | pack | quantized` — `pack` is
+//! lossless and bitwise-transparent, `quantized` trades accuracy for
+//! bytes), and the `federation:` config block (`max_concurrency`,
+//! `dropout_frac`, `straggler_ms`, `transport`, `listen_addr`, `workers`,
+//! `compression`) for runtime knobs — `docs/CONFIG.md` is the full key
+//! reference. Parallel execution is bitwise-identical to
+//! `max_concurrency: 1`; per-client compute/wait/transfer timelines,
+//! measured wire bytes, and the compression ratio land in the monitor's
+//! report.
 //! - **Layer 2 (python/compile/model.py, build-time only)** — GCN / GIN / LP
 //!   models and their train/eval steps in JAX, AOT-lowered to HLO text.
 //! - **Layer 1 (python/compile/kernels/, build-time only)** — Pallas kernels

@@ -13,7 +13,9 @@
 
 use std::process::ExitCode;
 
-use fedgraph::config::{FedGraphConfig, FederationMode, Method, PrivacyMode, Task, TransportKind};
+use fedgraph::config::{
+    CompressionMode, FedGraphConfig, FederationMode, Method, PrivacyMode, Task, TransportKind,
+};
 use fedgraph::data;
 use fedgraph::he::{CkksParams, DpParams};
 
@@ -50,6 +52,11 @@ fn print_help() {
          \x20     [--agg-shards N]\n\
          \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
          \x20     [--workers W]\n\
+         \x20     [--compression none|pack|quantized] [--quantized-bits 4|8]\n\
+         \x20     [--no-error-feedback]\n\
+         \x20     --compression pack is lossless and bitwise-identical to\n\
+         \x20     none (only measured wire bytes shrink); quantized is a\n\
+         \x20     lossy int8/int4 upload-delta codec (plaintext/DP only)\n\
          \x20     With --transport tcp the run waits for W `fedgraph worker`\n\
          \x20     processes to connect; results are bitwise-identical to the\n\
          \x20     in-process channel transport for the same config/seed.\n\
@@ -199,6 +206,20 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--workers") {
         cfg.federation.workers = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--compression") {
+        cfg.federation.compression = CompressionMode::parse(v)?;
+    }
+    if let CompressionMode::Quantized { mut bits, mut error_feedback } =
+        cfg.federation.compression
+    {
+        if let Some(v) = flag_value(args, "--quantized-bits") {
+            bits = v.parse()?;
+        }
+        if has_flag(args, "--no-error-feedback") {
+            error_feedback = false;
+        }
+        cfg.federation.compression = CompressionMode::Quantized { bits, error_feedback };
     }
     if has_flag(args, "--he") {
         cfg.privacy = PrivacyMode::He(CkksParams::default_params());

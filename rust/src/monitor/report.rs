@@ -4,14 +4,20 @@
 //! ([`crate::transport::SimNet`] — what the paper's link model charges) and
 //! the **measured** wire ([`crate::transport::WireLedger`] — what the
 //! transport backend actually moved, frame by frame). Cross-check invariant:
-//! in plaintext/DP sessions, measured *payload* wire bytes equal the SimNet
-//! bytes exactly for payload frames (model broadcasts charged at frame size
-//! and decoded uploads). The deliberate exceptions are the round-0 bootstrap
-//! when charged `Free`, HE sessions (SimNet bills ciphertext-size formulas
-//! while the stand-in broadcasts plaintext), actor-staged simulated traffic
-//! (BNS-GCN halo re-shipments, FedLink exchanges, the FedGCN pre-train
-//! exchange — simulated transfers with no frame counterpart), and control
-//! frames (measured, never charged).
+//! in uncompressed plaintext/DP sessions, measured *payload* wire bytes
+//! equal the SimNet bytes exactly for payload frames (model broadcasts
+//! charged at frame size and decoded uploads). The deliberate exceptions are
+//! the round-0 bootstrap when charged `Free`, HE sessions (SimNet bills
+//! ciphertext-size formulas while the stand-in broadcasts plaintext),
+//! actor-staged simulated traffic (BNS-GCN halo re-shipments, FedLink
+//! exchanges, the FedGCN pre-train exchange — simulated transfers with no
+//! frame counterpart), control frames (measured, never charged), and
+//! compressed uploads (`federation.compression: pack` keeps SimNet at the
+//! *logical* plain-f32 size while the measured payload shrinks). The wire
+//! table therefore prints measured payload bytes next to logical bytes and
+//! their quotient — the **compression ratio** (< 1.0 whenever the upload
+//! codec saved real bytes); the same figures land in the JSON under each
+//! phase's `wire` entry plus a run-level `wire_compression_ratio`.
 
 use crate::transport::{Direction, Phase, WireCounter};
 use crate::util::json::{obj, Json};
@@ -100,6 +106,29 @@ impl Report {
         self.wire.iter().map(|(_, up, down)| up.bytes + down.bytes).sum()
     }
 
+    /// Total measured payload bytes (what the transport actually moved for
+    /// data-plane frames — compressed when an upload codec is active).
+    pub fn wire_payload_bytes(&self) -> u64 {
+        self.wire.iter().map(|(_, up, down)| up.payload_bytes + down.payload_bytes).sum()
+    }
+
+    /// Total logical (uncompressed-equivalent) payload bytes.
+    pub fn wire_logical_bytes(&self) -> u64 {
+        self.wire.iter().map(|(_, up, down)| up.logical_bytes + down.logical_bytes).sum()
+    }
+
+    /// Measured payload bytes over logical payload bytes across all phases:
+    /// 1.0 without compression, < 1.0 when the `pack`/`quantized` upload
+    /// codec saved real wire bytes.
+    pub fn wire_compression_ratio(&self) -> f64 {
+        let logical = self.wire_logical_bytes();
+        if logical == 0 {
+            1.0
+        } else {
+            self.wire_payload_bytes() as f64 / logical as f64
+        }
+    }
+
     pub fn total_bytes(&self) -> u64 {
         self.pretrain_bytes + self.train_bytes
     }
@@ -156,14 +185,24 @@ impl Report {
             } else {
                 format!("Wire (measured, transport={})", self.transport)
             };
-            let mut w = Table::new(&["phase", "frames", "bytes", "payload bytes"])
-                .with_title(&title);
+            let mut w =
+                Table::new(&["phase", "frames", "bytes", "payload bytes", "logical bytes", "ratio"])
+                    .with_title(&title);
             for (phase, up, down) in &self.wire {
+                let payload = up.payload_bytes + down.payload_bytes;
+                let logical = up.logical_bytes + down.logical_bytes;
+                let ratio = if logical == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.2}", payload as f64 / logical as f64)
+                };
                 w.row(&[
                     phase.name().into(),
                     (up.frames + down.frames).to_string(),
                     fmt_bytes(up.bytes + down.bytes),
-                    fmt_bytes(up.payload_bytes + down.payload_bytes),
+                    fmt_bytes(payload),
+                    fmt_bytes(logical),
+                    ratio,
                 ]);
             }
             out.push_str(&w.render());
@@ -246,6 +285,8 @@ impl Report {
                             ("bytes_down", (down.bytes as usize).into()),
                             ("payload_bytes_up", (up.payload_bytes as usize).into()),
                             ("payload_bytes_down", (down.payload_bytes as usize).into()),
+                            ("logical_bytes_up", (up.logical_bytes as usize).into()),
+                            ("logical_bytes_down", (down.logical_bytes as usize).into()),
                         ]),
                     )
                 })
@@ -256,6 +297,7 @@ impl Report {
             ("phase_secs", phases),
             ("transport", Json::Str(self.transport.clone())),
             ("wire", wire),
+            ("wire_compression_ratio", self.wire_compression_ratio().into()),
             ("pretrain_bytes", (self.pretrain_bytes as usize).into()),
             ("train_bytes", (self.train_bytes as usize).into()),
             ("pretrain_net_secs", self.pretrain_net_secs.into()),
@@ -329,6 +371,29 @@ mod tests {
         assert_eq!(parsed.get("transport").as_str(), Some("channel"));
         let wire_train = parsed.get("wire").get("train");
         assert_eq!(wire_train.get("payload_bytes_down").as_f64(), Some(1_000_000.0));
+        assert_eq!(wire_train.get("logical_bytes_down").as_f64(), Some(1_000_000.0));
         assert_eq!(wire_train.get("bytes_up").as_f64(), Some(50.0));
+        // No codec in play: measured payload == logical payload, ratio 1.0.
+        assert!((r.wire_compression_ratio() - 1.0).abs() < 1e-12);
+        assert_eq!(parsed.get("wire_compression_ratio").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn compressed_payloads_show_a_sub_one_ratio() {
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        m.note("transport", "channel");
+        m.note("compression", "pack");
+        // A packed upload: 1 MB logical shipped as 300 kB on the wire.
+        m.wire.record_frame(Phase::Train, Direction::Up, 300_060);
+        m.wire.note_payload(Phase::Train, Direction::Up, 300_000, 1_000_000);
+        let r = Report::from_monitor(&m);
+        assert_eq!(r.wire_payload_bytes(), 300_000);
+        assert_eq!(r.wire_logical_bytes(), 1_000_000);
+        assert!((r.wire_compression_ratio() - 0.3).abs() < 1e-12);
+        let text = r.render();
+        assert!(text.contains("0.30"), "ratio column must render:\n{text}");
+        let j = crate::util::json::Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        let ratio = j.get("wire_compression_ratio").as_f64().unwrap();
+        assert!(ratio < 1.0, "JSON must expose the sub-1.0 ratio, got {ratio}");
     }
 }

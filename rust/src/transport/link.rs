@@ -1,10 +1,14 @@
 //! Pluggable federation transport: byte-frame links between the coordinator
 //! and its trainer endpoints.
 //!
-//! The layering mirrors a real deployment stack:
+//! The layering mirrors a real deployment stack (full wire reference:
+//! `docs/WIRE_FORMAT.md`):
 //!
 //! - **`federation::protocol`** turns typed round-protocol messages into
-//!   checksummed byte frames (via [`super::serialize`]);
+//!   checksummed byte frames (via [`super::serialize`], whose upload codecs
+//!   — negotiated during the `WorkerHello → Assign` handshake on
+//!   multi-process backends — may compress the update payloads inside those
+//!   frames; links move opaque frames and never care);
 //! - **this module** defines the endpoint traits a backend implements —
 //!   [`CoordLink`] (coordinator side) and [`TrainerLink`] (trainer side) —
 //!   plus backend #1; backend selection lives in

@@ -13,15 +13,22 @@
 //! - [`WireLedger`] — the *measured* wire: the federation runtime counts the
 //!   actual byte length of every protocol frame it ships or receives, by
 //!   phase and direction, and separately tracks how many of those bytes are
-//!   data-plane payload (the portion SimNet charges). For plaintext/DP
-//!   sessions the invariant `wire payload bytes == SimNet bytes` holds
-//!   exactly for payload frames (model broadcasts + uploads) — the report
-//!   prints both so the simulated ledger can be cross-checked against what
-//!   the transport really moved. The two diverge only where they should:
-//!   HE sessions bill ciphertext sizes while this implementation's decrypted
-//!   stand-in broadcasts plaintext frames, and actor-staged *simulated*
-//!   transfers (BNS-GCN halo re-shipments, FedLink per-step exchanges, the
-//!   FedGCN pre-train exchange) have no frame counterpart at all.
+//!   data-plane payload (the portion SimNet charges). For uncompressed
+//!   plaintext/DP sessions the invariant `wire payload bytes == SimNet
+//!   bytes` holds exactly for payload frames (model broadcasts + uploads) —
+//!   the report prints both so the simulated ledger can be cross-checked
+//!   against what the transport really moved. The two diverge only where
+//!   they should: HE sessions bill ciphertext sizes while this
+//!   implementation's decrypted stand-in broadcasts plaintext frames,
+//!   actor-staged *simulated* transfers (BNS-GCN halo re-shipments, FedLink
+//!   per-step exchanges, the FedGCN pre-train exchange) have no frame
+//!   counterpart at all, and under `federation.compression: pack` the
+//!   measured upload payload shrinks below the SimNet charge (which stays at
+//!   the logical plain-f32 size so `pack` is ledger-transparent). Each
+//!   [`WireCounter`] therefore carries both a measured `payload_bytes` and a
+//!   `logical_bytes` figure; their quotient is the compression ratio the
+//!   report prints. The full framing/codec byte layout lives in
+//!   `docs/WIRE_FORMAT.md`.
 //!
 //! Since the deployment refactor trainers may also live in separate worker
 //! processes over the [`tcp`] backend; the byte ledger stays coordinator-side
@@ -411,13 +418,22 @@ pub struct WireCounter {
     pub frames: u64,
     /// Total measured frame bytes (control + payload).
     pub bytes: u64,
-    /// The data-plane portion: bytes the federation ledger charges to
-    /// [`SimNet`] (model broadcasts and decoded upload payloads). For
-    /// plaintext/DP sessions `payload_bytes == SimNet bytes` exactly for
-    /// payload frames; control frames (Hello, Train, Eval, Metric, Stop,
-    /// ModelVersion) are measured in `bytes` but never counted here —
-    /// matching the protocol's ledger rule that orchestration is unbilled.
+    /// The data-plane portion as it actually crossed the wire — compressed
+    /// when an upload codec is active. For uncompressed plaintext/DP
+    /// sessions `payload_bytes == SimNet bytes` exactly for payload frames;
+    /// control frames (Hello, Train, Eval, Metric, Stop, ModelVersion) are
+    /// measured in `bytes` but never counted here — matching the protocol's
+    /// ledger rule that orchestration is unbilled.
     pub payload_bytes: u64,
+    /// The *logical* (uncompressed-equivalent) size of the same payloads:
+    /// what they would have cost as plain f32 frames. Equal to
+    /// `payload_bytes` without compression; larger under `pack`/`quantized`,
+    /// making `payload_bytes / logical_bytes` the measured compression
+    /// ratio the report prints. Under `federation.compression: pack` the
+    /// SimNet ledger keeps charging this logical size (so `pack` is
+    /// ledger-transparent), while `quantized` charges SimNet the compressed
+    /// size (the accuracy-vs-bytes axis is the point of that mode).
+    pub logical_bytes: u64,
 }
 
 /// Measured wire-byte ledger: what the transport backend actually moved, by
@@ -447,24 +463,30 @@ impl WireLedger {
         e.bytes += len;
     }
 
-    /// Mark `bytes` of already-recorded frame traffic as data-plane payload
-    /// (called where the runtime charges the same size to [`SimNet`]).
-    pub fn note_payload(&self, phase: Phase, dir: Direction, bytes: u64) {
-        if bytes == 0 {
+    /// Mark already-recorded frame traffic as data-plane payload:
+    /// `wire_bytes` as measured on the transport (compressed when an upload
+    /// codec is active) and `logical_bytes` as the uncompressed-equivalent
+    /// plain-f32 size. The two are equal wherever no codec applies.
+    pub fn note_payload(&self, phase: Phase, dir: Direction, wire_bytes: u64, logical_bytes: u64) {
+        if wire_bytes == 0 && logical_bytes == 0 {
             return;
         }
         let mut c = self.counters.lock().unwrap();
-        c.entry((phase, dir)).or_default().payload_bytes += bytes;
+        let e = c.entry((phase, dir)).or_default();
+        e.payload_bytes += wire_bytes;
+        e.logical_bytes += logical_bytes;
     }
 
     /// Count a frame that is payload end to end (model broadcasts: SimNet
-    /// charges the whole encoded frame).
+    /// charges the whole encoded frame; broadcasts are never compressed, so
+    /// measured and logical coincide).
     pub fn record_payload_frame(&self, phase: Phase, dir: Direction, len: u64) {
         let mut c = self.counters.lock().unwrap();
         let e = c.entry((phase, dir)).or_default();
         e.frames += 1;
         e.bytes += len;
         e.payload_bytes += len;
+        e.logical_bytes += len;
     }
 
     pub fn counter(&self, phase: Phase, dir: Direction) -> WireCounter {
@@ -634,15 +656,31 @@ mod tests {
         let w = WireLedger::new();
         w.record_payload_frame(Phase::Train, Direction::Down, 500);
         w.record_frame(Phase::Train, Direction::Up, 142);
-        w.note_payload(Phase::Train, Direction::Up, 100);
+        w.note_payload(Phase::Train, Direction::Up, 100, 100);
         w.record_frame(Phase::Eval, Direction::Down, 9);
         let down = w.counter(Phase::Train, Direction::Down);
         assert_eq!((down.frames, down.bytes, down.payload_bytes), (1, 500, 500));
+        assert_eq!(down.logical_bytes, 500, "broadcast frames are payload == logical");
         let up = w.counter(Phase::Train, Direction::Up);
         assert_eq!((up.frames, up.bytes, up.payload_bytes), (1, 142, 100));
+        assert_eq!(up.logical_bytes, 100);
         assert_eq!(w.total_bytes(), 651);
         assert_eq!(w.total_frames(), 3);
         assert_eq!(w.counter(Phase::PreTrain, Direction::Up), WireCounter::default());
+    }
+
+    #[test]
+    fn wire_ledger_splits_compressed_vs_logical_payload() {
+        // A compressed upload notes its measured (wire) size next to the
+        // logical plain-f32 size; the ratio the report prints is their
+        // quotient.
+        let w = WireLedger::new();
+        w.record_frame(Phase::Train, Direction::Up, 260);
+        w.note_payload(Phase::Train, Direction::Up, 250, 1000);
+        let up = w.counter(Phase::Train, Direction::Up);
+        assert_eq!(up.payload_bytes, 250);
+        assert_eq!(up.logical_bytes, 1000);
+        assert!(up.payload_bytes < up.logical_bytes, "compression must show a < 1 ratio");
     }
 
     #[test]

@@ -1,10 +1,41 @@
-//! Wire format for federation traffic.
+//! Wire format for federation traffic, plus the pluggable upload codecs.
 //!
 //! Every payload that crosses the (simulated) network is actually serialized
 //! to bytes and parsed back on the receiving side, so (a) the byte counts the
 //! monitor reports are real, and (b) serialization cost shows up in measured
 //! time exactly as it would in the paper's gRPC/Ray transport. Format:
-//! little-endian, length-prefixed sections, FNV-1a checksum trailer.
+//! little-endian, length-prefixed sections, FNV-1a checksum trailer. The full
+//! byte layout (framing, handshake, and codec negotiation) is documented in
+//! `docs/WIRE_FORMAT.md`.
+//!
+//! ## Upload codecs (`federation.compression`)
+//!
+//! Model uploads may additionally pass through one of two codecs before they
+//! are framed (selected by `federation.compression`; both operate on the
+//! *flattened* parameter vector against the broadcast the client trained
+//! from):
+//!
+//! - [`pack_delta`] / [`unpack_delta`] — **lossless** (`compression: pack`).
+//!   The upload's f32 bit patterns are XORed against the base broadcast's,
+//!   the 32-bit delta words are split into four byte planes, and each plane
+//!   is zero-run-length encoded (varint run lengths). Because a trained
+//!   model stays close to its broadcast, the sign/exponent plane (and often
+//!   the high mantissa plane) is mostly zeros. Decoding XORs back against
+//!   the same base, so the reconstruction is **bit-exact** — `compression:
+//!   pack` changes measured wire bytes and nothing else. An incompressible
+//!   delta falls back to a raw encoding, so the blob never exceeds the raw
+//!   values by more than the 5-byte header.
+//! - [`quantize_delta`] / [`dequantize_delta`] — **lossy, opt-in**
+//!   (`compression: quantized`). The upload delta is affine-quantized per
+//!   [`QUANT_CHUNK`]-value chunk to int8 or int4 codes (`lo + step * code`
+//!   with `lo`/`step` shipped as f32 per chunk). Dequantization is
+//!   deterministic — the client computes the identical dequantized delta to
+//!   maintain its error-feedback residual, so client and coordinator agree
+//!   bit-for-bit on what the wire carried.
+//!
+//! Both codecs are pure byte transforms with typed [`WireError`] failures:
+//! truncated or malformed blobs surface as errors, never panics (property
+//! tests in `tests/proptests.rs` pin this).
 
 /// FNV-1a 64-bit checksum.
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -21,6 +52,9 @@ pub enum WireError {
     Truncated,
     BadChecksum,
     BadTag(u8),
+    /// Structurally invalid content behind a valid header (length
+    /// inconsistencies, overrunning run-length tokens, trailing bytes).
+    Malformed(&'static str),
 }
 
 impl std::fmt::Display for WireError {
@@ -29,6 +63,7 @@ impl std::fmt::Display for WireError {
             WireError::Truncated => write!(f, "truncated message"),
             WireError::BadChecksum => write!(f, "checksum mismatch"),
             WireError::BadTag(t) => write!(f, "unknown tag {t}"),
+            WireError::Malformed(what) => write!(f, "malformed message: {what}"),
         }
     }
 }
@@ -246,6 +281,321 @@ pub fn decode_params(bytes: &[u8]) -> Result<Vec<Vec<f32>>, WireError> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Upload codecs (`federation.compression`) — see the module docs and
+// docs/WIRE_FORMAT.md for the byte layouts.
+// ---------------------------------------------------------------------------
+
+/// Cap on the value count a codec blob may claim, so a corrupted header can
+/// never trigger a multi-gigabyte allocation (mirrors
+/// [`crate::transport::tcp::MAX_FRAME_BYTES`]).
+pub const MAX_CODEC_VALUES: usize = 1 << 28;
+
+/// Chunk size of the quantizer's per-chunk affine parameters.
+pub const QUANT_CHUNK: usize = 256;
+
+const PACK_RAW: u8 = 0;
+const PACK_PLANES: u8 = 1;
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(buf: &[u8], pos: &mut usize) -> Result<u64, WireError> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or(WireError::Truncated)?;
+        *pos += 1;
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift >= 64 {
+            return Err(WireError::Malformed("varint overflow"));
+        }
+    }
+}
+
+/// Zero-run-length encode one byte plane: alternating `varint(zero run)`,
+/// `varint(literal len) + literal bytes` tokens. Short zero runs (< 4 bytes)
+/// are folded into literals so pathological alternation can't explode the
+/// token count.
+fn rle_encode(plane: &[u8]) -> Vec<u8> {
+    let n = plane.len();
+    let mut out = Vec::with_capacity(n / 4 + 8);
+    let mut pos = 0usize;
+    while pos < n {
+        let zstart = pos;
+        while pos < n && plane[pos] == 0 {
+            pos += 1;
+        }
+        write_varint(&mut out, (pos - zstart) as u64);
+        if pos >= n {
+            break;
+        }
+        // Literal run: up to the next zero run of >= 4 bytes (or the end).
+        let lstart = pos;
+        let mut j = pos;
+        while j < n {
+            if plane[j] == 0 && j + 4 <= n && plane[j..j + 4].iter().all(|&b| b == 0) {
+                break;
+            }
+            j += 1;
+        }
+        write_varint(&mut out, (j - lstart) as u64);
+        out.extend_from_slice(&plane[lstart..j]);
+        pos = j;
+    }
+    out
+}
+
+/// Inverse of [`rle_encode`], consuming tokens from `buf` at `*pos` until
+/// exactly `n` bytes are emitted.
+fn rle_decode(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u8>, WireError> {
+    let mut out = vec![0u8; n];
+    let mut emitted = 0usize;
+    while emitted < n {
+        let z = read_varint(buf, pos)? as usize;
+        if z > n - emitted {
+            return Err(WireError::Malformed("rle zero run overruns plane"));
+        }
+        emitted += z;
+        if emitted == n {
+            break;
+        }
+        let l = read_varint(buf, pos)? as usize;
+        if l == 0 {
+            return Err(WireError::Malformed("empty rle literal run"));
+        }
+        if l > n - emitted {
+            return Err(WireError::Malformed("rle literal run overruns plane"));
+        }
+        let src = buf.get(*pos..*pos + l).ok_or(WireError::Truncated)?;
+        out[emitted..emitted + l].copy_from_slice(src);
+        *pos += l;
+        emitted += l;
+    }
+    Ok(out)
+}
+
+/// Losslessly pack `upload` as a delta against `base` (the broadcast the
+/// client trained from): XOR the f32 bit patterns, split the delta words
+/// into four byte planes, zero-RLE each plane. Falls back to a raw encoding
+/// of `upload`'s own bits when the planes don't win (or when `base` has a
+/// different length), so the blob is never larger than `4·n + 5` bytes.
+/// [`unpack_delta`] with the same `base` reconstructs `upload` **bit for
+/// bit** — including negative zero, infinities, and NaN payloads.
+///
+/// Inputs are bounded by [`MAX_CODEC_VALUES`] to keep the encoder symmetric
+/// with its decoder (a larger model could not cross the framed transport
+/// anyway — its raw payload would exceed the 1 GiB frame cap).
+pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
+    debug_assert!(upload.len() <= MAX_CODEC_VALUES, "upload exceeds the codec value cap");
+    let n = upload.len();
+    if base.len() == n {
+        let mut planes: [Vec<u8>; 4] = std::array::from_fn(|_| Vec::with_capacity(n));
+        for (u, b) in upload.iter().zip(base) {
+            let x = (u.to_bits() ^ b.to_bits()).to_le_bytes();
+            for (plane, byte) in planes.iter_mut().zip(x) {
+                plane.push(byte);
+            }
+        }
+        let streams: Vec<Vec<u8>> = planes.iter().map(|p| rle_encode(p)).collect();
+        let packed_len: usize = streams.iter().map(|s| s.len()).sum();
+        if packed_len < 4 * n {
+            let mut out = Vec::with_capacity(5 + packed_len);
+            out.extend_from_slice(&(n as u32).to_le_bytes());
+            out.push(PACK_PLANES);
+            for s in &streams {
+                out.extend_from_slice(s);
+            }
+            return out;
+        }
+    }
+    let mut out = Vec::with_capacity(5 + 4 * n);
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.push(PACK_RAW);
+    for u in upload {
+        out.extend_from_slice(&u.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`pack_delta`]. `base` must be the same vector the encoder
+/// used (the version-stamped broadcast — the coordinator keeps a window of
+/// recent broadcasts per version for exactly this lookup). Truncated or
+/// malformed blobs yield a typed [`WireError`], never a panic.
+pub fn unpack_delta(blob: &[u8], base: &[f32]) -> Result<Vec<f32>, WireError> {
+    if blob.len() < 5 {
+        return Err(WireError::Truncated);
+    }
+    let n = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+    if n > MAX_CODEC_VALUES {
+        return Err(WireError::Malformed("pack: value count exceeds cap"));
+    }
+    let mode = blob[4];
+    let mut pos = 5usize;
+    match mode {
+        PACK_RAW => {
+            let raw = blob.get(pos..pos + 4 * n).ok_or(WireError::Truncated)?;
+            pos += 4 * n;
+            if pos != blob.len() {
+                return Err(WireError::Malformed("pack: trailing bytes"));
+            }
+            Ok(raw
+                .chunks_exact(4)
+                .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+                .collect())
+        }
+        PACK_PLANES => {
+            if base.len() != n {
+                return Err(WireError::Malformed("pack: base length mismatch"));
+            }
+            let mut planes = Vec::with_capacity(4);
+            for _ in 0..4 {
+                planes.push(rle_decode(blob, &mut pos, n)?);
+            }
+            if pos != blob.len() {
+                return Err(WireError::Malformed("pack: trailing bytes"));
+            }
+            let mut out = Vec::with_capacity(n);
+            for (i, b) in base.iter().enumerate() {
+                let x = u32::from_le_bytes([
+                    planes[0][i],
+                    planes[1][i],
+                    planes[2][i],
+                    planes[3][i],
+                ]);
+                out.push(f32::from_bits(x ^ b.to_bits()));
+            }
+            Ok(out)
+        }
+        t => Err(WireError::BadTag(t)),
+    }
+}
+
+fn pack_codes(out: &mut Vec<u8>, codes: &[u32], bits: u8) {
+    if bits == 8 {
+        out.extend(codes.iter().map(|&q| q as u8));
+    } else {
+        for pair in codes.chunks(2) {
+            let lo = pair[0] as u8 & 0x0F;
+            let hi = if pair.len() > 1 { (pair[1] as u8 & 0x0F) << 4 } else { 0 };
+            out.push(lo | hi);
+        }
+    }
+}
+
+/// Affine-quantize an upload delta to `bits`-wide codes (4 or 8; anything
+/// else is treated as 8) in [`QUANT_CHUNK`]-value chunks. Returns the wire
+/// blob **and** the deterministically dequantized delta — the exact vector
+/// [`dequantize_delta`] will reconstruct — so the client can maintain an
+/// error-feedback residual (`residual = delta - dequantized`) that agrees
+/// bit-for-bit with what the coordinator aggregated. Values are assumed
+/// finite (training parameters); non-finite inputs degrade to code 0 of
+/// their chunk without panicking. Inputs are bounded by
+/// [`MAX_CODEC_VALUES`], mirroring the decoder's cap.
+pub fn quantize_delta(delta: &[f32], bits: u8) -> (Vec<u8>, Vec<f32>) {
+    debug_assert!(delta.len() <= MAX_CODEC_VALUES, "delta exceeds the codec value cap");
+    let bits = if bits == 4 { 4u8 } else { 8u8 };
+    let levels = ((1u32 << bits) - 1) as f32;
+    let n = delta.len();
+    let chunk_overhead = (n / QUANT_CHUNK + 1) * 8;
+    let mut blob = Vec::with_capacity(5 + n * bits as usize / 8 + chunk_overhead + 1);
+    blob.extend_from_slice(&(n as u32).to_le_bytes());
+    blob.push(bits);
+    let mut dequant = Vec::with_capacity(n);
+    for chunk in delta.chunks(QUANT_CHUNK) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !lo.is_finite() {
+            lo = 0.0;
+        }
+        let mut step = if hi > lo { (hi - lo) / levels } else { 0.0 };
+        if !step.is_finite() {
+            step = 0.0;
+        }
+        blob.extend_from_slice(&lo.to_le_bytes());
+        blob.extend_from_slice(&step.to_le_bytes());
+        let mut codes = Vec::with_capacity(chunk.len());
+        for &v in chunk {
+            let q = if step > 0.0 {
+                let q = ((v - lo) / step).round();
+                if q.is_finite() {
+                    q.clamp(0.0, levels) as u32
+                } else {
+                    0
+                }
+            } else {
+                0
+            };
+            codes.push(q);
+            dequant.push(lo + step * q as f32);
+        }
+        pack_codes(&mut blob, &codes, bits);
+    }
+    (blob, dequant)
+}
+
+/// Inverse of [`quantize_delta`]: reconstruct the dequantized delta from a
+/// wire blob. Deterministic — `lo + step * code` in f32, the same arithmetic
+/// the encoder used for its returned dequantized vector. Truncated or
+/// malformed blobs yield a typed [`WireError`], never a panic.
+pub fn dequantize_delta(blob: &[u8]) -> Result<Vec<f32>, WireError> {
+    if blob.len() < 5 {
+        return Err(WireError::Truncated);
+    }
+    let n = u32::from_le_bytes(blob[0..4].try_into().unwrap()) as usize;
+    if n > MAX_CODEC_VALUES {
+        return Err(WireError::Malformed("quantized: value count exceeds cap"));
+    }
+    let bits = blob[4];
+    if bits != 4 && bits != 8 {
+        return Err(WireError::BadTag(bits));
+    }
+    let mut pos = 5usize;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let chunk_len = (n - out.len()).min(QUANT_CHUNK);
+        let header = blob.get(pos..pos + 8).ok_or(WireError::Truncated)?;
+        let lo = f32::from_le_bytes(header[0..4].try_into().unwrap());
+        let step = f32::from_le_bytes(header[4..8].try_into().unwrap());
+        pos += 8;
+        let nbytes = if bits == 8 { chunk_len } else { chunk_len / 2 + chunk_len % 2 };
+        let raw = blob.get(pos..pos + nbytes).ok_or(WireError::Truncated)?;
+        pos += nbytes;
+        if bits == 8 {
+            for &q in raw {
+                out.push(lo + step * q as f32);
+            }
+        } else {
+            for i in 0..chunk_len {
+                let byte = raw[i / 2];
+                let q = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                out.push(lo + step * q as f32);
+            }
+        }
+    }
+    if pos != blob.len() {
+        return Err(WireError::Malformed("quantized: trailing bytes"));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -304,6 +654,158 @@ mod tests {
         let bytes = w.finish();
         let mut r = Reader::open(&bytes).unwrap();
         assert!(matches!(r.f32s(), Err(WireError::Truncated)));
+    }
+
+    #[test]
+    fn pack_roundtrip_is_bitwise_even_for_specials() {
+        let base: Vec<f32> = (0..600).map(|i| (i as f32) * 0.25 - 30.0).collect();
+        let mut upload: Vec<f32> = base.iter().map(|b| b * 0.99 + 0.001).collect();
+        // Bit-pattern specials: the codec must reproduce them exactly.
+        upload[0] = -0.0;
+        upload[1] = f32::INFINITY;
+        upload[2] = f32::NEG_INFINITY;
+        upload[3] = f32::from_bits(0x7FC0_1234); // NaN with a payload
+        upload[4] = f32::from_bits(1); // subnormal
+        let blob = pack_delta(&upload, &base);
+        let back = unpack_delta(&blob, &base).unwrap();
+        assert_eq!(back.len(), upload.len());
+        for (a, b) in upload.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pack must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn pack_compresses_near_broadcast_uploads() {
+        // A realistic shape: the upload is the base plus a small step, so the
+        // sign/exponent plane of the XOR delta is almost entirely zeros.
+        let base: Vec<f32> = (0..4096).map(|i| ((i % 97) as f32) * 0.01 + 0.5).collect();
+        let upload: Vec<f32> = base.iter().map(|b| b + 0.0003).collect();
+        let blob = pack_delta(&upload, &base);
+        assert!(
+            blob.len() < 4 * upload.len(),
+            "packed ({}) must beat raw ({})",
+            blob.len(),
+            4 * upload.len()
+        );
+        // Identical upload == base degenerates to almost nothing.
+        let same = pack_delta(&base, &base);
+        assert!(same.len() < 64, "all-zero delta should RLE away, got {}", same.len());
+        assert_eq!(unpack_delta(&same, &base).unwrap(), base);
+    }
+
+    #[test]
+    fn pack_raw_fallback_bounds_the_blob() {
+        // Uncorrelated upload/base: planes are noise, the raw fallback kicks
+        // in, and the blob stays within header overhead of the raw values.
+        let base: Vec<f32> = (0..512u32)
+            .map(|i| f32::from_bits(0x9E37_79B9u32.wrapping_mul(i + 1)))
+            .collect();
+        let upload: Vec<f32> = (0..512u32)
+            .map(|i| f32::from_bits(0x85EB_CA6Bu32.wrapping_mul(i + 7)))
+            .collect();
+        let blob = pack_delta(&upload, &base);
+        assert!(blob.len() <= 4 * upload.len() + 5, "blob {} exceeds raw bound", blob.len());
+        let back = unpack_delta(&blob, &base).unwrap();
+        for (a, b) in upload.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Mismatched base lengths fall back to raw and still roundtrip.
+        let blob = pack_delta(&upload, &base[..100]);
+        let back = unpack_delta(&blob, &base[..100]);
+        assert!(back.is_err() || back.unwrap().len() == upload.len());
+    }
+
+    #[test]
+    fn pack_rejects_truncation_and_garbage() {
+        let base = vec![1.0f32; 300];
+        let upload: Vec<f32> = base.iter().map(|b| b + 0.5).collect();
+        let blob = pack_delta(&upload, &base);
+        for cut in [0, 3, 4, 5, blob.len() / 2, blob.len() - 1] {
+            assert!(
+                unpack_delta(&blob[..cut], &base).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
+        // Wrong base length for a planes-mode blob is typed, not a panic.
+        assert!(matches!(
+            unpack_delta(&blob, &base[..10]),
+            Err(WireError::Malformed(_))
+        ));
+        // Unknown mode byte.
+        let mut bad = blob.clone();
+        bad[4] = 9;
+        assert!(matches!(unpack_delta(&bad, &base), Err(WireError::BadTag(9))));
+        // Trailing garbage is rejected.
+        let mut long = blob.clone();
+        long.push(0xAB);
+        assert!(unpack_delta(&long, &base).is_err());
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_step_and_deterministic() {
+        for bits in [8u8, 4] {
+            let delta: Vec<f32> = (0..1000).map(|i| ((i * 37) % 200) as f32 * 0.01 - 1.0).collect();
+            let (blob, dequant) = quantize_delta(&delta, bits);
+            let back = dequantize_delta(&blob).unwrap();
+            assert_eq!(back.len(), delta.len());
+            // The decoder reconstructs exactly what the encoder reported.
+            for (a, b) in dequant.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "dequant must be deterministic");
+            }
+            // Error bounded by one quantization step per chunk (range / levels).
+            let levels = ((1u32 << bits) - 1) as f32;
+            for chunk in delta.chunks(QUANT_CHUNK).zip(back.chunks(QUANT_CHUNK)) {
+                let (dc, bc) = chunk;
+                let lo = dc.iter().copied().fold(f32::INFINITY, f32::min);
+                let hi = dc.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let step = (hi - lo) / levels;
+                for (d, r) in dc.iter().zip(bc) {
+                    assert!(
+                        (d - r).abs() <= step * 0.51 + 1e-6,
+                        "bits={bits}: |{d} - {r}| > step {step}"
+                    );
+                }
+            }
+            // int4 really is smaller than int8.
+            if bits == 4 {
+                let (blob8, _) = quantize_delta(&delta, 8);
+                assert!(blob.len() < blob8.len());
+            }
+            // And both are far below the 4-byte/value plaintext encoding.
+            assert!(blob.len() < 2 * delta.len());
+        }
+    }
+
+    #[test]
+    fn quantize_handles_degenerate_chunks() {
+        // Constant chunk: step 0, every code 0, exact reconstruction.
+        let delta = vec![0.75f32; 300];
+        let (blob, dequant) = quantize_delta(&delta, 8);
+        assert_eq!(dequantize_delta(&blob).unwrap(), dequant);
+        assert!(dequant.iter().all(|&v| v == 0.75));
+        // Empty delta.
+        let (blob, dequant) = quantize_delta(&[], 8);
+        assert!(dequant.is_empty());
+        assert!(dequantize_delta(&blob).unwrap().is_empty());
+        // Odd-length int4 chunk (padding nibble).
+        let delta: Vec<f32> = (0..257).map(|i| i as f32 * 0.1).collect();
+        let (blob, dequant) = quantize_delta(&delta, 4);
+        assert_eq!(dequantize_delta(&blob).unwrap(), dequant);
+    }
+
+    #[test]
+    fn quantize_rejects_truncation_and_bad_bits() {
+        let delta: Vec<f32> = (0..300).map(|i| i as f32 * 0.01).collect();
+        let (blob, _) = quantize_delta(&delta, 8);
+        for cut in [0, 4, 5, 12, blob.len() - 1] {
+            assert!(dequantize_delta(&blob[..cut]).is_err(), "cut at {cut} must not decode");
+        }
+        let mut bad = blob.clone();
+        bad[4] = 7; // 7-bit quantization is not a thing
+        assert!(matches!(dequantize_delta(&bad), Err(WireError::BadTag(7))));
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(matches!(dequantize_delta(&long), Err(WireError::Malformed(_))));
     }
 
     #[test]

@@ -4,7 +4,9 @@
 //! threads; this module moves the *same* frames between processes (or
 //! machines) over sockets, so trainer actors can run as `fedgraph worker`
 //! processes — the paper's "scalable deployment across multiple physical
-//! machines" claim made literal.
+//! machines" claim made literal. The complete wire reference (this framing,
+//! the `WorkerHello → Assign` handshake with its upload-codec negotiation,
+//! and the ledger invariants) lives in `docs/WIRE_FORMAT.md`.
 //!
 //! ## Socket framing
 //!

@@ -15,7 +15,10 @@ use fedgraph::he::{CkksContext, CkksParams};
 use fedgraph::lowrank::{aggregate_projected, Projection};
 use fedgraph::runtime::ParamSet;
 use fedgraph::testing::{gen, prop_check};
-use fedgraph::transport::serialize::{decode_params, encode_params};
+use fedgraph::transport::serialize::{
+    decode_params, dequantize_delta, encode_params, pack_delta, quantize_delta, unpack_delta,
+    QUANT_CHUNK,
+};
 
 #[test]
 fn prop_partition_covers_and_inverts() {
@@ -229,6 +232,98 @@ fn prop_protocol_frames_reject_random_corruption() {
         let pos = rng.below(corrupted.len());
         corrupted[pos] ^= 1u8 << rng.below(8);
         assert!(UpMsg::decode(&corrupted).is_err());
+    });
+}
+
+#[test]
+fn prop_pack_codec_roundtrip_is_bitwise() {
+    // The lossless upload codec: encode∘decode is the identity on arbitrary
+    // flattened parameter deltas — bit for bit, whether the upload is
+    // correlated with its base (the realistic shape) or pure noise (the raw
+    // fallback), and the blob never exceeds the raw size plus its header.
+    prop_check("pack-roundtrip", 50, |rng| {
+        let n = rng.range(0, 800);
+        let base = gen::f32_vec(rng, n, 10.0);
+        let upload: Vec<f32> = if rng.chance(0.5) {
+            base.iter().map(|b| b * 0.95 + 0.01).collect()
+        } else {
+            gen::f32_vec(rng, n, 1e6)
+        };
+        let blob = pack_delta(&upload, &base);
+        assert!(blob.len() <= 4 * n + 5, "raw fallback must bound the blob");
+        let back = unpack_delta(&blob, &base).unwrap();
+        assert_eq!(back.len(), n);
+        for (a, b) in upload.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pack must be bitwise-lossless");
+        }
+        // Truncation anywhere yields a typed WireError, never a panic.
+        let cut = rng.below(blob.len());
+        assert!(unpack_delta(&blob[..cut], &base).is_err(), "cut at {cut} must not decode");
+    });
+}
+
+#[test]
+fn prop_quantized_codec_bounded_error_and_typed_failures() {
+    // The lossy codec: decode reproduces the encoder's deterministic
+    // dequantization exactly (that agreement is what makes error feedback
+    // correct), reconstruction error stays within one quantization step per
+    // chunk, and truncation is a typed error.
+    prop_check("quantized-roundtrip", 50, |rng| {
+        let n = rng.range(0, 700);
+        let delta = gen::f32_vec(rng, n, 5.0);
+        let bits = if rng.chance(0.5) { 8u8 } else { 4 };
+        let (blob, dequant) = quantize_delta(&delta, bits);
+        let back = dequantize_delta(&blob).unwrap();
+        assert_eq!(back.len(), n);
+        for (a, b) in dequant.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "decode must equal the encoder's dequant");
+        }
+        let levels = ((1u32 << bits) - 1) as f32;
+        for (dc, qc) in delta.chunks(QUANT_CHUNK).zip(dequant.chunks(QUANT_CHUNK)) {
+            let lo = dc.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = dc.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let step = ((hi - lo) / levels).max(0.0);
+            for (d, q) in dc.iter().zip(qc) {
+                assert!((d - q).abs() <= step * 0.51 + 1e-5, "|{d} - {q}| vs step {step}");
+            }
+        }
+        let cut = rng.below(blob.len());
+        assert!(dequantize_delta(&blob[..cut]).is_err(), "cut at {cut} must not decode");
+    });
+}
+
+#[test]
+fn prop_compressed_update_frames_reject_corruption() {
+    // A bit flipped anywhere in a protocol frame carrying a compressed
+    // payload surfaces as a typed decode error (the frame checksum catches
+    // it before the codec ever runs), never a panic or a mis-parse.
+    use fedgraph::federation::protocol::{UpMsg, UpdateEnvelope, UpdatePayload};
+    prop_check("compressed-frame-corruption", 40, |rng| {
+        let n = rng.range(1, 300);
+        let base = gen::f32_vec(rng, n, 10.0);
+        let upload: Vec<f32> = base.iter().map(|b| b + 0.125).collect();
+        let payload = if rng.chance(0.5) {
+            UpdatePayload::Packed { blob: pack_delta(&upload, &base) }
+        } else {
+            let delta: Vec<f32> = upload.iter().zip(&base).map(|(u, b)| u - b).collect();
+            UpdatePayload::Quantized { blob: quantize_delta(&delta, 8).0 }
+        };
+        let frame = UpMsg::Update(UpdateEnvelope {
+            client: 1,
+            round: 2,
+            model_version: 3,
+            loss: 0.5,
+            compute_secs: 0.0,
+            wait_secs: 0.0,
+            privacy_secs: 0.0,
+            staged: Vec::new(),
+            payload,
+        })
+        .encode();
+        let mut corrupted = frame.clone();
+        let pos = rng.below(corrupted.len());
+        corrupted[pos] ^= 1u8 << rng.below(8);
+        assert!(UpMsg::decode(&corrupted).is_err(), "bitflip at {pos} must be detected");
     });
 }
 
