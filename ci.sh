@@ -47,6 +47,16 @@ echo "==> engine-free sharded-aggregation tests (bitwise vs serial)"
 cargo test -q --lib coordinator::aggregate::
 cargo test -q --lib he::ckks::
 
+echo "==> engine-free sliced-build equivalence tests (worker slice == full-build slice, bitwise)"
+cargo test -q --lib coordinator::nc::tests::
+cargo test -q --lib coordinator::fedgcn::
+cargo test -q --lib util::rng::tests::skip_matches_discarded_draws
+cargo test -q --lib graph::subgraph::tests::halo_count_matches_built_view
+
+echo "==> engine-free decode-window tests (per-client referencable bases)"
+cargo test -q --lib federation::runtime::tests::sync_decode_window_keeps_at_most_two_bases
+cargo test -q --lib federation::runtime::tests::async_decode_window_retains_straggler_base
+
 if [ "${1:-}" != "--quick" ]; then
     echo "==> cargo build --release   (tier-1, part 1)"
     cargo build --release
@@ -64,6 +74,7 @@ if [ "${1:-}" != "--quick" ]; then
         echo "==> multi-process smoke test (tcp loopback, 2 worker subprocesses)"
         # Randomized port so concurrent CI runs on one host don't collide.
         SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        SMOKE_JSON="$(mktemp)"
         "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
         W1=$!
         "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
@@ -71,16 +82,30 @@ if [ "${1:-}" != "--quick" ]; then
         COORD_STATUS=0
         "$BIN" run --task NC --method FedAvg --dataset cora-sim \
             --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
-            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 || COORD_STATUS=$?
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
+            --json "$SMOKE_JSON" || COORD_STATUS=$?
         W1_STATUS=0
         W2_STATUS=0
         wait "$W1" || W1_STATUS=$?
         wait "$W2" || W2_STATUS=$?
         if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
             echo "ci.sh: tcp smoke test failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            rm -f "$SMOKE_JSON"
             exit 1
         fi
-        echo "==> tcp smoke test: coordinator and both workers exited 0"
+        # Sliced-build contract: each worker's reported build counters must
+        # cover only its assigned clients (4 trainers round-robin over 2
+        # workers -> 2 each), surfaced as coordinator report notes.
+        for W in 0 1; do
+            if ! grep -q "\"worker${W}_built_clients\": *\"2\"" "$SMOKE_JSON"; then
+                echo "ci.sh: worker $W did not report a 2-client sliced build:" >&2
+                grep -o "\"worker[01]_[a-z_]*\": *\"[^\"]*\"" "$SMOKE_JSON" >&2 || true
+                rm -f "$SMOKE_JSON"
+                exit 1
+            fi
+        done
+        rm -f "$SMOKE_JSON"
+        echo "==> tcp smoke test: coordinator and both workers exited 0; sliced builds covered exactly the assigned clients"
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

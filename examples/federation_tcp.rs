@@ -19,7 +19,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use fedgraph::config::{FedGraphConfig, Method, Task, TransportKind};
-use fedgraph::coordinator::{build_session, run_fedgraph_with};
+use fedgraph::coordinator::{build_session_sliced, run_fedgraph_with, BuildSlice};
 use fedgraph::federation::worker;
 use fedgraph::monitor::Monitor;
 use fedgraph::runtime::Engine;
@@ -79,8 +79,26 @@ fn main() -> anyhow::Result<()> {
             println!("worker {k}: assigned clients {:?}", assignment.clients);
             let monitor =
                 Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
-            let blueprint = build_session(&assignment.cfg, &worker_engine, &monitor)?;
-            worker::serve(assignment, blueprint, monitor.net.clone())?;
+            // Sliced rebuild: this worker materializes only its assigned
+            // clients — O(assigned) startup work and memory — yet the run
+            // stays bitwise-identical to the in-process reference.
+            let slice = BuildSlice::assigned(assignment.n_total, &assignment.clients)?;
+            let t0 = std::time::Instant::now();
+            let build =
+                build_session_sliced(&assignment.cfg, &worker_engine, &monitor, &slice)?;
+            let (built, session_bytes) = monitor.session_build();
+            let build_secs = t0.elapsed().as_secs_f64();
+            println!(
+                "worker {k}: built {built}/{} clients ({session_bytes} session bytes, \
+                 {build_secs:.2}s)",
+                assignment.n_total
+            );
+            worker::serve(
+                assignment,
+                build,
+                monitor.net.clone(),
+                worker::BuildStats { session_bytes, build_secs },
+            )?;
             worker_engine.shutdown();
             Ok(())
         }));

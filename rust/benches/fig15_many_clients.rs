@@ -32,13 +32,28 @@
 //! identical accuracy and simulated bytes, smaller measured wire; `quantized`
 //! (int8 deltas + error feedback) also cuts the *simulated* upload bytes at
 //! a small accuracy cost — the new accuracy-vs-bytes axis.
+//!
+//! Since the sliced-session-build layer a fourth table measures the
+//! **per-worker startup scaling axis**: one worker's slice of the session is
+//! built for 1 / 2 / 4 / 8-worker round-robin assignments and its build
+//! counters recorded — doubling the workers must roughly halve the
+//! per-worker build work and memory (asserted, not just printed).
+//!
+//! Alongside the printed tables the bench writes a machine-readable
+//! `BENCH_fig15.json` (wall clocks, sim vs measured wire bytes, startup
+//! seconds, per-worker session bytes) for the perf trajectory.
 
 #[path = "bench_common.rs"]
 mod common;
 
 use common::*;
 use fedgraph::config::{CompressionMode, FedGraphConfig, FederationMode, Method};
+use fedgraph::coordinator::{build_session_sliced, BuildSlice};
+use fedgraph::monitor::Monitor;
+use fedgraph::transport::SimNet;
+use fedgraph::util::json::{obj, Json};
 use fedgraph::util::tables::Table;
+use std::sync::Arc;
 
 fn arxiv_cfg(clients: usize, r: usize) -> FedGraphConfig {
     let mut cfg = nc(Method::FedAvgNC, "ogbn-arxiv-sim", clients, r);
@@ -64,6 +79,10 @@ fn main() {
     );
     let eng = engine();
     let r = rounds(15);
+    let mut json_scaling: Vec<Json> = Vec::new();
+    let mut json_stragglers: Vec<Json> = Vec::new();
+    let mut json_compression: Vec<Json> = Vec::new();
+    let mut json_startup: Vec<Json> = Vec::new();
     let mut tbl = Table::new(&[
         "clients",
         "seq wall s",
@@ -106,6 +125,18 @@ fn main() {
             mb(rep.total_bytes()),
             format!("{:.4}", rep.final_accuracy),
         ]);
+        json_scaling.push(obj(vec![
+            ("clients", clients.into()),
+            ("seq_wall_secs", seq_wall.into()),
+            ("par_wall_secs", par_wall.into()),
+            ("startup_secs", rep.startup_secs.into()),
+            ("session_clients", rep.session_clients.into()),
+            ("session_bytes", (rep.session_bytes as usize).into()),
+            ("sim_bytes", (rep.total_bytes() as usize).into()),
+            ("wire_payload_bytes", (rep.wire_payload_bytes() as usize).into()),
+            ("wire_logical_bytes", (rep.wire_logical_bytes() as usize).into()),
+            ("accuracy", rep.final_accuracy.into()),
+        ]));
     }
     println!("{}", tbl.render());
 
@@ -152,6 +183,17 @@ fn main() {
             format!("{:.4}", sync_rep.final_accuracy),
             format!("{:.4}", async_rep.final_accuracy),
         ]);
+        json_stragglers.push(obj(vec![
+            ("clients", clients.into()),
+            ("sync_wall_secs", sync_wall.into()),
+            ("async_wall_secs", async_wall.into()),
+            ("sync_sim_bytes", (sync_rep.total_bytes() as usize).into()),
+            ("async_sim_bytes", (async_rep.total_bytes() as usize).into()),
+            ("async_wasted_bytes", (async_rep.train_wasted_bytes as usize).into()),
+            ("stale_rejected", Json::Str(note(&async_rep, "stale_rejected"))),
+            ("sync_accuracy", sync_rep.final_accuracy.into()),
+            ("async_accuracy", async_rep.final_accuracy.into()),
+        ]));
     }
     println!("{}", tbl2.render());
 
@@ -189,7 +231,98 @@ fn main() {
                 format!("{:.2}", rep.wire_compression_ratio()),
                 format!("{:.4}", rep.final_accuracy),
             ]);
+            json_compression.push(obj(vec![
+                ("clients", clients.into()),
+                ("codec", codec.name().into()),
+                ("wall_secs", wall.into()),
+                ("sim_bytes", (rep.total_bytes() as usize).into()),
+                ("wire_payload_bytes", (rep.wire_payload_bytes() as usize).into()),
+                ("wire_logical_bytes", (rep.wire_logical_bytes() as usize).into()),
+                ("wire_compression_ratio", rep.wire_compression_ratio().into()),
+                ("accuracy", rep.final_accuracy.into()),
+            ]));
         }
     }
     println!("{}", tbl3.render());
+
+    // ---- startup scaling: per-worker sliced session build -----------------
+    // Build worker 0's round-robin slice of a 100-client session for growing
+    // worker counts and record its build counters: per-worker startup work
+    // and memory must scale with assigned/total clients, not O(full
+    // session). Asserted — this is the sliced-build acceptance axis.
+    let clients = 100usize;
+    let cfg = arxiv_cfg(clients, r);
+    let mut tbl4 = Table::new(&[
+        "workers",
+        "assigned",
+        "built",
+        "session MB",
+        "build s",
+    ])
+    .with_title("Per-worker startup: sliced session build (worker 0's slice)");
+    let mut bytes_by_workers: Vec<(usize, u64, f64)> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let assigned: Vec<usize> = (0..clients).filter(|c| c % workers == 0).collect();
+        let slice = if workers == 1 {
+            BuildSlice::Full
+        } else {
+            BuildSlice::assigned(clients, &assigned).expect("valid slice")
+        };
+        let monitor = Monitor::new(Arc::new(SimNet::new(cfg.network.clone())));
+        let t0 = std::time::Instant::now();
+        let build = build_session_sliced(&cfg, &eng, &monitor, &slice)
+            .expect("sliced session build");
+        let build_secs = t0.elapsed().as_secs_f64();
+        let (built, session_bytes) = monitor.session_build();
+        assert_eq!(built, assigned.len(), "slice must materialize exactly its clients");
+        assert_eq!(build.num_built(), assigned.len());
+        tbl4.row(&[
+            workers.to_string(),
+            assigned.len().to_string(),
+            built.to_string(),
+            mb(session_bytes),
+            secs(build_secs),
+        ]);
+        json_startup.push(obj(vec![
+            ("workers", workers.into()),
+            ("assigned_clients", assigned.len().into()),
+            ("built_clients", built.into()),
+            ("session_bytes", (session_bytes as usize).into()),
+            ("build_secs", build_secs.into()),
+        ]));
+        bytes_by_workers.push((workers, session_bytes, build_secs));
+    }
+    println!("{}", tbl4.render());
+    // Doubling the workers must roughly halve per-worker session memory
+    // (generous 0.75 factor: client shares are not perfectly even).
+    for pair in bytes_by_workers.windows(2) {
+        let (w_a, bytes_a, _) = pair[0];
+        let (w_b, bytes_b, _) = pair[1];
+        assert!(
+            (bytes_b as f64) < (bytes_a as f64) * 0.75,
+            "per-worker session bytes must shrink with workers: {w_a} workers -> {bytes_a} B, \
+             {w_b} workers -> {bytes_b} B"
+        );
+    }
+    println!(
+        "startup scaling holds: worker-0 session bytes {} (1 worker) -> {} (8 workers)",
+        bytes_by_workers[0].1,
+        bytes_by_workers[3].1
+    );
+
+    // ---- machine-readable dump for the perf trajectory --------------------
+    let bench = obj(vec![
+        ("figure", "fig15".into()),
+        ("rounds", r.into()),
+        ("scale", scale().into()),
+        ("scaling", Json::Arr(json_scaling)),
+        ("stragglers", Json::Arr(json_stragglers)),
+        ("compression", Json::Arr(json_compression)),
+        ("startup", Json::Arr(json_startup)),
+    ]);
+    let path = "BENCH_fig15.json";
+    match std::fs::write(path, bench.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
 }

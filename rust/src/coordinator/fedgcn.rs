@@ -9,8 +9,9 @@
 //!   additive across clients, so the exchange composes with CKKS encryption
 //!   (§3.2) and with the low-rank projection (§4.2), in all four
 //!   combinations.
-//! - **Distributed-GCN** (`exchange_halo_features`): clients download the raw
-//!   features of their halo (cross-client neighbor) nodes.
+//! - **Distributed-GCN / BNS-GCN** (`halo_feature_table`): clients download
+//!   the raw features of their halo (cross-client neighbor) nodes — the
+//!   per-client table build lives here; the runner ledgers the exchange.
 //! - **FedSage+** (`fedsage_generators`): clients fit a linear neighbor
 //!   generator (ridge regression from a node's features to the sum of its
 //!   neighbors' features) on their *internal* edges, exchange generators, and
@@ -18,11 +19,20 @@
 //!   is a deliberately simplified NeighGen (documented in DESIGN.md): it
 //!   preserves the system shape — an O(d²) model exchanged once — and the
 //!   qualitative accuracy position between FedAvg and FedGCN.
+//!
+//! **Sliced builds.** Every exchange takes the session's [`BuildSlice`]: a
+//! worker building only its assigned clients computes the expensive
+//! per-client aggregates for those clients alone, while the shared setup RNG
+//! advances identically to a full build (HE context seeds are drawn for
+//! skipped clients too), so the materialized rows are bitwise-identical to
+//! the matching slice of a full build. Sliced builds skip the SimNet ledger
+//! entirely — the coordinator's full build is the authoritative ledger, and
+//! a worker's monitor is a discarded staging stub.
 
 use anyhow::Result;
 
 use crate::config::PrivacyMode;
-use crate::graph::{local_neighbor_contribution, Csr, LocalGraph, Partition};
+use crate::graph::{local_neighbor_contribution, Csr, Partition};
 use crate::he::CkksContext;
 use crate::lowrank::Projection;
 use crate::monitor::Monitor;
@@ -31,29 +41,75 @@ use crate::util::linalg::{gram, matmul, ridge_solve};
 use crate::util::rng::Rng;
 use crate::util::timer::timed;
 
+use super::BuildSlice;
+
 /// Output of the FedGCN pre-train exchange: per-client model-input features
-/// for owned nodes (row-major `[num_owned, d_eff]`).
+/// for owned nodes (row-major `[num_owned, d_eff]`; empty for clients the
+/// build slice skipped).
 pub struct PretrainFeatures {
     pub per_client: Vec<Vec<f32>>,
     pub d_eff: usize,
 }
 
-/// Count feature rows a contributing client actually has data for (nodes of
-/// the request set with at least one neighbor owned by `client`) — the wire
-/// cost of its upload in the plaintext path.
-fn nonzero_rows(graph: &Csr, part: &Partition, nodes: &[u32], client: u32) -> usize {
-    nodes
-        .iter()
-        .filter(|&&u| graph.neighbors(u).iter().any(|&v| part.assign[v as usize] == client))
-        .count()
+/// Contributing-client row counts, computed in **one pass over the arcs**:
+/// `counts[i][j]` = number of client *i*'s owned nodes with at least one
+/// neighbor owned by client *j* — the per-pair feature-row count that sizes
+/// client *j*'s plaintext upload in the FedGCN exchange.
+///
+/// This replaces the old per-(client, client) `nonzero_rows` rescan of every
+/// request node's CSR neighbor list (O(m · arcs) across the exchange, per
+/// hop) with one O(arcs) sweep whose table both hops reuse; the produced
+/// wire-byte ledger is identical (pinned by
+/// `contributing_counts_match_per_pair_rescan`).
+fn contributing_counts(graph: &Csr, part: &Partition) -> Vec<Vec<u32>> {
+    let m = part.num_clients;
+    let mut counts = vec![vec![0u32; m]; m];
+    let mut seen: Vec<u32> = Vec::new();
+    for u in 0..graph.n as u32 {
+        let i = part.assign[u as usize] as usize;
+        seen.clear();
+        for &v in graph.neighbors(u) {
+            let j = part.assign[v as usize];
+            if !seen.contains(&j) {
+                seen.push(j);
+                counts[i][j as usize] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Expand a per-client materialization mask by one hop: every client owning
+/// a node adjacent to (or owned by) a wanted client becomes wanted. The
+/// first hop of a 2-hop sliced exchange needs these clients' aggregate rows
+/// as inputs to the second hop — and computes each included client's rows
+/// over its **full** owned set, so per-row float-op order (and the HE slot
+/// layout) is identical to a full build.
+fn expand_wants(graph: &Csr, part: &Partition, wants: &[bool]) -> Vec<bool> {
+    let mut out = wants.to_vec();
+    for (i, members) in part.members.iter().enumerate() {
+        if !wants[i] {
+            continue;
+        }
+        for &u in members {
+            for &v in graph.neighbors(u) {
+                out[part.assign[v as usize] as usize] = true;
+            }
+        }
+    }
+    out
 }
 
 /// The FedGCN pre-train exchange (with optional HE and/or low-rank).
 ///
 /// `num_hops` ∈ {1, 2}: hop 2 re-aggregates the hop-1 result (a second
 /// communication round — its cost shows up exactly as the paper describes).
-/// Returns per-client aggregated features; `d_eff` is the dataset dim, or
-/// the rank when low-rank compression is on.
+/// Returns per-client aggregated features for the clients `slice` wants;
+/// `d_eff` is the dataset dim, or the rank when low-rank compression is on.
+///
+/// A client's owned node set is exactly `part.members[client]`, so the
+/// exchange needs no materialized local-graph views at all — partition
+/// bookkeeping is enough.
 #[allow(clippy::too_many_arguments)]
 pub fn fedgcn_pretrain(
     monitor: &Monitor,
@@ -64,24 +120,29 @@ pub fn fedgcn_pretrain(
     features: &[f32],
     dim: usize,
     part: &Partition,
-    locals: &[LocalGraph],
+    slice: &BuildSlice,
     rng: &mut Rng,
 ) -> Result<PretrainFeatures> {
     assert!(num_hops >= 1 && num_hops <= 2);
     monitor.start("pretrain");
-    let m = locals.len();
+    let m = part.num_clients;
+    let ledger = slice.is_full();
+    let wants = slice.wanted_flags(m);
+    let he = matches!(privacy, PrivacyMode::He(_));
 
     // Low-rank setup: the server samples P and distributes it (paper §4.2).
     // When HE is on, P is additionally encrypted before distribution, which
     // the paper notes guards against inversion of the shared aggregates.
     let projection = if lowrank_rank > 0 {
         let p = Projection::sample(dim, lowrank_rank, rng);
-        let per_client_bytes = match privacy {
-            PrivacyMode::He(hp) => hp.encrypted_vector_bytes(p.matrix.len()),
-            _ => p.wire_bytes(),
-        };
-        for _ in 0..m {
-            monitor.net.send(Phase::PreTrain, Direction::Down, per_client_bytes);
+        if ledger {
+            let per_client_bytes = match privacy {
+                PrivacyMode::He(hp) => hp.encrypted_vector_bytes(p.matrix.len()),
+                _ => p.wire_bytes(),
+            };
+            for _ in 0..m {
+                monitor.net.send(Phase::PreTrain, Direction::Down, per_client_bytes);
+            }
         }
         Some(p)
     } else {
@@ -91,6 +152,9 @@ pub fn fedgcn_pretrain(
 
     // Working feature table, projected once up front if low-rank is on
     // (client-side: each client projects its own rows; no communication).
+    // This table (and the per-hop aggregate below) is global residency —
+    // FedGCN's exchange reads every client's rows as contribution inputs —
+    // while the per-client *compute* is what the slice bounds.
     let mut x: Vec<f32> = match &projection {
         Some(p) => {
             let (px, secs) = timed(|| p.project(features, graph.n));
@@ -100,16 +164,33 @@ pub fn fedgcn_pretrain(
         None => features.to_vec(),
     };
 
-    for _hop in 0..num_hops {
+    // Per-pair wire rows for the plaintext ledger (full builds only).
+    let counts = (ledger && !he).then(|| contributing_counts(graph, part));
+
+    for hop in 0..num_hops {
+        // Which clients' aggregate rows this hop materializes: the final hop
+        // needs the sliced clients; the first of two hops additionally needs
+        // every client within one hop of a sliced client's nodes.
+        let hop_wants: Vec<bool> = if slice.is_full() || hop + 1 == num_hops {
+            wants.clone()
+        } else {
+            expand_wants(graph, part, &wants)
+        };
         let mut next = vec![0f32; graph.n * d_eff];
-        for local in locals {
-            let i = local.client;
-            let nodes = &local.owned;
+        for i in 0..m as u32 {
+            // HE sessions draw one context seed per (hop, client) whether or
+            // not the rows are materialized: the shared setup stream must
+            // advance identically in full and sliced builds.
+            let ctx_seed = if he { Some(rng.next_u64() | 1) } else { None };
+            if !hop_wants[i as usize] {
+                continue;
+            }
+            let nodes = &part.members[i as usize];
             // Each other client computes + uploads its additive contribution.
             let mut agg = vec![0f32; nodes.len() * d_eff];
             match privacy {
                 PrivacyMode::He(hp) => {
-                    let ctx = CkksContext::new(hp.clone(), rng.next_u64() | 1);
+                    let ctx = CkksContext::new(hp.clone(), ctx_seed.expect("drawn above"));
                     let max_dim = graph.n.max(d_eff);
                     let mut acc: Option<crate::he::Ciphertext> = None;
                     for j in 0..m as u32 {
@@ -120,7 +201,9 @@ pub fn fedgcn_pretrain(
                             local_neighbor_contribution(graph, part, &x, d_eff, nodes, j);
                         let (ct, enc) = timed(|| ctx.encrypt(&contrib, max_dim));
                         monitor.add_secs("he_encrypt", enc);
-                        monitor.net.send(Phase::PreTrain, Direction::Up, ct.wire_bytes());
+                        if ledger {
+                            monitor.net.send(Phase::PreTrain, Direction::Up, ct.wire_bytes());
+                        }
                         let (_, add) = timed(|| match &mut acc {
                             None => acc = Some(ct.clone()),
                             Some(a) => ctx.add_assign(a, &ct),
@@ -128,7 +211,9 @@ pub fn fedgcn_pretrain(
                         monitor.add_secs("he_aggregate", add);
                     }
                     if let Some(acc) = acc {
-                        monitor.net.send(Phase::PreTrain, Direction::Down, acc.wire_bytes());
+                        if ledger {
+                            monitor.net.send(Phase::PreTrain, Direction::Down, acc.wire_bytes());
+                        }
                         let (dec, dsecs) = timed(|| ctx.decrypt(&acc));
                         monitor.add_secs("he_decrypt", dsecs);
                         agg.copy_from_slice(&dec);
@@ -141,23 +226,27 @@ pub fn fedgcn_pretrain(
                         }
                         let contrib =
                             local_neighbor_contribution(graph, part, &x, d_eff, nodes, j);
-                        // Wire cost: only rows this client has data for.
-                        let rows = nonzero_rows(graph, part, nodes, j);
-                        monitor.net.send(
-                            Phase::PreTrain,
-                            Direction::Up,
-                            (rows * d_eff * 4) as u64,
-                        );
+                        if let Some(counts) = &counts {
+                            // Wire cost: only rows this client has data for.
+                            let rows = counts[i as usize][j as usize] as usize;
+                            monitor.net.send(
+                                Phase::PreTrain,
+                                Direction::Up,
+                                (rows * d_eff * 4) as u64,
+                            );
+                        }
                         for (a, c) in agg.iter_mut().zip(&contrib) {
                             *a += c;
                         }
                     }
-                    // Server returns the aggregate for this client's nodes.
-                    monitor.net.send(
-                        Phase::PreTrain,
-                        Direction::Down,
-                        (nodes.len() * d_eff * 4) as u64,
-                    );
+                    if ledger {
+                        // Server returns the aggregate for this client's nodes.
+                        monitor.net.send(
+                            Phase::PreTrain,
+                            Direction::Down,
+                            (nodes.len() * d_eff * 4) as u64,
+                        );
+                    }
                 }
             }
             // Local part: own contribution + self feature, then degree
@@ -175,11 +264,14 @@ pub fn fedgcn_pretrain(
         x = next;
     }
     monitor.stop("pretrain");
-    let per_client = locals
-        .iter()
-        .map(|l| {
-            let mut out = vec![0f32; l.owned.len() * d_eff];
-            for (k, &u) in l.owned.iter().enumerate() {
+    let per_client = (0..m)
+        .map(|ci| {
+            if !wants[ci] {
+                return Vec::new();
+            }
+            let owned = &part.members[ci];
+            let mut out = vec![0f32; owned.len() * d_eff];
+            for (k, &u) in owned.iter().enumerate() {
                 out[k * d_eff..(k + 1) * d_eff]
                     .copy_from_slice(&x[u as usize * d_eff..(u as usize + 1) * d_eff]);
             }
@@ -189,60 +281,45 @@ pub fn fedgcn_pretrain(
     Ok(PretrainFeatures { per_client, d_eff })
 }
 
-/// Distributed-GCN halo exchange: each client downloads raw features of its
-/// halo nodes (uploaded by their owners). Returns per-client halo feature
-/// tables aligned with `locals[i].halo`.
-pub fn exchange_halo_features(
-    monitor: &Monitor,
-    features: &[f32],
-    dim: usize,
-    locals: &[LocalGraph],
-) -> Vec<Vec<f32>> {
-    monitor.start("pretrain");
-    let out = locals
-        .iter()
-        .map(|l| {
-            let mut table = vec![0f32; l.halo.len() * dim];
-            for (k, &u) in l.halo.iter().enumerate() {
-                table[k * dim..(k + 1) * dim]
-                    .copy_from_slice(&features[u as usize * dim..(u as usize + 1) * dim]);
-            }
-            // Owners upload, this client downloads.
-            let bytes = (l.halo.len() * dim * 4) as u64;
-            monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
-            monitor.net.send(Phase::PreTrain, Direction::Down, bytes);
-            table
-        })
-        .collect();
-    monitor.stop("pretrain");
-    out
+/// One client's halo feature table (aligned with `halo`): the raw rows its
+/// halo nodes' owners upload in the Distributed-GCN / BNS-GCN exchange. The
+/// runner ledgers the transfer (full builds only) and drives the per-client
+/// loop, so sliced builds simply never call this for skipped clients.
+pub fn halo_feature_table(features: &[f32], dim: usize, halo: &[u32]) -> Vec<f32> {
+    let mut table = vec![0f32; halo.len() * dim];
+    for (k, &u) in halo.iter().enumerate() {
+        table[k * dim..(k + 1) * dim]
+            .copy_from_slice(&features[u as usize * dim..(u as usize + 1) * dim]);
+    }
+    table
 }
 
 /// FedSage+ NeighGen-lite: fit `W` minimizing ‖X_v W − Σ_{u∈N(v)} x_u‖² over
 /// each client's internal edges (ridge), exchange the `d×d` generators, and
 /// return the average generator. The caller imputes cross-client sums as
 /// `x_v · W_avg` for boundary nodes.
+///
+/// Every client contributes a generator regardless of the build slice (the
+/// average is part of the shared global plan), so this takes the partition
+/// only; `ledger` is false for sliced worker builds.
 pub fn fedsage_generators(
     monitor: &Monitor,
     graph: &Csr,
     features: &[f32],
     dim: usize,
     part: &Partition,
-    locals: &[LocalGraph],
+    ledger: bool,
 ) -> Vec<f32> {
     monitor.start("pretrain");
     let mut avg = vec![0f32; dim * dim];
     let mut contributors = 0f32;
-    for local in locals {
+    for i in 0..part.num_clients as u32 {
         // Training pairs: (x_v, internal neighbor sum) for owned nodes with
         // at least one internal neighbor.
-        let nodes: Vec<u32> = local
-            .owned
+        let nodes: Vec<u32> = part.members[i as usize]
             .iter()
             .copied()
-            .filter(|&u| {
-                graph.neighbors(u).iter().any(|&v| part.assign[v as usize] == local.client)
-            })
+            .filter(|&u| graph.neighbors(u).iter().any(|&v| part.assign[v as usize] == i))
             .collect();
         if nodes.len() < 8 {
             continue;
@@ -252,7 +329,7 @@ pub fn fedsage_generators(
                 .iter()
                 .flat_map(|&u| features[u as usize * dim..(u as usize + 1) * dim].to_vec())
                 .collect();
-            let ys = local_neighbor_contribution(graph, part, features, dim, &nodes, local.client);
+            let ys = local_neighbor_contribution(graph, part, features, dim, &nodes, i);
             // W = (XᵀX + λI)⁻¹ Xᵀ Y
             let g = gram(&xs, nodes.len(), dim);
             let mut xty = vec![0f32; dim * dim];
@@ -273,8 +350,10 @@ pub fn fedsage_generators(
         });
         monitor.add_secs("neighgen_fit", secs);
         // Generator exchange: up to the server, averaged model back down.
-        let bytes = (dim * dim * 4) as u64;
-        monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+        if ledger {
+            let bytes = (dim * dim * 4) as u64;
+            monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+        }
         for (a, v) in avg.iter_mut().zip(&w) {
             *a += v;
         }
@@ -285,32 +364,34 @@ pub fn fedsage_generators(
             *a /= contributors;
         }
     }
-    for _ in locals {
-        monitor.net.send(Phase::PreTrain, Direction::Down, (dim * dim * 4) as u64);
+    if ledger {
+        for _ in 0..part.num_clients {
+            monitor.net.send(Phase::PreTrain, Direction::Down, (dim * dim * 4) as u64);
+        }
     }
     monitor.stop("pretrain");
     avg
 }
 
 /// Impute cross-client neighbor sums with the averaged generator:
-/// returns, for each owned node of `local`, `x_v + internal_sum_v +
+/// returns, for each owned node of `client`, `x_v + internal_sum_v +
 /// gen(x_v)·1[v is boundary]`, degree-normalized — the FedSage+ training
-/// input.
+/// input. Per-client, so sliced builds call it for assigned clients only.
 pub fn fedsage_features(
     graph: &Csr,
     features: &[f32],
     dim: usize,
     part: &Partition,
-    local: &LocalGraph,
+    client: u32,
     generator: &[f32],
 ) -> Vec<f32> {
-    let nodes = &local.owned;
-    let internal = local_neighbor_contribution(graph, part, features, dim, nodes, local.client);
+    let nodes = &part.members[client as usize];
+    let internal = local_neighbor_contribution(graph, part, features, dim, nodes, client);
     let mut out = vec![0f32; nodes.len() * dim];
     for (k, &u) in nodes.iter().enumerate() {
         let x_v = &features[u as usize * dim..(u as usize + 1) * dim];
         let is_boundary =
-            graph.neighbors(u).iter().any(|&v| part.assign[v as usize] != local.client);
+            graph.neighbors(u).iter().any(|&v| part.assign[v as usize] != client);
         let row = &mut out[k * dim..(k + 1) * dim];
         row.copy_from_slice(&internal[k * dim..(k + 1) * dim]);
         if is_boundary {
@@ -334,7 +415,7 @@ mod tests {
     use crate::transport::{NetConfig, SimNet};
     use std::sync::Arc;
 
-    fn setup(n: usize, d: usize) -> (Csr, Vec<f32>, Partition, Vec<LocalGraph>, Monitor) {
+    fn setup(n: usize, d: usize) -> (Csr, Vec<f32>, Partition, Monitor) {
         let mut rng = Rng::seeded(3);
         let spec = crate::graph::PlantedSpec {
             n,
@@ -346,14 +427,13 @@ mod tests {
         let (g, labels) = crate::graph::planted_graph(&spec, &mut rng);
         let feats = crate::graph::class_features(&labels, 3, d, 1.0, &mut rng);
         let part = crate::graph::dirichlet_partition(&labels, 3, 4, 10_000.0, &mut rng);
-        let locals = build_local_graphs(&g, &part);
         let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
-        (g, feats, part, locals, m)
+        (g, feats, part, m)
     }
 
     #[test]
     fn fedgcn_matches_direct_aggregation() {
-        let (g, feats, part, locals, mon) = setup(120, 8);
+        let (g, feats, part, mon) = setup(120, 8);
         let mut rng = Rng::seeded(1);
         let res = fedgcn_pretrain(
             &mon,
@@ -364,14 +444,14 @@ mod tests {
             &feats,
             8,
             &part,
-            &locals,
+            &BuildSlice::Full,
             &mut rng,
         )
         .unwrap();
         assert_eq!(res.d_eff, 8);
         // Check one client against a direct computation of (x_v + Σ x_u)/deg̃.
-        let l = &locals[0];
-        for (k, &u) in l.owned.iter().enumerate().take(10) {
+        let owned = &part.members[0];
+        for (k, &u) in owned.iter().enumerate().take(10) {
             let mut want = feats[u as usize * 8..(u as usize + 1) * 8].to_vec();
             for &v in g.neighbors(u) {
                 for t in 0..8 {
@@ -392,8 +472,93 @@ mod tests {
     }
 
     #[test]
+    fn contributing_counts_match_per_pair_rescan() {
+        // The micro-opt's ledger contract: the one-pass table equals the old
+        // per-(client, node) neighbor-list rescan for every (i, j) pair — so
+        // the plaintext exchange's wire-byte ledger is unchanged.
+        let (g, _feats, part, _mon) = setup(150, 4);
+        let nonzero_rows = |nodes: &[u32], client: u32| -> usize {
+            nodes
+                .iter()
+                .filter(|&&u| {
+                    g.neighbors(u).iter().any(|&v| part.assign[v as usize] == client)
+                })
+                .count()
+        };
+        let counts = contributing_counts(&g, &part);
+        for i in 0..part.num_clients {
+            for j in 0..part.num_clients as u32 {
+                assert_eq!(
+                    counts[i][j as usize] as usize,
+                    nonzero_rows(&part.members[i], j),
+                    "pair ({i}, {j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_pretrain_matches_full_slice_bitwise() {
+        // The sliced-build contract on the richest exchange: materialized
+        // rows equal the full build's bit for bit, and the shared RNG stream
+        // ends in the same state, for 1 and 2 hops, plaintext and HE, with
+        // and without low-rank.
+        let (g, feats, part, _) = setup(90, 8);
+        let slice = BuildSlice::assigned(4, &[1, 3]).unwrap();
+        let cases: Vec<(PrivacyMode, usize, usize)> = vec![
+            (PrivacyMode::Plaintext, 0, 1),
+            (PrivacyMode::Plaintext, 0, 2),
+            (PrivacyMode::Plaintext, 3, 1),
+            (PrivacyMode::He(crate::he::CkksParams::default_params()), 0, 1),
+            (PrivacyMode::He(crate::he::CkksParams::default_params()), 0, 2),
+        ];
+        for (privacy, rank, hops) in cases {
+            let mon_a = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let mut rng_a = Rng::seeded(17);
+            let full = fedgcn_pretrain(
+                &mon_a,
+                &privacy,
+                rank,
+                hops,
+                &g,
+                &feats,
+                8,
+                &part,
+                &BuildSlice::Full,
+                &mut rng_a,
+            )
+            .unwrap();
+            let mon_b = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let mut rng_b = Rng::seeded(17);
+            let sliced = fedgcn_pretrain(
+                &mon_b, &privacy, rank, hops, &g, &feats, 8, &part, &slice, &mut rng_b,
+            )
+            .unwrap();
+            assert_eq!(full.d_eff, sliced.d_eff);
+            for c in 0..4 {
+                if slice.wants(c) {
+                    assert_eq!(
+                        full.per_client[c], sliced.per_client[c],
+                        "client {c} rows must be bitwise-identical \
+                         ({privacy:?}, rank {rank}, hops {hops})"
+                    );
+                } else {
+                    assert!(sliced.per_client[c].is_empty(), "skipped client {c} materialized");
+                }
+            }
+            assert_eq!(
+                rng_a.next_u64(),
+                rng_b.next_u64(),
+                "setup RNG must advance identically ({privacy:?}, rank {rank}, hops {hops})"
+            );
+            // Sliced builds skip the ledger; full builds charge it.
+            assert_eq!(mon_b.net.counter(Phase::PreTrain).bytes_up, 0);
+        }
+    }
+
+    #[test]
     fn lowrank_equals_project_of_aggregate() {
-        let (g, feats, part, locals, mon) = setup(100, 16);
+        let (g, feats, part, mon) = setup(100, 16);
         // Full pipeline with rank 4 must equal projecting the plain result
         // (linearity, the §4.2 property) — same projection seed.
         let rank = 4;
@@ -407,7 +572,7 @@ mod tests {
             &feats,
             16,
             &part,
-            &locals,
+            &BuildSlice::Full,
             &mut rng1,
         )
         .unwrap();
@@ -425,12 +590,12 @@ mod tests {
             &feats,
             16,
             &part,
-            &locals,
+            &BuildSlice::Full,
             &mut rng3,
         )
         .unwrap();
-        for (c, l) in locals.iter().enumerate() {
-            let projected = p.project(&plain.per_client[c], l.owned.len());
+        for c in 0..part.num_clients {
+            let projected = p.project(&plain.per_client[c], part.members[c].len());
             for (a, b) in lr.per_client[c].iter().zip(&projected) {
                 assert!((a - b).abs() < 1e-3, "{a} vs {b}");
             }
@@ -443,7 +608,7 @@ mod tests {
 
     #[test]
     fn he_pretrain_close_to_plain_but_heavier() {
-        let (g, feats, part, locals, mon) = setup(80, 8);
+        let (g, feats, part, mon) = setup(80, 8);
         let mut rng = Rng::seeded(5);
         let he = fedgcn_pretrain(
             &mon,
@@ -454,7 +619,7 @@ mod tests {
             &feats,
             8,
             &part,
-            &locals,
+            &BuildSlice::Full,
             &mut rng,
         )
         .unwrap();
@@ -469,7 +634,7 @@ mod tests {
             &feats,
             8,
             &part,
-            &locals,
+            &BuildSlice::Full,
             &mut rng2,
         )
         .unwrap();
@@ -485,40 +650,68 @@ mod tests {
 
     #[test]
     fn two_hop_costs_roughly_double() {
-        let (g, feats, part, locals, mon1) = setup(100, 8);
+        let (g, feats, part, mon1) = setup(100, 8);
         let mut rng = Rng::seeded(6);
-        fedgcn_pretrain(&mon1, &PrivacyMode::Plaintext, 0, 1, &g, &feats, 8, &part, &locals, &mut rng)
-            .unwrap();
+        fedgcn_pretrain(
+            &mon1,
+            &PrivacyMode::Plaintext,
+            0,
+            1,
+            &g,
+            &feats,
+            8,
+            &part,
+            &BuildSlice::Full,
+            &mut rng,
+        )
+        .unwrap();
         let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
-        fedgcn_pretrain(&mon2, &PrivacyMode::Plaintext, 0, 2, &g, &feats, 8, &part, &locals, &mut rng)
-            .unwrap();
+        fedgcn_pretrain(
+            &mon2,
+            &PrivacyMode::Plaintext,
+            0,
+            2,
+            &g,
+            &feats,
+            8,
+            &part,
+            &BuildSlice::Full,
+            &mut rng,
+        )
+        .unwrap();
         let b1 = mon1.net.counter(Phase::PreTrain).bytes_up;
         let b2 = mon2.net.counter(Phase::PreTrain).bytes_up;
         assert!((1.8..2.2).contains(&(b2 as f64 / b1 as f64)), "{b1} vs {b2}");
     }
 
     #[test]
-    fn halo_exchange_table_alignment() {
-        let (g, feats, _part, locals, mon) = setup(60, 4);
-        let tables = exchange_halo_features(&mon, &feats, 4, &locals);
-        for (l, t) in locals.iter().zip(&tables) {
+    fn halo_table_alignment() {
+        let (g, feats, part, _mon) = setup(60, 4);
+        let locals = build_local_graphs(&g, &part);
+        for l in &locals {
+            let t = halo_feature_table(&feats, 4, &l.halo);
             assert_eq!(t.len(), l.halo.len() * 4);
             for (k, &u) in l.halo.iter().enumerate() {
                 assert_eq!(&t[k * 4..(k + 1) * 4], &feats[u as usize * 4..(u as usize + 1) * 4]);
             }
         }
-        let _ = g;
-        assert!(mon.net.counter(Phase::PreTrain).bytes_down > 0);
     }
 
     #[test]
     fn fedsage_generator_imputes_reasonably() {
-        let (g, feats, part, locals, mon) = setup(200, 6);
-        let gen = fedsage_generators(&mon, &g, &feats, 6, &part, &locals);
+        let (g, feats, part, mon) = setup(200, 6);
+        let gen = fedsage_generators(&mon, &g, &feats, 6, &part, true);
         assert_eq!(gen.len(), 36);
         assert!(gen.iter().any(|&v| v != 0.0));
-        let f0 = fedsage_features(&g, &feats, 6, &part, &locals[0], &gen);
-        assert_eq!(f0.len(), locals[0].owned.len() * 6);
+        let f0 = fedsage_features(&g, &feats, 6, &part, 0, &gen);
+        assert_eq!(f0.len(), part.members[0].len() * 6);
         assert!(f0.iter().all(|v| v.is_finite()));
+        assert!(mon.net.counter(Phase::PreTrain).bytes_down > 0);
+        // A sliced build leaves the ledger untouched but computes the same
+        // generator (it is global-plan state).
+        let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let gen2 = fedsage_generators(&mon2, &g, &feats, 6, &part, false);
+        assert_eq!(gen, gen2);
+        assert_eq!(mon2.net.counter(Phase::PreTrain).bytes_up, 0);
     }
 }

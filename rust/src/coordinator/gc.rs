@@ -17,7 +17,7 @@ use anyhow::{bail, Result};
 use crate::config::{FedGraphConfig, Method, PrivacyMode};
 use crate::data::gc::{gc_spec, generate_gc, GCDataset, SmallGraph};
 use crate::federation::{
-    Charge, ClientLogic, Deployment, Federation, LocalUpdate, RoundUpdate, SessionBlueprint,
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, RoundUpdate, SessionBuild,
 };
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
@@ -26,6 +26,7 @@ use crate::util::rng::Rng;
 
 use super::gcfl::{GcflSignal, GcflState};
 use super::selection::select_with_dropout;
+use super::BuildSlice;
 
 /// Pack up to `g_pad` graphs into one padded GIN batch.
 /// Tensor order matches the artifact: x, src, dst, enorm, gid, nmask,
@@ -164,7 +165,8 @@ impl ClientLogic for GcLogic {
 }
 
 pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    let (blueprint, mut rng) = build_gc(cfg, engine, monitor)?;
+    let (build, mut rng) = build_gc(cfg, engine, monitor, &BuildSlice::Full)?;
+    let blueprint = build.into_blueprint()?;
     let global_init = blueprint.init.clone();
     let deployment = Deployment::from_config(cfg)?;
     let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
@@ -288,15 +290,20 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
 }
 
 /// Deterministic session build for GC: dataset, Dirichlet graph partition,
-/// artifact selection, one [`GcLogic`] per client. Worker processes replay
-/// this from the shipped config (see [`super::nc::build_nc`]).
+/// artifact selection, one [`GcLogic`] per materialized client. Worker
+/// processes replay this from the shipped config with their `Assign` slice
+/// (see [`super::nc::build_nc`]); the graph store is shared (`Arc`), so the
+/// per-client slice bounds the index tables and logic allocations.
 pub(crate) fn build_gc(
     cfg: &FedGraphConfig,
     engine: &Engine,
     monitor: &Monitor,
-) -> Result<(SessionBlueprint, Rng)> {
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
     let spec = gc_spec(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
+    slice.check(cfg.n_trainer)?;
+    monitor.start("startup");
     if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
         bail!("SelfTrain has no aggregation to encrypt");
     }
@@ -357,9 +364,14 @@ pub(crate) fn build_gc(
     let weights: Vec<f32> =
         per_client_idx.iter().map(|(tr, _)| tr.len().max(1) as f32).collect();
     let ds = Arc::new(ds);
-    let logics: Vec<Box<dyn ClientLogic>> = per_client_idx
-        .into_iter()
-        .map(|(train_idx, test_idx)| {
+    let mut logics: Vec<(usize, Box<dyn ClientLogic>)> = Vec::new();
+    for (client, (train_idx, test_idx)) in per_client_idx.into_iter().enumerate() {
+        if !slice.wants(client) {
+            continue;
+        }
+        monitor.count_built_client(((train_idx.len() + test_idx.len()) * 8) as u64);
+        logics.push((
+            client,
             Box::new(GcLogic {
                 ds: ds.clone(),
                 train_idx,
@@ -375,8 +387,12 @@ pub(crate) fn build_gc(
                 d,
                 local_steps: cfg.local_steps,
                 learning_rate: cfg.learning_rate,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    Ok((SessionBlueprint { init: global_init, weights, max_dim: n_pad, logics }, rng))
+            }) as Box<dyn ClientLogic>,
+        ));
+    }
+    monitor.stop("startup");
+    Ok((
+        SessionBuild { init: global_init, weights, max_dim: n_pad, n_total: cfg.n_trainer, logics },
+        rng,
+    ))
 }

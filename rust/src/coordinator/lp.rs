@@ -26,7 +26,7 @@ use anyhow::Result;
 use crate::config::{FedGraphConfig, Method};
 use crate::data::lp::{generate_lp, region_config, RegionData};
 use crate::federation::{
-    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint,
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBuild,
 };
 use crate::graph::Block;
 use crate::monitor::{Monitor, RoundRecord};
@@ -38,6 +38,7 @@ use crate::util::stats::auc;
 
 use super::nc::block_tensors;
 use super::selection::select_with_dropout;
+use super::BuildSlice;
 use std::sync::Arc;
 
 fn region_block(r: &RegionData, n_pad: usize, e_pad: usize) -> Block {
@@ -194,7 +195,8 @@ impl ClientLogic for LpLogic {
 }
 
 pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    let (blueprint, mut rng) = build_lp(cfg, engine, monitor)?;
+    let (build, mut rng) = build_lp(cfg, engine, monitor, &BuildSlice::Full)?;
+    let blueprint = build.into_blueprint()?;
     let m = blueprint.num_clients();
     let global_init = blueprint.init.clone();
     let deployment = Deployment::from_config(cfg)?;
@@ -268,17 +270,25 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
 }
 
 /// Deterministic session build for LP: one region per trainer, the region
-/// blocks precomputed, one [`LpLogic`] per client. Worker processes replay
-/// this from the shipped config (see [`super::nc::build_nc`]).
+/// blocks precomputed, one [`LpLogic`] per materialized client. Worker
+/// processes replay this from the shipped config with their `Assign` slice
+/// (see [`super::nc::build_nc`]). Region *generation* is sequential-RNG
+/// bound (every region must be generated to advance the shared stream —
+/// negative sampling draws a data-dependent count), but skipped regions are
+/// dropped immediately and their padded training blocks — the dominant
+/// per-client allocation — are never built.
 pub(crate) fn build_lp(
     cfg: &FedGraphConfig,
     engine: &Engine,
     monitor: &Monitor,
-) -> Result<(SessionBlueprint, Rng)> {
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
     let countries = region_config(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown LP region config '{}' (use US, US+BR or 5country)", cfg.dataset
         ))?;
+    slice.check(countries.len())?;
+    monitor.start("startup");
     let mut rng = Rng::seeded(cfg.seed);
     monitor.note("task", "LP");
     monitor.note("dataset", &cfg.dataset);
@@ -307,14 +317,18 @@ pub(crate) fn build_lp(
 
     let weights: Vec<f32> =
         ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
-    let logics: Vec<Box<dyn ClientLogic>> = ds
-        .regions
-        .into_iter()
-        .enumerate()
-        .map(|(client, region)| {
+    let mut logics: Vec<(usize, Box<dyn ClientLogic>)> = Vec::new();
+    for (client, region) in ds.regions.into_iter().enumerate() {
+        if !slice.wants(client) {
+            continue; // region dropped: generated only to advance the stream
+        }
+        let block = region_block(&region, n_pad, e_pad);
+        monitor.count_built_client(lp_client_bytes(&region, &block));
+        logics.push((
+            client,
             Box::new(LpLogic {
                 client,
-                block: region_block(&region, n_pad, e_pad),
+                block,
                 region,
                 method: cfg.method,
                 temporal,
@@ -326,8 +340,21 @@ pub(crate) fn build_lp(
                 p_pad,
                 local_steps: cfg.local_steps,
                 learning_rate: cfg.learning_rate,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    Ok((SessionBlueprint { init: global_init, weights, max_dim: n_pad, logics }, rng))
+            }) as Box<dyn ClientLogic>,
+        ));
+    }
+    monitor.stop("startup");
+    Ok((SessionBuild { init: global_init, weights, max_dim: n_pad, n_total: m, logics }, rng))
+}
+
+/// Approximate bytes of one materialized LP client's session state: the
+/// region data retained by its logic plus the padded region block (the
+/// dominant allocation).
+fn lp_client_bytes(r: &RegionData, b: &Block) -> u64 {
+    let region = r.features.len() * 4
+        + r.graph.adj.len() * 4
+        + r.graph.offsets.len() * 8
+        + (r.train_edges.len() + r.test_pos.len() + r.test_neg.len()) * 8
+        + r.train_times.len() * 4;
+    region as u64 + b.wire_bytes()
 }

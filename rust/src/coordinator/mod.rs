@@ -19,14 +19,78 @@ pub mod selection;
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::config::{FedGraphConfig, Task};
+use crate::federation::deploy::SessionBuild;
 use crate::federation::SessionBlueprint;
 use crate::monitor::report::Report;
 use crate::monitor::Monitor;
 use crate::runtime::Engine;
 use crate::transport::SimNet;
+
+/// Which clients of a session a build materializes — the build-side half of
+/// the deployment layer's `Assign` slice plan.
+///
+/// A full build (the coordinator's own, and the pre-slice behavior) keeps
+/// every client. A worker process passes its assigned client indices so its
+/// startup **work and memory scale with `clients.len() / n_total`** instead
+/// of O(full session): skipped clients contribute only partition bookkeeping
+/// (ownership, halo counts, aggregation weights) and the deterministic RNG
+/// advance that keeps the sliced build bitwise-identical to the matching
+/// slice of a full build.
+#[derive(Clone, Debug)]
+pub enum BuildSlice {
+    /// Materialize every client (bitwise-identical to the pre-slice builds).
+    Full,
+    /// Materialize only `clients` (sorted, deduplicated, all `< n_total`) of
+    /// an `n_total`-client session.
+    Assigned { n_total: usize, clients: Vec<usize> },
+}
+
+impl BuildSlice {
+    /// A validated slice over `clients` of an `n_total`-client session.
+    pub fn assigned(n_total: usize, clients: &[usize]) -> Result<BuildSlice> {
+        let mut clients = clients.to_vec();
+        clients.sort_unstable();
+        clients.dedup();
+        if let Some(&c) = clients.iter().find(|&&c| c >= n_total) {
+            bail!("build slice client {c} out of range (session has {n_total} clients)");
+        }
+        Ok(BuildSlice::Assigned { n_total, clients })
+    }
+
+    /// Does this build materialize client `c`?
+    pub fn wants(&self, c: usize) -> bool {
+        match self {
+            BuildSlice::Full => true,
+            BuildSlice::Assigned { clients, .. } => clients.binary_search(&c).is_ok(),
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, BuildSlice::Full)
+    }
+
+    /// Per-client materialization flags for an `n`-client session.
+    pub fn wanted_flags(&self, n: usize) -> Vec<bool> {
+        (0..n).map(|c| self.wants(c)).collect()
+    }
+
+    /// Verify the slice was cut for a session with exactly `n` clients (the
+    /// task runner's client count — `n_trainer` for NC/GC, the region count
+    /// for LP — must match what the coordinator assigned over).
+    pub fn check(&self, n: usize) -> Result<()> {
+        match self {
+            BuildSlice::Full => Ok(()),
+            BuildSlice::Assigned { n_total, .. } if *n_total == n => Ok(()),
+            BuildSlice::Assigned { n_total, .. } => bail!(
+                "build slice was cut for a {n_total}-client session but this config builds \
+                 {n} clients"
+            ),
+        }
+    }
+}
 
 /// Run a full federated experiment and return its report.
 ///
@@ -62,27 +126,41 @@ pub fn run_into_monitor(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor
 
 /// Build a task's session blueprint (init model, aggregation weights, and
 /// one `ClientLogic` per client) **without** launching a federation — the
-/// deterministic setup half of every runner. `fedgraph worker` processes
-/// call this with the coordinator-shipped config to rebuild the exact
-/// session locally: every dataset, partition, pre-train exchange and RNG
-/// stream derives from the config alone, so the rebuilt blueprint is
-/// bit-identical to the coordinator's.
+/// deterministic setup half of every runner: every dataset, partition,
+/// pre-train exchange and RNG stream derives from the config alone, so a
+/// rebuild in any process is bit-identical.
 pub fn build_session(
     cfg: &FedGraphConfig,
     engine: &Engine,
     monitor: &Monitor,
 ) -> Result<SessionBlueprint> {
+    build_session_sliced(cfg, engine, monitor, &BuildSlice::Full)?.into_blueprint()
+}
+
+/// The sliced form of [`build_session`]: materialize only the clients the
+/// slice names. `fedgraph worker` processes call this with their `Assign`
+/// slice plan, so per-machine startup cost and memory are
+/// O(assigned clients), not O(full session) — while the materialized clients
+/// stay bitwise-identical to the matching slice of a full build (the setup
+/// RNG and partition bookkeeping are advanced deterministically past every
+/// skipped client).
+pub fn build_session_sliced(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+) -> Result<SessionBuild> {
     cfg.validate()?;
-    let (blueprint, _rng) = match cfg.task {
+    let (build, _rng) = match cfg.task {
         Task::NodeClassification => {
             if cfg.dataset.starts_with("papers100m") {
-                nc::build_nc_lazy(cfg, engine, monitor)?
+                nc::build_nc_lazy(cfg, engine, monitor, slice)?
             } else {
-                nc::build_nc(cfg, engine, monitor)?
+                nc::build_nc(cfg, engine, monitor, slice)?
             }
         }
-        Task::GraphClassification => gc::build_gc(cfg, engine, monitor)?,
-        Task::LinkPrediction => lp::build_lp(cfg, engine, monitor)?,
+        Task::GraphClassification => gc::build_gc(cfg, engine, monitor, slice)?,
+        Task::LinkPrediction => lp::build_lp(cfg, engine, monitor, slice)?,
     };
-    Ok(blueprint)
+    Ok(build)
 }

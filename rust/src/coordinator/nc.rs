@@ -23,11 +23,11 @@ use anyhow::{bail, Result};
 use crate::config::{FedGraphConfig, Method};
 use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset};
 use crate::federation::{
-    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint,
+    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBuild,
 };
 use crate::graph::{
-    block_from_induced, build_local_graphs, dirichlet_partition, sample_neighborhood, Block, Csr,
-    LazyGraph, LocalGraph,
+    block_from_induced, build_local_graph, dirichlet_partition, halo_count, sample_neighborhood,
+    Block, Csr, LazyGraph, LocalGraph, Partition,
 };
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
@@ -35,10 +35,9 @@ use crate::transport::serialize::{encode_params, fnv1a};
 use crate::transport::{Direction, Phase, SimNet};
 use crate::util::rng::{hash_f32, Rng};
 
-use super::fedgcn::{
-    exchange_halo_features, fedgcn_pretrain, fedsage_features, fedsage_generators,
-};
+use super::fedgcn::{fedgcn_pretrain, fedsage_features, fedsage_generators, halo_feature_table};
 use super::selection::select_with_dropout;
+use super::BuildSlice;
 
 /// Convert a block into the artifact's data-input tensors (manifest order:
 /// x, src, dst, enorm, labels, mask).
@@ -169,7 +168,8 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     if cfg.dataset.starts_with("papers100m") {
         return run_nc_lazy(cfg, engine, monitor);
     }
-    let (blueprint, mut rng) = build_nc(cfg, engine, monitor)?;
+    let (build, mut rng) = build_nc(cfg, engine, monitor, &BuildSlice::Full)?;
+    let blueprint = build.into_blueprint()?;
     let n = blueprint.num_clients();
     let mut global = blueprint.init.clone();
     let deployment = Deployment::from_config(cfg)?;
@@ -222,18 +222,37 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     Ok(())
 }
 
-/// Deterministic session build for the standard NC path: dataset, Dirichlet
-/// partition, method-specific pre-train exchange, artifact selection, and
-/// one [`NcLogic`] per client. Worker processes run exactly this from the
-/// shipped config to rebuild their share of the session — which is why it
-/// must consume the runner RNG the same way in every process.
-pub(crate) fn build_nc(
+/// The engine-free half of an NC session build: dataset, Dirichlet
+/// partition, method-specific pre-train exchange, and the materialized
+/// per-client states the slice wants. Factored out of [`build_nc`] so the
+/// sliced-build equivalence proofs run without artifacts or a PJRT engine.
+pub(crate) struct NcPlan {
+    pub(crate) ds: NCDataset,
+    pub(crate) part: Partition,
+    /// Full local-graph views for materialized clients only; skipped clients
+    /// keep partition bookkeeping (ownership + halo counts) alone.
+    pub(crate) locals: Vec<Option<LocalGraph>>,
+    pub(crate) d_eff: usize,
+    /// Materialized per-client training state (slice-selected).
+    pub(crate) clients: Vec<Option<NcClient>>,
+    /// Every client's block node count — owned plus kept halo — regardless
+    /// of the slice: the shared artifact-bucket decision must not depend on
+    /// which clients this process materializes.
+    pub(crate) node_counts: Vec<usize>,
+    /// The setup stream after the per-client phase (bitwise-identical in
+    /// full and sliced builds — the equivalence tests pin this).
+    pub(crate) rng: Rng,
+}
+
+pub(crate) fn plan_nc(
     cfg: &FedGraphConfig,
-    engine: &Engine,
     monitor: &Monitor,
-) -> Result<(SessionBlueprint, Rng)> {
+    slice: &BuildSlice,
+) -> Result<NcPlan> {
     let spec = nc_spec(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown NC dataset '{}'", cfg.dataset))?;
+    slice.check(cfg.n_trainer)?;
+    let ledger = slice.is_full();
     let mut rng = Rng::seeded(cfg.seed);
     monitor.note("task", "NC");
     monitor.note("dataset", &cfg.dataset);
@@ -250,16 +269,24 @@ pub(crate) fn build_nc(
         cfg.iid_beta,
         &mut rng,
     );
-    let locals = build_local_graphs(&ds.graph, &part);
+    // Local views are per-client state: build them only for the clients this
+    // process materializes. Skipped clients never get an index map, local
+    // CSR, or feature copies.
+    let locals: Vec<Option<LocalGraph>> = (0..cfg.n_trainer)
+        .map(|c| slice.wants(c).then(|| build_local_graph(&ds.graph, &part, c as u32)))
+        .collect();
     monitor.stop("data");
 
     // ---- method-specific pre-train phase -> per-client inputs ------------
     let mut d_eff = ds.feat_dim;
-    let mut clients: Vec<NcClient> = Vec::with_capacity(cfg.n_trainer);
+    let mut node_counts: Vec<usize> = part.members.iter().map(|m| m.len()).collect();
+    let mut clients: Vec<Option<NcClient>> = (0..cfg.n_trainer).map(|_| None).collect();
     match cfg.method {
         Method::FedAvgNC => {
-            for l in &locals {
-                clients.push(client_owned_features(&ds, l, None));
+            for (c, slot) in clients.iter_mut().enumerate() {
+                if let Some(l) = &locals[c] {
+                    *slot = Some(client_owned_features(&ds, l, None));
+                }
             }
         }
         Method::FedGcn => {
@@ -273,36 +300,94 @@ pub(crate) fn build_nc(
                 &ds.features,
                 ds.feat_dim,
                 &part,
-                &locals,
+                slice,
                 &mut rng,
             )?;
             d_eff = pre.d_eff;
-            for (l, feats) in locals.iter().zip(pre.per_client) {
-                clients.push(client_owned_features(&ds, l, Some(feats)));
+            for (c, feats) in pre.per_client.into_iter().enumerate() {
+                if let Some(l) = &locals[c] {
+                    clients[c] = Some(client_owned_features(&ds, l, Some(feats)));
+                }
             }
         }
         Method::FedSagePlus => {
-            let gen = fedsage_generators(monitor, &ds.graph, &ds.features, ds.feat_dim, &part, &locals);
-            for l in &locals {
-                let feats = fedsage_features(&ds.graph, &ds.features, ds.feat_dim, &part, l, &gen);
-                clients.push(client_owned_features(&ds, l, Some(feats)));
+            // The averaged generator is global-plan state (every client
+            // contributes); only the per-client imputed features are sliced.
+            let gen =
+                fedsage_generators(monitor, &ds.graph, &ds.features, ds.feat_dim, &part, ledger);
+            for (c, slot) in clients.iter_mut().enumerate() {
+                if let Some(l) = &locals[c] {
+                    let feats = fedsage_features(
+                        &ds.graph,
+                        &ds.features,
+                        ds.feat_dim,
+                        &part,
+                        c as u32,
+                        &gen,
+                    );
+                    *slot = Some(client_owned_features(&ds, l, Some(feats)));
+                }
             }
         }
-        Method::DistributedGCN => {
-            let halo_tables = exchange_halo_features(monitor, &ds.features, ds.feat_dim, &locals);
-            for (l, halo) in locals.iter().zip(halo_tables) {
-                clients.push(client_with_halo(&ds, l, &halo, 1.0, &mut rng));
+        Method::DistributedGCN | Method::BnsGcn => {
+            // Halo exchange (BNS-GCN additionally keep/drop-samples the
+            // boundary; re-sampled per round inside the actor). A skipped
+            // client still advances the setup stream by exactly its halo
+            // draws — and its kept count still feeds the shared bucket
+            // decision — via partition bookkeeping alone.
+            let keep = if cfg.method == Method::BnsGcn { cfg.bns_ratio } else { 1.0 };
+            monitor.start("pretrain");
+            for c in 0..cfg.n_trainer {
+                match &locals[c] {
+                    Some(l) => {
+                        let halo = halo_feature_table(&ds.features, ds.feat_dim, &l.halo);
+                        if ledger {
+                            // Owners upload, this client downloads.
+                            let bytes = (l.halo.len() * ds.feat_dim * 4) as u64;
+                            monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+                            monitor.net.send(Phase::PreTrain, Direction::Down, bytes);
+                        }
+                        let cl = client_with_halo(&ds, l, &halo, keep, &mut rng);
+                        node_counts[c] = cl.nodes.len();
+                        clients[c] = Some(cl);
+                    }
+                    None => {
+                        let h = halo_count(&ds.graph, &part, c as u32);
+                        let kept = if keep >= 1.0 {
+                            // chance(1.0) always succeeds, so the draws are
+                            // value-independent: step the stream past them.
+                            rng.skip(h);
+                            h
+                        } else {
+                            (0..h).filter(|_| rng.chance(keep)).count()
+                        };
+                        node_counts[c] = part.members[c].len() + kept;
+                    }
+                }
             }
-        }
-        Method::BnsGcn => {
-            // Initial halo sample; re-sampled per round inside the actor.
-            let halo_tables = exchange_halo_features(monitor, &ds.features, ds.feat_dim, &locals);
-            for (l, halo) in locals.iter().zip(halo_tables) {
-                clients.push(client_with_halo(&ds, l, &halo, cfg.bns_ratio, &mut rng));
-            }
+            monitor.stop("pretrain");
         }
         m => bail!("method {} is not a node-classification method", m.name()),
     }
+    Ok(NcPlan { ds, part, locals, d_eff, clients, node_counts, rng })
+}
+
+/// Deterministic session build for the standard NC path: the engine-free
+/// [`plan_nc`] plus artifact selection, static blocks, the init model, and
+/// one [`NcLogic`] per materialized client. Worker processes run exactly
+/// this from the shipped config with their `Assign` slice — the build
+/// consumes the runner RNG the same way in every process and for every
+/// slice, so a sliced build is bitwise-identical to the matching slice of a
+/// full one.
+pub(crate) fn build_nc(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
+    monitor.start("startup");
+    let NcPlan { ds, part, locals, d_eff, mut clients, node_counts, mut rng } =
+        plan_nc(cfg, monitor, slice)?;
 
     // ---- bucket selection / minibatch decision ---------------------------
     let c = ds.num_classes;
@@ -311,7 +396,7 @@ pub(crate) fn build_nc(
         .manifest
         .max_bucket("nc_train", &fixed)
         .ok_or_else(|| anyhow::anyhow!("no nc_train artifacts for d={d_eff} c={c}"))?;
-    let need = clients.iter().map(|cl| cl.nodes.len()).max().unwrap_or(1);
+    let need = node_counts.iter().copied().max().unwrap_or(1);
     let minibatch = cfg.batch_size > 0 || need > max_bucket;
     let bucket_need = if minibatch { max_bucket.min(need) } else { need };
     let train_art = engine.manifest.pick("nc_train", &fixed, bucket_need)?.clone();
@@ -322,28 +407,40 @@ pub(crate) fn build_nc(
     engine.warm(&train_art.name)?;
     engine.warm(&eval_art.name)?;
 
-    // Static full-batch blocks.
+    // Static full-batch blocks (materialized clients only).
     if !minibatch {
-        for cl in clients.iter_mut() {
+        for cl in clients.iter_mut().flatten() {
             cl.train_block = Some(make_block(cl, &ds, n_pad, e_pad, d_eff, 0));
             cl.eval_block = Some(make_block(cl, &ds, n_pad, e_pad, d_eff, 2));
         }
     }
 
-    // ---- blueprint: init model + weights + per-client logic --------------
+    // ---- build: init model + weights + per-client logic ------------------
     let global = ParamSet::nc(d_eff, engine.manifest.hidden, c, &mut rng);
     let max_dim = ds.n().max(ds.feat_dim);
-    let weights: Vec<f32> = clients.iter().map(|cl| cl.train_count.max(1) as f32).collect();
+    // Aggregation weights are partition bookkeeping (train-node counts), so
+    // every process derives the full table regardless of its slice.
+    let weights: Vec<f32> = (0..cfg.n_trainer)
+        .map(|ci| {
+            part.members[ci]
+                .iter()
+                .filter(|&&u| ds.split[u as usize] == 0)
+                .count()
+                .max(1) as f32
+        })
+        .collect();
     let ds = Arc::new(ds);
-    let logics: Vec<Box<dyn ClientLogic>> = clients
-        .into_iter()
-        .zip(&locals)
-        .enumerate()
-        .map(|(client, (cl, l))| {
+    let mut logics: Vec<(usize, Box<dyn ClientLogic>)> = Vec::new();
+    for (client, slot) in clients.into_iter().enumerate() {
+        let Some(cl) = slot else { continue };
+        monitor.count_built_client(nc_client_bytes(&cl));
+        logics.push((
+            client,
             Box::new(NcLogic {
                 method: cfg.method,
                 client,
-                local: (cfg.method == Method::BnsGcn).then(|| l.clone()),
+                local: (cfg.method == Method::BnsGcn)
+                    .then(|| locals[client].clone().expect("materialized client has a view")),
                 cl,
                 ds: ds.clone(),
                 engine: engine.clone(),
@@ -358,10 +455,23 @@ pub(crate) fn build_nc(
                 batch_size: cfg.batch_size,
                 learning_rate: cfg.learning_rate,
                 bns_ratio: cfg.bns_ratio,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    Ok((SessionBlueprint { init: global, weights, max_dim, logics }, rng))
+            }) as Box<dyn ClientLogic>,
+        ));
+    }
+    monitor.stop("startup");
+    Ok((SessionBuild { init: global, weights, max_dim, n_total: cfg.n_trainer, logics }, rng))
+}
+
+/// Approximate bytes of one materialized NC client's session state (feature
+/// table, block node list, local adjacency, padded blocks) — the
+/// `session_bytes` counter a worker reports.
+fn nc_client_bytes(cl: &NcClient) -> u64 {
+    let block = |b: &Option<Block>| b.as_ref().map(Block::wire_bytes).unwrap_or(0);
+    ((cl.features.len() + cl.nodes.len()) * 4
+        + cl.csr.adj.len() * 4
+        + cl.csr.offsets.len() * 8) as u64
+        + block(&cl.train_block)
+        + block(&cl.eval_block)
 }
 
 /// Owned-only client: `features` defaults to the raw dataset rows.
@@ -612,7 +722,8 @@ impl ClientLogic for LazyNcLogic {
 /// Node-count override for the lazy dataset: `scale` × 10^8 nodes (Fig 12's
 /// 195-client power-law setting).
 pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
-    let (blueprint, mut rng) = build_nc_lazy(cfg, engine, monitor)?;
+    let (build, mut rng) = build_nc_lazy(cfg, engine, monitor, &BuildSlice::Full)?;
+    let blueprint = build.into_blueprint()?;
     let m = blueprint.num_clients();
     let mut global = blueprint.init.clone();
     let deployment = Deployment::from_config(cfg)?;
@@ -669,15 +780,20 @@ pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> 
 }
 
 /// Deterministic session build for the papers100m lazy path (see
-/// [`build_nc`] for why this is a separate, worker-replayable step).
+/// [`build_nc`] for why this is a separate, worker-replayable step). The
+/// graph itself is hash-defined and storage-free, so slicing here bounds the
+/// per-client range tables and logic allocations.
 pub(crate) fn build_nc_lazy(
     cfg: &FedGraphConfig,
     engine: &Engine,
     monitor: &Monitor,
-) -> Result<(SessionBlueprint, Rng)> {
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
     if cfg.method != Method::FedAvgNC && cfg.method != Method::FedGcn {
         bail!("papers100m-sim supports FedAvg/FedGCN minibatch training");
     }
+    slice.check(cfg.n_trainer)?;
+    monitor.start("startup");
     let n_nodes = (cfg.scale * 1e8) as u64;
     let g = papers100m_sim(n_nodes.max(10_000), cfg.seed);
     let mut rng = Rng::seeded(cfg.seed ^ 0x9A);
@@ -715,10 +831,14 @@ pub(crate) fn build_nc_lazy(
     let global = ParamSet::nc(d, engine.manifest.hidden, c_classes, &mut rng);
     let max_dim = g.feat_dim.max(n_pad);
     let g = Arc::new(g);
-    let logics: Vec<Box<dyn ClientLogic>> = client_ranges
-        .iter()
-        .enumerate()
-        .map(|(client, ranges)| {
+    let mut logics: Vec<(usize, Box<dyn ClientLogic>)> = Vec::new();
+    for (client, ranges) in client_ranges.iter().enumerate() {
+        if !slice.wants(client) {
+            continue;
+        }
+        monitor.count_built_client((ranges.len() * 16) as u64);
+        logics.push((
+            client,
             Box::new(LazyNcLogic {
                 client,
                 g: g.clone(),
@@ -732,10 +852,11 @@ pub(crate) fn build_nc_lazy(
                 local_steps: cfg.local_steps,
                 learning_rate: cfg.learning_rate,
                 seed: cfg.seed,
-            }) as Box<dyn ClientLogic>
-        })
-        .collect();
-    Ok((SessionBlueprint { init: global, weights: vec![1.0; m], max_dim, logics }, rng))
+            }) as Box<dyn ClientLogic>,
+        ));
+    }
+    monitor.stop("startup");
+    Ok((SessionBuild { init: global, weights: vec![1.0; m], max_dim, n_total: m, logics }, rng))
 }
 
 /// Sample a minibatch block from the lazy graph: seeds from the client's
@@ -815,4 +936,129 @@ fn lazy_block(
         |i| g.label(order[i as usize]) as i32,
         |i| if seed_set.contains(&order[i as usize]) { 1.0 } else { 0.0 },
     )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Task;
+    use crate::transport::{NetConfig, SimNet};
+
+    /// A tiny NC config on the low-dimensional arxiv spec (d = 128) so the
+    /// FedGCN / FedSage+ exchanges stay cheap in debug builds.
+    fn nc_cfg(method: Method, n: usize, seed: u64) -> FedGraphConfig {
+        let mut cfg =
+            FedGraphConfig::new(Task::NodeClassification, method, "ogbn-arxiv-sim").unwrap();
+        cfg.scale = 0.0005; // 84 nodes (generator floor 64)
+        cfg.n_trainer = n;
+        cfg.seed = seed;
+        cfg.iid_beta = 0.5; // skewed: uneven (possibly empty) client shares
+        cfg
+    }
+
+    fn mon() -> Monitor {
+        Monitor::new(Arc::new(SimNet::new(NetConfig::default())))
+    }
+
+    fn assert_client_eq(a: &NcClient, b: &NcClient, c: usize) {
+        assert_eq!(a.nodes, b.nodes, "client {c} nodes");
+        assert_eq!(a.num_owned, b.num_owned, "client {c} num_owned");
+        assert_eq!(a.features, b.features, "client {c} features (bitwise)");
+        assert_eq!(a.csr.adj, b.csr.adj, "client {c} adjacency");
+        assert_eq!(a.csr.offsets, b.csr.offsets, "client {c} csr offsets");
+        assert_eq!(a.train_count, b.train_count, "client {c} train_count");
+    }
+
+    #[test]
+    fn sliced_plan_equals_full_plan_slice_bitwise() {
+        // The tentpole property, engine-free: for arbitrary (clients,
+        // workers, round-robin assignment) — including uneven remainders and
+        // more workers than clients — a sliced plan materializes exactly the
+        // assigned clients, each bitwise-identical to the full plan's, while
+        // the shared setup RNG ends in the same state and the shared
+        // artifact-bucket inputs agree. Every NC method's pre-train exchange
+        // is covered (FedGCN also at 2 hops and with low-rank).
+        let variants: [(Method, usize, usize); 7] = [
+            (Method::FedAvgNC, 0, 1),
+            (Method::FedGcn, 0, 1),
+            (Method::FedGcn, 0, 2),
+            (Method::FedGcn, 4, 1),
+            (Method::FedSagePlus, 0, 1),
+            (Method::DistributedGCN, 0, 1),
+            (Method::BnsGcn, 0, 1),
+        ];
+        for &(method, rank, hops) in &variants {
+            for (n, workers) in [(4usize, 2usize), (5, 2), (5, 3), (3, 1), (4, 7)] {
+                let mut cfg = nc_cfg(method, n, 0xBEEF ^ ((n as u64) << 3) ^ (workers as u64));
+                cfg.lowrank_rank = rank;
+                cfg.num_hops = hops;
+                let full = plan_nc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+                assert_eq!(full.clients.iter().flatten().count(), n);
+                for k in 0..workers {
+                    let assigned: Vec<usize> = (0..n).filter(|c| c % workers == k).collect();
+                    let slice = BuildSlice::assigned(n, &assigned).unwrap();
+                    let sliced = plan_nc(&cfg, &mon(), &slice).unwrap();
+                    let tag = format!("{method:?} rank={rank} hops={hops} n={n} w={k}/{workers}");
+                    assert_eq!(
+                        sliced.clients.iter().flatten().count(),
+                        assigned.len(),
+                        "materialized count must equal the slice: {tag}"
+                    );
+                    assert_eq!(sliced.d_eff, full.d_eff, "{tag}");
+                    assert_eq!(
+                        sliced.node_counts, full.node_counts,
+                        "shared bucket decision must not depend on the slice: {tag}"
+                    );
+                    for c in 0..n {
+                        assert_eq!(
+                            sliced.locals[c].is_some(),
+                            slice.wants(c),
+                            "local views follow the slice: {tag}"
+                        );
+                        match (&full.clients[c], &sliced.clients[c]) {
+                            (Some(a), Some(b)) => {
+                                assert!(slice.wants(c), "{tag}");
+                                assert_client_eq(a, b, c);
+                            }
+                            (Some(_), None) => {
+                                assert!(!slice.wants(c), "client {c} missing: {tag}")
+                            }
+                            (None, _) => panic!("full plan must materialize client {c}: {tag}"),
+                        }
+                    }
+                    let mut fa = full.rng.clone();
+                    let mut fb = sliced.rng.clone();
+                    for _ in 0..8 {
+                        assert_eq!(
+                            fa.next_u64(),
+                            fb.next_u64(),
+                            "setup RNG must advance identically past skipped clients: {tag}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_plan_skips_the_pretrain_ledger() {
+        // A sliced plan charges nothing to its (stub) SimNet — the
+        // coordinator's full build owns the authoritative ledger — while the
+        // full plan's pre-train ledger is unchanged by the refactor.
+        for method in [Method::FedGcn, Method::DistributedGCN, Method::FedSagePlus] {
+            let cfg = nc_cfg(method, 4, 99);
+            let full_mon = mon();
+            plan_nc(&cfg, &full_mon, &BuildSlice::Full).unwrap();
+            let full_c = full_mon.net.counter(Phase::PreTrain);
+            assert!(
+                full_c.bytes_up + full_c.bytes_down > 0,
+                "{method:?} full build must ledger its pre-train exchange"
+            );
+            let sliced_mon = mon();
+            let slice = BuildSlice::assigned(4, &[0, 2]).unwrap();
+            plan_nc(&cfg, &sliced_mon, &slice).unwrap();
+            let c = sliced_mon.net.counter(Phase::PreTrain);
+            assert_eq!(c.bytes_up + c.bytes_down, 0, "{method:?} sliced build must not ledger");
+        }
+    }
 }

@@ -61,6 +61,58 @@ impl SessionBlueprint {
     }
 }
 
+/// A (possibly sliced) session build: the blueprint's global plan plus only
+/// the **materialized** per-client logics, tagged with their client index.
+///
+/// The coordinator's own build is always full and converts into a
+/// [`SessionBlueprint`] via [`SessionBuild::into_blueprint`]; a worker
+/// process's sliced build (assigned clients only) is hosted directly by
+/// [`crate::federation::worker::serve`]. The global plan — init model,
+/// aggregation weights, HE dimension bound — is derived from partition
+/// bookkeeping and is identical however the build is sliced.
+pub struct SessionBuild {
+    /// The public initial model (architecture + published init scheme).
+    pub init: ParamSet,
+    /// Static aggregation weights for **all** `n_total` clients (training
+    /// example counts — partition bookkeeping, never sliced).
+    pub weights: Vec<f32>,
+    /// Dimension bound fed to the HE parameter-validity rule.
+    pub max_dim: usize,
+    /// The session's total client count (what the slice was cut from).
+    pub n_total: usize,
+    /// `(client index, logic)` for each materialized client, ascending.
+    pub logics: Vec<(usize, Box<dyn ClientLogic>)>,
+}
+
+impl SessionBuild {
+    /// How many clients this build materialized.
+    pub fn num_built(&self) -> usize {
+        self.logics.len()
+    }
+
+    /// Convert a **full** build into the blueprint `Federation::spawn`
+    /// consumes. Fails if any client of the session is missing — a sliced
+    /// build cannot host a coordinator session.
+    pub fn into_blueprint(self) -> Result<SessionBlueprint> {
+        let SessionBuild { init, weights, max_dim, n_total, logics } = self;
+        if logics.len() != n_total {
+            bail!(
+                "session build materialized {} of {n_total} clients; a coordinator \
+                 session needs the full build",
+                logics.len()
+            );
+        }
+        let mut out: Vec<Box<dyn ClientLogic>> = Vec::with_capacity(n_total);
+        for (want, (client, logic)) in logics.into_iter().enumerate() {
+            if client != want {
+                bail!("session build logics out of order: expected client {want}, got {client}");
+            }
+            out.push(logic);
+        }
+        Ok(SessionBlueprint { init, weights, max_dim, logics: out })
+    }
+}
+
 /// Where this session's trainer actors live.
 pub enum Deployment {
     /// Threads in this process over [`ChannelTransport`] (default).
@@ -129,11 +181,24 @@ impl Deployment {
     }
 }
 
+/// One worker process's build-cost report, collected during the handshake:
+/// how much of the session it materialized (the sliced-build scaling axis
+/// the monitor notes per worker).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct WorkerBuild {
+    pub worker: usize,
+    pub built_clients: usize,
+    pub session_bytes: u64,
+    pub build_secs: f64,
+}
+
 /// A launched fabric: the coordinator endpoint plus any locally-owned actor
-/// threads (empty for remote deployments).
+/// threads (empty for remote deployments) and, for TCP deployments, each
+/// worker's build-cost report.
 pub(crate) struct Fabric {
     pub coord: Box<dyn CoordLink>,
     pub threads: Vec<JoinHandle<()>>,
+    pub worker_builds: Vec<WorkerBuild>,
 }
 
 /// Build one actor's setup bundle. Shared by the in-process launch and the
@@ -202,7 +267,7 @@ fn launch_threads(
             .map_err(|e| anyhow!("spawning trainer {client}: {e}"))?;
         threads.push(handle);
     }
-    Ok(Fabric { coord, threads })
+    Ok(Fabric { coord, threads, worker_builds: Vec::new() })
 }
 
 /// Accept `workers` connections, handshake each (`WorkerHello → Assign`
@@ -266,8 +331,50 @@ fn launch_workers(
         eprintln!("fedgraph: worker {k} ({peer}) hosts clients {clients:?}");
         conns.push((stream, clients));
     }
+    // Collect every worker's build-cost report before opening the fabric.
+    // The sliced session rebuild runs between `Assign` and the rendezvous
+    // (workers build in parallel; this loop blocks on the slowest), and its
+    // counters are asserted here: a worker must materialize **exactly** its
+    // assigned slice — the O(assigned-clients) startup contract.
+    let mut worker_builds = Vec::with_capacity(workers);
+    for (k, (stream, clients)) in conns.iter_mut().enumerate() {
+        let (lane, payload) = match tcp::read_frame(stream)
+            .with_context(|| format!("awaiting worker {k}'s build report"))?
+        {
+            tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
+            tcp::ReadOutcome::Closed => {
+                bail!("worker {k} closed before reporting its session build")
+            }
+        };
+        if lane != CONTROL_LANE {
+            bail!("worker {k} sent a non-control frame before its build report");
+        }
+        match UpMsg::decode(&payload).map_err(|e| anyhow!("worker {k} build report: {e}"))? {
+            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+                if built_clients as usize != clients.len() || total_clients as usize != n {
+                    bail!(
+                        "worker {k} materialized {built_clients}/{total_clients} clients but \
+                         was assigned {} of {n} — the sliced rebuild must cover exactly the \
+                         assigned slice",
+                        clients.len()
+                    );
+                }
+                eprintln!(
+                    "fedgraph: worker {k} built {built_clients}/{n} clients \
+                     ({session_bytes} session bytes, {build_secs:.2}s)"
+                );
+                worker_builds.push(WorkerBuild {
+                    worker: k,
+                    built_clients: built_clients as usize,
+                    session_bytes,
+                    build_secs,
+                });
+            }
+            other => bail!("worker {k} sent {other:?} instead of a build report"),
+        }
+    }
     let coord = tcp::coord_link(conns, n)?;
-    Ok(Fabric { coord, threads: Vec::new() })
+    Ok(Fabric { coord, threads: Vec::new(), worker_builds })
 }
 
 #[cfg(test)]

@@ -102,6 +102,6 @@ pub mod runtime;
 pub mod worker;
 
 pub use actor::{ClientLogic, LocalUpdate};
-pub use deploy::{Deployment, SessionBlueprint};
+pub use deploy::{Deployment, SessionBlueprint, SessionBuild};
 pub use policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 pub use runtime::{Charge, Federation, PolicyRound, RoundUpdate, StepOutcome, TrainResult};

@@ -155,7 +155,7 @@ impl AsyncBounded {
         let staleness = fed.version().saturating_sub(model_version);
         let carries_upload = !matches!(u.payload, UpdatePayload::None);
         if carries_upload && staleness > self.max_staleness {
-            let up_bytes = fed.ledger_rejected_payload(&u.payload);
+            let up_bytes = fed.ledger_rejected_payload(c, &u.payload);
             st.privacy_secs += u.privacy_secs;
             fed.note_client_round(round, c, u.compute_secs, u.wait_secs, up_bytes);
             if up_bytes > 0 {

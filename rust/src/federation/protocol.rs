@@ -36,15 +36,22 @@
 //! cached broadcast — a control frame, so the "re-send a model the client
 //! already holds" idiom is now honestly free (no values cross the wire).
 //!
-//! **Deployment frames.** The multi-process TCP backend adds three control
+//! **Deployment frames.** The multi-process TCP backend adds four control
 //! frames. Before any trainer lane exists, a connecting worker process sends
 //! `WorkerHello { version, codecs }` and the coordinator answers
-//! `Assign { n_total, clients, config }` — the client indices this worker
-//! hosts plus the full experiment config (binary-encoded, bit-exact), from
-//! which the worker deterministically rebuilds its datasets, partitions and
-//! task logic. At end of session `Stop` is answered by `StopAck`: the
-//! coordinator holds its lanes open until every trainer acked, so worker
-//! processes flush, exit 0, and nobody reports a spurious hang-up.
+//! `Assign { n_total, clients, config }` — the **slice plan**: the client
+//! indices this worker hosts plus the full experiment config
+//! (binary-encoded, bit-exact), from which the worker deterministically
+//! rebuilds **only its assigned slice** of the session (datasets, partition
+//! bookkeeping, and the assigned clients' local graphs, features and task
+//! logic — the setup RNG is advanced past skipped clients, so the slice is
+//! bitwise-identical to a full build's). The worker then answers with
+//! `BuildReport { built_clients, total_clients, session_bytes, build_secs }`
+//! and the coordinator asserts the report covers exactly the assigned slice
+//! before opening the trainer lanes. At end of session `Stop` is answered by
+//! `StopAck`: the coordinator holds its lanes open until every trainer
+//! acked, so worker processes flush, exit 0, and nobody reports a spurious
+//! hang-up.
 //!
 //! **Upload codec negotiation.** `WorkerHello.codecs` is a capability
 //! bitmask ([`CODEC_PACK`] | [`CODEC_QUANTIZED`]) advertising which upload
@@ -75,8 +82,10 @@ use crate::transport::{Direction, Phase};
 /// frame-shape change so a mismatched coordinator/worker pair fails the
 /// `WorkerHello → Assign` handshake loudly. v2: compressed upload payload
 /// variants (`Packed`/`Quantized`) and the `WorkerHello` codec capability
-/// mask.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// mask. v3: sliced worker session builds — every worker answers `Assign`
+/// with a [`UpMsg::BuildReport`] before hosting actors, and the coordinator
+/// asserts the report covers exactly the assigned slice.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 /// `WorkerHello.codecs` capability bit: the worker can encode `pack`
 /// (lossless delta + byte-plane) uploads.
@@ -221,6 +230,14 @@ pub enum UpMsg {
     /// the codec-negotiation half of the handshake; the coordinator picks
     /// the session codec from the config and rejects workers that lack it).
     WorkerHello { version: u32, codecs: u8 },
+    /// Deployment handshake step 3 (after `Assign`, before the rendezvous):
+    /// the worker's sliced-session build-cost counters. `built_clients` must
+    /// equal the assigned slice size (asserted by the coordinator — the
+    /// O(assigned-clients) startup contract); `session_bytes` is the
+    /// worker's approximate materialized per-client session state,
+    /// `build_secs` its measured startup time. Workers assigned no clients
+    /// report zeros and exit.
+    BuildReport { built_clients: u32, total_clients: u32, session_bytes: u64, build_secs: f64 },
 }
 
 const D_HELLO: u8 = 1;
@@ -237,6 +254,7 @@ const U_METRIC: u8 = 3;
 const U_FAILED: u8 = 4;
 const U_STOP_ACK: u8 = 5;
 const U_WORKER_HELLO: u8 = 6;
+const U_BUILD_REPORT: u8 = 7;
 
 const P_NONE: u8 = 0;
 const P_PLAIN: u8 = 1;
@@ -445,6 +463,13 @@ impl UpMsg {
                 w.u32(*version);
                 w.u8(*codecs);
             }
+            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+                w.u8(U_BUILD_REPORT);
+                w.u32(*built_clients);
+                w.u32(*total_clients);
+                w.u64(*session_bytes);
+                w.f64(*build_secs);
+            }
         }
         w.finish()
     }
@@ -493,6 +518,12 @@ impl UpMsg {
             U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
             U_STOP_ACK => UpMsg::StopAck { client: r.u32()? },
             U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()?, codecs: r.u8()? },
+            U_BUILD_REPORT => UpMsg::BuildReport {
+                built_clients: r.u32()?,
+                total_clients: r.u32()?,
+                session_bytes: r.u64()?,
+                build_secs: r.f64()?,
+            },
             t => return Err(WireError::BadTag(t)),
         })
     }
@@ -656,6 +687,21 @@ mod tests {
         }
         match UpMsg::decode(&UpMsg::StopAck { client: 9 }.encode()).unwrap() {
             UpMsg::StopAck { client } => assert_eq!(client, 9),
+            other => panic!("wrong message {other:?}"),
+        }
+        let report = UpMsg::BuildReport {
+            built_clients: 3,
+            total_clients: 7,
+            session_bytes: 1_234_567,
+            build_secs: 0.25,
+        };
+        match UpMsg::decode(&report.encode()).unwrap() {
+            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+                assert_eq!(built_clients, 3);
+                assert_eq!(total_clients, 7);
+                assert_eq!(session_bytes, 1_234_567);
+                assert_eq!(build_secs, 0.25);
+            }
             other => panic!("wrong message {other:?}"),
         }
         let assign = DownMsg::Assign {

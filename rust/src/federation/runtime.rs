@@ -151,14 +151,29 @@ pub struct Federation<'m> {
     /// Version-keyed window of recent broadcasts (flattened values) — the
     /// decode bases for compressed uploads: a `Packed`/`Quantized` payload
     /// is a delta against the broadcast stamped by its envelope's
-    /// `model_version`. Empty when compression is off. Bounded by
-    /// `base_window` entries; version 0 (the public init every actor
-    /// bootstraps from) seeds the window.
+    /// `model_version`. Empty when compression is off. Version 0 (the
+    /// public init every actor bootstraps from) seeds the window. Pruned on
+    /// every broadcast down to what in-flight work can still reference (see
+    /// [`Federation::prune_bases`]); `base_window` remains as a hard cap.
     bases: VecDeque<(u32, Vec<f32>)>,
-    /// How many broadcast bases to retain: enough for the staleness bound
-    /// plus one version bump per client (GCFL-style per-cluster broadcasts
-    /// advance the version several times per round).
+    /// Hard cap on retained bases (the old blanket window: one bump per
+    /// client plus the staleness bound). Per-client referencability tracking
+    /// normally keeps the window far smaller — sync single-version runs hold
+    /// at most two bases.
     base_window: usize,
+    /// `federation.max_staleness` (async decode-window clamp: staler uploads
+    /// are rejected without decoding, so their bases need not be retained).
+    max_staleness: u32,
+    /// Last broadcast version sent to each client — the floor a currently
+    /// idle client's *next* upload can stamp (its Train order will be issued
+    /// after this broadcast, and mailbox order guarantees it trains from it
+    /// or something newer).
+    last_sent_version: Vec<u32>,
+    /// For clients with an outstanding Train order (or an update received
+    /// but not yet decoded — async stashing): the `last_sent_version` at
+    /// order time, i.e. the oldest version their in-flight upload can stamp.
+    /// Cleared when the upload is decoded or rejected.
+    pending_floor: Vec<Option<u32>>,
 }
 
 impl<'m> Federation<'m> {
@@ -197,6 +212,16 @@ impl<'m> Federation<'m> {
         };
         let codec = cfg.federation.compression;
         monitor.note("compression", codec.name());
+        // Per-worker build-cost counters from the handshake (TCP
+        // deployments): the sliced-build startup/memory scaling axis.
+        for wb in &fabric.worker_builds {
+            monitor.note(&format!("worker{}_built_clients", wb.worker), wb.built_clients);
+            monitor.note(&format!("worker{}_session_bytes", wb.worker), wb.session_bytes);
+            monitor.note(
+                &format!("worker{}_build_secs", wb.worker),
+                format!("{:.3}", wb.build_secs),
+            );
+        }
         let mut fed = Federation {
             monitor,
             coord: fabric.coord,
@@ -215,6 +240,9 @@ impl<'m> Federation<'m> {
             codec,
             bases: VecDeque::new(),
             base_window: n + cfg.federation.max_staleness as usize + 2,
+            max_staleness: cfg.federation.max_staleness,
+            last_sent_version: vec![0; n],
+            pending_floor: vec![None; n],
         };
         if fed.codec.needs_base() {
             // Version 0 is the public init every actor bootstraps from.
@@ -285,14 +313,18 @@ impl<'m> Federation<'m> {
             return Ok(());
         }
         self.version += 1;
+        for &t in targets {
+            if let Some(v) = self.last_sent_version.get_mut(t) {
+                *v = self.version;
+            }
+        }
         if self.codec.needs_base() {
             // Compressed uploads are deltas against version-stamped
-            // broadcasts; retain a window of them for decode. SimNet and
-            // result bitwise-identity are untouched — this is bookkeeping.
+            // broadcasts; retain them for decode, pruned down to what
+            // in-flight work can still reference. SimNet and result
+            // bitwise-identity are untouched — this is bookkeeping.
             self.bases.push_back((self.version, params.flatten()));
-            while self.bases.len() > self.base_window {
-                self.bases.pop_front();
-            }
+            self.prune_bases();
         }
         let frame: crate::transport::link::Frame =
             encode_set_model(round as u32, self.version, &params.values).into();
@@ -318,6 +350,32 @@ impl<'m> Federation<'m> {
             }
         }
         Ok(())
+    }
+
+    /// Drop decode bases no future upload can reference. A client's next
+    /// upload stamps at least its `pending_floor` (the last version
+    /// broadcast to it when its outstanding Train order was issued — mailbox
+    /// order guarantees it trains from that broadcast or a newer one) or,
+    /// with no order in flight, at least `last_sent_version`. In async mode
+    /// uploads staler than `max_staleness` are rejected *without decoding*
+    /// ([`Federation::ledger_rejected_payload`]), so the floor is
+    /// additionally clamped to `version - max_staleness`. Sync
+    /// single-version runs therefore keep at most **two** bases — the latest
+    /// plus the one in-flight orders reference — instead of the blanket
+    /// `n + max_staleness + 2` window, which survives only as a hard cap.
+    fn prune_bases(&mut self) {
+        let mut min_ref = self.version;
+        for c in 0..self.n {
+            let floor = self.pending_floor[c].unwrap_or(self.last_sent_version[c]);
+            min_ref = min_ref.min(floor);
+        }
+        if self.mode == FederationMode::Async {
+            min_ref = min_ref.max(self.version.saturating_sub(self.max_staleness));
+        }
+        self.bases.retain(|(v, _)| *v >= min_ref);
+        while self.bases.len() > self.base_window {
+            self.bases.pop_front();
+        }
     }
 
     /// Order `targets` to re-adopt the model of the **latest broadcast**
@@ -432,6 +490,11 @@ impl<'m> Federation<'m> {
         if c >= self.n {
             bail!("participant {c} out of range");
         }
+        // The upload this order produces can stamp nothing older than the
+        // last broadcast already in the client's mailbox (decode-window
+        // referencability floor; cleared when the upload is adopted or
+        // rejected).
+        self.pending_floor[c] = Some(self.last_sent_version[c]);
         let total_w: f32 = participants.iter().map(|&p| self.weights[p].max(1.0)).sum();
         let scale = self.weights[c].max(1.0) / total_w.max(1.0);
         let frame: crate::transport::link::Frame =
@@ -540,11 +603,14 @@ impl<'m> Federation<'m> {
             })
     }
 
-    /// Ledger an upload the policy rejects *without decoding it* — a stale
-    /// async upload beyond the bound, whose base broadcast may already have
-    /// left the window. Returns the SimNet charge; the caller groups it into
-    /// the tick's upload sizes and marks it as waste.
-    pub(crate) fn ledger_rejected_payload(&self, payload: &UpdatePayload) -> u64 {
+    /// Ledger client `c`'s upload the policy rejects *without decoding it* —
+    /// a stale async upload beyond the bound, whose base broadcast may
+    /// already have left the window. Returns the SimNet charge; the caller
+    /// groups it into the tick's upload sizes and marks it as waste.
+    pub(crate) fn ledger_rejected_payload(&mut self, c: usize, payload: &UpdatePayload) -> u64 {
+        if let Some(f) = self.pending_floor.get_mut(c) {
+            *f = None;
+        }
         let (charge, measured, logical) = self.payload_sizes(payload);
         self.wire().note_payload(Phase::Train, Direction::Up, measured, logical);
         charge
@@ -554,12 +620,17 @@ impl<'m> Federation<'m> {
     /// upload codec when one is active — `model_version` selects the
     /// broadcast base the client encoded against). Returns the decoded
     /// update, its SimNet ledger size, and the measured decode seconds.
+    /// Clears the client's decode-window floor: its in-flight work is done,
+    /// so the next broadcast may prune bases up to its `last_sent_version`.
     pub(crate) fn adopt_payload(
-        &self,
+        &mut self,
         c: usize,
         payload: UpdatePayload,
         model_version: u32,
     ) -> Result<(RoundUpdate, u64, f64)> {
+        if let Some(f) = self.pending_floor.get_mut(c) {
+            *f = None;
+        }
         let (charge, measured, logical) = self.payload_sizes(&payload);
         Ok(match payload {
             UpdatePayload::None => (RoundUpdate::Local, 0, 0.0),
@@ -1063,6 +1134,31 @@ mod tests {
         SessionBlueprint { init, weights, max_dim: 64, logics }
     }
 
+    /// The sliced counterpart of [`dummy_blueprint`]: what a worker process
+    /// materializes — the same init draw from the same stream, but logics
+    /// only for its assigned clients (the shape
+    /// `coordinator::build_session_sliced` produces for real tasks).
+    fn dummy_build(
+        n: usize,
+        clients: &[usize],
+        sleeps: &[u64],
+        rng: &mut Rng,
+    ) -> crate::federation::SessionBuild {
+        let init = ParamSet::nc(6, 4, 3, rng);
+        let logics: Vec<(usize, Box<dyn ClientLogic>)> = clients
+            .iter()
+            .map(|&client| {
+                (
+                    client,
+                    Box::new(DummyLogic { client, steps: 3, sleep_ms: sleeps[client] })
+                        as Box<dyn ClientLogic>,
+                )
+            })
+            .collect();
+        let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
+        crate::federation::SessionBuild { init, weights, max_dim: 64, n_total: n, logics }
+    }
+
     fn run_session(
         cfg: &FedGraphConfig,
         rounds: usize,
@@ -1477,13 +1573,20 @@ mod tests {
                     &addr,
                     std::time::Duration::from_secs(20),
                 )?;
-                // Rebuild the session deterministically from the shipped
-                // config — the same path a real worker process takes.
+                // Rebuild only the assigned slice of the session from the
+                // shipped config — the same path a real worker process
+                // takes (same init draw from the same stream; logics for
+                // the assigned clients alone).
                 let wcfg = assignment.cfg.clone();
                 let mut rng = Rng::seeded(wcfg.seed);
-                let blueprint = dummy_blueprint(wcfg.n_trainer, &sleeps, &mut rng);
+                let build = dummy_build(wcfg.n_trainer, &assignment.clients, &sleeps, &mut rng);
                 let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
-                crate::federation::worker::serve(assignment, blueprint, staging)
+                crate::federation::worker::serve(
+                    assignment,
+                    build,
+                    staging,
+                    crate::federation::worker::BuildStats::default(),
+                )
             }));
         }
         let out = run_session(cfg, rounds, sleeps, &deployment);
@@ -1610,9 +1713,14 @@ mod tests {
                         )?;
                         let wcfg = a.cfg.clone();
                         let mut rng = Rng::seeded(wcfg.seed);
-                        let bp = dummy_blueprint(wcfg.n_trainer, &[0; 4], &mut rng);
+                        let build = dummy_build(wcfg.n_trainer, &a.clients, &[0; 4], &mut rng);
                         let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
-                        crate::federation::worker::serve(a, bp, staging)
+                        crate::federation::worker::serve(
+                            a,
+                            build,
+                            staging,
+                            crate::federation::worker::BuildStats::default(),
+                        )
                     }));
                 }
             }
@@ -1810,5 +1918,72 @@ mod tests {
         let c = monitor.net.counter(Phase::Train);
         assert!(c.wasted_bytes > 0, "the rejected packed upload is ledgered as waste");
         assert!(c.bytes_up > c.wasted_bytes);
+    }
+
+    #[test]
+    fn sync_decode_window_keeps_at_most_two_bases() {
+        // The decode-window satellite: per-client referencability tracking
+        // shrinks the retained broadcast bases to the latest plus whatever
+        // in-flight orders may still reference — for a sync single-version
+        // run that is at most 2, not the blanket n + max_staleness + 2.
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut cfg = test_cfg(6, 4, 0.0);
+        cfg.federation.compression = CompressionMode::Pack;
+        let mut rng = Rng::seeded(cfg.seed);
+        let bp = dummy_blueprint(6, &[0; 6], &mut rng);
+        let mut global = bp.init.clone();
+        let mut fed = Federation::spawn(&monitor, &Deployment::InProcess, &cfg, bp).unwrap();
+        let all: Vec<usize> = (0..6).collect();
+        let charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, charge).unwrap();
+        assert!(fed.bases.len() <= 2, "after init broadcast: {} bases", fed.bases.len());
+        for round in 0..5 {
+            let step = fed.policy_round(round, &all, true, &all).unwrap();
+            if let Some(m) = step.model {
+                global = m;
+            }
+            assert!(
+                fed.bases.len() <= 2,
+                "round {round}: sync run retained {} bases (old blanket window was {})",
+                fed.bases.len(),
+                6 + cfg.federation.max_staleness as usize + 2
+            );
+        }
+        fed.shutdown().unwrap();
+    }
+
+    #[test]
+    fn async_decode_window_retains_straggler_base() {
+        // The pruning rule's safety half: a base stays in the window while
+        // any in-flight order can still reference it, so a straggler
+        // admitted within the staleness bound decodes against the broadcast
+        // it trained from even after newer broadcasts triggered pruning.
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut cfg = test_cfg(2, 2, 0.0);
+        cfg.federation.mode = FederationMode::Async;
+        cfg.federation.max_staleness = 2;
+        cfg.federation.buffer_size = 1;
+        cfg.federation.compression = CompressionMode::Pack;
+        let mut rng = Rng::seeded(10);
+        let init = ParamSet::nc(4, 4, 2, &mut rng);
+        let logics: Vec<Box<dyn ClientLogic>> = vec![
+            Box::new(DummyLogic { client: 0, steps: 1, sleep_ms: 0 }),
+            Box::new(DummyLogic { client: 1, steps: 1, sleep_ms: 800 }),
+        ];
+        let mut fed =
+            spawn_in_process(&monitor, &cfg, &init, vec![1.0, 1.0], 16, logics).unwrap();
+        fed.broadcast_model(0, &init, &[0, 1], Charge::PerLink(init.byte_len())).unwrap();
+        let s0 = fed.policy_round(0, &[0, 1], true, &[0, 1]).unwrap();
+        assert_eq!(s0.results.len(), 1, "only the fast client is fresh");
+        // The flush advanced the version, but the straggler's outstanding
+        // order floors the window at the version it trained from.
+        let versions: Vec<u32> = fed.bases.iter().map(|(v, _)| *v).collect();
+        assert!(versions.contains(&1), "straggler base pruned early: {versions:?}");
+        std::thread::sleep(std::time::Duration::from_millis(1200));
+        let s1 = fed.policy_round(1, &[0], true, &[0, 1]).unwrap();
+        assert_eq!(s1.rejected_stale, 0, "an in-bound straggler must not be rejected");
+        assert_eq!(s1.results.len(), 1);
+        assert_eq!(s1.results[0].client, 1, "late packed upload decodes against its base");
+        fed.shutdown().unwrap();
     }
 }

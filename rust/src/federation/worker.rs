@@ -3,11 +3,18 @@
 //!
 //! A worker is deliberately thin. It connects, handshakes
 //! (`WorkerHello → Assign`), decodes the coordinator's bit-exact config,
-//! **rebuilds the session deterministically** (datasets, partitions,
-//! pre-train exchanges and per-client logic all derive from the config seed —
-//! the same code path the coordinator ran), keeps the clients it was
-//! assigned, and then hosts perfectly ordinary trainer actors
-//! ([`crate::federation::actor::actor_main`]) over socket-backed
+//! **rebuilds only its assigned slice of the session**
+//! ([`crate::coordinator::build_session_sliced`]): the datasets derive from
+//! the config seed as before, but per-client state — local graphs, feature
+//! tables, pre-train aggregates, padded training blocks, trainer logics — is
+//! materialized for the assigned clients only, with the setup RNG and
+//! partition bookkeeping advanced deterministically past every skipped
+//! client. The sliced build is bitwise-identical to the matching slice of a
+//! full build, so per-machine startup cost and memory scale with
+//! `assigned / total` clients instead of O(full session). The worker reports
+//! its build counters (`BuildReport`) — asserted by the coordinator to cover
+//! exactly the assigned slice — and then hosts perfectly ordinary trainer
+//! actors ([`crate::federation::actor::actor_main`]) over socket-backed
 //! [`crate::transport::link::TrainerLink`]s. Nothing above the link layer
 //! knows it left the coordinator's process.
 //!
@@ -22,24 +29,38 @@ use std::time::Duration;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::FedGraphConfig;
+use crate::coordinator::BuildSlice;
 use crate::monitor::Monitor;
 use crate::transport::tcp::{self, CONTROL_LANE};
 use crate::transport::SimNet;
 use crate::util::sync::Semaphore;
 
 use super::actor::actor_main;
-use super::deploy::{actor_setup, he_context, SessionBlueprint};
+use super::deploy::{actor_setup, he_context, SessionBuild};
 use super::protocol::{DownMsg, UpMsg, PROTOCOL_VERSION, SUPPORTED_CODECS};
 
 /// What the coordinator handed this worker during the handshake.
 pub struct WorkerAssignment {
     pub cfg: FedGraphConfig,
-    /// Total trainer count of the session (the worker rebuilds all `n`
-    /// logics deterministically and keeps its share).
+    /// Total trainer count of the session (the denominator of this worker's
+    /// slice — the worker materializes only its assigned share).
     pub n_total: usize,
-    /// The client indices this worker hosts.
+    /// The client indices this worker hosts (the `Assign` slice plan).
     pub clients: Vec<usize>,
     stream: TcpStream,
+}
+
+/// Build-cost counters a worker reports ([`UpMsg::BuildReport`]) right after
+/// its sliced session build; the coordinator notes them per worker (the
+/// startup/memory scaling axis) and asserts the built-client count covers
+/// exactly the assigned slice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BuildStats {
+    /// Approximate bytes of materialized per-client session state (feature
+    /// tables, local adjacency, padded blocks).
+    pub session_bytes: u64,
+    /// Measured wall-clock seconds of the session build.
+    pub build_secs: f64,
 }
 
 /// Connect to a coordinator (retrying while it binds — workers may start
@@ -73,23 +94,35 @@ pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
     }
 }
 
-/// Host the assigned slice of `blueprint` over the handshaken connection
-/// until the coordinator finishes the session. `staging_net` must be the
-/// stage-logged [`SimNet`] the blueprint's logics write to (the worker-local
-/// staging buffer whose entries ride update envelopes back to the
-/// coordinator's authoritative ledger).
+/// Host the assigned slice of `build` over the handshaken connection until
+/// the coordinator finishes the session. Sends the [`UpMsg::BuildReport`]
+/// (from `stats` + the build's own client coverage) before any trainer lane
+/// opens — the coordinator blocks on it and asserts the slice was honored.
+/// `staging_net` must be the stage-logged [`SimNet`] the build's logics
+/// write to (the worker-local staging buffer whose entries ride update
+/// envelopes back to the coordinator's authoritative ledger).
 pub fn serve(
     assignment: WorkerAssignment,
-    blueprint: SessionBlueprint,
+    build: SessionBuild,
     staging_net: Arc<SimNet>,
+    stats: BuildStats,
 ) -> Result<()> {
     let WorkerAssignment { cfg, n_total, clients, stream } = assignment;
-    if blueprint.num_clients() != n_total {
+    let mut stream = stream;
+    if build.n_total != n_total {
         bail!(
-            "session blueprint has {} clients but the coordinator assigned over {n_total}",
-            blueprint.num_clients()
+            "session build was cut from {} clients but the coordinator assigned over {n_total}",
+            build.n_total
         );
     }
+    let report = UpMsg::BuildReport {
+        built_clients: build.num_built() as u32,
+        total_clients: n_total as u32,
+        session_bytes: stats.session_bytes,
+        build_secs: stats.build_secs,
+    };
+    tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
+        .context("sending BuildReport")?;
     let he_ctx = he_context(&cfg);
     let (links, demux) = tcp::worker_links(&stream, &clients)?;
     // `max_concurrency` bounds compute **per process**: this worker gates its
@@ -98,17 +131,23 @@ pub fn serve(
     // timing caveat). Determinism does not depend on the gate.
     let concurrency = cfg.federation.resolved_concurrency(clients.len().max(1));
     let gate = Arc::new(Semaphore::new(concurrency));
-    let SessionBlueprint { init, max_dim, logics, .. } = blueprint;
-    // Pair each assigned client with its logic (the rest are dropped — they
-    // belong to other workers).
-    let mut assigned_logic: Vec<Option<Box<dyn super::actor::ClientLogic>>> =
-        logics.into_iter().map(Some).collect();
+    let SessionBuild { init, max_dim, logics, .. } = build;
+    // The sliced build must carry exactly the assigned clients' logics,
+    // keyed by client index — verified before any actor thread spawns.
+    let mut logic_of: std::collections::HashMap<usize, Box<dyn super::actor::ClientLogic>> =
+        logics.into_iter().collect();
+    if let Some(&missing) = clients.iter().find(|&&c| !logic_of.contains_key(&c)) {
+        bail!("sliced build is missing assigned client {missing}");
+    }
+    if logic_of.len() != clients.len() {
+        let mut extra: Vec<usize> =
+            logic_of.keys().copied().filter(|c| !clients.contains(c)).collect();
+        extra.sort_unstable();
+        bail!("sliced build materialized unassigned clients {extra:?}");
+    }
     let mut threads = Vec::with_capacity(clients.len());
     for (&client, link) in clients.iter().zip(links) {
-        let logic = assigned_logic
-            .get_mut(client)
-            .and_then(|l| l.take())
-            .ok_or_else(|| anyhow!("assigned client {client} out of blueprint range"))?;
+        let logic = logic_of.remove(&client).expect("verified above");
         let setup = actor_setup(
             &cfg,
             &init,
@@ -126,7 +165,6 @@ pub fn serve(
             .map_err(|e| anyhow!("spawning worker trainer {client}: {e}"))?;
         threads.push(handle);
     }
-    drop(assigned_logic);
     // Actors exit after acking Stop; their acks are already on the socket
     // when we FIN it, so the coordinator drains them before the close.
     for h in threads {
@@ -137,8 +175,9 @@ pub fn serve(
     Ok(())
 }
 
-/// The full `fedgraph worker` entry: connect, rebuild the session from the
-/// shipped config, and serve until the coordinator finishes.
+/// The full `fedgraph worker` entry: connect, rebuild **only the assigned
+/// slice** of the session from the shipped config, report the build cost,
+/// and serve until the coordinator finishes.
 ///
 /// `artifacts_override` replaces the shipped `artifacts_dir` (worker
 /// machines may mount artifacts elsewhere); `timeout` bounds the initial
@@ -157,17 +196,46 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
         assignment.cfg.dataset,
     );
     if assignment.clients.is_empty() {
-        // More workers than clients: nothing to host, exit cleanly.
+        // More workers than clients: nothing to host. Report the (empty)
+        // build — the coordinator blocks on one report per worker — and
+        // exit cleanly.
+        let report = UpMsg::BuildReport {
+            built_clients: 0,
+            total_clients: assignment.n_total as u32,
+            session_bytes: 0,
+            build_secs: 0.0,
+        };
+        let mut stream = &assignment.stream;
+        tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
+            .context("sending empty BuildReport")?;
         let _ = assignment.stream.shutdown(Shutdown::Both);
         return Ok(());
     }
     let engine = crate::runtime::Engine::start(&assignment.cfg.artifacts_dir)?;
     // Worker-local monitor: its SimNet is only a staging buffer (entries are
-    // journaled and shipped to the coordinator); notes/timers are discarded.
+    // journaled and shipped to the coordinator); notes/timers are discarded,
+    // but its session-build counters feed the BuildReport.
     let monitor = Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
-    let blueprint = crate::coordinator::build_session(&assignment.cfg, &engine, &monitor);
-    let result = match blueprint {
-        Ok(bp) => serve(assignment, bp, monitor.net.clone()),
+    let slice = BuildSlice::assigned(assignment.n_total, &assignment.clients)?;
+    let t0 = std::time::Instant::now();
+    let build =
+        crate::coordinator::build_session_sliced(&assignment.cfg, &engine, &monitor, &slice);
+    let result = match build {
+        Ok(b) => {
+            let (built, session_bytes) = monitor.session_build();
+            let build_secs = t0.elapsed().as_secs_f64();
+            eprintln!(
+                "fedgraph worker: sliced build materialized {built}/{} clients \
+                 ({session_bytes} session bytes, {build_secs:.2}s)",
+                assignment.n_total
+            );
+            serve(
+                assignment,
+                b,
+                monitor.net.clone(),
+                BuildStats { session_bytes, build_secs },
+            )
+        }
         Err(e) => Err(e),
     };
     engine.shutdown();

@@ -16,6 +16,6 @@ pub use partition::{
     Partition,
 };
 pub use subgraph::{
-    build_local_graph, build_local_graphs, local_neighbor_contribution, neighbor_feature_sums,
-    LocalGraph,
+    build_local_graph, build_local_graphs, halo_count, local_neighbor_contribution,
+    neighbor_feature_sums, LocalGraph,
 };

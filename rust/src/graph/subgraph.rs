@@ -70,10 +70,30 @@ pub fn build_local_graphs(global: &Csr, part: &Partition) -> Vec<LocalGraph> {
     out
 }
 
+/// The sorted, deduplicated halo node set of `client` — the non-owned
+/// endpoints of its cross-client edges. The **single source of the halo
+/// rule**: [`build_local_graph`] materializes views over it and
+/// [`halo_count`] sizes it for skipped clients, so the sliced-build RNG
+/// contract (one keep/drop draw per halo node) can never drift between the
+/// two.
+fn halo_nodes(global: &Csr, part: &Partition, client: u32) -> Vec<u32> {
+    let mut halo: Vec<u32> = Vec::new();
+    for &u in &part.members[client as usize] {
+        for &v in global.neighbors(u) {
+            if part.assign[v as usize] != client {
+                halo.push(v);
+            }
+        }
+    }
+    halo.sort_unstable();
+    halo.dedup();
+    halo
+}
+
 /// Build one client's local view.
 pub fn build_local_graph(global: &Csr, part: &Partition, client: u32) -> LocalGraph {
     let owned = part.members[client as usize].clone();
-    let mut halo: Vec<u32> = Vec::new();
+    let halo = halo_nodes(global, part, client);
     let mut internal = 0usize;
     let mut cross = 0usize;
     for &u in &owned {
@@ -84,12 +104,9 @@ pub fn build_local_graph(global: &Csr, part: &Partition, client: u32) -> LocalGr
                 }
             } else {
                 cross += 1;
-                halo.push(v);
             }
         }
     }
-    halo.sort_unstable();
-    halo.dedup();
     let mut index = HashMap::with_capacity(owned.len() + halo.len());
     for (i, &u) in owned.iter().enumerate() {
         index.insert(u, i as u32);
@@ -116,6 +133,18 @@ pub fn build_local_graph(global: &Csr, part: &Partition, client: u32) -> LocalGr
     }
     let csr = Csr::from_edges(owned.len() + halo.len(), &edges);
     LocalGraph { client, owned, halo, index, csr, internal_edges: internal, cross_edges: cross }
+}
+
+/// Number of distinct halo nodes `client`'s local view would carry, without
+/// building the view (no index map, no local CSR, no feature copies).
+///
+/// Sliced session builds use this as partition bookkeeping for clients they
+/// skip: the halo count drives both the shared artifact-bucket decision and
+/// the per-halo-node RNG draws (boundary keep/drop sampling) that must still
+/// advance the setup stream for a sliced build to stay bitwise-aligned with
+/// a full one.
+pub fn halo_count(global: &Csr, part: &Partition, client: u32) -> usize {
+    halo_nodes(global, part, client).len()
 }
 
 /// Exact 1-hop aggregated neighbor feature sums for a set of nodes, computed
@@ -196,6 +225,15 @@ mod tests {
         // local index round trip
         for &u in l0.owned.iter().chain(&l0.halo) {
             assert_eq!(l0.global_of(l0.index[&u]), u);
+        }
+    }
+
+    #[test]
+    fn halo_count_matches_built_view() {
+        let (g, p) = cycle6();
+        for c in 0..2u32 {
+            let l = build_local_graph(&g, &p, c);
+            assert_eq!(halo_count(&g, &p, c), l.halo.len());
         }
     }
 

@@ -21,7 +21,12 @@
 //! *live* is a [`federation::Deployment`]: threads in this process
 //! (`federation.transport: channel`, the default) or separate
 //! `fedgraph worker` processes over sockets (`federation.transport: tcp` —
-//! loopback runs are bitwise-identical to in-process runs). See
+//! loopback runs are bitwise-identical to in-process runs). Worker
+//! processes rebuild **only their assigned slice** of the session
+//! ([`coordinator::build_session_sliced`] with the `Assign` slice plan), so
+//! per-machine startup cost and memory are O(assigned clients) while the
+//! materialized slice stays bitwise-identical to a full build's — see
+//! `docs/DEPLOYMENT.md`. See
 //! [`federation`] for the protocol and determinism contract,
 //! [`transport::link`] / [`transport::tcp`] for the frame movers,
 //! [`transport::serialize`] for the wire format and the pluggable upload

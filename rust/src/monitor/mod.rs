@@ -60,6 +60,10 @@ struct MonitorState {
     peak_rss: u64,
     notes: Vec<(String, String)>,
     timelines: Vec<ClientTimeline>,
+    /// Session-build counters: how many clients this process materialized
+    /// and their approximate state bytes (the sliced-build scaling axis).
+    session_clients: usize,
+    session_bytes: u64,
 }
 
 /// The monitor class (thread-safe; trainers and the server share it).
@@ -88,6 +92,8 @@ impl Monitor {
                 peak_rss: 0,
                 notes: Vec::new(),
                 timelines: Vec::new(),
+                session_clients: 0,
+                session_bytes: 0,
             }),
             probe: ResourceProbe::new(),
         }
@@ -153,6 +159,25 @@ impl Monitor {
 
     pub fn notes(&self) -> Vec<(String, String)> {
         self.state.lock().unwrap().notes.clone()
+    }
+
+    /// Count one materialized client of this process's session build
+    /// (`bytes` ≈ its per-client state: feature tables, local adjacency,
+    /// padded blocks). Task builders call this once per client their
+    /// [`crate::coordinator::BuildSlice`] materializes, so a sliced worker
+    /// build's counters cover exactly its assigned clients.
+    pub fn count_built_client(&self, bytes: u64) {
+        let mut st = self.state.lock().unwrap();
+        st.session_clients += 1;
+        st.session_bytes += bytes;
+    }
+
+    /// `(materialized clients, approximate session-state bytes)` of this
+    /// process's session build — what a worker reports in its `BuildReport`
+    /// and the report surfaces next to the `startup` phase timing.
+    pub fn session_build(&self) -> (usize, u64) {
+        let st = self.state.lock().unwrap();
+        (st.session_clients, st.session_bytes)
     }
 
     /// Record one client's round timeline (from the federation runtime).
@@ -271,6 +296,15 @@ mod tests {
             assert!((wait - 1.5).abs() < 1e-12);
             assert!((transfer - 0.75).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn session_build_counters_accumulate() {
+        let m = monitor();
+        assert_eq!(m.session_build(), (0, 0));
+        m.count_built_client(1000);
+        m.count_built_client(24);
+        assert_eq!(m.session_build(), (2, 1024));
     }
 
     #[test]

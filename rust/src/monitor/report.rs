@@ -50,6 +50,16 @@ pub struct Report {
     pub client_totals: Vec<(usize, f64, f64, f64)>,
     /// Transport backend name (`channel` / `tcp`) as noted by the runtime.
     pub transport: String,
+    /// Session-build counters of **this** process: materialized clients and
+    /// their approximate state bytes. The coordinator's full build counts
+    /// every client; each worker's sliced counters arrive as
+    /// `worker{k}_built_clients` / `worker{k}_session_bytes` notes (the
+    /// per-worker startup/memory scaling axis).
+    pub session_clients: usize,
+    pub session_bytes: u64,
+    /// Measured `startup` phase seconds (session build: datasets,
+    /// partitions, pre-train exchanges, blocks, logic allocation).
+    pub startup_secs: f64,
     /// Measured wire counters per `(phase, up, down)`: what the transport
     /// actually moved, next to the simulated ledger above (see module docs
     /// for the cross-check invariant).
@@ -80,8 +90,12 @@ impl Report {
                 })
                 .filter(|(_, up, down)| up.frames + down.frames > 0)
                 .collect();
+        let (session_clients, session_bytes) = m.session_build();
         Report {
             notes: m.notes(),
+            startup_secs: m.phase_secs("startup"),
+            session_clients,
+            session_bytes,
             phase_secs: m.phase_names().iter().map(|p| (p.clone(), m.phase_secs(p))).collect(),
             pretrain_bytes: pre.bytes_up + pre.bytes_down,
             train_bytes: tr.bytes_up + tr.bytes_down,
@@ -213,6 +227,14 @@ impl Report {
                 fmt_bytes(self.train_wasted_bytes)
             ));
         }
+        if self.session_clients > 0 {
+            out.push_str(&format!(
+                "session build: {} clients materialized, {} state ({} startup)\n",
+                self.session_clients,
+                fmt_bytes(self.session_bytes),
+                fmt_secs(self.startup_secs)
+            ));
+        }
         if !self.client_totals.is_empty() {
             let mut t = Table::new(&["client", "compute s", "wait s", "transfer s"])
                 .with_title("Per-client timeline");
@@ -298,6 +320,9 @@ impl Report {
             ("transport", Json::Str(self.transport.clone())),
             ("wire", wire),
             ("wire_compression_ratio", self.wire_compression_ratio().into()),
+            ("startup_secs", self.startup_secs.into()),
+            ("session_clients", self.session_clients.into()),
+            ("session_bytes", (self.session_bytes as usize).into()),
             ("pretrain_bytes", (self.pretrain_bytes as usize).into()),
             ("train_bytes", (self.train_bytes as usize).into()),
             ("pretrain_net_secs", self.pretrain_net_secs.into()),
@@ -348,6 +373,9 @@ mod tests {
         m.note("transport", "channel");
         m.wire.record_payload_frame(Phase::Train, Direction::Down, 1_000_000);
         m.wire.record_frame(Phase::Train, Direction::Up, 50);
+        m.add_secs("startup", 0.125);
+        m.count_built_client(4096);
+        m.count_built_client(4096);
         let r = Report::from_monitor(&m);
         assert_eq!(r.pretrain_bytes, 2_000_000);
         assert_eq!(r.train_bytes, 1_000_000);
@@ -359,16 +387,23 @@ mod tests {
         assert!((r.train_net_concurrent_secs - r.train_net_secs).abs() < 1e-12);
         assert_eq!(r.client_totals.len(), 1);
         assert!((r.compute_secs() - 2.0).abs() < 1e-9);
+        assert_eq!(r.session_clients, 2);
+        assert_eq!(r.session_bytes, 8192);
+        assert!((r.startup_secs - 0.125).abs() < 1e-12);
         let text = r.render();
         assert!(text.contains("cora-sim"));
         assert!(text.contains("2.00 MB"));
         assert!(text.contains("transport=channel"), "wire table names the backend:\n{text}");
+        assert!(text.contains("session build: 2 clients"), "build counters render:\n{text}");
         // JSON parses back
         let j = r.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("final_accuracy").as_f64(), Some(0.81));
         assert_eq!(parsed.get("rounds").as_arr().unwrap().len(), 1);
         assert_eq!(parsed.get("transport").as_str(), Some("channel"));
+        assert_eq!(parsed.get("session_clients").as_f64(), Some(2.0));
+        assert_eq!(parsed.get("session_bytes").as_f64(), Some(8192.0));
+        assert_eq!(parsed.get("startup_secs").as_f64(), Some(0.125));
         let wire_train = parsed.get("wire").get("train");
         assert_eq!(wire_train.get("payload_bytes_down").as_f64(), Some(1_000_000.0));
         assert_eq!(wire_train.get("logical_bytes_down").as_f64(), Some(1_000_000.0));

@@ -230,6 +230,21 @@ impl Rng {
             *v = self.normal_ms(mean as f64, std as f64) as f32;
         }
     }
+
+    /// Advance the stream past `n` draws without materializing them —
+    /// state-identical to calling [`Rng::next_u64`] (or any single-draw
+    /// distribution such as [`Rng::f64`] / [`Rng::chance`]) `n` times.
+    ///
+    /// Sliced session builds use this to step the shared setup stream past a
+    /// skipped client's draws: the skip costs a few word ops per draw and no
+    /// allocation, while the stream stays bitwise-aligned with a full build.
+    /// The Box-Muller cache is untouched, so `skip` models uniform-path draws
+    /// only; paths that consume cached normals must replay real calls.
+    pub fn skip(&mut self, n: usize) {
+        for _ in 0..n {
+            self.next_u64();
+        }
+    }
 }
 
 /// Stateless hash-based randomness for *lazy* datasets (papers100m-sim):
@@ -350,6 +365,28 @@ mod tests {
             assert_eq!(set.len(), k);
             assert!(s.iter().all(|&i| i < n));
         }
+    }
+
+    #[test]
+    fn skip_matches_discarded_draws() {
+        let mut skipped = Rng::seeded(21);
+        let mut drawn = Rng::seeded(21);
+        skipped.skip(1000);
+        for _ in 0..1000 {
+            drawn.next_u64();
+        }
+        for _ in 0..32 {
+            assert_eq!(skipped.next_u64(), drawn.next_u64());
+        }
+        // chance() is a single draw, so skip(n) aligns with n chance calls
+        // (the sliced-build contract for halo keep/drop streams).
+        let mut skipped = Rng::seeded(22);
+        let mut chanced = Rng::seeded(22);
+        skipped.skip(77);
+        for _ in 0..77 {
+            chanced.chance(0.5);
+        }
+        assert_eq!(skipped.next_u64(), chanced.next_u64());
     }
 
     #[test]

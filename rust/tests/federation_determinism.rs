@@ -128,7 +128,7 @@ fn tcp_deployment_is_bitwise_identical_to_channel() {
     // identical simulated byte ledgers — including the actor-staged BNS-style
     // eval metric traffic, which remote actors ship in their envelopes.
     use fedgraph::config::TransportKind;
-    use fedgraph::coordinator::build_session;
+    use fedgraph::coordinator::{build_session_sliced, BuildSlice};
     use fedgraph::federation::worker;
     use fedgraph::monitor::Monitor;
     use fedgraph::transport::SimNet;
@@ -163,10 +163,25 @@ fn tcp_deployment_is_bitwise_identical_to_channel() {
                 .expect("worker connects");
             let monitor =
                 Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
-            let blueprint = build_session(&assignment.cfg, &worker_engine, &monitor)
-                .expect("worker rebuilds the session");
-            worker::serve(assignment, blueprint, monitor.net.clone())
-                .expect("worker serves to completion");
+            // Sliced rebuild: only the assigned clients are materialized,
+            // yet the run below must stay bitwise-identical to channel.
+            let slice = BuildSlice::assigned(assignment.n_total, &assignment.clients)
+                .expect("valid slice");
+            let build = build_session_sliced(&assignment.cfg, &worker_engine, &monitor, &slice)
+                .expect("worker rebuilds its slice");
+            let (built, session_bytes) = monitor.session_build();
+            assert_eq!(
+                built,
+                assignment.clients.len(),
+                "sliced build must materialize exactly the assigned clients"
+            );
+            worker::serve(
+                assignment,
+                build,
+                monitor.net.clone(),
+                worker::BuildStats { session_bytes, build_secs: 0.0 },
+            )
+            .expect("worker serves to completion");
             worker_engine.shutdown();
         }));
     }
