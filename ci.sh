@@ -57,6 +57,11 @@ echo "==> engine-free decode-window tests (per-client referencable bases)"
 cargo test -q --lib federation::runtime::tests::sync_decode_window_keeps_at_most_two_bases
 cargo test -q --lib federation::runtime::tests::async_decode_window_retains_straggler_base
 
+echo "==> engine-free flight-recorder tests (tracing is pure observation; report schema)"
+cargo test -q --lib trace::
+cargo test -q --lib federation::runtime::tests::traced_run_is_bitwise_identical_and_streams_worker_metrics
+cargo test -q --lib monitor::report::tests::report_json_schema_is_stable
+
 if [ "${1:-}" != "--quick" ]; then
     echo "==> cargo build --release   (tier-1, part 1)"
     cargo build --release
@@ -75,6 +80,7 @@ if [ "${1:-}" != "--quick" ]; then
         # Randomized port so concurrent CI runs on one host don't collide.
         SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
         SMOKE_JSON="$(mktemp)"
+        SMOKE_TRACE="$(mktemp)"
         "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
         W1=$!
         "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
@@ -83,14 +89,14 @@ if [ "${1:-}" != "--quick" ]; then
         "$BIN" run --task NC --method FedAvg --dataset cora-sim \
             --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
             --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
-            --json "$SMOKE_JSON" || COORD_STATUS=$?
+            --json "$SMOKE_JSON" --trace "$SMOKE_TRACE" || COORD_STATUS=$?
         W1_STATUS=0
         W2_STATUS=0
         wait "$W1" || W1_STATUS=$?
         wait "$W2" || W2_STATUS=$?
         if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
             echo "ci.sh: tcp smoke test failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
-            rm -f "$SMOKE_JSON"
+            rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
             exit 1
         fi
         # Sliced-build contract: each worker's reported build counters must
@@ -100,12 +106,56 @@ if [ "${1:-}" != "--quick" ]; then
             if ! grep -q "\"worker${W}_built_clients\": *\"2\"" "$SMOKE_JSON"; then
                 echo "ci.sh: worker $W did not report a 2-client sliced build:" >&2
                 grep -o "\"worker[01]_[a-z_]*\": *\"[^\"]*\"" "$SMOKE_JSON" >&2 || true
-                rm -f "$SMOKE_JSON"
+                rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
                 exit 1
             fi
         done
-        rm -f "$SMOKE_JSON"
-        echo "==> tcp smoke test: coordinator and both workers exited 0; sliced builds covered exactly the assigned clients"
+        # Observability contract: the traced run wrote a Perfetto-loadable
+        # timeline spanning all three processes, and the report carries the
+        # streamed per-worker metrics snapshots (RSS / CPU / queue depth).
+        if command -v python3 >/dev/null 2>&1; then
+            if ! python3 - "$SMOKE_TRACE" "$SMOKE_JSON" <<'PYEOF'
+import json, sys
+trace = json.load(open(sys.argv[1]))
+events = trace["traceEvents"]
+assert events, "empty traceEvents"
+procs = {e["args"]["name"]: e["pid"] for e in events
+         if e.get("ph") == "M" and e.get("name") == "process_name"}
+for p in ("coord", "worker0", "worker1"):
+    assert p in procs, f"missing process track {p!r} (have {sorted(procs)})"
+spans = [e for e in events if e.get("ph") == "X"]
+assert spans, "no span events"
+for e in spans:
+    assert e["ts"] >= 0 and e["dur"] >= 0, f"negative time in {e}"
+names = {e["name"] for e in spans}
+for n in ("round", "aggregate", "broadcast", "compute"):
+    assert n in names, f"missing span {n!r} (have {sorted(names)})"
+for w in ("worker0", "worker1"):
+    assert any(e["pid"] == procs[w] for e in spans), f"no spans on {w}'s timeline"
+counters = {e["name"] for e in events if e.get("ph") == "C"}
+assert "rss_mb" in counters, f"no rss counter track (have {sorted(counters)})"
+report = json.load(open(sys.argv[2]))
+wm = report["worker_metrics"]
+for w in ("worker0", "worker1"):
+    assert wm.get(w), f"no streamed metrics from {w} (have {sorted(wm)})"
+    s = wm[w][0]
+    assert s["rss_bytes"] > 0 and s["cpu_seconds"] >= 0, f"bad snapshot {s}"
+tracks = {t["track"] for t in report["trace_tracks"]}
+assert any(t.startswith("worker0/") for t in tracks), \
+    f"no worker-prefixed trace tracks in report (have {sorted(tracks)})"
+print(f"trace ok: {len(spans)} spans over {len(procs)} processes, "
+      f"{sum(len(v) for v in wm.values())} worker metric samples")
+PYEOF
+            then
+                echo "ci.sh: trace/metrics validation failed" >&2
+                rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
+                exit 1
+            fi
+        else
+            echo "==> python3 not found; skipping trace-file validation"
+        fi
+        rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
+        echo "==> tcp smoke test: coordinator and both workers exited 0; sliced builds covered exactly the assigned clients; merged trace + worker metrics validated"
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

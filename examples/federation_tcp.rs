@@ -93,11 +93,19 @@ fn main() -> anyhow::Result<()> {
                  {build_secs:.2}s)",
                 assignment.n_total
             );
+            // This process's observation plane (spans ship only when the
+            // config has tracing on; metrics snapshots stream regardless).
+            let obs = fedgraph::trace::ObsSession {
+                recorder: fedgraph::trace::FlightRecorder::new("worker"),
+                stats: fedgraph::trace::ProcessStats::new(Duration::from_millis(200)),
+                ship_events: assignment.cfg.trace_enabled(),
+            };
             worker::serve(
                 assignment,
                 build,
                 monitor.net.clone(),
                 worker::BuildStats { session_bytes, build_secs },
+                obs,
             )?;
             worker_engine.shutdown();
             Ok(())

@@ -39,9 +39,15 @@
 //! counters recorded — doubling the workers must roughly halve the
 //! per-worker build work and memory (asserted, not just printed).
 //!
+//! Since the flight-recorder layer a fifth table measures the **tracing
+//! overhead axis**: an identical run with the recorder installed vs off.
+//! Accuracy and both byte ledgers are asserted equal (tracing is pure
+//! observation); the wall-clock delta is recorded with a < 3% target.
+//!
 //! Alongside the printed tables the bench writes a machine-readable
 //! `BENCH_fig15.json` (wall clocks, sim vs measured wire bytes, startup
-//! seconds, per-worker session bytes) for the perf trajectory.
+//! seconds, per-worker session bytes, tracing overhead) for the perf
+//! trajectory.
 
 #[path = "bench_common.rs"]
 mod common;
@@ -310,6 +316,73 @@ fn main() {
         bytes_by_workers[3].1
     );
 
+    // ---- tracing overhead: identical run with the flight recorder on ------
+    // Tracing must be pure observation: the traced run's accuracy and both
+    // byte ledgers are asserted identical to the untraced run (the bitwise
+    // invariant, pinned harder by the engine-free tests), and the wall-clock
+    // overhead is recorded for the perf trajectory (target < 3%).
+    let mut json_tracing: Vec<Json> = Vec::new();
+    let mut tbl5 = Table::new(&[
+        "clients",
+        "plain wall s",
+        "traced wall s",
+        "overhead",
+        "spans",
+        "accuracy",
+    ])
+    .with_title("Tracing overhead: flight recorder on vs off (identical config)");
+    for clients in [10usize, 100] {
+        let mut cfg = arxiv_cfg(clients, r);
+        cfg.federation.max_concurrency = 0;
+
+        let t0 = std::time::Instant::now();
+        let plain = run(&cfg, &eng);
+        let plain_wall = t0.elapsed().as_secs_f64();
+
+        cfg.extras.insert("trace".to_string(), "1".to_string());
+        let t1 = std::time::Instant::now();
+        let traced_monitor = fedgraph::coordinator::run_collect(&cfg, &eng)
+            .unwrap_or_else(|e| panic!("traced bench run failed: {e:#}"));
+        let traced_wall = t1.elapsed().as_secs_f64();
+        let traced = fedgraph::monitor::report::Report::from_monitor(&traced_monitor);
+
+        assert_eq!(
+            plain.final_accuracy, traced.final_accuracy,
+            "tracing must not perturb training"
+        );
+        assert_eq!(
+            plain.total_bytes(),
+            traced.total_bytes(),
+            "tracing must not perturb the simulated byte ledger"
+        );
+        assert_eq!(
+            plain.wire_payload_bytes(),
+            traced.wire_payload_bytes(),
+            "tracing must not perturb the measured wire ledger"
+        );
+        let spans: u64 = traced.trace_tracks.iter().map(|t| t.spans).sum();
+        assert!(spans > 0, "the traced run must actually record spans");
+        let overhead = traced_wall / plain_wall.max(1e-9) - 1.0;
+        tbl5.row(&[
+            clients.to_string(),
+            secs(plain_wall),
+            secs(traced_wall),
+            format!("{:+.1}%", overhead * 100.0),
+            spans.to_string(),
+            format!("{:.4}", traced.final_accuracy),
+        ]);
+        json_tracing.push(obj(vec![
+            ("clients", clients.into()),
+            ("plain_wall_secs", plain_wall.into()),
+            ("traced_wall_secs", traced_wall.into()),
+            ("overhead_frac", overhead.into()),
+            ("spans", (spans as usize).into()),
+            ("accuracy", traced.final_accuracy.into()),
+        ]));
+    }
+    println!("{}", tbl5.render());
+    println!("tracing overhead target: < 3% wall clock (see BENCH_fig15.json 'tracing')");
+
     // ---- machine-readable dump for the perf trajectory --------------------
     let bench = obj(vec![
         ("figure", "fig15".into()),
@@ -319,6 +392,7 @@ fn main() {
         ("stragglers", Json::Arr(json_stragglers)),
         ("compression", Json::Arr(json_compression)),
         ("startup", Json::Arr(json_startup)),
+        ("tracing", Json::Arr(json_tracing)),
     ]);
     let path = "BENCH_fig15.json";
     match std::fs::write(path, bench.to_string_pretty()) {

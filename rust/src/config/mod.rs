@@ -448,6 +448,15 @@ impl FedGraphConfig {
         })
     }
 
+    /// Is flight-recorder span tracing on for this run? Carried in `extras`
+    /// (`trace: "1"`, set by the CLI's `--trace` flag or YAML extras), so it
+    /// rides the bit-exact config wire encoding to worker processes without
+    /// a config-wire version bump. Tracing is pure observation: enabling it
+    /// changes no run result (see [`crate::trace`]).
+    pub fn trace_enabled(&self) -> bool {
+        self.extras.get("trace").map(|v| v == "1").unwrap_or(false)
+    }
+
     /// Parse from YAML text (see `configs/` for examples).
     pub fn parse_yaml(src: &str) -> Result<FedGraphConfig> {
         let y = Yaml::parse(src).map_err(|e| anyhow!("{e}"))?;

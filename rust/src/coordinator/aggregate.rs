@@ -85,11 +85,15 @@ pub fn sharded_weighted_average(sets: &[(f32, &ParamSet)], shards: usize) -> Par
         }
     }
     std::thread::scope(|scope| {
-        for job in jobs {
+        for (shard, job) in jobs.into_iter().enumerate() {
             if job.is_empty() {
                 continue;
             }
             scope.spawn(move || {
+                let elems: usize = job.iter().map(|(_, _, s)| s.len()).sum();
+                let _sp = crate::trace::span("agg", "shard")
+                    .arg("shard", shard)
+                    .arg("elems", elems);
                 // Per element, the exact serial sequence: x = x0 * s0, then
                 // x += s_k * y_k for k = 1.. in participant order.
                 let s0 = sets[0].0 / total;
@@ -105,6 +109,10 @@ pub fn sharded_weighted_average(sets: &[(f32, &ParamSet)], shards: usize) -> Par
                         }
                     }
                 }
+                // Scoped threads die with the scope: drain this shard's span
+                // now rather than rely on TLS teardown ordering.
+                drop(_sp);
+                crate::trace::flush_thread();
             });
         }
     });

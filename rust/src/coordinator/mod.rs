@@ -107,11 +107,37 @@ pub fn run_fedgraph(cfg: &FedGraphConfig) -> Result<Report> {
 /// Run with a caller-managed engine (compiled executables are cached inside
 /// the engine and shared across runs).
 pub fn run_fedgraph_with(cfg: &FedGraphConfig, engine: &Engine) -> Result<Report> {
+    let monitor = run_collect(cfg, engine)?;
+    Ok(Report::from_monitor(&monitor))
+}
+
+/// Run and hand back the populated monitor — the report and the trace export
+/// are both views over it. When `cfg.trace_enabled()` the monitor's flight
+/// recorder is installed as this process's trace sink for the duration of
+/// the run (first-wins: a caller-installed recorder keeps precedence), so
+/// coordinator, actor, codec and I/O spans all land on the merged timeline.
+pub fn run_collect(cfg: &FedGraphConfig, engine: &Engine) -> Result<Monitor> {
     cfg.validate()?;
     let net = Arc::new(SimNet::new(cfg.network.clone()));
     let monitor = Monitor::new(net);
-    run_into_monitor(cfg, engine, &monitor)?;
-    Ok(Report::from_monitor(&monitor))
+    let installed = cfg.trace_enabled() && crate::trace::install(&monitor.flight, true);
+    let result = run_into_monitor(cfg, engine, &monitor);
+    if installed {
+        crate::trace::uninstall(&monitor.flight);
+    }
+    result?;
+    Ok(monitor)
+}
+
+/// Like [`run_fedgraph_with`] but also export the merged timeline as Chrome
+/// trace-event JSON (Perfetto / `chrome://tracing` loadable) — what the
+/// CLI's `--trace <path>` flag writes. The config should have tracing
+/// enabled (`extras: trace: "1"`); without it the export still carries the
+/// process metadata and any worker-streamed counter samples, just no spans.
+pub fn run_fedgraph_traced(cfg: &FedGraphConfig, engine: &Engine) -> Result<(Report, String)> {
+    let monitor = run_collect(cfg, engine)?;
+    let trace_json = monitor.chrome_trace().to_string_pretty();
+    Ok((Report::from_monitor(&monitor), trace_json))
 }
 
 /// Lowest-level entry: record into a caller-provided monitor (used by the
@@ -151,6 +177,12 @@ pub fn build_session_sliced(
     slice: &BuildSlice,
 ) -> Result<SessionBuild> {
     cfg.validate()?;
+    let _sp = match slice {
+        BuildSlice::Full => crate::trace::span("build", "session").arg("clients", "all"),
+        BuildSlice::Assigned { n_total, clients } => crate::trace::span("build", "session")
+            .arg("clients", clients.len())
+            .arg("total", *n_total),
+    };
     let (build, _rng) = match cfg.task {
         Task::NodeClassification => {
             if cfg.dataset.starts_with("papers100m") {

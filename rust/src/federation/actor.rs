@@ -42,6 +42,7 @@ use anyhow::Result;
 use crate::config::CompressionMode;
 use crate::he::{gaussian_mechanism, CkksContext, DpParams};
 use crate::runtime::ParamSet;
+use crate::trace::{self, ObsSession};
 use crate::transport::link::TrainerLink;
 use crate::transport::serialize::{pack_delta, quantize_delta};
 use crate::transport::SimNet;
@@ -49,7 +50,7 @@ use crate::util::rng::{hash_f32, Rng};
 use crate::util::sync::Semaphore;
 use crate::util::timer::timed;
 
-use super::protocol::{DownMsg, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload};
+use super::protocol::{DownMsg, ObsBlock, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload};
 
 fn flatten_values(values: &[Vec<f32>]) -> Vec<f32> {
     let total: usize = values.iter().map(|v| v.len()).sum();
@@ -180,6 +181,11 @@ pub struct ActorSetup {
     /// coordinator can replay it on the authoritative ledger. `None`
     /// in-process, where the logic stages directly on the shared net.
     pub remote_net: Option<Arc<SimNet>>,
+    /// Remote deployments only: the worker-process observation session whose
+    /// drained trace buffers and metrics snapshots piggyback on this actor's
+    /// `Update`/`StopAck` envelopes. `None` in-process — spans drain straight
+    /// into the coordinator's installed recorder.
+    pub obs: Option<ObsSession>,
 }
 
 /// Actor thread main loop. Runs until `Stop` or a broken link.
@@ -196,6 +202,7 @@ pub fn actor_main(setup: ActorSetup) {
         straggler_seed,
         codec,
         remote_net,
+        obs,
     } = setup;
     // Drain this actor's staged simulated traffic (remote mode; empty
     // otherwise).
@@ -207,6 +214,23 @@ pub fn actor_main(setup: ActorSetup) {
                 .map(|(phase, dir, bytes)| StagedTransfer { phase, dir, bytes })
                 .collect(),
             None => Vec::new(),
+        }
+    };
+    // Observation block for an outgoing envelope (remote mode; default
+    // otherwise). `force` takes a final unconditional metrics sample — the
+    // StopAck path, which guarantees every worker reports at least once.
+    let make_obs = |force: bool| -> ObsBlock {
+        match &obs {
+            None => ObsBlock::default(),
+            Some(o) => {
+                trace::flush_thread();
+                let (events, dropped) = if o.ship_events {
+                    (o.recorder.take_events(), o.recorder.take_dropped())
+                } else {
+                    (Vec::new(), 0)
+                };
+                ObsBlock { events, snapshot: o.stats.maybe_sample(force), dropped, wire_len: 0 }
+            }
         }
     };
     let mut model = init;
@@ -224,6 +248,9 @@ pub fn actor_main(setup: ActorSetup) {
     // first quantized upload sizes it).
     let mut residual: Vec<f32> = Vec::new();
     let cid = client as u32;
+    // This actor's timeline lane (worker-merged events get a `worker{k}/`
+    // prefix from the coordinator, not here).
+    let track = format!("client{client}");
     loop {
         let frame = match link.recv() {
             Ok(f) => f,
@@ -243,8 +270,10 @@ pub fn actor_main(setup: ActorSetup) {
                 // Ack before exiting so the coordinator can hold its lanes
                 // open until every trainer drained — worker processes then
                 // close their sockets and exit 0 instead of racing the
-                // coordinator's teardown.
-                let _ = link.send(UpMsg::StopAck { client: cid }.encode().into());
+                // coordinator's teardown. The ack carries the final drained
+                // trace buffer and a forced metrics sample.
+                let _ =
+                    link.send(UpMsg::StopAck { client: cid, obs: make_obs(true) }.encode().into());
                 return;
             }
             DownMsg::Assign { .. } => {
@@ -308,21 +337,28 @@ pub fn actor_main(setup: ActorSetup) {
                 // Straggle outside the gate (a slow client, not a busy
                 // simulation core); still billed as this client's compute.
                 if straggler_ms > 0.0 {
+                    let _sp = trace::span(track.as_str(), "straggle").arg("round", round);
                     let frac = hash_f32(straggler_seed, round as u64, cid as u64) as f64;
                     std::thread::sleep(std::time::Duration::from_secs_f64(
                         frac * straggler_ms / 1e3,
                     ));
                 }
                 let t_wait = std::time::Instant::now();
-                let _permit = gate.acquire();
+                let _permit = {
+                    let _sp = trace::span(track.as_str(), "wait").arg("round", round);
+                    gate.acquire()
+                };
                 let wait_secs = t_wait.elapsed().as_secs_f64();
                 let straggle_secs = t_wait.duration_since(t0).as_secs_f64();
                 let t_compute = std::time::Instant::now();
                 // A panic in task logic must not kill the thread silently —
                 // the coordinator would block on the missing update forever.
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    logic.train(round as usize, &model, &mut rng)
-                }));
+                let outcome = {
+                    let _sp = trace::span(track.as_str(), "compute").arg("round", round);
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        logic.train(round as usize, &model, &mut rng)
+                    }))
+                };
                 let reply = match outcome {
                     Ok(Ok(up)) => {
                         let compute_secs = straggle_secs + t_compute.elapsed().as_secs_f64();
@@ -330,6 +366,7 @@ pub fn actor_main(setup: ActorSetup) {
                         let payload = if !upload {
                             UpdatePayload::None
                         } else {
+                            let _sp = trace::span(track.as_str(), "encode").arg("round", round);
                             match &privacy {
                                 PrivacyEngine::Plain => match codec {
                                     CompressionMode::None => {
@@ -384,6 +421,7 @@ pub fn actor_main(setup: ActorSetup) {
                             privacy_secs,
                             staged: take_staged(&remote_net),
                             payload,
+                            obs: make_obs(false),
                         })
                     }
                     Ok(Err(e)) => {
@@ -433,9 +471,12 @@ pub fn actor_main(setup: ActorSetup) {
                         }
                         None => &model,
                     };
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        logic.eval(round as usize, eval_model, &mut rng)
-                    }));
+                    let outcome = {
+                        let _sp = trace::span(track.as_str(), "eval").arg("round", round);
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            logic.eval(round as usize, eval_model, &mut rng)
+                        }))
+                    };
                     match outcome {
                         Ok(Ok((num, den))) => UpMsg::Metric {
                             client: cid,
@@ -462,5 +503,9 @@ pub fn actor_main(setup: ActorSetup) {
                 }
             }
         }
+        // Message boundary = merge point: drain this actor's span buffer into
+        // the process recorder (in-process: the coordinator's; worker: the
+        // one the next envelope's obs block ships).
+        trace::flush_thread();
     }
 }

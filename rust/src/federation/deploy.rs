@@ -31,6 +31,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::{FedGraphConfig, PrivacyMode, TransportKind};
 use crate::he::CkksContext;
 use crate::runtime::ParamSet;
+use crate::trace::{self, ObsSession};
 use crate::transport::link::{ChannelTransport, CoordLink, TrainerLink};
 use crate::transport::tcp::{self, CONTROL_LANE};
 use crate::util::rng::{hash_u64, Rng};
@@ -199,6 +200,11 @@ pub(crate) struct Fabric {
     pub coord: Box<dyn CoordLink>,
     pub threads: Vec<JoinHandle<()>>,
     pub worker_builds: Vec<WorkerBuild>,
+    /// Per-client observation route: the process label its envelopes' obs
+    /// blocks merge under (`""` = this process) and the handshake-estimated
+    /// clock offset (worker trace clock minus coordinator's, nanoseconds)
+    /// used to re-base remote event timestamps.
+    pub obs_route: Vec<(String, i64)>,
 }
 
 /// Build one actor's setup bundle. Shared by the in-process launch and the
@@ -215,6 +221,7 @@ pub(crate) fn actor_setup(
     logic: Box<dyn ClientLogic>,
     link: Box<dyn TrainerLink>,
     remote_net: Option<Arc<crate::transport::SimNet>>,
+    obs: Option<ObsSession>,
 ) -> ActorSetup {
     let privacy = match &cfg.privacy {
         PrivacyMode::Plaintext => PrivacyEngine::Plain,
@@ -236,6 +243,7 @@ pub(crate) fn actor_setup(
         straggler_seed: cfg.seed ^ 0x57A6_61,
         codec: cfg.federation.compression,
         remote_net,
+        obs,
     }
 }
 
@@ -259,15 +267,30 @@ fn launch_threads(
     let SessionBlueprint { init, logics, max_dim, .. } = blueprint;
     let mut threads = Vec::with_capacity(n);
     for (client, (logic, link)) in logics.into_iter().zip(trainer_links).enumerate() {
-        let setup =
-            actor_setup(cfg, &init, max_dim, he_ctx, gate.clone(), client, logic, link, None);
+        let setup = actor_setup(
+            cfg,
+            &init,
+            max_dim,
+            he_ctx,
+            gate.clone(),
+            client,
+            logic,
+            link,
+            None,
+            None,
+        );
         let handle = std::thread::Builder::new()
             .name(format!("fed-trainer-{client}"))
             .spawn(move || actor_main(setup))
             .map_err(|e| anyhow!("spawning trainer {client}: {e}"))?;
         threads.push(handle);
     }
-    Ok(Fabric { coord, threads, worker_builds: Vec::new() })
+    Ok(Fabric {
+        coord,
+        threads,
+        worker_builds: Vec::new(),
+        obs_route: vec![(String::new(), 0); n],
+    })
 }
 
 /// Accept `workers` connections, handshake each (`WorkerHello → Assign`
@@ -289,6 +312,7 @@ fn launch_workers(
          (start them with `fedgraph worker --connect {addr}`)"
     );
     let mut conns: Vec<(TcpStream, Vec<u32>)> = Vec::with_capacity(workers);
+    let mut assign_sent_ns: Vec<u64> = Vec::with_capacity(workers);
     for k in 0..workers {
         let (mut stream, peer) =
             listener.accept().with_context(|| format!("accepting worker {k}"))?;
@@ -321,15 +345,21 @@ fn launch_workers(
         }
         // Round-robin assignment over accept order.
         let clients: Vec<u32> = (0..n as u32).filter(|c| *c as usize % workers == k).collect();
+        // T1 of the NTP-style clock exchange: the Assign carries the
+        // coordinator's trace-clock send time; the build report echoes the
+        // worker's receive/send times (W1/W2) and T2 is stamped on receipt.
+        let t1 = trace::now_ns();
         let assign = DownMsg::Assign {
             n_total: n as u32,
             clients: clients.clone(),
             config: config_bytes.clone(),
+            sent_at_ns: t1,
         };
         tcp::write_frame(&mut stream, CONTROL_LANE, &assign.encode())
             .with_context(|| format!("assigning worker {k}"))?;
         eprintln!("fedgraph: worker {k} ({peer}) hosts clients {clients:?}");
         conns.push((stream, clients));
+        assign_sent_ns.push(t1);
     }
     // Collect every worker's build-cost report before opening the fabric.
     // The sliced session rebuild runs between `Assign` and the rendezvous
@@ -337,6 +367,7 @@ fn launch_workers(
     // counters are asserted here: a worker must materialize **exactly** its
     // assigned slice — the O(assigned-clients) startup contract.
     let mut worker_builds = Vec::with_capacity(workers);
+    let mut clock_offsets: Vec<i64> = Vec::with_capacity(workers);
     for (k, (stream, clients)) in conns.iter_mut().enumerate() {
         let (lane, payload) = match tcp::read_frame(stream)
             .with_context(|| format!("awaiting worker {k}'s build report"))?
@@ -346,11 +377,19 @@ fn launch_workers(
                 bail!("worker {k} closed before reporting its session build")
             }
         };
+        let t2 = trace::now_ns();
         if lane != CONTROL_LANE {
             bail!("worker {k} sent a non-control frame before its build report");
         }
         match UpMsg::decode(&payload).map_err(|e| anyhow!("worker {k} build report: {e}"))? {
-            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+            UpMsg::BuildReport {
+                built_clients,
+                total_clients,
+                session_bytes,
+                build_secs,
+                assign_received_ns,
+                sent_at_ns,
+            } => {
                 if built_clients as usize != clients.len() || total_clients as usize != n {
                     bail!(
                         "worker {k} materialized {built_clients}/{total_clients} clients but \
@@ -359,6 +398,15 @@ fn launch_workers(
                         clients.len()
                     );
                 }
+                // NTP-style offset (worker trace clock minus coordinator's):
+                // average of the two one-way deltas cancels symmetric network
+                // latency. i128 keeps the subtraction overflow-free for any
+                // pair of process epochs.
+                let t1 = assign_sent_ns[k];
+                let offset_ns = (((assign_received_ns as i128 - t1 as i128)
+                    + (sent_at_ns as i128 - t2 as i128))
+                    / 2) as i64;
+                clock_offsets.push(offset_ns);
                 eprintln!(
                     "fedgraph: worker {k} built {built_clients}/{n} clients \
                      ({session_bytes} session bytes, {build_secs:.2}s)"
@@ -373,8 +421,14 @@ fn launch_workers(
             other => bail!("worker {k} sent {other:?} instead of a build report"),
         }
     }
+    let mut obs_route = vec![(String::new(), 0i64); n];
+    for (k, &offset_ns) in clock_offsets.iter().enumerate() {
+        for c in (0..n).filter(|c| c % workers == k) {
+            obs_route[c] = (format!("worker{k}"), offset_ns);
+        }
+    }
     let coord = tcp::coord_link(conns, n)?;
-    Ok(Fabric { coord, threads: Vec::new(), worker_builds })
+    Ok(Fabric { coord, threads: Vec::new(), worker_builds, obs_route })
 }
 
 #[cfg(test)]

@@ -75,6 +75,7 @@
 //! folding match the in-process deployment exactly.
 
 use crate::he::Ciphertext;
+use crate::trace::{EventKind, MetricsSnapshot, TraceEvent};
 use crate::transport::serialize::{Reader, WireError, Writer};
 use crate::transport::{Direction, Phase};
 
@@ -84,8 +85,12 @@ use crate::transport::{Direction, Phase};
 /// variants (`Packed`/`Quantized`) and the `WorkerHello` codec capability
 /// mask. v3: sliced worker session builds — every worker answers `Assign`
 /// with a [`UpMsg::BuildReport`] before hosting actors, and the coordinator
-/// asserts the report covers exactly the assigned slice.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// asserts the report covers exactly the assigned slice. v4: the
+/// observation plane — `Update`/`StopAck` envelopes carry an [`ObsBlock`]
+/// (batched flight-recorder events plus periodic [`MetricsSnapshot`]s), and
+/// the `Assign`/`BuildReport` handshake carries trace-clock timestamps for
+/// the coordinator's clock-offset estimate.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// `WorkerHello.codecs` capability bit: the worker can encode `pack`
 /// (lossless delta + byte-plane) uploads.
@@ -134,6 +139,88 @@ fn read_staged(r: &mut Reader<'_>) -> Result<Vec<StagedTransfer>, WireError> {
     Ok(out)
 }
 
+/// The observation-plane block a remote actor piggybacks on `Update` and
+/// `StopAck` envelopes (protocol v4): the trace events drained from its
+/// process's flight recorder, at most one rate-limited process resource
+/// snapshot, and the recorder's drop count. In-process actors ship an empty
+/// block.
+///
+/// **Ledger neutrality.** Observation bytes must not perturb the measured
+/// wire ledger (a traced run is bitwise-identical to an untraced one, and a
+/// TCP run's ledger equals a channel run's). The decoder therefore reports
+/// the block's encoded length in `wire_len`, and the coordinator records
+/// `frame_len - wire_len` for the frame — the data-plane bytes only.
+#[derive(Debug, Default)]
+pub struct ObsBlock {
+    pub events: Vec<TraceEvent>,
+    pub snapshot: Option<MetricsSnapshot>,
+    /// Events the remote recorder lost to its capacity bound.
+    pub dropped: u64,
+    /// Encoded byte length of this block as read off the wire (0 for
+    /// locally constructed blocks).
+    pub wire_len: usize,
+}
+
+fn write_obs(w: &mut Writer, obs: &ObsBlock) {
+    w.u32(obs.events.len() as u32);
+    for ev in &obs.events {
+        w.str(&ev.track);
+        w.str(&ev.name);
+        w.u8(ev.kind.as_u8());
+        w.u64(ev.start_ns);
+        w.u64(ev.dur_ns);
+        w.u32(ev.args.len() as u32);
+        for (k, v) in &ev.args {
+            w.str(k);
+            w.str(v);
+        }
+    }
+    match &obs.snapshot {
+        None => w.u8(0),
+        Some(s) => {
+            w.u8(1);
+            w.u64(s.at_ns);
+            w.u64(s.rss_bytes);
+            w.f64(s.cpu_seconds);
+            w.u64(s.queue_depth);
+        }
+    }
+    w.u64(obs.dropped);
+}
+
+fn read_obs(r: &mut Reader<'_>) -> Result<ObsBlock, WireError> {
+    let before = r.remaining();
+    let n = r.u32()? as usize;
+    let mut events = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let track = r.str()?;
+        let name = r.str()?;
+        let kind = EventKind::from_u8(r.u8()?).ok_or(WireError::BadTag(0xF2))?;
+        let start_ns = r.u64()?;
+        let dur_ns = r.u64()?;
+        let nargs = r.u32()? as usize;
+        let mut args = Vec::with_capacity(nargs.min(64));
+        for _ in 0..nargs {
+            let k = r.str()?;
+            let v = r.str()?;
+            args.push((k, v));
+        }
+        events.push(TraceEvent { track, name, kind, start_ns, dur_ns, args });
+    }
+    let snapshot = if r.u8()? != 0 {
+        Some(MetricsSnapshot {
+            at_ns: r.u64()?,
+            rss_bytes: r.u64()?,
+            cpu_seconds: r.f64()?,
+            queue_depth: r.u64()?,
+        })
+    } else {
+        None
+    };
+    let dropped = r.u64()?;
+    Ok(ObsBlock { events, snapshot, dropped, wire_len: before - r.remaining() })
+}
+
 /// Coordinator → trainer messages.
 #[derive(Debug)]
 pub enum DownMsg {
@@ -162,8 +249,11 @@ pub enum DownMsg {
     /// Deployment handshake (multi-process transports, pre-rendezvous): the
     /// worker's task assignment — the total trainer count, the client
     /// indices this worker hosts, and the binary-encoded experiment config
-    /// ([`crate::config::FedGraphConfig::encode_wire`]).
-    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8> },
+    /// ([`crate::config::FedGraphConfig::encode_wire`]). `sent_at_ns` is the
+    /// coordinator's trace clock at send time (T1 of the NTP-style offset
+    /// estimate; the worker echoes its receive/send times on the
+    /// [`UpMsg::BuildReport`]).
+    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8>, sent_at_ns: u64 },
 }
 
 /// The model-update payload of an [`UpMsg::Update`].
@@ -208,6 +298,9 @@ pub struct UpdateEnvelope {
     /// for in-process actors (they stage directly).
     pub staged: Vec<StagedTransfer>,
     pub payload: UpdatePayload,
+    /// Piggybacked observation plane (protocol v4): drained trace events +
+    /// an optional resource snapshot. Never ledgered (see [`ObsBlock`]).
+    pub obs: ObsBlock,
 }
 
 /// Trainer → coordinator messages.
@@ -222,8 +315,10 @@ pub enum UpMsg {
     /// The trainer failed; the coordinator aborts the run with `error`.
     Failed { client: u32, error: String },
     /// `Stop` acknowledged; this trainer's lane is drained and its actor is
-    /// about to exit.
-    StopAck { client: u32 },
+    /// about to exit. Carries the actor's final observation block — a
+    /// remote actor forces one last resource snapshot here, so every worker
+    /// contributes at least one sample to the merged report.
+    StopAck { client: u32, obs: ObsBlock },
     /// Deployment handshake (multi-process transports, pre-rendezvous): a
     /// worker process announcing itself, its protocol revision, and the
     /// upload codecs it supports ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] —
@@ -236,8 +331,19 @@ pub enum UpMsg {
     /// O(assigned-clients) startup contract); `session_bytes` is the
     /// worker's approximate materialized per-client session state,
     /// `build_secs` its measured startup time. Workers assigned no clients
-    /// report zeros and exit.
-    BuildReport { built_clients: u32, total_clients: u32, session_bytes: u64, build_secs: f64 },
+    /// report zeros and exit. `assign_received_ns` / `sent_at_ns` are the
+    /// worker's trace clock when `Assign` arrived (W1) and when this report
+    /// left (W2): with the coordinator's T1 (on the `Assign`) and T2 (at
+    /// receipt) they yield the NTP-style clock offset
+    /// `((W1−T1)+(W2−T2))/2` used to rebase the worker's timeline.
+    BuildReport {
+        built_clients: u32,
+        total_clients: u32,
+        session_bytes: u64,
+        build_secs: f64,
+        assign_received_ns: u64,
+        sent_at_ns: u64,
+    },
 }
 
 const D_HELLO: u8 = 1;
@@ -354,7 +460,7 @@ impl DownMsg {
                 w.u32(*version);
             }
             DownMsg::Stop => w.u8(D_STOP),
-            DownMsg::Assign { n_total, clients, config } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns } => {
                 w.u8(D_ASSIGN);
                 w.u32(*n_total);
                 w.u32(clients.len() as u32);
@@ -362,6 +468,7 @@ impl DownMsg {
                     w.u32(c);
                 }
                 w.blob(config);
+                w.u64(*sent_at_ns);
             }
         }
         w.finish()
@@ -396,7 +503,8 @@ impl DownMsg {
                 for _ in 0..k {
                     clients.push(r.u32()?);
                 }
-                DownMsg::Assign { n_total, clients, config: r.blob()? }
+                let config = r.blob()?;
+                DownMsg::Assign { n_total, clients, config, sent_at_ns: r.u64()? }
             }
             t => return Err(WireError::BadTag(t)),
         })
@@ -440,6 +548,7 @@ impl UpMsg {
                         w.blob(blob);
                     }
                 }
+                write_obs(&mut w, &u.obs);
             }
             UpMsg::Metric { client, round, num, den, staged } => {
                 w.u8(U_METRIC);
@@ -454,21 +563,31 @@ impl UpMsg {
                 w.u32(*client);
                 w.str(error);
             }
-            UpMsg::StopAck { client } => {
+            UpMsg::StopAck { client, obs } => {
                 w.u8(U_STOP_ACK);
                 w.u32(*client);
+                write_obs(&mut w, obs);
             }
             UpMsg::WorkerHello { version, codecs } => {
                 w.u8(U_WORKER_HELLO);
                 w.u32(*version);
                 w.u8(*codecs);
             }
-            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+            UpMsg::BuildReport {
+                built_clients,
+                total_clients,
+                session_bytes,
+                build_secs,
+                assign_received_ns,
+                sent_at_ns,
+            } => {
                 w.u8(U_BUILD_REPORT);
                 w.u32(*built_clients);
                 w.u32(*total_clients);
                 w.u64(*session_bytes);
                 w.f64(*build_secs);
+                w.u64(*assign_received_ns);
+                w.u64(*sent_at_ns);
             }
         }
         w.finish()
@@ -496,6 +615,7 @@ impl UpMsg {
                     P_QUANTIZED => UpdatePayload::Quantized { blob: r.blob()? },
                     t => return Err(WireError::BadTag(t)),
                 };
+                let obs = read_obs(&mut r)?;
                 UpMsg::Update(UpdateEnvelope {
                     client,
                     round,
@@ -506,6 +626,7 @@ impl UpMsg {
                     privacy_secs,
                     staged,
                     payload,
+                    obs,
                 })
             }
             U_METRIC => UpMsg::Metric {
@@ -516,13 +637,18 @@ impl UpMsg {
                 staged: read_staged(&mut r)?,
             },
             U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
-            U_STOP_ACK => UpMsg::StopAck { client: r.u32()? },
+            U_STOP_ACK => {
+                let client = r.u32()?;
+                UpMsg::StopAck { client, obs: read_obs(&mut r)? }
+            }
             U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()?, codecs: r.u8()? },
             U_BUILD_REPORT => UpMsg::BuildReport {
                 built_clients: r.u32()?,
                 total_clients: r.u32()?,
                 session_bytes: r.u64()?,
                 build_secs: r.f64()?,
+                assign_received_ns: r.u64()?,
+                sent_at_ns: r.u64()?,
             },
             t => return Err(WireError::BadTag(t)),
         })
@@ -599,6 +725,7 @@ mod tests {
             privacy_secs: 0.0,
             staged: staged.clone(),
             payload: UpdatePayload::Plain(vec![vec![1.0; 8], vec![2.0; 3]]),
+            obs: ObsBlock::default(),
         });
         match UpMsg::decode(&m.encode()).unwrap() {
             UpMsg::Update(u) => {
@@ -661,6 +788,7 @@ mod tests {
                 privacy_secs: 0.0,
                 staged: Vec::new(),
                 payload,
+                obs: ObsBlock::default(),
             });
             match UpMsg::decode(&m.encode()).unwrap() {
                 UpMsg::Update(u) => match (&u.payload, expect_tag) {
@@ -685,8 +813,13 @@ mod tests {
             }
             other => panic!("wrong message {other:?}"),
         }
-        match UpMsg::decode(&UpMsg::StopAck { client: 9 }.encode()).unwrap() {
-            UpMsg::StopAck { client } => assert_eq!(client, 9),
+        let ack = UpMsg::StopAck { client: 9, obs: ObsBlock::default() };
+        match UpMsg::decode(&ack.encode()).unwrap() {
+            UpMsg::StopAck { client, obs } => {
+                assert_eq!(client, 9);
+                assert!(obs.events.is_empty() && obs.snapshot.is_none());
+                assert!(obs.wire_len > 0, "decoded blocks report their wire length");
+            }
             other => panic!("wrong message {other:?}"),
         }
         let report = UpMsg::BuildReport {
@@ -694,13 +827,24 @@ mod tests {
             total_clients: 7,
             session_bytes: 1_234_567,
             build_secs: 0.25,
+            assign_received_ns: 1_000,
+            sent_at_ns: 2_000,
         };
         match UpMsg::decode(&report.encode()).unwrap() {
-            UpMsg::BuildReport { built_clients, total_clients, session_bytes, build_secs } => {
+            UpMsg::BuildReport {
+                built_clients,
+                total_clients,
+                session_bytes,
+                build_secs,
+                assign_received_ns,
+                sent_at_ns,
+            } => {
                 assert_eq!(built_clients, 3);
                 assert_eq!(total_clients, 7);
                 assert_eq!(session_bytes, 1_234_567);
                 assert_eq!(build_secs, 0.25);
+                assert_eq!(assign_received_ns, 1_000);
+                assert_eq!(sent_at_ns, 2_000);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -708,12 +852,68 @@ mod tests {
             n_total: 6,
             clients: vec![1, 3, 5],
             config: vec![0xAA, 0xBB, 0xCC],
+            sent_at_ns: 42,
         };
         match DownMsg::decode(&assign.encode()).unwrap() {
-            DownMsg::Assign { n_total, clients, config } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns } => {
                 assert_eq!(n_total, 6);
                 assert_eq!(clients, vec![1, 3, 5]);
                 assert_eq!(config, vec![0xAA, 0xBB, 0xCC]);
+                assert_eq!(sent_at_ns, 42);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn obs_block_roundtrips_and_reports_wire_len() {
+        let obs = ObsBlock {
+            events: vec![
+                TraceEvent {
+                    track: "client2".into(),
+                    name: "compute".into(),
+                    kind: EventKind::Span,
+                    start_ns: 1_000_000,
+                    dur_ns: 250_000,
+                    args: vec![("round".into(), "3".into())],
+                },
+                TraceEvent {
+                    track: "io".into(),
+                    name: "recv".into(),
+                    kind: EventKind::Instant,
+                    start_ns: 2_000_000,
+                    dur_ns: 0,
+                    args: vec![],
+                },
+            ],
+            snapshot: Some(MetricsSnapshot {
+                at_ns: 3_000_000,
+                rss_bytes: 12_345_678,
+                cpu_seconds: 1.5,
+                queue_depth: 4,
+            }),
+            dropped: 2,
+            wire_len: 0,
+        };
+        let m = UpMsg::StopAck { client: 1, obs };
+        let frame = m.encode();
+        match UpMsg::decode(&frame).unwrap() {
+            UpMsg::StopAck { client, obs } => {
+                assert_eq!(client, 1);
+                assert_eq!(obs.events.len(), 2);
+                assert_eq!(obs.events[0].track, "client2");
+                assert_eq!(obs.events[0].kind, EventKind::Span);
+                assert_eq!(obs.events[0].dur_ns, 250_000);
+                assert_eq!(obs.events[0].args, vec![("round".to_string(), "3".to_string())]);
+                assert_eq!(obs.events[1].kind, EventKind::Instant);
+                let snap = obs.snapshot.expect("snapshot rides along");
+                assert_eq!(snap.rss_bytes, 12_345_678);
+                assert_eq!(snap.cpu_seconds, 1.5);
+                assert_eq!(snap.queue_depth, 4);
+                assert_eq!(obs.dropped, 2);
+                // wire_len covers exactly the obs section: frame minus tag,
+                // client and checksum trailer.
+                assert_eq!(obs.wire_len, frame.len() - 1 - 4 - 8);
             }
             other => panic!("wrong message {other:?}"),
         }

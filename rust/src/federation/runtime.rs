@@ -46,8 +46,8 @@ use crate::transport::serialize::{dequantize_delta, params_wire_len, unpack_delt
 use super::deploy::{he_context, Deployment, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 use super::protocol::{
-    encode_eval, encode_set_model, set_model_frame_len, DownMsg, StagedTransfer, UpMsg,
-    UpdateEnvelope, UpdatePayload,
+    encode_eval, encode_set_model, set_model_frame_len, DownMsg, ObsBlock, StagedTransfer,
+    UpMsg, UpdateEnvelope, UpdatePayload,
 };
 
 /// How a model broadcast is billed to the simulated network.
@@ -174,6 +174,12 @@ pub struct Federation<'m> {
     /// order time, i.e. the oldest version their in-flight upload can stamp.
     /// Cleared when the upload is decoded or rejected.
     pending_floor: Vec<Option<u32>>,
+    /// Per-client observation route: `(process label, clock offset)` for the
+    /// process hosting each client — `("", 0)` for this process, or
+    /// `("workerK", worker_minus_coord_ns)` from the deployment handshake.
+    /// Piggybacked [`ObsBlock`]s are merged into the unified timeline
+    /// through this map.
+    obs_route: Vec<(String, i64)>,
 }
 
 impl<'m> Federation<'m> {
@@ -243,6 +249,7 @@ impl<'m> Federation<'m> {
             max_staleness: cfg.federation.max_staleness,
             last_sent_version: vec![0; n],
             pending_floor: vec![None; n],
+            obs_route: fabric.obs_route,
         };
         if fed.codec.needs_base() {
             // Version 0 is the public init every actor bootstraps from.
@@ -312,6 +319,9 @@ impl<'m> Federation<'m> {
         if targets.is_empty() {
             return Ok(());
         }
+        let _sp = crate::trace::span("coord", "broadcast")
+            .arg("round", round)
+            .arg("targets", targets.len());
         self.version += 1;
         for &t in targets {
             if let Some(v) = self.last_sent_version.get_mut(t) {
@@ -437,6 +447,9 @@ impl<'m> Federation<'m> {
         upload: bool,
         targets: &[usize],
     ) -> Result<PolicyRound> {
+        let _sp = crate::trace::span("coord", "round")
+            .arg("round", round)
+            .arg("participants", participants.len());
         let out = self.policy_step(round, participants, upload)?;
         let mut model = None;
         let mut agg_secs = 0.0;
@@ -455,6 +468,10 @@ impl<'m> Federation<'m> {
                 agg_secs = t0.elapsed().as_secs_f64();
             }
         }
+        drop(_sp);
+        // Round boundaries are natural merge points: drain this thread's
+        // ring buffer so the recorder sees whole rounds.
+        crate::trace::flush_thread();
         Ok(PolicyRound {
             results: out.results,
             model,
@@ -503,6 +520,21 @@ impl<'m> Federation<'m> {
         self.coord.send(c, frame)
     }
 
+    /// Merge a piggybacked observation block into the unified timeline via
+    /// the deployment's per-client `(process label, clock offset)` route.
+    /// Pure observation: never touches either communication ledger.
+    fn absorb_obs(&self, client: usize, obs: ObsBlock) {
+        if obs.events.is_empty() && obs.snapshot.is_none() && obs.dropped == 0 {
+            return;
+        }
+        let (label, offset_ns) = self
+            .obs_route
+            .get(client)
+            .map(|(l, o)| (l.as_str(), *o))
+            .unwrap_or(("", 0));
+        self.monitor.absorb_remote_obs(label, offset_ns, obs.events, obs.snapshot, obs.dropped);
+    }
+
     fn decode_update_frame(
         &self,
         from: usize,
@@ -510,15 +542,28 @@ impl<'m> Federation<'m> {
     ) -> Result<UpdateEnvelope> {
         // Update frames belong to the train phase regardless of which
         // collection loop sees them; the data-plane portion is reclassified
-        // as payload when the envelope is adopted.
-        self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
+        // as payload when the envelope is adopted. The piggybacked
+        // observation block is excluded from the recorded length (ledger
+        // neutrality — see [`ObsBlock`]) and absorbed into the timeline.
         match UpMsg::decode(frame).map_err(|e| anyhow!("from trainer {from}: {e}"))? {
-            UpMsg::Update(u) => {
+            UpMsg::Update(mut u) => {
+                self.wire().record_frame(
+                    Phase::Train,
+                    Direction::Up,
+                    (frame.len() - u.obs.wire_len) as u64,
+                );
                 self.apply_staged(u.client as usize, &u.staged);
+                self.absorb_obs(u.client as usize, std::mem::take(&mut u.obs));
                 Ok(u)
             }
-            UpMsg::Failed { client, error } => bail!("trainer {client} failed: {error}"),
-            other => bail!("unexpected message during training step: {other:?}"),
+            UpMsg::Failed { client, error } => {
+                self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
+                bail!("trainer {client} failed: {error}")
+            }
+            other => {
+                self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
+                bail!("unexpected message during training step: {other:?}")
+            }
         }
     }
 
@@ -754,6 +799,7 @@ impl<'m> Federation<'m> {
             self.monitor.add_secs(phase, privacy_secs);
         }
         self.net().end_tick();
+        crate::trace::instant("coord", "tick");
     }
 
     /// The synchronous barrier collection (the [`SyncBarrier`] policy body):
@@ -851,6 +897,9 @@ impl<'m> Federation<'m> {
         if results.is_empty() {
             bail!("no updates to aggregate");
         }
+        let agg_sp = crate::trace::span("coord", "aggregate")
+            .arg("round", round)
+            .arg("updates", results.len());
         let model = match &self.privacy {
             PrivacyMode::Plaintext | PrivacyMode::Dp(_) => {
                 let mut weighted: Vec<(f32, &ParamSet)> = Vec::with_capacity(results.len());
@@ -893,6 +942,7 @@ impl<'m> Federation<'m> {
                 self.template.unflatten_from(&flat)
             }
         };
+        drop(agg_sp);
         let charge = Charge::PerLink(self.model_down_charge(&model));
         self.broadcast_model(round, &model, targets, charge)?;
         Ok(model)
@@ -913,6 +963,9 @@ impl<'m> Federation<'m> {
         if targets.is_empty() {
             return Ok((0.0, 0.0));
         }
+        let _sp = crate::trace::span("coord", "eval")
+            .arg("round", round)
+            .arg("targets", targets.len());
         let frame: crate::transport::link::Frame =
             encode_eval(round as u32, with.map(|p| p.values.as_slice())).into();
         for &t in targets {
@@ -939,14 +992,19 @@ impl<'m> Federation<'m> {
                     metrics[c] = Some((num, den));
                     remaining -= 1;
                 }
-                UpMsg::Update(u) => {
-                    self.wire().record_frame(Phase::Train, Direction::Up, frame_len);
+                UpMsg::Update(mut u) => {
+                    self.wire().record_frame(
+                        Phase::Train,
+                        Direction::Up,
+                        frame_len - u.obs.wire_len as u64,
+                    );
                     if self.mode == FederationMode::Async {
                         // A straggler finished mid-eval; the next policy
                         // step decides its fate. Its staged traffic belongs
                         // to this tick (the training ran during the eval
                         // collection, exactly as in-process staging lands).
                         self.apply_staged(u.client as usize, &u.staged);
+                        self.absorb_obs(u.client as usize, std::mem::take(&mut u.obs));
                         self.stash.push_back(u);
                     } else {
                         bail!(
@@ -968,6 +1026,8 @@ impl<'m> Federation<'m> {
         }
         // Fold any eval-phase traffic the actors staged this tick.
         self.net().end_tick();
+        drop(_sp);
+        crate::trace::flush_thread();
         Ok((num, den))
     }
 
@@ -1005,17 +1065,41 @@ impl<'m> Federation<'m> {
         while acked < expecting {
             match self.coord.recv() {
                 Ok((_, frame)) => {
-                    self.wire().record_frame(Phase::Train, Direction::Up, frame.len() as u64);
+                    let full = frame.len() as u64;
                     match UpMsg::decode(&frame) {
-                        Ok(UpMsg::StopAck { .. }) => acked += 1,
-                        Ok(UpMsg::Update(u)) => {
-                            self.apply_staged(u.client as usize, &u.staged)
+                        Ok(UpMsg::StopAck { client, obs }) => {
+                            // The actor's final observation block — a remote
+                            // actor forces a resource snapshot here, so every
+                            // worker lands at least one sample in the merged
+                            // report. Never ledgered.
+                            self.wire().record_frame(
+                                Phase::Train,
+                                Direction::Up,
+                                full - obs.wire_len as u64,
+                            );
+                            self.absorb_obs(client as usize, obs);
+                            acked += 1;
+                        }
+                        Ok(UpMsg::Update(mut u)) => {
+                            self.wire().record_frame(
+                                Phase::Train,
+                                Direction::Up,
+                                full - u.obs.wire_len as u64,
+                            );
+                            self.apply_staged(u.client as usize, &u.staged);
+                            self.absorb_obs(u.client as usize, std::mem::take(&mut u.obs));
                         }
                         Ok(UpMsg::Metric { client, staged, .. }) => {
+                            self.wire().record_frame(Phase::Train, Direction::Up, full);
                             self.apply_staged(client as usize, &staged)
                         }
-                        Ok(_) => {}
-                        Err(_) => break,
+                        Ok(_) => {
+                            self.wire().record_frame(Phase::Train, Direction::Up, full);
+                        }
+                        Err(_) => {
+                            self.wire().record_frame(Phase::Train, Direction::Up, full);
+                            break;
+                        }
                     }
                 }
                 Err(_) => break,
@@ -1026,6 +1110,7 @@ impl<'m> Federation<'m> {
         }
         // Nothing may stay parked on a half-open tick.
         self.net().end_tick();
+        crate::trace::flush_thread();
     }
 }
 
@@ -1157,6 +1242,17 @@ mod tests {
             .collect();
         let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
         crate::federation::SessionBuild { init, weights, max_dim: 64, n_total: n, logics }
+    }
+
+    /// A fresh per-"process" observation session for a thread-hosted worker —
+    /// what `run_worker` builds for a real worker process; tests construct it
+    /// directly because they enter at `serve`.
+    fn test_obs(cfg: &FedGraphConfig) -> crate::trace::ObsSession {
+        crate::trace::ObsSession {
+            recorder: crate::trace::FlightRecorder::new("worker"),
+            stats: crate::trace::ProcessStats::new(std::time::Duration::from_millis(50)),
+            ship_events: cfg.trace_enabled(),
+        }
     }
 
     fn run_session(
@@ -1581,11 +1677,13 @@ mod tests {
                 let mut rng = Rng::seeded(wcfg.seed);
                 let build = dummy_build(wcfg.n_trainer, &assignment.clients, &sleeps, &mut rng);
                 let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                let obs = test_obs(&wcfg);
                 crate::federation::worker::serve(
                     assignment,
                     build,
                     staging,
                     crate::federation::worker::BuildStats::default(),
+                    obs,
                 )
             }));
         }
@@ -1715,11 +1813,13 @@ mod tests {
                         let mut rng = Rng::seeded(wcfg.seed);
                         let build = dummy_build(wcfg.n_trainer, &a.clients, &[0; 4], &mut rng);
                         let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                        let obs = test_obs(&wcfg);
                         crate::federation::worker::serve(
                             a,
                             build,
                             staging,
                             crate::federation::worker::BuildStats::default(),
+                            obs,
                         )
                     }));
                 }
@@ -1754,6 +1854,123 @@ mod tests {
         assert_eq!(chan.1, tcp.1, "SimNet download bytes match across deployments");
         assert_eq!(chan.2, tcp.2, "measured up wire counters match");
         assert_eq!(chan.3, tcp.3, "measured down wire counters match");
+    }
+
+    // -- flight recorder (tracing is pure observation) ----------------------
+
+    #[test]
+    fn traced_run_is_bitwise_identical_and_streams_worker_metrics() {
+        // The tentpole's load-bearing invariant: a traced run — spans
+        // recorded, observation blocks piggybacked on every Update/StopAck —
+        // is bitwise-identical to an untraced one on both deployments: final
+        // params, the SimNet ledger, and the measured wire ledger. Workers
+        // still stream resource snapshots into the merged report either way.
+        let _guard = crate::trace::test_lock();
+        let run = |traced: bool, workers: Option<usize>| {
+            let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let mut cfg = test_cfg(4, 4, 0.0);
+            if traced {
+                cfg.extras.insert("trace".into(), "1".into());
+            }
+            let deployment = match workers {
+                None => Deployment::InProcess,
+                Some(w) => Deployment::tcp("127.0.0.1:0", w).unwrap(),
+            };
+            let mut handles = Vec::new();
+            if let Some(w) = workers {
+                let addr = deployment.local_addr().unwrap().to_string();
+                for _ in 0..w {
+                    let addr = addr.clone();
+                    handles.push(std::thread::spawn(move || -> Result<()> {
+                        let a = crate::federation::worker::connect(
+                            &addr,
+                            std::time::Duration::from_secs(20),
+                        )?;
+                        let wcfg = a.cfg.clone();
+                        let mut rng = Rng::seeded(wcfg.seed);
+                        let build = dummy_build(wcfg.n_trainer, &a.clients, &[0; 4], &mut rng);
+                        let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                        let obs = test_obs(&wcfg);
+                        crate::federation::worker::serve(
+                            a,
+                            build,
+                            staging,
+                            crate::federation::worker::BuildStats::default(),
+                            obs,
+                        )
+                    }));
+                }
+            }
+            let mut rng = Rng::seeded(cfg.seed);
+            let bp = dummy_blueprint(4, &[0; 4], &mut rng);
+            let mut global = bp.init.clone();
+            let mut fed = Federation::spawn(&monitor, &deployment, &cfg, bp).unwrap();
+            let all = vec![0usize, 1, 2, 3];
+            let charge = Charge::PerLink(fed.init_model_charge(&global));
+            fed.broadcast_model(0, &global, &all, charge).unwrap();
+            for round in 0..2 {
+                let step = fed.policy_round(round, &all, true, &all).unwrap();
+                if let Some(m) = step.model {
+                    global = m;
+                }
+            }
+            fed.eval_round(2, &all, None).unwrap();
+            fed.shutdown().unwrap();
+            for h in handles {
+                h.join().unwrap().unwrap();
+            }
+            let sim = monitor.net.counter(Phase::Train);
+            let model = crate::transport::serialize::encode_params(&global.values);
+            (
+                fnv1a(&model),
+                sim.bytes_up,
+                sim.bytes_down,
+                monitor.wire.counter(Phase::Train, Direction::Up),
+                monitor.wire.counter(Phase::Train, Direction::Down),
+                monitor.process_samples(),
+            )
+        };
+
+        // Untraced baselines (no recorder installed, spans off).
+        let chan_plain = run(false, None);
+        let tcp_plain = run(false, Some(2));
+        // Traced runs: recorder installed, spans on, obs blocks shipped.
+        let rec = crate::trace::FlightRecorder::new("coord");
+        assert!(crate::trace::install(&rec, true), "another recorder was left installed");
+        let chan_traced = run(true, None);
+        let tcp_traced = run(true, Some(2));
+        crate::trace::uninstall(&rec);
+
+        for (plain, traced, what) in
+            [(&chan_plain, &chan_traced, "channel"), (&tcp_plain, &tcp_traced, "tcp")]
+        {
+            assert_eq!(plain.0, traced.0, "{what}: traced params must match bitwise");
+            assert_eq!(plain.1, traced.1, "{what}: SimNet upload bytes must match");
+            assert_eq!(plain.2, traced.2, "{what}: SimNet download bytes must match");
+            assert_eq!(plain.3, traced.3, "{what}: measured up wire counters must match");
+            assert_eq!(plain.4, traced.4, "{what}: measured down wire counters must match");
+        }
+        assert_eq!(chan_plain.0, tcp_plain.0, "deployments agree untraced");
+
+        // The traced runs put real spans on the coordinator and client
+        // tracks (thread-hosted workers lose the first-wins install race, so
+        // their spans land here unprefixed — real worker processes get the
+        // `workerK/` prefix, asserted by the ci.sh TCP smoke).
+        let events = rec.snapshot_events();
+        let has = |t: &str, n: &str| events.iter().any(|e| e.track == t && e.name == n);
+        assert!(has("coord", "round"), "coordinator round spans recorded");
+        assert!(has("coord", "aggregate"), "aggregation spans recorded");
+        assert!(has("client0", "compute"), "per-client compute spans recorded");
+
+        // Workers stream resource snapshots regardless of span tracing, at
+        // least one each (forced on StopAck), routed to per-worker series.
+        for want in ["worker0", "worker1"] {
+            let samples = tcp_traced.5.iter().find(|(l, _)| l == want);
+            assert!(
+                samples.map(|(_, s)| !s.is_empty()).unwrap_or(false),
+                "{want} must stream at least one MetricsSnapshot"
+            );
+        }
     }
 
     // -- compressed upload wire path (`federation.compression`) -------------

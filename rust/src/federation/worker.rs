@@ -31,6 +31,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::FedGraphConfig;
 use crate::coordinator::BuildSlice;
 use crate::monitor::Monitor;
+use crate::trace::{self, ObsSession, ProcessStats};
 use crate::transport::tcp::{self, CONTROL_LANE};
 use crate::transport::SimNet;
 use crate::util::sync::Semaphore;
@@ -47,6 +48,10 @@ pub struct WorkerAssignment {
     pub n_total: usize,
     /// The client indices this worker hosts (the `Assign` slice plan).
     pub clients: Vec<usize>,
+    /// W1 of the handshake clock exchange: this worker's trace-clock time at
+    /// `Assign` receipt, echoed on the `BuildReport` so the coordinator can
+    /// estimate the clock offset.
+    pub assign_received_ns: u64,
     stream: TcpStream,
 }
 
@@ -77,16 +82,20 @@ pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
         tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
         tcp::ReadOutcome::Closed => bail!("coordinator closed before assigning"),
     };
+    // W1: stamped at frame receipt, before decode, so decode time never
+    // skews the clock-offset estimate.
+    let assign_received_ns = trace::now_ns();
     if lane != CONTROL_LANE {
         bail!("coordinator sent a non-control frame before Assign");
     }
     match DownMsg::decode(&payload).map_err(|e| anyhow!("Assign frame: {e}"))? {
-        DownMsg::Assign { n_total, clients, config } => {
+        DownMsg::Assign { n_total, clients, config, sent_at_ns: _ } => {
             let cfg = FedGraphConfig::decode_wire(&config).context("decoding shipped config")?;
             Ok(WorkerAssignment {
                 cfg,
                 n_total: n_total as usize,
                 clients: clients.into_iter().map(|c| c as usize).collect(),
+                assign_received_ns,
                 stream,
             })
         }
@@ -106,8 +115,9 @@ pub fn serve(
     build: SessionBuild,
     staging_net: Arc<SimNet>,
     stats: BuildStats,
+    obs: ObsSession,
 ) -> Result<()> {
-    let WorkerAssignment { cfg, n_total, clients, stream } = assignment;
+    let WorkerAssignment { cfg, n_total, clients, assign_received_ns, stream } = assignment;
     let mut stream = stream;
     if build.n_total != n_total {
         bail!(
@@ -120,11 +130,13 @@ pub fn serve(
         total_clients: n_total as u32,
         session_bytes: stats.session_bytes,
         build_secs: stats.build_secs,
+        assign_received_ns,
+        sent_at_ns: trace::now_ns(),
     };
     tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
         .context("sending BuildReport")?;
     let he_ctx = he_context(&cfg);
-    let (links, demux) = tcp::worker_links(&stream, &clients)?;
+    let (links, demux) = tcp::worker_links(&stream, &clients, obs.stats.queue_gauge())?;
     // `max_concurrency` bounds compute **per process**: this worker gates its
     // own actors over its own cores, as a separate machine would (see the
     // `FederationConfig::max_concurrency` docs for the cross-deployment
@@ -158,6 +170,7 @@ pub fn serve(
             logic,
             link,
             Some(staging_net.clone()),
+            Some(obs.clone()),
         );
         let handle = std::thread::Builder::new()
             .name(format!("fed-worker-trainer-{client}"))
@@ -204,6 +217,8 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
             total_clients: assignment.n_total as u32,
             session_bytes: 0,
             build_secs: 0.0,
+            assign_received_ns: assignment.assign_received_ns,
+            sent_at_ns: trace::now_ns(),
         };
         let mut stream = &assignment.stream;
         tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
@@ -211,6 +226,19 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
         let _ = assignment.stream.shutdown(Shutdown::Both);
         return Ok(());
     }
+    // This process's observation plane. Installed before the session build so
+    // the build span lands on the worker's own timeline; first-wins keeps a
+    // thread-hosted "worker" (tests) from fighting a coordinator in the same
+    // process — its spans then drain into the coordinator's recorder instead,
+    // and its envelopes ship only metrics snapshots.
+    let recorder = trace::FlightRecorder::new("worker");
+    let pstats = ProcessStats::new(Duration::from_millis(200));
+    trace::install(&recorder, assignment.cfg.trace_enabled());
+    let obs = ObsSession {
+        recorder: recorder.clone(),
+        stats: pstats,
+        ship_events: assignment.cfg.trace_enabled(),
+    };
     let engine = crate::runtime::Engine::start(&assignment.cfg.artifacts_dir)?;
     // Worker-local monitor: its SimNet is only a staging buffer (entries are
     // journaled and shipped to the coordinator); notes/timers are discarded,
@@ -218,8 +246,13 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
     let monitor = Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
     let slice = BuildSlice::assigned(assignment.n_total, &assignment.clients)?;
     let t0 = std::time::Instant::now();
-    let build =
-        crate::coordinator::build_session_sliced(&assignment.cfg, &engine, &monitor, &slice);
+    let build = {
+        let _sp = trace::span("build", "build_slice")
+            .arg("clients", assignment.clients.len())
+            .arg("total", assignment.n_total);
+        crate::coordinator::build_session_sliced(&assignment.cfg, &engine, &monitor, &slice)
+    };
+    trace::flush_thread();
     let result = match build {
         Ok(b) => {
             let (built, session_bytes) = monitor.session_build();
@@ -234,11 +267,13 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
                 b,
                 monitor.net.clone(),
                 BuildStats { session_bytes, build_secs },
+                obs,
             )
         }
         Err(e) => Err(e),
     };
     engine.shutdown();
+    trace::uninstall(&recorder);
     result?;
     eprintln!("fedgraph worker: session complete");
     Ok(())

@@ -73,6 +73,7 @@ pub mod lowrank;
 pub mod monitor;
 pub mod runtime;
 pub mod testing;
+pub mod trace;
 pub mod transport;
 pub mod util;
 

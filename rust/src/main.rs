@@ -42,7 +42,7 @@ fn print_help() {
     println!(
         "fedgraph — federated graph learning benchmark (FedGraph reproduction)\n\n\
          commands:\n\
-         \x20 run --config <file.yaml> [--json <out.json>]\n\
+         \x20 run --config <file.yaml> [--json <out.json>] [--trace <out.trace.json>]\n\
          \x20 run --task NC|GC|LP --dataset <name> --method <name>\n\
          \x20     [--rounds N] [--trainers M] [--local-steps K] [--lr F]\n\
          \x20     [--scale S] [--beta B] [--batch-size B] [--he] [--dp]\n\
@@ -53,7 +53,11 @@ fn print_help() {
          \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
          \x20     [--workers W]\n\
          \x20     [--compression none|pack|quantized] [--quantized-bits 4|8]\n\
-         \x20     [--no-error-feedback]\n\
+         \x20     [--no-error-feedback] [--trace <out.trace.json>]\n\
+         \x20     --trace records a cross-process span timeline (coordinator,\n\
+         \x20     trainer actors, codec, sockets, workers) and writes Chrome\n\
+         \x20     trace-event JSON loadable in Perfetto; the run itself is\n\
+         \x20     bitwise-identical to an untraced one\n\
          \x20     --compression pack is lossless and bitwise-identical to\n\
          \x20     none (only measured wire bytes shrink); quantized is a\n\
          \x20     lossy int8/int4 upload-delta codec (plaintext/DP only)\n\
@@ -101,13 +105,19 @@ fn has_flag(args: &[String], name: &str) -> bool {
 }
 
 fn cmd_run(args: &[String]) -> ExitCode {
-    let cfg = match build_config(args) {
+    let mut cfg = match build_config(args) {
         Ok(c) => c,
         Err(e) => {
             eprintln!("config error: {e}");
             return ExitCode::FAILURE;
         }
     };
+    let trace_path = flag_value(args, "--trace");
+    if trace_path.is_some() {
+        // The flag rides the wire inside the config, so tcp workers see it
+        // during their handshake and stream span buffers back.
+        cfg.extras.insert("trace".to_string(), "1".to_string());
+    }
     println!(
         "running {} / {} on {} ({} trainers, {} rounds)...",
         cfg.task.name(),
@@ -116,7 +126,12 @@ fn cmd_run(args: &[String]) -> ExitCode {
         cfg.n_trainer,
         cfg.global_rounds
     );
-    match fedgraph::run_fedgraph(&cfg) {
+    let outcome = if let Some(path) = trace_path {
+        run_traced(&cfg, path)
+    } else {
+        fedgraph::run_fedgraph(&cfg)
+    };
+    match outcome {
         Ok(report) => {
             println!("{}", report.render());
             if let Some(path) = flag_value(args, "--json") {
@@ -133,6 +148,21 @@ fn cmd_run(args: &[String]) -> ExitCode {
             ExitCode::FAILURE
         }
     }
+}
+
+/// `run --trace <path>`: same run, with the flight recorder installed; the
+/// merged coordinator + worker timeline is written to `path` as Chrome
+/// trace-event JSON (open with Perfetto or chrome://tracing). Tracing is
+/// pure observation — the report is bitwise-identical to an untraced run.
+fn run_traced(cfg: &FedGraphConfig, path: &str) -> anyhow::Result<fedgraph::Report> {
+    let engine = fedgraph::runtime::Engine::start(&cfg.artifacts_dir)?;
+    let result = fedgraph::coordinator::run_fedgraph_traced(cfg, &engine);
+    engine.shutdown();
+    let (report, trace_json) = result?;
+    std::fs::write(path, trace_json)
+        .map_err(|e| anyhow::anyhow!("cannot write trace to {path}: {e}"))?;
+    println!("trace written to {path} (load in Perfetto / chrome://tracing)");
+    Ok(report)
 }
 
 fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {

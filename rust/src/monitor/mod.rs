@@ -17,7 +17,9 @@ pub mod sysinfo;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::{Arc, Mutex};
 
+use crate::trace::{self, FlightRecorder, MetricsSnapshot, TraceEvent, TrackSummary};
 use crate::transport::{Phase, SimNet, WireLedger};
+use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
 
 use sysinfo::{ResourceProbe, ResourceSample};
@@ -64,6 +66,10 @@ struct MonitorState {
     /// and their approximate state bytes (the sliced-build scaling axis).
     session_clients: usize,
     session_bytes: u64,
+    /// Per-process [`MetricsSnapshot`] series on the coordinator's trace
+    /// clock: this process under "coord", plus every worker's envelope-borne
+    /// samples (rebased by its handshake clock offset) under "worker{k}".
+    process_samples: BTreeMap<String, Vec<MetricsSnapshot>>,
 }
 
 /// The monitor class (thread-safe; trainers and the server share it).
@@ -75,6 +81,12 @@ pub struct Monitor {
     /// two (`wire payload bytes == SimNet bytes` for charged payload frames
     /// in plaintext/DP sessions).
     pub wire: WireLedger,
+    /// The run's flight recorder (see [`crate::trace`]): the merge target
+    /// for every thread's span buffer and every worker's envelope-borne
+    /// trace events. **Not** auto-installed — the coordinator entry point
+    /// installs it for the run when `cfg.trace_enabled()` (span recording
+    /// stays off otherwise, and probes cost one relaxed atomic load).
+    pub flight: Arc<FlightRecorder>,
     state: Mutex<MonitorState>,
     probe: ResourceProbe,
 }
@@ -84,6 +96,7 @@ impl Monitor {
         Monitor {
             net,
             wire: WireLedger::new(),
+            flight: FlightRecorder::new("coord"),
             state: Mutex::new(MonitorState {
                 stopwatches: BTreeMap::new(),
                 extras: HashMap::new(),
@@ -94,22 +107,40 @@ impl Monitor {
                 timelines: Vec::new(),
                 session_clients: 0,
                 session_bytes: 0,
+                process_samples: BTreeMap::new(),
             }),
             probe: ResourceProbe::new(),
         }
     }
 
     /// Start the named phase stopwatch ("pretrain", "train", "aggregate",
-    /// "eval", "he_encrypt", ...).
+    /// "eval", "he_encrypt", ...). A `start` while the phase is already
+    /// running is an instrumentation bug and is ledgered as a
+    /// `monitor_misuse` report note (the stopwatch itself is unharmed —
+    /// `Stopwatch::start` is idempotent).
     pub fn start(&self, phase: &str) {
         let mut st = self.state.lock().unwrap();
-        st.stopwatches.entry(phase.to_string()).or_default().start();
+        let sw = st.stopwatches.entry(phase.to_string()).or_default();
+        if sw.is_running() {
+            let note = format!("duplicate start('{phase}')");
+            st.notes.push(("monitor_misuse".to_string(), note));
+        } else {
+            sw.start();
+        }
     }
 
+    /// Stop the named phase stopwatch. A `stop` with no running span (never
+    /// started, or already stopped) is an instrumentation bug and is
+    /// ledgered as a `monitor_misuse` report note instead of silently
+    /// no-op'ing.
     pub fn stop(&self, phase: &str) {
         let mut st = self.state.lock().unwrap();
-        if let Some(sw) = st.stopwatches.get_mut(phase) {
-            sw.stop();
+        match st.stopwatches.get_mut(phase) {
+            Some(sw) if sw.is_running() => sw.stop(),
+            _ => {
+                let note = format!("stop('{phase}') without a running start");
+                st.notes.push(("monitor_misuse".to_string(), note));
+            }
         }
     }
 
@@ -136,11 +167,21 @@ impl Monitor {
     }
 
     /// Take a CPU/memory sample (the paper's Prometheus scrape equivalent).
+    /// Also appends a trace-clock [`MetricsSnapshot`] to this process's
+    /// `"coord"` series, so the merged timeline's counter tracks cover the
+    /// coordinator next to the workers.
     pub fn sample_resources(&self) {
         let s = self.probe.sample();
+        let snap = MetricsSnapshot {
+            at_ns: trace::now_ns(),
+            rss_bytes: s.rss_bytes,
+            cpu_seconds: sysinfo::cpu_seconds(),
+            queue_depth: 0,
+        };
         let mut st = self.state.lock().unwrap();
         st.peak_rss = st.peak_rss.max(s.rss_bytes);
         st.samples.push(s);
+        st.process_samples.entry("coord".to_string()).or_default().push(snap);
     }
 
     pub fn samples(&self) -> Vec<ResourceSample> {
@@ -212,6 +253,61 @@ impl Monitor {
     /// (grouped transfers contribute their slowest link only).
     pub fn net_concurrent_secs(&self, phase: Phase) -> f64 {
         self.net.counter(phase).concurrent_secs
+    }
+
+    /// Merge a remote process's observation block into the unified timeline:
+    /// trace events and the optional resource snapshot are rebased from the
+    /// worker's trace clock onto ours (`offset_ns` = worker-minus-coord,
+    /// estimated at the `WorkerHello → Assign` handshake), event tracks get
+    /// a `{label}/` prefix so the export maps them to their own process, and
+    /// remote buffer drops are carried into this recorder's drop count.
+    /// Pure observation: nothing here touches either communication ledger.
+    pub fn absorb_remote_obs(
+        &self,
+        label: &str,
+        offset_ns: i64,
+        events: Vec<TraceEvent>,
+        snapshot: Option<MetricsSnapshot>,
+        dropped: u64,
+    ) {
+        let rebase = |t: u64| -> u64 { (t as i128 - offset_ns as i128).max(0) as u64 };
+        if !events.is_empty() {
+            let events = events
+                .into_iter()
+                .map(|mut ev| {
+                    ev.start_ns = rebase(ev.start_ns);
+                    if !label.is_empty() {
+                        ev.track = format!("{label}/{}", ev.track);
+                    }
+                    ev
+                })
+                .collect();
+            self.flight.absorb(events);
+        }
+        self.flight.add_dropped(dropped);
+        if let Some(mut snap) = snapshot {
+            snap.at_ns = rebase(snap.at_ns);
+            let key = if label.is_empty() { "coord".to_string() } else { label.to_string() };
+            self.state.lock().unwrap().process_samples.entry(key).or_default().push(snap);
+        }
+    }
+
+    /// Collapsed per-track span totals of the merged timeline (the report's
+    /// trace table).
+    pub fn trace_summary(&self) -> Vec<TrackSummary> {
+        trace::summarize(&self.flight.snapshot_events())
+    }
+
+    /// Per-process [`MetricsSnapshot`] series (coordinator + workers),
+    /// sorted by process label.
+    pub fn process_samples(&self) -> Vec<(String, Vec<MetricsSnapshot>)> {
+        self.state.lock().unwrap().process_samples.clone().into_iter().collect()
+    }
+
+    /// The merged timeline as Chrome trace-event JSON (Perfetto /
+    /// `chrome://tracing` loadable) — what `--trace <path>` writes.
+    pub fn chrome_trace(&self) -> Json {
+        trace::chrome_trace_json(&self.flight.snapshot_events(), &self.process_samples())
     }
 
     /// All phase names with any recorded time, sorted.
@@ -305,6 +401,52 @@ mod tests {
         m.count_built_client(1000);
         m.count_built_client(24);
         assert_eq!(m.session_build(), (2, 1024));
+    }
+
+    #[test]
+    fn misuse_start_stop_is_ledgered() {
+        let m = monitor();
+        m.stop("never-started");
+        m.start("train");
+        m.start("train"); // duplicate while running
+        m.stop("train");
+        m.stop("train"); // stop after stop
+        let notes = m.notes();
+        let misuse: Vec<&String> =
+            notes.iter().filter(|(k, _)| k == "monitor_misuse").map(|(_, v)| v).collect();
+        assert_eq!(misuse.len(), 3, "all three misuses ledger a note: {notes:?}");
+        assert!(misuse[0].contains("never-started"));
+        assert!(misuse[1].contains("duplicate start"));
+        // The stopwatch itself stays coherent through the misuse.
+        assert!(m.phase_secs("train") >= 0.0);
+    }
+
+    #[test]
+    fn remote_obs_merges_with_prefix_and_offset() {
+        let m = monitor();
+        let ev = TraceEvent {
+            track: "client1".into(),
+            name: "compute".into(),
+            kind: crate::trace::EventKind::Span,
+            start_ns: 5_000,
+            dur_ns: 100,
+            args: vec![],
+        };
+        let snap =
+            MetricsSnapshot { at_ns: 6_000, rss_bytes: 1, cpu_seconds: 0.5, queue_depth: 2 };
+        m.absorb_remote_obs("worker0", 1_000, vec![ev], Some(snap), 4);
+        let evs = m.flight.snapshot_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].track, "worker0/client1", "worker tracks get a process prefix");
+        assert_eq!(evs[0].start_ns, 4_000, "worker clock rebased by the offset");
+        assert_eq!(m.flight.dropped(), 4, "remote drops carry over");
+        let ps = m.process_samples();
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].0, "worker0");
+        assert_eq!(ps[0].1[0].at_ns, 5_000);
+        let sum = m.trace_summary();
+        assert_eq!(sum[0].track, "worker0/client1");
+        assert!(m.chrome_trace().to_string().contains("worker0"));
     }
 
     #[test]

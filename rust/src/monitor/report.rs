@@ -19,6 +19,7 @@
 //! codec saved real bytes); the same figures land in the JSON under each
 //! phase's `wire` entry plus a run-level `wire_compression_ratio`.
 
+use crate::trace::{MetricsSnapshot, TrackSummary};
 use crate::transport::{Direction, Phase, WireCounter};
 use crate::util::json::{obj, Json};
 use crate::util::tables::{fmt_bytes, fmt_secs, Table};
@@ -64,6 +65,17 @@ pub struct Report {
     /// actually moved, next to the simulated ledger above (see module docs
     /// for the cross-check invariant).
     pub wire: Vec<(Phase, WireCounter, WireCounter)>,
+    /// Collapsed per-track span totals of the merged flight-recorder
+    /// timeline (empty unless the run was traced — `--trace` / `extras:
+    /// trace: "1"`).
+    pub trace_tracks: Vec<TrackSummary>,
+    /// Trace events lost to recorder capacity bounds (coordinator + remote),
+    /// surfaced so a truncated timeline is never mistaken for a complete one.
+    pub trace_dropped: u64,
+    /// Per-process resource snapshot series (`coord`, `worker0`, ...):
+    /// workers stream these on update envelopes whether or not span tracing
+    /// is on.
+    pub worker_metrics: Vec<(String, Vec<MetricsSnapshot>)>,
 }
 
 impl Report {
@@ -112,6 +124,9 @@ impl Report {
             client_totals: m.timeline_totals(),
             transport,
             wire,
+            trace_tracks: m.trace_summary(),
+            trace_dropped: m.flight.dropped(),
+            worker_metrics: m.process_samples(),
         }
     }
 
@@ -235,6 +250,43 @@ impl Report {
                 fmt_secs(self.startup_secs)
             ));
         }
+        if !self.trace_tracks.is_empty() {
+            let mut t = Table::new(&["track", "spans", "busy s", "instants"])
+                .with_title("Trace (flight recorder)");
+            for s in &self.trace_tracks {
+                t.row(&[
+                    s.track.clone(),
+                    s.spans.to_string(),
+                    fmt_secs(s.busy_secs),
+                    s.instants.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+            if self.trace_dropped > 0 {
+                out.push_str(&format!(
+                    "trace events dropped (recorder capacity): {}\n",
+                    self.trace_dropped
+                ));
+            }
+        }
+        if !self.worker_metrics.is_empty() {
+            let mut t =
+                Table::new(&["process", "samples", "peak rss", "cpu s", "max queue"])
+                    .with_title("Process metrics (streamed)");
+            for (label, samples) in &self.worker_metrics {
+                let peak = samples.iter().map(|s| s.rss_bytes).max().unwrap_or(0);
+                let cpu = samples.iter().map(|s| s.cpu_seconds).fold(0.0f64, f64::max);
+                let queue = samples.iter().map(|s| s.queue_depth).max().unwrap_or(0);
+                t.row(&[
+                    label.clone(),
+                    samples.len().to_string(),
+                    fmt_bytes(peak),
+                    fmt_secs(cpu),
+                    queue.to_string(),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
         if !self.client_totals.is_empty() {
             let mut t = Table::new(&["client", "compute s", "wait s", "transfer s"])
                 .with_title("Per-client timeline");
@@ -314,11 +366,52 @@ impl Report {
                 })
                 .collect(),
         );
+        // Observability sections: always present (empty when untraced /
+        // single-process) so consumers can rely on the document shape.
+        let trace_tracks = Json::Arr(
+            self.trace_tracks
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("track", Json::Str(s.track.clone())),
+                        ("spans", (s.spans as usize).into()),
+                        ("busy_secs", s.busy_secs.into()),
+                        ("instants", (s.instants as usize).into()),
+                    ])
+                })
+                .collect(),
+        );
+        let worker_metrics = Json::Obj(
+            self.worker_metrics
+                .iter()
+                .map(|(label, samples)| {
+                    (
+                        label.clone(),
+                        Json::Arr(
+                            samples
+                                .iter()
+                                .map(|s| {
+                                    obj(vec![
+                                        ("at_ns", (s.at_ns as usize).into()),
+                                        ("rss_bytes", (s.rss_bytes as usize).into()),
+                                        ("cpu_seconds", s.cpu_seconds.into()),
+                                        ("queue_depth", (s.queue_depth as usize).into()),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    )
+                })
+                .collect(),
+        );
         obj(vec![
             ("notes", notes),
             ("phase_secs", phases),
             ("transport", Json::Str(self.transport.clone())),
             ("wire", wire),
+            ("trace_tracks", trace_tracks),
+            ("trace_dropped", (self.trace_dropped as usize).into()),
+            ("worker_metrics", worker_metrics),
             ("wire_compression_ratio", self.wire_compression_ratio().into()),
             ("startup_secs", self.startup_secs.into()),
             ("session_clients", self.session_clients.into()),
@@ -411,6 +504,104 @@ mod tests {
         // No codec in play: measured payload == logical payload, ratio 1.0.
         assert!((r.wire_compression_ratio() - 1.0).abs() < 1e-12);
         assert_eq!(parsed.get("wire_compression_ratio").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn report_json_schema_is_stable() {
+        // The golden-schema gate: every consumer-visible top-level key is
+        // always present — observability sections included, even for an
+        // untraced single-process run — so downstream tooling (benches,
+        // ci.sh validators) can rely on the document shape.
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        m.note("dataset", "cora-sim");
+        m.wire.record_frame(Phase::Train, Direction::Up, 50);
+        let r = Report::from_monitor(&m);
+        let json = r.to_json();
+        let keys: Vec<&str> = match &json {
+            Json::Obj(fields) => fields.iter().map(|(k, _)| k.as_str()).collect(),
+            other => panic!("report JSON must be an object, got {other:?}"),
+        };
+        // `Json::Obj` is a BTreeMap, so keys iterate alphabetically.
+        assert_eq!(
+            keys,
+            vec![
+                "clients",
+                "final_accuracy",
+                "final_loss",
+                "notes",
+                "peak_rss",
+                "phase_secs",
+                "pretrain_bytes",
+                "pretrain_net_concurrent_secs",
+                "pretrain_net_secs",
+                "rounds",
+                "session_bytes",
+                "session_clients",
+                "startup_secs",
+                "trace_dropped",
+                "trace_tracks",
+                "train_bytes",
+                "train_net_concurrent_secs",
+                "train_net_secs",
+                "train_wasted_bytes",
+                "transport",
+                "wire",
+                "wire_compression_ratio",
+            ],
+            "top-level report schema drifted"
+        );
+        let parsed = Json::parse(&json.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("trace_tracks").as_arr().map(|a| a.len()),
+            Some(0),
+            "untraced runs carry an empty trace_tracks array"
+        );
+        assert_eq!(parsed.get("trace_dropped").as_f64(), Some(0.0));
+        match parsed.get("worker_metrics") {
+            Json::Obj(v) => assert!(v.is_empty(), "no processes streamed metrics"),
+            other => panic!("worker_metrics must be an object, got {other:?}"),
+        }
+
+        // Traced/multi-process shape: one absorbed obs block fills both
+        // sections with their fixed per-entry keys.
+        m.absorb_remote_obs(
+            "worker0",
+            0,
+            vec![crate::trace::TraceEvent {
+                track: "client1".into(),
+                name: "compute".into(),
+                kind: crate::trace::EventKind::Span,
+                start_ns: 1_000,
+                dur_ns: 500,
+                args: vec![],
+            }],
+            Some(MetricsSnapshot {
+                at_ns: 2_000,
+                rss_bytes: 1 << 20,
+                cpu_seconds: 0.25,
+                queue_depth: 3,
+            }),
+            2,
+        );
+        let parsed =
+            Json::parse(&Report::from_monitor(&m).to_json().to_string_pretty()).unwrap();
+        let tracks = parsed.get("trace_tracks").as_arr().unwrap();
+        assert_eq!(tracks.len(), 1);
+        assert_eq!(tracks[0].get("track").as_str(), Some("worker0/client1"));
+        assert_eq!(tracks[0].get("spans").as_f64(), Some(1.0));
+        assert!(tracks[0].get("busy_secs").as_f64().unwrap() > 0.0);
+        assert_eq!(tracks[0].get("instants").as_f64(), Some(0.0));
+        assert_eq!(parsed.get("trace_dropped").as_f64(), Some(2.0));
+        let samples = parsed.get("worker_metrics").get("worker0").as_arr().unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].get("rss_bytes").as_f64(), Some((1 << 20) as f64));
+        assert_eq!(samples[0].get("cpu_seconds").as_f64(), Some(0.25));
+        assert_eq!(samples[0].get("queue_depth").as_f64(), Some(3.0));
+        assert!(samples[0].get("at_ns").as_f64().is_some());
+        let text = Report::from_monitor(&m).render();
+        assert!(text.contains("Trace (flight recorder)"), "trace table renders:\n{text}");
+        assert!(text.contains("Process metrics"), "metrics table renders:\n{text}");
+        assert!(text.contains("trace events dropped"), "drop note renders:\n{text}");
     }
 
     #[test]

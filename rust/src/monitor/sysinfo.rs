@@ -6,24 +6,49 @@
 use std::time::Instant;
 
 /// Current resident set size in bytes (0 if unavailable).
+///
+/// Primary source is the `VmRSS:` line of `/proc/self/status`, which the
+/// kernel reports in kB regardless of the page size — correct on 16k/64k-page
+/// kernels (arm64 servers, ppc64) where a hardcoded 4096-byte page would
+/// under-report RSS by 4–16x. `/proc/self/statm` (reported in pages) is kept
+/// as a fallback, scaled by an assumed 4096-byte page.
 pub fn rss_bytes() -> u64 {
+    if let Ok(s) = std::fs::read_to_string("/proc/self/status") {
+        for line in s.lines() {
+            if let Some(rest) = line.strip_prefix("VmRSS:") {
+                if let Some(kb) = rest.split_whitespace().next() {
+                    if let Ok(kb) = kb.parse::<u64>() {
+                        return kb * 1024;
+                    }
+                }
+            }
+        }
+    }
     // /proc/self/statm: size resident shared text lib data dt (pages)
     if let Ok(s) = std::fs::read_to_string("/proc/self/statm") {
         if let Some(resident) = s.split_whitespace().nth(1) {
             if let Ok(pages) = resident.parse::<u64>() {
-                return pages * page_size();
+                return pages * fallback_page_size();
             }
         }
     }
     0
 }
 
-fn page_size() -> u64 {
-    // Linux x86-64/aarch64 default; good enough for reporting.
+fn fallback_page_size() -> u64 {
+    // Only reached when /proc/self/status has no VmRSS line; statm reports
+    // pages, and without a syscall we can only assume the x86-64/aarch64
+    // default. The VmRSS path above is page-size-independent.
     4096
 }
 
 /// Cumulative user+system CPU seconds of this process.
+///
+/// `utime`/`stime` in `/proc/<pid>/stat` are expressed in `USER_HZ` ticks.
+/// `USER_HZ` is a kernel *ABI* constant fixed at 100 on every mainstream
+/// Linux architecture (distinct from the kernel's internal `CONFIG_HZ`,
+/// which may be 250/1000) — the same constant `ps`/`top` assume — so we
+/// divide by 100 rather than shelling out to `getconf CLK_TCK`.
 pub fn cpu_seconds() -> f64 {
     if let Ok(s) = std::fs::read_to_string("/proc/self/stat") {
         // Fields 14 and 15 (utime, stime) in clock ticks, after the comm
@@ -33,7 +58,7 @@ pub fn cpu_seconds() -> f64 {
             if rest.len() > 13 {
                 let utime: f64 = rest[11].parse().unwrap_or(0.0);
                 let stime: f64 = rest[12].parse().unwrap_or(0.0);
-                let hz = 100.0; // USER_HZ on all mainstream Linux configs
+                let hz = 100.0; // USER_HZ (see above)
                 return (utime + stime) / hz;
             }
         }

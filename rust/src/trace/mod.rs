@@ -1,0 +1,757 @@
+//! The flight recorder: structured span/instant tracing across every layer
+//! of a run, in-process and across worker processes.
+//!
+//! The [`Monitor`](crate::monitor::Monitor) answers *how much* (phase
+//! totals, byte ledgers, round curves); this module answers *when* and
+//! *where*: a typed event timeline ([`TraceEvent`]) recorded through
+//! per-thread buffers — **no global mutex on the hot path** — and drained
+//! into a process-wide [`FlightRecorder`] at natural merge points (end of an
+//! actor message, end of a coordinator round, thread exit). Worker processes
+//! piggyback their drained buffers plus periodic [`MetricsSnapshot`]s on
+//! protocol-v4 `Update`/`StopAck` envelopes (see
+//! [`crate::federation::protocol`]); the coordinator aligns their clocks
+//! with the handshake-estimated offset and merges everything into one
+//! timeline with per-process/per-actor tracks, exportable as Chrome
+//! trace-event JSON ([`chrome_trace_json`]) loadable in Perfetto or
+//! `chrome://tracing`.
+//!
+//! **Tracing is pure observation.** Span recording never feeds back into
+//! scheduling, RNG streams, payload bytes, or either communication ledger; a
+//! run with tracing enabled is bitwise-identical to one with it disabled
+//! (pinned by the engine-free tests in [`crate::federation::runtime`] over
+//! both channel and loopback-TCP deployments). When no recorder is installed
+//! — the default — every probe is a single relaxed atomic load.
+//!
+//! Track naming convention (`docs/OBSERVABILITY.md` has the full map):
+//! `coord` (round lifecycle), `client{c}` (per-actor train/eval spans),
+//! `codec` (upload codec encode/decode), `io` (TCP frame send/recv),
+//! `agg` (aggregation shards), `build` (session build). Events merged from
+//! worker `k` get a `worker{k}/` prefix, which the Chrome export maps to a
+//! separate process.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
+
+/// Span (has a duration) or instant (a point mark) — the two Chrome
+/// trace-event shapes the recorder emits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Span,
+    Instant,
+}
+
+impl EventKind {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            EventKind::Span => 0,
+            EventKind::Instant => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        match v {
+            0 => Some(EventKind::Span),
+            1 => Some(EventKind::Instant),
+            _ => None,
+        }
+    }
+}
+
+/// One timeline event. Times are nanoseconds since this process's trace
+/// epoch (the first `now_ns()` call); cross-process events are re-based onto
+/// the coordinator's epoch with the handshake clock offset before merging.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Timeline lane ("coord", "client3", "io", "worker1/codec", ...).
+    pub track: String,
+    /// Event label ("round", "compute", "encode", ...).
+    pub name: String,
+    pub kind: EventKind,
+    pub start_ns: u64,
+    /// Zero for instants.
+    pub dur_ns: u64,
+    /// Free-form key/value annotations (small; ride the wire as strings).
+    pub args: Vec<(String, String)>,
+}
+
+// ---------------------------------------------------------------------------
+// Trace clock
+// ---------------------------------------------------------------------------
+
+/// Process-wide trace epoch. A `Mutex<Option<Instant>>` (const-constructible
+/// on our toolchain floor) seeds a per-thread cached copy, so `now_ns()`
+/// costs one mutex hit per thread ever, then stays lock-free.
+static EPOCH: Mutex<Option<Instant>> = Mutex::new(None);
+
+thread_local! {
+    static TL_EPOCH: Instant = {
+        let mut g = EPOCH.lock().unwrap_or_else(|e| e.into_inner());
+        *g.get_or_insert_with(Instant::now)
+    };
+}
+
+/// Nanoseconds since this process's trace epoch (monotonic).
+pub fn now_ns() -> u64 {
+    TL_EPOCH.with(|e| e.elapsed().as_nanos() as u64)
+}
+
+// ---------------------------------------------------------------------------
+// The process-wide recorder and the per-thread buffers that feed it
+// ---------------------------------------------------------------------------
+
+/// Bounded sink for drained trace buffers. One per process: the coordinator
+/// installs its monitor's recorder for the run; a worker process installs
+/// its own and drains it onto update envelopes.
+pub struct FlightRecorder {
+    label: String,
+    cap: usize,
+    events: Mutex<Vec<TraceEvent>>,
+    dropped: AtomicU64,
+}
+
+/// Default event capacity: past this the recorder counts drops instead of
+/// growing without bound (a flight recorder, not an unbounded log).
+pub const DEFAULT_CAP: usize = 1 << 18;
+
+impl FlightRecorder {
+    pub fn new(label: &str) -> Arc<FlightRecorder> {
+        FlightRecorder::with_capacity(label, DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(label: &str, cap: usize) -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder {
+            label: label.to_string(),
+            cap: cap.max(1),
+            events: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    /// Absorb a drained buffer (events past the capacity are counted, not
+    /// stored).
+    pub fn absorb(&self, mut evs: Vec<TraceEvent>) {
+        let mut store = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        let room = self.cap.saturating_sub(store.len());
+        if evs.len() > room {
+            self.dropped.fetch_add((evs.len() - room) as u64, Ordering::Relaxed);
+            evs.truncate(room);
+        }
+        store.append(&mut evs);
+    }
+
+    pub fn push(&self, ev: TraceEvent) {
+        self.absorb(vec![ev]);
+    }
+
+    /// Drain all recorded events (what a worker ships on an envelope).
+    pub fn take_events(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Copy of the recorded events (what the coordinator exports).
+    pub fn snapshot_events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events lost to the capacity bound (here or in a remote recorder whose
+    /// drop count rode an envelope).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn add_dropped(&self, n: u64) {
+        if n > 0 {
+            self.dropped.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Drain the drop counter — what a worker ships alongside a drained
+    /// buffer, so the coordinator accumulates deltas, never double-counts.
+    pub fn take_dropped(&self) -> u64 {
+        self.dropped.swap(0, Ordering::Relaxed)
+    }
+}
+
+/// The installed recorder, if any. Read-locked only when a thread buffer
+/// drains (every [`FLUSH_THRESHOLD`] events or at an explicit merge point),
+/// never per event.
+static RECORDER: RwLock<Option<Arc<FlightRecorder>>> = RwLock::new(None);
+
+/// Span probes check this single relaxed atomic; when false (the default)
+/// a probe is inert and allocation-free.
+static SPANS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Install `rec` as this process's recorder. **First wins**: returns false
+/// (and changes nothing) if a recorder is already installed — the rule that
+/// keeps thread-hosted loopback "workers" (tests) from fighting the
+/// coordinator over the process-wide slot. `spans` gates span recording;
+/// metrics snapshots are independent of it.
+pub fn install(rec: &Arc<FlightRecorder>, spans: bool) -> bool {
+    let mut slot = RECORDER.write().unwrap_or_else(|e| e.into_inner());
+    if slot.is_some() {
+        return false;
+    }
+    *slot = Some(rec.clone());
+    SPANS_ENABLED.store(spans, Ordering::Relaxed);
+    true
+}
+
+/// Uninstall `rec` if it is the installed recorder (flushing this thread's
+/// buffer into it first). A no-op for any other recorder, so a failed
+/// `install` never needs a paired uninstall.
+pub fn uninstall(rec: &Arc<FlightRecorder>) {
+    flush_thread();
+    let mut slot = RECORDER.write().unwrap_or_else(|e| e.into_inner());
+    if slot.as_ref().map(|r| Arc::ptr_eq(r, rec)).unwrap_or(false) {
+        *slot = None;
+        SPANS_ENABLED.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Is span recording on? One relaxed load — the hot-path probe.
+pub fn enabled() -> bool {
+    SPANS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// Per-thread buffer size that triggers an automatic drain.
+const FLUSH_THRESHOLD: usize = 256;
+
+/// The per-thread event buffer. Wrapped so thread exit drains whatever is
+/// left (reader/demux threads end between explicit merge points).
+struct LocalBuf(Vec<TraceEvent>);
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        drain(&mut self.0);
+    }
+}
+
+thread_local! {
+    static TL_BUF: RefCell<LocalBuf> = RefCell::new(LocalBuf(Vec::new()));
+}
+
+fn drain(buf: &mut Vec<TraceEvent>) {
+    if buf.is_empty() {
+        return;
+    }
+    let rec = RECORDER.read().unwrap_or_else(|e| e.into_inner()).clone();
+    match rec {
+        Some(rec) => rec.absorb(std::mem::take(buf)),
+        None => buf.clear(),
+    }
+}
+
+fn push_event(ev: TraceEvent) {
+    // A probe can fire while TLS is tearing down (event from another
+    // destructor); drop the event rather than re-initialize the buffer.
+    let _ = TL_BUF.try_with(|b| {
+        let mut b = b.borrow_mut();
+        b.0.push(ev);
+        if b.0.len() >= FLUSH_THRESHOLD {
+            drain(&mut b.0);
+        }
+    });
+}
+
+/// Drain this thread's buffer into the installed recorder (a merge point:
+/// end of an actor message, end of a coordinator round, end of a shard job).
+pub fn flush_thread() {
+    let _ = TL_BUF.try_with(|b| drain(&mut b.borrow_mut().0));
+}
+
+// ---------------------------------------------------------------------------
+// Recording API
+// ---------------------------------------------------------------------------
+
+/// An in-flight span; records a [`TraceEvent`] on drop. Inert (no
+/// allocation, no clock read) when span recording is off.
+pub struct SpanGuard {
+    active: Option<(String, String, u64, Vec<(String, String)>)>,
+}
+
+impl SpanGuard {
+    /// Attach a key/value annotation (no-op on an inert guard). Builder
+    /// style so probes chain onto [`span`] in one expression.
+    pub fn arg(mut self, key: &str, value: impl std::fmt::Display) -> SpanGuard {
+        if let Some((_, _, _, args)) = self.active.as_mut() {
+            args.push((key.to_string(), value.to_string()));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some((track, name, start_ns, args)) = self.active.take() {
+            let dur_ns = now_ns().saturating_sub(start_ns);
+            push_event(TraceEvent { track, name, kind: EventKind::Span, start_ns, dur_ns, args });
+        }
+    }
+}
+
+/// Open a span on `track`; it closes (and records) when the guard drops.
+pub fn span(track: impl Into<String>, name: &str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    SpanGuard { active: Some((track.into(), name.to_string(), now_ns(), Vec::new())) }
+}
+
+/// Record a point event on `track`.
+pub fn instant(track: impl Into<String>, name: &str) {
+    if !enabled() {
+        return;
+    }
+    push_event(TraceEvent {
+        track: track.into(),
+        name: name.to_string(),
+        kind: EventKind::Instant,
+        start_ns: now_ns(),
+        dur_ns: 0,
+        args: Vec::new(),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Process metrics (the worker-side Fig 11 feed)
+// ---------------------------------------------------------------------------
+
+/// One process resource sample, timestamped on the trace clock. Workers ship
+/// these periodically on update envelopes so the merged report covers every
+/// process's CPU/memory curve, not just the coordinator's.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MetricsSnapshot {
+    /// Trace-clock nanoseconds (re-based onto the coordinator's epoch at
+    /// merge time).
+    pub at_ns: u64,
+    pub rss_bytes: u64,
+    /// Cumulative process CPU seconds (user+system).
+    pub cpu_seconds: f64,
+    /// Frames queued in this process's demux mailboxes at sample time.
+    pub queue_depth: u64,
+}
+
+/// Rate-limited sampler of this process's RSS / CPU / queue depth.
+/// `queue_gauge()` hands out the shared depth counter the transport demux
+/// maintains.
+pub struct ProcessStats {
+    queue_depth: Arc<AtomicU64>,
+    last_sample_ns: AtomicU64,
+    min_interval_ns: u64,
+}
+
+impl ProcessStats {
+    pub fn new(min_interval: Duration) -> Arc<ProcessStats> {
+        Arc::new(ProcessStats {
+            queue_depth: Arc::new(AtomicU64::new(0)),
+            // u64::MAX sentinel: "never sampled", so the first probe fires.
+            last_sample_ns: AtomicU64::new(u64::MAX),
+            min_interval_ns: min_interval.as_nanos() as u64,
+        })
+    }
+
+    /// The shared mailbox-depth gauge (incremented by the demux on enqueue,
+    /// decremented by the trainer link on receive).
+    pub fn queue_gauge(&self) -> Arc<AtomicU64> {
+        self.queue_depth.clone()
+    }
+
+    /// Take a sample if `min_interval` has passed since the last one (or
+    /// unconditionally with `force` — the final StopAck sample that
+    /// guarantees every worker reports at least once).
+    pub fn maybe_sample(&self, force: bool) -> Option<MetricsSnapshot> {
+        let now = now_ns();
+        let last = self.last_sample_ns.load(Ordering::Relaxed);
+        let due = last == u64::MAX || now.saturating_sub(last) >= self.min_interval_ns;
+        if !force && !due {
+            return None;
+        }
+        // One winner per interval: racing actors back off instead of
+        // double-sampling.
+        if self
+            .last_sample_ns
+            .compare_exchange(last, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+            && !force
+        {
+            return None;
+        }
+        Some(MetricsSnapshot {
+            at_ns: now,
+            rss_bytes: crate::monitor::sysinfo::rss_bytes(),
+            cpu_seconds: crate::monitor::sysinfo::cpu_seconds(),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+        })
+    }
+}
+
+/// The observation-plane session a remote (worker-hosted) actor carries:
+/// where to drain trace events from, and the process sampler whose
+/// snapshots ride its envelopes. In-process actors carry none — their spans
+/// drain straight into the coordinator's recorder.
+#[derive(Clone)]
+pub struct ObsSession {
+    pub recorder: Arc<FlightRecorder>,
+    pub stats: Arc<ProcessStats>,
+    /// Ship drained trace events on envelopes (`cfg.trace_enabled()`);
+    /// snapshots ship regardless.
+    pub ship_events: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Summaries + Chrome trace-event export
+// ---------------------------------------------------------------------------
+
+/// Collapsed per-track totals (the report's trace table).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrackSummary {
+    pub track: String,
+    pub spans: u64,
+    pub busy_secs: f64,
+    pub instants: u64,
+}
+
+/// Collapse events into per-track totals, sorted by track name.
+pub fn summarize(events: &[TraceEvent]) -> Vec<TrackSummary> {
+    let mut by_track: BTreeMap<&str, (u64, u64, u64)> = BTreeMap::new();
+    for ev in events {
+        let e = by_track.entry(ev.track.as_str()).or_insert((0, 0, 0));
+        match ev.kind {
+            EventKind::Span => {
+                e.0 += 1;
+                e.1 += ev.dur_ns;
+            }
+            EventKind::Instant => e.2 += 1,
+        }
+    }
+    by_track
+        .into_iter()
+        .map(|(track, (spans, busy_ns, instants))| TrackSummary {
+            track: track.to_string(),
+            spans,
+            busy_secs: busy_ns as f64 / 1e9,
+            instants,
+        })
+        .collect()
+}
+
+/// Split a track into its (process, thread) display pair: a `worker{k}/`
+/// prefix names the process, everything else belongs to `coord`.
+fn track_process(track: &str) -> (&str, &str) {
+    match track.split_once('/') {
+        Some((proc_, rest)) => (proc_, rest),
+        None => ("coord", track),
+    }
+}
+
+/// Render a merged timeline as Chrome trace-event JSON (the
+/// `{"traceEvents": [...]}` object format Perfetto and `chrome://tracing`
+/// load). Spans become complete (`ph: "X"`) events, instants thread-scoped
+/// `"i"` marks, and each process's [`MetricsSnapshot`] series becomes
+/// `rss_mb` / `cpu_s` / `queue` counter tracks. Timestamps are microseconds
+/// on the coordinator's trace clock.
+pub fn chrome_trace_json(
+    events: &[TraceEvent],
+    metrics: &[(String, Vec<MetricsSnapshot>)],
+) -> Json {
+    // Stable pid/tid assignment: processes sorted by label ("coord" first),
+    // threads sorted within each process.
+    let mut pids: BTreeMap<String, usize> = BTreeMap::new();
+    let mut tids: BTreeMap<(String, String), usize> = BTreeMap::new();
+    for ev in events {
+        let (p, t) = track_process(&ev.track);
+        pids.entry(p.to_string()).or_default();
+        tids.entry((p.to_string(), t.to_string())).or_default();
+    }
+    for (label, _) in metrics {
+        pids.entry(label.clone()).or_default();
+    }
+    for (i, (_, pid)) in pids.iter_mut().enumerate() {
+        *pid = i + 1;
+    }
+    for (i, (_, tid)) in tids.iter_mut().enumerate() {
+        *tid = i + 1;
+    }
+    let mut out: Vec<Json> = Vec::new();
+    for (label, pid) in &pids {
+        out.push(obj(vec![
+            ("ph", "M".into()),
+            ("name", "process_name".into()),
+            ("pid", (*pid).into()),
+            ("args", obj(vec![("name", label.as_str().into())])),
+        ]));
+    }
+    for ((p, t), tid) in &tids {
+        out.push(obj(vec![
+            ("ph", "M".into()),
+            ("name", "thread_name".into()),
+            ("pid", pids[p].into()),
+            ("tid", (*tid).into()),
+            ("args", obj(vec![("name", t.as_str().into())])),
+        ]));
+    }
+    let mut timeline: Vec<&TraceEvent> = events.iter().collect();
+    timeline.sort_by_key(|e| e.start_ns);
+    for ev in timeline {
+        let (p, t) = track_process(&ev.track);
+        let pid = pids[p];
+        let tid = tids[&(p.to_string(), t.to_string())];
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("name", ev.name.as_str().into()),
+            ("cat", "fedgraph".into()),
+            ("ts", (ev.start_ns as f64 / 1000.0).into()),
+            ("pid", pid.into()),
+            ("tid", tid.into()),
+        ];
+        match ev.kind {
+            EventKind::Span => {
+                fields.push(("ph", "X".into()));
+                fields.push(("dur", (ev.dur_ns as f64 / 1000.0).into()));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", "i".into()));
+                fields.push(("s", "t".into()));
+            }
+        }
+        if !ev.args.is_empty() {
+            let args =
+                ev.args.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            fields.push(("args", Json::Obj(args)));
+        }
+        out.push(obj(fields));
+    }
+    for (label, samples) in metrics {
+        let pid = pids[label];
+        for s in samples {
+            let ts = s.at_ns as f64 / 1000.0;
+            for (name, value) in [
+                ("rss_mb", s.rss_bytes as f64 / 1e6),
+                ("cpu_s", s.cpu_seconds),
+                ("queue", s.queue_depth as f64),
+            ] {
+                out.push(obj(vec![
+                    ("ph", "C".into()),
+                    ("name", name.into()),
+                    ("pid", pid.into()),
+                    ("ts", ts.into()),
+                    ("args", obj(vec![("value", value.into())])),
+                ]));
+            }
+        }
+    }
+    obj(vec![("traceEvents", Json::Arr(out)), ("displayTimeUnit", "ms".into())])
+}
+
+/// Serialize tests (and any test that installs a recorder) on one lock, so
+/// the process-wide recorder slot is never contended across test threads.
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_ns_is_monotone_across_threads() {
+        let a = now_ns();
+        let b = std::thread::spawn(now_ns).join().unwrap();
+        let c = now_ns();
+        assert!(b >= a, "shared epoch: {b} >= {a}");
+        assert!(c >= b || c >= a);
+    }
+
+    #[test]
+    fn spans_are_inert_without_an_installed_recorder() {
+        let _g = test_lock();
+        assert!(!enabled());
+        {
+            let _s = span("coord", "noop").arg("k", 1);
+        }
+        instant("coord", "noop");
+        flush_thread();
+    }
+
+    #[test]
+    fn span_and_instant_record_through_install() {
+        let _g = test_lock();
+        let rec = FlightRecorder::new("coord");
+        assert!(install(&rec, true));
+        {
+            let _s = span("client0", "compute").arg("round", 3);
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        instant("coord", "tick");
+        flush_thread();
+        uninstall(&rec);
+        assert!(!enabled());
+        let evs = rec.take_events();
+        assert_eq!(evs.len(), 2);
+        let span_ev = evs.iter().find(|e| e.kind == EventKind::Span).unwrap();
+        assert_eq!(span_ev.track, "client0");
+        assert_eq!(span_ev.name, "compute");
+        assert!(span_ev.dur_ns > 0);
+        assert_eq!(span_ev.args, vec![("round".to_string(), "3".to_string())]);
+        let inst = evs.iter().find(|e| e.kind == EventKind::Instant).unwrap();
+        assert_eq!((inst.track.as_str(), inst.dur_ns), ("coord", 0));
+    }
+
+    #[test]
+    fn install_is_first_wins_and_uninstall_checks_identity() {
+        let _g = test_lock();
+        let first = FlightRecorder::new("coord");
+        let second = FlightRecorder::new("worker0");
+        assert!(install(&first, true));
+        assert!(!install(&second, true), "second install must lose");
+        // Uninstalling the loser is a no-op; the winner stays installed.
+        uninstall(&second);
+        assert!(enabled());
+        instant("coord", "still-on");
+        flush_thread();
+        uninstall(&first);
+        assert_eq!(first.take_events().len(), 1);
+        assert!(second.take_events().is_empty());
+    }
+
+    #[test]
+    fn buffers_drain_at_thread_exit() {
+        let _g = test_lock();
+        let rec = FlightRecorder::new("coord");
+        assert!(install(&rec, true));
+        std::thread::spawn(|| {
+            instant("io", "recv");
+            // No explicit flush: the thread-local buffer drains on exit.
+        })
+        .join()
+        .unwrap();
+        uninstall(&rec);
+        let evs = rec.take_events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].track, "io");
+    }
+
+    #[test]
+    fn recorder_capacity_counts_drops() {
+        let rec = FlightRecorder::with_capacity("coord", 2);
+        let ev = TraceEvent {
+            track: "t".into(),
+            name: "n".into(),
+            kind: EventKind::Instant,
+            start_ns: 0,
+            dur_ns: 0,
+            args: vec![],
+        };
+        rec.absorb(vec![ev.clone(), ev.clone(), ev.clone(), ev.clone()]);
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec.dropped(), 2);
+        rec.add_dropped(3);
+        assert_eq!(rec.dropped(), 5);
+    }
+
+    #[test]
+    fn process_stats_rate_limit_and_force() {
+        let stats = ProcessStats::new(Duration::from_secs(3600));
+        let first = stats.maybe_sample(false).expect("first sample always fires");
+        assert!(first.rss_bytes > 0, "rss should be readable on linux");
+        assert!(stats.maybe_sample(false).is_none(), "interval not yet elapsed");
+        stats.queue_gauge().store(7, Ordering::Relaxed);
+        let forced = stats.maybe_sample(true).expect("force bypasses the interval");
+        assert_eq!(forced.queue_depth, 7);
+        assert!(forced.at_ns >= first.at_ns);
+    }
+
+    #[test]
+    fn summarize_collapses_per_track() {
+        let mk = |track: &str, kind, dur| TraceEvent {
+            track: track.into(),
+            name: "x".into(),
+            kind,
+            start_ns: 0,
+            dur_ns: dur,
+            args: vec![],
+        };
+        let evs = vec![
+            mk("coord", EventKind::Span, 2_000_000_000),
+            mk("coord", EventKind::Span, 1_000_000_000),
+            mk("coord", EventKind::Instant, 0),
+            mk("worker0/client1", EventKind::Span, 500_000_000),
+        ];
+        let sum = summarize(&evs);
+        assert_eq!(sum.len(), 2);
+        assert_eq!(sum[0].track, "coord");
+        assert_eq!((sum[0].spans, sum[0].instants), (2, 1));
+        assert!((sum[0].busy_secs - 3.0).abs() < 1e-9);
+        assert_eq!(sum[1].track, "worker0/client1");
+        assert!((sum[1].busy_secs - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed_and_maps_processes() {
+        let mk = |track: &str, kind, start, dur| TraceEvent {
+            track: track.into(),
+            name: "ev".into(),
+            kind,
+            start_ns: start,
+            dur_ns: dur,
+            args: vec![("k".into(), "v".into())],
+        };
+        let events = vec![
+            mk("coord", EventKind::Span, 1000, 500),
+            mk("worker0/client1", EventKind::Span, 1200, 100),
+            mk("coord", EventKind::Instant, 1600, 0),
+        ];
+        let metrics = vec![(
+            "worker0".to_string(),
+            vec![MetricsSnapshot {
+                at_ns: 2000,
+                rss_bytes: 10_000_000,
+                cpu_seconds: 0.25,
+                queue_depth: 3,
+            }],
+        )];
+        let j = chrome_trace_json(&events, &metrics);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        let evs = parsed.get("traceEvents").as_arr().unwrap();
+        // 2 process_name + 2 thread_name + 3 events + 3 counters.
+        assert_eq!(evs.len(), 10);
+        let names: Vec<&str> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("M"))
+            .filter_map(|e| e.get("args").get("name").as_str())
+            .collect();
+        assert!(names.contains(&"coord"));
+        assert!(names.contains(&"worker0"));
+        assert!(names.contains(&"client1"), "worker track keeps its thread name");
+        let x_events: Vec<_> =
+            evs.iter().filter(|e| e.get("ph").as_str() == Some("X")).collect();
+        assert_eq!(x_events.len(), 2);
+        for e in &x_events {
+            assert!(e.get("ts").as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").as_f64().unwrap() > 0.0);
+        }
+        let counters: Vec<_> =
+            evs.iter().filter(|e| e.get("ph").as_str() == Some("C")).collect();
+        assert_eq!(counters.len(), 3);
+        // Coord sorts first: pid 1; worker0 pid 2.
+        assert_eq!(counters[0].get("pid").as_f64(), Some(2.0));
+    }
+}

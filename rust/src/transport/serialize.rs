@@ -401,6 +401,7 @@ fn rle_decode(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u8>, WireErro
 /// anyway — its raw payload would exceed the 1 GiB frame cap).
 pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
     debug_assert!(upload.len() <= MAX_CODEC_VALUES, "upload exceeds the codec value cap");
+    let _sp = crate::trace::span("codec", "pack_delta").arg("values", upload.len());
     let n = upload.len();
     if base.len() == n {
         let mut planes: [Vec<u8>; 4] = std::array::from_fn(|_| Vec::with_capacity(n));
@@ -436,6 +437,7 @@ pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
 /// recent broadcasts per version for exactly this lookup). Truncated or
 /// malformed blobs yield a typed [`WireError`], never a panic.
 pub fn unpack_delta(blob: &[u8], base: &[f32]) -> Result<Vec<f32>, WireError> {
+    let _sp = crate::trace::span("codec", "unpack_delta").arg("bytes", blob.len());
     if blob.len() < 5 {
         return Err(WireError::Truncated);
     }
@@ -507,6 +509,7 @@ fn pack_codes(out: &mut Vec<u8>, codes: &[u32], bits: u8) {
 /// [`MAX_CODEC_VALUES`], mirroring the decoder's cap.
 pub fn quantize_delta(delta: &[f32], bits: u8) -> (Vec<u8>, Vec<f32>) {
     debug_assert!(delta.len() <= MAX_CODEC_VALUES, "delta exceeds the codec value cap");
+    let _sp = crate::trace::span("codec", "quantize_delta").arg("values", delta.len());
     let bits = if bits == 4 { 4u8 } else { 8u8 };
     let levels = ((1u32 << bits) - 1) as f32;
     let n = delta.len();
@@ -556,6 +559,7 @@ pub fn quantize_delta(delta: &[f32], bits: u8) -> (Vec<u8>, Vec<f32>) {
 /// the encoder used for its returned dequantized vector. Truncated or
 /// malformed blobs yield a typed [`WireError`], never a panic.
 pub fn dequantize_delta(blob: &[u8]) -> Result<Vec<f32>, WireError> {
+    let _sp = crate::trace::span("codec", "dequantize_delta").arg("bytes", blob.len());
     if blob.len() < 5 {
         return Err(WireError::Truncated);
     }

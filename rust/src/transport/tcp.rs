@@ -41,6 +41,7 @@
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -121,6 +122,9 @@ pub fn decode_frame(buf: &[u8]) -> Result<(u32, &[u8], usize), WireError> {
 /// Write one frame to a stream (single `write_all`, so concurrent writers
 /// holding exclusive access never interleave partial frames).
 pub fn write_frame(w: &mut impl Write, client: u32, payload: &[u8]) -> std::io::Result<()> {
+    let _sp = crate::trace::span("io", "frame_send")
+        .arg("lane", client)
+        .arg("bytes", payload.len());
     w.write_all(&encode_frame(client, payload))
 }
 
@@ -135,6 +139,9 @@ pub enum ReadOutcome {
 /// [`ReadOutcome::Closed`]; EOF mid-frame, a bad length, or a checksum
 /// mismatch is an error.
 pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
+    // The span covers the blocking wait for the header too, so reader-thread
+    // lanes show idle-on-socket time, not just copy time.
+    let mut sp = crate::trace::span("io", "frame_recv");
     let mut header = [0u8; HEADER_BYTES];
     // Distinguish orderly close (0 bytes at a boundary) from truncation.
     let mut got = 0usize;
@@ -164,6 +171,8 @@ pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
     if frame_checksum(len, client, &payload) != sum {
         bail!("wire: {}", WireError::BadChecksum);
     }
+    sp = sp.arg("lane", client).arg("bytes", payload.len());
+    drop(sp);
     Ok(ReadOutcome::Frame(client, payload))
 }
 
@@ -307,6 +316,8 @@ pub struct TcpTrainer {
     client: u32,
     writer: Arc<Mutex<TcpStream>>,
     down: Receiver<Frame>,
+    /// Shared with the demux reader: frames enqueued but not yet received.
+    queue_gauge: Arc<AtomicU64>,
 }
 
 impl TrainerLink for TcpTrainer {
@@ -316,16 +327,27 @@ impl TrainerLink for TcpTrainer {
     }
 
     fn recv(&mut self) -> Result<Frame> {
-        self.down.recv().map_err(|_| anyhow!("coordinator hung up"))
+        let frame = self.down.recv().map_err(|_| anyhow!("coordinator hung up"))?;
+        decrement_gauge(&self.queue_gauge);
+        Ok(frame)
     }
+}
+
+fn decrement_gauge(g: &AtomicU64) {
+    // Never underflow: a racing sampler may read between paired ops.
+    let _ = g.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
 }
 
 /// Build one [`TrainerLink`] per assigned client over a handshaken worker
 /// connection, plus the demux reader thread handle. The caller keeps the
-/// original stream to `shutdown` it when the session ends.
+/// original stream to `shutdown` it when the session ends. `queue_gauge`
+/// (see [`crate::trace::ProcessStats::queue_gauge`]) counts frames sitting
+/// in actor mailboxes — incremented on demux enqueue, decremented on
+/// trainer receive — feeding the worker's `MetricsSnapshot.queue_depth`.
 pub fn worker_links(
     stream: &TcpStream,
     clients: &[usize],
+    queue_gauge: Arc<AtomicU64>,
 ) -> Result<(Vec<Box<dyn TrainerLink>>, JoinHandle<()>)> {
     stream.set_nodelay(true).ok();
     let writer = Arc::new(Mutex::new(stream.try_clone().map_err(|e| anyhow!("clone: {e}"))?));
@@ -340,6 +362,7 @@ pub fn worker_links(
             client: c as u32,
             writer: writer.clone(),
             down: rx,
+            queue_gauge: queue_gauge.clone(),
         }));
     }
     let reader = std::thread::Builder::new()
@@ -351,7 +374,10 @@ pub fn worker_links(
                         // A dropped receiver means that actor already exited;
                         // remaining actors keep their lanes.
                         Some(tx) => {
-                            let _ = tx.send(payload.into());
+                            queue_gauge.fetch_add(1, Ordering::Relaxed);
+                            if tx.send(payload.into()).is_err() {
+                                decrement_gauge(&queue_gauge);
+                            }
                         }
                         None => eprintln!("fedgraph worker: frame for unassigned lane {client}"),
                     }
@@ -439,7 +465,8 @@ mod tests {
         let worker_stream = worker_stream.join().unwrap();
 
         let mut coord = coord_link(vec![(coord_stream, vec![0, 1])], 2).unwrap();
-        let (mut links, demux) = worker_links(&worker_stream, &[0, 1]).unwrap();
+        let gauge = Arc::new(AtomicU64::new(0));
+        let (mut links, demux) = worker_links(&worker_stream, &[0, 1], gauge.clone()).unwrap();
 
         // Coordinator → per-client lanes, FIFO per lane.
         coord.send(0, b"a0".to_vec().into()).unwrap();
@@ -448,6 +475,9 @@ mod tests {
         assert_eq!(&*links[0].recv().unwrap(), b"a0");
         assert_eq!(&*links[0].recv().unwrap(), b"a1");
         assert_eq!(&*links[1].recv().unwrap(), b"b0");
+        // Every enqueued frame has been received: the depth gauge is back
+        // to zero (demux increments, trainer recv decrements).
+        assert_eq!(gauge.load(Ordering::Relaxed), 0);
 
         // Trainer → coordinator with source tagging.
         links[1].send(b"up1".to_vec().into()).unwrap();

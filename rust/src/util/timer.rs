@@ -31,6 +31,11 @@ impl Stopwatch {
         self.started = None;
     }
 
+    /// Is a span currently open (started but not yet stopped)?
+    pub fn is_running(&self) -> bool {
+        self.started.is_some()
+    }
+
     /// Total accumulated time (including a currently-running span).
     pub fn elapsed(&self) -> Duration {
         self.acc + self.started.map(|t| t.elapsed()).unwrap_or(Duration::ZERO)

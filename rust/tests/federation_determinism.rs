@@ -175,11 +175,19 @@ fn tcp_deployment_is_bitwise_identical_to_channel() {
                 assignment.clients.len(),
                 "sliced build must materialize exactly the assigned clients"
             );
+            let obs = fedgraph::trace::ObsSession {
+                recorder: fedgraph::trace::FlightRecorder::new("worker"),
+                stats: fedgraph::trace::ProcessStats::new(
+                    std::time::Duration::from_millis(200),
+                ),
+                ship_events: assignment.cfg.trace_enabled(),
+            };
             worker::serve(
                 assignment,
                 build,
                 monitor.net.clone(),
                 worker::BuildStats { session_bytes, build_secs: 0.0 },
+                obs,
             )
             .expect("worker serves to completion");
             worker_engine.shutdown();
