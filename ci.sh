@@ -53,6 +53,18 @@ cargo test -q --lib coordinator::fedgcn::
 cargo test -q --lib util::rng::tests::skip_matches_discarded_draws
 cargo test -q --lib graph::subgraph::tests::halo_count_matches_built_view
 
+echo "==> engine-free dataset-format v2 gates (keyed RNG, sliced v2 == full v2 bitwise, gen-work slicing, skip-shim regression)"
+cargo test -q --lib util::rng::
+cargo test -q --lib graph::generate::
+cargo test -q --lib graph::partition::
+cargo test -q --lib graph::subgraph::
+cargo test -q --lib data::
+cargo test -q --lib coordinator::gc::tests::
+cargo test -q --lib coordinator::lp::tests::
+
+echo "==> golden dataset checksums (v1 AND v2 pins; first run records the snapshot)"
+cargo test -q --test golden_datasets
+
 echo "==> engine-free decode-window tests (per-client referencable bases)"
 cargo test -q --lib federation::runtime::tests::sync_decode_window_keeps_at_most_two_bases
 cargo test -q --lib federation::runtime::tests::async_decode_window_retains_straggler_base
@@ -71,12 +83,16 @@ echo "==> cargo test -q            (tier-1, part 2)"
 cargo test -q
 
 # Multi-process loopback smoke test: a tiny NC run over `--transport tcp`
-# with two real `fedgraph worker` subprocesses. Needs the release binary and
-# compiled artifacts (run `make artifacts` first); skipped otherwise.
+# with two real `fedgraph worker` subprocesses — once per dataset format
+# (v1 replay/skip path, v2 keyed O(assigned) path; the format crosses the
+# wire in the config frame, so the workers need no flag). Needs the release
+# binary and compiled artifacts (run `make artifacts` first); skipped
+# otherwise.
 if [ "${1:-}" != "--quick" ]; then
     BIN="target/release/fedgraph"
     if [ -x "$BIN" ] && { [ -f artifacts/manifest.json ] || [ -f ../artifacts/manifest.json ]; }; then
-        echo "==> multi-process smoke test (tcp loopback, 2 worker subprocesses)"
+      for SMOKE_FMT in v1 v2; do
+        echo "==> multi-process smoke test (tcp loopback, 2 worker subprocesses, dataset-format $SMOKE_FMT)"
         # Randomized port so concurrent CI runs on one host don't collide.
         SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
         SMOKE_JSON="$(mktemp)"
@@ -88,6 +104,7 @@ if [ "${1:-}" != "--quick" ]; then
         COORD_STATUS=0
         "$BIN" run --task NC --method FedAvg --dataset cora-sim \
             --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
+            --dataset-format "$SMOKE_FMT" \
             --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
             --json "$SMOKE_JSON" --trace "$SMOKE_TRACE" || COORD_STATUS=$?
         W1_STATUS=0
@@ -155,7 +172,8 @@ PYEOF
             echo "==> python3 not found; skipping trace-file validation"
         fi
         rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
-        echo "==> tcp smoke test: coordinator and both workers exited 0; sliced builds covered exactly the assigned clients; merged trace + worker metrics validated"
+        echo "==> tcp smoke test ($SMOKE_FMT): coordinator and both workers exited 0; sliced builds covered exactly the assigned clients; merged trace + worker metrics validated"
+      done
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

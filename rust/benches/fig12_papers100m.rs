@@ -5,13 +5,48 @@
 //!
 //! `FEDGRAPH_PAPERS_SCALE` × 1e8 nodes (default 0.005 → 500k for the bench;
 //! the lazy graph representation supports 1.0 = the full 100M).
+//!
+//! Since the dataset-format v2 layer the bench also measures the
+//! **per-worker generation scaling axis**: worker 0's round-robin slice of
+//! the session is built for 1 / 2 / 4 / 8-worker assignments and one local
+//! step driven on every built client. Under v2 the lazy graph generates
+//! feature rows only for the blocks the worker's own clients sample, so
+//! doubling the workers must roughly halve both the per-worker generation
+//! work (counted heavy draws, not wall clock) and the per-worker session
+//! memory — asserted, not just printed. Alongside the tables the bench
+//! writes a machine-readable `BENCH_fig12.json` with per-worker `gen_secs`,
+//! `gen_work` and `peak_rss` for the perf trajectory. (`peak_rss` is the
+//! per-worker resident-set *model* — built-client session bytes — because
+//! every slice here shares one bench process, so the process-wide RSS
+//! cannot attribute memory to a slice; a real `fedgraph worker` process
+//! holds exactly this slice.)
 
 #[path = "bench_common.rs"]
 mod common;
 
 use common::*;
-use fedgraph::config::{FedGraphConfig, Method, Task};
+use fedgraph::config::{DatasetFormat, FedGraphConfig, Method, Task};
+use fedgraph::coordinator::{build_session_sliced, BuildSlice};
+use fedgraph::federation::ClientLogic;
+use fedgraph::graph::{gen_work, gen_work_reset};
+use fedgraph::monitor::Monitor;
+use fedgraph::transport::SimNet;
+use fedgraph::util::json::{obj, Json};
+use fedgraph::util::rng::Rng;
 use fedgraph::util::tables::Table;
+use std::sync::Arc;
+
+fn papers_cfg(pscale: f64, batch: usize, r: usize) -> FedGraphConfig {
+    let mut cfg = FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "papers100m-sim")
+        .unwrap();
+    cfg.n_trainer = 195;
+    cfg.sample_ratio = 0.05;
+    cfg.global_rounds = r;
+    cfg.batch_size = batch;
+    cfg.scale = pscale;
+    cfg.eval_every = (r / 4).max(1);
+    cfg
+}
 
 fn main() {
     let pscale: f64 = std::env::var("FEDGRAPH_PAPERS_SCALE")
@@ -24,18 +59,11 @@ fn main() {
     );
     let eng = engine();
     let r = rounds(30);
+    let mut json_batches: Vec<Json> = Vec::new();
     let mut tbl = Table::new(&["batch", "train s", "accuracy", "peak RSS MB", "comm MB"])
         .with_title(format!("{} nodes, {} rounds", (pscale * 1e8) as u64, r).as_str());
     for batch in [16usize, 32, 64] {
-        let mut cfg =
-            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "papers100m-sim")
-                .unwrap();
-        cfg.n_trainer = 195;
-        cfg.sample_ratio = 0.05;
-        cfg.global_rounds = r;
-        cfg.batch_size = batch;
-        cfg.scale = pscale;
-        cfg.eval_every = (r / 4).max(1);
+        let cfg = papers_cfg(pscale, batch, r);
         let rep = run(&cfg, &eng);
         tbl.row(&[
             batch.to_string(),
@@ -44,6 +72,113 @@ fn main() {
             format!("{:.1}", rep.peak_rss as f64 / 1e6),
             mb(rep.total_bytes()),
         ]);
+        json_batches.push(obj(vec![
+            ("batch", batch.into()),
+            ("train_secs", rep.compute_secs().into()),
+            ("accuracy", rep.final_accuracy.into()),
+            ("peak_rss", (rep.peak_rss as usize).into()),
+            ("sim_bytes", (rep.total_bytes() as usize).into()),
+        ]));
     }
     println!("{}", tbl.render());
+
+    // ---- per-worker generation scaling under dataset-format v2 ------------
+    // Build worker 0's round-robin slice for growing worker counts, then
+    // drive one local step on every built client so the lazy generator
+    // actually produces this worker's feature blocks. Both axes are
+    // deterministic: `gen_work` counts heavy generation draws (feature
+    // values), `peak_rss` is the built-client session-byte model. Wall clock
+    // (`gen_secs`) is recorded for the trajectory but not asserted.
+    let clients = 195usize;
+    let mut cfg = papers_cfg(pscale, 16, r);
+    cfg.dataset_format = DatasetFormat::V2;
+    cfg.local_steps = 1;
+    let mut tbl2 = Table::new(&[
+        "workers",
+        "assigned",
+        "built",
+        "gen work",
+        "peak RSS MB (model)",
+        "gen s",
+    ])
+    .with_title("Per-worker generation (dataset-format v2, worker 0's slice + 1 local step)");
+    let mut json_workers: Vec<Json> = Vec::new();
+    let mut by_workers: Vec<(usize, u64, u64)> = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let assigned: Vec<usize> = (0..clients).filter(|c| c % workers == 0).collect();
+        let slice = if workers == 1 {
+            BuildSlice::Full
+        } else {
+            BuildSlice::assigned(clients, &assigned).expect("valid slice")
+        };
+        let monitor = Monitor::new(Arc::new(SimNet::new(cfg.network.clone())));
+        let mut rng = Rng::seeded(0xF16 ^ workers as u64);
+        gen_work_reset();
+        let t0 = std::time::Instant::now();
+        let mut build = build_session_sliced(&cfg, &eng, &monitor, &slice)
+            .expect("sliced v2 session build");
+        let init = build.init.clone();
+        for (_, logic) in build.logics.iter_mut() {
+            logic.train(0, &init, &mut rng).expect("local step");
+        }
+        let gen_secs = t0.elapsed().as_secs_f64();
+        let work = gen_work();
+        let (built, session_bytes) = monitor.session_build();
+        assert_eq!(built, assigned.len(), "slice must materialize exactly its clients");
+        tbl2.row(&[
+            workers.to_string(),
+            assigned.len().to_string(),
+            built.to_string(),
+            work.to_string(),
+            mb(session_bytes),
+            secs(gen_secs),
+        ]);
+        json_workers.push(obj(vec![
+            ("workers", workers.into()),
+            ("assigned_clients", assigned.len().into()),
+            ("built_clients", built.into()),
+            ("gen_secs", gen_secs.into()),
+            ("gen_work", (work as usize).into()),
+            ("peak_rss", (session_bytes as usize).into()),
+        ]));
+        by_workers.push((workers, work, session_bytes));
+    }
+    println!("{}", tbl2.render());
+    // Doubling the workers must roughly halve both per-worker axes (generous
+    // 0.75 factor: round-robin client shares and block draws are not
+    // perfectly even).
+    for pair in by_workers.windows(2) {
+        let (w_a, work_a, bytes_a) = pair[0];
+        let (w_b, work_b, bytes_b) = pair[1];
+        assert!(
+            (work_b as f64) < (work_a as f64) * 0.75,
+            "per-worker generation work must shrink with workers: {w_a} workers -> {work_a}, \
+             {w_b} workers -> {work_b}"
+        );
+        assert!(
+            (bytes_b as f64) < (bytes_a as f64) * 0.75,
+            "per-worker session bytes must shrink with workers: {w_a} workers -> {bytes_a} B, \
+             {w_b} workers -> {bytes_b} B"
+        );
+    }
+    println!(
+        "v2 generation scaling holds: worker-0 gen work {} (1 worker) -> {} (8 workers)",
+        by_workers[0].1,
+        by_workers[3].1
+    );
+
+    // ---- machine-readable dump for the perf trajectory --------------------
+    let bench = obj(vec![
+        ("figure", "fig12".into()),
+        ("rounds", r.into()),
+        ("papers_scale", pscale.into()),
+        ("batches", Json::Arr(json_batches)),
+        ("dataset_format", "v2".into()),
+        ("worker_scaling", Json::Arr(json_workers)),
+    ]);
+    let path = "BENCH_fig12.json";
+    match std::fs::write(path, bench.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("cannot write {path}: {e}"),
+    }
 }

@@ -37,7 +37,13 @@
 //! **per-worker startup scaling axis**: one worker's slice of the session is
 //! built for 1 / 2 / 4 / 8-worker round-robin assignments and its build
 //! counters recorded — doubling the workers must roughly halve the
-//! per-worker build work and memory (asserted, not just printed).
+//! per-worker build work and memory (asserted, not just printed). Since the
+//! dataset-format v2 layer the same table carries a **v1-vs-v2 generation
+//! column**: each slice is built under both formats with the generation-work
+//! counter bracketed — v1 pays O(full dataset) generation on every slice
+//! (asserted slice-independent), while v2's keyed streams generate
+//! O(assigned nodes) (asserted to roughly halve per doubling) — so the perf
+//! win is machine-readable in `BENCH_fig15.json`.
 //!
 //! Since the flight-recorder layer a fifth table measures the **tracing
 //! overhead axis**: an identical run with the recorder installed vs off.
@@ -53,8 +59,9 @@
 mod common;
 
 use common::*;
-use fedgraph::config::{CompressionMode, FedGraphConfig, FederationMode, Method};
+use fedgraph::config::{CompressionMode, DatasetFormat, FedGraphConfig, FederationMode, Method};
 use fedgraph::coordinator::{build_session_sliced, BuildSlice};
+use fedgraph::graph::{gen_work, gen_work_reset};
 use fedgraph::monitor::Monitor;
 use fedgraph::transport::SimNet;
 use fedgraph::util::json::{obj, Json};
@@ -255,18 +262,44 @@ fn main() {
     // Build worker 0's round-robin slice of a 100-client session for growing
     // worker counts and record its build counters: per-worker startup work
     // and memory must scale with assigned/total clients, not O(full
-    // session). Asserted — this is the sliced-build acceptance axis.
+    // session). Asserted — this is the sliced-build acceptance axis. Each
+    // slice is built twice — dataset-format v1 (the replay/skip legacy
+    // default) and v2 (keyed streams) — with the generation-work counter
+    // bracketed, so the table and JSON carry the v1-vs-v2 generation
+    // comparison: v1 generates the full dataset no matter the slice, v2
+    // generates O(assigned nodes).
     let clients = 100usize;
     let cfg = arxiv_cfg(clients, r);
+    let mut cfg_v2 = arxiv_cfg(clients, r);
+    cfg_v2.dataset_format = DatasetFormat::V2;
+    // One measured sliced build: (built clients, session bytes, wall secs,
+    // generation-work counter). Builds run on this thread, so the
+    // thread-local counter brackets exactly this build.
+    let measured = |cfg: &FedGraphConfig, slice: &BuildSlice| -> (usize, u64, f64, u64) {
+        let monitor = Monitor::new(Arc::new(SimNet::new(cfg.network.clone())));
+        gen_work_reset();
+        let t0 = std::time::Instant::now();
+        let build = build_session_sliced(cfg, &eng, &monitor, slice)
+            .expect("sliced session build");
+        let build_secs = t0.elapsed().as_secs_f64();
+        let work = gen_work();
+        let (built, session_bytes) = monitor.session_build();
+        assert_eq!(build.num_built(), built);
+        (built, session_bytes, build_secs, work)
+    };
     let mut tbl4 = Table::new(&[
         "workers",
         "assigned",
         "built",
         "session MB",
         "build s",
+        "v1 gen work",
+        "v2 gen work",
+        "v2 build s",
     ])
-    .with_title("Per-worker startup: sliced session build (worker 0's slice)");
+    .with_title("Per-worker startup: sliced session build (worker 0's slice, v1 vs v2 generation)");
     let mut bytes_by_workers: Vec<(usize, u64, f64)> = Vec::new();
+    let mut gen_by_workers: Vec<(u64, u64)> = Vec::new();
     for workers in [1usize, 2, 4, 8] {
         let assigned: Vec<usize> = (0..clients).filter(|c| c % workers == 0).collect();
         let slice = if workers == 1 {
@@ -274,20 +307,19 @@ fn main() {
         } else {
             BuildSlice::assigned(clients, &assigned).expect("valid slice")
         };
-        let monitor = Monitor::new(Arc::new(SimNet::new(cfg.network.clone())));
-        let t0 = std::time::Instant::now();
-        let build = build_session_sliced(&cfg, &eng, &monitor, &slice)
-            .expect("sliced session build");
-        let build_secs = t0.elapsed().as_secs_f64();
-        let (built, session_bytes) = monitor.session_build();
+        let (built, session_bytes, build_secs, v1_gen_work) = measured(&cfg, &slice);
         assert_eq!(built, assigned.len(), "slice must materialize exactly its clients");
-        assert_eq!(build.num_built(), assigned.len());
+        let (built_v2, v2_session_bytes, v2_build_secs, v2_gen_work) = measured(&cfg_v2, &slice);
+        assert_eq!(built_v2, assigned.len(), "v2 slice must materialize exactly its clients");
         tbl4.row(&[
             workers.to_string(),
             assigned.len().to_string(),
             built.to_string(),
             mb(session_bytes),
             secs(build_secs),
+            v1_gen_work.to_string(),
+            v2_gen_work.to_string(),
+            secs(v2_build_secs),
         ]);
         json_startup.push(obj(vec![
             ("workers", workers.into()),
@@ -295,8 +327,13 @@ fn main() {
             ("built_clients", built.into()),
             ("session_bytes", (session_bytes as usize).into()),
             ("build_secs", build_secs.into()),
+            ("v1_gen_work", (v1_gen_work as usize).into()),
+            ("v2_gen_work", (v2_gen_work as usize).into()),
+            ("v2_session_bytes", (v2_session_bytes as usize).into()),
+            ("v2_build_secs", v2_build_secs.into()),
         ]));
         bytes_by_workers.push((workers, session_bytes, build_secs));
+        gen_by_workers.push((v1_gen_work, v2_gen_work));
     }
     println!("{}", tbl4.render());
     // Doubling the workers must roughly halve per-worker session memory
@@ -310,10 +347,35 @@ fn main() {
              {w_b} workers -> {bytes_b} B"
         );
     }
+    // The generation axis: v1 pays full-dataset generation on every slice
+    // (the counter is slice-independent), v2 generation roughly halves per
+    // worker doubling (same generous 0.75 factor).
+    let v1_full = gen_by_workers[0].0;
+    for (i, &(v1_w, _)) in gen_by_workers.iter().enumerate() {
+        let drift = (v1_w as f64 - v1_full as f64).abs();
+        assert!(
+            drift <= v1_full as f64 * 0.01,
+            "v1 generation must be O(full dataset) regardless of slice: \
+             {v1_full} at 1 worker vs {v1_w} at row {i}"
+        );
+    }
+    for pair in gen_by_workers.windows(2) {
+        let (_, v2_a) = pair[0];
+        let (_, v2_b) = pair[1];
+        assert!(
+            (v2_b as f64) < (v2_a as f64) * 0.75,
+            "v2 generation work must shrink with workers: {v2_a} -> {v2_b}"
+        );
+    }
     println!(
-        "startup scaling holds: worker-0 session bytes {} (1 worker) -> {} (8 workers)",
+        "startup scaling holds: worker-0 session bytes {} (1 worker) -> {} (8 workers); \
+         gen work v1 {} -> {} (slice-independent), v2 {} -> {} (O(assigned))",
         bytes_by_workers[0].1,
-        bytes_by_workers[3].1
+        bytes_by_workers[3].1,
+        gen_by_workers[0].0,
+        gen_by_workers[3].0,
+        gen_by_workers[0].1,
+        gen_by_workers[3].1
     );
 
     // ---- tracing overhead: identical run with the flight recorder on ------

@@ -145,6 +145,48 @@ impl SamplingType {
     }
 }
 
+/// Which generation law synthesizes the datasets (`dataset_format`).
+///
+/// The two formats produce *statistically matched but bitwise different*
+/// datasets, so the knob is versioned like a file format:
+///
+/// - **v1** (default for one release): the original sequential-stream
+///   generators. Sliced builds stay bitwise-identical to full builds by
+///   replaying or [`crate::util::rng::Rng::skip`]-ping past every unowned
+///   client's draws — correctness at O(total-nodes) generation cost per
+///   worker.
+/// - **v2**: counter-based keyed generation
+///   ([`crate::util::rng::CounterRng`]): every entity draws from its own
+///   `(seed, domain, entity-id)` stream, so a sliced worker generates
+///   **only its assigned entities** (O(assigned-nodes) work and memory,
+///   no replay, no skip) and is bitwise-identical to the matching slice of
+///   a v2 full build by construction.
+///
+/// Golden checksums for both formats are pinned in
+/// `rust/tests/golden/dataset_checksums.json` (see `data::golden` tests).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetFormat {
+    V1,
+    V2,
+}
+
+impl DatasetFormat {
+    pub fn parse(s: &str) -> Result<DatasetFormat> {
+        match s.trim().to_lowercase().as_str() {
+            "v1" | "1" => Ok(DatasetFormat::V1),
+            "v2" | "2" => Ok(DatasetFormat::V2),
+            other => bail!("dataset_format must be 'v1' or 'v2', got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetFormat::V1 => "v1",
+            DatasetFormat::V2 => "v2",
+        }
+    }
+}
+
 /// Privacy mechanism for aggregation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PrivacyMode {
@@ -401,6 +443,10 @@ pub struct FedGraphConfig {
     pub seed: u64,
     /// Dataset scale factor (1.0 = published size).
     pub scale: f64,
+    /// Dataset generation law: `v1` (sequential streams, the bitwise-pinned
+    /// default) or `v2` (counter-based keyed generation with O(assigned-
+    /// nodes) sliced builds). See [`DatasetFormat`].
+    pub dataset_format: DatasetFormat,
     /// Where the AOT artifacts live.
     pub artifacts_dir: String,
     /// Evaluate every k rounds (test accuracy curve resolution).
@@ -442,6 +488,7 @@ impl FedGraphConfig {
             network: NetConfig::default(),
             seed: 42,
             scale: 1.0,
+            dataset_format: DatasetFormat::V1,
             artifacts_dir: default_artifacts_dir(),
             eval_every: 1,
             extras: BTreeMap::new(),
@@ -526,6 +573,9 @@ impl FedGraphConfig {
         }
         if let Some(v) = y.get("scale").as_f64() {
             cfg.scale = v;
+        }
+        if let Some(s) = y.get("dataset_format").as_str() {
+            cfg.dataset_format = DatasetFormat::parse(s)?;
         }
         if let Some(v) = y.get("eval_every").as_usize() {
             cfg.eval_every = v.max(1);
@@ -791,6 +841,10 @@ impl FedGraphConfig {
         w.f64(self.network.latency_ms);
         w.u64(self.seed);
         w.f64(self.scale);
+        w.u8(match self.dataset_format {
+            DatasetFormat::V1 => 1,
+            DatasetFormat::V2 => 2,
+        });
         w.str(&self.artifacts_dir);
         w.u64(self.eval_every as u64);
         w.u32(self.extras.len() as u32);
@@ -883,6 +937,11 @@ impl FedGraphConfig {
             cfg.network.latency_ms = r.f64()?;
             cfg.seed = r.u64()?;
             cfg.scale = r.f64()?;
+            cfg.dataset_format = match r.u8()? {
+                1 => DatasetFormat::V1,
+                2 => DatasetFormat::V2,
+                t => return Err(WireError::BadTag(t)),
+            };
             cfg.artifacts_dir = r.str()?;
             cfg.eval_every = r.u64()? as usize;
             let n_extras = r.u32()? as usize;
@@ -902,8 +961,10 @@ impl FedGraphConfig {
 /// Bumped whenever [`FedGraphConfig::encode_wire`] changes shape, so a
 /// mismatched coordinator/worker pair fails the handshake loudly instead of
 /// mis-parsing. v2: `federation.compression` (upload codec) joined the
-/// federation block.
-pub const CONFIG_WIRE_VERSION: u8 = 2;
+/// federation block. v3: `dataset_format` (dataset generation law) joined —
+/// a worker must build the *same format* dataset the coordinator did, so
+/// the knob rides the bit-exact wire config rather than defaulting.
+pub const CONFIG_WIRE_VERSION: u8 = 3;
 
 fn task_code(t: Task) -> u8 {
     match t {
@@ -1296,6 +1357,37 @@ federation:
         let mut bad = bytes.clone();
         bad[10] ^= 0x08;
         assert!(FedGraphConfig::decode_wire(&bad).is_err());
+    }
+
+    #[test]
+    fn dataset_format_parses_defaults_and_rides_the_wire() {
+        // Default is v1 — the bitwise-pinned sequential generators — for
+        // one release; v2 is opt-in.
+        let plain =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        assert_eq!(plain.dataset_format, DatasetFormat::V1);
+        let cfg = FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: cora-sim\nmethod: FedAvg\ndataset_format: v2\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset_format, DatasetFormat::V2);
+        // Unknown format rejected at parse time.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\ndataset_format: v3\n"
+        )
+        .is_err());
+        // The knob rides the wire bit-exactly: a worker must generate the
+        // same dataset format the coordinator did.
+        for fmt in [DatasetFormat::V1, DatasetFormat::V2] {
+            let mut cfg = plain.clone();
+            cfg.dataset_format = fmt;
+            let bytes = cfg.encode_wire();
+            let back = FedGraphConfig::decode_wire(&bytes).unwrap();
+            assert_eq!(back.dataset_format, fmt);
+            assert_eq!(back.encode_wire(), bytes);
+        }
+        assert_eq!(DatasetFormat::parse("V2").unwrap(), DatasetFormat::V2);
+        assert_eq!(DatasetFormat::V1.name(), "v1");
     }
 
     #[test]

@@ -29,16 +29,19 @@
 //! entirely — the coordinator's full build is the authoritative ledger, and
 //! a worker's monitor is a discarded staging stub.
 
+use std::collections::HashMap;
+
 use anyhow::Result;
 
 use crate::config::PrivacyMode;
+use crate::data::nc::{keyed_he_ctx_seed, NCKeyedView};
 use crate::graph::{local_neighbor_contribution, Csr, Partition};
 use crate::he::CkksContext;
 use crate::lowrank::Projection;
 use crate::monitor::Monitor;
 use crate::transport::{Direction, Phase};
 use crate::util::linalg::{gram, matmul, ridge_solve};
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, CounterRng, Rng};
 use crate::util::timer::timed;
 
 use super::BuildSlice;
@@ -408,6 +411,278 @@ pub fn fedsage_features(
     out
 }
 
+// ---------------------------------------------------------------------------
+// dataset_format: v2 — keyed exchanges (no sequential stream, no skip)
+// ---------------------------------------------------------------------------
+
+/// Memoized keyed hop aggregation over a [`NCKeyedView`]'s stub adjacency:
+/// `a_0(u)` is `u`'s (optionally low-rank-projected) feature row and
+/// `a_h(u) = (a_{h-1}(u) + Σ_{v ∈ stubs(u)} a_{h-1}(v)) / (|stubs(u)| + 1)`.
+///
+/// Every term depends only on `(seed, node id)` keyed draws, and stub rows
+/// are summed in row order, so the same `(hop, u)` row is **bitwise
+/// identical in every process** regardless of which clients it materializes
+/// — the v2 replacement for the v1 exchange's global working table. Work
+/// and memo residency are O(nodes touched × d_eff): a sliced build touches
+/// the assigned clients' owned nodes plus their ≤`hop`-step stub
+/// neighborhoods, never the full graph.
+pub struct KeyedHopAgg<'a> {
+    view: &'a NCKeyedView,
+    proj: Option<&'a Projection>,
+    memo: HashMap<(u8, u32), Vec<f32>>,
+}
+
+impl<'a> KeyedHopAgg<'a> {
+    pub fn new(view: &'a NCKeyedView, proj: Option<&'a Projection>) -> KeyedHopAgg<'a> {
+        KeyedHopAgg { view, proj, memo: HashMap::new() }
+    }
+
+    pub fn row(&mut self, hop: u8, u: u32) -> Vec<f32> {
+        if let Some(r) = self.memo.get(&(hop, u)) {
+            return r.clone();
+        }
+        let r = if hop == 0 {
+            let mut buf = vec![0f32; self.view.feat_dim];
+            self.view.feature_into(u, &mut buf);
+            match self.proj {
+                Some(p) => p.project(&buf, 1),
+                None => buf,
+            }
+        } else {
+            let stubs = self.view.stubs(u);
+            let mut acc = self.row(hop - 1, u);
+            for &v in &stubs {
+                let rv = self.row(hop - 1, v);
+                for (a, b) in acc.iter_mut().zip(&rv) {
+                    *a += b;
+                }
+            }
+            let deg = stubs.len() as f32 + 1.0;
+            for a in acc.iter_mut() {
+                *a /= deg;
+            }
+            acc
+        };
+        self.memo.insert((hop, u), r.clone());
+        r
+    }
+}
+
+/// The FedGCN pre-train exchange under `dataset_format: v2`.
+///
+/// Aggregates are computed from keyed draws via [`KeyedHopAgg`] — no global
+/// feature table, no HE-seed replay for skipped clients. Documented v2
+/// semantic deltas from v1 (both laws are format-pinned):
+/// - the neighborhood is the node's keyed out-stub row (the `LazyGraph`
+///   stance), not the symmetrized global adjacency;
+/// - under HE, one encrypt→decrypt roundtrip under the client's keyed
+///   context ([`keyed_he_ctx_seed`]) is applied to the client's **final**
+///   aggregate rows (v1 accumulated per-contribution ciphertexts), while
+///   the wire ledger still bills one ciphertext per contributing pair and
+///   hop;
+/// - the low-rank projection is sampled from the keyed `PARAM_INIT` stream
+///   (entity 1), not the sequential setup stream.
+///
+/// The SimNet ledger runs on full builds only, exactly as v1.
+pub fn fedgcn_pretrain_v2(
+    monitor: &Monitor,
+    privacy: &PrivacyMode,
+    lowrank_rank: usize,
+    num_hops: usize,
+    view: &NCKeyedView,
+    part: &Partition,
+    slice: &BuildSlice,
+) -> Result<PretrainFeatures> {
+    assert!(num_hops >= 1 && num_hops <= 2);
+    monitor.start("pretrain");
+    let m = part.num_clients;
+    let ledger = slice.is_full();
+    let wants = slice.wanted_flags(m);
+    let dim = view.feat_dim;
+    let seed = view.derived_seed();
+
+    let projection = if lowrank_rank > 0 {
+        let mut prng = CounterRng::at(seed, domains::PARAM_INIT, 1);
+        let p = Projection::sample(dim, lowrank_rank, &mut prng);
+        if ledger {
+            let per_client_bytes = match privacy {
+                PrivacyMode::He(hp) => hp.encrypted_vector_bytes(p.matrix.len()),
+                _ => p.wire_bytes(),
+            };
+            for _ in 0..m {
+                monitor.net.send(Phase::PreTrain, Direction::Down, per_client_bytes);
+            }
+        }
+        Some(p)
+    } else {
+        None
+    };
+    let d_eff = projection.as_ref().map(|p| p.k).unwrap_or(dim);
+    let mut agg = KeyedHopAgg::new(view, projection.as_ref());
+
+    let per_client: Vec<Vec<f32>> = (0..m)
+        .map(|i| {
+            if !wants[i] {
+                return Vec::new();
+            }
+            let nodes = &part.members[i];
+            let mut rows = vec![0f32; nodes.len() * d_eff];
+            for (k, &u) in nodes.iter().enumerate() {
+                let r = agg.row(num_hops as u8, u);
+                rows[k * d_eff..(k + 1) * d_eff].copy_from_slice(&r);
+            }
+            let he_ct_bytes = if let PrivacyMode::He(hp) = privacy {
+                let ctx =
+                    CkksContext::new(hp.clone(), keyed_he_ctx_seed(seed, num_hops as u64, i as u64));
+                let max_dim = view.n().max(d_eff);
+                let (ct, enc) = timed(|| ctx.encrypt(&rows, max_dim));
+                monitor.add_secs("he_encrypt", enc);
+                let (dec, dsecs) = timed(|| ctx.decrypt(&ct));
+                monitor.add_secs("he_decrypt", dsecs);
+                rows.copy_from_slice(&dec[..rows.len()]);
+                Some(ct.wire_bytes())
+            } else {
+                None
+            };
+            if ledger {
+                // Contributing-pair wire rows from this client's own stub
+                // rows (full builds materialize every client, so this stays
+                // inside the coordinator's O(n) budget).
+                let mut rows_by_owner = vec![0u64; m];
+                for &u in nodes.iter() {
+                    let mut seen: Vec<u32> = Vec::new();
+                    for v in view.stubs(u) {
+                        let j = part.assign[v as usize];
+                        if j as usize != i && !seen.contains(&j) {
+                            seen.push(j);
+                            rows_by_owner[j as usize] += 1;
+                        }
+                    }
+                }
+                for _hop in 0..num_hops {
+                    for (j, &r) in rows_by_owner.iter().enumerate() {
+                        if j == i || r == 0 {
+                            continue;
+                        }
+                        let up = he_ct_bytes.unwrap_or(r * d_eff as u64 * 4);
+                        monitor.net.send(Phase::PreTrain, Direction::Up, up);
+                    }
+                    let down = he_ct_bytes.unwrap_or((nodes.len() * d_eff * 4) as u64);
+                    monitor.net.send(Phase::PreTrain, Direction::Down, down);
+                }
+            }
+            rows
+        })
+        .collect();
+    monitor.stop("pretrain");
+    Ok(PretrainFeatures { per_client, d_eff })
+}
+
+/// FedSage+ under `dataset_format: v2`: a **personalized** NeighGen — each
+/// client fits its own ridge generator on its internal stub edges and
+/// imputes its boundary nodes with it. v1's cross-client generator
+/// averaging is the one O(all-clients) step of the FedSage+ build; dropping
+/// it makes the per-client fit O(assigned) and slice-independent (format-
+/// pinned semantic delta). The generator exchange round is still billed on
+/// full builds so the pre-train cost bars keep the paper's shape.
+///
+/// Returns the client's model-input feature rows (row-major
+/// `[num_owned, feat_dim]`), the same normalization as [`fedsage_features`].
+pub fn fedsage_local_v2(
+    monitor: &Monitor,
+    view: &NCKeyedView,
+    part: &Partition,
+    client: u32,
+    ledger: bool,
+) -> Vec<f32> {
+    let dim = view.feat_dim;
+    let c = client;
+    let nodes = &part.members[c as usize];
+    let mut feat_buf = vec![0f32; dim];
+    let row_of = |u: u32, buf: &mut Vec<f32>| {
+        view.feature_into(u, buf);
+    };
+
+    // Per-node keyed stub scans: internal sums, boundary flags, degrees.
+    let mut internal = vec![0f32; nodes.len() * dim];
+    let mut boundary = vec![false; nodes.len()];
+    let mut degree = vec![0usize; nodes.len()];
+    let mut has_internal = vec![false; nodes.len()];
+    for (k, &u) in nodes.iter().enumerate() {
+        let stubs = view.stubs(u);
+        degree[k] = stubs.len();
+        for &v in &stubs {
+            if part.assign[v as usize] == c {
+                has_internal[k] = true;
+                row_of(v, &mut feat_buf);
+                for (a, b) in internal[k * dim..(k + 1) * dim].iter_mut().zip(&feat_buf) {
+                    *a += b;
+                }
+            } else {
+                boundary[k] = true;
+            }
+        }
+    }
+
+    // Ridge fit on (x_u, internal stub sum) over nodes with internal edges.
+    let train: Vec<usize> = (0..nodes.len()).filter(|&k| has_internal[k]).collect();
+    let gen = if train.len() >= 8 {
+        let (w, secs) = timed(|| {
+            let mut xs = vec![0f32; train.len() * dim];
+            let mut ys = vec![0f32; train.len() * dim];
+            for (r, &k) in train.iter().enumerate() {
+                row_of(nodes[k], &mut feat_buf);
+                xs[r * dim..(r + 1) * dim].copy_from_slice(&feat_buf);
+                ys[r * dim..(r + 1) * dim].copy_from_slice(&internal[k * dim..(k + 1) * dim]);
+            }
+            let g = gram(&xs, train.len(), dim);
+            let mut xty = vec![0f32; dim * dim];
+            for r in 0..train.len() {
+                let xr = &xs[r * dim..(r + 1) * dim];
+                let yr = &ys[r * dim..(r + 1) * dim];
+                for a in 0..dim {
+                    if xr[a] == 0.0 {
+                        continue;
+                    }
+                    let row = &mut xty[a * dim..(a + 1) * dim];
+                    for b in 0..dim {
+                        row[b] += xr[a] * yr[b];
+                    }
+                }
+            }
+            ridge_solve(&g, &xty, dim, dim, 1.0)
+        });
+        monitor.add_secs("neighgen_fit", secs);
+        if ledger {
+            monitor.net.send(Phase::PreTrain, Direction::Up, (dim * dim * 4) as u64);
+        }
+        w
+    } else {
+        vec![0f32; dim * dim]
+    };
+    if ledger {
+        monitor.net.send(Phase::PreTrain, Direction::Down, (dim * dim * 4) as u64);
+    }
+
+    // Impute + normalize: (internal_sum + gen(x)·1[boundary] + x) / (deg+1).
+    let mut out = internal;
+    for (k, &u) in nodes.iter().enumerate() {
+        row_of(u, &mut feat_buf);
+        let row = &mut out[k * dim..(k + 1) * dim];
+        if boundary[k] {
+            let imputed = matmul(&feat_buf, &gen, 1, dim, dim);
+            for (r, g) in row.iter_mut().zip(&imputed) {
+                *r += g;
+            }
+        }
+        let deg = degree[k] as f32 + 1.0;
+        for (t, r) in row.iter_mut().enumerate() {
+            *r = (*r + feat_buf[t]) / deg;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -695,6 +970,116 @@ mod tests {
                 assert_eq!(&t[k * 4..(k + 1) * 4], &feats[u as usize * 4..(u as usize + 1) * 4]);
             }
         }
+    }
+
+    fn keyed_setup(n_clients: usize) -> (NCKeyedView, Partition) {
+        let spec = crate::data::nc::NCSpec {
+            name: "keyed-test",
+            n: 120,
+            feat_dim: 8,
+            num_classes: 3,
+            mean_degree: 4.0,
+            homophily: 0.8,
+            signal: 1.0,
+        };
+        let view = NCKeyedView::new(&spec, 1.0, 21);
+        let seed = view.derived_seed();
+        let props =
+            crate::graph::keyed_dirichlet_props(seed, view.num_classes(), n_clients, 10_000.0);
+        let labels: Vec<u16> = (0..view.n() as u32).map(|u| view.label(u)).collect();
+        let part = crate::graph::keyed_dirichlet_partition(seed, view.n(), n_clients, &props, |u| {
+            labels[u]
+        });
+        (view, part)
+    }
+
+    #[test]
+    fn v2_pretrain_sliced_matches_full_bitwise() {
+        // The v2 tentpole property for the richest exchange: no replay, no
+        // skip — keyed draws alone make the sliced rows bitwise-identical.
+        let (view, part) = keyed_setup(4);
+        let slice = BuildSlice::assigned(4, &[1, 3]).unwrap();
+        let cases: Vec<(PrivacyMode, usize, usize)> = vec![
+            (PrivacyMode::Plaintext, 0, 1),
+            (PrivacyMode::Plaintext, 0, 2),
+            (PrivacyMode::Plaintext, 3, 1),
+            (PrivacyMode::He(crate::he::CkksParams::default_params()), 0, 1),
+            (PrivacyMode::He(crate::he::CkksParams::default_params()), 0, 2),
+        ];
+        for (privacy, rank, hops) in cases {
+            let mon_a = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let full = fedgcn_pretrain_v2(
+                &mon_a, &privacy, rank, hops, &view, &part, &BuildSlice::Full,
+            )
+            .unwrap();
+            let mon_b = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let sliced =
+                fedgcn_pretrain_v2(&mon_b, &privacy, rank, hops, &view, &part, &slice).unwrap();
+            assert_eq!(full.d_eff, sliced.d_eff);
+            for c in 0..4 {
+                if slice.wants(c) {
+                    assert_eq!(
+                        full.per_client[c], sliced.per_client[c],
+                        "client {c} ({privacy:?}, rank {rank}, hops {hops})"
+                    );
+                } else {
+                    assert!(sliced.per_client[c].is_empty());
+                }
+            }
+            assert_eq!(mon_b.net.counter(Phase::PreTrain).bytes_up, 0, "sliced must not ledger");
+            assert!(mon_a.net.counter(Phase::PreTrain).bytes_up > 0, "full must ledger");
+        }
+    }
+
+    #[test]
+    fn v2_pretrain_matches_direct_stub_aggregation() {
+        let (view, part) = keyed_setup(3);
+        let mon = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let res = fedgcn_pretrain_v2(
+            &mon,
+            &PrivacyMode::Plaintext,
+            0,
+            1,
+            &view,
+            &part,
+            &BuildSlice::Full,
+        )
+        .unwrap();
+        let d = view.feat_dim;
+        let owned = &part.members[0];
+        for (k, &u) in owned.iter().enumerate().take(8) {
+            let mut want = vec![0f32; d];
+            view.feature_into(u, &mut want);
+            let stubs = view.stubs(u);
+            let mut row = vec![0f32; d];
+            for &v in &stubs {
+                view.feature_into(v, &mut row);
+                for t in 0..d {
+                    want[t] += row[t];
+                }
+            }
+            let deg = stubs.len() as f32 + 1.0;
+            for t in 0..d {
+                let got = res.per_client[0][k * d + t];
+                assert!((got - want[t] / deg).abs() < 1e-4, "node {u} dim {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_fedsage_is_per_client_and_slice_independent() {
+        let (view, part) = keyed_setup(4);
+        let mon = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let a = fedsage_local_v2(&mon, &view, &part, 2, true);
+        assert_eq!(a.len(), part.members[2].len() * view.feat_dim);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // Recompute after unrelated clients: bitwise identical (keyed draws).
+        let mon2 = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let _ = fedsage_local_v2(&mon2, &view, &part, 0, false);
+        let b = fedsage_local_v2(&mon2, &view, &part, 2, false);
+        assert_eq!(a, b);
+        assert!(mon.net.counter(Phase::PreTrain).bytes_down > 0);
+        assert_eq!(mon2.net.counter(Phase::PreTrain).bytes_down, 0);
     }
 
     #[test]

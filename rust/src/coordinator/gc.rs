@@ -14,15 +14,19 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{FedGraphConfig, Method, PrivacyMode};
-use crate::data::gc::{gc_spec, generate_gc, GCDataset, SmallGraph};
+use crate::config::{DatasetFormat, FedGraphConfig, Method, PrivacyMode};
+use crate::data::gc::{
+    gc_graph_count, gc_keyed_graph, gc_keyed_meta, gc_keyed_split, gc_spec, generate_gc,
+    GCDataset, GCSpec, SmallGraph, GC_FEAT_DIM,
+};
 use crate::federation::{
     Charge, ClientLogic, Deployment, Federation, LocalUpdate, RoundUpdate, SessionBuild,
 };
+use crate::graph::{keyed_assign_of, keyed_dirichlet_props, Csr};
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
 use crate::transport::serialize::{encode_params, fnv1a};
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, CounterRng, Rng};
 
 use super::gcfl::{GcflSignal, GcflState};
 use super::selection::select_with_dropout;
@@ -289,27 +293,33 @@ pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     Ok(())
 }
 
-/// Deterministic session build for GC: dataset, Dirichlet graph partition,
-/// artifact selection, one [`GcLogic`] per materialized client. Worker
-/// processes replay this from the shipped config with their `Assign` slice
-/// (see [`super::nc::build_nc`]); the graph store is shared (`Arc`), so the
-/// per-client slice bounds the index tables and logic allocations.
-pub(crate) fn build_gc(
+/// Engine-free GC plan: dataset store, per-client graph indices, and the
+/// shared artifact-bucket input. v1 generates every graph from the shared
+/// sequential stream; v2 probes every graph's (label, size) with two keyed
+/// draws and generates graph bodies **only for assigned clients**.
+pub(crate) struct GcPlan {
+    pub(crate) ds: GCDataset,
+    /// Graph indices per client — partition bookkeeping, derived for every
+    /// client regardless of the slice (aggregation weights need it).
+    pub(crate) members: Vec<Vec<usize>>,
+    /// Max node count over ALL graphs (the artifact-bucket input): exact and
+    /// slice-independent in both formats (v2 reads it from the meta probes).
+    pub(crate) max_graph_nodes: usize,
+    /// Setup stream for the init model (v1: the shared sequential stream
+    /// after the partition draws; v2: the keyed `PARAM_INIT` stream).
+    pub(crate) rng: Rng,
+}
+
+pub(crate) fn plan_gc(
     cfg: &FedGraphConfig,
-    engine: &Engine,
     monitor: &Monitor,
     slice: &BuildSlice,
-) -> Result<(SessionBuild, Rng)> {
+) -> Result<GcPlan> {
     let spec = gc_spec(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown GC dataset '{}'", cfg.dataset))?;
     slice.check(cfg.n_trainer)?;
-    monitor.start("startup");
-    if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
-        bail!("SelfTrain has no aggregation to encrypt");
-    }
-    let gcfl_method = matches!(cfg.method, Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws);
-    if gcfl_method && matches!(cfg.privacy, PrivacyMode::He(_)) {
-        bail!("GCFL clustering reads client deltas; it requires plaintext or DP uploads");
+    if cfg.dataset_format == DatasetFormat::V2 {
+        return plan_gc_v2(cfg, monitor, slice, &spec);
     }
     let mut rng = Rng::seeded(cfg.seed);
     monitor.note("task", "GC");
@@ -319,7 +329,10 @@ pub(crate) fn build_gc(
     monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
-    let ds = generate_gc(&spec, cfg.scale, cfg.seed);
+    let ds = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v1");
+        generate_gc(&spec, cfg.scale, cfg.seed)
+    };
     // Graphs distributed across clients with Dirichlet label skew, matching
     // the NC partitioner semantics.
     let labels: Vec<u16> = ds.graphs.iter().map(|g| g.label).collect();
@@ -331,11 +344,108 @@ pub(crate) fn build_gc(
         &mut rng,
     );
     monitor.stop("data");
+    let members: Vec<Vec<usize>> = part
+        .members
+        .iter()
+        .map(|m| m.iter().map(|&g| g as usize).collect())
+        .collect();
+    let max_graph_nodes = ds.graphs.iter().map(|g| g.csr.n).max().unwrap_or(16);
+    Ok(GcPlan { ds, members, max_graph_nodes, rng })
+}
+
+/// The `dataset_format: v2` GC plan: every graph's label and node count come
+/// from a two-draw keyed probe (the exact prefix of its generation stream);
+/// the keyed Dirichlet assignment is O(1) per graph; only graphs owned by
+/// this process's slice get their O(n²) bodies generated. Placeholder
+/// entries (empty CSR, no features, correct label) keep global indices
+/// valid while making any out-of-slice access fail loudly.
+fn plan_gc_v2(
+    cfg: &FedGraphConfig,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+    spec: &GCSpec,
+) -> Result<GcPlan> {
+    let seed = cfg.seed;
+    let pseed = seed ^ 0x4743_5345; // partition stream key, distinct per task
+    monitor.note("task", "GC");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("dataset_format", "v2");
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    monitor.start("data");
+    let m = gc_graph_count(spec, cfg.scale);
+    let (metas, split, members, mut graphs) = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v2");
+        let metas: Vec<(u16, usize)> =
+            (0..m as u64).map(|g| gc_keyed_meta(spec, seed, g)).collect();
+        let split: Vec<u8> = (0..m as u64).map(|g| gc_keyed_split(seed, g)).collect();
+        let props =
+            keyed_dirichlet_props(pseed, spec.num_classes, cfg.n_trainer, cfg.iid_beta);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); cfg.n_trainer];
+        for g in 0..m {
+            let c = keyed_assign_of(pseed, g, metas[g].0, &props) as usize;
+            members[c].push(g);
+        }
+        // Placeholders carry the (probed) label so weights and GCFL label
+        // bookkeeping stay global; bodies exist only for owned graphs.
+        let graphs: Vec<SmallGraph> = metas
+            .iter()
+            .map(|&(label, _)| SmallGraph {
+                csr: Csr { n: 0, offsets: vec![0], adj: Vec::new() },
+                features: Vec::new(),
+                label,
+            })
+            .collect();
+        (metas, split, members, graphs)
+    };
+    for c in 0..cfg.n_trainer {
+        if !slice.wants(c) {
+            continue;
+        }
+        let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+        for &g in &members[c] {
+            graphs[g] = gc_keyed_graph(spec, seed, g as u64);
+        }
+    }
+    monitor.stop("data");
+    let max_graph_nodes = metas.iter().map(|&(_, n)| n).max().unwrap_or(16);
+    let ds = GCDataset {
+        name: spec.name.to_string(),
+        graphs,
+        feat_dim: GC_FEAT_DIM,
+        num_classes: spec.num_classes,
+        split,
+    };
+    let rng = CounterRng::at(pseed, domains::PARAM_INIT, 0);
+    Ok(GcPlan { ds, members, max_graph_nodes, rng })
+}
+
+/// Deterministic session build for GC: the engine-free [`plan_gc`] plus
+/// artifact selection and one [`GcLogic`] per materialized client. Worker
+/// processes replay this from the shipped config with their `Assign` slice
+/// (see [`super::nc::build_nc`]); the graph store is shared (`Arc`), so the
+/// per-client slice bounds the index tables and logic allocations.
+pub(crate) fn build_gc(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
+    monitor.start("startup");
+    if matches!(cfg.privacy, PrivacyMode::He(_)) && cfg.method == Method::SelfTrain {
+        bail!("SelfTrain has no aggregation to encrypt");
+    }
+    let gcfl_method = matches!(cfg.method, Method::Gcfl | Method::GcflPlus | Method::GcflPlusDws);
+    if gcfl_method && matches!(cfg.privacy, PrivacyMode::He(_)) {
+        bail!("GCFL clustering reads client deltas; it requires plaintext or DP uploads");
+    }
+    let GcPlan { ds, members, max_graph_nodes, mut rng } = plan_gc(cfg, monitor, slice)?;
 
     let d = ds.feat_dim;
     let fixed = [("d", d)];
     // Pick the bucket that fits a full batch of this dataset's largest graphs.
-    let max_graph_nodes = ds.graphs.iter().map(|g| g.csr.n).max().unwrap_or(16);
     let want_nodes = (max_graph_nodes * 16).max(512);
     let kind_train = if cfg.method == Method::FedProx { "gc_prox_train" } else { "gc_train" };
     let train_art = engine
@@ -354,7 +464,7 @@ pub(crate) fn build_gc(
 
     let per_client_idx: Vec<(Vec<usize>, Vec<usize>)> = (0..cfg.n_trainer)
         .map(|ci| {
-            let mine: Vec<usize> = part.members[ci].iter().map(|&g| g as usize).collect();
+            let mine = &members[ci];
             (
                 mine.iter().copied().filter(|&i| ds.split[i] == 0).collect(),
                 mine.iter().copied().filter(|&i| ds.split[i] == 2).collect(),
@@ -395,4 +505,90 @@ pub(crate) fn build_gc(
         SessionBuild { init: global_init, weights, max_dim: n_pad, n_total: cfg.n_trainer, logics },
         rng,
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Task;
+    use crate::transport::{NetConfig, SimNet};
+
+    fn gc_cfg(seed: u64) -> FedGraphConfig {
+        let mut cfg =
+            FedGraphConfig::new(Task::GraphClassification, Method::FedAvgGC, "mutag-sim").unwrap();
+        cfg.scale = 0.3; // 56 graphs
+        cfg.n_trainer = 4;
+        cfg.seed = seed;
+        cfg.iid_beta = 0.5;
+        cfg
+    }
+
+    fn mon() -> Monitor {
+        Monitor::new(Arc::new(SimNet::new(NetConfig::default())))
+    }
+
+    #[test]
+    fn sliced_v2_gc_plan_equals_full_plan_slice_bitwise() {
+        // v2 slice equivalence for GC: assigned clients' graphs are bitwise
+        // the full build's; unassigned graphs stay placeholders; the shared
+        // bucket input, membership, split and init stream never depend on
+        // the slice.
+        let mut cfg = gc_cfg(0xC0DE);
+        cfg.dataset_format = DatasetFormat::V2;
+        let full = plan_gc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        for assigned in [vec![0usize, 2], vec![1], vec![0, 1, 2, 3], vec![3]] {
+            let slice = BuildSlice::assigned(4, &assigned).unwrap();
+            let sliced = plan_gc(&cfg, &mon(), &slice).unwrap();
+            assert_eq!(sliced.members, full.members);
+            assert_eq!(sliced.max_graph_nodes, full.max_graph_nodes);
+            assert_eq!(sliced.ds.split, full.ds.split);
+            for c in 0..4 {
+                for &g in &full.members[c] {
+                    let (a, b) = (&full.ds.graphs[g], &sliced.ds.graphs[g]);
+                    assert_eq!(a.label, b.label, "graph {g} label");
+                    if slice.wants(c) {
+                        assert_eq!(a.csr.adj, b.csr.adj, "graph {g} adjacency");
+                        assert_eq!(a.csr.offsets, b.csr.offsets, "graph {g} offsets");
+                        assert_eq!(a.features, b.features, "graph {g} features");
+                    } else {
+                        assert_eq!(b.csr.n, 0, "graph {g} must stay a placeholder");
+                        assert!(b.features.is_empty());
+                    }
+                }
+            }
+            let mut fa = full.rng.clone();
+            let mut fb = sliced.rng.clone();
+            for _ in 0..8 {
+                assert_eq!(fa.next_u64(), fb.next_u64(), "keyed init stream");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_gc_generation_work_scales_with_the_slice() {
+        use crate::graph::{gen_work, gen_work_reset};
+        let mut cfg = gc_cfg(0x6C);
+        cfg.dataset_format = DatasetFormat::V2;
+        gen_work_reset();
+        plan_gc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        let full_work = gen_work();
+        assert!(full_work > 0);
+        gen_work_reset();
+        plan_gc(&cfg, &mon(), &BuildSlice::assigned(4, &[1]).unwrap()).unwrap();
+        let one_work = gen_work();
+        assert!(one_work > 0 && one_work < full_work, "{one_work} vs {full_work}");
+    }
+
+    #[test]
+    fn v1_gc_plan_is_unchanged_by_the_slice() {
+        // The v1 path still generates everything (sequential stream) but the
+        // plan's shared outputs must not depend on the slice either.
+        let cfg = gc_cfg(0x11);
+        let full = plan_gc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        let slice = BuildSlice::assigned(4, &[0, 3]).unwrap();
+        let sliced = plan_gc(&cfg, &mon(), &slice).unwrap();
+        assert_eq!(sliced.members, full.members);
+        assert_eq!(sliced.max_graph_nodes, full.max_graph_nodes);
+        assert_eq!(sliced.ds.graphs.len(), full.ds.graphs.len());
+    }
 }

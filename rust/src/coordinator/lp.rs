@@ -23,8 +23,10 @@
 
 use anyhow::Result;
 
-use crate::config::{FedGraphConfig, Method};
-use crate::data::lp::{generate_lp, region_config, RegionData};
+use crate::config::{DatasetFormat, FedGraphConfig, Method};
+use crate::data::lp::{
+    country_size, generate_lp, lp_keyed_region, region_config, RegionData, LP_FEAT_DIM,
+};
 use crate::federation::{
     Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBuild,
 };
@@ -33,7 +35,7 @@ use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
 use crate::transport::serialize::{encode_params, fnv1a};
 use crate::transport::{Direction, Phase, SimNet};
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, CounterRng, Rng};
 use crate::util::stats::auc;
 
 use super::nc::block_tensors;
@@ -269,40 +271,123 @@ pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     Ok(())
 }
 
-/// Deterministic session build for LP: one region per trainer, the region
-/// blocks precomputed, one [`LpLogic`] per materialized client. Worker
-/// processes replay this from the shipped config with their `Assign` slice
-/// (see [`super::nc::build_nc`]). Region *generation* is sequential-RNG
-/// bound (every region must be generated to advance the shared stream —
-/// negative sampling draws a data-dependent count), but skipped regions are
-/// dropped immediately and their padded training blocks — the dominant
-/// per-client allocation — are never built.
-pub(crate) fn build_lp(
+/// Engine-free LP plan: the per-region data (wanted regions only under v2),
+/// deterministic aggregation weights, and the shared artifact-bucket input.
+pub(crate) struct LpPlan {
+    /// One slot per region; `None` for regions outside the slice. v1
+    /// generates every region to advance the shared stream and drops the
+    /// unwanted ones immediately; v2 never generates them at all.
+    pub(crate) regions: Vec<Option<RegionData>>,
+    /// Aggregation weights for every region. v1: train-edge counts (data
+    /// dependent, needs all regions — which v1 generates anyway). v2: the
+    /// deterministic region node count — slice-independent without
+    /// generating a single edge (documented semantic delta).
+    pub(crate) weights: Vec<f32>,
+    /// Max region node count (artifact-bucket input). v2 reads it from the
+    /// deterministic size law, so it never depends on the slice.
+    pub(crate) need: usize,
+    /// Setup stream for the init model (v1: shared sequential stream; v2:
+    /// keyed `PARAM_INIT` stream).
+    pub(crate) rng: Rng,
+}
+
+pub(crate) fn plan_lp(
     cfg: &FedGraphConfig,
-    engine: &Engine,
     monitor: &Monitor,
     slice: &BuildSlice,
-) -> Result<(SessionBuild, Rng)> {
+) -> Result<LpPlan> {
     let countries = region_config(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown LP region config '{}' (use US, US+BR or 5country)", cfg.dataset
         ))?;
     slice.check(countries.len())?;
-    monitor.start("startup");
-    let mut rng = Rng::seeded(cfg.seed);
+    if cfg.dataset_format == DatasetFormat::V2 {
+        return plan_lp_v2(cfg, monitor, slice, &countries);
+    }
+    let rng = Rng::seeded(cfg.seed);
     monitor.note("task", "LP");
     monitor.note("dataset", &cfg.dataset);
     monitor.note("method", cfg.method.name());
     monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
-    let ds = generate_lp(&countries, cfg.scale, cfg.seed);
+    let ds = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v1");
+        generate_lp(&countries, cfg.scale, cfg.seed)
+    };
     monitor.stop("data");
-    let d = ds.feat_dim;
-    let m = ds.regions.len();
-    monitor.note("n_trainer", m);
-
+    monitor.note("n_trainer", ds.regions.len());
+    let weights: Vec<f32> =
+        ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
     let need = ds.regions.iter().map(|r| r.graph.n).max().unwrap_or(64);
+    let regions: Vec<Option<RegionData>> = ds
+        .regions
+        .into_iter()
+        .enumerate()
+        .map(|(c, r)| slice.wants(c).then_some(r))
+        .collect();
+    Ok(LpPlan { regions, weights, need, rng })
+}
+
+/// The `dataset_format: v2` LP plan: every region lives in its own keyed
+/// stream (keyed by country code), so this process generates **only the
+/// regions its slice wants** — no replay, no skip, no generate-then-drop.
+/// The bucket input and the aggregation weights come from the deterministic
+/// region-size law, so both are slice-independent without any generation.
+fn plan_lp_v2(
+    cfg: &FedGraphConfig,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+    countries: &[&str],
+) -> Result<LpPlan> {
+    monitor.note("task", "LP");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("dataset_format", "v2");
+    monitor.note("method", cfg.method.name());
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    monitor.start("data");
+    let regions: Vec<Option<RegionData>> = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v2");
+        countries
+            .iter()
+            .enumerate()
+            .map(|(c, code)| {
+                slice.wants(c).then(|| {
+                    let _sp =
+                        crate::trace::span("build", "materialize_client").arg("client", c);
+                    lp_keyed_region(code, cfg.scale, cfg.seed)
+                })
+            })
+            .collect()
+    };
+    monitor.stop("data");
+    monitor.note("n_trainer", countries.len());
+    // Deterministic node-count law shared with the generator.
+    let sizes: Vec<usize> = countries
+        .iter()
+        .map(|c| ((country_size(c) as f64 * cfg.scale) as usize).max(64))
+        .collect();
+    let need = sizes.iter().copied().max().unwrap_or(64);
+    let weights: Vec<f32> = sizes.iter().map(|&n| n as f32).collect();
+    let rng = CounterRng::at(cfg.seed ^ 0x4C50_5345, domains::PARAM_INIT, 0);
+    Ok(LpPlan { regions, weights, need, rng })
+}
+
+/// Deterministic session build for LP: the engine-free [`plan_lp`] plus
+/// artifact selection, the region blocks, and one [`LpLogic`] per
+/// materialized client. Worker processes replay this from the shipped
+/// config with their `Assign` slice (see [`super::nc::build_nc`]).
+pub(crate) fn build_lp(
+    cfg: &FedGraphConfig,
+    engine: &Engine,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+) -> Result<(SessionBuild, Rng)> {
+    monitor.start("startup");
+    let LpPlan { regions, weights, need, mut rng } = plan_lp(cfg, monitor, slice)?;
+    let d = LP_FEAT_DIM;
+    let m = regions.len();
     let train_art = engine.manifest.pick("lp_train", &[("d", d)], need)?.clone();
     let eval_art = engine.manifest.pick("lp_eval", &[("d", d)], need)?.clone();
     let (n_pad, e_pad, p_pad) = (train_art.dim("n"), train_art.dim("e"), train_art.dim("p"));
@@ -315,13 +400,9 @@ pub(crate) fn build_lp(
     let global_init = ParamSet::lp(d, hidden, zdim, &mut rng);
     let temporal = matches!(cfg.method, Method::Stfl | Method::FourDFedGnnPlus);
 
-    let weights: Vec<f32> =
-        ds.regions.iter().map(|r| r.train_edges.len().max(1) as f32).collect();
     let mut logics: Vec<(usize, Box<dyn ClientLogic>)> = Vec::new();
-    for (client, region) in ds.regions.into_iter().enumerate() {
-        if !slice.wants(client) {
-            continue; // region dropped: generated only to advance the stream
-        }
+    for (client, slot) in regions.into_iter().enumerate() {
+        let Some(region) = slot else { continue };
         let block = region_block(&region, n_pad, e_pad);
         monitor.count_built_client(lp_client_bytes(&region, &block));
         logics.push((
@@ -357,4 +438,99 @@ fn lp_client_bytes(r: &RegionData, b: &Block) -> u64 {
         + (r.train_edges.len() + r.test_pos.len() + r.test_neg.len()) * 8
         + r.train_times.len() * 4;
     region as u64 + b.wire_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Task;
+    use crate::transport::NetConfig;
+
+    fn lp_cfg(seed: u64) -> FedGraphConfig {
+        let mut cfg =
+            FedGraphConfig::new(Task::LinkPrediction, Method::StaticGnn, "5country").unwrap();
+        cfg.scale = 0.05;
+        cfg.seed = seed;
+        cfg
+    }
+
+    fn mon() -> Monitor {
+        Monitor::new(Arc::new(SimNet::new(NetConfig::default())))
+    }
+
+    fn assert_region_eq(a: &RegionData, b: &RegionData, c: usize) {
+        assert_eq!(a.country, b.country, "region {c} country");
+        assert_eq!(a.graph.adj, b.graph.adj, "region {c} adjacency");
+        assert_eq!(a.graph.offsets, b.graph.offsets, "region {c} offsets");
+        assert_eq!(a.features, b.features, "region {c} features (bitwise)");
+        assert_eq!(a.train_edges, b.train_edges, "region {c} train edges");
+        assert_eq!(a.train_times, b.train_times, "region {c} train times");
+        assert_eq!(a.test_pos, b.test_pos, "region {c} test pos");
+        assert_eq!(a.test_neg, b.test_neg, "region {c} test neg");
+    }
+
+    #[test]
+    fn sliced_v2_lp_plan_equals_full_plan_slice_bitwise() {
+        // v2 slice equivalence for LP: a worker owning a subset of regions
+        // generates exactly those, bitwise-identical to the full plan's,
+        // while weights / bucket need / init stream are slice-independent
+        // (and computed without generating the skipped regions).
+        let mut cfg = lp_cfg(0x17);
+        cfg.dataset_format = DatasetFormat::V2;
+        let full = plan_lp(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        assert_eq!(full.regions.iter().flatten().count(), 5);
+        for assigned in [vec![0usize, 2, 4], vec![1], vec![3, 4]] {
+            let slice = BuildSlice::assigned(5, &assigned).unwrap();
+            let sliced = plan_lp(&cfg, &mon(), &slice).unwrap();
+            assert_eq!(sliced.weights, full.weights, "weights are deterministic");
+            assert_eq!(sliced.need, full.need, "bucket input is slice-independent");
+            for c in 0..5 {
+                match (&full.regions[c], &sliced.regions[c]) {
+                    (Some(a), Some(b)) => {
+                        assert!(slice.wants(c));
+                        assert_region_eq(a, b, c);
+                    }
+                    (Some(_), None) => assert!(!slice.wants(c), "region {c} missing"),
+                    (None, _) => panic!("full plan must generate region {c}"),
+                }
+            }
+            let mut fa = full.rng.clone();
+            let mut fb = sliced.rng.clone();
+            for _ in 0..8 {
+                assert_eq!(fa.next_u64(), fb.next_u64(), "keyed init stream");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_lp_generation_work_scales_with_the_slice() {
+        use crate::graph::{gen_work, gen_work_reset};
+        let mut cfg = lp_cfg(0x18);
+        cfg.dataset_format = DatasetFormat::V2;
+        gen_work_reset();
+        plan_lp(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        let full_work = gen_work();
+        assert!(full_work > 0);
+        gen_work_reset();
+        plan_lp(&cfg, &mon(), &BuildSlice::assigned(5, &[1]).unwrap()).unwrap();
+        let one_work = gen_work();
+        // One mid-sized region out of five: well under half the full work.
+        assert!(one_work > 0 && one_work * 2 < full_work, "{one_work} vs {full_work}");
+    }
+
+    #[test]
+    fn v1_lp_weights_stay_data_dependent() {
+        // Pin the v1 semantic: weights are train-edge counts (generated),
+        // not the v2 deterministic size law.
+        let cfg = lp_cfg(0x19);
+        let plan = plan_lp(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        let sizes: Vec<f32> = plan
+            .regions
+            .iter()
+            .flatten()
+            .map(|r| r.graph.n as f32)
+            .collect();
+        assert_ne!(plan.weights, sizes);
+        assert!(plan.weights.iter().all(|&w| w >= 1.0));
+    }
 }

@@ -20,22 +20,26 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::config::{FedGraphConfig, Method};
-use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset};
+use crate::config::{DatasetFormat, FedGraphConfig, Method};
+use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset, NCKeyedView};
 use crate::federation::{
     Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBuild,
 };
 use crate::graph::{
-    block_from_induced, build_local_graph, dirichlet_partition, halo_count, sample_neighborhood,
-    Block, Csr, LazyGraph, LocalGraph, Partition,
+    block_from_induced, build_local_graph, build_local_graph_keyed, dirichlet_partition,
+    halo_count, keyed_dirichlet_partition, keyed_dirichlet_props, sample_neighborhood, Block,
+    Csr, LazyGraph, LocalGraph, Partition,
 };
 use crate::monitor::{Monitor, RoundRecord};
 use crate::runtime::{Engine, ParamSet, Tensor};
 use crate::transport::serialize::{encode_params, fnv1a};
 use crate::transport::{Direction, Phase, SimNet};
-use crate::util::rng::{hash_f32, Rng};
+use crate::util::rng::{domains, hash_f32, CounterRng, Rng};
 
-use super::fedgcn::{fedgcn_pretrain, fedsage_features, fedsage_generators, halo_feature_table};
+use super::fedgcn::{
+    fedgcn_pretrain, fedgcn_pretrain_v2, fedsage_features, fedsage_generators, fedsage_local_v2,
+    halo_feature_table,
+};
 use super::selection::select_with_dropout;
 use super::BuildSlice;
 
@@ -79,6 +83,10 @@ struct NcLogic {
     cl: NcClient,
     /// The client's local-graph view, kept for BNS-GCN halo re-sampling.
     local: Option<LocalGraph>,
+    /// BNS-GCN: the client's full halo feature table (aligned with
+    /// `local.halo`) — per-round re-sampling reads this instead of a global
+    /// feature array, which the v2 bookkeeping dataset does not carry.
+    halo_feats: Option<Vec<f32>>,
     ds: Arc<NCDataset>,
     engine: Engine,
     net: Arc<SimNet>,
@@ -99,8 +107,20 @@ impl ClientLogic for NcLogic {
         if self.method == Method::BnsGcn {
             // BNS-GCN re-samples boundary nodes (and re-ships their features).
             let l = self.local.as_ref().expect("BNS logic keeps its local graph");
-            let mut cl =
-                client_with_halo_resample(&self.ds, l, self.bns_ratio, rng, self.client, &self.net);
+            let hf = self.halo_feats.as_ref().expect("BNS logic keeps halo features");
+            // Owned rows never change across re-samples: they are the first
+            // `num_owned` rows of the current client state.
+            let owned_feats = &self.cl.features[..self.cl.num_owned * self.d_eff];
+            let mut cl = client_with_halo_resample(
+                &self.ds,
+                l,
+                owned_feats,
+                hf,
+                self.bns_ratio,
+                rng,
+                self.client,
+                &self.net,
+            );
             if !self.minibatch {
                 cl.train_block =
                     Some(make_block(&cl, &self.ds, self.n_pad, self.e_pad, self.d_eff, 0));
@@ -235,12 +255,19 @@ pub(crate) struct NcPlan {
     pub(crate) d_eff: usize,
     /// Materialized per-client training state (slice-selected).
     pub(crate) clients: Vec<Option<NcClient>>,
-    /// Every client's block node count — owned plus kept halo — regardless
-    /// of the slice: the shared artifact-bucket decision must not depend on
-    /// which clients this process materializes.
+    /// Every client's block node count — owned plus kept halo (v1) or the
+    /// deterministic owned + stub-degree bound (v2) — regardless of the
+    /// slice: the shared artifact-bucket decision must not depend on which
+    /// clients this process materializes.
     pub(crate) node_counts: Vec<usize>,
+    /// BNS-GCN: each materialized client's full halo feature table, kept so
+    /// the actor's per-round boundary re-sampling never needs a global
+    /// feature array (`None` for other methods / skipped clients).
+    pub(crate) halo_feats: Vec<Option<Vec<f32>>>,
     /// The setup stream after the per-client phase (bitwise-identical in
-    /// full and sliced builds — the equivalence tests pin this).
+    /// full and sliced builds — the equivalence tests pin this). Under v2
+    /// this is the keyed `PARAM_INIT` stream: nothing before it draws from
+    /// a shared sequence, so it is trivially process-independent.
     pub(crate) rng: Rng,
 }
 
@@ -249,6 +276,9 @@ pub(crate) fn plan_nc(
     monitor: &Monitor,
     slice: &BuildSlice,
 ) -> Result<NcPlan> {
+    if cfg.dataset_format == DatasetFormat::V2 {
+        return plan_nc_v2(cfg, monitor, slice);
+    }
     let spec = nc_spec(&cfg.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown NC dataset '{}'", cfg.dataset))?;
     slice.check(cfg.n_trainer)?;
@@ -261,7 +291,10 @@ pub(crate) fn plan_nc(
     monitor.note("federation_mode", cfg.federation.mode.name());
 
     monitor.start("data");
-    let ds = generate_nc(&spec, cfg.scale, cfg.seed);
+    let ds = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v1");
+        generate_nc(&spec, cfg.scale, cfg.seed)
+    };
     let part = dirichlet_partition(
         &ds.labels,
         ds.num_classes,
@@ -273,7 +306,12 @@ pub(crate) fn plan_nc(
     // process materializes. Skipped clients never get an index map, local
     // CSR, or feature copies.
     let locals: Vec<Option<LocalGraph>> = (0..cfg.n_trainer)
-        .map(|c| slice.wants(c).then(|| build_local_graph(&ds.graph, &part, c as u32)))
+        .map(|c| {
+            slice.wants(c).then(|| {
+                let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                build_local_graph(&ds.graph, &part, c as u32)
+            })
+        })
         .collect();
     monitor.stop("data");
 
@@ -281,6 +319,7 @@ pub(crate) fn plan_nc(
     let mut d_eff = ds.feat_dim;
     let mut node_counts: Vec<usize> = part.members.iter().map(|m| m.len()).collect();
     let mut clients: Vec<Option<NcClient>> = (0..cfg.n_trainer).map(|_| None).collect();
+    let mut halo_feats: Vec<Option<Vec<f32>>> = (0..cfg.n_trainer).map(|_| None).collect();
     match cfg.method {
         Method::FedAvgNC => {
             for (c, slot) in clients.iter_mut().enumerate() {
@@ -350,6 +389,9 @@ pub(crate) fn plan_nc(
                         let cl = client_with_halo(&ds, l, &halo, keep, &mut rng);
                         node_counts[c] = cl.nodes.len();
                         clients[c] = Some(cl);
+                        if cfg.method == Method::BnsGcn {
+                            halo_feats[c] = Some(halo);
+                        }
                     }
                     None => {
                         let h = halo_count(&ds.graph, &part, c as u32);
@@ -369,7 +411,234 @@ pub(crate) fn plan_nc(
         }
         m => bail!("method {} is not a node-classification method", m.name()),
     }
-    Ok(NcPlan { ds, part, locals, d_eff, clients, node_counts, rng })
+    Ok(NcPlan { ds, part, locals, d_eff, clients, node_counts, halo_feats, rng })
+}
+
+/// The `dataset_format: v2` NC plan: every label, feature row, stub row,
+/// split tag and partition assignment is a keyed draw — O(1) from
+/// `(seed, entity id)` — so this function does **no replay and no skip**.
+/// Per-client generation work is O(owned + halo); the only full-length
+/// passes are cheap keyed bookkeeping (labels, split tags, assignments,
+/// stub-degree bounds), mirroring the v1 "partition bookkeeping" budget. A
+/// sliced v2 plan is bitwise-identical to the matching slice of a full v2
+/// plan by construction — no shared stream exists to advance.
+pub(crate) fn plan_nc_v2(
+    cfg: &FedGraphConfig,
+    monitor: &Monitor,
+    slice: &BuildSlice,
+) -> Result<NcPlan> {
+    let spec = nc_spec(&cfg.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown NC dataset '{}'", cfg.dataset))?;
+    slice.check(cfg.n_trainer)?;
+    let ledger = slice.is_full();
+    monitor.note("task", "NC");
+    monitor.note("dataset", &cfg.dataset);
+    monitor.note("dataset_format", "v2");
+    monitor.note("method", cfg.method.name());
+    monitor.note("n_trainer", cfg.n_trainer);
+    monitor.note("federation_mode", cfg.federation.mode.name());
+
+    monitor.start("data");
+    let (view, ds, part) = {
+        let _sp = crate::trace::span("build", "dataset").arg("format", "v2");
+        let view = NCKeyedView::new(&spec, cfg.scale, cfg.seed);
+        let n = view.n();
+        // Bookkeeping dataset: labels + split are cheap keyed draws; the
+        // feature table and global CSR are never materialized (the empty
+        // graph keeps `NCDataset` consumers honest — v2 paths must go
+        // through the view).
+        let labels: Vec<u16> = (0..n as u32).map(|u| view.label(u)).collect();
+        let split: Vec<u8> = (0..n as u32).map(|u| view.split_of(u)).collect();
+        let seed = view.derived_seed();
+        let props =
+            keyed_dirichlet_props(seed, view.num_classes(), cfg.n_trainer, cfg.iid_beta);
+        let part = keyed_dirichlet_partition(seed, n, cfg.n_trainer, &props, |u| labels[u]);
+        let ds = NCDataset {
+            name: view.name.clone(),
+            graph: Csr { n, offsets: vec![0; n + 1], adj: Vec::new() },
+            features: Vec::new(),
+            feat_dim: view.feat_dim,
+            labels,
+            num_classes: view.num_classes(),
+            split,
+        };
+        (view, ds, part)
+    };
+    let seed = view.derived_seed();
+    let locals: Vec<Option<LocalGraph>> = (0..cfg.n_trainer)
+        .map(|c| {
+            slice.wants(c).then(|| {
+                let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                build_local_graph_keyed(
+                    c as u32,
+                    &part.members[c],
+                    |u| part.assign[u as usize],
+                    |u| view.stubs(u),
+                )
+            })
+        })
+        .collect();
+    monitor.stop("data");
+
+    let mut d_eff = view.feat_dim;
+    let mut node_counts: Vec<usize> = part.members.iter().map(|m| m.len()).collect();
+    let mut clients: Vec<Option<NcClient>> = (0..cfg.n_trainer).map(|_| None).collect();
+    let mut halo_feats: Vec<Option<Vec<f32>>> = (0..cfg.n_trainer).map(|_| None).collect();
+    match cfg.method {
+        Method::FedAvgNC => {
+            for (c, slot) in clients.iter_mut().enumerate() {
+                if let Some(l) = &locals[c] {
+                    let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                    *slot = Some(nc_client_v2(&view, &ds.split, l, &[], None));
+                }
+            }
+        }
+        Method::FedGcn => {
+            let hops = cfg.num_hops.max(1);
+            let pre = fedgcn_pretrain_v2(
+                monitor,
+                &cfg.privacy,
+                cfg.lowrank_rank,
+                hops,
+                &view,
+                &part,
+                slice,
+            )?;
+            d_eff = pre.d_eff;
+            for (c, feats) in pre.per_client.into_iter().enumerate() {
+                if let Some(l) = &locals[c] {
+                    let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                    clients[c] = Some(nc_client_v2(&view, &ds.split, l, &[], Some((feats, d_eff))));
+                }
+            }
+        }
+        Method::FedSagePlus => {
+            monitor.start("pretrain");
+            for (c, slot) in clients.iter_mut().enumerate() {
+                if let Some(l) = &locals[c] {
+                    let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                    let feats = fedsage_local_v2(monitor, &view, &part, c as u32, ledger);
+                    *slot = Some(nc_client_v2(&view, &ds.split, l, &[], Some((feats, d_eff))));
+                }
+            }
+            monitor.stop("pretrain");
+        }
+        Method::DistributedGCN | Method::BnsGcn => {
+            let keep = if cfg.method == Method::BnsGcn { cfg.bns_ratio } else { 1.0 };
+            monitor.start("pretrain");
+            // Shared bucket input: a deterministic per-client upper bound,
+            // owned + Σ stub-degree (one cheap keyed draw per node) — never
+            // the materialized halo, so it cannot depend on the slice.
+            for (c, count) in node_counts.iter_mut().enumerate() {
+                *count = part.members[c].len()
+                    + part.members[c].iter().map(|&u| view.stub_count(u)).sum::<usize>();
+            }
+            for c in 0..cfg.n_trainer {
+                let Some(l) = &locals[c] else { continue };
+                let _sp = crate::trace::span("build", "materialize_client").arg("client", c);
+                let d = view.feat_dim;
+                let mut hf = vec![0f32; l.halo.len() * d];
+                for (k, &u) in l.halo.iter().enumerate() {
+                    view.feature_into(u, &mut hf[k * d..(k + 1) * d]);
+                }
+                if ledger {
+                    let bytes = (l.halo.len() * d * 4) as u64;
+                    monitor.net.send(Phase::PreTrain, Direction::Up, bytes);
+                    monitor.net.send(Phase::PreTrain, Direction::Down, bytes);
+                }
+                // BNS keep/drop is keyed per (client, halo node): any
+                // process that materializes this client keeps exactly the
+                // same boundary subset.
+                let kept: Vec<usize> = if keep >= 1.0 {
+                    (0..l.halo.len()).collect()
+                } else {
+                    (0..l.halo.len())
+                        .filter(|&k| {
+                            let mut r = CounterRng::at2(
+                                seed,
+                                domains::HALO_KEEP,
+                                c as u64,
+                                l.halo[k] as u64,
+                            );
+                            r.chance(keep)
+                        })
+                        .collect()
+                };
+                clients[c] = Some(nc_client_v2(&view, &ds.split, l, &kept, None));
+                if cfg.method == Method::BnsGcn {
+                    halo_feats[c] = Some(hf);
+                }
+            }
+            monitor.stop("pretrain");
+        }
+        m => bail!("method {} is not a node-classification method", m.name()),
+    }
+    // v2 model init draws from the keyed PARAM_INIT stream — identical in
+    // every process without any preceding sequential draws to replay.
+    let rng = CounterRng::at(seed, domains::PARAM_INIT, 0);
+    Ok(NcPlan { ds, part, locals, d_eff, clients, node_counts, halo_feats, rng })
+}
+
+/// Materialize one v2 client from the keyed view and its local graph:
+/// `kept_halo` indexes `l.halo`; `owned_feats` overrides the feature rows
+/// for methods whose pre-train exchange replaces them (FedGCN, FedSage+ —
+/// owned rows only, `kept_halo` must be empty then).
+fn nc_client_v2(
+    view: &NCKeyedView,
+    split: &[u8],
+    l: &LocalGraph,
+    kept_halo: &[usize],
+    owned_feats: Option<(Vec<f32>, usize)>,
+) -> NcClient {
+    let d = owned_feats.as_ref().map(|(_, d)| *d).unwrap_or(view.feat_dim);
+    let mut nodes = l.owned.clone();
+    let mut features = match owned_feats {
+        Some((f, _)) => {
+            debug_assert!(kept_halo.is_empty());
+            f
+        }
+        None => {
+            let mut f = vec![0f32; l.owned.len() * d];
+            for (k, &u) in l.owned.iter().enumerate() {
+                view.feature_into(u, &mut f[k * d..(k + 1) * d]);
+            }
+            f
+        }
+    };
+    for &k in kept_halo {
+        let u = l.halo[k];
+        nodes.push(u);
+        let mut row = vec![0f32; d];
+        view.feature_into(u, &mut row);
+        features.extend_from_slice(&row);
+    }
+    let mut pos = std::collections::HashMap::new();
+    for (i, &u) in nodes.iter().enumerate() {
+        pos.insert(u, i as u32);
+    }
+    let mut edges = Vec::new();
+    for (i, &u) in nodes.iter().enumerate() {
+        let li = l.index[&u];
+        for &lv in l.csr.neighbors(li) {
+            let gv = l.global_of(lv);
+            if let Some(&j) = pos.get(&gv) {
+                if (i as u32) < j {
+                    edges.push((i as u32, j));
+                }
+            }
+        }
+    }
+    let csr = Csr::from_edges(nodes.len(), &edges);
+    let train_count = l.owned.iter().filter(|&&u| split[u as usize] == 0).count();
+    NcClient {
+        num_owned: l.owned.len(),
+        nodes,
+        features,
+        csr,
+        train_block: None,
+        eval_block: None,
+        train_count,
+    }
 }
 
 /// Deterministic session build for the standard NC path: the engine-free
@@ -386,7 +655,7 @@ pub(crate) fn build_nc(
     slice: &BuildSlice,
 ) -> Result<(SessionBuild, Rng)> {
     monitor.start("startup");
-    let NcPlan { ds, part, locals, d_eff, mut clients, node_counts, mut rng } =
+    let NcPlan { ds, part, locals, d_eff, mut clients, node_counts, mut halo_feats, mut rng } =
         plan_nc(cfg, monitor, slice)?;
 
     // ---- bucket selection / minibatch decision ---------------------------
@@ -441,6 +710,7 @@ pub(crate) fn build_nc(
                 client,
                 local: (cfg.method == Method::BnsGcn)
                     .then(|| locals[client].clone().expect("materialized client has a view")),
+                halo_feats: halo_feats[client].take(),
                 cl,
                 ds: ds.clone(),
                 engine: engine.clone(),
@@ -526,10 +796,15 @@ fn client_with_halo(
 
 /// BNS-GCN per-round variant: re-sample and account the feature re-shipment
 /// as training-phase communication (runs inside the trainer actor; staged so
-/// the scheduler tick groups all clients' halo links concurrently).
+/// the scheduler tick groups all clients' halo links concurrently). Feature
+/// rows come in as slices — the actor's own state under v2, where the
+/// bookkeeping dataset carries no feature table.
+#[allow(clippy::too_many_arguments)]
 fn client_with_halo_resample(
     ds: &NCDataset,
     l: &LocalGraph,
+    owned_features: &[f32],
+    halo_features: &[f32],
     keep_ratio: f64,
     rng: &mut Rng,
     client: usize,
@@ -539,21 +814,33 @@ fn client_with_halo_resample(
     let bytes = (kept.len() * ds.feat_dim * 4) as u64;
     net.stage(Phase::Train, Direction::Up, client, bytes);
     net.stage(Phase::Train, Direction::Down, client, bytes);
-    let halo_features: Vec<f32> =
-        l.halo.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
-    build_halo_client(ds, l, &halo_features, &kept)
+    assemble_halo_client(owned_features, ds.feat_dim, &ds.split, l, halo_features, &kept)
 }
 
+/// v1 wrapper: owned feature rows come straight from the dataset table.
 fn build_halo_client(
     ds: &NCDataset,
     l: &LocalGraph,
     halo_features: &[f32],
     kept_halo: &[usize],
 ) -> NcClient {
-    let d = ds.feat_dim;
+    let owned: Vec<f32> = l.owned.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
+    assemble_halo_client(&owned, ds.feat_dim, &ds.split, l, halo_features, kept_halo)
+}
+
+/// Assemble an owned + kept-halo client from explicit feature slices (shared
+/// by the v1 dataset-backed path and the actor's BNS re-sampling, which under
+/// v2 has no global feature array to read).
+fn assemble_halo_client(
+    owned_features: &[f32],
+    d: usize,
+    split: &[u8],
+    l: &LocalGraph,
+    halo_features: &[f32],
+    kept_halo: &[usize],
+) -> NcClient {
     let mut nodes = l.owned.clone();
-    let mut features: Vec<f32> =
-        l.owned.iter().flat_map(|&u| ds.feature_row(u).to_vec()).collect();
+    let mut features: Vec<f32> = owned_features.to_vec();
     for &k in kept_halo {
         nodes.push(l.halo[k]);
         features.extend_from_slice(&halo_features[k * d..(k + 1) * d]);
@@ -576,7 +863,7 @@ fn build_halo_client(
         }
     }
     let csr = Csr::from_edges(nodes.len(), &edges);
-    let train_count = l.owned.iter().filter(|&&u| ds.split[u as usize] == 0).count();
+    let train_count = l.owned.iter().filter(|&&u| split[u as usize] == 0).count();
     NcClient {
         num_owned: l.owned.len(),
         nodes,
@@ -679,6 +966,10 @@ struct LazyNcLogic {
     local_steps: usize,
     learning_rate: f32,
     seed: u64,
+    /// `dataset_format: v2` + FedGCN: stream 1-hop pre-aggregated feature
+    /// rows per block instead of holding a full pre-train working table —
+    /// each chunk is recomputed from the hash-defined graph on demand.
+    fedgcn_stream: bool,
 }
 
 impl ClientLogic for LazyNcLogic {
@@ -686,8 +977,16 @@ impl ClientLogic for LazyNcLogic {
         let mut p = params.clone();
         let mut loss = 0.0;
         for _ in 0..self.local_steps {
-            let block =
-                lazy_block(&self.g, &self.ranges, self.batch, self.n_pad, self.e_pad, false, rng);
+            let block = lazy_block(
+                &self.g,
+                &self.ranges,
+                self.batch,
+                self.n_pad,
+                self.e_pad,
+                false,
+                self.fedgcn_stream,
+                rng,
+            );
             if block.num_masked() == 0 {
                 continue;
             }
@@ -707,8 +1006,16 @@ impl ClientLogic for LazyNcLogic {
         let mut eval_rng = Rng::seeded(
             self.seed ^ 0xE7A1 ^ round as u64 ^ (self.client as u64).wrapping_mul(0x9E37),
         );
-        let block =
-            lazy_block(&self.g, &self.ranges, 256, self.n_pad, self.e_pad, true, &mut eval_rng);
+        let block = lazy_block(
+            &self.g,
+            &self.ranges,
+            256,
+            self.n_pad,
+            self.e_pad,
+            true,
+            self.fedgcn_stream,
+            &mut eval_rng,
+        );
         if block.num_masked() == 0 {
             return Ok((0.0, 0.0));
         }
@@ -795,10 +1102,27 @@ pub(crate) fn build_nc_lazy(
     slice.check(cfg.n_trainer)?;
     monitor.start("startup");
     let n_nodes = (cfg.scale * 1e8) as u64;
-    let g = papers100m_sim(n_nodes.max(10_000), cfg.seed);
-    let mut rng = Rng::seeded(cfg.seed ^ 0x9A);
+    let g = {
+        let _sp = crate::trace::span("build", "dataset")
+            .arg("format", if cfg.dataset_format == DatasetFormat::V2 { "v2" } else { "v1" });
+        papers100m_sim(n_nodes.max(10_000), cfg.seed)
+    };
+    // v2 keys the init stream instead of deriving it from the shared
+    // sequential stream; the hash-defined graph itself is already keyed.
+    let v2 = cfg.dataset_format == DatasetFormat::V2;
+    let mut rng = if v2 {
+        CounterRng::at(cfg.seed, domains::PARAM_INIT, 0)
+    } else {
+        Rng::seeded(cfg.seed ^ 0x9A)
+    };
+    // FedGCN at papers100m scale never holds the pre-aggregated working
+    // table under v2: each minibatch recomputes its rows from the lazy graph
+    // (streamed chunks), so client state stays O(range table).
+    let fedgcn_stream = v2 && cfg.method == Method::FedGcn;
     monitor.note("task", "NC");
     monitor.note("dataset", format!("papers100m-sim(n={})", g.n));
+    monitor.note("dataset_format", if v2 { "v2" } else { "v1" });
+    monitor.note("fedgcn_stream", fedgcn_stream);
     monitor.note("method", cfg.method.name());
     monitor.note("n_trainer", cfg.n_trainer);
     monitor.note("federation_mode", cfg.federation.mode.name());
@@ -852,6 +1176,7 @@ pub(crate) fn build_nc_lazy(
                 local_steps: cfg.local_steps,
                 learning_rate: cfg.learning_rate,
                 seed: cfg.seed,
+                fedgcn_stream,
             }) as Box<dyn ClientLogic>,
         ));
     }
@@ -861,7 +1186,11 @@ pub(crate) fn build_nc_lazy(
 
 /// Sample a minibatch block from the lazy graph: seeds from the client's
 /// community ranges, one-hop expansion within the client (cross-client stubs
-/// dropped — FedAvg semantics), hash-based 80/20 train/test split.
+/// dropped — FedAvg semantics), hash-based 80/20 train/test split. With
+/// `fedgcn_stream`, each feature row is the 1-hop mean aggregate
+/// `(x_u + Σ_v x_v)/(deg+1)` recomputed from the hash-defined graph — the
+/// FedGCN pre-aggregation streamed per chunk instead of held as a table.
+#[allow(clippy::too_many_arguments)]
 fn lazy_block(
     g: &LazyGraph,
     ranges: &[(u64, u64)],
@@ -869,6 +1198,7 @@ fn lazy_block(
     n_pad: usize,
     e_pad: usize,
     eval_split: bool,
+    fedgcn_stream: bool,
     rng: &mut Rng,
 ) -> Block {
     let total: u64 = ranges.iter().map(|(lo, hi)| hi - lo).sum();
@@ -932,7 +1262,25 @@ fn lazy_block(
         n_pad,
         e_pad,
         g.feat_dim,
-        |i, row| g.feature_into(order[i as usize], row),
+        |i, row| {
+            let u = order[i as usize];
+            g.feature_into(u, row);
+            if fedgcn_stream {
+                let mut tmp = vec![0f32; row.len()];
+                let mut deg = 0u32;
+                for v in g.neighbors(u) {
+                    g.feature_into(v, &mut tmp);
+                    for (a, b) in row.iter_mut().zip(&tmp) {
+                        *a += *b;
+                    }
+                    deg += 1;
+                }
+                let inv = 1.0 / (deg as f32 + 1.0);
+                for a in row.iter_mut() {
+                    *a *= inv;
+                }
+            }
+        },
         |i| g.label(order[i as usize]) as i32,
         |i| if seed_set.contains(&order[i as usize]) { 1.0 } else { 0.0 },
     )
@@ -1038,6 +1386,118 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sliced_v2_plan_equals_full_v2_plan_slice_bitwise() {
+        // The v2 tentpole property: the keyed-generation plan satisfies the
+        // same bitwise slice-equivalence contract as v1 — by construction
+        // (no shared stream exists), but the coverage matrix is identical so
+        // a regression in any keyed law fails here, not in production.
+        let variants: [(Method, usize, usize); 7] = [
+            (Method::FedAvgNC, 0, 1),
+            (Method::FedGcn, 0, 1),
+            (Method::FedGcn, 0, 2),
+            (Method::FedGcn, 4, 1),
+            (Method::FedSagePlus, 0, 1),
+            (Method::DistributedGCN, 0, 1),
+            (Method::BnsGcn, 0, 1),
+        ];
+        for &(method, rank, hops) in &variants {
+            for (n, workers) in [(4usize, 2usize), (5, 3), (4, 7)] {
+                let mut cfg = nc_cfg(method, n, 0xF00D ^ ((n as u64) << 3) ^ (workers as u64));
+                cfg.dataset_format = DatasetFormat::V2;
+                cfg.lowrank_rank = rank;
+                cfg.num_hops = hops;
+                let full = plan_nc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+                assert_eq!(full.clients.iter().flatten().count(), n);
+                for k in 0..workers {
+                    let assigned: Vec<usize> = (0..n).filter(|c| c % workers == k).collect();
+                    let slice = BuildSlice::assigned(n, &assigned).unwrap();
+                    let sliced = plan_nc(&cfg, &mon(), &slice).unwrap();
+                    let tag = format!(
+                        "v2 {method:?} rank={rank} hops={hops} n={n} w={k}/{workers}"
+                    );
+                    assert_eq!(
+                        sliced.clients.iter().flatten().count(),
+                        assigned.len(),
+                        "materialized count must equal the slice: {tag}"
+                    );
+                    assert_eq!(sliced.d_eff, full.d_eff, "{tag}");
+                    assert_eq!(
+                        sliced.node_counts, full.node_counts,
+                        "shared bucket decision must not depend on the slice: {tag}"
+                    );
+                    for c in 0..n {
+                        match (&full.clients[c], &sliced.clients[c]) {
+                            (Some(a), Some(b)) => {
+                                assert!(slice.wants(c), "{tag}");
+                                assert_client_eq(a, b, c);
+                                assert_eq!(
+                                    full.halo_feats[c], sliced.halo_feats[c],
+                                    "client {c} halo feature table: {tag}"
+                                );
+                            }
+                            (Some(_), None) => {
+                                assert!(!slice.wants(c), "client {c} missing: {tag}")
+                            }
+                            (None, _) => panic!("full plan must materialize client {c}: {tag}"),
+                        }
+                    }
+                    let mut fa = full.rng.clone();
+                    let mut fb = sliced.rng.clone();
+                    for _ in 0..8 {
+                        assert_eq!(fa.next_u64(), fb.next_u64(), "keyed init stream: {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn v2_generation_work_scales_with_the_slice() {
+        // The perf half of the tentpole, asserted via the deterministic
+        // generation-work counter (heavy keyed draws), not wall clock: a
+        // worker materializing half the clients does strictly less keyed
+        // generation than a full build, and a worker owning nothing does
+        // none of the per-client heavy work beyond the cheap bookkeeping
+        // passes (which note zero work).
+        use crate::graph::{gen_work, gen_work_reset};
+        for method in
+            [Method::FedAvgNC, Method::FedGcn, Method::DistributedGCN, Method::BnsGcn]
+        {
+            let mut cfg = nc_cfg(method, 4, 0xA11CE);
+            cfg.dataset_format = DatasetFormat::V2;
+            gen_work_reset();
+            plan_nc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+            let full_work = gen_work();
+            assert!(full_work > 0, "{method:?} full build must do keyed generation");
+            gen_work_reset();
+            let slice = BuildSlice::assigned(4, &[0, 2]).unwrap();
+            plan_nc(&cfg, &mon(), &slice).unwrap();
+            let half_work = gen_work();
+            assert!(
+                half_work < full_work,
+                "{method:?} sliced build must generate less: {half_work} vs {full_work}"
+            );
+            assert!(half_work > 0, "{method:?} sliced build still generates its own clients");
+        }
+    }
+
+    #[test]
+    fn v2_plan_reports_empty_bookkeeping_dataset() {
+        // The v2 bookkeeping NCDataset must carry labels + split for every
+        // node (block masks, weights) but no feature table and no global
+        // adjacency — v1 consumers that reach for them fail loudly instead
+        // of silently training on zeros.
+        let mut cfg = nc_cfg(Method::FedAvgNC, 3, 7);
+        cfg.dataset_format = DatasetFormat::V2;
+        let plan = plan_nc(&cfg, &mon(), &BuildSlice::Full).unwrap();
+        assert!(plan.ds.features.is_empty());
+        assert_eq!(plan.ds.graph.adj.len(), 0);
+        assert_eq!(plan.ds.labels.len(), plan.ds.n());
+        assert_eq!(plan.ds.split.len(), plan.ds.n());
+        assert!(plan.ds.labels.iter().any(|&l| l > 0));
     }
 
     #[test]

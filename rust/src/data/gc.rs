@@ -7,8 +7,8 @@
 //! so a GIN on degree features can separate them — which is what the paper's
 //! accuracy axis needs.
 
-use crate::graph::Csr;
-use crate::util::rng::Rng;
+use crate::graph::{gen_work_note, Csr};
+use crate::util::rng::{domains, CounterRng, Rng};
 
 /// One small attributed graph.
 pub struct SmallGraph {
@@ -103,7 +103,7 @@ pub fn gc_spec(name: &str) -> Option<GCSpec> {
 
 /// Generate one dataset at `scale` of its published graph count.
 pub fn generate_gc(spec: &GCSpec, scale: f64, seed: u64) -> GCDataset {
-    let m = ((spec.num_graphs as f64 * scale) as usize).max(20);
+    let m = gc_graph_count(spec, scale);
     let mut rng = Rng::seeded(seed ^ 0x4743_5345); // "GCSE"
     let mut graphs = Vec::with_capacity(m);
     for _ in 0..m {
@@ -120,9 +120,76 @@ pub fn generate_gc(spec: &GCSpec, scale: f64, seed: u64) -> GCDataset {
     }
 }
 
+/// Number of graphs a spec generates at `scale` (shared by v1 and v2).
+pub fn gc_graph_count(spec: &GCSpec, scale: f64) -> usize {
+    ((spec.num_graphs as f64 * scale) as usize).max(20)
+}
+
+/// v2 keyed generation (`dataset_format: v2`): graph `g` is generated from
+/// its own keyed stream, O(size of g) regardless of how many other graphs
+/// exist or who generates them. The first draw is the label, then the
+/// graph body — same in-stream law as v1, so statistics match while the
+/// draws are independent per graph.
+pub fn gc_keyed_graph(spec: &GCSpec, seed: u64, g: u64) -> SmallGraph {
+    let mut rng = CounterRng::at(seed ^ 0x4743_5345, domains::GC_GRAPH, g);
+    let label = rng.below(spec.num_classes) as u16;
+    let out = generate_small_graph(spec, label, &mut rng);
+    // Heavy keyed work: one Bernoulli per node pair.
+    let n = out.csr.n as u64;
+    gen_work_note(n * n.saturating_sub(1) / 2);
+    out
+}
+
+/// v2 cheap probe: graph `g`'s (label, node count) from the first two draws
+/// of its keyed stream, without generating the O(n²) body. Shared with
+/// [`gc_keyed_graph`] (same stream prefix), so the probe is exact — planners
+/// use it for label-skew assignment and artifact-bucket sizing while only
+/// owned graphs are ever generated.
+pub fn gc_keyed_meta(spec: &GCSpec, seed: u64, g: u64) -> (u16, usize) {
+    let mut rng = CounterRng::at(seed ^ 0x4743_5345, domains::GC_GRAPH, g);
+    let label = rng.below(spec.num_classes) as u16;
+    (label, small_graph_nodes(spec, &mut rng))
+}
+
+/// v2 keyed 80/20 split tag for graph `g` (0 train / 2 test).
+pub fn gc_keyed_split(seed: u64, g: u64) -> u8 {
+    if CounterRng::at(seed ^ 0x4743_5345, domains::SPLIT, g).f64() < 0.8 {
+        0
+    } else {
+        2
+    }
+}
+
+/// v2 keyed graph→client assignment (uniform, matching the v1 round-robin
+/// balance law in expectation; O(1) per graph so any worker can decide
+/// ownership of any graph without a global pass).
+pub fn gc_keyed_assign(seed: u64, g: u64, num_clients: usize) -> u32 {
+    CounterRng::at(seed ^ 0x4743_5345, domains::GC_ASSIGN, g).below(num_clients) as u32
+}
+
+/// Materialize a full v2 dataset (tests, golden checksums, full builds).
+pub fn generate_gc_v2(spec: &GCSpec, scale: f64, seed: u64) -> GCDataset {
+    let m = gc_graph_count(spec, scale);
+    let graphs = (0..m as u64).map(|g| gc_keyed_graph(spec, seed, g)).collect();
+    let split = (0..m as u64).map(|g| gc_keyed_split(seed, g)).collect();
+    GCDataset {
+        name: spec.name.to_string(),
+        graphs,
+        feat_dim: GC_FEAT_DIM,
+        num_classes: spec.num_classes,
+        split,
+    }
+}
+
+/// Node count law: ±40% around the average, at least 4 (one draw — the
+/// first after the label in a graph's stream, so [`gc_keyed_meta`] can probe
+/// it without the body).
+fn small_graph_nodes(spec: &GCSpec, rng: &mut Rng) -> usize {
+    ((spec.avg_nodes * (0.6 + 0.8 * rng.f64())).round() as usize).max(4)
+}
+
 fn generate_small_graph(spec: &GCSpec, label: u16, rng: &mut Rng) -> SmallGraph {
-    // Node count: ±40% around the average, at least 4.
-    let n = ((spec.avg_nodes * (0.6 + 0.8 * rng.f64())).round() as usize).max(4);
+    let n = small_graph_nodes(spec, rng);
     let p = (spec.base_density * (1.0 + label as f64 * spec.density_gap)).min(0.9);
     let mut edges = Vec::new();
     for u in 0..n as u32 {
@@ -184,6 +251,52 @@ mod tests {
         let train = ds.train_indices().len() as f64 / ds.graphs.len() as f64;
         assert!((train - 0.8).abs() < 0.05);
         assert_eq!(ds.train_indices().len() + ds.test_indices().len(), ds.graphs.len());
+    }
+
+    #[test]
+    fn keyed_gc_matches_v1_statistics_and_is_independent() {
+        let v1 = generate_gc(&MUTAG, 1.0, 5);
+        let v2 = generate_gc_v2(&MUTAG, 1.0, 5);
+        assert_eq!(v2.graphs.len(), v1.graphs.len());
+        let avg = |ds: &GCDataset| {
+            ds.graphs.iter().map(|g| g.csr.n as f64).sum::<f64>() / ds.graphs.len() as f64
+        };
+        assert!((avg(&v1) - avg(&v2)).abs() < 4.0, "avg sizes {} vs {}", avg(&v1), avg(&v2));
+        let train = v2.train_indices().len() as f64 / v2.graphs.len() as f64;
+        assert!((train - 0.8).abs() < 0.08, "train frac {train}");
+        for g in &v2.graphs {
+            g.csr.validate().unwrap();
+        }
+        // Graph 17 generated alone is bitwise the same as inside the full pass.
+        let alone = gc_keyed_graph(&MUTAG, 5, 17);
+        assert_eq!(alone.csr.adj, v2.graphs[17].csr.adj);
+        assert_eq!(alone.label, v2.graphs[17].label);
+        assert_eq!(alone.features, v2.graphs[17].features);
+    }
+
+    #[test]
+    fn keyed_meta_probe_matches_generated_graph() {
+        for g in 0..50u64 {
+            let (label, n) = gc_keyed_meta(&BZR, 9, g);
+            let full = gc_keyed_graph(&BZR, 9, g);
+            assert_eq!(label, full.label, "graph {g} label probe");
+            assert_eq!(n, full.csr.n, "graph {g} size probe");
+        }
+    }
+
+    #[test]
+    fn keyed_gc_assignment_is_balanced_and_stable() {
+        let counts = {
+            let mut c = [0usize; 4];
+            for g in 0..2000u64 {
+                c[gc_keyed_assign(3, g, 4) as usize] += 1;
+            }
+            c
+        };
+        for &k in &counts {
+            assert!((400..=600).contains(&k), "assign counts {counts:?}");
+        }
+        assert_eq!(gc_keyed_assign(3, 99, 4), gc_keyed_assign(3, 99, 4));
     }
 
     #[test]

@@ -8,8 +8,8 @@
 //! algorithms (STFL, 4D-FED-GNN+) have time structure to use: edges are
 //! split into train (early) and test (late), plus sampled negatives.
 
-use crate::graph::{class_features, planted_graph, Csr, PlantedSpec};
-use crate::util::rng::Rng;
+use crate::graph::{class_features, gen_work_note, planted_graph, Csr, PlantedSpec};
+use crate::util::rng::{domains, CounterRng, Rng};
 
 /// One country's region data.
 pub struct RegionData {
@@ -65,6 +65,45 @@ pub fn generate_lp(countries: &[&str], scale: f64, seed: u64) -> LPDataset {
         .iter()
         .map(|c| generate_region(c, scale, &mut rng))
         .collect::<Vec<_>>();
+    LPDataset {
+        name: countries.join("+"),
+        regions,
+        feat_dim: LP_FEAT_DIM,
+    }
+}
+
+/// v2 keyed per-region generation (`dataset_format: v2`).
+///
+/// Each region is generated from its own keyed stream, keyed by *country
+/// code* rather than by position in the config list — "BR" is the same
+/// region data whether it appears in {US,BR} or {BR} alone, and a worker
+/// owning only region 3 of a 5-country run generates only that region.
+/// The region's internal draws (including the data-dependent number of
+/// rejection-sampled negatives) stay inside its private stream, so no
+/// replay or skip is needed to reach any region.
+pub fn lp_keyed_region(country: &str, scale: f64, seed: u64) -> RegionData {
+    let mut rng =
+        CounterRng::at(seed ^ 0x4C50_5345, domains::LP_REGION, country_entity(country));
+    let out = generate_region(country, scale, &mut rng);
+    // Heavy keyed work: edges + per-node feature rows.
+    gen_work_note(out.graph.num_edges() as u64 + (out.graph.n * LP_FEAT_DIM) as u64);
+    out
+}
+
+/// Stable entity id for a country code (FNV-1a over the canonical
+/// upper-case bytes) — the counter that keys the region's stream.
+fn country_entity(country: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for b in country.trim().to_uppercase().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Materialize a full v2 dataset (tests, golden checksums, full builds).
+pub fn generate_lp_v2(countries: &[&str], scale: f64, seed: u64) -> LPDataset {
+    let regions = countries.iter().map(|c| lp_keyed_region(c, scale, seed)).collect();
     LPDataset {
         name: countries.join("+"),
         regions,
@@ -149,6 +188,38 @@ mod tests {
         }
         // US larger than BR
         assert!(ds.regions[0].graph.n > ds.regions[1].graph.n);
+    }
+
+    #[test]
+    fn keyed_region_is_config_independent() {
+        // BR generated inside {US,BR} == BR generated alone: the keyed
+        // stream depends only on (seed, country), never on siblings.
+        let pair = generate_lp_v2(&["US", "BR"], 0.1, 11);
+        let alone = generate_lp_v2(&["BR"], 0.1, 11);
+        let a = &pair.regions[1];
+        let b = &alone.regions[0];
+        assert_eq!(a.graph.adj, b.graph.adj);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.train_edges, b.train_edges);
+        assert_eq!(a.test_pos, b.test_pos);
+        assert_eq!(a.test_neg, b.test_neg);
+    }
+
+    #[test]
+    fn keyed_region_matches_v1_shape() {
+        let v1 = generate_lp(&["US", "BR"], 0.1, 1);
+        let v2 = generate_lp_v2(&["US", "BR"], 0.1, 1);
+        assert_eq!(v2.regions.len(), 2);
+        for (a, b) in v1.regions.iter().zip(&v2.regions) {
+            assert_eq!(a.graph.n, b.graph.n);
+            b.graph.validate().unwrap();
+            assert_eq!(b.features.len(), b.graph.n * LP_FEAT_DIM);
+            assert_eq!(b.test_pos.len(), b.test_neg.len());
+            assert!(!b.test_pos.is_empty());
+            let e1 = a.graph.num_edges() as f64;
+            let e2 = b.graph.num_edges() as f64;
+            assert!((e1 - e2).abs() / e1 < 0.25, "edges v1={e1} v2={e2}");
+        }
     }
 
     #[test]

@@ -1,10 +1,25 @@
 //! Dataset registry: statistics-matched synthetic counterparts of every
 //! dataset in the paper's Table 4, plus the partition helpers the tasks use.
+//!
+//! Each task module ships two generation laws selected by the config's
+//! `dataset_format`: v1 (sequential stream, bitwise-pinned legacy default)
+//! and v2 (counter-based keyed streams — any entity's data is computable
+//! O(local) from `(seed, entity id)`, so sliced workers generate only what
+//! they own).
 
 pub mod gc;
 pub mod lp;
 pub mod nc;
 
-pub use gc::{gc_spec, gc_specs, generate_gc, GCDataset, GCSpec, SmallGraph, GC_FEAT_DIM};
-pub use lp::{generate_lp, region_config, LPDataset, RegionData, LP_FEAT_DIM};
-pub use nc::{generate_nc, nc_spec, nc_specs, papers100m_sim, NCDataset, NCSpec};
+pub use gc::{
+    gc_graph_count, gc_keyed_assign, gc_keyed_graph, gc_keyed_meta, gc_keyed_split, gc_spec,
+    gc_specs, generate_gc, generate_gc_v2, GCDataset, GCSpec, SmallGraph, GC_FEAT_DIM,
+};
+pub use lp::{
+    generate_lp, generate_lp_v2, lp_keyed_region, region_config, LPDataset, RegionData,
+    LP_FEAT_DIM,
+};
+pub use nc::{
+    generate_nc, keyed_he_ctx_seed, nc_spec, nc_specs, papers100m_sim, NCDataset, NCKeyedView,
+    NCSpec,
+};

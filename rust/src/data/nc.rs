@@ -8,8 +8,8 @@
 //! fast tests while keeping feature/class dimensions — communication per
 //! node is unchanged.
 
-use crate::graph::{class_features, planted_graph, Csr, LazyGraph, PlantedSpec};
-use crate::util::rng::Rng;
+use crate::graph::{class_features, planted_graph, Csr, KeyedPlanted, LazyGraph, PlantedSpec};
+use crate::util::rng::{domains, CounterRng, Rng};
 
 /// A materialized node-classification dataset.
 pub struct NCDataset {
@@ -149,6 +149,131 @@ pub fn generate_nc(spec: &NCSpec, scale: f64, seed: u64) -> NCDataset {
     }
 }
 
+/// v2 keyed dataset view (`dataset_format: v2`).
+///
+/// Any node's label, feature row, adjacency stubs and split tag are
+/// computable O(local) from `(seed, node id)` — no sequential stream, no
+/// replay, no skip. The coordinator and every worker construct the same
+/// view from the config seed and materialize only their assigned slice;
+/// a sliced build is bitwise-identical to the matching slice of a full
+/// build by construction.
+///
+/// The per-class feature prototypes (`num_classes × feat_dim` floats) are
+/// the only eagerly materialized state; they are shared by all nodes and
+/// independent of the assignment.
+pub struct NCKeyedView {
+    pub name: String,
+    pub keyed: KeyedPlanted,
+    pub feat_dim: usize,
+    pub signal: f32,
+    seed: u64,
+    protos: Vec<f32>,
+}
+
+impl NCKeyedView {
+    /// Build the view for `spec` at `scale`. Uses the same per-dataset seed
+    /// derivation as v1 (`seed ^ "NCSEED"`) but a keyed generation law, so
+    /// v1 and v2 datasets are statistically matched, not bitwise-equal.
+    pub fn new(spec: &NCSpec, scale: f64, seed: u64) -> NCKeyedView {
+        assert!(scale > 0.0 && scale <= 1.0);
+        let n = ((spec.n as f64 * scale) as usize).max(64);
+        let derived = seed ^ 0x4E43_5345_4544; // "NCSEED"
+        let planted = PlantedSpec {
+            n,
+            num_classes: spec.num_classes,
+            mean_degree: spec.mean_degree,
+            homophily: spec.homophily,
+            degree_skew: 2.5,
+        };
+        let keyed = KeyedPlanted::new(planted, derived);
+        let protos = keyed.protos(spec.feat_dim);
+        NCKeyedView {
+            name: spec.name.to_string(),
+            keyed,
+            feat_dim: spec.feat_dim,
+            signal: spec.signal,
+            seed: derived,
+            protos,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.keyed.spec.n
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.keyed.spec.num_classes
+    }
+
+    pub fn label(&self, u: u32) -> u16 {
+        self.keyed.label(u as usize)
+    }
+
+    /// Split tag: 0 = train, 1 = val, 2 = test (same 60/20/20 law as v1,
+    /// decided per node instead of from a shared stream).
+    pub fn split_of(&self, u: u32) -> u8 {
+        let r = self.keyed.split_tag(u as usize);
+        if r < 0.6 {
+            0
+        } else if r < 0.8 {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Out-stub adjacency row for `u` (see [`KeyedPlanted::stubs`]).
+    pub fn stubs(&self, u: u32) -> Vec<u32> {
+        self.keyed.stubs(u as usize)
+    }
+
+    pub fn stub_count(&self, u: u32) -> usize {
+        self.keyed.stub_count(u as usize)
+    }
+
+    pub fn feature_into(&self, u: u32, buf: &mut [f32]) {
+        self.keyed.feature_into(u as usize, &self.protos, self.signal, buf);
+    }
+
+    /// Seed for downstream keyed draws tied to this dataset (partition,
+    /// halo sampling, parameter init).
+    pub fn derived_seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Materialize the full dataset (tests, golden checksums, small-scale
+    /// full builds). O(n) — not used on the sliced worker path.
+    pub fn materialize(&self) -> NCDataset {
+        let n = self.n();
+        let graph = self.keyed.to_csr();
+        let mut features = vec![0f32; n * self.feat_dim];
+        for u in 0..n as u32 {
+            let row =
+                &mut features[u as usize * self.feat_dim..(u as usize + 1) * self.feat_dim];
+            self.feature_into(u, row);
+        }
+        let labels = (0..n as u32).map(|u| self.label(u)).collect();
+        let split = (0..n as u32).map(|u| self.split_of(u)).collect();
+        NCDataset {
+            name: self.name.clone(),
+            graph,
+            features,
+            feat_dim: self.feat_dim,
+            labels,
+            num_classes: self.num_classes(),
+            split,
+        }
+    }
+}
+
+/// v2 keyed FedGCN homomorphic-encryption context seed for `(hop, client)`
+/// — replaces the v1 sequential per-hop draw so workers can derive their
+/// context without replaying the coordinator's stream. Forced odd, matching
+/// the v1 convention for HE context seeds.
+pub fn keyed_he_ctx_seed(dataset_seed: u64, hop: u64, client: u64) -> u64 {
+    CounterRng::at2(dataset_seed, domains::HE_CTX, hop, client).next_u64() | 1
+}
+
 /// The lazy 100M-node dataset (paper §5.3). Default parameters follow
 /// Ogbn-Papers100M: 111M nodes, 128 features, 172 classes; `n` is
 /// configurable so tests and benches can run the identical code path at
@@ -203,6 +328,53 @@ mod tests {
         assert_eq!(nc_spec("cora").unwrap().name, "cora-sim");
         assert_eq!(nc_spec("Cora-Sim").unwrap().n, 2708);
         assert!(nc_spec("unknown").is_none());
+    }
+
+    #[test]
+    fn keyed_view_matches_v1_statistics() {
+        let v1 = generate_nc(&CORA, 0.25, 7);
+        let view = NCKeyedView::new(&CORA, 0.25, 7);
+        assert_eq!(view.n(), v1.n());
+        assert_eq!(view.num_classes(), 7);
+        let ds = view.materialize();
+        ds.graph.validate().unwrap();
+        let d1 = 2.0 * v1.graph.num_edges() as f64 / v1.n() as f64;
+        let d2 = 2.0 * ds.graph.num_edges() as f64 / ds.n() as f64;
+        assert!((d1 - d2).abs() < 2.0, "mean degree v1={d1} v2={d2}");
+        let train = ds.split.iter().filter(|&&s| s == 0).count() as f64 / ds.n() as f64;
+        assert!((train - 0.6).abs() < 0.08, "train frac {train}");
+    }
+
+    #[test]
+    fn keyed_view_is_slice_independent() {
+        let view = NCKeyedView::new(&CORA, 0.1, 3);
+        let u = 42u32;
+        let mut a = vec![0f32; view.feat_dim];
+        view.feature_into(u, &mut a);
+        let stubs_a = view.stubs(u);
+        // Touch unrelated nodes, then recompute: keyed draws must not move.
+        for w in 0..30u32 {
+            let _ = view.stubs(w);
+            let mut tmp = vec![0f32; view.feat_dim];
+            view.feature_into(w, &mut tmp);
+        }
+        let mut b = vec![0f32; view.feat_dim];
+        view.feature_into(u, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(stubs_a, view.stubs(u));
+        assert_eq!(view.label(u), view.label(u));
+    }
+
+    #[test]
+    fn keyed_he_ctx_seed_is_odd_and_keyed() {
+        let a = keyed_he_ctx_seed(9, 0, 0);
+        let b = keyed_he_ctx_seed(9, 0, 1);
+        let c = keyed_he_ctx_seed(9, 1, 0);
+        assert_eq!(a % 2, 1);
+        assert_eq!(b % 2, 1);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, keyed_he_ctx_seed(9, 0, 0));
     }
 
     #[test]

@@ -10,12 +10,15 @@ pub mod subgraph;
 
 pub use block::{block_from_induced, sample_neighborhood, Block};
 pub use csr::Csr;
-pub use generate::{class_features, planted_graph, LazyGraph, PlantedSpec};
+pub use generate::{
+    class_features, gen_work, gen_work_note, gen_work_reset, planted_graph, KeyedPlanted,
+    LazyGraph, PlantedSpec,
+};
 pub use partition::{
-    dirichlet_partition, group_partition, label_skew, powerlaw_partition, random_partition,
-    Partition,
+    dirichlet_partition, group_partition, keyed_assign_of, keyed_dirichlet_partition,
+    keyed_dirichlet_props, label_skew, powerlaw_partition, random_partition, Partition,
 };
 pub use subgraph::{
-    build_local_graph, build_local_graphs, halo_count, local_neighbor_contribution,
-    neighbor_feature_sums, LocalGraph,
+    build_local_graph, build_local_graph_keyed, build_local_graphs, halo_count,
+    local_neighbor_contribution, neighbor_feature_sums, LocalGraph,
 };

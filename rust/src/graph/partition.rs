@@ -9,7 +9,7 @@
 //! - **Region partition** — the LP task gives each client one country's
 //!   check-in data (Fig 10).
 
-use crate::util::rng::Rng;
+use crate::util::rng::{domains, CounterRng, Rng};
 
 /// A node→client assignment plus its inverse.
 #[derive(Clone, Debug)]
@@ -103,6 +103,51 @@ pub fn dirichlet_partition(
             start = end;
         }
     }
+    Partition::from_assignment(num_clients, assign)
+}
+
+/// Dataset-format **v2** Dirichlet label-skew partition, fully keyed: the
+/// per-class client proportions are one [`CounterRng`] draw per class
+/// ([`domains::PART_CLASS`]) and every node's client is one categorical
+/// draw from its own stream ([`domains::PART_NODE`]) against its label's
+/// proportions. No shared stream, no shuffle: `keyed_assign_of(u)` is O(1)
+/// given the proportions table, so a sliced build can answer "who owns node
+/// v?" for any halo node without touching the rest of the graph — and the
+/// O(n) `members` scan is pure bookkeeping (one cheap hash per node, no
+/// generation work).
+///
+/// Statistically this matches the v1 shuffle-and-cut construction: both give
+/// each class Dir(β) client proportions; v2 realizes them multinomially
+/// instead of by exact cuts (the same law the β knob is quoted for).
+pub fn keyed_dirichlet_props(
+    seed: u64,
+    num_classes: usize,
+    num_clients: usize,
+    beta: f64,
+) -> Vec<Vec<f64>> {
+    (0..num_classes)
+        .map(|c| CounterRng::at(seed, domains::PART_CLASS, c as u64).dirichlet(beta, num_clients))
+        .collect()
+}
+
+/// The owning client of node `u` under the keyed v2 partition — a pure
+/// function of `(seed, u, label)` given the per-class proportions.
+#[inline]
+pub fn keyed_assign_of(seed: u64, u: usize, label: u16, props: &[Vec<f64>]) -> u32 {
+    CounterRng::at(seed, domains::PART_NODE, u as u64).categorical(&props[label as usize]) as u32
+}
+
+/// Materialize the keyed v2 partition for all `n` nodes (the bookkeeping
+/// pass every build performs; `labels_of` is the dataset's O(1) label rule).
+pub fn keyed_dirichlet_partition(
+    seed: u64,
+    n: usize,
+    num_clients: usize,
+    props: &[Vec<f64>],
+    labels_of: impl Fn(usize) -> u16,
+) -> Partition {
+    let assign: Vec<u32> =
+        (0..n).map(|u| keyed_assign_of(seed, u, labels_of(u), props)).collect();
     Partition::from_assignment(num_clients, assign)
 }
 
@@ -215,5 +260,45 @@ mod tests {
         let p = group_partition(&groups, 3);
         p.validate(5).unwrap();
         assert_eq!(p.members[1], vec![1, 2]);
+    }
+
+    #[test]
+    fn keyed_dirichlet_matches_v1_law() {
+        let labels: Vec<u16> = (0..2000).map(|i| (i % 7) as u16).collect();
+        // High β: balanced and near-IID, like the v1 partitioner.
+        let props = keyed_dirichlet_props(5, 7, 10, 10_000.0);
+        let p = keyed_dirichlet_partition(5, 2000, 10, &props, |u| labels[u]);
+        p.validate(2000).unwrap();
+        let sizes = p.sizes();
+        let (min, max) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        assert!(max < 2 * min.max(1), "IID split should be balanced: {sizes:?}");
+        let skew = label_skew(&p, &labels, 7);
+        for dist in skew {
+            for pr in dist {
+                assert!((pr - 1.0 / 7.0).abs() < 0.1, "non-IID under beta=1e4: {pr}");
+            }
+        }
+        // Low β: at least one client dominated by one class.
+        let props = keyed_dirichlet_props(6, 7, 10, 0.1);
+        let p = keyed_dirichlet_partition(6, 2000, 10, &props, |u| labels[u]);
+        p.validate(2000).unwrap();
+        let max_frac = label_skew(&p, &labels, 7)
+            .iter()
+            .filter(|d| !d.iter().all(|&x| x == 0.0))
+            .map(|d| d.iter().cloned().fold(0.0, f64::max))
+            .fold(0.0, f64::max);
+        assert!(max_frac > 0.5, "expected skew, got max frac {max_frac}");
+    }
+
+    #[test]
+    fn keyed_assignment_is_pointwise_stable() {
+        // assign_of(u) computed alone equals the full-partition pass — the
+        // O(1) halo-ownership lookup the sliced v2 builds rely on.
+        let props = keyed_dirichlet_props(9, 4, 6, 0.5);
+        let labels_of = |u: usize| (u % 4) as u16;
+        let p = keyed_dirichlet_partition(9, 500, 6, &props, labels_of);
+        for u in (0..500).step_by(17) {
+            assert_eq!(p.assign[u], keyed_assign_of(9, u, labels_of(u), &props));
+        }
     }
 }

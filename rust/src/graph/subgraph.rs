@@ -135,6 +135,77 @@ pub fn build_local_graph(global: &Csr, part: &Partition, client: u32) -> LocalGr
     LocalGraph { client, owned, halo, index, csr, internal_edges: internal, cross_edges: cross }
 }
 
+/// Dataset-format **v2** local view: build one client's [`LocalGraph`]
+/// directly from *keyed* per-node adjacency rows, touching only the client's
+/// owned nodes — no global CSR exists, and nothing outside
+/// `owned ∪ halo(owned)` is ever generated.
+///
+/// `assign_of` answers global ownership in O(1) (the keyed partition rule);
+/// `row_of` yields a node's out-stub targets (duplicates/self-stubs allowed —
+/// normalized here and by the CSR build). The local view is the symmetrized
+/// union of the owned rows, matching the [`crate::graph::LazyGraph`] stance
+/// that a client knows the edges its own nodes initiate. Because every row
+/// is a pure function of the node id, the result is bitwise-identical
+/// whether this client is built inside a full session or alone in a slice.
+///
+/// Edge bookkeeping mirrors the stub view: `internal_edges` counts owned→
+/// owned stubs (each undirected edge once per initiating stub, pre-dedup),
+/// `cross_edges` counts owned→other stubs.
+pub fn build_local_graph_keyed(
+    client: u32,
+    owned: &[u32],
+    assign_of: impl Fn(u32) -> u32,
+    mut row_of: impl FnMut(u32) -> Vec<u32>,
+) -> LocalGraph {
+    debug_assert!(owned.windows(2).all(|w| w[0] < w[1]), "owned must be sorted");
+    let rows: Vec<(u32, Vec<u32>)> = owned.iter().map(|&u| (u, row_of(u))).collect();
+    let mut halo: Vec<u32> = Vec::new();
+    let mut internal = 0usize;
+    let mut cross = 0usize;
+    for (u, row) in &rows {
+        for &v in row {
+            if v == *u {
+                continue;
+            }
+            if assign_of(v) == client {
+                internal += 1;
+            } else {
+                cross += 1;
+                halo.push(v);
+            }
+        }
+    }
+    halo.sort_unstable();
+    halo.dedup();
+    let mut index = HashMap::with_capacity(owned.len() + halo.len());
+    for (i, &u) in owned.iter().enumerate() {
+        index.insert(u, i as u32);
+    }
+    for (i, &u) in halo.iter().enumerate() {
+        index.insert(u, (owned.len() + i) as u32);
+    }
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(internal + cross);
+    for (u, row) in &rows {
+        let lu = index[u];
+        for &v in row {
+            if v == *u {
+                continue;
+            }
+            edges.push((lu, index[&v]));
+        }
+    }
+    let csr = Csr::from_edges(owned.len() + halo.len(), &edges);
+    LocalGraph {
+        client,
+        owned: owned.to_vec(),
+        halo,
+        index,
+        csr,
+        internal_edges: internal,
+        cross_edges: cross,
+    }
+}
+
 /// Number of distinct halo nodes `client`'s local view would carry, without
 /// building the view (no index map, no local CSR, no feature copies).
 ///
@@ -264,6 +335,32 @@ mod tests {
         }
         for (a, b) in acc.iter().zip(&global_sums) {
             assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn keyed_local_graph_is_slice_independent() {
+        // Rows are a pure function of the node id; building client 0's view
+        // alone must equal building it alongside every other client.
+        let rows = |u: u32| -> Vec<u32> {
+            // tiny deterministic stub rule over 6 nodes
+            vec![(u + 1) % 6, (u + 3) % 6]
+        };
+        let assign = |v: u32| v / 3; // {0,1,2} vs {3,4,5}
+        let alone = build_local_graph_keyed(0, &[0, 1, 2], assign, rows);
+        let _other = build_local_graph_keyed(1, &[3, 4, 5], assign, rows);
+        let again = build_local_graph_keyed(0, &[0, 1, 2], assign, rows);
+        assert_eq!(alone.owned, again.owned);
+        assert_eq!(alone.halo, again.halo);
+        assert_eq!(alone.csr.adj, again.csr.adj);
+        assert_eq!(alone.csr.offsets, again.csr.offsets);
+        assert_eq!(alone.internal_edges, again.internal_edges);
+        assert_eq!(alone.cross_edges, again.cross_edges);
+        alone.csr.validate().unwrap();
+        // halo = cross targets of owned rows: 0->3, 1->4, 2->3,5
+        assert_eq!(alone.halo, vec![3, 4, 5]);
+        for &u in alone.owned.iter().chain(&alone.halo) {
+            assert_eq!(alone.global_of(alone.index[&u]), u);
         }
     }
 

@@ -14,7 +14,8 @@
 use std::process::ExitCode;
 
 use fedgraph::config::{
-    CompressionMode, FedGraphConfig, FederationMode, Method, PrivacyMode, Task, TransportKind,
+    CompressionMode, DatasetFormat, FedGraphConfig, FederationMode, Method, PrivacyMode, Task,
+    TransportKind,
 };
 use fedgraph::data;
 use fedgraph::he::{CkksParams, DpParams};
@@ -47,6 +48,7 @@ fn print_help() {
          \x20     [--rounds N] [--trainers M] [--local-steps K] [--lr F]\n\
          \x20     [--scale S] [--beta B] [--batch-size B] [--he] [--dp]\n\
          \x20     [--lowrank K] [--hops H] [--sample-ratio R] [--seed S]\n\
+         \x20     [--dataset-format v1|v2]\n\
          \x20     [--concurrency K] [--dropout F] [--straggler-ms MS]\n\
          \x20     [--mode sync|async] [--max-staleness N] [--buffer-size N]\n\
          \x20     [--agg-shards N]\n\
@@ -58,6 +60,11 @@ fn print_help() {
          \x20     trainer actors, codec, sockets, workers) and writes Chrome\n\
          \x20     trace-event JSON loadable in Perfetto; the run itself is\n\
          \x20     bitwise-identical to an untraced one\n\
+         \x20     --dataset-format v1 (default) keeps the sequential-stream\n\
+         \x20     generators; v2 switches to counter-based keyed generation\n\
+         \x20     so each worker generates only its assigned slice\n\
+         \x20     (O(assigned nodes) startup work and memory). The two\n\
+         \x20     formats are statistically matched but bitwise different.\n\
          \x20     --compression pack is lossless and bitwise-identical to\n\
          \x20     none (only measured wire bytes shrink); quantized is a\n\
          \x20     lossy int8/int4 upload-delta codec (plaintext/DP only)\n\
@@ -206,6 +213,9 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--seed") {
         cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--dataset-format") {
+        cfg.dataset_format = DatasetFormat::parse(v)?;
     }
     if let Some(v) = flag_value(args, "--concurrency") {
         cfg.federation.max_concurrency = v.parse()?;

@@ -40,7 +40,14 @@ impl Rng {
 
     /// Derive an independent child generator (for per-client / per-dataset
     /// streams that must not correlate with the parent).
+    ///
+    /// Forking drops any half-consumed Box-Muller pair: the cached second
+    /// variate belongs to the pre-fork draw sequence, and letting it leak
+    /// into the parent's post-fork normals would make the parent's stream
+    /// depend on *when* the fork happened rather than on how many draws it
+    /// consumed.
     pub fn fork(&mut self, tag: u64) -> Rng {
+        self.cached_normal = None;
         Rng::seeded(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
@@ -233,18 +240,101 @@ impl Rng {
 
     /// Advance the stream past `n` draws without materializing them —
     /// state-identical to calling [`Rng::next_u64`] (or any single-draw
-    /// distribution such as [`Rng::f64`] / [`Rng::chance`]) `n` times.
+    /// distribution such as [`Rng::f64`] / [`Rng::chance`]) `n` times, with
+    /// any half-consumed Box-Muller pair dropped.
     ///
-    /// Sliced session builds use this to step the shared setup stream past a
-    /// skipped client's draws: the skip costs a few word ops per draw and no
-    /// allocation, while the stream stays bitwise-aligned with a full build.
-    /// The Box-Muller cache is untouched, so `skip` models uniform-path draws
-    /// only; paths that consume cached normals must replay real calls.
+    /// v1 sliced session builds use this to step the shared setup stream past
+    /// a skipped client's draws: the skip costs a few word ops per draw and
+    /// no allocation, while the stream stays bitwise-aligned with a full
+    /// build. Clearing the normal cache is part of the contract: a skip
+    /// landing between a Box-Muller pair would otherwise hand the *stale*
+    /// second variate to the first post-skip `normal()`, silently desyncing
+    /// the skip path from an honest discarded-draw replay. `skip` models
+    /// uniform-path draws only; paths that consume normals must replay real
+    /// calls. Dataset-format v2 retires this shim entirely — every entity
+    /// draws from its own [`CounterRng`] stream, so there is nothing to skip.
     pub fn skip(&mut self, n: usize) {
+        self.cached_normal = None;
         for _ in 0..n {
             self.next_u64();
         }
     }
+}
+
+/// Counter-based, splittable keying for dataset-format **v2**: every entity
+/// (node, edge stub, graph, region, halo draw, hop×client HE context, …)
+/// gets an independent [`Rng`] stream derived *positionally* from
+/// `(seed, domain, entity_id)` — no shared sequential stream, so a sliced
+/// build draws **nothing** for entities it does not own (no replay, no
+/// [`Rng::skip`]), and a full build and any slice of it are bitwise
+/// identical by construction.
+///
+/// The keying is two rounds of the SplitMix64 finalizer (Philox-style:
+/// mix, then re-mix keyed by the first round), extending the
+/// [`hash_u64`]/[`hash_f32`] precedent the lazy papers100m graph already
+/// uses. `at` is O(1): the "counter" is the entity id itself, so splitting
+/// the generation space across workers costs no stream arithmetic at all.
+pub struct CounterRng;
+
+impl CounterRng {
+    /// The 64-bit key for `(seed, domain, entity)` — two finalizer rounds so
+    /// structured entity ids (small integers, packed pairs) decorrelate.
+    #[inline]
+    pub fn key(seed: u64, domain: u64, entity: u64) -> u64 {
+        let r1 = hash_u64(seed, domain, entity);
+        hash_u64(r1, entity.rotate_left(32) ^ 0xA076_1D64_78BD_642F, domain)
+    }
+
+    /// An independent generator for `(seed, domain, entity)`. Streams for
+    /// different entities (or domains, or seeds) never share state.
+    #[inline]
+    pub fn at(seed: u64, domain: u64, entity: u64) -> Rng {
+        Rng::seeded(Self::key(seed, domain, entity))
+    }
+
+    /// A generator keyed by an entity *pair* (e.g. `(client, node)` halo
+    /// draws, `(hop, client)` HE contexts) — the pair is packed into one
+    /// entity id without collisions for the sub-2^32 index ranges the
+    /// generators use.
+    #[inline]
+    pub fn at2(seed: u64, domain: u64, a: u64, b: u64) -> Rng {
+        Rng::seeded(Self::key(seed, domain, (a << 32) ^ a ^ b.rotate_left(17)))
+    }
+}
+
+/// Domain separators for [`CounterRng`] — one per independently keyed
+/// generation axis of the v2 dataset format. Values are arbitrary but
+/// **pinned**: changing any of them is a bitwise-breaking change to every
+/// v2 dataset and must bump the dataset format.
+pub mod domains {
+    /// Per-node degree draw (planted graphs).
+    pub const DEGREE: u64 = 0x7632_0001;
+    /// Per-(node, stub) edge-target draws.
+    pub const EDGE: u64 = 0x7632_0002;
+    /// Per-class feature-prototype draws.
+    pub const PROTO: u64 = 0x7632_0003;
+    /// Per-node feature-noise stream.
+    pub const FEATURE: u64 = 0x7632_0004;
+    /// Per-node train/val/test split draw.
+    pub const SPLIT: u64 = 0x7632_0005;
+    /// Per-class Dirichlet partition proportions.
+    pub const PART_CLASS: u64 = 0x7632_0006;
+    /// Per-node client-assignment draw.
+    pub const PART_NODE: u64 = 0x7632_0007;
+    /// Per-(client, halo-node) keep/drop draw (DistributedGCN / BNS-GCN).
+    pub const HALO_KEEP: u64 = 0x7632_0008;
+    /// Per-(hop, client) HE context seeds (FedGCN pre-train).
+    pub const HE_CTX: u64 = 0x7632_0009;
+    /// Per-graph GC generation stream (size, edges, features, label, split).
+    pub const GC_GRAPH: u64 = 0x7632_000A;
+    /// Per-graph GC client-assignment draw.
+    pub const GC_ASSIGN: u64 = 0x7632_000B;
+    /// Per-region LP generation stream (planted graph, times, negatives).
+    pub const LP_REGION: u64 = 0x7632_000C;
+    /// Global model parameter initialization stream.
+    pub const PARAM_INIT: u64 = 0x7632_000D;
+    /// FedSage+ per-client generator fits.
+    pub const FEDSAGE: u64 = 0x7632_000E;
 }
 
 /// Stateless hash-based randomness for *lazy* datasets (papers100m-sim):
@@ -387,6 +477,84 @@ mod tests {
             chanced.chance(0.5);
         }
         assert_eq!(skipped.next_u64(), chanced.next_u64());
+        // A skip landing between a Box-Muller pair: both streams draw one
+        // normal (leaving the pair's second half cached), then one skips
+        // while the other discards real draws. The skip drops the stale
+        // cached half, so the next normal() on both sides must come fresh
+        // from the (aligned) uniform stream — the replay side models this by
+        // dropping its cache too, which is exactly what skip() does for it.
+        let mut skipped = Rng::seeded(23);
+        let mut drawn = Rng::seeded(23);
+        assert_eq!(skipped.normal().to_bits(), drawn.normal().to_bits());
+        assert!(skipped.cached_normal.is_some(), "pair half must be cached");
+        skipped.skip(10);
+        assert!(skipped.cached_normal.is_none(), "skip must drop the cache");
+        for _ in 0..10 {
+            drawn.next_u64();
+        }
+        drawn.cached_normal = None;
+        assert_eq!(skipped.normal().to_bits(), drawn.normal().to_bits());
+        assert_eq!(skipped.next_u64(), drawn.next_u64());
+        // skip(0) is not a no-op on the cache: the contract is "no pending
+        // pair after a skip", whatever its length.
+        let mut r = Rng::seeded(24);
+        r.normal();
+        r.skip(0);
+        assert!(r.cached_normal.is_none());
+    }
+
+    #[test]
+    fn fork_drops_pending_normal_pair() {
+        // The parent's post-fork normal stream must depend only on how many
+        // draws the fork consumed, not on a stale pre-fork cached variate.
+        let mut forked = Rng::seeded(31);
+        let mut plain = Rng::seeded(31);
+        forked.normal();
+        plain.normal();
+        let _child = forked.fork(7);
+        assert!(forked.cached_normal.is_none(), "fork must drop the cache");
+        plain.cached_normal = None;
+        plain.next_u64(); // fork consumed exactly one draw from the parent
+        assert_eq!(forked.normal().to_bits(), plain.normal().to_bits());
+    }
+
+    #[test]
+    fn counter_rng_is_keyed_and_independent() {
+        // Same key -> same stream; any coordinate change -> a different one.
+        let mut r1 = CounterRng::at(42, domains::FEATURE, 7);
+        let mut r2 = CounterRng::at(42, domains::FEATURE, 7);
+        for _ in 0..64 {
+            assert_eq!(r1.next_u64(), r2.next_u64());
+        }
+        let mut by_entity = CounterRng::at(42, domains::FEATURE, 8);
+        let mut by_domain = CounterRng::at(42, domains::SPLIT, 7);
+        let mut by_seed = CounterRng::at(43, domains::FEATURE, 7);
+        let mut base = CounterRng::at(42, domains::FEATURE, 7);
+        let mut collisions = 0;
+        for _ in 0..64 {
+            let x = base.next_u64();
+            collisions += usize::from(x == by_entity.next_u64());
+            collisions += usize::from(x == by_domain.next_u64());
+            collisions += usize::from(x == by_seed.next_u64());
+        }
+        assert!(collisions < 2, "keyed streams must decorrelate");
+        // at2 packs pairs without obvious aliasing.
+        assert_ne!(
+            CounterRng::at2(1, domains::HALO_KEEP, 2, 3).next_u64(),
+            CounterRng::at2(1, domains::HALO_KEEP, 3, 2).next_u64(),
+        );
+    }
+
+    #[test]
+    fn counter_rng_adjacent_entities_decorrelate() {
+        // Structured ids (0, 1, 2, ...) are the common case: their streams'
+        // unit-interval draws must look iid across entities.
+        let n = 40_000;
+        let mean = (0..n)
+            .map(|e| CounterRng::at(9, domains::DEGREE, e).f64())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
     }
 
     #[test]

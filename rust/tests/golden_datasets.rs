@@ -1,0 +1,155 @@
+//! Golden dataset checksums for both dataset formats. No artifacts needed.
+//!
+//! `dataset_format: v2` is a bitwise-breaking change to generated datasets,
+//! so both laws are pinned: the first run records
+//! `tests/golden/dataset_checksums.json` (snapshot-style — commit it), and
+//! every later run fails if any checksum drifts. The v1 entries guard the
+//! legacy default against accidental drift from the keyed-RNG refactor; the
+//! v2 entries pin the new keyed law so cross-version workers can trust
+//! bitwise slice equivalence. To intentionally re-pin after a deliberate
+//! generator change, delete the JSON and re-run.
+
+use std::path::PathBuf;
+
+use fedgraph::data::{
+    gc_spec, generate_gc, generate_gc_v2, generate_lp, generate_lp_v2, generate_nc, nc_spec,
+    GCDataset, LPDataset, NCDataset, NCKeyedView,
+};
+use fedgraph::transport::serialize::fnv1a;
+
+fn push_u16s(buf: &mut Vec<u8>, xs: &[u16]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u32s(buf: &mut Vec<u8>, xs: &[u32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_u64s(buf: &mut Vec<u8>, xs: &[u64]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn nc_checksum(ds: &NCDataset) -> u64 {
+    let mut b = Vec::new();
+    push_u16s(&mut b, &ds.labels);
+    b.extend_from_slice(&ds.split);
+    push_f32s(&mut b, &ds.features);
+    push_u64s(&mut b, &ds.graph.offsets);
+    push_u32s(&mut b, &ds.graph.adj);
+    fnv1a(&b)
+}
+
+fn gc_checksum(ds: &GCDataset) -> u64 {
+    let mut b = Vec::new();
+    b.extend_from_slice(&ds.split);
+    for g in &ds.graphs {
+        push_u16s(&mut b, &[g.label]);
+        push_u64s(&mut b, &g.csr.offsets);
+        push_u32s(&mut b, &g.csr.adj);
+        push_f32s(&mut b, &g.features);
+    }
+    fnv1a(&b)
+}
+
+fn lp_checksum(ds: &LPDataset) -> u64 {
+    let mut b = Vec::new();
+    for r in &ds.regions {
+        b.extend_from_slice(r.country.as_bytes());
+        push_u64s(&mut b, &r.graph.offsets);
+        push_u32s(&mut b, &r.graph.adj);
+        push_f32s(&mut b, &r.features);
+        for &(u, v) in r.train_edges.iter().chain(&r.test_pos).chain(&r.test_neg) {
+            push_u32s(&mut b, &[u, v]);
+        }
+        push_f32s(&mut b, &r.train_times);
+    }
+    fnv1a(&b)
+}
+
+/// The pinned corpus: one small dataset per task per format, fixed seeds.
+fn compute_all() -> Vec<(&'static str, u64)> {
+    let nc = nc_spec("cora-sim").unwrap();
+    let gc = gc_spec("mutag").unwrap();
+    vec![
+        ("nc-cora-s0.1-seed1-v1", nc_checksum(&generate_nc(&nc, 0.1, 1))),
+        ("nc-cora-s0.1-seed1-v2", nc_checksum(&NCKeyedView::new(&nc, 0.1, 1).materialize())),
+        ("gc-mutag-s0.2-seed1-v1", gc_checksum(&generate_gc(&gc, 0.2, 1))),
+        ("gc-mutag-s0.2-seed1-v2", gc_checksum(&generate_gc_v2(&gc, 0.2, 1))),
+        ("lp-usbr-s0.05-seed1-v1", lp_checksum(&generate_lp(&["US", "BR"], 0.05, 1))),
+        ("lp-usbr-s0.05-seed1-v2", lp_checksum(&generate_lp_v2(&["US", "BR"], 0.05, 1))),
+    ]
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/dataset_checksums.json")
+}
+
+fn render(entries: &[(&str, u64)]) -> String {
+    let mut s = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        s.push_str(&format!(
+            "  \"{k}\": \"{v:016x}\"{}\n",
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("}\n");
+    s
+}
+
+#[test]
+fn dataset_checksums_match_golden_pins() {
+    let entries = compute_all();
+    let path = golden_path();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, render(&entries)).unwrap();
+        eprintln!("recorded golden checksums at {} — commit this file", path.display());
+        return;
+    }
+    let golden = std::fs::read_to_string(&path).unwrap();
+    for (k, v) in &entries {
+        let want = format!("\"{k}\": \"{v:016x}\"");
+        assert!(
+            golden.contains(&want),
+            "checksum drift for {k}: computed {v:016x}, golden file {} disagrees.\n\
+             If the generator change is intentional, delete the file and re-run to re-pin.",
+            path.display()
+        );
+    }
+    // Every pinned name must still be computed (no silent corpus shrink).
+    for line in golden.lines().filter(|l| l.contains(':')) {
+        let name = line.trim().trim_start_matches('"');
+        let name = &name[..name.find('"').unwrap_or(0)];
+        if !name.is_empty() {
+            assert!(
+                entries.iter().any(|(k, _)| k == &name),
+                "golden entry '{name}' is no longer computed"
+            );
+        }
+    }
+}
+
+#[test]
+fn v1_and_v2_differ_but_match_statistically() {
+    // The formats are different bitwise laws (that's why they're gated)...
+    let nc = nc_spec("cora-sim").unwrap();
+    let v1 = generate_nc(&nc, 0.1, 1);
+    let v2 = NCKeyedView::new(&nc, 0.1, 1).materialize();
+    assert_ne!(nc_checksum(&v1), nc_checksum(&v2));
+    // ...over the same shape.
+    assert_eq!(v1.n(), v2.n());
+    assert_eq!(v1.feat_dim, v2.feat_dim);
+    assert_eq!(v1.num_classes, v2.num_classes);
+}
