@@ -69,6 +69,16 @@ echo "==> engine-free decode-window tests (per-client referencable bases)"
 cargo test -q --lib federation::runtime::tests::sync_decode_window_keeps_at_most_two_bases
 cargo test -q --lib federation::runtime::tests::async_decode_window_retains_straggler_base
 
+echo "==> engine-free downlink-codec + rANS gates (SetModelPacked bitwise, raw fallback, entropy stage)"
+cargo test -q --lib federation::runtime::tests::pack_compression_is_bitwise_transparent
+cargo test -q --lib federation::runtime::tests::pack_over_tcp_matches_none_over_channel_bitwise
+cargo test -q --lib federation::runtime::tests::pack_shrinks_measured_wire_payload_and_reports_the_ratio
+cargo test -q --lib federation::runtime::tests::packed_downlink_falls_back_to_raw_when_the_base_left_the_window
+cargo test -q --lib federation::runtime::tests::rans_entropy_never_inflates_the_packed_wire
+cargo test -q --lib transport::serialize::tests::rans_
+cargo test -q --test proptests prop_rans
+cargo test -q --test proptests prop_pack_rans_codec_roundtrip_is_bitwise
+
 echo "==> engine-free flight-recorder tests (tracing is pure observation; report schema)"
 cargo test -q --lib trace::
 cargo test -q --lib federation::runtime::tests::traced_run_is_bitwise_identical_and_streams_worker_metrics
@@ -174,6 +184,80 @@ PYEOF
         rm -f "$SMOKE_JSON" "$SMOKE_TRACE"
         echo "==> tcp smoke test ($SMOKE_FMT): coordinator and both workers exited 0; sliced builds covered exactly the assigned clients; merged trace + worker metrics validated"
       done
+
+      # Downlink-codec smoke: the same tiny NC run under `--compression pack
+      # --entropy rans`, once traced and once untraced. Asserts the report's
+      # up AND down compression ratios went below 1.0 (the negotiated
+      # SetModelPacked broadcasts actually shrank the measured wire) and
+      # that the measured wire section is byte-identical between the traced
+      # and untraced runs — the obs-bytes-exclusion contract, held even
+      # while compressed payloads and observation blocks share frames.
+      echo "==> multi-process smoke test (tcp loopback, --compression pack --entropy rans)"
+      PACK_JSON_PLAIN="$(mktemp)"
+      PACK_JSON_TRACED="$(mktemp)"
+      PACK_TRACE="$(mktemp)"
+      for PACK_MODE in plain traced; do
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        COORD_STATUS=0
+        if [ "$PACK_MODE" = "traced" ]; then
+            "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+                --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
+                --compression pack --entropy rans \
+                --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
+                --json "$PACK_JSON_TRACED" --trace "$PACK_TRACE" || COORD_STATUS=$?
+        else
+            "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+                --rounds 2 --trainers 4 --scale 0.15 --local-steps 1 \
+                --compression pack --entropy rans \
+                --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
+                --json "$PACK_JSON_PLAIN" || COORD_STATUS=$?
+        fi
+        W1_STATUS=0
+        W2_STATUS=0
+        wait "$W1" || W1_STATUS=$?
+        wait "$W2" || W2_STATUS=$?
+        if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
+            echo "ci.sh: pack tcp smoke ($PACK_MODE) failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            rm -f "$PACK_JSON_PLAIN" "$PACK_JSON_TRACED" "$PACK_TRACE"
+            exit 1
+        fi
+      done
+      if command -v python3 >/dev/null 2>&1; then
+        if ! python3 - "$PACK_JSON_PLAIN" "$PACK_JSON_TRACED" <<'PYEOF'
+import json, sys
+plain = json.load(open(sys.argv[1]))
+traced = json.load(open(sys.argv[2]))
+for name, rep in (("plain", plain), ("traced", traced)):
+    for key in ("wire_compression_ratio", "wire_compression_ratio_up",
+                "wire_compression_ratio_down"):
+        r = rep[key]
+        assert 0.0 < r < 1.0, f"{name}: {key} = {r}, expected < 1.0"
+    train = rep["wire"]["train"]
+    assert train["payload_bytes_down"] < train["logical_bytes_down"], \
+        f"{name}: broadcasts did not shrink: {train}"
+    assert train["payload_bytes_up"] < train["logical_bytes_up"], \
+        f"{name}: uploads did not shrink: {train}"
+assert plain["wire"] == traced["wire"], (
+    "obs bytes leaked into the measured wire ledger:\n"
+    f"plain:  {plain['wire']}\ntraced: {traced['wire']}")
+print(f"pack smoke ok: ratio_up={plain['wire_compression_ratio_up']:.3f} "
+      f"ratio_down={plain['wire_compression_ratio_down']:.3f}, "
+      "traced wire ledger identical to untraced")
+PYEOF
+        then
+            echo "ci.sh: pack downlink smoke validation failed" >&2
+            rm -f "$PACK_JSON_PLAIN" "$PACK_JSON_TRACED" "$PACK_TRACE"
+            exit 1
+        fi
+      else
+        echo "==> python3 not found; skipping pack-smoke JSON validation"
+      fi
+      rm -f "$PACK_JSON_PLAIN" "$PACK_JSON_TRACED" "$PACK_TRACE"
+      echo "==> pack tcp smoke: downlink + uplink ratios < 1.0; obs bytes excluded from the measured ledger"
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

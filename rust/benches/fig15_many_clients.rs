@@ -25,13 +25,17 @@
 //! the bound (ledgered as waste). Reported: wall clock, bytes, waste, and
 //! accuracy for both modes.
 //!
-//! Since the wire-codec layer a third table compares the **upload
-//! compression modes** (`federation.compression: none | pack | quantized`):
-//! wall clock, simulated bytes, measured wire payload vs logical bytes with
-//! the resulting compression ratio, and accuracy. `pack` is lossless —
-//! identical accuracy and simulated bytes, smaller measured wire; `quantized`
-//! (int8 deltas + error feedback) also cuts the *simulated* upload bytes at
-//! a small accuracy cost — the new accuracy-vs-bytes axis.
+//! Since the wire-codec layer a third table compares the **wire compression
+//! modes** (`none | pack | pack+rans | quantized`) in both directions: result
+//! uploads and the v5 `SetModelPacked` downlink broadcasts (per-client delta
+//! bases with a shared-encode cache). Reported: wall clock, simulated bytes,
+//! measured wire payload vs logical bytes with blended / up / down
+//! compression ratios, measured downlink payload, and accuracy. `pack` and
+//! `pack+rans` (the optional rANS entropy stage, `federation.entropy: rans`)
+//! are lossless — the table *asserts* their accuracy equals the `none`
+//! baseline bit-for-bit; `quantized` (int8 deltas + error feedback) also cuts
+//! the *simulated* upload bytes at a small accuracy cost — the
+//! accuracy-vs-bytes axis.
 //!
 //! Since the sliced-session-build layer a fourth table measures the
 //! **per-worker startup scaling axis**: one worker's slice of the session is
@@ -59,7 +63,9 @@
 mod common;
 
 use common::*;
-use fedgraph::config::{CompressionMode, DatasetFormat, FedGraphConfig, FederationMode, Method};
+use fedgraph::config::{
+    CompressionMode, DatasetFormat, EntropyMode, FedGraphConfig, FederationMode, Method,
+};
 use fedgraph::coordinator::{build_session_sliced, BuildSlice};
 use fedgraph::graph::{gen_work, gen_work_reset};
 use fedgraph::monitor::Monitor;
@@ -210,7 +216,11 @@ fn main() {
     }
     println!("{}", tbl2.render());
 
-    // ---- compression study: upload wire path none | pack | quantized ------
+    // ---- compression study: wire path none | pack | pack+rans | quantized -
+    // Both directions are measured: uploads (delta-packed results) and
+    // downlink broadcasts (v5 `SetModelPacked` deltas against each client's
+    // last-sent base). The lossless rows (`pack`, `pack+rans`) must reproduce
+    // the `none` baseline's accuracy bit-for-bit — asserted, not just printed.
     let mut tbl3 = Table::new(&[
         "clients",
         "codec",
@@ -219,39 +229,70 @@ fn main() {
         "wire payload MB",
         "logical MB",
         "ratio",
+        "ratio up",
+        "ratio down",
+        "down payload MB",
         "accuracy",
     ])
-    .with_title("Upload compression: simulated vs measured wire bytes");
+    .with_title("Wire compression (up + down): simulated vs measured wire bytes");
     for clients in [10usize, 100] {
-        for codec in [
-            CompressionMode::None,
-            CompressionMode::Pack,
-            CompressionMode::Quantized { bits: 8, error_feedback: true },
+        let mut baseline_accuracy = None;
+        for (label, codec, entropy) in [
+            ("none", CompressionMode::None, EntropyMode::None),
+            ("pack", CompressionMode::Pack, EntropyMode::None),
+            ("pack+rans", CompressionMode::Pack, EntropyMode::Rans),
+            (
+                "quantized",
+                CompressionMode::Quantized { bits: 8, error_feedback: true },
+                EntropyMode::None,
+            ),
         ] {
             let mut cfg = arxiv_cfg(clients, r);
             cfg.federation.max_concurrency = 0;
             cfg.federation.compression = codec;
+            cfg.federation.entropy = entropy;
             let t0 = std::time::Instant::now();
             let rep = run(&cfg, &eng);
             let wall = t0.elapsed().as_secs_f64();
+            let down_payload: u64 =
+                rep.wire.iter().map(|(_, _, down)| down.payload_bytes).sum();
+            let down_logical: u64 =
+                rep.wire.iter().map(|(_, _, down)| down.logical_bytes).sum();
+            match label {
+                "none" => baseline_accuracy = Some(rep.final_accuracy),
+                "pack" | "pack+rans" => assert_eq!(
+                    Some(rep.final_accuracy),
+                    baseline_accuracy,
+                    "{label} is lossless: accuracy must equal the none baseline"
+                ),
+                _ => {}
+            }
             tbl3.row(&[
                 clients.to_string(),
-                codec.name().to_string(),
+                label.to_string(),
                 secs(wall),
                 mb(rep.total_bytes()),
                 mb(rep.wire_payload_bytes()),
                 mb(rep.wire_logical_bytes()),
                 format!("{:.2}", rep.wire_compression_ratio()),
+                format!("{:.2}", rep.wire_compression_ratio_up()),
+                format!("{:.2}", rep.wire_compression_ratio_down()),
+                mb(down_payload),
                 format!("{:.4}", rep.final_accuracy),
             ]);
             json_compression.push(obj(vec![
                 ("clients", clients.into()),
-                ("codec", codec.name().into()),
+                ("codec", label.into()),
+                ("entropy", entropy.name().into()),
                 ("wall_secs", wall.into()),
                 ("sim_bytes", (rep.total_bytes() as usize).into()),
                 ("wire_payload_bytes", (rep.wire_payload_bytes() as usize).into()),
                 ("wire_logical_bytes", (rep.wire_logical_bytes() as usize).into()),
+                ("wire_payload_bytes_down", (down_payload as usize).into()),
+                ("wire_logical_bytes_down", (down_logical as usize).into()),
                 ("wire_compression_ratio", rep.wire_compression_ratio().into()),
+                ("wire_compression_ratio_up", rep.wire_compression_ratio_up().into()),
+                ("wire_compression_ratio_down", rep.wire_compression_ratio_down().into()),
                 ("accuracy", rep.final_accuracy.into()),
             ]));
         }

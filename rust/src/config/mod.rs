@@ -279,6 +279,37 @@ impl CompressionMode {
     }
 }
 
+/// Optional entropy stage behind the byte-plane pack codec
+/// (`federation.entropy`): whether the RLE token streams of packed payloads
+/// — uplink `pack` and downlink `SetModelPacked` alike — additionally pass
+/// through the static-model rANS coder. Lossless either way; only measured
+/// wire bytes change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntropyMode {
+    /// Ship the RLE token streams as-is (default).
+    None,
+    /// rANS-entropy-code each byte plane's RLE stream with a per-plane
+    /// frequency table in the blob header. Requires `compression: pack`.
+    Rans,
+}
+
+impl EntropyMode {
+    pub fn parse(s: &str) -> Result<EntropyMode> {
+        match s.trim().to_lowercase().as_str() {
+            "none" | "off" => Ok(EntropyMode::None),
+            "rans" => Ok(EntropyMode::Rans),
+            other => bail!("federation.entropy must be 'none' or 'rans', got '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EntropyMode::None => "none",
+            EntropyMode::Rans => "rans",
+        }
+    }
+}
+
 /// Which transport backend carries the federation's protocol frames — i.e.
 /// where the trainer actors live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -361,12 +392,17 @@ pub struct FederationConfig {
     /// milliseconds, injected into local training to model heterogeneous
     /// hardware. `0.0` disables stragglers.
     pub straggler_ms: f64,
-    /// Upload wire codec: `none` (raw f32 frames), `pack` (lossless
-    /// delta + byte-plane packing, bitwise-transparent), or `quantized`
-    /// (lossy int8/int4 delta quantization with error feedback; plaintext/DP
-    /// sessions only). The YAML keys `quantized_bits` and `error_feedback`
-    /// refine the quantized mode.
+    /// Wire codec: `none` (raw f32 frames), `pack` (lossless delta +
+    /// byte-plane packing in **both directions** — compressed uploads and
+    /// `SetModelPacked` downlink broadcasts — bitwise-transparent), or
+    /// `quantized` (lossy int8/int4 upload-delta quantization with error
+    /// feedback; plaintext/DP sessions only; broadcasts stay raw). The YAML
+    /// keys `quantized_bits` and `error_feedback` refine the quantized mode.
     pub compression: CompressionMode,
+    /// Optional rANS entropy stage behind the pack codec (both directions).
+    /// `none` (default) ships plain RLE streams; `rans` requires
+    /// `compression: pack` (validated).
+    pub entropy: EntropyMode,
 }
 
 impl Default for FederationConfig {
@@ -383,6 +419,7 @@ impl Default for FederationConfig {
             dropout_frac: 0.0,
             straggler_ms: 0.0,
             compression: CompressionMode::None,
+            entropy: EntropyMode::None,
         }
     }
 }
@@ -663,6 +700,9 @@ impl FedGraphConfig {
             }
             cfg.federation.compression = CompressionMode::Quantized { bits, error_feedback };
         }
+        if let Some(s) = fed.get("entropy").as_str() {
+            cfg.federation.entropy = EntropyMode::parse(s)?;
+        }
         // Network block.
         let net = y.get("network");
         if let Some(v) = net.get("bandwidth_gbps").as_f64() {
@@ -729,6 +769,15 @@ impl FedGraphConfig {
                      use_encryption)"
                 );
             }
+        }
+        if self.federation.entropy == EntropyMode::Rans
+            && self.federation.compression != CompressionMode::Pack
+        {
+            bail!(
+                "federation.entropy: rans is a stage behind the byte-plane pack codec — \
+                 it requires federation.compression: pack (got '{}')",
+                self.federation.compression.name()
+            );
         }
         if self.federation.mode == FederationMode::Async {
             if self.uses_he() {
@@ -837,6 +886,10 @@ impl FedGraphConfig {
                 w.u8(error_feedback as u8);
             }
         }
+        w.u8(match f.entropy {
+            EntropyMode::None => 0,
+            EntropyMode::Rans => 1,
+        });
         w.f64(self.network.bandwidth_gbps);
         w.f64(self.network.latency_ms);
         w.u64(self.seed);
@@ -933,6 +986,11 @@ impl FedGraphConfig {
                     t => return Err(WireError::BadTag(t)),
                 }
             };
+            cfg.federation.entropy = match r.u8()? {
+                0 => EntropyMode::None,
+                1 => EntropyMode::Rans,
+                t => return Err(WireError::BadTag(t)),
+            };
             cfg.network.bandwidth_gbps = r.f64()?;
             cfg.network.latency_ms = r.f64()?;
             cfg.seed = r.u64()?;
@@ -964,7 +1022,9 @@ impl FedGraphConfig {
 /// federation block. v3: `dataset_format` (dataset generation law) joined —
 /// a worker must build the *same format* dataset the coordinator did, so
 /// the knob rides the bit-exact wire config rather than defaulting.
-pub const CONFIG_WIRE_VERSION: u8 = 3;
+/// v4: `federation.entropy` (rANS stage behind the pack codec, both
+/// directions) joined the federation block.
+pub const CONFIG_WIRE_VERSION: u8 = 4;
 
 fn task_code(t: Task) -> u8 {
     match t {
@@ -1236,6 +1296,27 @@ federation:
             "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nuse_dp: true\nfederation:\n  mode: async\n  compression: quantized\n"
         )
         .is_ok());
+        // Entropy defaults to none and parses next to pack.
+        assert_eq!(plain.federation.entropy, EntropyMode::None);
+        let cfg = FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: pack\n  entropy: rans\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.entropy, EntropyMode::Rans);
+        // rans is a stage behind pack: rejected with none/quantized.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  entropy: rans\n"
+        )
+        .is_err());
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: quantized\n  entropy: rans\n"
+        )
+        .is_err());
+        // Unknown entropy coder rejected.
+        assert!(FedGraphConfig::parse_yaml(
+            "fedgraph_task: NC\ndataset: x\nmethod: FedAvg\nfederation:\n  compression: pack\n  entropy: huffman\n"
+        )
+        .is_err());
     }
 
     #[test]
@@ -1254,6 +1335,13 @@ federation:
             assert_eq!(back.federation.compression, mode);
             assert_eq!(back.encode_wire(), bytes);
         }
+        // The entropy stage rides the wire next to the codec triple.
+        cfg.federation.compression = CompressionMode::Pack;
+        cfg.federation.entropy = EntropyMode::Rans;
+        let bytes = cfg.encode_wire();
+        let back = FedGraphConfig::decode_wire(&bytes).unwrap();
+        assert_eq!(back.federation.entropy, EntropyMode::Rans);
+        assert_eq!(back.encode_wire(), bytes);
     }
 
     #[test]

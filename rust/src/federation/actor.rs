@@ -34,17 +34,25 @@
 //! delta before quantizing, so the error does not accumulate). The
 //! coordinator holds the same version-stamped broadcasts and reverses the
 //! codec before aggregating — see `docs/WIRE_FORMAT.md`.
+//!
+//! **Decode-on-broadcast.** Under the pack codec broadcasts arrive as
+//! `SetModelPacked { base_version, blob }`: a delta against the broadcast
+//! this actor already caches (the coordinator tracks what it last sent each
+//! client). The actor reconstructs, adopts the result exactly as a raw
+//! `SetModel`, and the reconstruction becomes the next upload's delta base —
+//! both directions stay bitwise-lossless, with `federation.entropy: rans`
+//! optionally entropy-coding the packed token streams of each.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::config::CompressionMode;
+use crate::config::{CompressionMode, EntropyMode};
 use crate::he::{gaussian_mechanism, CkksContext, DpParams};
 use crate::runtime::ParamSet;
 use crate::trace::{self, ObsSession};
 use crate::transport::link::TrainerLink;
-use crate::transport::serialize::{pack_delta, quantize_delta};
+use crate::transport::serialize::{pack_delta, pack_delta_rans, quantize_delta, unpack_delta};
 use crate::transport::SimNet;
 use crate::util::rng::{hash_f32, Rng};
 use crate::util::sync::Semaphore;
@@ -73,20 +81,28 @@ fn flatten_values(values: &[Vec<f32>]) -> Vec<f32> {
 fn encode_flat_upload(
     flat: &[f32],
     codec: CompressionMode,
+    entropy: EntropyMode,
     base_flat: &[f32],
     residual: &mut Vec<f32>,
 ) -> UpdatePayload {
+    // The lossless pack arm, with or without the rANS entropy stage
+    // (`federation.entropy`) — both decode through the same
+    // mode-byte-dispatched `unpack_delta`.
+    let pack = |flat: &[f32], base: &[f32]| match entropy {
+        EntropyMode::Rans => pack_delta_rans(flat, base),
+        EntropyMode::None => pack_delta(flat, base),
+    };
     match codec {
         // `None` is unreachable by construction; degrading it to the
         // lossless packed form keeps this total without a panic path.
         CompressionMode::None | CompressionMode::Pack => {
-            UpdatePayload::Packed { blob: pack_delta(flat, base_flat) }
+            UpdatePayload::Packed { blob: pack(flat, base_flat) }
         }
         CompressionMode::Quantized { bits, error_feedback } => {
             if flat.len() != base_flat.len() {
                 // Shapes are pinned by the SetModel validation; a mismatch
                 // degrades to the (length-safe) lossless packed form.
-                return UpdatePayload::Packed { blob: pack_delta(flat, base_flat) };
+                return UpdatePayload::Packed { blob: pack(flat, base_flat) };
             }
             let mut delta: Vec<f32> = flat.iter().zip(base_flat).map(|(u, b)| u - b).collect();
             if error_feedback {
@@ -171,9 +187,13 @@ pub struct ActorSetup {
     /// round's deterministic per-client fraction of it.
     pub straggler_ms: f64,
     pub straggler_seed: u64,
-    /// Upload wire codec (`federation.compression`), applied to plaintext/DP
-    /// payloads right before they are framed.
+    /// Wire codec (`federation.compression`), applied to plaintext/DP
+    /// upload payloads right before they are framed (and, coordinator-side,
+    /// to the broadcasts this actor decodes).
     pub codec: CompressionMode,
+    /// Entropy stage behind the pack codec (`federation.entropy`), applied
+    /// wherever `codec` packs.
+    pub entropy: EntropyMode,
     /// Remote deployments only (`Some` in worker processes): the
     /// worker-local staging ledger the task logic writes to
     /// ([`SimNet::with_stage_log`]). After each train/eval the actor drains
@@ -201,6 +221,7 @@ pub fn actor_main(setup: ActorSetup) {
         straggler_ms,
         straggler_seed,
         codec,
+        entropy,
         remote_net,
         obs,
     } = setup;
@@ -314,6 +335,57 @@ pub fn actor_main(setup: ActorSetup) {
                     cached_base_flat = flatten_values(&cached_broadcast.1);
                 }
             }
+            DownMsg::SetModelPacked { round: _, version, base_version, blob } => {
+                // Compressed broadcast (pack codec): reconstruct against the
+                // cached broadcast the coordinator delta-packed against —
+                // which must be exactly the one this actor holds (the
+                // coordinator tracks `last_sent_version` per client and falls
+                // back to raw `SetModel` when in doubt).
+                if cached_broadcast.0 != base_version {
+                    let _ = link.send(
+                        UpMsg::Failed {
+                            client: cid,
+                            error: format!(
+                                "SetModelPacked base {base_version} not cached (trainer holds {})",
+                                cached_broadcast.0
+                            ),
+                        }
+                        .encode()
+                        .into(),
+                    );
+                    continue;
+                }
+                let flat = match unpack_delta(&blob, &cached_base_flat) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let _ = link.send(
+                            UpMsg::Failed {
+                                client: cid,
+                                error: format!("SetModelPacked: {e}"),
+                            }
+                            .encode()
+                            .into(),
+                        );
+                        continue;
+                    }
+                };
+                // Adopt exactly as a raw SetModel would: split the flat
+                // reconstruction back into the session's tensor shapes
+                // (unpack_delta pins `flat.len()` to the base length, which
+                // the SetModel validation pinned to the template).
+                let mut values = Vec::with_capacity(model.values.len());
+                let mut off = 0usize;
+                for v in &model.values {
+                    values.push(flat[off..off + v.len()].to_vec());
+                    off += v.len();
+                }
+                cached_broadcast = (version, values.clone());
+                model.values = values;
+                model_version = version;
+                // `flat` IS the new broadcast flattened — reuse it as the
+                // next delta base instead of re-flattening.
+                cached_base_flat = flat;
+            }
             DownMsg::ModelVersion { version } => {
                 if cached_broadcast.0 != version {
                     let _ = link.send(
@@ -375,6 +447,7 @@ pub fn actor_main(setup: ActorSetup) {
                                     _ => encode_flat_upload(
                                         &up.params.flatten(),
                                         codec,
+                                        entropy,
                                         &cached_base_flat,
                                         &mut residual,
                                     ),
@@ -392,6 +465,7 @@ pub fn actor_main(setup: ActorSetup) {
                                         _ => encode_flat_upload(
                                             &flat,
                                             codec,
+                                            entropy,
                                             &cached_base_flat,
                                             &mut residual,
                                         ),

@@ -242,6 +242,7 @@ pub(crate) fn actor_setup(
         straggler_ms: cfg.federation.straggler_ms,
         straggler_seed: cfg.seed ^ 0x57A6_61,
         codec: cfg.federation.compression,
+        entropy: cfg.federation.entropy,
         remote_net,
         obs,
     }
@@ -325,19 +326,21 @@ fn launch_workers(
         if lane != CONTROL_LANE {
             bail!("worker {k} ({peer}) sent a non-control first frame");
         }
-        // Protocol revision + upload-codec negotiation: the worker advertises
-        // its codec capabilities and the coordinator rejects it here — before
-        // any lane exists — when the session's `federation.compression` needs
-        // a codec the worker build lacks. The codec itself ships to accepted
-        // workers inside the Assign config.
+        // Protocol revision + wire-codec negotiation: the worker advertises
+        // its codec capabilities (upload encoders plus the downlink
+        // `SetModelPacked` decoder) and the coordinator rejects it here —
+        // before any lane exists — when the session's
+        // `federation.compression` needs a capability the worker build
+        // lacks. The codec itself ships to accepted workers inside the
+        // Assign config.
         let needed = required_codec_bit(cfg.federation.compression);
         match UpMsg::decode(&payload).map_err(|e| anyhow!("worker {k} hello: {e}"))? {
             UpMsg::WorkerHello { version, .. } if version != PROTOCOL_VERSION => bail!(
                 "worker {k} speaks protocol v{version}, coordinator speaks v{PROTOCOL_VERSION}"
             ),
             UpMsg::WorkerHello { codecs, .. } if (needed & !codecs) != 0 => bail!(
-                "worker {k} ({peer}) does not support the session's '{}' upload codec \
-                 (advertised capability mask {codecs:#04b})",
+                "worker {k} ({peer}) does not support the session's '{}' wire codec \
+                 (advertised capability mask {codecs:#05b}, needs {needed:#05b})",
                 cfg.federation.compression.name()
             ),
             UpMsg::WorkerHello { .. } => {}

@@ -53,18 +53,23 @@
 //! acked, so worker processes flush, exit 0, and nobody reports a spurious
 //! hang-up.
 //!
-//! **Upload codec negotiation.** `WorkerHello.codecs` is a capability
-//! bitmask ([`CODEC_PACK`] | [`CODEC_QUANTIZED`]) advertising which upload
-//! codecs the worker build supports. The coordinator rejects the handshake
-//! when the session's `federation.compression` needs a codec the worker did
-//! not advertise, so a codec mismatch fails loudly at connect time instead
-//! of mid-round; the chosen codec itself rides to the worker inside the
-//! `Assign` config. Compressed uploads appear on the wire as the
+//! **Codec negotiation.** `WorkerHello.codecs` is a capability bitmask
+//! ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] | [`CODEC_DOWN`]) advertising which
+//! wire codecs the worker build supports. The coordinator rejects the
+//! handshake when the session's `federation.compression` needs a codec the
+//! worker did not advertise, so a codec mismatch fails loudly at connect
+//! time instead of mid-round; the chosen codec itself rides to the worker
+//! inside the `Assign` config. Compressed uploads appear on the wire as the
 //! [`UpdatePayload::Packed`] / [`UpdatePayload::Quantized`] payload variants
 //! (blobs produced by [`crate::transport::serialize::pack_delta`] /
 //! [`crate::transport::serialize::quantize_delta`] against the
-//! version-stamped cached broadcast); see `docs/WIRE_FORMAT.md` for byte
-//! layouts.
+//! version-stamped cached broadcast). Under the `pack` codec broadcasts are
+//! compressed too: the coordinator sends `SetModelPacked { round, version,
+//! base_version, blob }`, a XOR-delta pack of the new params against the
+//! last version it sent *that client* (`base_version`), and the trainer
+//! reconstructs against its cached broadcast — round 0 and post-dropout
+//! clients with no shared base get a raw `SetModel` fallback. See
+//! `docs/WIRE_FORMAT.md` for byte layouts.
 //!
 //! **Staged transfers.** In-round *simulated* traffic issued inside actors
 //! (BNS-GCN halo re-shipments, FedLink per-step exchanges, eval metric
@@ -89,8 +94,11 @@ use crate::transport::{Direction, Phase};
 /// observation plane — `Update`/`StopAck` envelopes carry an [`ObsBlock`]
 /// (batched flight-recorder events plus periodic [`MetricsSnapshot`]s), and
 /// the `Assign`/`BuildReport` handshake carries trace-clock timestamps for
-/// the coordinator's clock-offset estimate.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// the coordinator's clock-offset estimate. v5: downlink compression — the
+/// `SetModelPacked` broadcast frame (XOR-delta-packed against the last
+/// version the coordinator sent that client) and the [`CODEC_DOWN`]
+/// capability bit.
+pub const PROTOCOL_VERSION: u32 = 5;
 
 /// `WorkerHello.codecs` capability bit: the worker can encode `pack`
 /// (lossless delta + byte-plane) uploads.
@@ -98,15 +106,22 @@ pub const CODEC_PACK: u8 = 0b01;
 /// `WorkerHello.codecs` capability bit: the worker can encode `quantized`
 /// (int8/int4 delta) uploads.
 pub const CODEC_QUANTIZED: u8 = 0b10;
+/// `WorkerHello.codecs` capability bit: the worker's actors can decode
+/// `SetModelPacked` downlink broadcasts (reconstructing against their
+/// cached broadcast).
+pub const CODEC_DOWN: u8 = 0b100;
 /// Every codec this build supports (what a worker advertises).
-pub const SUPPORTED_CODECS: u8 = CODEC_PACK | CODEC_QUANTIZED;
+pub const SUPPORTED_CODECS: u8 = CODEC_PACK | CODEC_QUANTIZED | CODEC_DOWN;
 
-/// The capability bit `federation.compression` requires (0 when uploads are
-/// uncompressed).
+/// The capability bits `federation.compression` requires (0 when the wire is
+/// uncompressed). `pack` compresses both directions, so it needs the
+/// downlink decode capability too — an old worker that only packs uploads
+/// fails the handshake instead of choking on a `SetModelPacked` frame
+/// mid-run.
 pub fn required_codec_bit(mode: crate::config::CompressionMode) -> u8 {
     match mode {
         crate::config::CompressionMode::None => 0,
-        crate::config::CompressionMode::Pack => CODEC_PACK,
+        crate::config::CompressionMode::Pack => CODEC_PACK | CODEC_DOWN,
         crate::config::CompressionMode::Quantized { .. } => CODEC_QUANTIZED,
     }
 }
@@ -231,6 +246,15 @@ pub enum DownMsg {
     /// coordinator's broadcast counter; the trainer caches `(version,
     /// values)` and stamps subsequent updates with it.
     SetModel { round: u32, version: u32, values: Vec<Vec<f32>> },
+    /// Compressed broadcast (protocol v5, `federation.compression: pack`):
+    /// `blob` is a [`crate::transport::serialize::pack_delta`] pack of the
+    /// new flattened params against the broadcast stamped `base_version` —
+    /// the last version the coordinator sent *this* client. The trainer
+    /// reconstructs against its cached broadcast (which must carry
+    /// `base_version`) and then adopts the result exactly as it would a
+    /// [`DownMsg::SetModel`]. Clients without that base (round 0, rejoin
+    /// after dropout) are sent a raw `SetModel` instead.
+    SetModelPacked { round: u32, version: u32, base_version: u32, blob: Vec<u8> },
     /// Run one round of local training from the current model. `scale` is
     /// the pre-agreed aggregation share (used by the HE path to pre-scale
     /// before encryption); `upload` says whether the result must be shipped
@@ -321,9 +345,10 @@ pub enum UpMsg {
     StopAck { client: u32, obs: ObsBlock },
     /// Deployment handshake (multi-process transports, pre-rendezvous): a
     /// worker process announcing itself, its protocol revision, and the
-    /// upload codecs it supports ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] —
-    /// the codec-negotiation half of the handshake; the coordinator picks
-    /// the session codec from the config and rejects workers that lack it).
+    /// wire codecs it supports ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] |
+    /// [`CODEC_DOWN`] — the codec-negotiation half of the handshake; the
+    /// coordinator picks the session codec from the config and rejects
+    /// workers that lack it).
     WorkerHello { version: u32, codecs: u8 },
     /// Deployment handshake step 3 (after `Assign`, before the rendezvous):
     /// the worker's sliced-session build-cost counters. `built_clients` must
@@ -353,6 +378,7 @@ const D_EVAL: u8 = 4;
 const D_STOP: u8 = 5;
 const D_MODEL_VERSION: u8 = 6;
 const D_ASSIGN: u8 = 7;
+const D_SET_MODEL_PACKED: u8 = 8;
 
 const U_HELLO_ACK: u8 = 1;
 const U_UPDATE: u8 = 2;
@@ -408,6 +434,20 @@ pub fn encode_set_model(round: u32, version: u32, values: &[Vec<f32>]) -> Vec<u8
     w.finish()
 }
 
+/// Encode a `SetModelPacked` frame straight from a borrowed codec blob —
+/// the compressed-broadcast hot path (the coordinator encodes once per
+/// distinct base and shares the frame across targets). Byte-identical to
+/// `DownMsg::SetModelPacked { .. }.encode()`.
+pub fn encode_set_model_packed(round: u32, version: u32, base_version: u32, blob: &[u8]) -> Vec<u8> {
+    let mut w = Writer::with_capacity(1 + 4 + 4 + 4 + 4 + blob.len() + 8);
+    w.u8(D_SET_MODEL_PACKED);
+    w.u32(round);
+    w.u32(version);
+    w.u32(base_version);
+    w.blob(blob);
+    w.finish()
+}
+
 /// Encode an `Eval` frame from a borrowed model override (or none) — same
 /// copy-sparing rationale as [`encode_set_model`].
 pub fn encode_eval(round: u32, values: Option<&[Vec<f32>]>) -> Vec<u8> {
@@ -437,6 +477,13 @@ impl DownMsg {
                 w.u32(*round);
                 w.u32(*version);
                 write_values(&mut w, values);
+            }
+            DownMsg::SetModelPacked { round, version, base_version, blob } => {
+                w.u8(D_SET_MODEL_PACKED);
+                w.u32(*round);
+                w.u32(*version);
+                w.u32(*base_version);
+                w.blob(blob);
             }
             DownMsg::Train { round, scale, upload } => {
                 w.u8(D_TRAIN);
@@ -483,6 +530,12 @@ impl DownMsg {
                 round: r.u32()?,
                 version: r.u32()?,
                 values: read_values(&mut r)?,
+            },
+            D_SET_MODEL_PACKED => DownMsg::SetModelPacked {
+                round: r.u32()?,
+                version: r.u32()?,
+                base_version: r.u32()?,
+                blob: r.blob()?,
             },
             D_TRAIN => DownMsg::Train {
                 round: r.u32()?,
@@ -664,6 +717,12 @@ mod tests {
         let msgs = vec![
             DownMsg::Hello { client: 3 },
             DownMsg::SetModel { round: 7, version: 12, values: vec![vec![1.0, 2.0], vec![-0.5]] },
+            DownMsg::SetModelPacked {
+                round: 4,
+                version: 13,
+                base_version: 12,
+                blob: vec![2, 0, 0, 0, 7, 1, 255],
+            },
             DownMsg::Train { round: 7, scale: 0.25, upload: true },
             DownMsg::Train { round: 8, scale: 1.0, upload: false },
             DownMsg::Eval { round: 9, values: None },
@@ -682,6 +741,15 @@ mod tests {
                 ) => {
                     assert_eq!(r1, r2);
                     assert_eq!(s1, s2);
+                    assert_eq!(v1, v2);
+                }
+                (
+                    DownMsg::SetModelPacked { round: r1, version: s1, base_version: b1, blob: v1 },
+                    DownMsg::SetModelPacked { round: r2, version: s2, base_version: b2, blob: v2 },
+                ) => {
+                    assert_eq!(r1, r2);
+                    assert_eq!(s1, s2);
+                    assert_eq!(b1, b2);
                     assert_eq!(v1, v2);
                 }
                 (
@@ -809,7 +877,7 @@ mod tests {
         match UpMsg::decode(&hello.encode()).unwrap() {
             UpMsg::WorkerHello { version, codecs } => {
                 assert_eq!(version, PROTOCOL_VERSION);
-                assert_eq!(codecs, CODEC_PACK | CODEC_QUANTIZED);
+                assert_eq!(codecs, CODEC_PACK | CODEC_QUANTIZED | CODEC_DOWN);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -948,13 +1016,25 @@ mod tests {
     fn required_codec_bits_match_modes() {
         use crate::config::CompressionMode;
         assert_eq!(required_codec_bit(CompressionMode::None), 0);
-        assert_eq!(required_codec_bit(CompressionMode::Pack), CODEC_PACK);
+        // `pack` compresses both directions, so it needs the downlink decode
+        // capability too.
+        assert_eq!(required_codec_bit(CompressionMode::Pack), CODEC_PACK | CODEC_DOWN);
         assert_eq!(
             required_codec_bit(CompressionMode::Quantized { bits: 8, error_feedback: true }),
             CODEC_QUANTIZED
         );
         // Every codec bit a config can require is advertised by this build.
-        assert_eq!(SUPPORTED_CODECS & (CODEC_PACK | CODEC_QUANTIZED), CODEC_PACK | CODEC_QUANTIZED);
+        let all = CODEC_PACK | CODEC_QUANTIZED | CODEC_DOWN;
+        assert_eq!(SUPPORTED_CODECS & all, all);
+    }
+
+    #[test]
+    fn borrowed_set_model_packed_encoder_matches() {
+        let blob = vec![1u8, 0, 0, 0, 4, 0x80, 0x3F, 0, 0];
+        assert_eq!(
+            encode_set_model_packed(6, 11, 10, &blob),
+            DownMsg::SetModelPacked { round: 6, version: 11, base_version: 10, blob }.encode()
+        );
     }
 
     #[test]

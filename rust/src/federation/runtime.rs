@@ -32,7 +32,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{CompressionMode, FedGraphConfig, FederationMode, PrivacyMode};
+use crate::config::{CompressionMode, EntropyMode, FedGraphConfig, FederationMode, PrivacyMode};
 use crate::coordinator::aggregate::{resolve_shards, sharded_weighted_average};
 use crate::he::{Ciphertext, CkksContext};
 use crate::monitor::{ClientTimeline, Monitor};
@@ -41,13 +41,15 @@ use crate::transport::link::CoordLink;
 use crate::transport::{Direction, Phase, SimNet};
 use crate::util::timer::timed;
 
-use crate::transport::serialize::{dequantize_delta, params_wire_len, unpack_delta};
+use crate::transport::serialize::{
+    dequantize_delta, pack_delta, pack_delta_rans, params_wire_len, unpack_delta,
+};
 
 use super::deploy::{he_context, Deployment, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 use super::protocol::{
-    encode_eval, encode_set_model, set_model_frame_len, DownMsg, ObsBlock, StagedTransfer,
-    UpMsg, UpdateEnvelope, UpdatePayload,
+    encode_eval, encode_set_model, encode_set_model_packed, set_model_frame_len, DownMsg,
+    ObsBlock, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload,
 };
 
 /// How a model broadcast is billed to the simulated network.
@@ -146,8 +148,11 @@ pub struct Federation<'m> {
     /// Straggler updates that arrived during an eval collection (async mode
     /// only); the next policy step absorbs them first.
     stash: VecDeque<UpdateEnvelope>,
-    /// Upload wire codec (`federation.compression`).
+    /// Wire codec (`federation.compression`) — `pack` compresses both
+    /// uploads and broadcasts.
     codec: CompressionMode,
+    /// Entropy stage behind the pack codec (`federation.entropy`).
+    entropy: EntropyMode,
     /// Version-keyed window of recent broadcasts (flattened values) — the
     /// decode bases for compressed uploads: a `Packed`/`Quantized` payload
     /// is a delta against the broadcast stamped by its envelope's
@@ -244,6 +249,7 @@ impl<'m> Federation<'m> {
             policy: Some(policy),
             stash: VecDeque::new(),
             codec,
+            entropy: cfg.federation.entropy,
             bases: VecDeque::new(),
             base_window: n + cfg.federation.max_staleness as usize + 2,
             max_staleness: cfg.federation.max_staleness,
@@ -306,9 +312,17 @@ impl<'m> Federation<'m> {
         }
     }
 
-    /// Ship `params` to `targets` as a `SetModel` broadcast stamped with the
-    /// next version. `charge` decides whether (and at what per-link size) the
-    /// transfer is ledgered.
+    /// Ship `params` to `targets` stamped with the next broadcast version.
+    /// Under the `pack` codec the broadcast goes out as `SetModelPacked` —
+    /// a XOR-delta pack against the last version sent to *each* client
+    /// (read from `last_sent_version` before this broadcast overwrites it),
+    /// with one encode shared across every target on the same base; targets
+    /// whose base has left the decode window (round 0 bootstrap, async
+    /// post-dropout rejoin) fall back to a raw `SetModel`. `charge` decides
+    /// whether (and at what per-link size) the transfer is ledgered on the
+    /// SimNet — always the *logical* uncompressed size, preserving the
+    /// codec's ledger-transparency contract; only the measured wire ledger
+    /// sees the packed frame bytes.
     pub fn broadcast_model(
         &mut self,
         round: usize,
@@ -323,27 +337,100 @@ impl<'m> Federation<'m> {
             .arg("round", round)
             .arg("targets", targets.len());
         self.version += 1;
+        // Downlink packing rides the same base window upload decode uses.
+        // HE sessions broadcast the decrypted aggregate in the clear (the
+        // documented server-side stand-in) and keep raw `SetModel` frames.
+        let down_pack = matches!(self.codec, CompressionMode::Pack)
+            && !matches!(self.privacy, PrivacyMode::He(_));
+        let flat = if self.codec.needs_base() { Some(params.flatten()) } else { None };
+        let logical_len = set_model_frame_len(params.values.iter().map(|v| v.len()));
+        // Raw frame, built at most once and refcount-shared across targets
+        // (the uncompressed path and the no-base fallback).
+        let mut raw: Option<crate::transport::link::Frame> = None;
+        // Shared-encode cache, keyed by delta base version: sync rounds give
+        // every live target the same base, so a broadcast to N clients costs
+        // one encode + N refcount-bumped frame sends; async/dropout rounds
+        // hold one entry per distinct base still in flight.
+        let mut packed: Vec<(u32, crate::transport::link::Frame)> = Vec::new();
+        let (mut cache_hits, mut cache_misses, mut raw_sends) = (0u64, 0u64, 0u64);
+        for &t in targets {
+            let base_version = self.last_sent_version.get(t).copied().unwrap_or(0);
+            let mut frame: Option<crate::transport::link::Frame> = None;
+            if down_pack {
+                if let Some((_, f)) = packed.iter().find(|(v, _)| *v == base_version) {
+                    cache_hits += 1;
+                    frame = Some(f.clone());
+                } else if let Some((_, base)) =
+                    self.bases.iter().rev().find(|(v, _)| *v == base_version)
+                {
+                    cache_misses += 1;
+                    let new = flat.as_ref().expect("pack retains bases");
+                    let blob = match self.entropy {
+                        EntropyMode::Rans => pack_delta_rans(new, base),
+                        EntropyMode::None => pack_delta(new, base),
+                    };
+                    let f: crate::transport::link::Frame =
+                        encode_set_model_packed(round as u32, self.version, base_version, &blob)
+                            .into();
+                    packed.push((base_version, f.clone()));
+                    frame = Some(f);
+                }
+            }
+            match frame {
+                Some(f) => {
+                    // Compressed broadcast: the measured meter sees the
+                    // packed frame, the logical meter the raw `SetModel` it
+                    // replaces — their ratio is the report's downlink
+                    // compression ratio. SimNet (below) stays logical.
+                    self.wire().record_frame(Phase::Train, Direction::Down, f.len() as u64);
+                    self.wire().note_payload(
+                        Phase::Train,
+                        Direction::Down,
+                        f.len() as u64,
+                        logical_len,
+                    );
+                    self.coord.send(t, f)?;
+                }
+                None => {
+                    if down_pack {
+                        raw_sends += 1;
+                    }
+                    let f = raw
+                        .get_or_insert_with(|| {
+                            encode_set_model(round as u32, self.version, &params.values).into()
+                        })
+                        .clone();
+                    // The whole SetModel frame is data-plane: SimNet charges
+                    // exactly this encoded length in plaintext mode, which is
+                    // the measured `wire payload == SimNet bytes` invariant
+                    // the report documents.
+                    self.wire().record_payload_frame(Phase::Train, Direction::Down, f.len() as u64);
+                    self.coord.send(t, f)?;
+                }
+            }
+        }
+        if down_pack {
+            // Zero-length span whose args are the downlink encode-cache
+            // counters — the per-broadcast cache effectiveness signal.
+            let _cache_sp = crate::trace::span("coord", "downlink_encode_cache")
+                .arg("hits", cache_hits)
+                .arg("misses", cache_misses)
+                .arg("raw_fallbacks", raw_sends);
+        }
         for &t in targets {
             if let Some(v) = self.last_sent_version.get_mut(t) {
                 *v = self.version;
             }
         }
-        if self.codec.needs_base() {
-            // Compressed uploads are deltas against version-stamped
-            // broadcasts; retain them for decode, pruned down to what
-            // in-flight work can still reference. SimNet and result
+        if let Some(flat) = flat {
+            // Compressed transfers are deltas against version-stamped
+            // broadcasts; retain them for upload decode and as downlink
+            // bases, pruned down to what in-flight work can still reference
+            // (after the `last_sent_version` bump above, so this broadcast's
+            // own bases age out correctly). SimNet and result
             // bitwise-identity are untouched — this is bookkeeping.
-            self.bases.push_back((self.version, params.flatten()));
+            self.bases.push_back((self.version, flat));
             self.prune_bases();
-        }
-        let frame: crate::transport::link::Frame =
-            encode_set_model(round as u32, self.version, &params.values).into();
-        for &t in targets {
-            // The whole SetModel frame is data-plane: SimNet charges exactly
-            // this encoded length in plaintext mode, which is the measured
-            // `wire payload == SimNet bytes` invariant the report documents.
-            self.wire().record_payload_frame(Phase::Train, Direction::Down, frame.len() as u64);
-            self.coord.send(t, frame.clone())?;
         }
         if let Charge::PerLink(bytes) = charge {
             let sizes = vec![bytes; targets.len()];
@@ -1977,50 +2064,61 @@ mod tests {
 
     #[test]
     fn pack_compression_is_bitwise_transparent() {
-        // The tentpole acceptance bar: `compression: pack` is lossless and
-        // ledger-transparent — final params, accuracy inputs, and the SimNet
+        // The tentpole acceptance bar: `compression: pack` — both the
+        // XOR-delta upload codec and the `SetModelPacked` downlink frames,
+        // with and without the rANS entropy stage — is lossless and
+        // ledger-transparent: final params, accuracy inputs, and the SimNet
         // byte ledger are identical to `none`; only measured wire bytes
         // change. Checked with and without dropouts.
         for dropout in [0.0, 0.4] {
             let plain = drive(&test_cfg(6, 4, dropout), 4, 0);
-            let mut pack_cfg = test_cfg(6, 4, dropout);
-            pack_cfg.federation.compression = CompressionMode::Pack;
-            let packed = drive(&pack_cfg, 4, 0);
-            assert_eq!(
-                fnv1a(&plain.0),
-                fnv1a(&packed.0),
-                "pack must be bitwise-transparent (dropout={dropout})"
-            );
-            assert_eq!(plain.1, packed.1, "SimNet upload bytes must match");
-            assert_eq!(plain.2, packed.2, "SimNet download bytes must match");
+            for entropy in [EntropyMode::None, EntropyMode::Rans] {
+                let mut pack_cfg = test_cfg(6, 4, dropout);
+                pack_cfg.federation.compression = CompressionMode::Pack;
+                pack_cfg.federation.entropy = entropy;
+                let packed = drive(&pack_cfg, 4, 0);
+                assert_eq!(
+                    fnv1a(&plain.0),
+                    fnv1a(&packed.0),
+                    "pack must be bitwise-transparent (dropout={dropout}, {entropy:?})"
+                );
+                assert_eq!(plain.1, packed.1, "SimNet upload bytes must match");
+                assert_eq!(plain.2, packed.2, "SimNet download bytes must match");
+            }
         }
     }
 
     #[test]
     fn pack_over_tcp_matches_none_over_channel_bitwise() {
         // Both axes at once: the codec negotiated over the WorkerHello →
-        // Assign handshake and applied by remote actors reproduces the
-        // uncompressed in-process run bit for bit (params and SimNet
-        // ledger).
+        // Assign handshake and applied by remote actors — XOR-delta uploads
+        // plus `SetModelPacked` downlink frames, with and without the rANS
+        // entropy stage — reproduces the uncompressed in-process run bit for
+        // bit (params and SimNet ledger).
         let chan = drive(&test_cfg(4, 4, 0.0), 3, 0);
-        let mut pack_cfg = test_cfg(4, 4, 0.0);
-        pack_cfg.federation.compression = CompressionMode::Pack;
-        let tcp = drive_tcp(&pack_cfg, 3, &[0; 4], 2);
-        assert_eq!(
-            fnv1a(&chan.0),
-            fnv1a(&tcp.0),
-            "pack over TCP loopback == none over channels"
-        );
-        assert_eq!(chan.1, tcp.1, "SimNet upload bytes must match");
-        assert_eq!(chan.2, tcp.2, "SimNet download bytes must match");
+        for entropy in [EntropyMode::None, EntropyMode::Rans] {
+            let mut pack_cfg = test_cfg(4, 4, 0.0);
+            pack_cfg.federation.compression = CompressionMode::Pack;
+            pack_cfg.federation.entropy = entropy;
+            let tcp = drive_tcp(&pack_cfg, 3, &[0; 4], 2);
+            assert_eq!(
+                fnv1a(&chan.0),
+                fnv1a(&tcp.0),
+                "pack ({entropy:?}) over TCP loopback == none over channels"
+            );
+            assert_eq!(chan.1, tcp.1, "SimNet upload bytes must match");
+            assert_eq!(chan.2, tcp.2, "SimNet download bytes must match");
+        }
     }
 
     #[test]
     fn pack_shrinks_measured_wire_payload_and_reports_the_ratio() {
         // The measured-wire side of the tentpole: under pack, logical
-        // payload bytes still equal the SimNet ledger while the measured
-        // payload (what actually crossed the transport) shrinks, and the
-        // report surfaces a < 1.0 compression ratio in table + JSON.
+        // payload bytes still equal the SimNet ledger **in both directions**
+        // while the measured payload (what actually crossed the transport)
+        // shrinks — uploads as XOR-delta packs, broadcasts as
+        // `SetModelPacked` frames — and the report surfaces < 1.0
+        // compression ratios (blended, up, and down) in table + JSON.
         let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
         let mut cfg = test_cfg(3, 2, 0.0);
         cfg.federation.compression = CompressionMode::Pack;
@@ -2044,24 +2142,162 @@ mod tests {
         let up = monitor.wire.counter(Phase::Train, Direction::Up);
         let down = monitor.wire.counter(Phase::Train, Direction::Down);
         assert_eq!(up.logical_bytes, sim.bytes_up, "logical payload == SimNet uploads");
-        assert_eq!(down.payload_bytes, sim.bytes_down, "broadcasts stay uncompressed");
-        assert_eq!(down.logical_bytes, down.payload_bytes);
+        assert_eq!(down.logical_bytes, sim.bytes_down, "logical payload == SimNet broadcasts");
         assert!(
             up.payload_bytes < up.logical_bytes,
             "pack must shrink the measured upload payload: {} vs {}",
             up.payload_bytes,
             up.logical_bytes
         );
+        assert!(
+            down.payload_bytes < down.logical_bytes,
+            "pack must shrink the measured broadcast payload: {} vs {}",
+            down.payload_bytes,
+            down.logical_bytes
+        );
         let report = crate::monitor::report::Report::from_monitor(&monitor);
-        assert!(report.wire_compression_ratio() < 1.0, "report ratio must be < 1.0");
+        assert!(report.wire_compression_ratio() < 1.0, "blended ratio must be < 1.0");
+        assert!(report.wire_compression_ratio_up() < 1.0, "upload ratio must be < 1.0");
+        assert!(report.wire_compression_ratio_down() < 1.0, "downlink ratio must be < 1.0");
         let json =
             crate::util::json::Json::parse(&report.to_json().to_string_pretty()).unwrap();
         let ratio = json.get("wire_compression_ratio").as_f64().unwrap();
         assert!(ratio < 1.0, "JSON ratio must be < 1.0, got {ratio}");
+        let ratio_up = json.get("wire_compression_ratio_up").as_f64().unwrap();
+        assert!(ratio_up < 1.0, "JSON up ratio must be < 1.0, got {ratio_up}");
+        let ratio_down = json.get("wire_compression_ratio_down").as_f64().unwrap();
+        assert!(ratio_down < 1.0, "JSON down ratio must be < 1.0, got {ratio_down}");
         assert!(
             report.render().contains("compression=pack"),
             "the run notes must name the codec"
         );
+    }
+
+    #[test]
+    fn rans_entropy_never_inflates_the_packed_wire() {
+        // The rANS stage is strictly opportunistic: the encoder ships the
+        // entropy-coded form only when it is smaller than the plain
+        // byte-plane packing (mode byte dispatch), so `pack+rans` measured
+        // bytes are bounded by `pack` in both directions while the logical
+        // ledgers stay identical.
+        let run = |entropy: EntropyMode| {
+            let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let mut cfg = test_cfg(3, 2, 0.0);
+            cfg.federation.compression = CompressionMode::Pack;
+            cfg.federation.entropy = entropy;
+            let mut rng = Rng::seeded(cfg.seed);
+            let bp = dummy_blueprint(3, &[0; 3], &mut rng);
+            let mut global = bp.init.clone();
+            let mut fed =
+                Federation::spawn(&monitor, &Deployment::InProcess, &cfg, bp).unwrap();
+            let all = vec![0usize, 1, 2];
+            let charge = Charge::PerLink(fed.init_model_charge(&global));
+            fed.broadcast_model(0, &global, &all, charge).unwrap();
+            for round in 0..3 {
+                let step = fed.policy_round(round, &all, true, &all).unwrap();
+                if let Some(m) = step.model {
+                    global = m;
+                }
+            }
+            fed.shutdown().unwrap();
+            (
+                fnv1a(&crate::transport::serialize::encode_params(&global.values)),
+                monitor.wire.counter(Phase::Train, Direction::Up),
+                monitor.wire.counter(Phase::Train, Direction::Down),
+            )
+        };
+        let plain = run(EntropyMode::None);
+        let rans = run(EntropyMode::Rans);
+        assert_eq!(plain.0, rans.0, "the entropy stage must stay bitwise-lossless");
+        assert_eq!(plain.1.logical_bytes, rans.1.logical_bytes, "up logical bytes match");
+        assert_eq!(plain.2.logical_bytes, rans.2.logical_bytes, "down logical bytes match");
+        assert!(
+            rans.1.payload_bytes <= plain.1.payload_bytes,
+            "rans must never inflate uploads: {} vs {}",
+            rans.1.payload_bytes,
+            plain.1.payload_bytes
+        );
+        assert!(
+            rans.2.payload_bytes <= plain.2.payload_bytes,
+            "rans must never inflate broadcasts: {} vs {}",
+            rans.2.payload_bytes,
+            plain.2.payload_bytes
+        );
+    }
+
+    #[test]
+    fn packed_downlink_falls_back_to_raw_when_the_base_left_the_window() {
+        // The async staleness clamp can evict the base the coordinator last
+        // sent a dropped-out client from the decode window. The rejoin
+        // broadcast to that client must degrade to a raw `SetModel` (never a
+        // dangling delta), the actor must adopt it, and the *next* packed
+        // broadcast must decode against that raw frame — the whole schedule
+        // staying bitwise- and SimNet-identical to an uncompressed run.
+        let run = |codec: CompressionMode, entropy: EntropyMode| {
+            let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+            let mut cfg = test_cfg(2, 2, 0.0);
+            cfg.federation.mode = FederationMode::Async;
+            cfg.federation.max_staleness = 1;
+            cfg.federation.buffer_size = 2;
+            cfg.federation.compression = codec;
+            cfg.federation.entropy = entropy;
+            let mut rng = Rng::seeded(cfg.seed);
+            let bp = dummy_blueprint(2, &[0; 2], &mut rng);
+            let mut global = bp.init.clone();
+            let mut fed =
+                Federation::spawn(&monitor, &Deployment::InProcess, &cfg, bp).unwrap();
+            let charge = Charge::PerLink(fed.init_model_charge(&global));
+            fed.broadcast_model(0, &global, &[0, 1], charge).unwrap(); // v1 → both
+            // Client 0 keeps receiving fresh models; client 1 sits out.
+            for r in 1..3 {
+                for v in global.values.iter_mut().flatten() {
+                    *v += 0.125;
+                }
+                let charge = Charge::PerLink(fed.model_down_charge(&global));
+                fed.broadcast_model(r, &global, &[0], charge).unwrap(); // v2, v3 → client 0
+            }
+            if matches!(codec, CompressionMode::Pack) {
+                // version 3, max_staleness 1 → the clamp pruned client 1's
+                // base (v1): the rejoin below can only go out raw.
+                let versions: Vec<u32> = fed.bases.iter().map(|(v, _)| *v).collect();
+                assert!(
+                    !versions.contains(&1),
+                    "client 1's base must have left the window: {versions:?}"
+                );
+            }
+            for v in global.values.iter_mut().flatten() {
+                *v += 0.125;
+            }
+            let charge = Charge::PerLink(fed.model_down_charge(&global));
+            fed.broadcast_model(3, &global, &[0, 1], charge).unwrap(); // v4: raw to client 1
+            for v in global.values.iter_mut().flatten() {
+                *v += 0.125;
+            }
+            let charge = Charge::PerLink(fed.model_down_charge(&global));
+            fed.broadcast_model(4, &global, &[0, 1], charge).unwrap(); // v5: packed vs v4
+            // A real aggregating round proves both actors train from the v5
+            // broadcast (a failed decode would surface as a Failed frame).
+            let step = fed.policy_round(5, &[0, 1], true, &[0, 1]).unwrap();
+            assert_eq!(step.results.len(), 2, "both clients must upload");
+            let model = step.model.expect("aggregating round returns a model");
+            fed.shutdown().unwrap();
+            let c = monitor.net.counter(Phase::Train);
+            (
+                fnv1a(&crate::transport::serialize::encode_params(&model.values)),
+                c.bytes_up,
+                c.bytes_down,
+            )
+        };
+        let plain = run(CompressionMode::None, EntropyMode::None);
+        for entropy in [EntropyMode::None, EntropyMode::Rans] {
+            let packed = run(CompressionMode::Pack, entropy);
+            assert_eq!(
+                plain.0, packed.0,
+                "raw fallback keeps the run bitwise-identical ({entropy:?})"
+            );
+            assert_eq!(plain.1, packed.1, "SimNet upload bytes must match");
+            assert_eq!(plain.2, packed.2, "SimNet download bytes must match");
+        }
     }
 
     #[test]

@@ -70,9 +70,10 @@ pub struct BuildStats {
 
 /// Connect to a coordinator (retrying while it binds — workers may start
 /// first) and perform the `WorkerHello → Assign` handshake, advertising this
-/// build's full upload-codec capability mask (the coordinator refuses the
-/// connection when the session's `federation.compression` needs a codec the
-/// worker did not advertise).
+/// build's full wire-codec capability mask — upload encoders plus the
+/// downlink `SetModelPacked` decoder (the coordinator refuses the connection
+/// when the session's `federation.compression` needs a capability the worker
+/// did not advertise).
 pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
     let mut stream = tcp::connect_with_retry(addr, timeout)?;
     let hello =

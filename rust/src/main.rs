@@ -14,8 +14,8 @@
 use std::process::ExitCode;
 
 use fedgraph::config::{
-    CompressionMode, DatasetFormat, FedGraphConfig, FederationMode, Method, PrivacyMode, Task,
-    TransportKind,
+    CompressionMode, DatasetFormat, EntropyMode, FedGraphConfig, FederationMode, Method,
+    PrivacyMode, Task, TransportKind,
 };
 use fedgraph::data;
 use fedgraph::he::{CkksParams, DpParams};
@@ -55,7 +55,8 @@ fn print_help() {
          \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
          \x20     [--workers W]\n\
          \x20     [--compression none|pack|quantized] [--quantized-bits 4|8]\n\
-         \x20     [--no-error-feedback] [--trace <out.trace.json>]\n\
+         \x20     [--entropy none|rans] [--no-error-feedback]\n\
+         \x20     [--trace <out.trace.json>]\n\
          \x20     --trace records a cross-process span timeline (coordinator,\n\
          \x20     trainer actors, codec, sockets, workers) and writes Chrome\n\
          \x20     trace-event JSON loadable in Perfetto; the run itself is\n\
@@ -66,8 +67,10 @@ fn print_help() {
          \x20     (O(assigned nodes) startup work and memory). The two\n\
          \x20     formats are statistically matched but bitwise different.\n\
          \x20     --compression pack is lossless and bitwise-identical to\n\
-         \x20     none (only measured wire bytes shrink); quantized is a\n\
-         \x20     lossy int8/int4 upload-delta codec (plaintext/DP only)\n\
+         \x20     none in both directions (only measured wire bytes shrink);\n\
+         \x20     quantized is a lossy int8/int4 upload-delta codec\n\
+         \x20     (plaintext/DP only); --entropy rans adds a lossless rANS\n\
+         \x20     entropy stage behind the pack codec\n\
          \x20     With --transport tcp the run waits for W `fedgraph worker`\n\
          \x20     processes to connect; results are bitwise-identical to the\n\
          \x20     in-process channel transport for the same config/seed.\n\
@@ -249,6 +252,9 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--compression") {
         cfg.federation.compression = CompressionMode::parse(v)?;
+    }
+    if let Some(v) = flag_value(args, "--entropy") {
+        cfg.federation.entropy = EntropyMode::parse(v)?;
     }
     if let CompressionMode::Quantized { mut bits, mut error_feedback } =
         cfg.federation.compression

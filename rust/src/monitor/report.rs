@@ -12,12 +12,16 @@
 //! actor-staged simulated traffic (BNS-GCN halo re-shipments, FedLink
 //! exchanges, the FedGCN pre-train exchange — simulated transfers with no
 //! frame counterpart), control frames (measured, never charged), and
-//! compressed uploads (`federation.compression: pack` keeps SimNet at the
-//! *logical* plain-f32 size while the measured payload shrinks). The wire
-//! table therefore prints measured payload bytes next to logical bytes and
-//! their quotient — the **compression ratio** (< 1.0 whenever the upload
-//! codec saved real bytes); the same figures land in the JSON under each
-//! phase's `wire` entry plus a run-level `wire_compression_ratio`.
+//! compressed transfers (`federation.compression: pack` keeps SimNet at the
+//! *logical* plain-f32 size while the measured payload shrinks — uploads
+//! *and* `SetModelPacked` broadcasts, further with `federation.entropy:
+//! rans`). The wire table therefore prints measured payload bytes next to
+//! logical bytes and their per-direction quotients — the **compression
+//! ratios** (< 1.0 whenever the codec saved real bytes in that direction);
+//! the same figures land in the JSON under each phase's `wire` entry plus
+//! run-level `wire_compression_ratio` / `_up` / `_down` keys. The
+//! per-direction split exists because a compressed uplink would otherwise
+//! mask an uncompressed downlink (or vice versa) inside one blended number.
 
 use crate::trace::{MetricsSnapshot, TrackSummary};
 use crate::transport::{Direction, Phase, WireCounter};
@@ -146,9 +150,11 @@ impl Report {
         self.wire.iter().map(|(_, up, down)| up.logical_bytes + down.logical_bytes).sum()
     }
 
-    /// Measured payload bytes over logical payload bytes across all phases:
-    /// 1.0 without compression, < 1.0 when the `pack`/`quantized` upload
-    /// codec saved real wire bytes.
+    /// Measured payload bytes over logical payload bytes across all phases
+    /// and both directions: 1.0 without compression, < 1.0 when a codec
+    /// saved real wire bytes. The blended headline number — see the
+    /// per-direction [`Report::wire_compression_ratio_up`] /
+    /// [`Report::wire_compression_ratio_down`] for the honest split.
     pub fn wire_compression_ratio(&self) -> f64 {
         let logical = self.wire_logical_bytes();
         if logical == 0 {
@@ -156,6 +162,30 @@ impl Report {
         } else {
             self.wire_payload_bytes() as f64 / logical as f64
         }
+    }
+
+    fn ratio_of(payload: u64, logical: u64) -> f64 {
+        if logical == 0 {
+            1.0
+        } else {
+            payload as f64 / logical as f64
+        }
+    }
+
+    /// Uplink (client → coordinator) measured/logical payload ratio across
+    /// all phases: what the `pack`/`quantized` upload codec saved.
+    pub fn wire_compression_ratio_up(&self) -> f64 {
+        let payload: u64 = self.wire.iter().map(|(_, up, _)| up.payload_bytes).sum();
+        let logical: u64 = self.wire.iter().map(|(_, up, _)| up.logical_bytes).sum();
+        Self::ratio_of(payload, logical)
+    }
+
+    /// Downlink (coordinator → client) measured/logical payload ratio across
+    /// all phases: what the `SetModelPacked` broadcast codec saved.
+    pub fn wire_compression_ratio_down(&self) -> f64 {
+        let payload: u64 = self.wire.iter().map(|(_, _, down)| down.payload_bytes).sum();
+        let logical: u64 = self.wire.iter().map(|(_, _, down)| down.logical_bytes).sum();
+        Self::ratio_of(payload, logical)
     }
 
     pub fn total_bytes(&self) -> u64 {
@@ -214,24 +244,34 @@ impl Report {
             } else {
                 format!("Wire (measured, transport={})", self.transport)
             };
-            let mut w =
-                Table::new(&["phase", "frames", "bytes", "payload bytes", "logical bytes", "ratio"])
-                    .with_title(&title);
-            for (phase, up, down) in &self.wire {
-                let payload = up.payload_bytes + down.payload_bytes;
-                let logical = up.logical_bytes + down.logical_bytes;
-                let ratio = if logical == 0 {
+            let mut w = Table::new(&[
+                "phase",
+                "frames",
+                "bytes",
+                "payload bytes",
+                "logical bytes",
+                "ratio up",
+                "ratio down",
+            ])
+            .with_title(&title);
+            let fmt_ratio = |payload: u64, logical: u64| {
+                if logical == 0 {
                     "-".to_string()
                 } else {
                     format!("{:.2}", payload as f64 / logical as f64)
-                };
+                }
+            };
+            for (phase, up, down) in &self.wire {
+                let payload = up.payload_bytes + down.payload_bytes;
+                let logical = up.logical_bytes + down.logical_bytes;
                 w.row(&[
                     phase.name().into(),
                     (up.frames + down.frames).to_string(),
                     fmt_bytes(up.bytes + down.bytes),
                     fmt_bytes(payload),
                     fmt_bytes(logical),
-                    ratio,
+                    fmt_ratio(up.payload_bytes, up.logical_bytes),
+                    fmt_ratio(down.payload_bytes, down.logical_bytes),
                 ]);
             }
             out.push_str(&w.render());
@@ -413,6 +453,8 @@ impl Report {
             ("trace_dropped", (self.trace_dropped as usize).into()),
             ("worker_metrics", worker_metrics),
             ("wire_compression_ratio", self.wire_compression_ratio().into()),
+            ("wire_compression_ratio_up", self.wire_compression_ratio_up().into()),
+            ("wire_compression_ratio_down", self.wire_compression_ratio_down().into()),
             ("startup_secs", self.startup_secs.into()),
             ("session_clients", self.session_clients.into()),
             ("session_bytes", (self.session_bytes as usize).into()),
@@ -501,9 +543,14 @@ mod tests {
         assert_eq!(wire_train.get("payload_bytes_down").as_f64(), Some(1_000_000.0));
         assert_eq!(wire_train.get("logical_bytes_down").as_f64(), Some(1_000_000.0));
         assert_eq!(wire_train.get("bytes_up").as_f64(), Some(50.0));
-        // No codec in play: measured payload == logical payload, ratio 1.0.
+        // No codec in play: measured payload == logical payload, ratio 1.0
+        // in every direction.
         assert!((r.wire_compression_ratio() - 1.0).abs() < 1e-12);
+        assert!((r.wire_compression_ratio_up() - 1.0).abs() < 1e-12);
+        assert!((r.wire_compression_ratio_down() - 1.0).abs() < 1e-12);
         assert_eq!(parsed.get("wire_compression_ratio").as_f64(), Some(1.0));
+        assert_eq!(parsed.get("wire_compression_ratio_up").as_f64(), Some(1.0));
+        assert_eq!(parsed.get("wire_compression_ratio_down").as_f64(), Some(1.0));
     }
 
     #[test]
@@ -547,6 +594,8 @@ mod tests {
                 "transport",
                 "wire",
                 "wire_compression_ratio",
+                "wire_compression_ratio_down",
+                "wire_compression_ratio_up",
             ],
             "top-level report schema drifted"
         );
@@ -612,14 +661,24 @@ mod tests {
         // A packed upload: 1 MB logical shipped as 300 kB on the wire.
         m.wire.record_frame(Phase::Train, Direction::Up, 300_060);
         m.wire.note_payload(Phase::Train, Direction::Up, 300_000, 1_000_000);
+        // A packed broadcast: 2 MB logical shipped as 1 MB on the wire.
+        m.wire.record_frame(Phase::Train, Direction::Down, 1_000_020);
+        m.wire.note_payload(Phase::Train, Direction::Down, 1_000_000, 2_000_000);
         let r = Report::from_monitor(&m);
-        assert_eq!(r.wire_payload_bytes(), 300_000);
-        assert_eq!(r.wire_logical_bytes(), 1_000_000);
-        assert!((r.wire_compression_ratio() - 0.3).abs() < 1e-12);
+        assert_eq!(r.wire_payload_bytes(), 1_300_000);
+        assert_eq!(r.wire_logical_bytes(), 3_000_000);
+        // Per-direction ratios, not a blended number: 0.3 up, 0.5 down.
+        assert!((r.wire_compression_ratio_up() - 0.3).abs() < 1e-12);
+        assert!((r.wire_compression_ratio_down() - 0.5).abs() < 1e-12);
+        assert!((r.wire_compression_ratio() - 1_300_000.0 / 3_000_000.0).abs() < 1e-12);
         let text = r.render();
-        assert!(text.contains("0.30"), "ratio column must render:\n{text}");
+        assert!(text.contains("ratio up"), "per-direction columns must render:\n{text}");
+        assert!(text.contains("0.30"), "uplink ratio must render:\n{text}");
+        assert!(text.contains("0.50"), "downlink ratio must render:\n{text}");
         let j = crate::util::json::Json::parse(&r.to_json().to_string_pretty()).unwrap();
         let ratio = j.get("wire_compression_ratio").as_f64().unwrap();
         assert!(ratio < 1.0, "JSON must expose the sub-1.0 ratio, got {ratio}");
+        assert_eq!(j.get("wire_compression_ratio_up").as_f64(), Some(0.3));
+        assert_eq!(j.get("wire_compression_ratio_down").as_f64(), Some(0.5));
     }
 }

@@ -23,12 +23,14 @@
 //!   actor-staged *simulated* transfers (BNS-GCN halo re-shipments, FedLink
 //!   per-step exchanges, the FedGCN pre-train exchange) have no frame
 //!   counterpart at all, and under `federation.compression: pack` the
-//!   measured upload payload shrinks below the SimNet charge (which stays at
-//!   the logical plain-f32 size so `pack` is ledger-transparent). Each
-//!   [`WireCounter`] therefore carries both a measured `payload_bytes` and a
-//!   `logical_bytes` figure; their quotient is the compression ratio the
-//!   report prints. The full framing/codec byte layout lives in
-//!   `docs/WIRE_FORMAT.md`.
+//!   measured payload shrinks below the SimNet charge in *both* directions
+//!   — uploads and `SetModelPacked` broadcasts — while the SimNet charge
+//!   stays at the logical plain-f32 size so `pack` is ledger-transparent
+//!   (`federation.entropy: rans` shrinks the measured side further, same
+//!   contract). Each [`WireCounter`] therefore carries both a measured
+//!   `payload_bytes` and a `logical_bytes` figure; their quotient is the
+//!   per-direction compression ratio the report prints. The full
+//!   framing/codec byte layout lives in `docs/WIRE_FORMAT.md`.
 //!
 //! Since the deployment refactor trainers may also live in separate worker
 //! processes over the [`tcp`] backend; the byte ledger stays coordinator-side
@@ -419,8 +421,9 @@ pub struct WireCounter {
     /// Total measured frame bytes (control + payload).
     pub bytes: u64,
     /// The data-plane portion as it actually crossed the wire — compressed
-    /// when an upload codec is active. For uncompressed plaintext/DP
-    /// sessions `payload_bytes == SimNet bytes` exactly for payload frames;
+    /// when a codec is active (`pack` compresses uploads *and* broadcasts;
+    /// `quantized` uploads only). For uncompressed plaintext/DP sessions
+    /// `payload_bytes == SimNet bytes` exactly for payload frames;
     /// control frames (Hello, Train, Eval, Metric, Stop, ModelVersion) are
     /// measured in `bytes` but never counted here — matching the protocol's
     /// ledger rule that orchestration is unbilled.
@@ -477,9 +480,11 @@ impl WireLedger {
         e.logical_bytes += logical_bytes;
     }
 
-    /// Count a frame that is payload end to end (model broadcasts: SimNet
-    /// charges the whole encoded frame; broadcasts are never compressed, so
-    /// measured and logical coincide).
+    /// Count a frame that is payload end to end with measured == logical —
+    /// uncompressed model broadcasts (SimNet charges the whole encoded
+    /// frame). Packed broadcasts instead pair [`WireLedger::record_frame`]
+    /// with a [`WireLedger::note_payload`] whose logical size is the raw
+    /// `SetModel` frame the pack replaces.
     pub fn record_payload_frame(&self, phase: Phase, dir: Direction, len: u64) {
         let mut c = self.counters.lock().unwrap();
         let e = c.entry((phase, dir)).or_default();

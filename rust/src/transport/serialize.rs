@@ -8,12 +8,15 @@
 //! byte layout (framing, handshake, and codec negotiation) is documented in
 //! `docs/WIRE_FORMAT.md`.
 //!
-//! ## Upload codecs (`federation.compression`)
+//! ## Wire codecs (`federation.compression`, `federation.entropy`)
 //!
-//! Model uploads may additionally pass through one of two codecs before they
-//! are framed (selected by `federation.compression`; both operate on the
-//! *flattened* parameter vector against the broadcast the client trained
-//! from):
+//! Model payloads may additionally pass through one of two codecs before
+//! they are framed (selected by `federation.compression`; both operate on
+//! the *flattened* parameter vector against a shared base). The lossless
+//! `pack` codec runs in **both directions**: uploads delta against the
+//! broadcast the client trained from, and `SetModelPacked` downlink
+//! broadcasts delta against the last version the coordinator sent that
+//! client:
 //!
 //! - [`pack_delta`] / [`unpack_delta`] — **lossless** (`compression: pack`).
 //!   The upload's f32 bit patterns are XORed against the base broadcast's,
@@ -32,6 +35,15 @@
 //!   deterministic — the client computes the identical dequantized delta to
 //!   maintain its error-feedback residual, so client and coordinator agree
 //!   bit-for-bit on what the wire carried.
+//!
+//! Behind the byte-plane pack sits an optional **entropy stage**
+//! (`federation.entropy: rans`): [`pack_delta_rans`] passes each plane's
+//! RLE token stream through a static-model byte-wise rANS coder
+//! ([`rans_encode`] / [`rans_decode`]) with the per-plane frequency table
+//! serialized in the blob header. The blob self-describes via its mode
+//! byte, so [`unpack_delta`] decodes all pack variants with no extra
+//! parameter — and, like everything else here, the stage is lossless and
+//! only changes measured wire bytes.
 //!
 //! Both codecs are pure byte transforms with typed [`WireError`] failures:
 //! truncated or malformed blobs surface as errors, never panics (property
@@ -296,6 +308,165 @@ pub const QUANT_CHUNK: usize = 256;
 
 const PACK_RAW: u8 = 0;
 const PACK_PLANES: u8 = 1;
+const PACK_PLANES_RANS: u8 = 2;
+
+/// Precision of the static rANS frequency model: every stream's normalized
+/// symbol frequencies sum to exactly `1 << RANS_SCALE_BITS`.
+const RANS_SCALE_BITS: u32 = 12;
+const RANS_SCALE: u32 = 1 << RANS_SCALE_BITS;
+/// Lower bound of the 32-bit rANS state's renormalization interval.
+const RANS_L: u32 = 1 << 23;
+
+/// Normalize raw symbol counts to frequencies summing exactly to
+/// [`RANS_SCALE`], every present symbol ≥ 1. Deterministic: the fix-up
+/// always adjusts the currently-largest entry, so encoder and any
+/// re-encoder agree on the table.
+fn rans_normalize(counts: &[u32; 256], total: u64) -> Vec<(u8, u32)> {
+    let mut freqs: Vec<(u8, u32)> = Vec::new();
+    for (s, &c) in counts.iter().enumerate() {
+        if c > 0 {
+            let f = ((c as u64 * RANS_SCALE as u64) / total).max(1) as u32;
+            freqs.push((s as u8, f));
+        }
+    }
+    let mut sum: i64 = freqs.iter().map(|&(_, f)| f as i64).sum();
+    while sum > RANS_SCALE as i64 {
+        // Shave the currently-largest entry, never below 1. Terminates:
+        // at most 256 symbols of frequency 1 sum far below the scale.
+        let idx = (0..freqs.len()).max_by_key(|&i| freqs[i].1).unwrap();
+        let take = (sum - RANS_SCALE as i64).min(freqs[idx].1 as i64 - 1);
+        if take == 0 {
+            break;
+        }
+        freqs[idx].1 -= take as u32;
+        sum -= take;
+    }
+    if sum < RANS_SCALE as i64 {
+        let idx = (0..freqs.len()).max_by_key(|&i| freqs[i].1).unwrap();
+        freqs[idx].1 += (RANS_SCALE as i64 - sum) as u32;
+    }
+    freqs
+}
+
+/// Entropy-code `data` with a static byte-wise rANS model and append the
+/// self-contained stream to `out`: `varint(byte count)`, then (when
+/// non-empty) the sparse frequency table (`varint(symbol count)`, then per
+/// symbol `u8 symbol, varint(frequency)` in strictly increasing symbol
+/// order, frequencies summing to `1 << 12`), then `varint(coded len)` and
+/// the coded bytes (4-byte LE final state first, renormalization bytes in
+/// decode order). [`rans_decode`] reads it back exactly.
+pub fn rans_encode(data: &[u8], out: &mut Vec<u8>) {
+    write_varint(out, data.len() as u64);
+    if data.is_empty() {
+        return;
+    }
+    let mut counts = [0u32; 256];
+    for &b in data {
+        counts[b as usize] += 1;
+    }
+    let freqs = rans_normalize(&counts, data.len() as u64);
+    write_varint(out, freqs.len() as u64);
+    let mut freq = [0u32; 256];
+    let mut cum = [0u32; 256];
+    let mut acc = 0u32;
+    for &(sym, f) in &freqs {
+        out.push(sym);
+        write_varint(out, f as u64);
+        freq[sym as usize] = f;
+        cum[sym as usize] = acc;
+        acc += f;
+    }
+    // Encode in reverse so the decoder reads the stream forward.
+    let mut x: u32 = RANS_L;
+    let mut tmp: Vec<u8> = Vec::with_capacity(data.len() / 2 + 8);
+    for &b in data.iter().rev() {
+        let f = freq[b as usize];
+        let x_max = ((RANS_L >> RANS_SCALE_BITS) << 8) * f;
+        while x >= x_max {
+            tmp.push(x as u8);
+            x >>= 8;
+        }
+        x = ((x / f) << RANS_SCALE_BITS) + (x % f) + cum[b as usize];
+    }
+    write_varint(out, (4 + tmp.len()) as u64);
+    out.extend_from_slice(&x.to_le_bytes());
+    out.extend(tmp.iter().rev());
+}
+
+/// Inverse of [`rans_encode`], consuming one stream from `buf` at `*pos`.
+/// `max_len` bounds the allocation: a stream claiming more decoded bytes
+/// than the caller's declared plane length is rejected before any buffer is
+/// sized from it. Truncated, bit-flipped, or bad-frequency-table streams
+/// yield a typed [`WireError`], never a panic — the decoder additionally
+/// checks that the state lands back on its initial value with every coded
+/// byte consumed.
+pub fn rans_decode(buf: &[u8], pos: &mut usize, max_len: usize) -> Result<Vec<u8>, WireError> {
+    let n = read_varint(buf, pos)? as usize;
+    if n > max_len {
+        return Err(WireError::Malformed("rans: declared length exceeds bound"));
+    }
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let k = read_varint(buf, pos)? as usize;
+    if k == 0 || k > 256 {
+        return Err(WireError::Malformed("rans: bad symbol count"));
+    }
+    let mut freq = [0u32; 256];
+    let mut cum = [0u32; 256];
+    let mut slot_sym = [0u8; RANS_SCALE as usize];
+    let mut acc: u32 = 0;
+    let mut last: i32 = -1;
+    for _ in 0..k {
+        let sym = *buf.get(*pos).ok_or(WireError::Truncated)?;
+        *pos += 1;
+        if (sym as i32) <= last {
+            return Err(WireError::Malformed("rans: symbols not strictly increasing"));
+        }
+        last = sym as i32;
+        let f = read_varint(buf, pos)?;
+        if f == 0 || f > RANS_SCALE as u64 {
+            return Err(WireError::Malformed("rans: bad symbol frequency"));
+        }
+        let f = f as u32;
+        if acc + f > RANS_SCALE {
+            return Err(WireError::Malformed("rans: frequency table overflows scale"));
+        }
+        freq[sym as usize] = f;
+        cum[sym as usize] = acc;
+        for slot in slot_sym.iter_mut().skip(acc as usize).take(f as usize) {
+            *slot = sym;
+        }
+        acc += f;
+    }
+    if acc != RANS_SCALE {
+        return Err(WireError::Malformed("rans: frequency table does not sum to scale"));
+    }
+    let m = read_varint(buf, pos)? as usize;
+    let stream = buf.get(*pos..*pos + m).ok_or(WireError::Truncated)?;
+    *pos += m;
+    if m < 4 {
+        return Err(WireError::Truncated);
+    }
+    let mut x = u32::from_le_bytes(stream[0..4].try_into().unwrap());
+    let mut sp = 4usize;
+    let mut out = vec![0u8; n];
+    for b in out.iter_mut() {
+        let slot = x & (RANS_SCALE - 1);
+        let sym = slot_sym[slot as usize];
+        *b = sym;
+        x = freq[sym as usize] * (x >> RANS_SCALE_BITS) + slot - cum[sym as usize];
+        while x < RANS_L {
+            let byte = *stream.get(sp).ok_or(WireError::Truncated)?;
+            sp += 1;
+            x = (x << 8) | byte as u32;
+        }
+    }
+    if sp != m || x != RANS_L {
+        return Err(WireError::Malformed("rans: stream does not terminate cleanly"));
+    }
+    Ok(out)
+}
 
 fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     loop {
@@ -400,8 +571,24 @@ fn rle_decode(buf: &[u8], pos: &mut usize, n: usize) -> Result<Vec<u8>, WireErro
 /// with its decoder (a larger model could not cross the framed transport
 /// anyway — its raw payload would exceed the 1 GiB frame cap).
 pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
-    debug_assert!(upload.len() <= MAX_CODEC_VALUES, "upload exceeds the codec value cap");
     let _sp = crate::trace::span("codec", "pack_delta").arg("values", upload.len());
+    pack_delta_impl(upload, base, false)
+}
+
+/// The entropy-coded sibling of [`pack_delta`] (`federation.entropy:
+/// rans`): the same XOR-delta + byte-plane + zero-RLE pipeline, with each
+/// plane's RLE token stream additionally passed through the static rANS
+/// coder ([`rans_encode`]) when that wins over the plain RLE bytes. The
+/// blob self-describes via its mode byte, so [`unpack_delta`] decodes it
+/// with no extra parameter; the raw-fallback size bound (`4·n + 5`) and the
+/// bit-exactness guarantee are unchanged.
+pub fn pack_delta_rans(upload: &[f32], base: &[f32]) -> Vec<u8> {
+    let _sp = crate::trace::span("codec", "pack_delta_rans").arg("values", upload.len());
+    pack_delta_impl(upload, base, true)
+}
+
+fn pack_delta_impl(upload: &[f32], base: &[f32], entropy: bool) -> Vec<u8> {
+    debug_assert!(upload.len() <= MAX_CODEC_VALUES, "upload exceeds the codec value cap");
     let n = upload.len();
     if base.len() == n {
         let mut planes: [Vec<u8>; 4] = std::array::from_fn(|_| Vec::with_capacity(n));
@@ -413,6 +600,19 @@ pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
         }
         let streams: Vec<Vec<u8>> = planes.iter().map(|p| rle_encode(p)).collect();
         let packed_len: usize = streams.iter().map(|s| s.len()).sum();
+        if entropy {
+            let mut coded = Vec::with_capacity(packed_len / 2 + 32);
+            for s in &streams {
+                rans_encode(s, &mut coded);
+            }
+            if coded.len() < packed_len && coded.len() < 4 * n {
+                let mut out = Vec::with_capacity(5 + coded.len());
+                out.extend_from_slice(&(n as u32).to_le_bytes());
+                out.push(PACK_PLANES_RANS);
+                out.extend_from_slice(&coded);
+                return out;
+            }
+        }
         if packed_len < 4 * n {
             let mut out = Vec::with_capacity(5 + packed_len);
             out.extend_from_slice(&(n as u32).to_le_bytes());
@@ -428,6 +628,16 @@ pub fn pack_delta(upload: &[f32], base: &[f32]) -> Vec<u8> {
     out.push(PACK_RAW);
     for u in upload {
         out.extend_from_slice(&u.to_le_bytes());
+    }
+    out
+}
+
+/// Reassemble f32 values from four decoded byte planes XORed against `base`.
+fn planes_to_values(planes: &[Vec<u8>], base: &[f32]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(base.len());
+    for (i, b) in base.iter().enumerate() {
+        let x = u32::from_le_bytes([planes[0][i], planes[1][i], planes[2][i], planes[3][i]]);
+        out.push(f32::from_bits(x ^ b.to_bits()));
     }
     out
 }
@@ -470,17 +680,30 @@ pub fn unpack_delta(blob: &[u8], base: &[f32]) -> Result<Vec<f32>, WireError> {
             if pos != blob.len() {
                 return Err(WireError::Malformed("pack: trailing bytes"));
             }
-            let mut out = Vec::with_capacity(n);
-            for (i, b) in base.iter().enumerate() {
-                let x = u32::from_le_bytes([
-                    planes[0][i],
-                    planes[1][i],
-                    planes[2][i],
-                    planes[3][i],
-                ]);
-                out.push(f32::from_bits(x ^ b.to_bits()));
+            Ok(planes_to_values(&planes, base))
+        }
+        PACK_PLANES_RANS => {
+            if base.len() != n {
+                return Err(WireError::Malformed("pack: base length mismatch"));
             }
-            Ok(out)
+            let mut planes = Vec::with_capacity(4);
+            for _ in 0..4 {
+                // An RLE stream for an n-byte plane never exceeds ~2·n
+                // (every literal byte costs ≤ 1 token byte of overhead, zero
+                // runs shrink), so the entropy stage's declared length is
+                // bounded before any allocation.
+                let rle = rans_decode(blob, &mut pos, 2 * n + 16)?;
+                let mut rp = 0usize;
+                let plane = rle_decode(&rle, &mut rp, n)?;
+                if rp != rle.len() {
+                    return Err(WireError::Malformed("pack: trailing rle bytes in rans stream"));
+                }
+                planes.push(plane);
+            }
+            if pos != blob.len() {
+                return Err(WireError::Malformed("pack: trailing bytes"));
+            }
+            Ok(planes_to_values(&planes, base))
         }
         t => Err(WireError::BadTag(t)),
     }
@@ -740,6 +963,130 @@ mod tests {
         bad[4] = 9;
         assert!(matches!(unpack_delta(&bad, &base), Err(WireError::BadTag(9))));
         // Trailing garbage is rejected.
+        let mut long = blob.clone();
+        long.push(0xAB);
+        assert!(unpack_delta(&long, &base).is_err());
+    }
+
+    #[test]
+    fn rans_roundtrip_identity_on_representative_streams() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],
+            vec![0u8; 1],
+            vec![0u8; 5000],                                  // all-zero plane
+            vec![0xFF; 333],                                  // single non-zero symbol
+            (0..=255u8).collect(),                            // uniform alphabet
+            (0..10_000u32).map(|i| (i * 2654435761) as u8).collect(), // max-entropy
+            (0..4096u32).map(|i| if i % 7 == 0 { (i % 13) as u8 } else { 0 }).collect(),
+        ];
+        for data in cases {
+            let mut blob = Vec::new();
+            rans_encode(&data, &mut blob);
+            let mut pos = 0usize;
+            let back = rans_decode(&blob, &mut pos, data.len()).unwrap();
+            assert_eq!(back, data, "rans must be an identity (len {})", data.len());
+            assert_eq!(pos, blob.len(), "decode must consume the whole stream");
+        }
+    }
+
+    #[test]
+    fn rans_compresses_skewed_streams() {
+        // A zero-dominated stream (the shape RLE token streams take for
+        // near-broadcast deltas) must shrink well below its raw length.
+        let data: Vec<u8> =
+            (0..8192u32).map(|i| if i % 11 == 0 { 1 + (i % 3) as u8 } else { 0 }).collect();
+        let mut blob = Vec::new();
+        rans_encode(&data, &mut blob);
+        assert!(blob.len() < data.len() / 2, "rans {} vs raw {}", blob.len(), data.len());
+    }
+
+    #[test]
+    fn rans_rejects_truncation_bitflips_and_bad_tables() {
+        let data: Vec<u8> = (0..2000u32).map(|i| (i % 17) as u8).collect();
+        let mut blob = Vec::new();
+        rans_encode(&data, &mut blob);
+        // Truncation at every interesting boundary is a typed error.
+        for cut in [0, 1, 2, 5, blob.len() / 2, blob.len() - 1] {
+            let mut pos = 0usize;
+            assert!(
+                rans_decode(&blob[..cut], &mut pos, data.len()).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
+        // A declared length beyond the caller's bound is rejected before
+        // any allocation is sized from it.
+        let mut pos = 0usize;
+        assert!(matches!(
+            rans_decode(&blob, &mut pos, data.len() - 1),
+            Err(WireError::Malformed(_))
+        ));
+        // Every single-bit flip either decodes to a typed error or to a
+        // bounded byte vector — never a panic or oversized allocation.
+        for i in 0..blob.len() {
+            for bit in [0x01u8, 0x80] {
+                let mut bad = blob.clone();
+                bad[i] ^= bit;
+                let mut pos = 0usize;
+                if let Ok(out) = rans_decode(&bad, &mut pos, data.len()) {
+                    assert!(out.len() <= data.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pack_rans_roundtrips_and_beats_plain_pack_on_skewed_planes() {
+        // Near-broadcast upload: sign/exponent planes are almost all zero,
+        // and the literal bytes in the low planes are heavily skewed — the
+        // entropy stage should win over plain RLE.
+        let base: Vec<f32> = (0..4096).map(|i| ((i % 97) as f32) * 0.01 + 0.5).collect();
+        let upload: Vec<f32> = base.iter().map(|b| b + 0.0003).collect();
+        let plain = pack_delta(&upload, &base);
+        let coded = pack_delta_rans(&upload, &base);
+        assert!(
+            coded.len() <= plain.len(),
+            "rans ({}) must not exceed plain pack ({})",
+            coded.len(),
+            plain.len()
+        );
+        let back = unpack_delta(&coded, &base).unwrap();
+        for (a, b) in upload.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pack+rans must stay bit-exact");
+        }
+        // Specials roundtrip through the entropy stage too.
+        let mut specials = upload.clone();
+        specials[0] = -0.0;
+        specials[1] = f32::NEG_INFINITY;
+        specials[2] = f32::from_bits(0x7FC0_5678);
+        let blob = pack_delta_rans(&specials, &base);
+        let back = unpack_delta(&blob, &base).unwrap();
+        for (a, b) in specials.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Incompressible inputs keep the raw bound.
+        let noise: Vec<f32> = (0..512u32)
+            .map(|i| f32::from_bits(0x9E37_79B9u32.wrapping_mul(i + 3)))
+            .collect();
+        let blob = pack_delta_rans(&noise, &base[..512]);
+        assert!(blob.len() <= 4 * noise.len() + 5, "blob {} exceeds raw bound", blob.len());
+        for (a, b) in noise.iter().zip(&unpack_delta(&blob, &base[..512]).unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn pack_rans_rejects_truncation_and_garbage() {
+        let base: Vec<f32> = (0..600).map(|i| (i as f32) * 0.25 - 30.0).collect();
+        let upload: Vec<f32> = base.iter().map(|b| b * 0.99 + 0.001).collect();
+        let blob = pack_delta_rans(&upload, &base);
+        assert_eq!(blob[4], 2, "skewed delta should pick the rans mode");
+        for cut in [0, 3, 4, 5, blob.len() / 2, blob.len() - 1] {
+            assert!(
+                unpack_delta(&blob[..cut], &base).is_err(),
+                "cut at {cut} must not decode"
+            );
+        }
+        assert!(matches!(unpack_delta(&blob, &base[..10]), Err(WireError::Malformed(_))));
         let mut long = blob.clone();
         long.push(0xAB);
         assert!(unpack_delta(&long, &base).is_err());

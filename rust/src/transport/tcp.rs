@@ -5,8 +5,9 @@
 //! machines) over sockets, so trainer actors can run as `fedgraph worker`
 //! processes — the paper's "scalable deployment across multiple physical
 //! machines" claim made literal. The complete wire reference (this framing,
-//! the `WorkerHello → Assign` handshake with its upload-codec negotiation,
-//! and the ledger invariants) lives in `docs/WIRE_FORMAT.md`.
+//! the `WorkerHello → Assign` handshake with its wire-codec negotiation —
+//! upload encoders plus the downlink `SetModelPacked` decoder — and the
+//! ledger invariants) lives in `docs/WIRE_FORMAT.md`.
 //!
 //! ## Socket framing
 //!

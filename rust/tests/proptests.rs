@@ -16,8 +16,8 @@ use fedgraph::lowrank::{aggregate_projected, Projection};
 use fedgraph::runtime::ParamSet;
 use fedgraph::testing::{gen, prop_check};
 use fedgraph::transport::serialize::{
-    decode_params, dequantize_delta, encode_params, pack_delta, quantize_delta, unpack_delta,
-    QUANT_CHUNK,
+    decode_params, dequantize_delta, encode_params, pack_delta, pack_delta_rans, quantize_delta,
+    rans_decode, rans_encode, unpack_delta, QUANT_CHUNK,
 };
 
 #[test]
@@ -257,6 +257,116 @@ fn prop_pack_codec_roundtrip_is_bitwise() {
             assert_eq!(a.to_bits(), b.to_bits(), "pack must be bitwise-lossless");
         }
         // Truncation anywhere yields a typed WireError, never a panic.
+        let cut = rng.below(blob.len());
+        assert!(unpack_delta(&blob[..cut], &base).is_err(), "cut at {cut} must not decode");
+    });
+}
+
+#[test]
+fn prop_rans_roundtrip_identity() {
+    // The entropy coder: encode∘decode is the identity on arbitrary byte
+    // streams across the whole skew spectrum — empty, all-zero (the RLE
+    // shape of a near-broadcast delta), heavily skewed, and max-entropy
+    // noise — and the decoder consumes exactly the bytes the encoder wrote.
+    prop_check("rans-roundtrip", 60, |rng| {
+        let len = rng.range(0, 6000);
+        let data: Vec<u8> = match rng.below(4) {
+            0 => vec![0u8; len],
+            1 => (0..len).map(|_| rng.next_u64() as u8).collect(), // max-entropy
+            2 => (0..len)
+                .map(|_| if rng.chance(0.85) { 0 } else { rng.below(256) as u8 })
+                .collect(),
+            _ => {
+                let alphabet = rng.range(1, 8) as u8;
+                (0..len).map(|_| rng.below(alphabet as usize) as u8).collect()
+            }
+        };
+        let mut blob = Vec::new();
+        rans_encode(&data, &mut blob);
+        let mut pos = 0usize;
+        let back = rans_decode(&blob, &mut pos, len).expect("a fresh stream must decode");
+        assert_eq!(back, data, "rans must be the identity");
+        assert_eq!(pos, blob.len(), "decoder must consume the stream exactly");
+    });
+}
+
+#[test]
+fn prop_rans_corruption_is_typed_and_allocation_bounded() {
+    // The decoder's safety contract: truncation and crafted bad frequency
+    // tables are typed [`WireError`]s, a random bit flip never panics or
+    // over-allocates (content integrity is the enclosing frame checksum's
+    // job — here only memory safety and the `max_len` allocation bound are
+    // load-bearing), and a stream declaring a huge length is rejected
+    // before any buffer is sized from it.
+    prop_check("rans-corruption", 60, |rng| {
+        let len = rng.range(1, 3000);
+        let data: Vec<u8> = (0..len)
+            .map(|_| if rng.chance(0.7) { 0 } else { rng.below(32) as u8 })
+            .collect();
+        let mut blob = Vec::new();
+        rans_encode(&data, &mut blob);
+
+        // Any strict prefix fails with a typed error.
+        let cut = rng.below(blob.len());
+        let mut pos = 0usize;
+        assert!(
+            rans_decode(&blob[..cut], &mut pos, len).is_err(),
+            "cut at {cut} must not decode"
+        );
+
+        // A bit flip anywhere must stay inside the contract: no panic, and
+        // any (astronomically unlikely) accepted stream is still bounded by
+        // the caller's declared plane length.
+        let mut corrupted = blob.clone();
+        let flip = rng.below(corrupted.len());
+        corrupted[flip] ^= 1u8 << rng.below(8);
+        let mut pos = 0usize;
+        if let Ok(out) = rans_decode(&corrupted, &mut pos, len) {
+            assert!(out.len() <= len, "decode exceeded the declared bound");
+        }
+
+        // A declared length over the caller's bound is rejected up front —
+        // the allocation guard, not an after-the-fact check.
+        let mut huge = Vec::new();
+        // varint(u64::MAX): 10 bytes of 0xFF then 0x01.
+        huge.extend_from_slice(&[0xFF; 9]);
+        huge.push(0x01);
+        let mut pos = 0usize;
+        assert!(rans_decode(&huge, &mut pos, len).is_err(), "oversized length must be typed");
+
+        // A frequency table that does not sum to the scale is malformed:
+        // n=10, one symbol with frequency 5 (scale is 1 << 12).
+        let bad_table = [10u8, 1, 0, 5];
+        let mut pos = 0usize;
+        assert!(rans_decode(&bad_table, &mut pos, 10).is_err(), "bad table must be typed");
+    });
+}
+
+#[test]
+fn prop_pack_rans_codec_roundtrip_is_bitwise() {
+    // The entropy-staged pack codec keeps every `pack_delta` guarantee:
+    // bitwise-lossless roundtrip through the *same* `unpack_delta` (the
+    // blob's mode byte self-describes), the raw-fallback size bound, never
+    // larger than the plain packing, and typed errors on truncation.
+    prop_check("pack-rans-roundtrip", 50, |rng| {
+        let n = rng.range(0, 800);
+        let base = gen::f32_vec(rng, n, 10.0);
+        let upload: Vec<f32> = if rng.chance(0.5) {
+            base.iter().map(|b| b * 0.95 + 0.01).collect()
+        } else {
+            gen::f32_vec(rng, n, 1e6)
+        };
+        let blob = pack_delta_rans(&upload, &base);
+        assert!(blob.len() <= 4 * n + 5, "raw fallback must bound the blob");
+        assert!(
+            blob.len() <= pack_delta(&upload, &base).len(),
+            "the entropy stage is opportunistic: it must never inflate the pack"
+        );
+        let back = unpack_delta(&blob, &base).unwrap();
+        assert_eq!(back.len(), n);
+        for (a, b) in upload.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pack+rans must be bitwise-lossless");
+        }
         let cut = rng.below(blob.len());
         assert!(unpack_delta(&blob[..cut], &base).is_err(), "cut at {cut} must not decode");
     });
