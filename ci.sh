@@ -84,6 +84,13 @@ cargo test -q --lib trace::
 cargo test -q --lib federation::runtime::tests::traced_run_is_bitwise_identical_and_streams_worker_metrics
 cargo test -q --lib monitor::report::tests::report_json_schema_is_stable
 
+echo "==> fault-tolerance gates (chaos harness, checkpoint codec, recovery report schema, chaos suite)"
+cargo test -q --lib testing::chaos::
+cargo test -q --lib federation::checkpoint::
+cargo test -q --lib monitor::report::tests::recovery_notes_fill_the_recovery_section
+cargo test -q --test proptests prop_checkpoint_codec_roundtrip_and_corruption
+cargo test -q --test federation_chaos
+
 if [ "${1:-}" != "--quick" ]; then
     echo "==> cargo build --release   (tier-1, part 1)"
     cargo build --release
@@ -258,6 +265,97 @@ PYEOF
       fi
       rm -f "$PACK_JSON_PLAIN" "$PACK_JSON_TRACED" "$PACK_TRACE"
       echo "==> pack tcp smoke: downlink + uplink ratios < 1.0; obs bytes excluded from the measured ledger"
+
+      # Fault-tolerance chaos smoke (elastic orchestration): the same tiny
+      # NC run over 3 worker subprocesses, once undisturbed and once with a
+      # worker SIGKILLed mid-run. The coordinator must detect the death,
+      # re-assign the dead worker's clients to the survivors, and finish
+      # with exit 0 on the *same* final accuracy/loss and the same SimNet
+      # byte ledger as the undisturbed run — the sync bitwise-recovery
+      # invariant observed end to end across real processes. The report's
+      # `recovery` section records the event.
+      echo "==> multi-process chaos smoke (tcp loopback, 3 workers, SIGKILL one mid-run)"
+      CHAOS_JSON_CLEAN="$(mktemp)"
+      CHAOS_JSON_KILLED="$(mktemp)"
+      for CHAOS_MODE in clean killed; do
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        if [ "$CHAOS_MODE" = "killed" ]; then
+            CHAOS_JSON="$CHAOS_JSON_KILLED"
+        else
+            CHAOS_JSON="$CHAOS_JSON_CLEAN"
+        fi
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W3=$!
+        KILLER=""
+        if [ "$CHAOS_MODE" = "killed" ]; then
+            # The straggler sleeps stretch the run well past this point, so
+            # the SIGKILL lands after rendezvous and mid-round.
+            ( sleep 1.0; kill -9 "$W3" 2>/dev/null ) &
+            KILLER=$!
+        fi
+        COORD_STATUS=0
+        "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+            --rounds 6 --trainers 6 --scale 0.15 --local-steps 1 \
+            --straggler-ms 500 \
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 3 \
+            --json "$CHAOS_JSON" || COORD_STATUS=$?
+        W1_STATUS=0
+        W2_STATUS=0
+        wait "$W1" || W1_STATUS=$?
+        wait "$W2" || W2_STATUS=$?
+        if [ "$CHAOS_MODE" = "killed" ]; then
+            wait "$W3" 2>/dev/null || true   # SIGKILLed: expected nonzero
+            wait "$KILLER" 2>/dev/null || true
+        else
+            W3_STATUS=0
+            wait "$W3" || W3_STATUS=$?
+            if [ "$W3_STATUS" -ne 0 ]; then
+                echo "ci.sh: chaos smoke clean leg: worker 3 failed ($W3_STATUS)" >&2
+                rm -f "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED"
+                exit 1
+            fi
+        fi
+        if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
+            echo "ci.sh: chaos smoke ($CHAOS_MODE) failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            rm -f "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED"
+            exit 1
+        fi
+      done
+      if command -v python3 >/dev/null 2>&1; then
+        if ! python3 - "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED" <<'PYEOF'
+import json, sys
+clean = json.load(open(sys.argv[1]))
+killed = json.load(open(sys.argv[2]))
+rc, rk = clean["recovery"], killed["recovery"]
+assert rc["recoveries"] == 0 and rc["reassigned_clients"] == 0, \
+    f"undisturbed run reported recoveries: {rc}"
+assert rk["recoveries"] >= 1, f"SIGKILL was not recovered from: {rk}"
+assert rk["reassigned_clients"] >= 1, f"no clients were re-assigned: {rk}"
+# The sync bitwise-recovery invariant, surfaced in the report: identical
+# learning outcome and identical SimNet ledger (recovery traffic is
+# wire-measured but never SimNet-charged).
+for key in ("final_accuracy", "final_loss", "train_bytes", "pretrain_bytes",
+            "train_wasted_bytes"):
+    assert clean[key] == killed[key], \
+        f"{key} diverged after recovery: {clean[key]} vs {killed[key]}"
+print(f"chaos smoke ok: {rk['recoveries']} recovery, "
+      f"{rk['reassigned_clients']} clients re-assigned, "
+      f"accuracy {killed['final_accuracy']:.4f} identical to undisturbed run")
+PYEOF
+        then
+            echo "ci.sh: chaos smoke validation failed" >&2
+            rm -f "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED"
+            exit 1
+        fi
+      else
+        echo "==> python3 not found; skipping chaos-smoke JSON validation"
+      fi
+      rm -f "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED"
+      echo "==> chaos smoke: SIGKILLed worker recovered; final metrics and SimNet ledger identical to the undisturbed run"
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

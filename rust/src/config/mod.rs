@@ -403,6 +403,36 @@ pub struct FederationConfig {
     /// `none` (default) ships plain RLE streams; `rans` requires
     /// `compression: pack` (validated).
     pub entropy: EntropyMode,
+    /// Failure detection and recovery knobs (TCP deployments; see
+    /// `docs/FAULT_TOLERANCE.md`).
+    pub fault_tolerance: FaultToleranceConfig,
+}
+
+/// Fault-tolerance settings (`federation.fault_tolerance:` YAML block).
+/// TCP deployments only; the in-process channel transport has no partial
+/// failures to detect.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultToleranceConfig {
+    /// Interval (ms) at which each worker process writes an empty control
+    /// heartbeat frame so the coordinator can tell a slow worker from a dead
+    /// one. `0` disables heartbeats.
+    pub heartbeat_ms: u64,
+    /// Silence window (ms) after which the coordinator declares a worker
+    /// connection dead (`WorkerGone`) and re-assigns its clients to the
+    /// survivors. Also bounds the post-connect `WorkerHello` handshake read.
+    /// `0` disables liveness timeouts entirely (socket EOF / checksum
+    /// failures still trigger recovery).
+    pub worker_timeout_ms: u64,
+    /// Take a `RoundCheckpoint` snapshot every this many rounds at the round
+    /// boundary (`0` = off). Checkpoints feed late-join assignments and the
+    /// resumable-coordinator restore path.
+    pub checkpoint_every: u64,
+}
+
+impl Default for FaultToleranceConfig {
+    fn default() -> Self {
+        FaultToleranceConfig { heartbeat_ms: 500, worker_timeout_ms: 10_000, checkpoint_every: 0 }
+    }
 }
 
 impl Default for FederationConfig {
@@ -420,6 +450,7 @@ impl Default for FederationConfig {
             straggler_ms: 0.0,
             compression: CompressionMode::None,
             entropy: EntropyMode::None,
+            fault_tolerance: FaultToleranceConfig::default(),
         }
     }
 }
@@ -703,6 +734,16 @@ impl FedGraphConfig {
         if let Some(s) = fed.get("entropy").as_str() {
             cfg.federation.entropy = EntropyMode::parse(s)?;
         }
+        let ft = fed.get("fault_tolerance");
+        if let Some(v) = ft.get("heartbeat_ms").as_usize() {
+            cfg.federation.fault_tolerance.heartbeat_ms = v as u64;
+        }
+        if let Some(v) = ft.get("worker_timeout_ms").as_usize() {
+            cfg.federation.fault_tolerance.worker_timeout_ms = v as u64;
+        }
+        if let Some(v) = ft.get("checkpoint_every").as_usize() {
+            cfg.federation.fault_tolerance.checkpoint_every = v as u64;
+        }
         // Network block.
         let net = y.get("network");
         if let Some(v) = net.get("bandwidth_gbps").as_f64() {
@@ -753,6 +794,23 @@ impl FedGraphConfig {
             }
             if self.federation.listen_addr.is_empty() {
                 bail!("federation.transport: tcp needs a federation.listen_addr");
+            }
+        }
+        {
+            let ft = &self.federation.fault_tolerance;
+            if ft.worker_timeout_ms > 0 && ft.heartbeat_ms == 0 {
+                bail!(
+                    "federation.fault_tolerance.worker_timeout_ms > 0 needs heartbeat_ms > 0 — \
+                     without heartbeats an idle-but-alive worker would be declared dead"
+                );
+            }
+            if ft.worker_timeout_ms > 0 && ft.worker_timeout_ms < 2 * ft.heartbeat_ms {
+                bail!(
+                    "federation.fault_tolerance.worker_timeout_ms ({}) must be at least twice \
+                     heartbeat_ms ({}) so one delayed heartbeat cannot kill a live worker",
+                    ft.worker_timeout_ms,
+                    ft.heartbeat_ms
+                );
             }
         }
         if let CompressionMode::Quantized { bits, .. } = self.federation.compression {
@@ -890,6 +948,9 @@ impl FedGraphConfig {
             EntropyMode::None => 0,
             EntropyMode::Rans => 1,
         });
+        w.u64(f.fault_tolerance.heartbeat_ms);
+        w.u64(f.fault_tolerance.worker_timeout_ms);
+        w.u64(f.fault_tolerance.checkpoint_every);
         w.f64(self.network.bandwidth_gbps);
         w.f64(self.network.latency_ms);
         w.u64(self.seed);
@@ -991,6 +1052,9 @@ impl FedGraphConfig {
                 1 => EntropyMode::Rans,
                 t => return Err(WireError::BadTag(t)),
             };
+            cfg.federation.fault_tolerance.heartbeat_ms = r.u64()?;
+            cfg.federation.fault_tolerance.worker_timeout_ms = r.u64()?;
+            cfg.federation.fault_tolerance.checkpoint_every = r.u64()?;
             cfg.network.bandwidth_gbps = r.f64()?;
             cfg.network.latency_ms = r.f64()?;
             cfg.seed = r.u64()?;
@@ -1024,7 +1088,10 @@ impl FedGraphConfig {
 /// the knob rides the bit-exact wire config rather than defaulting.
 /// v4: `federation.entropy` (rANS stage behind the pack codec, both
 /// directions) joined the federation block.
-pub const CONFIG_WIRE_VERSION: u8 = 4;
+/// v5: `federation.fault_tolerance` (heartbeat/timeout/checkpoint cadence)
+/// joined the federation block — workers must agree on the heartbeat
+/// interval the coordinator's liveness window assumes.
+pub const CONFIG_WIRE_VERSION: u8 = 5;
 
 fn task_code(t: Task) -> u8 {
     match t {
@@ -1149,6 +1216,51 @@ network:
         if let PrivacyMode::He(p) = &cfg.privacy {
             assert_eq!(p.poly_mod_degree, 16384);
         }
+    }
+
+    #[test]
+    fn parses_fault_tolerance_block_and_validates_windows() {
+        let cfg = FedGraphConfig::parse_yaml(
+            r#"
+fedgraph_task: NC
+dataset: cora-sim
+method: FedAvg
+federation:
+  fault_tolerance:
+    heartbeat_ms: 100
+    worker_timeout_ms: 2000
+    checkpoint_every: 5
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.federation.fault_tolerance.heartbeat_ms, 100);
+        assert_eq!(cfg.federation.fault_tolerance.worker_timeout_ms, 2000);
+        assert_eq!(cfg.federation.fault_tolerance.checkpoint_every, 5);
+        // Defaults: heartbeats on, 10 s liveness window, checkpoints off.
+        let d = FaultToleranceConfig::default();
+        assert_eq!(d.heartbeat_ms, 500);
+        assert_eq!(d.worker_timeout_ms, 10_000);
+        assert_eq!(d.checkpoint_every, 0);
+        // A liveness window without heartbeats would kill idle live workers.
+        let mut bad =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        bad.federation.fault_tolerance.heartbeat_ms = 0;
+        assert!(bad.validate().is_err());
+        // The window must cover at least two heartbeat intervals.
+        bad.federation.fault_tolerance.heartbeat_ms = 800;
+        bad.federation.fault_tolerance.worker_timeout_ms = 1000;
+        assert!(bad.validate().is_err());
+        // Disabling timeouts entirely is always valid.
+        bad.federation.fault_tolerance.worker_timeout_ms = 0;
+        bad.federation.fault_tolerance.heartbeat_ms = 0;
+        bad.validate().unwrap();
+        // The block rides the bit-exact wire encoding.
+        let mut wired =
+            FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+        wired.federation.fault_tolerance =
+            FaultToleranceConfig { heartbeat_ms: 250, worker_timeout_ms: 3000, checkpoint_every: 2 };
+        let back = FedGraphConfig::decode_wire(&wired.encode_wire()).unwrap();
+        assert_eq!(back.federation.fault_tolerance, wired.federation.fault_tolerance);
     }
 
     #[test]

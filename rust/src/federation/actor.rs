@@ -297,13 +297,13 @@ pub fn actor_main(setup: ActorSetup) {
                     link.send(UpMsg::StopAck { client: cid, obs: make_obs(true) }.encode().into());
                 return;
             }
-            DownMsg::Assign { .. } => {
-                // Pre-rendezvous worker-level frame; an actor must never see
-                // one on its lane.
+            DownMsg::Assign { .. } | DownMsg::Reassign { .. } => {
+                // Worker-level control frames; an actor must never see one on
+                // its trainer lane.
                 let _ = link.send(
                     UpMsg::Failed {
                         client: cid,
-                        error: "unexpected Assign on a trainer lane".to_string(),
+                        error: "unexpected worker-level frame on a trainer lane".to_string(),
                     }
                     .encode()
                     .into(),
@@ -495,6 +495,10 @@ pub fn actor_main(setup: ActorSetup) {
                             privacy_secs,
                             staged: take_staged(&remote_net),
                             payload,
+                            // RNG cursor *after* the round's last draw (train
+                            // + any DP noise): what recovery re-seeds a
+                            // re-materialized actor with (protocol v6).
+                            rng: rng.snapshot(),
                             obs: make_obs(false),
                         })
                     }
@@ -558,6 +562,9 @@ pub fn actor_main(setup: ActorSetup) {
                             num,
                             den,
                             staged: take_staged(&remote_net),
+                            // Eval draws from the stream too — ship the
+                            // post-eval cursor so recovery stays exact.
+                            rng: rng.snapshot(),
                         },
                         Ok(Err(e)) => {
                             let _ = take_staged(&remote_net);

@@ -1,0 +1,338 @@
+//! Round-boundary coordinator snapshots (PR 9).
+//!
+//! A [`RoundCheckpoint`] captures everything the coordinator needs to resume
+//! a run from a round boundary without replaying it: the global model and its
+//! version counter, the packed-downlink codec window (`bases`,
+//! `last_sent_version`, `pending_floor`), the round policy's in-flight state,
+//! the client→worker assignment table, per-client actor RNG cursors (shipped
+//! back on every `Update`/`Metric` frame — see `federation::protocol`),
+//! quantized-residual error-feedback state, the HE context seed, and the
+//! SimNet ledger counters at snapshot time.
+//!
+//! The binary codec is versioned ([`CHECKPOINT_WIRE_VERSION`]) and
+//! checksummed (fnv1a trailer via [`Writer::finish`]/[`Reader::open`]), so a
+//! truncated or bit-flipped snapshot decodes to a typed [`WireError`] —
+//! never a panic, never a silently-wrong resume. Layout notes live in
+//! `docs/FAULT_TOLERANCE.md`.
+
+use crate::federation::protocol::{read_rng, write_rng};
+use crate::transport::serialize::{Reader, WireError, Writer};
+use crate::util::rng::RngSnapshot;
+
+/// Bumped whenever the checkpoint byte layout changes. Decoding rejects any
+/// other version with a typed error instead of misreading the bytes.
+pub const CHECKPOINT_WIRE_VERSION: u32 = 1;
+
+/// Magic prefix so a checkpoint is never confused with a protocol frame or a
+/// serialized model ("FGCP").
+const CHECKPOINT_MAGIC: u32 = 0x4647_4350;
+
+/// Round-policy state that survives a checkpoint.
+///
+/// The sync barrier is stateless between rounds. The async policy carries its
+/// in-flight order table (`client → sequence number`) and the next sequence
+/// counter; buffered-but-unflushed updates are deliberately **dropped** on
+/// restore — the affected clients are simply re-ordered, which the staleness
+/// discount already accounts for (documented in `docs/FAULT_TOLERANCE.md`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyCheckpoint {
+    Sync,
+    Async { in_flight: Vec<(u32, u64)>, next_seq: u64 },
+}
+
+/// A resumable snapshot of the coordinator at a round boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundCheckpoint {
+    /// The round the snapshot was taken *after* (resume starts at `round+1`).
+    pub round: u32,
+    /// The coordinator's model version counter (broadcasts bump it).
+    pub version: u32,
+    /// Global model tensors at the snapshot boundary.
+    pub params: Vec<Vec<f32>>,
+    /// Per-client version of the last broadcast each client received
+    /// (packed-downlink codec state).
+    pub last_sent_version: Vec<u32>,
+    /// Per-client floor version an outstanding train order may still
+    /// reference (`None` when idle).
+    pub pending_floor: Vec<Option<u32>>,
+    /// The retained broadcast-base decode window: `(version, flat params)`.
+    pub bases: Vec<(u32, Vec<f32>)>,
+    /// Client → worker connection index at snapshot time.
+    pub assignment: Vec<u32>,
+    /// Per-client actor RNG cursor after that client's last completed round
+    /// (`None` until the client's first upload).
+    pub client_rng: Vec<Option<RngSnapshot>>,
+    /// Quantized-upload error-feedback residuals: `(client, residual)`.
+    pub residuals: Vec<(u32, Vec<f32>)>,
+    /// Seed of the CKKS context when the run is homomorphic.
+    pub he_seed: Option<u64>,
+    /// Round-policy in-flight state.
+    pub policy: PolicyCheckpoint,
+    /// SimNet ledger counters at snapshot time:
+    /// `(phase code, bytes_up, bytes_down, wasted_bytes)`.
+    pub ledger: Vec<(u32, u64, u64, u64)>,
+}
+
+impl RoundCheckpoint {
+    /// Serialize to the versioned, checksummed wire form.
+    pub fn encode_wire(&self) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.u32(CHECKPOINT_MAGIC);
+        w.u32(CHECKPOINT_WIRE_VERSION);
+        w.u32(self.round);
+        w.u32(self.version);
+        w.u32(self.params.len() as u32);
+        for t in &self.params {
+            w.f32s(t);
+        }
+        w.u32(self.last_sent_version.len() as u32);
+        for &v in &self.last_sent_version {
+            w.u32(v);
+        }
+        w.u32(self.pending_floor.len() as u32);
+        for f in &self.pending_floor {
+            match f {
+                None => w.u8(0),
+                Some(v) => {
+                    w.u8(1);
+                    w.u32(*v);
+                }
+            }
+        }
+        w.u32(self.bases.len() as u32);
+        for (v, flat) in &self.bases {
+            w.u32(*v);
+            w.f32s(flat);
+        }
+        w.u32(self.assignment.len() as u32);
+        for &conn in &self.assignment {
+            w.u32(conn);
+        }
+        w.u32(self.client_rng.len() as u32);
+        for snap in &self.client_rng {
+            match snap {
+                None => w.u8(0),
+                Some(s) => {
+                    w.u8(1);
+                    write_rng(&mut w, s);
+                }
+            }
+        }
+        w.u32(self.residuals.len() as u32);
+        for (client, res) in &self.residuals {
+            w.u32(*client);
+            w.f32s(res);
+        }
+        match self.he_seed {
+            None => w.u8(0),
+            Some(seed) => {
+                w.u8(1);
+                w.u64(seed);
+            }
+        }
+        match &self.policy {
+            PolicyCheckpoint::Sync => w.u8(0),
+            PolicyCheckpoint::Async { in_flight, next_seq } => {
+                w.u8(1);
+                w.u32(in_flight.len() as u32);
+                for (client, seq) in in_flight {
+                    w.u32(*client);
+                    w.u64(*seq);
+                }
+                w.u64(*next_seq);
+            }
+        }
+        w.u32(self.ledger.len() as u32);
+        for (phase, up, down, wasted) in &self.ledger {
+            w.u32(*phase);
+            w.u64(*up);
+            w.u64(*down);
+            w.u64(*wasted);
+        }
+        w.finish()
+    }
+
+    /// Decode a wire-form checkpoint. Corruption surfaces as a typed
+    /// [`WireError`] (`BadChecksum` from the trailer, `Truncated` from a cut
+    /// buffer, `Malformed` from version/shape violations) — never a panic.
+    pub fn decode_wire(bytes: &[u8]) -> Result<RoundCheckpoint, WireError> {
+        let mut r = Reader::open(bytes)?;
+        if r.u32()? != CHECKPOINT_MAGIC {
+            return Err(WireError::Malformed("not a checkpoint (bad magic)"));
+        }
+        if r.u32()? != CHECKPOINT_WIRE_VERSION {
+            return Err(WireError::Malformed("unsupported checkpoint version"));
+        }
+        let round = r.u32()?;
+        let version = r.u32()?;
+        let n_params = r.u32()? as usize;
+        let mut params = Vec::with_capacity(n_params.min(1024));
+        for _ in 0..n_params {
+            params.push(r.f32s()?);
+        }
+        let n_lsv = r.u32()? as usize;
+        let mut last_sent_version = Vec::with_capacity(n_lsv.min(65536));
+        for _ in 0..n_lsv {
+            last_sent_version.push(r.u32()?);
+        }
+        let n_floor = r.u32()? as usize;
+        let mut pending_floor = Vec::with_capacity(n_floor.min(65536));
+        for _ in 0..n_floor {
+            pending_floor.push(if r.u8()? != 0 { Some(r.u32()?) } else { None });
+        }
+        let n_bases = r.u32()? as usize;
+        let mut bases = Vec::with_capacity(n_bases.min(1024));
+        for _ in 0..n_bases {
+            let v = r.u32()?;
+            bases.push((v, r.f32s()?));
+        }
+        let n_assign = r.u32()? as usize;
+        let mut assignment = Vec::with_capacity(n_assign.min(65536));
+        for _ in 0..n_assign {
+            assignment.push(r.u32()?);
+        }
+        let n_rng = r.u32()? as usize;
+        let mut client_rng = Vec::with_capacity(n_rng.min(65536));
+        for _ in 0..n_rng {
+            client_rng.push(if r.u8()? != 0 { Some(read_rng(&mut r)?) } else { None });
+        }
+        let n_res = r.u32()? as usize;
+        let mut residuals = Vec::with_capacity(n_res.min(65536));
+        for _ in 0..n_res {
+            let client = r.u32()?;
+            residuals.push((client, r.f32s()?));
+        }
+        let he_seed = if r.u8()? != 0 { Some(r.u64()?) } else { None };
+        let policy = match r.u8()? {
+            0 => PolicyCheckpoint::Sync,
+            1 => {
+                let n = r.u32()? as usize;
+                let mut in_flight = Vec::with_capacity(n.min(65536));
+                for _ in 0..n {
+                    let client = r.u32()?;
+                    in_flight.push((client, r.u64()?));
+                }
+                PolicyCheckpoint::Async { in_flight, next_seq: r.u64()? }
+            }
+            t => return Err(WireError::BadTag(t)),
+        };
+        let n_ledger = r.u32()? as usize;
+        let mut ledger = Vec::with_capacity(n_ledger.min(64));
+        for _ in 0..n_ledger {
+            let phase = r.u32()?;
+            let up = r.u64()?;
+            let down = r.u64()?;
+            ledger.push((phase, up, down, r.u64()?));
+        }
+        if r.remaining() != 0 {
+            return Err(WireError::Malformed("trailing bytes after checkpoint"));
+        }
+        let ck = RoundCheckpoint {
+            round,
+            version,
+            params,
+            last_sent_version,
+            pending_floor,
+            bases,
+            assignment,
+            client_rng,
+            residuals,
+            he_seed,
+            policy,
+            ledger,
+        };
+        if ck.pending_floor.len() != ck.last_sent_version.len()
+            || ck.client_rng.len() != ck.last_sent_version.len()
+            || ck.assignment.len() != ck.last_sent_version.len()
+        {
+            return Err(WireError::Malformed("checkpoint per-client tables disagree on n"));
+        }
+        Ok(ck)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample() -> RoundCheckpoint {
+        RoundCheckpoint {
+            round: 7,
+            version: 9,
+            params: vec![vec![1.0, -2.5, 0.0], vec![f32::MIN_POSITIVE, 4.75]],
+            last_sent_version: vec![9, 8, 9],
+            pending_floor: vec![None, Some(8), None],
+            bases: vec![(8, vec![0.5; 5]), (9, vec![-0.25; 5])],
+            assignment: vec![0, 1, 1],
+            client_rng: vec![
+                Some(RngSnapshot { s: [1, 2, 3, u64::MAX], cached_normal: Some(-0.75) }),
+                None,
+                Some(RngSnapshot { s: [9, 9, 9, 9], cached_normal: None }),
+            ],
+            residuals: vec![(0, vec![0.125, -0.125]), (2, vec![1e-3])],
+            he_seed: Some(0xC0FF_EE00_1234),
+            policy: PolicyCheckpoint::Async {
+                in_flight: vec![(1, 17), (2, 18)],
+                next_seq: 19,
+            },
+            ledger: vec![(0, 100, 200, 0), (1, 5000, 9000, 128)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let ck = sample();
+        let bytes = ck.encode_wire();
+        assert_eq!(RoundCheckpoint::decode_wire(&bytes).unwrap(), ck);
+        // Sync-policy / empty-option variant too.
+        let mut ck2 = sample();
+        ck2.policy = PolicyCheckpoint::Sync;
+        ck2.he_seed = None;
+        ck2.residuals.clear();
+        let bytes2 = ck2.encode_wire();
+        assert_eq!(RoundCheckpoint::decode_wire(&bytes2).unwrap(), ck2);
+    }
+
+    #[test]
+    fn truncation_is_a_typed_error_at_every_length() {
+        let bytes = sample().encode_wire();
+        for cut in 0..bytes.len() {
+            // Any typed `WireError` is acceptable; a panic or an `Ok` is not.
+            RoundCheckpoint::decode_wire(&bytes[..cut])
+                .expect_err("truncated checkpoint must not decode");
+        }
+    }
+
+    #[test]
+    fn bitflips_never_decode_to_a_wrong_checkpoint() {
+        let ck = sample();
+        let bytes = ck.encode_wire();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            match RoundCheckpoint::decode_wire(&bad) {
+                // The fnv1a trailer catches essentially every flip; any
+                // decode that *does* succeed must not be silently wrong.
+                Ok(decoded) => assert_eq!(decoded, ck, "silent corruption at byte {i}"),
+                Err(
+                    WireError::BadChecksum
+                    | WireError::Truncated
+                    | WireError::Malformed(_)
+                    | WireError::BadTag(_),
+                ) => {}
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_version_is_rejected() {
+        let mut w = Writer::new();
+        w.u32(CHECKPOINT_MAGIC);
+        w.u32(CHECKPOINT_WIRE_VERSION + 1);
+        let bytes = w.finish();
+        match RoundCheckpoint::decode_wire(&bytes) {
+            Err(WireError::Malformed(msg)) => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("future version must be refused: {other:?}"),
+        }
+    }
+}

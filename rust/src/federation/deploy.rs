@@ -23,8 +23,10 @@
 //! hands it to `Federation::spawn` together with `Deployment::from_config`.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -34,7 +36,7 @@ use crate::runtime::ParamSet;
 use crate::trace::{self, ObsSession};
 use crate::transport::link::{ChannelTransport, CoordLink, TrainerLink};
 use crate::transport::tcp::{self, CONTROL_LANE};
-use crate::util::rng::{hash_u64, Rng};
+use crate::util::rng::{hash_u64, Rng, RngSnapshot};
 use crate::util::sync::Semaphore;
 
 use super::actor::{actor_main, ActorSetup, ClientLogic, PrivacyEngine};
@@ -172,10 +174,15 @@ impl Deployment {
         cfg: &FedGraphConfig,
         blueprint: SessionBlueprint,
         he_ctx: &Option<CkksContext>,
+        rng_overrides: &[Option<RngSnapshot>],
     ) -> Result<Fabric> {
         match self {
-            Deployment::InProcess => launch_threads(cfg, blueprint, he_ctx),
+            Deployment::InProcess => launch_threads(cfg, blueprint, he_ctx, rng_overrides),
             Deployment::Tcp { listener, workers } => {
+                // A checkpoint restore over TCP re-ships RNG cursors through
+                // `Reassign` frames; the initial rendezvous always starts
+                // from the seeded streams.
+                let _ = rng_overrides;
                 launch_workers(cfg, listener, *workers, blueprint)
             }
         }
@@ -205,6 +212,20 @@ pub(crate) struct Fabric {
     /// clock offset (worker trace clock minus coordinator's, nanoseconds)
     /// used to re-base remote event timestamps.
     pub obs_route: Vec<(String, i64)>,
+    /// TCP deployments only: standby workers handshaken after launch by the
+    /// late-join acceptor, waiting for round-boundary admission.
+    pub late_rx: Option<Receiver<LateWorker>>,
+    /// client index → worker connection index (the launch-time assignment the
+    /// runtime's failure recovery keeps current). Empty for in-process
+    /// deployments, which have no connections to lose.
+    pub client_conn: Vec<usize>,
+}
+
+/// A post-launch `fedgraph worker --connect` that completed the standby
+/// handshake (empty `Assign` slice, empty build report) and is parked until
+/// the federation admits it at the next round boundary.
+pub(crate) struct LateWorker {
+    pub stream: TcpStream,
 }
 
 /// Build one actor's setup bundle. Shared by the in-process launch and the
@@ -261,6 +282,7 @@ fn launch_threads(
     cfg: &FedGraphConfig,
     blueprint: SessionBlueprint,
     he_ctx: &Option<CkksContext>,
+    rng_overrides: &[Option<RngSnapshot>],
 ) -> Result<Fabric> {
     let n = blueprint.num_clients();
     let (coord, trainer_links) = ChannelTransport.open(n)?;
@@ -268,7 +290,7 @@ fn launch_threads(
     let SessionBlueprint { init, logics, max_dim, .. } = blueprint;
     let mut threads = Vec::with_capacity(n);
     for (client, (logic, link)) in logics.into_iter().zip(trainer_links).enumerate() {
-        let setup = actor_setup(
+        let mut setup = actor_setup(
             cfg,
             &init,
             max_dim,
@@ -280,6 +302,11 @@ fn launch_threads(
             None,
             None,
         );
+        // Checkpoint restore: resume this client's stream from its snapshot
+        // cursor instead of the seeded origin.
+        if let Some(Some(snap)) = rng_overrides.get(client) {
+            setup.rng = Rng::restore(snap);
+        }
         let handle = std::thread::Builder::new()
             .name(format!("fed-trainer-{client}"))
             .spawn(move || actor_main(setup))
@@ -291,6 +318,8 @@ fn launch_threads(
         threads,
         worker_builds: Vec::new(),
         obs_route: vec![(String::new(), 0); n],
+        late_rx: None,
+        client_conn: Vec::new(),
     })
 }
 
@@ -312,14 +341,32 @@ fn launch_workers(
         "fedgraph: waiting for {workers} worker process(es) on {addr} \
          (start them with `fedgraph worker --connect {addr}`)"
     );
+    // Bounded handshake reads (PR 9): a worker that connects but never
+    // completes `WorkerHello → Assign → BuildReport` must error out instead
+    // of wedging the launch forever. The hello is bounded by the liveness
+    // window; the build report gets a much larger multiple because a real
+    // sliced session rebuild legitimately dwarfs a heartbeat interval.
+    let ft = &cfg.federation.fault_tolerance;
+    let hello_timeout = if ft.worker_timeout_ms > 0 {
+        Some(Duration::from_millis(ft.worker_timeout_ms))
+    } else {
+        None
+    };
+    let build_timeout = hello_timeout.map(|t| t * 60);
     let mut conns: Vec<(TcpStream, Vec<u32>)> = Vec::with_capacity(workers);
     let mut assign_sent_ns: Vec<u64> = Vec::with_capacity(workers);
     for k in 0..workers {
         let (mut stream, peer) =
             listener.accept().with_context(|| format!("accepting worker {k}"))?;
         stream.set_nodelay(true).ok();
+        stream.set_read_timeout(hello_timeout).ok();
         // WorkerHello
-        let (lane, payload) = match tcp::read_frame(&mut stream)? {
+        let (lane, payload) = match tcp::read_frame(&mut stream).with_context(|| {
+            format!(
+                "worker {k} ({peer}) hello (bounded by \
+                 federation.fault_tolerance.worker_timeout_ms)"
+            )
+        })? {
             tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
             tcp::ReadOutcome::Closed => bail!("worker {k} ({peer}) closed before hello"),
         };
@@ -357,6 +404,7 @@ fn launch_workers(
             clients: clients.clone(),
             config: config_bytes.clone(),
             sent_at_ns: t1,
+            standby: false,
         };
         tcp::write_frame(&mut stream, CONTROL_LANE, &assign.encode())
             .with_context(|| format!("assigning worker {k}"))?;
@@ -372,8 +420,9 @@ fn launch_workers(
     let mut worker_builds = Vec::with_capacity(workers);
     let mut clock_offsets: Vec<i64> = Vec::with_capacity(workers);
     for (k, (stream, clients)) in conns.iter_mut().enumerate() {
+        stream.set_read_timeout(build_timeout).ok();
         let (lane, payload) = match tcp::read_frame(stream)
-            .with_context(|| format!("awaiting worker {k}'s build report"))?
+            .with_context(|| format!("awaiting worker {k}'s build report (bounded)"))?
         {
             tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
             tcp::ReadOutcome::Closed => {
@@ -430,8 +479,125 @@ fn launch_workers(
             obs_route[c] = (format!("worker{k}"), offset_ns);
         }
     }
-    let coord = tcp::coord_link(conns, n)?;
-    Ok(Fabric { coord, threads: Vec::new(), worker_builds, obs_route })
+    // Handshakes are done: hand the streams to the fabric's reader threads,
+    // which manage their own poll timeouts when liveness detection is on.
+    for (stream, _) in conns.iter_mut() {
+        stream.set_read_timeout(None).ok();
+    }
+    let liveness = hello_timeout;
+    let coord = tcp::coord_link(conns, n, liveness)?;
+    // Late-join acceptor (PR 9): keep admitting `fedgraph worker --connect`
+    // processes after launch. Each is handshaken exactly like an initial
+    // worker but assigned an empty standby slice; its stream parks on the
+    // channel until the federation admits it at a round boundary. The thread
+    // exits when the federation drops the receiver (send fails) or the
+    // listener is closed at process exit.
+    let needed = required_codec_bit(cfg.federation.compression);
+    let late_rx = match listener.try_clone() {
+        Ok(listener) => {
+            let (tx, rx) = channel();
+            let config_bytes = config_bytes.clone();
+            let n_total = n as u32;
+            let spawned = std::thread::Builder::new()
+                .name("fed-late-acceptor".into())
+                .spawn(move || {
+                    late_acceptor(listener, n_total, config_bytes, needed, hello_timeout, tx)
+                })
+                .is_ok();
+            if spawned {
+                Some(rx)
+            } else {
+                None
+            }
+        }
+        Err(_) => None,
+    };
+    let client_conn: Vec<usize> = (0..n).map(|c| c % workers).collect();
+    Ok(Fabric { coord, threads: Vec::new(), worker_builds, obs_route, late_rx, client_conn })
+}
+
+/// Accept loop for post-launch worker connections: handshake each standby
+/// candidate under the same bounded read timeouts as the initial rendezvous
+/// (protocol/codec validation, `Assign { standby: true }` with an empty
+/// slice, empty build report), then park the stream for round-boundary
+/// admission. A failed candidate is logged and dropped — it must never take
+/// the run down.
+fn late_acceptor(
+    listener: TcpListener,
+    n_total: u32,
+    config_bytes: Vec<u8>,
+    needed_codecs: u8,
+    hello_timeout: Option<Duration>,
+    tx: Sender<LateWorker>,
+) {
+    loop {
+        let (mut stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(_) => return,
+        };
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(hello_timeout).ok();
+        match standby_handshake(&mut stream, n_total, &config_bytes, needed_codecs) {
+            Ok(()) => {
+                stream.set_read_timeout(None).ok();
+                eprintln!("fedgraph: standby worker ({peer}) handshaken, awaiting admission");
+                if tx.send(LateWorker { stream }).is_err() {
+                    return; // federation gone
+                }
+            }
+            Err(e) => eprintln!("fedgraph: rejecting late worker ({peer}): {e:#}"),
+        }
+    }
+}
+
+/// The standby variant of the `WorkerHello → Assign → BuildReport`
+/// handshake: same validation, empty client slice, `standby: true` so the
+/// worker's serve loop waits for a `Reassign` instead of exiting.
+fn standby_handshake(
+    stream: &mut TcpStream,
+    n_total: u32,
+    config_bytes: &[u8],
+    needed_codecs: u8,
+) -> Result<()> {
+    let (lane, payload) = match tcp::read_frame(stream)? {
+        tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
+        tcp::ReadOutcome::Closed => bail!("closed before hello"),
+    };
+    if lane != CONTROL_LANE {
+        bail!("non-control first frame");
+    }
+    match UpMsg::decode(&payload)? {
+        UpMsg::WorkerHello { version, .. } if version != PROTOCOL_VERSION => {
+            bail!("speaks protocol v{version}, coordinator speaks v{PROTOCOL_VERSION}")
+        }
+        UpMsg::WorkerHello { codecs, .. } if (needed_codecs & !codecs) != 0 => {
+            bail!("missing wire-codec capability ({codecs:#05b}, needs {needed_codecs:#05b})")
+        }
+        UpMsg::WorkerHello { .. } => {}
+        other => bail!("sent {other:?} instead of WorkerHello"),
+    }
+    let assign = DownMsg::Assign {
+        n_total,
+        clients: Vec::new(),
+        config: config_bytes.to_vec(),
+        sent_at_ns: trace::now_ns(),
+        standby: true,
+    };
+    tcp::write_frame(stream, CONTROL_LANE, &assign.encode())?;
+    let (lane, payload) = match tcp::read_frame(stream)? {
+        tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
+        tcp::ReadOutcome::Closed => bail!("closed before build report"),
+    };
+    if lane != CONTROL_LANE {
+        bail!("non-control frame before build report");
+    }
+    match UpMsg::decode(&payload)? {
+        UpMsg::BuildReport { built_clients: 0, .. } => Ok(()),
+        UpMsg::BuildReport { built_clients, .. } => {
+            bail!("standby worker built {built_clients} clients before any assignment")
+        }
+        other => bail!("sent {other:?} instead of a build report"),
+    }
 }
 
 #[cfg(test)]

@@ -93,8 +93,23 @@
 //! (`sim_secs`, the pre-federation single-wire model) from the concurrent
 //! view (`concurrent_secs`, max over parallel links per collective or per
 //! scheduler tick).
+//!
+//! ## Fault tolerance
+//!
+//! TCP deployments run elastically (protocol v6): worker heartbeats plus
+//! read-timeout liveness detection surface a dead worker as a typed
+//! [`crate::transport::tcp::WorkerGone`], and the coordinator
+//! re-materializes its clients on the surviving workers (`Reassign` frames,
+//! re-issued broadcasts and train orders, per-client RNG cursors shipped
+//! back on every update) so a sync plaintext/DP run finishes
+//! bitwise-identical to the uninterrupted run. Round-boundary
+//! [`checkpoint::RoundCheckpoint`] snapshots make the coordinator itself
+//! resumable, and standby workers (`fedgraph worker --connect` after
+//! launch) rendezvous mid-run and receive a slice at the next round
+//! boundary. Failure model and recovery sequence: `docs/FAULT_TOLERANCE.md`.
 
 pub mod actor;
+pub mod checkpoint;
 pub mod deploy;
 pub mod policy;
 pub mod protocol;
@@ -102,6 +117,7 @@ pub mod runtime;
 pub mod worker;
 
 pub use actor::{ClientLogic, LocalUpdate};
+pub use checkpoint::{PolicyCheckpoint, RoundCheckpoint, CHECKPOINT_WIRE_VERSION};
 pub use deploy::{Deployment, SessionBlueprint, SessionBuild};
 pub use policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 pub use runtime::{Charge, Federation, PolicyRound, RoundUpdate, StepOutcome, TrainResult};

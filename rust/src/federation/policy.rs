@@ -31,6 +31,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use super::checkpoint::PolicyCheckpoint;
 use super::protocol::UpdatePayload;
 use super::runtime::{Federation, RoundUpdate, StepOutcome, TrainResult};
 
@@ -50,6 +51,15 @@ pub trait RoundPolicy: Send {
         participants: &[usize],
         upload: bool,
     ) -> Result<StepOutcome>;
+
+    /// Snapshot the policy's cross-step state for a round-boundary
+    /// checkpoint (PR 9). The sync barrier carries nothing between rounds.
+    fn checkpoint_state(&self) -> PolicyCheckpoint {
+        PolicyCheckpoint::Sync
+    }
+
+    /// Restore cross-step state from a checkpoint (no-op for the barrier).
+    fn restore_state(&mut self, _state: &PolicyCheckpoint) {}
 }
 
 /// The synchronous barrier: today's lockstep round, unchanged.
@@ -292,5 +302,26 @@ impl RoundPolicy for AsyncBounded {
         st.collected.sort_by_key(|(seq, _)| *seq);
         let results = st.collected.into_iter().map(|(_, r)| r).collect();
         Ok(StepOutcome { results, rejected_stale: st.rejected })
+    }
+
+    fn checkpoint_state(&self) -> PolicyCheckpoint {
+        let mut in_flight: Vec<(u32, u64)> =
+            self.in_flight.iter().map(|(&c, &s)| (c as u32, s)).collect();
+        in_flight.sort_unstable();
+        PolicyCheckpoint::Async { in_flight, next_seq: self.next_seq }
+    }
+
+    fn restore_state(&mut self, state: &PolicyCheckpoint) {
+        if let PolicyCheckpoint::Async { in_flight: _, next_seq } = state {
+            // A restored session has no outstanding orders — its actors are
+            // fresh. The snapshot's in-flight table is forensic; keeping it
+            // live would make the next step wait for updates nobody will
+            // send. Affected clients are simply re-ordered by that step, and
+            // the staleness discount prices in the gap. Parked-but-unflushed
+            // uploads are likewise dropped (see docs/FAULT_TOLERANCE.md).
+            self.in_flight.clear();
+            self.next_seq = *next_seq;
+            self.held.clear();
+        }
     }
 }

@@ -83,6 +83,7 @@ use crate::he::Ciphertext;
 use crate::trace::{EventKind, MetricsSnapshot, TraceEvent};
 use crate::transport::serialize::{Reader, WireError, Writer};
 use crate::transport::{Direction, Phase};
+use crate::util::rng::RngSnapshot;
 
 /// The protocol revision spoken over multi-process transports; bumped on any
 /// frame-shape change so a mismatched coordinator/worker pair fails the
@@ -97,8 +98,13 @@ use crate::transport::{Direction, Phase};
 /// the coordinator's clock-offset estimate. v5: downlink compression — the
 /// `SetModelPacked` broadcast frame (XOR-delta-packed against the last
 /// version the coordinator sent that client) and the [`CODEC_DOWN`]
-/// capability bit.
-pub const PROTOCOL_VERSION: u32 = 5;
+/// capability bit. v6: fault tolerance — the `Reassign`/`ReassignAck`
+/// client-migration frames, per-client [`RngSnapshot`] cursors on
+/// `Update`/`Metric` envelopes (so a re-materialized client resumes its
+/// random stream exactly), and the `Assign.standby` flag that parks a
+/// late-joining worker until the next round boundary (see
+/// `docs/FAULT_TOLERANCE.md`).
+pub const PROTOCOL_VERSION: u32 = 6;
 
 /// `WorkerHello.codecs` capability bit: the worker can encode `pack`
 /// (lossless delta + byte-plane) uploads.
@@ -152,6 +158,28 @@ fn read_staged(r: &mut Reader<'_>) -> Result<Vec<StagedTransfer>, WireError> {
         out.push(StagedTransfer { phase, dir, bytes: r.u64()? });
     }
     Ok(out)
+}
+
+pub(crate) fn write_rng(w: &mut Writer, snap: &RngSnapshot) {
+    for &word in &snap.s {
+        w.u64(word);
+    }
+    match snap.cached_normal {
+        None => w.u8(0),
+        Some(v) => {
+            w.u8(1);
+            w.f64(v);
+        }
+    }
+}
+
+pub(crate) fn read_rng(r: &mut Reader<'_>) -> Result<RngSnapshot, WireError> {
+    let mut s = [0u64; 4];
+    for word in &mut s {
+        *word = r.u64()?;
+    }
+    let cached_normal = if r.u8()? != 0 { Some(r.f64()?) } else { None };
+    Ok(RngSnapshot { s, cached_normal })
 }
 
 /// The observation-plane block a remote actor piggybacks on `Update` and
@@ -276,8 +304,22 @@ pub enum DownMsg {
     /// ([`crate::config::FedGraphConfig::encode_wire`]). `sent_at_ns` is the
     /// coordinator's trace clock at send time (T1 of the NTP-style offset
     /// estimate; the worker echoes its receive/send times on the
-    /// [`UpMsg::BuildReport`]).
-    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8>, sent_at_ns: u64 },
+    /// [`UpMsg::BuildReport`]). `standby` (protocol v6) marks a late-joining
+    /// worker: it builds session scaffolding for an empty slice, reports
+    /// zero built clients, and then parks on its control lane waiting for a
+    /// [`DownMsg::Reassign`] at the next round boundary instead of exiting.
+    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8>, sent_at_ns: u64, standby: bool },
+    /// Fault-tolerance order (protocol v6, control lane): host these
+    /// additional clients. Sent to a survivor after a worker death, or to a
+    /// parked standby worker at a round boundary. The worker re-materializes
+    /// exactly this slice via its sliced session build, spawns the actors,
+    /// and answers [`UpMsg::ReassignAck`] echoing `token` (the coordinator's
+    /// correlation id — acks arrive on a shared control lane). `rngs` aligns
+    /// with `clients`: `Some` restores the client's training-RNG cursor from
+    /// the coordinator's last-seen snapshot (mid-run migration), `None`
+    /// means the client never completed a round and starts from its default
+    /// seeded state.
+    Reassign { token: u64, n_total: u32, clients: Vec<u32>, rngs: Vec<Option<RngSnapshot>> },
 }
 
 /// The model-update payload of an [`UpMsg::Update`].
@@ -322,6 +364,11 @@ pub struct UpdateEnvelope {
     /// for in-process actors (they stage directly).
     pub staged: Vec<StagedTransfer>,
     pub payload: UpdatePayload,
+    /// The client's training-RNG cursor *after* this round's draws (train
+    /// noise, DP noise, straggler jitter — everything), protocol v6. The
+    /// coordinator keeps the latest snapshot per client so a re-assigned
+    /// client resumes its random stream bitwise-exactly on another worker.
+    pub rng: RngSnapshot,
     /// Piggybacked observation plane (protocol v4): drained trace events +
     /// an optional resource snapshot. Never ledgered (see [`ObsBlock`]).
     pub obs: ObsBlock,
@@ -334,8 +381,17 @@ pub enum UpMsg {
     Update(UpdateEnvelope),
     /// Evaluation result: task-specific (numerator, denominator) —
     /// correct/total for NC & GC, (auc, 1) for LP. `staged` as on
-    /// [`UpdateEnvelope`] (eval logic may stage metric-upload traffic).
-    Metric { client: u32, round: u32, num: f64, den: f64, staged: Vec<StagedTransfer> },
+    /// [`UpdateEnvelope`] (eval logic may stage metric-upload traffic);
+    /// `rng` as on [`UpdateEnvelope`] (eval logic draws from the same
+    /// stream, so the cursor moves here too).
+    Metric {
+        client: u32,
+        round: u32,
+        num: f64,
+        den: f64,
+        staged: Vec<StagedTransfer>,
+        rng: RngSnapshot,
+    },
     /// The trainer failed; the coordinator aborts the run with `error`.
     Failed { client: u32, error: String },
     /// `Stop` acknowledged; this trainer's lane is drained and its actor is
@@ -350,6 +406,12 @@ pub enum UpMsg {
     /// coordinator picks the session codec from the config and rejects
     /// workers that lack it).
     WorkerHello { version: u32, codecs: u8 },
+    /// Ack of a [`DownMsg::Reassign`] (protocol v6, control lane): the
+    /// worker finished re-materializing the migrated slice and spawned its
+    /// actors. Echoes `token` so the coordinator can match the ack on a
+    /// shared control lane; `built_clients` must equal the migrated slice
+    /// size (asserted, same contract as [`UpMsg::BuildReport`]).
+    ReassignAck { token: u64, built_clients: u32 },
     /// Deployment handshake step 3 (after `Assign`, before the rendezvous):
     /// the worker's sliced-session build-cost counters. `built_clients` must
     /// equal the assigned slice size (asserted by the coordinator — the
@@ -379,6 +441,7 @@ const D_STOP: u8 = 5;
 const D_MODEL_VERSION: u8 = 6;
 const D_ASSIGN: u8 = 7;
 const D_SET_MODEL_PACKED: u8 = 8;
+const D_REASSIGN: u8 = 9;
 
 const U_HELLO_ACK: u8 = 1;
 const U_UPDATE: u8 = 2;
@@ -387,6 +450,7 @@ const U_FAILED: u8 = 4;
 const U_STOP_ACK: u8 = 5;
 const U_WORKER_HELLO: u8 = 6;
 const U_BUILD_REPORT: u8 = 7;
+const U_REASSIGN_ACK: u8 = 8;
 
 const P_NONE: u8 = 0;
 const P_PLAIN: u8 = 1;
@@ -507,7 +571,7 @@ impl DownMsg {
                 w.u32(*version);
             }
             DownMsg::Stop => w.u8(D_STOP),
-            DownMsg::Assign { n_total, clients, config, sent_at_ns } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby } => {
                 w.u8(D_ASSIGN);
                 w.u32(*n_total);
                 w.u32(clients.len() as u32);
@@ -516,6 +580,27 @@ impl DownMsg {
                 }
                 w.blob(config);
                 w.u64(*sent_at_ns);
+                w.u8(*standby as u8);
+            }
+            DownMsg::Reassign { token, n_total, clients, rngs } => {
+                debug_assert_eq!(clients.len(), rngs.len(), "rngs must align with clients");
+                w.u8(D_REASSIGN);
+                w.u64(*token);
+                w.u32(*n_total);
+                w.u32(clients.len() as u32);
+                for &c in clients {
+                    w.u32(c);
+                }
+                w.u32(rngs.len() as u32);
+                for snap in rngs {
+                    match snap {
+                        None => w.u8(0),
+                        Some(s) => {
+                            w.u8(1);
+                            write_rng(&mut w, s);
+                        }
+                    }
+                }
             }
         }
         w.finish()
@@ -557,7 +642,26 @@ impl DownMsg {
                     clients.push(r.u32()?);
                 }
                 let config = r.blob()?;
-                DownMsg::Assign { n_total, clients, config, sent_at_ns: r.u64()? }
+                let sent_at_ns = r.u64()?;
+                DownMsg::Assign { n_total, clients, config, sent_at_ns, standby: r.u8()? != 0 }
+            }
+            D_REASSIGN => {
+                let token = r.u64()?;
+                let n_total = r.u32()?;
+                let k = r.u32()? as usize;
+                let mut clients = Vec::with_capacity(k.min(1 << 16));
+                for _ in 0..k {
+                    clients.push(r.u32()?);
+                }
+                let nr = r.u32()? as usize;
+                if nr != k {
+                    return Err(WireError::Malformed("Reassign rngs/clients length mismatch"));
+                }
+                let mut rngs = Vec::with_capacity(nr.min(1 << 16));
+                for _ in 0..nr {
+                    rngs.push(if r.u8()? != 0 { Some(read_rng(&mut r)?) } else { None });
+                }
+                DownMsg::Reassign { token, n_total, clients, rngs }
             }
             t => return Err(WireError::BadTag(t)),
         })
@@ -601,15 +705,17 @@ impl UpMsg {
                         w.blob(blob);
                     }
                 }
+                write_rng(&mut w, &u.rng);
                 write_obs(&mut w, &u.obs);
             }
-            UpMsg::Metric { client, round, num, den, staged } => {
+            UpMsg::Metric { client, round, num, den, staged, rng } => {
                 w.u8(U_METRIC);
                 w.u32(*client);
                 w.u32(*round);
                 w.f64(*num);
                 w.f64(*den);
                 write_staged(&mut w, staged);
+                write_rng(&mut w, rng);
             }
             UpMsg::Failed { client, error } => {
                 w.u8(U_FAILED);
@@ -642,6 +748,11 @@ impl UpMsg {
                 w.u64(*assign_received_ns);
                 w.u64(*sent_at_ns);
             }
+            UpMsg::ReassignAck { token, built_clients } => {
+                w.u8(U_REASSIGN_ACK);
+                w.u64(*token);
+                w.u32(*built_clients);
+            }
         }
         w.finish()
     }
@@ -668,6 +779,7 @@ impl UpMsg {
                     P_QUANTIZED => UpdatePayload::Quantized { blob: r.blob()? },
                     t => return Err(WireError::BadTag(t)),
                 };
+                let rng = read_rng(&mut r)?;
                 let obs = read_obs(&mut r)?;
                 UpMsg::Update(UpdateEnvelope {
                     client,
@@ -679,6 +791,7 @@ impl UpMsg {
                     privacy_secs,
                     staged,
                     payload,
+                    rng,
                     obs,
                 })
             }
@@ -688,6 +801,7 @@ impl UpMsg {
                 num: r.f64()?,
                 den: r.f64()?,
                 staged: read_staged(&mut r)?,
+                rng: read_rng(&mut r)?,
             },
             U_FAILED => UpMsg::Failed { client: r.u32()?, error: r.str()? },
             U_STOP_ACK => {
@@ -703,6 +817,9 @@ impl UpMsg {
                 assign_received_ns: r.u64()?,
                 sent_at_ns: r.u64()?,
             },
+            U_REASSIGN_ACK => {
+                UpMsg::ReassignAck { token: r.u64()?, built_clients: r.u32()? }
+            }
             t => return Err(WireError::BadTag(t)),
         })
     }
@@ -793,6 +910,7 @@ mod tests {
             privacy_secs: 0.0,
             staged: staged.clone(),
             payload: UpdatePayload::Plain(vec![vec![1.0; 8], vec![2.0; 3]]),
+            rng: RngSnapshot { s: [1, 2, 3, u64::MAX], cached_normal: Some(-0.75) },
             obs: ObsBlock::default(),
         });
         match UpMsg::decode(&m.encode()).unwrap() {
@@ -804,6 +922,10 @@ mod tests {
                 assert_eq!(u.compute_secs, 1.5);
                 assert_eq!(u.wait_secs, 0.25);
                 assert_eq!(u.staged, staged);
+                assert_eq!(
+                    u.rng,
+                    RngSnapshot { s: [1, 2, 3, u64::MAX], cached_normal: Some(-0.75) }
+                );
                 match u.payload {
                     UpdatePayload::Plain(v) => {
                         assert_eq!(v, vec![vec![1.0; 8], vec![2.0; 3]])
@@ -818,12 +940,21 @@ mod tests {
     #[test]
     fn metric_and_failure_roundtrip() {
         let staged = vec![StagedTransfer { phase: Phase::Eval, dir: Direction::Up, bytes: 12 }];
-        let m = UpMsg::Metric { client: 1, round: 2, num: 9.0, den: 10.0, staged: staged.clone() };
+        let cursor = RngSnapshot { s: [9, 8, 7, 6], cached_normal: None };
+        let m = UpMsg::Metric {
+            client: 1,
+            round: 2,
+            num: 9.0,
+            den: 10.0,
+            staged: staged.clone(),
+            rng: cursor,
+        };
         match UpMsg::decode(&m.encode()).unwrap() {
-            UpMsg::Metric { client, round, num, den, staged: s } => {
+            UpMsg::Metric { client, round, num, den, staged: s, rng } => {
                 assert_eq!((client, round), (1, 2));
                 assert_eq!((num, den), (9.0, 10.0));
                 assert_eq!(s, staged);
+                assert_eq!(rng, cursor);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -856,6 +987,7 @@ mod tests {
                 privacy_secs: 0.0,
                 staged: Vec::new(),
                 payload,
+                rng: RngSnapshot { s: [0; 4], cached_normal: None },
                 obs: ObsBlock::default(),
             });
             match UpMsg::decode(&m.encode()).unwrap() {
@@ -921,13 +1053,63 @@ mod tests {
             clients: vec![1, 3, 5],
             config: vec![0xAA, 0xBB, 0xCC],
             sent_at_ns: 42,
+            standby: false,
         };
         match DownMsg::decode(&assign.encode()).unwrap() {
-            DownMsg::Assign { n_total, clients, config, sent_at_ns } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby } => {
                 assert_eq!(n_total, 6);
                 assert_eq!(clients, vec![1, 3, 5]);
                 assert_eq!(config, vec![0xAA, 0xBB, 0xCC]);
                 assert_eq!(sent_at_ns, 42);
+                assert!(!standby);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fault_tolerance_frames_roundtrip() {
+        // A standby assign parks a late joiner with an empty slice.
+        let standby = DownMsg::Assign {
+            n_total: 8,
+            clients: vec![],
+            config: vec![0x01],
+            sent_at_ns: 7,
+            standby: true,
+        };
+        match DownMsg::decode(&standby.encode()).unwrap() {
+            DownMsg::Assign { clients, standby, .. } => {
+                assert!(clients.is_empty());
+                assert!(standby);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        // Reassign carries aligned client indices and optional RNG cursors.
+        let rngs = vec![
+            Some(RngSnapshot { s: [11, 22, 33, 44], cached_normal: Some(1.25) }),
+            None,
+            Some(RngSnapshot { s: [u64::MAX, 0, 1, 2], cached_normal: None }),
+        ];
+        let m = DownMsg::Reassign {
+            token: 0xDEAD_BEEF_0123,
+            n_total: 10,
+            clients: vec![2, 5, 9],
+            rngs: rngs.clone(),
+        };
+        match DownMsg::decode(&m.encode()).unwrap() {
+            DownMsg::Reassign { token, n_total, clients, rngs: back } => {
+                assert_eq!(token, 0xDEAD_BEEF_0123);
+                assert_eq!(n_total, 10);
+                assert_eq!(clients, vec![2, 5, 9]);
+                assert_eq!(back, rngs);
+            }
+            other => panic!("wrong message {other:?}"),
+        }
+        let ack = UpMsg::ReassignAck { token: 0xDEAD_BEEF_0123, built_clients: 3 };
+        match UpMsg::decode(&ack.encode()).unwrap() {
+            UpMsg::ReassignAck { token, built_clients } => {
+                assert_eq!(token, 0xDEAD_BEEF_0123);
+                assert_eq!(built_clients, 3);
             }
             other => panic!("wrong message {other:?}"),
         }

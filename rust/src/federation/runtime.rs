@@ -28,6 +28,8 @@
 //! uploads beyond the bound are rejected and ledgered as waste.
 
 use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, bail, Result};
@@ -38,14 +40,17 @@ use crate::he::{Ciphertext, CkksContext};
 use crate::monitor::{ClientTimeline, Monitor};
 use crate::runtime::ParamSet;
 use crate::transport::link::CoordLink;
+use crate::transport::tcp::{WorkerGone, CONTROL_LANE};
 use crate::transport::{Direction, Phase, SimNet};
+use crate::util::rng::RngSnapshot;
 use crate::util::timer::timed;
 
 use crate::transport::serialize::{
     dequantize_delta, pack_delta, pack_delta_rans, params_wire_len, unpack_delta,
 };
 
-use super::deploy::{he_context, Deployment, SessionBlueprint};
+use super::checkpoint::RoundCheckpoint;
+use super::deploy::{he_context, Deployment, LateWorker, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 use super::protocol::{
     encode_eval, encode_set_model, encode_set_model_packed, set_model_frame_len, DownMsg,
@@ -185,6 +190,45 @@ pub struct Federation<'m> {
     /// Piggybacked [`ObsBlock`]s are merged into the unified timeline
     /// through this map.
     obs_route: Vec<(String, i64)>,
+    // -- elastic fault tolerance (protocol v6) ------------------------------
+    /// client → worker connection index, kept current across recoveries and
+    /// late-join migrations. Empty for in-process deployments, which have no
+    /// connections to lose.
+    assignment: Vec<usize>,
+    /// Connections retired by a completed recovery (index = connection).
+    conn_dead: Vec<bool>,
+    /// Each client's actor RNG cursor after its last completed work, shipped
+    /// back on every `Update`/`Metric` frame. A re-assigned client's rebuilt
+    /// actor resumes its random stream from exactly this cursor — the
+    /// bitwise-recovery invariant hangs on it.
+    client_rng: Vec<Option<RngSnapshot>>,
+    /// The last broadcast actually delivered to each client:
+    /// `(round, version, values)`, the values refcount-shared across all
+    /// targets of one broadcast. Replayed raw to rebuilt actors. `None` on
+    /// in-process deployments (no recovery, so nothing is retained).
+    last_broadcast_of: Vec<Option<(u32, u32, Arc<Vec<Vec<f32>>>)>>,
+    /// Each client's outstanding train order `(round, scale, upload)`;
+    /// cleared the moment its update reaches the coordinator. Recovery
+    /// re-issues the order to the rebuilt actor iff still set.
+    last_train: Vec<Option<(u32, f32, bool)>>,
+    /// Frames that arrived while recovery was waiting for its own acks; the
+    /// interrupted collection loop consumes these before the transport.
+    pending_frames: VecDeque<(usize, crate::transport::link::Frame)>,
+    /// Monotone `Reassign` token (acks echo it).
+    reassign_token: u64,
+    recoveries: u64,
+    reassigned_clients: u64,
+    late_joins: u64,
+    /// Standby workers parked by the deployment's late acceptor, admitted at
+    /// round boundaries.
+    late_rx: Option<Receiver<LateWorker>>,
+    /// `federation.fault_tolerance.checkpoint_every` (0 = off).
+    checkpoint_every: u64,
+    /// Latest round-boundary snapshot (see [`Federation::last_checkpoint`]).
+    last_checkpoint: Option<RoundCheckpoint>,
+    /// The deterministic CKKS context seed of an HE session (recorded into
+    /// checkpoints so a restore rebuilds the identical context).
+    he_seed: Option<u64>,
 }
 
 impl<'m> Federation<'m> {
@@ -202,6 +246,31 @@ impl<'m> Federation<'m> {
         cfg: &FedGraphConfig,
         blueprint: SessionBlueprint,
     ) -> Result<Federation<'m>> {
+        Self::spawn_inner(monitor, deployment, cfg, blueprint, &[], None)
+    }
+
+    /// Test seam for the chaos harness: like [`Federation::spawn`], but the
+    /// coordinator endpoint is piped through `wrap` before first use, so a
+    /// fault-injection wrapper (see [`crate::testing::chaos`]) intercepts
+    /// every frame of the session, rendezvous included.
+    pub fn spawn_instrumented(
+        monitor: &'m Monitor,
+        deployment: &Deployment,
+        cfg: &FedGraphConfig,
+        blueprint: SessionBlueprint,
+        wrap: Box<dyn FnOnce(Box<dyn CoordLink>) -> Box<dyn CoordLink>>,
+    ) -> Result<Federation<'m>> {
+        Self::spawn_inner(monitor, deployment, cfg, blueprint, &[], Some(wrap))
+    }
+
+    fn spawn_inner(
+        monitor: &'m Monitor,
+        deployment: &Deployment,
+        cfg: &FedGraphConfig,
+        blueprint: SessionBlueprint,
+        rng_overrides: &[Option<RngSnapshot>],
+        wrap: Option<Box<dyn FnOnce(Box<dyn CoordLink>) -> Box<dyn CoordLink>>>,
+    ) -> Result<Federation<'m>> {
         let n = blueprint.num_clients();
         if n == 0 {
             bail!("federation needs at least one trainer");
@@ -213,7 +282,7 @@ impl<'m> Federation<'m> {
         let init = blueprint.init.clone();
         let weights = blueprint.weights.clone();
         monitor.note("transport", deployment.transport_name());
-        let fabric = deployment.launch(cfg, blueprint, &he_ctx)?;
+        let fabric = deployment.launch(cfg, blueprint, &he_ctx, rng_overrides)?;
         let policy: Box<dyn RoundPolicy> = match cfg.federation.mode {
             FederationMode::Sync => Box::new(SyncBarrier),
             FederationMode::Async => Box::new(AsyncBounded::new(
@@ -233,9 +302,15 @@ impl<'m> Federation<'m> {
                 format!("{:.3}", wb.build_secs),
             );
         }
+        let n_conns = fabric.worker_builds.len();
+        let coord = match wrap {
+            Some(w) => w(fabric.coord),
+            None => fabric.coord,
+        };
+        let he_seed = if he_ctx.is_some() { Some(cfg.seed ^ 0xC4C5) } else { None };
         let mut fed = Federation {
             monitor,
-            coord: fabric.coord,
+            coord,
             threads: fabric.threads,
             n,
             weights,
@@ -256,6 +331,20 @@ impl<'m> Federation<'m> {
             last_sent_version: vec![0; n],
             pending_floor: vec![None; n],
             obs_route: fabric.obs_route,
+            assignment: fabric.client_conn,
+            conn_dead: vec![false; n_conns],
+            client_rng: vec![None; n],
+            last_broadcast_of: vec![None; n],
+            last_train: vec![None; n],
+            pending_frames: VecDeque::new(),
+            reassign_token: 0,
+            recoveries: 0,
+            reassigned_clients: 0,
+            late_joins: 0,
+            late_rx: fabric.late_rx,
+            checkpoint_every: cfg.federation.fault_tolerance.checkpoint_every,
+            last_checkpoint: None,
+            he_seed,
         };
         if fed.codec.needs_base() {
             // Version 0 is the public init every actor bootstraps from.
@@ -337,6 +426,15 @@ impl<'m> Federation<'m> {
             .arg("round", round)
             .arg("targets", targets.len());
         self.version += 1;
+        // Recovery retention (TCP only): the values of this broadcast,
+        // refcount-shared across targets, so a dead worker's rebuilt actors
+        // can be re-sent exactly the model they last held. In-process
+        // deployments have no partial failures and skip the clone.
+        let retain: Option<Arc<Vec<Vec<f32>>>> = if self.assignment.is_empty() {
+            None
+        } else {
+            Some(Arc::new(params.values.clone()))
+        };
         // Downlink packing rides the same base window upload decode uses.
         // HE sessions broadcast the decrypted aggregate in the clear (the
         // documented server-side stand-in) and keep raw `SetModel` frames.
@@ -389,7 +487,14 @@ impl<'m> Federation<'m> {
                         f.len() as u64,
                         logical_len,
                     );
-                    self.coord.send(t, f)?;
+                    // Record intent before the send: if the hosting worker
+                    // is found dead, recovery replays exactly this broadcast
+                    // (raw) to the rebuilt actor.
+                    if let Some(shared) = &retain {
+                        self.last_broadcast_of[t] =
+                            Some((round as u32, self.version, shared.clone()));
+                    }
+                    self.send_recovering(t, f)?;
                 }
                 None => {
                     if down_pack {
@@ -405,7 +510,11 @@ impl<'m> Federation<'m> {
                     // the measured `wire payload == SimNet bytes` invariant
                     // the report documents.
                     self.wire().record_payload_frame(Phase::Train, Direction::Down, f.len() as u64);
-                    self.coord.send(t, f)?;
+                    if let Some(shared) = &retain {
+                        self.last_broadcast_of[t] =
+                            Some((round as u32, self.version, shared.clone()));
+                    }
+                    self.send_recovering(t, f)?;
                 }
             }
         }
@@ -484,7 +593,10 @@ impl<'m> Federation<'m> {
             DownMsg::ModelVersion { version: self.version }.encode().into();
         for &t in targets {
             self.wire().record_frame(Phase::Train, Direction::Down, frame.len() as u64);
-            self.coord.send(t, frame.clone())?;
+            // Recovery makes a retry redundant for a moved client: its
+            // rebuilt actor was just re-sent the latest broadcast raw, which
+            // is what this restamp points at.
+            self.send_recovering(t, frame.clone())?;
         }
         Ok(())
     }
@@ -534,6 +646,9 @@ impl<'m> Federation<'m> {
         upload: bool,
         targets: &[usize],
     ) -> Result<PolicyRound> {
+        // Round boundaries admit parked standby workers before any new
+        // traffic, so a late joiner's first slice starts on a clean round.
+        self.admit_late_workers()?;
         let _sp = crate::trace::span("coord", "round")
             .arg("round", round)
             .arg("participants", participants.len());
@@ -553,6 +668,12 @@ impl<'m> Federation<'m> {
                 let t0 = std::time::Instant::now();
                 model = Some(self.do_aggregate(round, &uploaded, targets)?);
                 agg_secs = t0.elapsed().as_secs_f64();
+            }
+        }
+        if self.checkpoint_every > 0 && (round as u64 + 1) % self.checkpoint_every == 0 {
+            if let Some(m) = &model {
+                self.last_checkpoint = Some(self.round_checkpoint(round, m));
+                self.monitor.note("checkpoint_round", round);
             }
         }
         drop(_sp);
@@ -601,10 +722,13 @@ impl<'m> Federation<'m> {
         self.pending_floor[c] = Some(self.last_sent_version[c]);
         let total_w: f32 = participants.iter().map(|&p| self.weights[p].max(1.0)).sum();
         let scale = self.weights[c].max(1.0) / total_w.max(1.0);
+        // Record the order before it leaves: until the update comes back,
+        // recovery must re-issue exactly this order to a rebuilt actor.
+        self.last_train[c] = Some((round as u32, scale, upload));
         let frame: crate::transport::link::Frame =
             DownMsg::Train { round: round as u32, scale, upload }.encode().into();
         self.wire().record_frame(Phase::Train, Direction::Down, frame.len() as u64);
-        self.coord.send(c, frame)
+        self.send_recovering(c, frame)
     }
 
     /// Merge a piggybacked observation block into the unified timeline via
@@ -623,7 +747,7 @@ impl<'m> Federation<'m> {
     }
 
     fn decode_update_frame(
-        &self,
+        &mut self,
         from: usize,
         frame: &crate::transport::link::Frame,
     ) -> Result<UpdateEnvelope> {
@@ -639,6 +763,13 @@ impl<'m> Federation<'m> {
                     Direction::Up,
                     (frame.len() - u.obs.wire_len) as u64,
                 );
+                let c = u.client as usize;
+                if c < self.n {
+                    // The client's post-round RNG cursor and the completion
+                    // of its outstanding order — recovery state.
+                    self.client_rng[c] = Some(u.rng);
+                    self.last_train[c] = None;
+                }
                 self.apply_staged(u.client as usize, &u.staged);
                 self.absorb_obs(u.client as usize, std::mem::take(&mut u.obs));
                 Ok(u)
@@ -654,18 +785,388 @@ impl<'m> Federation<'m> {
         }
     }
 
+    /// Receive the next frame, transparently running crash recovery when a
+    /// worker connection dies mid-wait: after [`Federation::recover`] the
+    /// stream simply resumes, now fed by the re-assigned actors. Frames
+    /// buffered during a recovery's ack waits drain first.
+    fn recv_frame(&mut self) -> Result<(usize, crate::transport::link::Frame)> {
+        loop {
+            if let Some(x) = self.pending_frames.pop_front() {
+                return Ok(x);
+            }
+            match self.coord.recv() {
+                Ok(x) => return Ok(x),
+                Err(e) => {
+                    let gone = match e.downcast::<WorkerGone>() {
+                        Ok(g) => g,
+                        Err(e) => return Err(e),
+                    };
+                    self.recover(&gone, true)?;
+                }
+            }
+        }
+    }
+
     /// Block for the next trainer update.
     pub(crate) fn recv_update(&mut self) -> Result<UpdateEnvelope> {
-        let (from, frame) = self.coord.recv()?;
+        let (from, frame) = self.recv_frame()?;
         self.decode_update_frame(from, &frame)
     }
 
     /// Non-blocking poll for an already-arrived trainer update.
     pub(crate) fn try_recv_update(&mut self) -> Result<Option<UpdateEnvelope>> {
-        match self.coord.try_recv()? {
-            Some((from, frame)) => Ok(Some(self.decode_update_frame(from, &frame)?)),
-            None => Ok(None),
+        loop {
+            if let Some((from, frame)) = self.pending_frames.pop_front() {
+                return Ok(Some(self.decode_update_frame(from, &frame)?));
+            }
+            match self.coord.try_recv() {
+                Ok(Some((from, frame))) => {
+                    return Ok(Some(self.decode_update_frame(from, &frame)?));
+                }
+                Ok(None) => return Ok(None),
+                Err(e) => {
+                    let gone = match e.downcast::<WorkerGone>() {
+                        Ok(g) => g,
+                        Err(e) => return Err(e),
+                    };
+                    self.recover(&gone, true)?;
+                }
+            }
         }
+    }
+
+    // -- crash recovery (the elastic-orchestration tentpole) ----------------
+
+    /// Send a lane frame with crash recovery: when the hosting worker is
+    /// dead, [`Federation::recover`] runs, and the frame is retried through
+    /// the lane's new route — unless the client was among the moved ones, in
+    /// which case recovery already replayed its recorded broadcast/order
+    /// state and a retry would duplicate it.
+    fn send_recovering(&mut self, c: usize, frame: crate::transport::link::Frame) -> Result<()> {
+        loop {
+            match self.coord.send(c, frame.clone()) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    let gone = match e.downcast::<WorkerGone>() {
+                        Ok(g) => g,
+                        Err(e) => return Err(e),
+                    };
+                    if self.recover(&gone, false)?.contains(&c) {
+                        return Ok(());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Crash recovery: mark the dead connection, move its clients onto the
+    /// surviving workers (deterministic round-robin, ascending client order),
+    /// and replay each moved client's recorded broadcast and outstanding
+    /// train order so the interrupted round finishes **bitwise-identical** to
+    /// an uninterrupted run (sync plaintext/DP — the rebuilt actors resume
+    /// their RNG streams from the shipped cursors). Returns the moved
+    /// clients; empty when the connection was already recovered (duplicate
+    /// death reports are idempotent). `marker_seen` says whether the
+    /// connection's end-of-stream error has already been consumed: send-side
+    /// detections pass `false` and recovery first drains the reader until the
+    /// marker, so every frame the worker flushed before dying is accounted
+    /// for before any re-issue decision.
+    fn recover(&mut self, gone: &WorkerGone, marker_seen: bool) -> Result<Vec<usize>> {
+        let conn = gone.conn;
+        if self.assignment.is_empty() {
+            bail!("trainer connection lost (in-process deployments cannot recover): {gone}");
+        }
+        if self.conn_dead.get(conn).copied().unwrap_or(false) {
+            return Ok(Vec::new());
+        }
+        if conn >= self.conn_dead.len() {
+            self.conn_dead.resize(conn + 1, false);
+        }
+        self.conn_dead[conn] = true;
+        let dead: Vec<usize> = (0..self.n).filter(|&c| self.assignment[c] == conn).collect();
+        let survivors: Vec<usize> =
+            (0..self.conn_dead.len()).filter(|&k| !self.conn_dead[k]).collect();
+        if survivors.is_empty() {
+            bail!("worker connection {conn} died and no workers survive: {}", gone.reason);
+        }
+        let _sp = crate::trace::span("coord", "recovery")
+            .arg("conn", conn)
+            .arg("clients", dead.len());
+        eprintln!(
+            "fedgraph: worker connection {conn} died ({}); re-assigning clients {dead:?} \
+             across {} survivor(s)",
+            gone.reason,
+            survivors.len()
+        );
+        // Drain everything the worker flushed before dying (frame order is
+        // preserved ahead of the reader's end-of-stream marker), so an
+        // update that made it out still completes its order below.
+        if marker_seen {
+            loop {
+                match self.coord.try_recv() {
+                    Ok(Some(x)) => self.pending_frames.push_back(x),
+                    Ok(None) => break,
+                    Err(e) => {
+                        let g = match e.downcast::<WorkerGone>() {
+                            Ok(g) => g,
+                            Err(e) => return Err(e),
+                        };
+                        if g.conn != conn && !self.conn_dead.get(g.conn).copied().unwrap_or(false)
+                        {
+                            bail!(
+                                "worker connection {} died while recovering {conn}: {}",
+                                g.conn,
+                                g.reason
+                            );
+                        }
+                    }
+                }
+            }
+        } else {
+            loop {
+                match self.coord.recv() {
+                    Ok(x) => self.pending_frames.push_back(x),
+                    Err(e) => {
+                        let g = match e.downcast::<WorkerGone>() {
+                            Ok(g) => g,
+                            Err(e) => return Err(e),
+                        };
+                        if g.conn == conn {
+                            break;
+                        }
+                        if !self.conn_dead.get(g.conn).copied().unwrap_or(false) {
+                            bail!(
+                                "worker connection {} died while recovering {conn}: {}",
+                                g.conn,
+                                g.reason
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.settle_buffered_orders(&dead);
+        if !dead.is_empty() {
+            // Deterministic spread: dead clients ascending, round-robin over
+            // the surviving connections (ascending).
+            let mut moves: Vec<Vec<usize>> = vec![Vec::new(); survivors.len()];
+            for (i, &c) in dead.iter().enumerate() {
+                moves[i % survivors.len()].push(c);
+            }
+            for (slot, &target) in moves.iter().zip(&survivors) {
+                if !slot.is_empty() {
+                    self.reassign_clients(slot, target)?;
+                }
+            }
+        }
+        self.recoveries += 1;
+        self.reassigned_clients += dead.len() as u64;
+        Ok(dead)
+    }
+
+    /// Clear the outstanding-order mark of any moved client whose completed
+    /// update is already sitting in the buffered frames: its order is done
+    /// and must not be re-issued to the rebuilt actor.
+    fn settle_buffered_orders(&mut self, moved: &[usize]) {
+        for &(from, ref f) in self.pending_frames.iter() {
+            if moved.contains(&from) {
+                if let Ok(UpMsg::Update(_)) = UpMsg::decode(f) {
+                    self.last_train[from] = None;
+                }
+            }
+        }
+    }
+
+    /// Move `clients` onto live connection `conn`: ship the `Reassign` frame
+    /// (carrying each client's RNG cursor), await the worker's ack (buffering
+    /// unrelated frames for the interrupted collection loop), reroute the
+    /// lanes, re-rendezvous with the rebuilt actors, and replay recorded
+    /// broadcast/train state. Recovery traffic is measured on the wire
+    /// ledger but never SimNet-charged — the simulated ledger of a recovered
+    /// run stays bitwise-identical to the uninterrupted one.
+    fn reassign_clients(&mut self, clients: &[usize], conn: usize) -> Result<()> {
+        self.reassign_token += 1;
+        let token = self.reassign_token;
+        let msg = DownMsg::Reassign {
+            token,
+            n_total: self.n as u32,
+            clients: clients.iter().map(|&c| c as u32).collect(),
+            rngs: clients.iter().map(|&c| self.client_rng[c]).collect(),
+        };
+        let frame: crate::transport::link::Frame = msg.encode().into();
+        self.wire().record_frame(Phase::Train, Direction::Down, frame.len() as u64);
+        self.coord
+            .send_control(conn, frame)
+            .map_err(|e| anyhow!("worker connection {conn} died during recovery: {e:#}"))?;
+        // One-failure-at-a-time is the documented recovery model: losing a
+        // second worker while waiting for this ack is fatal.
+        loop {
+            let (from, f) = self
+                .coord
+                .recv()
+                .map_err(|e| anyhow!("lost another worker during recovery: {e:#}"))?;
+            if from == CONTROL_LANE as usize {
+                match UpMsg::decode(&f) {
+                    Ok(UpMsg::ReassignAck { token: t, built_clients }) if t == token => {
+                        self.wire().record_frame(Phase::Train, Direction::Up, f.len() as u64);
+                        if built_clients as usize != clients.len() {
+                            bail!(
+                                "worker connection {conn} rebuilt {built_clients} clients, \
+                                 expected {}",
+                                clients.len()
+                            );
+                        }
+                        break;
+                    }
+                    _ => {} // stale control traffic
+                }
+            } else {
+                self.pending_frames.push_back((from, f));
+            }
+        }
+        self.coord.reroute(clients, conn)?;
+        for &c in clients {
+            self.assignment[c] = conn;
+        }
+        for &c in clients {
+            // Fresh actor: Hello rendezvous first, then state replay.
+            let hello: crate::transport::link::Frame =
+                DownMsg::Hello { client: c as u32 }.encode().into();
+            self.wire().record_frame(Phase::Train, Direction::Down, hello.len() as u64);
+            self.coord.send(c, hello)?;
+            loop {
+                let (from, f) = self
+                    .coord
+                    .recv()
+                    .map_err(|e| anyhow!("lost another worker during recovery: {e:#}"))?;
+                if from == c {
+                    match UpMsg::decode(&f) {
+                        Ok(UpMsg::HelloAck { client }) if client as usize == c => {
+                            self.wire().record_frame(
+                                Phase::Train,
+                                Direction::Up,
+                                f.len() as u64,
+                            );
+                            break;
+                        }
+                        Ok(UpMsg::Failed { client, error }) => {
+                            bail!("re-assigned trainer {client} failed: {error}")
+                        }
+                        _ => self.pending_frames.push_back((from, f)),
+                    }
+                } else {
+                    self.pending_frames.push_back((from, f));
+                }
+            }
+            if let Some((round, version, values)) = self.last_broadcast_of[c].clone() {
+                let f: crate::transport::link::Frame =
+                    encode_set_model(round, version, &values).into();
+                self.wire().record_frame(Phase::Train, Direction::Down, f.len() as u64);
+                self.coord.send(c, f)?;
+            }
+            if let Some((round, scale, upload)) = self.last_train[c] {
+                let f: crate::transport::link::Frame =
+                    DownMsg::Train { round, scale, upload }.encode().into();
+                self.wire().record_frame(Phase::Train, Direction::Down, f.len() as u64);
+                self.coord.send(c, f)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Round-boundary admission of standby workers (`fedgraph worker
+    /// --connect` after launch). Each parked connection is registered, then
+    /// seeded with a deterministic slice migrated from the most-loaded live
+    /// worker (ties to the lowest index): the donor's upper half of lanes is
+    /// stopped cleanly and re-materialized on the joiner via the same
+    /// `Reassign` path crash recovery uses, so the next round trains bit for
+    /// bit as if nothing moved. A joiner with nothing worth splitting stays
+    /// a hot spare and absorbs clients on the next failure. Returns how many
+    /// workers were admitted.
+    pub fn admit_late_workers(&mut self) -> Result<usize> {
+        let mut admitted = 0usize;
+        loop {
+            let lw = match &self.late_rx {
+                Some(rx) => match rx.try_recv() {
+                    Ok(lw) => lw,
+                    Err(_) => break,
+                },
+                None => break,
+            };
+            let conn = self.coord.add_conn(lw.stream)?;
+            if conn >= self.conn_dead.len() {
+                self.conn_dead.resize(conn + 1, false);
+            }
+            let mut counts = vec![0usize; self.conn_dead.len()];
+            for &k in &self.assignment {
+                if k < counts.len() {
+                    counts[k] += 1;
+                }
+            }
+            let mut donor: Option<usize> = None;
+            for k in 0..counts.len() {
+                if k == conn || self.conn_dead[k] {
+                    continue;
+                }
+                if counts[k] > donor.map(|d| counts[d]).unwrap_or(0) {
+                    donor = Some(k);
+                }
+            }
+            let donor = match donor {
+                Some(d) if counts[d] >= 2 => d,
+                _ => {
+                    self.late_joins += 1;
+                    admitted += 1;
+                    eprintln!(
+                        "fedgraph: admitted standby worker as connection {conn} (hot spare)"
+                    );
+                    continue;
+                }
+            };
+            let donor_clients: Vec<usize> =
+                (0..self.n).filter(|&c| self.assignment[c] == donor).collect();
+            let moved: Vec<usize> =
+                donor_clients[donor_clients.len() - donor_clients.len() / 2..].to_vec();
+            // Retire the donor's actors for the moved lanes before the slice
+            // migrates; their StopAcks carry final observations as usual.
+            let stop: crate::transport::link::Frame = DownMsg::Stop.encode().into();
+            for &c in &moved {
+                self.wire().record_frame(Phase::Train, Direction::Down, stop.len() as u64);
+                self.coord.send(c, stop.clone())?;
+            }
+            let mut acked = 0usize;
+            while acked < moved.len() {
+                let (from, f) = self
+                    .coord
+                    .recv()
+                    .map_err(|e| anyhow!("worker died during late-join migration: {e:#}"))?;
+                let mut handled = false;
+                if moved.contains(&from) {
+                    if let Ok(UpMsg::StopAck { client, obs }) = UpMsg::decode(&f) {
+                        self.wire().record_frame(
+                            Phase::Train,
+                            Direction::Up,
+                            f.len() as u64 - obs.wire_len as u64,
+                        );
+                        self.absorb_obs(client as usize, obs);
+                        acked += 1;
+                        handled = true;
+                    }
+                }
+                if !handled {
+                    self.pending_frames.push_back((from, f));
+                }
+            }
+            self.settle_buffered_orders(&moved);
+            self.reassign_clients(&moved, conn)?;
+            self.late_joins += 1;
+            admitted += 1;
+            eprintln!(
+                "fedgraph: admitted standby worker as connection {conn}; migrated clients \
+                 {moved:?} from connection {donor}"
+            );
+        }
+        Ok(admitted)
     }
 
     /// Updates that arrived during an eval collection, in arrival order.
@@ -1053,29 +1554,74 @@ impl<'m> Federation<'m> {
         let _sp = crate::trace::span("coord", "eval")
             .arg("round", round)
             .arg("targets", targets.len());
-        let frame: crate::transport::link::Frame =
+        let order: crate::transport::link::Frame =
             encode_eval(round as u32, with.map(|p| p.values.as_slice())).into();
         for &t in targets {
             // Control by the ledger rule: an eval model override stands in
             // for server-side evaluation and is explicitly uncharged — the
             // measured meter still sees its real size, which is exactly the
             // kind of simulated-vs-measured gap the report exists to show.
-            self.wire().record_frame(Phase::Eval, Direction::Down, frame.len() as u64);
-            self.coord.send(t, frame.clone())?;
+            self.wire().record_frame(Phase::Eval, Direction::Down, order.len() as u64);
+            loop {
+                match self.coord.send(t, order.clone()) {
+                    Ok(()) => break,
+                    Err(e) => {
+                        let gone = match e.downcast::<WorkerGone>() {
+                            Ok(g) => g,
+                            Err(e) => return Err(e),
+                        };
+                        // Recovery never replays eval orders — always retry.
+                        self.recover(&gone, false)?;
+                    }
+                }
+            }
         }
         let mut metrics: Vec<Option<(f64, f64)>> = vec![None; self.n];
         let mut remaining = targets.len();
         while remaining > 0 {
-            let (from, frame) = self.coord.recv()?;
+            let (from, frame) = loop {
+                if let Some(x) = self.pending_frames.pop_front() {
+                    break x;
+                }
+                match self.coord.recv() {
+                    Ok(x) => break x,
+                    Err(e) => {
+                        let gone = match e.downcast::<WorkerGone>() {
+                            Ok(g) => g,
+                            Err(e) => return Err(e),
+                        };
+                        let moved = self.recover(&gone, true)?;
+                        // Re-order evaluation on re-assigned targets still
+                        // owing a metric (their rebuilt actors hold the
+                        // replayed broadcast) — unless the old actor's
+                        // metric made it out before the crash and is
+                        // waiting in the buffer.
+                        for &c in &moved {
+                            let buffered = self.pending_frames.iter().any(|&(pf, ref f)| {
+                                pf == c && matches!(UpMsg::decode(f), Ok(UpMsg::Metric { .. }))
+                            });
+                            if targets.contains(&c) && metrics[c].is_none() && !buffered {
+                                self.wire().record_frame(
+                                    Phase::Eval,
+                                    Direction::Down,
+                                    order.len() as u64,
+                                );
+                                self.coord.send(c, order.clone())?;
+                            }
+                        }
+                    }
+                }
+            };
             let frame_len = frame.len() as u64;
             match UpMsg::decode(&frame).map_err(|e| anyhow!("from trainer {from}: {e}"))? {
-                UpMsg::Metric { client, round: r, num, den, staged } => {
+                UpMsg::Metric { client, round: r, num, den, staged, rng } => {
                     self.wire().record_frame(Phase::Eval, Direction::Up, frame_len);
                     let c = client as usize;
                     if r as usize != round || c >= self.n || metrics[c].is_some() {
                         bail!("protocol violation: unexpected metric from {c}");
                     }
                     self.apply_staged(c, &staged);
+                    self.client_rng[c] = Some(rng);
                     metrics[c] = Some((num, den));
                     remaining -= 1;
                 }
@@ -1090,6 +1636,11 @@ impl<'m> Federation<'m> {
                         // step decides its fate. Its staged traffic belongs
                         // to this tick (the training ran during the eval
                         // collection, exactly as in-process staging lands).
+                        let c = u.client as usize;
+                        if c < self.n {
+                            self.client_rng[c] = Some(u.rng);
+                            self.last_train[c] = None;
+                        }
                         self.apply_staged(u.client as usize, &u.staged);
                         self.absorb_obs(u.client as usize, std::mem::take(&mut u.obs));
                         self.stash.push_back(u);
@@ -1116,6 +1667,119 @@ impl<'m> Federation<'m> {
         drop(_sp);
         crate::trace::flush_thread();
         Ok((num, den))
+    }
+
+    // -- resumable coordinator (round-boundary checkpoints) -----------------
+
+    /// Snapshot the coordinator at a round boundary: `round` is the round
+    /// just completed, `model` the global model it flushed. Everything a
+    /// restore needs travels in the snapshot — model + version, per-client
+    /// version tables, decode bases, RNG cursors, the client→worker
+    /// assignment, policy state, and the SimNet ledger counters (for
+    /// cross-checking a resumed run against the original).
+    pub fn round_checkpoint(&self, round: usize, model: &ParamSet) -> RoundCheckpoint {
+        let ledger = [Phase::PreTrain, Phase::Train, Phase::Eval]
+            .iter()
+            .map(|&p| {
+                let c = self.net().counter(p);
+                (p.code() as u32, c.bytes_up, c.bytes_down, c.wasted_bytes)
+            })
+            .collect();
+        RoundCheckpoint {
+            round: round as u32,
+            version: self.version,
+            params: model.values.clone(),
+            last_sent_version: self.last_sent_version.clone(),
+            pending_floor: self.pending_floor.clone(),
+            bases: self.bases.iter().cloned().collect(),
+            assignment: self.assignment.iter().map(|&k| k as u32).collect(),
+            client_rng: self.client_rng.clone(),
+            // Quantized-mode error-feedback residuals live client-side and
+            // are not shipped; a restore starts them at zero (documented —
+            // that codec is lossy and opt-in to begin with).
+            residuals: Vec::new(),
+            he_seed: self.he_seed,
+            policy: self
+                .policy
+                .as_ref()
+                .map(|p| p.checkpoint_state())
+                .unwrap_or(super::checkpoint::PolicyCheckpoint::Sync),
+            ledger,
+        }
+    }
+
+    /// The most recent round-boundary snapshot, when
+    /// `federation.fault_tolerance.checkpoint_every` is set.
+    pub fn last_checkpoint(&self) -> Option<&RoundCheckpoint> {
+        self.last_checkpoint.as_ref()
+    }
+
+    /// Take ownership of the most recent snapshot (e.g. to persist it).
+    pub fn take_checkpoint(&mut self) -> Option<RoundCheckpoint> {
+        self.last_checkpoint.take()
+    }
+
+    /// Relaunch a session from a round-boundary [`RoundCheckpoint`]: actors
+    /// come up with their snapshot RNG cursors (in-process deployments; a
+    /// TCP restore re-ships cursors through the recovery `Reassign` path
+    /// instead), the coordinator's state tables are restored, and every
+    /// client is re-issued the checkpointed model raw — measured on the wire
+    /// ledger but never SimNet-charged, like all recovery-class traffic.
+    /// Driving rounds `ck.round + 1 ..` afterwards reproduces the
+    /// uninterrupted run bit for bit in sync mode (pinned by the
+    /// checkpoint proptests).
+    pub fn spawn_restored(
+        monitor: &'m Monitor,
+        deployment: &Deployment,
+        cfg: &FedGraphConfig,
+        blueprint: SessionBlueprint,
+        ck: &RoundCheckpoint,
+    ) -> Result<Federation<'m>> {
+        let n = blueprint.num_clients();
+        if ck.client_rng.len() != n || ck.last_sent_version.len() != n {
+            bail!(
+                "checkpoint shape mismatch: {} clients in snapshot, {n} in session",
+                ck.client_rng.len()
+            );
+        }
+        let mut fed =
+            Self::spawn_inner(monitor, deployment, cfg, blueprint, &ck.client_rng, None)?;
+        if fed.he_seed != ck.he_seed {
+            bail!(
+                "checkpoint HE context mismatch (snapshot {:?}, session {:?})",
+                ck.he_seed,
+                fed.he_seed
+            );
+        }
+        fed.version = ck.version;
+        fed.last_sent_version = ck.last_sent_version.clone();
+        // Round boundary: nothing is in flight after a restore.
+        fed.pending_floor = vec![None; n];
+        if let Some(p) = fed.policy.as_mut() {
+            p.restore_state(&ck.policy);
+        }
+        if fed.codec.needs_base() {
+            fed.bases.clear();
+            for (v, flat) in &ck.bases {
+                fed.bases.push_back((*v, flat.clone()));
+            }
+        }
+        fed.client_rng = ck.client_rng.clone();
+        let f: crate::transport::link::Frame =
+            encode_set_model(ck.round, ck.version, &ck.params).into();
+        let retain: Option<Arc<Vec<Vec<f32>>>> = if fed.assignment.is_empty() {
+            None
+        } else {
+            Some(Arc::new(ck.params.clone()))
+        };
+        for c in 0..n {
+            fed.wire().record_frame(Phase::Train, Direction::Down, f.len() as u64);
+            fed.coord.send(c, f.clone())?;
+            if let Some(s) = &retain {
+                fed.last_broadcast_of[c] = Some((ck.round, ck.version, s.clone()));
+            }
+        }
+        Ok(fed)
     }
 
     /// End the session gracefully: `Stop` every actor, wait for every
@@ -1191,6 +1855,21 @@ impl<'m> Federation<'m> {
                 }
                 Err(_) => break,
             }
+        }
+        // Elastic workers' serve loops wait for a *worker-level* control
+        // Stop after their actors retire (per-lane Stops above only end
+        // individual trainers). Dead connections are skipped; transports
+        // without control frames (in-process channels) error harmlessly.
+        for conn in 0..self.conn_dead.len() {
+            if !self.conn_dead[conn] {
+                let _ = self.coord.send_control(conn, DownMsg::Stop.encode().into());
+            }
+        }
+        // Recovery telemetry for the report's `recovery` section.
+        if self.recoveries > 0 || self.late_joins > 0 {
+            self.monitor.note("recoveries", self.recoveries);
+            self.monitor.note("reassigned_clients", self.reassigned_clients);
+            self.monitor.note("late_joins", self.late_joins);
         }
         for h in self.threads.drain(..) {
             let _ = h.join();

@@ -21,8 +21,22 @@
 //! Shutdown: trainers ack `Stop` before their lanes close, so the worker
 //! flushes its acks, shuts the socket down, and exits 0 — and the
 //! coordinator never reports a spurious "trainer hung up" at end of run.
+//!
+//! **Elastic membership (protocol v6).** The serve loop is no longer a
+//! passive actor-join: while actors run, the worker listens on the control
+//! lane for [`DownMsg::Reassign`] orders (a crashed peer's clients moving
+//! here, or a standby slice arriving mid-run), rebuilds exactly those
+//! clients through its session factory, registers their lanes, and acks
+//! before the coordinator resumes lane traffic. A heartbeat thread pulses
+//! the control lane (`federation.fault_tolerance.heartbeat_ms`) so the
+//! coordinator's liveness window never fires on a merely-busy worker, and a
+//! control-lane `Stop` ends the serve loop deterministically. A worker that
+//! connects after launch (`fedgraph worker --connect` against a running
+//! coordinator) receives a standby `Assign` — empty slice — and waits in the
+//! same loop for its first `Reassign`.
 
 use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -34,6 +48,7 @@ use crate::monitor::Monitor;
 use crate::trace::{self, ObsSession, ProcessStats};
 use crate::transport::tcp::{self, CONTROL_LANE};
 use crate::transport::SimNet;
+use crate::util::rng::Rng;
 use crate::util::sync::Semaphore;
 
 use super::actor::actor_main;
@@ -52,7 +67,21 @@ pub struct WorkerAssignment {
     /// `Assign` receipt, echoed on the `BuildReport` so the coordinator can
     /// estimate the clock offset.
     pub assign_received_ns: u64,
+    /// Late-join rendezvous (protocol v6): this worker connected after
+    /// launch, carries no initial slice, and should wait for a mid-run
+    /// `Reassign` instead of exiting on an empty assignment.
+    pub standby: bool,
     stream: TcpStream,
+}
+
+impl WorkerAssignment {
+    /// A cloned raw handle to the coordinator socket. Exists for fault
+    /// injection: chaos tests `shutdown()` this handle to make the worker
+    /// die exactly the way a crashed process does (peer sees EOF, local
+    /// I/O fails) without reaching into the serve loop.
+    pub fn socket(&self) -> std::io::Result<TcpStream> {
+        self.stream.try_clone()
+    }
 }
 
 /// Build-cost counters a worker reports ([`UpMsg::BuildReport`]) right after
@@ -90,13 +119,14 @@ pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
         bail!("coordinator sent a non-control frame before Assign");
     }
     match DownMsg::decode(&payload).map_err(|e| anyhow!("Assign frame: {e}"))? {
-        DownMsg::Assign { n_total, clients, config, sent_at_ns: _ } => {
+        DownMsg::Assign { n_total, clients, config, sent_at_ns: _, standby } => {
             let cfg = FedGraphConfig::decode_wire(&config).context("decoding shipped config")?;
             Ok(WorkerAssignment {
                 cfg,
                 n_total: n_total as usize,
                 clients: clients.into_iter().map(|c| c as usize).collect(),
                 assign_received_ns,
+                standby,
                 stream,
             })
         }
@@ -118,16 +148,46 @@ pub fn serve(
     stats: BuildStats,
     obs: ObsSession,
 ) -> Result<()> {
-    let WorkerAssignment { cfg, n_total, clients, assign_received_ns, stream } = assignment;
+    serve_elastic(assignment, Some(build), staging_net, stats, obs, None)
+}
+
+/// The elastic serve loop behind [`serve`]: hosts the initial slice (if any),
+/// pulses heartbeats, and keeps listening on the control lane for
+/// [`DownMsg::Reassign`] orders — a crashed peer's clients or a standby
+/// worker's first slice — rebuilding exactly those clients via `rebuild` and
+/// acking before the coordinator resumes their lane traffic.
+///
+/// `build: None` is the standby entry: no initial clients, an empty
+/// `BuildReport`, and everything arrives later via `Reassign`. A worker
+/// without a `rebuild` factory (the thread-hosted test harness) serves its
+/// fixed slice and fails loudly if asked to adopt clients.
+///
+/// The loop ends when the coordinator sends a control-lane `Stop` (normal
+/// shutdown, after every trainer acked its own per-lane `Stop`) or closes
+/// the connection.
+pub fn serve_elastic(
+    assignment: WorkerAssignment,
+    build: Option<SessionBuild>,
+    staging_net: Arc<SimNet>,
+    stats: BuildStats,
+    obs: ObsSession,
+    rebuild: Option<Box<dyn Fn(&[usize]) -> Result<SessionBuild> + '_>>,
+) -> Result<()> {
+    let WorkerAssignment { cfg, n_total, clients, assign_received_ns, standby: _, stream } =
+        assignment;
     let mut stream = stream;
-    if build.n_total != n_total {
-        bail!(
-            "session build was cut from {} clients but the coordinator assigned over {n_total}",
-            build.n_total
-        );
+    if let Some(b) = &build {
+        if b.n_total != n_total {
+            bail!(
+                "session build was cut from {} clients but the coordinator assigned over {n_total}",
+                b.n_total
+            );
+        }
+    } else if !clients.is_empty() {
+        bail!("a worker with an assigned slice needs an initial build");
     }
     let report = UpMsg::BuildReport {
-        built_clients: build.num_built() as u32,
+        built_clients: build.as_ref().map(|b| b.num_built()).unwrap_or(0) as u32,
         total_clients: n_total as u32,
         session_bytes: stats.session_bytes,
         build_secs: stats.build_secs,
@@ -137,48 +197,141 @@ pub fn serve(
     tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
         .context("sending BuildReport")?;
     let he_ctx = he_context(&cfg);
-    let (links, demux) = tcp::worker_links(&stream, &clients, obs.stats.queue_gauge())?;
+    let (links, registry, control_rx, demux) =
+        tcp::worker_links(&stream, &clients, obs.stats.queue_gauge())?;
     // `max_concurrency` bounds compute **per process**: this worker gates its
     // own actors over its own cores, as a separate machine would (see the
     // `FederationConfig::max_concurrency` docs for the cross-deployment
-    // timing caveat). Determinism does not depend on the gate.
+    // timing caveat). Determinism does not depend on the gate, so re-assigned
+    // actors simply share the permits sized for the initial slice.
     let concurrency = cfg.federation.resolved_concurrency(clients.len().max(1));
     let gate = Arc::new(Semaphore::new(concurrency));
-    let SessionBuild { init, max_dim, logics, .. } = build;
-    // The sliced build must carry exactly the assigned clients' logics,
-    // keyed by client index — verified before any actor thread spawns.
-    let mut logic_of: std::collections::HashMap<usize, Box<dyn super::actor::ClientLogic>> =
-        logics.into_iter().collect();
-    if let Some(&missing) = clients.iter().find(|&&c| !logic_of.contains_key(&c)) {
-        bail!("sliced build is missing assigned client {missing}");
-    }
-    if logic_of.len() != clients.len() {
-        let mut extra: Vec<usize> =
-            logic_of.keys().copied().filter(|c| !clients.contains(c)).collect();
-        extra.sort_unstable();
-        bail!("sliced build materialized unassigned clients {extra:?}");
-    }
+    // Heartbeats keep the coordinator's liveness window from firing on a
+    // worker whose actors are all deep in long local rounds.
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = if cfg.federation.fault_tolerance.heartbeat_ms > 0 {
+        Some(tcp::spawn_heartbeat(
+            registry.writer(),
+            Duration::from_millis(cfg.federation.fault_tolerance.heartbeat_ms),
+            hb_stop.clone(),
+        ))
+    } else {
+        None
+    };
     let mut threads = Vec::with_capacity(clients.len());
-    for (&client, link) in clients.iter().zip(links) {
-        let logic = logic_of.remove(&client).expect("verified above");
-        let setup = actor_setup(
-            &cfg,
-            &init,
-            max_dim,
-            &he_ctx,
-            gate.clone(),
-            client,
-            logic,
-            link,
-            Some(staging_net.clone()),
-            Some(obs.clone()),
-        );
-        let handle = std::thread::Builder::new()
-            .name(format!("fed-worker-trainer-{client}"))
-            .spawn(move || actor_main(setup))
-            .map_err(|e| anyhow!("spawning worker trainer {client}: {e}"))?;
-        threads.push(handle);
+    if let Some(build) = build {
+        let SessionBuild { init, max_dim, logics, .. } = build;
+        // The sliced build must carry exactly the assigned clients' logics,
+        // keyed by client index — verified before any actor thread spawns.
+        let mut logic_of: std::collections::HashMap<usize, Box<dyn super::actor::ClientLogic>> =
+            logics.into_iter().collect();
+        if let Some(&missing) = clients.iter().find(|&&c| !logic_of.contains_key(&c)) {
+            bail!("sliced build is missing assigned client {missing}");
+        }
+        if logic_of.len() != clients.len() {
+            let mut extra: Vec<usize> =
+                logic_of.keys().copied().filter(|c| !clients.contains(c)).collect();
+            extra.sort_unstable();
+            bail!("sliced build materialized unassigned clients {extra:?}");
+        }
+        for (&client, link) in clients.iter().zip(links) {
+            let logic = logic_of.remove(&client).expect("verified above");
+            let setup = actor_setup(
+                &cfg,
+                &init,
+                max_dim,
+                &he_ctx,
+                gate.clone(),
+                client,
+                logic,
+                link,
+                Some(staging_net.clone()),
+                Some(obs.clone()),
+            );
+            let handle = std::thread::Builder::new()
+                .name(format!("fed-worker-trainer-{client}"))
+                .spawn(move || actor_main(setup))
+                .map_err(|e| anyhow!("spawning worker trainer {client}: {e}"))?;
+            threads.push(handle);
+        }
     }
+    // Control loop: runs until the coordinator orders a worker-level stop or
+    // the connection closes (demux exit drops the channel sender).
+    loop {
+        let frame = match control_rx.recv() {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        let msg = match DownMsg::decode(&frame) {
+            Ok(m) => m,
+            // Stray or undecodable control traffic is liveness noise, not a
+            // protocol step — ignore it.
+            Err(_) => continue,
+        };
+        match msg {
+            DownMsg::Stop => break,
+            DownMsg::Reassign { token, n_total: _, clients: moved, rngs } => {
+                let wanted: Vec<usize> = moved.iter().map(|&c| c as usize).collect();
+                let factory = match &rebuild {
+                    Some(f) => f,
+                    None => bail!(
+                        "received Reassign for clients {wanted:?} but this worker \
+                         has no session factory"
+                    ),
+                };
+                let slice = factory(&wanted)
+                    .with_context(|| format!("rebuilding re-assigned clients {wanted:?}"))?;
+                let SessionBuild { init, max_dim, logics, .. } = slice;
+                let mut logic_of: std::collections::HashMap<
+                    usize,
+                    Box<dyn super::actor::ClientLogic>,
+                > = logics.into_iter().collect();
+                for (i, &client) in wanted.iter().enumerate() {
+                    let logic = match logic_of.remove(&client) {
+                        Some(l) => l,
+                        None => bail!("re-assignment build is missing client {client}"),
+                    };
+                    // The lane must exist before the ack: the coordinator
+                    // re-routes and resumes traffic only after ReassignAck.
+                    let link = registry.open_lane(client);
+                    let mut setup = actor_setup(
+                        &cfg,
+                        &init,
+                        max_dim,
+                        &he_ctx,
+                        gate.clone(),
+                        client,
+                        logic,
+                        link,
+                        Some(staging_net.clone()),
+                        Some(obs.clone()),
+                    );
+                    // Resume the dead worker's RNG stream exactly where its
+                    // last shipped cursor left it — the bitwise-recovery
+                    // invariant hinges on this.
+                    if let Some(Some(snap)) = rngs.get(i) {
+                        setup.rng = Rng::restore(snap);
+                    }
+                    let handle = std::thread::Builder::new()
+                        .name(format!("fed-worker-trainer-{client}"))
+                        .spawn(move || actor_main(setup))
+                        .map_err(|e| anyhow!("spawning re-assigned trainer {client}: {e}"))?;
+                    threads.push(handle);
+                }
+                let ack =
+                    UpMsg::ReassignAck { token, built_clients: wanted.len() as u32 }.encode();
+                {
+                    let writer = registry.writer();
+                    let mut w = writer.lock().unwrap();
+                    tcp::write_frame(&mut *w, CONTROL_LANE, &ack)
+                        .context("sending ReassignAck")?;
+                }
+                eprintln!("fedgraph worker: adopted re-assigned clients {wanted:?}");
+            }
+            _ => {}
+        }
+    }
+    hb_stop.store(true, Ordering::Relaxed);
     // Actors exit after acking Stop; their acks are already on the socket
     // when we FIN it, so the coordinator drains them before the close.
     for h in threads {
@@ -186,6 +339,9 @@ pub fn serve(
     }
     let _ = stream.shutdown(Shutdown::Both);
     let _ = demux.join();
+    if let Some(h) = heartbeat {
+        let _ = h.join();
+    }
     Ok(())
 }
 
@@ -209,10 +365,11 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
         assignment.cfg.method.name(),
         assignment.cfg.dataset,
     );
-    if assignment.clients.is_empty() {
+    if assignment.clients.is_empty() && !assignment.standby {
         // More workers than clients: nothing to host. Report the (empty)
         // build — the coordinator blocks on one report per worker — and
-        // exit cleanly.
+        // exit cleanly. (A *standby* worker also starts empty, but stays to
+        // rendezvous for a mid-run slice — handled below.)
         let report = UpMsg::BuildReport {
             built_clients: 0,
             total_clients: assignment.n_total as u32,
@@ -245,31 +402,48 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
     // journaled and shipped to the coordinator); notes/timers are discarded,
     // but its session-build counters feed the BuildReport.
     let monitor = Monitor::new(Arc::new(SimNet::with_stage_log(assignment.cfg.network.clone())));
-    let slice = BuildSlice::assigned(assignment.n_total, &assignment.clients)?;
-    let t0 = std::time::Instant::now();
-    let build = {
-        let _sp = trace::span("build", "build_slice")
-            .arg("clients", assignment.clients.len())
-            .arg("total", assignment.n_total);
-        crate::coordinator::build_session_sliced(&assignment.cfg, &engine, &monitor, &slice)
-    };
-    trace::flush_thread();
-    let result = match build {
-        Ok(b) => {
+    let n_total = assignment.n_total;
+    // A standby worker defers its first build to the first `Reassign`; a
+    // regular worker materializes its assigned slice up front.
+    let initial: Result<(Option<SessionBuild>, BuildStats)> = if assignment.standby {
+        eprintln!("fedgraph worker: standby — awaiting a mid-run slice");
+        Ok((None, BuildStats::default()))
+    } else {
+        BuildSlice::assigned(n_total, &assignment.clients).and_then(|slice| {
+            let t0 = std::time::Instant::now();
+            let b = {
+                let _sp = trace::span("build", "build_slice")
+                    .arg("clients", assignment.clients.len())
+                    .arg("total", n_total);
+                crate::coordinator::build_session_sliced(&assignment.cfg, &engine, &monitor, &slice)
+            }?;
+            trace::flush_thread();
             let (built, session_bytes) = monitor.session_build();
             let build_secs = t0.elapsed().as_secs_f64();
             eprintln!(
-                "fedgraph worker: sliced build materialized {built}/{} clients \
-                 ({session_bytes} session bytes, {build_secs:.2}s)",
-                assignment.n_total
+                "fedgraph worker: sliced build materialized {built}/{n_total} clients \
+                 ({session_bytes} session bytes, {build_secs:.2}s)"
             );
-            serve(
-                assignment,
-                b,
-                monitor.net.clone(),
-                BuildStats { session_bytes, build_secs },
-                obs,
-            )
+            Ok((Some(b), BuildStats { session_bytes, build_secs }))
+        })
+    };
+    // The session factory behind mid-run `Reassign` orders: rebuild exactly
+    // the requested clients through the same deterministic sliced-build path
+    // the initial slice used.
+    let rebuild_cfg = assignment.cfg.clone();
+    let result = match initial {
+        Ok((build, stats)) => {
+            let rebuild: Box<dyn Fn(&[usize]) -> Result<SessionBuild> + '_> =
+                Box::new(|wanted: &[usize]| {
+                    let slice = BuildSlice::assigned(n_total, wanted)?;
+                    crate::coordinator::build_session_sliced(
+                        &rebuild_cfg,
+                        &engine,
+                        &monitor,
+                        &slice,
+                    )
+                });
+            serve_elastic(assignment, build, monitor.net.clone(), stats, obs, Some(rebuild))
         }
         Err(e) => Err(e),
     };

@@ -52,6 +52,8 @@ fn print_help() {
          \x20     [--concurrency K] [--dropout F] [--straggler-ms MS]\n\
          \x20     [--mode sync|async] [--max-staleness N] [--buffer-size N]\n\
          \x20     [--agg-shards N]\n\
+         \x20     [--heartbeat-ms MS] [--worker-timeout-ms MS]\n\
+         \x20     [--checkpoint-every N]\n\
          \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
          \x20     [--workers W]\n\
          \x20     [--compression none|pack|quantized] [--quantized-bits 4|8]\n\
@@ -74,6 +76,12 @@ fn print_help() {
          \x20     With --transport tcp the run waits for W `fedgraph worker`\n\
          \x20     processes to connect; results are bitwise-identical to the\n\
          \x20     in-process channel transport for the same config/seed.\n\
+         \x20     --heartbeat-ms / --worker-timeout-ms tune tcp liveness\n\
+         \x20     detection (timeout 0 disables it); a crashed worker's\n\
+         \x20     clients are re-assigned to survivors and the round resumes\n\
+         \x20     (sync runs stay bitwise-identical). --checkpoint-every N\n\
+         \x20     snapshots coordinator state every N rounds (0 = off); see\n\
+         \x20     docs/FAULT_TOLERANCE.md.\n\
          \x20 worker --connect <host:port> [--artifacts DIR] [--timeout-secs S]\n\
          \x20     host trainer actors for a tcp-transport coordinator: the\n\
          \x20     worker receives its client assignment + config over the\n\
@@ -240,6 +248,15 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--agg-shards") {
         cfg.federation.agg_shards = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--heartbeat-ms") {
+        cfg.federation.fault_tolerance.heartbeat_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--worker-timeout-ms") {
+        cfg.federation.fault_tolerance.worker_timeout_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--checkpoint-every") {
+        cfg.federation.fault_tolerance.checkpoint_every = v.parse()?;
     }
     if let Some(v) = flag_value(args, "--transport") {
         cfg.federation.transport = TransportKind::parse(v)?;

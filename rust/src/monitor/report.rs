@@ -80,6 +80,13 @@ pub struct Report {
     /// workers stream these on update envelopes whether or not span tracing
     /// is on.
     pub worker_metrics: Vec<(String, Vec<MetricsSnapshot>)>,
+    /// Worker-failure recoveries the coordinator performed (lane
+    /// re-assignment after a `WorkerGone`); 0 for undisturbed runs.
+    pub recoveries: u64,
+    /// Client lanes moved to surviving workers across all recoveries.
+    pub reassigned_clients: u64,
+    /// Standby workers admitted at a round boundary after launch.
+    pub late_joins: u64,
 }
 
 impl Report {
@@ -107,6 +114,14 @@ impl Report {
                 .filter(|(_, up, down)| up.frames + down.frames > 0)
                 .collect();
         let (session_clients, session_bytes) = m.session_build();
+        let note_u64 = |key: &str| {
+            m.notes()
+                .iter()
+                .rev()
+                .find(|(k, _)| k == key)
+                .and_then(|(_, v)| v.parse().ok())
+                .unwrap_or(0u64)
+        };
         Report {
             notes: m.notes(),
             startup_secs: m.phase_secs("startup"),
@@ -131,6 +146,9 @@ impl Report {
             trace_tracks: m.trace_summary(),
             trace_dropped: m.flight.dropped(),
             worker_metrics: m.process_samples(),
+            recoveries: note_u64("recoveries"),
+            reassigned_clients: note_u64("reassigned_clients"),
+            late_joins: note_u64("late_joins"),
         }
     }
 
@@ -280,6 +298,12 @@ impl Report {
             out.push_str(&format!(
                 "stale-rejected upload waste: {} (async staleness bound)\n",
                 fmt_bytes(self.train_wasted_bytes)
+            ));
+        }
+        if self.recoveries > 0 || self.late_joins > 0 {
+            out.push_str(&format!(
+                "fault tolerance: {} recoveries, {} clients re-assigned, {} late joins\n",
+                self.recoveries, self.reassigned_clients, self.late_joins
             ));
         }
         if self.session_clients > 0 {
@@ -468,6 +492,16 @@ impl Report {
             ("final_accuracy", self.final_accuracy.into()),
             ("final_loss", self.final_loss.into()),
             ("peak_rss", (self.peak_rss as usize).into()),
+            // Fault-tolerance outcome: always present (zeros for undisturbed
+            // runs) so ci.sh validators can rely on the section's shape.
+            (
+                "recovery",
+                obj(vec![
+                    ("recoveries", (self.recoveries as usize).into()),
+                    ("reassigned_clients", (self.reassigned_clients as usize).into()),
+                    ("late_joins", (self.late_joins as usize).into()),
+                ]),
+            ),
             ("rounds", rounds),
             ("clients", clients),
         ])
@@ -581,6 +615,7 @@ mod tests {
                 "pretrain_bytes",
                 "pretrain_net_concurrent_secs",
                 "pretrain_net_secs",
+                "recovery",
                 "rounds",
                 "session_bytes",
                 "session_clients",
@@ -610,6 +645,11 @@ mod tests {
             Json::Obj(v) => assert!(v.is_empty(), "no processes streamed metrics"),
             other => panic!("worker_metrics must be an object, got {other:?}"),
         }
+        // Undisturbed runs still carry the recovery section, zeroed.
+        let rec = parsed.get("recovery");
+        assert_eq!(rec.get("recoveries").as_f64(), Some(0.0));
+        assert_eq!(rec.get("reassigned_clients").as_f64(), Some(0.0));
+        assert_eq!(rec.get("late_joins").as_f64(), Some(0.0));
 
         // Traced/multi-process shape: one absorbed obs block fills both
         // sections with their fixed per-entry keys.
@@ -651,6 +691,23 @@ mod tests {
         assert!(text.contains("Trace (flight recorder)"), "trace table renders:\n{text}");
         assert!(text.contains("Process metrics"), "metrics table renders:\n{text}");
         assert!(text.contains("trace events dropped"), "drop note renders:\n{text}");
+    }
+
+    #[test]
+    fn recovery_notes_fill_the_recovery_section() {
+        let m = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        m.note("recoveries", 1u64);
+        m.note("reassigned_clients", 3u64);
+        m.note("late_joins", 1u64);
+        let r = Report::from_monitor(&m);
+        assert_eq!((r.recoveries, r.reassigned_clients, r.late_joins), (1, 3, 1));
+        let text = r.render();
+        assert!(
+            text.contains("fault tolerance: 1 recoveries, 3 clients re-assigned, 1 late joins"),
+            "recovery line renders:\n{text}"
+        );
+        let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("recovery").get("reassigned_clients").as_f64(), Some(3.0));
     }
 
     #[test]

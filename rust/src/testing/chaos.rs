@@ -1,0 +1,271 @@
+//! Deterministic fault injection for federation chaos tests.
+//!
+//! A [`FaultPlan`] scripts faults at exact protocol points — "kill worker 1
+//! the moment round 2's first broadcast frame goes out" — so failure tests
+//! replay identically instead of racing wall-clock timers. The plan plugs
+//! underneath any coordinator endpoint via [`ChaosCoordLink`]: channel
+//! fabrics and TCP fabrics both move every frame through
+//! [`CoordLink::send`] / [`CoordLink::recv`], and the wrapper classifies
+//! frames into [`FaultPoint`]s and fires the scripted [`FaultAction`] the
+//! first time each point is reached. Install it with
+//! [`crate::federation::Federation::spawn_instrumented`].
+
+use std::collections::HashSet;
+
+use anyhow::Result;
+
+use crate::federation::protocol::{DownMsg, UpMsg};
+use crate::transport::link::{CoordLink, Frame};
+
+/// Where in the round protocol a fault fires. Each point is an exact,
+/// replayable protocol event — not a wall-clock instant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultPoint {
+    /// The first `SetModel`/`SetModelPacked` frame of this round's broadcast
+    /// leaves the coordinator (mid-broadcast: some targets already hold the
+    /// new model, the dying worker's never receive it).
+    Broadcast { round: u32 },
+    /// The first `Train` order of this round leaves — the round boundary
+    /// proper: broadcast complete, training not yet begun.
+    RoundBoundary { round: u32 },
+    /// This round's first `Update` frame arrives back (mid-upload: at least
+    /// one update landed, others are in flight on the dying worker).
+    Upload { round: u32 },
+}
+
+/// What happens when a point fires (each scripted fault fires once).
+pub enum FaultAction {
+    /// Run the kill closure: SIGKILL a worker process, shut down its
+    /// socket... The frame that triggered the point still proceeds; the
+    /// death surfaces through the transport exactly as a real crash would.
+    Kill(Box<dyn FnMut() + Send>),
+    /// Stall this long before the frame proceeds (latency injection — a
+    /// long enough stall trips the coordinator's liveness window).
+    DelayMs(u64),
+    /// Lose the frame: a send returns `Ok` without transmitting, a receive
+    /// skips the frame and waits for the next one.
+    DropFrame,
+}
+
+struct Fault {
+    at: FaultPoint,
+    action: FaultAction,
+    fired: bool,
+}
+
+/// A scripted, deterministic set of faults (builder-style).
+#[derive(Default)]
+pub struct FaultPlan {
+    faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan { faults: Vec::new() }
+    }
+
+    /// Script a kill at `at`.
+    pub fn kill_at(mut self, at: FaultPoint, kill: impl FnMut() + Send + 'static) -> FaultPlan {
+        self.faults.push(Fault { at, action: FaultAction::Kill(Box::new(kill)), fired: false });
+        self
+    }
+
+    /// Script a stall of `ms` milliseconds at `at`.
+    pub fn delay_at(mut self, at: FaultPoint, ms: u64) -> FaultPlan {
+        self.faults.push(Fault { at, action: FaultAction::DelayMs(ms), fired: false });
+        self
+    }
+
+    /// Script a lost frame at `at`.
+    pub fn drop_at(mut self, at: FaultPoint) -> FaultPlan {
+        self.faults.push(Fault { at, action: FaultAction::DropFrame, fired: false });
+        self
+    }
+
+    /// Fire every not-yet-fired fault scripted at `point`. Returns `true`
+    /// when a fired fault asks for the triggering frame to be dropped.
+    fn fire(&mut self, point: FaultPoint) -> bool {
+        let mut drop_frame = false;
+        for f in &mut self.faults {
+            if f.fired || f.at != point {
+                continue;
+            }
+            f.fired = true;
+            match &mut f.action {
+                FaultAction::Kill(k) => k(),
+                FaultAction::DelayMs(ms) => {
+                    std::thread::sleep(std::time::Duration::from_millis(*ms))
+                }
+                FaultAction::DropFrame => drop_frame = true,
+            }
+        }
+        drop_frame
+    }
+
+    /// True when every scripted fault has fired (tests assert this, so a
+    /// plan that never triggers fails loudly instead of silently passing).
+    pub fn exhausted(&self) -> bool {
+        self.faults.iter().all(|f| f.fired)
+    }
+}
+
+/// A [`CoordLink`] wrapper that classifies the frame stream into
+/// [`FaultPoint`]s and fires a [`FaultPlan`]. Backend-agnostic: it sits at
+/// the trait boundary, so the same plan scripts faults under an in-memory
+/// channel fabric or a real TCP fabric.
+pub struct ChaosCoordLink {
+    inner: Box<dyn CoordLink>,
+    plan: FaultPlan,
+    /// Points already reached (first-occurrence tracking), independent of
+    /// whether a fault was scripted there.
+    seen: HashSet<FaultPoint>,
+}
+
+impl ChaosCoordLink {
+    pub fn new(inner: Box<dyn CoordLink>, plan: FaultPlan) -> ChaosCoordLink {
+        ChaosCoordLink { inner, plan, seen: HashSet::new() }
+    }
+
+    /// True when every scripted fault has fired.
+    pub fn plan_exhausted(&self) -> bool {
+        self.plan.exhausted()
+    }
+
+    /// The point (if any) this outbound frame is the first occurrence of.
+    fn classify_down(&mut self, frame: &Frame) -> Option<FaultPoint> {
+        let point = match DownMsg::decode(frame) {
+            Ok(DownMsg::SetModel { round, .. })
+            | Ok(DownMsg::SetModelPacked { round, .. }) => FaultPoint::Broadcast { round },
+            Ok(DownMsg::Train { round, .. }) => FaultPoint::RoundBoundary { round },
+            _ => return None,
+        };
+        if self.seen.insert(point) {
+            Some(point)
+        } else {
+            None
+        }
+    }
+
+    /// The point (if any) this inbound frame is the first occurrence of.
+    fn classify_up(&mut self, frame: &Frame) -> Option<FaultPoint> {
+        let point = match UpMsg::decode(frame) {
+            Ok(UpMsg::Update(u)) => FaultPoint::Upload { round: u.round },
+            _ => return None,
+        };
+        if self.seen.insert(point) {
+            Some(point)
+        } else {
+            None
+        }
+    }
+}
+
+impl CoordLink for ChaosCoordLink {
+    fn send(&mut self, client: usize, frame: Frame) -> Result<()> {
+        if let Some(p) = self.classify_down(&frame) {
+            if self.plan.fire(p) {
+                return Ok(()); // scripted frame loss
+            }
+        }
+        self.inner.send(client, frame)
+    }
+
+    fn recv(&mut self) -> Result<(usize, Frame)> {
+        loop {
+            let (from, frame) = self.inner.recv()?;
+            if let Some(p) = self.classify_up(&frame) {
+                if self.plan.fire(p) {
+                    continue; // scripted frame loss
+                }
+            }
+            return Ok((from, frame));
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<(usize, Frame)>> {
+        loop {
+            match self.inner.try_recv()? {
+                Some((from, frame)) => {
+                    if let Some(p) = self.classify_up(&frame) {
+                        if self.plan.fire(p) {
+                            continue;
+                        }
+                    }
+                    return Ok(Some((from, frame)));
+                }
+                None => return Ok(None),
+            }
+        }
+    }
+
+    fn send_control(&mut self, conn: usize, frame: Frame) -> Result<()> {
+        self.inner.send_control(conn, frame)
+    }
+
+    fn reroute(&mut self, clients: &[usize], conn: usize) -> Result<()> {
+        self.inner.reroute(clients, conn)
+    }
+
+    fn add_conn(&mut self, stream: std::net::TcpStream) -> Result<usize> {
+        self.inner.add_conn(stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::link::ChannelTransport;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn train_frame(round: u32) -> Frame {
+        DownMsg::Train { round, scale: 1.0, upload: true }.encode().into()
+    }
+
+    #[test]
+    fn faults_fire_once_at_first_occurrence() {
+        let (coord, mut trainers) = ChannelTransport.open(1).unwrap();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = hits.clone();
+        let plan = FaultPlan::new().kill_at(FaultPoint::RoundBoundary { round: 2 }, move || {
+            h.fetch_add(1, Ordering::SeqCst);
+        });
+        let mut chaos = ChaosCoordLink::new(coord, plan);
+        for round in 0..4u32 {
+            chaos.send(0, train_frame(round)).unwrap();
+            chaos.send(0, train_frame(round)).unwrap(); // second order, same round
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "kill fires exactly once");
+        assert!(chaos.plan_exhausted());
+        // All eight frames still went through (kill does not drop).
+        let mut delivered = 0;
+        while trainers[0].recv().is_ok() {
+            delivered += 1;
+            if delivered == 8 {
+                break;
+            }
+        }
+        assert_eq!(delivered, 8);
+    }
+
+    #[test]
+    fn drop_frame_loses_exactly_the_trigger() {
+        let (coord, mut trainers) = ChannelTransport.open(1).unwrap();
+        let plan = FaultPlan::new().drop_at(FaultPoint::RoundBoundary { round: 1 });
+        let mut chaos = ChaosCoordLink::new(coord, plan);
+        chaos.send(0, train_frame(0)).unwrap();
+        chaos.send(0, train_frame(1)).unwrap(); // dropped
+        chaos.send(0, train_frame(1)).unwrap(); // second occurrence: delivered
+        assert!(chaos.plan_exhausted());
+        let f0 = trainers[0].recv().unwrap();
+        let f1 = trainers[0].recv().unwrap();
+        match DownMsg::decode(&f0).unwrap() {
+            DownMsg::Train { round, .. } => assert_eq!(round, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        match DownMsg::decode(&f1).unwrap() {
+            DownMsg::Train { round, .. } => assert_eq!(round, 1),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -8,6 +8,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod chaos;
+
 /// Run `property` over `cases` seeded RNGs. Panics with the failing seed on
 /// the first violation. `FEDGRAPH_PROP_CASES` overrides the case count,
 /// `FEDGRAPH_PROP_SEED` pins the base seed (replay).

@@ -26,7 +26,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 /// A serialized protocol message moving across a link. Reference-counted so
 /// a broadcast to 1000 trainers shares one encoded buffer instead of copying
@@ -44,6 +44,35 @@ pub trait CoordLink: Send {
     /// round policy drains already-arrived straggler updates with this
     /// before issuing new train orders.
     fn try_recv(&mut self) -> Result<Option<(usize, Frame)>>;
+
+    // --- Elastic-membership extensions (protocol v6) -----------------------
+    //
+    // Default implementations refuse: only multi-connection backends
+    // (`super::tcp::TcpCoord`) support worker-level control traffic, lane
+    // migration, and late admission. The in-process channel backend hosts
+    // every trainer in one process, so there is no worker to lose or admit —
+    // the federation runtime only calls these after a typed
+    // `super::tcp::WorkerGone` or a late-join rendezvous, which only TCP
+    // deployments produce.
+
+    /// Send a control frame to worker connection `conn` (not to a trainer
+    /// lane) — carries `Reassign` orders during recovery.
+    fn send_control(&mut self, _conn: usize, _frame: Frame) -> Result<()> {
+        bail!("control-lane sends unsupported by this transport")
+    }
+
+    /// Re-route these trainer lanes to worker connection `conn` (after the
+    /// receiving worker registered them — see the recovery sequence in
+    /// `docs/FAULT_TOLERANCE.md`).
+    fn reroute(&mut self, _clients: &[usize], _conn: usize) -> Result<()> {
+        bail!("lane rerouting unsupported by this transport")
+    }
+
+    /// Admit a handshaken late worker connection; returns its connection
+    /// index for subsequent `send_control`/`reroute` calls.
+    fn add_conn(&mut self, _stream: std::net::TcpStream) -> Result<usize> {
+        bail!("late connections unsupported by this transport")
+    }
 }
 
 /// Trainer side of the fabric: a duplex lane to the coordinator.

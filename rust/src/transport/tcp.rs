@@ -42,7 +42,7 @@
 
 use std::io::{Read, Write};
 use std::net::{Shutdown, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -54,7 +54,10 @@ use super::link::{CoordLink, Frame, TrainerLink};
 use super::serialize::WireError;
 
 /// Lane tag for pre-rendezvous worker-level control frames
-/// (`WorkerHello` / `Assign`).
+/// (`WorkerHello` / `Assign`) and, since protocol v6, in-run control traffic:
+/// heartbeats (an *empty* payload on this lane — pure liveness, filtered by
+/// the coordinator's reader threads and never surfaced), `Reassign` orders
+/// and their acks.
 pub const CONTROL_LANE: u32 = u32::MAX;
 
 /// Hard cap on one frame's payload: a corrupted header length fails fast
@@ -178,9 +181,13 @@ pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
 }
 
 /// Connect with retries (the coordinator may not have bound its listener yet
-/// when a worker starts — normal in multi-process launches).
+/// when a worker starts — normal in multi-process launches). Retries back
+/// off exponentially — 100 ms doubling to a 2 s cap — so a worker waiting
+/// out a slow coordinator start doesn't hammer the listener, while the
+/// overall wait stays bounded by `timeout`.
 pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
     let deadline = Instant::now() + timeout;
+    let mut backoff = Duration::from_millis(100);
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => {
@@ -191,33 +198,229 @@ pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
                 if Instant::now() >= deadline {
                     bail!("cannot connect to coordinator at {addr}: {e}");
                 }
-                std::thread::sleep(Duration::from_millis(100));
+                std::thread::sleep(backoff.min(deadline.saturating_duration_since(Instant::now())));
+                backoff = (backoff * 2).min(Duration::from_secs(2));
             }
         }
     }
+}
+
+/// Send one heartbeat: an empty payload on [`CONTROL_LANE`]. The
+/// coordinator's reader threads treat any bytes as proof of life and filter
+/// these frames out before routing, so heartbeats never reach the protocol
+/// layer or the ledger.
+pub fn write_heartbeat(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(&encode_frame(CONTROL_LANE, &[]))
+}
+
+/// Spawn the worker-side heartbeat pulse: one empty [`CONTROL_LANE`] frame
+/// every `interval` on the shared write half until `stop` is raised or the
+/// socket dies. Shares the write mutex with trainer lanes so frames never
+/// interleave.
+pub fn spawn_heartbeat(
+    writer: Arc<Mutex<TcpStream>>,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("fed-tcp-heartbeat".to_string())
+        .spawn(move || loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            {
+                let mut w = writer.lock().unwrap();
+                if write_heartbeat(&mut *w).is_err() {
+                    return; // socket gone; the demux reader reports it
+                }
+            }
+            std::thread::sleep(interval);
+        })
+        .expect("spawning heartbeat thread")
 }
 
 // ---------------------------------------------------------------------------
 // Coordinator side
 // ---------------------------------------------------------------------------
 
-type TaggedFrame = (usize, Result<Frame, String>);
+/// A worker connection is dead: socket EOF (clean or mid-frame), wire
+/// corruption, a failed write, or heartbeat silence past the liveness
+/// window. Carried inside the `anyhow` error chain of
+/// [`CoordLink::recv`]/`send` so the federation runtime can `downcast_ref`
+/// it and run recovery instead of aborting. `clients` is the lane set the
+/// connection hosted *when the reader started* — diagnostics only; the
+/// runtime recomputes the authoritative set from its own assignment table
+/// (lanes may have been rerouted since).
+#[derive(Debug, Clone)]
+pub struct WorkerGone {
+    pub conn: usize,
+    pub clients: Vec<usize>,
+    pub reason: String,
+}
 
-/// Coordinator endpoint over `W` worker connections: per-lane sends routed to
+impl std::fmt::Display for WorkerGone {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "worker connection {} gone (hosted lanes {:?}): {}",
+            self.conn, self.clients, self.reason
+        )
+    }
+}
+
+impl std::error::Error for WorkerGone {}
+
+type TaggedFrame = (usize, Result<Frame, WorkerGone>);
+
+/// One connection's reader loop. With a liveness window the socket gets a
+/// short read timeout and the loop accumulates raw bytes, parsing complete
+/// frames with the pure [`decode_frame`] codec: any received byte counts as
+/// proof of life, empty [`CONTROL_LANE`] frames (heartbeats) are filtered
+/// here, and silence longer than the window raises [`WorkerGone`]. Without
+/// a window the loop blocks on [`read_frame`] (low-level tests, channel
+/// parity). Either way EOF and wire corruption surface as [`WorkerGone`] —
+/// the runtime decides whether that is fatal or recoverable.
+fn reader_loop(
+    mut read_half: TcpStream,
+    conn: usize,
+    clients: Vec<usize>,
+    liveness: Option<Duration>,
+    tx: Sender<TaggedFrame>,
+) {
+    let gone = |reason: String| WorkerGone { conn, clients: clients.clone(), reason };
+    let window = match liveness {
+        Some(w) => w,
+        None => loop {
+            match read_frame(&mut read_half) {
+                Ok(ReadOutcome::Frame(client, payload)) => {
+                    if client == CONTROL_LANE && payload.is_empty() {
+                        continue; // heartbeat
+                    }
+                    if tx.send((client as usize, Ok(payload.into()))).is_err() {
+                        return; // coordinator gone
+                    }
+                }
+                Ok(ReadOutcome::Closed) => {
+                    let _ =
+                        tx.send((CONTROL_LANE as usize, Err(gone("connection closed".into()))));
+                    return;
+                }
+                Err(e) => {
+                    let _ = tx.send((CONTROL_LANE as usize, Err(gone(format!("{e:#}")))));
+                    return;
+                }
+            }
+        },
+    };
+    // Poll at a fraction of the window so detection lags death by at most
+    // ~window + one poll.
+    let poll = (window / 4).max(Duration::from_millis(10));
+    read_half.set_read_timeout(Some(poll)).ok();
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = vec![0u8; 64 * 1024];
+    let mut last_seen = Instant::now();
+    loop {
+        match read_half.read(&mut chunk) {
+            Ok(0) => {
+                let reason = if buf.is_empty() {
+                    "connection closed".to_string()
+                } else {
+                    format!("connection closed mid-frame ({} buffered bytes)", buf.len())
+                };
+                let _ = tx.send((CONTROL_LANE as usize, Err(gone(reason))));
+                return;
+            }
+            Ok(k) => {
+                last_seen = Instant::now();
+                buf.extend_from_slice(&chunk[..k]);
+                loop {
+                    match decode_frame(&buf) {
+                        Ok((client, payload, used)) => {
+                            let heartbeat = client == CONTROL_LANE && payload.is_empty();
+                            if !heartbeat {
+                                let frame: Frame = payload.to_vec().into();
+                                if tx.send((client as usize, Ok(frame))).is_err() {
+                                    return;
+                                }
+                            }
+                            buf.drain(..used);
+                        }
+                        Err(WireError::Truncated) => break, // need more bytes
+                        Err(e) => {
+                            let _ = tx
+                                .send((CONTROL_LANE as usize, Err(gone(format!("wire: {e}")))));
+                            return;
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if last_seen.elapsed() > window {
+                    let _ = tx.send((
+                        CONTROL_LANE as usize,
+                        Err(gone(format!("liveness timeout ({window:?} of silence)"))),
+                    ));
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => {
+                let _ = tx.send((CONTROL_LANE as usize, Err(gone(format!("read: {e}")))));
+                return;
+            }
+        }
+    }
+}
+
+/// Coordinator endpoint over worker connections: per-lane sends routed to
 /// the owning connection's write half; one reader thread per connection feeds
 /// the shared incoming mpsc lane (non-blocking `try_recv` preserved).
+/// Since protocol v6 the set of connections and the lane→connection routing
+/// are both mutable: [`CoordLink::add_conn`] admits a late worker,
+/// [`CoordLink::reroute`] migrates lanes after a death or at an elastic
+/// round boundary.
 pub struct TcpCoord {
     writers: Vec<TcpStream>,
     /// client index → connection index.
     conn_of: Vec<usize>,
+    /// connection index → hosted client indices (kept in sync by `reroute`).
+    conn_clients: Vec<Vec<usize>>,
+    liveness: Option<Duration>,
     up: Receiver<TaggedFrame>,
+    /// Kept to hand reader threads of late-added connections; also means
+    /// `recv` never sees a disconnected channel — end-of-stream arrives as
+    /// per-connection [`WorkerGone`] errors instead.
+    up_tx: Sender<TaggedFrame>,
     readers: Vec<JoinHandle<()>>,
+}
+
+impl TcpCoord {
+    fn worker_gone(&self, conn: usize, reason: String) -> anyhow::Error {
+        anyhow::Error::new(WorkerGone {
+            conn,
+            clients: self.conn_clients.get(conn).cloned().unwrap_or_default(),
+            reason,
+        })
+    }
 }
 
 /// Build the coordinator link from handshaken worker connections.
 /// `conns[k] = (stream, clients assigned to worker k)`; every client in
-/// `0..n` must be covered exactly once.
-pub fn coord_link(conns: Vec<(TcpStream, Vec<u32>)>, n: usize) -> Result<Box<dyn CoordLink>> {
+/// `0..n` must be covered exactly once. `liveness` is the fault-detection
+/// window (`federation.fault_tolerance.worker_timeout_ms`): `Some` arms
+/// heartbeat/timeout detection on every connection, `None` keeps the
+/// legacy blocking readers (failures still surface as [`WorkerGone`], just
+/// without a timeout).
+pub fn coord_link(
+    conns: Vec<(TcpStream, Vec<u32>)>,
+    n: usize,
+    liveness: Option<Duration>,
+) -> Result<Box<dyn CoordLink>> {
     let mut conn_of = vec![usize::MAX; n];
     for (k, (_, clients)) in conns.iter().enumerate() {
         for &c in clients {
@@ -233,36 +436,30 @@ pub fn coord_link(conns: Vec<(TcpStream, Vec<u32>)>, n: usize) -> Result<Box<dyn
     }
     let (up_tx, up_rx) = channel::<TaggedFrame>();
     let mut writers = Vec::with_capacity(conns.len());
+    let mut conn_clients = Vec::with_capacity(conns.len());
     let mut readers = Vec::new();
     for (k, (stream, clients)) in conns.into_iter().enumerate() {
         stream.set_nodelay(true).ok();
-        let mut read_half = stream.try_clone().map_err(|e| anyhow!("clone conn {k}: {e}"))?;
+        let read_half = stream.try_clone().map_err(|e| anyhow!("clone conn {k}: {e}"))?;
         writers.push(stream);
+        let hosted: Vec<usize> = clients.iter().map(|&c| c as usize).collect();
+        conn_clients.push(hosted.clone());
         let tx = up_tx.clone();
-        let first_client = clients.first().copied().unwrap_or(0) as usize;
         let handle = std::thread::Builder::new()
             .name(format!("fed-tcp-reader-{k}"))
-            .spawn(move || loop {
-                match read_frame(&mut read_half) {
-                    Ok(ReadOutcome::Frame(client, payload)) => {
-                        if tx.send((client as usize, Ok(payload.into()))).is_err() {
-                            return; // coordinator gone
-                        }
-                    }
-                    Ok(ReadOutcome::Closed) => return,
-                    Err(e) => {
-                        // Surface line corruption as a trainer failure so the
-                        // coordinator aborts with a clear error instead of
-                        // waiting on a frame that will never arrive.
-                        let _ = tx.send((first_client, Err(format!("{e:#}"))));
-                        return;
-                    }
-                }
-            })
+            .spawn(move || reader_loop(read_half, k, hosted, liveness, tx))
             .map_err(|e| anyhow!("spawning tcp reader {k}: {e}"))?;
         readers.push(handle);
     }
-    Ok(Box::new(TcpCoord { writers, conn_of, up: up_rx, readers }))
+    Ok(Box::new(TcpCoord {
+        writers,
+        conn_of,
+        conn_clients,
+        liveness,
+        up: up_rx,
+        up_tx,
+        readers,
+    }))
 }
 
 impl CoordLink for TcpCoord {
@@ -270,15 +467,16 @@ impl CoordLink for TcpCoord {
         let &conn = self
             .conn_of
             .get(client)
+            .filter(|&&k| k != usize::MAX)
             .ok_or_else(|| anyhow!("no such trainer {client}"))?;
         write_frame(&mut self.writers[conn], client as u32, &frame)
-            .map_err(|_| anyhow!("trainer {client} hung up"))
+            .map_err(|e| self.worker_gone(conn, format!("write to lane {client} failed: {e}")))
     }
 
     fn recv(&mut self) -> Result<(usize, Frame)> {
         match self.up.recv() {
             Ok((from, Ok(frame))) => Ok((from, frame)),
-            Ok((from, Err(e))) => Err(anyhow!("worker connection of trainer {from}: {e}")),
+            Ok((_, Err(gone))) => Err(anyhow::Error::new(gone)),
             Err(_) => Err(anyhow!("all trainers hung up")),
         }
     }
@@ -286,10 +484,54 @@ impl CoordLink for TcpCoord {
     fn try_recv(&mut self) -> Result<Option<(usize, Frame)>> {
         match self.up.try_recv() {
             Ok((from, Ok(frame))) => Ok(Some((from, frame))),
-            Ok((from, Err(e))) => Err(anyhow!("worker connection of trainer {from}: {e}")),
+            Ok((_, Err(gone))) => Err(anyhow::Error::new(gone)),
             Err(TryRecvError::Empty) => Ok(None),
             Err(TryRecvError::Disconnected) => Err(anyhow!("all trainers hung up")),
         }
+    }
+
+    fn send_control(&mut self, conn: usize, frame: Frame) -> Result<()> {
+        if conn >= self.writers.len() {
+            bail!("no such worker connection {conn}");
+        }
+        write_frame(&mut self.writers[conn], CONTROL_LANE, &frame)
+            .map_err(|e| self.worker_gone(conn, format!("control write failed: {e}")))
+    }
+
+    fn reroute(&mut self, clients: &[usize], conn: usize) -> Result<()> {
+        if conn >= self.writers.len() {
+            bail!("no such worker connection {conn}");
+        }
+        for &c in clients {
+            if c >= self.conn_of.len() {
+                bail!("no such trainer {c}");
+            }
+        }
+        for &c in clients {
+            let old = self.conn_of[c];
+            if old != usize::MAX && old < self.conn_clients.len() {
+                self.conn_clients[old].retain(|&x| x != c);
+            }
+            self.conn_of[c] = conn;
+            self.conn_clients[conn].push(c);
+        }
+        Ok(())
+    }
+
+    fn add_conn(&mut self, stream: TcpStream) -> Result<usize> {
+        stream.set_nodelay(true).ok();
+        let k = self.writers.len();
+        let read_half = stream.try_clone().map_err(|e| anyhow!("clone conn {k}: {e}"))?;
+        self.writers.push(stream);
+        self.conn_clients.push(Vec::new());
+        let tx = self.up_tx.clone();
+        let liveness = self.liveness;
+        let handle = std::thread::Builder::new()
+            .name(format!("fed-tcp-reader-{k}"))
+            .spawn(move || reader_loop(read_half, k, Vec::new(), liveness, tx))
+            .map_err(|e| anyhow!("spawning tcp reader {k}: {e}"))?;
+        self.readers.push(handle);
+        Ok(k)
     }
 }
 
@@ -339,39 +581,83 @@ fn decrement_gauge(g: &AtomicU64) {
     let _ = g.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| v.checked_sub(1));
 }
 
+/// The worker's dynamic lane table: the shared write half plus the demux
+/// routing map. Protocol v6 made lane membership mutable mid-session — a
+/// `Reassign` order adds clients to a running worker — so lanes are opened
+/// through this registry (under a mutex the demux reader shares) instead of
+/// a frozen map built at connect time.
+#[derive(Clone)]
+pub struct LaneRegistry {
+    writer: Arc<Mutex<TcpStream>>,
+    senders: Arc<Mutex<std::collections::HashMap<u32, Sender<Frame>>>>,
+    queue_gauge: Arc<AtomicU64>,
+}
+
+impl LaneRegistry {
+    /// Open (or re-open) the duplex lane for `client` and return its trainer
+    /// endpoint. Must be called before the coordinator's first frame for the
+    /// lane (the recovery protocol guarantees this: lanes are registered
+    /// before `ReassignAck` is sent, and the coordinator waits for the ack).
+    pub fn open_lane(&self, client: usize) -> Box<dyn TrainerLink> {
+        let (tx, rx) = channel::<Frame>();
+        self.senders.lock().unwrap().insert(client as u32, tx);
+        Box::new(TcpTrainer {
+            client: client as u32,
+            writer: self.writer.clone(),
+            down: rx,
+            queue_gauge: self.queue_gauge.clone(),
+        })
+    }
+
+    /// The connection's shared write half — for control-lane sends
+    /// (`ReassignAck`) and the heartbeat pulse, which must serialize with
+    /// trainer-lane writes.
+    pub fn writer(&self) -> Arc<Mutex<TcpStream>> {
+        self.writer.clone()
+    }
+}
+
 /// Build one [`TrainerLink`] per assigned client over a handshaken worker
-/// connection, plus the demux reader thread handle. The caller keeps the
-/// original stream to `shutdown` it when the session ends. `queue_gauge`
-/// (see [`crate::trace::ProcessStats::queue_gauge`]) counts frames sitting
-/// in actor mailboxes — incremented on demux enqueue, decremented on
-/// trainer receive — feeding the worker's `MetricsSnapshot.queue_depth`.
+/// connection, plus the [`LaneRegistry`] for opening more lanes later, the
+/// control-frame mailbox (coordinator [`CONTROL_LANE`] frames — `Reassign`
+/// orders; its sender drops when the demux reader exits, which is the
+/// worker's connection-closed signal), and the demux reader thread handle.
+/// The caller keeps the original stream to `shutdown` it when the session
+/// ends. `queue_gauge` (see [`crate::trace::ProcessStats::queue_gauge`])
+/// counts frames sitting in actor mailboxes — incremented on demux enqueue,
+/// decremented on trainer receive — feeding the worker's
+/// `MetricsSnapshot.queue_depth`.
 pub fn worker_links(
     stream: &TcpStream,
     clients: &[usize],
     queue_gauge: Arc<AtomicU64>,
-) -> Result<(Vec<Box<dyn TrainerLink>>, JoinHandle<()>)> {
+) -> Result<(Vec<Box<dyn TrainerLink>>, LaneRegistry, Receiver<Frame>, JoinHandle<()>)> {
     stream.set_nodelay(true).ok();
     let writer = Arc::new(Mutex::new(stream.try_clone().map_err(|e| anyhow!("clone: {e}"))?));
     let mut read_half = stream.try_clone().map_err(|e| anyhow!("clone: {e}"))?;
-    let mut senders: std::collections::HashMap<u32, Sender<Frame>> =
-        std::collections::HashMap::new();
+    let registry = LaneRegistry {
+        writer,
+        senders: Arc::new(Mutex::new(std::collections::HashMap::new())),
+        queue_gauge: queue_gauge.clone(),
+    };
     let mut links: Vec<Box<dyn TrainerLink>> = Vec::with_capacity(clients.len());
     for &c in clients {
-        let (tx, rx) = channel::<Frame>();
-        senders.insert(c as u32, tx);
-        links.push(Box::new(TcpTrainer {
-            client: c as u32,
-            writer: writer.clone(),
-            down: rx,
-            queue_gauge: queue_gauge.clone(),
-        }));
+        links.push(registry.open_lane(c));
     }
+    let (control_tx, control_rx) = channel::<Frame>();
+    let senders = registry.senders.clone();
     let reader = std::thread::Builder::new()
         .name("fed-tcp-demux".to_string())
         .spawn(move || loop {
             match read_frame(&mut read_half) {
                 Ok(ReadOutcome::Frame(client, payload)) => {
-                    match senders.get(&client) {
+                    if client == CONTROL_LANE {
+                        // Control frames go to the worker's serve loop; a
+                        // dropped receiver means it already exited.
+                        let _ = control_tx.send(payload.into());
+                        continue;
+                    }
+                    match senders.lock().unwrap().get(&client) {
                         // A dropped receiver means that actor already exited;
                         // remaining actors keep their lanes.
                         Some(tx) => {
@@ -391,7 +677,7 @@ pub fn worker_links(
             }
         })
         .map_err(|e| anyhow!("spawning worker demux reader: {e}"))?;
-    Ok((links, reader))
+    Ok((links, registry, control_rx, reader))
 }
 
 #[cfg(test)]
@@ -465,9 +751,10 @@ mod tests {
         let (coord_stream, _) = listener.accept().unwrap();
         let worker_stream = worker_stream.join().unwrap();
 
-        let mut coord = coord_link(vec![(coord_stream, vec![0, 1])], 2).unwrap();
+        let mut coord = coord_link(vec![(coord_stream, vec![0, 1])], 2, None).unwrap();
         let gauge = Arc::new(AtomicU64::new(0));
-        let (mut links, demux) = worker_links(&worker_stream, &[0, 1], gauge.clone()).unwrap();
+        let (mut links, _registry, _control, demux) =
+            worker_links(&worker_stream, &[0, 1], gauge.clone()).unwrap();
 
         // Coordinator → per-client lanes, FIFO per lane.
         coord.send(0, b"a0".to_vec().into()).unwrap();
@@ -517,6 +804,97 @@ mod tests {
         let (s, _) = listener.accept().unwrap();
         let _client = t.join().unwrap();
         // Client 1 missing.
-        assert!(coord_link(vec![(s, vec![0])], 2).is_err());
+        assert!(coord_link(vec![(s, vec![0])], 2, None).is_err());
+    }
+
+    fn loopback_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (coord_side, _) = listener.accept().unwrap();
+        (coord_side, t.join().unwrap())
+    }
+
+    #[test]
+    fn closed_connection_surfaces_as_worker_gone() {
+        let (coord_stream, worker_stream) = loopback_pair();
+        let mut coord = coord_link(vec![(coord_stream, vec![0])], 1, None).unwrap();
+        worker_stream.shutdown(Shutdown::Both).unwrap();
+        let err = coord.recv().unwrap_err();
+        let gone = err.downcast_ref::<WorkerGone>().expect("typed WorkerGone");
+        assert_eq!(gone.conn, 0);
+        assert_eq!(gone.clients, vec![0]);
+    }
+
+    #[test]
+    fn heartbeats_keep_a_silent_worker_alive_and_are_filtered() {
+        let (coord_stream, worker_stream) = loopback_pair();
+        // 200 ms liveness window; the worker sends nothing but heartbeats.
+        let mut coord =
+            coord_link(vec![(coord_stream, vec![0])], 1, Some(Duration::from_millis(200)))
+                .unwrap();
+        let writer = Arc::new(Mutex::new(worker_stream.try_clone().unwrap()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let hb = spawn_heartbeat(writer.clone(), Duration::from_millis(50), stop.clone());
+        // Well past the window, the connection is still healthy and no
+        // heartbeat frame has been surfaced as traffic.
+        std::thread::sleep(Duration::from_millis(600));
+        assert!(coord.try_recv().unwrap().is_none(), "heartbeats must be filtered");
+        // A real frame still gets through between heartbeats.
+        {
+            let mut w = writer.lock().unwrap();
+            write_frame(&mut *w, 0, b"payload").unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            if let Some((from, frame)) = coord.try_recv().unwrap() {
+                assert_eq!(from, 0);
+                assert_eq!(&*frame, b"payload");
+                break;
+            }
+            assert!(Instant::now() < deadline, "frame never arrived");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Stop the pulse: silence past the window now raises WorkerGone.
+        stop.store(true, Ordering::Relaxed);
+        hb.join().unwrap();
+        let err = coord.recv().unwrap_err();
+        let gone = err.downcast_ref::<WorkerGone>().expect("typed WorkerGone");
+        assert!(gone.reason.contains("liveness timeout"), "reason: {}", gone.reason);
+        let _ = worker_stream.shutdown(Shutdown::Both);
+    }
+
+    #[test]
+    fn reroute_and_control_sends_follow_the_lane_table() {
+        let (coord_a, worker_a) = loopback_pair();
+        let (coord_b, worker_b) = loopback_pair();
+        let mut coord =
+            coord_link(vec![(coord_a, vec![0]), (coord_b, vec![1])], 2, None).unwrap();
+        let gauge = Arc::new(AtomicU64::new(0));
+        let (mut links_a, registry_a, _ctl_a, _demux_a) =
+            worker_links(&worker_a, &[0], gauge.clone()).unwrap();
+        let (mut links_b, registry_b, ctl_b, _demux_b) =
+            worker_links(&worker_b, &[1], gauge.clone()).unwrap();
+
+        // Control frames land in the control mailbox, not a trainer lane.
+        coord.send_control(1, b"ctl".to_vec().into()).unwrap();
+        assert_eq!(&*ctl_b.recv().unwrap(), b"ctl");
+
+        // Migrate client 0 to connection 1: the worker opens the lane, the
+        // coordinator reroutes, and traffic flows over the new connection.
+        let mut moved = registry_b.open_lane(0);
+        coord.reroute(&[0], 1).unwrap();
+        coord.send(0, b"after-move".to_vec().into()).unwrap();
+        assert_eq!(&*moved.recv().unwrap(), b"after-move");
+        moved.send(b"up-from-new-home".to_vec().into()).unwrap();
+        let (from, frame) = coord.recv().unwrap();
+        assert_eq!(from, 0);
+        assert_eq!(&*frame, b"up-from-new-home");
+
+        drop(links_a.pop());
+        drop(links_b.pop());
+        let _ = registry_a.writer();
+        let _ = worker_a.shutdown(Shutdown::Both);
+        let _ = worker_b.shutdown(Shutdown::Both);
     }
 }

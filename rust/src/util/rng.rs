@@ -25,6 +25,16 @@ pub struct Rng {
     cached_normal: Option<f64>,
 }
 
+/// A serializable [`Rng`] state capture: the four Xoshiro words plus the
+/// cached Box-Muller half. Ships on update envelopes and inside
+/// `RoundCheckpoint`s so the coordinator can re-materialize a dead worker's
+/// clients mid-stream (see `federation::checkpoint`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RngSnapshot {
+    pub s: [u64; 4],
+    pub cached_normal: Option<f64>,
+}
+
 impl Rng {
     /// Create a generator from a 64-bit seed (expanded via SplitMix64).
     pub fn seeded(seed: u64) -> Self {
@@ -49,6 +59,21 @@ impl Rng {
     pub fn fork(&mut self, tag: u64) -> Rng {
         self.cached_normal = None;
         Rng::seeded(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    /// Capture the complete generator state. Restoring the snapshot with
+    /// [`Rng::restore`] resumes the stream exactly where it was — including a
+    /// half-consumed Box-Muller pair — so a re-materialized trainer actor
+    /// draws the same sequence the lost one would have (the fault-tolerance
+    /// bitwise-recovery contract; see `docs/FAULT_TOLERANCE.md`).
+    pub fn snapshot(&self) -> RngSnapshot {
+        RngSnapshot { s: self.s, cached_normal: self.cached_normal }
+    }
+
+    /// Rebuild a generator from a [`RngSnapshot`] (inverse of
+    /// [`Rng::snapshot`]).
+    pub fn restore(snap: &RngSnapshot) -> Rng {
+        Rng { s: snap.s, cached_normal: snap.cached_normal }
     }
 
     #[inline]
@@ -516,6 +541,26 @@ mod tests {
         plain.cached_normal = None;
         plain.next_u64(); // fork consumed exactly one draw from the parent
         assert_eq!(forked.normal().to_bits(), plain.normal().to_bits());
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_the_stream_exactly() {
+        // Restore must continue the stream bitwise — including across a
+        // half-consumed Box-Muller pair, the one piece of state outside the
+        // four Xoshiro words.
+        let mut r = Rng::seeded(91);
+        for _ in 0..17 {
+            r.f64();
+        }
+        r.normal(); // leave the pair's second half cached
+        let snap = r.snapshot();
+        let mut resumed = Rng::restore(&snap);
+        assert_eq!(snap, resumed.snapshot(), "restore must reproduce the snapshot");
+        for _ in 0..8 {
+            assert_eq!(r.next_u64(), resumed.next_u64());
+        }
+        assert_eq!(r.normal().to_bits(), resumed.normal().to_bits());
+        assert_eq!(r.f32().to_bits(), resumed.f32().to_bits());
     }
 
     #[test]

@@ -1,0 +1,511 @@
+//! Chaos suite for the elastic fault-tolerant orchestration (PR 9).
+//!
+//! Every test drives a real multi-worker TCP loopback session — worker
+//! threads speaking the exact socket protocol `fedgraph worker` runs — and
+//! scripts faults through the deterministic harness in
+//! `fedgraph::testing::chaos`: a [`FaultPlan`] kills one worker at an exact
+//! protocol point (mid-broadcast, round boundary, mid-upload) by shutting
+//! its coordinator socket, which is indistinguishable from a process crash.
+//!
+//! The load-bearing invariant (see `docs/FAULT_TOLERANCE.md`): for sync
+//! plaintext runs — compressed or not — killing any single worker yields
+//! **bitwise-identical** final parameters, accuracy, and SimNet ledger to
+//! the uninterrupted run, because recovery replays broadcast/order state
+//! and resumes per-client RNG streams from the shipped cursors, and
+//! recovery traffic is wire-measured but never SimNet-charged.
+
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use fedgraph::config::{
+    CompressionMode, EntropyMode, FedGraphConfig, FederationMode, Method, Task,
+};
+use fedgraph::coordinator::selection::select_with_dropout;
+use fedgraph::federation::runtime::Charge;
+use fedgraph::federation::worker::{self, BuildStats};
+use fedgraph::federation::{
+    ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint, SessionBuild,
+};
+use fedgraph::monitor::Monitor;
+use fedgraph::runtime::ParamSet;
+use fedgraph::testing::chaos::{ChaosCoordLink, FaultPlan, FaultPoint};
+use fedgraph::transport::link::CoordLink;
+use fedgraph::transport::serialize::{encode_params, fnv1a};
+use fedgraph::transport::{NetConfig, Phase, SimNet};
+use fedgraph::util::rng::Rng;
+
+/// Engine-free deterministic "training" driven by the client's RNG stream,
+/// mirroring the runtime's internal test logic so bitwise comparison is
+/// meaningful across interrupted and clean runs.
+struct DummyLogic {
+    client: usize,
+    steps: usize,
+}
+
+impl ClientLogic for DummyLogic {
+    fn train(&mut self, round: usize, params: &ParamSet, rng: &mut Rng) -> Result<LocalUpdate> {
+        let mut p = params.clone();
+        for _ in 0..self.steps {
+            let noise = rng.f32();
+            for v in p.values.iter_mut().flatten() {
+                *v = *v * 0.9 + noise * 0.01 * (self.client as f32 + 1.0);
+            }
+        }
+        Ok(LocalUpdate { params: p, loss: 1.0 / (round + 1) as f32 })
+    }
+
+    fn eval(&mut self, _round: usize, params: &ParamSet, _rng: &mut Rng) -> Result<(f64, f64)> {
+        Ok((params.values[0][0] as f64, 1.0))
+    }
+}
+
+fn test_cfg(n: usize) -> FedGraphConfig {
+    let mut cfg =
+        FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
+    cfg.n_trainer = n;
+    cfg.seed = 77;
+    cfg.federation.max_concurrency = 4;
+    cfg
+}
+
+fn dummy_blueprint(n: usize, rng: &mut Rng) -> SessionBlueprint {
+    let init = ParamSet::nc(6, 4, 3, rng);
+    let logics: Vec<Box<dyn ClientLogic>> = (0..n)
+        .map(|client| Box::new(DummyLogic { client, steps: 3 }) as Box<dyn ClientLogic>)
+        .collect();
+    let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
+    SessionBlueprint { init, weights, max_dim: 64, logics }
+}
+
+/// The sliced counterpart of [`dummy_blueprint`]: what a worker process
+/// materializes — the same init draw from the same stream, logics only for
+/// the assigned clients.
+fn dummy_build(n: usize, clients: &[usize], rng: &mut Rng) -> SessionBuild {
+    let init = ParamSet::nc(6, 4, 3, rng);
+    let logics: Vec<(usize, Box<dyn ClientLogic>)> = clients
+        .iter()
+        .map(|&client| {
+            (client, Box::new(DummyLogic { client, steps: 3 }) as Box<dyn ClientLogic>)
+        })
+        .collect();
+    let weights: Vec<f32> = (0..n).map(|c| (c + 1) as f32).collect();
+    SessionBuild { init, weights, max_dim: 64, n_total: n, logics }
+}
+
+fn test_obs(cfg: &FedGraphConfig) -> fedgraph::trace::ObsSession {
+    fedgraph::trace::ObsSession {
+        recorder: fedgraph::trace::FlightRecorder::new("worker"),
+        stats: fedgraph::trace::ProcessStats::new(Duration::from_millis(50)),
+        ship_events: cfg.trace_enabled(),
+    }
+}
+
+/// Spawn `workers` thread-hosted worker processes against `addr`. Each
+/// registers a cloned socket handle in `sockets` (the chaos kill target)
+/// before serving, and installs a rebuild factory so it can absorb a dead
+/// peer's clients.
+fn spawn_workers(
+    addr: &str,
+    workers: usize,
+    sockets: &Arc<Mutex<Vec<TcpStream>>>,
+) -> Vec<JoinHandle<Result<()>>> {
+    (0..workers)
+        .map(|_| {
+            let addr = addr.to_string();
+            let sockets = sockets.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let assignment = worker::connect(&addr, Duration::from_secs(20))?;
+                sockets.lock().unwrap().push(assignment.socket()?);
+                let wcfg = assignment.cfg.clone();
+                let n = wcfg.n_trainer;
+                let seed = wcfg.seed;
+                let build = {
+                    let mut rng = Rng::seeded(seed);
+                    dummy_build(n, &assignment.clients, &mut rng)
+                };
+                let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                let obs = test_obs(&wcfg);
+                let rebuild: Box<dyn Fn(&[usize]) -> Result<SessionBuild> + '_> =
+                    Box::new(|wanted: &[usize]| {
+                        let mut rng = Rng::seeded(seed);
+                        Ok(dummy_build(n, wanted, &mut rng))
+                    });
+                worker::serve_elastic(
+                    assignment,
+                    Some(build),
+                    staging,
+                    BuildStats::default(),
+                    obs,
+                    Some(rebuild),
+                )
+            })
+        })
+        .collect()
+}
+
+/// A standby worker connecting *after* launch: records whatever slice the
+/// coordinator eventually migrates to it in `got`.
+fn spawn_standby(addr: &str, got: &Arc<Mutex<Vec<usize>>>) -> JoinHandle<Result<()>> {
+    let addr = addr.to_string();
+    let got = got.clone();
+    std::thread::spawn(move || -> Result<()> {
+        let assignment = worker::connect(&addr, Duration::from_secs(20))?;
+        ensure!(assignment.standby, "post-launch connect must be a standby assignment");
+        ensure!(assignment.clients.is_empty(), "standby slice must start empty");
+        let wcfg = assignment.cfg.clone();
+        let n = wcfg.n_trainer;
+        let seed = wcfg.seed;
+        let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+        let obs = test_obs(&wcfg);
+        let rebuild: Box<dyn Fn(&[usize]) -> Result<SessionBuild> + '_> =
+            Box::new(move |wanted: &[usize]| {
+                got.lock().unwrap().extend_from_slice(wanted);
+                let mut rng = Rng::seeded(seed);
+                Ok(dummy_build(n, wanted, &mut rng))
+            });
+        worker::serve_elastic(assignment, None, staging, BuildStats::default(), obs, Some(rebuild))
+    })
+}
+
+/// Everything the invariant assertions compare between runs.
+struct RunOut {
+    params_checksum: u64,
+    num_bits: u64,
+    den: f64,
+    train_up: u64,
+    train_down: u64,
+    train_wasted: u64,
+    recoveries: u64,
+    reassigned_clients: u64,
+    late_joins: u64,
+}
+
+/// Drive a full TCP loopback session. `kill_at` scripts a one-worker kill at
+/// that protocol point; `late_join` starts a standby worker after round 0
+/// and blocks until it is admitted.
+fn run_tcp(cfg: &FedGraphConfig, rounds: usize, workers: usize, kill_at: Option<FaultPoint>, late_join: bool) -> RunOut {
+    let deployment = Deployment::tcp("127.0.0.1:0", workers).unwrap();
+    let addr = deployment.local_addr().unwrap().to_string();
+    let sockets: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let worker_threads = spawn_workers(&addr, workers, &sockets);
+
+    let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+    let n = cfg.n_trainer;
+    let mut rng = Rng::seeded(cfg.seed);
+    let blueprint = dummy_blueprint(n, &mut rng);
+    let mut global = blueprint.init.clone();
+    let mut fed = match kill_at {
+        Some(at) => {
+            let socks = sockets.clone();
+            let plan = FaultPlan::new().kill_at(at, move || {
+                // Crash the first-connected worker: shut its socket both
+                // ways, exactly what the peer of a SIGKILLed process sees.
+                let guard = socks.lock().unwrap();
+                if let Some(s) = guard.first() {
+                    let _ = s.shutdown(std::net::Shutdown::Both);
+                }
+            });
+            Federation::spawn_instrumented(
+                &monitor,
+                &deployment,
+                cfg,
+                blueprint,
+                Box::new(move |inner: Box<dyn CoordLink>| {
+                    Box::new(ChaosCoordLink::new(inner, plan)) as Box<dyn CoordLink>
+                }),
+            )
+            .unwrap()
+        }
+        None => Federation::spawn(&monitor, &deployment, cfg, blueprint).unwrap(),
+    };
+
+    let all: Vec<usize> = (0..n).collect();
+    let charge = Charge::PerLink(fed.init_model_charge(&global));
+    fed.broadcast_model(0, &global, &all, charge).unwrap();
+    let mut standby: Option<JoinHandle<Result<()>>> = None;
+    let standby_slice: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+    for round in 0..rounds {
+        if late_join && round == 1 {
+            standby = Some(spawn_standby(&addr, &standby_slice));
+            // Block until the round boundary actually admits it, so the
+            // test is deterministic about *which* boundary the slice moves
+            // at (and never ends the run with the standby still parked).
+            let mut spins = 0;
+            while fed.admit_late_workers().unwrap() == 0 {
+                spins += 1;
+                assert!(spins < 500, "standby worker was never admitted");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+        let sel = select_with_dropout(
+            n,
+            1.0,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
+            &mut rng,
+        );
+        let step = fed.policy_round(round, &sel.participants, true, &all).unwrap();
+        if let Some(m) = step.model {
+            global = m;
+        }
+    }
+    let (num, den) = fed.eval_round(rounds, &all, Some(&global)).unwrap();
+    fed.shutdown().unwrap();
+
+    let note_u64 = |key: &str| {
+        monitor
+            .notes()
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(0u64)
+    };
+    let c = monitor.net.counter(Phase::Train);
+    let out = RunOut {
+        params_checksum: fnv1a(&encode_params(&global.values)),
+        num_bits: num.to_bits(),
+        den,
+        train_up: c.bytes_up,
+        train_down: c.bytes_down,
+        train_wasted: c.wasted_bytes,
+        recoveries: note_u64("recoveries"),
+        reassigned_clients: note_u64("reassigned_clients"),
+        late_joins: note_u64("late_joins"),
+    };
+    if late_join {
+        let slice = standby_slice.lock().unwrap().clone();
+        assert!(!slice.is_empty(), "admitted standby worker must receive a slice");
+        standby
+            .expect("standby spawned")
+            .join()
+            .expect("standby thread panicked")
+            .expect("standby worker must exit cleanly");
+    }
+    for t in worker_threads {
+        if kill_at.is_some() {
+            // The killed worker exits with a socket error; survivors may
+            // exit cleanly or not be distinguishable here — the invariant
+            // assertions below are the real acceptance bar.
+            let _ = t.join();
+        } else {
+            t.join().expect("worker thread panicked").expect("worker must exit cleanly");
+        }
+    }
+    out
+}
+
+/// Assert the bitwise invariant between a clean run and a disturbed one.
+fn assert_bitwise(clean: &RunOut, chaotic: &RunOut, label: &str) {
+    assert_eq!(
+        clean.params_checksum, chaotic.params_checksum,
+        "{label}: final params must be bitwise-identical"
+    );
+    assert_eq!(
+        clean.num_bits, chaotic.num_bits,
+        "{label}: accuracy numerator must be bitwise-identical"
+    );
+    assert_eq!(clean.den, chaotic.den, "{label}: eval denominator must match");
+    assert_eq!(
+        (clean.train_up, clean.train_down, clean.train_wasted),
+        (chaotic.train_up, chaotic.train_down, chaotic.train_wasted),
+        "{label}: SimNet ledger must be identical (recovery traffic is never charged)"
+    );
+}
+
+#[test]
+fn kill_mid_broadcast_recovers_bitwise() {
+    let cfg = test_cfg(6);
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    assert_eq!(clean.recoveries, 0);
+    let chaotic = run_tcp(&cfg, 4, 2, Some(FaultPoint::Broadcast { round: 2 }), false);
+    assert_eq!(chaotic.recoveries, 1, "exactly one recovery must have run");
+    assert!(chaotic.reassigned_clients > 0, "the dead worker's clients must move");
+    assert_bitwise(&clean, &chaotic, "kill mid-broadcast");
+}
+
+#[test]
+fn kill_at_round_boundary_recovers_bitwise() {
+    let cfg = test_cfg(6);
+    let clean = run_tcp(&cfg, 4, 3, None, false);
+    let chaotic = run_tcp(&cfg, 4, 3, Some(FaultPoint::RoundBoundary { round: 1 }), false);
+    assert_eq!(chaotic.recoveries, 1);
+    assert!(chaotic.reassigned_clients > 0);
+    assert_bitwise(&clean, &chaotic, "kill at round boundary");
+}
+
+#[test]
+fn kill_mid_upload_recovers_bitwise() {
+    let cfg = test_cfg(6);
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let chaotic = run_tcp(&cfg, 4, 2, Some(FaultPoint::Upload { round: 1 }), false);
+    assert_eq!(chaotic.recoveries, 1);
+    assert!(chaotic.reassigned_clients > 0);
+    assert_bitwise(&clean, &chaotic, "kill mid-upload");
+}
+
+#[test]
+fn kill_under_pack_compression_recovers_bitwise() {
+    let mut cfg = test_cfg(6);
+    cfg.federation.compression = CompressionMode::Pack;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let chaotic = run_tcp(&cfg, 4, 2, Some(FaultPoint::RoundBoundary { round: 2 }), false);
+    assert_eq!(chaotic.recoveries, 1);
+    assert_bitwise(&clean, &chaotic, "kill under pack compression");
+}
+
+#[test]
+fn kill_under_rans_entropy_recovers_bitwise() {
+    let mut cfg = test_cfg(6);
+    cfg.federation.compression = CompressionMode::Pack;
+    cfg.federation.entropy = EntropyMode::Rans;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let chaotic = run_tcp(&cfg, 4, 2, Some(FaultPoint::Upload { round: 2 }), false);
+    assert_eq!(chaotic.recoveries, 1);
+    assert_bitwise(&clean, &chaotic, "kill under pack+rans");
+}
+
+#[test]
+fn kill_in_async_mode_recovers_bitwise() {
+    // max_staleness = 0 degenerates the async policy to the sync barrier, so
+    // the bitwise invariant must hold through a recovery here too; larger
+    // staleness bounds trade reproducibility away by design and are only
+    // covered for completion elsewhere.
+    let mut cfg = test_cfg(6);
+    cfg.federation.mode = FederationMode::Async;
+    cfg.federation.max_staleness = 0;
+    cfg.federation.buffer_size = 0;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let chaotic = run_tcp(&cfg, 4, 2, Some(FaultPoint::Broadcast { round: 1 }), false);
+    assert_eq!(chaotic.recoveries, 1);
+    assert_bitwise(&clean, &chaotic, "kill in async(0) mode");
+}
+
+#[test]
+fn late_worker_joins_and_receives_a_slice() {
+    let cfg = test_cfg(6);
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let joined = run_tcp(&cfg, 4, 2, None, true);
+    assert_eq!(joined.late_joins, 1, "the standby worker must be admitted");
+    assert!(joined.reassigned_clients > 0, "a slice must migrate to the joiner");
+    // Migration at a round boundary is invisible to the results.
+    assert_bitwise(&clean, &joined, "late join");
+}
+
+#[test]
+fn checkpoint_restore_resumes_bitwise() {
+    // A run snapshotted at a round boundary, pushed through the versioned
+    // wire codec, and resumed in a *fresh* session must land on the same
+    // final parameters as the uninterrupted run — the coordinator-loss half
+    // of the fault-tolerance story (worker loss is covered above).
+    let mut cfg = test_cfg(6);
+    cfg.federation.fault_tolerance.checkpoint_every = 2;
+    let rounds = 4;
+    let n = cfg.n_trainer;
+    let all: Vec<usize> = (0..n).collect();
+    let selection = |round: usize, rng: &mut Rng| {
+        select_with_dropout(n, 1.0, cfg.sampling_type, cfg.federation.dropout_frac, round, rng)
+    };
+
+    // Uninterrupted reference.
+    let reference = {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng = Rng::seeded(cfg.seed);
+        let blueprint = dummy_blueprint(n, &mut rng);
+        let mut global = blueprint.init.clone();
+        let mut fed =
+            Federation::spawn(&monitor, &Deployment::InProcess, &cfg, blueprint).unwrap();
+        let charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, charge).unwrap();
+        for round in 0..rounds {
+            let sel = selection(round, &mut rng);
+            let step = fed.policy_round(round, &sel.participants, true, &all).unwrap();
+            if let Some(m) = step.model {
+                global = m;
+            }
+        }
+        fed.shutdown().unwrap();
+        fnv1a(&encode_params(&global.values))
+    };
+
+    // Interrupted run: two rounds, snapshot at the boundary, abandon.
+    let ck = {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng = Rng::seeded(cfg.seed);
+        let blueprint = dummy_blueprint(n, &mut rng);
+        let global = blueprint.init.clone();
+        let mut fed =
+            Federation::spawn(&monitor, &Deployment::InProcess, &cfg, blueprint).unwrap();
+        let charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, charge).unwrap();
+        for round in 0..2 {
+            let sel = selection(round, &mut rng);
+            fed.policy_round(round, &sel.participants, true, &all).unwrap();
+        }
+        let ck = fed.take_checkpoint().expect("checkpoint_every=2 must snapshot round 1");
+        fed.shutdown().unwrap();
+        ck
+    };
+    assert_eq!(ck.round, 1, "snapshot is taken after round 1");
+    // The snapshot must survive its own wire codec before it is trusted.
+    let ck = fedgraph::federation::RoundCheckpoint::decode_wire(&ck.encode_wire()).unwrap();
+
+    // Resume a fresh session from the snapshot and drive the remainder.
+    let resumed = {
+        let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+        let mut rng = Rng::seeded(cfg.seed);
+        let blueprint = dummy_blueprint(n, &mut rng);
+        // Replay the coordinator's selection stream up to the boundary; the
+        // actors' streams resume from the snapshot cursors.
+        for round in 0..2 {
+            let _ = selection(round, &mut rng);
+        }
+        let mut fed =
+            Federation::spawn_restored(&monitor, &Deployment::InProcess, &cfg, blueprint, &ck)
+                .unwrap();
+        let mut global = None;
+        for round in 2..rounds {
+            let sel = selection(round, &mut rng);
+            let step = fed.policy_round(round, &sel.participants, true, &all).unwrap();
+            if let Some(m) = step.model {
+                global = Some(m);
+            }
+        }
+        fed.shutdown().unwrap();
+        fnv1a(&encode_params(&global.expect("resumed rounds must flush").values))
+    };
+    assert_eq!(resumed, reference, "restored run must be bitwise-identical");
+}
+
+#[test]
+fn stalled_handshake_fails_launch_instead_of_hanging() {
+    // Regression (PR 9 bugfix): a peer that connects but never sends its
+    // WorkerHello must fail the launch after the bounded read window, not
+    // wedge the coordinator forever.
+    let mut cfg = test_cfg(4);
+    cfg.federation.fault_tolerance.worker_timeout_ms = 500;
+    let deployment = Deployment::tcp("127.0.0.1:0", 1).unwrap();
+    let addr = deployment.local_addr().unwrap();
+    let stalled = TcpStream::connect(addr).unwrap();
+    let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+    let mut rng = Rng::seeded(cfg.seed);
+    let blueprint = dummy_blueprint(4, &mut rng);
+    let t0 = std::time::Instant::now();
+    let spawned = Federation::spawn(&monitor, &deployment, &cfg, blueprint);
+    let msg = match spawned {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("launch must fail on a stalled handshake"),
+    };
+    assert!(msg.contains("hello"), "error must name the handshake step: {msg}");
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "handshake reads must be bounded, took {:?}",
+        t0.elapsed()
+    );
+    drop(stalled);
+}

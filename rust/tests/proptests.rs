@@ -226,6 +226,7 @@ fn prop_protocol_frames_reject_random_corruption() {
             num: rng.f64(),
             den: rng.f64(),
             staged: Vec::new(),
+            rng: rng.snapshot(),
         }
         .encode();
         let mut corrupted = up.clone();
@@ -427,6 +428,7 @@ fn prop_compressed_update_frames_reject_corruption() {
             wait_secs: 0.0,
             privacy_secs: 0.0,
             staged: Vec::new(),
+            rng: rng.snapshot(),
             payload,
         })
         .encode();
@@ -559,5 +561,73 @@ fn prop_ckks_sizes_monotone() {
         );
         // Expansion vs plaintext is always >= 1 for nonempty payloads.
         assert!(p1.encrypted_vector_bytes(len) >= (len * 4) as u64);
+    });
+}
+
+#[test]
+fn prop_checkpoint_codec_roundtrip_and_corruption() {
+    // The resumable-coordinator snapshot codec (PR 9): encode∘decode is the
+    // identity on arbitrary checkpoints — every optional field populated or
+    // not, both policy variants — and any truncation or bit flip surfaces as
+    // a typed `WireError`, never a panic, never a silently-wrong resume.
+    use fedgraph::federation::{PolicyCheckpoint, RoundCheckpoint};
+    prop_check("checkpoint-codec", 40, |rng| {
+        let n = rng.range(1, 12);
+        let ck = RoundCheckpoint {
+            round: rng.next_u64() as u32,
+            version: rng.next_u64() as u32,
+            params: (0..rng.range(1, 4))
+                .map(|_| gen::f32_vec(rng, rng.range(1, 40), 100.0))
+                .collect(),
+            last_sent_version: (0..n).map(|_| rng.next_u64() as u32).collect(),
+            pending_floor: (0..n)
+                .map(|_| if rng.chance(0.5) { Some(rng.next_u64() as u32) } else { None })
+                .collect(),
+            bases: (0..rng.range(0, 3))
+                .map(|_| (rng.next_u64() as u32, gen::f32_vec(rng, rng.range(1, 40), 100.0)))
+                .collect(),
+            assignment: (0..n).map(|_| rng.below(4) as u32).collect(),
+            client_rng: (0..n)
+                .map(|_| if rng.chance(0.7) { Some(rng.snapshot()) } else { None })
+                .collect(),
+            residuals: (0..rng.range(0, 3))
+                .map(|_| (rng.below(n) as u32, gen::f32_vec(rng, rng.range(1, 20), 1.0)))
+                .collect(),
+            he_seed: if rng.chance(0.5) { Some(rng.next_u64()) } else { None },
+            policy: if rng.chance(0.5) {
+                PolicyCheckpoint::Sync
+            } else {
+                PolicyCheckpoint::Async {
+                    in_flight: (0..rng.range(0, 5))
+                        .map(|_| (rng.below(n) as u32, rng.next_u64()))
+                        .collect(),
+                    next_seq: rng.next_u64(),
+                }
+            },
+            ledger: (0..rng.range(0, 4))
+                .map(|_| (rng.below(3) as u32, rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .collect(),
+        };
+        let bytes = ck.encode_wire();
+        let back = RoundCheckpoint::decode_wire(&bytes).expect("roundtrip must decode");
+        assert_eq!(back, ck, "encode∘decode must be the identity");
+        // Truncation at a random length is a typed error.
+        let cut = rng.below(bytes.len());
+        RoundCheckpoint::decode_wire(&bytes[..cut])
+            .expect_err("truncated checkpoint must not decode");
+        // A random bit flip either trips the checksum (typed error) or — in
+        // the astronomically unlikely collision — decodes to the original.
+        let mut bad = bytes.clone();
+        let pos = rng.below(bytes.len());
+        bad[pos] ^= 1u8 << rng.below(8);
+        match RoundCheckpoint::decode_wire(&bad) {
+            Ok(got) => assert_eq!(got, ck, "silent corruption at byte {pos}"),
+            Err(
+                WireError::BadChecksum
+                | WireError::Truncated
+                | WireError::Malformed(_)
+                | WireError::BadTag(_),
+            ) => {}
+        }
     });
 }
