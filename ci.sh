@@ -91,6 +91,13 @@ cargo test -q --lib monitor::report::tests::recovery_notes_fill_the_recovery_sec
 cargo test -q --test proptests prop_checkpoint_codec_roundtrip_and_corruption
 cargo test -q --test federation_chaos
 
+echo "==> durable-orchestration gates (checkpoint store, connect backoff, store proptests)"
+cargo test -q --lib federation::store::
+cargo test -q --lib transport::tcp::tests::connect_
+cargo test -q --test proptests prop_checkpoint_store
+cargo test -q --test federation_chaos severed_worker
+cargo test -q --test federation_chaos frame_delay_past_heartbeat_is_not_death
+
 if [ "${1:-}" != "--quick" ]; then
     echo "==> cargo build --release   (tier-1, part 1)"
     cargo build --release
@@ -356,6 +363,187 @@ PYEOF
       fi
       rm -f "$CHAOS_JSON_CLEAN" "$CHAOS_JSON_KILLED"
       echo "==> chaos smoke: SIGKILLed worker recovered; final metrics and SimNet ledger identical to the undisturbed run"
+
+      # Durable-resume smoke (coordinator loss): run with a checkpoint dir,
+      # SIGKILL the *coordinator* mid-run, then boot a fresh coordinator with
+      # `--resume` from the newest on-disk checkpoint. The resumed run must
+      # land on the same final accuracy/loss AND the same SimNet counters as
+      # an uninterrupted reference — per mode, across the sync plaintext,
+      # pack, and pack+rans wire formats.
+      for RESUME_MODE in sync pack rans; do
+        case "$RESUME_MODE" in
+            sync) MODE_FLAGS="" ;;
+            pack) MODE_FLAGS="--compression pack" ;;
+            rans) MODE_FLAGS="--compression pack --entropy rans" ;;
+        esac
+        echo "==> durable-resume smoke (SIGKILL coordinator, --resume; mode $RESUME_MODE)"
+        RESUME_CK_DIR="$(mktemp -d)"
+        RESUME_JSON_CLEAN="$(mktemp)"
+        RESUME_JSON_RESUMED="$(mktemp)"
+        # Uninterrupted reference.
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        COORD_STATUS=0
+        # shellcheck disable=SC2086
+        "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+            --rounds 8 --trainers 4 --scale 0.15 --local-steps 1 \
+            --straggler-ms 400 $MODE_FLAGS \
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
+            --json "$RESUME_JSON_CLEAN" || COORD_STATUS=$?
+        W1_STATUS=0; W2_STATUS=0
+        wait "$W1" || W1_STATUS=$?
+        wait "$W2" || W2_STATUS=$?
+        if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
+            echo "ci.sh: resume smoke reference leg ($RESUME_MODE) failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            rm -rf "$RESUME_CK_DIR"; rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+            exit 1
+        fi
+        # Interrupted leg: checkpoint every 2 rounds, SIGKILL mid-run. The
+        # straggler sleeps stretch the run well past the kill point, which
+        # itself lands after at least one durable checkpoint commit.
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        # shellcheck disable=SC2086
+        "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+            --rounds 8 --trainers 4 --scale 0.15 --local-steps 1 \
+            --straggler-ms 400 $MODE_FLAGS \
+            --checkpoint-every 2 --checkpoint-dir "$RESUME_CK_DIR" \
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 &
+        COORD=$!
+        sleep 2.0
+        if ! kill -9 "$COORD" 2>/dev/null; then
+            echo "ci.sh: resume smoke ($RESUME_MODE): coordinator finished before the SIGKILL landed" >&2
+            rm -rf "$RESUME_CK_DIR"; rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+            exit 1
+        fi
+        wait "$COORD" 2>/dev/null || true
+        # The orphaned workers redial with their session tokens until their
+        # retry budget runs out; reap them now.
+        kill -9 "$W1" "$W2" 2>/dev/null || true
+        wait "$W1" 2>/dev/null || true
+        wait "$W2" 2>/dev/null || true
+        if ! ls "$RESUME_CK_DIR"/ck-*.fgcp >/dev/null 2>&1; then
+            echo "ci.sh: resume smoke ($RESUME_MODE): no durable checkpoint on disk after the kill" >&2
+            rm -rf "$RESUME_CK_DIR"; rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+            exit 1
+        fi
+        # Resume leg: a fresh coordinator + fresh workers boot from the
+        # newest valid on-disk checkpoint and drive the remaining rounds.
+        SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W1=$!
+        "$BIN" worker --connect "$SMOKE_ADDR" --timeout-secs 60 &
+        W2=$!
+        COORD_STATUS=0
+        # shellcheck disable=SC2086
+        "$BIN" run --task NC --method FedAvg --dataset cora-sim \
+            --rounds 8 --trainers 4 --scale 0.15 --local-steps 1 \
+            --straggler-ms 400 $MODE_FLAGS \
+            --checkpoint-every 2 --checkpoint-dir "$RESUME_CK_DIR" \
+            --resume "$RESUME_CK_DIR" \
+            --transport tcp --listen-addr "$SMOKE_ADDR" --workers 2 \
+            --json "$RESUME_JSON_RESUMED" || COORD_STATUS=$?
+        W1_STATUS=0; W2_STATUS=0
+        wait "$W1" || W1_STATUS=$?
+        wait "$W2" || W2_STATUS=$?
+        if [ "$COORD_STATUS" -ne 0 ] || [ "$W1_STATUS" -ne 0 ] || [ "$W2_STATUS" -ne 0 ]; then
+            echo "ci.sh: resume smoke resumed leg ($RESUME_MODE) failed (coord=$COORD_STATUS w1=$W1_STATUS w2=$W2_STATUS)" >&2
+            rm -rf "$RESUME_CK_DIR"; rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+            exit 1
+        fi
+        if command -v python3 >/dev/null 2>&1; then
+            if ! python3 - "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED" <<'PYEOF'
+import json, sys
+clean = json.load(open(sys.argv[1]))
+resumed = json.load(open(sys.argv[2]))
+# The resumed run restores SimNet counters from the snapshot and replays the
+# remaining rounds: every learning metric and every simulated-network
+# counter must equal the uninterrupted reference exactly.
+for key in ("final_accuracy", "final_loss", "pretrain_bytes", "train_bytes",
+            "pretrain_net_secs", "train_net_secs",
+            "pretrain_net_concurrent_secs", "train_net_concurrent_secs",
+            "train_wasted_bytes"):
+    assert clean[key] == resumed[key], \
+        f"{key} diverged across resume: {clean[key]} vs {resumed[key]}"
+rec = resumed["recovery"]
+assert rec["checkpoint_writes"] >= 1, f"resumed run persisted nothing: {rec}"
+assert rec["last_persisted_round"] is not None, f"no persisted round: {rec}"
+notes = resumed["notes"]
+assert "resumed_from_round" in notes, f"resume note missing (have {sorted(notes)})"
+print(f"resume smoke ok: resumed after round {notes['resumed_from_round']}, "
+      f"accuracy {resumed['final_accuracy']:.4f} identical to reference, "
+      f"{rec['checkpoint_writes']} checkpoint write(s) in the resumed leg")
+PYEOF
+            then
+                echo "ci.sh: durable-resume validation failed ($RESUME_MODE)" >&2
+                rm -rf "$RESUME_CK_DIR"; rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+                exit 1
+            fi
+        else
+            echo "==> python3 not found; skipping resume-smoke JSON validation"
+        fi
+        rm -rf "$RESUME_CK_DIR"
+        rm -f "$RESUME_JSON_CLEAN" "$RESUME_JSON_RESUMED"
+        echo "==> durable-resume smoke ($RESUME_MODE): SIGKILLed coordinator resumed bitwise from the on-disk checkpoint"
+      done
+
+      # Supervisor smoke: `fedgraph launch` spawns the coordinator and the
+      # worker fleet, and restarts dead workers as standbys. SIGKILL one
+      # worker twice mid-run: the supervisor must respawn each time, the
+      # coordinator must recover both deaths, and the whole launch must
+      # still exit 0.
+      echo "==> supervisor smoke (fedgraph launch, SIGKILL a worker twice)"
+      LAUNCH_JSON="$(mktemp)"
+      SMOKE_ADDR="127.0.0.1:$((20000 + RANDOM % 20000))"
+      "$BIN" launch --workers 3 --listen-addr "$SMOKE_ADDR" --max-restarts 4 \
+          --task NC --method FedAvg --dataset cora-sim \
+          --rounds 10 --trainers 6 --scale 0.15 --local-steps 1 \
+          --straggler-ms 400 --json "$LAUNCH_JSON" &
+      LAUNCH=$!
+      for KILL_AT in 1.0 1.5; do
+        sleep "$KILL_AT"
+        # The address is unique to this launch, so the pattern cannot catch
+        # workers of a concurrent CI run; lowest pid = oldest worker.
+        VICTIM="$(pgrep -f -- "worker --connect $SMOKE_ADDR" | head -n1 || true)"
+        if [ -n "$VICTIM" ]; then
+            kill -9 "$VICTIM" 2>/dev/null || true
+        fi
+      done
+      LAUNCH_STATUS=0
+      wait "$LAUNCH" || LAUNCH_STATUS=$?
+      if [ "$LAUNCH_STATUS" -ne 0 ]; then
+          echo "ci.sh: supervisor smoke: launch exited $LAUNCH_STATUS" >&2
+          rm -f "$LAUNCH_JSON"
+          exit 1
+      fi
+      if command -v python3 >/dev/null 2>&1; then
+        if ! python3 - "$LAUNCH_JSON" <<'PYEOF'
+import json, sys
+report = json.load(open(sys.argv[1]))
+rec = report["recovery"]
+assert rec["recoveries"] >= 2, \
+    f"two SIGKILLed workers must mean >= 2 recoveries: {rec}"
+assert rec["reassigned_clients"] >= 1, f"no clients moved: {rec}"
+assert report["final_accuracy"] != 0.0, "run produced no result"
+print(f"supervisor smoke ok: {rec['recoveries']} recoveries, "
+      f"{rec['late_joins']} standby admissions, run completed")
+PYEOF
+        then
+            echo "ci.sh: supervisor smoke validation failed" >&2
+            rm -f "$LAUNCH_JSON"
+            exit 1
+        fi
+      else
+        echo "==> python3 not found; skipping supervisor-smoke JSON validation"
+      fi
+      rm -f "$LAUNCH_JSON"
+      echo "==> supervisor smoke: both worker kills were respawned and recovered; launch exited 0"
     else
         echo "==> skipping multi-process smoke test (no release binary or artifacts)"
     fi

@@ -427,11 +427,40 @@ pub struct FaultToleranceConfig {
     /// boundary (`0` = off). Checkpoints feed late-join assignments and the
     /// resumable-coordinator restore path.
     pub checkpoint_every: u64,
+    /// Directory for durable checkpoint persistence (empty = in-memory
+    /// only). With `checkpoint_every > 0`, every snapshot is also committed
+    /// to this directory through the atomic file store
+    /// (`federation::store::FileCheckpointStore`), and `fedgraph run
+    /// --resume <dir>` boots a fresh coordinator process from the newest
+    /// valid file.
+    pub checkpoint_dir: String,
+    /// How long (ms) the coordinator waits for a dead worker connection to
+    /// *reconnect* (re-handshaking with its session token) before firing the
+    /// full recovery re-deal. `0` disables the grace window: every lane loss
+    /// is treated as a process death, exactly as before.
+    pub reconnect_grace_ms: u64,
+    /// First retry delay (ms) of the worker's capped, jittered exponential
+    /// connect/reconnect backoff.
+    pub connect_retry_base_ms: u64,
+    /// Upper bound (ms) on a single backoff delay.
+    pub connect_retry_cap_ms: u64,
+    /// Total time budget (ms) across all connect attempts before the worker
+    /// gives up with a typed `ConnectTimeout` error.
+    pub connect_retry_budget_ms: u64,
 }
 
 impl Default for FaultToleranceConfig {
     fn default() -> Self {
-        FaultToleranceConfig { heartbeat_ms: 500, worker_timeout_ms: 10_000, checkpoint_every: 0 }
+        FaultToleranceConfig {
+            heartbeat_ms: 500,
+            worker_timeout_ms: 10_000,
+            checkpoint_every: 0,
+            checkpoint_dir: String::new(),
+            reconnect_grace_ms: 0,
+            connect_retry_base_ms: 100,
+            connect_retry_cap_ms: 2_000,
+            connect_retry_budget_ms: 30_000,
+        }
     }
 }
 
@@ -744,6 +773,21 @@ impl FedGraphConfig {
         if let Some(v) = ft.get("checkpoint_every").as_usize() {
             cfg.federation.fault_tolerance.checkpoint_every = v as u64;
         }
+        if let Some(s) = ft.get("checkpoint_dir").as_str() {
+            cfg.federation.fault_tolerance.checkpoint_dir = s.to_string();
+        }
+        if let Some(v) = ft.get("reconnect_grace_ms").as_usize() {
+            cfg.federation.fault_tolerance.reconnect_grace_ms = v as u64;
+        }
+        if let Some(v) = ft.get("connect_retry_base_ms").as_usize() {
+            cfg.federation.fault_tolerance.connect_retry_base_ms = v as u64;
+        }
+        if let Some(v) = ft.get("connect_retry_cap_ms").as_usize() {
+            cfg.federation.fault_tolerance.connect_retry_cap_ms = v as u64;
+        }
+        if let Some(v) = ft.get("connect_retry_budget_ms").as_usize() {
+            cfg.federation.fault_tolerance.connect_retry_budget_ms = v as u64;
+        }
         // Network block.
         let net = y.get("network");
         if let Some(v) = net.get("bandwidth_gbps").as_f64() {
@@ -810,6 +854,23 @@ impl FedGraphConfig {
                      heartbeat_ms ({}) so one delayed heartbeat cannot kill a live worker",
                     ft.worker_timeout_ms,
                     ft.heartbeat_ms
+                );
+            }
+            if !ft.checkpoint_dir.is_empty() && ft.checkpoint_every == 0 {
+                bail!(
+                    "federation.fault_tolerance.checkpoint_dir is set but checkpoint_every is 0 \
+                     — nothing would ever be persisted; set checkpoint_every >= 1"
+                );
+            }
+            if ft.connect_retry_base_ms == 0 {
+                bail!("federation.fault_tolerance.connect_retry_base_ms must be >= 1");
+            }
+            if ft.connect_retry_cap_ms < ft.connect_retry_base_ms {
+                bail!(
+                    "federation.fault_tolerance.connect_retry_cap_ms ({}) must be >= \
+                     connect_retry_base_ms ({})",
+                    ft.connect_retry_cap_ms,
+                    ft.connect_retry_base_ms
                 );
             }
         }
@@ -951,6 +1012,11 @@ impl FedGraphConfig {
         w.u64(f.fault_tolerance.heartbeat_ms);
         w.u64(f.fault_tolerance.worker_timeout_ms);
         w.u64(f.fault_tolerance.checkpoint_every);
+        w.str(&f.fault_tolerance.checkpoint_dir);
+        w.u64(f.fault_tolerance.reconnect_grace_ms);
+        w.u64(f.fault_tolerance.connect_retry_base_ms);
+        w.u64(f.fault_tolerance.connect_retry_cap_ms);
+        w.u64(f.fault_tolerance.connect_retry_budget_ms);
         w.f64(self.network.bandwidth_gbps);
         w.f64(self.network.latency_ms);
         w.u64(self.seed);
@@ -1055,6 +1121,11 @@ impl FedGraphConfig {
             cfg.federation.fault_tolerance.heartbeat_ms = r.u64()?;
             cfg.federation.fault_tolerance.worker_timeout_ms = r.u64()?;
             cfg.federation.fault_tolerance.checkpoint_every = r.u64()?;
+            cfg.federation.fault_tolerance.checkpoint_dir = r.str()?;
+            cfg.federation.fault_tolerance.reconnect_grace_ms = r.u64()?;
+            cfg.federation.fault_tolerance.connect_retry_base_ms = r.u64()?;
+            cfg.federation.fault_tolerance.connect_retry_cap_ms = r.u64()?;
+            cfg.federation.fault_tolerance.connect_retry_budget_ms = r.u64()?;
             cfg.network.bandwidth_gbps = r.f64()?;
             cfg.network.latency_ms = r.f64()?;
             cfg.seed = r.u64()?;
@@ -1091,7 +1162,12 @@ impl FedGraphConfig {
 /// v5: `federation.fault_tolerance` (heartbeat/timeout/checkpoint cadence)
 /// joined the federation block — workers must agree on the heartbeat
 /// interval the coordinator's liveness window assumes.
-pub const CONFIG_WIRE_VERSION: u8 = 5;
+/// v6: durable-elasticity keys joined `fault_tolerance` — `checkpoint_dir`
+/// (file-store root), `reconnect_grace_ms` (coordinator-side reconnect
+/// window), and the worker's `connect_retry_{base,cap,budget}_ms` backoff
+/// schedule, which rides the wire so a respawned worker retries on the
+/// same schedule the supervisor assumed.
+pub const CONFIG_WIRE_VERSION: u8 = 6;
 
 fn task_code(t: Task) -> u8 {
     match t {
@@ -1230,17 +1306,34 @@ federation:
     heartbeat_ms: 100
     worker_timeout_ms: 2000
     checkpoint_every: 5
+    checkpoint_dir: /tmp/fg-ck
+    reconnect_grace_ms: 750
+    connect_retry_base_ms: 50
+    connect_retry_cap_ms: 800
+    connect_retry_budget_ms: 9000
 "#,
         )
         .unwrap();
         assert_eq!(cfg.federation.fault_tolerance.heartbeat_ms, 100);
         assert_eq!(cfg.federation.fault_tolerance.worker_timeout_ms, 2000);
         assert_eq!(cfg.federation.fault_tolerance.checkpoint_every, 5);
-        // Defaults: heartbeats on, 10 s liveness window, checkpoints off.
+        assert_eq!(cfg.federation.fault_tolerance.checkpoint_dir, "/tmp/fg-ck");
+        assert_eq!(cfg.federation.fault_tolerance.reconnect_grace_ms, 750);
+        assert_eq!(cfg.federation.fault_tolerance.connect_retry_base_ms, 50);
+        assert_eq!(cfg.federation.fault_tolerance.connect_retry_cap_ms, 800);
+        assert_eq!(cfg.federation.fault_tolerance.connect_retry_budget_ms, 9000);
+        // Defaults: heartbeats on, 10 s liveness window, checkpoints off,
+        // no durable store, no grace window, 100 ms → 2 s / 30 s backoff.
         let d = FaultToleranceConfig::default();
         assert_eq!(d.heartbeat_ms, 500);
         assert_eq!(d.worker_timeout_ms, 10_000);
         assert_eq!(d.checkpoint_every, 0);
+        assert!(d.checkpoint_dir.is_empty());
+        assert_eq!(d.reconnect_grace_ms, 0);
+        assert_eq!(
+            (d.connect_retry_base_ms, d.connect_retry_cap_ms, d.connect_retry_budget_ms),
+            (100, 2_000, 30_000)
+        );
         // A liveness window without heartbeats would kill idle live workers.
         let mut bad =
             FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
@@ -1254,11 +1347,32 @@ federation:
         bad.federation.fault_tolerance.worker_timeout_ms = 0;
         bad.federation.fault_tolerance.heartbeat_ms = 0;
         bad.validate().unwrap();
+        // A durable store with no checkpoint cadence would never persist.
+        bad.federation.fault_tolerance.checkpoint_dir = "/tmp/fg-never".into();
+        assert!(bad.validate().is_err());
+        bad.federation.fault_tolerance.checkpoint_every = 1;
+        bad.validate().unwrap();
+        // Backoff schedule sanity: base >= 1, cap >= base.
+        bad.federation.fault_tolerance.connect_retry_base_ms = 0;
+        assert!(bad.validate().is_err());
+        bad.federation.fault_tolerance.connect_retry_base_ms = 500;
+        bad.federation.fault_tolerance.connect_retry_cap_ms = 100;
+        assert!(bad.validate().is_err());
+        bad.federation.fault_tolerance.connect_retry_cap_ms = 500;
+        bad.validate().unwrap();
         // The block rides the bit-exact wire encoding.
         let mut wired =
             FedGraphConfig::new(Task::NodeClassification, Method::FedAvgNC, "cora-sim").unwrap();
-        wired.federation.fault_tolerance =
-            FaultToleranceConfig { heartbeat_ms: 250, worker_timeout_ms: 3000, checkpoint_every: 2 };
+        wired.federation.fault_tolerance = FaultToleranceConfig {
+            heartbeat_ms: 250,
+            worker_timeout_ms: 3000,
+            checkpoint_every: 2,
+            checkpoint_dir: "ckpts".into(),
+            reconnect_grace_ms: 1200,
+            connect_retry_base_ms: 25,
+            connect_retry_cap_ms: 400,
+            connect_retry_budget_ms: 5000,
+        };
         let back = FedGraphConfig::decode_wire(&wired.encode_wire()).unwrap();
         assert_eq!(back.federation.fault_tolerance, wired.federation.fault_tolerance);
     }

@@ -169,6 +169,9 @@ impl ClientLogic for GcLogic {
 }
 
 pub fn run_gc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    if cfg.extras.contains_key("resume") {
+        anyhow::bail!("--resume supports the NC task runner only");
+    }
     let (build, mut rng) = build_gc(cfg, engine, monitor, &BuildSlice::Full)?;
     let blueprint = build.into_blueprint()?;
     let global_init = blueprint.init.clone();

@@ -197,6 +197,9 @@ impl ClientLogic for LpLogic {
 }
 
 pub fn run_lp(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    if cfg.extras.contains_key("resume") {
+        anyhow::bail!("--resume supports the NC task runner only");
+    }
     let (build, mut rng) = build_lp(cfg, engine, monitor, &BuildSlice::Full)?;
     let blueprint = build.into_blueprint()?;
     let m = blueprint.num_clients();

@@ -23,7 +23,8 @@ use anyhow::{bail, Result};
 use crate::config::{DatasetFormat, FedGraphConfig, Method};
 use crate::data::nc::{generate_nc, nc_spec, papers100m_sim, NCDataset, NCKeyedView};
 use crate::federation::{
-    Charge, ClientLogic, Deployment, Federation, LocalUpdate, SessionBuild,
+    Charge, CheckpointStore, ClientLogic, Deployment, Federation, FileCheckpointStore,
+    LocalUpdate, SessionBuild,
 };
 use crate::graph::{
     block_from_induced, build_local_graph, build_local_graph_keyed, dirichlet_partition,
@@ -193,14 +194,64 @@ pub fn run_nc(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Resul
     let n = blueprint.num_clients();
     let mut global = blueprint.init.clone();
     let deployment = Deployment::from_config(cfg)?;
-    let mut fed = Federation::spawn(monitor, &deployment, cfg, blueprint)?;
     let all: Vec<usize> = (0..n).collect();
-    // Initial model broadcast.
-    let init_charge = Charge::PerLink(fed.init_model_charge(&global));
-    fed.broadcast_model(0, &global, &all, init_charge)?;
+    // Durable resume (`--resume <dir>`): boot a fresh coordinator from the
+    // newest valid on-disk checkpoint instead of round 0. The session is
+    // rebuilt deterministically from the config as usual; the snapshot then
+    // restores the coordinator's state tables, model, ledger counters, and
+    // the clients' RNG cursors, and the round loop continues where the
+    // interrupted run left off — bitwise-identical in sync modes.
+    let mut start_round = 0usize;
+    let mut fed = if let Some(dir) = cfg.extras.get("resume") {
+        let store = FileCheckpointStore::open(dir, crate::federation::store::DEFAULT_KEEP)
+            .map_err(|e| anyhow::anyhow!("opening --resume checkpoint store: {e}"))?;
+        let loaded = store
+            .load_latest_valid()
+            .map_err(|e| anyhow::anyhow!("loading checkpoint for --resume: {e}"))?;
+        // A corrupt newest file silently falling back to an older round must
+        // be visible: warn per skipped candidate and ledger the count.
+        for s in &loaded.skipped {
+            eprintln!("fedgraph: skipping checkpoint {} ({})", s.path.display(), s.reason);
+        }
+        if !loaded.skipped.is_empty() {
+            monitor.note("resume_skipped_files", loaded.skipped.len());
+        }
+        let ck = loaded.checkpoint;
+        eprintln!(
+            "fedgraph: resuming from {} (round {} complete)",
+            loaded.path.display(),
+            ck.round
+        );
+        // Replay the coordinator's selection stream past the completed
+        // rounds, so the resumed run draws the same participants the
+        // uninterrupted run would from round `ck.round + 1` on.
+        for round in 0..=ck.round as usize {
+            let _ = select_with_dropout(
+                n,
+                cfg.sample_ratio,
+                cfg.sampling_type,
+                cfg.federation.dropout_frac,
+                round,
+                &mut rng,
+            );
+        }
+        let fed = Federation::spawn_restored(monitor, &deployment, cfg, blueprint, &ck)?;
+        global.values = ck.params.clone();
+        start_round = ck.round as usize + 1;
+        monitor.note("resumed_from_round", ck.round);
+        fed
+    } else {
+        Federation::spawn(monitor, &deployment, cfg, blueprint)?
+    };
+    if start_round == 0 {
+        // Initial model broadcast. (A restored session re-ships the
+        // checkpointed model inside `spawn_restored` instead.)
+        let init_charge = Charge::PerLink(fed.init_model_charge(&global));
+        fed.broadcast_model(0, &global, &all, init_charge)?;
+    }
     let mut last_acc = 0.0;
     let mut stale_rejected = 0usize;
-    for round in 0..cfg.global_rounds {
+    for round in start_round..cfg.global_rounds {
         let sim0 = monitor.net.total_concurrent_secs();
         let sel = select_with_dropout(
             n,
@@ -1029,6 +1080,9 @@ impl ClientLogic for LazyNcLogic {
 /// Node-count override for the lazy dataset: `scale` × 10^8 nodes (Fig 12's
 /// 195-client power-law setting).
 pub fn run_nc_lazy(cfg: &FedGraphConfig, engine: &Engine, monitor: &Monitor) -> Result<()> {
+    if cfg.extras.contains_key("resume") {
+        bail!("--resume supports the standard NC runner only (not the papers100m lazy path)");
+    }
     let (build, mut rng) = build_nc_lazy(cfg, engine, monitor, &BuildSlice::Full)?;
     let blueprint = build.into_blueprint()?;
     let m = blueprint.num_clients();

@@ -21,7 +21,11 @@ use crate::util::rng::RngSnapshot;
 
 /// Bumped whenever the checkpoint byte layout changes. Decoding rejects any
 /// other version with a typed error instead of misreading the bytes.
-pub const CHECKPOINT_WIRE_VERSION: u32 = 1;
+/// v2: ledger rows grew from `(phase, bytes_up, bytes_down, wasted)` tuples
+/// to full [`LedgerRow`]s (message counts and both simulated-time
+/// accumulators included), so a resumed coordinator restores its SimNet
+/// counters bitwise instead of approximately.
+pub const CHECKPOINT_WIRE_VERSION: u32 = 2;
 
 /// Magic prefix so a checkpoint is never confused with a protocol frame or a
 /// serialized model ("FGCP").
@@ -68,9 +72,24 @@ pub struct RoundCheckpoint {
     pub he_seed: Option<u64>,
     /// Round-policy in-flight state.
     pub policy: PolicyCheckpoint,
-    /// SimNet ledger counters at snapshot time:
-    /// `(phase code, bytes_up, bytes_down, wasted_bytes)`.
-    pub ledger: Vec<(u32, u64, u64, u64)>,
+    /// SimNet ledger counters at snapshot time, one row per phase.
+    pub ledger: Vec<LedgerRow>,
+}
+
+/// One phase's SimNet counters at snapshot time — the full
+/// [`crate::transport::PhaseCounter`] plus its phase code, so a resume
+/// restores byte totals, message counts, and both simulated-time
+/// accumulators bitwise (f64 accumulation picks up exactly where the
+/// snapshot left off).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerRow {
+    pub phase: u32,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub messages: u64,
+    pub sim_secs: f64,
+    pub concurrent_secs: f64,
+    pub wasted_bytes: u64,
 }
 
 impl RoundCheckpoint {
@@ -143,11 +162,14 @@ impl RoundCheckpoint {
             }
         }
         w.u32(self.ledger.len() as u32);
-        for (phase, up, down, wasted) in &self.ledger {
-            w.u32(*phase);
-            w.u64(*up);
-            w.u64(*down);
-            w.u64(*wasted);
+        for row in &self.ledger {
+            w.u32(row.phase);
+            w.u64(row.bytes_up);
+            w.u64(row.bytes_down);
+            w.u64(row.messages);
+            w.f64(row.sim_secs);
+            w.f64(row.concurrent_secs);
+            w.u64(row.wasted_bytes);
         }
         w.finish()
     }
@@ -219,10 +241,15 @@ impl RoundCheckpoint {
         let n_ledger = r.u32()? as usize;
         let mut ledger = Vec::with_capacity(n_ledger.min(64));
         for _ in 0..n_ledger {
-            let phase = r.u32()?;
-            let up = r.u64()?;
-            let down = r.u64()?;
-            ledger.push((phase, up, down, r.u64()?));
+            ledger.push(LedgerRow {
+                phase: r.u32()?,
+                bytes_up: r.u64()?,
+                bytes_down: r.u64()?,
+                messages: r.u64()?,
+                sim_secs: r.f64()?,
+                concurrent_secs: r.f64()?,
+                wasted_bytes: r.u64()?,
+            });
         }
         if r.remaining() != 0 {
             return Err(WireError::Malformed("trailing bytes after checkpoint"));
@@ -275,7 +302,26 @@ mod tests {
                 in_flight: vec![(1, 17), (2, 18)],
                 next_seq: 19,
             },
-            ledger: vec![(0, 100, 200, 0), (1, 5000, 9000, 128)],
+            ledger: vec![
+                LedgerRow {
+                    phase: 0,
+                    bytes_up: 100,
+                    bytes_down: 200,
+                    messages: 12,
+                    sim_secs: 0.75,
+                    concurrent_secs: 0.5,
+                    wasted_bytes: 0,
+                },
+                LedgerRow {
+                    phase: 1,
+                    bytes_up: 5000,
+                    bytes_down: 9000,
+                    messages: 40,
+                    sim_secs: 2.25,
+                    concurrent_secs: 1.125,
+                    wasted_bytes: 128,
+                },
+            ],
         }
     }
 

@@ -219,6 +219,12 @@ pub(crate) struct Fabric {
     /// runtime's failure recovery keeps current). Empty for in-process
     /// deployments, which have no connections to lose.
     pub client_conn: Vec<usize>,
+    /// Per-connection session tokens (protocol v7), issued on the `Assign`.
+    /// A worker that loses its lane re-handshakes echoing its token, which
+    /// is how the runtime's reconnect grace window tells "the same process,
+    /// back again" from a brand-new standby. Empty for in-process
+    /// deployments.
+    pub conn_tokens: Vec<u64>,
 }
 
 /// A post-launch `fedgraph worker --connect` that completed the standby
@@ -226,6 +232,25 @@ pub(crate) struct Fabric {
 /// the federation admits it at the next round boundary.
 pub(crate) struct LateWorker {
     pub stream: TcpStream,
+    /// The session token this connection holds: the token it echoed on its
+    /// `WorkerHello` (a reconnecting worker reclaiming its identity) or a
+    /// freshly granted one (a genuinely new standby).
+    pub session: u64,
+}
+
+/// The session token issued to initial worker `k` (conn index == accept
+/// order at launch). Deterministic per (seed, k) so a respawned supervisor
+/// fleet and its coordinator agree without extra plumbing; `| 1` keeps the
+/// token nonzero — `WorkerHello.session == 0` means "fresh worker".
+pub(crate) fn session_token(seed: u64, k: usize) -> u64 {
+    hash_u64(seed, 0x5E55_10, k as u64) | 1
+}
+
+/// A fresh token for a late-joining standby that did not present one.
+/// Domain-separated from [`session_token`] so grants never collide with
+/// launch-time identities.
+fn standby_token(seed: u64, counter: u64) -> u64 {
+    hash_u64(seed, 0x5E55_11, counter) | 1
 }
 
 /// Build one actor's setup bundle. Shared by the in-process launch and the
@@ -320,6 +345,7 @@ fn launch_threads(
         obs_route: vec![(String::new(), 0); n],
         late_rx: None,
         client_conn: Vec::new(),
+        conn_tokens: Vec::new(),
     })
 }
 
@@ -405,6 +431,7 @@ fn launch_workers(
             config: config_bytes.clone(),
             sent_at_ns: t1,
             standby: false,
+            session: session_token(cfg.seed, k),
         };
         tcp::write_frame(&mut stream, CONTROL_LANE, &assign.encode())
             .with_context(|| format!("assigning worker {k}"))?;
@@ -493,6 +520,7 @@ fn launch_workers(
     // exits when the federation drops the receiver (send fails) or the
     // listener is closed at process exit.
     let needed = required_codec_bit(cfg.federation.compression);
+    let seed = cfg.seed;
     let late_rx = match listener.try_clone() {
         Ok(listener) => {
             let (tx, rx) = channel();
@@ -501,7 +529,7 @@ fn launch_workers(
             let spawned = std::thread::Builder::new()
                 .name("fed-late-acceptor".into())
                 .spawn(move || {
-                    late_acceptor(listener, n_total, config_bytes, needed, hello_timeout, tx)
+                    late_acceptor(listener, n_total, config_bytes, needed, hello_timeout, seed, tx)
                 })
                 .is_ok();
             if spawned {
@@ -513,7 +541,16 @@ fn launch_workers(
         Err(_) => None,
     };
     let client_conn: Vec<usize> = (0..n).map(|c| c % workers).collect();
-    Ok(Fabric { coord, threads: Vec::new(), worker_builds, obs_route, late_rx, client_conn })
+    let conn_tokens: Vec<u64> = (0..workers).map(|k| session_token(seed, k)).collect();
+    Ok(Fabric {
+        coord,
+        threads: Vec::new(),
+        worker_builds,
+        obs_route,
+        late_rx,
+        client_conn,
+        conn_tokens,
+    })
 }
 
 /// Accept loop for post-launch worker connections: handshake each standby
@@ -528,8 +565,10 @@ fn late_acceptor(
     config_bytes: Vec<u8>,
     needed_codecs: u8,
     hello_timeout: Option<Duration>,
+    seed: u64,
     tx: Sender<LateWorker>,
 ) {
+    let mut grants = 0u64;
     loop {
         let (mut stream, peer) = match listener.accept() {
             Ok(x) => x,
@@ -537,11 +576,20 @@ fn late_acceptor(
         };
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(hello_timeout).ok();
-        match standby_handshake(&mut stream, n_total, &config_bytes, needed_codecs) {
-            Ok(()) => {
+        let grant = standby_token(seed, grants);
+        match standby_handshake(&mut stream, n_total, &config_bytes, needed_codecs, grant) {
+            Ok(session) => {
                 stream.set_read_timeout(None).ok();
-                eprintln!("fedgraph: standby worker ({peer}) handshaken, awaiting admission");
-                if tx.send(LateWorker { stream }).is_err() {
+                if session == grant {
+                    grants += 1;
+                    eprintln!("fedgraph: standby worker ({peer}) handshaken, awaiting admission");
+                } else {
+                    eprintln!(
+                        "fedgraph: worker ({peer}) reconnected with session {session:#x}, \
+                         awaiting reclaim"
+                    );
+                }
+                if tx.send(LateWorker { stream, session }).is_err() {
                     return; // federation gone
                 }
             }
@@ -552,13 +600,17 @@ fn late_acceptor(
 
 /// The standby variant of the `WorkerHello → Assign → BuildReport`
 /// handshake: same validation, empty client slice, `standby: true` so the
-/// worker's serve loop waits for a `Reassign` instead of exiting.
+/// worker's serve loop waits for a `Reassign` instead of exiting. Returns
+/// the connection's session token: the hello's token echoed back when the
+/// worker presented one (a reconnect reclaiming its identity), else the
+/// caller's fresh `grant`.
 fn standby_handshake(
     stream: &mut TcpStream,
     n_total: u32,
     config_bytes: &[u8],
     needed_codecs: u8,
-) -> Result<()> {
+    grant: u64,
+) -> Result<u64> {
     let (lane, payload) = match tcp::read_frame(stream)? {
         tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
         tcp::ReadOutcome::Closed => bail!("closed before hello"),
@@ -566,22 +618,24 @@ fn standby_handshake(
     if lane != CONTROL_LANE {
         bail!("non-control first frame");
     }
-    match UpMsg::decode(&payload)? {
+    let session = match UpMsg::decode(&payload)? {
         UpMsg::WorkerHello { version, .. } if version != PROTOCOL_VERSION => {
             bail!("speaks protocol v{version}, coordinator speaks v{PROTOCOL_VERSION}")
         }
         UpMsg::WorkerHello { codecs, .. } if (needed_codecs & !codecs) != 0 => {
             bail!("missing wire-codec capability ({codecs:#05b}, needs {needed_codecs:#05b})")
         }
-        UpMsg::WorkerHello { .. } => {}
+        UpMsg::WorkerHello { session: 0, .. } => grant,
+        UpMsg::WorkerHello { session, .. } => session,
         other => bail!("sent {other:?} instead of WorkerHello"),
-    }
+    };
     let assign = DownMsg::Assign {
         n_total,
         clients: Vec::new(),
         config: config_bytes.to_vec(),
         sent_at_ns: trace::now_ns(),
         standby: true,
+        session,
     };
     tcp::write_frame(stream, CONTROL_LANE, &assign.encode())?;
     let (lane, payload) = match tcp::read_frame(stream)? {
@@ -592,7 +646,7 @@ fn standby_handshake(
         bail!("non-control frame before build report");
     }
     match UpMsg::decode(&payload)? {
-        UpMsg::BuildReport { built_clients: 0, .. } => Ok(()),
+        UpMsg::BuildReport { built_clients: 0, .. } => Ok(session),
         UpMsg::BuildReport { built_clients, .. } => {
             bail!("standby worker built {built_clients} clients before any assignment")
         }

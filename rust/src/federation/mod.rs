@@ -96,16 +96,22 @@
 //!
 //! ## Fault tolerance
 //!
-//! TCP deployments run elastically (protocol v6): worker heartbeats plus
+//! TCP deployments run elastically (protocol v7): worker heartbeats plus
 //! read-timeout liveness detection surface a dead worker as a typed
 //! [`crate::transport::tcp::WorkerGone`], and the coordinator
 //! re-materializes its clients on the surviving workers (`Reassign` frames,
 //! re-issued broadcasts and train orders, per-client RNG cursors shipped
 //! back on every update) so a sync plaintext/DP run finishes
-//! bitwise-identical to the uninterrupted run. Round-boundary
-//! [`checkpoint::RoundCheckpoint`] snapshots make the coordinator itself
-//! resumable, and standby workers (`fedgraph worker --connect` after
-//! launch) rendezvous mid-run and receive a slice at the next round
+//! bitwise-identical to the uninterrupted run. A transient disconnect is
+//! *not* a death: workers reconnect with capped jittered backoff and
+//! re-handshake with their session token, and the coordinator holds a
+//! `reconnect_grace_ms` window before firing recovery, so a network blip
+//! costs zero reassignments. Round-boundary
+//! [`checkpoint::RoundCheckpoint`] snapshots — durably persisted through a
+//! [`store::CheckpointStore`] — make the coordinator itself resumable
+//! (`fedgraph run --resume <dir>`), and standby workers (`fedgraph worker
+//! --connect` after launch, or respawned by the `fedgraph launch`
+//! supervisor) rendezvous mid-run and receive a slice at the next round
 //! boundary. Failure model and recovery sequence: `docs/FAULT_TOLERANCE.md`.
 
 pub mod actor;
@@ -114,10 +120,12 @@ pub mod deploy;
 pub mod policy;
 pub mod protocol;
 pub mod runtime;
+pub mod store;
 pub mod worker;
 
 pub use actor::{ClientLogic, LocalUpdate};
-pub use checkpoint::{PolicyCheckpoint, RoundCheckpoint, CHECKPOINT_WIRE_VERSION};
+pub use checkpoint::{LedgerRow, PolicyCheckpoint, RoundCheckpoint, CHECKPOINT_WIRE_VERSION};
+pub use store::{CheckpointStore, FileCheckpointStore, LoadedCheckpoint, StoreError};
 pub use deploy::{Deployment, SessionBlueprint, SessionBuild};
 pub use policy::{AsyncBounded, RoundPolicy, SyncBarrier};
 pub use runtime::{Charge, Federation, PolicyRound, RoundUpdate, StepOutcome, TrainResult};

@@ -38,8 +38,8 @@
 //!
 //! **Deployment frames.** The multi-process TCP backend adds four control
 //! frames. Before any trainer lane exists, a connecting worker process sends
-//! `WorkerHello { version, codecs }` and the coordinator answers
-//! `Assign { n_total, clients, config }` — the **slice plan**: the client
+//! `WorkerHello { version, codecs, session }` and the coordinator answers
+//! `Assign { n_total, clients, config, session }` — the **slice plan**: the client
 //! indices this worker hosts plus the full experiment config
 //! (binary-encoded, bit-exact), from which the worker deterministically
 //! rebuilds **only its assigned slice** of the session (datasets, partition
@@ -103,8 +103,14 @@ use crate::util::rng::RngSnapshot;
 /// `Update`/`Metric` envelopes (so a re-materialized client resumes its
 /// random stream exactly), and the `Assign.standby` flag that parks a
 /// late-joining worker until the next round boundary (see
-/// `docs/FAULT_TOLERANCE.md`).
-pub const PROTOCOL_VERSION: u32 = 6;
+/// `docs/FAULT_TOLERANCE.md`). v7: durable elasticity — the session-token
+/// half of the reconnect handshake: `Assign.session` issues each worker a
+/// stable identity token, and a worker that loses its lane re-handshakes
+/// with that token on `WorkerHello.session` (0 = fresh worker) so the
+/// coordinator can tell a *reconnecting* process (reclaim its slice within
+/// the `reconnect_grace_ms` window, zero recoveries) from a brand-new
+/// standby.
+pub const PROTOCOL_VERSION: u32 = 7;
 
 /// `WorkerHello.codecs` capability bit: the worker can encode `pack`
 /// (lossless delta + byte-plane) uploads.
@@ -308,7 +314,17 @@ pub enum DownMsg {
     /// worker: it builds session scaffolding for an empty slice, reports
     /// zero built clients, and then parks on its control lane waiting for a
     /// [`DownMsg::Reassign`] at the next round boundary instead of exiting.
-    Assign { n_total: u32, clients: Vec<u32>, config: Vec<u8>, sent_at_ns: u64, standby: bool },
+    /// `session` (protocol v7) is the worker's session token: a reconnecting
+    /// worker echoes it on [`UpMsg::WorkerHello`] to reclaim its slice
+    /// within the grace window instead of joining as a fresh standby.
+    Assign {
+        n_total: u32,
+        clients: Vec<u32>,
+        config: Vec<u8>,
+        sent_at_ns: u64,
+        standby: bool,
+        session: u64,
+    },
     /// Fault-tolerance order (protocol v6, control lane): host these
     /// additional clients. Sent to a survivor after a worker death, or to a
     /// parked standby worker at a round boundary. The worker re-materializes
@@ -404,8 +420,10 @@ pub enum UpMsg {
     /// wire codecs it supports ([`CODEC_PACK`] | [`CODEC_QUANTIZED`] |
     /// [`CODEC_DOWN`] — the codec-negotiation half of the handshake; the
     /// coordinator picks the session codec from the config and rejects
-    /// workers that lack it).
-    WorkerHello { version: u32, codecs: u8 },
+    /// workers that lack it). `session` (protocol v7): `0` for a fresh
+    /// worker; a reconnecting worker echoes the token its original
+    /// [`DownMsg::Assign`] carried, asking to reclaim that slice.
+    WorkerHello { version: u32, codecs: u8, session: u64 },
     /// Ack of a [`DownMsg::Reassign`] (protocol v6, control lane): the
     /// worker finished re-materializing the migrated slice and spawned its
     /// actors. Echoes `token` so the coordinator can match the ack on a
@@ -571,7 +589,7 @@ impl DownMsg {
                 w.u32(*version);
             }
             DownMsg::Stop => w.u8(D_STOP),
-            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby, session } => {
                 w.u8(D_ASSIGN);
                 w.u32(*n_total);
                 w.u32(clients.len() as u32);
@@ -581,6 +599,7 @@ impl DownMsg {
                 w.blob(config);
                 w.u64(*sent_at_ns);
                 w.u8(*standby as u8);
+                w.u64(*session);
             }
             DownMsg::Reassign { token, n_total, clients, rngs } => {
                 debug_assert_eq!(clients.len(), rngs.len(), "rngs must align with clients");
@@ -643,7 +662,8 @@ impl DownMsg {
                 }
                 let config = r.blob()?;
                 let sent_at_ns = r.u64()?;
-                DownMsg::Assign { n_total, clients, config, sent_at_ns, standby: r.u8()? != 0 }
+                let standby = r.u8()? != 0;
+                DownMsg::Assign { n_total, clients, config, sent_at_ns, standby, session: r.u64()? }
             }
             D_REASSIGN => {
                 let token = r.u64()?;
@@ -727,10 +747,11 @@ impl UpMsg {
                 w.u32(*client);
                 write_obs(&mut w, obs);
             }
-            UpMsg::WorkerHello { version, codecs } => {
+            UpMsg::WorkerHello { version, codecs, session } => {
                 w.u8(U_WORKER_HELLO);
                 w.u32(*version);
                 w.u8(*codecs);
+                w.u64(*session);
             }
             UpMsg::BuildReport {
                 built_clients,
@@ -808,7 +829,9 @@ impl UpMsg {
                 let client = r.u32()?;
                 UpMsg::StopAck { client, obs: read_obs(&mut r)? }
             }
-            U_WORKER_HELLO => UpMsg::WorkerHello { version: r.u32()?, codecs: r.u8()? },
+            U_WORKER_HELLO => {
+                UpMsg::WorkerHello { version: r.u32()?, codecs: r.u8()?, session: r.u64()? }
+            }
             U_BUILD_REPORT => UpMsg::BuildReport {
                 built_clients: r.u32()?,
                 total_clients: r.u32()?,
@@ -1005,11 +1028,16 @@ mod tests {
 
     #[test]
     fn deployment_handshake_and_shutdown_frames_roundtrip() {
-        let hello = UpMsg::WorkerHello { version: PROTOCOL_VERSION, codecs: SUPPORTED_CODECS };
+        let hello = UpMsg::WorkerHello {
+            version: PROTOCOL_VERSION,
+            codecs: SUPPORTED_CODECS,
+            session: 0xFEED_F00D,
+        };
         match UpMsg::decode(&hello.encode()).unwrap() {
-            UpMsg::WorkerHello { version, codecs } => {
+            UpMsg::WorkerHello { version, codecs, session } => {
                 assert_eq!(version, PROTOCOL_VERSION);
                 assert_eq!(codecs, CODEC_PACK | CODEC_QUANTIZED | CODEC_DOWN);
+                assert_eq!(session, 0xFEED_F00D);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -1054,14 +1082,16 @@ mod tests {
             config: vec![0xAA, 0xBB, 0xCC],
             sent_at_ns: 42,
             standby: false,
+            session: 0xA11C_E000_0001,
         };
         match DownMsg::decode(&assign.encode()).unwrap() {
-            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby } => {
+            DownMsg::Assign { n_total, clients, config, sent_at_ns, standby, session } => {
                 assert_eq!(n_total, 6);
                 assert_eq!(clients, vec![1, 3, 5]);
                 assert_eq!(config, vec![0xAA, 0xBB, 0xCC]);
                 assert_eq!(sent_at_ns, 42);
                 assert!(!standby);
+                assert_eq!(session, 0xA11C_E000_0001);
             }
             other => panic!("wrong message {other:?}"),
         }
@@ -1076,6 +1106,7 @@ mod tests {
             config: vec![0x01],
             sent_at_ns: 7,
             standby: true,
+            session: 0,
         };
         match DownMsg::decode(&standby.encode()).unwrap() {
             DownMsg::Assign { clients, standby, .. } => {

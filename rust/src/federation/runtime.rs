@@ -41,7 +41,7 @@ use crate::monitor::{ClientTimeline, Monitor};
 use crate::runtime::ParamSet;
 use crate::transport::link::CoordLink;
 use crate::transport::tcp::{WorkerGone, CONTROL_LANE};
-use crate::transport::{Direction, Phase, SimNet};
+use crate::transport::{Direction, Phase, PhaseCounter, SimNet};
 use crate::util::rng::RngSnapshot;
 use crate::util::timer::timed;
 
@@ -49,9 +49,10 @@ use crate::transport::serialize::{
     dequantize_delta, pack_delta, pack_delta_rans, params_wire_len, unpack_delta,
 };
 
-use super::checkpoint::RoundCheckpoint;
+use super::checkpoint::{LedgerRow, RoundCheckpoint};
 use super::deploy::{he_context, Deployment, LateWorker, SessionBlueprint};
 use super::policy::{AsyncBounded, RoundPolicy, SyncBarrier};
+use super::store::{CheckpointStore, FileCheckpointStore};
 use super::protocol::{
     encode_eval, encode_set_model, encode_set_model_packed, set_model_frame_len, DownMsg,
     ObsBlock, StagedTransfer, UpMsg, UpdateEnvelope, UpdatePayload,
@@ -229,6 +230,27 @@ pub struct Federation<'m> {
     /// The deterministic CKKS context seed of an HE session (recorded into
     /// checkpoints so a restore rebuilds the identical context).
     he_seed: Option<u64>,
+    // -- durable elastic orchestration (protocol v7) ------------------------
+    /// Durable checkpoint store (`fault_tolerance.checkpoint_dir`): every
+    /// retained round snapshot is also persisted through it, making the
+    /// coordinator itself resumable (`fedgraph run --resume`).
+    store: Option<Box<dyn CheckpointStore>>,
+    /// Session token granted per worker connection (index = connection). A
+    /// redialing worker presenting a known token reclaims that connection's
+    /// identity inside the grace window instead of triggering recovery.
+    /// Empty for in-process deployments; 0 marks a retired token.
+    conn_tokens: Vec<u64>,
+    /// Standby connections that arrived while a reconnect grace window was
+    /// polling for a *different* worker's token; admitted as ordinary
+    /// late joiners at the next round boundary.
+    pending_late: Vec<LateWorker>,
+    /// `fault_tolerance.reconnect_grace_ms` (0 = reconnect window off:
+    /// every lost connection fires recovery immediately).
+    reconnect_grace_ms: u64,
+    checkpoint_writes: u64,
+    checkpoint_bytes: u64,
+    last_persisted_round: Option<u32>,
+    reconnects: u64,
 }
 
 impl<'m> Federation<'m> {
@@ -308,6 +330,17 @@ impl<'m> Federation<'m> {
             None => fabric.coord,
         };
         let he_seed = if he_ctx.is_some() { Some(cfg.seed ^ 0xC4C5) } else { None };
+        let ft = &cfg.federation.fault_tolerance;
+        // A session asked to checkpoint durably must not run on without its
+        // safety net, so an unopenable store directory is fatal at spawn.
+        let store: Option<Box<dyn CheckpointStore>> =
+            if ft.checkpoint_every > 0 && !ft.checkpoint_dir.is_empty() {
+                let s = FileCheckpointStore::open(&ft.checkpoint_dir, super::store::DEFAULT_KEEP)
+                    .map_err(|e| anyhow!("opening durable checkpoint store: {e}"))?;
+                Some(Box::new(s))
+            } else {
+                None
+            };
         let mut fed = Federation {
             monitor,
             coord,
@@ -342,9 +375,17 @@ impl<'m> Federation<'m> {
             reassigned_clients: 0,
             late_joins: 0,
             late_rx: fabric.late_rx,
-            checkpoint_every: cfg.federation.fault_tolerance.checkpoint_every,
+            checkpoint_every: ft.checkpoint_every,
             last_checkpoint: None,
             he_seed,
+            store,
+            conn_tokens: fabric.conn_tokens,
+            pending_late: Vec::new(),
+            reconnect_grace_ms: ft.reconnect_grace_ms,
+            checkpoint_writes: 0,
+            checkpoint_bytes: 0,
+            last_persisted_round: None,
+            reconnects: 0,
         };
         if fed.codec.needs_base() {
             // Version 0 is the public init every actor bootstraps from.
@@ -672,7 +713,9 @@ impl<'m> Federation<'m> {
         }
         if self.checkpoint_every > 0 && (round as u64 + 1) % self.checkpoint_every == 0 {
             if let Some(m) = &model {
-                self.last_checkpoint = Some(self.round_checkpoint(round, m));
+                let ck = self.round_checkpoint(round, m);
+                self.persist_checkpoint(&ck)?;
+                self.last_checkpoint = Some(ck);
                 self.monitor.note("checkpoint_round", round);
             }
         }
@@ -884,20 +927,9 @@ impl<'m> Federation<'m> {
         }
         self.conn_dead[conn] = true;
         let dead: Vec<usize> = (0..self.n).filter(|&c| self.assignment[c] == conn).collect();
-        let survivors: Vec<usize> =
-            (0..self.conn_dead.len()).filter(|&k| !self.conn_dead[k]).collect();
-        if survivors.is_empty() {
-            bail!("worker connection {conn} died and no workers survive: {}", gone.reason);
-        }
         let _sp = crate::trace::span("coord", "recovery")
             .arg("conn", conn)
             .arg("clients", dead.len());
-        eprintln!(
-            "fedgraph: worker connection {conn} died ({}); re-assigning clients {dead:?} \
-             across {} survivor(s)",
-            gone.reason,
-            survivors.len()
-        );
         // Drain everything the worker flushed before dying (frame order is
         // preserved ahead of the reader's end-of-stream marker), so an
         // update that made it out still completes its order below.
@@ -946,6 +978,35 @@ impl<'m> Federation<'m> {
             }
         }
         self.settle_buffered_orders(&dead);
+        // A transient disconnect is not a death: inside the grace window the
+        // same worker may redial presenting its session token, in which case
+        // its whole slice re-materializes on the *new* connection through the
+        // ordinary `Reassign` path — a reconnect, not a recovery.
+        if self.reconnect_grace_ms > 0 {
+            if let Some(new_conn) = self.await_reconnect(conn)? {
+                eprintln!(
+                    "fedgraph: worker connection {conn} reconnected as connection {new_conn} \
+                     within the {} ms grace window; resuming clients {dead:?}",
+                    self.reconnect_grace_ms
+                );
+                if !dead.is_empty() {
+                    self.reassign_clients(&dead, new_conn)?;
+                }
+                self.reconnects += 1;
+                return Ok(dead);
+            }
+        }
+        let survivors: Vec<usize> =
+            (0..self.conn_dead.len()).filter(|&k| !self.conn_dead[k]).collect();
+        if survivors.is_empty() {
+            bail!("worker connection {conn} died and no workers survive: {}", gone.reason);
+        }
+        eprintln!(
+            "fedgraph: worker connection {conn} died ({}); re-assigning clients {dead:?} \
+             across {} survivor(s)",
+            gone.reason,
+            survivors.len()
+        );
         if !dead.is_empty() {
             // Deterministic spread: dead clients ascending, round-robin over
             // the surviving connections (ascending).
@@ -962,6 +1023,49 @@ impl<'m> Federation<'m> {
         self.recoveries += 1;
         self.reassigned_clients += dead.len() as u64;
         Ok(dead)
+    }
+
+    /// Poll the deployment's late-acceptor channel for up to the grace
+    /// window, looking for a redialed connection presenting dead connection
+    /// `conn`'s session token. Unrelated standbys arriving meanwhile are
+    /// parked in `pending_late` for the next round boundary. On a match the
+    /// new connection is registered, inherits the token (the old entry is
+    /// retired to 0 so it can never match twice), and its index is returned.
+    fn await_reconnect(&mut self, conn: usize) -> Result<Option<usize>> {
+        let token = match self.conn_tokens.get(conn) {
+            Some(&t) if t != 0 => t,
+            _ => return Ok(None),
+        };
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_millis(self.reconnect_grace_ms);
+        loop {
+            let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+            if remaining.is_zero() {
+                return Ok(None);
+            }
+            let received = match &self.late_rx {
+                Some(rx) => rx.recv_timeout(remaining),
+                None => return Ok(None),
+            };
+            match received {
+                Ok(lw) if lw.session == token => {
+                    let new_conn = self.coord.add_conn(lw.stream)?;
+                    if new_conn >= self.conn_dead.len() {
+                        self.conn_dead.resize(new_conn + 1, false);
+                    }
+                    if new_conn >= self.conn_tokens.len() {
+                        self.conn_tokens.resize(new_conn + 1, 0);
+                    }
+                    self.conn_tokens[new_conn] = token;
+                    self.conn_tokens[conn] = 0;
+                    return Ok(Some(new_conn));
+                }
+                Ok(lw) => self.pending_late.push(lw),
+                // Timeout, or the acceptor is gone — either way the window
+                // is over and this is a real death.
+                Err(_) => return Ok(None),
+            }
+        }
     }
 
     /// Clear the outstanding-order mark of any moved client whose completed
@@ -1085,18 +1189,31 @@ impl<'m> Federation<'m> {
     /// workers were admitted.
     pub fn admit_late_workers(&mut self) -> Result<usize> {
         let mut admitted = 0usize;
+        // Standbys buffered by a reconnect grace window go first — they have
+        // been waiting since before anything currently in the channel.
+        let mut parked: VecDeque<LateWorker> = self.pending_late.drain(..).collect();
         loop {
-            let lw = match &self.late_rx {
-                Some(rx) => match rx.try_recv() {
-                    Ok(lw) => lw,
-                    Err(_) => break,
+            let lw = match parked.pop_front() {
+                Some(lw) => lw,
+                None => match &self.late_rx {
+                    Some(rx) => match rx.try_recv() {
+                        Ok(lw) => lw,
+                        Err(_) => break,
+                    },
+                    None => break,
                 },
-                None => break,
             };
+            let session = lw.session;
             let conn = self.coord.add_conn(lw.stream)?;
             if conn >= self.conn_dead.len() {
                 self.conn_dead.resize(conn + 1, false);
             }
+            if conn >= self.conn_tokens.len() {
+                self.conn_tokens.resize(conn + 1, 0);
+            }
+            // Remember the joiner's token: if *this* connection later blips,
+            // the grace window recognizes its redial too.
+            self.conn_tokens[conn] = session;
             let mut counts = vec![0usize; self.conn_dead.len()];
             for &k in &self.assignment {
                 if k < counts.len() {
@@ -1682,7 +1799,15 @@ impl<'m> Federation<'m> {
             .iter()
             .map(|&p| {
                 let c = self.net().counter(p);
-                (p.code() as u32, c.bytes_up, c.bytes_down, c.wasted_bytes)
+                LedgerRow {
+                    phase: p.code() as u32,
+                    bytes_up: c.bytes_up,
+                    bytes_down: c.bytes_down,
+                    messages: c.messages,
+                    sim_secs: c.sim_secs,
+                    concurrent_secs: c.concurrent_secs,
+                    wasted_bytes: c.wasted_bytes,
+                }
             })
             .collect();
         RoundCheckpoint {
@@ -1706,6 +1831,24 @@ impl<'m> Federation<'m> {
                 .unwrap_or(super::checkpoint::PolicyCheckpoint::Sync),
             ledger,
         }
+    }
+
+    /// Write `ck` through the durable store, when one is configured
+    /// (`fault_tolerance.checkpoint_dir`). A failed write is fatal: the
+    /// session was asked to checkpoint durably and must not run on silently
+    /// without its safety net.
+    fn persist_checkpoint(&mut self, ck: &RoundCheckpoint) -> Result<()> {
+        let store = match self.store.as_mut() {
+            Some(s) => s,
+            None => return Ok(()),
+        };
+        let bytes = store
+            .persist(ck)
+            .map_err(|e| anyhow!("persisting round-{} checkpoint: {e}", ck.round))?;
+        self.checkpoint_writes += 1;
+        self.checkpoint_bytes += bytes;
+        self.last_persisted_round = Some(ck.round);
+        Ok(())
     }
 
     /// The most recent round-boundary snapshot, when
@@ -1765,6 +1908,26 @@ impl<'m> Federation<'m> {
             }
         }
         fed.client_rng = ck.client_rng.clone();
+        // Re-seed the SimNet ledger from the snapshot rows. They are
+        // *absolute* counter values at snapshot time — the original run's
+        // pretrain charges included — and the rebuilt session just re-charged
+        // an identical pretrain, so the restore overwrites wholesale and the
+        // resumed ledger continues exactly where the interrupted one stood.
+        for row in &ck.ledger {
+            if let Some(p) = Phase::from_code(row.phase as u8) {
+                fed.net().restore_counter(
+                    p,
+                    PhaseCounter {
+                        bytes_up: row.bytes_up,
+                        bytes_down: row.bytes_down,
+                        messages: row.messages,
+                        sim_secs: row.sim_secs,
+                        concurrent_secs: row.concurrent_secs,
+                        wasted_bytes: row.wasted_bytes,
+                    },
+                );
+            }
+        }
         let f: crate::transport::link::Frame =
             encode_set_model(ck.round, ck.version, &ck.params).into();
         let retain: Option<Arc<Vec<Vec<f32>>>> = if fed.assignment.is_empty() {
@@ -1866,10 +2029,18 @@ impl<'m> Federation<'m> {
             }
         }
         // Recovery telemetry for the report's `recovery` section.
-        if self.recoveries > 0 || self.late_joins > 0 {
+        if self.recoveries > 0 || self.late_joins > 0 || self.reconnects > 0 {
             self.monitor.note("recoveries", self.recoveries);
             self.monitor.note("reassigned_clients", self.reassigned_clients);
             self.monitor.note("late_joins", self.late_joins);
+            self.monitor.note("reconnects", self.reconnects);
+        }
+        if self.checkpoint_writes > 0 {
+            self.monitor.note("checkpoint_writes", self.checkpoint_writes);
+            self.monitor.note("checkpoint_bytes", self.checkpoint_bytes);
+            if let Some(r) = self.last_persisted_round {
+                self.monitor.note("last_persisted_round", r);
+            }
         }
         for h in self.threads.drain(..) {
             let _ = h.join();

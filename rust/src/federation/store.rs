@@ -1,0 +1,370 @@
+//! Durable checkpoint persistence (PR 10).
+//!
+//! [`checkpoint::RoundCheckpoint`] makes the coordinator *resumable in
+//! principle*; this module makes it resumable *across process death*. A
+//! [`CheckpointStore`] owns a durable home for encoded checkpoints, and the
+//! file backend ([`FileCheckpointStore`]) commits each snapshot with the
+//! classic atomic-write dance:
+//!
+//! 1. write the encoded bytes to a dot-prefixed temp file in the same
+//!    directory,
+//! 2. `fsync` the temp file,
+//! 3. `rename` it over the final `ck-<round>.fgcp` name (atomic on POSIX),
+//! 4. `fsync` the directory so the rename itself is durable.
+//!
+//! A crash at any point leaves either the previous checkpoint set intact or
+//! a stray `.tmp` file that every reader ignores — never a half-written
+//! `ck-*.fgcp`. Retention is bounded: after each persist at most `keep`
+//! checkpoint files survive (newest kept, oldest pruned), so a long run
+//! cannot fill the disk.
+//!
+//! [`FileCheckpointStore::load_latest_valid`] walks the directory newest
+//! round first and returns the first checkpoint that decodes cleanly.
+//! Truncated or bit-flipped files — the codec rejects both with typed
+//! [`WireError`]s — are *skipped*, not fatal: each skip is reported back to
+//! the caller so the coordinator can ledger a warning, and only when **no**
+//! file decodes does the load fail, with a typed
+//! [`StoreError::NoValidCheckpoint`]. Nothing in this module panics on bad
+//! bytes.
+//!
+//! Wiring: `fault_tolerance.checkpoint_dir` / `--checkpoint-dir` attach a
+//! file store to the coordinator (snapshots persist at every
+//! `checkpoint_every` boundary), and `fedgraph run --resume <dir>` boots a
+//! fresh coordinator process from the newest valid snapshot via
+//! `Federation::spawn_restored`. See `docs/FAULT_TOLERANCE.md` §4.
+//!
+//! [`checkpoint::RoundCheckpoint`]: crate::federation::checkpoint::RoundCheckpoint
+//! [`WireError`]: crate::transport::serialize::WireError
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::federation::checkpoint::RoundCheckpoint;
+
+/// Default retention bound for coordinator-attached stores: a resume needs
+/// only the newest valid file, and the extras are headroom against a torn
+/// newest write.
+pub const DEFAULT_KEEP: usize = 4;
+
+/// Filename of the checkpoint written after `round`. Rounds are zero-padded
+/// so lexicographic directory order equals numeric round order.
+fn checkpoint_file_name(round: u32) -> String {
+    format!("ck-{round:010}.fgcp")
+}
+
+/// Parse `ck-<round>.fgcp` back to its round. `None` for anything else —
+/// temp files, editor droppings, unrelated names — which readers ignore.
+fn parse_checkpoint_name(name: &str) -> Option<u32> {
+    let digits = name.strip_prefix("ck-")?.strip_suffix(".fgcp")?;
+    if digits.len() != 10 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Typed failures of a checkpoint store. I/O errors carry the path they
+/// struck; an empty-or-all-corrupt directory is its own variant so the
+/// resume path can distinguish "nothing to resume" from "disk is broken".
+#[derive(Debug)]
+pub enum StoreError {
+    /// An OS-level read/write/rename/fsync failed.
+    Io { path: PathBuf, source: std::io::Error },
+    /// The store root exists but is not a directory.
+    NotADirectory { path: PathBuf },
+    /// No file in the directory decoded to a valid checkpoint. `skipped`
+    /// lists every candidate that was tried and why it was rejected.
+    NoValidCheckpoint { dir: PathBuf, skipped: Vec<SkippedFile> },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io { path, source } => {
+                write!(f, "checkpoint store I/O error at {}: {source}", path.display())
+            }
+            StoreError::NotADirectory { path } => {
+                write!(f, "checkpoint store path {} is not a directory", path.display())
+            }
+            StoreError::NoValidCheckpoint { dir, skipped } => {
+                write!(
+                    f,
+                    "no valid checkpoint in {} ({} candidate file(s) rejected)",
+                    dir.display(),
+                    skipped.len()
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// One rejected candidate file from a [`CheckpointStore::load_latest_valid`]
+/// scan: the path and a human-readable reason (typed `WireError` display, or
+/// the I/O error that prevented reading it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SkippedFile {
+    pub path: PathBuf,
+    pub reason: String,
+}
+
+/// A successfully loaded checkpoint plus the scan's skip ledger.
+#[derive(Debug)]
+pub struct LoadedCheckpoint {
+    pub checkpoint: RoundCheckpoint,
+    /// The file the checkpoint came from.
+    pub path: PathBuf,
+    /// Newer-named files that failed to decode and were skipped. The caller
+    /// is expected to surface these as warnings — a corrupt newest
+    /// checkpoint silently falling back to an older one must be visible.
+    pub skipped: Vec<SkippedFile>,
+}
+
+/// A durable home for round checkpoints. Object-safe so the federation
+/// runtime can hold `Box<dyn CheckpointStore>` without caring whether the
+/// backend is a directory, a test double, or something network-backed.
+pub trait CheckpointStore: Send {
+    /// Durably commit one checkpoint. Returns the encoded byte size on
+    /// success. Must be atomic: a crash mid-persist leaves previously
+    /// committed checkpoints readable.
+    fn persist(&mut self, ck: &RoundCheckpoint) -> Result<u64, StoreError>;
+
+    /// Load the newest checkpoint that decodes cleanly, skipping (and
+    /// reporting) corrupt or truncated files.
+    fn load_latest_valid(&self) -> Result<LoadedCheckpoint, StoreError>;
+}
+
+/// The file backend: one directory, one `ck-<round>.fgcp` file per
+/// persisted round, at most `keep` files retained.
+pub struct FileCheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl FileCheckpointStore {
+    /// Open (creating if needed) a checkpoint directory. `keep` bounds
+    /// retention and is clamped to at least 1 — a store that retains zero
+    /// checkpoints cannot serve its purpose.
+    pub fn open(dir: impl Into<PathBuf>, keep: usize) -> Result<FileCheckpointStore, StoreError> {
+        let dir = dir.into();
+        if dir.exists() && !dir.is_dir() {
+            return Err(StoreError::NotADirectory { path: dir });
+        }
+        fs::create_dir_all(&dir).map_err(|source| StoreError::Io { path: dir.clone(), source })?;
+        Ok(FileCheckpointStore { dir, keep: keep.max(1) })
+    }
+
+    /// The directory backing this store.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// All committed checkpoint files, newest round first. Non-checkpoint
+    /// names (including `.tmp` leftovers from an interrupted persist) are
+    /// excluded.
+    fn committed_files(&self) -> Result<Vec<(u32, PathBuf)>, StoreError> {
+        let entries = fs::read_dir(&self.dir)
+            .map_err(|source| StoreError::Io { path: self.dir.clone(), source })?;
+        let mut files = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|source| StoreError::Io { path: self.dir.clone(), source })?;
+            let name = entry.file_name();
+            if let Some(round) = name.to_str().and_then(parse_checkpoint_name) {
+                files.push((round, entry.path()));
+            }
+        }
+        // Newest first; equal rounds (should not happen) tie-break on path
+        // so the order is still deterministic.
+        files.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| b.1.cmp(&a.1)));
+        Ok(files)
+    }
+
+    /// Delete everything beyond the newest `keep` committed files. Prune
+    /// failures on individual files are ignored — retention is advisory,
+    /// and a file that cannot be deleted now will be retried next persist.
+    fn prune(&self) -> Result<(), StoreError> {
+        let files = self.committed_files()?;
+        for (_, path) in files.into_iter().skip(self.keep) {
+            let _ = fs::remove_file(path);
+        }
+        Ok(())
+    }
+}
+
+impl CheckpointStore for FileCheckpointStore {
+    fn persist(&mut self, ck: &RoundCheckpoint) -> Result<u64, StoreError> {
+        let bytes = ck.encode_wire();
+        let final_path = self.dir.join(checkpoint_file_name(ck.round));
+        // Dot-prefixed so `parse_checkpoint_name` (and thus readers and
+        // retention) never see it; same directory so the rename cannot
+        // cross filesystems.
+        let tmp_path = self.dir.join(format!(".{}.tmp", checkpoint_file_name(ck.round)));
+        let io = |path: &Path, source| StoreError::Io { path: path.to_path_buf(), source };
+        {
+            let mut f = fs::File::create(&tmp_path).map_err(|e| io(&tmp_path, e))?;
+            f.write_all(&bytes).map_err(|e| io(&tmp_path, e))?;
+            f.sync_all().map_err(|e| io(&tmp_path, e))?;
+        }
+        fs::rename(&tmp_path, &final_path).map_err(|e| io(&final_path, e))?;
+        // Make the rename itself durable: fsync the directory. Some
+        // platforms refuse to sync a directory handle; that is a durability
+        // caveat, not a write failure, so it is non-fatal.
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.prune()?;
+        Ok(bytes.len() as u64)
+    }
+
+    fn load_latest_valid(&self) -> Result<LoadedCheckpoint, StoreError> {
+        let mut skipped = Vec::new();
+        for (_, path) in self.committed_files()? {
+            let raw = match fs::read(&path) {
+                Ok(raw) => raw,
+                Err(e) => {
+                    skipped.push(SkippedFile { path, reason: format!("unreadable: {e}") });
+                    continue;
+                }
+            };
+            match RoundCheckpoint::decode_wire(&raw) {
+                Ok(checkpoint) => return Ok(LoadedCheckpoint { checkpoint, path, skipped }),
+                Err(e) => {
+                    skipped.push(SkippedFile { path, reason: format!("rejected: {e:?}") });
+                }
+            }
+        }
+        Err(StoreError::NoValidCheckpoint { dir: self.dir.clone(), skipped })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::checkpoint::PolicyCheckpoint;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn temp_store_dir(tag: &str) -> PathBuf {
+        static UNIQ: AtomicU64 = AtomicU64::new(0);
+        let n = UNIQ.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!(
+            "fedgraph-store-{tag}-{}-{n}",
+            std::process::id()
+        ))
+    }
+
+    fn ck(round: u32) -> RoundCheckpoint {
+        RoundCheckpoint {
+            round,
+            version: round + 1,
+            params: vec![vec![round as f32, -1.5]],
+            last_sent_version: vec![round + 1, round],
+            pending_floor: vec![None, Some(round)],
+            bases: vec![],
+            assignment: vec![0, 0],
+            client_rng: vec![None, None],
+            residuals: vec![],
+            he_seed: None,
+            policy: PolicyCheckpoint::Sync,
+            ledger: vec![],
+        }
+    }
+
+    #[test]
+    fn persist_then_load_roundtrips_newest() {
+        let dir = temp_store_dir("roundtrip");
+        let mut store = FileCheckpointStore::open(&dir, 8).unwrap();
+        store.persist(&ck(2)).unwrap();
+        store.persist(&ck(5)).unwrap();
+        store.persist(&ck(3)).unwrap(); // out-of-order write: name wins, not mtime
+        let loaded = store.load_latest_valid().unwrap();
+        assert_eq!(loaded.checkpoint, ck(5));
+        assert!(loaded.skipped.is_empty());
+        assert_eq!(loaded.path.file_name().unwrap().to_str().unwrap(), "ck-0000000005.fgcp");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_newest_falls_back_with_skip_ledger() {
+        let dir = temp_store_dir("fallback");
+        let mut store = FileCheckpointStore::open(&dir, 8).unwrap();
+        store.persist(&ck(1)).unwrap();
+        store.persist(&ck(4)).unwrap();
+        // Truncate the newest file in place.
+        let newest = dir.join(checkpoint_file_name(4));
+        let raw = fs::read(&newest).unwrap();
+        fs::write(&newest, &raw[..raw.len() / 2]).unwrap();
+        let loaded = store.load_latest_valid().unwrap();
+        assert_eq!(loaded.checkpoint, ck(1));
+        assert_eq!(loaded.skipped.len(), 1);
+        assert_eq!(loaded.skipped[0].path, newest);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn all_corrupt_is_a_typed_error_not_a_panic() {
+        let dir = temp_store_dir("allbad");
+        let mut store = FileCheckpointStore::open(&dir, 8).unwrap();
+        store.persist(&ck(0)).unwrap();
+        fs::write(dir.join(checkpoint_file_name(0)), b"junk").unwrap();
+        match store.load_latest_valid() {
+            Err(StoreError::NoValidCheckpoint { skipped, .. }) => assert_eq!(skipped.len(), 1),
+            other => panic!("expected NoValidCheckpoint, got {other:?}"),
+        }
+        // An empty directory is the same typed error with an empty ledger.
+        fs::remove_file(dir.join(checkpoint_file_name(0))).unwrap();
+        match store.load_latest_valid() {
+            Err(StoreError::NoValidCheckpoint { skipped, .. }) => assert!(skipped.is_empty()),
+            other => panic!("expected NoValidCheckpoint, got {other:?}"),
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retention_keeps_only_the_newest_files() {
+        let dir = temp_store_dir("retention");
+        let mut store = FileCheckpointStore::open(&dir, 3).unwrap();
+        for round in 0..9 {
+            store.persist(&ck(round)).unwrap();
+        }
+        let names: Vec<u32> = store.committed_files().unwrap().into_iter().map(|(r, _)| r).collect();
+        assert_eq!(names, vec![8, 7, 6]);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn temp_and_foreign_files_are_invisible() {
+        let dir = temp_store_dir("foreign");
+        let mut store = FileCheckpointStore::open(&dir, 4).unwrap();
+        store.persist(&ck(6)).unwrap();
+        // A leftover temp file from an interrupted persist plus unrelated
+        // names: none of them count as candidates or against retention.
+        fs::write(dir.join(".ck-0000000009.fgcp.tmp"), b"partial").unwrap();
+        fs::write(dir.join("notes.txt"), b"hi").unwrap();
+        fs::write(dir.join("ck-12.fgcp"), b"unpadded").unwrap(); // wrong digit count
+        let loaded = store.load_latest_valid().unwrap();
+        assert_eq!(loaded.checkpoint, ck(6));
+        assert!(loaded.skipped.is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_refuses_a_file_path() {
+        let dir = temp_store_dir("notadir");
+        fs::write(&dir, b"file").unwrap();
+        match FileCheckpointStore::open(&dir, 2) {
+            Err(StoreError::NotADirectory { .. }) => {}
+            Err(other) => panic!("expected NotADirectory, got {other:?}"),
+            Ok(_) => panic!("expected NotADirectory, got a store"),
+        }
+        fs::remove_file(&dir).unwrap();
+    }
+}

@@ -34,6 +34,16 @@
 //! connects after launch (`fedgraph worker --connect` against a running
 //! coordinator) receives a standby `Assign` — empty slice — and waits in the
 //! same loop for its first `Reassign`.
+//!
+//! **Reconnect (protocol v7).** Losing the coordinator socket mid-session is
+//! *not* fatal: [`serve_elastic`] reports it as
+//! [`ServeOutcome::ConnectionLost`], and [`run_worker`] redials with the
+//! capped jittered backoff schedule from
+//! `federation.fault_tolerance.connect_retry_*`, re-handshaking with the
+//! session token the coordinator granted on the first `Assign`. A
+//! coordinator that sees a known token inside its `reconnect_grace_ms`
+//! window hands the worker its old slice back through the ordinary
+//! `Reassign` machinery — zero recoveries fired, bitwise-identical run.
 
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -71,6 +81,10 @@ pub struct WorkerAssignment {
     /// launch, carries no initial slice, and should wait for a mid-run
     /// `Reassign` instead of exiting on an empty assignment.
     pub standby: bool,
+    /// The session token the coordinator granted (protocol v7). Nonzero;
+    /// presented on reconnect so the coordinator can recognize this worker
+    /// and hand its slice back instead of firing a recovery.
+    pub session: u64,
     stream: TcpStream,
 }
 
@@ -104,9 +118,29 @@ pub struct BuildStats {
 /// when the session's `federation.compression` needs a capability the worker
 /// did not advertise).
 pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
-    let mut stream = tcp::connect_with_retry(addr, timeout)?;
+    let stream = tcp::connect_with_retry(addr, timeout)?;
+    handshake(stream, 0)
+}
+
+/// Re-dial a coordinator with an explicit backoff schedule and a previously
+/// granted session token (protocol v7 reconnect). `session = 0` is the fresh
+/// handshake; a nonzero token asks the coordinator to treat this connection
+/// as the same worker identity it already knows.
+pub fn connect_with_token(
+    addr: &str,
+    base: Duration,
+    cap: Duration,
+    budget: Duration,
+    session: u64,
+) -> Result<WorkerAssignment> {
+    let stream = tcp::connect_with_backoff(addr, base, cap, budget)?;
+    handshake(stream, session)
+}
+
+fn handshake(mut stream: TcpStream, session: u64) -> Result<WorkerAssignment> {
     let hello =
-        UpMsg::WorkerHello { version: PROTOCOL_VERSION, codecs: SUPPORTED_CODECS }.encode();
+        UpMsg::WorkerHello { version: PROTOCOL_VERSION, codecs: SUPPORTED_CODECS, session }
+            .encode();
     tcp::write_frame(&mut stream, CONTROL_LANE, &hello).context("sending WorkerHello")?;
     let (lane, payload) = match tcp::read_frame(&mut stream).context("awaiting Assign")? {
         tcp::ReadOutcome::Frame(lane, payload) => (lane, payload),
@@ -119,7 +153,7 @@ pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
         bail!("coordinator sent a non-control frame before Assign");
     }
     match DownMsg::decode(&payload).map_err(|e| anyhow!("Assign frame: {e}"))? {
-        DownMsg::Assign { n_total, clients, config, sent_at_ns: _, standby } => {
+        DownMsg::Assign { n_total, clients, config, sent_at_ns: _, standby, session } => {
             let cfg = FedGraphConfig::decode_wire(&config).context("decoding shipped config")?;
             Ok(WorkerAssignment {
                 cfg,
@@ -127,11 +161,26 @@ pub fn connect(addr: &str, timeout: Duration) -> Result<WorkerAssignment> {
                 clients: clients.into_iter().map(|c| c as usize).collect(),
                 assign_received_ns,
                 standby,
+                session,
                 stream,
             })
         }
         other => bail!("coordinator sent {other:?} instead of Assign"),
     }
+}
+
+/// How a serve loop ended — the coordinator finished the session, or the
+/// socket died and the worker should reconnect with its session token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// The coordinator ordered a worker-level `Stop`: the session is over
+    /// and the worker should exit 0.
+    Finished,
+    /// The control lane closed without a `Stop`: the connection was lost
+    /// mid-session. The caller may redial with [`connect_with_token`] and
+    /// serve again — the coordinator's reconnect grace window decides
+    /// whether the old slice comes back.
+    ConnectionLost,
 }
 
 /// Host the assigned slice of `build` over the handshaken connection until
@@ -148,7 +197,7 @@ pub fn serve(
     stats: BuildStats,
     obs: ObsSession,
 ) -> Result<()> {
-    serve_elastic(assignment, Some(build), staging_net, stats, obs, None)
+    serve_elastic(assignment, Some(build), staging_net, stats, obs, None).map(|_| ())
 }
 
 /// The elastic serve loop behind [`serve`]: hosts the initial slice (if any),
@@ -162,9 +211,11 @@ pub fn serve(
 /// without a `rebuild` factory (the thread-hosted test harness) serves its
 /// fixed slice and fails loudly if asked to adopt clients.
 ///
-/// The loop ends when the coordinator sends a control-lane `Stop` (normal
-/// shutdown, after every trainer acked its own per-lane `Stop`) or closes
-/// the connection.
+/// The loop ends when the coordinator sends a control-lane `Stop`
+/// ([`ServeOutcome::Finished`] — normal shutdown, after every trainer acked
+/// its own per-lane `Stop`) or closes the connection
+/// ([`ServeOutcome::ConnectionLost`] — the caller decides whether to
+/// reconnect).
 pub fn serve_elastic(
     assignment: WorkerAssignment,
     build: Option<SessionBuild>,
@@ -172,9 +223,16 @@ pub fn serve_elastic(
     stats: BuildStats,
     obs: ObsSession,
     rebuild: Option<Box<dyn Fn(&[usize]) -> Result<SessionBuild> + '_>>,
-) -> Result<()> {
-    let WorkerAssignment { cfg, n_total, clients, assign_received_ns, standby: _, stream } =
-        assignment;
+) -> Result<ServeOutcome> {
+    let WorkerAssignment {
+        cfg,
+        n_total,
+        clients,
+        assign_received_ns,
+        standby: _,
+        session: _,
+        stream,
+    } = assignment;
     let mut stream = stream;
     if let Some(b) = &build {
         if b.n_total != n_total {
@@ -257,10 +315,14 @@ pub fn serve_elastic(
     }
     // Control loop: runs until the coordinator orders a worker-level stop or
     // the connection closes (demux exit drops the channel sender).
+    let mut outcome = ServeOutcome::Finished;
     loop {
         let frame = match control_rx.recv() {
             Ok(f) => f,
-            Err(_) => break,
+            Err(_) => {
+                outcome = ServeOutcome::ConnectionLost;
+                break;
+            }
         };
         let msg = match DownMsg::decode(&frame) {
             Ok(m) => m,
@@ -332,31 +394,75 @@ pub fn serve_elastic(
         }
     }
     hb_stop.store(true, Ordering::Relaxed);
-    // Actors exit after acking Stop; their acks are already on the socket
-    // when we FIN it, so the coordinator drains them before the close.
+    // On a clean finish, actors exit after acking Stop; their acks are
+    // already on the socket when we FIN it, so the coordinator drains them
+    // before the close. When the connection died under the actors, their
+    // lanes failed abruptly — a panicked trainer is expected collateral, not
+    // a worker bug, so the reconnect path tolerates it.
+    if outcome == ServeOutcome::ConnectionLost {
+        let _ = stream.shutdown(Shutdown::Both);
+    }
     for h in threads {
-        h.join().map_err(|_| anyhow!("a worker trainer thread panicked"))?;
+        if h.join().is_err() && outcome == ServeOutcome::Finished {
+            return Err(anyhow!("a worker trainer thread panicked"));
+        }
     }
     let _ = stream.shutdown(Shutdown::Both);
     let _ = demux.join();
     if let Some(h) = heartbeat {
         let _ = h.join();
     }
-    Ok(())
+    Ok(outcome)
 }
 
 /// The full `fedgraph worker` entry: connect, rebuild **only the assigned
 /// slice** of the session from the shipped config, report the build cost,
 /// and serve until the coordinator finishes.
 ///
+/// Losing the coordinator socket mid-session does not kill the worker: it
+/// redials with the config's `connect_retry_*` backoff schedule, presenting
+/// the session token from its first `Assign`, and serves the (standby)
+/// re-assignment — the coordinator's grace window decides whether the old
+/// slice comes straight back. Only an exhausted reconnect budget (typed
+/// [`tcp::ConnectTimeout`]) or a session `Stop` ends the process.
+///
 /// `artifacts_override` replaces the shipped `artifacts_dir` (worker
 /// machines may mount artifacts elsewhere); `timeout` bounds the initial
 /// connect retries.
 pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duration) -> Result<()> {
     let mut assignment = connect(addr, timeout)?;
-    if let Some(dir) = artifacts_override {
-        assignment.cfg.artifacts_dir = dir.to_string();
+    loop {
+        if let Some(dir) = artifacts_override {
+            assignment.cfg.artifacts_dir = dir.to_string();
+        }
+        let session = assignment.session;
+        let ft = assignment.cfg.federation.fault_tolerance.clone();
+        match host_session(assignment)? {
+            ServeOutcome::Finished => {
+                eprintln!("fedgraph worker: session complete");
+                return Ok(());
+            }
+            ServeOutcome::ConnectionLost => {
+                eprintln!(
+                    "fedgraph worker: coordinator connection lost — reconnecting \
+                     (session {session:#x})"
+                );
+                assignment = connect_with_token(
+                    addr,
+                    Duration::from_millis(ft.connect_retry_base_ms),
+                    Duration::from_millis(ft.connect_retry_cap_ms),
+                    Duration::from_millis(ft.connect_retry_budget_ms),
+                    session,
+                )?;
+            }
+        }
     }
+}
+
+/// One connected session: build (or defer, for standbys), report, serve.
+/// Returns how the serve loop ended so [`run_worker`] can decide between
+/// exiting and reconnecting.
+fn host_session(assignment: WorkerAssignment) -> Result<ServeOutcome> {
     eprintln!(
         "fedgraph worker: assigned clients {:?} of {} ({} / {} on {})",
         assignment.clients,
@@ -382,7 +488,7 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
         tcp::write_frame(&mut stream, CONTROL_LANE, &report.encode())
             .context("sending empty BuildReport")?;
         let _ = assignment.stream.shutdown(Shutdown::Both);
-        return Ok(());
+        return Ok(ServeOutcome::Finished);
     }
     // This process's observation plane. Installed before the session build so
     // the build span lands on the worker's own timeline; first-wins keeps a
@@ -449,7 +555,5 @@ pub fn run_worker(addr: &str, artifacts_override: Option<&str>, timeout: Duratio
     };
     engine.shutdown();
     trace::uninstall(&recorder);
-    result?;
-    eprintln!("fedgraph worker: session complete");
-    Ok(())
+    result
 }

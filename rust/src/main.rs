@@ -25,6 +25,7 @@ fn main() -> ExitCode {
     match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
         Some("worker") => cmd_worker(&args[1..]),
+        Some("launch") => cmd_launch(&args[1..]),
         Some("list") => cmd_list(),
         Some("artifacts") => cmd_artifacts(&args[1..]),
         Some("--help") | Some("-h") | None => {
@@ -53,7 +54,8 @@ fn print_help() {
          \x20     [--mode sync|async] [--max-staleness N] [--buffer-size N]\n\
          \x20     [--agg-shards N]\n\
          \x20     [--heartbeat-ms MS] [--worker-timeout-ms MS]\n\
-         \x20     [--checkpoint-every N]\n\
+         \x20     [--checkpoint-every N] [--checkpoint-dir DIR]\n\
+         \x20     [--reconnect-grace-ms MS] [--resume DIR]\n\
          \x20     [--transport channel|tcp] [--listen-addr HOST:PORT]\n\
          \x20     [--workers W]\n\
          \x20     [--compression none|pack|quantized] [--quantized-bits 4|8]\n\
@@ -80,13 +82,26 @@ fn print_help() {
          \x20     detection (timeout 0 disables it); a crashed worker's\n\
          \x20     clients are re-assigned to survivors and the round resumes\n\
          \x20     (sync runs stay bitwise-identical). --checkpoint-every N\n\
-         \x20     snapshots coordinator state every N rounds (0 = off); see\n\
-         \x20     docs/FAULT_TOLERANCE.md.\n\
+         \x20     snapshots coordinator state every N rounds (0 = off);\n\
+         \x20     --checkpoint-dir DIR persists each snapshot durably and\n\
+         \x20     --resume DIR boots a fresh coordinator from the newest\n\
+         \x20     valid snapshot in DIR; --reconnect-grace-ms MS holds\n\
+         \x20     recovery while a disconnected worker redials with its\n\
+         \x20     session token; see docs/FAULT_TOLERANCE.md.\n\
          \x20 worker --connect <host:port> [--artifacts DIR] [--timeout-secs S]\n\
          \x20     host trainer actors for a tcp-transport coordinator: the\n\
          \x20     worker receives its client assignment + config over the\n\
          \x20     socket, rebuilds the session deterministically, and exits 0\n\
-         \x20     when the coordinator finishes the run\n\
+         \x20     when the coordinator finishes the run; a lost coordinator\n\
+         \x20     socket triggers reconnect with backoff, not an exit\n\
+         \x20 launch --workers W [--listen-addr HOST:PORT] [--max-restarts K]\n\
+         \x20        [--compose <out.yaml>] <run flags...>\n\
+         \x20     supervise a whole local deployment: spawn one tcp\n\
+         \x20     coordinator (`run <run flags>`) plus W worker processes,\n\
+         \x20     monitor them, and respawn dead workers as standbys (at most\n\
+         \x20     K restarts, default 5). --compose writes a compose-style\n\
+         \x20     manifest for the equivalent multi-machine deployment\n\
+         \x20     instead of launching anything; see docs/DEPLOYMENT.md\n\
          \x20 list       supported task/method/dataset matrix\n\
          \x20 artifacts  show the artifact manifest"
     );
@@ -109,6 +124,221 @@ fn cmd_worker(args: &[String]) -> ExitCode {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("worker failed: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// `fedgraph launch`: the supervising launcher. Spawns one TCP coordinator
+/// (`fedgraph run <passthrough flags>`) plus `--workers` local worker
+/// processes, then babysits the fleet: a worker that dies mid-run is
+/// respawned as a standby (the coordinator re-slices it in through the
+/// elastic `Reassign` machinery), bounded by `--max-restarts`. The
+/// supervisor's exit code is the coordinator's. With `--compose <path>` it
+/// writes a compose-style manifest for the equivalent multi-machine
+/// deployment instead of launching anything.
+fn cmd_launch(args: &[String]) -> ExitCode {
+    let workers: usize = match flag_value(args, "--workers").map(|v| v.parse::<usize>()) {
+        Some(Ok(w)) if w > 0 => w,
+        Some(_) => {
+            eprintln!("launch needs --workers W with W >= 1");
+            return ExitCode::FAILURE;
+        }
+        None => 2,
+    };
+    let addr = flag_value(args, "--listen-addr").unwrap_or("127.0.0.1:8471").to_string();
+    let max_restarts: usize =
+        flag_value(args, "--max-restarts").and_then(|v| v.parse().ok()).unwrap_or(5);
+    let run_args = passthrough_run_args(args);
+    if let Some(path) = flag_value(args, "--compose") {
+        return write_compose_manifest(path, workers, &addr, &run_args);
+    }
+    let exe = match std::env::current_exe() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot resolve the fedgraph binary path: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let spawn_worker = |k: usize| -> std::io::Result<std::process::Child> {
+        let ch = std::process::Command::new(&exe)
+            .args(["worker", "--connect", &addr])
+            .spawn()?;
+        eprintln!("fedgraph launch: worker {k} is pid {}", ch.id());
+        Ok(ch)
+    };
+    let mut coordinator = {
+        let mut c = std::process::Command::new(&exe);
+        c.arg("run").args(&run_args).args([
+            "--transport",
+            "tcp",
+            "--listen-addr",
+            &addr,
+            "--workers",
+            &workers.to_string(),
+        ]);
+        match c.spawn() {
+            Ok(ch) => ch,
+            Err(e) => {
+                eprintln!("cannot spawn the coordinator: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    };
+    eprintln!(
+        "fedgraph launch: coordinator is pid {} on {addr}; spawning {workers} worker(s)",
+        coordinator.id()
+    );
+    let mut kids: Vec<Option<std::process::Child>> = Vec::with_capacity(workers);
+    for k in 0..workers {
+        match spawn_worker(k) {
+            Ok(ch) => kids.push(Some(ch)),
+            Err(e) => {
+                eprintln!("cannot spawn worker {k}: {e}");
+                let _ = coordinator.kill();
+                let _ = coordinator.wait();
+                kill_workers(&mut kids);
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let mut restarts = 0usize;
+    // Supervision loop: poll the fleet until the coordinator exits.
+    let status = loop {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        match coordinator.try_wait() {
+            Ok(Some(status)) => break status,
+            Ok(None) => {}
+            Err(e) => {
+                eprintln!("cannot poll the coordinator: {e}");
+                let _ = coordinator.kill();
+                let _ = coordinator.wait();
+                kill_workers(&mut kids);
+                return ExitCode::FAILURE;
+            }
+        }
+        for (k, slot) in kids.iter_mut().enumerate() {
+            let exited = match slot {
+                Some(ch) => matches!(ch.try_wait(), Ok(Some(_))),
+                None => false,
+            };
+            if !exited {
+                continue;
+            }
+            *slot = None;
+            if restarts < max_restarts {
+                restarts += 1;
+                eprintln!(
+                    "fedgraph launch: worker {k} exited mid-run; respawning as a standby \
+                     (restart {restarts}/{max_restarts})"
+                );
+                match spawn_worker(k) {
+                    Ok(ch) => *slot = Some(ch),
+                    Err(e) => eprintln!("cannot respawn worker {k}: {e}"),
+                }
+            } else {
+                eprintln!(
+                    "fedgraph launch: worker {k} exited and the restart budget is spent; \
+                     relying on coordinator-side recovery"
+                );
+            }
+        }
+    };
+    // The coordinator's final Stop lets live workers drain and exit 0 on
+    // their own; give them a grace period before force-killing stragglers
+    // (e.g. a just-respawned standby still inside its connect backoff).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    for slot in kids.iter_mut() {
+        if let Some(ch) = slot {
+            loop {
+                match ch.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if std::time::Instant::now() < deadline => {
+                        std::thread::sleep(std::time::Duration::from_millis(50))
+                    }
+                    _ => {
+                        let _ = ch.kill();
+                        let _ = ch.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    if status.success() {
+        eprintln!("fedgraph launch: coordinator finished cleanly ({restarts} worker restart(s))");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("fedgraph launch: coordinator exited with {status}");
+        ExitCode::FAILURE
+    }
+}
+
+fn kill_workers(kids: &mut Vec<Option<std::process::Child>>) {
+    for slot in kids.iter_mut() {
+        if let Some(ch) = slot {
+            let _ = ch.kill();
+            let _ = ch.wait();
+        }
+        *slot = None;
+    }
+}
+
+/// Everything after `launch` that belongs to the child `run` command: the
+/// supervisor's own flags — and the deployment flags it owns — removed.
+fn passthrough_run_args(args: &[String]) -> Vec<String> {
+    const OWNED: [&str; 5] =
+        ["--workers", "--listen-addr", "--max-restarts", "--compose", "--transport"];
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        if OWNED.contains(&args[i].as_str()) {
+            i += 2; // skip the flag and its value
+        } else {
+            out.push(args[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `launch --compose <path>`: emit a compose-style manifest describing the
+/// same deployment as services — one coordinator plus worker replicas — for
+/// multi-machine runs where a single local supervisor cannot reach.
+fn write_compose_manifest(
+    path: &str,
+    workers: usize,
+    addr: &str,
+    run_args: &[String],
+) -> ExitCode {
+    let run_line = run_args.join(" ");
+    let sp = if run_line.is_empty() { "" } else { " " };
+    let mut out = String::new();
+    out.push_str("# Generated by `fedgraph launch --compose`.\n");
+    out.push_str("# One coordinator plus worker replicas; point workers at the\n");
+    out.push_str("# coordinator's address and spread the worker services across hosts.\n");
+    out.push_str("# Worker restart policy mirrors the local supervisor: a dead worker\n");
+    out.push_str("# comes back as a standby and is re-sliced in at a round boundary.\n");
+    out.push_str("services:\n");
+    out.push_str("  coordinator:\n");
+    out.push_str(&format!(
+        "    command: fedgraph run {run_line}{sp}--transport tcp --listen-addr {addr} \
+         --workers {workers}\n"
+    ));
+    out.push_str("    restart: \"no\"\n");
+    for k in 0..workers {
+        out.push_str(&format!("  worker-{k}:\n"));
+        out.push_str(&format!("    command: fedgraph worker --connect {addr}\n"));
+        out.push_str("    restart: on-failure\n");
+        out.push_str("    depends_on: [coordinator]\n");
+    }
+    match std::fs::write(path, out) {
+        Ok(()) => {
+            println!("compose manifest written to {path}");
+            ExitCode::SUCCESS
+        }
+        Err(e) => {
+            eprintln!("cannot write {path}: {e}");
             ExitCode::FAILURE
         }
     }
@@ -257,6 +487,15 @@ fn build_config(args: &[String]) -> anyhow::Result<FedGraphConfig> {
     }
     if let Some(v) = flag_value(args, "--checkpoint-every") {
         cfg.federation.fault_tolerance.checkpoint_every = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--checkpoint-dir") {
+        cfg.federation.fault_tolerance.checkpoint_dir = v.to_string();
+    }
+    if let Some(v) = flag_value(args, "--reconnect-grace-ms") {
+        cfg.federation.fault_tolerance.reconnect_grace_ms = v.parse()?;
+    }
+    if let Some(v) = flag_value(args, "--resume") {
+        cfg.extras.insert("resume".to_string(), v.to_string());
     }
     if let Some(v) = flag_value(args, "--transport") {
         cfg.federation.transport = TransportKind::parse(v)?;

@@ -87,6 +87,17 @@ pub struct Report {
     pub reassigned_clients: u64,
     /// Standby workers admitted at a round boundary after launch.
     pub late_joins: u64,
+    /// Severed workers that re-handshook with their session token inside the
+    /// reconnect grace window and reclaimed their slice without a recovery.
+    pub reconnects: u64,
+    /// Round checkpoints persisted to the durable store (0 without
+    /// `fault_tolerance.checkpoint_dir`).
+    pub checkpoint_writes: u64,
+    /// Total bytes the durable checkpoint store committed.
+    pub checkpoint_bytes: u64,
+    /// Highest round with a durably persisted checkpoint, or `None` when no
+    /// write happened — the round `--resume` would restart after.
+    pub last_persisted_round: Option<u64>,
 }
 
 impl Report {
@@ -149,6 +160,15 @@ impl Report {
             recoveries: note_u64("recoveries"),
             reassigned_clients: note_u64("reassigned_clients"),
             late_joins: note_u64("late_joins"),
+            reconnects: note_u64("reconnects"),
+            checkpoint_writes: note_u64("checkpoint_writes"),
+            checkpoint_bytes: note_u64("checkpoint_bytes"),
+            last_persisted_round: m
+                .notes()
+                .iter()
+                .rev()
+                .find(|(k, _)| k == "last_persisted_round")
+                .and_then(|(_, v)| v.parse().ok()),
         }
     }
 
@@ -300,10 +320,21 @@ impl Report {
                 fmt_bytes(self.train_wasted_bytes)
             ));
         }
-        if self.recoveries > 0 || self.late_joins > 0 {
+        if self.recoveries > 0 || self.late_joins > 0 || self.reconnects > 0 {
             out.push_str(&format!(
-                "fault tolerance: {} recoveries, {} clients re-assigned, {} late joins\n",
-                self.recoveries, self.reassigned_clients, self.late_joins
+                "fault tolerance: {} recoveries, {} clients re-assigned, {} late joins, \
+                 {} reconnects\n",
+                self.recoveries, self.reassigned_clients, self.late_joins, self.reconnects
+            ));
+        }
+        if self.checkpoint_writes > 0 {
+            out.push_str(&format!(
+                "durable checkpoints: {} written ({}), last persisted round {}\n",
+                self.checkpoint_writes,
+                fmt_bytes(self.checkpoint_bytes),
+                self.last_persisted_round
+                    .map(|r| r.to_string())
+                    .unwrap_or_else(|| "-".into())
             ));
         }
         if self.session_clients > 0 {
@@ -500,6 +531,16 @@ impl Report {
                     ("recoveries", (self.recoveries as usize).into()),
                     ("reassigned_clients", (self.reassigned_clients as usize).into()),
                     ("late_joins", (self.late_joins as usize).into()),
+                    ("reconnects", (self.reconnects as usize).into()),
+                    ("checkpoint_writes", (self.checkpoint_writes as usize).into()),
+                    ("checkpoint_bytes", (self.checkpoint_bytes as usize).into()),
+                    (
+                        "last_persisted_round",
+                        match self.last_persisted_round {
+                            Some(r) => (r as usize).into(),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
             ("rounds", rounds),
@@ -645,11 +686,33 @@ mod tests {
             Json::Obj(v) => assert!(v.is_empty(), "no processes streamed metrics"),
             other => panic!("worker_metrics must be an object, got {other:?}"),
         }
-        // Undisturbed runs still carry the recovery section, zeroed.
+        // Undisturbed runs still carry the recovery section, zeroed — the
+        // durable-orchestration keys included (null last round: no write).
         let rec = parsed.get("recovery");
         assert_eq!(rec.get("recoveries").as_f64(), Some(0.0));
         assert_eq!(rec.get("reassigned_clients").as_f64(), Some(0.0));
         assert_eq!(rec.get("late_joins").as_f64(), Some(0.0));
+        assert_eq!(rec.get("reconnects").as_f64(), Some(0.0));
+        assert_eq!(rec.get("checkpoint_writes").as_f64(), Some(0.0));
+        assert_eq!(rec.get("checkpoint_bytes").as_f64(), Some(0.0));
+        assert_eq!(rec.get("last_persisted_round"), &Json::Null);
+        let rec_keys: Vec<&str> = match rec {
+            Json::Obj(fields) => fields.iter().map(|(k, _)| k.as_str()).collect(),
+            other => panic!("recovery must be an object, got {other:?}"),
+        };
+        assert_eq!(
+            rec_keys,
+            vec![
+                "checkpoint_bytes",
+                "checkpoint_writes",
+                "last_persisted_round",
+                "late_joins",
+                "reassigned_clients",
+                "reconnects",
+                "recoveries",
+            ],
+            "recovery section schema drifted"
+        );
 
         // Traced/multi-process shape: one absorbed obs block fills both
         // sections with their fixed per-entry keys.
@@ -699,15 +762,33 @@ mod tests {
         m.note("recoveries", 1u64);
         m.note("reassigned_clients", 3u64);
         m.note("late_joins", 1u64);
+        m.note("reconnects", 2u64);
+        m.note("checkpoint_writes", 5u64);
+        m.note("checkpoint_bytes", 40_960u64);
+        m.note("last_persisted_round", 9u64);
         let r = Report::from_monitor(&m);
         assert_eq!((r.recoveries, r.reassigned_clients, r.late_joins), (1, 3, 1));
+        assert_eq!((r.reconnects, r.checkpoint_writes, r.checkpoint_bytes), (2, 5, 40_960));
+        assert_eq!(r.last_persisted_round, Some(9));
         let text = r.render();
         assert!(
-            text.contains("fault tolerance: 1 recoveries, 3 clients re-assigned, 1 late joins"),
+            text.contains(
+                "fault tolerance: 1 recoveries, 3 clients re-assigned, 1 late joins, \
+                 2 reconnects"
+            ),
             "recovery line renders:\n{text}"
         );
+        assert!(
+            text.contains("durable checkpoints: 5 written"),
+            "checkpoint line renders:\n{text}"
+        );
+        assert!(text.contains("last persisted round 9"), "persisted round renders:\n{text}");
         let j = Json::parse(&r.to_json().to_string_pretty()).unwrap();
         assert_eq!(j.get("recovery").get("reassigned_clients").as_f64(), Some(3.0));
+        assert_eq!(j.get("recovery").get("reconnects").as_f64(), Some(2.0));
+        assert_eq!(j.get("recovery").get("checkpoint_writes").as_f64(), Some(5.0));
+        assert_eq!(j.get("recovery").get("checkpoint_bytes").as_f64(), Some(40_960.0));
+        assert_eq!(j.get("recovery").get("last_persisted_round").as_f64(), Some(9.0));
     }
 
     #[test]

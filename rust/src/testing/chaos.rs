@@ -39,8 +39,15 @@ pub enum FaultAction {
     /// socket... The frame that triggered the point still proceeds; the
     /// death surfaces through the transport exactly as a real crash would.
     Kill(Box<dyn FnMut() + Send>),
+    /// Run the sever closure: cut the worker's *connection* (e.g.
+    /// `TcpStream::shutdown` on a cloned handle) while its process stays
+    /// alive. To the coordinator this looks identical to a crash at first —
+    /// EOF on the lane — but the worker survives to redial with its session
+    /// token, which is exactly what the reconnect grace window exists for.
+    Sever(Box<dyn FnMut() + Send>),
     /// Stall this long before the frame proceeds (latency injection — a
-    /// long enough stall trips the coordinator's liveness window).
+    /// long enough stall trips the coordinator's liveness window; scripted
+    /// past `heartbeat_ms` it simulates frames delayed beyond the pulse).
     DelayMs(u64),
     /// Lose the frame: a send returns `Ok` without transmitting, a receive
     /// skips the frame and waits for the next one.
@@ -70,6 +77,13 @@ impl FaultPlan {
         self
     }
 
+    /// Script a connection cut at `at` — the process behind it stays alive
+    /// (and typically redials; see [`FaultAction::Sever`]).
+    pub fn sever_at(mut self, at: FaultPoint, sever: impl FnMut() + Send + 'static) -> FaultPlan {
+        self.faults.push(Fault { at, action: FaultAction::Sever(Box::new(sever)), fired: false });
+        self
+    }
+
     /// Script a stall of `ms` milliseconds at `at`.
     pub fn delay_at(mut self, at: FaultPoint, ms: u64) -> FaultPlan {
         self.faults.push(Fault { at, action: FaultAction::DelayMs(ms), fired: false });
@@ -93,6 +107,7 @@ impl FaultPlan {
             f.fired = true;
             match &mut f.action {
                 FaultAction::Kill(k) => k(),
+                FaultAction::Sever(s) => s(),
                 FaultAction::DelayMs(ms) => {
                     std::thread::sleep(std::time::Duration::from_millis(*ms))
                 }

@@ -381,6 +381,17 @@ impl SimNet {
         st.phase_mut(phase).clone()
     }
 
+    /// Overwrite one phase's counters wholesale. The resume path
+    /// (`Federation::spawn_restored`) re-seeds the ledger from a
+    /// `RoundCheckpoint` row *after* the deterministic session rebuild
+    /// re-charged its pre-train traffic, so a resumed run's counters
+    /// continue bitwise from the snapshot instead of double-counting the
+    /// rebuild or losing the snapshotted rounds.
+    pub fn restore_counter(&self, phase: Phase, counter: PhaseCounter) {
+        let mut st = self.state.lock().unwrap();
+        *st.phase_mut(phase) = counter;
+    }
+
     /// Total bytes in both directions across all phases.
     pub fn total_bytes(&self) -> u64 {
         let st = self.state.lock().unwrap();

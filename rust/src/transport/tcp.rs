@@ -180,15 +180,58 @@ pub fn read_frame(r: &mut impl Read) -> Result<ReadOutcome> {
     Ok(ReadOutcome::Frame(client, payload))
 }
 
+/// The connect retry budget ran out without reaching a listener. Typed (and
+/// carried inside the `anyhow` chain) so callers — and the worker's
+/// regression tests — can distinguish "coordinator never appeared" from
+/// handshake failures.
+#[derive(Debug, Clone)]
+pub struct ConnectTimeout {
+    pub addr: String,
+    pub attempts: u32,
+    pub last_error: String,
+}
+
+impl std::fmt::Display for ConnectTimeout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cannot connect to coordinator at {} after {} attempt(s): {}",
+            self.addr, self.attempts, self.last_error
+        )
+    }
+}
+
+impl std::error::Error for ConnectTimeout {}
+
 /// Connect with retries (the coordinator may not have bound its listener yet
-/// when a worker starts — normal in multi-process launches). Retries back
-/// off exponentially — 100 ms doubling to a 2 s cap — so a worker waiting
-/// out a slow coordinator start doesn't hammer the listener, while the
-/// overall wait stays bounded by `timeout`.
-pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
-    let deadline = Instant::now() + timeout;
-    let mut backoff = Duration::from_millis(100);
+/// when a worker starts — normal in multi-process launches; this also
+/// covers the worker-before-coordinator `ECONNREFUSED` race). Retries back
+/// off exponentially from `base` doubling to the `cap`, with ±25 % jitter
+/// so a respawned worker fleet doesn't stampede the listener in lockstep,
+/// while the overall wait stays bounded by `budget`. Running out of budget
+/// returns a typed [`ConnectTimeout`] inside the error chain.
+pub fn connect_with_backoff(
+    addr: &str,
+    base: Duration,
+    cap: Duration,
+    budget: Duration,
+) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    let mut backoff = base.max(Duration::from_millis(1));
+    let cap = cap.max(backoff);
+    let mut attempts = 0u32;
+    // Jitter stream: seeded per (process, address), so parallel workers and
+    // successive respawns of the same worker each walk different schedules.
+    let addr_hash = addr.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+    });
+    let mut jitter = crate::util::rng::Rng::seeded(crate::util::rng::hash_u64(
+        std::process::id() as u64,
+        addr_hash,
+        0xBACC_0FF,
+    ));
     loop {
+        attempts += 1;
         match TcpStream::connect(addr) {
             Ok(s) => {
                 s.set_nodelay(true).ok();
@@ -196,13 +239,28 @@ pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
             }
             Err(e) => {
                 if Instant::now() >= deadline {
-                    bail!("cannot connect to coordinator at {addr}: {e}");
+                    return Err(anyhow::Error::new(ConnectTimeout {
+                        addr: addr.to_string(),
+                        attempts,
+                        last_error: e.to_string(),
+                    }));
                 }
-                std::thread::sleep(backoff.min(deadline.saturating_duration_since(Instant::now())));
-                backoff = (backoff * 2).min(Duration::from_secs(2));
+                // ±25 % of the nominal delay, never past the deadline.
+                let nominal = backoff.as_millis() as u64;
+                let jittered = nominal * 3 / 4 + jitter.below((nominal / 2 + 1) as usize) as u64;
+                let sleep = Duration::from_millis(jittered.max(1))
+                    .min(deadline.saturating_duration_since(Instant::now()));
+                std::thread::sleep(sleep);
+                backoff = (backoff * 2).min(cap);
             }
         }
     }
+}
+
+/// [`connect_with_backoff`] on the long-standing default schedule: 100 ms
+/// doubling to a 2 s cap, bounded by `timeout`.
+pub fn connect_with_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    connect_with_backoff(addr, Duration::from_millis(100), Duration::from_secs(2), timeout)
 }
 
 /// Send one heartbeat: an empty payload on [`CONTROL_LANE`]. The
@@ -722,6 +780,50 @@ mod tests {
         let mut oversize = bytes;
         oversize[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(decode_frame(&oversize).is_err());
+    }
+
+    #[test]
+    fn connect_succeeds_when_listener_appears_within_budget() {
+        // Regression: a worker started before the coordinator binds must
+        // retry through ECONNREFUSED, not fail on the first attempt. Pick a
+        // port while nothing listens, then bring the listener up mid-budget.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe); // now refusing connections
+        let binder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(300));
+            let listener = TcpListener::bind(addr).unwrap();
+            listener.accept().unwrap()
+        });
+        let stream = connect_with_backoff(
+            &addr.to_string(),
+            Duration::from_millis(20),
+            Duration::from_millis(200),
+            Duration::from_secs(10),
+        )
+        .expect("late listener must be reachable within the budget");
+        drop(stream);
+        binder.join().unwrap();
+    }
+
+    #[test]
+    fn connect_times_out_with_a_typed_error_when_no_listener_ever_appears() {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        let start = Instant::now();
+        let err = connect_with_backoff(
+            &addr,
+            Duration::from_millis(10),
+            Duration::from_millis(50),
+            Duration::from_millis(250),
+        )
+        .expect_err("no listener must exhaust the budget");
+        let timeout =
+            err.downcast_ref::<ConnectTimeout>().expect("error must downcast to ConnectTimeout");
+        assert_eq!(timeout.addr, addr);
+        assert!(timeout.attempts >= 2, "budget allows several attempts, got {}", timeout.attempts);
+        assert!(start.elapsed() >= Duration::from_millis(250), "must use the whole budget");
     }
 
     #[test]

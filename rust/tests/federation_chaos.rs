@@ -1,4 +1,4 @@
-//! Chaos suite for the elastic fault-tolerant orchestration (PR 9).
+//! Chaos suite for the elastic fault-tolerant orchestration.
 //!
 //! Every test drives a real multi-worker TCP loopback session — worker
 //! threads speaking the exact socket protocol `fedgraph worker` runs — and
@@ -6,13 +6,19 @@
 //! `fedgraph::testing::chaos`: a [`FaultPlan`] kills one worker at an exact
 //! protocol point (mid-broadcast, round boundary, mid-upload) by shutting
 //! its coordinator socket, which is indistinguishable from a process crash.
+//! Network faults ride the same harness: a **sever** cuts the connection
+//! while the worker process stays alive to redial with its session token
+//! (the reconnect grace window), and a **delay** stalls a frame past
+//! `heartbeat_ms` to prove latency is never mistaken for death.
 //!
 //! The load-bearing invariant (see `docs/FAULT_TOLERANCE.md`): for sync
 //! plaintext runs — compressed or not — killing any single worker yields
 //! **bitwise-identical** final parameters, accuracy, and SimNet ledger to
 //! the uninterrupted run, because recovery replays broadcast/order state
 //! and resumes per-client RNG streams from the shipped cursors, and
-//! recovery traffic is wire-measured but never SimNet-charged.
+//! recovery traffic is wire-measured but never SimNet-charged. A severed
+//! worker that reconnects inside the grace window holds the same bar with
+//! **zero** recoveries — the session token hands its slice straight back.
 
 use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
@@ -26,6 +32,7 @@ use fedgraph::config::{
 };
 use fedgraph::coordinator::selection::select_with_dropout;
 use fedgraph::federation::runtime::Charge;
+use fedgraph::federation::store::{CheckpointStore, FileCheckpointStore};
 use fedgraph::federation::worker::{self, BuildStats};
 use fedgraph::federation::{
     ClientLogic, Deployment, Federation, LocalUpdate, SessionBlueprint, SessionBuild,
@@ -142,6 +149,7 @@ fn spawn_workers(
                     obs,
                     Some(rebuild),
                 )
+                .map(|_| ())
             })
         })
         .collect()
@@ -168,7 +176,71 @@ fn spawn_standby(addr: &str, got: &Arc<Mutex<Vec<usize>>>) -> JoinHandle<Result<
                 Ok(dummy_build(n, wanted, &mut rng))
             });
         worker::serve_elastic(assignment, None, staging, BuildStats::default(), obs, Some(rebuild))
+            .map(|_| ())
     })
+}
+
+/// Reconnect-capable workers for the sever tests: like [`spawn_workers`],
+/// but a worker whose lane dies redials with its session token (the
+/// thread-hosted mirror of `fedgraph worker`'s reconnect loop) instead of
+/// exiting. Only the first connection carries a built slice; a reconnect
+/// assignment is a standby that reclaims its clients through `Reassign`.
+fn spawn_reconnecting_workers(
+    addr: &str,
+    workers: usize,
+    sockets: &Arc<Mutex<Vec<TcpStream>>>,
+) -> Vec<JoinHandle<Result<()>>> {
+    (0..workers)
+        .map(|_| {
+            let addr = addr.to_string();
+            let sockets = sockets.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut assignment = worker::connect(&addr, Duration::from_secs(20))?;
+                let mut first = true;
+                loop {
+                    sockets.lock().unwrap().push(assignment.socket()?);
+                    let wcfg = assignment.cfg.clone();
+                    let n = wcfg.n_trainer;
+                    let seed = wcfg.seed;
+                    let session = assignment.session;
+                    let ft = wcfg.federation.fault_tolerance.clone();
+                    let build = if first {
+                        let mut rng = Rng::seeded(seed);
+                        Some(dummy_build(n, &assignment.clients, &mut rng))
+                    } else {
+                        None
+                    };
+                    let staging = Arc::new(SimNet::with_stage_log(wcfg.network.clone()));
+                    let obs = test_obs(&wcfg);
+                    let rebuild: Box<dyn Fn(&[usize]) -> Result<SessionBuild>> =
+                        Box::new(move |wanted: &[usize]| {
+                            let mut rng = Rng::seeded(seed);
+                            Ok(dummy_build(n, wanted, &mut rng))
+                        });
+                    match worker::serve_elastic(
+                        assignment,
+                        build,
+                        staging,
+                        BuildStats::default(),
+                        obs,
+                        Some(rebuild),
+                    )? {
+                        worker::ServeOutcome::Finished => return Ok(()),
+                        worker::ServeOutcome::ConnectionLost => {
+                            first = false;
+                            assignment = worker::connect_with_token(
+                                &addr,
+                                Duration::from_millis(ft.connect_retry_base_ms),
+                                Duration::from_millis(ft.connect_retry_cap_ms),
+                                Duration::from_millis(ft.connect_retry_budget_ms),
+                                session,
+                            )?;
+                        }
+                    }
+                }
+            })
+        })
+        .collect()
 }
 
 /// Everything the invariant assertions compare between runs.
@@ -182,6 +254,7 @@ struct RunOut {
     recoveries: u64,
     reassigned_clients: u64,
     late_joins: u64,
+    reconnects: u64,
 }
 
 /// Drive a full TCP loopback session. `kill_at` scripts a one-worker kill at
@@ -277,6 +350,7 @@ fn run_tcp(cfg: &FedGraphConfig, rounds: usize, workers: usize, kill_at: Option<
         recoveries: note_u64("recoveries"),
         reassigned_clients: note_u64("reassigned_clients"),
         late_joins: note_u64("late_joins"),
+        reconnects: note_u64("reconnects"),
     };
     if late_join {
         let slice = standby_slice.lock().unwrap().clone();
@@ -296,6 +370,86 @@ fn run_tcp(cfg: &FedGraphConfig, rounds: usize, workers: usize, kill_at: Option<
         } else {
             t.join().expect("worker thread panicked").expect("worker must exit cleanly");
         }
+    }
+    out
+}
+
+/// Drive a TCP loopback session with reconnect-capable workers and an
+/// arbitrary fault plan (sever / delay — faults the workers are expected to
+/// *survive*, so every worker thread must exit cleanly). `make_plan` gets
+/// the shared socket registry so a sever closure can target a live handle.
+fn run_tcp_with_plan(
+    cfg: &FedGraphConfig,
+    rounds: usize,
+    workers: usize,
+    make_plan: impl FnOnce(&Arc<Mutex<Vec<TcpStream>>>) -> FaultPlan,
+) -> RunOut {
+    let deployment = Deployment::tcp("127.0.0.1:0", workers).unwrap();
+    let addr = deployment.local_addr().unwrap().to_string();
+    let sockets: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+    let worker_threads = spawn_reconnecting_workers(&addr, workers, &sockets);
+    let plan = make_plan(&sockets);
+
+    let monitor = Monitor::new(Arc::new(SimNet::new(NetConfig::default())));
+    let n = cfg.n_trainer;
+    let mut rng = Rng::seeded(cfg.seed);
+    let blueprint = dummy_blueprint(n, &mut rng);
+    let mut global = blueprint.init.clone();
+    let mut fed = Federation::spawn_instrumented(
+        &monitor,
+        &deployment,
+        cfg,
+        blueprint,
+        Box::new(move |inner: Box<dyn CoordLink>| {
+            Box::new(ChaosCoordLink::new(inner, plan)) as Box<dyn CoordLink>
+        }),
+    )
+    .unwrap();
+
+    let all: Vec<usize> = (0..n).collect();
+    let charge = Charge::PerLink(fed.init_model_charge(&global));
+    fed.broadcast_model(0, &global, &all, charge).unwrap();
+    for round in 0..rounds {
+        let sel = select_with_dropout(
+            n,
+            1.0,
+            cfg.sampling_type,
+            cfg.federation.dropout_frac,
+            round,
+            &mut rng,
+        );
+        let step = fed.policy_round(round, &sel.participants, true, &all).unwrap();
+        if let Some(m) = step.model {
+            global = m;
+        }
+    }
+    let (num, den) = fed.eval_round(rounds, &all, Some(&global)).unwrap();
+    fed.shutdown().unwrap();
+
+    let note_u64 = |key: &str| {
+        monitor
+            .notes()
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.parse().ok())
+            .unwrap_or(0u64)
+    };
+    let c = monitor.net.counter(Phase::Train);
+    let out = RunOut {
+        params_checksum: fnv1a(&encode_params(&global.values)),
+        num_bits: num.to_bits(),
+        den,
+        train_up: c.bytes_up,
+        train_down: c.bytes_down,
+        train_wasted: c.wasted_bytes,
+        recoveries: note_u64("recoveries"),
+        reassigned_clients: note_u64("reassigned_clients"),
+        late_joins: note_u64("late_joins"),
+        reconnects: note_u64("reconnects"),
+    };
+    for t in worker_threads {
+        t.join().expect("worker thread panicked").expect("worker must exit cleanly");
     }
     out
 }
@@ -398,6 +552,71 @@ fn late_worker_joins_and_receives_a_slice() {
 }
 
 #[test]
+fn severed_worker_reconnects_without_recovery() {
+    // Cut a worker's connection mid-run while its process stays alive: it
+    // must redial with its session token inside the coordinator's grace
+    // window and reclaim its slice through `Reassign` — zero recoveries,
+    // exactly one reconnect, and a bitwise-identical result.
+    let mut cfg = test_cfg(6);
+    cfg.federation.fault_tolerance.reconnect_grace_ms = 20_000;
+    cfg.federation.fault_tolerance.connect_retry_base_ms = 10;
+    cfg.federation.fault_tolerance.connect_retry_cap_ms = 100;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    assert_eq!((clean.recoveries, clean.reconnects), (0, 0));
+    let severed = run_tcp_with_plan(&cfg, 4, 2, |sockets| {
+        let socks = sockets.clone();
+        FaultPlan::new().sever_at(FaultPoint::Broadcast { round: 2 }, move || {
+            let guard = socks.lock().unwrap();
+            if let Some(s) = guard.first() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        })
+    });
+    assert_eq!(severed.recoveries, 0, "a reconnect inside the grace window is not a recovery");
+    assert_eq!(severed.reconnects, 1, "exactly one reconnect must have run");
+    assert!(severed.reassigned_clients > 0, "the slice must be re-pushed to the reconnector");
+    assert_bitwise(&clean, &severed, "sever + reconnect");
+}
+
+#[test]
+fn severed_worker_reconnects_mid_upload() {
+    // Same invariant with the cut landing mid-upload: the round's partial
+    // progress is replayed to the reconnected worker, not double-counted.
+    let mut cfg = test_cfg(6);
+    cfg.federation.fault_tolerance.reconnect_grace_ms = 20_000;
+    cfg.federation.fault_tolerance.connect_retry_base_ms = 10;
+    cfg.federation.fault_tolerance.connect_retry_cap_ms = 100;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let severed = run_tcp_with_plan(&cfg, 4, 2, |sockets| {
+        let socks = sockets.clone();
+        FaultPlan::new().sever_at(FaultPoint::Upload { round: 1 }, move || {
+            let guard = socks.lock().unwrap();
+            if let Some(s) = guard.first() {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        })
+    });
+    assert_eq!(severed.recoveries, 0);
+    assert_eq!(severed.reconnects, 1);
+    assert_bitwise(&clean, &severed, "sever mid-upload + reconnect");
+}
+
+#[test]
+fn frame_delay_past_heartbeat_is_not_death() {
+    // Stall a frame for several heartbeat intervals: liveness is judged by
+    // `worker_timeout_ms`, so mere latency past the pulse must trip neither
+    // a recovery nor a reconnect, and the result stays bitwise-identical.
+    let mut cfg = test_cfg(6);
+    cfg.federation.fault_tolerance.heartbeat_ms = 100;
+    let clean = run_tcp(&cfg, 4, 2, None, false);
+    let delayed = run_tcp_with_plan(&cfg, 4, 2, |_| {
+        FaultPlan::new().delay_at(FaultPoint::Upload { round: 1 }, 400)
+    });
+    assert_eq!((delayed.recoveries, delayed.reconnects), (0, 0), "latency is not death");
+    assert_bitwise(&clean, &delayed, "frame delayed past heartbeat_ms");
+}
+
+#[test]
 fn checkpoint_restore_resumes_bitwise() {
     // A run snapshotted at a round boundary, pushed through the versioned
     // wire codec, and resumed in a *fresh* session must land on the same
@@ -452,8 +671,18 @@ fn checkpoint_restore_resumes_bitwise() {
         ck
     };
     assert_eq!(ck.round, 1, "snapshot is taken after round 1");
-    // The snapshot must survive its own wire codec before it is trusted.
-    let ck = fedgraph::federation::RoundCheckpoint::decode_wire(&ck.encode_wire()).unwrap();
+    // Route the snapshot through the durable store — atomic tmp+fsync+rename
+    // on disk, the versioned wire codec both ways — before it is trusted:
+    // this is the exact path `--resume` walks after a coordinator SIGKILL.
+    let dir = std::env::temp_dir()
+        .join(format!("fedgraph-chaos-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut store = FileCheckpointStore::open(&dir, 4).unwrap();
+    store.persist(&ck).expect("durable persist must succeed");
+    let loaded = store.load_latest_valid().expect("a just-written store must load");
+    assert!(loaded.skipped.is_empty(), "a clean store has nothing to skip");
+    let ck = loaded.checkpoint;
+    assert_eq!(ck.round, 1, "the loaded snapshot is the one just persisted");
 
     // Resume a fresh session from the snapshot and drive the remainder.
     let resumed = {
@@ -480,6 +709,7 @@ fn checkpoint_restore_resumes_bitwise() {
         fnv1a(&encode_params(&global.expect("resumed rounds must flush").values))
     };
     assert_eq!(resumed, reference, "restored run must be bitwise-identical");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -605,7 +605,15 @@ fn prop_checkpoint_codec_roundtrip_and_corruption() {
                 }
             },
             ledger: (0..rng.range(0, 4))
-                .map(|_| (rng.below(3) as u32, rng.next_u64(), rng.next_u64(), rng.next_u64()))
+                .map(|_| fedgraph::federation::LedgerRow {
+                    phase: rng.below(3) as u32,
+                    bytes_up: rng.next_u64(),
+                    bytes_down: rng.next_u64(),
+                    messages: rng.next_u64(),
+                    sim_secs: rng.f64() * 1e4,
+                    concurrent_secs: rng.f64() * 1e4,
+                    wasted_bytes: rng.next_u64(),
+                })
                 .collect(),
         };
         let bytes = ck.encode_wire();
@@ -629,5 +637,142 @@ fn prop_checkpoint_codec_roundtrip_and_corruption() {
                 | WireError::BadTag(_),
             ) => {}
         }
+    });
+}
+
+/// A fresh scratch directory for the durable-store proptests, unique per
+/// call so iterations never see each other's files.
+fn temp_store_dir(tag: &str) -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+    let n = UNIQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("fedgraph-prop-{tag}-{}-{n}", std::process::id()))
+}
+
+/// A small but fully-formed checkpoint for store tests; shape fixed, payload
+/// drawn from the stream so file contents vary per iteration.
+fn tiny_ck(round: u32, rng: &mut fedgraph::util::rng::Rng) -> fedgraph::federation::RoundCheckpoint {
+    use fedgraph::federation::{PolicyCheckpoint, RoundCheckpoint};
+    RoundCheckpoint {
+        round,
+        version: round.wrapping_add(1),
+        params: vec![gen::f32_vec(rng, 4, 1.0)],
+        last_sent_version: vec![round; 2],
+        pending_floor: vec![None; 2],
+        bases: Vec::new(),
+        assignment: vec![0, 1],
+        client_rng: vec![Some(rng.snapshot()), None],
+        residuals: Vec::new(),
+        he_seed: None,
+        policy: PolicyCheckpoint::Sync,
+        ledger: Vec::new(),
+    }
+}
+
+#[test]
+fn prop_checkpoint_store_loads_newest_valid_despite_corruption() {
+    // Seed a store directory with an arbitrary mix of {valid, truncated,
+    // bit-flipped, interrupted-persist `.tmp`} files: `load_latest_valid`
+    // must return the newest file that actually decodes — reporting every
+    // newer reject in its skip ledger — or the typed no-valid-checkpoint
+    // error. Never a panic, never a silently older resume point.
+    use fedgraph::federation::store::{CheckpointStore, FileCheckpointStore, StoreError};
+    use fedgraph::federation::RoundCheckpoint;
+    prop_check("checkpoint-store-corruption", 25, |rng| {
+        let dir = temp_store_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let n_files = rng.range(1, 8);
+        // (round, decodes) for every *committed-looking* file we planted.
+        let mut planted: Vec<(u32, bool)> = Vec::new();
+        for i in 0..n_files {
+            let round = i as u32;
+            let bytes = tiny_ck(round, rng).encode_wire();
+            let name = format!("ck-{round:010}.fgcp");
+            match rng.below(4) {
+                0 => {
+                    std::fs::write(dir.join(&name), &bytes).unwrap();
+                    planted.push((round, true));
+                }
+                1 => {
+                    let cut = rng.below(bytes.len());
+                    std::fs::write(dir.join(&name), &bytes[..cut]).unwrap();
+                    planted.push((round, false));
+                }
+                2 => {
+                    let mut bad = bytes.clone();
+                    let pos = rng.below(bad.len());
+                    bad[pos] ^= 1u8 << rng.below(8);
+                    // A flip *could* (astronomically rarely) still decode;
+                    // judge by what the bytes actually do, not the intent.
+                    let decodes = RoundCheckpoint::decode_wire(&bad).is_ok();
+                    std::fs::write(dir.join(&name), &bad).unwrap();
+                    planted.push((round, decodes));
+                }
+                _ => {
+                    // An interrupted persist: full bytes under the dot-tmp
+                    // name. Invisible to readers — neither loadable nor
+                    // worth a skip-ledger entry.
+                    std::fs::write(dir.join(format!(".{name}.tmp")), &bytes).unwrap();
+                }
+            }
+        }
+        let store = FileCheckpointStore::open(&dir, 64).unwrap();
+        let newest_valid = planted.iter().rev().find(|(_, ok)| *ok).map(|(r, _)| *r);
+        match (store.load_latest_valid(), newest_valid) {
+            (Ok(loaded), Some(expect)) => {
+                assert_eq!(loaded.checkpoint.round, expect, "must load the newest valid file");
+                let newer_rejects =
+                    planted.iter().filter(|(r, ok)| !*ok && *r > expect).count();
+                assert_eq!(
+                    loaded.skipped.len(),
+                    newer_rejects,
+                    "every newer reject must appear in the skip ledger"
+                );
+            }
+            (Err(StoreError::NoValidCheckpoint { skipped, .. }), None) => {
+                assert_eq!(
+                    skipped.len(),
+                    planted.len(),
+                    "all committed-looking files must be reported, tmp files never"
+                );
+            }
+            (Ok(loaded), None) => {
+                panic!("loaded round {} from a dir with no valid file", loaded.checkpoint.round)
+            }
+            (Err(e), Some(expect)) => {
+                panic!("round {expect} is valid but the load failed: {e}")
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn prop_checkpoint_store_retention_keeps_the_newest() {
+    // After any number of persists with any retention bound, at most `keep`
+    // committed files remain, the newest round always survives, and the
+    // loaded checkpoint round-trips bitwise.
+    use fedgraph::federation::store::{CheckpointStore, FileCheckpointStore};
+    prop_check("checkpoint-store-retention", 20, |rng| {
+        let keep = rng.range(1, 6);
+        let writes = rng.range(1, 15);
+        let dir = temp_store_dir("retention");
+        let mut store = FileCheckpointStore::open(&dir, keep).unwrap();
+        let mut last = None;
+        for i in 0..writes {
+            let ck = tiny_ck(i as u32, rng);
+            store.persist(&ck).unwrap();
+            last = Some(ck);
+        }
+        let committed: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.unwrap().file_name().into_string().ok())
+            .filter(|n| n.starts_with("ck-") && n.ends_with(".fgcp"))
+            .collect();
+        assert_eq!(committed.len(), keep.min(writes), "retention bound violated: {committed:?}");
+        let loaded = store.load_latest_valid().unwrap();
+        assert!(loaded.skipped.is_empty());
+        assert_eq!(loaded.checkpoint, last.unwrap(), "newest persist must survive bitwise");
+        let _ = std::fs::remove_dir_all(&dir);
     });
 }
